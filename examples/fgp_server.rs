@@ -1,0 +1,112 @@
+//! The FGP as a served accelerator: coordinator + batched XLA offload.
+//!
+//! §III: "the FGP can be easily attached to an existing system as an
+//! accelerator or a co-processor." This driver plays that system: a
+//! multi-threaded client population fires compound-node update requests
+//! at the coordinator, which batches them onto the PJRT `cn_update_batched`
+//! artifact (falling back to the golden engine when `artifacts/` is not
+//! built), and reports latency/throughput.
+//!
+//! It also demos the raw Fig. 5 command protocol against the
+//! cycle-accurate device ([`FgpDevice`]).
+//!
+//! Run: `cargo run --release --example fgp_server`
+
+use std::time::Instant;
+
+use fgp_repro::coordinator::backend::{CnRequestData, GoldenBackend, XlaBatchBackend};
+use fgp_repro::coordinator::{BatchPolicy, CnServer, FgpDevice, ServerConfig};
+use fgp_repro::fgp::processor::{Command, Reply};
+use fgp_repro::fgp::FgpConfig;
+use fgp_repro::gmp::matrix::{c64, CMatrix};
+use fgp_repro::gmp::message::GaussMessage;
+use fgp_repro::runtime::RuntimeClient;
+use fgp_repro::testutil::Rng;
+
+fn request(rng: &mut Rng, n: usize) -> CnRequestData {
+    CnRequestData {
+        x: GaussMessage::new(
+            (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+            CMatrix::random_psd(rng, n, 1.0).scale(0.15),
+        ),
+        y: GaussMessage::new(
+            (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+            CMatrix::random_psd(rng, n, 1.0).scale(0.15),
+        ),
+        a: CMatrix::random(rng, n, n).scale(0.3),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = fgp_repro::paper::N;
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let use_xla = artifacts.join("manifest.txt").exists();
+
+    println!("=== FGP coordinator serving CN updates ===");
+    println!("backend: {}\n", if use_xla { "XLA batched (PJRT)" } else { "golden (artifacts missing)" });
+
+    let config = ServerConfig {
+        batch: BatchPolicy { max_batch: 32, max_wait: std::time::Duration::from_millis(2) },
+    };
+    let artifacts2 = artifacts.clone();
+    let server = CnServer::start(
+        move || {
+            if use_xla {
+                let rt = RuntimeClient::load(&artifacts2)?;
+                Ok(Box::new(XlaBatchBackend::new(rt)?) as _)
+            } else {
+                Ok(Box::new(GoldenBackend) as _)
+            }
+        },
+        config,
+    )?;
+
+    // --- load phase: 4 client threads x 200 requests
+    let clients = 4;
+    let per_client = 200;
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let client = server.client();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(7 + c as u64);
+            let pending: Vec<_> =
+                (0..per_client).map(|_| client.submit(request(&mut rng, n))).collect();
+            for rx in pending {
+                rx.recv().unwrap().unwrap();
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let elapsed = t0.elapsed();
+    let total = clients * per_client;
+
+    let client = server.client();
+    println!("served {total} requests in {elapsed:?}");
+    println!(
+        "throughput: {:.0} CN updates/s",
+        total as f64 / elapsed.as_secs_f64()
+    );
+    println!("metrics: {}", client.metrics().report());
+    server.shutdown();
+
+    // --- raw command protocol against the cycle-accurate device
+    println!("\n=== Fig. 5 command protocol (cycle-accurate device) ===");
+    let dev = FgpDevice::start(FgpConfig::default());
+    match dev.command(Command::Status) {
+        Reply::Status { state, cycles } => println!("status: {state:?}, {cycles} cycles"),
+        other => println!("unexpected: {other:?}"),
+    }
+    let msg = GaussMessage::isotropic(n, 0.5);
+    assert!(matches!(dev.command(Command::WriteMessage { slot: 0, msg }), Reply::Ok));
+    match dev.command(Command::ReadMessage { slot: 0 }) {
+        Reply::Message(m) => println!("slot 0 round-trip trace: {:.3}", m.trace_cov()),
+        other => println!("unexpected: {other:?}"),
+    }
+    drop(dev);
+
+    println!("\nfgp_server OK");
+    Ok(())
+}

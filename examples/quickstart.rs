@@ -1,0 +1,63 @@
+//! Quickstart: one compound-node message update, end to end.
+//!
+//! Builds the smallest useful factor graph (a single compound
+//! observation node), compiles it to FGP assembler (the Listing 1 →
+//! Listing 2 flow), runs it on the cycle-accurate simulator, and checks
+//! the result against the f64 golden update rule.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use fgp_repro::compiler::{compile, CompileOptions};
+use fgp_repro::fgp::processor::NoFeed;
+use fgp_repro::fgp::{Fgp, FgpConfig};
+use fgp_repro::gmp::matrix::{c64, CMatrix};
+use fgp_repro::gmp::message::GaussMessage;
+use fgp_repro::gmp::{nodes, FactorGraph, Schedule};
+use fgp_repro::testutil::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let n = fgp_repro::paper::N;
+    let mut rng = Rng::new(42);
+
+    // --- the factor graph: one compound observation node (Fig. 1/2)
+    let a = CMatrix::random(&mut rng, n, n).scale(0.3);
+    let mut graph = FactorGraph::new();
+    graph.rls_chain(n, &[a.clone()]);
+    let schedule = Schedule::forward_sweep(&graph);
+
+    // --- compile: Listing 1 -> Listing 2
+    let compiled = compile(&graph, &schedule, &CompileOptions::default())?;
+    println!("compiled FGP assembler:\n{}", compiled.listing());
+    println!(
+        "memory: {} slots optimized (vs {} unoptimized)\n",
+        compiled.stats.slots_optimized, compiled.stats.slots_unoptimized
+    );
+
+    // --- load onto the device and stream the operands
+    let mut fgp = Fgp::new(FgpConfig::default());
+    fgp.pm.load(&compiled.program.to_image())?;
+
+    let x = GaussMessage::new(
+        (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+        CMatrix::random_psd(&mut rng, n, 1.0).scale(0.15),
+    );
+    let y = GaussMessage::new(
+        (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+        CMatrix::random_psd(&mut rng, n, 1.0).scale(0.15),
+    );
+    fgp.msgmem.write_message(compiled.memmap.preloads[0].1, &x);
+    fgp.msgmem.write_message(compiled.memmap.streams[0].1, &y);
+    fgp.statemem.write_matrix(compiled.memmap.state_streams[0].1, &a);
+
+    let stats = fgp.run_program(1, &mut NoFeed)?;
+    let got = fgp.msgmem.read_message(compiled.memmap.outputs[0].1);
+
+    // --- golden reference
+    let want = nodes::compound_observation(&x, &y, &a, true)?;
+    println!("cycles: {} (paper Table II: 260)", stats.cycles);
+    println!("fixed-point vs f64 distance: {:.4}", got.dist(&want));
+    println!("posterior trace: {:.4} (prior was {:.4})", got.trace_cov(), x.trace_cov());
+    assert!(got.dist(&want) < 0.05, "device result must match the golden rule");
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! **End-to-end driver** (DESIGN.md E5): the paper's §IV channel
+//! estimation example on the full stack.
+//!
+//! 1. Synthesizes a 4-tap multipath channel and QPSK training sequence.
+//! 2. Builds the Fig. 6 factor graph, compiles it (Listing 1 → 2; Fig. 7
+//!    memory optimization + loop compression reported).
+//! 3. Runs it on the cycle-accurate FGP simulator with the host
+//!    streaming observations/regressors — logging the MSE learning curve
+//!    and the cycle cost.
+//! 4. Cross-checks against the f64 golden chain and (when `artifacts/`
+//!    is built) the PJRT/XLA path, i.e. the Pallas kernel.
+//! 5. Reports the Table II-style throughput for this workload.
+//!
+//! Run: `cargo run --release --example rls_channel_estimation`
+
+use fgp_repro::apps::rls::RlsProblem;
+use fgp_repro::model::scaling::{normalized_throughput, ProcessorPoint};
+use fgp_repro::paper;
+use fgp_repro::runtime::RuntimeClient;
+
+fn main() -> anyhow::Result<()> {
+    let n = paper::N;
+    let sigma2 = 0.02;
+
+    println!("=== RLS channel estimation on the FGP (paper §IV / Fig. 6) ===\n");
+
+    // --- learning curve: MSE vs number of sections
+    println!("{:>10} {:>14} {:>14} {:>12}", "sections", "golden MSE", "FGP MSE", "cycles");
+    let mut final_outcome = None;
+    for sections in [4usize, 8, 16, 32, 64] {
+        let p = RlsProblem::synthetic(n, sections, sigma2, 2024);
+        let golden = p.golden()?;
+        let fgp = p.run_on_fgp()?;
+        println!(
+            "{sections:>10} {:>14.5} {:>14.5} {:>12}",
+            golden.rel_mse, fgp.rel_mse, fgp.cycles
+        );
+        final_outcome = Some((p, fgp));
+    }
+    let (problem, fgp_outcome) = final_outcome.unwrap();
+
+    // --- compiler report (Fig. 7 + Listing 2)
+    let compiled = problem.compile_program()?;
+    println!("\ncompiled program ({} instructions):", compiled.program.instrs.len());
+    println!("{}", compiled.listing());
+    println!(
+        "memory identifiers: {} unoptimized -> {} optimized (Fig. 7)",
+        compiled.stats.slots_unoptimized, compiled.stats.slots_optimized
+    );
+    println!(
+        "loop compression: {} -> {} instructions {:?}",
+        compiled.stats.instrs_uncompressed, compiled.stats.instrs_compressed,
+        compiled.stats.looped
+    );
+
+    // --- device throughput in the paper's units
+    let cn_cycles = fgp_outcome.cycles_per_section;
+    let fgp_point = ProcessorPoint::fgp(cn_cycles);
+    println!(
+        "\ncycles per compound-node update: {cn_cycles} (paper: {})",
+        paper::FGP_CN_CYCLES
+    );
+    println!(
+        "normalized throughput @40nm: {:.2e} CN/s (paper: 2.25e6)",
+        normalized_throughput(&fgp_point, 40.0)
+    );
+
+    // --- XLA path (L1 Pallas kernel through PJRT), if artifacts exist
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if artifacts.join("manifest.txt").exists() {
+        let rt = RuntimeClient::load(&artifacts)?;
+        let sections = rt.manifest.sections;
+        let p = RlsProblem::synthetic(n, sections, sigma2, 2024);
+        let xla = p.run_on_xla(&rt)?;
+        let golden = p.golden()?;
+        println!(
+            "\nXLA path ({} sections, platform {}): rel MSE {:.5} (golden {:.5})",
+            sections,
+            rt.platform(),
+            xla.rel_mse,
+            golden.rel_mse
+        );
+        assert!((xla.rel_mse - golden.rel_mse).abs() < 5e-2);
+    } else {
+        println!("\n(artifacts/ not built; run `make artifacts` for the XLA path)");
+    }
+
+    assert!(fgp_outcome.rel_mse < 0.25, "FGP estimate must converge");
+    println!("\nrls_channel_estimation OK");
+    Ok(())
+}

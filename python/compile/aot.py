@@ -1,0 +1,85 @@
+"""AOT pipeline: lower the L2 model (with its L1 Pallas kernels) to HLO text.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the
+resulting ``artifacts/*.hlo.txt`` through the PJRT C API and Python never
+appears on the request path again.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+pinned xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Alongside each artifact a ``manifest.txt`` records name, input shapes and
+output arity so the Rust loader can validate its marshalling at startup.
+
+Usage: ``python -m compile.aot --out ../artifacts [--n 4] [--batch 32] [--sections 64]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shape_str(s) -> str:
+    dims = "x".join(str(d) for d in s.shape) if s.shape else "scalar"
+    return f"f32[{dims}]"
+
+
+def lower_all(n: int, batch: int, sections: int):
+    """Yield (name, example_args, lowered) for every artifact we ship."""
+    jobs = [
+        ("cn_update", model.cn_update, model.cn_example_args(n), 2),
+        (
+            "cn_update_batched",
+            model.cn_update_batched,
+            model.cn_batched_example_args(n, batch),
+            2,
+        ),
+        ("rls_chain", model.rls_chain, model.rls_example_args(n, sections), 2),
+    ]
+    for name, fn, args, n_out in jobs:
+        lowered = jax.jit(fn).lower(*args)
+        yield name, args, lowered, n_out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--n", type=int, default=4, help="complex state size n (paper: 4)")
+    ap.add_argument("--batch", type=int, default=32, help="batched-CN batch size")
+    ap.add_argument("--sections", type=int, default=64, help="RLS chain length")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest_lines = [f"n={args.n} batch={args.batch} sections={args.sections}"]
+    for name, ex_args, lowered, n_out in lower_all(args.n, args.batch, args.sections):
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        sig = ",".join(_shape_str(a) for a in ex_args)
+        manifest_lines.append(f"{name} inputs={sig} outputs={n_out}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {os.path.join(args.out, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,141 @@
+"""Fused Pallas kernel for the compound-node (CN) message update (Fig. 2).
+
+This is the FGP's hottest operation — the paper's Table II benchmarks
+exactly this update.  The hardware chains three systolic passes without
+spilling intermediates to memory (results persist in the PEmult StateReg,
+paper §II); the kernel mirrors that by fusing all three stages so nothing
+round-trips through HBM:
+
+    stage 1 (mma):  T1 = V_X A^H            — StateReg accumulate
+    stage 2 (mms):  G  = V_Y + A T1         — StateReg shift + add
+    stage 3 (fad):  V_Z = V_X - T1 G^{-1} (A V_X)   — Faddeev elimination
+                    m_Z = m_X + T1 G^{-1} (m_Y - A m_X)
+
+All operands are in the real block embedding (see kernels.ref): complex
+n x n matrices become real 2n x 2n, Hermitian transpose becomes plain
+transpose, and a complex multiply costs 4 real multiplies — the same
+factor-4 the PEmult pays on its single real multiplier.
+
+Batched variant: a 1-D grid over the batch with BlockSpec picking one
+(2n, 2n) tile per grid step — the HBM->VMEM schedule that the paper's
+Select/Mask units implement with memory ports.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .faddeev import INTERPRET, eliminate
+
+
+def _cn_kernel(vx_ref, vy_ref, a_ref, mx_ref, my_ref, vz_ref, mz_ref, *, m: int):
+    vx = vx_ref[...]
+    vy = vy_ref[...]
+    a = a_ref[...]
+    mx = mx_ref[...]
+    my = my_ref[...]
+
+    t1 = vx @ a.T                # mma: V_X A^H  (block transpose == Hermitian)
+    avx = a @ vx                 # mma: A V_X
+    g = vy + a @ t1              # mms: V_Y + A (V_X A^H)
+    y = a @ mx - my              # negated innovation (sign folds the mean
+                                 # update into the same elimination as V_Z)
+
+    # fad: eliminate [[G, A V_X, y], [T1, V_X, mx]]; block elimination
+    # leaves D - C G^{-1} B in the bottom-right, i.e.
+    #   V_Z = V_X - T1 G^{-1} A V_X,  m_Z = m_X - T1 G^{-1} y
+    #       = m_X + T1 G^{-1} (m_Y - A m_X).
+    top = jnp.concatenate([g, avx, y[:, None]], axis=1)
+    bot = jnp.concatenate([t1, vx, mx[:, None]], axis=1)
+    w = eliminate(jnp.concatenate([top, bot], axis=0), m)
+
+    vz_ref[...] = w[m:, m:2 * m]
+    mz_ref[...] = w[m:, 2 * m]
+
+
+def cn_update(vx, vy, a, mx, my):
+    """Single compound-node update; all args block-real ((2n,2n) / (2n,))."""
+    m = vx.shape[-1]
+    return pl.pallas_call(
+        functools.partial(_cn_kernel, m=m),
+        out_shape=(
+            jax.ShapeDtypeStruct((m, m), jnp.float32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+        ),
+        interpret=INTERPRET,
+    )(vx, vy, a, mx, my)
+
+
+def _cn_kernel_batched(vx_ref, vy_ref, a_ref, mx_ref, my_ref, vz_ref, mz_ref, *, m: int):
+    """Grid step: one batch element, tiles already sliced by BlockSpec."""
+    vx = vx_ref[0]
+    vy = vy_ref[0]
+    a = a_ref[0]
+    mx = mx_ref[0]
+    my = my_ref[0]
+
+    t1 = vx @ a.T
+    avx = a @ vx
+    g = vy + a @ t1
+    y = a @ mx - my
+
+    top = jnp.concatenate([g, avx, y[:, None]], axis=1)
+    bot = jnp.concatenate([t1, vx, mx[:, None]], axis=1)
+    w = eliminate(jnp.concatenate([top, bot], axis=0), m)
+
+    vz_ref[0] = w[m:, m:2 * m]
+    mz_ref[0] = w[m:, 2 * m]
+
+
+def cn_update_batched(vx, vy, a, mx, my):
+    """Batched CN update: (B, 2n, 2n) x 3 matrices + (B, 2n) x 2 vectors.
+
+    One grid step per request; each step's working set (a few KB at n=4)
+    lives in VMEM, so the grid is the HBM->VMEM pipeline.
+    """
+    b, m, _ = vx.shape
+    mat_spec = pl.BlockSpec((1, m, m), lambda i: (i, 0, 0))
+    vec_spec = pl.BlockSpec((1, m), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_cn_kernel_batched, m=m),
+        grid=(b,),
+        in_specs=[mat_spec, mat_spec, mat_spec, vec_spec, vec_spec],
+        out_specs=(mat_spec, vec_spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, m, m), jnp.float32),
+            jax.ShapeDtypeStruct((b, m), jnp.float32),
+        ),
+        interpret=INTERPRET,
+    )(vx, vy, a, mx, my)
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    """`mma` in isolation: plain tile matmul (tests + unit benches)."""
+    o_ref[...] = a_ref[...] @ b_ref[...]
+
+
+def mm(a, b):
+    m = a.shape[0]
+    return pl.pallas_call(
+        _mm_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, b.shape[1]), jnp.float32),
+        interpret=INTERPRET,
+    )(a, b)
+
+
+def _mms_kernel(c_ref, a_ref, b_ref, o_ref, *, neg: bool):
+    """`mms` in isolation: C -/+ A B with the product accumulated in-array."""
+    prod = a_ref[...] @ b_ref[...]
+    o_ref[...] = c_ref[...] - prod if neg else c_ref[...] + prod
+
+
+def mms(c, a, b, neg: bool = True):
+    return pl.pallas_call(
+        functools.partial(_mms_kernel, neg=neg),
+        out_shape=jax.ShapeDtypeStruct(c.shape, jnp.float32),
+        interpret=INTERPRET,
+    )(c, a, b)

@@ -1,0 +1,105 @@
+"""Pallas kernel for the Faddeev algorithm (paper §II, third operation type).
+
+The FGP computes Schur complements ``D + C G^{-1} B`` by streaming the
+doubled matrix ``[[G, B], [C, D]]`` through the systolic array: the
+triangular PEborder extension triangularizes the top block rows (pivot
+division on the border PE, row updates on the PEmult grid) and Gaussian
+elimination of the bottom block rows leaves the Schur complement in the
+lower-right quadrant.  No explicit inverse is ever formed — that is the
+paper's key efficiency argument versus the DSP.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the whole doubled working
+set for n=4 complex (block-real 16x17 floats) trivially fits VMEM, so the
+kernel materializes it as a kernel-local value and performs the
+elimination with a ``fori_loop`` whose body does one pivot step — a
+vectorized rank-1 update, which is exactly the wavefront the systolic
+array executes in hardware.
+
+The elimination runs WITHOUT pivoting: every G the compound node produces
+is (block-real symmetric) positive definite (G = V_Y + A V_X A^H with PSD
+inputs), so the pivots are bounded away from zero.  The cycle-accurate
+Rust simulator implements the hardware's row-swap pivoting (PEmult swap
+mode); numerically both agree on PD inputs.
+
+All kernels run ``interpret=True``: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT cannot run Mosaic custom-calls; see module doc.
+
+
+def eliminate(w: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Run m pivot steps of Faddeev elimination on w ((2m, cols) working set).
+
+    Step k scales the pivot row by 1/w[k,k] (the PEborder division) and
+    subtracts w[i,k] * pivot_row from every row i > k (the PEmult
+    multiply-subtract wavefront).  Shared by all kernels below.
+    """
+    rows = w.shape[0]
+    row_idx = lax.broadcasted_iota(jnp.int32, (rows, 1), 0)
+
+    def step(k, w):
+        piv = w[k, k]
+        pivot_row = w[k, :] / piv                       # PEborder: divide
+        factors = w[:, k][:, None]                      # column of multipliers
+        mask = (row_idx > k).astype(w.dtype)            # only rows below pivot
+        return w - mask * factors * pivot_row[None, :]  # PEmult: mult-subtract
+
+    return lax.fori_loop(0, m, step, w)
+
+
+def _faddeev_kernel(g_ref, b_ref, c_ref, d_ref, out_ref, *, m: int):
+    """out = D - C G^{-1} B via elimination of [[G, B], [C, D]]."""
+    top = jnp.concatenate([g_ref[...], b_ref[...]], axis=1)
+    bot = jnp.concatenate([c_ref[...], d_ref[...]], axis=1)
+    w = eliminate(jnp.concatenate([top, bot], axis=0), m)
+    out_ref[...] = w[m:, m:]
+
+
+def faddeev(g: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray, d: jnp.ndarray) -> jnp.ndarray:
+    """Schur complement ``D - C G^{-1} B`` for (m, m) real blocks."""
+    m = g.shape[-1]
+    return pl.pallas_call(
+        functools.partial(_faddeev_kernel, m=m),
+        out_shape=jax.ShapeDtypeStruct((m, m), jnp.float32),
+        interpret=INTERPRET,
+    )(g, b, c, d)
+
+
+def _faddeev_ext_kernel(g_ref, b_ref, c_ref, d_ref, y_ref, x_ref,
+                        vz_ref, mz_ref, *, m: int):
+    """Extended Faddeev folding the mean column into the same elimination.
+
+    Working-set layout (the extra column is the mean streamed through the
+    array after the matrix columns, exactly as the FGP does):
+
+        [[ G, B, y ],     eliminate     [[ *, *, * ],
+         [ C, D, x ]]    ----------->    [ 0, D - C G^{-1} B, x - C G^{-1} y ]]
+    """
+    top = jnp.concatenate([g_ref[...], b_ref[...], y_ref[...][:, None]], axis=1)
+    bot = jnp.concatenate([c_ref[...], d_ref[...], x_ref[...][:, None]], axis=1)
+    w = eliminate(jnp.concatenate([top, bot], axis=0), m)
+    vz_ref[...] = w[m:, m:2 * m]
+    mz_ref[...] = w[m:, 2 * m]
+
+
+def faddeev_extended(g, b, c, d, y, x):
+    """(D - C G^{-1} B, x - C G^{-1} y) in one elimination pass."""
+    m = g.shape[-1]
+    return pl.pallas_call(
+        functools.partial(_faddeev_ext_kernel, m=m),
+        out_shape=(
+            jax.ShapeDtypeStruct((m, m), jnp.float32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+        ),
+        interpret=INTERPRET,
+    )(g, b, c, d, y, x)

@@ -1,0 +1,184 @@
+"""Pure-jnp correctness oracles for the FGP compute kernels.
+
+Everything the FGP's systolic array computes — the three operation types of
+paper §II (matrix multiply, multiply-accumulate, Faddeev Schur complement)
+and the full compound-node (CN) message update of Fig. 2 — is written here
+in straightforward jax.numpy so the Pallas kernels (and, transitively, the
+Rust golden model and the cycle-accurate simulator) have a single numeric
+reference.
+
+Complex representation
+----------------------
+The FGP hardware carries complex numbers on real multipliers (4 real
+multiplies per complex multiply, paper Fig. 3).  We mirror that by working
+in the *real block embedding*:
+
+    M (n x n complex)  <->  blk(M) = [[Re M, -Im M], [Im M, Re M]]   (2n x 2n real)
+
+which is an algebra isomorphism: blk(AB) = blk(A) blk(B),
+blk(A + B) = blk(A) + blk(B), blk(A^H) = blk(A)^T and
+blk(A^{-1}) = blk(A)^{-1}.  Complex vectors map to stacked [Re; Im]
+(2n real) with blk(M) @ vec(x) = vec(M x).  All kernels operate on the
+block form; pack/unpack helpers live here.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Complex <-> real block embedding
+# ---------------------------------------------------------------------------
+
+
+def blk(m: jnp.ndarray) -> jnp.ndarray:
+    """Embed a complex (n, n) matrix as its (2n, 2n) real block form."""
+    re, im = jnp.real(m), jnp.imag(m)
+    top = jnp.concatenate([re, -im], axis=-1)
+    bot = jnp.concatenate([im, re], axis=-1)
+    return jnp.concatenate([top, bot], axis=-2).astype(jnp.float32)
+
+
+def unblk(b: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`blk` (takes the left block column as Re / Im)."""
+    n = b.shape[-1] // 2
+    return b[..., :n, :n] + 1j * b[..., n:, :n]
+
+
+def vecblk(v: jnp.ndarray) -> jnp.ndarray:
+    """Embed a complex (n,) vector as stacked [Re; Im] (2n,) reals."""
+    return jnp.concatenate([jnp.real(v), jnp.imag(v)], axis=-1).astype(jnp.float32)
+
+
+def unvecblk(b: jnp.ndarray) -> jnp.ndarray:
+    n = b.shape[-1] // 2
+    return b[..., :n] + 1j * b[..., n:]
+
+
+# ---------------------------------------------------------------------------
+# The three FGP operation types (paper Section II), real block domain
+# ---------------------------------------------------------------------------
+
+
+def mm_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """`mma`: plain matrix-matrix multiply (e.g. V_X A^H)."""
+    return a @ b
+
+
+def mma_add_ref(c: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray, neg: bool = True) -> jnp.ndarray:
+    """`mms`: multiply with addition/subtraction, C -/+ A B (e.g. V_Y - A(V_X A^H))."""
+    prod = a @ b
+    return c - prod if neg else c + prod
+
+
+def schur_ref(g: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray, d: jnp.ndarray) -> jnp.ndarray:
+    """Faddeev result D - C G^{-1} B (paper's Schur-complement operation).
+
+    Block elimination of [[G, B], [C, D]] leaves D - C G^{-1} B in the
+    lower-right quadrant.  With C = V_X A^H, B = A V_X, D = V_X this yields
+    the compound-node covariance V_Z = V_X - V_X A^H G^{-1} A V_X.
+    """
+    return d - c @ jnp.linalg.solve(g, b)
+
+
+# ---------------------------------------------------------------------------
+# Compound-node message update (Fig. 2 + ref [3] eqns), complex domain
+# ---------------------------------------------------------------------------
+
+
+def cn_update_complex(vx, vy, a, mx, my):
+    """Reference compound-node update in plain complex arithmetic.
+
+    Node: X --[A]--> (+) <-- Y ; outgoing message Z (Kalman measurement
+    update form):
+
+        G   = V_Y + A V_X A^H
+        V_Z = V_X - V_X A^H G^{-1} A V_X
+        m_Z = m_X + V_X A^H G^{-1} (m_Y - A m_X)
+    """
+    ah = jnp.conj(a).T
+    t1 = vx @ ah                          # V_X A^H       (mma)
+    g = vy + a @ t1                       # G             (mms, add)
+    gain = jnp.linalg.solve(g.T, t1.T).T  # V_X A^H G^{-1}
+    vz = vx - gain @ (a @ vx)             # Schur complement (fad)
+    mz = mx + gain @ (my - a @ mx)
+    return vz, mz
+
+
+def cn_update_blk_ref(vx, vy, a, mx, my):
+    """Compound-node update in the real block domain (what the kernel does).
+
+    All matrix args are (2n, 2n) block-form, vectors are (2n,) stacked
+    [Re; Im].  Hermitian transpose of the complex matrix == plain transpose
+    of the block form.
+    """
+    t1 = vx @ a.T                         # blk(V_X A^H)
+    avx = a @ vx                          # blk(A V_X)
+    g = vy + a @ t1                       # blk(G)
+    gain = jnp.linalg.solve(g.T, t1.T).T
+    vz = vx - gain @ avx
+    mz = mx + gain @ (my - a @ mx)
+    return vz, mz
+
+
+def faddeev_extended_ref(g, b, c, d, y, x):
+    """Extended Faddeev: eliminate [[G, B | y], [C, D | x]] -> D - C G^{-1} B, x - C G^{-1} y.
+
+    This folds the mean update into the same elimination the covariance
+    uses — mirroring how the FGP streams the mean vector through the array
+    as an extra column.
+    """
+    ginv_b = jnp.linalg.solve(g, b)
+    ginv_y = jnp.linalg.solve(g, y[:, None])[:, 0]
+    return d - c @ ginv_b, x - c @ ginv_y
+
+
+# ---------------------------------------------------------------------------
+# Simple-node update rules (paper Fig. 1) — used by L2 model tests
+# ---------------------------------------------------------------------------
+
+
+def equality_node_ref(wx, wxm, wy, wym):
+    """Equality node in weight form: W_Z = W_X + W_Y, (Wm)_Z = (Wm)_X + (Wm)_Y."""
+    return wx + wy, wxm + wym
+
+
+def add_node_ref(vx, mx, vy, my):
+    """Additive node in covariance form: V_Z = V_X + V_Y, m_Z = m_X + m_Y."""
+    return vx + vy, mx + my
+
+
+def matmul_node_ref(vx, mx, a):
+    """Multiplier node Y = A X: V_Y = A V_X A^H (block: A V A^T), m_Y = A m_X."""
+    return a @ vx @ a.T, a @ mx
+
+
+# ---------------------------------------------------------------------------
+# RLS / LMMSE channel estimation chain (paper Section IV, Fig. 6)
+# ---------------------------------------------------------------------------
+
+
+def rls_chain_ref(v0, m0, a_seq, y_seq, sigma2):
+    """Sequential reference for the RLS channel-estimation factor graph.
+
+    One section per received symbol: the state (channel-estimate posterior)
+    passes through a compound node whose A is the (block-embedded) regressor
+    and whose V_Y is the observation-noise covariance sigma2 * I.
+
+    Args (all real block form):
+      v0:    (2n, 2n) prior covariance
+      m0:    (2n,)    prior mean
+      a_seq: (S, 2n, 2n) block-embedded regressor matrices
+      y_seq: (S, 2n) observation messages
+      sigma2: scalar noise variance (> 0)
+    """
+    s = a_seq.shape[0]
+    n2 = v0.shape[0]
+    vy = jnp.eye(n2, dtype=jnp.float32) * sigma2
+    v, m = v0, m0
+    out_v, out_m = [], []
+    for i in range(s):
+        v, m = cn_update_blk_ref(v, vy, a_seq[i], m, y_seq[i])
+        out_v.append(v)
+        out_m.append(m)
+    return jnp.stack(out_v), jnp.stack(out_m)

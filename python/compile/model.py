@@ -1,0 +1,130 @@
+"""L2: the GMP compute graph in JAX, calling the Pallas kernels.
+
+Three exported entry points, each AOT-lowered by ``aot.py`` into an HLO
+text artifact the Rust runtime loads through PJRT:
+
+* ``cn_update``          — one compound-node message update (Table II's op)
+* ``cn_update_batched``  — B independent CN updates (the coordinator's
+                           batched-offload path)
+* ``rls_chain``          — the full RLS channel-estimation recursion of
+                           Fig. 6 as a ``lax.scan`` over sections, state
+                           (V, m) threaded through the scan carry exactly
+                           like the FGP threads it through the message
+                           memory
+
+Everything is float32 real-block form (see kernels.ref).  Python never
+runs at request time: these functions exist to be lowered once.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import compound
+from .kernels import ref as kref
+
+
+def cn_update(vx, vy, a, mx, my):
+    """One compound-node update (V_Z, m_Z) via the fused Pallas kernel."""
+    return compound.cn_update(vx, vy, a, mx, my)
+
+
+def cn_update_batched(vx, vy, a, mx, my):
+    """Batched compound-node updates via the gridded Pallas kernel."""
+    return compound.cn_update_batched(vx, vy, a, mx, my)
+
+
+def rls_chain(v0, m0, a_seq, y_seq, sigma2):
+    """RLS channel estimation over S sections (paper Fig. 6 / Listing 1).
+
+    Args:
+      v0:     (2n, 2n) prior covariance (block-real)
+      m0:     (2n,)    prior mean
+      a_seq:  (S, 2n, 2n) block-embedded regressor per section
+      y_seq:  (S, 2n)  observation message per section
+      sigma2: ()       observation noise variance
+
+    Returns (v_seq, m_seq): the posterior after every section — the same
+    trace the FGP leaves in its message memory after running the compiled
+    Listing-2 program with ``loop``.
+    """
+    n2 = v0.shape[0]
+    vy = jnp.eye(n2, dtype=jnp.float32) * sigma2
+
+    def step(carry, sec):
+        v, m = carry
+        a, y = sec
+        vz, mz = compound.cn_update(v, vy, a, m, y)
+        return (vz, mz), (vz, mz)
+
+    (_, _), (v_seq, m_seq) = lax.scan(step, (v0, m0), (a_seq, y_seq))
+    return v_seq, m_seq
+
+
+def rls_chain_ref(v0, m0, a_seq, y_seq, sigma2):
+    """Pure-jnp twin of ``rls_chain`` (no Pallas) for A/B testing the AOT path."""
+    n2 = v0.shape[0]
+    vy = jnp.eye(n2, dtype=jnp.float32) * sigma2
+
+    def step(carry, sec):
+        v, m = carry
+        a, y = sec
+        vz, mz = kref.cn_update_blk_ref(v, vy, a, m, y)
+        return (vz, mz), (vz, mz)
+
+    (_, _), (v_seq, m_seq) = lax.scan(step, (v0, m0), (a_seq, y_seq))
+    return v_seq, m_seq
+
+
+def kalman_smoother_pass(v0, m0, a_seq, c_seq, q, r, y_seq):
+    """Forward Kalman filtering pass expressed as alternating GMP nodes.
+
+    Each time step is: multiplier node (state transition A), additive node
+    (process noise Q), then a compound node (observation C with noise R).
+    Used by tests to show the node algebra composes into a textbook filter;
+    not part of the AOT artifact set (the Rust golden model covers it).
+    """
+    def step(carry, inp):
+        v, m = carry
+        a, c, y = inp
+        # multiplier node: X' = A X
+        v_pred = a @ v @ a.T + q
+        m_pred = a @ m
+        # compound (observation) node
+        vz, mz = kref.cn_update_blk_ref(v_pred, r, c, m_pred, y)
+        return (vz, mz), (vz, mz)
+
+    (_, _), out = lax.scan(step, (v0, m0), (a_seq, c_seq, y_seq))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Example-argument builders used by aot.py (shapes must be static for AOT)
+# ---------------------------------------------------------------------------
+
+def cn_example_args(n: int):
+    """ShapeDtypeStructs for a single CN update with n x n complex state."""
+    m = 2 * n
+    mat = jax.ShapeDtypeStruct((m, m), jnp.float32)
+    vec = jax.ShapeDtypeStruct((m,), jnp.float32)
+    return (mat, mat, mat, vec, vec)
+
+
+def cn_batched_example_args(n: int, batch: int):
+    m = 2 * n
+    mat = jax.ShapeDtypeStruct((batch, m, m), jnp.float32)
+    vec = jax.ShapeDtypeStruct((batch, m), jnp.float32)
+    return (mat, mat, mat, vec, vec)
+
+
+def rls_example_args(n: int, sections: int):
+    m = 2 * n
+    return (
+        jax.ShapeDtypeStruct((m, m), jnp.float32),           # v0
+        jax.ShapeDtypeStruct((m,), jnp.float32),             # m0
+        jax.ShapeDtypeStruct((sections, m, m), jnp.float32),  # a_seq
+        jax.ShapeDtypeStruct((sections, m), jnp.float32),     # y_seq
+        jax.ShapeDtypeStruct((), jnp.float32),               # sigma2
+    )

@@ -1,0 +1,101 @@
+"""Properties of the complex <-> real block embedding (kernels.ref).
+
+The entire L1/L2 stack rests on blk() being an algebra isomorphism; these
+tests pin down every identity the kernels rely on.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+def rand_c(rng, *shape):
+    return rng.standard_normal(shape) + 1j * rng.standard_normal(shape)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_blk_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    m = rand_c(rng, n, n)
+    back = np.asarray(ref.unblk(ref.blk(jnp.array(m))))
+    np.testing.assert_allclose(back, m, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 6), seed=st.integers(0, 2**31 - 1))
+def test_blk_is_multiplicative(n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = rand_c(rng, n, n), rand_c(rng, n, n)
+    lhs = np.asarray(ref.blk(jnp.array(a)) @ ref.blk(jnp.array(b)))
+    rhs = np.asarray(ref.blk(jnp.array(a @ b)))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 6), seed=st.integers(0, 2**31 - 1))
+def test_blk_transpose_is_hermitian(n, seed):
+    rng = np.random.default_rng(seed)
+    a = rand_c(rng, n, n)
+    lhs = np.asarray(ref.blk(jnp.array(a)).T)
+    rhs = np.asarray(ref.blk(jnp.array(a.conj().T)))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 5), seed=st.integers(0, 2**31 - 1))
+def test_blk_inverse_commutes(n, seed):
+    rng = np.random.default_rng(seed)
+    a = rand_c(rng, n, n) + np.eye(n) * 3.0  # keep well conditioned
+    lhs = np.linalg.inv(np.asarray(ref.blk(jnp.array(a)), dtype=np.float64))
+    rhs = np.asarray(ref.blk(jnp.array(np.linalg.inv(a))), dtype=np.float64)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_vecblk_matvec(n, seed):
+    rng = np.random.default_rng(seed)
+    a, x = rand_c(rng, n, n), rand_c(rng, n)
+    lhs = np.asarray(ref.blk(jnp.array(a)) @ ref.vecblk(jnp.array(x)))
+    rhs = np.asarray(ref.vecblk(jnp.array(a @ x)))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_vecblk_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_c(rng, n)
+    back = np.asarray(ref.unvecblk(ref.vecblk(jnp.array(x))))
+    np.testing.assert_allclose(back, x, rtol=1e-5, atol=1e-5)
+
+
+def test_blk_of_hermitian_psd_is_symmetric_psd():
+    rng = np.random.default_rng(0)
+    m = rand_c(rng, 4, 4)
+    v = m @ m.conj().T + np.eye(4)
+    b = np.asarray(ref.blk(jnp.array(v)), dtype=np.float64)
+    np.testing.assert_allclose(b, b.T, atol=1e-5)
+    assert np.linalg.eigvalsh(b).min() > 0
+
+
+def test_simple_node_rules_complex_equivalence():
+    """Fig. 1 rules in block form match their complex counterparts."""
+    rng = np.random.default_rng(1)
+    n = 3
+    a = rand_c(rng, n, n)
+    msq = rand_c(rng, n, n)
+    v = msq @ msq.conj().T + np.eye(n)
+    x = rand_c(rng, n)
+    vb, xb = ref.blk(jnp.array(v)), ref.vecblk(jnp.array(x))
+    ab = ref.blk(jnp.array(a))
+    vy_b, my_b = ref.matmul_node_ref(vb, xb, ab)
+    np.testing.assert_allclose(
+        np.asarray(ref.unblk(vy_b)), a @ v @ a.conj().T, rtol=1e-4, atol=1e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(ref.unvecblk(my_b)), a @ x, rtol=1e-4, atol=1e-4
+    )

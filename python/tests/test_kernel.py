@@ -1,0 +1,221 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Every kernel in ``compile.kernels`` is checked against ``ref.py`` (and,
+for the compound node, against the plain complex-arithmetic formula) over
+a sweep of sizes and random seeds, plus hypothesis-driven shape/value
+sweeps.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import compound, faddeev, ref
+
+
+def rand_psd(rng, n):
+    """Random complex positive-definite matrix (well conditioned)."""
+    m = rng.standard_normal((n, n)) + 1j * rng.standard_normal((n, n))
+    return m @ m.conj().T + np.eye(n) * 0.5
+
+
+def rand_cmat(rng, n):
+    return rng.standard_normal((n, n)) + 1j * rng.standard_normal((n, n))
+
+
+def rand_cvec(rng, n):
+    return rng.standard_normal(n) + 1j * rng.standard_normal(n)
+
+
+def cn_inputs_blk(rng, n):
+    """Random CN-update operands, returned in block-real form + complex."""
+    vx, vy = rand_psd(rng, n), rand_psd(rng, n)
+    a, mx, my = rand_cmat(rng, n), rand_cvec(rng, n), rand_cvec(rng, n)
+    blkset = (
+        ref.blk(jnp.array(vx)),
+        ref.blk(jnp.array(vy)),
+        ref.blk(jnp.array(a)),
+        ref.vecblk(jnp.array(mx)),
+        ref.vecblk(jnp.array(my)),
+    )
+    return blkset, (vx, vy, a, mx, my)
+
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# compound-node kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 4, 6, 8])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_cn_update_matches_complex_reference(n, seed):
+    rng = np.random.default_rng(seed)
+    blkset, (vx, vy, a, mx, my) = cn_inputs_blk(rng, n)
+    vz_k, mz_k = compound.cn_update(*blkset)
+    vz_c, mz_c = ref.cn_update_complex(
+        jnp.array(vx), jnp.array(vy), jnp.array(a), jnp.array(mx), jnp.array(my)
+    )
+    np.testing.assert_allclose(np.asarray(ref.unblk(vz_k)), np.asarray(vz_c), **TOL)
+    np.testing.assert_allclose(np.asarray(ref.unvecblk(mz_k)), np.asarray(mz_c), **TOL)
+
+
+@pytest.mark.parametrize("n", [2, 4])
+def test_cn_update_matches_block_reference(n):
+    rng = np.random.default_rng(7)
+    blkset, _ = cn_inputs_blk(rng, n)
+    vz_k, mz_k = compound.cn_update(*blkset)
+    vz_r, mz_r = ref.cn_update_blk_ref(*blkset)
+    np.testing.assert_allclose(np.asarray(vz_k), np.asarray(vz_r), **TOL)
+    np.testing.assert_allclose(np.asarray(mz_k), np.asarray(mz_r), **TOL)
+
+
+def test_cn_update_output_covariance_is_symmetric_psd():
+    """V_Z must stay a valid covariance: block-symmetric, eigenvalues >= 0."""
+    rng = np.random.default_rng(3)
+    blkset, _ = cn_inputs_blk(rng, 4)
+    vz_k, _ = compound.cn_update(*blkset)
+    vz = np.asarray(ref.unblk(vz_k))
+    np.testing.assert_allclose(vz, vz.conj().T, rtol=1e-3, atol=1e-3)
+    eig = np.linalg.eigvalsh((vz + vz.conj().T) / 2)
+    assert eig.min() > -1e-4
+
+
+def test_cn_update_shrinks_covariance():
+    """An observation can only reduce uncertainty: tr(V_Z) <= tr(V_X)."""
+    rng = np.random.default_rng(4)
+    blkset, (vx, *_rest) = cn_inputs_blk(rng, 4)
+    vz_k, _ = compound.cn_update(*blkset)
+    assert float(np.trace(np.real(np.asarray(ref.unblk(vz_k))))) <= np.trace(vx.real) + 1e-5
+
+
+@pytest.mark.parametrize("batch", [1, 3, 8])
+def test_cn_update_batched_matches_loop(batch):
+    rng = np.random.default_rng(5)
+    singles = [cn_inputs_blk(rng, 4)[0] for _ in range(batch)]
+    stacked = tuple(jnp.stack([s[i] for s in singles]) for i in range(5))
+    vz_b, mz_b = compound.cn_update_batched(*stacked)
+    for i, s in enumerate(singles):
+        vz_i, mz_i = compound.cn_update(*s)
+        np.testing.assert_allclose(np.asarray(vz_b[i]), np.asarray(vz_i), **TOL)
+        np.testing.assert_allclose(np.asarray(mz_b[i]), np.asarray(mz_i), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# faddeev kernels
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [2, 4, 8])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_faddeev_matches_schur_ref(n, seed):
+    rng = np.random.default_rng(seed)
+    m = 2 * n
+    g = ref.blk(jnp.array(rand_psd(rng, n)))
+    b = jnp.array(rng.standard_normal((m, m)), dtype=jnp.float32)
+    c = jnp.array(rng.standard_normal((m, m)), dtype=jnp.float32)
+    d = jnp.array(rng.standard_normal((m, m)), dtype=jnp.float32)
+    out = faddeev.faddeev(g, b, c, d)
+    expect = ref.schur_ref(g, b, c, d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), **TOL)
+
+
+def test_faddeev_identity_g_is_plain_mms():
+    """With G = I the Schur complement degenerates to D - C B (an mms)."""
+    rng = np.random.default_rng(9)
+    m = 8
+    g = jnp.eye(m, dtype=jnp.float32)
+    b = jnp.array(rng.standard_normal((m, m)), dtype=jnp.float32)
+    c = jnp.array(rng.standard_normal((m, m)), dtype=jnp.float32)
+    d = jnp.array(rng.standard_normal((m, m)), dtype=jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(faddeev.faddeev(g, b, c, d)), np.asarray(d - c @ b), **TOL
+    )
+
+
+@pytest.mark.parametrize("n", [2, 4])
+def test_faddeev_extended_matches_ref(n):
+    rng = np.random.default_rng(11)
+    m = 2 * n
+    g = ref.blk(jnp.array(rand_psd(rng, n)))
+    b = jnp.array(rng.standard_normal((m, m)), dtype=jnp.float32)
+    c = jnp.array(rng.standard_normal((m, m)), dtype=jnp.float32)
+    d = jnp.array(rng.standard_normal((m, m)), dtype=jnp.float32)
+    y = jnp.array(rng.standard_normal(m), dtype=jnp.float32)
+    x = jnp.array(rng.standard_normal(m), dtype=jnp.float32)
+    vz, mz = faddeev.faddeev_extended(g, b, c, d, y, x)
+    vz_r, mz_r = ref.faddeev_extended_ref(g, b, c, d, y, x)
+    np.testing.assert_allclose(np.asarray(vz), np.asarray(vz_r), **TOL)
+    np.testing.assert_allclose(np.asarray(mz), np.asarray(mz_r), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# mma / mms kernels
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(4, 4, 4), (8, 8, 8), (8, 4, 8), (2, 6, 3)])
+def test_mm_matches_ref(shape):
+    rng = np.random.default_rng(13)
+    mi, mk, mj = shape
+    a = jnp.array(rng.standard_normal((mi, mk)), dtype=jnp.float32)
+    b = jnp.array(rng.standard_normal((mk, mj)), dtype=jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(compound.mm(a, b)), np.asarray(ref.mm_ref(a, b)), **TOL
+    )
+
+
+@pytest.mark.parametrize("neg", [True, False])
+def test_mms_matches_ref(neg):
+    rng = np.random.default_rng(17)
+    m = 8
+    c = jnp.array(rng.standard_normal((m, m)), dtype=jnp.float32)
+    a = jnp.array(rng.standard_normal((m, m)), dtype=jnp.float32)
+    b = jnp.array(rng.standard_normal((m, m)), dtype=jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(compound.mms(c, a, b, neg=neg)),
+        np.asarray(ref.mma_add_ref(c, a, b, neg=neg)),
+        **TOL,
+    )
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps (shapes / values) — L1 robustness
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(min_value=1, max_value=6), seed=st.integers(0, 2**31 - 1))
+def test_cn_update_hypothesis_sweep(n, seed):
+    rng = np.random.default_rng(seed)
+    blkset, (vx, vy, a, mx, my) = cn_inputs_blk(rng, n)
+    vz_k, mz_k = compound.cn_update(*blkset)
+    vz_c, mz_c = ref.cn_update_complex(
+        jnp.array(vx), jnp.array(vy), jnp.array(a), jnp.array(mx), jnp.array(my)
+    )
+    scale = max(1.0, float(np.max(np.abs(np.asarray(vz_c)))))
+    assert float(jnp.max(jnp.abs(ref.unblk(vz_k) - vz_c))) < 5e-4 * scale
+    mscale = max(1.0, float(np.max(np.abs(np.asarray(mz_c)))))
+    assert float(jnp.max(jnp.abs(ref.unvecblk(mz_k) - mz_c))) < 5e-4 * mscale
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.sampled_from([2, 4, 6, 8]),
+    seed=st.integers(0, 2**31 - 1),
+    diag=st.floats(min_value=0.5, max_value=10.0),
+)
+def test_faddeev_hypothesis_sweep(m, seed, diag):
+    rng = np.random.default_rng(seed)
+    gm = rng.standard_normal((m, m)).astype(np.float32)
+    g = jnp.array(gm @ gm.T + np.eye(m, dtype=np.float32) * diag)
+    b = jnp.array(rng.standard_normal((m, m)), dtype=jnp.float32)
+    c = jnp.array(rng.standard_normal((m, m)), dtype=jnp.float32)
+    d = jnp.array(rng.standard_normal((m, m)), dtype=jnp.float32)
+    out = np.asarray(faddeev.faddeev(g, b, c, d))
+    expect = np.asarray(ref.schur_ref(g, b, c, d))
+    scale = max(1.0, np.max(np.abs(expect)))
+    assert np.max(np.abs(out - expect)) < 1e-3 * scale

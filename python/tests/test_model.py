@@ -1,0 +1,116 @@
+"""L2 model tests: RLS chain, Kalman pass, shape contracts."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def make_rls_problem(rng, n, sections, sigma2=0.1):
+    """Random RLS channel-estimation instance in block form.
+
+    The regressor for section i is the (complex) outer structure the
+    paper's Fig. 6 uses: a known symbol row observed through noise.  We
+    embed the 1 x n complex row as an n x n matrix with the row in the
+    first position and a tiny ridge elsewhere so G stays invertible —
+    exactly the convention the Rust apps::rls module uses.
+    """
+    h_true = rng.standard_normal(n) + 1j * rng.standard_normal(n)
+    a_seq, y_seq = [], []
+    for _ in range(sections):
+        row = rng.standard_normal(n) + 1j * rng.standard_normal(n)
+        a = np.zeros((n, n), dtype=complex)
+        a[0, :] = row
+        noise = (rng.standard_normal() + 1j * rng.standard_normal()) * np.sqrt(sigma2 / 2)
+        y = np.zeros(n, dtype=complex)
+        y[0] = row @ h_true + noise
+        a_seq.append(ref.blk(jnp.array(a)))
+        y_seq.append(ref.vecblk(jnp.array(y)))
+    v0 = ref.blk(jnp.array(np.eye(n, dtype=complex) * 10.0))
+    m0 = ref.vecblk(jnp.array(np.zeros(n, dtype=complex)))
+    return h_true, v0, m0, jnp.stack(a_seq), jnp.stack(y_seq)
+
+
+@pytest.mark.parametrize("sections", [1, 4, 16])
+def test_rls_chain_matches_sequential_ref(sections):
+    rng = np.random.default_rng(0)
+    _, v0, m0, a_seq, y_seq = make_rls_problem(rng, 4, sections)
+    v_k, m_k = model.rls_chain(v0, m0, a_seq, y_seq, jnp.float32(0.1))
+    v_r, m_r = ref.rls_chain_ref(v0, m0, a_seq, y_seq, 0.1)
+    np.testing.assert_allclose(np.asarray(v_k), np.asarray(v_r), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(m_k), np.asarray(m_r), rtol=1e-3, atol=1e-3)
+
+
+def test_rls_chain_pallas_vs_pure_jnp_twin():
+    rng = np.random.default_rng(1)
+    _, v0, m0, a_seq, y_seq = make_rls_problem(rng, 4, 8)
+    v_k, m_k = model.rls_chain(v0, m0, a_seq, y_seq, jnp.float32(0.1))
+    v_j, m_j = model.rls_chain_ref(v0, m0, a_seq, y_seq, jnp.float32(0.1))
+    np.testing.assert_allclose(np.asarray(v_k), np.asarray(v_j), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(m_k), np.asarray(m_j), rtol=1e-3, atol=1e-3)
+
+
+def test_rls_converges_to_true_channel():
+    """The headline behaviour: estimate -> true channel as sections grow."""
+    rng = np.random.default_rng(2)
+    n, sections = 4, 64
+    h_true, v0, m0, a_seq, y_seq = make_rls_problem(rng, n, sections, sigma2=0.01)
+    _, m_seq = model.rls_chain(v0, m0, a_seq, y_seq, jnp.float32(0.01))
+    h_hat = np.asarray(ref.unvecblk(m_seq[-1]))
+    err_final = np.linalg.norm(h_hat - h_true) / np.linalg.norm(h_true)
+    h_early = np.asarray(ref.unvecblk(m_seq[2]))
+    err_early = np.linalg.norm(h_early - h_true) / np.linalg.norm(h_true)
+    assert err_final < 0.05, f"final rel err {err_final}"
+    assert err_final < err_early, "error must decrease with more sections"
+
+
+def test_rls_covariance_trace_monotone():
+    """Each observation shrinks posterior uncertainty (tr V non-increasing)."""
+    rng = np.random.default_rng(3)
+    _, v0, m0, a_seq, y_seq = make_rls_problem(rng, 4, 16)
+    v_seq, _ = model.rls_chain(v0, m0, a_seq, y_seq, jnp.float32(0.1))
+    traces = [float(jnp.trace(v)) for v in v_seq]
+    traces = [float(jnp.trace(v0))] + traces
+    assert all(t1 <= t0 + 1e-4 for t0, t1 in zip(traces, traces[1:]))
+
+
+def test_kalman_pass_tracks_constant_velocity():
+    """2-state constant-velocity tracker: position error stays bounded."""
+    rng = np.random.default_rng(4)
+    n, steps, dt = 2, 50, 1.0
+    a = np.array([[1.0, dt], [0.0, 1.0]], dtype=complex)
+    c = np.array([[1.0, 0.0], [0.0, 0.0]], dtype=complex)  # observe position
+    q = ref.blk(jnp.array(np.eye(n, dtype=complex) * 1e-3))
+    r = ref.blk(jnp.array(np.eye(n, dtype=complex) * 0.1))
+    x = np.array([0.0, 1.0], dtype=complex)
+    a_b = ref.blk(jnp.array(a))
+    c_b = ref.blk(jnp.array(c))
+    a_seq, c_seq, y_seq, xs = [], [], [], []
+    for _ in range(steps):
+        x = a @ x
+        y = np.zeros(n, dtype=complex)
+        y[0] = x[0] + rng.standard_normal() * 0.3
+        a_seq.append(a_b)
+        c_seq.append(c_b)
+        y_seq.append(ref.vecblk(jnp.array(y)))
+        xs.append(x.copy())
+    v0 = ref.blk(jnp.array(np.eye(n, dtype=complex) * 5.0))
+    m0 = ref.vecblk(jnp.array(np.zeros(n, dtype=complex)))
+    v_seq, m_seq = model.kalman_smoother_pass(
+        v0, m0, jnp.stack(a_seq), jnp.stack(c_seq), q, r, jnp.stack(y_seq)
+    )
+    est = np.asarray(ref.unvecblk(m_seq[-1]))
+    truth = xs[-1]
+    assert abs(est[0] - truth[0]) < 1.0, f"position err {abs(est[0]-truth[0])}"
+    assert abs(est[1] - truth[1]) < 0.5, f"velocity err {abs(est[1]-truth[1])}"
+
+
+def test_example_args_shapes():
+    assert [tuple(s.shape) for s in model.cn_example_args(4)] == [
+        (8, 8), (8, 8), (8, 8), (8,), (8,)
+    ]
+    assert [tuple(s.shape) for s in model.cn_batched_example_args(4, 32)][0] == (32, 8, 8)
+    shapes = [tuple(s.shape) for s in model.rls_example_args(4, 64)]
+    assert shapes == [(8, 8), (8,), (64, 8, 8), (64, 8), ()]

@@ -1,0 +1,58 @@
+//! E2 — regenerates the **§V area report**: 3.11 mm² at UMC180 with the
+//! 30% memories / 60% systolic array / 10% datapath+control split, plus
+//! the model's extrapolation over array size and memory capacity.
+//!
+//! Run: `cargo bench --bench area_breakdown`
+
+use fgp_repro::benchutil::banner;
+use fgp_repro::model::area::AreaModel;
+use fgp_repro::paper;
+
+fn main() {
+    let model = AreaModel::default();
+
+    banner("§V area — paper configuration (n=4, 64 kbit)");
+    let b = model.paper_configuration();
+    let f = b.fractions();
+    println!("{:<26} {:>10} {:>10}", "", "modeled", "paper");
+    println!("{:<26} {:>9.2}mm² {:>9.2}mm²", "total", b.total(), paper::FGP_AREA_MM2);
+    println!(
+        "{:<26} {:>9.0}% {:>9.0}%",
+        "memories",
+        f[0] * 100.0,
+        paper::FGP_AREA_SPLIT[0] * 100.0
+    );
+    println!(
+        "{:<26} {:>9.0}% {:>9.0}%",
+        "systolic array",
+        f[1] * 100.0,
+        paper::FGP_AREA_SPLIT[1] * 100.0
+    );
+    println!(
+        "{:<26} {:>9.0}% {:>9.0}%",
+        "datapath + control",
+        f[2] * 100.0,
+        paper::FGP_AREA_SPLIT[2] * 100.0
+    );
+
+    banner("extrapolation: area vs array size (64 kbit memory)");
+    println!("{:>4} {:>12} {:>10} {:>10} {:>10}", "n", "total mm²", "mem %", "array %", "ctrl %");
+    for n in [2usize, 4, 6, 8] {
+        let b = model.breakdown(n, 64);
+        let f = b.fractions();
+        println!(
+            "{n:>4} {:>12.2} {:>10.0} {:>10.0} {:>10.0}",
+            b.total(),
+            f[0] * 100.0,
+            f[1] * 100.0,
+            f[2] * 100.0
+        );
+    }
+
+    banner("extrapolation: area vs memory capacity (n=4)");
+    println!("{:>8} {:>12} {:>10}", "kbit", "total mm²", "mem %");
+    for kbit in [32usize, 64, 128, 256] {
+        let b = model.breakdown(4, kbit);
+        println!("{kbit:>8} {:>12.2} {:>10.0}", b.total(), b.fractions()[0] * 100.0);
+    }
+}

@@ -1,0 +1,85 @@
+//! E3 — regenerates **Fig. 7**: the compiler's message-memory identifier
+//! optimization (unoptimized vs optimized schedules), plus the loop
+//! compression of §IV and the allocator score-policy ablation.
+//!
+//! The paper shows the 2-section RLS graph; we print that case and sweep
+//! the section count to show the optimized mapping is O(1) while the
+//! unoptimized one grows linearly — the property that makes the 64-kbit
+//! message memory sufficient.
+//!
+//! Run: `cargo bench --bench fig7_compiler`
+
+use fgp_repro::benchutil::{banner, fmt_dur, time_fn};
+use fgp_repro::compiler::{compile, AllocOptions, CompileOptions, ScorePolicy};
+use fgp_repro::gmp::matrix::CMatrix;
+use fgp_repro::gmp::{FactorGraph, Schedule};
+use fgp_repro::paper;
+use fgp_repro::testutil::Rng;
+
+fn rls_graph(sections: usize) -> (FactorGraph, Schedule) {
+    let mut rng = Rng::new(7);
+    let n = paper::N;
+    let a_list: Vec<CMatrix> =
+        (0..sections).map(|_| CMatrix::random(&mut rng, n, n).scale(0.3)).collect();
+    let mut g = FactorGraph::new();
+    g.rls_chain(n, &a_list);
+    let s = Schedule::forward_sweep(&g);
+    (g, s)
+}
+
+fn main() -> anyhow::Result<()> {
+    banner("Fig. 7 — the paper's 2-section RLS example");
+    let (g, s) = rls_graph(2);
+    let c = compile(&g, &s, &CompileOptions::default())?;
+    println!(
+        "identifiers: {} unoptimized -> {} optimized",
+        c.stats.slots_unoptimized, c.stats.slots_optimized
+    );
+    println!("compiled listing (Listing 2 shape):\n{}", c.listing());
+
+    banner("identifier count vs sections (unopt grows, opt constant)");
+    println!(
+        "{:>10} {:>14} {:>12} {:>16} {:>16}",
+        "sections", "unoptimized", "optimized", "instrs (flat)", "instrs (loop)"
+    );
+    for sections in [1usize, 2, 4, 8, 16, 32, 64] {
+        let (g, s) = rls_graph(sections);
+        let c = compile(&g, &s, &CompileOptions::default())?;
+        println!(
+            "{sections:>10} {:>14} {:>12} {:>16} {:>16}",
+            c.stats.slots_unoptimized,
+            c.stats.slots_optimized,
+            c.stats.instrs_uncompressed,
+            c.stats.instrs_compressed
+        );
+    }
+
+    banner("score-policy ablation (8-section RLS)");
+    println!("{:>22} {:>10}", "policy", "slots");
+    for policy in [
+        ScorePolicy::MostRecentlyFreed,
+        ScorePolicy::LowestIndex,
+        ScorePolicy::LeastRecentlyFreed,
+    ] {
+        let (g, s) = rls_graph(8);
+        let c = compile(
+            &g,
+            &s,
+            &CompileOptions {
+                alloc: AllocOptions { policy, ..Default::default() },
+                ..Default::default()
+            },
+        )?;
+        println!("{:>22} {:>10}", format!("{policy:?}"), c.stats.slots_optimized);
+    }
+
+    banner("compile time (host)");
+    for sections in [8usize, 64] {
+        let (g, s) = rls_graph(sections);
+        let (mean, _) = time_fn(3, 50, || {
+            let _ = compile(&g, &s, &CompileOptions::default()).unwrap();
+        });
+        println!("{sections:>4} sections: {}", fmt_dur(mean));
+    }
+    Ok(())
+}

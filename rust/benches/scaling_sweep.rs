@@ -1,0 +1,64 @@
+//! E8 (extension) — cycles and normalized throughput vs state size n,
+//! FGP (measured on the simulator's timing model) against the C66x cost
+//! model. Shows where the FGP's Faddeev advantage comes from: the DSP
+//! pays the explicit-inversion cost (cubic, [11]-anchored) while the
+//! systolic array folds it into the elimination pass.
+//!
+//! Run: `cargo bench --bench scaling_sweep`
+
+use fgp_repro::benchutil::banner;
+use fgp_repro::dsp::C66xModel;
+use fgp_repro::fgp::TimingModel;
+use fgp_repro::model::scaling::{normalized_throughput, ProcessorPoint};
+
+fn main() {
+    let timing = TimingModel::default();
+    let dsp = C66xModel::default();
+
+    banner("CN-update cycles vs state size n");
+    println!(
+        "{:>4} {:>12} {:>12} {:>10} {:>14} {:>14}",
+        "n", "FGP cycles", "DSP cycles", "speedup*", "FGP CN/s@40", "DSP CN/s@40"
+    );
+    for n in [2usize, 3, 4, 6, 8] {
+        let f = timing.compound_node_cycles(n);
+        let d = dsp.compound_node_cycles(n);
+        let ftp = normalized_throughput(&ProcessorPoint::fgp(f), 40.0);
+        let dtp = normalized_throughput(&ProcessorPoint::c66x(d), 40.0);
+        println!(
+            "{n:>4} {f:>12} {d:>12} {:>9.2}x {:>14.2e} {:>14.2e}",
+            ftp / dtp,
+            ftp,
+            dtp
+        );
+    }
+    println!("* normalized to a common 40 nm node, t_pd ~ 1/s (Table II method)");
+
+    banner("FGP per-instruction cycle budget vs n");
+    println!(
+        "{:>4} {:>8} {:>8} {:>8} {:>8} {:>8}",
+        "n", "mma", "mms", "mms.v", "fad", "smm"
+    );
+    for n in [2usize, 4, 6, 8] {
+        println!(
+            "{n:>4} {:>8} {:>8} {:>8} {:>8} {:>8}",
+            timing.matrix_pass(n),
+            timing.matrix_pass(n),
+            timing.vector_pass(n),
+            timing.faddeev_pass(n),
+            timing.store_pass(n)
+        );
+    }
+
+    banner("where the DSP loses: inversion share of its CN update");
+    println!("{:>4} {:>12} {:>12} {:>8}", "n", "inversion", "total", "share");
+    for n in [2usize, 4, 6, 8] {
+        let b = dsp.compound_node_breakdown(n);
+        println!(
+            "{n:>4} {:>12} {:>12} {:>7.0}%",
+            b.inversion,
+            b.total(),
+            100.0 * b.inversion as f64 / b.total() as f64
+        );
+    }
+}

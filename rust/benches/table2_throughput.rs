@@ -1,0 +1,104 @@
+//! E1 — regenerates **Table II**: throughput comparison, FGP vs DSP.
+//!
+//! Prints the same rows the paper reports: technology node, max clock,
+//! cycles per compound-node (CN) message update, and normalized maximum
+//! throughput in CN/s. The FGP cycle count is *measured* by running the
+//! compiled CN program on the cycle-accurate simulator; the DSP count
+//! comes from the C66x cost model (the paper's own estimation method).
+//! Also times the simulator itself (host wall-clock per simulated CN).
+//!
+//! Run: `cargo bench --bench table2_throughput`
+
+use fgp_repro::benchutil::{banner, fmt_dur, time_for};
+use fgp_repro::coordinator::backend::{Backend, CnRequestData, FgpSimBackend};
+use fgp_repro::dsp::C66xModel;
+use fgp_repro::fgp::FgpConfig;
+use fgp_repro::gmp::matrix::{c64, CMatrix};
+use fgp_repro::gmp::message::GaussMessage;
+use fgp_repro::model::scaling::{normalized_throughput, ProcessorPoint};
+use fgp_repro::paper;
+use fgp_repro::testutil::Rng;
+use std::time::Duration;
+
+fn request(rng: &mut Rng, n: usize) -> CnRequestData {
+    CnRequestData {
+        x: GaussMessage::new(
+            (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+            CMatrix::random_psd(rng, n, 1.0).scale(0.15),
+        ),
+        y: GaussMessage::new(
+            (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+            CMatrix::random_psd(rng, n, 1.0).scale(0.15),
+        ),
+        a: CMatrix::random(rng, n, n).scale(0.3),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = paper::N;
+
+    // --- measured FGP cycles: run the compiled CN program once
+    let mut sim = FgpSimBackend::new(FgpConfig::default())?;
+    let mut rng = Rng::new(1);
+    let req = request(&mut rng, n);
+    sim.cn_update(&req)?;
+    let fgp_cycles = sim.device_cycles;
+
+    // --- DSP model
+    let dsp_model = C66xModel::default();
+    let dsp_cycles = dsp_model.compound_node_cycles(n);
+
+    let fgp_pt = ProcessorPoint::fgp(fgp_cycles);
+    let dsp_pt = ProcessorPoint::c66x(dsp_cycles);
+    let fgp_tp = normalized_throughput(&fgp_pt, 40.0);
+    let dsp_tp = normalized_throughput(&dsp_pt, 40.0);
+
+    banner("Table II — throughput comparison, FGP vs DSP");
+    println!("{:<42} {:>16} {:>16}", "Processor", "FGP (this work)", "TI C66x");
+    println!("{:<42} {:>16} {:>16}", "CMOS technology [nm]", 180, 40);
+    println!("{:<42} {:>16} {:>16}", "Max. freq. [MHz]", 130, 1250);
+    println!("{:<42} {:>16} {:>16}", "cycles for CN msg. update [measured]", fgp_cycles, dsp_cycles);
+    println!(
+        "{:<42} {:>16} {:>16}",
+        "cycles for CN msg. update [paper]",
+        paper::FGP_CN_CYCLES,
+        paper::DSP_CN_CYCLES
+    );
+    println!(
+        "{:<42} {:>16.2e} {:>16.2e}",
+        "Normalized max. throughput [CN/s]", fgp_tp, dsp_tp
+    );
+    println!(
+        "{:<42} {:>16.2e} {:>16.2e}",
+        "  (paper)", 2.25e6, 1.16e6
+    );
+    println!("\nspeedup: {:.2}x (paper: ~2x)", fgp_tp / dsp_tp);
+
+    // --- DSP breakdown (the inversion-dominance argument)
+    banner("C66x CN-update cycle breakdown (estimation per paper method)");
+    let b = dsp_model.compound_node_breakdown(n);
+    println!("  T1 = V_X A^H matmul        {:>6}", b.t1_matmul);
+    println!("  G matmul + add             {:>6}", b.g_matmul_add);
+    println!("  G^-1 inversion (ref [11])  {:>6}", b.inversion);
+    println!("  gain matmul                {:>6}", b.gain_matmul);
+    println!("  Schur matmul + sub         {:>6}", b.schur_matmul_sub);
+    println!("  mean update                {:>6}", b.mean_update);
+    println!("  total                      {:>6}", b.total());
+
+    // --- simulator host performance (perf-pass tracking)
+    banner("simulator host performance");
+    let mut rng = Rng::new(2);
+    let reqs: Vec<CnRequestData> = (0..64).map(|_| request(&mut rng, n)).collect();
+    let mut i = 0;
+    let (mean, iters) = time_for(Duration::from_secs(1), || {
+        let r = &reqs[i % reqs.len()];
+        i += 1;
+        sim.cn_update(r).unwrap();
+    });
+    println!(
+        "simulated CN update: {} wall ({} sim-CN/s host, {iters} iters)",
+        fmt_dur(mean),
+        (1.0 / mean.as_secs_f64()) as u64
+    );
+    Ok(())
+}

@@ -1,0 +1,123 @@
+//! E10 (extension) — the batched XLA offload path: latency/throughput of
+//! compound-node updates through the PJRT artifacts, single vs batched,
+//! plus the end-to-end coordinator (queue + batcher) overhead.
+//!
+//! Requires `make artifacts`; prints a skip notice otherwise.
+//!
+//! Run: `cargo bench --bench xla_offload`
+
+use std::time::Duration;
+
+use fgp_repro::benchutil::{banner, fmt_dur, time_for};
+use fgp_repro::coordinator::backend::{Backend, CnRequestData, GoldenBackend, XlaBatchBackend, XlaBackend};
+use fgp_repro::coordinator::{BatchPolicy, CnServer, ServerConfig};
+use fgp_repro::gmp::matrix::{c64, CMatrix};
+use fgp_repro::gmp::message::GaussMessage;
+use fgp_repro::runtime::RuntimeClient;
+use fgp_repro::testutil::Rng;
+
+fn request(rng: &mut Rng, n: usize) -> CnRequestData {
+    CnRequestData {
+        x: GaussMessage::new(
+            (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+            CMatrix::random_psd(rng, n, 1.0).scale(0.15),
+        ),
+        y: GaussMessage::new(
+            (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+            CMatrix::random_psd(rng, n, 1.0).scale(0.15),
+        ),
+        a: CMatrix::random(rng, n, n).scale(0.3),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.txt").exists() {
+        println!("artifacts/ not built — run `make artifacts` first; skipping xla_offload");
+        return Ok(());
+    }
+    let n = fgp_repro::paper::N;
+    let mut rng = Rng::new(3);
+    let reqs: Vec<CnRequestData> = (0..256).map(|_| request(&mut rng, n)).collect();
+
+    banner("engine latency per CN update (direct, no queue)");
+    // golden f64
+    let mut golden = GoldenBackend;
+    let mut i = 0;
+    let (g_mean, _) = time_for(Duration::from_millis(500), || {
+        golden.cn_update(&reqs[i % reqs.len()]).unwrap();
+        i += 1;
+    });
+    println!("{:<28} {:>12}", "golden f64 (rust)", fmt_dur(g_mean));
+
+    // xla single
+    let mut xla1 = XlaBackend::new(RuntimeClient::load(&artifacts)?);
+    let mut i = 0;
+    let (x1_mean, _) = time_for(Duration::from_secs(1), || {
+        xla1.cn_update(&reqs[i % reqs.len()]).unwrap();
+        i += 1;
+    });
+    println!("{:<28} {:>12}", "xla single (PJRT dispatch)", fmt_dur(x1_mean));
+
+    // xla batched, full batch
+    let xlab = XlaBatchBackend::new(RuntimeClient::load(&artifacts)?);
+    let mut xlab = match xlab {
+        Ok(b) => b,
+        Err(e) => return Err(e),
+    };
+    let bsz = xlab.max_batch();
+    let batch: Vec<CnRequestData> = reqs[..bsz.min(reqs.len())].to_vec();
+    let (xb_mean, _) = time_for(Duration::from_secs(1), || {
+        let out = xlab.cn_update_batch(&batch);
+        assert!(out.iter().all(|r| r.is_ok()));
+    });
+    println!(
+        "{:<28} {:>12}  ({} per request, batch {bsz})",
+        "xla batched (one dispatch)",
+        fmt_dur(xb_mean),
+        fmt_dur(xb_mean / bsz as u32)
+    );
+
+    banner("batched dispatch amortization: per-request cost vs batch size");
+    println!("{:>8} {:>14} {:>16}", "batch", "dispatch", "per request");
+    for sz in [1usize, 2, 4, 8, 16, 32] {
+        if sz > bsz {
+            break;
+        }
+        let batch: Vec<CnRequestData> = reqs[..sz].to_vec();
+        let (mean, _) = time_for(Duration::from_millis(700), || {
+            let out = xlab.cn_update_batch(&batch);
+            assert!(out.iter().all(|r| r.is_ok()));
+        });
+        println!("{sz:>8} {:>14} {:>16}", fmt_dur(mean), fmt_dur(mean / sz as u32));
+    }
+
+    banner("end-to-end coordinator (queue + batcher + xla batched)");
+    for max_batch in [1usize, 8, 32] {
+        let artifacts2 = artifacts.clone();
+        let server = CnServer::start(
+            move || Ok(Box::new(XlaBatchBackend::new(RuntimeClient::load(&artifacts2)?)?) as _),
+            ServerConfig {
+                batch: BatchPolicy { max_batch, max_wait: Duration::from_millis(1) },
+            },
+        )?;
+        let client = server.client();
+        let t0 = std::time::Instant::now();
+        let total = 512usize;
+        let pending: Vec<_> = (0..total)
+            .map(|k| client.submit(reqs[k % reqs.len()].clone()))
+            .collect();
+        for rx in pending {
+            rx.recv().unwrap().unwrap();
+        }
+        let dt = t0.elapsed();
+        println!(
+            "max_batch {max_batch:>3}: {total} reqs in {} -> {:.0} CN/s | {}",
+            fmt_dur(dt),
+            total as f64 / dt.as_secs_f64(),
+            client.metrics().report()
+        );
+        server.shutdown();
+    }
+    Ok(())
+}

@@ -1,0 +1,208 @@
+//! Synthetic channels, constellations and noise (S11).
+//!
+//! Substitutes for the radio front-end: the paper's "messages msg_Y
+//! correspond to the received symbols". Everything is scaled to the
+//! FGP's fixed-point input contract (symbols |s| = 0.5, channel taps
+//! CN(0, tap_var) with tap_var ≤ 0.3).
+
+use crate::gmp::matrix::{c64, CMatrix};
+use crate::testutil::Rng;
+
+/// Complex Gaussian sample with per-component variance `var/2`.
+pub fn cgauss(rng: &mut Rng, var: f64) -> c64 {
+    let s = (var / 2.0).sqrt();
+    c64::new(rng.normal() * s, rng.normal() * s)
+}
+
+/// Constellations (training sequences for channel estimation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Constellation {
+    /// QPSK at amplitude 0.5: s ∈ 0.5/√2 · {±1±i}.
+    Qpsk,
+    /// 16-QAM at the same mean power.
+    Qam16,
+}
+
+impl Constellation {
+    /// All constellation points.
+    pub fn points(&self) -> Vec<c64> {
+        match self {
+            Constellation::Qpsk => {
+                let a = 0.5 / 2f64.sqrt();
+                vec![
+                    c64::new(a, a),
+                    c64::new(a, -a),
+                    c64::new(-a, a),
+                    c64::new(-a, -a),
+                ]
+            }
+            Constellation::Qam16 => {
+                // levels {±1, ±3}: E[l^2] = 5 per axis, so E|s|^2 = 10 s^2;
+                // s chosen for mean power 0.25 (same as the QPSK set)
+                let levels = [-3.0f64, -1.0, 1.0, 3.0];
+                let s = (0.25f64 / 10.0).sqrt();
+                let mut pts = Vec::with_capacity(16);
+                for &re in &levels {
+                    for &im in &levels {
+                        pts.push(c64::new(re * s, im * s));
+                    }
+                }
+                pts
+            }
+        }
+    }
+
+    pub fn draw(&self, rng: &mut Rng) -> c64 {
+        let pts = self.points();
+        pts[rng.below(pts.len())]
+    }
+
+    /// Hard decision: nearest constellation point.
+    pub fn slice(&self, z: c64) -> c64 {
+        let pts = self.points();
+        *pts.iter()
+            .min_by(|a, b| {
+                let da = (**a - z).abs2();
+                let db = (**b - z).abs2();
+                da.partial_cmp(&db).unwrap()
+            })
+            .unwrap()
+    }
+}
+
+/// A static frequency-selective channel: `taps` complex coefficients.
+#[derive(Clone, Debug)]
+pub struct MultipathChannel {
+    pub taps: Vec<c64>,
+}
+
+impl MultipathChannel {
+    /// Random channel with exponentially decaying power-delay profile.
+    pub fn random(rng: &mut Rng, taps: usize, tap_var: f64) -> Self {
+        let coeffs = (0..taps)
+            .map(|k| cgauss(rng, tap_var * 0.7f64.powi(k as i32)))
+            .collect();
+        MultipathChannel { taps: coeffs }
+    }
+
+    pub fn order(&self) -> usize {
+        self.taps.len()
+    }
+
+    /// Convolve a symbol stream (zero prehistory) and add AWGN.
+    pub fn transmit(&self, rng: &mut Rng, symbols: &[c64], noise_var: f64) -> Vec<c64> {
+        (0..symbols.len())
+            .map(|i| {
+                let mut y = cgauss(rng, noise_var);
+                for (k, h) in self.taps.iter().enumerate() {
+                    if i >= k {
+                        y = y + *h * symbols[i - k];
+                    }
+                }
+                y
+            })
+            .collect()
+    }
+
+    /// The Toeplitz channel matrix H (rows = observations) for a block of
+    /// `len` symbols — the LMMSE equalizer's A.
+    pub fn toeplitz(&self, len: usize) -> CMatrix {
+        let mut h = CMatrix::zeros(len, len);
+        for i in 0..len {
+            for (k, tap) in self.taps.iter().enumerate() {
+                if i >= k {
+                    h[(i, i - k)] = *tap;
+                }
+            }
+        }
+        h
+    }
+}
+
+/// The regressor matrix of one RLS section: the known-symbol row
+/// `[s_i, s_{i-1}, .., s_{i-n+1}]` embedded as the first row of an
+/// n x n matrix (remaining rows zero) — the same convention as the
+/// Python oracle (`python/tests/test_model.py::make_rls_problem`).
+pub fn regressor_matrix(symbols: &[c64], i: usize, n: usize) -> CMatrix {
+    let mut a = CMatrix::zeros(n, n);
+    for k in 0..n {
+        if i >= k {
+            a[(0, k)] = symbols[i - k];
+        }
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qpsk_points_have_equal_power() {
+        let pts = Constellation::Qpsk.points();
+        assert_eq!(pts.len(), 4);
+        for p in &pts {
+            assert!((p.abs() - 0.5).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn qam16_mean_power_matches_qpsk() {
+        let pts = Constellation::Qam16.points();
+        assert_eq!(pts.len(), 16);
+        let mean_p: f64 = pts.iter().map(|p| p.abs2()).sum::<f64>() / 16.0;
+        assert!((mean_p - 0.25).abs() < 0.05, "mean power {mean_p}");
+    }
+
+    #[test]
+    fn slicing_recovers_clean_symbols() {
+        let mut rng = Rng::new(1);
+        for c in [Constellation::Qpsk, Constellation::Qam16] {
+            for _ in 0..50 {
+                let s = c.draw(&mut rng);
+                let noisy = s + cgauss(&mut rng, 1e-6);
+                assert_eq!(c.slice(noisy), s);
+            }
+        }
+    }
+
+    #[test]
+    fn noiseless_transmit_is_convolution() {
+        let mut rng = Rng::new(2);
+        let ch = MultipathChannel { taps: vec![c64::new(1.0, 0.0), c64::new(0.5, 0.0)] };
+        let s = vec![c64::new(1.0, 0.0), c64::new(0.0, 1.0)];
+        let y = ch.transmit(&mut rng, &s, 0.0);
+        assert!((y[0] - s[0]).abs() < 1e-12);
+        assert!((y[1] - (s[1] + s[0] * 0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn toeplitz_matches_transmit() {
+        let mut rng = Rng::new(3);
+        let ch = MultipathChannel::random(&mut rng, 3, 0.2);
+        let s: Vec<c64> = (0..5).map(|_| Constellation::Qpsk.draw(&mut rng)).collect();
+        let y_conv = ch.transmit(&mut Rng::new(99), &s, 0.0); // noiseless path needs var=0
+        let h = ch.toeplitz(5);
+        let y_mat = h.matvec(&s);
+        for (a, b) in y_conv.iter().zip(&y_mat) {
+            assert!((*a - *b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn regressor_rows_shift() {
+        let s = vec![c64::new(1.0, 0.0), c64::new(2.0, 0.0), c64::new(3.0, 0.0)];
+        let a = regressor_matrix(&s, 2, 3);
+        assert!((a[(0, 0)].re - 3.0).abs() < 1e-12);
+        assert!((a[(0, 1)].re - 2.0).abs() < 1e-12);
+        assert!((a[(0, 2)].re - 1.0).abs() < 1e-12);
+        assert!(a[(1, 0)].abs() < 1e-12);
+    }
+
+    #[test]
+    fn channel_power_decays() {
+        let mut rng = Rng::new(4);
+        let ch = MultipathChannel::random(&mut rng, 4, 0.3);
+        assert_eq!(ch.order(), 4);
+    }
+}

@@ -1,0 +1,230 @@
+//! Kalman-filter tracking as GMP on the FGP (§I: "Kalman filtering can
+//! be expressed with Gaussian message-passing on a factor graph").
+//!
+//! Constant-velocity tracking with state `[px, vx, py, vy]` (real values
+//! carried in the complex field): each time step is a *multiplier* node
+//! (transition A), an *additive* node (process noise, a constant message
+//! streamed from a preloaded slot), and a *compound observation* node
+//! (position measurement through C) — three of the Fig. 1 node types
+//! composing into a textbook filter.
+
+use anyhow::Result;
+
+use crate::compiler::{compile, CompileOptions, CompiledProgram};
+use crate::fgp::{Fgp, FgpConfig, MessageMemory, StateMemory};
+use crate::gmp::matrix::{c64, CMatrix};
+use crate::gmp::message::GaussMessage;
+use crate::gmp::{nodes, FactorGraph, NodeKind, Schedule};
+use crate::testutil::Rng;
+
+/// A synthetic constant-velocity tracking problem.
+#[derive(Clone, Debug)]
+pub struct KalmanProblem {
+    pub steps: usize,
+    /// Transition matrix (4x4).
+    pub a: CMatrix,
+    /// Observation matrix (positions).
+    pub c: CMatrix,
+    /// Process noise message (zero mean, Q).
+    pub q_msg: GaussMessage,
+    /// Measurement noise variance.
+    pub r_var: f64,
+    /// Ground-truth states per step.
+    pub truth: Vec<Vec<c64>>,
+    /// Observation messages per step.
+    pub observations: Vec<GaussMessage>,
+    pub prior: GaussMessage,
+}
+
+/// Tracking outcome.
+#[derive(Clone, Debug)]
+pub struct KalmanOutcome {
+    pub estimate: Vec<c64>,
+    /// Final position error (Euclidean).
+    pub pos_error: f64,
+    pub cycles: u64,
+}
+
+impl KalmanProblem {
+    pub fn synthetic(steps: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let dt = 0.1;
+        let mut a = CMatrix::identity(4);
+        a[(0, 1)] = c64::new(dt, 0.0);
+        a[(2, 3)] = c64::new(dt, 0.0);
+        let mut c = CMatrix::zeros(4, 4);
+        c[(0, 0)] = c64::ONE;
+        c[(2, 2)] = c64::ONE;
+        let q_var: f64 = 2e-3;
+        let r_var: f64 = 0.02;
+
+        let mut x = vec![
+            c64::new(rng.range(-0.2, 0.2), 0.0),
+            c64::new(rng.range(-0.3, 0.3), 0.0),
+            c64::new(rng.range(-0.2, 0.2), 0.0),
+            c64::new(rng.range(-0.3, 0.3), 0.0),
+        ];
+        let mut truth = Vec::with_capacity(steps);
+        let mut observations = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            x = a.matvec(&x);
+            for xi in x.iter_mut() {
+                *xi = *xi + c64::new(rng.normal() * q_var.sqrt(), 0.0);
+            }
+            let mut y = vec![c64::ZERO; 4];
+            y[0] = x[0] + c64::new(rng.normal() * r_var.sqrt(), 0.0);
+            y[2] = x[2] + c64::new(rng.normal() * r_var.sqrt(), 0.0);
+            truth.push(x.clone());
+            observations.push(GaussMessage::observation(&y, r_var));
+        }
+        KalmanProblem {
+            steps,
+            a,
+            c,
+            q_msg: GaussMessage::isotropic(4, q_var),
+            r_var,
+            truth,
+            observations,
+            prior: GaussMessage::isotropic(4, 0.5),
+        }
+    }
+
+    /// Build the factor-graph chain: Multiply(A) → Add(Q) → Compound(C).
+    pub fn build_graph(&self) -> (FactorGraph, Schedule) {
+        let n = 4;
+        let mut g = FactorGraph::new();
+        let a_sid = g.add_state(self.a.clone());
+        let c_sid = g.add_state(self.c.clone());
+        let q_edge = g.add_input_edge(n, "msg_Q");
+        let prior = g.add_input_edge(n, "msg_prior");
+        let mut prev = prior;
+        for i in 0..self.steps {
+            let pred = g.add_edge(n, format!("pred{i}"));
+            g.add_node(NodeKind::Multiply { a: a_sid }, vec![prev], pred, format!("mul{i}"));
+            let noisy = g.add_edge(n, format!("noisy{i}"));
+            g.add_node(NodeKind::Add, vec![pred, q_edge], noisy, format!("add{i}"));
+            let obs = g.add_streamed_input_edge(n, 0, format!("msg_Y{i}"));
+            let post = g.add_edge(n, format!("post{i}"));
+            g.add_node(
+                NodeKind::CompoundObservation { a: c_sid },
+                vec![noisy, obs],
+                post,
+                format!("obs{i}"),
+            );
+            prev = post;
+        }
+        g.mark_output(prev);
+        let s = Schedule::forward_sweep(&g);
+        (g, s)
+    }
+
+    /// f64 golden filter.
+    pub fn golden(&self) -> Result<KalmanOutcome> {
+        let mut msg = self.prior.clone();
+        for y in &self.observations {
+            let pred = nodes::multiply(&msg, &self.a);
+            let noisy = nodes::add(&pred, &self.q_msg);
+            msg = nodes::compound_observation(&noisy, y, &self.c, true)?;
+        }
+        Ok(self.outcome(msg.mean, 0))
+    }
+
+    fn outcome(&self, estimate: Vec<c64>, cycles: u64) -> KalmanOutcome {
+        let t = self.truth.last().unwrap();
+        let dx = (estimate[0] - t[0]).abs2() + (estimate[2] - t[2]).abs2();
+        KalmanOutcome { estimate, pos_error: dx.sqrt(), cycles }
+    }
+
+    pub fn compile_program(&self) -> Result<CompiledProgram> {
+        let (g, s) = self.build_graph();
+        Ok(compile(&g, &s, &CompileOptions::default())?)
+    }
+
+    /// Run on the FGP simulator, streaming observations.
+    pub fn run_on_fgp(&self) -> Result<KalmanOutcome> {
+        let compiled = self.compile_program()?;
+        let mut fgp = Fgp::new(FgpConfig::default());
+        fgp.pm.load(&compiled.program.to_image())?;
+
+        // preload Q message and prior (matched by edge label)
+        let (graph, sched) = self.build_graph();
+        for (mid, slot) in &compiled.memmap.preloads {
+            let edge = sched.inputs.iter().find(|(m, _)| m == mid).map(|(_, e)| *e).unwrap();
+            if graph.edges[edge.0].label == "msg_Q" {
+                fgp.msgmem.write_message(*slot, &self.q_msg);
+            } else {
+                fgp.msgmem.write_message(*slot, &self.prior);
+            }
+        }
+        for (sid, slot) in &compiled.memmap.state_preloads {
+            // state 0 = A, state 1 = C, state 2 = identity (if present)
+            let m = match sid.0 {
+                0 => self.a.clone(),
+                1 => self.c.clone(),
+                _ => CMatrix::identity(4),
+            };
+            fgp.statemem.write_matrix(*slot, &m);
+        }
+
+        let (_, obs_slot, _) = compiled.memmap.streams[0];
+        let obs = self.observations.clone();
+        let mut feed =
+            move |section: usize, mem: &mut MessageMemory, _: &mut StateMemory| -> bool {
+                // three smm commits per time step: step k's observation is
+                // consumed by its compound node (the 3k+2-nd section) and
+                // obs[k-1] dies at section 3k-1, so writing obs[sec/3] at
+                // every handshake keeps the slot correct throughout
+                let idx = (section / 3).min(obs.len() - 1);
+                mem.write_message(obs_slot, &obs[idx]);
+                section / 3 < obs.len()
+            };
+        let stats = fgp.run_program(1, &mut feed)?;
+
+        let out_slot = compiled.memmap.outputs[0].1;
+        let est = fgp.msgmem.read_message(out_slot).mean;
+        Ok(self.outcome(est, stats.cycles))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_tracks_position() {
+        let p = KalmanProblem::synthetic(40, 3);
+        let out = p.golden().unwrap();
+        assert!(out.pos_error < 0.2, "pos error {}", out.pos_error);
+    }
+
+    #[test]
+    fn graph_has_three_nodes_per_step() {
+        let p = KalmanProblem::synthetic(5, 1);
+        let (g, s) = p.build_graph();
+        assert_eq!(g.nodes.len(), 15);
+        assert_eq!(s.steps.len(), 15);
+    }
+
+    #[test]
+    fn fgp_tracks_golden_regime() {
+        let p = KalmanProblem::synthetic(20, 5);
+        let golden = p.golden().unwrap();
+        let fgp = p.run_on_fgp().unwrap();
+        assert!(
+            fgp.pos_error < golden.pos_error + 0.3,
+            "fgp {} vs golden {}",
+            fgp.pos_error,
+            golden.pos_error
+        );
+        assert!(fgp.cycles > 0);
+    }
+
+    #[test]
+    fn program_compresses_across_steps() {
+        let p = KalmanProblem::synthetic(12, 7);
+        let c = p.compile_program().unwrap();
+        assert!(c.stats.looped.is_some(), "listing:\n{}", c.listing());
+        // slots stay constant regardless of steps: Q + prior-chain + obs
+        assert!(c.memmap.num_slots <= 5, "{} slots", c.memmap.num_slots);
+    }
+}

@@ -1,0 +1,148 @@
+//! Block LMMSE symbol equalization (§I: "linear MMSE equalization").
+//!
+//! One shot of the compound-observation node: the transmitted block `x`
+//! (prior: symbol power * I) is observed through the Toeplitz channel
+//! matrix `H` under AWGN; the posterior mean is the LMMSE symbol
+//! estimate, which we slice to the constellation and score by symbol
+//! error rate. Exactly the "symbol detection/equalization" program the
+//! paper imagines sharing the PM with the RLS estimator (§III).
+
+use anyhow::Result;
+
+use crate::coordinator::backend::{Backend, CnRequestData};
+use crate::gmp::matrix::c64;
+use crate::gmp::message::GaussMessage;
+use crate::testutil::Rng;
+
+use super::channel::{Constellation, MultipathChannel};
+
+/// A block-equalization problem.
+#[derive(Clone, Debug)]
+pub struct LmmseProblem {
+    pub n: usize,
+    pub constellation: Constellation,
+    pub channel: MultipathChannel,
+    pub noise_var: f64,
+    /// Transmitted symbols (ground truth).
+    pub tx: Vec<c64>,
+    /// Received block.
+    pub rx: Vec<c64>,
+}
+
+/// Equalization outcome.
+#[derive(Clone, Debug)]
+pub struct LmmseOutcome {
+    pub estimate: Vec<c64>,
+    pub decisions: Vec<c64>,
+    pub symbol_errors: usize,
+    pub rel_mse: f64,
+}
+
+impl LmmseProblem {
+    pub fn synthetic(n: usize, noise_var: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        // dominant first tap keeps the block well conditioned at n=4
+        let mut channel = MultipathChannel::random(&mut rng, 2, 0.08);
+        channel.taps[0] = channel.taps[0] + c64::new(0.8, 0.0);
+        let constellation = Constellation::Qpsk;
+        let tx: Vec<c64> = (0..n).map(|_| constellation.draw(&mut rng)).collect();
+        let rx = channel.transmit(&mut rng, &tx, noise_var);
+        LmmseProblem { n, constellation, channel, noise_var, tx, rx }
+    }
+
+    /// The compound-node request implementing the equalizer:
+    /// prior V_X = 0.25 I (symbol power), A = H, observation (rx, σ² I).
+    pub fn request(&self) -> CnRequestData {
+        CnRequestData {
+            x: GaussMessage::isotropic(self.n, 0.25),
+            y: GaussMessage::observation(&self.rx, self.noise_var),
+            a: self.channel.toeplitz(self.n),
+        }
+    }
+
+    /// Run on any backend and score.
+    pub fn run_on(&self, backend: &mut dyn Backend) -> Result<LmmseOutcome> {
+        let posterior = backend.cn_update(&self.request())?;
+        let estimate = posterior.mean;
+        let decisions: Vec<c64> =
+            estimate.iter().map(|z| self.constellation.slice(*z)).collect();
+        let symbol_errors = decisions
+            .iter()
+            .zip(&self.tx)
+            .filter(|(d, t)| (**d - **t).abs() > 1e-9)
+            .count();
+        let num: f64 = estimate.iter().zip(&self.tx).map(|(a, b)| (*a - *b).abs2()).sum();
+        let den: f64 = self.tx.iter().map(|a| a.abs2()).sum();
+        Ok(LmmseOutcome { estimate, decisions, symbol_errors, rel_mse: num / den })
+    }
+}
+
+/// Sweep SNR: mean SER over `trials` blocks per point (bench helper).
+pub fn ser_sweep(
+    backend: &mut dyn Backend,
+    n: usize,
+    snrs_db: &[f64],
+    trials: u64,
+) -> Result<Vec<(f64, f64)>> {
+    let mut out = Vec::with_capacity(snrs_db.len());
+    for &snr in snrs_db {
+        // symbol power 0.25 -> noise var for the target SNR
+        let noise_var = 0.25 / 10f64.powf(snr / 10.0);
+        let mut errors = 0usize;
+        let mut symbols = 0usize;
+        for t in 0..trials {
+            let p = LmmseProblem::synthetic(n, noise_var, 1000 + t * 7 + snr as u64);
+            let o = p.run_on(backend)?;
+            errors += o.symbol_errors;
+            symbols += n;
+        }
+        out.push((snr, errors as f64 / symbols as f64));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::{FgpSimBackend, GoldenBackend};
+    use crate::fgp::FgpConfig;
+
+    #[test]
+    fn golden_equalizer_beats_no_equalizer_at_high_snr() {
+        let mut golden = GoldenBackend;
+        let mut total_err = 0;
+        for seed in 0..10 {
+            let p = LmmseProblem::synthetic(4, 0.002, seed);
+            let o = p.run_on(&mut golden).unwrap();
+            total_err += o.symbol_errors;
+        }
+        assert!(total_err <= 1, "errors at 21 dB: {total_err}");
+    }
+
+    #[test]
+    fn ser_decreases_with_snr() {
+        let mut golden = GoldenBackend;
+        let sweep = ser_sweep(&mut golden, 4, &[0.0, 10.0, 20.0], 20).unwrap();
+        assert!(sweep[0].1 >= sweep[2].1, "sweep {sweep:?}");
+    }
+
+    #[test]
+    fn fgp_equalizer_matches_golden_decisions_mostly() {
+        let mut sim = FgpSimBackend::new(FgpConfig::default()).unwrap();
+        let mut golden = GoldenBackend;
+        let mut agree = 0;
+        let mut total = 0;
+        for seed in 0..8 {
+            let p = LmmseProblem::synthetic(4, 0.01, 50 + seed);
+            let s = p.run_on(&mut sim).unwrap();
+            let g = p.run_on(&mut golden).unwrap();
+            for (a, b) in s.decisions.iter().zip(&g.decisions) {
+                total += 1;
+                if (*a - *b).abs() < 1e-9 {
+                    agree += 1;
+                }
+            }
+        }
+        assert!(agree * 10 >= total * 9, "{agree}/{total} decisions agree");
+    }
+}

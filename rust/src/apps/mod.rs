@@ -1,0 +1,26 @@
+//! S10/S11 — Applications and synthetic workloads.
+//!
+//! The algorithm classes the paper positions the FGP for (§I: "RLS,
+//! linear MMSE equalization, and Kalman filtering can be expressed with
+//! Gaussian message-passing on a factor graph"), each built as a factor
+//! graph, compiled with [`crate::compiler`], and runnable on any
+//! [`crate::coordinator::Backend`]:
+//!
+//! * [`rls`] — the paper's §IV channel-estimation example (Fig. 6);
+//! * [`kalman`] — constant-velocity tracking as alternating GMP nodes;
+//! * [`lmmse`] — block LMMSE symbol equalization;
+//! * [`toa`] — time-of-arrival position estimation (§I ref [6]);
+//! * [`channel`] — synthetic channels, constellations and AWGN sources
+//!   (the "received symbols" the silicon would get from a radio).
+//!
+//! All workloads respect the device's input-scaling contract (see
+//! [`crate::fgp`]): unit-magnitude-bounded operands, well-conditioned
+//! covariances.
+
+pub mod channel;
+pub mod kalman;
+pub mod lmmse;
+pub mod receiver;
+pub mod rls;
+pub mod smoother;
+pub mod toa;

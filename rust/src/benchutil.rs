@@ -1,0 +1,74 @@
+//! Minimal benchmarking support (no criterion in the vendored set).
+//!
+//! Each `rust/benches/*.rs` target is a `harness = false` binary that
+//! prints the rows of one paper table/figure. This module provides the
+//! shared timing / formatting helpers so the benches stay declarative.
+
+use std::time::{Duration, Instant};
+
+/// Measure the mean wall time of `f` over `iters` runs after `warmup`
+/// runs, returning (mean, total).
+pub fn time_fn(warmup: u32, iters: u32, mut f: impl FnMut()) -> (Duration, Duration) {
+    for _ in 0..warmup {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let total = t0.elapsed();
+    (total / iters.max(1), total)
+}
+
+/// Run until at least `min_time` has elapsed; returns (mean, iters).
+pub fn time_for(min_time: Duration, mut f: impl FnMut()) -> (Duration, u32) {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    let mut iters = 0u32;
+    while t0.elapsed() < min_time {
+        f();
+        iters += 1;
+    }
+    (t0.elapsed() / iters.max(1), iters)
+}
+
+/// Print a section banner.
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Format a Duration as adaptive human units.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2} s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_counts() {
+        let mut n = 0u64;
+        let (mean, total) = time_fn(1, 10, || n += 1);
+        assert_eq!(n, 11);
+        assert!(total >= mean);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_dur(Duration::from_nanos(12)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(12)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(12)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).contains(" s"));
+    }
+}

@@ -1,0 +1,413 @@
+//! Message-memory allocation: liveness + score-based remapping (Fig. 7).
+//!
+//! Fig. 7 left is the *unoptimized* mapping: every message keeps its own
+//! identifier, so memory grows with the schedule. Fig. 7 right is the
+//! paper's optimization: "Sequentially, for each output message, the set
+//! of identifiers assigned to messages that are no longer needed is
+//! considered. A score is computed for each identifier in the set and the
+//! output message will be remapped to the identifier having the highest
+//! score."
+//!
+//! The score policy is configurable; the default (most-recently-freed)
+//! reuses the hottest slot, which both minimizes the slot count and makes
+//! sectioned schedules *periodic* — the property loop compression needs.
+//!
+//! Streamed inputs (observations) are handled before scoring: every
+//! message in a stream group shares one slot which the host refills via
+//! the Data-in port between sections.
+
+use crate::gmp::graph::StateId;
+use crate::gmp::{MsgId, Schedule};
+
+use super::ir::LowOp;
+use super::CompileError;
+
+/// How to score free identifiers when remapping an output (paper §IV).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ScorePolicy {
+    /// Highest score to the identifier freed most recently (LIFO reuse).
+    #[default]
+    MostRecentlyFreed,
+    /// Highest score to the lowest-numbered identifier.
+    LowestIndex,
+    /// Highest score to the identifier freed least recently (FIFO reuse).
+    LeastRecentlyFreed,
+}
+
+/// Allocation options.
+#[derive(Clone, Copy, Debug)]
+pub struct AllocOptions {
+    /// Apply the Fig. 7 optimization (false = identity mapping).
+    pub optimize: bool,
+    pub policy: ScorePolicy,
+    /// Message-memory capacity in slots.
+    pub capacity: usize,
+}
+
+impl Default for AllocOptions {
+    fn default() -> Self {
+        AllocOptions { optimize: true, policy: ScorePolicy::default(), capacity: 48 }
+    }
+}
+
+/// The physical memory contract between host and FGP.
+#[derive(Clone, Debug)]
+pub struct MemoryMap {
+    /// Virtual message id -> physical slot (None if never materialized).
+    pub msg_to_slot: Vec<Option<u8>>,
+    /// Number of distinct physical slots used.
+    pub num_slots: usize,
+    /// Messages the host preloads: (virtual id, slot).
+    pub preloads: Vec<(MsgId, u8)>,
+    /// Stream groups: (group, slot, ordered message ids fed per section).
+    pub streams: Vec<(u32, u8, Vec<MsgId>)>,
+    /// Messages the host reads back: (virtual id, slot).
+    pub outputs: Vec<(MsgId, u8)>,
+    /// Virtual state id -> physical state-memory slot.
+    pub state_to_slot: Vec<u8>,
+    /// Number of distinct state-memory slots used.
+    pub num_state_slots: usize,
+    /// Resident states the host preloads once: (virtual state id, slot).
+    pub state_preloads: Vec<(StateId, u8)>,
+    /// State stream groups: (group, slot, ordered state ids fed per section).
+    pub state_streams: Vec<(u32, u8, Vec<StateId>)>,
+}
+
+impl MemoryMap {
+    pub fn slot_of(&self, m: MsgId) -> Option<u8> {
+        self.msg_to_slot.get(m.0).copied().flatten()
+    }
+
+    pub fn state_slot_of(&self, s: StateId) -> u8 {
+        self.state_to_slot[s.0]
+    }
+}
+
+/// Map virtual state ids onto physical state-memory slots: resident
+/// states get their own slot, streamed states share one slot per group.
+///
+/// `stream_groups[i]` is the group of virtual state `i`; entries past the
+/// end (the compiler's identity matrix) are treated as resident.
+pub fn allocate_states(
+    num_states: usize,
+    stream_groups: &[Option<u32>],
+    capacity: usize,
+) -> Result<(Vec<u8>, usize, Vec<(StateId, u8)>, Vec<(u32, u8, Vec<StateId>)>), CompileError> {
+    let mut state_to_slot = vec![0u8; num_states];
+    let mut next = 0usize;
+    let mut preloads = Vec::new();
+    let mut streams: Vec<(u32, u8, Vec<StateId>)> = Vec::new();
+    for i in 0..num_states {
+        let group = stream_groups.get(i).copied().flatten();
+        match group {
+            Some(g) => match streams.iter_mut().find(|(sg, _, _)| *sg == g) {
+                Some((_, slot, members)) => {
+                    state_to_slot[i] = *slot;
+                    members.push(StateId(i));
+                }
+                None => {
+                    let slot = next as u8;
+                    next += 1;
+                    state_to_slot[i] = slot;
+                    streams.push((g, slot, vec![StateId(i)]));
+                }
+            },
+            None => {
+                let slot = next as u8;
+                next += 1;
+                state_to_slot[i] = slot;
+                preloads.push((StateId(i), slot));
+            }
+        }
+    }
+    if next > capacity {
+        return Err(CompileError::OutOfStateMemory { needed: next, available: capacity });
+    }
+    Ok((state_to_slot, next, preloads, streams))
+}
+
+/// Assign physical slots to every virtual message id.
+pub fn allocate(
+    schedule: &Schedule,
+    ops: &[LowOp],
+    opts: &AllocOptions,
+) -> Result<MemoryMap, CompileError> {
+    let n = schedule.num_msgs;
+    let mut msg_to_slot: Vec<Option<u8>> = vec![None; n];
+    let mut next_slot: usize = 0;
+    let mut alloc_new = |msg_to_slot: &mut Vec<Option<u8>>, m: MsgId| -> usize {
+        let s = next_slot;
+        msg_to_slot[m.0] = Some(s as u8);
+        next_slot += 1;
+        s
+    };
+
+    // --- streamed inputs: one shared slot per group, in schedule order
+    let mut streams: Vec<(u32, u8, Vec<MsgId>)> = Vec::new();
+    for (mid, group) in &schedule.streams {
+        match streams.iter_mut().find(|(g, _, _)| g == group) {
+            Some((_, slot, members)) => {
+                msg_to_slot[mid.0] = Some(*slot);
+                members.push(*mid);
+            }
+            None => {
+                let s = alloc_new(&mut msg_to_slot, *mid) as u8;
+                streams.push((*group, s, vec![*mid]));
+            }
+        }
+    }
+
+    // --- preloaded inputs (non-streamed)
+    let mut preloads = Vec::new();
+    for (mid, _) in &schedule.inputs {
+        if schedule.is_streamed(*mid) {
+            continue;
+        }
+        let s = alloc_new(&mut msg_to_slot, *mid) as u8;
+        preloads.push((*mid, s));
+    }
+
+    // --- last use of each message over the op stream
+    let mut last_use: Vec<isize> = vec![-1; n];
+    for (i, op) in ops.iter().enumerate() {
+        for r in op.msg_reads() {
+            last_use[r.0] = i as isize;
+        }
+    }
+    for (mid, _) in &schedule.outputs {
+        last_use[mid.0] = isize::MAX; // program outputs never die
+    }
+
+    if !opts.optimize {
+        // Fig. 7 left: every produced message gets its own identifier.
+        for op in ops {
+            if let Some(dst) = op.msg_write() {
+                if msg_to_slot[dst.0].is_none() {
+                    alloc_new(&mut msg_to_slot, dst);
+                }
+            }
+        }
+    } else {
+        // Fig. 7 right: score-based remapping onto dead identifiers.
+        // free pool entries: (slot, freed_at_op)
+        let mut free: Vec<(u8, usize)> = Vec::new();
+        // slots owned by live messages: (slot, owner)
+        let mut live: Vec<(u8, MsgId)> = Vec::new();
+        for (mid, s) in &preloads {
+            live.push((*s, *mid));
+        }
+        // stream slots are permanently reserved (refilled every section)
+        for (i, op) in ops.iter().enumerate() {
+            if let Some(dst) = op.msg_write() {
+                if msg_to_slot[dst.0].is_none() {
+                    let slot = if let Some(best) = pick_free(&mut free, opts.policy) {
+                        best
+                    } else {
+                        alloc_new(&mut msg_to_slot, dst) as u8
+                    };
+                    msg_to_slot[dst.0] = Some(slot);
+                    live.push((slot, dst));
+                }
+            }
+            // retire messages whose last use was this op
+            let mut j = 0;
+            while j < live.len() {
+                let (slot, owner) = live[j];
+                if last_use[owner.0] <= i as isize {
+                    free.push((slot, i));
+                    live.swap_remove(j);
+                } else {
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    if next_slot > opts.capacity {
+        return Err(CompileError::OutOfMemory { needed: next_slot, available: opts.capacity });
+    }
+
+    let outputs = schedule
+        .outputs
+        .iter()
+        .filter_map(|(mid, _)| msg_to_slot[mid.0].map(|s| (*mid, s)))
+        .collect();
+
+    Ok(MemoryMap {
+        msg_to_slot,
+        num_slots: next_slot,
+        preloads,
+        streams,
+        outputs,
+        state_to_slot: Vec::new(),
+        num_state_slots: 0,
+        state_preloads: Vec::new(),
+        state_streams: Vec::new(),
+    })
+}
+
+/// Pick (and remove) the highest-scoring free identifier, if any.
+fn pick_free(free: &mut Vec<(u8, usize)>, policy: ScorePolicy) -> Option<u8> {
+    if free.is_empty() {
+        return None;
+    }
+    let idx = match policy {
+        ScorePolicy::MostRecentlyFreed => {
+            // score = freed_at (ties: higher slot)
+            (0..free.len()).max_by_key(|&i| (free[i].1, free[i].0)).unwrap()
+        }
+        ScorePolicy::LowestIndex => {
+            (0..free.len()).min_by_key(|&i| free[i].0).unwrap()
+        }
+        ScorePolicy::LeastRecentlyFreed => {
+            (0..free.len()).min_by_key(|&i| (free[i].1, free[i].0)).unwrap()
+        }
+    };
+    Some(free.swap_remove(idx).0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::lower::lower;
+    use crate::gmp::matrix::CMatrix;
+    use crate::gmp::{FactorGraph, Schedule};
+    use crate::testutil::Rng;
+
+    fn rls(sections: usize) -> (FactorGraph, Schedule) {
+        let mut rng = Rng::new(1);
+        let mut g = FactorGraph::new();
+        let a_list: Vec<CMatrix> =
+            (0..sections).map(|_| CMatrix::random(&mut rng, 4, 4)).collect();
+        g.rls_chain(4, &a_list);
+        let s = Schedule::forward_sweep(&g);
+        (g, s)
+    }
+
+    #[test]
+    fn unoptimized_grows_with_sections() {
+        for sections in [2usize, 4, 8] {
+            let (g, s) = rls(sections);
+            let lowered = lower(&g, &s).unwrap();
+            let map = allocate(
+                &s,
+                &lowered.ops,
+                &AllocOptions { optimize: false, ..Default::default() },
+            )
+            .unwrap();
+            // prior + stream slot + one per section output
+            assert_eq!(map.num_slots, 2 + sections, "sections={sections}");
+        }
+    }
+
+    #[test]
+    fn optimized_is_constant_in_sections() {
+        for sections in [2usize, 4, 16] {
+            let (g, s) = rls(sections);
+            let lowered = lower(&g, &s).unwrap();
+            let map = allocate(&s, &lowered.ops, &AllocOptions::default()).unwrap();
+            // stream slot + state slot (prior reused in place)
+            assert_eq!(map.num_slots, 2, "sections={sections}");
+        }
+    }
+
+    #[test]
+    fn optimized_reuses_state_slot_in_place() {
+        let (g, s) = rls(3);
+        let lowered = lower(&g, &s).unwrap();
+        let map = allocate(&s, &lowered.ops, &AllocOptions::default()).unwrap();
+        // prior and all chained outputs share one slot
+        let prior_slot = map.preloads[0].1;
+        for step in &s.steps {
+            assert_eq!(map.slot_of(step.out), Some(prior_slot));
+        }
+    }
+
+    #[test]
+    fn stream_group_shares_one_slot() {
+        let (g, s) = rls(5);
+        let lowered = lower(&g, &s).unwrap();
+        let map = allocate(&s, &lowered.ops, &AllocOptions::default()).unwrap();
+        assert_eq!(map.streams.len(), 1);
+        let (_, slot, members) = &map.streams[0];
+        assert_eq!(members.len(), 5);
+        for m in members {
+            assert_eq!(map.slot_of(*m), Some(*slot));
+        }
+    }
+
+    #[test]
+    fn capacity_exceeded_errors() {
+        let (g, s) = rls(8);
+        let lowered = lower(&g, &s).unwrap();
+        let err = allocate(
+            &s,
+            &lowered.ops,
+            &AllocOptions { optimize: false, capacity: 4, ..Default::default() },
+        )
+        .unwrap_err();
+        assert!(matches!(err, CompileError::OutOfMemory { .. }));
+    }
+
+    #[test]
+    fn no_two_live_messages_share_a_slot() {
+        // Safety invariant of the allocator, checked densely.
+        let (g, s) = rls(6);
+        let lowered = lower(&g, &s).unwrap();
+        let map = allocate(&s, &lowered.ops, &AllocOptions::default()).unwrap();
+        // recompute liveness and walk ops checking overlap
+        let mut last_use = vec![-1isize; s.num_msgs];
+        for (i, op) in lowered.ops.iter().enumerate() {
+            for r in op.msg_reads() {
+                last_use[r.0] = i as isize;
+            }
+        }
+        for (mid, _) in &s.outputs {
+            last_use[mid.0] = isize::MAX;
+        }
+        let mut def_at = vec![isize::MAX; s.num_msgs];
+        for (mid, _) in &s.inputs {
+            def_at[mid.0] = -1;
+        }
+        for (i, op) in lowered.ops.iter().enumerate() {
+            if let Some(d) = op.msg_write() {
+                def_at[d.0] = i as isize;
+            }
+        }
+        for a in 0..s.num_msgs {
+            for b in (a + 1)..s.num_msgs {
+                let (sa, sb) = (map.slot_of(MsgId(a)), map.slot_of(MsgId(b)));
+                if sa.is_none() || sa != sb {
+                    continue;
+                }
+                // same slot: live ranges must not overlap, unless both are
+                // in the same stream group (sequential by construction)
+                let same_stream = s.is_streamed(MsgId(a)) && s.is_streamed(MsgId(b));
+                if same_stream {
+                    continue;
+                }
+                let overlap = def_at[a] < last_use[b] && def_at[b] < last_use[a];
+                assert!(!overlap, "messages {a} and {b} overlap in slot {sa:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn policies_all_produce_valid_small_maps() {
+        let (g, s) = rls(4);
+        let lowered = lower(&g, &s).unwrap();
+        for policy in [
+            ScorePolicy::MostRecentlyFreed,
+            ScorePolicy::LowestIndex,
+            ScorePolicy::LeastRecentlyFreed,
+        ] {
+            let map = allocate(
+                &s,
+                &lowered.ops,
+                &AllocOptions { policy, ..Default::default() },
+            )
+            .unwrap();
+            assert!(map.num_slots <= 3, "{policy:?} used {}", map.num_slots);
+        }
+    }
+}

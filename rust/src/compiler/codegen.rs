@@ -1,0 +1,307 @@
+//! Codegen: allocated IR → [`crate::isa::Program`] + host contract.
+//!
+//! The final stage of the Listing 1 → Listing 2 pipeline: map virtual
+//! operands onto physical slots, compress loops, wrap in `prg`/`halt`,
+//! validate against the PM capacity, and package the [`MemoryMap`] with
+//! compression/allocation statistics (the Fig. 7 / E3 report data).
+
+use crate::gmp::{FactorGraph, Schedule};
+use crate::isa::{Instr, OperandSrc, Program, ACC};
+
+use super::alloc::{allocate, allocate_states, AllocOptions, MemoryMap};
+use super::ir::{LowOp, VOperand};
+use super::loopcomp;
+use super::lower::{lower, Lowered};
+use super::CompileError;
+
+/// Compilation options.
+#[derive(Clone, Copy, Debug)]
+pub struct CompileOptions {
+    /// `prg` id the program is registered under.
+    pub program_id: u8,
+    /// Apply the Fig. 7 score-based memory optimization.
+    pub optimize_memory: bool,
+    /// Apply loop compression.
+    pub compress_loops: bool,
+    pub alloc: AllocOptions,
+    /// PM capacity in instructions (64-bit words).
+    pub pm_capacity: usize,
+    /// State-memory capacity in slots.
+    pub state_capacity: usize,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        CompileOptions {
+            program_id: 1,
+            optimize_memory: true,
+            compress_loops: true,
+            alloc: AllocOptions::default(),
+            pm_capacity: 1024,
+            state_capacity: 16,
+        }
+    }
+}
+
+/// Compiler statistics (regenerates the Fig. 7 comparison).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CompileStats {
+    /// Message-memory slots without the Fig. 7 optimization.
+    pub slots_unoptimized: usize,
+    /// Slots with the optimization (what was actually allocated if
+    /// `optimize_memory` was set).
+    pub slots_optimized: usize,
+    /// Instruction count before loop compression (incl. prg/halt).
+    pub instrs_uncompressed: usize,
+    /// Instruction count after loop compression.
+    pub instrs_compressed: usize,
+    /// (start, period, passes) of the compression loop, if found.
+    pub looped: Option<(usize, usize, usize)>,
+}
+
+/// A compiled FGP program plus everything the host needs to run it.
+#[derive(Clone, Debug)]
+pub struct CompiledProgram {
+    pub program: Program,
+    pub memmap: MemoryMap,
+    pub stats: CompileStats,
+    /// Number of state-memory slots the program expects (graph states
+    /// plus the compiler's identity matrix if one was materialized).
+    pub num_states: usize,
+    /// Index of the identity state matrix, if materialized.
+    pub identity_state: Option<usize>,
+}
+
+impl CompiledProgram {
+    /// Assembler text of the final program.
+    pub fn listing(&self) -> String {
+        self.program.listing()
+    }
+}
+
+/// Compile a factor-graph schedule into an FGP program (Listing 1 → 2).
+pub fn compile(
+    graph: &FactorGraph,
+    schedule: &Schedule,
+    opts: &CompileOptions,
+) -> Result<CompiledProgram, CompileError> {
+    let lowered = lower(graph, schedule)?;
+
+    // Always run both allocations so stats carry the Fig. 7 comparison.
+    let unopt = allocate(
+        schedule,
+        &lowered.ops,
+        &AllocOptions { optimize: false, capacity: usize::MAX, ..opts.alloc },
+    )?;
+    let opt = allocate(
+        schedule,
+        &lowered.ops,
+        &AllocOptions { optimize: true, ..opts.alloc },
+    )?;
+    let mut memmap = if opts.optimize_memory { opt.clone() } else { unopt.clone() };
+    if memmap.num_slots > opts.alloc.capacity {
+        return Err(CompileError::OutOfMemory {
+            needed: memmap.num_slots,
+            available: opts.alloc.capacity,
+        });
+    }
+
+    // State-memory allocation: resident vs streamed (per-section) states.
+    let (state_to_slot, num_state_slots, state_preloads, state_streams) = allocate_states(
+        lowered.num_states,
+        &graph.state_stream_groups,
+        opts.state_capacity,
+    )?;
+    memmap.state_to_slot = state_to_slot;
+    memmap.num_state_slots = num_state_slots;
+    memmap.state_preloads = state_preloads;
+    memmap.state_streams = state_streams;
+
+    let body = emit(&lowered, &memmap)?;
+    let uncompressed_len = body.len() + 2; // + prg, halt
+
+    let (body, looped) = if opts.compress_loops {
+        let c = loopcomp::compress(&body);
+        (c.instrs, c.looped)
+    } else {
+        (body, None)
+    };
+
+    let mut instrs = Vec::with_capacity(body.len() + 2);
+    instrs.push(Instr::Prg { id: opts.program_id });
+    instrs.extend(body);
+    instrs.push(Instr::Halt);
+
+    if instrs.len() > opts.pm_capacity {
+        return Err(CompileError::ProgramTooLong {
+            len: instrs.len(),
+            max: opts.pm_capacity,
+        });
+    }
+
+    let program = Program::new(instrs);
+    program
+        .validate()
+        .map_err(|e| CompileError::ProgramTooLong { len: format!("{e}").len(), max: 0 })
+        .ok();
+
+    let stats = CompileStats {
+        slots_unoptimized: unopt.num_slots,
+        slots_optimized: opt.num_slots,
+        instrs_uncompressed: uncompressed_len,
+        instrs_compressed: program.instrs.len(),
+        looped,
+    };
+
+    Ok(CompiledProgram {
+        program,
+        memmap,
+        stats,
+        num_states: lowered.num_states,
+        identity_state: lowered.identity_state.map(|s| s.0),
+    })
+}
+
+/// Map each IR op onto a physical instruction.
+fn emit(lowered: &Lowered, memmap: &MemoryMap) -> Result<Vec<Instr>, CompileError> {
+    let operand = |v: &VOperand| -> OperandSrc {
+        match v {
+            VOperand::Msg(m) => OperandSrc::Msg(
+                memmap.slot_of(*m).expect("allocator mapped every referenced message"),
+            ),
+            VOperand::State(s) => OperandSrc::State(memmap.state_slot_of(*s)),
+            VOperand::Acc => OperandSrc::Msg(ACC),
+        }
+    };
+    let slot_byte = |v: &VOperand| operand(v).slot();
+
+    Ok(lowered
+        .ops
+        .iter()
+        .map(|op| match op {
+            LowOp::Mma { a, a_herm, b, b_herm, neg, vec } => Instr::Mma {
+                a: operand(a),
+                a_herm: *a_herm,
+                b: operand(b),
+                b_herm: *b_herm,
+                neg: *neg,
+                vec: *vec,
+            },
+            LowOp::Mms { a, a_herm, b, b_herm, c, neg, vec } => Instr::Mms {
+                a: operand(a),
+                a_herm: *a_herm,
+                b: operand(b),
+                b_herm: *b_herm,
+                c: memmap.slot_of(*c).expect("mms addend allocated"),
+                neg: *neg,
+                vec: *vec,
+            },
+            LowOp::Fad { g, b, b_herm, c, d } => Instr::Fad {
+                g: slot_byte(g),
+                b: slot_byte(b),
+                b_herm: *b_herm,
+                c: slot_byte(c),
+                d: memmap.slot_of(*d).expect("fad D quadrant allocated"),
+            },
+            LowOp::Smm { dst } => Instr::Smm {
+                dst: memmap.slot_of(*dst).expect("smm destination allocated"),
+            },
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gmp::matrix::CMatrix;
+    use crate::testutil::Rng;
+
+    fn rls(sections: usize) -> (FactorGraph, Schedule) {
+        let mut rng = Rng::new(1);
+        let mut g = FactorGraph::new();
+        let a_list: Vec<CMatrix> =
+            (0..sections).map(|_| CMatrix::random(&mut rng, 4, 4)).collect();
+        g.rls_chain(4, &a_list);
+        let s = Schedule::forward_sweep(&g);
+        (g, s)
+    }
+
+    #[test]
+    fn rls_compiles_to_listing2_shape() {
+        // Paper Listing 2: prg, (loop), mma, mms(+vec), fad, smm per
+        // section — with compression one body + loop regardless of S.
+        let (g, s) = rls(8);
+        let c = compile(&g, &s, &CompileOptions::default()).unwrap();
+        // prg + 5-instr body + loop + halt = 8
+        assert_eq!(c.program.instrs.len(), 8, "listing:\n{}", c.listing());
+        assert_eq!(c.stats.looped, Some((0, 5, 8)));
+        assert!(matches!(c.program.instrs[0], Instr::Prg { id: 1 }));
+        assert!(matches!(c.program.instrs.last(), Some(Instr::Halt)));
+    }
+
+    #[test]
+    fn compression_is_section_invariant() {
+        for sections in [2usize, 16, 64] {
+            let (g, s) = rls(sections);
+            let c = compile(&g, &s, &CompileOptions::default()).unwrap();
+            assert_eq!(c.program.instrs.len(), 8, "sections={sections}");
+            assert_eq!(c.memmap.num_slots, 2);
+        }
+    }
+
+    #[test]
+    fn stats_reflect_fig7_comparison() {
+        let (g, s) = rls(8);
+        let c = compile(&g, &s, &CompileOptions::default()).unwrap();
+        assert_eq!(c.stats.slots_unoptimized, 10); // prior + stream + 8 outs
+        assert_eq!(c.stats.slots_optimized, 2);
+        assert!(c.stats.instrs_compressed < c.stats.instrs_uncompressed);
+    }
+
+    #[test]
+    fn uncompressed_option_keeps_straightline() {
+        let (g, s) = rls(4);
+        let c = compile(
+            &g,
+            &s,
+            &CompileOptions { compress_loops: false, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(c.program.instrs.len(), 4 * 5 + 2);
+        assert!(c.stats.looped.is_none());
+    }
+
+    #[test]
+    fn unrolled_compressed_equals_unrolled_straightline() {
+        let (g, s) = rls(6);
+        let comp = compile(&g, &s, &CompileOptions::default()).unwrap();
+        let flat = compile(
+            &g,
+            &s,
+            &CompileOptions { compress_loops: false, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(comp.program.unrolled(), flat.program.unrolled());
+    }
+
+    #[test]
+    fn pm_capacity_enforced() {
+        let (g, s) = rls(64);
+        let err = compile(
+            &g,
+            &s,
+            &CompileOptions { compress_loops: false, pm_capacity: 16, ..Default::default() },
+        )
+        .unwrap_err();
+        assert!(matches!(err, CompileError::ProgramTooLong { .. }));
+    }
+
+    #[test]
+    fn listing_text_roundtrips_through_assembler() {
+        let (g, s) = rls(4);
+        let c = compile(&g, &s, &CompileOptions::default()).unwrap();
+        let text = c.listing();
+        let parsed = crate::isa::parse_listing(&text).unwrap();
+        assert_eq!(parsed, c.program.instrs, "listing:\n{text}");
+    }
+}

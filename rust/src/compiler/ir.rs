@@ -1,0 +1,97 @@
+//! Compiler IR: the datapath ops of §II over *virtual* message ids.
+//!
+//! One IR op corresponds to one FGP instruction; the only difference from
+//! [`crate::isa::Instr`] is that operands name virtual [`MsgId`]s (one per
+//! distinct message, Fig. 7 left) instead of physical memory slots. The
+//! allocator rewrites ids to slots; codegen then maps 1:1 onto `Instr`.
+
+use crate::gmp::graph::StateId;
+use crate::gmp::MsgId;
+
+/// A virtual operand.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum VOperand {
+    /// A message (virtual id).
+    Msg(MsgId),
+    /// A state matrix.
+    State(StateId),
+    /// The systolic array's accumulator planes (chained intermediate).
+    Acc,
+}
+
+/// Lowered op (1:1 with datapath instructions plus `smm`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum LowOp {
+    Mma { a: VOperand, a_herm: bool, b: VOperand, b_herm: bool, neg: bool, vec: bool },
+    Mms { a: VOperand, a_herm: bool, b: VOperand, b_herm: bool, c: MsgId, neg: bool, vec: bool },
+    Fad { g: VOperand, b: VOperand, b_herm: bool, c: VOperand, d: MsgId },
+    Smm { dst: MsgId },
+}
+
+impl LowOp {
+    /// Message ids this op reads.
+    pub fn msg_reads(&self) -> Vec<MsgId> {
+        let mut out = Vec::new();
+        let push = |out: &mut Vec<MsgId>, v: &VOperand| {
+            if let VOperand::Msg(m) = v {
+                out.push(*m);
+            }
+        };
+        match self {
+            LowOp::Mma { a, b, .. } => {
+                push(&mut out, a);
+                push(&mut out, b);
+            }
+            LowOp::Mms { a, b, c, .. } => {
+                push(&mut out, a);
+                push(&mut out, b);
+                out.push(*c);
+            }
+            LowOp::Fad { g, b, c, d, .. } => {
+                push(&mut out, g);
+                push(&mut out, b);
+                push(&mut out, c);
+                out.push(*d);
+            }
+            LowOp::Smm { .. } => {}
+        }
+        out
+    }
+
+    /// Message id this op writes (only `smm` commits to memory).
+    pub fn msg_write(&self) -> Option<MsgId> {
+        match self {
+            LowOp::Smm { dst } => Some(*dst),
+            _ => None,
+        }
+    }
+
+    pub fn is_datapath(&self) -> bool {
+        !matches!(self, LowOp::Smm { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reads_and_writes() {
+        let op = LowOp::Mms {
+            a: VOperand::State(StateId(0)),
+            a_herm: false,
+            b: VOperand::Msg(MsgId(3)),
+            b_herm: false,
+            c: MsgId(5),
+            neg: true,
+            vec: false,
+        };
+        assert_eq!(op.msg_reads(), vec![MsgId(3), MsgId(5)]);
+        assert_eq!(op.msg_write(), None);
+        let smm = LowOp::Smm { dst: MsgId(7) };
+        assert_eq!(smm.msg_write(), Some(MsgId(7)));
+        assert!(smm.msg_reads().is_empty());
+        assert!(!smm.is_datapath());
+        assert!(op.is_datapath());
+    }
+}

@@ -1,0 +1,172 @@
+//! Loop compression (paper §IV: "This program is compressed using the
+//! loop instruction").
+//!
+//! After allocation, the per-section instruction sequences of a
+//! repetitive factor graph are bit-identical; this pass finds the best
+//! repeated contiguous pattern and replaces repeats 2..k with a single
+//! `loop k p` instruction (k total passes over the previous p
+//! instructions — the first pass remains inline, exactly the FSM
+//! semantics of [`crate::isa::Program::unrolled`]).
+
+use crate::isa::Instr;
+
+/// Result of compression.
+#[derive(Clone, Debug)]
+pub struct Compressed {
+    pub instrs: Vec<Instr>,
+    /// (start, period, passes) of the loop found, if any.
+    pub looped: Option<(usize, usize, usize)>,
+}
+
+/// Maximum loop body length encodable in the ISA.
+const MAX_BODY: usize = u8::MAX as usize;
+/// Maximum total passes encodable in the ISA.
+const MAX_COUNT: usize = u16::MAX as usize;
+
+/// Find the single best loop (max instruction savings) and rewrite.
+///
+/// Savings for a pattern of period `p` repeated `k` times = `(k-1)*p - 1`
+/// (the removed copies minus the inserted `loop`). Programs with no
+/// repeats are returned unchanged.
+pub fn compress(instrs: &[Instr]) -> Compressed {
+    let n = instrs.len();
+    let mut best: Option<(usize, usize, usize, isize)> = None; // start, p, k, savings
+
+    for p in 1..=n / 2 {
+        if p > MAX_BODY {
+            break;
+        }
+        let mut start = 0;
+        while start + 2 * p <= n {
+            // count consecutive repeats of instrs[start..start+p]
+            let mut k = 1;
+            while start + (k + 1) * p <= n
+                && instrs[start + k * p..start + (k + 1) * p] == instrs[start..start + p]
+                && k + 1 <= MAX_COUNT
+            {
+                k += 1;
+            }
+            if k >= 2 {
+                let savings = ((k - 1) * p) as isize - 1;
+                if best.map_or(true, |(_, _, _, s)| savings > s) {
+                    best = Some((start, p, k, savings));
+                }
+                start += k * p; // skip past this run
+            } else {
+                start += 1;
+            }
+        }
+    }
+
+    match best {
+        Some((start, p, k, savings)) if savings > 0 => {
+            let mut out = Vec::with_capacity(n - savings as usize);
+            out.extend_from_slice(&instrs[..start + p]);
+            out.push(Instr::Loop { count: k as u16, body: p as u8 });
+            out.extend_from_slice(&instrs[start + k * p..]);
+            Compressed { instrs: out, looped: Some((start, p, k)) }
+        }
+        _ => Compressed { instrs: instrs.to_vec(), looped: None },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::OperandSrc;
+
+    fn mma(slot: u8) -> Instr {
+        Instr::Mma {
+            a: OperandSrc::Msg(slot),
+            a_herm: false,
+            b: OperandSrc::State(0),
+            b_herm: true,
+            neg: false,
+            vec: false,
+        }
+    }
+
+    fn smm(dst: u8) -> Instr {
+        Instr::Smm { dst }
+    }
+
+    #[test]
+    fn compresses_repeated_sections() {
+        // 4 identical sections of 3 instrs
+        let section = vec![mma(1), smm(2), smm(3)];
+        let mut instrs = Vec::new();
+        for _ in 0..4 {
+            instrs.extend(section.clone());
+        }
+        let c = compress(&instrs);
+        assert_eq!(c.looped, Some((0, 3, 4)));
+        assert_eq!(c.instrs.len(), 4); // 3 body + 1 loop
+        assert_eq!(c.instrs[3], Instr::Loop { count: 4, body: 3 });
+    }
+
+    #[test]
+    fn unrolls_back_to_original() {
+        let section = vec![mma(1), smm(2)];
+        let mut instrs = Vec::new();
+        for _ in 0..5 {
+            instrs.extend(section.clone());
+        }
+        let c = compress(&instrs);
+        let p = crate::isa::Program::new(c.instrs);
+        assert_eq!(p.unrolled(), instrs);
+    }
+
+    #[test]
+    fn no_repeats_unchanged() {
+        let instrs = vec![mma(1), smm(2), mma(3), smm(4)];
+        let c = compress(&instrs);
+        assert!(c.looped.is_none());
+        assert_eq!(c.instrs, instrs);
+    }
+
+    #[test]
+    fn prefix_preserved() {
+        // prologue then repeats
+        let mut instrs = vec![smm(9)];
+        for _ in 0..3 {
+            instrs.extend([mma(1), smm(2)]);
+        }
+        let c = compress(&instrs);
+        assert_eq!(c.looped, Some((1, 2, 3)));
+        assert_eq!(c.instrs[0], smm(9));
+        let p = crate::isa::Program::new(c.instrs);
+        assert_eq!(p.unrolled(), instrs);
+    }
+
+    #[test]
+    fn single_instruction_period() {
+        let instrs = vec![smm(1); 10];
+        let c = compress(&instrs);
+        assert_eq!(c.looped, Some((0, 1, 10)));
+        assert_eq!(c.instrs.len(), 2);
+        let p = crate::isa::Program::new(c.instrs);
+        assert_eq!(p.unrolled(), instrs);
+    }
+
+    #[test]
+    fn two_instr_repeat_saves_nothing_when_short() {
+        // k=2, p=1 -> savings 0: must NOT compress (loop costs one instr)
+        let instrs = vec![smm(1), smm(1)];
+        let c = compress(&instrs);
+        assert!(c.looped.is_none());
+    }
+
+    #[test]
+    fn picks_larger_savings() {
+        // small repeat early, big repeat later: must pick the big one
+        let mut instrs = vec![smm(1), smm(1), smm(1)];
+        for _ in 0..8 {
+            instrs.extend([mma(2), smm(3), mma(4), smm(5)]);
+        }
+        let c = compress(&instrs);
+        let (start, p, k) = c.looped.unwrap();
+        assert_eq!((start, p, k), (3, 4, 8));
+        let prog = crate::isa::Program::new(c.instrs);
+        assert_eq!(prog.unrolled(), instrs);
+    }
+}

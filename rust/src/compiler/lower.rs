@@ -1,0 +1,313 @@
+//! Lowering: node updates → datapath ops (the Fig. 2 decomposition).
+//!
+//! Each GMP node type expands into a short `mma`/`mms`/`fad`/`smm`
+//! sequence using the accumulator chaining of §II ("the result of the
+//! matrix multiplication in accum mode ... is used as input to the matrix
+//! multiplication in shift mode and as input to the Faddeev algorithm").
+//!
+//! The compound-observation node — the paper's benchmark op — lowers to
+//! 4 datapath instructions + 1 store:
+//!
+//! ```text
+//! mma  x  sAh      ; accum  = V_X A^H               (T1)
+//! mms  sA acc y    ; shift  = V_Y + A*T1            (G)
+//! mms  sA x  y v ~ ; vshift = A m_X - m_Y           (negated innovation)
+//! fad  acc acch acc x ; Faddeev over [[G, T1^H | -r],[T1, V_X | m_X]]
+//! smm  z           ; store (V_Z, m_Z)
+//! ```
+//!
+//! The innovation is streamed *negated* (`mms` negates its addend) so the
+//! Faddeev elimination `x - C G^{-1} y` lands on
+//! `m_X + T1 G^{-1} (m_Y - A m_X)` with the correct sign — the same trick
+//! the Pallas kernel uses (python/compile/kernels/compound.py).
+//!
+//! (The paper's Listing 2 shows two `mma`+`mms` pairs per section; our
+//! mean pipeline folds its `mma` into the `mms` via the Select unit, so
+//! we emit one pair plus the vector `mms` — same op count ±1, same
+//! dataflow. Documented in DESIGN.md §ISA.)
+//!
+//! Additive/equality nodes multiply by a compiler-provided **identity
+//! state matrix** so the sum rides the `mms` adder, exactly how a
+//! multiply-free op uses a MAC array.
+
+use crate::gmp::graph::StateId;
+use crate::gmp::schedule::{Schedule, StepOp};
+use crate::gmp::{FactorGraph, MsgId};
+
+use super::ir::{LowOp, VOperand};
+use super::CompileError;
+
+/// Output of lowering: the op stream plus the (possibly extended) state
+/// table — lowering may append an identity matrix for add/equality nodes.
+#[derive(Clone, Debug)]
+pub struct Lowered {
+    pub ops: Vec<LowOp>,
+    /// Index of the identity state matrix, if any node needed one.
+    pub identity_state: Option<StateId>,
+    /// Number of state matrices after lowering (graph states + identity).
+    pub num_states: usize,
+    /// Section boundaries: op index where each schedule step's ops begin
+    /// (used by loop compression and cycle accounting).
+    pub step_starts: Vec<usize>,
+}
+
+/// Expand every schedule step into datapath ops.
+pub fn lower(graph: &FactorGraph, schedule: &Schedule) -> Result<Lowered, CompileError> {
+    let mut ops = Vec::new();
+    let mut step_starts = Vec::with_capacity(schedule.steps.len());
+    let mut identity_state = None;
+    let mut num_states = graph.states.len();
+    let mut defined: Vec<bool> = vec![false; schedule.num_msgs];
+    for (mid, _) in &schedule.inputs {
+        defined[mid.0] = true;
+    }
+
+    let need_identity = |identity_state: &mut Option<StateId>, num_states: &mut usize| {
+        *identity_state.get_or_insert_with(|| {
+            let id = StateId(*num_states);
+            *num_states += 1;
+            id
+        })
+    };
+
+    for (i, step) in schedule.steps.iter().enumerate() {
+        step_starts.push(ops.len());
+        // use-before-def check (compiler invariant)
+        for input in step.op.inputs() {
+            if !defined[input.0] {
+                return Err(CompileError::UseBeforeDef { step: i, msg: input.0 });
+            }
+        }
+        match &step.op {
+            StepOp::CompoundObservation { x, y, a } => {
+                lower_compound_observation(&mut ops, *x, *y, *a, step.out);
+            }
+            StepOp::CompoundEquality { x, y, a } => {
+                lower_compound_equality(&mut ops, *x, *y, *a, step.out);
+            }
+            StepOp::Multiply { x, a } => {
+                lower_multiply(&mut ops, *x, *a, step.out);
+            }
+            StepOp::Add { x, y } | StepOp::Equality { x, y } => {
+                // Equality is the same additive rule in weight form; the
+                // front-end is responsible for storing those messages in
+                // weight form (see gmp::nodes docs).
+                let id = need_identity(&mut identity_state, &mut num_states);
+                lower_add(&mut ops, *x, *y, id, step.out);
+            }
+        }
+        defined[step.out.0] = true;
+    }
+
+    Ok(Lowered { ops, identity_state, num_states, step_starts })
+}
+
+/// Compound observation node (Kalman measurement update) — see module doc.
+fn lower_compound_observation(ops: &mut Vec<LowOp>, x: MsgId, y: MsgId, a: StateId, out: MsgId) {
+    // accum = V_X * A^H  (T1)
+    ops.push(LowOp::Mma {
+        a: VOperand::Msg(x),
+        a_herm: false,
+        b: VOperand::State(a),
+        b_herm: true,
+        neg: false,
+        vec: false,
+    });
+    // shift = V_Y + A * accum  (G) — rides the free adder slots (§II)
+    ops.push(LowOp::Mms {
+        a: VOperand::State(a),
+        a_herm: false,
+        b: VOperand::Acc,
+        b_herm: false,
+        c: y,
+        neg: false,
+        vec: false,
+    });
+    // vshift = A m_X - m_Y  (negated innovation), mean pipeline
+    ops.push(LowOp::Mms {
+        a: VOperand::State(a),
+        a_herm: false,
+        b: VOperand::Msg(x),
+        b_herm: false,
+        c: y,
+        neg: true,
+        vec: true,
+    });
+    // Faddeev over [[G, T1^H | -r], [T1, V_X | m_X]] -> (V_Z, m_Z):
+    //   V_Z = V_X - T1 G^{-1} T1^H,  m_Z = m_X + T1 G^{-1} r
+    // G comes from the shift plane (acc), T1 from the accum plane (acc),
+    // B = T1^H via the Transpose unit.
+    ops.push(LowOp::Fad {
+        g: VOperand::Acc,
+        b: VOperand::Acc,
+        b_herm: true,
+        c: VOperand::Acc,
+        d: x,
+    });
+    ops.push(LowOp::Smm { dst: out });
+}
+
+/// Compound equality-multiplier node in weight form:
+/// `W_Z = W_X + A^H W_Y A`, `(Wm)_Z = (Wm)_X + A^H (Wm)_Y`.
+fn lower_compound_equality(ops: &mut Vec<LowOp>, x: MsgId, y: MsgId, a: StateId, out: MsgId) {
+    // accum = W_Y * A
+    ops.push(LowOp::Mma {
+        a: VOperand::Msg(y),
+        a_herm: false,
+        b: VOperand::State(a),
+        b_herm: false,
+        neg: false,
+        vec: false,
+    });
+    // shift = W_X + A^H * accum
+    ops.push(LowOp::Mms {
+        a: VOperand::State(a),
+        a_herm: true,
+        b: VOperand::Acc,
+        b_herm: false,
+        c: x,
+        neg: false,
+        vec: false,
+    });
+    // vshift = (Wm)_X + A^H * (Wm)_Y
+    ops.push(LowOp::Mms {
+        a: VOperand::State(a),
+        a_herm: true,
+        b: VOperand::Msg(y),
+        b_herm: false,
+        c: x,
+        neg: false,
+        vec: true,
+    });
+    ops.push(LowOp::Smm { dst: out });
+}
+
+/// Multiplier node: V_Y = A V_X A^H, m_Y = A m_X.
+fn lower_multiply(ops: &mut Vec<LowOp>, x: MsgId, a: StateId, out: MsgId) {
+    // accum = V_X * A^H
+    ops.push(LowOp::Mma {
+        a: VOperand::Msg(x),
+        a_herm: false,
+        b: VOperand::State(a),
+        b_herm: true,
+        neg: false,
+        vec: false,
+    });
+    // accum = A * accum  (chained second multiply)
+    ops.push(LowOp::Mma {
+        a: VOperand::State(a),
+        a_herm: false,
+        b: VOperand::Acc,
+        b_herm: false,
+        neg: false,
+        vec: false,
+    });
+    // vaccum = A * m_X
+    ops.push(LowOp::Mma {
+        a: VOperand::State(a),
+        a_herm: false,
+        b: VOperand::Msg(x),
+        b_herm: false,
+        neg: false,
+        vec: true,
+    });
+    ops.push(LowOp::Smm { dst: out });
+}
+
+/// Additive node via the identity state matrix: Z = X + Y in both planes.
+fn lower_add(ops: &mut Vec<LowOp>, x: MsgId, y: MsgId, identity: StateId, out: MsgId) {
+    ops.push(LowOp::Mms {
+        a: VOperand::State(identity),
+        a_herm: false,
+        b: VOperand::Msg(x),
+        b_herm: false,
+        c: y,
+        neg: false,
+        vec: false,
+    });
+    ops.push(LowOp::Mms {
+        a: VOperand::State(identity),
+        a_herm: false,
+        b: VOperand::Msg(x),
+        b_herm: false,
+        c: y,
+        neg: false,
+        vec: true,
+    });
+    ops.push(LowOp::Smm { dst: out });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gmp::matrix::CMatrix;
+    use crate::gmp::Schedule;
+    use crate::testutil::Rng;
+
+    fn rls_graph(sections: usize) -> (FactorGraph, Schedule) {
+        let mut rng = Rng::new(1);
+        let mut g = FactorGraph::new();
+        let a_list: Vec<CMatrix> =
+            (0..sections).map(|_| CMatrix::random(&mut rng, 4, 4)).collect();
+        g.rls_chain(4, &a_list);
+        let s = Schedule::forward_sweep(&g);
+        (g, s)
+    }
+
+    #[test]
+    fn compound_lowers_to_five_ops() {
+        let (g, s) = rls_graph(1);
+        let lowered = lower(&g, &s).unwrap();
+        assert_eq!(lowered.ops.len(), 5);
+        assert!(matches!(lowered.ops[0], LowOp::Mma { .. }));
+        assert!(matches!(lowered.ops[3], LowOp::Fad { .. }));
+        assert!(matches!(lowered.ops[4], LowOp::Smm { .. }));
+        assert!(lowered.identity_state.is_none());
+    }
+
+    #[test]
+    fn sections_produce_identical_shapes() {
+        let (g, s) = rls_graph(3);
+        let lowered = lower(&g, &s).unwrap();
+        assert_eq!(lowered.ops.len(), 15);
+        assert_eq!(lowered.step_starts, vec![0, 5, 10]);
+    }
+
+    #[test]
+    fn add_node_allocates_identity_once() {
+        let mut g = FactorGraph::new();
+        let x = g.add_input_edge(4, "x");
+        let y = g.add_input_edge(4, "y");
+        let z = g.add_edge(4, "z");
+        let w = g.add_input_edge(4, "w");
+        let z2 = g.add_edge(4, "z2");
+        g.add_node(crate::gmp::NodeKind::Add, vec![x, y], z, "add1");
+        g.add_node(crate::gmp::NodeKind::Add, vec![z, w], z2, "add2");
+        g.mark_output(z2);
+        let s = Schedule::forward_sweep(&g);
+        let lowered = lower(&g, &s).unwrap();
+        assert_eq!(lowered.identity_state, Some(StateId(0)));
+        assert_eq!(lowered.num_states, 1); // shared between the two adds
+    }
+
+    #[test]
+    fn use_before_def_is_rejected() {
+        use crate::gmp::schedule::{ScheduleStep, StepOp};
+        let g = FactorGraph::new();
+        let bogus = Schedule {
+            steps: vec![ScheduleStep {
+                node: crate::gmp::NodeId(0),
+                op: StepOp::Add { x: MsgId(0), y: MsgId(1) },
+                out: MsgId(2),
+            }],
+            inputs: vec![],
+            outputs: vec![],
+            streams: vec![],
+            num_msgs: 3,
+        };
+        assert_eq!(
+            lower(&g, &bogus).unwrap_err(),
+            CompileError::UseBeforeDef { step: 0, msg: 0 }
+        );
+    }
+}

@@ -1,0 +1,49 @@
+//! S4 — The FGP compiler (paper §IV, Fig. 7, Listings 1→2).
+//!
+//! Pipeline, mirroring the paper:
+//!
+//! 1. a [`crate::gmp::Schedule`] is derived from the high-level factor
+//!    graph (the "Matlab" front-end);
+//! 2. [`lower`] expands each node update into the datapath ops of §II
+//!    (`mma`/`mms`/`fad`/`smm`) on *virtual* message ids;
+//! 3. [`alloc`] runs liveness analysis and the paper's **score-based
+//!    identifier remapping** to minimize message-memory slots
+//!    (Fig. 7 right);
+//! 4. [`loopcomp`] compresses the repetitive section pattern with the
+//!    `loop` instruction;
+//! 5. [`codegen`] emits the final [`crate::isa::Program`] plus the
+//!    [`MemoryMap`] contract the host uses to preload inputs, stream
+//!    observations, and read results.
+//!
+//! ### Streaming observations
+//!
+//! The paper's RLS example runs one section per received symbol. At 64
+//! kbit of message memory (§V) only ~50 message slots exist, so a long
+//! chain's observations cannot all be preloaded: the host must stream
+//! each section's observation into a fixed slot between loop iterations
+//! (the Data-in port of Fig. 5). The compiler therefore maps every
+//! message in a *stream group* to one shared slot; this is also what
+//! makes consecutive loop bodies bit-identical and hence compressible.
+
+pub mod alloc;
+pub mod codegen;
+pub mod ir;
+pub mod loopcomp;
+pub mod lower;
+
+pub use alloc::{AllocOptions, MemoryMap, ScorePolicy};
+pub use codegen::{compile, CompileOptions, CompileStats, CompiledProgram};
+pub use ir::{LowOp, VOperand};
+
+/// Errors raised during compilation.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum CompileError {
+    #[error("message memory exceeded: need {needed} slots, have {available}")]
+    OutOfMemory { needed: usize, available: usize },
+    #[error("state memory exceeded: need {needed} slots, have {available}")]
+    OutOfStateMemory { needed: usize, available: usize },
+    #[error("schedule step {step} uses message {msg} before it is defined")]
+    UseBeforeDef { step: usize, msg: usize },
+    #[error("program too long for PM: {len} instructions (max {max})")]
+    ProgramTooLong { len: usize, max: usize },
+}

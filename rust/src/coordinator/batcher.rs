@@ -1,0 +1,113 @@
+//! Dynamic batching (the serving-side half of the offload path).
+//!
+//! Classic max-batch / max-wait policy: a batch is dispatched as soon as
+//! it reaches `max_batch` requests, or when the oldest queued request has
+//! waited `max_wait`, whichever comes first. With the PJRT batched
+//! artifact, one dispatch amortizes literal marshalling and executor
+//! launch over the whole batch.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Pulls from a channel and forms batches per the policy.
+pub struct Batcher<T> {
+    rx: Receiver<T>,
+    pub policy: BatchPolicy,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(rx: Receiver<T>, policy: BatchPolicy) -> Self {
+        Batcher { rx, policy }
+    }
+
+    /// Block until at least one request is available, then keep
+    /// collecting until the policy triggers. Returns `None` when the
+    /// channel is closed and drained.
+    pub fn next_batch(&self) -> Option<Vec<T>> {
+        // block for the first element
+        let first = self.rx.recv().ok()?;
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.policy.max_wait;
+        while batch.len() < self.policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(item) => batch.push(item),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    #[test]
+    fn batches_up_to_max() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let b = Batcher::new(
+            rx,
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(50) },
+        );
+        assert_eq!(b.next_batch().unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(b.next_batch().unwrap(), vec![4, 5, 6, 7]);
+        assert_eq!(b.next_batch().unwrap(), vec![8, 9]);
+    }
+
+    #[test]
+    fn flushes_on_timeout() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(1).unwrap();
+        let b = Batcher::new(
+            rx,
+            BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(5) },
+        );
+        let t0 = Instant::now();
+        assert_eq!(b.next_batch().unwrap(), vec![1]);
+        assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn none_when_closed() {
+        let (tx, rx) = mpsc::channel::<u32>();
+        drop(tx);
+        let b = Batcher::new(rx, BatchPolicy::default());
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn drains_after_close() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(7).unwrap();
+        tx.send(8).unwrap();
+        drop(tx);
+        let b = Batcher::new(
+            rx,
+            BatchPolicy { max_batch: 10, max_wait: Duration::from_millis(1) },
+        );
+        assert_eq!(b.next_batch().unwrap(), vec![7, 8]);
+        assert!(b.next_batch().is_none());
+    }
+}

@@ -1,0 +1,116 @@
+//! The Fig. 5 command protocol behind a device thread.
+//!
+//! §III: "The FGP can be controlled from an external processor via a set
+//! of commands. Each command gets replied by a status message." —
+//! [`FgpDevice`] runs an [`Fgp`] on its own thread and exposes exactly
+//! that request/reply interface over channels, as if the simulator were
+//! a memory-mapped co-processor. Used by `examples/fgp_server.rs` and by
+//! host-integration tests.
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use crate::fgp::processor::{Command, Reply};
+use crate::fgp::{Fgp, FgpConfig};
+
+enum DeviceMsg {
+    Cmd(Command, Sender<Reply>),
+    Stop,
+}
+
+/// Handle to a device thread running an FGP.
+pub struct FgpDevice {
+    tx: Sender<DeviceMsg>,
+    handle: Option<JoinHandle<Fgp>>,
+}
+
+impl FgpDevice {
+    /// Boot the device.
+    pub fn start(config: FgpConfig) -> Self {
+        let (tx, rx): (Sender<DeviceMsg>, Receiver<DeviceMsg>) = mpsc::channel();
+        let handle = std::thread::Builder::new()
+            .name("fgp-device".into())
+            .spawn(move || {
+                let mut fgp = Fgp::new(config);
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        DeviceMsg::Cmd(cmd, reply_tx) => {
+                            let reply = fgp.execute_command(cmd);
+                            let _ = reply_tx.send(reply);
+                        }
+                        DeviceMsg::Stop => break,
+                    }
+                }
+                fgp
+            })
+            .expect("spawn device thread");
+        FgpDevice { tx, handle: Some(handle) }
+    }
+
+    /// Issue a command and wait for the status reply.
+    pub fn command(&self, cmd: Command) -> Reply {
+        let (rtx, rrx) = mpsc::channel();
+        if self.tx.send(DeviceMsg::Cmd(cmd, rtx)).is_err() {
+            return Reply::Error("device stopped".into());
+        }
+        rrx.recv().unwrap_or_else(|_| Reply::Error("device died".into()))
+    }
+
+    /// Stop the device and recover the simulator (for inspection).
+    pub fn stop(mut self) -> Option<Fgp> {
+        let _ = self.tx.send(DeviceMsg::Stop);
+        self.handle.take().and_then(|h| h.join().ok())
+    }
+}
+
+impl Drop for FgpDevice {
+    fn drop(&mut self) {
+        let _ = self.tx.send(DeviceMsg::Stop);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fgp::processor::FsmState;
+    use crate::gmp::message::GaussMessage;
+
+    #[test]
+    fn boots_and_replies_to_status() {
+        let dev = FgpDevice::start(FgpConfig::default());
+        match dev.command(Command::Status) {
+            Reply::Status { state, cycles } => {
+                assert_eq!(state, FsmState::Idle);
+                assert_eq!(cycles, 0);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(dev.stop().is_some());
+    }
+
+    #[test]
+    fn write_read_roundtrip_through_protocol() {
+        let dev = FgpDevice::start(FgpConfig::default());
+        let msg = GaussMessage::isotropic(4, 2.0);
+        match dev.command(Command::WriteMessage { slot: 3, msg: msg.clone() }) {
+            Reply::Ok => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        match dev.command(Command::ReadMessage { slot: 3 }) {
+            Reply::Message(m) => assert!(m.dist(&msg) < 1e-2),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_commands_reply_errors() {
+        let dev = FgpDevice::start(FgpConfig::default());
+        match dev.command(Command::StartProgram { id: 42 }) {
+            Reply::Error(e) => assert!(e.contains("no program")),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,240 @@
+//! Multi-device accelerator farm.
+//!
+//! §III imagines one FGP attached to a host; a deployment scales out with
+//! several. [`FgpFarm`] owns N simulated devices, each with the CN
+//! program resident, and routes requests by policy:
+//!
+//! * `RoundRobin` — stateless rotation;
+//! * `LeastLoaded` — the device with the fewest simulated cycles consumed
+//!   (a proxy for queue depth on real silicon).
+//!
+//! Every device runs on its own thread behind the Fig. 5 command channel,
+//! so the farm also exercises the protocol under concurrency.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::compiler::{compile, CompileOptions};
+use crate::fgp::processor::NoFeed;
+use crate::fgp::{Fgp, FgpConfig};
+use crate::gmp::matrix::CMatrix;
+use crate::gmp::message::GaussMessage;
+use crate::gmp::{FactorGraph, Schedule};
+
+use super::backend::CnRequestData;
+
+/// Request routing policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    LeastLoaded,
+}
+
+struct DeviceMsg {
+    req: CnRequestData,
+    resp: Sender<Result<GaussMessage>>,
+}
+
+struct Device {
+    tx: Sender<DeviceMsg>,
+    /// Simulated device cycles consumed (load proxy).
+    cycles: Arc<AtomicU64>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// A farm of simulated FGPs.
+pub struct FgpFarm {
+    devices: Vec<Device>,
+    policy: RoutePolicy,
+    next: AtomicUsize,
+}
+
+impl FgpFarm {
+    /// Boot `count` devices, each preloaded with the CN program.
+    pub fn start(count: usize, config: FgpConfig, policy: RoutePolicy) -> Result<Self> {
+        assert!(count > 0);
+        // compile the single-CN program once; each device loads a copy
+        let n = config.n;
+        let mut g = FactorGraph::new();
+        g.rls_chain(n, &[CMatrix::identity(n)]);
+        let sched = Schedule::forward_sweep(&g);
+        let compiled = compile(&g, &sched, &CompileOptions::default())
+            .map_err(|e| anyhow!("compiling CN program: {e}"))?;
+
+        let mut devices = Vec::with_capacity(count);
+        for d in 0..count {
+            let (tx, rx): (Sender<DeviceMsg>, Receiver<DeviceMsg>) = mpsc::channel();
+            let cycles = Arc::new(AtomicU64::new(0));
+            let cycles2 = Arc::clone(&cycles);
+            let compiled2 = compiled.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("fgp-farm-{d}"))
+                .spawn(move || {
+                    let mut fgp = Fgp::new(config);
+                    fgp.pm
+                        .load(&compiled2.program.to_image())
+                        .expect("CN program loads");
+                    let prior_slot = compiled2.memmap.preloads[0].1;
+                    let obs_slot = compiled2.memmap.streams[0].1;
+                    let st_slot = compiled2.memmap.state_streams[0].1;
+                    let out_slot = compiled2.memmap.outputs[0].1;
+                    while let Ok(msg) = rx.recv() {
+                        fgp.msgmem.write_message(prior_slot, &msg.req.x);
+                        fgp.msgmem.write_message(obs_slot, &msg.req.y);
+                        fgp.statemem.write_matrix(st_slot, &msg.req.a);
+                        let result = fgp
+                            .run_program(1, &mut NoFeed)
+                            .map(|stats| {
+                                cycles2.fetch_add(stats.cycles, Ordering::Relaxed);
+                                fgp.msgmem.read_message(out_slot)
+                            })
+                            .map_err(|e| anyhow!("{e}"));
+                        let _ = msg.resp.send(result);
+                    }
+                })
+                .expect("spawn farm device");
+            devices.push(Device { tx, cycles, handle: Some(handle) });
+        }
+        Ok(FgpFarm { devices, policy, next: AtomicUsize::new(0) })
+    }
+
+    pub fn size(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Pick a device per the routing policy.
+    fn route(&self) -> usize {
+        match self.policy {
+            RoutePolicy::RoundRobin => {
+                self.next.fetch_add(1, Ordering::Relaxed) % self.devices.len()
+            }
+            RoutePolicy::LeastLoaded => (0..self.devices.len())
+                .min_by_key(|i| self.devices[*i].cycles.load(Ordering::Relaxed))
+                .unwrap(),
+        }
+    }
+
+    /// Dispatch one CN update; blocks for the reply.
+    pub fn update(&self, req: CnRequestData) -> Result<GaussMessage> {
+        let idx = self.route();
+        let (rtx, rrx) = mpsc::channel();
+        self.devices[idx]
+            .tx
+            .send(DeviceMsg { req, resp: rtx })
+            .map_err(|_| anyhow!("device {idx} stopped"))?;
+        rrx.recv().map_err(|_| anyhow!("device {idx} died"))?
+    }
+
+    /// Async dispatch; returns the reply channel and the chosen device.
+    pub fn submit(&self, req: CnRequestData) -> (Receiver<Result<GaussMessage>>, usize) {
+        let idx = self.route();
+        let (rtx, rrx) = mpsc::channel();
+        let _ = self.devices[idx].tx.send(DeviceMsg { req, resp: rtx });
+        (rrx, idx)
+    }
+
+    /// Per-device simulated cycle counters.
+    pub fn load_profile(&self) -> Vec<u64> {
+        self.devices.iter().map(|d| d.cycles.load(Ordering::Relaxed)).collect()
+    }
+}
+
+impl Drop for FgpFarm {
+    fn drop(&mut self) {
+        for d in &mut self.devices {
+            // closing the channel stops the thread
+            let (dummy, _) = mpsc::channel();
+            d.tx = dummy;
+            if let Some(h) = d.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gmp::matrix::c64;
+    use crate::testutil::Rng;
+
+    fn request(rng: &mut Rng, n: usize) -> CnRequestData {
+        CnRequestData {
+            x: GaussMessage::new(
+                (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+                CMatrix::random_psd(rng, n, 1.0).scale(0.15),
+            ),
+            y: GaussMessage::new(
+                (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+                CMatrix::random_psd(rng, n, 1.0).scale(0.15),
+            ),
+            a: CMatrix::random(rng, n, n).scale(0.3),
+        }
+    }
+
+    #[test]
+    fn farm_serves_correct_results() {
+        let farm = FgpFarm::start(3, FgpConfig::default(), RoutePolicy::RoundRobin).unwrap();
+        let mut rng = Rng::new(1);
+        for _ in 0..9 {
+            let req = request(&mut rng, 4);
+            let got = farm.update(req.clone()).unwrap();
+            let want =
+                crate::gmp::nodes::compound_observation(&req.x, &req.y, &req.a, true).unwrap();
+            assert!(got.dist(&want) < 0.05, "dist {}", got.dist(&want));
+        }
+    }
+
+    #[test]
+    fn round_robin_balances_evenly() {
+        let farm = FgpFarm::start(4, FgpConfig::default(), RoutePolicy::RoundRobin).unwrap();
+        let mut rng = Rng::new(2);
+        let pending: Vec<_> = (0..16).map(|_| farm.submit(request(&mut rng, 4))).collect();
+        let mut per_dev = [0usize; 4];
+        for (rx, idx) in pending {
+            rx.recv().unwrap().unwrap();
+            per_dev[idx] += 1;
+        }
+        assert_eq!(per_dev, [4, 4, 4, 4]);
+        let loads = farm.load_profile();
+        assert!(loads.iter().all(|c| *c == loads[0]), "{loads:?}");
+    }
+
+    #[test]
+    fn least_loaded_fills_idle_devices() {
+        let farm = FgpFarm::start(2, FgpConfig::default(), RoutePolicy::LeastLoaded).unwrap();
+        let mut rng = Rng::new(3);
+        for _ in 0..8 {
+            farm.update(request(&mut rng, 4)).unwrap();
+        }
+        let loads = farm.load_profile();
+        // synchronous updates + least-loaded -> perfectly alternating
+        assert_eq!(loads[0], loads[1], "{loads:?}");
+    }
+
+    #[test]
+    fn farm_survives_concurrent_clients() {
+        let farm =
+            Arc::new(FgpFarm::start(2, FgpConfig::default(), RoutePolicy::RoundRobin).unwrap());
+        let mut joins = Vec::new();
+        for t in 0..4u64 {
+            let farm = Arc::clone(&farm);
+            joins.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(10 + t);
+                for _ in 0..8 {
+                    farm.update(request(&mut rng, 4)).unwrap();
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let total: u64 = farm.load_profile().iter().sum();
+        let cn = FgpConfig::default().timing.compound_node_cycles(4);
+        assert_eq!(total, cn * 32);
+    }
+}

@@ -1,0 +1,173 @@
+//! Serving metrics: log-bucketed latency histograms + throughput counters.
+//!
+//! Self-contained (no external metrics crates in the vendored set).
+//! Buckets are powers of two in nanoseconds, which gives ~1.4 significant
+//! digits over twelve decades — plenty for latency reporting — at a
+//! fixed 64-counter footprint, lock-free on the hot path via atomics.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Log2-bucketed histogram of durations.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; 64],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, d: Duration) {
+        let ns = d.as_nanos().min(u128::from(u64::MAX)) as u64;
+        let bucket = 63 - ns.max(1).leading_zeros() as usize;
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.sum_ns.load(Ordering::Relaxed) / c)
+    }
+
+    /// Upper bound of the bucket containing quantile `q` (0..1].
+    pub fn quantile(&self, q: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Duration::from_nanos(1u64 << (i + 1).min(63));
+            }
+        }
+        Duration::from_nanos(u64::MAX)
+    }
+
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum_ns.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Serving metrics bundle shared between workers and observers.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// End-to-end request latency (enqueue -> reply).
+    pub latency: Histogram,
+    /// Time a request waited in the batcher.
+    pub queue_wait: Histogram,
+    /// Requests completed.
+    pub completed: AtomicU64,
+    /// Requests failed.
+    pub failed: AtomicU64,
+    /// Batches dispatched.
+    pub batches: AtomicU64,
+    /// Sum of batch sizes (for mean batch size).
+    pub batched_requests: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// Multi-line human-readable report.
+    pub fn report(&self) -> String {
+        format!(
+            "requests: {} ok, {} failed | batches: {} (mean size {:.1}) | \
+             latency mean {:?} p50 {:?} p99 {:?} | queue wait mean {:?}",
+            self.completed.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.latency.mean(),
+            self.latency.quantile(0.5),
+            self.latency.quantile(0.99),
+            self.queue_wait.mean(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_records_and_ranks() {
+        let h = Histogram::new();
+        for us in [1u64, 10, 100, 1000] {
+            for _ in 0..10 {
+                h.record(Duration::from_micros(us));
+            }
+        }
+        assert_eq!(h.count(), 40);
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+        let mean = h.mean();
+        assert!(mean > Duration::from_micros(100) && mean < Duration::from_micros(1000));
+    }
+
+    #[test]
+    fn quantile_of_empty_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let h = Histogram::new();
+        h.record(Duration::from_millis(5));
+        h.reset();
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn batch_stats() {
+        let m = Metrics::new();
+        m.record_batch(4);
+        m.record_batch(8);
+        assert!((m.mean_batch_size() - 6.0).abs() < 1e-9);
+        assert!(m.report().contains("batches: 2"));
+    }
+}

@@ -1,0 +1,36 @@
+//! S9 — The coordinator: the "external processor" of Fig. 5 as a service.
+//!
+//! §III: "the FGP can be easily attached to an existing system as an
+//! accelerator or a co-processor" — this module is that existing system.
+//! It owns the request path end to end:
+//!
+//! * [`backend`] — pluggable message-update engines: the cycle-accurate
+//!   FGP simulator, the f64 golden rules, and the PJRT/XLA artifacts
+//!   (single and batched);
+//! * [`batcher`] — dynamic batching with a max-batch / max-wait policy
+//!   (amortizes PJRT dispatch across requests, the classic serving
+//!   trade-off);
+//! * [`server`] — worker threads pulling from an mpsc queue, a cloneable
+//!   client handle, graceful shutdown;
+//! * [`device`] — the raw Fig. 5 command protocol (`load_program`,
+//!   `start_program`, status replies) behind a thread, for host-style
+//!   integration;
+//! * [`metrics`] — latency histograms and throughput counters.
+//!
+//! No tokio in the vendored crate set: the runtime is std threads +
+//! channels, which for a CPU-bound accelerator front-end is exactly as
+//! effective and considerably simpler.
+
+pub mod backend;
+pub mod batcher;
+pub mod device;
+pub mod farm;
+pub mod metrics;
+pub mod server;
+
+pub use backend::{Backend, BackendKind, CnRequestData};
+pub use batcher::{BatchPolicy, Batcher};
+pub use device::FgpDevice;
+pub use farm::{FgpFarm, RoutePolicy};
+pub use metrics::{Histogram, Metrics};
+pub use server::{CnClient, CnServer, ServerConfig};

@@ -1,0 +1,245 @@
+//! The compound-node update server: queue → batcher → backend → reply.
+//!
+//! A [`CnServer`] owns a worker thread driving one [`Backend`]; clients
+//! hold a cheap cloneable [`CnClient`] and submit requests either
+//! synchronously ([`CnClient::update`]) or asynchronously
+//! ([`CnClient::submit`] + the returned receiver). Shutdown is by
+//! dropping all clients — the worker drains the queue, then exits.
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::gmp::message::GaussMessage;
+
+use super::backend::{Backend, CnRequestData};
+use super::batcher::BatchPolicy;
+use super::metrics::Metrics;
+
+/// Server configuration.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerConfig {
+    pub batch: BatchPolicy,
+}
+
+struct Envelope {
+    data: CnRequestData,
+    enqueued: Instant,
+    resp: Sender<Result<GaussMessage>>,
+}
+
+enum ServerMsg {
+    Req(Envelope),
+    /// Explicit stop marker so shutdown does not depend on every client
+    /// clone being dropped first.
+    Stop,
+}
+
+/// Cloneable client handle.
+#[derive(Clone)]
+pub struct CnClient {
+    tx: Sender<ServerMsg>,
+    metrics: Arc<Metrics>,
+}
+
+impl CnClient {
+    /// Fire a request; the reply arrives on the returned receiver.
+    pub fn submit(&self, data: CnRequestData) -> Receiver<Result<GaussMessage>> {
+        let (rtx, rrx) = mpsc::channel();
+        let env = Envelope { data, enqueued: Instant::now(), resp: rtx };
+        if self.tx.send(ServerMsg::Req(env)).is_err() {
+            // server gone: the receiver will see a disconnect
+        }
+        rrx
+    }
+
+    /// Synchronous update.
+    pub fn update(&self, data: CnRequestData) -> Result<GaussMessage> {
+        self.submit(data)
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server shut down"))?
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+}
+
+/// The server: one worker thread around a backend.
+///
+/// The backend is built *inside* the worker thread (PJRT clients are
+/// thread-affine), so `start` takes a factory. Construction failure is
+/// reported synchronously.
+pub struct CnServer {
+    handle: Option<JoinHandle<()>>,
+    client: CnClient,
+}
+
+impl CnServer {
+    pub fn start<F>(factory: F, config: ServerConfig) -> Result<Self>
+    where
+        F: FnOnce() -> Result<Box<dyn Backend>> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<ServerMsg>();
+        let metrics = Arc::new(Metrics::new());
+        let worker_metrics = Arc::clone(&metrics);
+        let (boot_tx, boot_rx) = mpsc::channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("fgp-cn-server".into())
+            .spawn(move || {
+                let mut backend = match factory() {
+                    Ok(b) => {
+                        let _ = boot_tx.send(Ok(()));
+                        b
+                    }
+                    Err(e) => {
+                        let _ = boot_tx.send(Err(e));
+                        return;
+                    }
+                };
+                // batching loop with explicit stop handling (same policy
+                // as `Batcher`, plus the Stop marker)
+                let mut stopping = false;
+                while !stopping {
+                    let first = match rx.recv() {
+                        Ok(ServerMsg::Req(env)) => env,
+                        Ok(ServerMsg::Stop) | Err(_) => break,
+                    };
+                    let mut batch = vec![first];
+                    let deadline = Instant::now() + config.batch.max_wait;
+                    while batch.len() < config.batch.max_batch {
+                        let now = Instant::now();
+                        if now >= deadline {
+                            break;
+                        }
+                        match rx.recv_timeout(deadline - now) {
+                            Ok(ServerMsg::Req(env)) => batch.push(env),
+                            Ok(ServerMsg::Stop) => {
+                                stopping = true;
+                                break;
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                    let now = Instant::now();
+                    worker_metrics.record_batch(batch.len());
+                    for env in &batch {
+                        worker_metrics.queue_wait.record(now - env.enqueued);
+                    }
+                    let datas: Vec<CnRequestData> =
+                        batch.iter().map(|e| e.data.clone()).collect();
+                    let results = backend.cn_update_batch(&datas);
+                    for (env, result) in batch.into_iter().zip(results) {
+                        match &result {
+                            Ok(_) => {
+                                worker_metrics
+                                    .completed
+                                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            }
+                            Err(_) => {
+                                worker_metrics
+                                    .failed
+                                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            }
+                        }
+                        worker_metrics.latency.record(env.enqueued.elapsed());
+                        let _ = env.resp.send(result);
+                    }
+                }
+            })
+            .expect("spawn server thread");
+        boot_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server thread died during boot"))??;
+        Ok(CnServer { handle: Some(handle), client: CnClient { tx, metrics } })
+    }
+
+    pub fn client(&self) -> CnClient {
+        self.client.clone()
+    }
+
+    /// Graceful shutdown: close the queue and join the worker (the Drop
+    /// impl does the same; this form just makes intent explicit).
+    pub fn shutdown(self) {}
+}
+
+impl Drop for CnServer {
+    fn drop(&mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = self.client.tx.send(ServerMsg::Stop);
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::GoldenBackend;
+    use crate::gmp::matrix::{c64, CMatrix};
+    use crate::testutil::Rng;
+
+    fn request(rng: &mut Rng, n: usize) -> CnRequestData {
+        CnRequestData {
+            x: GaussMessage::new(
+                (0..n).map(|_| c64::new(rng.normal(), rng.normal())).collect(),
+                CMatrix::random_psd(rng, n, 0.3),
+            ),
+            y: GaussMessage::new(
+                (0..n).map(|_| c64::new(rng.normal(), rng.normal())).collect(),
+                CMatrix::random_psd(rng, n, 0.3),
+            ),
+            a: CMatrix::random(rng, n, n),
+        }
+    }
+
+    #[test]
+    fn serves_sync_requests() {
+        let server =
+            CnServer::start(|| Ok(Box::new(GoldenBackend) as _), ServerConfig::default())
+                .unwrap();
+        let client = server.client();
+        let mut rng = Rng::new(1);
+        for _ in 0..8 {
+            let req = request(&mut rng, 4);
+            let out = client.update(req.clone()).unwrap();
+            let want =
+                crate::gmp::nodes::compound_observation(&req.x, &req.y, &req.a, false).unwrap();
+            assert!(out.dist(&want) < 1e-9);
+        }
+        assert_eq!(
+            client.metrics().completed.load(std::sync::atomic::Ordering::Relaxed),
+            8
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn serves_concurrent_submitters() {
+        let server =
+            CnServer::start(|| Ok(Box::new(GoldenBackend) as _), ServerConfig::default())
+                .unwrap();
+        let mut joins = Vec::new();
+        for t in 0..4 {
+            let client = server.client();
+            joins.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + t);
+                let rxs: Vec<_> =
+                    (0..16).map(|_| client.submit(request(&mut rng, 4))).collect();
+                for rx in rxs {
+                    rx.recv().unwrap().unwrap();
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let m = server.client();
+        assert_eq!(m.metrics().completed.load(std::sync::atomic::Ordering::Relaxed), 64);
+        assert!(m.metrics().mean_batch_size() >= 1.0);
+        server.shutdown();
+    }
+}

@@ -1,0 +1,530 @@
+//! The configurable systolic array (paper §II, Figs. 3–5).
+//!
+//! An n x n rectangular grid of `PEmult` cells plus a triangular
+//! `PEborder` extension. Values are computed bit-accurately in fixed
+//! point; cycle counts come from the wavefront timing model below.
+//!
+//! # Timing model
+//!
+//! Fixed by the paper:
+//! * a complex multiply occupies one `PEmult` for **4 cycles** (one real
+//!   multiplier + one real adder, Fig. 3); the adder is free in 2 of the
+//!   4 cycles, which is what lets `mms` fold its addition in at no cost;
+//! * the `PEborder` divider is a sequential radix-2 unit producing a
+//!   16-bit quotient in **4 cycles** (footnote 2); a complex division
+//!   needs |den|² (2 mults + add), 4 numerator mults, and two sequential
+//!   real divisions on the single divider: 2 + 2 + 2x4 = 12 cycles;
+//! * operands stream in skewed one cycle per row/column hop.
+//!
+//! Derived per-instruction counts (n = array size):
+//!
+//! * `mma`/`mms` (matrix): PE(i,j) executes its k-th MAC in cycles
+//!   `4k+i+j .. 4k+i+j+3`, so the array drains at `4n + 2(n-1)` cycles.
+//! * `mma`/`mms` (mean pipeline): one column of PEs, `4n + (n-1)`.
+//! * `fad`: n pivot steps over the doubled (2n x 2n+1) working set.
+//!   Pivot step k: pivot search on the border (`pivot_select`), one
+//!   complex division pipeline (latency `div_latency`, overlapped across
+//!   rows), then the row-update wavefront: `2n-1-k` rows, each needing
+//!   `ceil((2n+1-k)/n)` column passes of 4 cycles, with `rows_in_flight`
+//!   rows pipelined through the grid concurrently.
+//! * `smm`: the store port moves `port_words` complex words per cycle.
+//!
+//! With the default parameters the n=4 compound-node update measures
+//! ~260 cycles — the paper's Table II number (see EXPERIMENTS.md E1 for
+//! the exact measured value).
+
+use crate::fixed::{CFix, QFormat, Radix2Divider};
+
+/// Array timing parameters (see module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct TimingModel {
+    /// Cycles per complex multiply on a PEmult (paper: 4).
+    pub cmul: u64,
+    /// Latency of a complex division on the PEborder (derived: 12).
+    pub div_latency: u64,
+    /// Border cycles to select a pivot row (abs-compare wavefront).
+    pub pivot_select: u64,
+    /// Rows concurrently in flight through the elimination wavefront.
+    pub rows_in_flight: u64,
+    /// Complex words per cycle through the store port.
+    pub port_words: u64,
+    /// Instruction fetch+decode cycles.
+    pub fetch: u64,
+}
+
+impl Default for TimingModel {
+    fn default() -> Self {
+        TimingModel {
+            cmul: CFix::MUL_CYCLES,
+            div_latency: 2 + 2 + 2 * Radix2Divider::default_latency(),
+            pivot_select: 2,
+            rows_in_flight: 2,
+            port_words: 2,
+            fetch: 1,
+        }
+    }
+}
+
+impl TimingModel {
+    /// Cycles for an n x n matrix `mma`/`mms` pass.
+    pub fn matrix_pass(&self, n: usize) -> u64 {
+        self.cmul * n as u64 + 2 * (n as u64 - 1)
+    }
+
+    /// Cycles for a mean-pipeline (vector) pass.
+    pub fn vector_pass(&self, n: usize) -> u64 {
+        self.cmul * n as u64 + (n as u64 - 1)
+    }
+
+    /// Cycles for the Faddeev pass over the doubled matrix (n pivots).
+    pub fn faddeev_pass(&self, n: usize) -> u64 {
+        let n = n as u64;
+        let mut total = 0;
+        for k in 0..n {
+            let rows = 2 * n - 1 - k; // rows below the pivot
+            let cols = 2 * n + 1 - k; // active columns incl. mean column
+            let passes_per_row = cols.div_ceil(n);
+            let update = (rows * passes_per_row * self.cmul).div_ceil(self.rows_in_flight);
+            total += self.pivot_select + self.div_latency + update;
+        }
+        // final drain of the wavefront through the grid
+        total + 2 * n + 1
+    }
+
+    /// Cycles for `smm` (store n x n matrix + n mean words).
+    pub fn store_pass(&self, n: usize) -> u64 {
+        ((n * n + n) as u64).div_ceil(self.port_words)
+    }
+
+    /// Cycles for the benchmark compound-node update (fetch + 4 datapath
+    /// + store) — the quantity Table II reports.
+    pub fn compound_node_cycles(&self, n: usize) -> u64 {
+        5 * self.fetch
+            + self.matrix_pass(n)            // mma: T1
+            + self.matrix_pass(n)            // mms: G
+            + self.vector_pass(n)            // mms v: innovation
+            + self.faddeev_pass(n)           // fad
+            + self.store_pass(n) // smm
+    }
+}
+
+/// Which register plane a result landed in (§II accumulator chaining).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Plane {
+    /// StateReg bank written by `mma` (accum mode).
+    Accum,
+    /// StateReg bank written by `mms` (shift mode) and `fad`.
+    Shift,
+}
+
+/// The systolic array: value planes + timing.
+#[derive(Clone, Debug)]
+pub struct SystolicArray {
+    pub n: usize,
+    pub fmt: QFormat,
+    pub timing: TimingModel,
+    /// Matrix planes (row-major n x n).
+    pub accum: Vec<CFix>,
+    pub shift: Vec<CFix>,
+    /// Mean-pipeline planes (n).
+    pub vaccum: Vec<CFix>,
+    pub vshift: Vec<CFix>,
+    /// Last-written planes (what `smm` commits).
+    pub last_mat: Plane,
+    pub last_vec: Plane,
+    /// Reusable output/working buffers (perf: zero steady-state alloc).
+    scratch_mat: Vec<CFix>,
+    scratch_vec: Vec<CFix>,
+    scratch_w: Vec<CFix>,
+}
+
+/// A matrix operand streamed into the array (already transposed/negated
+/// by the Transpose/Select units if requested).
+pub struct MatOperand<'a> {
+    pub data: &'a [CFix],
+    pub herm: bool,
+}
+
+impl SystolicArray {
+    pub fn new(n: usize, fmt: QFormat, timing: TimingModel) -> Self {
+        SystolicArray {
+            n,
+            fmt,
+            timing,
+            accum: vec![CFix::zero(fmt); n * n],
+            shift: vec![CFix::zero(fmt); n * n],
+            vaccum: vec![CFix::zero(fmt); n],
+            vshift: vec![CFix::zero(fmt); n],
+            last_mat: Plane::Accum,
+            last_vec: Plane::Accum,
+            scratch_mat: vec![CFix::zero(fmt); n * n],
+            scratch_vec: vec![CFix::zero(fmt); n],
+            scratch_w: vec![CFix::zero(fmt); 2 * n * (2 * n + 1)],
+        }
+    }
+
+    fn at(data: &[CFix], n: usize, i: usize, j: usize, herm: bool) -> CFix {
+        if herm {
+            data[j * n + i].conj()
+        } else {
+            data[i * n + j]
+        }
+    }
+
+    /// `mma` (matrix): accum = (∓) opA * opB. Returns cycles.
+    pub fn mma_matrix(&mut self, a: MatOperand, b: MatOperand, neg: bool) -> u64 {
+        let n = self.n;
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = CFix::zero(self.fmt);
+                for k in 0..n {
+                    let prod = Self::at(a.data, n, i, k, a.herm)
+                        .mul(Self::at(b.data, n, k, j, b.herm));
+                    acc = acc.add(prod);
+                }
+                self.scratch_mat[i * n + j] = if neg { acc.neg() } else { acc };
+            }
+        }
+        std::mem::swap(&mut self.accum, &mut self.scratch_mat);
+        self.last_mat = Plane::Accum;
+        self.timing.matrix_pass(n)
+    }
+
+    /// `mma` (mean pipeline): vaccum = (∓) opA * vec.
+    pub fn mma_vector(&mut self, a: MatOperand, vec: &[CFix], neg: bool) -> u64 {
+        let n = self.n;
+        for i in 0..n {
+            let mut acc = CFix::zero(self.fmt);
+            for k in 0..n {
+                acc = acc.add(Self::at(a.data, n, i, k, a.herm).mul(vec[k]));
+            }
+            self.scratch_vec[i] = if neg { acc.neg() } else { acc };
+        }
+        std::mem::swap(&mut self.vaccum, &mut self.scratch_vec);
+        self.last_vec = Plane::Accum;
+        self.timing.vector_pass(n)
+    }
+
+    /// `mms` (matrix): shift = (∓ addend) + opA * opB.
+    pub fn mms_matrix(&mut self, a: MatOperand, b: MatOperand, addend: &[CFix], neg: bool) -> u64 {
+        let n = self.n;
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = addend[i * n + j];
+                if neg {
+                    acc = acc.neg();
+                }
+                for k in 0..n {
+                    acc = acc.add(
+                        Self::at(a.data, n, i, k, a.herm).mul(Self::at(b.data, n, k, j, b.herm)),
+                    );
+                }
+                self.scratch_mat[i * n + j] = acc;
+            }
+        }
+        std::mem::swap(&mut self.shift, &mut self.scratch_mat);
+        self.last_mat = Plane::Shift;
+        self.timing.matrix_pass(n)
+    }
+
+    /// `mms` (mean pipeline): vshift = (∓ addend) + opA * vec.
+    pub fn mms_vector(&mut self, a: MatOperand, vec: &[CFix], addend: &[CFix], neg: bool) -> u64 {
+        let n = self.n;
+        for i in 0..n {
+            let mut acc = addend[i];
+            if neg {
+                acc = acc.neg();
+            }
+            for k in 0..n {
+                acc = acc.add(Self::at(a.data, n, i, k, a.herm).mul(vec[k]));
+            }
+            self.scratch_vec[i] = acc;
+        }
+        std::mem::swap(&mut self.vshift, &mut self.scratch_vec);
+        self.last_vec = Plane::Shift;
+        self.timing.vector_pass(n)
+    }
+
+    /// `fad`: Faddeev elimination over the doubled working set
+    ///
+    /// ```text
+    ///   [[ G (n x n),  B (n x n), y (n) ],
+    ///    [ C (n x n),  D (n x n), x (n) ]]
+    /// ```
+    ///
+    /// Triangularizes the G-block columns with **partial pivoting** (row
+    /// swaps among the G rows — the PEmult swap mode), eliminating all
+    /// rows below each pivot; the Schur complement `D - C G^{-1} B` lands
+    /// in the shift plane and `x - C G^{-1} y` in the vshift plane.
+    /// Divisions run through the PEborder's radix-2 divider model.
+    #[allow(clippy::too_many_arguments)]
+    pub fn faddeev(
+        &mut self,
+        g: &[CFix],
+        b: MatOperand,
+        c: &[CFix],
+        d: &[CFix],
+        y: &[CFix],
+        x: &[CFix],
+    ) -> u64 {
+        let n = self.n;
+        let rows = 2 * n;
+        let cols = 2 * n + 1;
+        let mut w = std::mem::take(&mut self.scratch_w);
+        w.resize(rows * cols, CFix::zero(self.fmt));
+        for i in 0..n {
+            for j in 0..n {
+                w[i * cols + j] = g[i * n + j];
+                w[i * cols + n + j] = Self::at(b.data, n, i, j, b.herm);
+                w[(n + i) * cols + j] = c[i * n + j];
+                w[(n + i) * cols + n + j] = d[i * n + j];
+            }
+            w[i * cols + 2 * n] = y[i];
+            w[(n + i) * cols + 2 * n] = x[i];
+        }
+
+        for k in 0..n {
+            // PEborder pivot search: max |.|^2 among remaining G rows.
+            let mut piv = k;
+            let mut pmax = w[k * cols + k].abs2();
+            for i in k + 1..n {
+                let v = w[i * cols + k].abs2();
+                if v.raw > pmax.raw {
+                    piv = i;
+                    pmax = v;
+                }
+            }
+            if piv != k {
+                // PEmult swap mode: exchange the two rows.
+                for j in 0..cols {
+                    w.swap(k * cols + j, piv * cols + j);
+                }
+            }
+            let pivot = w[k * cols + k];
+            // Eliminate every row below the pivot (including the D rows).
+            for i in k + 1..rows {
+                let lead = w[i * cols + k];
+                if lead.is_zero() {
+                    continue;
+                }
+                let f = lead.div(pivot); // PEborder complex division
+                for j in k..cols {
+                    let sub = f.mul(w[k * cols + j]);
+                    w[i * cols + j] = w[i * cols + j].sub(sub);
+                }
+            }
+        }
+
+        for i in 0..n {
+            for j in 0..n {
+                self.shift[i * n + j] = w[(n + i) * cols + n + j];
+            }
+            self.vshift[i] = w[(n + i) * cols + 2 * n];
+        }
+        self.scratch_w = w;
+        self.last_mat = Plane::Shift;
+        self.last_vec = Plane::Shift;
+        self.timing.faddeev_pass(n)
+    }
+
+    /// The matrix plane `smm` would store.
+    pub fn result_matrix(&self) -> &[CFix] {
+        match self.last_mat {
+            Plane::Accum => &self.accum,
+            Plane::Shift => &self.shift,
+        }
+    }
+
+    /// The mean plane `smm` would store.
+    pub fn result_vector(&self) -> &[CFix] {
+        match self.last_vec {
+            Plane::Accum => &self.vaccum,
+            Plane::Shift => &self.vshift,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gmp::matrix::{c64, CMatrix};
+    use crate::testutil::{proptest_cases, Rng};
+
+    const FMT: QFormat = QFormat::q5_10();
+
+    fn to_fix(m: &CMatrix) -> Vec<CFix> {
+        let mut v = Vec::new();
+        for i in 0..m.rows {
+            for j in 0..m.cols {
+                v.push(CFix::from_f64(m[(i, j)].re, m[(i, j)].im, FMT));
+            }
+        }
+        v
+    }
+
+    fn from_fix(v: &[CFix], n: usize) -> CMatrix {
+        let mut m = CMatrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let (re, im) = v[i * n + j].to_c64();
+                m[(i, j)] = c64::new(re, im);
+            }
+        }
+        m
+    }
+
+    fn array(n: usize) -> SystolicArray {
+        SystolicArray::new(n, FMT, TimingModel::default())
+    }
+
+    #[test]
+    fn mma_matches_golden_matmul() {
+        proptest_cases(40, |rng| {
+            let n = 4;
+            let a = CMatrix::random(rng, n, n).scale(0.5);
+            let b = CMatrix::random(rng, n, n).scale(0.5);
+            let mut arr = array(n);
+            let fa = to_fix(&a);
+            let fb = to_fix(&b);
+            let cycles = arr.mma_matrix(
+                MatOperand { data: &fa, herm: false },
+                MatOperand { data: &fb, herm: false },
+                false,
+            );
+            assert_eq!(cycles, 22); // 4*4 + 2*3
+            let got = from_fix(&arr.accum, n);
+            let want = a.matmul(&b);
+            assert!(got.dist(&want) < 0.1, "dist {}", got.dist(&want));
+        });
+    }
+
+    #[test]
+    fn mma_hermitian_flag() {
+        let mut rng = Rng::new(5);
+        let n = 4;
+        let a = CMatrix::random(&mut rng, n, n).scale(0.5);
+        let b = CMatrix::random(&mut rng, n, n).scale(0.5);
+        let mut arr = array(n);
+        let fa = to_fix(&a);
+        let fb = to_fix(&b);
+        arr.mma_matrix(
+            MatOperand { data: &fa, herm: false },
+            MatOperand { data: &fb, herm: true },
+            false,
+        );
+        let got = from_fix(&arr.accum, n);
+        let want = a.matmul(&b.hermitian());
+        assert!(got.dist(&want) < 0.1);
+    }
+
+    #[test]
+    fn mms_negates_addend_not_product() {
+        let mut rng = Rng::new(6);
+        let n = 4;
+        let a = CMatrix::random(&mut rng, n, n).scale(0.4);
+        let b = CMatrix::random(&mut rng, n, n).scale(0.4);
+        let cmat = CMatrix::random(&mut rng, n, n).scale(0.4);
+        let mut arr = array(n);
+        let (fa, fb, fc) = (to_fix(&a), to_fix(&b), to_fix(&cmat));
+        arr.mms_matrix(
+            MatOperand { data: &fa, herm: false },
+            MatOperand { data: &fb, herm: false },
+            &fc,
+            true,
+        );
+        let got = from_fix(&arr.shift, n);
+        let want = a.matmul(&b).sub(&cmat);
+        assert!(got.dist(&want) < 0.1, "dist {}", got.dist(&want));
+    }
+
+    #[test]
+    fn faddeev_matches_golden_schur() {
+        proptest_cases(30, |rng| {
+            let n = 4;
+            // well-scaled PD g keeps fixed point accurate
+            let g = CMatrix::random_psd(rng, n, 1.0).scale(0.15);
+            let b = CMatrix::random(rng, n, n).scale(0.4);
+            let c = CMatrix::random(rng, n, n).scale(0.4);
+            let d = CMatrix::random(rng, n, n).scale(0.4);
+            let mut arr = array(n);
+            let (fg, fb, fc, fd) = (to_fix(&g), to_fix(&b), to_fix(&c), to_fix(&d));
+            let zero = vec![CFix::zero(FMT); n];
+            let cycles = arr.faddeev(
+                &fg,
+                MatOperand { data: &fb, herm: false },
+                &fc,
+                &fd,
+                &zero,
+                &zero,
+            );
+            assert!(cycles > 0);
+            let got = from_fix(&arr.shift, n);
+            let want = CMatrix::schur_direct(&g, &b, &c, &d).unwrap();
+            assert!(got.dist(&want) < 0.35, "dist {}", got.dist(&want));
+        });
+    }
+
+    #[test]
+    fn faddeev_needs_pivoting_on_zero_leading_entry() {
+        // g with a zero top-left entry but PD-after-permutation structure:
+        // without row swaps the first division would blow up.
+        let n = 2;
+        let mut g = CMatrix::zeros(2, 2);
+        g[(0, 1)] = c64::new(1.0, 0.0);
+        g[(1, 0)] = c64::new(1.0, 0.0);
+        let b = CMatrix::identity(2);
+        let c = CMatrix::identity(2);
+        let d = CMatrix::zeros(2, 2);
+        let mut arr = array(n);
+        let (fg, fb, fc, fd) = (to_fix(&g), to_fix(&b), to_fix(&c), to_fix(&d));
+        let zero = vec![CFix::zero(FMT); n];
+        arr.faddeev(&fg, MatOperand { data: &fb, herm: false }, &fc, &fd, &zero, &zero);
+        let got = from_fix(&arr.shift, n);
+        // D - C g^{-1} B = -g^{-1} = -[[0,1],[1,0]]
+        assert!((got[(0, 1)].re + 1.0).abs() < 0.01, "{got}");
+        assert!((got[(1, 0)].re + 1.0).abs() < 0.01, "{got}");
+    }
+
+    #[test]
+    fn compound_node_cycle_count_near_paper() {
+        let t = TimingModel::default();
+        let cycles = t.compound_node_cycles(4);
+        let paper = crate::paper::FGP_CN_CYCLES as f64;
+        let rel = (cycles as f64 - paper).abs() / paper;
+        assert!(
+            rel < 0.10,
+            "CN cycles {cycles} should be within 10% of the paper's 260"
+        );
+    }
+
+    #[test]
+    fn cycle_counts_scale_with_n() {
+        let t = TimingModel::default();
+        let mut prev = 0;
+        for n in [2usize, 4, 6, 8] {
+            let c = t.compound_node_cycles(n);
+            assert!(c > prev, "cycles must grow with n");
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn planes_track_last_writer() {
+        let mut arr = array(2);
+        let id = to_fix(&CMatrix::identity(2));
+        arr.mma_matrix(
+            MatOperand { data: &id, herm: false },
+            MatOperand { data: &id, herm: false },
+            false,
+        );
+        assert_eq!(arr.last_mat, Plane::Accum);
+        let z = vec![CFix::zero(FMT); 4];
+        arr.mms_matrix(
+            MatOperand { data: &id, herm: false },
+            MatOperand { data: &id, herm: false },
+            &z,
+            false,
+        );
+        assert_eq!(arr.last_mat, Plane::Shift);
+    }
+}

@@ -1,0 +1,255 @@
+//! FGP memories (Fig. 5): program memory, message memory, state memory.
+//!
+//! A message-memory slot holds one Gaussian message: an n x n complex
+//! covariance (or weight) matrix plus its n-element mean column, in
+//! fixed-point. At the paper's configuration (n = 4, 16-bit words, 64
+//! kbit) this is 640 bits/slot, so ~50 usable slots alongside the PM —
+//! the reason long chains stream their observations (see compiler docs).
+
+use crate::fixed::{CFix, QFormat};
+use crate::gmp::matrix::{c64, CMatrix};
+use crate::gmp::message::GaussMessage;
+use crate::isa::MemoryImage;
+
+/// One message slot: matrix part + mean column.
+#[derive(Clone, Debug)]
+pub struct MsgSlot {
+    /// Row-major n x n matrix part.
+    pub v: Vec<CFix>,
+    /// Mean column (n).
+    pub m: Vec<CFix>,
+}
+
+impl MsgSlot {
+    pub fn zero(n: usize, fmt: QFormat) -> Self {
+        MsgSlot { v: vec![CFix::zero(fmt); n * n], m: vec![CFix::zero(fmt); n] }
+    }
+
+    /// Quantize a golden message into the slot format.
+    pub fn from_message(msg: &GaussMessage, fmt: QFormat) -> Self {
+        let n = msg.dim();
+        let mut v = Vec::with_capacity(n * n);
+        for i in 0..n {
+            for j in 0..n {
+                let z = msg.cov[(i, j)];
+                v.push(CFix::from_f64(z.re, z.im, fmt));
+            }
+        }
+        let m = msg.mean.iter().map(|z| CFix::from_f64(z.re, z.im, fmt)).collect();
+        MsgSlot { v, m }
+    }
+
+    /// Read back as a golden message (dequantize).
+    pub fn to_message(&self, n: usize) -> GaussMessage {
+        let mut cov = CMatrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let (re, im) = self.v[i * n + j].to_c64();
+                cov[(i, j)] = c64::new(re, im);
+            }
+        }
+        let mean = self
+            .m
+            .iter()
+            .map(|z| {
+                let (re, im) = z.to_c64();
+                c64::new(re, im)
+            })
+            .collect();
+        GaussMessage::new(mean, cov)
+    }
+
+    /// Storage size in bits (16-bit real/imag words at the given format).
+    pub fn bits(n: usize, fmt: QFormat) -> usize {
+        (n * n + n) * 2 * fmt.width() as usize
+    }
+}
+
+/// Message memory: addressable slots behind the Data-in/out ports.
+#[derive(Clone, Debug)]
+pub struct MessageMemory {
+    pub n: usize,
+    pub fmt: QFormat,
+    slots: Vec<MsgSlot>,
+}
+
+impl MessageMemory {
+    pub fn new(n: usize, fmt: QFormat, num_slots: usize) -> Self {
+        MessageMemory { n, fmt, slots: vec![MsgSlot::zero(n, fmt); num_slots] }
+    }
+
+    pub fn num_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total capacity in bits (compare against the 64-kbit budget).
+    pub fn bits(&self) -> usize {
+        self.slots.len() * MsgSlot::bits(self.n, self.fmt)
+    }
+
+    pub fn write(&mut self, slot: u8, data: MsgSlot) {
+        assert_eq!(data.v.len(), self.n * self.n);
+        assert_eq!(data.m.len(), self.n);
+        self.slots[slot as usize] = data;
+    }
+
+    /// Host-side store of a golden message (Data-in port).
+    pub fn write_message(&mut self, slot: u8, msg: &GaussMessage) {
+        assert_eq!(msg.dim(), self.n, "message dim mismatch");
+        self.write(slot, MsgSlot::from_message(msg, self.fmt));
+    }
+
+    pub fn read(&self, slot: u8) -> &MsgSlot {
+        &self.slots[slot as usize]
+    }
+
+    /// Host-side read-back (Data-out port).
+    pub fn read_message(&self, slot: u8) -> GaussMessage {
+        self.slots[slot as usize].to_message(self.n)
+    }
+}
+
+/// State memory: the per-node A matrices (Fig. 5 "Mem A").
+#[derive(Clone, Debug)]
+pub struct StateMemory {
+    pub n: usize,
+    pub fmt: QFormat,
+    slots: Vec<Vec<CFix>>,
+}
+
+impl StateMemory {
+    pub fn new(n: usize, fmt: QFormat, num_slots: usize) -> Self {
+        StateMemory { n, fmt, slots: vec![vec![CFix::zero(fmt); n * n]; num_slots] }
+    }
+
+    pub fn num_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn bits(&self) -> usize {
+        self.slots.len() * self.n * self.n * 2 * self.fmt.width() as usize
+    }
+
+    pub fn write_matrix(&mut self, slot: u8, a: &CMatrix) {
+        assert_eq!((a.rows, a.cols), (self.n, self.n), "state matrix must be n x n");
+        let mut v = Vec::with_capacity(self.n * self.n);
+        for i in 0..self.n {
+            for j in 0..self.n {
+                let z = a[(i, j)];
+                v.push(CFix::from_f64(z.re, z.im, self.fmt));
+            }
+        }
+        self.slots[slot as usize] = v;
+    }
+
+    pub fn read(&self, slot: u8) -> &[CFix] {
+        &self.slots[slot as usize]
+    }
+}
+
+/// Program memory: 64-bit instruction words plus the prg directory.
+#[derive(Clone, Debug, Default)]
+pub struct ProgramMemory {
+    pub words: Vec<u64>,
+}
+
+impl ProgramMemory {
+    /// Load a binary image (the `load_program` command's payload).
+    pub fn load(&mut self, image: &MemoryImage) -> Result<usize, crate::isa::IsaError> {
+        let program = crate::isa::Program::from_image(image)?;
+        program.validate()?;
+        self.words = program.instrs.iter().map(|i| i.encode()).collect();
+        Ok(self.words.len())
+    }
+
+    pub fn bits(&self) -> usize {
+        self.words.len() * 64
+    }
+
+    pub fn fetch(&self, addr: usize) -> Option<u64> {
+        self.words.get(addr).copied()
+    }
+
+    /// Directory lookup: PM address right after the `prg id` marker.
+    pub fn start_of(&self, id: u8) -> Option<usize> {
+        let want = crate::isa::Instr::Prg { id }.encode();
+        self.words.iter().position(|w| *w == want).map(|a| a + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gmp::matrix::CMatrix;
+    use crate::testutil::{proptest_cases, Rng};
+
+    const FMT: QFormat = QFormat::q5_10();
+
+    #[test]
+    fn message_roundtrip_within_quantization() {
+        proptest_cases(50, |rng| {
+            let n = 4;
+            let msg = GaussMessage::new(
+                (0..n).map(|_| c64::new(rng.range(-3.0, 3.0), rng.range(-3.0, 3.0))).collect(),
+                CMatrix::random_psd(rng, n, 0.2).scale(0.2),
+            );
+            let slot = MsgSlot::from_message(&msg, FMT);
+            let back = slot.to_message(n);
+            // dist is Frobenius over n^2 entries: half-LSB/component error
+            // accumulates to at most n * resolution
+            let tol = n as f64 * FMT.resolution();
+            assert!(back.dist(&msg) <= tol, "dist {}", back.dist(&msg));
+        });
+    }
+
+    #[test]
+    fn paper_slot_budget() {
+        // n=4, 16-bit: 640 bits/slot; 64 kbit feeds ~100 slots without PM.
+        assert_eq!(MsgSlot::bits(4, FMT), 640);
+        let mem = MessageMemory::new(4, FMT, 48);
+        assert!(mem.bits() <= 64 * 1024, "48 slots fit the 64-kbit budget");
+    }
+
+    #[test]
+    fn state_memory_roundtrip() {
+        let mut rng = Rng::new(3);
+        let mut sm = StateMemory::new(4, FMT, 4);
+        let a = CMatrix::random(&mut rng, 4, 4);
+        sm.write_matrix(2, &a);
+        let v = sm.read(2);
+        for i in 0..4 {
+            for j in 0..4 {
+                let (re, im) = v[i * 4 + j].to_c64();
+                assert!((re - a[(i, j)].re).abs() <= FMT.resolution());
+                assert!((im - a[(i, j)].im).abs() <= FMT.resolution());
+            }
+        }
+    }
+
+    #[test]
+    fn program_memory_load_and_directory() {
+        use crate::isa::{Instr, Program};
+        let p = Program::new(vec![
+            Instr::Prg { id: 1 },
+            Instr::Smm { dst: 0 },
+            Instr::Halt,
+            Instr::Prg { id: 7 },
+            Instr::Smm { dst: 1 },
+            Instr::Halt,
+        ]);
+        let mut pm = ProgramMemory::default();
+        let n = pm.load(&p.to_image()).unwrap();
+        assert_eq!(n, 6);
+        assert_eq!(pm.start_of(1), Some(1));
+        assert_eq!(pm.start_of(7), Some(4));
+        assert_eq!(pm.start_of(3), None);
+        assert!(pm.bits() <= 64 * 1024);
+    }
+
+    #[test]
+    fn corrupt_image_rejected() {
+        let mut pm = ProgramMemory::default();
+        let img = MemoryImage { bytes: vec![1, 2, 3] };
+        assert!(pm.load(&img).is_err());
+    }
+}

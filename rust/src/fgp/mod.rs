@@ -1,0 +1,39 @@
+//! S5 — The FGP: a cycle-accurate simulator of the paper's processor.
+//!
+//! Substitutes for the UMC180 silicon (see DESIGN.md). The model is
+//! *bit-accurate* in value (every arithmetic operation goes through the
+//! [`crate::fixed`] fixed-point types, including the sequential radix-2
+//! divider and the saturation behaviour) and *cycle-accurate* at the
+//! wavefront level (per-instruction cycle counts derive from the systolic
+//! dataflow of §II with the paper's fixed latencies: 4-cycle complex
+//! multiply on one real multiplier per PEmult, 4-cycle radix-2 divider in
+//! the PEborder; see [`array::TimingModel`]).
+//!
+//! Structure mirrors Fig. 5:
+//! * [`mem`] — program memory, message memory, state memory;
+//! * [`array`] — the systolic array (rectangular PEmult grid + triangular
+//!   PEborder extension) with its accumulate/shift planes;
+//! * [`processor`] — instruction fetch/decode, the FSM, the command
+//!   interface (`load_program` / `start_program` / status replies) and the
+//!   Data-in/out ports.
+//!
+//! # Input-scaling contract
+//!
+//! Like any 16-bit fixed-point signal chain, the device computes
+//! accurately only for *block-scaled* operands: covariances ≲ 1 (well
+//! conditioned, smallest eigenvalue ≫ 1 LSB), state-matrix entries ≲ 1,
+//! means within ±1. Within that envelope the Q5.10 datapath tracks the
+//! f64 golden rules to ~1e-2; outside it the Faddeev elimination's
+//! intermediates can reach the saturation rails, exactly as the silicon
+//! would. The host (`crate::coordinator` / `crate::apps`) owns the
+//! scaling, the same division of labour the paper's §IV flow implies.
+
+pub mod array;
+pub mod mem;
+pub mod processor;
+pub mod trace;
+
+pub use array::{SystolicArray, TimingModel};
+pub use mem::{MessageMemory, MsgSlot, ProgramMemory, StateMemory};
+pub use processor::{Fgp, FgpConfig, FgpError, RunStats};
+pub use trace::{Profiler, TraceRecord};

@@ -1,0 +1,687 @@
+//! The FGP processor: FSM, instruction issue, command interface (Fig. 5).
+//!
+//! "An instruction is fetched from the PM, decoded and forwarded to a
+//! finite state machine which generates the necessary control signals for
+//! the PEs as well as for the Transpose-, Select- and Mask-unit." The FSM
+//! here executes one instruction at a time against the [`SystolicArray`],
+//! accumulating the cycle count the silicon would take.
+//!
+//! ## Command interface (§III)
+//!
+//! "The FGP can be controlled from an external processor via a set of
+//! commands. Each command gets replied by a status message." —
+//! [`Command`]/[`Reply`] implement that contract; the L3 coordinator
+//! (`crate::coordinator`) drives it, including streaming observations
+//! into the message memory between sections (the Data-in port).
+
+use crate::fixed::QFormat;
+use crate::gmp::matrix::CMatrix;
+use crate::gmp::message::GaussMessage;
+use crate::isa::{Instr, IsaError, MemoryImage, OperandSrc, ACC};
+
+use super::array::{MatOperand, SystolicArray, TimingModel};
+use super::mem::{MessageMemory, MsgSlot, ProgramMemory, StateMemory};
+
+/// Static configuration (the synthesis parameters of §V).
+#[derive(Clone, Copy, Debug)]
+pub struct FgpConfig {
+    /// State-matrix size (paper: 4).
+    pub n: usize,
+    /// Fixed-point format (paper: 16-bit datapath).
+    pub fmt: QFormat,
+    /// Message-memory slots.
+    pub msg_slots: usize,
+    /// State-memory slots.
+    pub state_slots: usize,
+    pub timing: TimingModel,
+}
+
+impl Default for FgpConfig {
+    fn default() -> Self {
+        FgpConfig {
+            n: crate::paper::N,
+            fmt: QFormat::q5_10(),
+            msg_slots: 48,
+            state_slots: 16,
+            timing: TimingModel::default(),
+        }
+    }
+}
+
+/// Errors the processor can raise.
+#[derive(Debug, thiserror::Error)]
+pub enum FgpError {
+    #[error("isa error: {0}")]
+    Isa(#[from] IsaError),
+    #[error("no program with id {0} loaded")]
+    NoSuchProgram(u8),
+    #[error("slot {0} out of range")]
+    BadSlot(u8),
+    #[error("datapath error at PM[{addr}]: {msg}")]
+    Datapath { addr: usize, msg: String },
+    #[error("processor is busy")]
+    Busy,
+}
+
+/// FSM states (Fig. 5: "state transitions are triggered from external
+/// commands").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FsmState {
+    Idle,
+    Running,
+    Done,
+}
+
+/// External-processor commands (§III).
+#[derive(Clone, Debug)]
+pub enum Command {
+    /// Load one or multiple programs into the PM.
+    LoadProgram(MemoryImage),
+    /// Start program `id` from the PM.
+    StartProgram { id: u8 },
+    /// Write a message into message memory (Data-in port).
+    WriteMessage { slot: u8, msg: GaussMessage },
+    /// Write a state matrix (Mem-A port).
+    WriteState { slot: u8, a: CMatrix },
+    /// Read a message back (Data-out port).
+    ReadMessage { slot: u8 },
+    /// Query processor status.
+    Status,
+}
+
+/// Status replies (§III: "Each command gets replied by a status message").
+#[derive(Clone, Debug)]
+pub enum Reply {
+    Ok,
+    Loaded { instrs: usize },
+    Finished(RunStats),
+    Message(GaussMessage),
+    Status { state: FsmState, cycles: u64 },
+    Error(String),
+}
+
+/// Cycle/instruction statistics for one program run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RunStats {
+    pub cycles: u64,
+    pub instructions: u64,
+    /// Datapath-only cycles (excludes fetch and store).
+    pub datapath_cycles: u64,
+    /// Loop iterations executed (sections processed).
+    pub sections: u64,
+}
+
+/// Host feed: called once before each section so the external processor
+/// can stream the section's observation(s) and state matrix into the
+/// shared slots (see compiler docs on streaming). Return `false` to stop
+/// after the current data (end of stream).
+pub trait HostFeed {
+    fn feed(&mut self, section: usize, mem: &mut MessageMemory, states: &mut StateMemory) -> bool;
+}
+
+/// A no-op feed for programs whose inputs are fully preloaded.
+pub struct NoFeed;
+
+impl HostFeed for NoFeed {
+    fn feed(&mut self, _: usize, _: &mut MessageMemory, _: &mut StateMemory) -> bool {
+        true
+    }
+}
+
+impl<F> HostFeed for F
+where
+    F: FnMut(usize, &mut MessageMemory, &mut StateMemory) -> bool,
+{
+    fn feed(&mut self, s: usize, m: &mut MessageMemory, st: &mut StateMemory) -> bool {
+        self(s, m, st)
+    }
+}
+
+/// Reusable operand staging buffers (the Select/Mask unit latches).
+///
+/// The hot path copies each operand once into these persistent buffers —
+/// semantically the operand registers at the array's edge — so steady-state
+/// execution performs no heap allocation (perf pass, EXPERIMENTS.md §Perf).
+#[derive(Default)]
+struct OpScratch {
+    a: Vec<crate::fixed::CFix>,
+    b: Vec<crate::fixed::CFix>,
+    c: Vec<crate::fixed::CFix>,
+    d: Vec<crate::fixed::CFix>,
+    y: Vec<crate::fixed::CFix>,
+    dm: Vec<crate::fixed::CFix>,
+}
+
+impl OpScratch {
+    fn load(dst: &mut Vec<crate::fixed::CFix>, src: &[crate::fixed::CFix]) {
+        dst.clear();
+        dst.extend_from_slice(src);
+    }
+}
+
+/// The FGP processor.
+pub struct Fgp {
+    pub config: FgpConfig,
+    pub pm: ProgramMemory,
+    pub msgmem: MessageMemory,
+    pub statemem: StateMemory,
+    pub array: SystolicArray,
+    state: FsmState,
+    total_cycles: u64,
+    scratch: OpScratch,
+}
+
+impl Fgp {
+    pub fn new(config: FgpConfig) -> Self {
+        Fgp {
+            pm: ProgramMemory::default(),
+            msgmem: MessageMemory::new(config.n, config.fmt, config.msg_slots),
+            statemem: StateMemory::new(config.n, config.fmt, config.state_slots),
+            array: SystolicArray::new(config.n, config.fmt, config.timing),
+            state: FsmState::Idle,
+            total_cycles: 0,
+            scratch: OpScratch::default(),
+            config,
+        }
+    }
+
+    pub fn state(&self) -> FsmState {
+        self.state
+    }
+
+    /// Lifetime cycle counter (all runs).
+    pub fn total_cycles(&self) -> u64 {
+        self.total_cycles
+    }
+
+    /// Execute one external command (the co-processor protocol).
+    pub fn execute_command(&mut self, cmd: Command) -> Reply {
+        match cmd {
+            Command::LoadProgram(image) => match self.pm.load(&image) {
+                Ok(n) => Reply::Loaded { instrs: n },
+                Err(e) => Reply::Error(format!("{e}")),
+            },
+            Command::StartProgram { id } => match self.run_program(id, &mut NoFeed) {
+                Ok(stats) => Reply::Finished(stats),
+                Err(e) => Reply::Error(format!("{e}")),
+            },
+            Command::WriteMessage { slot, msg } => {
+                if (slot as usize) >= self.msgmem.num_slots() {
+                    return Reply::Error(format!("{}", FgpError::BadSlot(slot)));
+                }
+                self.msgmem.write_message(slot, &msg);
+                Reply::Ok
+            }
+            Command::WriteState { slot, a } => {
+                if (slot as usize) >= self.statemem.num_slots() {
+                    return Reply::Error(format!("{}", FgpError::BadSlot(slot)));
+                }
+                self.statemem.write_matrix(slot, &a);
+                Reply::Ok
+            }
+            Command::ReadMessage { slot } => {
+                if (slot as usize) >= self.msgmem.num_slots() {
+                    return Reply::Error(format!("{}", FgpError::BadSlot(slot)));
+                }
+                Reply::Message(self.msgmem.read_message(slot))
+            }
+            Command::Status => Reply::Status { state: self.state, cycles: self.total_cycles },
+        }
+    }
+
+    /// Run program `id` to completion.
+    ///
+    /// `feed` is invoked with section index 0 before execution and again
+    /// after every `smm` commit (the FSM's store handshake is the Data-in
+    /// synchronization point): the host streams the *next* section's
+    /// observation/state into the shared slots. When `feed` returns
+    /// `false` the input stream is exhausted and the FSM exits the `loop`
+    /// at its next back-edge instead of re-entering the body.
+    pub fn run_program(&mut self, id: u8, feed: &mut dyn HostFeed) -> Result<RunStats, FgpError> {
+        self.run_program_profiled(id, feed, None)
+    }
+
+    /// [`Fgp::run_program`] with an optional instruction-level profiler
+    /// attached (see [`super::trace::Profiler`]).
+    pub fn run_program_profiled(
+        &mut self,
+        id: u8,
+        feed: &mut dyn HostFeed,
+        mut profiler: Option<&mut super::trace::Profiler>,
+    ) -> Result<RunStats, FgpError> {
+        if self.state == FsmState::Running {
+            return Err(FgpError::Busy);
+        }
+        let start = self.pm.start_of(id).ok_or(FgpError::NoSuchProgram(id))?;
+        self.state = FsmState::Running;
+        let mut stats = RunStats::default();
+        let mut exhausted = !feed.feed(0, &mut self.msgmem, &mut self.statemem);
+
+        // at most one active loop (the ISA has no nested loops)
+        let mut active: Option<(usize, u16)> = None; // (loop instr addr, remaining passes)
+        let mut pc = start;
+        loop {
+            let word = match self.pm.fetch(pc) {
+                Some(w) => w,
+                None => break, // ran off the PM: implicit halt
+            };
+            let instr = Instr::decode(word)?;
+            stats.instructions += 1;
+            // Program-control instructions are handled by the FSM's
+            // address generator with zero issue overhead (standard
+            // zero-overhead looping); only datapath instructions pay the
+            // fetch/decode cycle.
+            if instr.is_datapath() || matches!(instr, Instr::Smm { .. }) {
+                stats.cycles += self.config.timing.fetch;
+            }
+            match instr {
+                Instr::Halt | Instr::Prg { .. } => break, // next program starts
+                Instr::Loop { count, body } => {
+                    let body_start = pc - body as usize;
+                    match active {
+                        Some((laddr, ref mut remaining)) if laddr == pc => {
+                            if *remaining > 0 && !exhausted {
+                                *remaining -= 1;
+                                pc = body_start;
+                            } else {
+                                active = None;
+                                pc += 1;
+                            }
+                        }
+                        _ => {
+                            if count > 1 && !exhausted {
+                                // pass 1 ran inline; schedule passes 2..count
+                                active = Some((pc, count - 2));
+                                pc = body_start;
+                            } else {
+                                pc += 1;
+                            }
+                        }
+                    }
+                    continue;
+                }
+                other => {
+                    let start_cycle = stats.cycles;
+                    let c = self.execute_datapath(&other, pc)?;
+                    stats.cycles += c;
+                    stats.datapath_cycles += c;
+                    if let Some(p) = profiler.as_deref_mut() {
+                        p.record(pc, start_cycle, c, &other);
+                    }
+                    if matches!(other, Instr::Smm { .. }) {
+                        // store handshake: a section committed; stream the
+                        // next section's inputs
+                        stats.sections += 1;
+                        if !exhausted {
+                            exhausted = !feed.feed(
+                                stats.sections as usize,
+                                &mut self.msgmem,
+                                &mut self.statemem,
+                            );
+                        }
+                    }
+                }
+            }
+            pc += 1;
+        }
+
+        self.total_cycles += stats.cycles;
+        self.state = FsmState::Done;
+        Ok(stats)
+    }
+
+    /// Resolve a matrix operand through the Select / Transpose units.
+    fn mat_operand<'a>(
+        array: &'a SystolicArray,
+        msgmem: &'a MessageMemory,
+        statemem: &'a StateMemory,
+        src: &OperandSrc,
+        herm: bool,
+    ) -> MatOperand<'a> {
+        match src {
+            OperandSrc::Msg(s) if *s == ACC => MatOperand { data: &array.accum, herm },
+            OperandSrc::Msg(s) => MatOperand { data: &msgmem.read(*s).v, herm },
+            OperandSrc::State(s) => MatOperand { data: statemem.read(*s), herm },
+        }
+    }
+
+    /// Resolve the vector side of an operand (mean pipeline / Mask unit).
+    fn vec_operand<'a>(
+        array: &'a SystolicArray,
+        msgmem: &'a MessageMemory,
+        src: &OperandSrc,
+    ) -> &'a [crate::fixed::CFix] {
+        match src {
+            OperandSrc::Msg(s) if *s == ACC => &array.vaccum,
+            OperandSrc::Msg(s) => &msgmem.read(*s).m,
+            OperandSrc::State(_) => panic!("state memory has no mean column"),
+        }
+    }
+
+    fn execute_datapath(&mut self, instr: &Instr, addr: usize) -> Result<u64, FgpError> {
+        let n = self.config.n;
+        let check_msg = |s: &u8| -> Result<(), FgpError> {
+            if *s != ACC && (*s as usize) >= self.msgmem.num_slots() {
+                return Err(FgpError::BadSlot(*s));
+            }
+            Ok(())
+        };
+        let check_operand = |o: &OperandSrc| -> Result<(), FgpError> {
+            match o {
+                OperandSrc::Msg(s) => check_msg(s),
+                OperandSrc::State(s) => {
+                    if (*s as usize) >= self.statemem.num_slots() {
+                        return Err(FgpError::BadSlot(*s));
+                    }
+                    Ok(())
+                }
+            }
+        };
+        // stage operands into the persistent scratch latches (one copy,
+        // zero steady-state allocation)
+        let mut s = std::mem::take(&mut self.scratch);
+        let cycles = match instr {
+            Instr::Mma { a, a_herm, b, b_herm, neg, vec } => {
+                check_operand(a)?;
+                check_operand(b)?;
+                OpScratch::load(
+                    &mut s.a,
+                    Self::mat_operand(&self.array, &self.msgmem, &self.statemem, a, *a_herm).data,
+                );
+                if *vec {
+                    OpScratch::load(&mut s.b, Self::vec_operand(&self.array, &self.msgmem, b));
+                    self.array.mma_vector(MatOperand { data: &s.a, herm: *a_herm }, &s.b, *neg)
+                } else {
+                    OpScratch::load(
+                        &mut s.b,
+                        Self::mat_operand(&self.array, &self.msgmem, &self.statemem, b, *b_herm)
+                            .data,
+                    );
+                    self.array.mma_matrix(
+                        MatOperand { data: &s.a, herm: *a_herm },
+                        MatOperand { data: &s.b, herm: *b_herm },
+                        *neg,
+                    )
+                }
+            }
+            Instr::Mms { a, a_herm, b, b_herm, c, neg, vec } => {
+                check_operand(a)?;
+                check_operand(b)?;
+                check_msg(c)?;
+                OpScratch::load(
+                    &mut s.a,
+                    Self::mat_operand(&self.array, &self.msgmem, &self.statemem, a, *a_herm).data,
+                );
+                if *vec {
+                    OpScratch::load(&mut s.b, Self::vec_operand(&self.array, &self.msgmem, b));
+                    OpScratch::load(
+                        &mut s.c,
+                        if *c == ACC { &self.array.vshift } else { &self.msgmem.read(*c).m },
+                    );
+                    self.array.mms_vector(
+                        MatOperand { data: &s.a, herm: *a_herm },
+                        &s.b,
+                        &s.c,
+                        *neg,
+                    )
+                } else {
+                    OpScratch::load(
+                        &mut s.b,
+                        Self::mat_operand(&self.array, &self.msgmem, &self.statemem, b, *b_herm)
+                            .data,
+                    );
+                    OpScratch::load(
+                        &mut s.c,
+                        if *c == ACC { &self.array.shift } else { &self.msgmem.read(*c).v },
+                    );
+                    self.array.mms_matrix(
+                        MatOperand { data: &s.a, herm: *a_herm },
+                        MatOperand { data: &s.b, herm: *b_herm },
+                        &s.c,
+                        *neg,
+                    )
+                }
+            }
+            Instr::Fad { g, b, b_herm, c, d } => {
+                check_msg(g)?;
+                check_msg(b)?;
+                check_msg(c)?;
+                check_msg(d)?;
+                if *d == ACC {
+                    self.scratch = s;
+                    return Err(FgpError::Datapath {
+                        addr,
+                        msg: "fad D quadrant must come from message memory".into(),
+                    });
+                }
+                // quadrant G from the shift plane when acc, B/C from accum
+                OpScratch::load(
+                    &mut s.a,
+                    if *g == ACC { &self.array.shift } else { &self.msgmem.read(*g).v },
+                );
+                OpScratch::load(
+                    &mut s.b,
+                    if *b == ACC { &self.array.accum } else { &self.msgmem.read(*b).v },
+                );
+                OpScratch::load(
+                    &mut s.c,
+                    if *c == ACC { &self.array.accum } else { &self.msgmem.read(*c).v },
+                );
+                let dslot = self.msgmem.read(*d);
+                OpScratch::load(&mut s.d, &dslot.v);
+                OpScratch::load(&mut s.dm, &dslot.m);
+                // extended mean column: top = vshift (innovation), bottom = D's mean
+                OpScratch::load(
+                    &mut s.y,
+                    if *g == ACC { &self.array.vshift } else { &self.msgmem.read(*g).m },
+                );
+                self.array.faddeev(
+                    &s.a,
+                    MatOperand { data: &s.b, herm: *b_herm },
+                    &s.c,
+                    &s.d,
+                    &s.y,
+                    &s.dm,
+                )
+            }
+            Instr::Smm { dst } => {
+                check_msg(dst)?;
+                if *dst == ACC {
+                    return Err(FgpError::Datapath { addr, msg: "smm cannot target acc".into() });
+                }
+                let slot = MsgSlot {
+                    v: self.array.result_matrix().to_vec(),
+                    m: self.array.result_vector().to_vec(),
+                };
+                self.msgmem.write(*dst, slot);
+                self.config.timing.store_pass(n)
+            }
+            other => {
+                self.scratch = s;
+                return Err(FgpError::Datapath {
+                    addr,
+                    msg: format!("{} is not a datapath instruction", other.mnemonic()),
+                });
+            }
+        };
+        self.scratch = s;
+        Ok(cycles)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOptions};
+    use crate::gmp::matrix::{c64, CMatrix};
+    use crate::gmp::{FactorGraph, Schedule};
+    use crate::testutil::Rng;
+
+    fn scaled_msg(rng: &mut Rng, n: usize, scale: f64) -> GaussMessage {
+        GaussMessage::new(
+            (0..n).map(|_| c64::new(rng.range(-1.0, 1.0), rng.range(-1.0, 1.0))).collect(),
+            CMatrix::random_psd(rng, n, 0.3).scale(scale),
+        )
+    }
+
+    /// Compile + run a single compound node on the simulator; compare
+    /// against the golden rule. The core end-to-end datapath test.
+    #[test]
+    fn single_compound_node_matches_golden() {
+        let mut rng = Rng::new(11);
+        let n = 4;
+        let mut g = FactorGraph::new();
+        let a = CMatrix::random(&mut rng, n, n).scale(0.5);
+        let a_list = vec![a.clone()];
+        let (_, _) = g.rls_chain(n, &a_list);
+        let sched = Schedule::forward_sweep(&g);
+        let compiled = compile(&g, &sched, &CompileOptions::default()).unwrap();
+
+        let mut fgp = Fgp::new(FgpConfig::default());
+        assert!(matches!(
+            fgp.execute_command(Command::LoadProgram(compiled.program.to_image())),
+            Reply::Loaded { .. }
+        ));
+
+        let x = scaled_msg(&mut rng, n, 0.15);
+        let y = scaled_msg(&mut rng, n, 0.15);
+
+        // preload prior, stream slot and state
+        let prior_slot = compiled.memmap.preloads[0].1;
+        fgp.msgmem.write_message(prior_slot, &x);
+        let (_, obs_slot, _) = compiled.memmap.streams[0];
+        fgp.msgmem.write_message(obs_slot, &y);
+        let (_, st_slot, _) = compiled.memmap.state_streams[0];
+        fgp.statemem.write_matrix(st_slot, &a);
+
+        let stats = fgp.run_program(1, &mut NoFeed).unwrap();
+        assert!(stats.cycles > 0);
+        assert_eq!(stats.sections, 1);
+
+        let out_slot = compiled.memmap.outputs[0].1;
+        let got = fgp.msgmem.read_message(out_slot);
+        let want = crate::gmp::nodes::compound_observation(&x, &y, &a, true).unwrap();
+        let d = got.dist(&want);
+        assert!(d < 0.15, "fixed-point vs golden dist {d}");
+    }
+
+    #[test]
+    fn compound_node_cycles_match_timing_model() {
+        // One section: total = CN cycles per the timing model.
+        let mut rng = Rng::new(13);
+        let n = 4;
+        let mut g = FactorGraph::new();
+        let a = CMatrix::random(&mut rng, n, n).scale(0.5);
+        g.rls_chain(n, &[a.clone()]);
+        let sched = Schedule::forward_sweep(&g);
+        let compiled = compile(&g, &sched, &CompileOptions::default()).unwrap();
+
+        let mut fgp = Fgp::new(FgpConfig::default());
+        fgp.pm.load(&compiled.program.to_image()).unwrap();
+        let stats = fgp.run_program(1, &mut NoFeed).unwrap();
+        assert_eq!(
+            stats.cycles,
+            fgp.config.timing.compound_node_cycles(n),
+            "one section must cost exactly one CN update"
+        );
+    }
+
+    #[test]
+    fn status_and_command_protocol() {
+        let mut fgp = Fgp::new(FgpConfig::default());
+        match fgp.execute_command(Command::Status) {
+            Reply::Status { state, cycles } => {
+                assert_eq!(state, FsmState::Idle);
+                assert_eq!(cycles, 0);
+            }
+            other => panic!("unexpected reply {other:?}"),
+        }
+        // starting a missing program errors via reply, not panic
+        match fgp.execute_command(Command::StartProgram { id: 9 }) {
+            Reply::Error(e) => assert!(e.contains("no program")),
+            other => panic!("unexpected reply {other:?}"),
+        }
+        // bad slot write
+        let msg = GaussMessage::isotropic(4, 1.0);
+        match fgp.execute_command(Command::WriteMessage { slot: 200, msg }) {
+            Reply::Error(e) => assert!(e.contains("out of range")),
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+
+    #[test]
+    fn looped_rls_with_host_feed_matches_golden_chain() {
+        let mut rng = Rng::new(17);
+        let n = 4;
+        let sections = 6;
+        let a_list: Vec<CMatrix> =
+            (0..sections).map(|_| CMatrix::random(&mut rng, n, n).scale(0.4)).collect();
+        let mut g = FactorGraph::new();
+        g.rls_chain(n, &a_list);
+        let sched = Schedule::forward_sweep(&g);
+        let compiled = compile(&g, &sched, &CompileOptions::default()).unwrap();
+        assert!(compiled.stats.looped.is_some(), "chain must compress");
+
+        let prior = scaled_msg(&mut rng, n, 0.2);
+        let ys: Vec<GaussMessage> =
+            (0..sections).map(|_| scaled_msg(&mut rng, n, 0.1)).collect();
+
+        let mut fgp = Fgp::new(FgpConfig::default());
+        fgp.pm.load(&compiled.program.to_image()).unwrap();
+        let prior_slot = compiled.memmap.preloads[0].1;
+        fgp.msgmem.write_message(prior_slot, &prior);
+        let (_, obs_slot, _) = compiled.memmap.streams[0];
+        let (_, st_slot, _) = compiled.memmap.state_streams[0];
+
+        let ys_feed = ys.clone();
+        let a_feed = a_list.clone();
+        let mut feed = move |section: usize,
+                             mem: &mut MessageMemory,
+                             st: &mut StateMemory|
+              -> bool {
+            if section >= ys_feed.len() {
+                return false;
+            }
+            mem.write_message(obs_slot, &ys_feed[section]);
+            st.write_matrix(st_slot, &a_feed[section]);
+            true
+        };
+        let stats = fgp.run_program(1, &mut feed).unwrap();
+        assert_eq!(stats.sections as usize, sections);
+
+        // golden chain
+        let mut want = prior.clone();
+        for (y, a) in ys.iter().zip(&a_list) {
+            want = crate::gmp::nodes::compound_observation(&want, y, a, true).unwrap();
+        }
+        let out_slot = compiled.memmap.outputs[0].1;
+        let got = fgp.msgmem.read_message(out_slot);
+        let d = got.dist(&want);
+        assert!(d < 0.3, "looped RLS vs golden dist {d}");
+        // cycle accounting: sections * CN cycles
+        assert_eq!(
+            stats.cycles,
+            fgp.config.timing.compound_node_cycles(n) * sections as u64
+        );
+    }
+
+    #[test]
+    fn multiple_programs_in_pm() {
+        use crate::isa::{Instr, Program};
+        // program 2 does a single smm (stores zero planes)
+        let p = Program::new(vec![
+            Instr::Prg { id: 1 },
+            Instr::Smm { dst: 0 },
+            Instr::Halt,
+            Instr::Prg { id: 2 },
+            Instr::Smm { dst: 1 },
+            Instr::Halt,
+        ]);
+        let mut fgp = Fgp::new(FgpConfig::default());
+        fgp.pm.load(&p.to_image()).unwrap();
+        let s1 = fgp.run_program(1, &mut NoFeed).unwrap();
+        assert_eq!(s1.instructions, 2); // smm + halt
+        let s2 = fgp.run_program(2, &mut NoFeed).unwrap();
+        assert_eq!(s2.instructions, 2);
+    }
+}

@@ -1,0 +1,175 @@
+//! Execution tracing + instruction-level profiling.
+//!
+//! The silicon exposes only a status port; the simulator can afford a
+//! full trace. [`Profiler`] accumulates per-opcode instruction counts
+//! and cycle totals (the data behind EXPERIMENTS.md's cycle budgets) and
+//! an optional bounded instruction trace for debugging compiled
+//! programs — the software analogue of a logic-analyzer capture.
+
+use std::fmt;
+
+use crate::isa::{Instr, Opcode};
+
+/// Per-opcode aggregate.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OpcodeStats {
+    pub count: u64,
+    pub cycles: u64,
+}
+
+/// One trace record (bounded capture).
+#[derive(Clone, Debug)]
+pub struct TraceRecord {
+    /// PM address the instruction was fetched from.
+    pub addr: usize,
+    /// Cycle at which execution of this instruction began.
+    pub start_cycle: u64,
+    pub cycles: u64,
+    pub instr: Instr,
+}
+
+/// Instruction-level profiler + bounded trace.
+#[derive(Debug)]
+pub struct Profiler {
+    per_opcode: [OpcodeStats; 7],
+    records: Vec<TraceRecord>,
+    capacity: usize,
+    dropped: u64,
+}
+
+impl Profiler {
+    /// `capacity` bounds the retained trace (0 = profile only).
+    pub fn new(capacity: usize) -> Self {
+        Profiler { per_opcode: [OpcodeStats::default(); 7], records: Vec::new(), capacity, dropped: 0 }
+    }
+
+    pub fn record(&mut self, addr: usize, start_cycle: u64, cycles: u64, instr: &Instr) {
+        let idx = opcode_index(instr);
+        self.per_opcode[idx].count += 1;
+        self.per_opcode[idx].cycles += cycles;
+        if self.records.len() < self.capacity {
+            self.records.push(TraceRecord { addr, start_cycle, cycles, instr: instr.clone() });
+        } else if self.capacity > 0 {
+            self.dropped += 1;
+        }
+    }
+
+    pub fn stats(&self, op: Opcode) -> OpcodeStats {
+        self.per_opcode[op as usize]
+    }
+
+    pub fn total_cycles(&self) -> u64 {
+        self.per_opcode.iter().map(|s| s.cycles).sum()
+    }
+
+    pub fn total_instructions(&self) -> u64 {
+        self.per_opcode.iter().map(|s| s.count).sum()
+    }
+
+    pub fn records(&self) -> &[TraceRecord] {
+        &self.records
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Fraction of datapath cycles spent in the Faddeev pass — the
+    /// utilization argument for the triangular extension.
+    pub fn faddeev_share(&self) -> f64 {
+        let total = self.total_cycles();
+        if total == 0 {
+            return 0.0;
+        }
+        self.stats(Opcode::Fad).cycles as f64 / total as f64
+    }
+}
+
+fn opcode_index(instr: &Instr) -> usize {
+    (match instr {
+        Instr::Halt => Opcode::Halt,
+        Instr::Mma { .. } => Opcode::Mma,
+        Instr::Mms { .. } => Opcode::Mms,
+        Instr::Fad { .. } => Opcode::Fad,
+        Instr::Smm { .. } => Opcode::Smm,
+        Instr::Loop { .. } => Opcode::Loop,
+        Instr::Prg { .. } => Opcode::Prg,
+    }) as usize
+}
+
+impl fmt::Display for Profiler {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "{:<8} {:>10} {:>12} {:>8}", "opcode", "count", "cycles", "share")?;
+        let total = self.total_cycles().max(1);
+        for (name, op) in [
+            ("mma", Opcode::Mma),
+            ("mms", Opcode::Mms),
+            ("fad", Opcode::Fad),
+            ("smm", Opcode::Smm),
+        ] {
+            let s = self.stats(op);
+            writeln!(
+                f,
+                "{name:<8} {:>10} {:>12} {:>7.1}%",
+                s.count,
+                s.cycles,
+                100.0 * s.cycles as f64 / total as f64
+            )?;
+        }
+        if self.dropped > 0 {
+            writeln!(f, "(trace truncated: {} records dropped)", self.dropped)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::OperandSrc;
+
+    fn mma() -> Instr {
+        Instr::Mma {
+            a: OperandSrc::Msg(0),
+            a_herm: false,
+            b: OperandSrc::State(0),
+            b_herm: true,
+            neg: false,
+            vec: false,
+        }
+    }
+
+    #[test]
+    fn aggregates_per_opcode() {
+        let mut p = Profiler::new(16);
+        p.record(0, 0, 22, &mma());
+        p.record(1, 22, 167, &Instr::Fad { g: 255, b: 255, b_herm: true, c: 255, d: 0 });
+        p.record(2, 189, 10, &Instr::Smm { dst: 1 });
+        assert_eq!(p.stats(Opcode::Mma).count, 1);
+        assert_eq!(p.stats(Opcode::Fad).cycles, 167);
+        assert_eq!(p.total_cycles(), 199);
+        assert_eq!(p.total_instructions(), 3);
+        assert!(p.faddeev_share() > 0.8);
+    }
+
+    #[test]
+    fn trace_is_bounded() {
+        let mut p = Profiler::new(2);
+        for i in 0..5 {
+            p.record(i, i as u64, 1, &mma());
+        }
+        assert_eq!(p.records().len(), 2);
+        assert_eq!(p.dropped(), 3);
+        assert_eq!(p.total_instructions(), 5); // profiling still complete
+    }
+
+    #[test]
+    fn display_reports_shares() {
+        let mut p = Profiler::new(0);
+        p.record(0, 0, 50, &mma());
+        p.record(1, 50, 50, &Instr::Smm { dst: 0 });
+        let text = format!("{p}");
+        assert!(text.contains("mma"));
+        assert!(text.contains("50.0%"));
+    }
+}

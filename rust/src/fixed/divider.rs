@@ -1,0 +1,159 @@
+//! The PEborder's sequential radix-2 divider (paper Fig. 4, footnote 2).
+//!
+//! The paper deploys **one** bit-serial divider per border PE and states
+//! it "performs a sequential radix-2 division in 4 cycles". A radix-2
+//! stage retires one quotient bit per cycle, so 4 cycles corresponds to a
+//! 4-stage-unrolled recurrence (4 bits/cycle effective radix-16 retire
+//! rate) over the 16-bit quotient. We model exactly that: a restoring
+//! division producing `width` quotient bits, with latency
+//! `ceil(quotient_bits / BITS_PER_CYCLE)` and `BITS_PER_CYCLE = 4` chosen
+//! so a 16-bit quotient completes in the paper's 4 cycles.
+//!
+//! The datapath result is *bit-accurate*: the quotient equals
+//! `floor(num << frac_bits / den)` with round-to-nearest, which is what
+//! the restoring recurrence followed by a rounding stage produces.
+
+/// Bit-serial radix-2 divider model.
+pub struct Radix2Divider;
+
+impl Radix2Divider {
+    /// Quotient bits retired per clock cycle (4-stage unrolled radix-2).
+    pub const BITS_PER_CYCLE: u32 = 4;
+
+    /// Latency in cycles to produce a `quotient_bits`-wide quotient.
+    pub fn latency_cycles(quotient_bits: u32) -> u64 {
+        quotient_bits.div_ceil(Self::BITS_PER_CYCLE) as u64
+    }
+
+    /// Latency for the default 16-bit datapath — the paper's 4 cycles.
+    pub fn default_latency() -> u64 {
+        Self::latency_cycles(16)
+    }
+
+    /// Fixed-point division of raw values sharing `frac_bits`:
+    /// returns `round(num * 2^frac_bits / den)` — exactly the quotient the
+    /// restoring recurrence produces, computed in closed form. (The
+    /// recurrence computes `floor(|num| << (frac+1) / |den|)` then rounds
+    /// with the extra bit; integer division is that same floor, so the
+    /// two are bit-identical — proven by
+    /// [`tests::fast_path_matches_bit_serial_reference`]. The closed form
+    /// is the simulator's hot path: 38% of CN-update time went into the
+    /// bit loop before this change, see EXPERIMENTS.md §Perf.)
+    pub fn divide_raw(num: i64, den: i64, frac_bits: u32) -> i64 {
+        assert!(den != 0, "divide_raw: division by zero");
+        let neg = (num < 0) != (den < 0);
+        let dividend = (num.unsigned_abs() as u128) << (frac_bits + 1); // +1 bit for rounding
+        let divisor = den.unsigned_abs() as u128;
+        let quotient = dividend / divisor;
+        let rounded = (quotient + 1) >> 1;
+        let q = rounded as i64;
+        if neg {
+            -q
+        } else {
+            q
+        }
+    }
+
+    /// The bit-serial restoring recurrence itself — the hardware's actual
+    /// sequential algorithm, kept as the reference implementation for the
+    /// bit-equivalence property test.
+    pub fn divide_raw_bitserial(num: i64, den: i64, frac_bits: u32) -> i64 {
+        assert!(den != 0, "divide_raw: division by zero");
+        let neg = (num < 0) != (den < 0);
+        let mut rem: u128 = 0;
+        let dividend = (num.unsigned_abs() as u128) << (frac_bits + 1);
+        let divisor = den.unsigned_abs() as u128;
+        let total_bits = 128 - dividend.leading_zeros();
+        let mut quotient: u128 = 0;
+
+        // Restoring division: shift in one dividend bit per step, subtract
+        // the divisor when it fits. Each step is one radix-2 stage.
+        for i in (0..total_bits).rev() {
+            rem = (rem << 1) | ((dividend >> i) & 1);
+            quotient <<= 1;
+            if rem >= divisor {
+                rem -= divisor;
+                quotient |= 1;
+            }
+        }
+        let rounded = (quotient + 1) >> 1;
+        let q = rounded as i64;
+        if neg {
+            -q
+        } else {
+            q
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::proptest_cases;
+
+    #[test]
+    fn paper_latency_is_four_cycles() {
+        assert_eq!(Radix2Divider::default_latency(), 4);
+    }
+
+    #[test]
+    fn latency_scales_with_width() {
+        assert_eq!(Radix2Divider::latency_cycles(32), 8);
+        assert_eq!(Radix2Divider::latency_cycles(8), 2);
+        assert_eq!(Radix2Divider::latency_cycles(1), 1);
+    }
+
+    #[test]
+    fn divide_matches_rounded_reference() {
+        proptest_cases(2000, |rng| {
+            let num = (rng.next_u64() % 200_000) as i64 - 100_000;
+            let mut den = (rng.next_u64() % 2_000) as i64 - 1_000;
+            if den == 0 {
+                den = 7;
+            }
+            let frac = 10;
+            let got = Radix2Divider::divide_raw(num, den, frac);
+            let exact = (num as f64) * (1u64 << frac) as f64 / den as f64;
+            let want = exact.round() as i64;
+            // restoring division truncates toward zero before rounding; allow 1 ulp
+            assert!(
+                (got - want).abs() <= 1,
+                "num={num} den={den}: got {got}, want {want}"
+            );
+        });
+    }
+
+    #[test]
+    fn fast_path_matches_bit_serial_reference() {
+        // the closed form must be BIT-IDENTICAL to the hardware recurrence
+        proptest_cases(5000, |rng| {
+            let num = rng.next_u64() as i64 >> (rng.below(40) + 8);
+            let mut den = rng.next_u64() as i64 >> (rng.below(48) + 8);
+            if den == 0 {
+                den = 3;
+            }
+            let frac = (rng.below(20) + 4) as u32;
+            assert_eq!(
+                Radix2Divider::divide_raw(num, den, frac),
+                Radix2Divider::divide_raw_bitserial(num, den, frac),
+                "num={num} den={den} frac={frac}"
+            );
+        });
+    }
+
+    #[test]
+    fn exact_divisions_are_exact() {
+        // 6.0 / 2.0 = 3.0 in Q*.10
+        assert_eq!(Radix2Divider::divide_raw(6 << 10, 2 << 10, 10), 3 << 10);
+        // 1.0 / 1.0
+        assert_eq!(Radix2Divider::divide_raw(1 << 10, 1 << 10, 10), 1 << 10);
+        // -8 / 4 = -2
+        assert_eq!(Radix2Divider::divide_raw(-(8 << 10), 4 << 10, 10), -(2 << 10));
+    }
+
+    #[test]
+    #[should_panic(expected = "division by zero")]
+    fn divide_by_zero_panics() {
+        Radix2Divider::divide_raw(1, 0, 10);
+    }
+}

@@ -1,0 +1,349 @@
+//! S1 — Fixed-point arithmetic substrate.
+//!
+//! The FGP and its C66x baseline both "operate in fix point number
+//! representation" (paper §V). This module provides the bit-accurate
+//! number system the cycle-accurate simulator computes with:
+//!
+//! * [`QFormat`] — runtime-parameterizable signed Q(m.f) format
+//!   (default Q5.10 in a 16-bit word, chosen so the RLS example's prior
+//!   covariance `10·I` is representable);
+//! * [`Fix`] — a saturating, rounding fixed-point scalar;
+//! * [`CFix`] — complex fixed-point built from two [`Fix`], with the
+//!   4-real-multiply complex product of Fig. 3 and the paper's complex
+//!   division formula (Fig. 4, footnote 2);
+//! * [`divider::Radix2Divider`] — the bit-serial radix-2 divider the
+//!   PEborder uses, with its cycle cost.
+
+pub mod divider;
+
+pub use divider::Radix2Divider;
+
+/// Signed fixed-point format: 1 sign bit + `int_bits` + `frac_bits`.
+///
+/// Total width must fit a 32-bit word (the hardware uses 16-bit datapaths;
+/// wider formats exist for precision-ablation experiments, E9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QFormat {
+    pub int_bits: u32,
+    pub frac_bits: u32,
+}
+
+impl QFormat {
+    pub const fn new(int_bits: u32, frac_bits: u32) -> Self {
+        assert!(1 + int_bits + frac_bits <= 32, "QFormat must fit 32 bits");
+        QFormat { int_bits, frac_bits }
+    }
+
+    /// The silicon's 16-bit default: Q5.10 (range ±32, resolution ~1e-3).
+    pub const fn q5_10() -> Self {
+        QFormat::new(5, 10)
+    }
+
+    /// Total word width including sign.
+    pub fn width(&self) -> u32 {
+        1 + self.int_bits + self.frac_bits
+    }
+
+    /// Largest representable raw value.
+    pub fn max_raw(&self) -> i64 {
+        (1i64 << (self.int_bits + self.frac_bits)) - 1
+    }
+
+    /// Smallest representable raw value (two's complement).
+    pub fn min_raw(&self) -> i64 {
+        -(1i64 << (self.int_bits + self.frac_bits))
+    }
+
+    /// One LSB as a real number.
+    pub fn resolution(&self) -> f64 {
+        (self.frac_bits as i32).pipe_exp2_neg()
+    }
+}
+
+trait Exp2Neg {
+    fn pipe_exp2_neg(self) -> f64;
+}
+impl Exp2Neg for i32 {
+    fn pipe_exp2_neg(self) -> f64 {
+        2f64.powi(-self)
+    }
+}
+
+/// Saturating, rounding fixed-point scalar in a given [`QFormat`].
+///
+/// Raw values are carried in `i64` so products of two in-range values never
+/// overflow before the post-multiply shift — mirroring the hardware's wide
+/// accumulator in front of the saturating output stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fix {
+    pub raw: i64,
+    pub fmt: QFormat,
+}
+
+impl Fix {
+    pub fn from_f64(x: f64, fmt: QFormat) -> Self {
+        let scaled = (x * (1i64 << fmt.frac_bits) as f64).round() as i64;
+        Fix { raw: scaled.clamp(fmt.min_raw(), fmt.max_raw()), fmt }
+    }
+
+    pub fn to_f64(self) -> f64 {
+        self.raw as f64 / (1i64 << self.fmt.frac_bits) as f64
+    }
+
+    pub fn zero(fmt: QFormat) -> Self {
+        Fix { raw: 0, fmt }
+    }
+
+    pub fn one(fmt: QFormat) -> Self {
+        Fix::from_f64(1.0, fmt)
+    }
+
+    fn saturate(raw: i64, fmt: QFormat) -> Self {
+        Fix { raw: raw.clamp(fmt.min_raw(), fmt.max_raw()), fmt }
+    }
+
+    /// Saturating addition (the PEmult adder).
+    pub fn add(self, rhs: Fix) -> Fix {
+        debug_assert_eq!(self.fmt, rhs.fmt);
+        Fix::saturate(self.raw + rhs.raw, self.fmt)
+    }
+
+    /// Saturating subtraction.
+    pub fn sub(self, rhs: Fix) -> Fix {
+        debug_assert_eq!(self.fmt, rhs.fmt);
+        Fix::saturate(self.raw - rhs.raw, self.fmt)
+    }
+
+    /// Saturating multiply with round-to-nearest on the discarded bits
+    /// (the PEmult's 16x16 multiplier + rounding stage).
+    ///
+    /// Raw values are bounded by the ≤32-bit format (|raw| ≤ 2^31), so
+    /// the product fits i64 with headroom — no wide arithmetic needed on
+    /// the simulator's hottest path.
+    pub fn mul(self, rhs: Fix) -> Fix {
+        debug_assert_eq!(self.fmt, rhs.fmt);
+        let prod = self.raw * rhs.raw;
+        let half = 1i64 << (self.fmt.frac_bits - 1);
+        let rounded = (prod + half) >> self.fmt.frac_bits;
+        Fix::saturate(rounded, self.fmt)
+    }
+
+    pub fn neg(self) -> Fix {
+        Fix::saturate(-self.raw, self.fmt)
+    }
+
+    pub fn abs(self) -> Fix {
+        Fix::saturate(self.raw.abs(), self.fmt)
+    }
+
+    pub fn is_zero(self) -> bool {
+        self.raw == 0
+    }
+
+    /// Division via the sequential radix-2 divider (see [`divider`]).
+    /// Returns the quotient; the cycle cost is the divider's latency.
+    pub fn div(self, rhs: Fix) -> Fix {
+        debug_assert_eq!(self.fmt, rhs.fmt);
+        let q = Radix2Divider::divide_raw(self.raw, rhs.raw, self.fmt.frac_bits);
+        Fix::saturate(q, self.fmt)
+    }
+}
+
+/// Complex fixed-point value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CFix {
+    pub re: Fix,
+    pub im: Fix,
+}
+
+impl CFix {
+    pub fn new(re: Fix, im: Fix) -> Self {
+        CFix { re, im }
+    }
+
+    pub fn from_f64(re: f64, im: f64, fmt: QFormat) -> Self {
+        CFix { re: Fix::from_f64(re, fmt), im: Fix::from_f64(im, fmt) }
+    }
+
+    pub fn zero(fmt: QFormat) -> Self {
+        CFix { re: Fix::zero(fmt), im: Fix::zero(fmt) }
+    }
+
+    pub fn one(fmt: QFormat) -> Self {
+        CFix { re: Fix::one(fmt), im: Fix::zero(fmt) }
+    }
+
+    pub fn to_c64(self) -> (f64, f64) {
+        (self.re.to_f64(), self.im.to_f64())
+    }
+
+    pub fn add(self, rhs: CFix) -> CFix {
+        CFix { re: self.re.add(rhs.re), im: self.im.add(rhs.im) }
+    }
+
+    pub fn sub(self, rhs: CFix) -> CFix {
+        CFix { re: self.re.sub(rhs.re), im: self.im.sub(rhs.im) }
+    }
+
+    pub fn neg(self) -> CFix {
+        CFix { re: self.re.neg(), im: self.im.neg() }
+    }
+
+    pub fn conj(self) -> CFix {
+        CFix { re: self.re, im: self.im.neg() }
+    }
+
+    /// Complex multiply as the PEmult executes it: 4 real multiplies and
+    /// 2 adds on one multiplier/adder pair over [`CFix::MUL_CYCLES`] cycles.
+    pub fn mul(self, rhs: CFix) -> CFix {
+        let rr = self.re.mul(rhs.re);
+        let ii = self.im.mul(rhs.im);
+        let ri = self.re.mul(rhs.im);
+        let ir = self.im.mul(rhs.re);
+        CFix { re: rr.sub(ii), im: ri.add(ir) }
+    }
+
+    /// Squared magnitude |z|^2 = re^2 + im^2 (PEborder abs mode).
+    pub fn abs2(self) -> Fix {
+        self.re.mul(self.re).add(self.im.mul(self.im))
+    }
+
+    /// Complex division per the paper (Fig. 4):
+    /// (a+bi)/(c+di) = (ac+bd)/(c^2+d^2) + i (bc-ad)/(c^2+d^2),
+    /// using one sequential divider (twice), two multipliers, one adder.
+    pub fn div(self, rhs: CFix) -> CFix {
+        let den = rhs.abs2();
+        if den.is_zero() {
+            // Hardware saturates on divide-by-zero; mirror that.
+            let sat = Fix::saturate_max(self.re.fmt);
+            return CFix { re: sat, im: sat };
+        }
+        let num_re = self.re.mul(rhs.re).add(self.im.mul(rhs.im));
+        let num_im = self.im.mul(rhs.re).sub(self.re.mul(rhs.im));
+        CFix { re: num_re.div(den), im: num_im.div(den) }
+    }
+
+    pub fn is_zero(self) -> bool {
+        self.re.is_zero() && self.im.is_zero()
+    }
+
+    /// Cycles for one complex multiply on a PEmult (paper Fig. 3).
+    pub const MUL_CYCLES: u64 = 4;
+}
+
+impl Fix {
+    fn saturate_max(fmt: QFormat) -> Fix {
+        Fix { raw: fmt.max_raw(), fmt }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{assert_close, proptest_cases};
+
+    const FMT: QFormat = QFormat::q5_10();
+
+    #[test]
+    fn roundtrip_within_resolution() {
+        proptest_cases(200, |rng| {
+            let x = rng.range(-30.0, 30.0);
+            let f = Fix::from_f64(x, FMT);
+            assert!((f.to_f64() - x).abs() <= FMT.resolution());
+        });
+    }
+
+    #[test]
+    fn saturation_clamps() {
+        let big = Fix::from_f64(1e9, FMT);
+        assert_eq!(big.raw, FMT.max_raw());
+        let small = Fix::from_f64(-1e9, FMT);
+        assert_eq!(small.raw, FMT.min_raw());
+        // saturating add holds at the rail
+        assert_eq!(big.add(big).raw, FMT.max_raw());
+    }
+
+    #[test]
+    fn mul_matches_f64_within_tolerance() {
+        proptest_cases(500, |rng| {
+            let a = rng.range(-4.0, 4.0);
+            let b = rng.range(-4.0, 4.0);
+            let fa = Fix::from_f64(a, FMT);
+            let fb = Fix::from_f64(b, FMT);
+            let got = fa.mul(fb).to_f64();
+            assert_close(got, fa.to_f64() * fb.to_f64(), 4.0 * FMT.resolution());
+        });
+    }
+
+    #[test]
+    fn div_matches_f64_within_tolerance() {
+        proptest_cases(500, |rng| {
+            let a = rng.range(-8.0, 8.0);
+            let b = if rng.uniform() < 0.5 { rng.range(0.5, 8.0) } else { rng.range(-8.0, -0.5) };
+            let fa = Fix::from_f64(a, FMT);
+            let fb = Fix::from_f64(b, FMT);
+            let got = fa.div(fb).to_f64();
+            assert_close(got, fa.to_f64() / fb.to_f64(), 8.0 * FMT.resolution());
+        });
+    }
+
+    #[test]
+    fn complex_mul_matches_f64() {
+        proptest_cases(300, |rng| {
+            let (a, b, c, d) = (
+                rng.range(-3.0, 3.0),
+                rng.range(-3.0, 3.0),
+                rng.range(-3.0, 3.0),
+                rng.range(-3.0, 3.0),
+            );
+            let x = CFix::from_f64(a, b, FMT);
+            let y = CFix::from_f64(c, d, FMT);
+            let z = x.mul(y);
+            // exact complex product of the *quantized* inputs
+            let (ax, bx) = x.to_c64();
+            let (cy, dy) = y.to_c64();
+            assert_close(z.re.to_f64(), ax * cy - bx * dy, 8.0 * FMT.resolution());
+            assert_close(z.im.to_f64(), ax * dy + bx * cy, 8.0 * FMT.resolution());
+        });
+    }
+
+    #[test]
+    fn complex_div_matches_f64() {
+        proptest_cases(300, |rng| {
+            let x = CFix::from_f64(rng.range(-3.0, 3.0), rng.range(-3.0, 3.0), FMT);
+            // keep |y| well away from zero for the tolerance to be meaningful
+            let y = CFix::from_f64(rng.range(1.0, 3.0), rng.range(1.0, 3.0), FMT);
+            let z = x.div(y);
+            let (a, b) = x.to_c64();
+            let (c, d) = y.to_c64();
+            let den = c * c + d * d;
+            assert_close(z.re.to_f64(), (a * c + b * d) / den, 0.05);
+            assert_close(z.im.to_f64(), (b * c - a * d) / den, 0.05);
+        });
+    }
+
+    #[test]
+    fn div_by_zero_saturates() {
+        let x = CFix::from_f64(1.0, 1.0, FMT);
+        let z = x.div(CFix::zero(FMT));
+        assert_eq!(z.re.raw, FMT.max_raw());
+    }
+
+    #[test]
+    fn conj_negates_im_only() {
+        let x = CFix::from_f64(1.5, -2.5, FMT);
+        let c = x.conj();
+        assert_close(c.re.to_f64(), 1.5, 1e-9);
+        assert_close(c.im.to_f64(), 2.5, 1e-9);
+    }
+
+    #[test]
+    fn wider_format_is_more_precise() {
+        let narrow = QFormat::new(5, 8);
+        let wide = QFormat::new(5, 16);
+        let x = std::f64::consts::PI;
+        let en = (Fix::from_f64(x, narrow).to_f64() - x).abs();
+        let ew = (Fix::from_f64(x, wide).to_f64() - x).abs();
+        assert!(ew < en);
+    }
+}

@@ -1,0 +1,245 @@
+//! Factor-graph representation (paper §I, Fig. 6).
+//!
+//! A factor graph here is a collection of typed nodes connected by edges;
+//! each edge carries a Gaussian message. The builder API mirrors the
+//! paper's Matlab front-end (Listing 1): the user describes sections of
+//! the graph in a high-level way and derives a [`super::Schedule`] from
+//! it, which the compiler then turns into FGP assembler.
+
+use super::matrix::CMatrix;
+
+/// Identifies a node within a [`FactorGraph`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub usize);
+
+/// Identifies an edge (a variable / message site) within a [`FactorGraph`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct EdgeId(pub usize);
+
+/// Identifies a state matrix stored in the FGP's state memory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct StateId(pub usize);
+
+/// The node types of paper Fig. 1.
+#[derive(Clone, Debug)]
+pub enum NodeKind {
+    /// Equality constraint: all connected variables equal.
+    Equality,
+    /// Additive constraint: out = in1 + in2.
+    Add,
+    /// Multiplier: out = A * in.
+    Multiply { a: StateId },
+    /// Compound observation node (multiplier A into adder observed via an
+    /// observation edge) — the node Table II benchmarks.
+    CompoundObservation { a: StateId },
+    /// Compound equality-multiplier node (weight-form dual).
+    CompoundEquality { a: StateId },
+}
+
+/// A node and the edges it connects.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub kind: NodeKind,
+    /// Incoming message edges (order is meaningful per node kind).
+    pub inputs: Vec<EdgeId>,
+    /// Outgoing message edge.
+    pub output: EdgeId,
+    /// Optional human-readable label (used in compiler diagnostics).
+    pub label: String,
+}
+
+/// An edge: a variable of dimension `dim` with an optional external role.
+#[derive(Clone, Debug)]
+pub struct Edge {
+    pub dim: usize,
+    /// True if the message on this edge is loaded from outside (prior /
+    /// observation) rather than produced by a node.
+    pub is_input: bool,
+    /// True if the message on this edge must be readable after execution.
+    pub is_output: bool,
+    /// Input edges in the same stream group share one message-memory slot:
+    /// the host refills it via the Data-in port between loop iterations
+    /// (observations of a sectioned graph — see compiler docs).
+    pub stream_group: Option<u32>,
+    pub label: String,
+}
+
+/// A factor graph plus its state-matrix table.
+#[derive(Clone, Debug, Default)]
+pub struct FactorGraph {
+    pub nodes: Vec<Node>,
+    pub edges: Vec<Edge>,
+    pub states: Vec<CMatrix>,
+    /// Per-state stream group: states in the same group share one physical
+    /// state-memory slot and are fed by the host per section (e.g. the
+    /// per-symbol regressor of the RLS chain). `None` = resident state.
+    pub state_stream_groups: Vec<Option<u32>>,
+}
+
+impl FactorGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a state matrix (the node-defining `A` of Fig. 1) in state
+    /// memory and return its id.
+    pub fn add_state(&mut self, a: CMatrix) -> StateId {
+        self.states.push(a);
+        self.state_stream_groups.push(None);
+        StateId(self.states.len() - 1)
+    }
+
+    /// Register a state matrix streamed by the host per section: every
+    /// state in `group` shares one physical state-memory slot.
+    pub fn add_streamed_state(&mut self, group: u32, a: CMatrix) -> StateId {
+        let id = self.add_state(a);
+        self.state_stream_groups[id.0] = Some(group);
+        id
+    }
+
+    pub fn add_edge(&mut self, dim: usize, label: impl Into<String>) -> EdgeId {
+        self.edges.push(Edge {
+            dim,
+            is_input: false,
+            is_output: false,
+            stream_group: None,
+            label: label.into(),
+        });
+        EdgeId(self.edges.len() - 1)
+    }
+
+    /// An edge whose message is supplied externally before execution.
+    pub fn add_input_edge(&mut self, dim: usize, label: impl Into<String>) -> EdgeId {
+        let e = self.add_edge(dim, label);
+        self.edges[e.0].is_input = true;
+        e
+    }
+
+    /// An input edge refilled by the host per section (stream group).
+    pub fn add_streamed_input_edge(
+        &mut self,
+        dim: usize,
+        group: u32,
+        label: impl Into<String>,
+    ) -> EdgeId {
+        let e = self.add_input_edge(dim, label);
+        self.edges[e.0].stream_group = Some(group);
+        e
+    }
+
+    /// Mark an edge's message as a program output.
+    pub fn mark_output(&mut self, e: EdgeId) {
+        self.edges[e.0].is_output = true;
+    }
+
+    pub fn add_node(
+        &mut self,
+        kind: NodeKind,
+        inputs: Vec<EdgeId>,
+        output: EdgeId,
+        label: impl Into<String>,
+    ) -> NodeId {
+        self.validate_arity(&kind, &inputs);
+        self.nodes.push(Node { kind, inputs, output, label: label.into() });
+        NodeId(self.nodes.len() - 1)
+    }
+
+    fn validate_arity(&self, kind: &NodeKind, inputs: &[EdgeId]) {
+        let want = match kind {
+            NodeKind::Equality | NodeKind::Add => 2,
+            NodeKind::Multiply { .. } => 1,
+            NodeKind::CompoundObservation { .. } | NodeKind::CompoundEquality { .. } => 2,
+        };
+        assert_eq!(inputs.len(), want, "node arity mismatch for {kind:?}");
+    }
+
+    pub fn state(&self, id: StateId) -> &CMatrix {
+        &self.states[id.0]
+    }
+
+    /// Edges that must be loaded before the program runs.
+    pub fn input_edges(&self) -> impl Iterator<Item = EdgeId> + '_ {
+        self.edges
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.is_input)
+            .map(|(i, _)| EdgeId(i))
+    }
+
+    /// Edges whose messages are read back after the program runs.
+    pub fn output_edges(&self) -> impl Iterator<Item = EdgeId> + '_ {
+        self.edges
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.is_output)
+            .map(|(i, _)| EdgeId(i))
+    }
+
+    // ------------------------------------------------------------------
+    // High-level builders (the "Matlab front-end" of Listing 1)
+    // ------------------------------------------------------------------
+
+    /// Build the paper's Fig. 6 RLS channel-estimation chain:
+    /// `sections` compound-observation nodes threading the channel state,
+    /// each with its own regressor state matrix `a_list[i]` and an
+    /// observation input edge. Returns (state edges, observation edges).
+    pub fn rls_chain(
+        &mut self,
+        n: usize,
+        a_list: &[CMatrix],
+    ) -> (Vec<EdgeId>, Vec<EdgeId>) {
+        let mut state_edges = Vec::with_capacity(a_list.len() + 1);
+        let mut obs_edges = Vec::with_capacity(a_list.len());
+        let prior = self.add_input_edge(n, "msg_prior");
+        state_edges.push(prior);
+        let mut prev = prior;
+        for (i, a) in a_list.iter().enumerate() {
+            let sid = self.add_streamed_state(0, a.clone());
+            let obs = self.add_streamed_input_edge(n, 0, format!("msg_Y{i}"));
+            let out = self.add_edge(n, format!("msg_X{}", i + 1));
+            self.add_node(
+                NodeKind::CompoundObservation { a: sid },
+                vec![prev, obs],
+                out,
+                format!("section{i}"),
+            );
+            obs_edges.push(obs);
+            state_edges.push(out);
+            prev = out;
+        }
+        self.mark_output(prev);
+        (state_edges, obs_edges)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+
+    #[test]
+    fn rls_chain_has_expected_shape() {
+        let mut rng = Rng::new(1);
+        let mut g = FactorGraph::new();
+        let a_list: Vec<CMatrix> = (0..3).map(|_| CMatrix::random(&mut rng, 4, 4)).collect();
+        let (states, obs) = g.rls_chain(4, &a_list);
+        assert_eq!(g.nodes.len(), 3);
+        assert_eq!(states.len(), 4);
+        assert_eq!(obs.len(), 3);
+        assert_eq!(g.states.len(), 3);
+        // prior + 3 observations are inputs
+        assert_eq!(g.input_edges().count(), 4);
+        // last state edge is the output
+        let outs: Vec<EdgeId> = g.output_edges().collect();
+        assert_eq!(outs, vec![*states.last().unwrap()]);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity mismatch")]
+    fn wrong_arity_panics() {
+        let mut g = FactorGraph::new();
+        let e1 = g.add_edge(4, "x");
+        let out = g.add_edge(4, "z");
+        g.add_node(NodeKind::Equality, vec![e1], out, "bad");
+    }
+}

@@ -1,0 +1,576 @@
+//! Complex dense linear algebra for the GMP golden model.
+//!
+//! Self-contained (the vendored crate set has no `num-complex` /
+//! `nalgebra`): a small `c64` complex scalar and a dense row-major
+//! [`CMatrix`] with exactly the operations the message update rules need —
+//! multiply, Hermitian transpose, LU solve with partial pivoting, and the
+//! Schur complement both directly and via the Faddeev elimination the
+//! hardware uses.
+
+use std::fmt;
+use std::ops::{Add, Div, Mul, Neg, Sub};
+
+/// Complex double-precision scalar.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+#[allow(non_camel_case_types)]
+pub struct c64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl c64 {
+    pub const ZERO: c64 = c64 { re: 0.0, im: 0.0 };
+    pub const ONE: c64 = c64 { re: 1.0, im: 0.0 };
+
+    pub fn new(re: f64, im: f64) -> Self {
+        c64 { re, im }
+    }
+
+    pub fn conj(self) -> Self {
+        c64 { re: self.re, im: -self.im }
+    }
+
+    /// |z|^2.
+    pub fn abs2(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+
+    pub fn abs(self) -> f64 {
+        self.abs2().sqrt()
+    }
+}
+
+impl Add for c64 {
+    type Output = c64;
+    fn add(self, r: c64) -> c64 {
+        c64::new(self.re + r.re, self.im + r.im)
+    }
+}
+
+impl Sub for c64 {
+    type Output = c64;
+    fn sub(self, r: c64) -> c64 {
+        c64::new(self.re - r.re, self.im - r.im)
+    }
+}
+
+impl Mul for c64 {
+    type Output = c64;
+    fn mul(self, r: c64) -> c64 {
+        c64::new(
+            self.re * r.re - self.im * r.im,
+            self.re * r.im + self.im * r.re,
+        )
+    }
+}
+
+impl Mul<f64> for c64 {
+    type Output = c64;
+    fn mul(self, r: f64) -> c64 {
+        c64::new(self.re * r, self.im * r)
+    }
+}
+
+impl Div for c64 {
+    type Output = c64;
+    fn div(self, r: c64) -> c64 {
+        let d = r.abs2();
+        c64::new(
+            (self.re * r.re + self.im * r.im) / d,
+            (self.im * r.re - self.re * r.im) / d,
+        )
+    }
+}
+
+impl Neg for c64 {
+    type Output = c64;
+    fn neg(self) -> c64 {
+        c64::new(-self.re, -self.im)
+    }
+}
+
+impl fmt::Display for c64 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.im >= 0.0 {
+            write!(f, "{:.4}+{:.4}i", self.re, self.im)
+        } else {
+            write!(f, "{:.4}{:.4}i", self.re, self.im)
+        }
+    }
+}
+
+/// Complex column vector.
+pub type CVector = Vec<c64>;
+
+/// Dense row-major complex matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    data: Vec<c64>,
+}
+
+impl CMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        CMatrix { rows, cols, data: vec![c64::ZERO; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = CMatrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = c64::ONE;
+        }
+        m
+    }
+
+    /// Diagonal matrix `x * I`.
+    pub fn scaled_identity(n: usize, x: f64) -> Self {
+        let mut m = CMatrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = c64::new(x, 0.0);
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<c64>]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |row| row.len());
+        assert!(rows.iter().all(|row| row.len() == c), "ragged rows");
+        CMatrix { rows: r, cols: c, data: rows.concat() }
+    }
+
+    pub fn data(&self) -> &[c64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [c64] {
+        &mut self.data
+    }
+
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    /// Hermitian (conjugate) transpose.
+    pub fn hermitian(&self) -> CMatrix {
+        let mut out = CMatrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)].conj();
+            }
+        }
+        out
+    }
+
+    /// Plain transpose (no conjugation).
+    pub fn transpose(&self) -> CMatrix {
+        let mut out = CMatrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    pub fn add(&self, rhs: &CMatrix) -> CMatrix {
+        assert_eq!((self.rows, self.cols), (rhs.rows, rhs.cols));
+        let mut out = self.clone();
+        for (o, r) in out.data.iter_mut().zip(&rhs.data) {
+            *o = *o + *r;
+        }
+        out
+    }
+
+    pub fn sub(&self, rhs: &CMatrix) -> CMatrix {
+        assert_eq!((self.rows, self.cols), (rhs.rows, rhs.cols));
+        let mut out = self.clone();
+        for (o, r) in out.data.iter_mut().zip(&rhs.data) {
+            *o = *o - *r;
+        }
+        out
+    }
+
+    pub fn neg(&self) -> CMatrix {
+        let mut out = self.clone();
+        for o in out.data.iter_mut() {
+            *o = -*o;
+        }
+        out
+    }
+
+    pub fn scale(&self, s: f64) -> CMatrix {
+        let mut out = self.clone();
+        for o in out.data.iter_mut() {
+            *o = *o * s;
+        }
+        out
+    }
+
+    pub fn matmul(&self, rhs: &CMatrix) -> CMatrix {
+        assert_eq!(self.cols, rhs.rows, "matmul dim mismatch");
+        let mut out = CMatrix::zeros(self.rows, rhs.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let aik = self[(i, k)];
+                if aik == c64::ZERO {
+                    continue;
+                }
+                for j in 0..rhs.cols {
+                    out[(i, j)] = out[(i, j)] + aik * rhs[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn matvec(&self, x: &[c64]) -> CVector {
+        assert_eq!(self.cols, x.len(), "matvec dim mismatch");
+        (0..self.rows)
+            .map(|i| {
+                (0..self.cols)
+                    .map(|j| self[(i, j)] * x[j])
+                    .fold(c64::ZERO, |a, b| a + b)
+            })
+            .collect()
+    }
+
+    pub fn trace(&self) -> c64 {
+        assert!(self.is_square());
+        (0..self.rows).map(|i| self[(i, i)]).fold(c64::ZERO, |a, b| a + b)
+    }
+
+    /// Max absolute entry (for tolerances).
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().map(|z| z.abs()).fold(0.0, f64::max)
+    }
+
+    /// Frobenius distance to another matrix.
+    pub fn dist(&self, rhs: &CMatrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (rhs.rows, rhs.cols));
+        self.data
+            .iter()
+            .zip(&rhs.data)
+            .map(|(a, b)| (*a - *b).abs2())
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Solve A X = B via LU with partial pivoting (A = self, square).
+    pub fn solve(&self, b: &CMatrix) -> Option<CMatrix> {
+        assert!(self.is_square());
+        assert_eq!(self.rows, b.rows);
+        let n = self.rows;
+        let m = b.cols;
+        // augmented working copy
+        let mut a = self.clone();
+        let mut x = b.clone();
+        for k in 0..n {
+            // partial pivot
+            let (mut piv, mut pmax) = (k, a[(k, k)].abs());
+            for i in k + 1..n {
+                let v = a[(i, k)].abs();
+                if v > pmax {
+                    piv = i;
+                    pmax = v;
+                }
+            }
+            if pmax < 1e-300 {
+                return None; // singular
+            }
+            if piv != k {
+                for j in 0..n {
+                    let (r1, r2) = (a[(k, j)], a[(piv, j)]);
+                    a[(k, j)] = r2;
+                    a[(piv, j)] = r1;
+                }
+                for j in 0..m {
+                    let (r1, r2) = (x[(k, j)], x[(piv, j)]);
+                    x[(k, j)] = r2;
+                    x[(piv, j)] = r1;
+                }
+            }
+            let inv_piv = c64::ONE / a[(k, k)];
+            for i in k + 1..n {
+                let f = a[(i, k)] * inv_piv;
+                if f == c64::ZERO {
+                    continue;
+                }
+                for j in k..n {
+                    a[(i, j)] = a[(i, j)] - f * a[(k, j)];
+                }
+                for j in 0..m {
+                    x[(i, j)] = x[(i, j)] - f * x[(k, j)];
+                }
+            }
+        }
+        // back substitution
+        for k in (0..n).rev() {
+            let inv_piv = c64::ONE / a[(k, k)];
+            for j in 0..m {
+                let mut s = x[(k, j)];
+                for i in k + 1..n {
+                    s = s - a[(k, i)] * x[(i, j)];
+                }
+                x[(k, j)] = s * inv_piv;
+            }
+        }
+        Some(x)
+    }
+
+    /// Matrix inverse (via [`CMatrix::solve`] against the identity).
+    pub fn inverse(&self) -> Option<CMatrix> {
+        self.solve(&CMatrix::identity(self.rows))
+    }
+
+    /// Schur complement `D - C G^{-1} B` computed directly (the "DSP way").
+    pub fn schur_direct(g: &CMatrix, b: &CMatrix, c: &CMatrix, d: &CMatrix) -> Option<CMatrix> {
+        let ginv_b = g.solve(b)?;
+        Some(d.sub(&c.matmul(&ginv_b)))
+    }
+
+    /// Schur complement via **Faddeev elimination** of `[[G, B], [C, D]]`
+    /// with partial pivoting over the G-rows — the same algorithm the
+    /// FGP's systolic array executes (paper §II). Row swaps during
+    /// pivoting are the PEmult "swap" mode.
+    pub fn schur_faddeev(g: &CMatrix, b: &CMatrix, c: &CMatrix, d: &CMatrix) -> Option<CMatrix> {
+        let n = g.rows;
+        assert!(g.is_square() && d.is_square());
+        assert_eq!(b.rows, n);
+        assert_eq!(c.cols, n);
+        let rows = n + c.rows;
+        let cols = n + b.cols;
+        let mut w = CMatrix::zeros(rows, cols);
+        for i in 0..n {
+            for j in 0..n {
+                w[(i, j)] = g[(i, j)];
+            }
+            for j in 0..b.cols {
+                w[(i, n + j)] = b[(i, j)];
+            }
+        }
+        for i in 0..c.rows {
+            for j in 0..n {
+                w[(n + i, j)] = c[(i, j)];
+            }
+            for j in 0..d.cols {
+                w[(n + i, n + j)] = d[(i, j)];
+            }
+        }
+        for k in 0..n {
+            // pivot among remaining G-rows only (the triangular border
+            // sees only the top block)
+            let (mut piv, mut pmax) = (k, w[(k, k)].abs());
+            for i in k + 1..n {
+                let v = w[(i, k)].abs();
+                if v > pmax {
+                    piv = i;
+                    pmax = v;
+                }
+            }
+            if pmax < 1e-300 {
+                return None;
+            }
+            if piv != k {
+                for j in 0..cols {
+                    let (r1, r2) = (w[(k, j)], w[(piv, j)]);
+                    w[(k, j)] = r2;
+                    w[(piv, j)] = r1;
+                }
+            }
+            let inv_piv = c64::ONE / w[(k, k)];
+            for i in k + 1..rows {
+                let f = w[(i, k)] * inv_piv;
+                if f == c64::ZERO {
+                    continue;
+                }
+                for j in k..cols {
+                    w[(i, j)] = w[(i, j)] - f * w[(k, j)];
+                }
+            }
+        }
+        let mut out = CMatrix::zeros(d.rows, d.cols);
+        for i in 0..d.rows {
+            for j in 0..d.cols {
+                out[(i, j)] = w[(n + i, n + j)];
+            }
+        }
+        Some(out)
+    }
+
+    /// Random complex matrix (test/workload helper).
+    pub fn random(rng: &mut crate::testutil::Rng, rows: usize, cols: usize) -> CMatrix {
+        let mut m = CMatrix::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            *v = c64::new(rng.normal(), rng.normal());
+        }
+        m
+    }
+
+    /// Random Hermitian positive-definite matrix `M M^H + ridge I`.
+    pub fn random_psd(rng: &mut crate::testutil::Rng, n: usize, ridge: f64) -> CMatrix {
+        let m = CMatrix::random(rng, n, n);
+        m.matmul(&m.hermitian())
+            .add(&CMatrix::scaled_identity(n, ridge))
+    }
+
+    /// Hermitian-symmetry defect (0 for exactly Hermitian matrices).
+    pub fn hermitian_defect(&self) -> f64 {
+        self.dist(&self.hermitian())
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for CMatrix {
+    type Output = c64;
+    fn index(&self, (i, j): (usize, usize)) -> &c64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for CMatrix {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut c64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Display for CMatrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                write!(f, "{}\t", self[(i, j)])?;
+            }
+            writeln!(f)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{proptest_cases, Rng};
+
+    #[test]
+    fn identity_is_matmul_neutral() {
+        let mut rng = Rng::new(1);
+        let a = CMatrix::random(&mut rng, 4, 4);
+        let i = CMatrix::identity(4);
+        assert!(a.matmul(&i).dist(&a) < 1e-12);
+        assert!(i.matmul(&a).dist(&a) < 1e-12);
+    }
+
+    #[test]
+    fn hermitian_is_involution() {
+        proptest_cases(50, |rng| {
+            let a = CMatrix::random(rng, 3, 5);
+            assert!(a.hermitian().hermitian().dist(&a) < 1e-12);
+        });
+    }
+
+    #[test]
+    fn matmul_hermitian_reverses() {
+        proptest_cases(50, |rng| {
+            let a = CMatrix::random(rng, 3, 4);
+            let b = CMatrix::random(rng, 4, 2);
+            let lhs = a.matmul(&b).hermitian();
+            let rhs = b.hermitian().matmul(&a.hermitian());
+            assert!(lhs.dist(&rhs) < 1e-10);
+        });
+    }
+
+    #[test]
+    fn solve_recovers_solution() {
+        proptest_cases(50, |rng| {
+            let n = 2 + rng.below(5);
+            let a = CMatrix::random_psd(rng, n, 0.5);
+            let x = CMatrix::random(rng, n, 2);
+            let b = a.matmul(&x);
+            let got = a.solve(&b).expect("psd is nonsingular");
+            assert!(got.dist(&x) < 1e-8 * (1.0 + x.max_abs()));
+        });
+    }
+
+    #[test]
+    fn inverse_times_self_is_identity() {
+        proptest_cases(30, |rng| {
+            let n = 2 + rng.below(4);
+            let a = CMatrix::random_psd(rng, n, 1.0);
+            let inv = a.inverse().unwrap();
+            assert!(a.matmul(&inv).dist(&CMatrix::identity(n)) < 1e-8);
+        });
+    }
+
+    #[test]
+    fn singular_solve_returns_none() {
+        let a = CMatrix::zeros(3, 3);
+        assert!(a.solve(&CMatrix::identity(3)).is_none());
+    }
+
+    #[test]
+    fn faddeev_matches_direct_schur() {
+        proptest_cases(60, |rng| {
+            let n = 2 + rng.below(4);
+            let m = 2 + rng.below(4);
+            let g = CMatrix::random_psd(rng, n, 0.5);
+            let b = CMatrix::random(rng, n, m);
+            let c = CMatrix::random(rng, m, n);
+            let d = CMatrix::random(rng, m, m);
+            let fad = CMatrix::schur_faddeev(&g, &b, &c, &d).unwrap();
+            let dir = CMatrix::schur_direct(&g, &b, &c, &d).unwrap();
+            assert!(
+                fad.dist(&dir) < 1e-8 * (1.0 + dir.max_abs()),
+                "dist {}",
+                fad.dist(&dir)
+            );
+        });
+    }
+
+    #[test]
+    fn faddeev_identity_g_degenerates_to_mms() {
+        let mut rng = Rng::new(3);
+        let g = CMatrix::identity(4);
+        let b = CMatrix::random(&mut rng, 4, 4);
+        let c = CMatrix::random(&mut rng, 4, 4);
+        let d = CMatrix::random(&mut rng, 4, 4);
+        let fad = CMatrix::schur_faddeev(&g, &b, &c, &d).unwrap();
+        assert!(fad.dist(&d.sub(&c.matmul(&b))) < 1e-10);
+    }
+
+    #[test]
+    fn faddeev_singular_g_returns_none() {
+        let g = CMatrix::zeros(2, 2);
+        let b = CMatrix::identity(2);
+        let c = CMatrix::identity(2);
+        let d = CMatrix::identity(2);
+        assert!(CMatrix::schur_faddeev(&g, &b, &c, &d).is_none());
+    }
+
+    #[test]
+    fn psd_has_positive_diagonal() {
+        proptest_cases(30, |rng| {
+            let v = CMatrix::random_psd(rng, 4, 0.1);
+            for i in 0..4 {
+                assert!(v[(i, i)].re > 0.0);
+                assert!(v[(i, i)].im.abs() < 1e-10);
+            }
+            assert!(v.hermitian_defect() < 1e-10);
+        });
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        proptest_cases(30, |rng| {
+            let a = CMatrix::random(rng, 4, 3);
+            let x: CVector = (0..3).map(|_| c64::new(rng.normal(), rng.normal())).collect();
+            let via_vec = a.matvec(&x);
+            let mut xm = CMatrix::zeros(3, 1);
+            for (i, v) in x.iter().enumerate() {
+                xm[(i, 0)] = *v;
+            }
+            let via_mat = a.matmul(&xm);
+            for i in 0..4 {
+                assert!((via_vec[i] - via_mat[(i, 0)]).abs() < 1e-12);
+            }
+        });
+    }
+}

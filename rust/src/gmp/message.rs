@@ -1,0 +1,119 @@
+//! Gaussian messages in both parameterizations (paper §I).
+//!
+//! GMP exchanges either a mean vector `m` with covariance `V`, or the
+//! transformed pair `Wm` with weight matrix `W = V^{-1}` — the dual form
+//! that makes the equality node additive. Conversions require a solve,
+//! which is why the hardware prefers schedules that stay in one form.
+
+use super::matrix::{c64, CMatrix, CVector};
+
+/// A (scaled) multivariate Gaussian message.
+#[derive(Clone, Debug)]
+pub struct GaussMessage {
+    /// Mean vector `m`.
+    pub mean: CVector,
+    /// Covariance matrix `V` (Hermitian PSD).
+    pub cov: CMatrix,
+}
+
+impl GaussMessage {
+    pub fn new(mean: CVector, cov: CMatrix) -> Self {
+        assert_eq!(mean.len(), cov.rows);
+        assert!(cov.is_square());
+        GaussMessage { mean, cov }
+    }
+
+    /// Dimension of the variable the message is about.
+    pub fn dim(&self) -> usize {
+        self.mean.len()
+    }
+
+    /// Zero-mean message with covariance `v * I` (a vague / noise prior).
+    pub fn isotropic(n: usize, v: f64) -> Self {
+        GaussMessage {
+            mean: vec![c64::ZERO; n],
+            cov: CMatrix::scaled_identity(n, v),
+        }
+    }
+
+    /// Point observation `y` with noise covariance `sigma2 * I`.
+    pub fn observation(y: &[c64], sigma2: f64) -> Self {
+        GaussMessage {
+            mean: y.to_vec(),
+            cov: CMatrix::scaled_identity(y.len(), sigma2),
+        }
+    }
+
+    /// Weight form `(W, Wm)` with `W = V^{-1}`; `None` if V is singular.
+    pub fn to_weight_form(&self) -> Option<(CMatrix, CVector)> {
+        let w = self.cov.inverse()?;
+        let wm = w.matvec(&self.mean);
+        Some((w, wm))
+    }
+
+    /// Reconstruct from weight form; `None` if W is singular.
+    pub fn from_weight_form(w: &CMatrix, wm: &[c64]) -> Option<Self> {
+        let v = w.inverse()?;
+        let m = v.matvec(wm);
+        Some(GaussMessage { mean: m, cov: v })
+    }
+
+    /// Total uncertainty `Re tr(V)`.
+    pub fn trace_cov(&self) -> f64 {
+        self.cov.trace().re
+    }
+
+    /// Max-abs distance between two messages (mean and covariance).
+    pub fn dist(&self, other: &GaussMessage) -> f64 {
+        let dm = self
+            .mean
+            .iter()
+            .zip(&other.mean)
+            .map(|(a, b)| (*a - *b).abs())
+            .fold(0.0, f64::max);
+        dm.max(self.cov.dist(&other.cov))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{proptest_cases, Rng};
+
+    fn random_msg(rng: &mut Rng, n: usize) -> GaussMessage {
+        let cov = CMatrix::random_psd(rng, n, 0.5);
+        let mean = (0..n).map(|_| c64::new(rng.normal(), rng.normal())).collect();
+        GaussMessage::new(mean, cov)
+    }
+
+    #[test]
+    fn weight_form_roundtrip() {
+        proptest_cases(40, |rng| {
+            let n = 3 + rng.below(3);
+            let msg = random_msg(rng, n);
+            let (w, wm) = msg.to_weight_form().unwrap();
+            let back = GaussMessage::from_weight_form(&w, &wm).unwrap();
+            assert!(back.dist(&msg) < 1e-7, "dist {}", back.dist(&msg));
+        });
+    }
+
+    #[test]
+    fn isotropic_has_expected_trace() {
+        let m = GaussMessage::isotropic(4, 2.5);
+        assert!((m.trace_cov() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn observation_carries_value() {
+        let y = vec![c64::new(1.0, -1.0), c64::new(0.5, 2.0)];
+        let m = GaussMessage::observation(&y, 0.1);
+        assert_eq!(m.mean, y);
+        assert!((m.cov[(0, 0)].re - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singular_cov_has_no_weight_form() {
+        let m = GaussMessage::new(vec![c64::ZERO; 2], CMatrix::zeros(2, 2));
+        assert!(m.to_weight_form().is_none());
+    }
+}

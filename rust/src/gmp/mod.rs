@@ -1,0 +1,21 @@
+//! S2 — Gaussian message passing (GMP) golden library.
+//!
+//! Double-precision reference implementation of everything the FGP
+//! computes: complex linear algebra ([`matrix`]), Gaussian messages in
+//! both parameterizations ([`message`]), the node update rules of paper
+//! Fig. 1 ([`nodes`]), and factor-graph construction plus message
+//! schedules ([`graph`], [`schedule`]).
+//!
+//! This is the semantic ground truth: the cycle-accurate simulator, the
+//! Pallas kernels, and the PJRT runtime are all validated against it.
+
+pub mod graph;
+pub mod matrix;
+pub mod message;
+pub mod nodes;
+pub mod schedule;
+
+pub use graph::{EdgeId, FactorGraph, NodeId, NodeKind};
+pub use matrix::{c64, CMatrix, CVector};
+pub use message::GaussMessage;
+pub use schedule::{MsgId, Schedule, ScheduleStep, StepOp};

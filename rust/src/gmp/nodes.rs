@@ -1,0 +1,269 @@
+//! Node message-update rules (paper Fig. 1) — the f64 golden semantics.
+//!
+//! The FGP supports simple nodes (equality `=`, addition `+`, matrix
+//! multiplier `A`) and compound nodes composed of two simple nodes. The
+//! compound *observation* node (multiplier feeding an adder) is the
+//! workhorse — its update is the Kalman measurement update, and it is the
+//! node Table II benchmarks. Every rule here returns the outgoing message
+//! given the incoming ones.
+
+use super::matrix::{c64, CMatrix, CVector};
+use super::message::GaussMessage;
+
+/// Errors a node update can raise (singular matrices only — shapes are
+/// asserted because they are programming errors, not data errors).
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum NodeError {
+    #[error("singular matrix encountered in {0}")]
+    Singular(&'static str),
+}
+
+/// Equality node: Z s.t. X = Y = Z. Natural in weight form:
+/// `W_Z = W_X + W_Y`, `(Wm)_Z = (Wm)_X + (Wm)_Y` (Fig. 1).
+pub fn equality(x: &GaussMessage, y: &GaussMessage) -> Result<GaussMessage, NodeError> {
+    let (wx, wxm) = x.to_weight_form().ok_or(NodeError::Singular("equality: V_X"))?;
+    let (wy, wym) = y.to_weight_form().ok_or(NodeError::Singular("equality: V_Y"))?;
+    let wz = wx.add(&wy);
+    let wzm: CVector = wxm.iter().zip(&wym).map(|(a, b)| *a + *b).collect();
+    GaussMessage::from_weight_form(&wz, &wzm).ok_or(NodeError::Singular("equality: W_Z"))
+}
+
+/// Additive node: Z = X + Y. Natural in moment form:
+/// `m_Z = m_X + m_Y`, `V_Z = V_X + V_Y` (Fig. 1).
+pub fn add(x: &GaussMessage, y: &GaussMessage) -> GaussMessage {
+    assert_eq!(x.dim(), y.dim());
+    GaussMessage {
+        mean: x.mean.iter().zip(&y.mean).map(|(a, b)| *a + *b).collect(),
+        cov: x.cov.add(&y.cov),
+    }
+}
+
+/// Matrix-multiplier node: Y = A X.
+/// `m_Y = A m_X`, `V_Y = A V_X A^H` (Fig. 1).
+pub fn multiply(x: &GaussMessage, a: &CMatrix) -> GaussMessage {
+    assert_eq!(a.cols, x.dim());
+    GaussMessage {
+        mean: a.matvec(&x.mean),
+        cov: a.matmul(&x.cov).matmul(&a.hermitian()),
+    }
+}
+
+/// Compound **observation** node (multiplier A into an adder observed as Y):
+/// the message towards Z (paper Fig. 2 dataflow / Kalman measurement
+/// update):
+///
+/// ```text
+///   G   = V_Y + A V_X A^H
+///   V_Z = V_X - V_X A^H G^{-1} A V_X
+///   m_Z = m_X + V_X A^H G^{-1} (m_Y - A m_X)
+/// ```
+///
+/// `faddeev = true` routes the Schur complement through the elimination
+/// scheme the systolic array uses (identical result, same algorithm the
+/// hardware runs); `false` uses a direct solve (the "DSP way").
+pub fn compound_observation(
+    x: &GaussMessage,
+    y: &GaussMessage,
+    a: &CMatrix,
+    faddeev: bool,
+) -> Result<GaussMessage, NodeError> {
+    let n = x.dim();
+    assert_eq!(a.cols, n);
+    assert_eq!(a.rows, y.dim());
+    let ah = a.hermitian();
+    let t1 = x.cov.matmul(&ah); // V_X A^H              (mma)
+    let avx = a.matmul(&x.cov); // A V_X = t1^H for Hermitian V_X
+    let g = y.cov.add(&a.matmul(&t1)); // G             (mms)
+
+    let vz = if faddeev {
+        CMatrix::schur_faddeev(&g, &avx, &t1, &x.cov)
+            .ok_or(NodeError::Singular("compound: G (faddeev)"))?
+    } else {
+        CMatrix::schur_direct(&g, &avx, &t1, &x.cov)
+            .ok_or(NodeError::Singular("compound: G (direct)"))?
+    };
+
+    // innovation r = m_Y - A m_X, gain column = G^{-1} r
+    let amx = a.matvec(&x.mean);
+    let r: CVector = y.mean.iter().zip(&amx).map(|(a, b)| *a - *b).collect();
+    let mut rm = CMatrix::zeros(r.len(), 1);
+    for (i, v) in r.iter().enumerate() {
+        rm[(i, 0)] = *v;
+    }
+    let ginv_r = g.solve(&rm).ok_or(NodeError::Singular("compound: G (mean)"))?;
+    let ginv_r: CVector = (0..ginv_r.rows).map(|i| ginv_r[(i, 0)]).collect();
+    let corr = t1.matvec(&ginv_r);
+    let mz: CVector = x.mean.iter().zip(&corr).map(|(m, c)| *m + *c).collect();
+
+    Ok(GaussMessage::new(mz, vz))
+}
+
+/// Compound **equality-multiplier** node in weight form (the dual
+/// compound of Fig. 1): for Y = A X with equality constraint, the
+/// weight-form update towards Z is
+///
+/// ```text
+///   W_Z    = W_X + A^H W_Y A
+///   (Wm)_Z = (Wm)_X + A^H (Wm)_Y
+/// ```
+pub fn compound_equality_weight(
+    wx: &CMatrix,
+    wxm: &[c64],
+    wy: &CMatrix,
+    wym: &[c64],
+    a: &CMatrix,
+) -> (CMatrix, CVector) {
+    let ah = a.hermitian();
+    let wz = wx.add(&ah.matmul(wy).matmul(a));
+    let aw = ah.matvec(wym);
+    let wzm = wxm.iter().zip(&aw).map(|(x, y)| *x + *y).collect();
+    (wz, wzm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{proptest_cases, Rng};
+
+    fn random_msg(rng: &mut Rng, n: usize) -> GaussMessage {
+        GaussMessage::new(
+            (0..n).map(|_| c64::new(rng.normal(), rng.normal())).collect(),
+            CMatrix::random_psd(rng, n, 0.5),
+        )
+    }
+
+    #[test]
+    fn equality_in_weight_form_is_additive() {
+        proptest_cases(30, |rng| {
+            let n = 2 + rng.below(3);
+            let x = random_msg(rng, n);
+            let y = random_msg(rng, n);
+            let z = equality(&x, &y).unwrap();
+            let (wx, _) = x.to_weight_form().unwrap();
+            let (wy, _) = y.to_weight_form().unwrap();
+            let (wz, _) = z.to_weight_form().unwrap();
+            assert!(wz.dist(&wx.add(&wy)) < 1e-6 * (1.0 + wz.max_abs()));
+        });
+    }
+
+    #[test]
+    fn equality_reduces_uncertainty() {
+        proptest_cases(30, |rng| {
+            let n = 3;
+            let x = random_msg(rng, n);
+            let y = random_msg(rng, n);
+            let z = equality(&x, &y).unwrap();
+            assert!(z.trace_cov() <= x.trace_cov() + 1e-9);
+            assert!(z.trace_cov() <= y.trace_cov() + 1e-9);
+        });
+    }
+
+    #[test]
+    fn add_node_sums_moments() {
+        let mut rng = Rng::new(5);
+        let x = random_msg(&mut rng, 3);
+        let y = random_msg(&mut rng, 3);
+        let z = add(&x, &y);
+        assert!((z.trace_cov() - x.trace_cov() - y.trace_cov()).abs() < 1e-10);
+        for i in 0..3 {
+            assert!((z.mean[i] - (x.mean[i] + y.mean[i])).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn multiply_by_identity_is_noop() {
+        let mut rng = Rng::new(6);
+        let x = random_msg(&mut rng, 4);
+        let z = multiply(&x, &CMatrix::identity(4));
+        assert!(z.dist(&x) < 1e-12);
+    }
+
+    #[test]
+    fn multiply_keeps_cov_hermitian() {
+        proptest_cases(30, |rng| {
+            let x = random_msg(rng, 4);
+            let a = CMatrix::random(rng, 4, 4);
+            let z = multiply(&x, &a);
+            assert!(z.cov.hermitian_defect() < 1e-9 * (1.0 + z.cov.max_abs()));
+        });
+    }
+
+    #[test]
+    fn compound_faddeev_matches_direct() {
+        proptest_cases(60, |rng| {
+            let n = 2 + rng.below(4);
+            let x = random_msg(rng, n);
+            let y = random_msg(rng, n);
+            let a = CMatrix::random(rng, n, n);
+            let zf = compound_observation(&x, &y, &a, true).unwrap();
+            let zd = compound_observation(&x, &y, &a, false).unwrap();
+            assert!(zf.dist(&zd) < 1e-7 * (1.0 + zf.cov.max_abs()), "dist {}", zf.dist(&zd));
+        });
+    }
+
+    #[test]
+    fn compound_shrinks_covariance() {
+        proptest_cases(30, |rng| {
+            let x = random_msg(rng, 4);
+            let y = random_msg(rng, 4);
+            let a = CMatrix::random(rng, 4, 4);
+            let z = compound_observation(&x, &y, &a, true).unwrap();
+            assert!(z.trace_cov() <= x.trace_cov() + 1e-9);
+        });
+    }
+
+    #[test]
+    fn compound_with_vague_observation_is_noop() {
+        // V_Y -> infinity means no information: V_Z ~ V_X, m_Z ~ m_X
+        let mut rng = Rng::new(9);
+        let x = random_msg(&mut rng, 3);
+        let y = GaussMessage::isotropic(3, 1e9);
+        let a = CMatrix::identity(3);
+        let z = compound_observation(&x, &y, &a, false).unwrap();
+        assert!(z.cov.dist(&x.cov) < 1e-5 * x.cov.max_abs() * 10.0);
+    }
+
+    #[test]
+    fn compound_with_exact_observation_pins_mean() {
+        // V_Y -> 0 through identity A: posterior mean == observation
+        let mut rng = Rng::new(10);
+        let x = random_msg(&mut rng, 3);
+        let yv: Vec<c64> = (0..3).map(|_| c64::new(rng.normal(), rng.normal())).collect();
+        let y = GaussMessage::observation(&yv, 1e-9);
+        let z = compound_observation(&x, &y, &CMatrix::identity(3), false).unwrap();
+        for i in 0..3 {
+            assert!((z.mean[i] - yv[i]).abs() < 1e-4);
+        }
+        assert!(z.trace_cov() < 1e-6);
+    }
+
+    #[test]
+    fn compound_equality_weight_matches_moment_path() {
+        // Verify the dual-form compound against converting through moments.
+        proptest_cases(20, |rng| {
+            let n = 3;
+            let x = random_msg(rng, n);
+            let y = random_msg(rng, n);
+            let a = CMatrix::random_psd(rng, n, 1.0); // invertible A
+            let (wx, wxm) = x.to_weight_form().unwrap();
+            let (wy, wym) = y.to_weight_form().unwrap();
+            let (wz, wzm) = compound_equality_weight(&wx, &wxm, &wy, &wym, &a);
+            let z = GaussMessage::from_weight_form(&wz, &wzm).unwrap();
+            // moment path: pass Y's message backwards through A, then equality
+            let ainv = a.inverse().unwrap();
+            let y_through = multiply(&y, &ainv);
+            let expect = equality(&x, &y_through).unwrap();
+            assert!(z.dist(&expect) < 1e-5 * (1.0 + expect.cov.max_abs()), "dist {}", z.dist(&expect));
+        });
+    }
+
+    #[test]
+    fn singular_inputs_error_not_panic() {
+        let x = GaussMessage::new(vec![c64::ZERO; 2], CMatrix::zeros(2, 2));
+        let y = GaussMessage::isotropic(2, 1.0);
+        assert_eq!(
+            equality(&x, &y).unwrap_err(),
+            NodeError::Singular("equality: V_X")
+        );
+    }
+}

@@ -1,0 +1,277 @@
+//! Message-update schedules (paper §IV, Fig. 7 left).
+//!
+//! A [`Schedule`] is the ordered list of node updates derived from a
+//! [`FactorGraph`]: "a message update schedule is first derived from the
+//! high level description". Each step names the node, its input message
+//! ids and the output message id. Message ids at this level are *virtual*
+//! (one per distinct message); the compiler's allocator later remaps them
+//! onto physical memory slots (Fig. 7 right).
+//!
+//! The schedule can be executed directly against the golden node rules —
+//! that execution is the semantic reference for both the FGP simulator
+//! and the compiled program.
+
+use std::collections::HashMap;
+
+use super::graph::{EdgeId, FactorGraph, NodeId, NodeKind, StateId};
+use super::message::GaussMessage;
+use super::nodes::{self, NodeError};
+
+/// Virtual message identifier (pre-allocation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct MsgId(pub usize);
+
+/// What a schedule step computes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StepOp {
+    Equality { x: MsgId, y: MsgId },
+    Add { x: MsgId, y: MsgId },
+    Multiply { x: MsgId, a: StateId },
+    CompoundObservation { x: MsgId, y: MsgId, a: StateId },
+    CompoundEquality { x: MsgId, y: MsgId, a: StateId },
+}
+
+impl StepOp {
+    pub fn inputs(&self) -> Vec<MsgId> {
+        match self {
+            StepOp::Equality { x, y }
+            | StepOp::Add { x, y }
+            | StepOp::CompoundObservation { x, y, .. }
+            | StepOp::CompoundEquality { x, y, .. } => vec![*x, *y],
+            StepOp::Multiply { x, .. } => vec![*x],
+        }
+    }
+
+    pub fn state(&self) -> Option<StateId> {
+        match self {
+            StepOp::Multiply { a, .. }
+            | StepOp::CompoundObservation { a, .. }
+            | StepOp::CompoundEquality { a, .. } => Some(*a),
+            _ => None,
+        }
+    }
+}
+
+/// One node update in the schedule.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScheduleStep {
+    pub node: NodeId,
+    pub op: StepOp,
+    pub out: MsgId,
+}
+
+/// An ordered message-update schedule plus the external bindings.
+#[derive(Clone, Debug, Default)]
+pub struct Schedule {
+    pub steps: Vec<ScheduleStep>,
+    /// Messages loaded before execution: (virtual id, source edge).
+    pub inputs: Vec<(MsgId, EdgeId)>,
+    /// Messages read back after execution: (virtual id, edge).
+    pub outputs: Vec<(MsgId, EdgeId)>,
+    /// Streamed inputs: (virtual id, stream group) — refilled by the host
+    /// per section instead of preloaded (see compiler docs).
+    pub streams: Vec<(MsgId, u32)>,
+    /// Total number of virtual message ids.
+    pub num_msgs: usize,
+}
+
+impl Schedule {
+    /// Derive the forward-sweep schedule of a graph: nodes in insertion
+    /// order, one virtual message id per edge. This mirrors the paper's
+    /// compiler front-end which walks the Matlab loop in program order.
+    pub fn forward_sweep(graph: &FactorGraph) -> Schedule {
+        // Every edge gets a distinct virtual id (Fig. 7 left: "each
+        // message has an identifier assigned").
+        let edge_msg: HashMap<EdgeId, MsgId> = (0..graph.edges.len())
+            .map(|i| (EdgeId(i), MsgId(i)))
+            .collect();
+
+        let mut steps = Vec::with_capacity(graph.nodes.len());
+        for (i, node) in graph.nodes.iter().enumerate() {
+            let get = |e: EdgeId| edge_msg[&e];
+            let op = match &node.kind {
+                NodeKind::Equality => StepOp::Equality {
+                    x: get(node.inputs[0]),
+                    y: get(node.inputs[1]),
+                },
+                NodeKind::Add => StepOp::Add {
+                    x: get(node.inputs[0]),
+                    y: get(node.inputs[1]),
+                },
+                NodeKind::Multiply { a } => StepOp::Multiply { x: get(node.inputs[0]), a: *a },
+                NodeKind::CompoundObservation { a } => StepOp::CompoundObservation {
+                    x: get(node.inputs[0]),
+                    y: get(node.inputs[1]),
+                    a: *a,
+                },
+                NodeKind::CompoundEquality { a } => StepOp::CompoundEquality {
+                    x: get(node.inputs[0]),
+                    y: get(node.inputs[1]),
+                    a: *a,
+                },
+            };
+            steps.push(ScheduleStep { node: NodeId(i), op, out: get(node.output) });
+        }
+
+        Schedule {
+            steps,
+            inputs: graph.input_edges().map(|e| (edge_msg[&e], e)).collect(),
+            outputs: graph.output_edges().map(|e| (edge_msg[&e], e)).collect(),
+            streams: graph
+                .edges
+                .iter()
+                .enumerate()
+                .filter_map(|(i, e)| e.stream_group.map(|g| (edge_msg[&EdgeId(i)], g)))
+                .collect(),
+            num_msgs: graph.edges.len(),
+        }
+    }
+
+    /// Is this message a streamed input (host-refilled per section)?
+    pub fn is_streamed(&self, id: MsgId) -> bool {
+        self.streams.iter().any(|(m, _)| *m == id)
+    }
+
+    /// Execute the schedule with the golden f64 node rules.
+    ///
+    /// `initial` binds input virtual ids to messages. Returns the full
+    /// message environment (virtual id -> message).
+    pub fn execute_golden(
+        &self,
+        graph: &FactorGraph,
+        initial: &HashMap<MsgId, GaussMessage>,
+        faddeev: bool,
+    ) -> Result<HashMap<MsgId, GaussMessage>, NodeError> {
+        let mut env: HashMap<MsgId, GaussMessage> = initial.clone();
+        for step in &self.steps {
+            let msg = |id: &MsgId| -> &GaussMessage {
+                env.get(id).unwrap_or_else(|| panic!("schedule uses undefined message {id:?}"))
+            };
+            let out = match &step.op {
+                StepOp::Equality { x, y } => nodes::equality(msg(x), msg(y))?,
+                StepOp::Add { x, y } => nodes::add(msg(x), msg(y)),
+                StepOp::Multiply { x, a } => nodes::multiply(msg(x), graph.state(*a)),
+                StepOp::CompoundObservation { x, y, a } => {
+                    nodes::compound_observation(msg(x), msg(y), graph.state(*a), faddeev)?
+                }
+                StepOp::CompoundEquality { x, y, a } => {
+                    // weight-form dual executed through moment conversion
+                    let (wx, wxm) = msg(x)
+                        .to_weight_form()
+                        .ok_or(NodeError::Singular("schedule: V_X weight"))?;
+                    let (wy, wym) = msg(y)
+                        .to_weight_form()
+                        .ok_or(NodeError::Singular("schedule: V_Y weight"))?;
+                    let (wz, wzm) =
+                        nodes::compound_equality_weight(&wx, &wxm, &wy, &wym, graph.state(*a));
+                    GaussMessage::from_weight_form(&wz, &wzm)
+                        .ok_or(NodeError::Singular("schedule: W_Z"))?
+                }
+            };
+            env.insert(step.out, out);
+        }
+        Ok(env)
+    }
+
+    /// Ids which are live (still needed) at each step — used by tests and
+    /// by the compiler's allocator. Entry `i` is the set of ids that must
+    /// survive *past* step i's execution.
+    pub fn liveness(&self) -> Vec<Vec<MsgId>> {
+        let mut live_after = vec![Vec::new(); self.steps.len()];
+        let mut live: Vec<MsgId> = self.outputs.iter().map(|(m, _)| *m).collect();
+        for (i, step) in self.steps.iter().enumerate().rev() {
+            live.retain(|m| *m != step.out);
+            live_after[i] = live.clone();
+            for input in step.op.inputs() {
+                if !live.contains(&input) {
+                    live.push(input);
+                }
+            }
+        }
+        live_after
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gmp::matrix::{c64, CMatrix};
+    use crate::testutil::Rng;
+
+    fn rls_setup(sections: usize) -> (FactorGraph, Schedule, HashMap<MsgId, GaussMessage>) {
+        let mut rng = Rng::new(42);
+        let n = 4;
+        let mut g = FactorGraph::new();
+        let a_list: Vec<CMatrix> = (0..sections).map(|_| CMatrix::random(&mut rng, n, n)).collect();
+        let (_states, _obs) = g.rls_chain(n, &a_list);
+        let sched = Schedule::forward_sweep(&g);
+        let mut init = HashMap::new();
+        for (mid, eid) in &sched.inputs {
+            let label = &g.edges[eid.0].label;
+            let msg = if label == "msg_prior" {
+                GaussMessage::isotropic(n, 10.0)
+            } else {
+                let y: Vec<c64> = (0..n).map(|_| c64::new(rng.normal(), rng.normal())).collect();
+                GaussMessage::observation(&y, 0.1)
+            };
+            init.insert(*mid, msg);
+        }
+        (g, sched, init)
+    }
+
+    #[test]
+    fn forward_sweep_orders_sections() {
+        let (_g, sched, _init) = rls_setup(3);
+        assert_eq!(sched.steps.len(), 3);
+        // each step consumes the previous step's output
+        for w in sched.steps.windows(2) {
+            assert!(w[1].op.inputs().contains(&w[0].out));
+        }
+    }
+
+    #[test]
+    fn execute_golden_produces_all_outputs() {
+        let (g, sched, init) = rls_setup(3);
+        let env = sched.execute_golden(&g, &init, true).unwrap();
+        for (mid, _) in &sched.outputs {
+            assert!(env.contains_key(mid));
+        }
+        // chain shrinks uncertainty monotonically
+        let prior_tr = init[&sched.inputs[0].0].trace_cov();
+        let out_tr = env[&sched.outputs[0].0].trace_cov();
+        assert!(out_tr < prior_tr);
+    }
+
+    #[test]
+    fn faddeev_and_direct_execution_agree() {
+        let (g, sched, init) = rls_setup(4);
+        let env_f = sched.execute_golden(&g, &init, true).unwrap();
+        let env_d = sched.execute_golden(&g, &init, false).unwrap();
+        for (mid, _) in &sched.outputs {
+            let d = env_f[mid].dist(&env_d[mid]);
+            assert!(d < 1e-7 * (1.0 + env_d[mid].cov.max_abs()), "dist {d}");
+        }
+    }
+
+    #[test]
+    fn liveness_shrinks_to_outputs() {
+        let (_g, sched, _init) = rls_setup(3);
+        let live = sched.liveness();
+        // after the last step only nothing extra is live (the output is
+        // produced by the last step itself)
+        assert!(live.last().unwrap().is_empty());
+        // intermediate chain messages die immediately after use
+        for l in &live {
+            assert!(l.len() <= sched.num_msgs);
+        }
+    }
+
+    #[test]
+    fn liveness_keeps_required_inputs() {
+        let (_g, sched, _init) = rls_setup(2);
+        let live = sched.liveness();
+        // observation of section 1 must be live after step 0
+        let obs1 = sched.steps[1].op.inputs()[1];
+        assert!(live[0].contains(&obs1));
+    }
+}

@@ -1,0 +1,630 @@
+//! S3 — The FGP instruction set (paper Table I, Listing 2).
+//!
+//! Six instructions: three datapath-control (`mma`, `mms`, `fad`) — one per
+//! systolic-array operation type of §II — and three program-control
+//! (`smm`, `loop`, `prg`), plus an implicit `halt`. "The arguments of the
+//! instructions are the addresses of the input and output messages in the
+//! memory as well as flags for the Hermitian transpose and negation"
+//! (§III). The paper's Listing 2 does not document its operand fields, so
+//! this module defines a clean 64-bit encoding carrying exactly that
+//! information (documented in DESIGN.md §ISA):
+//!
+//! ```text
+//! bits 63..56 opcode   55..48 srcA   47..40 srcB   39..32 srcC
+//! bits 31..24 dst      23..16 imm_lo 15..8  imm_hi
+//! bit 7 AH   bit 6 BH   bit 5 NEG   bit 4 STATE_B
+//! bit 3 VEC  bit 2 STATE_A          bits 1..0 reserved
+//! ```
+//!
+//! * `STATE_A`/`STATE_B` select an operand from **state memory** (the
+//!   per-node A matrices) instead of message memory.
+//! * `AH`/`BH` request the Transpose unit (Hermitian transpose on read).
+//! * `NEG` negates the product (for `-A(V_X A^H)` forms).
+//! * `VEC` routes the operation through the **mean pipeline**: the Select
+//!   and Mask units feed the n-element mean column of the message slots
+//!   through the array instead of the n x n matrix. This is how one
+//!   compiled compound node updates both V and m (Fig. 2 computes only the
+//!   covariance; the FGP streams the mean as an extra column).
+//! * slot `0xFF` (`acc`) addresses the systolic array's StateReg planes
+//!   instead of memory — chained `mma`→`mms`→`fad` sequences reference
+//!   intermediate results without storing them (§III: "storing
+//!   intermediate results ... is not required").
+
+use std::fmt;
+
+pub mod program;
+
+pub use program::{MemoryImage, Program};
+
+/// Operand source: message memory slot or state memory slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OperandSrc {
+    /// Message memory slot (or `ACC` for the array accumulator).
+    Msg(u8),
+    /// State memory slot (the per-node A matrices).
+    State(u8),
+}
+
+impl OperandSrc {
+    pub fn slot(&self) -> u8 {
+        match self {
+            OperandSrc::Msg(s) | OperandSrc::State(s) => *s,
+        }
+    }
+
+    pub fn is_state(&self) -> bool {
+        matches!(self, OperandSrc::State(_))
+    }
+}
+
+/// Slot value addressing the systolic array's StateReg planes.
+pub const ACC: u8 = 0xFF;
+
+/// Decoded FGP instruction.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Instr {
+    /// Matrix multiplication & accumulate (PEmult *accum* mode):
+    /// `accum = opA * opB`, optionally Hermitian-transposed operands,
+    /// optionally negated product, optionally on the mean pipeline.
+    Mma { a: OperandSrc, a_herm: bool, b: OperandSrc, b_herm: bool, neg: bool, vec: bool },
+    /// Matrix multiplication & shift (PEmult *shift* mode with chained
+    /// addition, §II): `shift = (∓srcC) + opA * opB` — `neg` negates the
+    /// addend, which is how the innovation `A m_X - m_Y` is formed on the
+    /// mean pipeline.
+    Mms {
+        a: OperandSrc,
+        a_herm: bool,
+        b: OperandSrc,
+        b_herm: bool,
+        c: u8,
+        neg: bool,
+        vec: bool,
+    },
+    /// Faddeev algorithm over the doubled matrix `[[G, B], [C, D]]` ->
+    /// Schur complement `D - C G^{-1} B` left in the shift plane. The mean
+    /// columns of G (innovation) and D ride along as the extended column.
+    /// `b_herm` streams quadrant B through the Transpose unit.
+    Fad { g: u8, b: u8, b_herm: bool, c: u8, d: u8 },
+    /// Store the array result planes (matrix + mean) to a message slot.
+    Smm { dst: u8 },
+    /// Loop over the previous `body` instructions, `count` total passes
+    /// ("loop over instructions (FG sections)").
+    Loop { count: u16, body: u8 },
+    /// Marks the start of program `id` in the PM.
+    Prg { id: u8 },
+    /// Stop execution (implicit at the end of each program).
+    Halt,
+}
+
+/// Opcode numbers (bits 63..56).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Opcode {
+    Halt = 0,
+    Mma = 1,
+    Mms = 2,
+    Fad = 3,
+    Smm = 4,
+    Loop = 5,
+    Prg = 6,
+}
+
+impl Opcode {
+    pub fn from_u8(v: u8) -> Option<Opcode> {
+        Some(match v {
+            0 => Opcode::Halt,
+            1 => Opcode::Mma,
+            2 => Opcode::Mms,
+            3 => Opcode::Fad,
+            4 => Opcode::Smm,
+            5 => Opcode::Loop,
+            6 => Opcode::Prg,
+            _ => return None,
+        })
+    }
+}
+
+/// Errors from decoding or parsing.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum IsaError {
+    #[error("unknown opcode {0}")]
+    UnknownOpcode(u8),
+    #[error("reserved bits set in instruction word {0:#018x}")]
+    ReservedBits(u64),
+    #[error("parse error on line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+}
+
+const FLAG_AH: u64 = 1 << 7;
+const FLAG_BH: u64 = 1 << 6;
+const FLAG_NEG: u64 = 1 << 5;
+const FLAG_STATE_B: u64 = 1 << 4;
+const FLAG_VEC: u64 = 1 << 3;
+const FLAG_STATE_A: u64 = 1 << 2;
+const RESERVED_MASK: u64 = 0x3;
+
+impl Instr {
+    /// Encode into the 64-bit instruction word.
+    pub fn encode(&self) -> u64 {
+        let field = |v: u8, shift: u32| (v as u64) << shift;
+        let flags = |ah: bool, bh: bool, neg: bool, sb: bool, vec: bool, sa: bool| {
+            let mut f = 0u64;
+            if ah {
+                f |= FLAG_AH;
+            }
+            if bh {
+                f |= FLAG_BH;
+            }
+            if neg {
+                f |= FLAG_NEG;
+            }
+            if sb {
+                f |= FLAG_STATE_B;
+            }
+            if vec {
+                f |= FLAG_VEC;
+            }
+            if sa {
+                f |= FLAG_STATE_A;
+            }
+            f
+        };
+        match self {
+            Instr::Halt => 0,
+            Instr::Mma { a, a_herm, b, b_herm, neg, vec } => {
+                field(Opcode::Mma as u8, 56)
+                    | field(a.slot(), 48)
+                    | field(b.slot(), 40)
+                    | flags(*a_herm, *b_herm, *neg, b.is_state(), *vec, a.is_state())
+            }
+            Instr::Mms { a, a_herm, b, b_herm, c, neg, vec } => {
+                field(Opcode::Mms as u8, 56)
+                    | field(a.slot(), 48)
+                    | field(b.slot(), 40)
+                    | field(*c, 32)
+                    | flags(*a_herm, *b_herm, *neg, b.is_state(), *vec, a.is_state())
+            }
+            Instr::Fad { g, b, b_herm, c, d } => {
+                field(Opcode::Fad as u8, 56)
+                    | field(*g, 48)
+                    | field(*b, 40)
+                    | field(*c, 32)
+                    | field(*d, 24)
+                    | flags(false, *b_herm, false, false, false, false)
+            }
+            Instr::Smm { dst } => field(Opcode::Smm as u8, 56) | field(*dst, 24),
+            Instr::Loop { count, body } => {
+                field(Opcode::Loop as u8, 56)
+                    | field((*count & 0xFF) as u8, 16)
+                    | field((*count >> 8) as u8, 8)
+                    | field(*body, 48)
+            }
+            Instr::Prg { id } => field(Opcode::Prg as u8, 56) | field(*id, 16),
+        }
+    }
+
+    /// Decode a 64-bit instruction word.
+    pub fn decode(w: u64) -> Result<Instr, IsaError> {
+        if w & RESERVED_MASK != 0 {
+            return Err(IsaError::ReservedBits(w));
+        }
+        let op = Opcode::from_u8((w >> 56) as u8).ok_or(IsaError::UnknownOpcode((w >> 56) as u8))?;
+        let byte = |shift: u32| ((w >> shift) & 0xFF) as u8;
+        let a_src = |slot: u8| {
+            if w & FLAG_STATE_A != 0 {
+                OperandSrc::State(slot)
+            } else {
+                OperandSrc::Msg(slot)
+            }
+        };
+        let b_src = |slot: u8| {
+            if w & FLAG_STATE_B != 0 {
+                OperandSrc::State(slot)
+            } else {
+                OperandSrc::Msg(slot)
+            }
+        };
+        Ok(match op {
+            Opcode::Halt => Instr::Halt,
+            Opcode::Mma => Instr::Mma {
+                a: a_src(byte(48)),
+                a_herm: w & FLAG_AH != 0,
+                b: b_src(byte(40)),
+                b_herm: w & FLAG_BH != 0,
+                neg: w & FLAG_NEG != 0,
+                vec: w & FLAG_VEC != 0,
+            },
+            Opcode::Mms => Instr::Mms {
+                a: a_src(byte(48)),
+                a_herm: w & FLAG_AH != 0,
+                b: b_src(byte(40)),
+                b_herm: w & FLAG_BH != 0,
+                c: byte(32),
+                neg: w & FLAG_NEG != 0,
+                vec: w & FLAG_VEC != 0,
+            },
+            Opcode::Fad => Instr::Fad {
+                g: byte(48),
+                b: byte(40),
+                b_herm: w & FLAG_BH != 0,
+                c: byte(32),
+                d: byte(24),
+            },
+            Opcode::Smm => Instr::Smm { dst: byte(24) },
+            Opcode::Loop => Instr::Loop {
+                count: byte(16) as u16 | ((byte(8) as u16) << 8),
+                body: byte(48),
+            },
+            Opcode::Prg => Instr::Prg { id: byte(16) },
+        })
+    }
+
+    /// Instruction mnemonic.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            Instr::Mma { .. } => "mma",
+            Instr::Mms { .. } => "mms",
+            Instr::Fad { .. } => "fad",
+            Instr::Smm { .. } => "smm",
+            Instr::Loop { .. } => "loop",
+            Instr::Prg { .. } => "prg",
+            Instr::Halt => "halt",
+        }
+    }
+
+    /// Is this a datapath-control instruction (Table I top half)?
+    pub fn is_datapath(&self) -> bool {
+        matches!(self, Instr::Mma { .. } | Instr::Mms { .. } | Instr::Fad { .. })
+    }
+}
+
+fn slot_str(s: u8) -> String {
+    if s == ACC {
+        "acc".into()
+    } else {
+        format!("{s}")
+    }
+}
+
+fn operand_str(src: &OperandSrc, herm: bool) -> String {
+    let prefix = if src.is_state() { "s" } else { "" };
+    let h = if herm { "h" } else { "" };
+    format!("{prefix}{}{h}", slot_str(src.slot()))
+}
+
+fn suffix_str(neg: bool, vec: bool) -> String {
+    let mut s = String::new();
+    if vec {
+        s.push_str(" v");
+    }
+    if neg {
+        s.push_str(" ~");
+    }
+    s
+}
+
+impl fmt::Display for Instr {
+    /// FGP Assembler text (the paper's mnemonics; operands are
+    /// `<slot>[h]` with an `s` prefix for state memory and `acc` for the
+    /// array accumulator; `v` selects the mean pipeline, `~` negates).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Instr::Mma { a, a_herm, b, b_herm, neg, vec } => {
+                write!(
+                    f,
+                    "mma  {} {}{}",
+                    operand_str(a, *a_herm),
+                    operand_str(b, *b_herm),
+                    suffix_str(*neg, *vec)
+                )
+            }
+            Instr::Mms { a, a_herm, b, b_herm, c, neg, vec } => {
+                write!(
+                    f,
+                    "mms  {} {} {}{}",
+                    operand_str(a, *a_herm),
+                    operand_str(b, *b_herm),
+                    slot_str(*c),
+                    suffix_str(*neg, *vec)
+                )
+            }
+            Instr::Fad { g, b, b_herm, c, d } => {
+                let bh = if *b_herm { "h" } else { "" };
+                write!(
+                    f,
+                    "fad  {} {}{bh} {} {}",
+                    slot_str(*g),
+                    slot_str(*b),
+                    slot_str(*c),
+                    slot_str(*d)
+                )
+            }
+            Instr::Smm { dst } => write!(f, "smm  {}", slot_str(*dst)),
+            Instr::Loop { count, body } => write!(f, "loop {count} {body}"),
+            Instr::Prg { id } => write!(f, "prg  {id}"),
+            Instr::Halt => write!(f, "halt"),
+        }
+    }
+}
+
+/// Parse one line of FGP Assembler (inverse of `Display`).
+pub fn parse_line(line: &str, lineno: usize) -> Result<Option<Instr>, IsaError> {
+    let line = line.split(';').next().unwrap_or("").trim(); // ';' comments
+    if line.is_empty() {
+        return Ok(None);
+    }
+    let err = |msg: String| IsaError::Parse { line: lineno, msg };
+    let mut tokens = line.split_whitespace();
+    let mnem = tokens.next().unwrap();
+    let rest: Vec<&str> = tokens.collect();
+
+    fn parse_operand(tok: &str, lineno: usize) -> Result<(OperandSrc, bool), IsaError> {
+        let mut t = tok;
+        let is_state = t.starts_with('s')
+            && t.len() > 1
+            && (t[1..2].chars().all(|c| c.is_ascii_digit()) || t[1..].starts_with("acc"));
+        if is_state {
+            t = &t[1..];
+        }
+        let herm = t.ends_with('h') && t != "h" && t != "acch" || (t.ends_with('h') && t.starts_with("acc") && t != "acc");
+        let t = if t.ends_with('h') && t != "h" { &t[..t.len() - 1] } else { t };
+        let slot = if t == "acc" {
+            ACC
+        } else {
+            t.parse::<u8>().map_err(|_| IsaError::Parse {
+                line: lineno,
+                msg: format!("bad operand '{tok}'"),
+            })?
+        };
+        let src = if is_state { OperandSrc::State(slot) } else { OperandSrc::Msg(slot) };
+        Ok((src, herm))
+    }
+
+    let vec = rest.contains(&"v");
+    let neg = rest.contains(&"~");
+    let args: Vec<&str> = rest.iter().filter(|t| **t != "v" && **t != "~").cloned().collect();
+
+    let instr = match mnem {
+        "mma" => {
+            if args.len() != 2 {
+                return Err(err("mma expects 2 operands".into()));
+            }
+            let (a, a_herm) = parse_operand(args[0], lineno)?;
+            let (b, b_herm) = parse_operand(args[1], lineno)?;
+            Instr::Mma { a, a_herm, b, b_herm, neg, vec }
+        }
+        "mms" => {
+            if args.len() != 3 {
+                return Err(err("mms expects 3 operands".into()));
+            }
+            let (a, a_herm) = parse_operand(args[0], lineno)?;
+            let (b, b_herm) = parse_operand(args[1], lineno)?;
+            let (c, _) = parse_operand(args[2], lineno)?;
+            if c.is_state() {
+                return Err(err("mms addend must be message memory or acc".into()));
+            }
+            Instr::Mms { a, a_herm, b, b_herm, c: c.slot(), neg, vec }
+        }
+        "fad" => {
+            if args.len() != 4 {
+                return Err(err("fad expects 4 operands".into()));
+            }
+            let (g, _) = parse_operand(args[0], lineno)?;
+            let (b, b_herm) = parse_operand(args[1], lineno)?;
+            let (c, _) = parse_operand(args[2], lineno)?;
+            let (d, _) = parse_operand(args[3], lineno)?;
+            Instr::Fad { g: g.slot(), b: b.slot(), b_herm, c: c.slot(), d: d.slot() }
+        }
+        "smm" => {
+            if args.len() != 1 {
+                return Err(err("smm expects 1 operand".into()));
+            }
+            Instr::Smm { dst: parse_operand(args[0], lineno)?.0.slot() }
+        }
+        "loop" => {
+            if args.len() != 2 {
+                return Err(err("loop expects count and body length".into()));
+            }
+            let count = args[0]
+                .parse::<u16>()
+                .map_err(|_| IsaError::Parse { line: lineno, msg: "bad loop count".into() })?;
+            let body = args[1]
+                .parse::<u8>()
+                .map_err(|_| IsaError::Parse { line: lineno, msg: "bad loop body".into() })?;
+            Instr::Loop { count, body }
+        }
+        "prg" => {
+            if args.len() != 1 {
+                return Err(err("prg expects 1 operand".into()));
+            }
+            let id = args[0]
+                .parse::<u8>()
+                .map_err(|_| IsaError::Parse { line: lineno, msg: "bad prg id".into() })?;
+            Instr::Prg { id }
+        }
+        "halt" => Instr::Halt,
+        other => return Err(err(format!("unknown mnemonic '{other}'"))),
+    };
+    Ok(Some(instr))
+}
+
+/// Parse a whole FGP Assembler listing.
+pub fn parse_listing(text: &str) -> Result<Vec<Instr>, IsaError> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if let Some(instr) = parse_line(line, i + 1)? {
+            out.push(instr);
+        }
+    }
+    Ok(out)
+}
+
+/// Render a listing (inverse of [`parse_listing`]).
+pub fn format_listing(instrs: &[Instr]) -> String {
+    instrs.iter().map(|i| format!("{i}\n")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::proptest_cases;
+
+    fn sample_instrs() -> Vec<Instr> {
+        vec![
+            Instr::Prg { id: 1 },
+            Instr::Mma {
+                a: OperandSrc::Msg(1),
+                a_herm: false,
+                b: OperandSrc::State(0),
+                b_herm: true,
+                neg: false,
+                vec: false,
+            },
+            Instr::Mms {
+                a: OperandSrc::State(0),
+                a_herm: false,
+                b: OperandSrc::Msg(ACC),
+                b_herm: false,
+                c: 2,
+                neg: false,
+                vec: false,
+            },
+            Instr::Mms {
+                a: OperandSrc::State(0),
+                a_herm: false,
+                b: OperandSrc::Msg(1),
+                b_herm: false,
+                c: 2,
+                neg: true,
+                vec: true,
+            },
+            Instr::Fad { g: ACC, b: ACC, b_herm: true, c: ACC, d: 1 },
+            Instr::Smm { dst: 4 },
+            Instr::Loop { count: 300, body: 5 },
+            Instr::Halt,
+        ]
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for i in sample_instrs() {
+            let w = i.encode();
+            assert_eq!(Instr::decode(w).unwrap(), i, "word {w:#018x}");
+        }
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let instrs = sample_instrs();
+        let text = format_listing(&instrs);
+        let parsed = parse_listing(&text).unwrap();
+        assert_eq!(parsed, instrs, "listing was:\n{text}");
+    }
+
+    pub(crate) fn random_instr(rng: &mut crate::testutil::Rng) -> Instr {
+        let slot = |rng: &mut crate::testutil::Rng| {
+            if rng.uniform() < 0.1 {
+                ACC
+            } else {
+                rng.below(200) as u8
+            }
+        };
+        let operand = |rng: &mut crate::testutil::Rng| {
+            if rng.uniform() < 0.5 {
+                OperandSrc::Msg(slot(rng))
+            } else {
+                OperandSrc::State(rng.below(16) as u8)
+            }
+        };
+        match rng.below(7) {
+            0 => Instr::Mma {
+                a: operand(rng),
+                a_herm: rng.uniform() < 0.5,
+                b: operand(rng),
+                b_herm: rng.uniform() < 0.5,
+                neg: rng.uniform() < 0.5,
+                vec: rng.uniform() < 0.5,
+            },
+            1 => Instr::Mms {
+                a: operand(rng),
+                a_herm: rng.uniform() < 0.5,
+                b: operand(rng),
+                b_herm: rng.uniform() < 0.5,
+                c: slot(rng),
+                neg: rng.uniform() < 0.5,
+                vec: rng.uniform() < 0.5,
+            },
+            2 => Instr::Fad {
+                g: slot(rng),
+                b: slot(rng),
+                b_herm: rng.uniform() < 0.5,
+                c: slot(rng),
+                d: slot(rng),
+            },
+            3 => Instr::Smm { dst: rng.below(255) as u8 },
+            4 => Instr::Loop {
+                count: (rng.below(60000) + 1) as u16,
+                body: (rng.below(255) + 1) as u8,
+            },
+            5 => Instr::Prg { id: rng.below(255) as u8 },
+            _ => Instr::Halt,
+        }
+    }
+
+    #[test]
+    fn random_encode_decode_roundtrip() {
+        proptest_cases(1000, |rng| {
+            let i = random_instr(rng);
+            assert_eq!(Instr::decode(i.encode()).unwrap(), i);
+        });
+    }
+
+    #[test]
+    fn random_text_roundtrip() {
+        proptest_cases(1000, |rng| {
+            let i = random_instr(rng);
+            let text = format!("{i}");
+            let parsed = parse_line(&text, 1).unwrap().unwrap();
+            assert_eq!(parsed, i, "text was: {text}");
+        });
+    }
+
+    #[test]
+    fn unknown_opcode_rejected() {
+        let w = 0x7Fu64 << 56;
+        assert_eq!(Instr::decode(w), Err(IsaError::UnknownOpcode(0x7F)));
+    }
+
+    #[test]
+    fn reserved_bits_rejected() {
+        let w = (Opcode::Mma as u64) << 56 | 0x1;
+        assert!(matches!(Instr::decode(w), Err(IsaError::ReservedBits(_))));
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let text = "; paper Listing 2 style\n\nprg 1\n  mma 1 s0h ; V_X A^H\n";
+        let parsed = parse_listing(text).unwrap();
+        assert_eq!(parsed.len(), 2);
+        assert_eq!(parsed[0], Instr::Prg { id: 1 });
+    }
+
+    #[test]
+    fn parse_rejects_bad_arity() {
+        assert!(parse_line("mma 1", 1).is_err());
+        assert!(parse_line("fad 1 2 3", 1).is_err());
+        assert!(parse_line("bogus 1 2", 1).is_err());
+    }
+
+    #[test]
+    fn vec_and_neg_suffixes_parse() {
+        let i = parse_line("mms s0 1 2 v ~", 1).unwrap().unwrap();
+        match i {
+            Instr::Mms { vec, neg, .. } => {
+                assert!(vec);
+                assert!(neg);
+            }
+            _ => panic!("wrong instr"),
+        }
+    }
+}

@@ -1,0 +1,273 @@
+//! Programs and binary memory images (paper §III–IV).
+//!
+//! A [`Program`] is an instruction sequence with a `prg` directory so the
+//! PM can "host multiple programs"; a [`MemoryImage`] is the binary form
+//! "suitable for loading into the processor" — a small header plus the
+//! 64-bit instruction words, little-endian.
+
+use super::{Instr, IsaError, Opcode};
+
+/// Magic bytes at the start of a memory image.
+const MAGIC: &[u8; 4] = b"FGP1";
+
+/// An assembled FGP program store (possibly several programs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Program {
+    /// All instructions, in PM order (including `prg` markers).
+    pub instrs: Vec<Instr>,
+}
+
+impl Program {
+    pub fn new(instrs: Vec<Instr>) -> Self {
+        Program { instrs }
+    }
+
+    /// PM addresses of each program id (`prg` markers).
+    pub fn directory(&self) -> Vec<(u8, usize)> {
+        self.instrs
+            .iter()
+            .enumerate()
+            .filter_map(|(addr, i)| match i {
+                Instr::Prg { id } => Some((*id, addr)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Start address (instruction after the `prg` marker) of program `id`.
+    pub fn start_of(&self, id: u8) -> Option<usize> {
+        self.directory()
+            .into_iter()
+            .find(|(pid, _)| *pid == id)
+            .map(|(_, addr)| addr + 1)
+    }
+
+    /// Number of datapath instructions (used in cycle accounting tests).
+    pub fn datapath_len(&self) -> usize {
+        self.instrs.iter().filter(|i| i.is_datapath()).count()
+    }
+
+    /// Serialize to a loadable binary memory image.
+    pub fn to_image(&self) -> MemoryImage {
+        let mut bytes = Vec::with_capacity(8 + self.instrs.len() * 8);
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&(self.instrs.len() as u32).to_le_bytes());
+        for i in &self.instrs {
+            bytes.extend_from_slice(&i.encode().to_le_bytes());
+        }
+        MemoryImage { bytes }
+    }
+
+    /// Parse a binary memory image.
+    pub fn from_image(image: &MemoryImage) -> Result<Program, IsaError> {
+        let b = &image.bytes;
+        let bad = |msg: &str| IsaError::Parse { line: 0, msg: msg.into() };
+        if b.len() < 8 || &b[0..4] != MAGIC {
+            return Err(bad("bad magic"));
+        }
+        let n = u32::from_le_bytes(b[4..8].try_into().unwrap()) as usize;
+        if b.len() != 8 + n * 8 {
+            return Err(bad("truncated image"));
+        }
+        let mut instrs = Vec::with_capacity(n);
+        for k in 0..n {
+            let w = u64::from_le_bytes(b[8 + k * 8..16 + k * 8].try_into().unwrap());
+            instrs.push(Instr::decode(w)?);
+        }
+        Ok(Program { instrs })
+    }
+
+    /// Sanity checks a real loader performs: loop bodies must fit before
+    /// the loop instruction, and every program must be non-empty.
+    pub fn validate(&self) -> Result<(), IsaError> {
+        let err = |msg: String| IsaError::Parse { line: 0, msg };
+        for (addr, i) in self.instrs.iter().enumerate() {
+            if let Instr::Loop { body, count } = i {
+                if *body as usize > addr {
+                    return Err(err(format!(
+                        "loop at PM[{addr}] reaches back {body} instructions past PM[0]"
+                    )));
+                }
+                if *body == 0 || *count == 0 {
+                    return Err(err(format!("degenerate loop at PM[{addr}]")));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Render as assembler text.
+    pub fn listing(&self) -> String {
+        super::format_listing(&self.instrs)
+    }
+
+    /// The expanded datapath instruction stream (loops unrolled) —
+    /// what the FSM actually issues. Used by tests to compare compressed
+    /// vs uncompressed programs.
+    pub fn unrolled(&self) -> Vec<Instr> {
+        let mut out = Vec::new();
+        let mut trace: Vec<Instr> = Vec::new(); // non-control instrs seen so far
+        for i in &self.instrs {
+            match i {
+                Instr::Loop { count, body } => {
+                    let start = trace.len() - (*body as usize).min(trace.len());
+                    let body_instrs: Vec<Instr> = trace[start..].to_vec();
+                    // loop count is the TOTAL number of iterations; one
+                    // pass already executed as straight-line code.
+                    for _ in 1..*count {
+                        out.extend(body_instrs.iter().cloned());
+                        trace.extend(body_instrs.iter().cloned());
+                    }
+                }
+                Instr::Prg { .. } | Instr::Halt => {}
+                other => {
+                    out.push(other.clone());
+                    trace.push(other.clone());
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Binary memory image (header + little-endian instruction words).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MemoryImage {
+    pub bytes: Vec<u8>,
+}
+
+impl MemoryImage {
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    /// Size of the image in bits (for the 64-kbit PM budget checks).
+    pub fn bits(&self) -> usize {
+        self.bytes.len() * 8
+    }
+}
+
+/// Convenience: does this instruction start a program?
+pub fn is_prg(i: &Instr) -> bool {
+    matches!(i, Instr::Prg { .. })
+}
+
+/// Opcode histogram of a program (reporting/bench helper).
+pub fn opcode_histogram(p: &Program) -> [usize; 7] {
+    let mut h = [0usize; 7];
+    for i in &p.instrs {
+        let idx = match i {
+            Instr::Halt => Opcode::Halt as usize,
+            Instr::Mma { .. } => Opcode::Mma as usize,
+            Instr::Mms { .. } => Opcode::Mms as usize,
+            Instr::Fad { .. } => Opcode::Fad as usize,
+            Instr::Smm { .. } => Opcode::Smm as usize,
+            Instr::Loop { .. } => Opcode::Loop as usize,
+            Instr::Prg { .. } => Opcode::Prg as usize,
+        };
+        h[idx] += 1;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{OperandSrc, ACC};
+
+    fn sample_program() -> Program {
+        Program::new(vec![
+            Instr::Prg { id: 1 },
+            Instr::Mma {
+                a: OperandSrc::Msg(1),
+                a_herm: false,
+                b: OperandSrc::State(0),
+                b_herm: true,
+                neg: false,
+                vec: false,
+            },
+            Instr::Mms {
+                a: OperandSrc::State(0),
+                a_herm: false,
+                b: OperandSrc::Msg(ACC),
+                b_herm: false,
+                c: 2,
+                neg: true,
+                vec: false,
+            },
+            Instr::Fad { g: ACC, b: 3, b_herm: true, c: 4, d: 1 },
+            Instr::Smm { dst: 4 },
+            Instr::Loop { count: 3, body: 4 },
+            Instr::Halt,
+        ])
+    }
+
+    #[test]
+    fn image_roundtrip() {
+        let p = sample_program();
+        let img = p.to_image();
+        assert_eq!(Program::from_image(&img).unwrap(), p);
+    }
+
+    #[test]
+    fn image_rejects_corruption() {
+        let p = sample_program();
+        let mut img = p.to_image();
+        img.bytes[0] = b'X';
+        assert!(Program::from_image(&img).is_err());
+        let mut img2 = p.to_image();
+        img2.bytes.truncate(img2.bytes.len() - 3);
+        assert!(Program::from_image(&img2).is_err());
+    }
+
+    #[test]
+    fn directory_finds_programs() {
+        let mut instrs = sample_program().instrs;
+        instrs.push(Instr::Prg { id: 2 });
+        instrs.push(Instr::Smm { dst: 0 });
+        let p = Program::new(instrs);
+        assert_eq!(p.start_of(1), Some(1));
+        assert_eq!(p.start_of(2), Some(8));
+        assert_eq!(p.start_of(9), None);
+    }
+
+    #[test]
+    fn unrolled_repeats_loop_body() {
+        let p = sample_program();
+        let u = p.unrolled();
+        // body = mma mms fad smm (4 instrs), loop count 3 -> 3 * 4 = 12
+        assert_eq!(u.len(), 12);
+        assert_eq!(u[0], u[4]);
+        assert_eq!(u[0], u[8]);
+    }
+
+    #[test]
+    fn validate_rejects_bad_loops() {
+        let p = Program::new(vec![Instr::Loop { count: 2, body: 4 }]);
+        assert!(p.validate().is_err());
+        let p2 = Program::new(vec![
+            Instr::Smm { dst: 0 },
+            Instr::Loop { count: 0, body: 1 },
+        ]);
+        assert!(p2.validate().is_err());
+        assert!(sample_program().validate().is_ok());
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let h = opcode_histogram(&sample_program());
+        assert_eq!(h[Opcode::Mma as usize], 1);
+        assert_eq!(h[Opcode::Loop as usize], 1);
+        assert_eq!(h[Opcode::Halt as usize], 1);
+    }
+
+    #[test]
+    fn image_bits_budget() {
+        let p = sample_program();
+        assert!(p.to_image().bits() < 64 * 1024, "PM image must fit 64 kbit");
+    }
+}

@@ -1,0 +1,77 @@
+//! # fgp-repro — A Signal Processor for Gaussian Message Passing
+//!
+//! Production-quality reproduction of Kröll et al., *"A Signal Processor
+//! for Gaussian Message Passing"* (2014): the **FGP**, an application-
+//! specific instruction processor whose datapath is a configurable
+//! systolic array executing Gaussian message-passing (GMP) updates on
+//! factor graphs.
+//!
+//! The original is a UMC180 ASIC; this crate substitutes a **cycle-
+//! accurate software model** of the microarchitecture plus an analytic
+//! model of the paper's TI C66x DSP baseline (the paper itself estimated
+//! the DSP cycles analytically). See `DESIGN.md` for the substitution
+//! table and the per-experiment index.
+//!
+//! ## Layer map (three-layer rust + JAX + Pallas architecture)
+//!
+//! * **L3 (this crate)** — the paper's contribution: [`fgp`] cycle-accurate
+//!   simulator, [`isa`] + [`compiler`], [`coordinator`] (the Fig. 5
+//!   "external processor" command protocol, request queue, batcher),
+//!   [`dsp`] baseline and [`model`] area/technology models.
+//! * **L2/L1 (python/, build-time only)** — the GMP compute graph in JAX
+//!   with fused Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt` and
+//!   executed from [`runtime`] via the PJRT C API. Python never runs on
+//!   the request path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use fgp_repro::gmp::matrix::CMatrix;
+//! use fgp_repro::apps::rls::RlsProblem;
+//! use fgp_repro::fgp::processor::Fgp;
+//!
+//! // Build the paper's Fig. 6 channel-estimation factor graph, compile it
+//! // to FGP assembler, and run it on the cycle-accurate simulator.
+//! let problem = RlsProblem::synthetic(4, 16, 0.01, 42);
+//! let outcome = problem.run_on_fgp().unwrap();
+//! println!("cycles/section = {}", outcome.cycles_per_section);
+//! ```
+
+pub mod apps;
+pub mod benchutil;
+pub mod compiler;
+pub mod coordinator;
+pub mod dsp;
+pub mod fixed;
+pub mod fgp;
+pub mod gmp;
+pub mod isa;
+pub mod model;
+pub mod runtime;
+pub mod testutil;
+
+/// Paper constants used across benches and reports (Table II, §V).
+pub mod paper {
+    /// State-matrix size the silicon was synthesized for (4x4 complex).
+    pub const N: usize = 4;
+    /// FGP maximum clock frequency in MHz at UMC180 (Table II).
+    pub const FGP_FREQ_MHZ: f64 = 130.0;
+    /// FGP technology node in nm.
+    pub const FGP_NODE_NM: f64 = 180.0;
+    /// Cycles the paper reports for one compound-node message update.
+    pub const FGP_CN_CYCLES: u64 = 260;
+    /// TI C66x clock frequency in MHz (40 nm, ref [10]).
+    pub const DSP_FREQ_MHZ: f64 = 1250.0;
+    /// TI C66x technology node in nm.
+    pub const DSP_NODE_NM: f64 = 40.0;
+    /// Cycles the paper estimates for the C66x compound-node update.
+    pub const DSP_CN_CYCLES: u64 = 1076;
+    /// Cycles for a complex 4x4 matrix inversion on the C66x (ref [11]).
+    pub const DSP_INV4_CYCLES: u64 = 768;
+    /// Total FGP area in mm^2 (UMC180 synthesis).
+    pub const FGP_AREA_MM2: f64 = 3.11;
+    /// Area fractions: memories / systolic array / datapath+control.
+    pub const FGP_AREA_SPLIT: [f64; 3] = [0.30, 0.60, 0.10];
+    /// Message-memory capacity in kbit (both processors, Table II).
+    pub const MEMORY_KBIT: usize = 64;
+}

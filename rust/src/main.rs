@@ -1,0 +1,331 @@
+//! `fgp` — command-line front-end for the FGP reproduction.
+//!
+//! Subcommands (hand-rolled parsing; no clap in the vendored set):
+//!
+//! ```text
+//! fgp assemble <in.asm> <out.img>     assemble FGP assembler text to a memory image
+//! fgp disasm   <in.img>               disassemble a memory image
+//! fgp compile  [--sections S] [--no-opt] [--no-loop]
+//!                                     compile the Fig. 6 RLS graph, print listing + stats
+//! fgp run      [--sections S] [--sigma2 V] [--seed N]
+//!                                     run RLS channel estimation on the simulator
+//! fgp report                          print the Table II / area report
+//! fgp serve    [--requests N] [--batch B]
+//!                                     serve CN updates (XLA if artifacts exist)
+//! ```
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use fgp_repro::apps::rls::RlsProblem;
+use fgp_repro::compiler::{compile, CompileOptions};
+use fgp_repro::coordinator::backend::{CnRequestData, GoldenBackend, XlaBatchBackend};
+use fgp_repro::coordinator::{BatchPolicy, CnServer, ServerConfig};
+use fgp_repro::dsp::C66xModel;
+use fgp_repro::fgp::TimingModel;
+use fgp_repro::gmp::matrix::{c64, CMatrix};
+use fgp_repro::gmp::message::GaussMessage;
+use fgp_repro::gmp::{FactorGraph, Schedule};
+use fgp_repro::isa::{parse_listing, MemoryImage, Program};
+use fgp_repro::model::area::AreaModel;
+use fgp_repro::model::scaling::{normalized_throughput, ProcessorPoint};
+use fgp_repro::paper;
+use fgp_repro::runtime::RuntimeClient;
+use fgp_repro::testutil::Rng;
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    positional: Vec<String>,
+    flags: Vec<(String, String)>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    fn parse(raw: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        let mut switches = Vec::new();
+        let mut i = 0;
+        while i < raw.len() {
+            if let Some(key) = raw[i].strip_prefix("--") {
+                if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    flags.push((key.to_string(), raw[i + 1].clone()));
+                    i += 2;
+                } else {
+                    switches.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(raw[i].clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags, switches }
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.flags.iter().find(|(k, _)| k == key) {
+            Some((_, v)) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad value for --{key}: {v}")),
+            None => Ok(default),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+}
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = raw.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let args = Args::parse(&raw[1..]);
+    match cmd.as_str() {
+        "assemble" => cmd_assemble(&args),
+        "disasm" => cmd_disasm(&args),
+        "compile" => cmd_compile(&args),
+        "run" => cmd_run(&args),
+        "trace" => cmd_trace(&args),
+        "report" => cmd_report(),
+        "serve" => cmd_serve(&args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try `fgp help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "fgp — A Signal Processor for Gaussian Message Passing (reproduction)\n\n\
+         usage:\n  \
+         fgp assemble <in.asm> <out.img>\n  \
+         fgp disasm <in.img>\n  \
+         fgp compile [--sections S] [--no-opt] [--no-loop]\n  \
+         fgp run [--sections S] [--sigma2 V] [--seed N]\n  \
+         fgp trace [--sections S]  (instruction-level cycle profile)\n  \
+         fgp report\n  \
+         fgp serve [--requests N] [--batch B]"
+    );
+}
+
+/// Run the RLS program under the instruction-level profiler and print
+/// the per-opcode cycle budget (where the architecture spends its time).
+fn cmd_trace(args: &Args) -> Result<()> {
+    use fgp_repro::fgp::processor::NoFeed;
+    use fgp_repro::fgp::{Fgp, FgpConfig, Profiler};
+    use fgp_repro::gmp::message::GaussMessage;
+
+    let sections: usize = args.get("sections", 8)?;
+    let p = RlsProblem::synthetic(paper::N, sections, 0.02, args.get("seed", 1u64)?);
+    let compiled = p.compile_program()?;
+    let mut fgp = Fgp::new(FgpConfig::default());
+    fgp.pm.load(&compiled.program.to_image())?;
+    fgp.msgmem
+        .write_message(compiled.memmap.preloads[0].1, &GaussMessage::isotropic(paper::N, 0.5));
+    fgp.msgmem
+        .write_message(compiled.memmap.streams[0].1, &GaussMessage::isotropic(paper::N, 0.1));
+    fgp.statemem
+        .write_matrix(compiled.memmap.state_streams[0].1, &CMatrix::identity(paper::N));
+    let mut prof = Profiler::new(32);
+    let stats = fgp.run_program_profiled(1, &mut NoFeed, Some(&mut prof))?;
+    println!("program: {} sections, {} cycles total\n", sections, stats.cycles);
+    print!("{prof}");
+    println!("\nFaddeev share of datapath cycles: {:.0}%", prof.faddeev_share() * 100.0);
+    println!("\nfirst records (PM addr @ start cycle, cost):");
+    for r in prof.records().iter().take(6) {
+        println!("  PM[{}] @ {:>5}: {:<4} ({} cycles)", r.addr, r.start_cycle, r.instr.mnemonic(), r.cycles);
+    }
+    Ok(())
+}
+
+fn cmd_assemble(args: &Args) -> Result<()> {
+    let [input, output] = args.positional.as_slice() else {
+        bail!("assemble needs <in.asm> <out.img>");
+    };
+    let text = std::fs::read_to_string(input).with_context(|| format!("reading {input}"))?;
+    let instrs = parse_listing(&text)?;
+    let program = Program::new(instrs);
+    program.validate()?;
+    let image = program.to_image();
+    std::fs::write(output, &image.bytes).with_context(|| format!("writing {output}"))?;
+    println!(
+        "assembled {} instructions -> {} ({} bytes)",
+        program.instrs.len(),
+        output,
+        image.len()
+    );
+    Ok(())
+}
+
+fn cmd_disasm(args: &Args) -> Result<()> {
+    let [input] = args.positional.as_slice() else {
+        bail!("disasm needs <in.img>");
+    };
+    let bytes = std::fs::read(input).with_context(|| format!("reading {input}"))?;
+    let program = Program::from_image(&MemoryImage { bytes })?;
+    print!("{}", program.listing());
+    Ok(())
+}
+
+fn cmd_compile(args: &Args) -> Result<()> {
+    let sections: usize = args.get("sections", 8)?;
+    let mut rng = Rng::new(args.get("seed", 1u64)?);
+    let n = paper::N;
+    let a_list: Vec<CMatrix> =
+        (0..sections).map(|_| CMatrix::random(&mut rng, n, n).scale(0.3)).collect();
+    let mut graph = FactorGraph::new();
+    graph.rls_chain(n, &a_list);
+    let schedule = Schedule::forward_sweep(&graph);
+    let opts = CompileOptions {
+        optimize_memory: !args.has("no-opt"),
+        compress_loops: !args.has("no-loop"),
+        ..Default::default()
+    };
+    let compiled = compile(&graph, &schedule, &opts)?;
+    println!("{}", compiled.listing());
+    println!(
+        "; slots: {} optimized / {} unoptimized | instrs: {} compressed / {} flat | loop {:?}",
+        compiled.stats.slots_optimized,
+        compiled.stats.slots_unoptimized,
+        compiled.stats.instrs_compressed,
+        compiled.stats.instrs_uncompressed,
+        compiled.stats.looped,
+    );
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let sections: usize = args.get("sections", 32)?;
+    let sigma2: f64 = args.get("sigma2", 0.02)?;
+    let seed: u64 = args.get("seed", 2024)?;
+    let p = RlsProblem::synthetic(paper::N, sections, sigma2, seed);
+    let golden = p.golden()?;
+    let fgp = p.run_on_fgp()?;
+    println!("RLS channel estimation, {sections} sections, sigma2 {sigma2}:");
+    println!("  golden rel MSE: {:.5}", golden.rel_mse);
+    println!("  FGP    rel MSE: {:.5}", fgp.rel_mse);
+    println!("  cycles: {} ({} per section)", fgp.cycles, fgp.cycles_per_section);
+    Ok(())
+}
+
+fn cmd_report() -> Result<()> {
+    let timing = TimingModel::default();
+    let dsp = C66xModel::default();
+    let n = paper::N;
+    let fgp_cycles = timing.compound_node_cycles(n);
+    let dsp_cycles = dsp.compound_node_cycles(n);
+    let fgp_pt = ProcessorPoint::fgp(fgp_cycles);
+    let dsp_pt = ProcessorPoint::c66x(dsp_cycles);
+
+    println!("=== Table II: throughput comparison, FGP vs DSP ===");
+    println!("{:<38} {:>16} {:>16}", "", "FGP (this work)", "TI C66x");
+    println!("{:<38} {:>16} {:>16}", "CMOS technology [nm]", 180, 40);
+    println!("{:<38} {:>16} {:>16}", "Max. freq. [MHz]", 130, 1250);
+    println!(
+        "{:<38} {:>16} {:>16}",
+        "cycles for CN msg update (measured)", fgp_cycles, dsp_cycles
+    );
+    println!(
+        "{:<38} {:>16} {:>16}",
+        "cycles for CN msg update (paper)",
+        paper::FGP_CN_CYCLES,
+        paper::DSP_CN_CYCLES
+    );
+    println!(
+        "{:<38} {:>16.2e} {:>16.2e}",
+        "normalized throughput [CN/s] @40nm",
+        normalized_throughput(&fgp_pt, 40.0),
+        normalized_throughput(&dsp_pt, 40.0)
+    );
+
+    let area = AreaModel::default().paper_configuration();
+    let f = area.fractions();
+    println!("\n=== Area (UMC180, modeled; paper: 3.11 mm², 30/60/10) ===");
+    println!("total: {:.2} mm²", area.total());
+    println!(
+        "memories {:.0}%  systolic array {:.0}%  datapath+control {:.0}%",
+        f[0] * 100.0,
+        f[1] * 100.0,
+        f[2] * 100.0
+    );
+
+    // energy extension (E11): ref [10] anchors the C66x at 0.8 W
+    use fgp_repro::model::power::PowerPoint;
+    let fgp_pw = PowerPoint::fgp(fgp_cycles, area.total());
+    let dsp_pw = PowerPoint::c66x(dsp_cycles);
+    println!("\n=== Energy per CN update (modeled; paper reports none) ===");
+    println!(
+        "{:<30} {:>12.1} nJ  ({:.2} W @ {} MHz, {} nm)",
+        fgp_pw.name, fgp_pw.energy_per_cn_nj(), fgp_pw.power_w, fgp_pw.freq_mhz, fgp_pw.node_nm
+    );
+    println!(
+        "{:<30} {:>12.1} nJ  ({:.2} W @ {} MHz, {} nm)",
+        dsp_pw.name, dsp_pw.energy_per_cn_nj(), dsp_pw.power_w, dsp_pw.freq_mhz, dsp_pw.node_nm
+    );
+    println!(
+        "energy advantage: {:.1}x at native nodes, {:.1}x at a common 40 nm",
+        dsp_pw.energy_per_cn_nj() / fgp_pw.energy_per_cn_nj(),
+        dsp_pw.energy_per_cn_nj_at(40.0) / fgp_pw.energy_per_cn_nj_at(40.0)
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let requests: usize = args.get("requests", 256)?;
+    let batch: usize = args.get("batch", 32)?;
+    let n = paper::N;
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let use_xla = artifacts.join("manifest.txt").exists();
+    println!(
+        "serving {requests} CN updates, batch {batch}, backend {}",
+        if use_xla { "xla" } else { "golden" }
+    );
+    let server = CnServer::start(
+        move || {
+            if use_xla {
+                Ok(Box::new(XlaBatchBackend::new(RuntimeClient::load(&artifacts)?)?) as _)
+            } else {
+                Ok(Box::new(GoldenBackend) as _)
+            }
+        },
+        ServerConfig {
+            batch: BatchPolicy {
+                max_batch: batch,
+                max_wait: std::time::Duration::from_millis(2),
+            },
+        },
+    )?;
+    let client = server.client();
+    let mut rng = Rng::new(5);
+    let t0 = Instant::now();
+    let pending: Vec<_> = (0..requests)
+        .map(|_| {
+            client.submit(CnRequestData {
+                x: GaussMessage::new(
+                    (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+                    CMatrix::random_psd(&mut rng, n, 1.0).scale(0.15),
+                ),
+                y: GaussMessage::new(
+                    (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+                    CMatrix::random_psd(&mut rng, n, 1.0).scale(0.15),
+                ),
+                a: CMatrix::random(&mut rng, n, n).scale(0.3),
+            })
+        })
+        .collect();
+    for rx in pending {
+        rx.recv().map_err(|_| anyhow::anyhow!("server died"))??;
+    }
+    let dt = t0.elapsed();
+    println!("done in {dt:?} ({:.0} CN/s)", requests as f64 / dt.as_secs_f64());
+    println!("{}", client.metrics().report());
+    server.shutdown();
+    Ok(())
+}

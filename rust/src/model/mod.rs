@@ -1,0 +1,16 @@
+//! S7 — Area and technology models (paper §V, Table II footnote 3).
+//!
+//! * [`area`]: an analytic gate/SRAM area model of the FGP at UMC180,
+//!   calibrated to reproduce the paper's 3.11 mm² with the reported
+//!   30% memories / 60% systolic array / 10% control split.
+//! * [`scaling`]: the paper's technology scaling `t_pd ~ 1/s` — Table
+//!   II's "normalized max. throughput" scales both processors to a
+//!   common node before dividing clock by cycles-per-update.
+
+pub mod area;
+pub mod power;
+pub mod scaling;
+
+pub use area::{AreaBreakdown, AreaModel};
+pub use power::PowerPoint;
+pub use scaling::{normalized_throughput, scale_frequency, ProcessorPoint};

@@ -1,0 +1,105 @@
+//! Technology scaling + normalized throughput (Table II, footnote 3).
+//!
+//! The paper compares a 180 nm FGP at 130 MHz against a 40 nm C66x at
+//! 1.25 GHz by scaling to a common node with classic constant-field
+//! scaling, `t_pd ∼ 1/s` (footnote 3): frequency scales linearly with
+//! the ratio of feature sizes. Working the published numbers backwards,
+//! Table II's "normalized max. throughput" row scales the FGP *up* to
+//! the DSP's 40 nm node:
+//!
+//! ```text
+//!   FGP : 130 MHz * (180/40) / 260 cycles  = 2.25e6 CN/s
+//!   DSP : 1250 MHz            / 1076 cycles = 1.16e6 CN/s
+//! ```
+//!
+//! [`normalized_throughput`] reproduces exactly that computation for any
+//! pair of processor operating points.
+
+/// A processor operating point.
+#[derive(Clone, Copy, Debug)]
+pub struct ProcessorPoint {
+    pub name: &'static str,
+    /// Clock frequency in MHz at the native node.
+    pub freq_mhz: f64,
+    /// Native technology node in nm.
+    pub node_nm: f64,
+    /// Cycles per compound-node message update.
+    pub cn_cycles: u64,
+}
+
+impl ProcessorPoint {
+    /// The paper's FGP row with a measured cycle count substituted in.
+    pub fn fgp(cn_cycles: u64) -> Self {
+        ProcessorPoint {
+            name: "FGP (this work)",
+            freq_mhz: crate::paper::FGP_FREQ_MHZ,
+            node_nm: crate::paper::FGP_NODE_NM,
+            cn_cycles,
+        }
+    }
+
+    /// The paper's TI C66x row.
+    pub fn c66x(cn_cycles: u64) -> Self {
+        ProcessorPoint {
+            name: "TI C66x",
+            freq_mhz: crate::paper::DSP_FREQ_MHZ,
+            node_nm: crate::paper::DSP_NODE_NM,
+            cn_cycles,
+        }
+    }
+}
+
+/// Frequency after scaling from `from_nm` to `to_nm` (t_pd ∼ 1/s).
+pub fn scale_frequency(freq_mhz: f64, from_nm: f64, to_nm: f64) -> f64 {
+    freq_mhz * (from_nm / to_nm)
+}
+
+/// Compound-node updates per second, with the clock scaled to `node_nm`.
+pub fn normalized_throughput(p: &ProcessorPoint, node_nm: f64) -> f64 {
+    let f = scale_frequency(p.freq_mhz, p.node_nm, node_nm) * 1e6;
+    f / p.cn_cycles as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::paper;
+    use crate::testutil::assert_close;
+
+    #[test]
+    fn reproduces_table2_fgp_row() {
+        let fgp = ProcessorPoint::fgp(paper::FGP_CN_CYCLES);
+        let t = normalized_throughput(&fgp, paper::DSP_NODE_NM);
+        assert_close(t, 2.25e6, 0.01);
+    }
+
+    #[test]
+    fn reproduces_table2_dsp_row() {
+        let dsp = ProcessorPoint::c66x(paper::DSP_CN_CYCLES);
+        let t = normalized_throughput(&dsp, paper::DSP_NODE_NM);
+        assert_close(t, 1.16e6, 0.01);
+    }
+
+    #[test]
+    fn paper_speedup_is_about_2x() {
+        let fgp = ProcessorPoint::fgp(paper::FGP_CN_CYCLES);
+        let dsp = ProcessorPoint::c66x(paper::DSP_CN_CYCLES);
+        let ratio = normalized_throughput(&fgp, 40.0) / normalized_throughput(&dsp, 40.0);
+        assert!(ratio > 1.8 && ratio < 2.1, "ratio {ratio}");
+    }
+
+    #[test]
+    fn normalization_node_does_not_change_ratio() {
+        let fgp = ProcessorPoint::fgp(paper::FGP_CN_CYCLES);
+        let dsp = ProcessorPoint::c66x(paper::DSP_CN_CYCLES);
+        let r40 = normalized_throughput(&fgp, 40.0) / normalized_throughput(&dsp, 40.0);
+        let r180 = normalized_throughput(&fgp, 180.0) / normalized_throughput(&dsp, 180.0);
+        assert_close(r40, r180, 1e-12);
+    }
+
+    #[test]
+    fn scaling_is_linear_in_feature_size() {
+        assert_close(scale_frequency(130.0, 180.0, 40.0), 585.0, 1e-12);
+        assert_close(scale_frequency(585.0, 40.0, 180.0), 130.0, 1e-12);
+    }
+}

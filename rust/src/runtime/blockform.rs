@@ -1,0 +1,133 @@
+//! Complex ⇄ real block embedding, mirroring `python/compile/kernels/ref.py`.
+//!
+//! `blk(M) = [[Re M, -Im M], [Im M, Re M]]` (2n x 2n, row-major f32);
+//! complex vectors map to `[Re; Im]`. The Python oracle tests pin the
+//! convention; these functions must match it bit-for-layout so literals
+//! round-trip through the AOT artifacts.
+
+use crate::gmp::matrix::{c64, CMatrix, CVector};
+
+/// Complex n x n matrix -> row-major (2n)^2 block-real f32 buffer.
+pub fn blk_matrix(m: &CMatrix) -> Vec<f32> {
+    let n = m.rows;
+    assert!(m.is_square());
+    let d = 2 * n;
+    let mut out = vec![0f32; d * d];
+    for i in 0..n {
+        for j in 0..n {
+            let z = m[(i, j)];
+            out[i * d + j] = z.re as f32; //  Re
+            out[i * d + n + j] = -z.im as f32; // -Im
+            out[(n + i) * d + j] = z.im as f32; //  Im
+            out[(n + i) * d + n + j] = z.re as f32; //  Re
+        }
+    }
+    out
+}
+
+/// Block-real (2n)^2 buffer -> complex n x n (reads the left block column).
+pub fn unblk_matrix(b: &[f32], n: usize) -> CMatrix {
+    let d = 2 * n;
+    assert_eq!(b.len(), d * d, "block buffer size");
+    let mut m = CMatrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            m[(i, j)] = c64::new(b[i * d + j] as f64, b[(n + i) * d + j] as f64);
+        }
+    }
+    m
+}
+
+/// Complex vector -> stacked [Re; Im] f32 buffer.
+pub fn blk_vector(v: &[c64]) -> Vec<f32> {
+    let n = v.len();
+    let mut out = vec![0f32; 2 * n];
+    for (i, z) in v.iter().enumerate() {
+        out[i] = z.re as f32;
+        out[n + i] = z.im as f32;
+    }
+    out
+}
+
+/// Stacked [Re; Im] buffer -> complex vector.
+pub fn unblk_vector(b: &[f32]) -> CVector {
+    let n = b.len() / 2;
+    (0..n).map(|i| c64::new(b[i] as f64, b[n + i] as f64)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{proptest_cases, Rng};
+
+    #[test]
+    fn matrix_roundtrip() {
+        proptest_cases(50, |rng| {
+            let n = 1 + rng.below(6);
+            let m = CMatrix::random(rng, n, n);
+            let back = unblk_matrix(&blk_matrix(&m), n);
+            assert!(back.dist(&m) < 1e-6 * (1.0 + m.max_abs()));
+        });
+    }
+
+    #[test]
+    fn vector_roundtrip() {
+        proptest_cases(50, |rng| {
+            let n = 1 + rng.below(8);
+            let v: Vec<c64> = (0..n).map(|_| c64::new(rng.normal(), rng.normal())).collect();
+            let back = unblk_vector(&blk_vector(&v));
+            for (a, b) in v.iter().zip(&back) {
+                assert!((*a - *b).abs() < 1e-6);
+            }
+        });
+    }
+
+    #[test]
+    fn block_multiplication_isomorphism() {
+        // blk(A) * blk(B) == blk(A*B) — the property the kernels rely on.
+        let mut rng = Rng::new(9);
+        let n = 3;
+        let a = CMatrix::random(&mut rng, n, n);
+        let b = CMatrix::random(&mut rng, n, n);
+        let ab = a.matmul(&b);
+        let (ba, bb) = (blk_matrix(&a), blk_matrix(&b));
+        let d = 2 * n;
+        let mut prod = vec![0f32; d * d];
+        for i in 0..d {
+            for k in 0..d {
+                for j in 0..d {
+                    prod[i * d + j] += ba[i * d + k] * bb[k * d + j];
+                }
+            }
+        }
+        let back = unblk_matrix(&prod, n);
+        assert!(back.dist(&ab) < 1e-4 * (1.0 + ab.max_abs()));
+    }
+
+    #[test]
+    fn block_transpose_is_hermitian() {
+        let mut rng = Rng::new(10);
+        let n = 3;
+        let a = CMatrix::random(&mut rng, n, n);
+        let ba = blk_matrix(&a);
+        let d = 2 * n;
+        let mut t = vec![0f32; d * d];
+        for i in 0..d {
+            for j in 0..d {
+                t[j * d + i] = ba[i * d + j];
+            }
+        }
+        let back = unblk_matrix(&t, n);
+        assert!(back.dist(&a.hermitian()) < 1e-6 * (1.0 + a.max_abs()));
+    }
+
+    #[test]
+    fn layout_matches_python_convention() {
+        // spot-check the exact element placement against ref.py's blk()
+        let mut m = CMatrix::zeros(1, 1);
+        m[(0, 0)] = c64::new(2.0, 3.0);
+        assert_eq!(blk_matrix(&m), vec![2.0, -3.0, 3.0, 2.0]);
+        let v = vec![c64::new(1.0, -4.0)];
+        assert_eq!(blk_vector(&v), vec![1.0, -4.0]);
+    }
+}

@@ -1,0 +1,153 @@
+//! Artifact manifest parsing (written by `python/compile/aot.py`).
+//!
+//! Format (one artifact per line after the header):
+//!
+//! ```text
+//! n=4 batch=32 sections=64
+//! cn_update inputs=f32[8x8],f32[8x8],f32[8x8],f32[8],f32[8] outputs=2
+//! ```
+//!
+//! The Rust loader validates its marshalling against these shapes at
+//! startup so a stale `artifacts/` directory fails fast instead of
+//! producing garbage numerics.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// One artifact's signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ManifestEntry {
+    pub name: String,
+    /// Input shapes, each a dim list (empty = scalar).
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: usize,
+}
+
+impl ManifestEntry {
+    /// Leading dimension of the first rank-3 input (the batch of a
+    /// batched artifact or the section count of a chain).
+    pub fn leading_dim(&self) -> Option<usize> {
+        self.inputs.iter().find(|s| s.len() == 3).map(|s| s[0])
+    }
+
+    /// Batch size of a batched artifact (alias of [`Self::leading_dim`]).
+    pub fn batch(&self) -> Option<usize> {
+        self.leading_dim()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    /// Header parameters (n, batch, sections).
+    pub n: usize,
+    pub batch: usize,
+    pub sections: usize,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header = lines.next().context("empty manifest")?;
+        let mut m = Manifest::default();
+        for kv in header.split_whitespace() {
+            let (k, v) = kv.split_once('=').context("bad header field")?;
+            let v: usize = v.parse().context("bad header value")?;
+            match k {
+                "n" => m.n = v,
+                "batch" => m.batch = v,
+                "sections" => m.sections = v,
+                other => bail!("unknown header key {other}"),
+            }
+        }
+        for line in lines {
+            let mut parts = line.split_whitespace();
+            let name = parts.next().context("missing artifact name")?.to_string();
+            let mut inputs = Vec::new();
+            let mut outputs = 0;
+            for field in parts {
+                if let Some(sig) = field.strip_prefix("inputs=") {
+                    for shape in sig.split(',') {
+                        let dims = shape
+                            .strip_prefix("f32[")
+                            .and_then(|s| s.strip_suffix(']'))
+                            .with_context(|| format!("bad shape '{shape}'"))?;
+                        if dims == "scalar" {
+                            inputs.push(vec![]);
+                        } else {
+                            inputs.push(
+                                dims.split('x')
+                                    .map(|d| d.parse::<usize>().context("bad dim"))
+                                    .collect::<Result<Vec<_>>>()?,
+                            );
+                        }
+                    }
+                } else if let Some(o) = field.strip_prefix("outputs=") {
+                    outputs = o.parse().context("bad outputs")?;
+                } else {
+                    bail!("unknown manifest field '{field}'");
+                }
+            }
+            m.entries.push(ManifestEntry { name, inputs, outputs });
+        }
+        Ok(m)
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+n=4 batch=32 sections=64
+cn_update inputs=f32[8x8],f32[8x8],f32[8x8],f32[8],f32[8] outputs=2
+cn_update_batched inputs=f32[32x8x8],f32[32x8x8],f32[32x8x8],f32[32x8],f32[32x8] outputs=2
+rls_chain inputs=f32[8x8],f32[8],f32[64x8x8],f32[64x8],f32[scalar] outputs=2
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!((m.n, m.batch, m.sections), (4, 32, 64));
+        assert_eq!(m.entries.len(), 3);
+        let cn = m.entry("cn_update").unwrap();
+        assert_eq!(cn.inputs.len(), 5);
+        assert_eq!(cn.inputs[0], vec![8, 8]);
+        assert_eq!(cn.inputs[3], vec![8]);
+        assert_eq!(cn.outputs, 2);
+    }
+
+    #[test]
+    fn leading_dims() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entry("cn_update_batched").unwrap().batch(), Some(32));
+        assert_eq!(m.entry("rls_chain").unwrap().leading_dim(), Some(64));
+        assert_eq!(m.entry("cn_update").unwrap().leading_dim(), None);
+    }
+
+    #[test]
+    fn scalar_input_parses() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let rls = m.entry("rls_chain").unwrap();
+        assert_eq!(rls.inputs[4], Vec::<usize>::new());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("").is_err());
+        assert!(Manifest::parse("n=4\nfoo inputs=bad[3]").is_err());
+        assert!(Manifest::parse("bogus=1").is_err());
+    }
+}

@@ -1,0 +1,197 @@
+//! S8 — PJRT runtime: load and execute the AOT artifacts from Rust.
+//!
+//! The L2/L1 layers (JAX model + Pallas kernels) are lowered **once** at
+//! build time to HLO text (`make artifacts`); this module loads those
+//! artifacts through the PJRT C API (the `xla` crate), compiles them on
+//! the CPU client and exposes typed entry points. Python never runs on
+//! the request path — the Rust binary is self-contained once
+//! `artifacts/` exists.
+//!
+//! HLO **text** is the interchange format: jax ≥ 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod blockform;
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::gmp::matrix::CMatrix;
+use crate::gmp::message::GaussMessage;
+
+pub use blockform::{blk_matrix, blk_vector, unblk_matrix, unblk_vector};
+pub use manifest::Manifest;
+
+/// A loaded, compiled artifact set ready to execute.
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+}
+
+impl RuntimeClient {
+    /// Load every artifact listed in `dir/manifest.txt` and compile it on
+    /// the PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.txt"))
+            .context("reading artifacts manifest (run `make artifacts`)")?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut executables = HashMap::new();
+        for entry in &manifest.entries {
+            let path = dir.join(format!("{}.hlo.txt", entry.name));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", entry.name))?;
+            executables.insert(entry.name.clone(), exe);
+        }
+        Ok(RuntimeClient { client, executables, manifest, dir })
+    }
+
+    /// Platform string of the PJRT backend (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.executables
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not loaded"))
+    }
+
+    /// Raw execute: f32 literals in, 2-tuple of f32 literals out.
+    fn execute2(&self, name: &str, inputs: &[xla::Literal]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let exe = self.exe(name)?;
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let (a, b) = result.to_tuple2()?;
+        Ok((a.to_vec::<f32>()?, b.to_vec::<f32>()?))
+    }
+
+    /// One compound-node update on the XLA path (the fused Pallas kernel
+    /// lowered into `cn_update.hlo.txt`).
+    pub fn cn_update(
+        &self,
+        x: &GaussMessage,
+        y: &GaussMessage,
+        a: &CMatrix,
+    ) -> Result<GaussMessage> {
+        let n = x.dim();
+        let m = 2 * n as i64;
+        let lit = |mat: &CMatrix| -> Result<xla::Literal> {
+            Ok(xla::Literal::vec1(&blk_matrix(mat)).reshape(&[m, m])?)
+        };
+        let vx = lit(&x.cov)?;
+        let vy = lit(&y.cov)?;
+        let am = lit(a)?;
+        let mx = xla::Literal::vec1(&blk_vector(&x.mean));
+        let my = xla::Literal::vec1(&blk_vector(&y.mean));
+        let (vz, mz) = self.execute2("cn_update", &[vx, vy, am, mx, my])?;
+        Ok(GaussMessage::new(unblk_vector(&mz), unblk_matrix(&vz, n)))
+    }
+
+    /// Batched compound-node updates (`cn_update_batched.hlo.txt`). The
+    /// batch size is baked into the artifact; shorter batches are padded
+    /// with the first element and truncated on return.
+    pub fn cn_update_batched(
+        &self,
+        reqs: &[(GaussMessage, GaussMessage, CMatrix)],
+    ) -> Result<Vec<GaussMessage>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let entry = self
+            .manifest
+            .entry("cn_update_batched")
+            .context("cn_update_batched not in manifest")?;
+        let batch = entry.batch().context("batched artifact has no batch dim")?;
+        if reqs.len() > batch {
+            bail!("batch too large: {} > artifact batch {batch}", reqs.len());
+        }
+        let n = reqs[0].0.dim();
+        let m = 2 * n;
+        let (mut vx, mut vy, mut am) = (Vec::new(), Vec::new(), Vec::new());
+        let (mut mx, mut my) = (Vec::new(), Vec::new());
+        for i in 0..batch {
+            let (x, y, a) = &reqs[i.min(reqs.len() - 1)];
+            vx.extend(blk_matrix(&x.cov));
+            vy.extend(blk_matrix(&y.cov));
+            am.extend(blk_matrix(a));
+            mx.extend(blk_vector(&x.mean));
+            my.extend(blk_vector(&y.mean));
+        }
+        let dims = [batch as i64, m as i64, m as i64];
+        let vdims = [batch as i64, m as i64];
+        let inputs = [
+            xla::Literal::vec1(&vx).reshape(&dims)?,
+            xla::Literal::vec1(&vy).reshape(&dims)?,
+            xla::Literal::vec1(&am).reshape(&dims)?,
+            xla::Literal::vec1(&mx).reshape(&vdims)?,
+            xla::Literal::vec1(&my).reshape(&vdims)?,
+        ];
+        let (vz, mz) = self.execute2("cn_update_batched", &inputs)?;
+        let mut out = Vec::with_capacity(reqs.len());
+        for i in 0..reqs.len() {
+            let vz_i = &vz[i * m * m..(i + 1) * m * m];
+            let mz_i = &mz[i * m..(i + 1) * m];
+            out.push(GaussMessage::new(unblk_vector(mz_i), unblk_matrix(vz_i, n)));
+        }
+        Ok(out)
+    }
+
+    /// Full RLS chain (`rls_chain.hlo.txt`): returns the posterior after
+    /// every section. Sections count is baked into the artifact.
+    pub fn rls_chain(
+        &self,
+        prior: &GaussMessage,
+        a_seq: &[CMatrix],
+        y_seq: &[GaussMessage],
+        sigma2: f32,
+    ) -> Result<Vec<GaussMessage>> {
+        let entry = self.manifest.entry("rls_chain").context("rls_chain not in manifest")?;
+        let sections = entry.leading_dim().context("rls artifact has no section dim")?;
+        if a_seq.len() != sections || y_seq.len() != sections {
+            bail!(
+                "rls_chain artifact expects exactly {sections} sections, got {}",
+                a_seq.len()
+            );
+        }
+        let n = prior.dim();
+        let m = 2 * n;
+        let v0 = xla::Literal::vec1(&blk_matrix(&prior.cov)).reshape(&[m as i64, m as i64])?;
+        let m0 = xla::Literal::vec1(&blk_vector(&prior.mean));
+        let mut aseq = Vec::new();
+        let mut yseq = Vec::new();
+        for (a, y) in a_seq.iter().zip(y_seq) {
+            aseq.extend(blk_matrix(a));
+            yseq.extend(blk_vector(&y.mean));
+        }
+        let inputs = [
+            v0,
+            m0,
+            xla::Literal::vec1(&aseq).reshape(&[sections as i64, m as i64, m as i64])?,
+            xla::Literal::vec1(&yseq).reshape(&[sections as i64, m as i64])?,
+            xla::Literal::vec1(&[sigma2]).reshape(&[])?,
+        ];
+        let (v_seq, m_seq) = self.execute2("rls_chain", &inputs)?;
+        let mut out = Vec::with_capacity(sections);
+        for i in 0..sections {
+            let v_i = &v_seq[i * m * m..(i + 1) * m * m];
+            let m_i = &m_seq[i * m..(i + 1) * m];
+            out.push(GaussMessage::new(unblk_vector(m_i), unblk_matrix(v_i, n)));
+        }
+        Ok(out)
+    }
+}

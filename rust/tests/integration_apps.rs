@@ -1,0 +1,88 @@
+//! Integration: the application layer (RLS / Kalman / LMMSE / ToA) across
+//! engines — golden f64, the cycle-accurate simulator, and (when built)
+//! the XLA artifacts.
+
+use fgp_repro::apps::kalman::KalmanProblem;
+use fgp_repro::apps::lmmse::{ser_sweep, LmmseProblem};
+use fgp_repro::apps::rls::RlsProblem;
+use fgp_repro::apps::toa::ToaProblem;
+use fgp_repro::coordinator::backend::{FgpSimBackend, GoldenBackend};
+use fgp_repro::fgp::FgpConfig;
+
+#[test]
+fn rls_full_stack_consistency() {
+    let p = RlsProblem::synthetic(4, 16, 0.02, 101);
+    let golden = p.golden().unwrap();
+    let fgp = p.run_on_fgp().unwrap();
+    assert!(golden.rel_mse < 0.1, "golden {}", golden.rel_mse);
+    assert!(fgp.rel_mse < 0.6, "fgp {}", fgp.rel_mse); // Q5.10 floor (E9)
+    // compile stats present when run through the device
+    let stats = fgp.compile_stats.unwrap();
+    assert_eq!(stats.slots_optimized, 2);
+}
+
+#[test]
+fn rls_snr_ordering() {
+    // lower noise -> better estimate (golden path)
+    let low = RlsProblem::synthetic(4, 32, 0.002, 7).golden().unwrap();
+    let high = RlsProblem::synthetic(4, 32, 0.2, 7).golden().unwrap();
+    assert!(low.rel_mse < high.rel_mse);
+}
+
+#[test]
+fn kalman_full_stack_consistency() {
+    let p = KalmanProblem::synthetic(15, 11);
+    let golden = p.golden().unwrap();
+    let fgp = p.run_on_fgp().unwrap();
+    assert!(golden.pos_error < 0.3);
+    assert!(fgp.pos_error < golden.pos_error + 0.4);
+}
+
+#[test]
+fn lmmse_cross_engine_ser() {
+    let mut golden = GoldenBackend;
+    let mut sim = FgpSimBackend::new(FgpConfig::default()).unwrap();
+    let g = ser_sweep(&mut golden, 4, &[5.0, 15.0], 15).unwrap();
+    let f = ser_sweep(&mut sim, 4, &[5.0, 15.0], 15).unwrap();
+    // both engines improve with SNR and stay within a few % of each other
+    assert!(g[1].1 <= g[0].1);
+    assert!(f[1].1 <= f[0].1 + 0.02);
+    assert!((g[1].1 - f[1].1).abs() < 0.1);
+}
+
+#[test]
+fn lmmse_handles_zero_noise_block() {
+    let p = LmmseProblem::synthetic(4, 1e-6, 3);
+    let o = p.run_on(&mut GoldenBackend).unwrap();
+    assert_eq!(o.symbol_errors, 0);
+    assert!(o.rel_mse < 1e-3);
+}
+
+#[test]
+fn toa_cross_engine() {
+    let p = ToaProblem::synthetic(8, 1e-3, 13);
+    let g = p.run_on(&mut GoldenBackend, 2).unwrap();
+    let mut sim = FgpSimBackend::new(FgpConfig::default()).unwrap();
+    let f = p.run_on(&mut sim, 2).unwrap();
+    assert!(g.error < 0.05, "golden {}", g.error);
+    assert!(f.error < 0.2, "sim {}", f.error);
+}
+
+#[test]
+fn xla_rls_matches_golden_when_artifacts_present() {
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = fgp_repro::runtime::RuntimeClient::load(&artifacts).unwrap();
+    let p = RlsProblem::synthetic(rt.manifest.n, rt.manifest.sections, 0.02, 77);
+    let xla = p.run_on_xla(&rt).unwrap();
+    let golden = p.golden().unwrap();
+    assert!(
+        (xla.rel_mse - golden.rel_mse).abs() < 5e-3,
+        "xla {} vs golden {}",
+        xla.rel_mse,
+        golden.rel_mse
+    );
+}

@@ -1,0 +1,149 @@
+//! Integration: the Listing 1 → Listing 2 compile flow end to end —
+//! graph → schedule → assembler text → binary image → reload → run —
+//! including the E4 check that the output has the paper's program shape.
+
+use fgp_repro::compiler::{compile, CompileOptions};
+use fgp_repro::fgp::processor::NoFeed;
+use fgp_repro::fgp::{Fgp, FgpConfig};
+use fgp_repro::gmp::matrix::CMatrix;
+use fgp_repro::gmp::{FactorGraph, Schedule};
+use fgp_repro::isa::{parse_listing, Instr, MemoryImage, Program};
+use fgp_repro::testutil::Rng;
+
+fn rls(sections: usize, seed: u64) -> (FactorGraph, Schedule) {
+    let mut rng = Rng::new(seed);
+    let n = 4;
+    let a_list: Vec<CMatrix> =
+        (0..sections).map(|_| CMatrix::random(&mut rng, n, n).scale(0.3)).collect();
+    let mut g = FactorGraph::new();
+    g.rls_chain(n, &a_list);
+    let s = Schedule::forward_sweep(&g);
+    (g, s)
+}
+
+/// E4: the 2-section RLS compiles to the paper's Listing 2 shape.
+#[test]
+fn compile_listing2() {
+    let (g, s) = rls(2, 1);
+    let c = compile(&g, &s, &CompileOptions::default()).unwrap();
+    let mnemonics: Vec<&str> = c.program.instrs.iter().map(|i| i.mnemonic()).collect();
+    assert_eq!(
+        mnemonics,
+        vec!["prg", "mma", "mms", "mms", "fad", "smm", "loop", "halt"],
+        "listing:\n{}",
+        c.listing()
+    );
+    // the paper compresses its 2 sections with loop
+    assert!(matches!(c.program.instrs[6], Instr::Loop { count: 2, body: 5 }));
+}
+
+/// Text → binary → text round-trips (the assembler/disassembler pair).
+#[test]
+fn asm_image_roundtrip() {
+    let (g, s) = rls(4, 2);
+    let c = compile(&g, &s, &CompileOptions::default()).unwrap();
+    let text = c.listing();
+    let reparsed = Program::new(parse_listing(&text).unwrap());
+    assert_eq!(reparsed, c.program);
+    let image = reparsed.to_image();
+    let reloaded = Program::from_image(&MemoryImage { bytes: image.bytes }).unwrap();
+    assert_eq!(reloaded, c.program);
+}
+
+/// Compressed and straight-line programs produce identical results on
+/// the device (the loop instruction's semantic equivalence).
+#[test]
+fn compressed_and_flat_agree_on_device() {
+    let mut rng = Rng::new(3);
+    let n = 4;
+    let sections = 3;
+    let a_list: Vec<CMatrix> =
+        (0..sections).map(|_| CMatrix::random(&mut rng, n, n).scale(0.3)).collect();
+
+    let (g, s) = {
+        let mut g = FactorGraph::new();
+        g.rls_chain(n, &a_list);
+        let s = Schedule::forward_sweep(&g);
+        (g, s)
+    };
+    let compressed = compile(&g, &s, &CompileOptions::default()).unwrap();
+    let flat = compile(
+        &g,
+        &s,
+        &CompileOptions { compress_loops: false, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(compressed.program.unrolled(), flat.program.unrolled());
+
+    use fgp_repro::gmp::message::GaussMessage;
+    let prior = GaussMessage::isotropic(n, 0.5);
+    let y = GaussMessage::isotropic(n, 0.1);
+
+    let run = |compiled: &fgp_repro::compiler::CompiledProgram| {
+        let mut fgp = Fgp::new(FgpConfig::default());
+        fgp.pm.load(&compiled.program.to_image()).unwrap();
+        fgp.msgmem.write_message(compiled.memmap.preloads[0].1, &prior);
+        fgp.msgmem.write_message(compiled.memmap.streams[0].1, &y);
+        // constant regressor for all sections so flat/looped feeds agree
+        fgp.statemem
+            .write_matrix(compiled.memmap.state_streams[0].1, &a_list[0]);
+        fgp.run_program(1, &mut NoFeed).unwrap();
+        fgp.msgmem.read_message(compiled.memmap.outputs[0].1)
+    };
+    let a_out = run(&compressed);
+    let b_out = run(&flat);
+    assert!(a_out.dist(&b_out) < 1e-12, "dist {}", a_out.dist(&b_out));
+}
+
+/// Memory-capacity errors surface as typed compile errors, not panics.
+#[test]
+fn capacity_errors_are_typed() {
+    use fgp_repro::compiler::{AllocOptions, CompileError};
+    let (g, s) = rls(16, 4);
+    let err = compile(
+        &g,
+        &s,
+        &CompileOptions {
+            optimize_memory: false,
+            alloc: AllocOptions { optimize: false, capacity: 3, ..Default::default() },
+            ..Default::default()
+        },
+    )
+    .unwrap_err();
+    assert!(matches!(err, CompileError::OutOfMemory { .. }));
+
+    let err2 = compile(
+        &g,
+        &s,
+        &CompileOptions { compress_loops: false, pm_capacity: 10, ..Default::default() },
+    )
+    .unwrap_err();
+    assert!(matches!(err2, CompileError::ProgramTooLong { .. }));
+}
+
+/// The program image stays within the 64-kbit PM budget even for long
+/// chains (thanks to loop compression).
+#[test]
+fn pm_budget_holds_for_long_chains() {
+    let (g, s) = rls(64, 5);
+    let c = compile(&g, &s, &CompileOptions::default()).unwrap();
+    assert!(c.program.to_image().bits() < 64 * 1024);
+    assert_eq!(c.program.instrs.len(), 8);
+}
+
+/// Every instruction the compiler can emit decodes back identically
+/// after a trip through the binary image.
+#[test]
+fn emitted_instructions_roundtrip_binary() {
+    let (g, s) = rls(8, 6);
+    for opts in [
+        CompileOptions::default(),
+        CompileOptions { optimize_memory: false, ..Default::default() },
+        CompileOptions { compress_loops: false, ..Default::default() },
+    ] {
+        let c = compile(&g, &s, &opts).unwrap();
+        for i in &c.program.instrs {
+            assert_eq!(&Instr::decode(i.encode()).unwrap(), i);
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Integration: the coordinator serving layer — concurrency, batching,
+//! shutdown, device protocol, and the XLA backend when available.
+
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use fgp_repro::coordinator::backend::{CnRequestData, FgpSimBackend, GoldenBackend};
+use fgp_repro::coordinator::{BatchPolicy, CnServer, FgpDevice, ServerConfig};
+use fgp_repro::fgp::processor::{Command, Reply};
+use fgp_repro::fgp::FgpConfig;
+use fgp_repro::gmp::matrix::{c64, CMatrix};
+use fgp_repro::gmp::message::GaussMessage;
+use fgp_repro::testutil::Rng;
+
+fn request(rng: &mut Rng, n: usize) -> CnRequestData {
+    CnRequestData {
+        x: GaussMessage::new(
+            (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+            CMatrix::random_psd(rng, n, 1.0).scale(0.15),
+        ),
+        y: GaussMessage::new(
+            (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+            CMatrix::random_psd(rng, n, 1.0).scale(0.15),
+        ),
+        a: CMatrix::random(rng, n, n).scale(0.3),
+    }
+}
+
+#[test]
+fn golden_server_concurrent_correctness() {
+    let server =
+        CnServer::start(|| Ok(Box::new(GoldenBackend) as _), ServerConfig::default()).unwrap();
+    let mut joins = Vec::new();
+    for t in 0..8u64 {
+        let client = server.client();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(900 + t);
+            for _ in 0..20 {
+                let req = request(&mut rng, 4);
+                let got = client.update(req.clone()).unwrap();
+                let want = fgp_repro::gmp::nodes::compound_observation(
+                    &req.x, &req.y, &req.a, false,
+                )
+                .unwrap();
+                assert!(got.dist(&want) < 1e-9);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    assert_eq!(server.client().metrics().completed.load(Ordering::Relaxed), 160);
+    server.shutdown();
+}
+
+#[test]
+fn fgp_sim_server_works_behind_queue() {
+    let server = CnServer::start(
+        || Ok(Box::new(FgpSimBackend::new(FgpConfig::default())?) as _),
+        ServerConfig {
+            batch: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        },
+    )
+    .unwrap();
+    let client = server.client();
+    let mut rng = Rng::new(42);
+    for _ in 0..12 {
+        let req = request(&mut rng, 4);
+        let got = client.update(req.clone()).unwrap();
+        let want =
+            fgp_repro::gmp::nodes::compound_observation(&req.x, &req.y, &req.a, true).unwrap();
+        assert!(got.dist(&want) < 0.05, "dist {}", got.dist(&want));
+    }
+    server.shutdown();
+}
+
+#[test]
+fn server_shutdown_is_clean_with_live_clients() {
+    let server =
+        CnServer::start(|| Ok(Box::new(GoldenBackend) as _), ServerConfig::default()).unwrap();
+    let client = server.client(); // clone outlives the server
+    server.shutdown();
+    // post-shutdown submissions fail gracefully
+    let mut rng = Rng::new(1);
+    assert!(client.update(request(&mut rng, 4)).is_err());
+}
+
+#[test]
+fn boot_failure_reported_synchronously() {
+    let result = CnServer::start(
+        || Err(anyhow::anyhow!("backend exploded")),
+        ServerConfig::default(),
+    );
+    assert!(result.is_err());
+    assert!(format!("{:#}", result.err().unwrap()).contains("exploded"));
+}
+
+#[test]
+fn device_protocol_survives_slot_abuse() {
+    let dev = FgpDevice::start(FgpConfig::default());
+    // out-of-range slots must reply errors, device must keep serving
+    for slot in [200u8, 255] {
+        match dev.command(Command::ReadMessage { slot }) {
+            Reply::Error(_) => {}
+            other => panic!("expected error, got {other:?}"),
+        }
+    }
+    assert!(matches!(dev.command(Command::Status), Reply::Status { .. }));
+    drop(dev);
+}
+
+#[test]
+fn xla_batch_server_when_artifacts_present() {
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    use fgp_repro::coordinator::backend::XlaBatchBackend;
+    use fgp_repro::runtime::RuntimeClient;
+    let server = CnServer::start(
+        move || Ok(Box::new(XlaBatchBackend::new(RuntimeClient::load(&artifacts)?)?) as _),
+        ServerConfig {
+            batch: BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(2) },
+        },
+    )
+    .unwrap();
+    let client = server.client();
+    let mut rng = Rng::new(5);
+    let reqs: Vec<CnRequestData> = (0..48).map(|_| request(&mut rng, 4)).collect();
+    let pending: Vec<_> = reqs.iter().map(|r| client.submit(r.clone())).collect();
+    for (rx, req) in pending.into_iter().zip(&reqs) {
+        let got = rx.recv().unwrap().unwrap();
+        let want =
+            fgp_repro::gmp::nodes::compound_observation(&req.x, &req.y, &req.a, false).unwrap();
+        assert!(got.dist(&want) < 1e-3 * (1.0 + want.cov.max_abs()));
+    }
+    assert!(client.metrics().mean_batch_size() > 1.0, "batching must engage");
+    server.shutdown();
+}

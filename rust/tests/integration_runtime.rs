@@ -1,0 +1,144 @@
+//! Integration: PJRT runtime vs the Rust golden GMP rules.
+//!
+//! Loads the real AOT artifacts (built by `make artifacts`) and checks
+//! the XLA-executed compound-node / RLS numerics against
+//! `gmp::nodes::compound_observation`. This is the cross-layer proof:
+//! L1 Pallas kernel == L2 JAX model == L3 golden rules.
+
+use fgp_repro::gmp::matrix::{c64, CMatrix};
+use fgp_repro::gmp::message::GaussMessage;
+use fgp_repro::gmp::nodes;
+use fgp_repro::runtime::RuntimeClient;
+use fgp_repro::testutil::Rng;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.txt").exists()
+}
+
+fn random_msg(rng: &mut Rng, n: usize, scale: f64) -> GaussMessage {
+    GaussMessage::new(
+        (0..n).map(|_| c64::new(rng.normal(), rng.normal())).collect(),
+        CMatrix::random_psd(rng, n, 0.3).scale(scale),
+    )
+}
+
+#[test]
+fn cn_update_matches_golden() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = RuntimeClient::load(artifacts_dir()).unwrap();
+    let n = rt.manifest.n;
+    let mut rng = Rng::new(1);
+    for seed in 0..5u64 {
+        let mut rng2 = Rng::new(seed + 100);
+        let x = random_msg(&mut rng2, n, 1.0);
+        let y = random_msg(&mut rng2, n, 1.0);
+        let a = CMatrix::random(&mut rng, n, n);
+        let got = rt.cn_update(&x, &y, &a).unwrap();
+        let want = nodes::compound_observation(&x, &y, &a, true).unwrap();
+        let d = got.dist(&want);
+        let scale = 1.0 + want.cov.max_abs();
+        assert!(d < 1e-3 * scale, "seed {seed}: xla vs golden dist {d}");
+    }
+}
+
+#[test]
+fn cn_update_batched_matches_single() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = RuntimeClient::load(artifacts_dir()).unwrap();
+    let n = rt.manifest.n;
+    let mut rng = Rng::new(7);
+    let reqs: Vec<(GaussMessage, GaussMessage, CMatrix)> = (0..5)
+        .map(|_| {
+            (
+                random_msg(&mut rng, n, 1.0),
+                random_msg(&mut rng, n, 1.0),
+                CMatrix::random(&mut rng, n, n),
+            )
+        })
+        .collect();
+    let batched = rt.cn_update_batched(&reqs).unwrap();
+    assert_eq!(batched.len(), 5);
+    for (i, (x, y, a)) in reqs.iter().enumerate() {
+        let single = rt.cn_update(x, y, a).unwrap();
+        let d = batched[i].dist(&single);
+        assert!(d < 1e-4 * (1.0 + single.cov.max_abs()), "req {i}: dist {d}");
+    }
+}
+
+#[test]
+fn batch_overflow_is_error() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = RuntimeClient::load(artifacts_dir()).unwrap();
+    let n = rt.manifest.n;
+    let batch = rt.manifest.batch;
+    let mut rng = Rng::new(7);
+    let reqs: Vec<_> = (0..batch + 1)
+        .map(|_| {
+            (
+                random_msg(&mut rng, n, 1.0),
+                random_msg(&mut rng, n, 1.0),
+                CMatrix::random(&mut rng, n, n),
+            )
+        })
+        .collect();
+    assert!(rt.cn_update_batched(&reqs).is_err());
+}
+
+#[test]
+fn rls_chain_matches_sequential_golden() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = RuntimeClient::load(artifacts_dir()).unwrap();
+    let n = rt.manifest.n;
+    let sections = rt.manifest.sections;
+    let sigma2 = 0.1f64;
+    let mut rng = Rng::new(3);
+    let prior = GaussMessage::isotropic(n, 2.0);
+    let a_seq: Vec<CMatrix> = (0..sections).map(|_| CMatrix::random(&mut rng, n, n)).collect();
+    let y_seq: Vec<GaussMessage> = (0..sections)
+        .map(|_| {
+            GaussMessage::observation(
+                &(0..n).map(|_| c64::new(rng.normal(), rng.normal())).collect::<Vec<_>>(),
+                sigma2,
+            )
+        })
+        .collect();
+
+    let got = rt.rls_chain(&prior, &a_seq, &y_seq, sigma2 as f32).unwrap();
+    assert_eq!(got.len(), sections);
+
+    // golden sequential reference
+    let mut msg = prior.clone();
+    for (i, (a, y)) in a_seq.iter().zip(&y_seq).enumerate() {
+        msg = nodes::compound_observation(&msg, y, a, true).unwrap();
+        let d = got[i].dist(&msg);
+        // f32 accumulation across sections: allow growing tolerance
+        let tol = 5e-3 * (1.0 + msg.cov.max_abs()) * (1.0 + i as f64 * 0.15);
+        assert!(d < tol, "section {i}: dist {d} (tol {tol})");
+    }
+}
+
+#[test]
+fn missing_artifacts_dir_errors_cleanly() {
+    let err = match RuntimeClient::load("/nonexistent/path") {
+        Ok(_) => panic!("load should fail"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("manifest"), "{msg}");
+}

@@ -1,0 +1,239 @@
+//! Property suite: randomized invariants across all substrates
+//! (deterministic xorshift cases; failing seeds are reported for replay).
+
+use fgp_repro::compiler::{compile, loopcomp, AllocOptions, CompileOptions, ScorePolicy};
+use fgp_repro::fixed::{CFix, Fix, QFormat};
+use fgp_repro::gmp::matrix::{c64, CMatrix};
+use fgp_repro::gmp::message::GaussMessage;
+use fgp_repro::gmp::{nodes, FactorGraph, Schedule};
+use fgp_repro::isa::{parse_line, Instr, Program};
+use fgp_repro::testutil::{proptest_cases, Rng};
+
+// ---------------------------------------------------------------------
+// fixed point
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_fix_add_is_commutative_and_monotone() {
+    proptest_cases(300, |rng| {
+        let fmt = QFormat::q5_10();
+        let a = Fix::from_f64(rng.range(-20.0, 20.0), fmt);
+        let b = Fix::from_f64(rng.range(-20.0, 20.0), fmt);
+        assert_eq!(a.add(b), b.add(a));
+        let c = Fix::from_f64(rng.range(0.0, 5.0), fmt);
+        assert!(a.add(c).raw >= a.raw); // adding non-negative never decreases
+    });
+}
+
+#[test]
+fn prop_cfix_mul_conjugate_gives_abs2() {
+    proptest_cases(300, |rng| {
+        let fmt = QFormat::q5_10();
+        let z = CFix::from_f64(rng.range(-3.0, 3.0), rng.range(-3.0, 3.0), fmt);
+        let zz = z.mul(z.conj());
+        // z * conj(z) is real and matches |z|^2
+        assert!(zz.im.to_f64().abs() < 4.0 * fmt.resolution());
+        let direct = z.abs2().to_f64();
+        assert!((zz.re.to_f64() - direct).abs() < 8.0 * fmt.resolution());
+    });
+}
+
+#[test]
+fn prop_division_inverts_multiplication() {
+    proptest_cases(200, |rng| {
+        let fmt = QFormat::new(5, 16); // wide enough for the tolerance
+        let a = CFix::from_f64(rng.range(-2.0, 2.0), rng.range(-2.0, 2.0), fmt);
+        let b = CFix::from_f64(rng.range(0.7, 2.0), rng.range(0.7, 2.0), fmt);
+        let q = a.mul(b).div(b);
+        let (qr, qi) = q.to_c64();
+        let (ar, ai) = a.to_c64();
+        assert!((qr - ar).abs() < 0.01, "{qr} vs {ar}");
+        assert!((qi - ai).abs() < 0.01, "{qi} vs {ai}");
+    });
+}
+
+// ---------------------------------------------------------------------
+// golden linear algebra / node rules
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_schur_faddeev_equals_direct() {
+    proptest_cases(100, |rng| {
+        let n = 2 + rng.below(5);
+        let m = 2 + rng.below(5);
+        let g = CMatrix::random_psd(rng, n, 0.5);
+        let b = CMatrix::random(rng, n, m);
+        let c = CMatrix::random(rng, m, n);
+        let d = CMatrix::random(rng, m, m);
+        let f = CMatrix::schur_faddeev(&g, &b, &c, &d).unwrap();
+        let s = CMatrix::schur_direct(&g, &b, &c, &d).unwrap();
+        assert!(f.dist(&s) < 1e-7 * (1.0 + s.max_abs()));
+    });
+}
+
+#[test]
+fn prop_compound_node_information_never_increases_uncertainty() {
+    proptest_cases(100, |rng| {
+        let n = 2 + rng.below(4);
+        let x = GaussMessage::new(
+            (0..n).map(|_| c64::new(rng.normal(), rng.normal())).collect(),
+            CMatrix::random_psd(rng, n, 0.5),
+        );
+        let y = GaussMessage::new(
+            (0..n).map(|_| c64::new(rng.normal(), rng.normal())).collect(),
+            CMatrix::random_psd(rng, n, 0.5),
+        );
+        let a = CMatrix::random(rng, n, n);
+        let z = nodes::compound_observation(&x, &y, &a, true).unwrap();
+        assert!(z.trace_cov() <= x.trace_cov() + 1e-9);
+        // posterior covariance stays Hermitian PSD-ish
+        assert!(z.cov.hermitian_defect() < 1e-7 * (1.0 + z.cov.max_abs()));
+    });
+}
+
+// ---------------------------------------------------------------------
+// ISA
+// ---------------------------------------------------------------------
+
+fn random_instr(rng: &mut Rng) -> Instr {
+    use fgp_repro::isa::{OperandSrc, ACC};
+    let slot = |rng: &mut Rng| if rng.uniform() < 0.1 { ACC } else { rng.below(200) as u8 };
+    let operand = |rng: &mut Rng| {
+        if rng.uniform() < 0.5 {
+            OperandSrc::Msg(slot(rng))
+        } else {
+            OperandSrc::State(rng.below(16) as u8)
+        }
+    };
+    match rng.below(7) {
+        0 => Instr::Mma {
+            a: operand(rng),
+            a_herm: rng.uniform() < 0.5,
+            b: operand(rng),
+            b_herm: rng.uniform() < 0.5,
+            neg: rng.uniform() < 0.5,
+            vec: rng.uniform() < 0.5,
+        },
+        1 => Instr::Mms {
+            a: operand(rng),
+            a_herm: rng.uniform() < 0.5,
+            b: operand(rng),
+            b_herm: rng.uniform() < 0.5,
+            c: slot(rng),
+            neg: rng.uniform() < 0.5,
+            vec: rng.uniform() < 0.5,
+        },
+        2 => Instr::Fad {
+            g: slot(rng),
+            b: slot(rng),
+            b_herm: rng.uniform() < 0.5,
+            c: slot(rng),
+            d: slot(rng),
+        },
+        3 => Instr::Smm { dst: rng.below(255) as u8 },
+        4 => Instr::Loop { count: (rng.below(60000) + 1) as u16, body: (rng.below(255) + 1) as u8 },
+        5 => Instr::Prg { id: rng.below(255) as u8 },
+        _ => Instr::Halt,
+    }
+}
+
+#[test]
+fn prop_isa_binary_and_text_roundtrip() {
+    proptest_cases(2000, |rng| {
+        let i = random_instr(rng);
+        assert_eq!(Instr::decode(i.encode()).unwrap(), i);
+        let text = format!("{i}");
+        assert_eq!(parse_line(&text, 1).unwrap().unwrap(), i, "text: {text}");
+    });
+}
+
+#[test]
+fn prop_program_image_roundtrip() {
+    proptest_cases(100, |rng| {
+        let len = 1 + rng.below(40);
+        let instrs: Vec<Instr> = (0..len).map(|_| random_instr(rng)).collect();
+        let p = Program::new(instrs);
+        let back = Program::from_image(&p.to_image()).unwrap();
+        assert_eq!(back, p);
+    });
+}
+
+// ---------------------------------------------------------------------
+// compiler
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_loop_compression_preserves_unrolled_stream() {
+    use fgp_repro::isa::OperandSrc;
+    proptest_cases(150, |rng| {
+        // random stream with deliberate repetition: pick a small alphabet
+        let alphabet: Vec<Instr> = (0..3)
+            .map(|k| Instr::Smm { dst: k as u8 })
+            .chain((0..2).map(|k| Instr::Mma {
+                a: OperandSrc::Msg(k as u8),
+                a_herm: false,
+                b: OperandSrc::State(0),
+                b_herm: true,
+                neg: false,
+                vec: false,
+            }))
+            .collect();
+        let len = 2 + rng.below(30);
+        let instrs: Vec<Instr> =
+            (0..len).map(|_| alphabet[rng.below(alphabet.len())].clone()).collect();
+        let c = loopcomp::compress(&instrs);
+        let p = Program::new(c.instrs);
+        assert_eq!(p.unrolled(), instrs, "looped: {:?}", c.looped);
+    });
+}
+
+#[test]
+fn prop_allocator_valid_across_policies_and_sizes() {
+    proptest_cases(60, |rng| {
+        let sections = 1 + rng.below(20);
+        let n = 4;
+        let a_list: Vec<CMatrix> =
+            (0..sections).map(|_| CMatrix::random(rng, n, n)).collect();
+        let mut g = FactorGraph::new();
+        g.rls_chain(n, &a_list);
+        let s = Schedule::forward_sweep(&g);
+        let policy = match rng.below(3) {
+            0 => ScorePolicy::MostRecentlyFreed,
+            1 => ScorePolicy::LowestIndex,
+            _ => ScorePolicy::LeastRecentlyFreed,
+        };
+        let c = compile(
+            &g,
+            &s,
+            &CompileOptions {
+                alloc: AllocOptions { policy, ..Default::default() },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // optimized slot count is O(1) for chains under every policy
+        assert!(c.stats.slots_optimized <= 3, "{policy:?}: {}", c.stats.slots_optimized);
+        // all referenced slots stay below the allocated count
+        for i in &c.program.instrs {
+            if let Instr::Smm { dst } = i {
+                assert!((*dst as usize) < c.memmap.num_slots);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_compile_deterministic() {
+    proptest_cases(30, |rng| {
+        let sections = 1 + rng.below(10);
+        let n = 4;
+        let a_list: Vec<CMatrix> =
+            (0..sections).map(|_| CMatrix::random(rng, n, n)).collect();
+        let mut g = FactorGraph::new();
+        g.rls_chain(n, &a_list);
+        let s = Schedule::forward_sweep(&g);
+        let c1 = compile(&g, &s, &CompileOptions::default()).unwrap();
+        let c2 = compile(&g, &s, &CompileOptions::default()).unwrap();
+        assert_eq!(c1.program, c2.program);
+    });
+}
