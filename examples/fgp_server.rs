@@ -5,7 +5,10 @@
 //! multi-threaded client population fires compound-node update requests
 //! at the coordinator, which batches them onto the PJRT `cn_update_batched`
 //! artifact (falling back to the golden engine when `artifacts/` is not
-//! built), and reports latency/throughput.
+//! built), and reports latency/throughput. A full RLS-chain workload
+//! request rides the same queue ([`WorkloadRequest`]), showing the
+//! coordinator serving compiled-program executions, not just raw CN
+//! updates.
 //!
 //! It also demos the raw Fig. 5 command protocol against the
 //! cycle-accurate device ([`FgpDevice`]).
@@ -14,8 +17,12 @@
 
 use std::time::Instant;
 
-use fgp_repro::coordinator::backend::{CnRequestData, GoldenBackend, XlaBatchBackend};
+use fgp_repro::apps::rls::RlsProblem;
+use fgp_repro::coordinator::backend::{
+    CnRequestData, GoldenBackend, WorkloadRequest, XlaBatchBackend,
+};
 use fgp_repro::coordinator::{BatchPolicy, CnServer, FgpDevice, ServerConfig};
+use fgp_repro::engine::Workload;
 use fgp_repro::fgp::processor::{Command, Reply};
 use fgp_repro::fgp::FgpConfig;
 use fgp_repro::gmp::matrix::{c64, CMatrix};
@@ -90,6 +97,15 @@ fn main() -> anyhow::Result<()> {
         total as f64 / elapsed.as_secs_f64()
     );
     println!("metrics: {}", client.metrics().report());
+
+    // --- a whole RLS-chain workload through the same queue
+    let p = RlsProblem::synthetic(n, 16, 0.02, 77);
+    let exec = client.run_workload(WorkloadRequest::from_workload(&p)?)?;
+    let outcome = p.outcome(&exec)?;
+    println!(
+        "\nworkload request (16-section RLS chain): rel MSE {:.5}",
+        outcome.rel_mse
+    );
     server.shutdown();
 
     // --- raw command protocol against the cycle-accurate device

@@ -1,22 +1,26 @@
 //! Fixed-interval Gaussian smoothing via two-pass GMP.
 //!
-//! Exercises every Fig. 1 node rule: forward Kalman filtering (compound
-//! observation), backward weight-form messages (multiplier inverse +
-//! additive widening), and the equality-node fusion producing smoothed
-//! marginals. Reports filter vs smoother RMSE across trajectories.
+//! Forward Kalman filtering, backward conditioning, and equality fusion
+//! of the two directions — one factor-graph workload. Long trajectories
+//! run on the golden engine; a device-sized chain runs the very same
+//! graph on the cycle-accurate simulator. Reports filter vs smoother
+//! RMSE across trajectories.
 //!
 //! Run: `cargo run --release --example gaussian_smoother`
 
 use fgp_repro::apps::smoother::SmootherProblem;
+use fgp_repro::engine::Session;
+use fgp_repro::fgp::FgpConfig;
 
 fn main() -> anyhow::Result<()> {
     println!("=== Gaussian smoother (forward-backward GMP) ===\n");
+    let mut golden = Session::golden();
     println!("{:>6} {:>14} {:>14} {:>10}", "seed", "filter RMSE", "smoother RMSE", "gain");
     let mut total_gain = 0.0;
     let trials = 8;
     for seed in 0..trials {
         let p = SmootherProblem::synthetic(80, 200 + seed);
-        let out = p.run_golden()?;
+        let out = golden.run(&p)?.outcome;
         let gain = out.filter_rmse / out.smoother_rmse.max(1e-12);
         total_gain += gain;
         println!(
@@ -28,7 +32,7 @@ fn main() -> anyhow::Result<()> {
 
     // marginal-variance picture on one run
     let p = SmootherProblem::synthetic(60, 300);
-    let out = p.run_golden()?;
+    let out = golden.run(&p)?.outcome;
     let first = out.marginals.first().unwrap().trace_cov();
     let mid = out.marginals[30].trace_cov();
     let last = out.marginals.last().unwrap().trace_cov();
@@ -37,6 +41,17 @@ fn main() -> anyhow::Result<()> {
          (interior states see two-sided information)"
     );
     assert!(out.smoother_rmse <= out.filter_rmse + 1e-9);
+
+    // the same graph on the device (a chain whose working set fits the
+    // 64-kbit message memory)
+    let small = SmootherProblem::synthetic(8, 400);
+    let g = golden.run(&small)?;
+    let f = Session::fgp_sim(FgpConfig::default()).run(&small)?;
+    println!(
+        "\ndevice run (8 steps): smoother RMSE {:.4} (golden {:.4}), {} cycles",
+        f.quality, g.quality, f.cycles
+    );
+
     println!("\ngaussian_smoother OK");
     Ok(())
 }

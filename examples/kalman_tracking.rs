@@ -3,26 +3,30 @@
 //!
 //! A constant-velocity target is tracked from noisy position fixes; the
 //! filter is expressed as a factor-graph chain of multiplier, additive
-//! and compound-observation nodes, compiled to FGP assembler, and run on
-//! the cycle-accurate simulator.
+//! and compound-observation nodes and run through the same `Session`
+//! surface on the golden engine and the cycle-accurate simulator.
 //!
 //! Run: `cargo run --release --example kalman_tracking`
 
 use fgp_repro::apps::kalman::KalmanProblem;
+use fgp_repro::engine::{Session, Workload};
+use fgp_repro::fgp::FgpConfig;
 
 fn main() -> anyhow::Result<()> {
     println!("=== Constant-velocity tracking on the FGP ===\n");
+    let mut golden_session = Session::golden();
+    let mut device_session = Session::fgp_sim(FgpConfig::default());
     println!(
         "{:>8} {:>16} {:>16} {:>12}",
         "steps", "golden pos err", "FGP pos err", "cycles"
     );
     for steps in [10usize, 20, 40] {
         let p = KalmanProblem::synthetic(steps, 99);
-        let golden = p.golden()?;
-        let fgp = p.run_on_fgp()?;
+        let golden = golden_session.run(&p)?;
+        let fgp = device_session.run(&p)?;
         println!(
             "{steps:>8} {:>16.4} {:>16.4} {:>12}",
-            golden.pos_error, fgp.pos_error, fgp.cycles
+            golden.quality, fgp.quality, fgp.cycles
         );
     }
 
@@ -37,9 +41,11 @@ fn main() -> anyhow::Result<()> {
     );
     println!("\nassembler:\n{}", compiled.listing());
 
-    let golden = p.golden()?;
-    let fgp = p.run_on_fgp()?;
-    assert!(fgp.pos_error < golden.pos_error + 0.3);
+    let golden = golden_session.run(&p)?;
+    let fgp = device_session.run(&p)?;
+    assert!(fgp.quality < golden.quality + p.tolerance());
+    // this 20-step run reused the compiled program from the sweep above
+    assert!(fgp.cached);
     println!("kalman_tracking OK");
     Ok(())
 }

@@ -3,12 +3,14 @@
 //! Sweeps SNR and reports symbol error rate for the golden f64 engine
 //! and the cycle-accurate FGP simulator — the second program a baseband
 //! receiver would keep in the FGP's program memory next to the RLS
-//! estimator (§III's multi-program scenario).
+//! estimator (§III's multi-program scenario). Every block is one
+//! single-section workload, so the device session compiles exactly one
+//! program for the whole sweep.
 //!
 //! Run: `cargo run --release --example lmmse_equalizer`
 
 use fgp_repro::apps::lmmse::{ser_sweep, LmmseProblem};
-use fgp_repro::coordinator::backend::{Backend, FgpSimBackend, GoldenBackend};
+use fgp_repro::engine::Session;
 use fgp_repro::fgp::FgpConfig;
 
 fn main() -> anyhow::Result<()> {
@@ -18,10 +20,10 @@ fn main() -> anyhow::Result<()> {
     let snrs = [0.0, 5.0, 10.0, 15.0, 20.0];
     let trials = 40;
 
-    let mut golden = GoldenBackend;
+    let mut golden = Session::golden();
     let golden_sweep = ser_sweep(&mut golden, n, &snrs, trials)?;
 
-    let mut sim = FgpSimBackend::new(FgpConfig::default())?;
+    let mut sim = Session::fgp_sim(FgpConfig::default());
     let fgp_sweep = ser_sweep(&mut sim, n, &snrs, trials)?;
 
     println!("{:>8} {:>12} {:>12}", "SNR dB", "golden SER", "FGP SER");
@@ -31,15 +33,17 @@ fn main() -> anyhow::Result<()> {
 
     // single-block detail at moderate SNR
     let p = LmmseProblem::synthetic(n, 0.01, 7);
-    let o = p.run_on(&mut golden as &mut dyn Backend)?;
+    let o = golden.run(&p)?;
     println!(
         "\nexample block @14dB: {} symbol errors, rel MSE {:.4}",
-        o.symbol_errors, o.rel_mse
+        o.outcome.symbol_errors, o.outcome.rel_mse
     );
+    let cache = sim.cache_stats();
     println!(
-        "device cycles so far: {} ({} CN updates)",
-        sim.device_cycles,
-        sim.device_cycles / sim.cn_cycles()
+        "device program cache over {} blocks: {} miss, {} hits",
+        snrs.len() * trials as usize,
+        cache.misses,
+        cache.hits
     );
 
     // SER must be monotone-ish in SNR for both engines

@@ -1,31 +1,90 @@
 //! Quickstart: one compound-node message update, end to end.
 //!
-//! Builds the smallest useful factor graph (a single compound
-//! observation node), compiles it to FGP assembler (the Listing 1 →
-//! Listing 2 flow), runs it on the cycle-accurate simulator, and checks
-//! the result against the f64 golden update rule.
+//! Builds the smallest useful workload (a single compound-observation
+//! node), shows the compiled FGP assembler (the Listing 1 → Listing 2
+//! flow), then runs the SAME workload on the cycle-accurate simulator
+//! and on the f64 golden engine through the same `Session::run` call.
 //!
 //! Run: `cargo run --release --example quickstart`
 
+use std::collections::HashMap;
+
+use anyhow::Result;
 use fgp_repro::compiler::{compile, CompileOptions};
-use fgp_repro::fgp::processor::NoFeed;
-use fgp_repro::fgp::{Fgp, FgpConfig};
+use fgp_repro::engine::{bind_streamed, preload_id, Execution, Session, Workload};
+use fgp_repro::fgp::FgpConfig;
 use fgp_repro::gmp::matrix::{c64, CMatrix};
 use fgp_repro::gmp::message::GaussMessage;
-use fgp_repro::gmp::{nodes, FactorGraph, Schedule};
+use fgp_repro::gmp::{FactorGraph, MsgId, Schedule};
 use fgp_repro::testutil::Rng;
+
+/// The smallest workload: prior X observed through A as Y.
+struct CnUpdate {
+    x: GaussMessage,
+    y: GaussMessage,
+    a: CMatrix,
+}
+
+impl Workload for CnUpdate {
+    type Outcome = GaussMessage;
+
+    fn name(&self) -> &str {
+        "quickstart_cn"
+    }
+
+    fn n(&self) -> usize {
+        self.x.dim()
+    }
+
+    fn model(&self) -> Result<(FactorGraph, Schedule)> {
+        let mut graph = FactorGraph::new();
+        graph.rls_chain(self.n(), std::slice::from_ref(&self.a));
+        let schedule = Schedule::forward_sweep(&graph);
+        Ok((graph, schedule))
+    }
+
+    fn inputs(
+        &self,
+        graph: &FactorGraph,
+        schedule: &Schedule,
+    ) -> Result<HashMap<MsgId, GaussMessage>> {
+        let mut map = HashMap::new();
+        map.insert(preload_id(graph, schedule, "msg_prior")?, self.x.clone());
+        bind_streamed(graph, schedule, std::slice::from_ref(&self.y), &mut map)?;
+        Ok(map)
+    }
+
+    fn outcome(&self, exec: &Execution) -> Result<GaussMessage> {
+        exec.output().cloned()
+    }
+
+    fn quality(&self, outcome: &GaussMessage) -> f64 {
+        outcome.trace_cov()
+    }
+
+    fn tolerance(&self) -> f64 {
+        0.05
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let n = fgp_repro::paper::N;
     let mut rng = Rng::new(42);
 
-    // --- the factor graph: one compound observation node (Fig. 1/2)
-    let a = CMatrix::random(&mut rng, n, n).scale(0.3);
-    let mut graph = FactorGraph::new();
-    graph.rls_chain(n, &[a.clone()]);
-    let schedule = Schedule::forward_sweep(&graph);
+    let workload = CnUpdate {
+        x: GaussMessage::new(
+            (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+            CMatrix::random_psd(&mut rng, n, 1.0).scale(0.15),
+        ),
+        y: GaussMessage::new(
+            (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+            CMatrix::random_psd(&mut rng, n, 1.0).scale(0.15),
+        ),
+        a: CMatrix::random(&mut rng, n, n).scale(0.3),
+    };
 
-    // --- compile: Listing 1 -> Listing 2
+    // --- peek at the compiled program (Listing 1 -> Listing 2)
+    let (graph, schedule) = workload.model()?;
     let compiled = compile(&graph, &schedule, &CompileOptions::default())?;
     println!("compiled FGP assembler:\n{}", compiled.listing());
     println!(
@@ -33,31 +92,35 @@ fn main() -> anyhow::Result<()> {
         compiled.stats.slots_optimized, compiled.stats.slots_unoptimized
     );
 
-    // --- load onto the device and stream the operands
-    let mut fgp = Fgp::new(FgpConfig::default());
-    fgp.pm.load(&compiled.program.to_image())?;
+    // --- the same workload through both engines
+    let mut device = Session::fgp_sim(FgpConfig::default());
+    let mut golden = Session::golden();
+    let measured = device.run(&workload)?;
+    let reference = golden.run(&workload)?;
 
-    let x = GaussMessage::new(
-        (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
-        CMatrix::random_psd(&mut rng, n, 1.0).scale(0.15),
+    println!("cycles: {} (paper Table II: 260)", measured.cycles);
+    println!(
+        "fixed-point vs f64 distance: {:.4}",
+        measured.outcome.dist(&reference.outcome)
     );
-    let y = GaussMessage::new(
-        (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
-        CMatrix::random_psd(&mut rng, n, 1.0).scale(0.15),
+    println!(
+        "posterior trace: {:.4} (prior was {:.4})",
+        measured.outcome.trace_cov(),
+        workload.x.trace_cov()
     );
-    fgp.msgmem.write_message(compiled.memmap.preloads[0].1, &x);
-    fgp.msgmem.write_message(compiled.memmap.streams[0].1, &y);
-    fgp.statemem.write_matrix(compiled.memmap.state_streams[0].1, &a);
+    assert!(
+        measured.outcome.dist(&reference.outcome) < 0.05,
+        "device result must match the golden rule"
+    );
 
-    let stats = fgp.run_program(1, &mut NoFeed)?;
-    let got = fgp.msgmem.read_message(compiled.memmap.outputs[0].1);
-
-    // --- golden reference
-    let want = nodes::compound_observation(&x, &y, &a, true)?;
-    println!("cycles: {} (paper Table II: 260)", stats.cycles);
-    println!("fixed-point vs f64 distance: {:.4}", got.dist(&want));
-    println!("posterior trace: {:.4} (prior was {:.4})", got.trace_cov(), x.trace_cov());
-    assert!(got.dist(&want) < 0.05, "device result must match the golden rule");
+    // --- run it again: the session's program cache kicks in
+    let again = device.run(&workload)?;
+    assert!(again.cached);
+    let stats = device.cache_stats();
+    println!(
+        "program cache: {} miss, {} hits (second run skipped the compiler)",
+        stats.misses, stats.hits
+    );
     println!("\nquickstart OK");
     Ok(())
 }

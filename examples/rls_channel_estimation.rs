@@ -4,16 +4,17 @@
 //! 1. Synthesizes a 4-tap multipath channel and QPSK training sequence.
 //! 2. Builds the Fig. 6 factor graph, compiles it (Listing 1 → 2; Fig. 7
 //!    memory optimization + loop compression reported).
-//! 3. Runs it on the cycle-accurate FGP simulator with the host
-//!    streaming observations/regressors — logging the MSE learning curve
-//!    and the cycle cost.
-//! 4. Cross-checks against the f64 golden chain and (when `artifacts/`
-//!    is built) the PJRT/XLA path, i.e. the Pallas kernel.
-//! 5. Reports the Table II-style throughput for this workload.
+//! 3. Runs the workload through one `Session` per engine: the
+//!    cycle-accurate FGP simulator (host streaming observations and
+//!    regressors), the f64 golden chain, and (when `artifacts/` is
+//!    built) the PJRT/XLA path, i.e. the Pallas kernel.
+//! 4. Reports the Table II-style throughput for this workload.
 //!
 //! Run: `cargo run --release --example rls_channel_estimation`
 
 use fgp_repro::apps::rls::RlsProblem;
+use fgp_repro::engine::Session;
+use fgp_repro::fgp::FgpConfig;
 use fgp_repro::model::scaling::{normalized_throughput, ProcessorPoint};
 use fgp_repro::paper;
 use fgp_repro::runtime::RuntimeClient;
@@ -25,19 +26,21 @@ fn main() -> anyhow::Result<()> {
     println!("=== RLS channel estimation on the FGP (paper §IV / Fig. 6) ===\n");
 
     // --- learning curve: MSE vs number of sections
+    let mut golden_session = Session::golden();
+    let mut device_session = Session::fgp_sim(FgpConfig::default());
     println!("{:>10} {:>14} {:>14} {:>12}", "sections", "golden MSE", "FGP MSE", "cycles");
     let mut final_outcome = None;
     for sections in [4usize, 8, 16, 32, 64] {
         let p = RlsProblem::synthetic(n, sections, sigma2, 2024);
-        let golden = p.golden()?;
-        let fgp = p.run_on_fgp()?;
+        let golden = golden_session.run(&p)?;
+        let fgp = device_session.run(&p)?;
         println!(
             "{sections:>10} {:>14.5} {:>14.5} {:>12}",
-            golden.rel_mse, fgp.rel_mse, fgp.cycles
+            golden.quality, fgp.quality, fgp.cycles
         );
         final_outcome = Some((p, fgp));
     }
-    let (problem, fgp_outcome) = final_outcome.unwrap();
+    let (problem, fgp_report) = final_outcome.unwrap();
 
     // --- compiler report (Fig. 7 + Listing 2)
     let compiled = problem.compile_program()?;
@@ -52,9 +55,14 @@ fn main() -> anyhow::Result<()> {
         compiled.stats.instrs_uncompressed, compiled.stats.instrs_compressed,
         compiled.stats.looped
     );
+    let cache = device_session.cache_stats();
+    println!(
+        "session program cache: {} misses, {} hits (one compile per chain length)",
+        cache.misses, cache.hits
+    );
 
     // --- device throughput in the paper's units
-    let cn_cycles = fgp_outcome.cycles_per_section;
+    let cn_cycles = fgp_report.cycles_per_section;
     let fgp_point = ProcessorPoint::fgp(cn_cycles);
     println!(
         "\ncycles per compound-node update: {cn_cycles} (paper: {})",
@@ -70,22 +78,21 @@ fn main() -> anyhow::Result<()> {
     if artifacts.join("manifest.txt").exists() {
         let rt = RuntimeClient::load(&artifacts)?;
         let sections = rt.manifest.sections;
+        let platform = rt.platform();
+        let mut xla_session = Session::xla(rt);
         let p = RlsProblem::synthetic(n, sections, sigma2, 2024);
-        let xla = p.run_on_xla(&rt)?;
-        let golden = p.golden()?;
+        let xla = xla_session.run(&p)?;
+        let golden = golden_session.run(&p)?;
         println!(
             "\nXLA path ({} sections, platform {}): rel MSE {:.5} (golden {:.5})",
-            sections,
-            rt.platform(),
-            xla.rel_mse,
-            golden.rel_mse
+            sections, platform, xla.quality, golden.quality
         );
-        assert!((xla.rel_mse - golden.rel_mse).abs() < 5e-2);
+        assert!((xla.quality - golden.quality).abs() < 5e-2);
     } else {
         println!("\n(artifacts/ not built; run `make artifacts` for the XLA path)");
     }
 
-    assert!(fgp_outcome.rel_mse < 0.25, "FGP estimate must converge");
+    assert!(fgp_report.quality < 0.25, "FGP estimate must converge");
     println!("\nrls_channel_estimation OK");
     Ok(())
 }

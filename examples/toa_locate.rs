@@ -1,36 +1,48 @@
 //! Time-of-arrival localization via GMP (paper §I, ref [6]).
 //!
 //! Anchors on the unit square range a hidden target; iteratively
-//! linearized range measurements become compound-observation updates on
-//! the FGP. Reports position error vs anchor count and vs
-//! relinearization rounds, golden vs fixed-point device.
+//! linearized range measurements become compound-observation sweeps on
+//! the FGP. Each relinearization round is one workload run; rounds after
+//! the first hit the session's program cache. Reports position error vs
+//! anchor count and vs relinearization rounds, golden vs fixed-point
+//! device.
 //!
 //! Run: `cargo run --release --example toa_locate`
 
 use fgp_repro::apps::toa::ToaProblem;
-use fgp_repro::coordinator::backend::{FgpSimBackend, GoldenBackend};
+use fgp_repro::engine::Session;
 use fgp_repro::fgp::FgpConfig;
 
 fn main() -> anyhow::Result<()> {
     println!("=== ToA localization on the FGP ===\n");
 
+    let mut golden = Session::golden();
     println!("{:>9} {:>14} {:>14}", "anchors", "golden err", "FGP err");
     for anchors in [4usize, 6, 8, 12] {
         let p = ToaProblem::synthetic(anchors, 1e-3, 17);
-        let g = p.run_on(&mut GoldenBackend, 2)?;
-        let mut sim = FgpSimBackend::new(FgpConfig::default())?;
-        let f = p.run_on(&mut sim, 2)?;
+        let g = p.run(&mut golden, 2)?;
+        let mut sim = Session::fgp_sim(FgpConfig::default());
+        let f = p.run(&mut sim, 2)?;
         println!("{anchors:>9} {:>14.4} {:>14.4}", g.error, f.error);
     }
 
     println!("\nconvergence trace (6 anchors, golden):");
     let p = ToaProblem::synthetic(6, 1e-3, 21);
-    let o = p.run_on(&mut GoldenBackend, 4)?;
+    let o = p.run(&mut golden, 4)?;
     for (round, (x, y)) in o.trace.iter().enumerate() {
         let err = ((x - p.target.0).powi(2) + (y - p.target.1).powi(2)).sqrt();
         println!("  round {}: estimate ({:.3}, {:.3}), error {:.4}", round + 1, x, y, err);
     }
     println!("  target: ({:.3}, {:.3})", p.target.0, p.target.1);
+
+    // cache behaviour: 4 rounds on one device session = 1 compile + 3 hits
+    let mut sim = Session::fgp_sim(FgpConfig::default());
+    let _ = p.run(&mut sim, 4)?;
+    let stats = sim.cache_stats();
+    println!(
+        "\ndevice program cache over 4 rounds: {} miss, {} hits",
+        stats.misses, stats.hits
+    );
 
     assert!(o.error < 0.05, "golden locator must converge");
     println!("\ntoa_locate OK");

@@ -8,6 +8,7 @@
 
 use fgp_repro::apps::rls::RlsProblem;
 use fgp_repro::benchutil::banner;
+use fgp_repro::engine::Session;
 use fgp_repro::fgp::FgpConfig;
 use fgp_repro::fixed::QFormat;
 use fgp_repro::paper;
@@ -19,8 +20,9 @@ fn main() -> anyhow::Result<()> {
     let seeds = [11u64, 23, 47];
 
     banner("RLS rel-MSE vs fixed-point format (24 sections, QPSK)");
+    let mut golden_session = Session::golden();
     let p0 = RlsProblem::synthetic(n, sections, sigma2, seeds[0]);
-    let golden = p0.golden()?.rel_mse;
+    let golden = golden_session.run(&p0)?.quality;
     println!("f64 golden reference rel MSE: {golden:.5}\n");
 
     println!("{:>10} {:>8} {:>14} {:>14}", "format", "width", "mean rel MSE", "worst rel MSE");
@@ -34,13 +36,16 @@ fn main() -> anyhow::Result<()> {
     ] {
         let fmt = QFormat::new(int_bits, frac_bits);
         let cfg = FgpConfig { fmt, ..Default::default() };
+        // one session per format: the datapath width is engine state,
+        // but all three seeds share the compiled program
+        let mut session = Session::fgp_sim(cfg);
         let mut sum = 0.0;
         let mut worst: f64 = 0.0;
         for &seed in &seeds {
             let p = RlsProblem::synthetic(n, sections, sigma2, seed);
-            let out = p.run_on_fgp_with(cfg)?;
-            sum += out.rel_mse;
-            worst = worst.max(out.rel_mse);
+            let out = session.run(&p)?;
+            sum += out.quality;
+            worst = worst.max(out.quality);
         }
         println!(
             "{:>10} {:>8} {:>14.5} {:>14.5}",
@@ -52,11 +57,12 @@ fn main() -> anyhow::Result<()> {
     }
 
     banner("accuracy floor vs chain length at Q5.10 (fixed-point RLS drift)");
+    let mut q510 = Session::fgp_sim(FgpConfig::default());
     println!("{:>10} {:>14} {:>14}", "sections", "golden MSE", "Q5.10 MSE");
     for s in [8usize, 16, 32, 64] {
         let p = RlsProblem::synthetic(n, s, sigma2, seeds[0]);
-        let g = p.golden()?.rel_mse;
-        let f = p.run_on_fgp()?.rel_mse;
+        let g = golden_session.run(&p)?.quality;
+        let f = q510.run(&p)?.quality;
         println!("{s:>10} {g:>14.5} {f:>14.5}");
     }
     println!(

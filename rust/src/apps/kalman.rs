@@ -4,17 +4,20 @@
 //! Constant-velocity tracking with state `[px, vx, py, vy]` (real values
 //! carried in the complex field): each time step is a *multiplier* node
 //! (transition A), an *additive* node (process noise, a constant message
-//! streamed from a preloaded slot), and a *compound observation* node
+//! served from a preloaded slot), and a *compound observation* node
 //! (position measurement through C) — three of the Fig. 1 node types
-//! composing into a textbook filter.
+//! composing into a textbook filter, expressed once as a [`Workload`]
+//! and runnable on any engine.
+
+use std::collections::HashMap;
 
 use anyhow::Result;
 
 use crate::compiler::{compile, CompileOptions, CompiledProgram};
-use crate::fgp::{Fgp, FgpConfig, MessageMemory, StateMemory};
+use crate::engine::{bind_streamed, preload_id, Execution, Workload};
 use crate::gmp::matrix::{c64, CMatrix};
 use crate::gmp::message::GaussMessage;
-use crate::gmp::{nodes, FactorGraph, NodeKind, Schedule};
+use crate::gmp::{FactorGraph, MsgId, NodeKind, Schedule};
 use crate::testutil::Rng;
 
 /// A synthetic constant-velocity tracking problem.
@@ -42,7 +45,6 @@ pub struct KalmanOutcome {
     pub estimate: Vec<c64>,
     /// Final position error (Euclidean).
     pub pos_error: f64,
-    pub cycles: u64,
 }
 
 impl KalmanProblem {
@@ -118,83 +120,68 @@ impl KalmanProblem {
         (g, s)
     }
 
-    /// f64 golden filter.
-    pub fn golden(&self) -> Result<KalmanOutcome> {
-        let mut msg = self.prior.clone();
-        for y in &self.observations {
-            let pred = nodes::multiply(&msg, &self.a);
-            let noisy = nodes::add(&pred, &self.q_msg);
-            msg = nodes::compound_observation(&noisy, y, &self.c, true)?;
-        }
-        Ok(self.outcome(msg.mean, 0))
-    }
-
-    fn outcome(&self, estimate: Vec<c64>, cycles: u64) -> KalmanOutcome {
-        let t = self.truth.last().unwrap();
-        let dx = (estimate[0] - t[0]).abs2() + (estimate[2] - t[2]).abs2();
-        KalmanOutcome { estimate, pos_error: dx.sqrt(), cycles }
-    }
-
+    /// Compiler-report helper; execution goes through `Session::run`.
     pub fn compile_program(&self) -> Result<CompiledProgram> {
         let (g, s) = self.build_graph();
         Ok(compile(&g, &s, &CompileOptions::default())?)
     }
+}
 
-    /// Run on the FGP simulator, streaming observations.
-    pub fn run_on_fgp(&self) -> Result<KalmanOutcome> {
-        let compiled = self.compile_program()?;
-        let mut fgp = Fgp::new(FgpConfig::default());
-        fgp.pm.load(&compiled.program.to_image())?;
+impl Workload for KalmanProblem {
+    type Outcome = KalmanOutcome;
 
-        // preload Q message and prior (matched by edge label)
-        let (graph, sched) = self.build_graph();
-        for (mid, slot) in &compiled.memmap.preloads {
-            let edge = sched.inputs.iter().find(|(m, _)| m == mid).map(|(_, e)| *e).unwrap();
-            if graph.edges[edge.0].label == "msg_Q" {
-                fgp.msgmem.write_message(*slot, &self.q_msg);
-            } else {
-                fgp.msgmem.write_message(*slot, &self.prior);
-            }
-        }
-        for (sid, slot) in &compiled.memmap.state_preloads {
-            // state 0 = A, state 1 = C, state 2 = identity (if present)
-            let m = match sid.0 {
-                0 => self.a.clone(),
-                1 => self.c.clone(),
-                _ => CMatrix::identity(4),
-            };
-            fgp.statemem.write_matrix(*slot, &m);
-        }
+    fn name(&self) -> &str {
+        "kalman_tracking"
+    }
 
-        let (_, obs_slot, _) = compiled.memmap.streams[0];
-        let obs = self.observations.clone();
-        let mut feed =
-            move |section: usize, mem: &mut MessageMemory, _: &mut StateMemory| -> bool {
-                // three smm commits per time step: step k's observation is
-                // consumed by its compound node (the 3k+2-nd section) and
-                // obs[k-1] dies at section 3k-1, so writing obs[sec/3] at
-                // every handshake keeps the slot correct throughout
-                let idx = (section / 3).min(obs.len() - 1);
-                mem.write_message(obs_slot, &obs[idx]);
-                section / 3 < obs.len()
-            };
-        let stats = fgp.run_program(1, &mut feed)?;
+    fn n(&self) -> usize {
+        4
+    }
 
-        let out_slot = compiled.memmap.outputs[0].1;
-        let est = fgp.msgmem.read_message(out_slot).mean;
-        Ok(self.outcome(est, stats.cycles))
+    fn model(&self) -> Result<(FactorGraph, Schedule)> {
+        Ok(self.build_graph())
+    }
+
+    fn inputs(
+        &self,
+        graph: &FactorGraph,
+        schedule: &Schedule,
+    ) -> Result<HashMap<MsgId, GaussMessage>> {
+        let mut map = HashMap::new();
+        map.insert(preload_id(graph, schedule, "msg_Q")?, self.q_msg.clone());
+        map.insert(preload_id(graph, schedule, "msg_prior")?, self.prior.clone());
+        bind_streamed(graph, schedule, &self.observations, &mut map)?;
+        Ok(map)
+    }
+
+    fn outcome(&self, exec: &Execution) -> Result<KalmanOutcome> {
+        let estimate = exec.output()?.mean.clone();
+        let t = self.truth.last().expect("non-empty trajectory");
+        let dx = (estimate[0] - t[0]).abs2() + (estimate[2] - t[2]).abs2();
+        Ok(KalmanOutcome { estimate, pos_error: dx.sqrt() })
+    }
+
+    fn quality(&self, outcome: &KalmanOutcome) -> f64 {
+        outcome.pos_error
+    }
+
+    /// Fixed-point slack on the final position fix.
+    fn tolerance(&self) -> f64 {
+        0.4
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::Session;
+    use crate::fgp::FgpConfig;
 
     #[test]
     fn golden_tracks_position() {
         let p = KalmanProblem::synthetic(40, 3);
-        let out = p.golden().unwrap();
-        assert!(out.pos_error < 0.2, "pos error {}", out.pos_error);
+        let out = Session::golden().run(&p).unwrap();
+        assert!(out.quality < 0.2, "pos error {}", out.quality);
     }
 
     #[test]
@@ -208,15 +195,17 @@ mod tests {
     #[test]
     fn fgp_tracks_golden_regime() {
         let p = KalmanProblem::synthetic(20, 5);
-        let golden = p.golden().unwrap();
-        let fgp = p.run_on_fgp().unwrap();
+        let golden = Session::golden().run(&p).unwrap();
+        let fgp = Session::fgp_sim(FgpConfig::default()).run(&p).unwrap();
         assert!(
-            fgp.pos_error < golden.pos_error + 0.3,
+            fgp.quality < golden.quality + p.tolerance(),
             "fgp {} vs golden {}",
-            fgp.pos_error,
-            golden.pos_error
+            fgp.quality,
+            golden.quality
         );
         assert!(fgp.cycles > 0);
+        // three store handshakes per time step
+        assert_eq!(fgp.sections, 3 * 20);
     }
 
     #[test]

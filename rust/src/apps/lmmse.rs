@@ -5,13 +5,17 @@
 //! matrix `H` under AWGN; the posterior mean is the LMMSE symbol
 //! estimate, which we slice to the constellation and score by symbol
 //! error rate. Exactly the "symbol detection/equalization" program the
-//! paper imagines sharing the PM with the RLS estimator (§III).
+//! paper imagines sharing the PM with the RLS estimator (§III) — here a
+//! single-section [`Workload`], the second-smallest model in the crate.
+
+use std::collections::HashMap;
 
 use anyhow::Result;
 
-use crate::coordinator::backend::{Backend, CnRequestData};
+use crate::engine::{bind_streamed, preload_id, Execution, Session, Workload};
 use crate::gmp::matrix::c64;
 use crate::gmp::message::GaussMessage;
+use crate::gmp::{FactorGraph, MsgId, Schedule};
 use crate::testutil::Rng;
 
 use super::channel::{Constellation, MultipathChannel};
@@ -49,21 +53,47 @@ impl LmmseProblem {
         let rx = channel.transmit(&mut rng, &tx, noise_var);
         LmmseProblem { n, constellation, channel, noise_var, tx, rx }
     }
+}
 
-    /// The compound-node request implementing the equalizer:
-    /// prior V_X = 0.25 I (symbol power), A = H, observation (rx, σ² I).
-    pub fn request(&self) -> CnRequestData {
-        CnRequestData {
-            x: GaussMessage::isotropic(self.n, 0.25),
-            y: GaussMessage::observation(&self.rx, self.noise_var),
-            a: self.channel.toeplitz(self.n),
-        }
+impl Workload for LmmseProblem {
+    type Outcome = LmmseOutcome;
+
+    fn name(&self) -> &str {
+        "lmmse_equalizer"
     }
 
-    /// Run on any backend and score.
-    pub fn run_on(&self, backend: &mut dyn Backend) -> Result<LmmseOutcome> {
-        let posterior = backend.cn_update(&self.request())?;
-        let estimate = posterior.mean;
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    /// One compound-observation section with the channel's Toeplitz
+    /// matrix as the (streamed) state — same program shape as the
+    /// coordinator's CN microbench, so sessions share the compilation.
+    fn model(&self) -> Result<(FactorGraph, Schedule)> {
+        let mut g = FactorGraph::new();
+        g.rls_chain(self.n, &[self.channel.toeplitz(self.n)]);
+        let s = Schedule::forward_sweep(&g);
+        Ok((g, s))
+    }
+
+    fn inputs(
+        &self,
+        graph: &FactorGraph,
+        schedule: &Schedule,
+    ) -> Result<HashMap<MsgId, GaussMessage>> {
+        let mut map = HashMap::new();
+        // prior V_X = 0.25 I (symbol power)
+        map.insert(
+            preload_id(graph, schedule, "msg_prior")?,
+            GaussMessage::isotropic(self.n, 0.25),
+        );
+        let obs = GaussMessage::observation(&self.rx, self.noise_var);
+        bind_streamed(graph, schedule, std::slice::from_ref(&obs), &mut map)?;
+        Ok(map)
+    }
+
+    fn outcome(&self, exec: &Execution) -> Result<LmmseOutcome> {
+        let estimate = exec.output()?.mean.clone();
         let decisions: Vec<c64> =
             estimate.iter().map(|z| self.constellation.slice(*z)).collect();
         let symbol_errors = decisions
@@ -75,11 +105,20 @@ impl LmmseProblem {
         let den: f64 = self.tx.iter().map(|a| a.abs2()).sum();
         Ok(LmmseOutcome { estimate, decisions, symbol_errors, rel_mse: num / den })
     }
+
+    fn quality(&self, outcome: &LmmseOutcome) -> f64 {
+        outcome.rel_mse
+    }
+
+    fn tolerance(&self) -> f64 {
+        0.15
+    }
 }
 
 /// Sweep SNR: mean SER over `trials` blocks per point (bench helper).
+/// Every block shares one program shape, so the session compiles once.
 pub fn ser_sweep(
-    backend: &mut dyn Backend,
+    session: &mut Session,
     n: usize,
     snrs_db: &[f64],
     trials: u64,
@@ -92,8 +131,8 @@ pub fn ser_sweep(
         let mut symbols = 0usize;
         for t in 0..trials {
             let p = LmmseProblem::synthetic(n, noise_var, 1000 + t * 7 + snr as u64);
-            let o = p.run_on(backend)?;
-            errors += o.symbol_errors;
+            let o = session.run(&p)?;
+            errors += o.outcome.symbol_errors;
             symbols += n;
         }
         out.push((snr, errors as f64 / symbols as f64));
@@ -104,39 +143,38 @@ pub fn ser_sweep(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::backend::{FgpSimBackend, GoldenBackend};
     use crate::fgp::FgpConfig;
 
     #[test]
     fn golden_equalizer_beats_no_equalizer_at_high_snr() {
-        let mut golden = GoldenBackend;
+        let mut golden = Session::golden();
         let mut total_err = 0;
         for seed in 0..10 {
             let p = LmmseProblem::synthetic(4, 0.002, seed);
-            let o = p.run_on(&mut golden).unwrap();
-            total_err += o.symbol_errors;
+            let o = golden.run(&p).unwrap();
+            total_err += o.outcome.symbol_errors;
         }
         assert!(total_err <= 1, "errors at 21 dB: {total_err}");
     }
 
     #[test]
     fn ser_decreases_with_snr() {
-        let mut golden = GoldenBackend;
+        let mut golden = Session::golden();
         let sweep = ser_sweep(&mut golden, 4, &[0.0, 10.0, 20.0], 20).unwrap();
         assert!(sweep[0].1 >= sweep[2].1, "sweep {sweep:?}");
     }
 
     #[test]
     fn fgp_equalizer_matches_golden_decisions_mostly() {
-        let mut sim = FgpSimBackend::new(FgpConfig::default()).unwrap();
-        let mut golden = GoldenBackend;
+        let mut sim = Session::fgp_sim(FgpConfig::default());
+        let mut golden = Session::golden();
         let mut agree = 0;
         let mut total = 0;
         for seed in 0..8 {
             let p = LmmseProblem::synthetic(4, 0.01, 50 + seed);
-            let s = p.run_on(&mut sim).unwrap();
-            let g = p.run_on(&mut golden).unwrap();
-            for (a, b) in s.decisions.iter().zip(&g.decisions) {
+            let s = sim.run(&p).unwrap();
+            let g = golden.run(&p).unwrap();
+            for (a, b) in s.outcome.decisions.iter().zip(&g.outcome.decisions) {
                 total += 1;
                 if (*a - *b).abs() < 1e-9 {
                     agree += 1;
@@ -144,5 +182,8 @@ mod tests {
             }
         }
         assert!(agree * 10 >= total * 9, "{agree}/{total} decisions agree");
+        // one program shape across all 8 blocks
+        let stats = sim.cache_stats();
+        assert_eq!((stats.misses, stats.hits), (1, 7));
     }
 }

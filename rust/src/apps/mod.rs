@@ -2,14 +2,20 @@
 //!
 //! The algorithm classes the paper positions the FGP for (§I: "RLS,
 //! linear MMSE equalization, and Kalman filtering can be expressed with
-//! Gaussian message-passing on a factor graph"), each built as a factor
-//! graph, compiled with [`crate::compiler`], and runnable on any
-//! [`crate::coordinator::Backend`]:
+//! Gaussian message-passing on a factor graph"). Every app implements
+//! [`crate::engine::Workload`] — a factor-graph model plus host-side
+//! data — and runs on any [`crate::engine::Engine`] through the same
+//! [`crate::engine::Session::run`] call:
 //!
 //! * [`rls`] — the paper's §IV channel-estimation example (Fig. 6);
 //! * [`kalman`] — constant-velocity tracking as alternating GMP nodes;
-//! * [`lmmse`] — block LMMSE symbol equalization;
-//! * [`toa`] — time-of-arrival position estimation (§I ref [6]);
+//! * [`lmmse`] — block LMMSE symbol equalization (one compound node);
+//! * [`smoother`] — two-pass fixed-interval smoothing (forward filter,
+//!   backward conditioning, equality fusion) as one program;
+//! * [`toa`] — time-of-arrival position estimation (§I ref [6]),
+//!   iterative relinearization as repeated cache-hitting sweeps;
+//! * [`receiver`] — the §III multi-program baseband receiver, two
+//!   workload shapes alternating through one session;
 //! * [`channel`] — synthetic channels, constellations and AWGN sources
 //!   (the "received symbols" the silicon would get from a radio).
 //!

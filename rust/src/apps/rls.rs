@@ -1,17 +1,21 @@
 //! The paper's §IV example: RLS/LMMSE channel estimation on the FGP.
 //!
 //! Fig. 6's factor graph — one compound-observation section per received
-//! training symbol — built, compiled (Listing 1 → Listing 2), and run on
-//! the cycle-accurate simulator with the host streaming observations and
-//! regressors exactly as the "HW-SW interaction" section describes.
+//! training symbol — built as a [`Workload`] and runnable on any engine
+//! through [`crate::engine::Session`]: the f64 golden chain, the
+//! cycle-accurate simulator (host streaming observations and regressors
+//! exactly as the "HW-SW interaction" section describes), or the PJRT
+//! `rls_chain` artifact.
+
+use std::collections::HashMap;
 
 use anyhow::{Context, Result};
 
-use crate::compiler::{compile, CompileOptions, CompileStats, CompiledProgram};
-use crate::fgp::{Fgp, FgpConfig, MessageMemory, StateMemory};
+use crate::compiler::{compile, CompileOptions, CompiledProgram};
+use crate::engine::{bind_streamed, preload_id, Execution, Workload};
 use crate::gmp::matrix::{c64, CMatrix};
 use crate::gmp::message::GaussMessage;
-use crate::gmp::{nodes, FactorGraph, Schedule};
+use crate::gmp::{FactorGraph, MsgId, Schedule};
 use crate::testutil::Rng;
 
 use super::channel::{regressor_matrix, Constellation, MultipathChannel};
@@ -41,11 +45,6 @@ pub struct RlsOutcome {
     pub h_hat: Vec<c64>,
     /// Relative MSE ||h_hat - h||^2 / ||h||^2.
     pub rel_mse: f64,
-    /// Device cycles (simulator runs only).
-    pub cycles: u64,
-    pub cycles_per_section: u64,
-    /// Compile statistics (Fig. 7 data).
-    pub compile_stats: Option<CompileStats>,
 }
 
 impl RlsProblem {
@@ -98,124 +97,101 @@ impl RlsProblem {
         (g, s)
     }
 
-    /// f64 golden chain (the semantic reference).
-    pub fn golden(&self) -> Result<RlsOutcome> {
-        let mut msg = self.prior.clone();
-        for (a, y) in self.regressors.iter().zip(&self.observations) {
-            msg = nodes::compound_observation(&msg, y, a, true)?;
-        }
-        let h_hat = msg.mean.clone();
-        Ok(RlsOutcome {
-            rel_mse: self.rel_mse(&h_hat),
-            h_hat,
-            cycles: 0,
-            cycles_per_section: 0,
-            compile_stats: None,
-        })
-    }
-
-    /// Compile the graph (Listing 1 → Listing 2).
+    /// Compile the graph (Listing 1 → Listing 2) — compiler-report
+    /// helper; execution goes through [`crate::engine::Session::run`].
     pub fn compile_program(&self) -> Result<CompiledProgram> {
         let (g, s) = self.build_graph();
         compile(&g, &s, &CompileOptions::default()).context("compiling RLS factor graph")
     }
+}
 
-    /// Run on the cycle-accurate FGP simulator with host streaming.
-    pub fn run_on_fgp(&self) -> Result<RlsOutcome> {
-        self.run_on_fgp_with(FgpConfig::default())
+impl Workload for RlsProblem {
+    type Outcome = RlsOutcome;
+
+    fn name(&self) -> &str {
+        "rls_channel_estimation"
     }
 
-    pub fn run_on_fgp_with(&self, config: FgpConfig) -> Result<RlsOutcome> {
-        assert_eq!(config.n, self.n, "device size must match problem size");
-        let compiled = self.compile_program()?;
-        let mut fgp = Fgp::new(config);
-        fgp.pm.load(&compiled.program.to_image())?;
-
-        let prior_slot = compiled.memmap.preloads[0].1;
-        fgp.msgmem.write_message(prior_slot, &self.prior);
-        let (_, obs_slot, _) = compiled.memmap.streams[0];
-        let (_, st_slot, _) = compiled.memmap.state_streams[0];
-
-        let obs = self.observations.clone();
-        let regs = self.regressors.clone();
-        let mut feed =
-            move |section: usize, mem: &mut MessageMemory, st: &mut StateMemory| -> bool {
-                if section >= obs.len() {
-                    return false;
-                }
-                mem.write_message(obs_slot, &obs[section]);
-                st.write_matrix(st_slot, &regs[section]);
-                true
-            };
-        let stats = fgp.run_program(1, &mut feed)?;
-
-        let out_slot = compiled.memmap.outputs[0].1;
-        let h_hat = fgp.msgmem.read_message(out_slot).mean;
-        Ok(RlsOutcome {
-            rel_mse: self.rel_mse(&h_hat),
-            h_hat,
-            cycles: stats.cycles,
-            cycles_per_section: stats.cycles / stats.sections.max(1),
-            compile_stats: Some(compiled.stats),
-        })
+    fn n(&self) -> usize {
+        self.n
     }
 
-    /// Run through the PJRT artifact (`rls_chain.hlo.txt`). The artifact
-    /// bakes its section count; the problem must match.
-    pub fn run_on_xla(&self, rt: &crate::runtime::RuntimeClient) -> Result<RlsOutcome> {
-        let out = rt.rls_chain(
-            &self.prior,
-            &self.regressors,
-            &self.observations,
-            self.sigma2 as f32,
-        )?;
-        let h_hat = out.last().context("empty chain")?.mean.clone();
-        Ok(RlsOutcome {
-            rel_mse: self.rel_mse(&h_hat),
-            h_hat,
-            cycles: 0,
-            cycles_per_section: 0,
-            compile_stats: None,
-        })
+    fn model(&self) -> Result<(FactorGraph, Schedule)> {
+        Ok(self.build_graph())
+    }
+
+    fn inputs(
+        &self,
+        graph: &FactorGraph,
+        schedule: &Schedule,
+    ) -> Result<HashMap<MsgId, GaussMessage>> {
+        let mut map = HashMap::new();
+        map.insert(preload_id(graph, schedule, "msg_prior")?, self.prior.clone());
+        bind_streamed(graph, schedule, &self.observations, &mut map)?;
+        Ok(map)
+    }
+
+    fn outcome(&self, exec: &Execution) -> Result<RlsOutcome> {
+        let h_hat = exec.output()?.mean.clone();
+        Ok(RlsOutcome { rel_mse: self.rel_mse(&h_hat), h_hat })
+    }
+
+    fn quality(&self, outcome: &RlsOutcome) -> f64 {
+        outcome.rel_mse
+    }
+
+    /// 16-bit fixed point hits an accuracy floor once the posterior
+    /// covariance approaches the LSB (E9 sweeps this); the estimate must
+    /// still be in the converged regime.
+    fn tolerance(&self) -> f64 {
+        0.2
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::Session;
+    use crate::fgp::FgpConfig;
 
     #[test]
     fn golden_rls_converges() {
         let p = RlsProblem::synthetic(4, 48, 0.01, 7);
-        let out = p.golden().unwrap();
-        assert!(out.rel_mse < 0.02, "rel MSE {}", out.rel_mse);
+        let out = Session::golden().run(&p).unwrap();
+        assert!(out.quality < 0.02, "rel MSE {}", out.quality);
     }
 
     #[test]
     fn golden_improves_with_sections() {
-        let short = RlsProblem::synthetic(4, 6, 0.02, 9).golden().unwrap();
-        let long = RlsProblem::synthetic(4, 48, 0.02, 9).golden().unwrap();
-        assert!(long.rel_mse < short.rel_mse);
+        let mut golden = Session::golden();
+        let short = golden.run(&RlsProblem::synthetic(4, 6, 0.02, 9)).unwrap();
+        let long = golden.run(&RlsProblem::synthetic(4, 48, 0.02, 9)).unwrap();
+        assert!(long.quality < short.quality);
     }
 
     #[test]
     fn fgp_tracks_golden() {
         let p = RlsProblem::synthetic(4, 24, 0.02, 11);
-        let golden = p.golden().unwrap();
-        let fgp = p.run_on_fgp().unwrap();
-        // 16-bit fixed point hits an accuracy floor once the posterior
-        // covariance approaches the LSB (E9 sweeps this); the estimate
-        // must still be in the converged regime.
-        assert!(fgp.rel_mse < 0.25, "FGP rel MSE {}", fgp.rel_mse);
+        let golden = Session::golden().run(&p).unwrap();
+        let fgp = Session::fgp_sim(FgpConfig::default()).run(&p).unwrap();
+        assert!(fgp.quality < 0.25, "FGP rel MSE {}", fgp.quality);
         assert!(
-            fgp.rel_mse < golden.rel_mse + 0.2,
+            fgp.quality < golden.quality + p.tolerance(),
             "fgp {} vs golden {}",
-            fgp.rel_mse,
-            golden.rel_mse
+            fgp.quality,
+            golden.quality
         );
         // cycle accounting: S sections at the CN rate
         let cfg = FgpConfig::default();
         assert_eq!(fgp.cycles, cfg.timing.compound_node_cycles(4) * 24);
+        assert_eq!(fgp.sections, 24);
+    }
+
+    #[test]
+    fn size_mismatch_is_reported_not_panicked() {
+        let p = RlsProblem::synthetic(6, 4, 0.02, 3);
+        let err = Session::fgp_sim(FgpConfig::default()).run(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("n=6"), "{err:#}");
     }
 
     #[test]

@@ -1,17 +1,25 @@
 //! Fixed-interval Gaussian smoother as two-pass GMP (§I ref [3]).
 //!
-//! The forward pass is the Kalman filter (moment-form messages, compound
-//! observation nodes); the backward pass sends weight-form messages
-//! against the arrows (compound equality-multiplier nodes, the Fig. 1
-//! dual); the smoothed marginal at each step is the **equality node** of
-//! the two directions. This is the only app exercising all five node
-//! update rules — and both message parameterizations — in one algorithm.
+//! The forward pass is the Kalman filter (multiplier, additive and
+//! compound-observation nodes); the backward pass runs the same node
+//! types against the arrows (observation conditioning, additive widening,
+//! multiplication by A⁻¹); the smoothed marginal at each step fuses the
+//! two directions with a compound-observation node whose state matrix is
+//! the identity — algebraically the moment-form **equality** rule
+//! `V = (V_f⁻¹ + V_b⁻¹)⁻¹`, expressed with the one compound kernel the
+//! datapath accelerates. The whole two-pass program is a single
+//! [`Workload`]: golden for long trajectories, and (for trajectories
+//! whose working set fits the 64-kbit message memory) the same graph
+//! runs on the cycle-accurate device.
 
-use anyhow::Result;
+use std::collections::HashMap;
 
+use anyhow::{anyhow, bail, Result};
+
+use crate::engine::{preload_id, Execution, Workload};
 use crate::gmp::matrix::{c64, CMatrix};
 use crate::gmp::message::GaussMessage;
-use crate::gmp::nodes;
+use crate::gmp::{FactorGraph, MsgId, NodeKind, Schedule};
 use crate::testutil::Rng;
 
 /// A linear-Gaussian state-space smoothing problem.
@@ -25,6 +33,10 @@ pub struct SmootherProblem {
     pub truth: Vec<Vec<c64>>,
     pub observations: Vec<GaussMessage>,
     pub prior: GaussMessage,
+    /// Variance of the vague message entering the backward pass. The
+    /// default 1e4 saturates to the Q5.10 rail (~16) on the device — both
+    /// are "vague" relative to the ~0.1 posteriors, so the engines agree.
+    pub back_var: f64,
 }
 
 /// Smoothing outcome.
@@ -34,8 +46,10 @@ pub struct SmootherOutcome {
     pub filter_rmse: f64,
     /// Smoothed (forward+backward) position RMSE.
     pub smoother_rmse: f64,
-    /// Smoothed marginals.
+    /// Smoothed marginals, one per step.
     pub marginals: Vec<GaussMessage>,
+    /// Forward (filtered) posteriors, one per step.
+    pub filtered: Vec<GaussMessage>,
 }
 
 impl SmootherProblem {
@@ -68,84 +82,189 @@ impl SmootherProblem {
             truth,
             observations,
             prior: GaussMessage::isotropic(n, 1.0),
+            back_var: 1e4,
         }
     }
 
-    /// Forward filtering pass; returns the per-step posteriors.
-    fn forward(&self) -> Result<Vec<GaussMessage>> {
+    /// Build the two-pass graph. Observations are consumed by both the
+    /// forward and the backward pass, so they are preloaded (not
+    /// streamed); per-step filtered posteriors and smoothed marginals are
+    /// marked as outputs.
+    pub fn build_graph(&self) -> Result<(FactorGraph, Schedule)> {
         let n = self.prior.dim();
-        let q = GaussMessage::isotropic(n, self.q_var);
-        let mut msg = self.prior.clone();
-        let mut out = Vec::with_capacity(self.steps);
-        for y in &self.observations {
-            let pred = nodes::add(&nodes::multiply(&msg, &self.a), &q);
-            msg = nodes::compound_observation(&pred, y, &self.c, true)?;
-            out.push(msg.clone());
-        }
-        Ok(out)
-    }
+        let a_inv = self
+            .a
+            .inverse()
+            .ok_or_else(|| anyhow!("transition matrix not invertible"))?;
+        let mut g = FactorGraph::new();
+        let a_sid = g.add_state(self.a.clone());
+        let c_sid = g.add_state(self.c.clone());
+        let ainv_sid = g.add_state(a_inv);
+        let eye_sid = g.add_state(CMatrix::identity(n));
 
-    /// Backward pass in weight form; entry k is the message flowing INTO
-    /// step k from the future (vague at the last step).
-    fn backward(&self) -> Result<Vec<GaussMessage>> {
-        let n = self.prior.dim();
-        let q = GaussMessage::isotropic(n, self.q_var);
-        // start from a vague message (no future information)
-        let mut back = GaussMessage::isotropic(n, 1e4);
-        let mut out = vec![back.clone(); self.steps];
+        let prior = g.add_input_edge(n, "msg_prior");
+        let q = g.add_input_edge(n, "msg_Q");
+        let back_init = g.add_input_edge(n, "msg_back_init");
+        let obs: Vec<_> = (0..self.steps)
+            .map(|k| g.add_input_edge(n, format!("msg_Y{k}")))
+            .collect();
+
+        // forward filtering pass
+        let mut posts = Vec::with_capacity(self.steps);
+        let mut prev = prior;
+        for k in 0..self.steps {
+            let pred = g.add_edge(n, format!("pred{k}"));
+            g.add_node(NodeKind::Multiply { a: a_sid }, vec![prev], pred, format!("fmul{k}"));
+            let noisy = g.add_edge(n, format!("noisy{k}"));
+            g.add_node(NodeKind::Add, vec![pred, q], noisy, format!("fadd{k}"));
+            let post = g.add_edge(n, format!("post{k}"));
+            g.add_node(
+                NodeKind::CompoundObservation { a: c_sid },
+                vec![noisy, obs[k]],
+                post,
+                format!("fobs{k}"),
+            );
+            g.mark_output(post);
+            posts.push(post);
+            prev = post;
+        }
+
+        // backward pass + marginal fusion; entry k of the backward
+        // message carries obs_{k+1..} (vague at the last step)
+        let mut back = back_init;
         for k in (0..self.steps).rev() {
-            // combine the observation at k with the future message
-            let obs_post =
-                nodes::compound_observation(&back, &self.observations[k], &self.c, true)?;
-            out[k] = back.clone();
-            // propagate backwards through the dynamics: X_{k-1} = A^{-1}(X_k - W)
-            // For the random walk (A = I) this is an additive widening.
-            let widened = nodes::add(&obs_post, &q);
-            let a_inv = self
-                .a
-                .inverse()
-                .ok_or_else(|| anyhow::anyhow!("transition matrix not invertible"))?;
-            back = nodes::multiply(&widened, &a_inv);
+            let marg = g.add_edge(n, format!("marg{k}"));
+            g.add_node(
+                NodeKind::CompoundObservation { a: eye_sid },
+                vec![posts[k], back],
+                marg,
+                format!("marg{k}"),
+            );
+            g.mark_output(marg);
+            if k > 0 {
+                let bobs = g.add_edge(n, format!("bobs{k}"));
+                g.add_node(
+                    NodeKind::CompoundObservation { a: c_sid },
+                    vec![back, obs[k]],
+                    bobs,
+                    format!("bobsn{k}"),
+                );
+                let wide = g.add_edge(n, format!("bwide{k}"));
+                g.add_node(NodeKind::Add, vec![bobs, q], wide, format!("badd{k}"));
+                let next = g.add_edge(n, format!("back{}", k - 1));
+                g.add_node(
+                    NodeKind::Multiply { a: ainv_sid },
+                    vec![wide],
+                    next,
+                    format!("bmul{k}"),
+                );
+                back = next;
+            }
         }
-        Ok(out)
+
+        let s = Schedule::forward_sweep(&g);
+        Ok((g, s))
     }
 
-    /// Two-pass smoothing; marginal at k = equality(forward_k, backward_k).
-    pub fn run_golden(&self) -> Result<SmootherOutcome> {
-        let forward = self.forward()?;
-        let backward = self.backward()?;
-        let mut marginals = Vec::with_capacity(self.steps);
-        for (f, b) in forward.iter().zip(&backward) {
-            marginals.push(nodes::equality(f, b)?);
+    fn rmse(&self, msgs: &[GaussMessage]) -> f64 {
+        let se: f64 = msgs
+            .iter()
+            .zip(&self.truth)
+            .map(|(m, t)| (m.mean[0] - t[0]).abs2())
+            .sum();
+        (se / self.steps as f64).sqrt()
+    }
+}
+
+impl Workload for SmootherProblem {
+    type Outcome = SmootherOutcome;
+
+    fn name(&self) -> &str {
+        "gaussian_smoother"
+    }
+
+    fn n(&self) -> usize {
+        self.prior.dim()
+    }
+
+    fn model(&self) -> Result<(FactorGraph, Schedule)> {
+        self.build_graph()
+    }
+
+    fn inputs(
+        &self,
+        graph: &FactorGraph,
+        schedule: &Schedule,
+    ) -> Result<HashMap<MsgId, GaussMessage>> {
+        let n = self.n();
+        let mut map = HashMap::new();
+        map.insert(preload_id(graph, schedule, "msg_prior")?, self.prior.clone());
+        map.insert(
+            preload_id(graph, schedule, "msg_Q")?,
+            GaussMessage::isotropic(n, self.q_var),
+        );
+        map.insert(
+            preload_id(graph, schedule, "msg_back_init")?,
+            GaussMessage::isotropic(n, self.back_var),
+        );
+        for (k, obs) in self.observations.iter().enumerate() {
+            map.insert(preload_id(graph, schedule, &format!("msg_Y{k}"))?, obs.clone());
         }
-        let rmse = |msgs: &[GaussMessage]| {
-            let se: f64 = msgs
-                .iter()
-                .zip(&self.truth)
-                .map(|(m, t)| (m.mean[0] - t[0]).abs2())
-                .sum();
-            (se / self.steps as f64).sqrt()
-        };
+        Ok(map)
+    }
+
+    fn outcome(&self, exec: &Execution) -> Result<SmootherOutcome> {
+        // outputs arrive in edge-creation order (Schedule::forward_sweep
+        // walks output edges by index): the T filtered posteriors from
+        // the forward pass first (k ascending), then the T smoothed
+        // marginals from the backward pass (k descending) — see
+        // `build_graph`
+        if exec.outputs.len() != 2 * self.steps {
+            bail!(
+                "smoother expects {} outputs (posteriors + marginals), engine returned {}",
+                2 * self.steps,
+                exec.outputs.len()
+            );
+        }
+        let filtered: Vec<GaussMessage> =
+            exec.outputs[..self.steps].iter().map(|(_, _, m)| m.clone()).collect();
+        let mut marginals: Vec<GaussMessage> =
+            exec.outputs[self.steps..].iter().map(|(_, _, m)| m.clone()).collect();
+        marginals.reverse();
         Ok(SmootherOutcome {
-            filter_rmse: rmse(&forward),
-            smoother_rmse: rmse(&marginals),
+            filter_rmse: self.rmse(&filtered),
+            smoother_rmse: self.rmse(&marginals),
             marginals,
+            filtered,
         })
+    }
+
+    fn quality(&self, outcome: &SmootherOutcome) -> f64 {
+        outcome.smoother_rmse
+    }
+
+    /// Quantization slack for device-sized trajectories (the two-pass
+    /// working set only fits the message memory for short chains).
+    fn tolerance(&self) -> f64 {
+        0.25
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::Session;
+    use crate::fgp::FgpConfig;
 
     #[test]
     fn smoother_beats_filter() {
         // the textbook property: smoothing (two-sided information) has
         // lower RMSE than filtering (one-sided) on interior states
+        let mut golden = Session::golden();
         let mut wins = 0;
         for seed in 0..5 {
             let p = SmootherProblem::synthetic(60, 100 + seed);
-            let out = p.run_golden().unwrap();
+            let out = golden.run(&p).unwrap().outcome;
             if out.smoother_rmse <= out.filter_rmse + 1e-9 {
                 wins += 1;
             }
@@ -156,11 +275,10 @@ mod tests {
     #[test]
     fn marginals_have_smaller_variance_than_filter() {
         let p = SmootherProblem::synthetic(40, 7);
-        let forward = p.forward().unwrap();
-        let out = p.run_golden().unwrap();
-        // interior marginal variance <= filtered variance (equality node
-        // only adds information)
-        for (m, f) in out.marginals.iter().zip(&forward).take(p.steps - 1) {
+        let out = Session::golden().run(&p).unwrap().outcome;
+        // interior marginal variance <= filtered variance (the equality
+        // fusion only adds information)
+        for (m, f) in out.marginals.iter().zip(&out.filtered).take(p.steps - 1) {
             assert!(m.trace_cov() <= f.trace_cov() + 1e-6);
         }
     }
@@ -168,7 +286,23 @@ mod tests {
     #[test]
     fn smoother_tracks_truth() {
         let p = SmootherProblem::synthetic(80, 11);
-        let out = p.run_golden().unwrap();
-        assert!(out.smoother_rmse < 0.25, "rmse {}", out.smoother_rmse);
+        let out = Session::golden().run(&p).unwrap();
+        assert!(out.quality < 0.25, "rmse {}", out.quality);
+    }
+
+    #[test]
+    fn short_chain_runs_on_the_device() {
+        let p = SmootherProblem::synthetic(8, 13);
+        let golden = Session::golden().run(&p).unwrap();
+        let fgp = Session::fgp_sim(FgpConfig::default()).run(&p).unwrap();
+        assert!(
+            fgp.quality <= golden.quality + p.tolerance(),
+            "fgp {} vs golden {}",
+            fgp.quality,
+            golden.quality
+        );
+        assert!(fgp.cycles > 0);
+        // every node commits one store: 3T forward + (4T - 3) backward
+        assert_eq!(fgp.sections, (3 * 8 + 4 * 8 - 3) as u64);
     }
 }

@@ -6,15 +6,29 @@
 //! | `FgpSim`  | cycle-accurate fixed-point simulator | the paper's device |
 //! | `Xla`     | PJRT `cn_update` artifact            | offload, 1/req     |
 //! | `XlaBatch`| PJRT `cn_update_batched` artifact    | batched offload    |
+//!
+//! Every backend serves two request classes through the same
+//! [`crate::engine::Session`] machinery:
+//!
+//! * [`CnRequestData`] — the raw compound-node update (the paper's
+//!   Table II benchmark op), kept as a first-class payload because the
+//!   batched XLA artifact fuses whole batches of it;
+//! * [`WorkloadRequest`] — a full compiled-program execution with
+//!   streamed sections: any [`crate::engine::Workload`]'s model shipped
+//!   to the serving layer. The CN update is just the smallest instance
+//!   ([`WorkloadRequest::cn`]).
 
-use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::rc::Rc;
 
-use crate::compiler::{compile, CompileOptions, CompiledProgram};
-use crate::fgp::processor::NoFeed;
-use crate::fgp::{Fgp, FgpConfig};
+use anyhow::{bail, Context, Result};
+
+use crate::compiler::CompileOptions;
+use crate::engine::{bind_streamed, preload_id, Execution, Session, Workload, XlaEngine};
+use crate::fgp::FgpConfig;
 use crate::gmp::matrix::CMatrix;
 use crate::gmp::message::GaussMessage;
-use crate::gmp::{nodes, FactorGraph, Schedule};
+use crate::gmp::{nodes, FactorGraph, MsgId, Schedule};
 use crate::runtime::RuntimeClient;
 
 /// One compound-node update request payload.
@@ -23,6 +37,51 @@ pub struct CnRequestData {
     pub x: GaussMessage,
     pub y: GaussMessage,
     pub a: CMatrix,
+}
+
+/// A generalized serving request: a factor-graph model plus bound inputs,
+/// executed as a compiled program with streamed sections on whatever
+/// engine the backend drives.
+#[derive(Clone, Debug)]
+pub struct WorkloadRequest {
+    pub graph: FactorGraph,
+    pub schedule: Schedule,
+    pub inputs: HashMap<MsgId, GaussMessage>,
+    pub opts: CompileOptions,
+}
+
+impl WorkloadRequest {
+    /// Package any workload's model for the serving layer. The reply is
+    /// a raw [`Execution`]; interpret it with the workload's
+    /// [`Workload::outcome`].
+    pub fn from_workload<W: Workload + ?Sized>(w: &W) -> Result<Self> {
+        let (graph, schedule) = w.model()?;
+        let inputs = w.inputs(&graph, &schedule)?;
+        Ok(WorkloadRequest { graph, schedule, inputs, opts: w.compile_options() })
+    }
+
+    /// The canonical single-CN probe shape for dimension `n`: used to
+    /// precompile the CN program at backend/farm construction so the
+    /// installed cache key matches every later [`WorkloadRequest::cn`].
+    pub fn cn_probe(n: usize) -> Result<Self> {
+        Self::cn(&CnRequestData {
+            x: GaussMessage::isotropic(n, 1.0),
+            y: GaussMessage::isotropic(n, 1.0),
+            a: CMatrix::identity(n),
+        })
+    }
+
+    /// The smallest workload: a single compound-observation section.
+    pub fn cn(req: &CnRequestData) -> Result<Self> {
+        let n = req.x.dim();
+        let mut graph = FactorGraph::new();
+        graph.rls_chain(n, std::slice::from_ref(&req.a));
+        let schedule = Schedule::forward_sweep(&graph);
+        let mut inputs = HashMap::new();
+        inputs.insert(preload_id(&graph, &schedule, "msg_prior")?, req.x.clone());
+        bind_streamed(&graph, &schedule, std::slice::from_ref(&req.y), &mut inputs)?;
+        Ok(WorkloadRequest { graph, schedule, inputs, opts: CompileOptions::default() })
+    }
 }
 
 /// Which backend a server routes to.
@@ -34,8 +93,9 @@ pub enum BackendKind {
     XlaBatch,
 }
 
-/// A message-update engine. Batched entry point has a default
-/// one-at-a-time implementation; `XlaBatch` overrides it.
+/// A message-update engine behind the serving layer. Batched CN entry
+/// point has a default one-at-a-time implementation; `XlaBatch`
+/// overrides it. Workload requests execute singly.
 ///
 /// Not `Send`: the PJRT client is thread-affine (`Rc` internally), so
 /// backends are constructed *on* the server's worker thread via the
@@ -46,6 +106,10 @@ pub trait Backend {
     fn cn_update_batch(&mut self, reqs: &[CnRequestData]) -> Vec<Result<GaussMessage>> {
         reqs.iter().map(|r| self.cn_update(r)).collect()
     }
+
+    /// Execute a general workload request (compiled-program execution
+    /// with streamed sections).
+    fn run_workload(&mut self, req: &WorkloadRequest) -> Result<Execution>;
 
     fn kind(&self) -> BackendKind;
 }
@@ -58,57 +122,92 @@ impl Backend for GoldenBackend {
         nodes::compound_observation(&req.x, &req.y, &req.a, false).map_err(Into::into)
     }
 
+    fn run_workload(&mut self, req: &WorkloadRequest) -> Result<Execution> {
+        Session::golden()
+            .dispatch(&req.graph, &req.schedule, &req.inputs, &req.opts)
+            .map(|d| d.exec)
+    }
+
     fn kind(&self) -> BackendKind {
         BackendKind::Golden
     }
 }
 
-/// The cycle-accurate FGP simulator running a precompiled single-CN
-/// program: each request streams its operands into the device slots,
-/// starts the program, and reads the result back — exactly the §IV
+/// The cycle-accurate FGP simulator behind a [`Session`]: the CN program
+/// is compiled once at construction (like the silicon preloading its PM)
+/// and every further workload shape is compiled on first sight and
+/// cached — each request streams its operands into the device slots,
+/// starts the program, and reads the result back, exactly the §IV
 /// hardware/software interaction.
 pub struct FgpSimBackend {
-    fgp: Fgp,
-    compiled: CompiledProgram,
+    session: Session,
+    config: FgpConfig,
+    /// Prebuilt CN model reused across requests on the hot path: only
+    /// the state matrix and the two input messages change per request.
+    cn_shape: WorkloadRequest,
+    /// Virtual ids of the CN shape's prior and observation inputs.
+    cn_prior: MsgId,
+    cn_obs: MsgId,
     /// Simulated device cycles consumed so far (for throughput reports).
     pub device_cycles: u64,
 }
 
 impl FgpSimBackend {
     pub fn new(config: FgpConfig) -> Result<Self> {
-        let n = config.n;
-        // single compound-node graph, compiled once
-        let mut g = FactorGraph::new();
-        g.rls_chain(n, &[CMatrix::identity(n)]);
-        let sched = Schedule::forward_sweep(&g);
-        let compiled =
-            compile(&g, &sched, &CompileOptions::default()).context("compiling CN program")?;
-        let mut fgp = Fgp::new(config);
-        fgp.pm
-            .load(&compiled.program.to_image())
-            .context("loading CN program")?;
-        Ok(FgpSimBackend { fgp, compiled, device_cycles: 0 })
+        let mut session = Session::fgp_sim(config);
+        // compile the single-CN program up front so construction reports
+        // compiler errors (and the first request is already a cache hit)
+        let cn_shape = WorkloadRequest::cn_probe(config.n)?;
+        session
+            .precompile(&cn_shape.graph, &cn_shape.schedule, &cn_shape.opts)
+            .context("compiling CN program")?;
+        let cn_prior = preload_id(&cn_shape.graph, &cn_shape.schedule, "msg_prior")?;
+        let (_, streamed) = crate::engine::split_inputs(&cn_shape.graph, &cn_shape.schedule);
+        let cn_obs = streamed
+            .first()
+            .map(|(mid, _)| *mid)
+            .context("CN shape has no streamed observation edge")?;
+        Ok(FgpSimBackend { session, config, cn_shape, cn_prior, cn_obs, device_cycles: 0 })
     }
 
     /// Cycles one CN update costs on the device (timing model).
     pub fn cn_cycles(&self) -> u64 {
-        self.fgp.config.timing.compound_node_cycles(self.fgp.config.n)
+        self.config.timing.compound_node_cycles(self.config.n)
+    }
+
+    /// Program-cache counters of the underlying session.
+    pub fn cache_stats(&self) -> crate::engine::CacheStats {
+        self.session.cache_stats()
     }
 }
 
 impl Backend for FgpSimBackend {
     fn cn_update(&mut self, req: &CnRequestData) -> Result<GaussMessage> {
-        let map = &self.compiled.memmap;
-        let prior_slot = map.preloads[0].1;
-        let (_, obs_slot, _) = map.streams[0];
-        let (_, state_slot, _) = map.state_streams[0];
-        self.fgp.msgmem.write_message(prior_slot, &req.x);
-        self.fgp.msgmem.write_message(obs_slot, &req.y);
-        self.fgp.statemem.write_matrix(state_slot, &req.a);
-        let stats = self.fgp.run_program(1, &mut NoFeed)?;
-        self.device_cycles += stats.cycles;
-        let out_slot = map.outputs[0].1;
-        Ok(self.fgp.msgmem.read_message(out_slot))
+        if req.x.dim() != self.config.n {
+            bail!(
+                "CN request has n={} but the device is configured for n={}",
+                req.x.dim(),
+                self.config.n
+            );
+        }
+        // reuse the prebuilt model; only the data changes per request
+        self.cn_shape.graph.states[0] = req.a.clone();
+        self.cn_shape.inputs.insert(self.cn_prior, req.x.clone());
+        self.cn_shape.inputs.insert(self.cn_obs, req.y.clone());
+        let d = self.session.dispatch(
+            &self.cn_shape.graph,
+            &self.cn_shape.schedule,
+            &self.cn_shape.inputs,
+            &self.cn_shape.opts,
+        )?;
+        self.device_cycles += d.exec.stats.cycles;
+        Ok(d.exec.output()?.clone())
+    }
+
+    fn run_workload(&mut self, req: &WorkloadRequest) -> Result<Execution> {
+        let d = self.session.dispatch(&req.graph, &req.schedule, &req.inputs, &req.opts)?;
+        self.device_cycles += d.exec.stats.cycles;
+        Ok(d.exec)
     }
 
     fn kind(&self) -> BackendKind {
@@ -118,12 +217,15 @@ impl Backend for FgpSimBackend {
 
 /// PJRT single-request backend.
 pub struct XlaBackend {
-    rt: RuntimeClient,
+    rt: Rc<RuntimeClient>,
+    session: Session,
 }
 
 impl XlaBackend {
     pub fn new(rt: RuntimeClient) -> Self {
-        XlaBackend { rt }
+        let rt = Rc::new(rt);
+        let session = Session::new(Box::new(XlaEngine::shared(Rc::clone(&rt))));
+        XlaBackend { rt, session }
     }
 }
 
@@ -132,14 +234,21 @@ impl Backend for XlaBackend {
         self.rt.cn_update(&req.x, &req.y, &req.a)
     }
 
+    fn run_workload(&mut self, req: &WorkloadRequest) -> Result<Execution> {
+        self.session
+            .dispatch(&req.graph, &req.schedule, &req.inputs, &req.opts)
+            .map(|d| d.exec)
+    }
+
     fn kind(&self) -> BackendKind {
         BackendKind::Xla
     }
 }
 
-/// PJRT batched backend: one artifact dispatch for a whole batch.
+/// PJRT batched backend: one artifact dispatch for a whole CN batch.
 pub struct XlaBatchBackend {
-    rt: RuntimeClient,
+    rt: Rc<RuntimeClient>,
+    session: Session,
     max_batch: usize,
 }
 
@@ -150,7 +259,9 @@ impl XlaBatchBackend {
             .entry("cn_update_batched")
             .and_then(|e| e.batch())
             .context("batched artifact missing")?;
-        Ok(XlaBatchBackend { rt, max_batch })
+        let rt = Rc::new(rt);
+        let session = Session::new(Box::new(XlaEngine::shared(Rc::clone(&rt))));
+        Ok(XlaBatchBackend { rt, session, max_batch })
     }
 
     pub fn max_batch(&self) -> usize {
@@ -182,6 +293,12 @@ impl Backend for XlaBatchBackend {
             }
         }
         results
+    }
+
+    fn run_workload(&mut self, req: &WorkloadRequest) -> Result<Execution> {
+        self.session
+            .dispatch(&req.graph, &req.schedule, &req.inputs, &req.opts)
+            .map(|d| d.exec)
     }
 
     fn kind(&self) -> BackendKind {
@@ -238,6 +355,20 @@ mod tests {
             assert!(d < 0.02, "sim vs golden dist {d}");
         }
         assert_eq!(sim.device_cycles, 10 * sim.cn_cycles());
+        // the CN program was compiled once (at construction), never again
+        let stats = sim.cache_stats();
+        assert_eq!((stats.misses, stats.hits), (1, 10));
+    }
+
+    #[test]
+    fn cn_is_just_the_smallest_workload() {
+        let mut rng = Rng::new(7);
+        let req = request(&mut rng, 4);
+        let wr = WorkloadRequest::cn(&req).unwrap();
+        assert_eq!(wr.graph.nodes.len(), 1);
+        let exec = GoldenBackend.run_workload(&wr).unwrap();
+        let want = GoldenBackend.cn_update(&req).unwrap();
+        assert!(exec.output().unwrap().dist(&want) < 1e-12);
     }
 
     #[test]

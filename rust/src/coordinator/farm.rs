@@ -1,15 +1,20 @@
 //! Multi-device accelerator farm.
 //!
 //! §III imagines one FGP attached to a host; a deployment scales out with
-//! several. [`FgpFarm`] owns N simulated devices, each with the CN
-//! program resident, and routes requests by policy:
+//! several. [`FgpFarm`] owns N simulated devices, each behind a
+//! [`Session`], and routes **workload requests** (compiled-program
+//! executions with streamed sections — the CN update being just the
+//! smallest one) by policy:
 //!
 //! * `RoundRobin` — stateless rotation;
 //! * `LeastLoaded` — the device with the fewest simulated cycles consumed
 //!   (a proxy for queue depth on real silicon).
 //!
-//! Every device runs on its own thread behind the Fig. 5 command channel,
-//! so the farm also exercises the protocol under concurrency.
+//! The CN program is compiled **once** on the control plane and installed
+//! into every device session's program cache; new workload shapes compile
+//! on first sight per device and are cached from then on. Every device
+//! runs on its own thread behind the Fig. 5 command channel, so the farm
+//! also exercises the protocol under concurrency.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
@@ -18,14 +23,12 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
-use crate::compiler::{compile, CompileOptions};
-use crate::fgp::processor::NoFeed;
-use crate::fgp::{Fgp, FgpConfig};
+use crate::engine::{Execution, Session};
+use crate::fgp::FgpConfig;
 use crate::gmp::matrix::CMatrix;
 use crate::gmp::message::GaussMessage;
-use crate::gmp::{FactorGraph, Schedule};
 
-use super::backend::CnRequestData;
+use super::backend::{CnRequestData, WorkloadRequest};
 
 /// Request routing policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -34,9 +37,29 @@ pub enum RoutePolicy {
     LeastLoaded,
 }
 
+/// How a device should reply: the full execution, or (for the CN
+/// fast path) just the single output message.
+enum DeviceResp {
+    Exec(Sender<Result<Execution>>),
+    Cn(Sender<Result<GaussMessage>>),
+}
+
+impl DeviceResp {
+    fn send(self, result: Result<Execution>) {
+        match self {
+            DeviceResp::Exec(tx) => {
+                let _ = tx.send(result);
+            }
+            DeviceResp::Cn(tx) => {
+                let _ = tx.send(result.and_then(|exec| Ok(exec.output()?.clone())));
+            }
+        }
+    }
+}
+
 struct DeviceMsg {
-    req: CnRequestData,
-    resp: Sender<Result<GaussMessage>>,
+    req: WorkloadRequest,
+    resp: DeviceResp,
 }
 
 struct Device {
@@ -54,46 +77,47 @@ pub struct FgpFarm {
 }
 
 impl FgpFarm {
-    /// Boot `count` devices, each preloaded with the CN program.
+    /// Boot `count` devices, each with the CN program pre-installed in
+    /// its session cache (compiled once, shared via `Arc`).
     pub fn start(count: usize, config: FgpConfig, policy: RoutePolicy) -> Result<Self> {
-        assert!(count > 0);
-        // compile the single-CN program once; each device loads a copy
-        let n = config.n;
-        let mut g = FactorGraph::new();
-        g.rls_chain(n, &[CMatrix::identity(n)]);
-        let sched = Schedule::forward_sweep(&g);
-        let compiled = compile(&g, &sched, &CompileOptions::default())
-            .map_err(|e| anyhow!("compiling CN program: {e}"))?;
+        if count == 0 {
+            return Err(anyhow!("farm needs at least one device"));
+        }
+        // compile the single-CN program once; every device installs the
+        // same Arc instead of recompiling
+        let probe = WorkloadRequest::cn_probe(config.n)?;
+        let cn_program = {
+            let mut control = Session::fgp_sim(config);
+            control
+                .precompile(&probe.graph, &probe.schedule, &probe.opts)
+                .map_err(|e| anyhow!("compiling CN program: {e:#}"))?
+        };
 
         let mut devices = Vec::with_capacity(count);
         for d in 0..count {
             let (tx, rx): (Sender<DeviceMsg>, Receiver<DeviceMsg>) = mpsc::channel();
             let cycles = Arc::new(AtomicU64::new(0));
             let cycles2 = Arc::clone(&cycles);
-            let compiled2 = compiled.clone();
+            let probe2 = probe.clone();
+            let program2 = Arc::clone(&cn_program);
             let handle = std::thread::Builder::new()
                 .name(format!("fgp-farm-{d}"))
                 .spawn(move || {
-                    let mut fgp = Fgp::new(config);
-                    fgp.pm
-                        .load(&compiled2.program.to_image())
-                        .expect("CN program loads");
-                    let prior_slot = compiled2.memmap.preloads[0].1;
-                    let obs_slot = compiled2.memmap.streams[0].1;
-                    let st_slot = compiled2.memmap.state_streams[0].1;
-                    let out_slot = compiled2.memmap.outputs[0].1;
+                    let mut session = Session::fgp_sim(config);
+                    session.install(&probe2.graph, &probe2.schedule, &probe2.opts, program2);
                     while let Ok(msg) = rx.recv() {
-                        fgp.msgmem.write_message(prior_slot, &msg.req.x);
-                        fgp.msgmem.write_message(obs_slot, &msg.req.y);
-                        fgp.statemem.write_matrix(st_slot, &msg.req.a);
-                        let result = fgp
-                            .run_program(1, &mut NoFeed)
-                            .map(|stats| {
-                                cycles2.fetch_add(stats.cycles, Ordering::Relaxed);
-                                fgp.msgmem.read_message(out_slot)
-                            })
-                            .map_err(|e| anyhow!("{e}"));
-                        let _ = msg.resp.send(result);
+                        let result = session
+                            .dispatch(
+                                &msg.req.graph,
+                                &msg.req.schedule,
+                                &msg.req.inputs,
+                                &msg.req.opts,
+                            )
+                            .map(|d| {
+                                cycles2.fetch_add(d.exec.stats.cycles, Ordering::Relaxed);
+                                d.exec
+                            });
+                        msg.resp.send(result);
                     }
                 })
                 .expect("spawn farm device");
@@ -118,22 +142,53 @@ impl FgpFarm {
         }
     }
 
-    /// Dispatch one CN update; blocks for the reply.
-    pub fn update(&self, req: CnRequestData) -> Result<GaussMessage> {
-        let idx = self.route();
-        let (rtx, rrx) = mpsc::channel();
-        self.devices[idx]
-            .tx
-            .send(DeviceMsg { req, resp: rtx })
-            .map_err(|_| anyhow!("device {idx} stopped"))?;
+    /// Dispatch one workload request; blocks for the reply.
+    pub fn run(&self, req: WorkloadRequest) -> Result<Execution> {
+        let (rrx, idx) = self.submit_workload(req);
         rrx.recv().map_err(|_| anyhow!("device {idx} died"))?
     }
 
-    /// Async dispatch; returns the reply channel and the chosen device.
+    /// Dispatch one CN update (the smallest workload); blocks.
+    pub fn update(&self, req: CnRequestData) -> Result<GaussMessage> {
+        let exec = self.run(WorkloadRequest::cn(&req)?)?;
+        Ok(exec.output()?.clone())
+    }
+
+    /// Async workload dispatch; returns the reply channel and the device.
+    pub fn submit_workload(
+        &self,
+        req: WorkloadRequest,
+    ) -> (Receiver<Result<Execution>>, usize) {
+        let idx = self.route();
+        let (rtx, rrx) = mpsc::channel();
+        if let Err(mpsc::SendError(msg)) =
+            self.devices[idx].tx.send(DeviceMsg { req, resp: DeviceResp::Exec(rtx) })
+        {
+            msg.resp.send(Err(anyhow!("device {idx} stopped")));
+        }
+        (rrx, idx)
+    }
+
+    /// Async CN dispatch; returns the reply channel and the chosen device.
+    /// The device thread unwraps the single output message itself — no
+    /// adapter hop on the client side.
     pub fn submit(&self, req: CnRequestData) -> (Receiver<Result<GaussMessage>>, usize) {
         let idx = self.route();
         let (rtx, rrx) = mpsc::channel();
-        let _ = self.devices[idx].tx.send(DeviceMsg { req, resp: rtx });
+        match WorkloadRequest::cn(&req) {
+            Ok(wr) => {
+                if let Err(mpsc::SendError(msg)) =
+                    self.devices[idx].tx.send(DeviceMsg { req: wr, resp: DeviceResp::Cn(rtx) })
+                {
+                    msg.resp.send(Err(anyhow!("device {idx} stopped")));
+                }
+            }
+            // request construction failed client-side; the routed device
+            // was never reached but the index reflects the routing choice
+            Err(e) => {
+                let _ = rtx.send(Err(e));
+            }
+        }
         (rrx, idx)
     }
 
@@ -236,5 +291,18 @@ mod tests {
         let total: u64 = farm.load_profile().iter().sum();
         let cn = FgpConfig::default().timing.compound_node_cycles(4);
         assert_eq!(total, cn * 32);
+    }
+
+    #[test]
+    fn farm_runs_chain_workloads() {
+        use crate::apps::rls::RlsProblem;
+        use crate::engine::Workload;
+
+        let farm = FgpFarm::start(2, FgpConfig::default(), RoutePolicy::RoundRobin).unwrap();
+        let p = RlsProblem::synthetic(4, 8, 0.02, 17);
+        let exec = farm.run(WorkloadRequest::from_workload(&p).unwrap()).unwrap();
+        let outcome = p.outcome(&exec).unwrap();
+        assert!(outcome.rel_mse.is_finite(), "rel MSE {}", outcome.rel_mse);
+        assert_eq!(exec.stats.sections, 8);
     }
 }

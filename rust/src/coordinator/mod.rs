@@ -4,9 +4,12 @@
 //! accelerator or a co-processor" — this module is that existing system.
 //! It owns the request path end to end:
 //!
-//! * [`backend`] — pluggable message-update engines: the cycle-accurate
-//!   FGP simulator, the f64 golden rules, and the PJRT/XLA artifacts
-//!   (single and batched);
+//! * [`backend`] — pluggable message-update engines behind the unified
+//!   [`crate::engine::Session`] surface: the cycle-accurate FGP
+//!   simulator, the f64 golden rules, and the PJRT/XLA artifacts (single
+//!   and batched). Requests are either raw compound-node updates
+//!   (batchable) or general [`backend::WorkloadRequest`]s —
+//!   compiled-program executions with streamed sections;
 //! * [`batcher`] — dynamic batching with a max-batch / max-wait policy
 //!   (amortizes PJRT dispatch across requests, the classic serving
 //!   trade-off);
@@ -28,9 +31,9 @@ pub mod farm;
 pub mod metrics;
 pub mod server;
 
-pub use backend::{Backend, BackendKind, CnRequestData};
+pub use backend::{Backend, BackendKind, CnRequestData, WorkloadRequest};
 pub use batcher::{BatchPolicy, Batcher};
 pub use device::FgpDevice;
 pub use farm::{FgpFarm, RoutePolicy};
 pub use metrics::{Histogram, Metrics};
-pub use server::{CnClient, CnServer, ServerConfig};
+pub use server::{CnClient, CnServer, ServerClosed, ServerConfig};

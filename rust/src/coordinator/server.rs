@@ -1,10 +1,15 @@
-//! The compound-node update server: queue → batcher → backend → reply.
+//! The coordinator server: queue → batcher → backend → reply.
 //!
 //! A [`CnServer`] owns a worker thread driving one [`Backend`]; clients
-//! hold a cheap cloneable [`CnClient`] and submit requests either
-//! synchronously ([`CnClient::update`]) or asynchronously
-//! ([`CnClient::submit`] + the returned receiver). Shutdown is by
-//! dropping all clients — the worker drains the queue, then exits.
+//! hold a cheap cloneable [`CnClient`] and submit either compound-node
+//! updates (batched per the policy) or general **workload requests**
+//! (compiled-program executions with streamed sections,
+//! [`WorkloadRequest`]) — synchronously ([`CnClient::update`],
+//! [`CnClient::run_workload`]) or asynchronously ([`CnClient::submit`],
+//! [`CnClient::submit_workload`] + the returned receiver). Shutdown is
+//! by dropping the server (or all clients); a client talking to a dead
+//! server gets a typed [`ServerClosed`] error on the reply channel, not
+//! a bare disconnect.
 
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
@@ -13,11 +18,18 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::engine::Execution;
 use crate::gmp::message::GaussMessage;
 
-use super::backend::{Backend, CnRequestData};
+use super::backend::{Backend, CnRequestData, WorkloadRequest};
 use super::batcher::BatchPolicy;
 use super::metrics::Metrics;
+
+/// Typed error surfaced to clients whose server is gone (either it never
+/// finished booting, it was shut down, or its thread died).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+#[error("coordinator server closed")]
+pub struct ServerClosed;
 
 /// Server configuration.
 #[derive(Clone, Copy, Debug, Default)]
@@ -31,8 +43,15 @@ struct Envelope {
     resp: Sender<Result<GaussMessage>>,
 }
 
+struct WorkloadEnvelope {
+    data: WorkloadRequest,
+    enqueued: Instant,
+    resp: Sender<Result<Execution>>,
+}
+
 enum ServerMsg {
-    Req(Envelope),
+    Cn(Envelope),
+    Workload(WorkloadEnvelope),
     /// Explicit stop marker so shutdown does not depend on every client
     /// clone being dropped first.
     Stop,
@@ -46,21 +65,41 @@ pub struct CnClient {
 }
 
 impl CnClient {
-    /// Fire a request; the reply arrives on the returned receiver.
+    /// Fire a CN request; the reply arrives on the returned receiver. If
+    /// the server is gone the receiver immediately yields
+    /// `Err(ServerClosed)`.
     pub fn submit(&self, data: CnRequestData) -> Receiver<Result<GaussMessage>> {
         let (rtx, rrx) = mpsc::channel();
-        let env = Envelope { data, enqueued: Instant::now(), resp: rtx };
-        if self.tx.send(ServerMsg::Req(env)).is_err() {
-            // server gone: the receiver will see a disconnect
+        let env = Envelope { data, enqueued: Instant::now(), resp: rtx.clone() };
+        if self.tx.send(ServerMsg::Cn(env)).is_err() {
+            let _ = rtx.send(Err(ServerClosed.into()));
         }
         rrx
     }
 
-    /// Synchronous update.
+    /// Fire a workload request; same reply-channel contract as
+    /// [`CnClient::submit`].
+    pub fn submit_workload(&self, data: WorkloadRequest) -> Receiver<Result<Execution>> {
+        let (rtx, rrx) = mpsc::channel();
+        let env = WorkloadEnvelope { data, enqueued: Instant::now(), resp: rtx.clone() };
+        if self.tx.send(ServerMsg::Workload(env)).is_err() {
+            let _ = rtx.send(Err(ServerClosed.into()));
+        }
+        rrx
+    }
+
+    /// Synchronous CN update.
     pub fn update(&self, data: CnRequestData) -> Result<GaussMessage> {
         self.submit(data)
             .recv()
-            .map_err(|_| anyhow::anyhow!("server shut down"))?
+            .map_err(|_| anyhow::Error::new(ServerClosed))?
+    }
+
+    /// Synchronous workload execution.
+    pub fn run_workload(&self, data: WorkloadRequest) -> Result<Execution> {
+        self.submit_workload(data)
+            .recv()
+            .map_err(|_| anyhow::Error::new(ServerClosed))?
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -100,12 +139,34 @@ impl CnServer {
                         return;
                     }
                 };
-                // batching loop with explicit stop handling (same policy
-                // as `Batcher`, plus the Stop marker)
+                // workload requests execute as they arrive; CN requests
+                // batch per the policy (plus the explicit Stop marker)
+                let run_workload =
+                    |backend: &mut dyn Backend, env: WorkloadEnvelope, m: &Metrics| {
+                        // queue wait ends at dequeue, before execution
+                        // (same semantics as the CN batch path)
+                        m.record_batch(1);
+                        m.queue_wait.record(env.enqueued.elapsed());
+                        let result = backend.run_workload(&env.data);
+                        match &result {
+                            Ok(_) => {
+                                m.completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            }
+                            Err(_) => {
+                                m.failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            }
+                        }
+                        m.latency.record(env.enqueued.elapsed());
+                        let _ = env.resp.send(result);
+                    };
                 let mut stopping = false;
                 while !stopping {
                     let first = match rx.recv() {
-                        Ok(ServerMsg::Req(env)) => env,
+                        Ok(ServerMsg::Cn(env)) => env,
+                        Ok(ServerMsg::Workload(env)) => {
+                            run_workload(&mut backend, env, &worker_metrics);
+                            continue;
+                        }
                         Ok(ServerMsg::Stop) | Err(_) => break,
                     };
                     let mut batch = vec![first];
@@ -116,7 +177,10 @@ impl CnServer {
                             break;
                         }
                         match rx.recv_timeout(deadline - now) {
-                            Ok(ServerMsg::Req(env)) => batch.push(env),
+                            Ok(ServerMsg::Cn(env)) => batch.push(env),
+                            Ok(ServerMsg::Workload(env)) => {
+                                run_workload(&mut backend, env, &worker_metrics);
+                            }
                             Ok(ServerMsg::Stop) => {
                                 stopping = true;
                                 break;
@@ -149,11 +213,31 @@ impl CnServer {
                         let _ = env.resp.send(result);
                     }
                 }
+                // drain: requests still queued (behind the Stop marker,
+                // or raced in while exiting) get the typed error instead
+                // of a dropped reply channel
+                while let Ok(msg) = rx.try_recv() {
+                    match msg {
+                        ServerMsg::Cn(env) => {
+                            worker_metrics
+                                .failed
+                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            let _ = env.resp.send(Err(ServerClosed.into()));
+                        }
+                        ServerMsg::Workload(env) => {
+                            worker_metrics
+                                .failed
+                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            let _ = env.resp.send(Err(ServerClosed.into()));
+                        }
+                        ServerMsg::Stop => {}
+                    }
+                }
             })
             .expect("spawn server thread");
         boot_rx
             .recv()
-            .map_err(|_| anyhow::anyhow!("server thread died during boot"))??;
+            .map_err(|_| anyhow::Error::new(ServerClosed))??;
         Ok(CnServer { handle: Some(handle), client: CnClient { tx, metrics } })
     }
 
@@ -241,5 +325,49 @@ mod tests {
         assert_eq!(m.metrics().completed.load(std::sync::atomic::Ordering::Relaxed), 64);
         assert!(m.metrics().mean_batch_size() >= 1.0);
         server.shutdown();
+    }
+
+    #[test]
+    fn serves_workload_requests() {
+        use crate::apps::rls::RlsProblem;
+        use crate::coordinator::backend::WorkloadRequest;
+        use crate::engine::Workload;
+
+        let server =
+            CnServer::start(|| Ok(Box::new(GoldenBackend) as _), ServerConfig::default())
+                .unwrap();
+        let client = server.client();
+        let p = RlsProblem::synthetic(4, 12, 0.02, 5);
+        let wr = WorkloadRequest::from_workload(&p).unwrap();
+        let exec = client.run_workload(wr).unwrap();
+        let outcome = p.outcome(&exec).unwrap();
+        assert!(outcome.rel_mse < 0.1, "rel MSE {}", outcome.rel_mse);
+        server.shutdown();
+    }
+
+    #[test]
+    fn closed_server_yields_typed_error() {
+        let server =
+            CnServer::start(|| Ok(Box::new(GoldenBackend) as _), ServerConfig::default())
+                .unwrap();
+        let client = server.client(); // clone outlives the server
+        server.shutdown();
+        let mut rng = Rng::new(1);
+        // the receiver carries a typed ServerClosed, not a bare disconnect
+        let rx = client.submit(request(&mut rng, 4));
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(err.is::<ServerClosed>(), "unexpected error: {err:#}");
+        let err = client.update(request(&mut rng, 4)).unwrap_err();
+        assert!(err.is::<ServerClosed>(), "unexpected error: {err:#}");
+    }
+
+    #[test]
+    fn boot_failure_reported_synchronously() {
+        let result = CnServer::start(
+            || Err(anyhow::anyhow!("backend exploded")),
+            ServerConfig::default(),
+        );
+        assert!(result.is_err());
+        assert!(format!("{:#}", result.err().unwrap()).contains("exploded"));
     }
 }

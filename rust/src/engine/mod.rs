@@ -1,0 +1,43 @@
+//! S12 — The unified workload/engine execution surface.
+//!
+//! The paper's thesis is that *one* processor serves many GMP algorithms
+//! (§I: "RLS, linear MMSE equalization, and Kalman filtering can be
+//! expressed with Gaussian message-passing on a factor graph"). This
+//! module is that thesis as an API: every application describes itself
+//! once — a [`FactorGraph`](crate::gmp::FactorGraph) + a
+//! [`Schedule`](crate::gmp::Schedule) plus the host-side data bound to
+//! the graph's input edges — and any [`Engine`] executes that same model:
+//!
+//! * [`GoldenEngine`] — the f64 node rules (the semantic reference);
+//! * [`FgpSimEngine`] — the cycle-accurate fixed-point simulator, driven
+//!   through the compiler's memmap preload/stream/output contract;
+//! * [`XlaEngine`] — the PJRT artifacts (the Pallas compound-node kernel),
+//!   with f64 host glue for the node types the artifact set doesn't cover.
+//!
+//! A [`Session`] owns one engine plus a **compiled-program cache** keyed
+//! by the graph's structural signature: repeated runs of the same
+//! workload *shape* (any data) reuse the compiled FGP program instead of
+//! recompiling — the hit/miss counters are observable via
+//! [`Session::cache_stats`].
+//!
+//! ```no_run
+//! use fgp_repro::apps::rls::RlsProblem;
+//! use fgp_repro::engine::Session;
+//! use fgp_repro::fgp::FgpConfig;
+//!
+//! let problem = RlsProblem::synthetic(4, 16, 0.01, 42);
+//! let mut golden = Session::golden();
+//! let mut device = Session::fgp_sim(FgpConfig::default());
+//! let reference = golden.run(&problem).unwrap();
+//! let measured = device.run(&problem).unwrap();
+//! assert!(measured.quality < reference.quality + 0.2);
+//! println!("cycles/section = {}", measured.cycles_per_section);
+//! ```
+
+pub mod session;
+pub mod workload;
+
+pub use session::{
+    CacheStats, Engine, EngineKind, FgpSimEngine, GoldenEngine, RunReport, Session, XlaEngine,
+};
+pub use workload::{bind_streamed, edge_label, preload_id, split_inputs, Execution, Workload};

@@ -1,0 +1,875 @@
+//! [`Session`]: one execution surface over interchangeable engines.
+//!
+//! A session owns an [`Engine`] and a compiled-program cache. Callers
+//! hand it any [`Workload`]; the session builds the model, binds the
+//! data, compiles (or fetches) the FGP program when the engine needs
+//! one, executes, and wraps the typed outcome in a [`RunReport`].
+//!
+//! The cache is keyed by the graph's **structural signature** — edge
+//! dims/roles/stream groups, node kinds with their state wiring, and the
+//! compile options — never by data values: two runs of the same workload
+//! shape share one compiled program, which is what lets a serving
+//! deployment amortize compilation across millions of requests (and what
+//! `FgpSimBackend`, `FgpFarm` and every old `run_on_fgp` used to redo
+//! from scratch on each construction).
+
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::compiler::{compile, CompileOptions, CompileStats, CompiledProgram};
+use crate::fgp::{Fgp, FgpConfig, MessageMemory, RunStats, StateMemory};
+use crate::gmp::graph::StateId;
+use crate::gmp::matrix::CMatrix;
+use crate::gmp::message::GaussMessage;
+use crate::gmp::schedule::StepOp;
+use crate::gmp::{nodes, FactorGraph, MsgId, NodeKind, Schedule};
+use crate::isa::Instr;
+use crate::runtime::RuntimeClient;
+
+use super::workload::{Execution, Workload};
+
+/// Which engine a session drives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// f64 golden node rules (semantic reference).
+    Golden,
+    /// Cycle-accurate fixed-point FGP simulator.
+    FgpSim,
+    /// PJRT/XLA artifacts (Pallas compound-node kernel).
+    Xla,
+}
+
+impl std::fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineKind::Golden => write!(f, "golden"),
+            EngineKind::FgpSim => write!(f, "fgp-sim"),
+            EngineKind::Xla => write!(f, "xla"),
+        }
+    }
+}
+
+/// An execution engine: everything that can run a workload model.
+pub trait Engine {
+    fn kind(&self) -> EngineKind;
+
+    /// Does this engine execute a compiled FGP program? (Controls whether
+    /// [`Session`] consults the program cache.)
+    fn needs_program(&self) -> bool {
+        false
+    }
+
+    /// Fixed device dimension, if the engine has one (the FGP simulator).
+    fn device_n(&self) -> Option<usize> {
+        None
+    }
+
+    /// Execute a model against the bound inputs. `program` is the cached
+    /// compiled program when [`Engine::needs_program`] is true (shared
+    /// `Arc` so engines can identity-compare against what they already
+    /// have loaded).
+    fn execute(
+        &mut self,
+        graph: &FactorGraph,
+        schedule: &Schedule,
+        program: Option<&Arc<CompiledProgram>>,
+        inputs: &HashMap<MsgId, GaussMessage>,
+    ) -> Result<Execution>;
+}
+
+// ---------------------------------------------------------------------
+// Golden engine
+// ---------------------------------------------------------------------
+
+/// The f64 reference engine: executes the schedule with the golden node
+/// rules (direct solve by default; set `faddeev` to mirror the device's
+/// elimination order bit-for-bit in f64).
+#[derive(Default)]
+pub struct GoldenEngine {
+    pub faddeev: bool,
+}
+
+impl Engine for GoldenEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Golden
+    }
+
+    fn execute(
+        &mut self,
+        graph: &FactorGraph,
+        schedule: &Schedule,
+        _program: Option<&Arc<CompiledProgram>>,
+        inputs: &HashMap<MsgId, GaussMessage>,
+    ) -> Result<Execution> {
+        let env = schedule.execute_golden(graph, inputs, self.faddeev)?;
+        let outputs = collect_outputs(schedule, |mid| env.get(mid).cloned())?;
+        Ok(Execution { outputs, stats: RunStats::default() })
+    }
+}
+
+// ---------------------------------------------------------------------
+// FGP simulator engine
+// ---------------------------------------------------------------------
+
+/// The cycle-accurate device: loads the compiled program, preloads the
+/// memmap's resident messages/states, streams sectioned inputs through
+/// the Data-in port, and reads the outputs back. The PM image is only
+/// re-serialized and reloaded when the program actually changes — on a
+/// serving hot path firing the same cached program per request, loading
+/// happens once.
+pub struct FgpSimEngine {
+    fgp: Fgp,
+    /// Program currently resident in the PM (identity-compared by Arc).
+    loaded: Option<Arc<CompiledProgram>>,
+}
+
+impl FgpSimEngine {
+    pub fn new(config: FgpConfig) -> Self {
+        FgpSimEngine { fgp: Fgp::new(config), loaded: None }
+    }
+
+    pub fn config(&self) -> &FgpConfig {
+        &self.fgp.config
+    }
+
+    /// Lifetime simulated cycles across all runs.
+    pub fn total_cycles(&self) -> u64 {
+        self.fgp.total_cycles()
+    }
+}
+
+/// Per-slot streaming plan: element `i` must sit in `slot` while the
+/// schedule executes step `consume_at[i]`; the host stages it at every
+/// store handshake from the death of element `i-1` onward.
+struct StreamPlan<T> {
+    slot: u8,
+    consume_at: Vec<usize>,
+    values: Vec<T>,
+}
+
+impl<T> StreamPlan<T> {
+    /// Element to stage when `section` store handshakes have committed
+    /// (i.e. the next step to execute is `section`).
+    fn staged(&self, section: usize) -> Option<&T> {
+        self.consume_at
+            .iter()
+            .position(|&c| c >= section)
+            .map(|i| &self.values[i])
+    }
+}
+
+impl Engine for FgpSimEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::FgpSim
+    }
+
+    fn needs_program(&self) -> bool {
+        true
+    }
+
+    fn device_n(&self) -> Option<usize> {
+        Some(self.fgp.config.n)
+    }
+
+    fn execute(
+        &mut self,
+        graph: &FactorGraph,
+        schedule: &Schedule,
+        program: Option<&Arc<CompiledProgram>>,
+        inputs: &HashMap<MsgId, GaussMessage>,
+    ) -> Result<Execution> {
+        let compiled = program.context("the FGP engine requires a compiled program")?;
+        let n = self.fgp.config.n;
+        let resident = self
+            .loaded
+            .as_ref()
+            .map_or(false, |p| Arc::ptr_eq(p, compiled));
+        if !resident {
+            self.loaded = None;
+            self.fgp
+                .pm
+                .load(&compiled.program.to_image())
+                .context("loading program image")?;
+            self.loaded = Some(Arc::clone(compiled));
+        }
+
+        // resident messages and states
+        for (mid, slot) in &compiled.memmap.preloads {
+            let msg = inputs
+                .get(mid)
+                .with_context(|| format!("no binding for preloaded input message {}", mid.0))?;
+            self.fgp.msgmem.write_message(*slot, msg);
+        }
+        for (sid, slot) in &compiled.memmap.state_preloads {
+            // states past the graph's table are compiler-materialized
+            // identities (additive/equality lowering)
+            let m = graph
+                .states
+                .get(sid.0)
+                .cloned()
+                .unwrap_or_else(|| CMatrix::identity(n));
+            self.fgp.statemem.write_matrix(*slot, &m);
+        }
+
+        // streaming plans: element i of a stream group must be resident
+        // in the shared slot when its consuming step executes
+        let consume_msg = |mid: &MsgId| {
+            schedule
+                .steps
+                .iter()
+                .position(|s| s.op.inputs().contains(mid))
+                .with_context(|| format!("streamed message {} is never consumed", mid.0))
+        };
+        let consume_state = |sid: &StateId| {
+            schedule
+                .steps
+                .iter()
+                .position(|s| s.op.state() == Some(*sid))
+                .with_context(|| format!("streamed state {} is never consumed", sid.0))
+        };
+        let mut msg_plans: Vec<StreamPlan<GaussMessage>> = Vec::new();
+        for (_, slot, ids) in &compiled.memmap.streams {
+            let mut entries: Vec<(usize, GaussMessage)> = Vec::with_capacity(ids.len());
+            for mid in ids {
+                let at = consume_msg(mid)?;
+                let msg = inputs
+                    .get(mid)
+                    .with_context(|| format!("no binding for streamed input message {}", mid.0))?;
+                entries.push((at, msg.clone()));
+            }
+            entries.sort_by_key(|(at, _)| *at);
+            msg_plans.push(StreamPlan {
+                slot: *slot,
+                consume_at: entries.iter().map(|(at, _)| *at).collect(),
+                values: entries.into_iter().map(|(_, m)| m).collect(),
+            });
+        }
+        let mut state_plans: Vec<StreamPlan<CMatrix>> = Vec::new();
+        for (_, slot, ids) in &compiled.memmap.state_streams {
+            let mut entries: Vec<(usize, CMatrix)> = Vec::with_capacity(ids.len());
+            for sid in ids {
+                let at = consume_state(sid)?;
+                let m = graph
+                    .states
+                    .get(sid.0)
+                    .cloned()
+                    .with_context(|| format!("streamed state {} not in the graph", sid.0))?;
+                entries.push((at, m));
+            }
+            entries.sort_by_key(|(at, _)| *at);
+            state_plans.push(StreamPlan {
+                slot: *slot,
+                consume_at: entries.iter().map(|(at, _)| *at).collect(),
+                values: entries.into_iter().map(|(_, m)| m).collect(),
+            });
+        }
+
+        let streaming = !msg_plans.is_empty() || !state_plans.is_empty();
+        let mut feed =
+            move |section: usize, mem: &mut MessageMemory, st: &mut StateMemory| -> bool {
+                if !streaming {
+                    return true;
+                }
+                let mut live = false;
+                for p in &msg_plans {
+                    if let Some(msg) = p.staged(section) {
+                        mem.write_message(p.slot, msg);
+                        live = true;
+                    }
+                }
+                for p in &state_plans {
+                    if let Some(m) = p.staged(section) {
+                        st.write_matrix(p.slot, m);
+                        live = true;
+                    }
+                }
+                live
+            };
+
+        let id = match compiled.program.instrs.first() {
+            Some(Instr::Prg { id }) => *id,
+            _ => 1,
+        };
+        let stats = self.fgp.run_program(id, &mut feed)?;
+
+        let outputs = collect_outputs(schedule, |mid| {
+            compiled
+                .memmap
+                .outputs
+                .iter()
+                .find(|(m, _)| m == mid)
+                .map(|(_, slot)| self.fgp.msgmem.read_message(*slot))
+        })?;
+        Ok(Execution { outputs, stats })
+    }
+}
+
+// ---------------------------------------------------------------------
+// XLA engine
+// ---------------------------------------------------------------------
+
+/// The PJRT engine. Compound-observation updates dispatch the Pallas
+/// `cn_update` artifact; a pure compound-node chain whose length matches
+/// the AOT-baked `rls_chain` artifact goes out as ONE fused dispatch.
+/// Node types outside the artifact set (multiply/add/equality glue) run
+/// on the host in f64 — the artifacts cover the §II datapath kernel, not
+/// the whole node zoo.
+pub struct XlaEngine {
+    rt: Rc<RuntimeClient>,
+}
+
+impl XlaEngine {
+    pub fn new(rt: RuntimeClient) -> Self {
+        XlaEngine { rt: Rc::new(rt) }
+    }
+
+    /// Share one thread-affine PJRT client between engine and caller.
+    pub fn shared(rt: Rc<RuntimeClient>) -> Self {
+        XlaEngine { rt }
+    }
+
+    pub fn runtime(&self) -> &RuntimeClient {
+        &self.rt
+    }
+
+    /// One fused dispatch when the model is exactly the artifact's chain.
+    fn try_fused_chain(
+        &self,
+        graph: &FactorGraph,
+        schedule: &Schedule,
+        inputs: &HashMap<MsgId, GaussMessage>,
+    ) -> Result<Option<Execution>> {
+        let sections = match self.rt.manifest.entry("rls_chain").and_then(|e| e.leading_dim()) {
+            Some(s) => s,
+            None => return Ok(None),
+        };
+        if schedule.steps.len() != sections || schedule.outputs.len() != 1 {
+            return Ok(None);
+        }
+        let last_out = schedule.steps.last().map(|s| s.out);
+        if schedule.outputs.first().map(|(m, _)| *m) != last_out {
+            return Ok(None);
+        }
+        let mut prev: Option<MsgId> = None;
+        let mut a_seq = Vec::with_capacity(sections);
+        let mut y_seq = Vec::with_capacity(sections);
+        let mut prior: Option<&GaussMessage> = None;
+        for step in &schedule.steps {
+            let StepOp::CompoundObservation { x, y, a } = &step.op else {
+                return Ok(None);
+            };
+            match prev {
+                None => prior = inputs.get(x),
+                Some(p) if p == *x => {}
+                Some(_) => return Ok(None),
+            }
+            let Some(y_msg) = inputs.get(y) else { return Ok(None) };
+            a_seq.push(graph.state(*a).clone());
+            y_seq.push(y_msg.clone());
+            prev = Some(step.out);
+        }
+        let Some(prior) = prior else { return Ok(None) };
+        // the artifact bakes ONE isotropic observation covariance; any
+        // other noise shape must take the per-step path
+        let sigma2 = y_seq[0].cov[(0, 0)].re;
+        let n = prior.dim();
+        for y in &y_seq {
+            if y.cov.dist(&CMatrix::scaled_identity(n, sigma2)) > 1e-12 {
+                return Ok(None);
+            }
+        }
+        let sigma2 = sigma2 as f32;
+        let chain = self.rt.rls_chain(prior, &a_seq, &y_seq, sigma2)?;
+        let final_msg = chain.last().context("empty fused chain result")?.clone();
+        let outputs = collect_outputs(schedule, |_| Some(final_msg.clone()))?;
+        Ok(Some(Execution { outputs, stats: RunStats::default() }))
+    }
+}
+
+impl Engine for XlaEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Xla
+    }
+
+    fn execute(
+        &mut self,
+        graph: &FactorGraph,
+        schedule: &Schedule,
+        _program: Option<&Arc<CompiledProgram>>,
+        inputs: &HashMap<MsgId, GaussMessage>,
+    ) -> Result<Execution> {
+        if let Some(exec) = self.try_fused_chain(graph, schedule, inputs)? {
+            return Ok(exec);
+        }
+        let mut env: HashMap<MsgId, GaussMessage> = inputs.clone();
+        for step in &schedule.steps {
+            let out = {
+                let get = |id: &MsgId| {
+                    env.get(id)
+                        .with_context(|| format!("step uses unbound message {}", id.0))
+                };
+                match &step.op {
+                    StepOp::CompoundObservation { x, y, a } => {
+                        self.rt.cn_update(get(x)?, get(y)?, graph.state(*a))?
+                    }
+                    StepOp::Multiply { x, a } => nodes::multiply(get(x)?, graph.state(*a)),
+                    StepOp::Add { x, y } => nodes::add(get(x)?, get(y)?),
+                    StepOp::Equality { x, y } => nodes::equality(get(x)?, get(y)?)?,
+                    StepOp::CompoundEquality { x, y, a } => {
+                        let (wx, wxm) = get(x)?
+                            .to_weight_form()
+                            .context("V_X singular in weight conversion")?;
+                        let (wy, wym) = get(y)?
+                            .to_weight_form()
+                            .context("V_Y singular in weight conversion")?;
+                        let (wz, wzm) = nodes::compound_equality_weight(
+                            &wx,
+                            &wxm,
+                            &wy,
+                            &wym,
+                            graph.state(*a),
+                        );
+                        GaussMessage::from_weight_form(&wz, &wzm)
+                            .context("W_Z singular after compound equality")?
+                    }
+                }
+            };
+            env.insert(step.out, out);
+        }
+        let outputs = collect_outputs(schedule, |mid| env.get(mid).cloned())?;
+        Ok(Execution { outputs, stats: RunStats::default() })
+    }
+}
+
+/// Gather the schedule's output messages through a per-id lookup.
+fn collect_outputs(
+    schedule: &Schedule,
+    mut lookup: impl FnMut(&MsgId) -> Option<GaussMessage>,
+) -> Result<Vec<(MsgId, crate::gmp::EdgeId, GaussMessage)>> {
+    schedule
+        .outputs
+        .iter()
+        .map(|(mid, eid)| {
+            lookup(mid)
+                .map(|m| (*mid, *eid, m))
+                .with_context(|| format!("engine produced no message for output {}", mid.0))
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Session
+// ---------------------------------------------------------------------
+
+/// Program-cache counters (observability for the serving layer).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    /// Distinct compiled programs resident.
+    pub programs: usize,
+}
+
+/// Result of [`Session::run`]: the typed outcome plus everything the
+/// serving/benchmark layers report.
+#[derive(Clone, Debug)]
+pub struct RunReport<O> {
+    pub outcome: O,
+    /// The workload's scalar quality metric (lower is better).
+    pub quality: f64,
+    /// Simulated device cycles (0 on engines without a cycle model).
+    pub cycles: u64,
+    /// Sections (store handshakes) the device committed.
+    pub sections: u64,
+    pub cycles_per_section: u64,
+    /// Compile statistics when a program was compiled or fetched.
+    pub compile_stats: Option<CompileStats>,
+    pub engine: EngineKind,
+    /// True when the compiled program came from the session cache.
+    pub cached: bool,
+}
+
+/// Low-level result of [`Session::dispatch`] (the serving layer routes
+/// raw models through this without the [`Workload`] trait).
+#[derive(Clone, Debug)]
+pub struct Dispatch {
+    pub exec: Execution,
+    pub compile_stats: Option<CompileStats>,
+    pub cached: bool,
+}
+
+/// Upper bound on resident compiled programs per session. The serving
+/// layer forwards arbitrary client workload shapes into the cache, so it
+/// must not grow without bound; on overflow the oldest-inserted entry is
+/// evicted (FIFO — a shape seen again later simply recompiles).
+const MAX_CACHED_PROGRAMS: usize = 128;
+
+/// One engine + one program cache = the crate's execution surface.
+pub struct Session {
+    engine: Box<dyn Engine>,
+    cache: HashMap<String, Arc<CompiledProgram>>,
+    /// Insertion order of cache keys (FIFO eviction).
+    cache_order: Vec<String>,
+    hits: u64,
+    misses: u64,
+}
+
+impl Session {
+    pub fn new(engine: Box<dyn Engine>) -> Self {
+        Session {
+            engine,
+            cache: HashMap::new(),
+            cache_order: Vec::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// f64 golden reference session.
+    pub fn golden() -> Self {
+        Session::new(Box::new(GoldenEngine::default()))
+    }
+
+    /// Cycle-accurate simulator session.
+    pub fn fgp_sim(config: FgpConfig) -> Self {
+        Session::new(Box::new(FgpSimEngine::new(config)))
+    }
+
+    /// PJRT/XLA session.
+    pub fn xla(rt: RuntimeClient) -> Self {
+        Session::new(Box::new(XlaEngine::new(rt)))
+    }
+
+    pub fn engine_kind(&self) -> EngineKind {
+        self.engine.kind()
+    }
+
+    /// Device dimension, when the engine has one.
+    pub fn device_n(&self) -> Option<usize> {
+        self.engine.device_n()
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        CacheStats { hits: self.hits, misses: self.misses, programs: self.cache.len() }
+    }
+
+    /// Run a workload end to end.
+    pub fn run<W: Workload + ?Sized>(&mut self, w: &W) -> Result<RunReport<W::Outcome>> {
+        if let Some(dn) = self.engine.device_n() {
+            if w.n() != dn {
+                bail!(
+                    "workload '{}' has n={} but the device is configured for n={}",
+                    w.name(),
+                    w.n(),
+                    dn
+                );
+            }
+        }
+        let (graph, schedule) = w.model()?;
+        let opts = w.compile_options();
+        let inputs = w.inputs(&graph, &schedule)?;
+        let d = self
+            .dispatch(&graph, &schedule, &inputs, &opts)
+            .with_context(|| format!("running workload '{}'", w.name()))?;
+        let outcome = w.outcome(&d.exec)?;
+        let quality = w.quality(&outcome);
+        Ok(RunReport {
+            outcome,
+            quality,
+            cycles: d.exec.stats.cycles,
+            sections: d.exec.stats.sections,
+            cycles_per_section: d.exec.stats.cycles / d.exec.stats.sections.max(1),
+            compile_stats: d.compile_stats,
+            engine: self.engine.kind(),
+            cached: d.cached,
+        })
+    }
+
+    /// Execute a raw model (graph + schedule + bound inputs) — the entry
+    /// point the coordinator routes [`WorkloadRequest`]s through.
+    ///
+    /// [`WorkloadRequest`]: crate::coordinator::backend::WorkloadRequest
+    pub fn dispatch(
+        &mut self,
+        graph: &FactorGraph,
+        schedule: &Schedule,
+        inputs: &HashMap<MsgId, GaussMessage>,
+        opts: &CompileOptions,
+    ) -> Result<Dispatch> {
+        if let Some(dn) = self.engine.device_n() {
+            if let Some(e) = graph.edges.iter().find(|e| e.dim != dn) {
+                bail!(
+                    "graph edge '{}' has dim {} but the device is configured for n={}",
+                    e.label,
+                    e.dim,
+                    dn
+                );
+            }
+        }
+        for (mid, eid) in &schedule.inputs {
+            if !inputs.contains_key(mid) {
+                bail!("no input bound for edge '{}'", graph.edges[eid.0].label);
+            }
+        }
+        let (program, compile_stats, cached) = if self.engine.needs_program() {
+            let (p, cached) = self.lookup_or_compile(graph, schedule, opts)?;
+            let stats = p.stats;
+            (Some(p), Some(stats), cached)
+        } else {
+            (None, None, false)
+        };
+        let exec = self.engine.execute(graph, schedule, program.as_ref(), inputs)?;
+        Ok(Dispatch { exec, compile_stats, cached })
+    }
+
+    /// Compile (or fetch) the program for a model without executing it.
+    pub fn precompile(
+        &mut self,
+        graph: &FactorGraph,
+        schedule: &Schedule,
+        opts: &CompileOptions,
+    ) -> Result<Arc<CompiledProgram>> {
+        self.lookup_or_compile(graph, schedule, opts).map(|(p, _)| p)
+    }
+
+    /// Pre-seed the cache with an externally compiled program (farms
+    /// compile once on the control plane and install on every device).
+    pub fn install(
+        &mut self,
+        graph: &FactorGraph,
+        schedule: &Schedule,
+        opts: &CompileOptions,
+        program: Arc<CompiledProgram>,
+    ) {
+        let key = program_key(graph, schedule, opts);
+        self.insert_program(key, program);
+    }
+
+    fn insert_program(&mut self, key: String, program: Arc<CompiledProgram>) {
+        if self.cache.insert(key.clone(), program).is_none() {
+            if self.cache_order.len() >= MAX_CACHED_PROGRAMS {
+                let evicted = self.cache_order.remove(0);
+                self.cache.remove(&evicted);
+            }
+            self.cache_order.push(key);
+        }
+    }
+
+    fn lookup_or_compile(
+        &mut self,
+        graph: &FactorGraph,
+        schedule: &Schedule,
+        opts: &CompileOptions,
+    ) -> Result<(Arc<CompiledProgram>, bool)> {
+        let key = program_key(graph, schedule, opts);
+        if let Some(p) = self.cache.get(&key) {
+            self.hits += 1;
+            return Ok((Arc::clone(p), true));
+        }
+        let compiled = Arc::new(compile(graph, schedule, opts)?);
+        self.misses += 1;
+        self.insert_program(key, Arc::clone(&compiled));
+        Ok((compiled, false))
+    }
+}
+
+/// Structural signature of a model + compile options: everything that
+/// determines the compiled program, nothing that is data.
+fn program_key(graph: &FactorGraph, schedule: &Schedule, opts: &CompileOptions) -> String {
+    use std::fmt::Write;
+    let mut k = String::with_capacity(64 + 8 * graph.edges.len() + 12 * graph.nodes.len());
+    let _ = write!(
+        k,
+        "o{},{},{},{},{},{},{:?},{};",
+        opts.program_id,
+        opts.optimize_memory as u8,
+        opts.compress_loops as u8,
+        opts.pm_capacity,
+        opts.state_capacity,
+        opts.alloc.optimize as u8,
+        opts.alloc.policy,
+        opts.alloc.capacity,
+    );
+    for e in &graph.edges {
+        let _ = write!(
+            k,
+            "e{},{}{}{:?};",
+            e.dim,
+            e.is_input as u8,
+            e.is_output as u8,
+            e.stream_group
+        );
+    }
+    for g in &graph.state_stream_groups {
+        let _ = write!(k, "g{:?};", g);
+    }
+    for node in &graph.nodes {
+        let _ = match &node.kind {
+            NodeKind::Equality => write!(k, "q"),
+            NodeKind::Add => write!(k, "a"),
+            NodeKind::Multiply { a } => write!(k, "m{}", a.0),
+            NodeKind::CompoundObservation { a } => write!(k, "c{}", a.0),
+            NodeKind::CompoundEquality { a } => write!(k, "w{}", a.0),
+        };
+        for e in &node.inputs {
+            let _ = write!(k, ",{}", e.0);
+        }
+        let _ = write!(k, ">{};", node.output.0);
+    }
+    // the schedule is almost always the forward sweep of the graph, but
+    // Session::dispatch accepts caller-built schedules too — encode the
+    // step ops and their order so a reordered schedule is a different key
+    let _ = write!(k, "s{}", schedule.steps.len());
+    for step in &schedule.steps {
+        let _ = match &step.op {
+            StepOp::Equality { x, y } => write!(k, "E{},{}", x.0, y.0),
+            StepOp::Add { x, y } => write!(k, "A{},{}", x.0, y.0),
+            StepOp::Multiply { x, a } => write!(k, "M{},{}", x.0, a.0),
+            StepOp::CompoundObservation { x, y, a } => write!(k, "C{},{},{}", x.0, y.0, a.0),
+            StepOp::CompoundEquality { x, y, a } => write!(k, "W{},{},{}", x.0, y.0, a.0),
+        };
+        let _ = write!(k, ">{};", step.out.0);
+    }
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::workload::{bind_streamed, preload_id};
+    use crate::gmp::matrix::c64;
+    use crate::testutil::Rng;
+
+    /// The smallest workload: one compound-observation section.
+    struct MiniCn {
+        x: GaussMessage,
+        y: GaussMessage,
+        a: CMatrix,
+    }
+
+    impl Workload for MiniCn {
+        type Outcome = GaussMessage;
+
+        fn name(&self) -> &str {
+            "mini-cn"
+        }
+
+        fn n(&self) -> usize {
+            self.x.dim()
+        }
+
+        fn model(&self) -> Result<(FactorGraph, Schedule)> {
+            let mut g = FactorGraph::new();
+            g.rls_chain(self.n(), std::slice::from_ref(&self.a));
+            let s = Schedule::forward_sweep(&g);
+            Ok((g, s))
+        }
+
+        fn inputs(
+            &self,
+            graph: &FactorGraph,
+            schedule: &Schedule,
+        ) -> Result<HashMap<MsgId, GaussMessage>> {
+            let mut map = HashMap::new();
+            map.insert(preload_id(graph, schedule, "msg_prior")?, self.x.clone());
+            bind_streamed(graph, schedule, std::slice::from_ref(&self.y), &mut map)?;
+            Ok(map)
+        }
+
+        fn outcome(&self, exec: &Execution) -> Result<GaussMessage> {
+            exec.output().cloned()
+        }
+
+        fn quality(&self, outcome: &GaussMessage) -> f64 {
+            outcome.trace_cov()
+        }
+
+        fn tolerance(&self) -> f64 {
+            0.05
+        }
+    }
+
+    fn mini(rng: &mut Rng) -> MiniCn {
+        let n = 4;
+        MiniCn {
+            x: GaussMessage::new(
+                (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+                CMatrix::random_psd(rng, n, 1.0).scale(0.15),
+            ),
+            y: GaussMessage::new(
+                (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+                CMatrix::random_psd(rng, n, 1.0).scale(0.15),
+            ),
+            a: CMatrix::random(rng, n, n).scale(0.3),
+        }
+    }
+
+    #[test]
+    fn golden_session_matches_node_rule() {
+        let mut rng = Rng::new(1);
+        let w = mini(&mut rng);
+        let mut s = Session::golden();
+        let report = s.run(&w).unwrap();
+        let want = nodes::compound_observation(&w.x, &w.y, &w.a, false).unwrap();
+        assert!(report.outcome.dist(&want) < 1e-9);
+        assert_eq!(report.engine, EngineKind::Golden);
+        // golden never touches the program cache
+        assert_eq!(s.cache_stats(), CacheStats::default());
+    }
+
+    #[test]
+    fn fgp_session_tracks_golden_and_caches() {
+        let mut rng = Rng::new(2);
+        let mut golden = Session::golden();
+        let mut sim = Session::fgp_sim(FgpConfig::default());
+        for i in 0..4 {
+            let w = mini(&mut rng);
+            let g = golden.run(&w).unwrap();
+            let f = sim.run(&w).unwrap();
+            assert!(f.outcome.dist(&g.outcome) < 0.05, "iter {i}");
+            assert_eq!(f.cached, i > 0, "iter {i}");
+            assert!(f.cycles > 0);
+        }
+        let stats = sim.cache_stats();
+        assert_eq!((stats.hits, stats.misses, stats.programs), (3, 1, 1));
+    }
+
+    #[test]
+    fn size_mismatch_is_an_error_not_a_panic() {
+        let mut rng = Rng::new(3);
+        let n = 6;
+        let w = MiniCn {
+            x: GaussMessage::isotropic(n, 0.2),
+            y: GaussMessage::isotropic(n, 0.2),
+            a: CMatrix::random(&mut rng, n, n).scale(0.2),
+        };
+        let mut sim = Session::fgp_sim(FgpConfig::default()); // n = 4
+        let err = sim.run(&w).unwrap_err();
+        assert!(format!("{err:#}").contains("n=6"), "{err:#}");
+    }
+
+    #[test]
+    fn program_key_separates_shapes_and_options() {
+        let mut rng = Rng::new(4);
+        let shape = |sections: usize| {
+            let mut g = FactorGraph::new();
+            let a_list: Vec<CMatrix> =
+                (0..sections).map(|_| CMatrix::random(&mut rng, 4, 4)).collect();
+            g.rls_chain(4, &a_list);
+            let s = Schedule::forward_sweep(&g);
+            (g, s)
+        };
+        let (g2, s2) = shape(2);
+        let (g2b, s2b) = shape(2);
+        let (g3, s3) = shape(3);
+        let opts = CompileOptions::default();
+        // same shape, different data -> same key
+        assert_eq!(program_key(&g2, &s2, &opts), program_key(&g2b, &s2b, &opts));
+        assert_ne!(program_key(&g2, &s2, &opts), program_key(&g3, &s3, &opts));
+        let flat = CompileOptions { compress_loops: false, ..Default::default() };
+        assert_ne!(program_key(&g2, &s2, &opts), program_key(&g2, &s2, &flat));
+    }
+}

@@ -1,0 +1,156 @@
+//! The [`Workload`] trait: one description, every engine.
+//!
+//! A workload is the ForneyLab-style triple *model → data → outcome*:
+//! build a factor graph and schedule, bind host-side messages to the
+//! graph's input edges, and turn the raw execution result back into a
+//! typed, scoreable outcome. Engines never see application types and
+//! applications never see engine types; [`super::Session`] is the only
+//! meeting point.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::compiler::CompileOptions;
+use crate::fgp::RunStats;
+use crate::gmp::message::GaussMessage;
+use crate::gmp::{EdgeId, FactorGraph, MsgId, Schedule};
+
+/// Raw result of executing a workload's model on some engine: the
+/// messages on the graph's output edges plus device statistics (zero on
+/// engines that do not model cycles).
+#[derive(Clone, Debug)]
+pub struct Execution {
+    /// Output messages in schedule order: (virtual id, edge, message).
+    pub outputs: Vec<(MsgId, EdgeId, GaussMessage)>,
+    /// Device statistics (simulator runs only; zeros elsewhere).
+    pub stats: RunStats,
+}
+
+impl Execution {
+    /// The sole output message (errors if the graph has several or none).
+    pub fn output(&self) -> Result<&GaussMessage> {
+        match self.outputs.as_slice() {
+            [(_, _, msg)] => Ok(msg),
+            other => bail!("expected exactly one output edge, graph has {}", other.len()),
+        }
+    }
+
+    /// Output message on a specific edge.
+    pub fn output_at(&self, edge: EdgeId) -> Option<&GaussMessage> {
+        self.outputs.iter().find(|(_, e, _)| *e == edge).map(|(_, _, m)| m)
+    }
+}
+
+/// An application workload expressed as a factor-graph model plus data.
+///
+/// The contract every engine relies on:
+///
+/// 1. [`model`](Workload::model) builds the graph and schedule. Streamed
+///    inputs (edges/states in a stream group) are refilled per section by
+///    the engine from the same bindings, so long chains fit the device's
+///    64-kbit message memory.
+/// 2. [`inputs`](Workload::inputs) binds a message to **every** input
+///    edge of the schedule (preloaded and streamed alike, keyed by
+///    virtual message id). State matrices ride in the graph itself.
+/// 3. [`outcome`](Workload::outcome) interprets the output messages;
+///    [`quality`](Workload::quality) reduces an outcome to one
+///    lower-is-better number that [`tolerance`](Workload::tolerance)
+///    bounds across engines (the cross-engine conformance contract).
+pub trait Workload {
+    /// Typed result of one run.
+    type Outcome;
+
+    /// Short identifier (diagnostics, cache reports).
+    fn name(&self) -> &str;
+
+    /// Problem/state dimension (must match the device size).
+    fn n(&self) -> usize;
+
+    /// Build the factor graph and its message-update schedule.
+    fn model(&self) -> Result<(FactorGraph, Schedule)>;
+
+    /// Bind a message to every input edge of the schedule.
+    fn inputs(
+        &self,
+        graph: &FactorGraph,
+        schedule: &Schedule,
+    ) -> Result<HashMap<MsgId, GaussMessage>>;
+
+    /// Interpret the execution result.
+    fn outcome(&self, exec: &Execution) -> Result<Self::Outcome>;
+
+    /// Scalar quality metric, lower is better (e.g. relative MSE).
+    fn quality(&self, outcome: &Self::Outcome) -> f64;
+
+    /// Documented cross-engine slack: on any engine the quality must stay
+    /// within `golden_quality + tolerance()`.
+    fn tolerance(&self) -> f64;
+
+    /// Compiler options for program-based engines.
+    fn compile_options(&self) -> CompileOptions {
+        CompileOptions::default()
+    }
+}
+
+/// Split a schedule's input bindings into preloaded and streamed edges,
+/// the streamed half sorted into section order (virtual ids are assigned
+/// in graph-construction order, which is section order for every builder
+/// in this crate). Most [`Workload::inputs`] implementations start here.
+pub fn split_inputs(
+    graph: &FactorGraph,
+    schedule: &Schedule,
+) -> (Vec<(MsgId, EdgeId)>, Vec<(MsgId, EdgeId)>) {
+    let mut preloaded = Vec::new();
+    let mut streamed = Vec::new();
+    for (mid, eid) in &schedule.inputs {
+        if graph.edges[eid.0].stream_group.is_some() {
+            streamed.push((*mid, *eid));
+        } else {
+            preloaded.push((*mid, *eid));
+        }
+    }
+    streamed.sort_by_key(|(mid, _)| mid.0);
+    (preloaded, streamed)
+}
+
+/// Label of an edge (input-binding helper for `match`-by-label apps).
+pub fn edge_label<'g>(graph: &'g FactorGraph, eid: EdgeId) -> &'g str {
+    &graph.edges[eid.0].label
+}
+
+/// Bind `values` to the streamed inputs of a schedule in section order,
+/// erroring on a count mismatch.
+pub fn bind_streamed(
+    graph: &FactorGraph,
+    schedule: &Schedule,
+    values: &[GaussMessage],
+    map: &mut HashMap<MsgId, GaussMessage>,
+) -> Result<()> {
+    let (_, streamed) = split_inputs(graph, schedule);
+    if streamed.len() != values.len() {
+        bail!(
+            "workload supplies {} streamed messages but the graph has {} streamed input edges",
+            values.len(),
+            streamed.len()
+        );
+    }
+    for ((mid, _), v) in streamed.iter().zip(values) {
+        map.insert(*mid, v.clone());
+    }
+    Ok(())
+}
+
+/// Find the single preloaded input edge with the given label.
+pub fn preload_id(
+    graph: &FactorGraph,
+    schedule: &Schedule,
+    label: &str,
+) -> Result<MsgId> {
+    schedule
+        .inputs
+        .iter()
+        .find(|(_, eid)| graph.edges[eid.0].label == label)
+        .map(|(mid, _)| *mid)
+        .with_context(|| format!("graph has no input edge labelled '{label}'"))
+}

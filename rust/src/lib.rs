@@ -15,9 +15,10 @@
 //! ## Layer map (three-layer rust + JAX + Pallas architecture)
 //!
 //! * **L3 (this crate)** — the paper's contribution: [`fgp`] cycle-accurate
-//!   simulator, [`isa`] + [`compiler`], [`coordinator`] (the Fig. 5
-//!   "external processor" command protocol, request queue, batcher),
-//!   [`dsp`] baseline and [`model`] area/technology models.
+//!   simulator, [`isa`] + [`compiler`], [`engine`] (the unified
+//!   Workload/Engine/Session execution surface), [`coordinator`] (the
+//!   Fig. 5 "external processor" command protocol, request queue,
+//!   batcher), [`dsp`] baseline and [`model`] area/technology models.
 //! * **L2/L1 (python/, build-time only)** — the GMP compute graph in JAX
 //!   with fused Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt` and
 //!   executed from [`runtime`] via the PJRT C API. Python never runs on
@@ -25,16 +26,27 @@
 //!
 //! ## Quick start
 //!
-//! ```no_run
-//! use fgp_repro::gmp::matrix::CMatrix;
-//! use fgp_repro::apps::rls::RlsProblem;
-//! use fgp_repro::fgp::processor::Fgp;
+//! Every application is a [`engine::Workload`] (a factor-graph model plus
+//! host-side data) and every backend is an [`engine::Engine`] behind one
+//! [`engine::Session`] — the same `Session::run` call drives the f64
+//! golden rules, the cycle-accurate simulator, and the PJRT/XLA runtime.
 //!
-//! // Build the paper's Fig. 6 channel-estimation factor graph, compile it
-//! // to FGP assembler, and run it on the cycle-accurate simulator.
+//! ```no_run
+//! use fgp_repro::apps::rls::RlsProblem;
+//! use fgp_repro::engine::Session;
+//! use fgp_repro::fgp::FgpConfig;
+//!
+//! // The paper's Fig. 6 channel-estimation workload, compiled to FGP
+//! // assembler and run on the cycle-accurate simulator.
 //! let problem = RlsProblem::synthetic(4, 16, 0.01, 42);
-//! let outcome = problem.run_on_fgp().unwrap();
-//! println!("cycles/section = {}", outcome.cycles_per_section);
+//! let mut session = Session::fgp_sim(FgpConfig::default());
+//! let report = session.run(&problem).unwrap();
+//! println!("rel MSE = {}", report.quality);
+//! println!("cycles/section = {}", report.cycles_per_section);
+//!
+//! // Same workload, golden reference engine — same call.
+//! let reference = Session::golden().run(&problem).unwrap();
+//! assert!(report.quality < reference.quality + 0.2);
 //! ```
 
 pub mod apps;
@@ -42,6 +54,7 @@ pub mod benchutil;
 pub mod compiler;
 pub mod coordinator;
 pub mod dsp;
+pub mod engine;
 pub mod fixed;
 pub mod fgp;
 pub mod gmp;

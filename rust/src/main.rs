@@ -23,6 +23,7 @@ use fgp_repro::compiler::{compile, CompileOptions};
 use fgp_repro::coordinator::backend::{CnRequestData, GoldenBackend, XlaBatchBackend};
 use fgp_repro::coordinator::{BatchPolicy, CnServer, ServerConfig};
 use fgp_repro::dsp::C66xModel;
+use fgp_repro::engine::Session;
 use fgp_repro::fgp::TimingModel;
 use fgp_repro::gmp::matrix::{c64, CMatrix};
 use fgp_repro::gmp::message::GaussMessage;
@@ -206,11 +207,11 @@ fn cmd_run(args: &Args) -> Result<()> {
     let sigma2: f64 = args.get("sigma2", 0.02)?;
     let seed: u64 = args.get("seed", 2024)?;
     let p = RlsProblem::synthetic(paper::N, sections, sigma2, seed);
-    let golden = p.golden()?;
-    let fgp = p.run_on_fgp()?;
+    let golden = Session::golden().run(&p)?;
+    let fgp = Session::fgp_sim(fgp_repro::fgp::FgpConfig::default()).run(&p)?;
     println!("RLS channel estimation, {sections} sections, sigma2 {sigma2}:");
-    println!("  golden rel MSE: {:.5}", golden.rel_mse);
-    println!("  FGP    rel MSE: {:.5}", fgp.rel_mse);
+    println!("  golden rel MSE: {:.5}", golden.quality);
+    println!("  FGP    rel MSE: {:.5}", fgp.quality);
     println!("  cycles: {} ({} per section)", fgp.cycles, fgp.cycles_per_section);
     Ok(())
 }

@@ -1,59 +1,64 @@
 //! Integration: the application layer (RLS / Kalman / LMMSE / ToA) across
 //! engines — golden f64, the cycle-accurate simulator, and (when built)
-//! the XLA artifacts.
+//! the XLA artifacts — all through the same `Session::run` surface.
 
 use fgp_repro::apps::kalman::KalmanProblem;
 use fgp_repro::apps::lmmse::{ser_sweep, LmmseProblem};
 use fgp_repro::apps::rls::RlsProblem;
 use fgp_repro::apps::toa::ToaProblem;
-use fgp_repro::coordinator::backend::{FgpSimBackend, GoldenBackend};
+use fgp_repro::engine::Session;
 use fgp_repro::fgp::FgpConfig;
 
 #[test]
 fn rls_full_stack_consistency() {
     let p = RlsProblem::synthetic(4, 16, 0.02, 101);
-    let golden = p.golden().unwrap();
-    let fgp = p.run_on_fgp().unwrap();
-    assert!(golden.rel_mse < 0.1, "golden {}", golden.rel_mse);
-    assert!(fgp.rel_mse < 0.6, "fgp {}", fgp.rel_mse); // Q5.10 floor (E9)
-    // compile stats present when run through the device
+    let golden = Session::golden().run(&p).unwrap();
+    let fgp = Session::fgp_sim(FgpConfig::default()).run(&p).unwrap();
+    assert!(golden.quality < 0.1, "golden {}", golden.quality);
+    assert!(fgp.quality < 0.6, "fgp {}", fgp.quality); // Q5.10 floor (E9)
+    // compile stats present when run through the device, absent on golden
     let stats = fgp.compile_stats.unwrap();
     assert_eq!(stats.slots_optimized, 2);
+    assert!(golden.compile_stats.is_none());
 }
 
 #[test]
 fn rls_snr_ordering() {
     // lower noise -> better estimate (golden path)
-    let low = RlsProblem::synthetic(4, 32, 0.002, 7).golden().unwrap();
-    let high = RlsProblem::synthetic(4, 32, 0.2, 7).golden().unwrap();
-    assert!(low.rel_mse < high.rel_mse);
+    let mut golden = Session::golden();
+    let low = golden.run(&RlsProblem::synthetic(4, 32, 0.002, 7)).unwrap();
+    let high = golden.run(&RlsProblem::synthetic(4, 32, 0.2, 7)).unwrap();
+    assert!(low.quality < high.quality);
 }
 
 #[test]
 fn kalman_full_stack_consistency() {
     let p = KalmanProblem::synthetic(15, 11);
-    let golden = p.golden().unwrap();
-    let fgp = p.run_on_fgp().unwrap();
-    assert!(golden.pos_error < 0.3);
-    assert!(fgp.pos_error < golden.pos_error + 0.4);
+    let golden = Session::golden().run(&p).unwrap();
+    let fgp = Session::fgp_sim(FgpConfig::default()).run(&p).unwrap();
+    assert!(golden.quality < 0.3);
+    assert!(fgp.quality < golden.quality + 0.4);
 }
 
 #[test]
 fn lmmse_cross_engine_ser() {
-    let mut golden = GoldenBackend;
-    let mut sim = FgpSimBackend::new(FgpConfig::default()).unwrap();
+    let mut golden = Session::golden();
+    let mut sim = Session::fgp_sim(FgpConfig::default());
     let g = ser_sweep(&mut golden, 4, &[5.0, 15.0], 15).unwrap();
     let f = ser_sweep(&mut sim, 4, &[5.0, 15.0], 15).unwrap();
     // both engines improve with SNR and stay within a few % of each other
     assert!(g[1].1 <= g[0].1);
     assert!(f[1].1 <= f[0].1 + 0.02);
     assert!((g[1].1 - f[1].1).abs() < 0.1);
+    // 30 blocks, one program shape, one compile
+    let stats = sim.cache_stats();
+    assert_eq!((stats.misses, stats.hits), (1, 29));
 }
 
 #[test]
 fn lmmse_handles_zero_noise_block() {
     let p = LmmseProblem::synthetic(4, 1e-6, 3);
-    let o = p.run_on(&mut GoldenBackend).unwrap();
+    let o = Session::golden().run(&p).unwrap().outcome;
     assert_eq!(o.symbol_errors, 0);
     assert!(o.rel_mse < 1e-3);
 }
@@ -61,9 +66,8 @@ fn lmmse_handles_zero_noise_block() {
 #[test]
 fn toa_cross_engine() {
     let p = ToaProblem::synthetic(8, 1e-3, 13);
-    let g = p.run_on(&mut GoldenBackend, 2).unwrap();
-    let mut sim = FgpSimBackend::new(FgpConfig::default()).unwrap();
-    let f = p.run_on(&mut sim, 2).unwrap();
+    let g = p.run(&mut Session::golden(), 2).unwrap();
+    let f = p.run(&mut Session::fgp_sim(FgpConfig::default()), 2).unwrap();
     assert!(g.error < 0.05, "golden {}", g.error);
     assert!(f.error < 0.2, "sim {}", f.error);
 }
@@ -76,13 +80,16 @@ fn xla_rls_matches_golden_when_artifacts_present() {
         return;
     }
     let rt = fgp_repro::runtime::RuntimeClient::load(&artifacts).unwrap();
-    let p = RlsProblem::synthetic(rt.manifest.n, rt.manifest.sections, 0.02, 77);
-    let xla = p.run_on_xla(&rt).unwrap();
-    let golden = p.golden().unwrap();
+    let sections = rt.manifest.sections;
+    let n = rt.manifest.n;
+    let mut xla = Session::xla(rt);
+    let p = RlsProblem::synthetic(n, sections, 0.02, 77);
+    let x = xla.run(&p).unwrap();
+    let golden = Session::golden().run(&p).unwrap();
     assert!(
-        (xla.rel_mse - golden.rel_mse).abs() < 5e-3,
+        (x.quality - golden.quality).abs() < 5e-3,
         "xla {} vs golden {}",
-        xla.rel_mse,
-        golden.rel_mse
+        x.quality,
+        golden.quality
     );
 }

@@ -1,5 +1,6 @@
 //! Integration: the coordinator serving layer — concurrency, batching,
-//! shutdown, device protocol, and the XLA backend when available.
+//! workload-request routing, shutdown, device protocol, and the XLA
+//! backend when available.
 
 use std::sync::atomic::Ordering;
 use std::time::Duration;
@@ -80,9 +81,46 @@ fn server_shutdown_is_clean_with_live_clients() {
         CnServer::start(|| Ok(Box::new(GoldenBackend) as _), ServerConfig::default()).unwrap();
     let client = server.client(); // clone outlives the server
     server.shutdown();
-    // post-shutdown submissions fail gracefully
+    // post-shutdown submissions fail gracefully, with a typed error
     let mut rng = Rng::new(1);
-    assert!(client.update(request(&mut rng, 4)).is_err());
+    let err = client.update(request(&mut rng, 4)).unwrap_err();
+    assert!(
+        err.is::<fgp_repro::coordinator::ServerClosed>(),
+        "expected ServerClosed, got {err:#}"
+    );
+}
+
+#[test]
+fn fgp_sim_server_routes_workload_requests() {
+    use fgp_repro::apps::rls::RlsProblem;
+    use fgp_repro::coordinator::WorkloadRequest;
+    use fgp_repro::engine::Workload;
+
+    let server = CnServer::start(
+        || Ok(Box::new(FgpSimBackend::new(FgpConfig::default())?) as _),
+        ServerConfig::default(),
+    )
+    .unwrap();
+    let client = server.client();
+    // interleave CN updates (batched path) and chain workloads (program
+    // path) through the same queue
+    let mut rng = Rng::new(9);
+    for seed in 0..3 {
+        let cn = client.update(request(&mut rng, 4)).unwrap();
+        assert!(cn.dim() == 4);
+        let p = RlsProblem::synthetic(4, 8, 0.02, 60 + seed);
+        let exec = client
+            .run_workload(WorkloadRequest::from_workload(&p).unwrap())
+            .unwrap();
+        assert_eq!(exec.stats.sections, 8);
+        let outcome = p.outcome(&exec).unwrap();
+        assert!(outcome.rel_mse.is_finite());
+    }
+    assert_eq!(
+        client.metrics().completed.load(Ordering::Relaxed),
+        6
+    );
+    server.shutdown();
 }
 
 #[test]

@@ -1,0 +1,153 @@
+//! Cross-app conformance: every `Workload` runs on the golden engine and
+//! the FGP simulator **through the same `Session::run` call**, the
+//! fixed-point quality tracks golden within the app's documented
+//! tolerance, and the cycle accounting matches the timing model.
+
+use fgp_repro::apps::kalman::KalmanProblem;
+use fgp_repro::apps::lmmse::LmmseProblem;
+use fgp_repro::apps::receiver::{ReceiverEqualize, ReceiverProblem, ReceiverTraining};
+use fgp_repro::apps::rls::RlsProblem;
+use fgp_repro::apps::smoother::SmootherProblem;
+use fgp_repro::apps::toa::{ToaProblem, ToaSweep};
+use fgp_repro::engine::{EngineKind, RunReport, Session, Workload};
+use fgp_repro::fgp::FgpConfig;
+
+/// Run one workload on both engines and enforce the conformance
+/// contract: `quality_fgp <= quality_golden + tolerance`.
+fn conform<W: Workload>(w: &W) -> (RunReport<W::Outcome>, RunReport<W::Outcome>) {
+    let mut golden = Session::golden();
+    let mut sim = Session::fgp_sim(FgpConfig::default());
+    let g = golden.run(w).unwrap_or_else(|e| panic!("{} golden: {e:#}", w.name()));
+    let f = sim.run(w).unwrap_or_else(|e| panic!("{} fgp-sim: {e:#}", w.name()));
+    assert_eq!(g.engine, EngineKind::Golden);
+    assert_eq!(f.engine, EngineKind::FgpSim);
+    // golden has no cycle model; the device must account cycles
+    assert_eq!(g.cycles, 0, "{}", w.name());
+    assert!(f.cycles > 0, "{}", w.name());
+    assert!(
+        f.quality <= g.quality + w.tolerance(),
+        "{}: fgp quality {} vs golden {} (tolerance {})",
+        w.name(),
+        f.quality,
+        g.quality,
+        w.tolerance()
+    );
+    (g, f)
+}
+
+fn cn_cycles(n: usize) -> u64 {
+    FgpConfig::default().timing.compound_node_cycles(n)
+}
+
+#[test]
+fn rls_conforms_and_accounts_cycles() {
+    let p = RlsProblem::synthetic(4, 24, 0.02, 11);
+    let (_, f) = conform(&p);
+    // pure compound-node chain: S sections at the Table II CN rate
+    assert_eq!(f.sections, 24);
+    assert_eq!(f.cycles, cn_cycles(4) * 24);
+    assert_eq!(f.cycles_per_section, cn_cycles(4));
+}
+
+#[test]
+fn lmmse_conforms_and_accounts_cycles() {
+    let p = LmmseProblem::synthetic(4, 0.01, 23);
+    let (_, f) = conform(&p);
+    assert_eq!(f.sections, 1);
+    assert_eq!(f.cycles, cn_cycles(4));
+}
+
+#[test]
+fn kalman_conforms_with_constant_section_cost() {
+    let (_, f_short) = conform(&KalmanProblem::synthetic(10, 5));
+    let (_, f_long) = conform(&KalmanProblem::synthetic(20, 5));
+    // three store handshakes per time step
+    assert_eq!(f_short.sections, 30);
+    assert_eq!(f_long.sections, 60);
+    // the timing model is per-node: doubling the chain doubles the cycles
+    assert_eq!(f_short.cycles * 2, f_long.cycles);
+}
+
+#[test]
+fn toa_sweep_conforms_and_accounts_cycles() {
+    let p = ToaProblem::synthetic(6, 1e-3, 7);
+    let sweep = ToaSweep {
+        problem: &p,
+        belief: ToaProblem::initial_belief(4),
+        lin: (0.5, 0.5),
+    };
+    let (_, f) = conform(&sweep);
+    // one compound-node section per anchor
+    assert_eq!(f.sections, 6);
+    assert_eq!(f.cycles, cn_cycles(4) * 6);
+}
+
+#[test]
+fn smoother_conforms_on_device_sized_chains() {
+    let p = SmootherProblem::synthetic(8, 13);
+    let (g, f) = conform(&p);
+    // one store per node: 3T forward + (4T - 3) backward/marginal
+    assert_eq!(f.sections, 7 * 8 - 3);
+    // smoothing still beats filtering on both engines
+    assert!(g.outcome.smoother_rmse <= g.outcome.filter_rmse + 1e-9);
+}
+
+#[test]
+fn receiver_stages_conform() {
+    let p = ReceiverProblem::synthetic(4, 1, 24, 16, 0.005, 7);
+    let training = ReceiverTraining { problem: &p, frame: 0 };
+    let (_, f) = conform(&training);
+    // section 0 has no leakage node: 24 observations -> 24 + 23 stores
+    assert_eq!(f.sections, 24 + 23);
+
+    let frame = &p.frames[0];
+    let eq = ReceiverEqualize {
+        problem: &p,
+        h: p.channel.toeplitz(4),
+        rx_block: frame.rx_payload[..4].to_vec(),
+        tx_block: frame.payload[..4].to_vec(),
+    };
+    let (_, f) = conform(&eq);
+    assert_eq!(f.cycles, cn_cycles(4));
+}
+
+#[test]
+fn second_run_of_same_shape_skips_compile() {
+    let mut sim = Session::fgp_sim(FgpConfig::default());
+    let p = RlsProblem::synthetic(4, 16, 0.02, 3);
+    let first = sim.run(&p).unwrap();
+    assert!(!first.cached);
+    // same shape, fresh data: the program cache must serve the hit
+    let p2 = RlsProblem::synthetic(4, 16, 0.05, 99);
+    let second = sim.run(&p2).unwrap();
+    assert!(second.cached, "second run of the same shape must skip compile()");
+    let stats = sim.cache_stats();
+    assert_eq!((stats.misses, stats.hits, stats.programs), (1, 1, 1));
+    // a different shape is a miss again
+    let p3 = RlsProblem::synthetic(4, 8, 0.02, 3);
+    let third = sim.run(&p3).unwrap();
+    assert!(!third.cached);
+    assert_eq!(sim.cache_stats().misses, 2);
+}
+
+#[test]
+fn one_session_serves_every_app() {
+    // the §I promise, literally: one processor (session), every workload
+    let mut sim = Session::fgp_sim(FgpConfig::default());
+    let rls = RlsProblem::synthetic(4, 16, 0.02, 1);
+    let kalman = KalmanProblem::synthetic(10, 2);
+    let lmmse = LmmseProblem::synthetic(4, 0.01, 3);
+    let smoother = SmootherProblem::synthetic(8, 4);
+    assert!(sim.run(&rls).is_ok());
+    assert!(sim.run(&kalman).is_ok());
+    assert!(sim.run(&lmmse).is_ok());
+    assert!(sim.run(&smoother).is_ok());
+    let toa = ToaProblem::synthetic(6, 1e-3, 5);
+    assert!(toa.run(&mut sim, 2).is_ok());
+    let receiver = ReceiverProblem::synthetic(4, 1, 16, 8, 0.01, 6);
+    assert!(receiver.run(&mut sim).is_ok());
+    // six app families, each shape compiled exactly once
+    let stats = sim.cache_stats();
+    assert!(stats.hits > 0);
+    assert!(stats.programs >= 5, "{stats:?}");
+}
