@@ -23,7 +23,6 @@ use fgp_repro::coordinator::backend::{
 };
 use fgp_repro::coordinator::{BatchPolicy, CnServer, FgpDevice, ServerConfig};
 use fgp_repro::engine::Workload;
-use fgp_repro::fgp::processor::{Command, Reply};
 use fgp_repro::fgp::FgpConfig;
 use fgp_repro::gmp::matrix::{c64, CMatrix};
 use fgp_repro::gmp::message::GaussMessage;
@@ -109,18 +108,14 @@ fn main() -> anyhow::Result<()> {
     server.shutdown();
 
     // --- raw command protocol against the cycle-accurate device
+    // (typed helpers: protocol mismatches are errors, not match arms)
     println!("\n=== Fig. 5 command protocol (cycle-accurate device) ===");
     let dev = FgpDevice::start(FgpConfig::default());
-    match dev.command(Command::Status) {
-        Reply::Status { state, cycles } => println!("status: {state:?}, {cycles} cycles"),
-        other => println!("unexpected: {other:?}"),
-    }
-    let msg = GaussMessage::isotropic(n, 0.5);
-    assert!(matches!(dev.command(Command::WriteMessage { slot: 0, msg }), Reply::Ok));
-    match dev.command(Command::ReadMessage { slot: 0 }) {
-        Reply::Message(m) => println!("slot 0 round-trip trace: {:.3}", m.trace_cov()),
-        other => println!("unexpected: {other:?}"),
-    }
+    let (state, cycles) = dev.status()?;
+    println!("status: {state:?}, {cycles} cycles");
+    dev.write_message(0, GaussMessage::isotropic(n, 0.5))?;
+    let m = dev.read_message(0)?;
+    println!("slot 0 round-trip trace: {:.3}", m.trace_cov());
     drop(dev);
 
     println!("\nfgp_server OK");

@@ -1,0 +1,153 @@
+//! E12 (extension) — loopy-GBP convergence and throughput.
+//!
+//! Three axes:
+//!   1. convergence: iterations / final belief delta vs damping η on a
+//!      cyclic grid (golden engine — pure algorithm behaviour);
+//!   2. policy economy: synchronous rounds vs residual-priority
+//!      ("wildfire") scheduling, in messages sent to convergence;
+//!   3. device throughput: simulated cycles per GBP round on the
+//!      cycle-accurate FGP, and the farm's sharding headroom
+//!      (cycles/round ÷ devices).
+//!
+//! Run: `cargo bench --bench gbp_convergence`
+//! CI smoke (tiny grid, few iterations): add `-- --smoke`.
+
+use fgp_repro::apps::grid::GridDenoise;
+use fgp_repro::benchutil::{banner, fmt_dur};
+use fgp_repro::coordinator::{FgpFarm, RoutePolicy};
+use fgp_repro::engine::Session;
+use fgp_repro::fgp::FgpConfig;
+use fgp_repro::gbp::{
+    ConvergenceCriteria, FarmExecutor, GbpOptions, GbpSolver, IterationPolicy,
+};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    // smoke sizes are chosen so the undamped run still CONVERGES —
+    // that assertion (below) is what makes this a CI regression gate,
+    // not just a table printer
+    let (rows, cols, max_iters, tol) =
+        if smoke { (2, 2, 20, 1e-3) } else { (4, 4, 120, 1e-6) };
+    let p = GridDenoise::synthetic(rows, cols, 0.04, 42);
+    println!(
+        "loopy GBP on a {rows}x{cols} grid ({} vars, {} factors){}",
+        p.rows * p.cols,
+        p.model()?.num_factors(),
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    banner("convergence vs damping (golden engine, synchronous rounds)");
+    println!(
+        "{:>6} {:>8} {:>12} {:>14} {:>10}",
+        "eta", "iters", "stop", "final delta", "wall"
+    );
+    for eta in [0.0, 0.2, 0.4, 0.7] {
+        let opts = GbpOptions {
+            policy: IterationPolicy::Synchronous { eta_damping: eta },
+            criteria: ConvergenceCriteria { tol, max_iters, divergence: 1e3 },
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let out = p.run(&mut Session::golden(), opts)?;
+        println!(
+            "{eta:>6.1} {:>8} {:>12} {:>14.2e} {:>10}",
+            out.report.iterations,
+            format!("{:?}", out.report.stop),
+            out.report.final_delta,
+            fmt_dur(t0.elapsed())
+        );
+        // regression gate: no damping level may diverge, and the
+        // undamped run must actually converge on this grid
+        if out.report.stop == fgp_repro::gbp::StopReason::Diverged {
+            anyhow::bail!("GBP diverged at eta={eta} (delta {})", out.report.final_delta);
+        }
+        if eta == 0.0 && !out.report.converged() {
+            anyhow::bail!(
+                "undamped GBP no longer converges on the {rows}x{cols} grid: {:?} after {} iters",
+                out.report.stop,
+                out.report.iterations
+            );
+        }
+    }
+
+    banner("policy economy (engine work to convergence, golden)");
+    println!(
+        "{:>12} {:>10} {:>10} {:>10} {:>12}",
+        "policy", "iters", "messages", "beliefs", "stop"
+    );
+    let sync_opts = GbpOptions {
+        criteria: ConvergenceCriteria { tol, max_iters, divergence: 1e3 },
+        ..Default::default()
+    };
+    let out = p.run(&mut Session::golden(), sync_opts)?;
+    println!(
+        "{:>12} {:>10} {:>10} {:>10} {:>12}",
+        "sync",
+        out.report.iterations,
+        out.report.messages_sent,
+        out.report.beliefs_computed,
+        format!("{:?}", out.report.stop)
+    );
+    let wild_opts = GbpOptions {
+        policy: IterationPolicy::Residual { batch: 6, eta_damping: 0.0 },
+        criteria: ConvergenceCriteria {
+            tol,
+            max_iters: max_iters * 10,
+            divergence: 1e3,
+        },
+        ..Default::default()
+    };
+    let out = p.run(&mut Session::golden(), wild_opts)?;
+    println!(
+        "{:>12} {:>10} {:>10} {:>10} {:>12}",
+        "wildfire",
+        out.report.iterations,
+        out.report.messages_sent,
+        out.report.beliefs_computed,
+        format!("{:?}", out.report.stop)
+    );
+
+    banner("device throughput (cycle-accurate FGP, one synchronous round)");
+    let device_opts = GbpOptions {
+        policy: IterationPolicy::Synchronous { eta_damping: 0.0 },
+        criteria: ConvergenceCriteria { tol: 0.0, max_iters: 1, divergence: 1e9 },
+        init_var: 4.0,
+    };
+    let model = p.model()?;
+    let edges = fgp_repro::gbp::directed_edges(&model).len();
+    let mut solver = GbpSolver::new(model.clone(), device_opts)?;
+    let mut sim = Session::fgp_sim(FgpConfig::default());
+    let t0 = Instant::now();
+    let _ = solver.run(&mut sim)?;
+    let wall = t0.elapsed();
+    // second solver, same session: every program shape is now cached
+    let mut warm = GbpSolver::new(model.clone(), device_opts)?;
+    let t0 = Instant::now();
+    let _ = warm.run(&mut sim)?;
+    let warm_wall = t0.elapsed();
+    let stats = sim.cache_stats();
+    println!("directed edges/round: {edges}, messages sent: {}", solver.messages_sent());
+    println!(
+        "cold round {} -> warm round {} (program cache: {} hits / {} misses / {} resident)",
+        fmt_dur(wall),
+        fmt_dur(warm_wall),
+        stats.hits,
+        stats.misses,
+        stats.programs
+    );
+
+    banner("farm sharding (3 devices, round-robin)");
+    let farm = FgpFarm::start(3, FgpConfig::default(), RoutePolicy::RoundRobin)?;
+    let mut sharded = GbpSolver::new(model, device_opts)?;
+    let t0 = Instant::now();
+    let _ = sharded.run(&mut FarmExecutor { farm: &farm })?;
+    println!(
+        "sharded round {} across {:?} device-cycles",
+        fmt_dur(t0.elapsed()),
+        farm.load_profile()
+    );
+
+    println!("\ngbp_convergence OK");
+    Ok(())
+}

@@ -17,15 +17,21 @@
 //! * [`receiver`] — the §III multi-program baseband receiver, two
 //!   workload shapes alternating through one session;
 //! * [`channel`] — synthetic channels, constellations and AWGN sources
-//!   (the "received symbols" the silicon would get from a radio).
+//!   (the "received symbols" the silicon would get from a radio);
+//! * [`grid`] — 2-D grid smoothing/denoising via loopy GBP
+//!   ([`crate::gbp`]): a cyclic Gaussian MRF no schedule can serve;
+//! * [`posechain`] — pose-loop estimation with a loop-closure factor,
+//!   the SLAM-style cyclic workload, also via [`crate::gbp`].
 //!
 //! All workloads respect the device's input-scaling contract (see
 //! [`crate::fgp`]): unit-magnitude-bounded operands, well-conditioned
 //! covariances.
 
 pub mod channel;
+pub mod grid;
 pub mod kalman;
 pub mod lmmse;
+pub mod posechain;
 pub mod receiver;
 pub mod rls;
 pub mod smoother;

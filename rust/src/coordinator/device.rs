@@ -6,12 +6,36 @@
 //! that request/reply interface over channels, as if the simulator were
 //! a memory-mapped co-processor. Used by `examples/fgp_server.rs` and by
 //! host-integration tests.
+//!
+//! Protocol failures are **typed** ([`ProtocolError`]), mirroring the
+//! serving path's [`super::ServerClosed`]: a dead device thread, an
+//! error status from the device, or a reply variant that does not match
+//! the issued command all surface as `Err`, never as a panic in the
+//! caller's `match` arms.
 
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::thread::JoinHandle;
 
-use crate::fgp::processor::{Command, Reply};
+use crate::fgp::processor::{Command, FsmState, Reply, RunStats};
 use crate::fgp::{Fgp, FgpConfig};
+use crate::gmp::matrix::CMatrix;
+use crate::gmp::message::GaussMessage;
+use crate::isa::MemoryImage;
+
+/// Typed Fig. 5 protocol errors. Everything a host can observe going
+/// wrong on the command channel, as data.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum ProtocolError {
+    /// The device replied `Reply::Error` (bad slot, missing program, ...).
+    #[error("device error reply: {0}")]
+    Device(String),
+    /// The reply variant does not match the issued command.
+    #[error("unexpected reply to {command}: {reply}")]
+    UnexpectedReply { command: &'static str, reply: String },
+    /// The device thread is gone (stopped, or it died mid-command).
+    #[error("device closed")]
+    DeviceClosed,
+}
 
 enum DeviceMsg {
     Cmd(Command, Sender<Reply>),
@@ -47,13 +71,80 @@ impl FgpDevice {
         FgpDevice { tx, handle: Some(handle) }
     }
 
-    /// Issue a command and wait for the status reply.
-    pub fn command(&self, cmd: Command) -> Reply {
+    /// Issue a raw command and wait for the status reply. Channel
+    /// failures (the device thread is gone) surface as
+    /// [`ProtocolError::DeviceClosed`]; the reply itself is returned
+    /// unconverted — use the typed helpers below for `match`-free hosts.
+    pub fn command(&self, cmd: Command) -> Result<Reply, ProtocolError> {
         let (rtx, rrx) = mpsc::channel();
         if self.tx.send(DeviceMsg::Cmd(cmd, rtx)).is_err() {
-            return Reply::Error("device stopped".into());
+            return Err(ProtocolError::DeviceClosed);
         }
-        rrx.recv().unwrap_or_else(|_| Reply::Error("device died".into()))
+        rrx.recv().map_err(|_| ProtocolError::DeviceClosed)
+    }
+
+    /// Issue a command expecting a specific reply shape.
+    fn expect<T>(
+        &self,
+        cmd: Command,
+        name: &'static str,
+        pick: impl FnOnce(Reply) -> Result<T, Reply>,
+    ) -> Result<T, ProtocolError> {
+        match self.command(cmd)? {
+            Reply::Error(e) => Err(ProtocolError::Device(e)),
+            other => pick(other).map_err(|r| ProtocolError::UnexpectedReply {
+                command: name,
+                reply: format!("{r:?}"),
+            }),
+        }
+    }
+
+    /// Query the FSM state and lifetime cycle counter.
+    pub fn status(&self) -> Result<(FsmState, u64), ProtocolError> {
+        self.expect(Command::Status, "Status", |r| match r {
+            Reply::Status { state, cycles } => Ok((state, cycles)),
+            other => Err(other),
+        })
+    }
+
+    /// Load a program image into the PM; returns the instruction count.
+    pub fn load_program(&self, image: MemoryImage) -> Result<usize, ProtocolError> {
+        self.expect(Command::LoadProgram(image), "LoadProgram", |r| match r {
+            Reply::Loaded { instrs } => Ok(instrs),
+            other => Err(other),
+        })
+    }
+
+    /// Start program `id` and wait for its run statistics.
+    pub fn start_program(&self, id: u8) -> Result<RunStats, ProtocolError> {
+        self.expect(Command::StartProgram { id }, "StartProgram", |r| match r {
+            Reply::Finished(stats) => Ok(stats),
+            other => Err(other),
+        })
+    }
+
+    /// Write a message into message memory (Data-in port).
+    pub fn write_message(&self, slot: u8, msg: GaussMessage) -> Result<(), ProtocolError> {
+        self.expect(Command::WriteMessage { slot, msg }, "WriteMessage", |r| match r {
+            Reply::Ok => Ok(()),
+            other => Err(other),
+        })
+    }
+
+    /// Write a state matrix (Mem-A port).
+    pub fn write_state(&self, slot: u8, a: CMatrix) -> Result<(), ProtocolError> {
+        self.expect(Command::WriteState { slot, a }, "WriteState", |r| match r {
+            Reply::Ok => Ok(()),
+            other => Err(other),
+        })
+    }
+
+    /// Read a message back (Data-out port).
+    pub fn read_message(&self, slot: u8) -> Result<GaussMessage, ProtocolError> {
+        self.expect(Command::ReadMessage { slot }, "ReadMessage", |r| match r {
+            Reply::Message(m) => Ok(m),
+            other => Err(other),
+        })
     }
 
     /// Stop the device and recover the simulator (for inspection).
@@ -75,19 +166,13 @@ impl Drop for FgpDevice {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fgp::processor::FsmState;
-    use crate::gmp::message::GaussMessage;
 
     #[test]
     fn boots_and_replies_to_status() {
         let dev = FgpDevice::start(FgpConfig::default());
-        match dev.command(Command::Status) {
-            Reply::Status { state, cycles } => {
-                assert_eq!(state, FsmState::Idle);
-                assert_eq!(cycles, 0);
-            }
-            other => panic!("unexpected {other:?}"),
-        }
+        let (state, cycles) = dev.status().unwrap();
+        assert_eq!(state, FsmState::Idle);
+        assert_eq!(cycles, 0);
         assert!(dev.stop().is_some());
     }
 
@@ -95,22 +180,55 @@ mod tests {
     fn write_read_roundtrip_through_protocol() {
         let dev = FgpDevice::start(FgpConfig::default());
         let msg = GaussMessage::isotropic(4, 2.0);
-        match dev.command(Command::WriteMessage { slot: 3, msg: msg.clone() }) {
-            Reply::Ok => {}
-            other => panic!("unexpected {other:?}"),
-        }
-        match dev.command(Command::ReadMessage { slot: 3 }) {
-            Reply::Message(m) => assert!(m.dist(&msg) < 1e-2),
-            other => panic!("unexpected {other:?}"),
-        }
+        dev.write_message(3, msg.clone()).unwrap();
+        let m = dev.read_message(3).unwrap();
+        assert!(m.dist(&msg) < 1e-2);
     }
 
     #[test]
-    fn bad_commands_reply_errors() {
+    fn bad_commands_are_typed_device_errors() {
         let dev = FgpDevice::start(FgpConfig::default());
-        match dev.command(Command::StartProgram { id: 42 }) {
-            Reply::Error(e) => assert!(e.contains("no program")),
-            other => panic!("unexpected {other:?}"),
+        match dev.start_program(42) {
+            Err(ProtocolError::Device(e)) => assert!(e.contains("no program")),
+            other => panic!("expected Device error, got {other:?}"),
+        }
+        match dev.write_message(200, GaussMessage::isotropic(4, 1.0)) {
+            Err(ProtocolError::Device(e)) => assert!(e.contains("out of range")),
+            other => panic!("expected Device error, got {other:?}"),
+        }
+        // the device keeps serving after error replies
+        assert!(dev.status().is_ok());
+    }
+
+    #[test]
+    fn stopped_device_surfaces_device_closed() {
+        let mut dev = FgpDevice::start(FgpConfig::default());
+        // swap the command channel for one nobody listens on, as if the
+        // device thread were gone: every command must error, typed
+        let (tx, _rx) = mpsc::channel();
+        drop(_rx);
+        dev.tx = tx;
+        assert_eq!(dev.status(), Err(ProtocolError::DeviceClosed));
+        assert_eq!(
+            dev.command(Command::Status).unwrap_err(),
+            ProtocolError::DeviceClosed
+        );
+    }
+
+    #[test]
+    fn mismatched_reply_is_a_typed_protocol_error() {
+        // drive `expect` with a picker that rejects everything: any OK
+        // reply must come back as UnexpectedReply, not a panic
+        let dev = FgpDevice::start(FgpConfig::default());
+        let err = dev
+            .expect(Command::Status, "Status", |r| -> Result<(), Reply> { Err(r) })
+            .unwrap_err();
+        match err {
+            ProtocolError::UnexpectedReply { command, reply } => {
+                assert_eq!(command, "Status");
+                assert!(reply.contains("Status"), "{reply}");
+            }
+            other => panic!("expected UnexpectedReply, got {other:?}"),
         }
     }
 }

@@ -33,7 +33,7 @@ pub mod server;
 
 pub use backend::{Backend, BackendKind, CnRequestData, WorkloadRequest};
 pub use batcher::{BatchPolicy, Batcher};
-pub use device::FgpDevice;
+pub use device::{FgpDevice, ProtocolError};
 pub use farm::{FgpFarm, RoutePolicy};
 pub use metrics::{Histogram, Metrics};
 pub use server::{CnClient, CnServer, ServerClosed, ServerConfig};

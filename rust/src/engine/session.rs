@@ -501,18 +501,23 @@ pub struct Dispatch {
     pub cached: bool,
 }
 
-/// Upper bound on resident compiled programs per session. The serving
-/// layer forwards arbitrary client workload shapes into the cache, so it
-/// must not grow without bound; on overflow the oldest-inserted entry is
-/// evicted (FIFO — a shape seen again later simply recompiles).
-const MAX_CACHED_PROGRAMS: usize = 128;
+/// Default upper bound on resident compiled programs per session. The
+/// serving layer forwards arbitrary client workload shapes into the
+/// cache, so it must not grow without bound; on overflow the
+/// **least-recently-used** entry is evicted (a shape seen again later
+/// simply recompiles). A hot serving shape that fires on every request
+/// therefore survives any number of one-off shapes passing through.
+const DEFAULT_CACHE_CAPACITY: usize = 128;
 
 /// One engine + one program cache = the crate's execution surface.
 pub struct Session {
     engine: Box<dyn Engine>,
     cache: HashMap<String, Arc<CompiledProgram>>,
-    /// Insertion order of cache keys (FIFO eviction).
+    /// Cache keys from least- to most-recently used (LRU eviction:
+    /// hits and re-inserts move a key to the back, overflow pops the
+    /// front). Linear scans are fine at ≤ `cache_capacity` entries.
     cache_order: Vec<String>,
+    cache_capacity: usize,
     hits: u64,
     misses: u64,
 }
@@ -523,8 +528,19 @@ impl Session {
             engine,
             cache: HashMap::new(),
             cache_order: Vec::new(),
+            cache_capacity: DEFAULT_CACHE_CAPACITY,
             hits: 0,
             misses: 0,
+        }
+    }
+
+    /// Bound the compiled-program cache (deployment tuning and eviction
+    /// tests). Shrinking below the resident count evicts LRU-first.
+    pub fn set_cache_capacity(&mut self, capacity: usize) {
+        self.cache_capacity = capacity.max(1);
+        while self.cache_order.len() > self.cache_capacity {
+            let evicted = self.cache_order.remove(0);
+            self.cache.remove(&evicted);
         }
     }
 
@@ -648,14 +664,25 @@ impl Session {
         self.insert_program(key, program);
     }
 
-    fn insert_program(&mut self, key: String, program: Arc<CompiledProgram>) {
-        if self.cache.insert(key.clone(), program).is_none() {
-            if self.cache_order.len() >= MAX_CACHED_PROGRAMS {
-                let evicted = self.cache_order.remove(0);
-                self.cache.remove(&evicted);
-            }
-            self.cache_order.push(key);
+    /// Move `key` to the most-recently-used end of the order list.
+    fn touch(&mut self, key: &str) {
+        if let Some(pos) = self.cache_order.iter().position(|k| k == key) {
+            let k = self.cache_order.remove(pos);
+            self.cache_order.push(k);
         }
+    }
+
+    fn insert_program(&mut self, key: String, program: Arc<CompiledProgram>) {
+        if self.cache.insert(key.clone(), program).is_some() {
+            // re-install of a resident shape counts as a use
+            self.touch(&key);
+            return;
+        }
+        while self.cache_order.len() >= self.cache_capacity {
+            let evicted = self.cache_order.remove(0);
+            self.cache.remove(&evicted);
+        }
+        self.cache_order.push(key);
     }
 
     fn lookup_or_compile(
@@ -666,8 +693,10 @@ impl Session {
     ) -> Result<(Arc<CompiledProgram>, bool)> {
         let key = program_key(graph, schedule, opts);
         if let Some(p) = self.cache.get(&key) {
+            let p = Arc::clone(p);
             self.hits += 1;
-            return Ok((Arc::clone(p), true));
+            self.touch(&key);
+            return Ok((p, true));
         }
         let compiled = Arc::new(compile(graph, schedule, opts)?);
         self.misses += 1;
@@ -849,6 +878,84 @@ mod tests {
         let mut sim = Session::fgp_sim(FgpConfig::default()); // n = 4
         let err = sim.run(&w).unwrap_err();
         assert!(format!("{err:#}").contains("n=6"), "{err:#}");
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used_not_oldest_inserted() {
+        let shape = |sections: usize, seed: u64| {
+            let mut rng = Rng::new(seed);
+            let mut g = FactorGraph::new();
+            let a_list: Vec<CMatrix> =
+                (0..sections).map(|_| CMatrix::random(&mut rng, 4, 4)).collect();
+            g.rls_chain(4, &a_list);
+            let s = Schedule::forward_sweep(&g);
+            (g, s)
+        };
+        let opts = CompileOptions::default();
+        let mut s = Session::fgp_sim(FgpConfig::default());
+        s.set_cache_capacity(2);
+        let (ga, sa) = shape(1, 1);
+        let (gb, sb) = shape(2, 2);
+        let (gc, sc) = shape(3, 3);
+        s.precompile(&ga, &sa, &opts).unwrap(); // miss: [A]
+        s.precompile(&gb, &sb, &opts).unwrap(); // miss: [A, B]
+        s.precompile(&ga, &sa, &opts).unwrap(); // hit:  [B, A]
+        // under FIFO the next insert would evict A (oldest inserted);
+        // under LRU it must evict B (least recently used)
+        s.precompile(&gc, &sc, &opts).unwrap(); // miss: [A, C]
+        s.precompile(&ga, &sa, &opts).unwrap(); // must still be a hit
+        let stats = s.cache_stats();
+        assert_eq!((stats.hits, stats.misses, stats.programs), (2, 3, 2), "{stats:?}");
+        s.precompile(&gb, &sb, &opts).unwrap(); // B was evicted: miss again
+        let stats = s.cache_stats();
+        assert_eq!((stats.hits, stats.misses, stats.programs), (2, 4, 2), "{stats:?}");
+    }
+
+    #[test]
+    fn shrinking_capacity_evicts_lru_first() {
+        let shape = |sections: usize| {
+            let mut rng = Rng::new(sections as u64);
+            let mut g = FactorGraph::new();
+            let a_list: Vec<CMatrix> =
+                (0..sections).map(|_| CMatrix::random(&mut rng, 4, 4)).collect();
+            g.rls_chain(4, &a_list);
+            let s = Schedule::forward_sweep(&g);
+            (g, s)
+        };
+        let opts = CompileOptions::default();
+        let mut s = Session::fgp_sim(FgpConfig::default());
+        let (g1, s1) = shape(1);
+        let (g2, s2) = shape(2);
+        let (g3, s3) = shape(3);
+        s.precompile(&g1, &s1, &opts).unwrap();
+        s.precompile(&g2, &s2, &opts).unwrap();
+        s.precompile(&g3, &s3, &opts).unwrap();
+        s.precompile(&g1, &s1, &opts).unwrap(); // [2, 3, 1] by recency
+        s.set_cache_capacity(1);
+        assert_eq!(s.cache_stats().programs, 1);
+        s.precompile(&g1, &s1, &opts).unwrap(); // the survivor is the MRU
+        assert_eq!(s.cache_stats().hits, 2);
+    }
+
+    #[test]
+    fn malformed_schedule_surfaces_typed_error_through_dispatch() {
+        use crate::gmp::ScheduleError;
+        let mut rng = Rng::new(5);
+        let w = mini(&mut rng);
+        let (graph, mut schedule) = w.model().unwrap();
+        let inputs = w.inputs(&graph, &schedule).unwrap();
+        // corrupt the schedule: the step now consumes a message id that
+        // nothing defines (caller-built schedules reach dispatch raw)
+        if let StepOp::CompoundObservation { x, .. } = &mut schedule.steps[0].op {
+            *x = MsgId(99);
+        }
+        let err = Session::golden()
+            .dispatch(&graph, &schedule, &inputs, &CompileOptions::default())
+            .unwrap_err();
+        let sched_err = err
+            .downcast_ref::<ScheduleError>()
+            .unwrap_or_else(|| panic!("want ScheduleError in the chain, got {err:#}"));
+        assert_eq!(*sched_err, ScheduleError::UndefinedMessage { step: 0, msg: 99 });
     }
 
     #[test]

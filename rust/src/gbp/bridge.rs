@@ -1,0 +1,484 @@
+//! The execution bridge: GBP inner updates as engine workloads.
+//!
+//! Loopy GBP's inner kernel — fuse a cavity product, push it through a
+//! linear-Gaussian factor — is exactly the node vocabulary the paper's
+//! device executes: the moment-form Gaussian product is a compound
+//! observation with an identity state (the trick
+//! [`crate::apps::smoother`] already uses for marginal fusion),
+//! observation conditioning is a compound observation with the factor's
+//! `C`, and the pairwise transform is a multiplier plus an adder. Each
+//! directed-edge update therefore lowers to a small scheduled
+//! [`FactorGraph`] and ships as a [`WorkloadRequest`] through **any**
+//! engine: the f64 golden rules, the cycle-accurate FGP simulator, the
+//! XLA runtime, or a whole [`FgpFarm`] sharding the round across
+//! devices.
+//!
+//! Requests are self-contained and deterministic, so a round sharded
+//! over N devices produces **bitwise-identical** messages to the same
+//! round on one device — the property
+//! `rust/tests/integration_gbp.rs` pins.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{FgpFarm, WorkloadRequest};
+use crate::engine::Session;
+use crate::gmp::matrix::{c64, CMatrix};
+use crate::gmp::message::GaussMessage;
+use crate::gmp::{EdgeId, FactorGraph, MsgId, NodeKind, Schedule};
+
+use super::model::{Factor, FactorId, GbpModel, VarId};
+
+/// Direction of a pairwise factor's message.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Direction {
+    /// Message towards the factor's `to` endpoint.
+    Forward,
+    /// Message towards the factor's `from` endpoint.
+    Backward,
+}
+
+/// One directed edge of the GBP message graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct EdgeKey {
+    pub factor: FactorId,
+    pub dir: Direction,
+}
+
+impl EdgeKey {
+    /// Variable this edge's message is *sent to*.
+    pub fn target(&self, model: &GbpModel) -> VarId {
+        match (model.factor(self.factor), self.dir) {
+            (Factor::Pairwise { to, .. }, Direction::Forward) => *to,
+            (Factor::Pairwise { from, .. }, Direction::Backward) => *from,
+            _ => unreachable!("edge keys only index pairwise factors"),
+        }
+    }
+
+    /// Variable whose cavity feeds this edge's update.
+    pub fn source(&self, model: &GbpModel) -> VarId {
+        match (model.factor(self.factor), self.dir) {
+            (Factor::Pairwise { from, .. }, Direction::Forward) => *from,
+            (Factor::Pairwise { to, .. }, Direction::Backward) => *to,
+            _ => unreachable!("edge keys only index pairwise factors"),
+        }
+    }
+}
+
+/// All directed edges of a model, in deterministic (factor, direction)
+/// order — the order every synchronous round uses.
+pub fn directed_edges(model: &GbpModel) -> Vec<EdgeKey> {
+    let mut out = Vec::new();
+    for (i, f) in model.factors().iter().enumerate() {
+        if matches!(f, Factor::Pairwise { .. }) {
+            out.push(EdgeKey { factor: FactorId(i), dir: Direction::Forward });
+            out.push(EdgeKey { factor: FactorId(i), dir: Direction::Backward });
+        }
+    }
+    out
+}
+
+/// Current factor→variable messages, indexed by pairwise factor id.
+#[derive(Clone, Debug)]
+pub struct MessageState {
+    /// Message towards `to`, per factor (identity placeholder on unary
+    /// factor ids, never read).
+    pub forward: Vec<GaussMessage>,
+    /// Message towards `from`, per factor.
+    pub backward: Vec<GaussMessage>,
+}
+
+impl MessageState {
+    /// Vague initialization: every pairwise message starts as a
+    /// zero-mean isotropic Gaussian with variance `init_var`.
+    pub fn vague(model: &GbpModel, init_var: f64) -> Self {
+        let m = GaussMessage::isotropic(model.n(), init_var);
+        MessageState {
+            forward: vec![m.clone(); model.num_factors()],
+            backward: vec![m; model.num_factors()],
+        }
+    }
+
+    pub fn get(&self, e: EdgeKey) -> &GaussMessage {
+        match e.dir {
+            Direction::Forward => &self.forward[e.factor.0],
+            Direction::Backward => &self.backward[e.factor.0],
+        }
+    }
+
+    pub fn set(&mut self, e: EdgeKey, msg: GaussMessage) {
+        match e.dir {
+            Direction::Forward => self.forward[e.factor.0] = msg,
+            Direction::Backward => self.backward[e.factor.0] = msg,
+        }
+    }
+}
+
+/// A lowered update: either a workload for the engine, or (for a
+/// product of zero factors) the base message itself — nothing to run.
+pub enum BuiltRequest {
+    Trivial(GaussMessage),
+    Run(WorkloadRequest),
+}
+
+/// Incremental builder for the per-update chain graph. Exploits the
+/// [`Schedule::forward_sweep`] invariant that edge `i` carries virtual
+/// message id `i`, so input bindings are recorded as edges are created.
+struct Chain {
+    g: FactorGraph,
+    inputs: HashMap<MsgId, GaussMessage>,
+    /// Identity state shared by all fusion nodes.
+    eye: Option<crate::gmp::graph::StateId>,
+    cur: Option<EdgeId>,
+    n: usize,
+}
+
+impl Chain {
+    fn new(n: usize) -> Self {
+        Chain { g: FactorGraph::new(), inputs: HashMap::new(), eye: None, cur: None, n }
+    }
+
+    fn input(&mut self, msg: &GaussMessage, label: String) -> EdgeId {
+        let e = self.g.add_input_edge(self.n, label);
+        self.inputs.insert(MsgId(e.0), msg.clone());
+        e
+    }
+
+    /// Fuse `msg` into the running product (CN with identity state), or
+    /// start the product if it is the first proper element.
+    fn fuse(&mut self, msg: &GaussMessage, label: String) {
+        let input = self.input(msg, label.clone());
+        match self.cur {
+            None => self.cur = Some(input),
+            Some(prev) => {
+                let eye = match self.eye {
+                    Some(e) => e,
+                    None => {
+                        let e = self.g.add_state(CMatrix::identity(self.n));
+                        self.eye = Some(e);
+                        e
+                    }
+                };
+                let out = self.g.add_edge(self.n, format!("fused_{label}"));
+                self.g.add_node(
+                    NodeKind::CompoundObservation { a: eye },
+                    vec![prev, input],
+                    out,
+                    format!("fuse_{label}"),
+                );
+                self.cur = Some(out);
+            }
+        }
+    }
+
+    /// Condition the running product on an observation through `c`.
+    fn condition(&mut self, c: &CMatrix, obs: &GaussMessage, label: String) -> Result<()> {
+        let prev = self.cur.ok_or_else(|| {
+            anyhow!("cannot condition an empty product (no proper base message)")
+        })?;
+        let input = self.input(obs, label.clone());
+        let sid = self.g.add_state(c.clone());
+        let out = self.g.add_edge(self.n, format!("cond_{label}"));
+        self.g.add_node(
+            NodeKind::CompoundObservation { a: sid },
+            vec![prev, input],
+            out,
+            format!("cond_{label}"),
+        );
+        self.cur = Some(out);
+        Ok(())
+    }
+
+    /// Multiply the running product by `a`.
+    fn multiply(&mut self, a: &CMatrix, label: &str) -> Result<()> {
+        let prev = self.cur.ok_or_else(|| anyhow!("multiply on empty product"))?;
+        let sid = self.g.add_state(a.clone());
+        let out = self.g.add_edge(self.n, format!("mul_{label}"));
+        self.g.add_node(NodeKind::Multiply { a: sid }, vec![prev], out, format!("mul_{label}"));
+        self.cur = Some(out);
+        Ok(())
+    }
+
+    /// Add an independent Gaussian (widening by process noise).
+    fn add(&mut self, noise: &GaussMessage, label: &str) -> Result<()> {
+        let prev = self.cur.ok_or_else(|| anyhow!("add on empty product"))?;
+        let input = self.input(noise, format!("noise_{label}"));
+        let out = self.g.add_edge(self.n, format!("add_{label}"));
+        self.g.add_node(NodeKind::Add, vec![prev, input], out, format!("add_{label}"));
+        self.cur = Some(out);
+        Ok(())
+    }
+
+    fn finish(mut self) -> BuiltRequest {
+        match self.cur {
+            Some(out) if !self.g.nodes.is_empty() => {
+                self.g.mark_output(out);
+                let schedule = Schedule::forward_sweep(&self.g);
+                BuiltRequest::Run(WorkloadRequest {
+                    graph: self.g,
+                    schedule,
+                    inputs: self.inputs,
+                    opts: Default::default(),
+                })
+            }
+            Some(out) => {
+                // zero nodes: the product is a single bound message
+                let msg = self.inputs[&MsgId(out.0)].clone();
+                BuiltRequest::Trivial(msg)
+            }
+            None => unreachable!("finish() called on an empty chain"),
+        }
+    }
+}
+
+/// Build the cavity product of `var` excluding `exclude` (all of it for
+/// beliefs): prior, then other pairwise messages in factor order —
+/// fused with identity-state compound nodes — then unary conditioning
+/// in factor order.
+fn cavity_chain(
+    model: &GbpModel,
+    state: &MessageState,
+    var: VarId,
+    exclude: Option<FactorId>,
+) -> Result<Chain> {
+    let mut chain = Chain::new(model.n());
+    if let Some(prior) = &model.variable(var).prior {
+        chain.fuse(prior, "prior".into());
+    }
+    for f in model.pairwise_at(var) {
+        if Some(*f) == exclude {
+            continue;
+        }
+        // the message flowing INTO `var` from factor f
+        let dir = match model.factor(*f) {
+            Factor::Pairwise { to, .. } if *to == var => Direction::Forward,
+            _ => Direction::Backward,
+        };
+        chain.fuse(state.get(EdgeKey { factor: *f, dir }), format!("p{}", f.0));
+    }
+    if chain.cur.is_none() {
+        bail!(
+            "improper cavity at '{}': no prior and no other pairwise message",
+            model.variable(var).label
+        );
+    }
+    for f in model.unary_at(var) {
+        if let Factor::Unary { c, obs, .. } = model.factor(*f) {
+            chain.condition(c, obs, format!("u{}", f.0))?;
+        }
+    }
+    Ok(chain)
+}
+
+/// Lower one directed-edge update to a workload: cavity at the source
+/// variable, then the factor's transform towards the target.
+pub fn edge_request(
+    model: &GbpModel,
+    state: &MessageState,
+    edge: EdgeKey,
+) -> Result<BuiltRequest> {
+    let Factor::Pairwise { a, a_inv, noise, .. } = model.factor(edge.factor) else {
+        bail!("edge request on a non-pairwise factor {}", edge.factor.0);
+    };
+    let mut chain = cavity_chain(model, state, edge.source(model), Some(edge.factor))?;
+    match edge.dir {
+        Direction::Forward => {
+            // x_to = A x_from + w:  multiply, then widen by N(b, Q)
+            chain.multiply(a, "fwd")?;
+            chain.add(noise, "fwd")?;
+        }
+        Direction::Backward => {
+            // x_from = A^{-1}(x_to - w): widen by N(-b, Q), then multiply
+            let neg_mean: Vec<c64> = noise.mean.iter().map(|z| -*z).collect();
+            let neg = GaussMessage::new(neg_mean, noise.cov.clone());
+            chain.add(&neg, "bwd")?;
+            chain.multiply(a_inv, "bwd")?;
+        }
+    }
+    Ok(chain.finish())
+}
+
+/// Lower one variable-belief product to a workload.
+pub fn belief_request(
+    model: &GbpModel,
+    state: &MessageState,
+    var: VarId,
+) -> Result<BuiltRequest> {
+    Ok(cavity_chain(model, state, var, None)?.finish())
+}
+
+/// Anything that can execute a batch of lowered GBP updates. The two
+/// implementations are a single [`Session`] (any engine, sequential)
+/// and a [`FgpFarm`] (one round sharded across simulated devices).
+pub trait RoundExecutor {
+    /// Human-readable backend tag for reports.
+    fn tag(&self) -> String;
+
+    /// Execute each request and return its single output message, in
+    /// request order.
+    fn run_batch(&mut self, reqs: &[WorkloadRequest]) -> Result<Vec<GaussMessage>>;
+}
+
+impl RoundExecutor for Session {
+    fn tag(&self) -> String {
+        format!("session:{}", self.engine_kind())
+    }
+
+    fn run_batch(&mut self, reqs: &[WorkloadRequest]) -> Result<Vec<GaussMessage>> {
+        reqs.iter()
+            .map(|r| {
+                let d = self.dispatch(&r.graph, &r.schedule, &r.inputs, &r.opts)?;
+                Ok(d.exec.output()?.clone())
+            })
+            .collect()
+    }
+}
+
+/// Shards a batch across an [`FgpFarm`]: all requests are submitted
+/// asynchronously (the farm's routing policy spreads them over
+/// devices), then collected in order.
+pub struct FarmExecutor<'f> {
+    pub farm: &'f FgpFarm,
+}
+
+impl RoundExecutor for FarmExecutor<'_> {
+    fn tag(&self) -> String {
+        format!("farm:{}dev", self.farm.size())
+    }
+
+    fn run_batch(&mut self, reqs: &[WorkloadRequest]) -> Result<Vec<GaussMessage>> {
+        let pending: Vec<_> =
+            reqs.iter().map(|r| self.farm.submit_workload(r.clone())).collect();
+        pending
+            .into_iter()
+            .map(|(rx, idx)| {
+                let exec = rx
+                    .recv()
+                    .map_err(|_| anyhow!("farm device {idx} died mid-round"))??;
+                Ok(exec.output()?.clone())
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gmp::nodes;
+    use crate::testutil::Rng;
+
+    fn proper(rng: &mut Rng, n: usize) -> GaussMessage {
+        GaussMessage::new(
+            (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+            CMatrix::random_psd(rng, n, 1.0).scale(0.2),
+        )
+    }
+
+    /// two variables, one pairwise link, priors on both
+    fn two_var_model(rng: &mut Rng, n: usize) -> (GbpModel, GaussMessage, GaussMessage) {
+        let mut m = GbpModel::new(n);
+        let pa = proper(rng, n);
+        let pb = proper(rng, n);
+        let a = m.add_variable(Some(pa.clone()), "a").unwrap();
+        let b = m.add_variable(Some(pb.clone()), "b").unwrap();
+        m.add_pairwise(a, b, CMatrix::identity(n), GaussMessage::isotropic(n, 0.05))
+            .unwrap();
+        (m, pa, pb)
+    }
+
+    #[test]
+    fn forward_edge_update_is_cavity_plus_noise() {
+        // deg-1 source: cavity = prior; forward msg = A·prior + N(0, Q)
+        let mut rng = Rng::new(1);
+        let n = 4;
+        let (model, pa, _) = two_var_model(&mut rng, n);
+        let state = MessageState::vague(&model, 10.0);
+        let edge = EdgeKey { factor: FactorId(0), dir: Direction::Forward };
+        let req = match edge_request(&model, &state, edge).unwrap() {
+            BuiltRequest::Run(r) => r,
+            BuiltRequest::Trivial(_) => panic!("transform always has nodes"),
+        };
+        let out = Session::golden()
+            .dispatch(&req.graph, &req.schedule, &req.inputs, &req.opts)
+            .unwrap()
+            .exec
+            .output()
+            .unwrap()
+            .clone();
+        let want = nodes::add(
+            &nodes::multiply(&pa, &CMatrix::identity(n)),
+            &GaussMessage::isotropic(n, 0.05),
+        );
+        assert!(out.dist(&want) < 1e-9, "dist {}", out.dist(&want));
+    }
+
+    #[test]
+    fn belief_fuses_prior_and_message() {
+        let mut rng = Rng::new(2);
+        let n = 4;
+        let (model, _, pb) = two_var_model(&mut rng, n);
+        let mut state = MessageState::vague(&model, 10.0);
+        let incoming = proper(&mut rng, n);
+        state.set(EdgeKey { factor: FactorId(0), dir: Direction::Forward }, incoming.clone());
+        let req = match belief_request(&model, &state, VarId(1)).unwrap() {
+            BuiltRequest::Run(r) => r,
+            BuiltRequest::Trivial(_) => panic!("two-element product has a node"),
+        };
+        let out = Session::golden()
+            .dispatch(&req.graph, &req.schedule, &req.inputs, &req.opts)
+            .unwrap()
+            .exec
+            .output()
+            .unwrap()
+            .clone();
+        // identity-state CN fusion == moment-form Gaussian product
+        let want = nodes::equality(&pb, &incoming).unwrap();
+        assert!(out.dist(&want) < 1e-7, "dist {}", out.dist(&want));
+    }
+
+    #[test]
+    fn prior_only_belief_is_trivial() {
+        let n = 4;
+        let mut m = GbpModel::new(n);
+        let prior = GaussMessage::isotropic(n, 0.7);
+        let v = m.add_variable(Some(prior.clone()), "lone").unwrap();
+        let state = MessageState::vague(&m, 10.0);
+        match belief_request(&m, &state, v).unwrap() {
+            BuiltRequest::Trivial(msg) => assert!(msg.dist(&prior) == 0.0),
+            BuiltRequest::Run(_) => panic!("no factors: nothing to run"),
+        }
+    }
+
+    #[test]
+    fn edge_requests_fit_the_device() {
+        // a degree-4 cavity must still compile for the n=4 device
+        let mut rng = Rng::new(3);
+        let n = 4;
+        let mut m = GbpModel::new(n);
+        let hub = m.add_variable(Some(proper(&mut rng, n)), "hub").unwrap();
+        let mut spokes = Vec::new();
+        for i in 0..4 {
+            let s = m.add_variable(Some(proper(&mut rng, n)), format!("s{i}")).unwrap();
+            m.add_pairwise(hub, s, CMatrix::identity(n), GaussMessage::isotropic(n, 0.05))
+                .unwrap();
+            spokes.push(s);
+        }
+        let mut y = vec![c64::ZERO; n];
+        y[0] = c64::new(0.2, 0.0);
+        let mut c = CMatrix::zeros(n, n);
+        c[(0, 0)] = c64::ONE;
+        m.add_unary(hub, c, GaussMessage::new(y, CMatrix::scaled_identity(n, 0.1)))
+            .unwrap();
+        let state = MessageState::vague(&m, 5.0);
+        let edge = EdgeKey { factor: FactorId(0), dir: Direction::Forward };
+        let BuiltRequest::Run(req) = edge_request(&m, &state, edge).unwrap() else {
+            panic!("expected a runnable request");
+        };
+        // cavity: prior + 3 other pairwise + 1 unary, then mul + add
+        assert_eq!(req.graph.nodes.len(), 3 + 1 + 2);
+        let mut sim = Session::fgp_sim(crate::fgp::FgpConfig::default());
+        let d = sim.dispatch(&req.graph, &req.schedule, &req.inputs, &req.opts).unwrap();
+        assert!(d.exec.stats.cycles > 0);
+    }
+}

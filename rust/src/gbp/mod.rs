@@ -1,0 +1,52 @@
+//! S13 — Loopy Gaussian Belief Propagation over the engine surface.
+//!
+//! The paper's compiler serves *scheduled* GMP sweeps over
+//! tree-structured graphs (§III–IV); an entire class of workloads —
+//! grid smoothing, pose graphs, distributed estimation — lives on
+//! graphs **with cycles**, where no finite schedule is exact and
+//! inference is iterative (Ortiz et al., *A visual introduction to
+//! Gaussian Belief Propagation*, 2021). This subsystem serves those
+//! graphs while still running every inner update on the paper's device:
+//!
+//! * [`model`] — the cyclic-capable variable/factor view ([`GbpModel`])
+//!   with priors, unary observations and invertible linear-Gaussian
+//!   pairwise links, plus the exact dense information-form solve used
+//!   as the conformance reference;
+//! * [`policy`] — pluggable iteration policies (synchronous/Jacobi
+//!   rounds, damped updates via `eta_damping`, residual-priority
+//!   "wildfire" scheduling) and the convergence monitor (belief-delta
+//!   norm, max-iters, divergence detection);
+//! * [`bridge`] — lowers each directed-edge update and each belief
+//!   product onto a small scheduled [`crate::gmp::FactorGraph`]
+//!   (Gaussian products are compound-observation nodes with identity
+//!   states; pairwise transforms are multiplier+adder nodes) and
+//!   executes batches through any [`crate::engine::Session`] or a
+//!   [`crate::coordinator::FgpFarm`] sharding a round across devices;
+//! * [`solver`] — the iteration loop ([`GbpSolver`]) and its report.
+//!
+//! Contract, pinned by `rust/tests/integration_gbp.rs` and
+//! `rust/tests/property_gbp.rs`:
+//!
+//! 1. on **tree** graphs the converged beliefs equal the scheduled-sweep
+//!    golden result (same factorization, same arithmetic, ≤ 1e-9);
+//! 2. on **cyclic** graphs the converged means match the dense solve
+//!    (exact-means property of Gaussian BP), covariances within the
+//!    workload tolerance;
+//! 3. a round sharded over an `FgpFarm` is **bitwise identical** to the
+//!    same round on a single device (requests are self-contained and
+//!    the simulator is deterministic).
+
+pub mod bridge;
+pub mod model;
+pub mod policy;
+pub mod solver;
+
+pub use bridge::{
+    belief_request, directed_edges, edge_request, BuiltRequest, Direction, EdgeKey,
+    FarmExecutor, MessageState, RoundExecutor,
+};
+pub use model::{Factor, FactorId, GbpModel, VarId, Variable};
+pub use policy::{
+    damp, ConvergenceCriteria, ConvergenceMonitor, IterationPolicy, StopReason,
+};
+pub use solver::{belief_delta, solve, GbpOptions, GbpReport, GbpSolver};

@@ -1,0 +1,448 @@
+//! Cyclic Gaussian factor-graph models and their dense reference.
+//!
+//! A [`GbpModel`] is a *variable/factor* view of an estimation problem —
+//! the representation loopy belief propagation iterates over — as
+//! opposed to [`crate::gmp::FactorGraph`], which is a *scheduled
+//! dataflow* view (one node update per step, no cycles). The solver
+//! lowers every per-edge GBP update back onto a small scheduled
+//! `FactorGraph` so the inner kernel still runs on any
+//! [`crate::engine::Engine`]; this module only owns the model and its
+//! exact dense information-form solution (the conformance reference).
+
+use anyhow::{bail, Context, Result};
+
+use crate::gmp::matrix::{c64, CMatrix, CVector};
+use crate::gmp::message::GaussMessage;
+
+/// Identifies a variable in a [`GbpModel`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VarId(pub usize);
+
+/// Identifies a factor in a [`GbpModel`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FactorId(pub usize);
+
+/// A variable: an `n`-dimensional complex Gaussian unknown.
+#[derive(Clone, Debug)]
+pub struct Variable {
+    /// Proper prior, if any. Variables without a prior must have at
+    /// least two pairwise factors (so every cavity stays proper).
+    pub prior: Option<GaussMessage>,
+    pub label: String,
+}
+
+/// A factor connecting one or two variables.
+#[derive(Clone, Debug)]
+pub enum Factor {
+    /// Linear observation of one variable: `y = C x + v`, `v ~ N(0, R)`
+    /// with `R` the covariance of `obs` and `y` its mean. Rank-deficient
+    /// `C` is fine (rows of `C` that are zero observe pure noise and add
+    /// no information) — this is exactly the conditioning the compound
+    /// observation node computes, so unary factors ride the CN kernel.
+    Unary { var: VarId, c: CMatrix, obs: GaussMessage },
+    /// Linear-Gaussian link `x_to = A x_from + w`, `w ~ N(b, Q)` with
+    /// `b`/`Q` the mean/covariance of `noise` (odometry displacements
+    /// ride as the noise mean). `A` must be invertible so the reverse
+    /// message exists; `a_inv` is cached at construction.
+    Pairwise {
+        from: VarId,
+        to: VarId,
+        a: CMatrix,
+        a_inv: CMatrix,
+        noise: GaussMessage,
+    },
+}
+
+/// A cyclic-capable Gaussian model: variables plus unary/pairwise
+/// factors. Cycles are first-class — this is what
+/// [`crate::gmp::Schedule`] cannot represent.
+#[derive(Clone, Debug, Default)]
+pub struct GbpModel {
+    n: usize,
+    vars: Vec<Variable>,
+    factors: Vec<Factor>,
+    /// Per-variable pairwise adjacency in factor order, maintained on
+    /// insert: per-edge requests on the solver hot path must not
+    /// rescan the whole factor list.
+    pairwise_idx: Vec<Vec<FactorId>>,
+    /// Per-variable unary factors in factor order.
+    unary_idx: Vec<Vec<FactorId>>,
+}
+
+impl GbpModel {
+    /// An empty model over `n`-dimensional variables.
+    pub fn new(n: usize) -> Self {
+        GbpModel {
+            n,
+            vars: Vec::new(),
+            factors: Vec::new(),
+            pairwise_idx: Vec::new(),
+            unary_idx: Vec::new(),
+        }
+    }
+
+    /// Variable dimension (must match the device size to run on the FGP).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn num_vars(&self) -> usize {
+        self.vars.len()
+    }
+
+    pub fn num_factors(&self) -> usize {
+        self.factors.len()
+    }
+
+    pub fn variable(&self, v: VarId) -> &Variable {
+        &self.vars[v.0]
+    }
+
+    pub fn factor(&self, f: FactorId) -> &Factor {
+        &self.factors[f.0]
+    }
+
+    pub fn factors(&self) -> &[Factor] {
+        &self.factors
+    }
+
+    /// Add a variable with an optional proper prior.
+    pub fn add_variable(
+        &mut self,
+        prior: Option<GaussMessage>,
+        label: impl Into<String>,
+    ) -> Result<VarId> {
+        if let Some(p) = &prior {
+            if p.dim() != self.n {
+                bail!("prior has dim {} but the model is n={}", p.dim(), self.n);
+            }
+        }
+        self.vars.push(Variable { prior, label: label.into() });
+        self.pairwise_idx.push(Vec::new());
+        self.unary_idx.push(Vec::new());
+        Ok(VarId(self.vars.len() - 1))
+    }
+
+    /// Add a unary observation factor `y = C x + v`.
+    pub fn add_unary(&mut self, var: VarId, c: CMatrix, obs: GaussMessage) -> Result<FactorId> {
+        if var.0 >= self.vars.len() {
+            bail!("unary factor references unknown variable {}", var.0);
+        }
+        if c.rows != self.n || c.cols != self.n || obs.dim() != self.n {
+            bail!("unary factor shapes must be n={} (C {}x{}, obs {})",
+                self.n, c.rows, c.cols, obs.dim());
+        }
+        let id = FactorId(self.factors.len());
+        self.factors.push(Factor::Unary { var, c, obs });
+        self.unary_idx[var.0].push(id);
+        Ok(id)
+    }
+
+    /// Add a pairwise link `x_to = A x_from + w`, `w ~ N(b, Q)`.
+    pub fn add_pairwise(
+        &mut self,
+        from: VarId,
+        to: VarId,
+        a: CMatrix,
+        noise: GaussMessage,
+    ) -> Result<FactorId> {
+        if from.0 >= self.vars.len() || to.0 >= self.vars.len() {
+            bail!("pairwise factor references unknown variable");
+        }
+        if from == to {
+            bail!("pairwise factor must connect two distinct variables");
+        }
+        if a.rows != self.n || a.cols != self.n || noise.dim() != self.n {
+            bail!("pairwise factor shapes must be n={}", self.n);
+        }
+        let a_inv = a
+            .inverse()
+            .context("pairwise state matrix A must be invertible (reverse message)")?;
+        let id = FactorId(self.factors.len());
+        self.factors.push(Factor::Pairwise { from, to, a, a_inv, noise });
+        self.pairwise_idx[from.0].push(id);
+        self.pairwise_idx[to.0].push(id);
+        Ok(id)
+    }
+
+    /// Pairwise factors incident to `v`, in factor order (O(1) — the
+    /// adjacency index is maintained on insert).
+    pub fn pairwise_at(&self, v: VarId) -> &[FactorId] {
+        &self.pairwise_idx[v.0]
+    }
+
+    /// Unary factors at `v`, in factor order (O(1)).
+    pub fn unary_at(&self, v: VarId) -> &[FactorId] {
+        &self.unary_idx[v.0]
+    }
+
+    /// The other endpoint of pairwise factor `f` as seen from `v`.
+    pub fn neighbor(&self, f: FactorId, v: VarId) -> Option<VarId> {
+        match &self.factors[f.0] {
+            Factor::Pairwise { from, to, .. } if *from == v => Some(*to),
+            Factor::Pairwise { from, to, .. } if *to == v => Some(*from),
+            _ => None,
+        }
+    }
+
+    /// Does the model contain a cycle among its pairwise factors?
+    /// (Union-find over variable components; a pairwise edge joining two
+    /// already-connected variables closes a cycle.)
+    pub fn has_cycle(&self) -> bool {
+        let mut parent: Vec<usize> = (0..self.vars.len()).collect();
+        fn root(parent: &mut [usize], mut i: usize) -> usize {
+            while parent[i] != i {
+                parent[i] = parent[parent[i]];
+                i = parent[i];
+            }
+            i
+        }
+        for f in &self.factors {
+            if let Factor::Pairwise { from, to, .. } = f {
+                let (a, b) = (root(&mut parent, from.0), root(&mut parent, to.0));
+                if a == b {
+                    return true;
+                }
+                parent[a] = b;
+            }
+        }
+        false
+    }
+
+    /// Validate the model for GBP: every variable participates, every
+    /// cavity is proper (a variable without a proper prior needs at
+    /// least two pairwise factors so that excluding one still leaves a
+    /// proper base for the product).
+    pub fn validate(&self) -> Result<()> {
+        if self.vars.is_empty() {
+            bail!("model has no variables");
+        }
+        for (i, v) in self.vars.iter().enumerate() {
+            let deg = self.pairwise_at(VarId(i)).len();
+            if v.prior.is_none() && deg == 0 {
+                bail!("variable '{}' has neither a prior nor a pairwise factor", v.label);
+            }
+            if v.prior.is_none() && deg == 1 {
+                bail!(
+                    "variable '{}' has no prior and only one pairwise factor: \
+                     the cavity excluding it is improper",
+                    v.label
+                );
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Dense information-form reference
+    // ------------------------------------------------------------------
+
+    /// Exact marginals by assembling the joint information matrix over
+    /// all `num_vars * n` dimensions and inverting it — the reference
+    /// loopy GBP is validated against (feasible for test-sized models;
+    /// GBP exists precisely because this does not scale).
+    pub fn dense_marginals(&self) -> Result<Vec<GaussMessage>> {
+        let n = self.n;
+        let nv = self.vars.len();
+        let dim = nv * n;
+        let mut w = CMatrix::zeros(dim, dim);
+        let mut h = vec![c64::ZERO; dim];
+
+        let add_block = |w: &mut CMatrix, bi: usize, bj: usize, m: &CMatrix| {
+            for i in 0..n {
+                for j in 0..n {
+                    let (r, c) = (bi * n + i, bj * n + j);
+                    w[(r, c)] = w[(r, c)] + m[(i, j)];
+                }
+            }
+        };
+        let add_vec = |h: &mut Vec<c64>, bi: usize, v: &[c64]| {
+            for i in 0..n {
+                h[bi * n + i] = h[bi * n + i] + v[i];
+            }
+        };
+
+        for (i, var) in self.vars.iter().enumerate() {
+            if let Some(p) = &var.prior {
+                let (wp, wpm) = p
+                    .to_weight_form()
+                    .with_context(|| format!("prior of '{}' is singular", var.label))?;
+                add_block(&mut w, i, i, &wp);
+                add_vec(&mut h, i, &wpm);
+            }
+        }
+        for f in &self.factors {
+            match f {
+                Factor::Unary { var, c, obs } => {
+                    // info: C^H R^{-1} C, vector: C^H R^{-1} y
+                    let rinv = obs
+                        .cov
+                        .inverse()
+                        .context("unary observation covariance is singular")?;
+                    let ch = c.hermitian();
+                    let chr = ch.matmul(&rinv);
+                    add_block(&mut w, var.0, var.0, &chr.matmul(c));
+                    add_vec(&mut h, var.0, &chr.matvec(&obs.mean));
+                }
+                Factor::Pairwise { from, to, a, noise, .. } => {
+                    // residual r = x_to - A x_from - b ~ N(0, Q):
+                    //   W += J^H Q^{-1} J with J = [-A  I] over (from,to)
+                    //   h += J^H Q^{-1} b
+                    let qinv = noise
+                        .cov
+                        .inverse()
+                        .context("pairwise noise covariance is singular")?;
+                    let ah = a.hermitian();
+                    let ahq = ah.matmul(&qinv);
+                    add_block(&mut w, from.0, from.0, &ahq.matmul(a));
+                    add_block(&mut w, from.0, to.0, &ahq.neg());
+                    add_block(&mut w, to.0, from.0, &qinv.matmul(a).neg());
+                    add_block(&mut w, to.0, to.0, &qinv);
+                    let qb = qinv.matvec(&noise.mean);
+                    add_vec(&mut h, to.0, &qb);
+                    let minus_ahqb: CVector = ah.matvec(&qb).iter().map(|z| -*z).collect();
+                    add_vec(&mut h, from.0, &minus_ahqb);
+                }
+            }
+        }
+
+        let v = w
+            .inverse()
+            .context("joint information matrix is singular (model under-constrained)")?;
+        // one factorization serves both: the joint mean is V·h
+        let mut hm = CMatrix::zeros(dim, 1);
+        for (i, z) in h.iter().enumerate() {
+            hm[(i, 0)] = *z;
+        }
+        let mean = v.matmul(&hm);
+
+        let mut out = Vec::with_capacity(nv);
+        for b in 0..nv {
+            let m: CVector = (0..n).map(|i| mean[(b * n + i, 0)]).collect();
+            let mut cov = CMatrix::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    cov[(i, j)] = v[(b * n + i, b * n + j)];
+                }
+            }
+            out.push(GaussMessage::new(m, cov));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gmp::nodes;
+    use crate::testutil::Rng;
+
+    fn obs_proj(n: usize) -> CMatrix {
+        let mut c = CMatrix::zeros(n, n);
+        c[(0, 0)] = c64::ONE;
+        c
+    }
+
+    #[test]
+    fn validation_rejects_improper_cavities() {
+        let n = 4;
+        let mut m = GbpModel::new(n);
+        let a = m.add_variable(None, "a").unwrap();
+        let b = m.add_variable(Some(GaussMessage::isotropic(n, 1.0)), "b").unwrap();
+        m.add_pairwise(a, b, CMatrix::identity(n), GaussMessage::isotropic(n, 0.1)).unwrap();
+        // 'a' has no prior and degree 1: the cavity excluding its only
+        // pairwise factor is improper
+        let err = m.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("improper"), "{err:#}");
+    }
+
+    #[test]
+    fn singular_a_is_rejected() {
+        let n = 4;
+        let mut m = GbpModel::new(n);
+        let a = m.add_variable(Some(GaussMessage::isotropic(n, 1.0)), "a").unwrap();
+        let b = m.add_variable(Some(GaussMessage::isotropic(n, 1.0)), "b").unwrap();
+        let err = m
+            .add_pairwise(a, b, CMatrix::zeros(n, n), GaussMessage::isotropic(n, 0.1))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("invertible"), "{err:#}");
+    }
+
+    #[test]
+    fn cycle_detection() {
+        let n = 4;
+        let prior = || Some(GaussMessage::isotropic(n, 1.0));
+        let noise = || GaussMessage::isotropic(n, 0.1);
+        let mut m = GbpModel::new(n);
+        let a = m.add_variable(prior(), "a").unwrap();
+        let b = m.add_variable(prior(), "b").unwrap();
+        let c = m.add_variable(prior(), "c").unwrap();
+        m.add_pairwise(a, b, CMatrix::identity(n), noise()).unwrap();
+        m.add_pairwise(b, c, CMatrix::identity(n), noise()).unwrap();
+        assert!(!m.has_cycle());
+        m.add_pairwise(c, a, CMatrix::identity(n), noise()).unwrap();
+        assert!(m.has_cycle());
+    }
+
+    #[test]
+    fn dense_single_variable_is_prior_times_observation() {
+        // one variable, one full-rank unary: the dense marginal must be
+        // the golden compound-observation update (A = C = I)
+        let mut rng = Rng::new(3);
+        let n = 4;
+        let prior = GaussMessage::new(
+            (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+            CMatrix::random_psd(&mut rng, n, 1.0).scale(0.2),
+        );
+        let obs = GaussMessage::new(
+            (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+            CMatrix::random_psd(&mut rng, n, 1.0).scale(0.2),
+        );
+        let mut m = GbpModel::new(n);
+        let v = m.add_variable(Some(prior.clone()), "x").unwrap();
+        m.add_unary(v, CMatrix::identity(n), obs.clone()).unwrap();
+        let marg = m.dense_marginals().unwrap();
+        let want = nodes::compound_observation(&prior, &obs, &CMatrix::identity(n), false).unwrap();
+        assert!(marg[0].dist(&want) < 1e-9, "dist {}", marg[0].dist(&want));
+    }
+
+    #[test]
+    fn dense_rank_deficient_unary_only_informs_observed_row() {
+        let n = 4;
+        let mut m = GbpModel::new(n);
+        let prior = GaussMessage::isotropic(n, 1.0);
+        let v = m.add_variable(Some(prior.clone()), "x").unwrap();
+        let mut y = vec![c64::ZERO; n];
+        y[0] = c64::new(0.3, 0.0);
+        m.add_unary(v, obs_proj(n), GaussMessage::new(y, CMatrix::scaled_identity(n, 0.1)))
+            .unwrap();
+        let marg = m.dense_marginals().unwrap();
+        // observed component tightens, unobserved stay at the prior
+        assert!(marg[0].cov[(1, 1)].re > 0.99);
+        assert!(marg[0].cov[(0, 0)].re < 0.12);
+        assert!((marg[0].mean[0].re - 0.3 / 1.1 * 1.0).abs() < 0.05);
+        assert!(marg[0].mean[1].abs() < 1e-12);
+    }
+
+    #[test]
+    fn dense_pairwise_carries_offset() {
+        // x1 anchored at 0; x2 = x1 + b: marginal mean of x2 is b
+        let n = 4;
+        let mut m = GbpModel::new(n);
+        let x1 = m
+            .add_variable(Some(GaussMessage::isotropic(n, 1e-6)), "x1")
+            .unwrap();
+        let x2 = m.add_variable(Some(GaussMessage::isotropic(n, 10.0)), "x2").unwrap();
+        let mut b = vec![c64::ZERO; n];
+        b[0] = c64::new(0.25, -0.1);
+        m.add_pairwise(
+            x1,
+            x2,
+            CMatrix::identity(n),
+            GaussMessage::new(b.clone(), CMatrix::scaled_identity(n, 0.01)),
+        )
+        .unwrap();
+        let marg = m.dense_marginals().unwrap();
+        assert!((marg[1].mean[0] - b[0]).abs() < 1e-2, "{}", marg[1].mean[0]);
+    }
+}

@@ -1,0 +1,218 @@
+//! Iteration policies, damped updates, and the convergence monitor.
+//!
+//! Loopy GBP has no schedule derivable from the graph (that is the
+//! point); *how* messages are revisited is a pluggable policy:
+//!
+//! * [`IterationPolicy::Synchronous`] — every directed edge updates each
+//!   round from the previous round's messages (Jacobi style), optionally
+//!   damped. Deterministic, embarrassingly parallel, the mode the device
+//!   farm shards.
+//! * [`IterationPolicy::Residual`] — residual-priority ("wildfire")
+//!   scheduling: the directed edges whose inputs changed the most update
+//!   first (Elidan et al. 2006; Ortiz et al. 2021 use the same rule for
+//!   distributed GBP). Sequential-greedy, typically far fewer messages
+//!   to convergence on irregular graphs.
+//!
+//! Damping interpolates in **information form**: `W ← (1-η)·W_new +
+//! η·W_old` (and likewise for `Wm`). A convex combination of Hermitian
+//! positive-definite matrices stays Hermitian positive-definite, so
+//! damping can never manufacture an improper message — the property
+//! test in `rust/tests/property_gbp.rs` pins this invariant.
+
+use anyhow::{bail, Context, Result};
+
+use crate::gmp::message::GaussMessage;
+
+/// How the solver revisits directed edges.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum IterationPolicy {
+    /// All directed edges every round, Jacobi style.
+    Synchronous {
+        /// Damping factor η ∈ [0, 1): 0 = undamped, larger = more of the
+        /// old message retained (loopy grids typically want 0.2–0.5).
+        eta_damping: f64,
+    },
+    /// Residual-priority scheduling: per iteration, the `batch` directed
+    /// edges with the highest accumulated input residual update (and
+    /// re-prime their downstream edges' priorities).
+    Residual { batch: usize, eta_damping: f64 },
+}
+
+impl IterationPolicy {
+    pub fn eta(&self) -> f64 {
+        match self {
+            IterationPolicy::Synchronous { eta_damping }
+            | IterationPolicy::Residual { eta_damping, .. } => *eta_damping,
+        }
+    }
+}
+
+impl Default for IterationPolicy {
+    fn default() -> Self {
+        IterationPolicy::Synchronous { eta_damping: 0.0 }
+    }
+}
+
+/// When to stop iterating.
+#[derive(Clone, Copy, Debug)]
+pub struct ConvergenceCriteria {
+    /// Belief-delta norm below which the solve has converged (max over
+    /// variables of mean/covariance max-abs change per iteration).
+    pub tol: f64,
+    pub max_iters: usize,
+    /// Belief delta above which the solve is declared divergent (loopy
+    /// GBP is not guaranteed to converge; catching the blow-up beats
+    /// saturating to NaN). Non-finite deltas always count as divergence.
+    pub divergence: f64,
+}
+
+impl Default for ConvergenceCriteria {
+    fn default() -> Self {
+        ConvergenceCriteria { tol: 1e-6, max_iters: 100, divergence: 1e3 }
+    }
+}
+
+/// Why the solver stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    Converged,
+    MaxIters,
+    Diverged,
+}
+
+/// Tracks belief deltas against the criteria.
+#[derive(Clone, Debug)]
+pub struct ConvergenceMonitor {
+    pub criteria: ConvergenceCriteria,
+    pub history: Vec<f64>,
+}
+
+impl ConvergenceMonitor {
+    pub fn new(criteria: ConvergenceCriteria) -> Self {
+        ConvergenceMonitor { criteria, history: Vec::new() }
+    }
+
+    /// Record one iteration's belief delta; `Some(reason)` if iteration
+    /// must stop. `quiescent` additionally requires the policy's own
+    /// work estimate (e.g. residual priorities) to be drained before
+    /// declaring convergence.
+    pub fn observe(&mut self, delta: f64, quiescent: bool) -> Option<StopReason> {
+        self.history.push(delta);
+        if !delta.is_finite() || delta > self.criteria.divergence {
+            return Some(StopReason::Diverged);
+        }
+        if delta < self.criteria.tol && quiescent {
+            return Some(StopReason::Converged);
+        }
+        if self.history.len() >= self.criteria.max_iters {
+            return Some(StopReason::MaxIters);
+        }
+        None
+    }
+
+    pub fn iterations(&self) -> usize {
+        self.history.len()
+    }
+
+    pub fn final_delta(&self) -> f64 {
+        self.history.last().copied().unwrap_or(f64::INFINITY)
+    }
+}
+
+/// Damped message update in information form: η = 0 returns `new`
+/// unchanged (bitwise — the undamped path must not round-trip through
+/// the weight form, so the farm-sharding bitwise contract holds).
+pub fn damp(old: &GaussMessage, new: &GaussMessage, eta: f64) -> Result<GaussMessage> {
+    if !(0.0..1.0).contains(&eta) {
+        bail!("eta_damping must be in [0, 1), got {eta}");
+    }
+    if eta == 0.0 {
+        return Ok(new.clone());
+    }
+    let (wo, wom) = old
+        .to_weight_form()
+        .context("damping: old message covariance is singular")?;
+    let (wn, wnm) = new
+        .to_weight_form()
+        .context("damping: new message covariance is singular")?;
+    let w = wn.scale(1.0 - eta).add(&wo.scale(eta));
+    let wm: Vec<_> = wnm
+        .iter()
+        .zip(&wom)
+        .map(|(n, o)| *n * (1.0 - eta) + *o * eta)
+        .collect();
+    GaussMessage::from_weight_form(&w, &wm)
+        .context("damping: interpolated weight matrix is singular")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gmp::matrix::{c64, CMatrix};
+    use crate::testutil::Rng;
+
+    fn msg(rng: &mut Rng, n: usize) -> GaussMessage {
+        GaussMessage::new(
+            (0..n).map(|_| c64::new(rng.normal(), rng.normal())).collect(),
+            CMatrix::random_psd(rng, n, 0.5),
+        )
+    }
+
+    #[test]
+    fn zero_damping_is_bitwise_identity() {
+        let mut rng = Rng::new(1);
+        let old = msg(&mut rng, 4);
+        let new = msg(&mut rng, 4);
+        let d = damp(&old, &new, 0.0).unwrap();
+        assert_eq!(d.mean, new.mean);
+        assert!(d.cov.dist(&new.cov) == 0.0);
+    }
+
+    #[test]
+    fn full_history_damping_approaches_old() {
+        let mut rng = Rng::new(2);
+        let old = msg(&mut rng, 3);
+        let new = msg(&mut rng, 3);
+        let d = damp(&old, &new, 0.999).unwrap();
+        assert!(d.dist(&old) < 0.1, "dist {}", d.dist(&old));
+    }
+
+    #[test]
+    fn damping_rejects_bad_eta() {
+        let mut rng = Rng::new(3);
+        let m = msg(&mut rng, 2);
+        assert!(damp(&m, &m, 1.0).is_err());
+        assert!(damp(&m, &m, -0.1).is_err());
+    }
+
+    #[test]
+    fn monitor_converges_only_when_quiescent() {
+        let mut mon = ConvergenceMonitor::new(ConvergenceCriteria {
+            tol: 1e-3,
+            max_iters: 10,
+            divergence: 100.0,
+        });
+        assert_eq!(mon.observe(1e-4, false), None);
+        assert_eq!(mon.observe(1e-4, true), Some(StopReason::Converged));
+        assert_eq!(mon.iterations(), 2);
+    }
+
+    #[test]
+    fn monitor_detects_divergence_and_nan() {
+        let crit = ConvergenceCriteria { tol: 1e-6, max_iters: 10, divergence: 50.0 };
+        let mut mon = ConvergenceMonitor::new(crit);
+        assert_eq!(mon.observe(51.0, true), Some(StopReason::Diverged));
+        let mut mon = ConvergenceMonitor::new(crit);
+        assert_eq!(mon.observe(f64::NAN, true), Some(StopReason::Diverged));
+    }
+
+    #[test]
+    fn monitor_caps_iterations() {
+        let crit = ConvergenceCriteria { tol: 1e-9, max_iters: 3, divergence: 1e6 };
+        let mut mon = ConvergenceMonitor::new(crit);
+        assert_eq!(mon.observe(1.0, true), None);
+        assert_eq!(mon.observe(1.0, true), None);
+        assert_eq!(mon.observe(1.0, true), Some(StopReason::MaxIters));
+        assert_eq!(mon.final_delta(), 1.0);
+    }
+}

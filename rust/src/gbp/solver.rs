@@ -1,0 +1,476 @@
+//! The loopy-GBP solver: policies × bridge × convergence monitor.
+//!
+//! [`GbpSolver`] owns the message state and the iteration loop; every
+//! inner update (factor-to-variable messages *and* variable-belief
+//! products) is lowered by [`super::bridge`] and executed by a
+//! [`RoundExecutor`] — one [`crate::engine::Session`] on any engine, or
+//! a [`crate::coordinator::FgpFarm`] sharding each round across
+//! devices. The solver itself never evaluates a node rule.
+//!
+//! On tree graphs the fixed point is exact (identical to the scheduled
+//! sweeps the compiler serves); on cyclic graphs the fixed-point
+//! **means** are exact and the covariances are approximate (Weiss &
+//! Freeman 2001) — the conformance tests encode precisely that
+//! contract against the dense information-form solve.
+
+use anyhow::{Context, Result};
+
+use crate::gmp::message::GaussMessage;
+
+use super::bridge::{
+    belief_request, directed_edges, edge_request, BuiltRequest, EdgeKey, MessageState,
+    RoundExecutor,
+};
+use super::model::{GbpModel, VarId};
+use super::policy::{damp, ConvergenceCriteria, ConvergenceMonitor, IterationPolicy, StopReason};
+
+/// Solver configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct GbpOptions {
+    pub policy: IterationPolicy,
+    pub criteria: ConvergenceCriteria,
+    /// Variance of the vague zero-mean messages every edge starts from.
+    pub init_var: f64,
+}
+
+impl Default for GbpOptions {
+    fn default() -> Self {
+        GbpOptions {
+            policy: IterationPolicy::default(),
+            criteria: ConvergenceCriteria::default(),
+            init_var: 10.0,
+        }
+    }
+}
+
+/// Result of a solve.
+#[derive(Clone, Debug)]
+pub struct GbpReport {
+    /// Posterior marginal per variable, in variable order.
+    pub beliefs: Vec<GaussMessage>,
+    pub iterations: usize,
+    pub stop: StopReason,
+    /// Belief delta of the last iteration.
+    pub final_delta: f64,
+    /// Belief delta per iteration.
+    pub delta_history: Vec<f64>,
+    /// Directed-edge messages computed over the whole solve.
+    pub messages_sent: usize,
+    /// Variable-belief products computed over the whole solve (the
+    /// bookkeeping cost next to `messages_sent`; residual scheduling
+    /// only refreshes beliefs its batch actually touched).
+    pub beliefs_computed: usize,
+}
+
+impl GbpReport {
+    pub fn converged(&self) -> bool {
+        self.stop == StopReason::Converged
+    }
+}
+
+/// Iterative Gaussian belief propagation over a [`GbpModel`].
+pub struct GbpSolver {
+    model: GbpModel,
+    opts: GbpOptions,
+    state: MessageState,
+    edges: Vec<EdgeKey>,
+    /// Residual-policy priorities, aligned with `edges`.
+    priorities: Vec<f64>,
+    beliefs: Vec<GaussMessage>,
+    monitor: ConvergenceMonitor,
+    messages_sent: usize,
+    beliefs_computed: usize,
+}
+
+impl GbpSolver {
+    pub fn new(model: GbpModel, opts: GbpOptions) -> Result<Self> {
+        model.validate()?;
+        let state = MessageState::vague(&model, opts.init_var);
+        let edges = directed_edges(&model);
+        let priorities = vec![f64::INFINITY; edges.len()];
+        let monitor = ConvergenceMonitor::new(opts.criteria);
+        Ok(GbpSolver {
+            model,
+            opts,
+            state,
+            edges,
+            priorities,
+            beliefs: Vec::new(),
+            monitor,
+            messages_sent: 0,
+            beliefs_computed: 0,
+        })
+    }
+
+    pub fn model(&self) -> &GbpModel {
+        &self.model
+    }
+
+    /// Current factor→variable message state (bitwise comparable across
+    /// executors).
+    pub fn state(&self) -> &MessageState {
+        &self.state
+    }
+
+    /// Latest computed beliefs (empty before the first iteration).
+    pub fn beliefs(&self) -> &[GaussMessage] {
+        &self.beliefs
+    }
+
+    pub fn messages_sent(&self) -> usize {
+        self.messages_sent
+    }
+
+    /// Run to convergence (or max-iters / divergence).
+    pub fn run(&mut self, exec: &mut dyn RoundExecutor) -> Result<GbpReport> {
+        // baseline beliefs from the initial messages (not an iteration)
+        if self.beliefs.is_empty() {
+            let all: Vec<VarId> = (0..self.model.num_vars()).map(VarId).collect();
+            self.beliefs = vec![GaussMessage::isotropic(self.model.n(), 0.0); all.len()];
+            self.refresh_beliefs(exec, &all)?;
+        }
+        let stop = loop {
+            let (quiescent, touched) = self.step_round(exec)?;
+            // only beliefs of variables whose incoming messages changed
+            // can move; everything else contributes zero delta
+            let delta = self.refresh_beliefs(exec, &touched)?;
+            if let Some(reason) = self.monitor.observe(delta, quiescent) {
+                break reason;
+            }
+        };
+        Ok(GbpReport {
+            beliefs: self.beliefs.clone(),
+            iterations: self.monitor.iterations(),
+            stop,
+            final_delta: self.monitor.final_delta(),
+            delta_history: self.monitor.history.clone(),
+            messages_sent: self.messages_sent,
+            beliefs_computed: self.beliefs_computed,
+        })
+    }
+
+    /// One message iteration (round or residual batch). Returns whether
+    /// the policy has no further work queued, plus the variables whose
+    /// incoming messages changed (their beliefs need refreshing).
+    fn step_round(&mut self, exec: &mut dyn RoundExecutor) -> Result<(bool, Vec<VarId>)> {
+        match self.opts.policy {
+            IterationPolicy::Synchronous { eta_damping } => {
+                self.sync_round(exec, eta_damping)?;
+                let all = (0..self.model.num_vars()).map(VarId).collect();
+                Ok((true, all))
+            }
+            IterationPolicy::Residual { batch, eta_damping } => {
+                self.residual_batch(exec, batch.max(1), eta_damping)
+            }
+        }
+    }
+
+    /// Recompute the beliefs of `vars` through the executor, updating
+    /// them in place; returns the max belief delta over the refreshed
+    /// set (untouched beliefs are unchanged by construction).
+    fn refresh_beliefs(&mut self, exec: &mut dyn RoundExecutor, vars: &[VarId]) -> Result<f64> {
+        let mut pending = Vec::new();
+        let mut pending_vars = Vec::new();
+        let mut delta = 0.0_f64;
+        for v in vars {
+            match belief_request(&self.model, &self.state, *v)
+                .with_context(|| format!("belief of variable {}", v.0))?
+            {
+                BuiltRequest::Trivial(m) => {
+                    delta = delta.max(self.beliefs[v.0].dist(&m));
+                    self.beliefs[v.0] = m;
+                }
+                BuiltRequest::Run(req) => {
+                    pending.push(req);
+                    pending_vars.push(*v);
+                }
+            }
+        }
+        let results = exec.run_batch(&pending).context("belief round")?;
+        self.beliefs_computed += vars.len();
+        for (v, m) in pending_vars.into_iter().zip(results) {
+            delta = delta.max(self.beliefs[v.0].dist(&m));
+            self.beliefs[v.0] = m;
+        }
+        Ok(delta)
+    }
+
+    /// Jacobi round: every directed edge updates from the pre-round
+    /// state, then all messages commit (damped).
+    fn sync_round(&mut self, exec: &mut dyn RoundExecutor, eta: f64) -> Result<()> {
+        let mut reqs = Vec::with_capacity(self.edges.len());
+        for e in &self.edges {
+            match edge_request(&self.model, &self.state, *e)
+                .with_context(|| format!("edge update for factor {}", e.factor.0))?
+            {
+                BuiltRequest::Run(req) => reqs.push(req),
+                BuiltRequest::Trivial(_) => unreachable!("edge transforms always have nodes"),
+            }
+        }
+        let proposed = exec.run_batch(&reqs).context("message round")?;
+        for (e, new) in self.edges.clone().into_iter().zip(proposed) {
+            let damped = damp(self.state.get(e), &new, eta)?;
+            self.state.set(e, damped);
+        }
+        self.messages_sent += self.edges.len();
+        Ok(())
+    }
+
+    /// Residual-priority ("wildfire") batch: the highest-priority edges
+    /// update sequentially-greedily; their residuals re-prime the
+    /// priorities of downstream edges. Returns true when no edge has
+    /// priority above the convergence tolerance (quiescent).
+    fn residual_batch(
+        &mut self,
+        exec: &mut dyn RoundExecutor,
+        batch: usize,
+        eta: f64,
+    ) -> Result<(bool, Vec<VarId>)> {
+        let tol = self.opts.criteria.tol;
+        let mut order: Vec<usize> = (0..self.edges.len())
+            .filter(|i| self.priorities[*i] > tol)
+            .collect();
+        if order.is_empty() {
+            return Ok((true, Vec::new()));
+        }
+        order.sort_by(|a, b| {
+            self.priorities[*b]
+                .partial_cmp(&self.priorities[*a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(b))
+        });
+        order.truncate(batch);
+
+        let mut reqs = Vec::with_capacity(order.len());
+        for i in &order {
+            match edge_request(&self.model, &self.state, self.edges[*i])? {
+                BuiltRequest::Run(req) => reqs.push(req),
+                BuiltRequest::Trivial(_) => unreachable!("edge transforms always have nodes"),
+            }
+        }
+        let proposed = exec.run_batch(&reqs).context("residual batch")?;
+        // clear the selected priorities BEFORE re-priming: proposals were
+        // computed from the pre-batch state, so an edge committed later
+        // in this batch must keep the priming an earlier commit gave it
+        // (zeroing inside the commit loop would wipe it and could declare
+        // convergence on a stale message)
+        for i in &order {
+            self.priorities[*i] = 0.0;
+        }
+        let mut touched = Vec::with_capacity(order.len());
+        for (i, new) in order.iter().zip(proposed) {
+            let e = self.edges[*i];
+            let old = self.state.get(e).clone();
+            let damped = damp(&old, &new, eta)?;
+            let residual = damped.dist(&old);
+            self.state.set(e, damped);
+            // residual flows to the edges leaving the target variable
+            let target = e.target(&self.model);
+            if !touched.contains(&target) {
+                touched.push(target);
+            }
+            for (j, other) in self.edges.iter().enumerate() {
+                if other.factor != e.factor && other.source(&self.model) == target {
+                    self.priorities[j] += residual;
+                }
+            }
+        }
+        self.messages_sent += order.len();
+        Ok((self.priorities.iter().all(|p| *p <= tol), touched))
+    }
+}
+
+/// Max over variables of the per-belief max-abs change.
+pub fn belief_delta(old: &[GaussMessage], new: &[GaussMessage]) -> f64 {
+    old.iter()
+        .zip(new)
+        .map(|(o, n)| o.dist(n))
+        .fold(0.0, f64::max)
+}
+
+/// One-call convenience: build, run, report.
+pub fn solve(
+    model: GbpModel,
+    opts: GbpOptions,
+    exec: &mut dyn RoundExecutor,
+) -> Result<GbpReport> {
+    GbpSolver::new(model, opts)?.run(exec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Session;
+    use crate::gmp::matrix::{c64, CMatrix};
+    use crate::testutil::Rng;
+
+    fn proper(rng: &mut Rng, n: usize) -> GaussMessage {
+        GaussMessage::new(
+            (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+            CMatrix::random_psd(rng, n, 1.0).scale(0.2),
+        )
+    }
+
+    fn ring_model(rng: &mut Rng, n: usize, vars: usize) -> GbpModel {
+        let mut m = GbpModel::new(n);
+        let ids: Vec<_> = (0..vars)
+            .map(|i| m.add_variable(Some(proper(rng, n)), format!("x{i}")).unwrap())
+            .collect();
+        for i in 0..vars {
+            m.add_pairwise(
+                ids[i],
+                ids[(i + 1) % vars],
+                CMatrix::identity(n),
+                GaussMessage::isotropic(n, 0.2),
+            )
+            .unwrap();
+        }
+        m
+    }
+
+    #[test]
+    fn two_var_tree_converges_to_dense_marginals() {
+        let mut rng = Rng::new(1);
+        let n = 4;
+        let mut m = GbpModel::new(n);
+        let a = m.add_variable(Some(proper(&mut rng, n)), "a").unwrap();
+        let b = m.add_variable(Some(proper(&mut rng, n)), "b").unwrap();
+        m.add_pairwise(a, b, CMatrix::identity(n), GaussMessage::isotropic(n, 0.1))
+            .unwrap();
+        let dense = m.dense_marginals().unwrap();
+        let report = solve(m, GbpOptions::default(), &mut Session::golden()).unwrap();
+        assert!(report.converged(), "{:?}", report.stop);
+        assert!(report.iterations <= 5, "tree of depth 1 must converge fast");
+        for (got, want) in report.beliefs.iter().zip(&dense) {
+            assert!(got.dist(want) < 1e-9, "dist {}", got.dist(want));
+        }
+    }
+
+    #[test]
+    fn ring_is_cyclic_and_converges_with_exact_means() {
+        let mut rng = Rng::new(2);
+        let model = ring_model(&mut rng, 4, 4);
+        assert!(model.has_cycle());
+        let dense = model.dense_marginals().unwrap();
+        let report = solve(model, GbpOptions::default(), &mut Session::golden()).unwrap();
+        assert!(report.converged(), "stop {:?} after {} iters", report.stop, report.iterations);
+        // loopy GBP: means exact at the fixed point, covariances
+        // approximate (Weiss & Freeman 2001)
+        for (got, want) in report.beliefs.iter().zip(&dense) {
+            let mean_err = got
+                .mean
+                .iter()
+                .zip(&want.mean)
+                .map(|(a, b)| (*a - *b).abs())
+                .fold(0.0, f64::max);
+            assert!(mean_err < 1e-5, "mean err {mean_err}");
+            assert!(got.cov.dist(&want.cov) < 0.2, "cov err {}", got.cov.dist(&want.cov));
+        }
+    }
+
+    #[test]
+    fn damping_still_reaches_the_same_fixed_point() {
+        let mut rng = Rng::new(3);
+        let model = ring_model(&mut rng, 4, 5);
+        let undamped = solve(
+            model.clone(),
+            GbpOptions::default(),
+            &mut Session::golden(),
+        )
+        .unwrap();
+        let damped = solve(
+            model,
+            GbpOptions {
+                policy: IterationPolicy::Synchronous { eta_damping: 0.4 },
+                ..Default::default()
+            },
+            &mut Session::golden(),
+        )
+        .unwrap();
+        assert!(damped.converged());
+        let d = belief_delta(&undamped.beliefs, &damped.beliefs);
+        assert!(d < 1e-5, "fixed points differ by {d}");
+    }
+
+    #[test]
+    fn residual_policy_matches_synchronous_fixed_point() {
+        let mut rng = Rng::new(4);
+        let model = ring_model(&mut rng, 4, 4);
+        let sync = solve(model.clone(), GbpOptions::default(), &mut Session::golden()).unwrap();
+        let residual = solve(
+            model,
+            GbpOptions {
+                policy: IterationPolicy::Residual { batch: 3, eta_damping: 0.0 },
+                criteria: ConvergenceCriteria { max_iters: 400, ..Default::default() },
+                ..Default::default()
+            },
+            &mut Session::golden(),
+        )
+        .unwrap();
+        assert!(residual.converged(), "stop {:?}", residual.stop);
+        let d = belief_delta(&sync.beliefs, &residual.beliefs);
+        assert!(d < 1e-5, "policies disagree by {d}");
+        assert!(residual.messages_sent > 0);
+    }
+
+    #[test]
+    fn residual_full_batch_does_not_converge_prematurely() {
+        // batch == every directed edge: each batch pairs upstream and
+        // downstream edges, the regression case for the same-batch
+        // priority wipe (priming from an earlier commit must survive a
+        // later commit's priority reset)
+        let mut rng = Rng::new(7);
+        let model = ring_model(&mut rng, 4, 4);
+        let dense = model.dense_marginals().unwrap();
+        let report = solve(
+            model,
+            GbpOptions {
+                policy: IterationPolicy::Residual { batch: 8, eta_damping: 0.0 },
+                criteria: ConvergenceCriteria { tol: 1e-8, max_iters: 200, divergence: 1e6 },
+                ..Default::default()
+            },
+            &mut Session::golden(),
+        )
+        .unwrap();
+        assert!(report.converged(), "stop {:?}", report.stop);
+        for (got, want) in report.beliefs.iter().zip(&dense) {
+            let mean_err = got
+                .mean
+                .iter()
+                .zip(&want.mean)
+                .map(|(a, b)| (*a - *b).abs())
+                .fold(0.0, f64::max);
+            assert!(mean_err < 1e-6, "premature convergence: mean err {mean_err}");
+        }
+    }
+
+    #[test]
+    fn report_carries_history_and_counts() {
+        let mut rng = Rng::new(5);
+        let model = ring_model(&mut rng, 4, 3);
+        let edges = 2 * 3; // three pairwise factors, two directions
+        let report = solve(model, GbpOptions::default(), &mut Session::golden()).unwrap();
+        assert_eq!(report.delta_history.len(), report.iterations);
+        assert_eq!(report.messages_sent, edges * report.iterations);
+        // synchronous rounds refresh every belief, plus the baseline
+        assert_eq!(report.beliefs_computed, 3 * (report.iterations + 1));
+        assert_eq!(report.final_delta, *report.delta_history.last().unwrap());
+    }
+
+    #[test]
+    fn max_iters_is_reported_not_spun() {
+        let mut rng = Rng::new(6);
+        let model = ring_model(&mut rng, 4, 4);
+        let report = solve(
+            model,
+            GbpOptions {
+                criteria: ConvergenceCriteria { tol: 0.0, max_iters: 3, divergence: 1e6 },
+                ..Default::default()
+            },
+            &mut Session::golden(),
+        )
+        .unwrap();
+        assert_eq!(report.stop, StopReason::MaxIters);
+        assert_eq!(report.iterations, 3);
+    }
+}

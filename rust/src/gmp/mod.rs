@@ -18,4 +18,4 @@ pub mod schedule;
 pub use graph::{EdgeId, FactorGraph, NodeId, NodeKind};
 pub use matrix::{c64, CMatrix, CVector};
 pub use message::GaussMessage;
-pub use schedule::{MsgId, Schedule, ScheduleStep, StepOp};
+pub use schedule::{MsgId, Schedule, ScheduleError, ScheduleStep, StepOp};

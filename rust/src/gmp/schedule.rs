@@ -21,6 +21,21 @@ use super::nodes::{self, NodeError};
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct MsgId(pub usize);
 
+/// Errors raised while executing a schedule against the golden rules.
+///
+/// A malformed schedule (a step consuming a message id that no earlier
+/// step produced and no input binding supplied) is *data* reaching
+/// [`crate::engine::Session::run`] from callers, not a programming
+/// invariant of this crate, so it surfaces as a typed error rather than
+/// a panic.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ScheduleError {
+    #[error("schedule step {step} uses undefined message {msg}")]
+    UndefinedMessage { step: usize, msg: usize },
+    #[error(transparent)]
+    Node(#[from] NodeError),
+}
+
 /// What a schedule step computes.
 #[derive(Clone, Debug, PartialEq)]
 pub enum StepOp {
@@ -141,25 +156,26 @@ impl Schedule {
         graph: &FactorGraph,
         initial: &HashMap<MsgId, GaussMessage>,
         faddeev: bool,
-    ) -> Result<HashMap<MsgId, GaussMessage>, NodeError> {
+    ) -> Result<HashMap<MsgId, GaussMessage>, ScheduleError> {
         let mut env: HashMap<MsgId, GaussMessage> = initial.clone();
-        for step in &self.steps {
-            let msg = |id: &MsgId| -> &GaussMessage {
-                env.get(id).unwrap_or_else(|| panic!("schedule uses undefined message {id:?}"))
+        for (i, step) in self.steps.iter().enumerate() {
+            let msg = |id: &MsgId| -> Result<&GaussMessage, ScheduleError> {
+                env.get(id)
+                    .ok_or(ScheduleError::UndefinedMessage { step: i, msg: id.0 })
             };
             let out = match &step.op {
-                StepOp::Equality { x, y } => nodes::equality(msg(x), msg(y))?,
-                StepOp::Add { x, y } => nodes::add(msg(x), msg(y)),
-                StepOp::Multiply { x, a } => nodes::multiply(msg(x), graph.state(*a)),
+                StepOp::Equality { x, y } => nodes::equality(msg(x)?, msg(y)?)?,
+                StepOp::Add { x, y } => nodes::add(msg(x)?, msg(y)?),
+                StepOp::Multiply { x, a } => nodes::multiply(msg(x)?, graph.state(*a)),
                 StepOp::CompoundObservation { x, y, a } => {
-                    nodes::compound_observation(msg(x), msg(y), graph.state(*a), faddeev)?
+                    nodes::compound_observation(msg(x)?, msg(y)?, graph.state(*a), faddeev)?
                 }
                 StepOp::CompoundEquality { x, y, a } => {
                     // weight-form dual executed through moment conversion
-                    let (wx, wxm) = msg(x)
+                    let (wx, wxm) = msg(x)?
                         .to_weight_form()
                         .ok_or(NodeError::Singular("schedule: V_X weight"))?;
-                    let (wy, wym) = msg(y)
+                    let (wy, wym) = msg(y)?
                         .to_weight_form()
                         .ok_or(NodeError::Singular("schedule: V_Y weight"))?;
                     let (wz, wzm) =
@@ -264,6 +280,31 @@ mod tests {
         for l in &live {
             assert!(l.len() <= sched.num_msgs);
         }
+    }
+
+    #[test]
+    fn undefined_message_is_a_typed_error_not_a_panic() {
+        let (g, sched, mut init) = rls_setup(2);
+        // drop the binding for the second section's observation: step 1
+        // then consumes a message nothing defines
+        let missing = sched.steps[1].op.inputs()[1];
+        init.remove(&missing);
+        let err = sched.execute_golden(&g, &init, false).unwrap_err();
+        assert_eq!(err, ScheduleError::UndefinedMessage { step: 1, msg: missing.0 });
+        assert!(format!("{err}").contains("undefined message"));
+    }
+
+    #[test]
+    fn node_errors_still_surface_through_schedule_error() {
+        let (g, sched, mut init) = rls_setup(1);
+        // a zero-covariance prior makes the equality-form conversions
+        // inside the compound update singular only if abused; instead
+        // force a singular G by zeroing both covariances
+        for msg in init.values_mut() {
+            *msg = GaussMessage::new(msg.mean.clone(), CMatrix::zeros(4, 4));
+        }
+        let err = sched.execute_golden(&g, &init, false).unwrap_err();
+        assert!(matches!(err, ScheduleError::Node(_)), "{err:?}");
     }
 
     #[test]

@@ -18,7 +18,9 @@
 //!   simulator, [`isa`] + [`compiler`], [`engine`] (the unified
 //!   Workload/Engine/Session execution surface), [`coordinator`] (the
 //!   Fig. 5 "external processor" command protocol, request queue,
-//!   batcher), [`dsp`] baseline and [`model`] area/technology models.
+//!   batcher), [`gbp`] (loopy Gaussian belief propagation over cyclic
+//!   graphs, every inner update dispatched through the engine surface),
+//!   [`dsp`] baseline and [`model`] area/technology models.
 //! * **L2/L1 (python/, build-time only)** — the GMP compute graph in JAX
 //!   with fused Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt` and
 //!   executed from [`runtime`] via the PJRT C API. Python never runs on
@@ -57,6 +59,7 @@ pub mod dsp;
 pub mod engine;
 pub mod fixed;
 pub mod fgp;
+pub mod gbp;
 pub mod gmp;
 pub mod isa;
 pub mod model;

@@ -6,7 +6,7 @@ use std::sync::atomic::Ordering;
 use std::time::Duration;
 
 use fgp_repro::coordinator::backend::{CnRequestData, FgpSimBackend, GoldenBackend};
-use fgp_repro::coordinator::{BatchPolicy, CnServer, FgpDevice, ServerConfig};
+use fgp_repro::coordinator::{BatchPolicy, CnServer, FgpDevice, ProtocolError, ServerConfig};
 use fgp_repro::fgp::processor::{Command, Reply};
 use fgp_repro::fgp::FgpConfig;
 use fgp_repro::gmp::matrix::{c64, CMatrix};
@@ -136,14 +136,15 @@ fn boot_failure_reported_synchronously() {
 #[test]
 fn device_protocol_survives_slot_abuse() {
     let dev = FgpDevice::start(FgpConfig::default());
-    // out-of-range slots must reply errors, device must keep serving
+    // out-of-range slots must surface typed device errors, and the
+    // device must keep serving afterwards
     for slot in [200u8, 255] {
-        match dev.command(Command::ReadMessage { slot }) {
-            Reply::Error(_) => {}
-            other => panic!("expected error, got {other:?}"),
+        match dev.read_message(slot) {
+            Err(ProtocolError::Device(e)) => assert!(e.contains("out of range"), "{e}"),
+            other => panic!("expected typed device error, got {other:?}"),
         }
     }
-    assert!(matches!(dev.command(Command::Status), Reply::Status { .. }));
+    assert!(matches!(dev.command(Command::Status), Ok(Reply::Status { .. })));
     drop(dev);
 }
 

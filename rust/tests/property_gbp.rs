@@ -1,0 +1,135 @@
+//! Property tests for the GBP invariants, on the crate's own
+//! deterministic property harness (`testutil::proptest_cases`):
+//!
+//! 1. damping is a convex combination in information form, so it
+//!    preserves Hermitian positive-definite information matrices for
+//!    any admissible η;
+//! 2. on tree graphs, converged GBP beliefs equal the exact dense
+//!    information-form solve to 1e-9 (belief propagation is exact on
+//!    trees — and the scheduled sweeps are just trees, so this is the
+//!    bridge between the two solver families).
+
+use fgp_repro::engine::Session;
+use fgp_repro::gbp::{damp, solve, ConvergenceCriteria, GbpModel, GbpOptions};
+use fgp_repro::gmp::matrix::{c64, CMatrix};
+use fgp_repro::gmp::message::GaussMessage;
+use fgp_repro::testutil::{proptest_cases, Rng};
+
+fn random_msg(rng: &mut Rng, n: usize) -> GaussMessage {
+    GaussMessage::new(
+        (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+        CMatrix::random_psd(rng, n, 0.5),
+    )
+}
+
+/// z^H W z for a random probe z (positive for positive-definite W).
+fn quad_form(rng: &mut Rng, w: &CMatrix) -> f64 {
+    let n = w.rows;
+    let z: Vec<c64> = (0..n).map(|_| c64::new(rng.normal(), rng.normal())).collect();
+    let wz = w.matvec(&z);
+    z.iter()
+        .zip(&wz)
+        .map(|(a, b)| (a.conj() * *b).re)
+        .sum()
+}
+
+#[test]
+fn damping_preserves_spd_information_matrices() {
+    proptest_cases(40, |rng| {
+        let n = 2 + rng.below(4);
+        let old = random_msg(rng, n);
+        let new = random_msg(rng, n);
+        let eta = rng.range(0.0, 0.95);
+        let damped = damp(&old, &new, eta).expect("damping proper messages stays proper");
+        let (w, _) = damped
+            .to_weight_form()
+            .expect("damped covariance must stay invertible");
+        // Hermitian...
+        assert!(
+            w.hermitian_defect() < 1e-7 * (1.0 + w.max_abs()),
+            "hermitian defect {}",
+            w.hermitian_defect()
+        );
+        // ...and positive definite along random probes
+        for _ in 0..5 {
+            let q = quad_form(rng, &w);
+            assert!(q > 0.0, "information matrix lost positivity: z^H W z = {q}");
+        }
+    });
+}
+
+#[test]
+fn damping_interpolates_information() {
+    // the damped weight matrix is exactly (1-η)W_new + ηW_old
+    proptest_cases(30, |rng| {
+        let n = 2 + rng.below(3);
+        let old = random_msg(rng, n);
+        let new = random_msg(rng, n);
+        let eta = rng.range(0.05, 0.9);
+        let damped = damp(&old, &new, eta).unwrap();
+        let (wo, _) = old.to_weight_form().unwrap();
+        let (wn, _) = new.to_weight_form().unwrap();
+        let (wd, _) = damped.to_weight_form().unwrap();
+        let want = wn.scale(1.0 - eta).add(&wo.scale(eta));
+        assert!(
+            wd.dist(&want) < 1e-6 * (1.0 + want.max_abs()),
+            "dist {}",
+            wd.dist(&want)
+        );
+    });
+}
+
+/// Random tree (chain) models: proper priors everywhere, invertible
+/// Hermitian-PD pairwise states, a unary observation on every variable.
+fn random_chain(rng: &mut Rng, n: usize, vars: usize) -> GbpModel {
+    let mut m = GbpModel::new(n);
+    let ids: Vec<_> = (0..vars)
+        .map(|i| m.add_variable(Some(random_msg(rng, n)), format!("x{i}")).unwrap())
+        .collect();
+    for i in 0..vars - 1 {
+        // Hermitian PD + ridge: always invertible
+        let a = CMatrix::random_psd(rng, n, 1.0).scale(0.3);
+        let noise = GaussMessage::isotropic(n, rng.range(0.05, 0.3));
+        m.add_pairwise(ids[i], ids[i + 1], a, noise).unwrap();
+    }
+    for (i, id) in ids.iter().enumerate() {
+        let c = CMatrix::random(rng, n, n).scale(0.4);
+        let obs = random_msg(rng, n);
+        m.add_unary(*id, c, obs).unwrap_or_else(|e| panic!("unary {i}: {e:#}"));
+    }
+    m
+}
+
+#[test]
+fn tree_gbp_equals_dense_solve() {
+    // BP is exact on trees. The dense reference goes through one big
+    // LU solve (different arithmetic path, condition-amplified), so
+    // the bound here is 1e-8; the bit-for-bit 1e-9 contract against
+    // the *scheduled sweep* (same arithmetic) lives in
+    // integration_gbp::tree_gbp_reproduces_the_scheduled_sweep.
+    proptest_cases(12, |rng| {
+        let n = 3;
+        let vars = 3 + rng.below(3);
+        let model = random_chain(rng, n, vars);
+        assert!(!model.has_cycle());
+        let dense = model.dense_marginals().expect("proper tree model");
+        let report = solve(
+            model,
+            GbpOptions {
+                criteria: ConvergenceCriteria { tol: 1e-10, max_iters: 60, divergence: 1e6 },
+                ..Default::default()
+            },
+            &mut Session::golden(),
+        )
+        .expect("tree solve");
+        assert!(report.converged(), "tree GBP must converge: {:?}", report.stop);
+        for (k, (got, want)) in report.beliefs.iter().zip(&dense).enumerate() {
+            let scale = 1.0 + want.cov.max_abs();
+            assert!(
+                got.dist(want) < 1e-8 * scale,
+                "belief {k} differs from dense solve by {} (scale {scale})",
+                got.dist(want)
+            );
+        }
+    });
+}
