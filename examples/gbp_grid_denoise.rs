@@ -67,6 +67,7 @@ fn main() -> anyhow::Result<()> {
         policy: IterationPolicy::Synchronous { eta_damping: 0.0 },
         criteria: ConvergenceCriteria { tol: 2e-2, max_iters: 40, divergence: 1e3 },
         init_var: 4.0,
+        ..Default::default()
     };
     let dev = p.run(&mut Session::fgp_sim(FgpConfig::default()), device_opts)?;
     println!(

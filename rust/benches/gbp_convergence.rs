@@ -113,6 +113,7 @@ fn main() -> anyhow::Result<()> {
         policy: IterationPolicy::Synchronous { eta_damping: 0.0 },
         criteria: ConvergenceCriteria { tol: 0.0, max_iters: 1, divergence: 1e9 },
         init_var: 4.0,
+        ..Default::default()
     };
     let model = p.model()?;
     let edges = fgp_repro::gbp::directed_edges(&model).len();

@@ -1,0 +1,87 @@
+//! E13 (extension) — nonlinear relinearization: convergence and cost.
+//!
+//! Three axes:
+//!   1. convergence: rounds to the Gauss–Newton fixed point for the
+//!      EKF and sigma-point linearizers on the bearing-only tracker
+//!      (golden engine — pure algorithm behaviour), with divergence as
+//!      a hard failure (the CI regression gate);
+//!   2. accuracy: tracker RMSE vs. the dense per-step Gauss–Newton
+//!      reference, EKF vs. UKF;
+//!   3. device cost: simulated cycles per relinearization round on the
+//!      cycle-accurate FGP, and the program-cache hit rate across
+//!      rounds and steps (one compile must serve the whole track).
+//!
+//! Run: `cargo bench --bench nonlinear_relin`
+//! CI smoke (short track, fewer rounds): add `-- --smoke`.
+
+use fgp_repro::apps::bearing::BearingProblem;
+use fgp_repro::benchutil::{banner, fmt_dur};
+use fgp_repro::engine::Session;
+use fgp_repro::fgp::FgpConfig;
+use fgp_repro::nonlinear::{FirstOrder, Linearizer, SigmaPoint};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (steps, sensors, rounds) = if smoke { (4, 3, 2) } else { (12, 4, 4) };
+    let p = BearingProblem::synthetic(steps, sensors, 1e-4, 17);
+    println!(
+        "bearing-only tracking: {steps} steps, {sensors} sensors{}",
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    banner("convergence & accuracy (golden engine)");
+    println!(
+        "{:>6} {:>10} {:>12} {:>12} {:>10}",
+        "lin", "rounds", "rmse", "vs GN ref", "wall"
+    );
+    let reference = p.reference_track()?;
+    let ukf = SigmaPoint::default();
+    let linearizers: [(&str, &dyn Linearizer); 2] = [("ekf", &FirstOrder), ("ukf", &ukf)];
+    for (tag, lin) in linearizers {
+        let t0 = Instant::now();
+        let out = p.track(&mut Session::golden(), lin, rounds)?;
+        let worst = BearingProblem::max_deviation(&out.estimates, &reference);
+        println!(
+            "{tag:>6} {:>10} {:>12.5} {:>12.2e} {:>10}",
+            out.rounds_total,
+            out.rmse,
+            worst,
+            fmt_dur(t0.elapsed())
+        );
+        // regression gate: neither linearizer may diverge, and both
+        // must stay in the reference's regime
+        if out.diverged {
+            anyhow::bail!("{tag} tracker diverged on the bearing-only workload");
+        }
+        if out.rmse > 0.1 {
+            anyhow::bail!("{tag} tracker rmse {} left the reference regime", out.rmse);
+        }
+    }
+
+    banner("device cost (cycle-accurate FGP)");
+    let mut sim = Session::fgp_sim(FgpConfig::default());
+    let t0 = Instant::now();
+    let out = p.track(&mut sim, &FirstOrder, rounds)?;
+    let stats = sim.cache_stats();
+    if out.diverged {
+        anyhow::bail!("device tracker diverged");
+    }
+    println!(
+        "rounds {} | rmse {:.5} | cache {} miss / {} hits | wall {}",
+        out.rounds_total,
+        out.rmse,
+        stats.misses,
+        stats.hits,
+        fmt_dur(t0.elapsed())
+    );
+    if stats.misses != 1 {
+        anyhow::bail!(
+            "expected one compile for the whole track (fixed sweep shape), got {} misses",
+            stats.misses
+        );
+    }
+
+    println!("\nnonlinear_relin OK");
+    Ok(())
+}

@@ -1,0 +1,309 @@
+//! Bearing-only target tracking: EKF vs. sigma-point (UKF) on the FGP.
+//!
+//! Fixed sensors measure only the **bearing** (angle) to a moving
+//! target — the classic hard nonlinear tracking problem: a single
+//! bearing carries no range information, so position emerges from
+//! triangulating several sensors and fusing over time through the
+//! motion model. Each time step is one [`NonlinearProblem`]: the
+//! constant-velocity motion model rides *inside* the sweep graph as a
+//! multiplier + adder prelude, followed by one relinearized
+//! compound-observation section per sensor — predict + update as a
+//! single fixed-shape workload, so every round of every step after the
+//! very first is a program-cache hit.
+//!
+//! The state is `[px, py, vx, vy]` (real, embedded in the device's
+//! 4-dim complex state). Sensors sit west of the field, so bearings
+//! stay inside (−π/2, π/2) and never wrap. The pluggable
+//! [`Linearizer`] makes this *the* EKF-vs-UKF comparison app: the same
+//! problem, the same engine, only the linearization rule differs.
+
+use anyhow::Result;
+use std::sync::Arc;
+
+use crate::engine::Session;
+use crate::gbp::RoundExecutor;
+use crate::gmp::matrix::{c64, CMatrix};
+use crate::gmp::message::GaussMessage;
+use crate::nonlinear::{
+    gauss_newton, IteratedRelinearization, Linearizer, NonlinearFactor, NonlinearProblem,
+    RelinOptions, RelinStop,
+};
+use crate::testutil::Rng;
+
+/// A bearing-only tracking scenario.
+#[derive(Clone, Debug)]
+pub struct BearingProblem {
+    /// Fixed sensor positions.
+    pub sensors: Vec<(f64, f64)>,
+    /// True state per step: `[px, py, vx, vy]`.
+    pub truth: Vec<[f64; 4]>,
+    /// Measured bearings, `[step][sensor]` (radians).
+    pub bearings: Vec<Vec<f64>>,
+    pub steps: usize,
+    /// Bearing noise variance (rad²).
+    pub noise_var: f64,
+    /// Process noise variance on the velocity components.
+    pub process_var: f64,
+    /// Floor applied to the observation variance every estimator uses
+    /// (data is still generated at `noise_var`). Set to the Q5.10-safe
+    /// default by [`BearingProblem::synthetic`]; lower it for
+    /// pure-golden noise-sweep studies.
+    pub obs_var_floor: f64,
+    pub dt: f64,
+}
+
+/// Result of one tracking run.
+#[derive(Clone, Debug)]
+pub struct TrackOutcome {
+    /// Estimated positions per step.
+    pub estimates: Vec<(f64, f64)>,
+    /// Position RMSE against the true track.
+    pub rmse: f64,
+    /// Relinearization rounds across all steps.
+    pub rounds_total: usize,
+    /// True if any step's relinearization diverged.
+    pub diverged: bool,
+}
+
+impl BearingProblem {
+    /// Target crossing the unit field with constant velocity plus a
+    /// little process noise; `num_sensors` sensors on the western edge.
+    pub fn synthetic(steps: usize, num_sensors: usize, noise_var: f64, seed: u64) -> Self {
+        assert!(steps >= 1 && num_sensors >= 2, "need steps and at least two sensors");
+        let mut rng = Rng::new(seed);
+        let sensors: Vec<(f64, f64)> = (0..num_sensors)
+            .map(|i| (-0.4, 0.1 + 0.8 * i as f64 / (num_sensors.max(2) - 1) as f64))
+            .collect();
+        let dt = 1.0;
+        let process_var = 1e-5;
+        let mut state = [0.2, 0.3, 0.045, 0.025];
+        let mut truth = Vec::with_capacity(steps);
+        let mut bearings = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            state[0] += state[2] * dt;
+            state[1] += state[3] * dt;
+            state[2] += rng.normal() * process_var.sqrt();
+            state[3] += rng.normal() * process_var.sqrt();
+            truth.push(state);
+            bearings.push(
+                sensors
+                    .iter()
+                    .map(|&(sx, sy)| {
+                        (state[1] - sy).atan2(state[0] - sx) + rng.normal() * noise_var.sqrt()
+                    })
+                    .collect(),
+            );
+        }
+        BearingProblem {
+            sensors,
+            truth,
+            bearings,
+            steps,
+            noise_var,
+            process_var,
+            obs_var_floor: 2e-3,
+            dt,
+        }
+    }
+
+    /// Constant-velocity transition matrix.
+    pub fn motion_matrix(&self, n: usize) -> CMatrix {
+        let mut f = CMatrix::identity(n);
+        f[(0, 2)] = c64::new(self.dt, 0.0);
+        f[(1, 3)] = c64::new(self.dt, 0.0);
+        f
+    }
+
+    /// Process-noise message (zero mean; tiny position jitter keeps the
+    /// covariance comfortably positive on the fixed-point datapath).
+    pub fn process_noise(&self, n: usize) -> GaussMessage {
+        let mut q = CMatrix::zeros(n, n);
+        q[(0, 0)] = c64::new(1e-6, 0.0);
+        q[(1, 1)] = c64::new(1e-6, 0.0);
+        q[(2, 2)] = c64::new(self.process_var, 0.0);
+        q[(3, 3)] = c64::new(self.process_var, 0.0);
+        GaussMessage::new(vec![c64::ZERO; n], q)
+    }
+
+    /// Initial belief: centered on the field with a position spread
+    /// that keeps the sigma points clear of the sensor line (the UT
+    /// must never straddle a bearing singularity), small velocity
+    /// uncertainty.
+    pub fn initial_belief(n: usize) -> GaussMessage {
+        let mut mean = vec![c64::ZERO; n];
+        mean[0] = c64::new(0.5, 0.0);
+        mean[1] = c64::new(0.5, 0.0);
+        let mut cov = CMatrix::zeros(n, n);
+        cov[(0, 0)] = c64::new(0.04, 0.0);
+        cov[(1, 1)] = c64::new(0.04, 0.0);
+        cov[(2, 2)] = c64::new(0.01, 0.0);
+        cov[(3, 3)] = c64::new(0.01, 0.0);
+        GaussMessage::new(mean, cov)
+    }
+
+    /// One time step as a [`NonlinearProblem`]: motion prelude + one
+    /// bearing factor per sensor (analytic Jacobians). The observation
+    /// noise every estimator weights with is floored at
+    /// `obs_var_floor` (device-safe default; tune the field directly
+    /// for golden-only studies below the floor).
+    pub fn step_problem(&self, step: usize, prior: GaussMessage) -> Result<NonlinearProblem> {
+        let n = prior.dim();
+        let var = self.noise_var.max(self.obs_var_floor);
+        let factors = self
+            .sensors
+            .iter()
+            .zip(&self.bearings[step])
+            .map(|(&(sx, sy), &z)| {
+                let h = move |x: &[f64]| vec![(x[1] - sy).atan2(x[0] - sx)];
+                let jac = move |x: &[f64]| {
+                    let dx = x[0] - sx;
+                    let dy = x[1] - sy;
+                    let r2 = (dx * dx + dy * dy).max(1e-9);
+                    let mut row = vec![0.0; x.len()];
+                    row[0] = -dy / r2;
+                    row[1] = dx / r2;
+                    vec![row]
+                };
+                Ok(NonlinearFactor::new(n, 1, Arc::new(h), vec![z], var)?
+                    .with_jacobian(Arc::new(jac)))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(NonlinearProblem {
+            n,
+            prior,
+            motion: Some((self.motion_matrix(n), self.process_noise(n))),
+            factors,
+        })
+    }
+
+    /// Track through a session with the given linearizer, `rounds`
+    /// relinearization rounds per step.
+    pub fn track(
+        &self,
+        session: &mut Session,
+        linearizer: &dyn Linearizer,
+        rounds: usize,
+    ) -> Result<TrackOutcome> {
+        self.track_impl(linearizer, rounds, |driver, problem| driver.run(session, problem))
+    }
+
+    /// Track through any [`RoundExecutor`] — e.g. an
+    /// [`crate::coordinator::FgpFarm`] serving the sweeps.
+    pub fn track_with(
+        &self,
+        exec: &mut dyn RoundExecutor,
+        linearizer: &dyn Linearizer,
+        rounds: usize,
+    ) -> Result<TrackOutcome> {
+        self.track_impl(linearizer, rounds, |driver, problem| driver.run_with(exec, problem))
+    }
+
+    fn track_impl(
+        &self,
+        linearizer: &dyn Linearizer,
+        rounds: usize,
+        mut run: impl FnMut(
+            &IteratedRelinearization,
+            &NonlinearProblem,
+        ) -> Result<crate::nonlinear::RelinReport>,
+    ) -> Result<TrackOutcome> {
+        let n = crate::paper::N;
+        let driver = IteratedRelinearization::with_options(
+            linearizer,
+            RelinOptions { max_rounds: rounds.max(1), tol: 1e-7, ..Default::default() },
+        );
+        let mut belief = Self::initial_belief(n);
+        let mut estimates = Vec::with_capacity(self.steps);
+        let mut rounds_total = 0;
+        let mut diverged = false;
+        for step in 0..self.steps {
+            let problem = self.step_problem(step, belief)?;
+            let report = run(&driver, &problem)?;
+            rounds_total += report.rounds;
+            diverged |= report.stop == RelinStop::Diverged;
+            estimates.push((report.belief.mean[0].re, report.belief.mean[1].re));
+            belief = report.belief;
+        }
+        Ok(TrackOutcome { estimates, rmse: self.rmse(&estimates), rounds_total, diverged })
+    }
+
+    /// Dense reference track: per-step Gauss–Newton MAP solves threaded
+    /// through the same motion model (no engine involved).
+    pub fn reference_track(&self) -> Result<Vec<GaussMessage>> {
+        let n = crate::paper::N;
+        let mut belief = Self::initial_belief(n);
+        let mut out = Vec::with_capacity(self.steps);
+        for step in 0..self.steps {
+            let problem = self.step_problem(step, belief)?;
+            let post = gauss_newton(&problem, 50, 1e-12)?;
+            out.push(post.clone());
+            belief = post;
+        }
+        Ok(out)
+    }
+
+    fn rmse(&self, estimates: &[(f64, f64)]) -> f64 {
+        let se: f64 = estimates
+            .iter()
+            .zip(&self.truth)
+            .map(|(e, t)| (e.0 - t[0]).powi(2) + (e.1 - t[1]).powi(2))
+            .sum();
+        (se / self.steps as f64).sqrt()
+    }
+
+    /// Worst per-step positional deviation of a track from a reference
+    /// (e.g. [`BearingProblem::reference_track`]) — the conformance
+    /// metric the tests and the bench gate share.
+    pub fn max_deviation(estimates: &[(f64, f64)], reference: &[GaussMessage]) -> f64 {
+        estimates
+            .iter()
+            .zip(reference)
+            .map(|(e, w)| ((e.0 - w.mean[0].re).powi(2) + (e.1 - w.mean[1].re).powi(2)).sqrt())
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fgp::FgpConfig;
+    use crate::nonlinear::{FirstOrder, SigmaPoint};
+
+    #[test]
+    fn ekf_and_ukf_both_track_on_golden() {
+        let p = BearingProblem::synthetic(8, 4, 1e-4, 3);
+        let ekf = p.track(&mut Session::golden(), &FirstOrder, 3).unwrap();
+        let ukf = p.track(&mut Session::golden(), &SigmaPoint::default(), 3).unwrap();
+        assert!(!ekf.diverged && !ukf.diverged);
+        assert!(ekf.rmse < 0.05, "ekf rmse {}", ekf.rmse);
+        assert!(ukf.rmse < 0.05, "ukf rmse {}", ukf.rmse);
+    }
+
+    #[test]
+    fn tracker_conforms_to_gauss_newton_reference() {
+        let p = BearingProblem::synthetic(6, 4, 1e-4, 5);
+        let reference = p.reference_track().unwrap();
+        let ekf = p.track(&mut Session::golden(), &FirstOrder, 6).unwrap();
+        let d = BearingProblem::max_deviation(&ekf.estimates, &reference);
+        assert!(d < 1e-4, "EKF vs reference: {d}");
+        // the UT residual widens the effective noise while the belief is
+        // wide (step 0), so the UKF tracks the Jacobian reference
+        // approximately, not exactly
+        let ukf = p.track(&mut Session::golden(), &SigmaPoint::default(), 6).unwrap();
+        let d = BearingProblem::max_deviation(&ukf.estimates, &reference);
+        assert!(d < 0.05, "UKF vs reference: {d}");
+    }
+
+    #[test]
+    fn device_tracks_and_caches_across_rounds_and_steps() {
+        let p = BearingProblem::synthetic(5, 4, 1e-3, 7);
+        let mut sim = Session::fgp_sim(FgpConfig::default());
+        let out = p.track(&mut sim, &FirstOrder, 2).unwrap();
+        assert!(!out.diverged);
+        assert!(out.rmse < 0.15, "device rmse {}", out.rmse);
+        // one shape for every round of every step: exactly one compile
+        let stats = sim.cache_stats();
+        assert_eq!(stats.misses, 1, "{stats:?}");
+        assert_eq!(stats.hits as usize, out.rounds_total - 1, "{stats:?}");
+    }
+}

@@ -12,8 +12,14 @@
 //! * [`lmmse`] — block LMMSE symbol equalization (one compound node);
 //! * [`smoother`] — two-pass fixed-interval smoothing (forward filter,
 //!   backward conditioning, equality fusion) as one program;
-//! * [`toa`] — time-of-arrival position estimation (§I ref [6]),
-//!   iterative relinearization as repeated cache-hitting sweeps;
+//! * [`toa`] — time-of-arrival position estimation (§I ref [6]) on the
+//!   [`crate::nonlinear`] iterated-relinearization driver (repeated
+//!   cache-hitting sweeps to the Gauss–Newton fixed point);
+//! * [`bearing`] — bearing-only target tracking: per-step predict +
+//!   update as one fixed-shape nonlinear workload, EKF vs. sigma-point
+//!   linearizers compared on the same engine;
+//! * [`rangechain`] — the pose loop with nonlinear per-leg range
+//!   factors, relinearized inside loopy GBP each round;
 //! * [`receiver`] — the §III multi-program baseband receiver, two
 //!   workload shapes alternating through one session;
 //! * [`channel`] — synthetic channels, constellations and AWGN sources
@@ -27,11 +33,13 @@
 //! [`crate::fgp`]): unit-magnitude-bounded operands, well-conditioned
 //! covariances.
 
+pub mod bearing;
 pub mod channel;
 pub mod grid;
 pub mod kalman;
 pub mod lmmse;
 pub mod posechain;
+pub mod rangechain;
 pub mod receiver;
 pub mod rls;
 pub mod smoother;

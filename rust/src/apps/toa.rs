@@ -1,22 +1,28 @@
-//! Time-of-arrival (ToA) position estimation as GMP (§I ref [6]).
+//! Time-of-arrival (ToA) position estimation as nonlinear GMP (§I ref [6]).
 //!
-//! Anchors at known positions measure noisy ranges to a target; each
-//! measurement, linearized around the running estimate, is one
-//! compound-observation section refining a Gaussian belief over the 2-D
-//! position (embedded in the FGP's 4-dim state: [px, py, 0, 0]). One
-//! relinearization *round* — a sweep over all anchors at a fixed
-//! linearization point — is a [`ToaSweep`] workload; the outer loop
-//! re-runs it with updated linearizations. Because only the streamed
-//! state matrices change between rounds, every round after the first is
-//! a program-cache hit on the session.
+//! Anchors at known positions measure noisy ranges to a target: a
+//! textbook nonlinear estimation problem, expressed here as a
+//! [`NonlinearProblem`] — one range [`NonlinearFactor`] per anchor over
+//! a Gaussian belief on the 2-D position (embedded in the FGP's 4-dim
+//! state as `[px, py, 0, 0]`) — and solved by the
+//! [`IteratedRelinearization`] driver: re-linearize at the current
+//! belief, run one compound-observation sweep over all anchors, move
+//! the linearization point, repeat to the Gauss–Newton fixed point.
+//! The sweep's graph shape is fixed across rounds, so every round after
+//! the first is a program-cache hit on the session. (This app used to
+//! own a private relinearization loop; the driver in
+//! [`crate::nonlinear`] is that loop, generalized.)
+
+use std::sync::Arc;
 
 use anyhow::Result;
-use std::collections::HashMap;
 
-use crate::engine::{bind_streamed, preload_id, Execution, Session, Workload};
+use crate::engine::Session;
 use crate::gmp::matrix::{c64, CMatrix};
 use crate::gmp::message::GaussMessage;
-use crate::gmp::{FactorGraph, MsgId, Schedule};
+use crate::nonlinear::{
+    FirstOrder, IteratedRelinearization, NonlinearFactor, NonlinearProblem, RelinOptions,
+};
 use crate::testutil::Rng;
 
 /// A ToA multilateration problem.
@@ -36,26 +42,8 @@ pub struct ToaProblem {
 pub struct ToaOutcome {
     pub estimate: (f64, f64),
     pub error: f64,
-    /// Belief trace after each measurement round.
+    /// Belief trace after each relinearization round.
     pub trace: Vec<(f64, f64)>,
-}
-
-/// One relinearization round: a chain of compound-observation sections
-/// (one per anchor) at a fixed linearization point.
-#[derive(Clone, Debug)]
-pub struct ToaSweep<'p> {
-    pub problem: &'p ToaProblem,
-    /// Belief entering the round (the chain's prior).
-    pub belief: GaussMessage,
-    /// Linearization point for the whole round.
-    pub lin: (f64, f64),
-}
-
-/// Result of one sweep.
-#[derive(Clone, Debug)]
-pub struct ToaRound {
-    pub belief: GaussMessage,
-    pub estimate: (f64, f64),
 }
 
 impl ToaProblem {
@@ -84,25 +72,6 @@ impl ToaProblem {
         ToaProblem { anchors, target, ranges, noise_var }
     }
 
-    /// Linearized measurement row at the current estimate `p`:
-    /// `r_i ≈ d_i(p) + u_i · (x - p)` with `u_i` the unit vector from
-    /// anchor i to p. Returns (A, pseudo-observation message).
-    fn linearize(&self, i: usize, p: (f64, f64), n: usize) -> (CMatrix, GaussMessage) {
-        let a = self.anchors[i];
-        let dx = p.0 - a.0;
-        let dy = p.1 - a.1;
-        let d = (dx * dx + dy * dy).sqrt().max(1e-6);
-        let (ux, uy) = (dx / d, dy / d);
-        let mut amat = CMatrix::zeros(n, n);
-        amat[(0, 0)] = c64::new(ux, 0.0);
-        amat[(0, 1)] = c64::new(uy, 0.0);
-        // pseudo-observation: z = r_i - d(p) + u·p (scalar in dim 0)
-        let z = self.ranges[i] - d + ux * p.0 + uy * p.1;
-        let mut y = vec![c64::ZERO; n];
-        y[0] = c64::new(z, 0.0);
-        (amat, GaussMessage::observation(&y, self.noise_var.max(1e-4)))
-    }
-
     /// Initial belief: centered on the field (position in the first two
     /// components), covariance 0.25 I.
     pub fn initial_belief(n: usize) -> GaussMessage {
@@ -112,83 +81,62 @@ impl ToaProblem {
         GaussMessage::new(mean, CMatrix::scaled_identity(n, 0.25))
     }
 
-    /// Run `rounds` sweeps over all anchors through the session,
-    /// relinearizing each sweep.
+    /// The problem as a [`NonlinearProblem`]: one range factor per
+    /// anchor (analytic Jacobian — the unit vector from anchor to
+    /// estimate), the centered initial belief as prior. The observation
+    /// noise is floored at 1e-4 so the Q5.10 datapath does not quantize
+    /// the observation covariance to zero.
+    pub fn nonlinear_problem(&self, n: usize) -> Result<NonlinearProblem> {
+        let var = self.noise_var.max(1e-4);
+        let factors = self
+            .anchors
+            .iter()
+            .zip(&self.ranges)
+            .map(|(&(ax, ay), &r)| {
+                let h = move |x: &[f64]| {
+                    vec![((x[0] - ax).powi(2) + (x[1] - ay).powi(2)).sqrt()]
+                };
+                let jac = move |x: &[f64]| {
+                    let dx = x[0] - ax;
+                    let dy = x[1] - ay;
+                    let d = (dx * dx + dy * dy).sqrt().max(1e-6);
+                    let mut row = vec![0.0; x.len()];
+                    row[0] = dx / d;
+                    row[1] = dy / d;
+                    vec![row]
+                };
+                Ok(NonlinearFactor::new(n, 1, Arc::new(h), vec![r], var)?
+                    .with_jacobian(Arc::new(jac)))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(NonlinearProblem {
+            n,
+            prior: Self::initial_belief(n),
+            motion: None,
+            factors,
+        })
+    }
+
+    /// Run up to `rounds` relinearization sweeps through the session —
+    /// each sweep covers all anchors at one linearization point; the
+    /// driver stops early at the Gauss–Newton fixed point.
     pub fn run(&self, session: &mut Session, rounds: usize) -> Result<ToaOutcome> {
-        let n = 4;
-        let mut belief = Self::initial_belief(n);
-        let mut trace = Vec::new();
-        for _ in 0..rounds {
-            let lin = (belief.mean[0].re, belief.mean[1].re);
-            let sweep = ToaSweep { problem: self, belief, lin };
-            let round = session.run(&sweep)?;
-            belief = round.outcome.belief;
-            trace.push(round.outcome.estimate);
-        }
-        let estimate = (belief.mean[0].re, belief.mean[1].re);
+        let problem = self.nonlinear_problem(4)?;
+        let driver = IteratedRelinearization::with_options(
+            &FirstOrder,
+            RelinOptions { max_rounds: rounds.max(1), ..Default::default() },
+        );
+        let report = driver.run(session, &problem)?;
+        let trace: Vec<(f64, f64)> = report
+            .trace
+            .iter()
+            .map(|b| (b.mean[0].re, b.mean[1].re))
+            .collect();
+        let estimate = (report.belief.mean[0].re, report.belief.mean[1].re);
         let error = ((estimate.0 - self.target.0).powi(2)
             + (estimate.1 - self.target.1).powi(2))
         .sqrt();
         Ok(ToaOutcome { estimate, error, trace })
-    }
-}
-
-impl Workload for ToaSweep<'_> {
-    type Outcome = ToaRound;
-
-    fn name(&self) -> &str {
-        "toa_sweep"
-    }
-
-    fn n(&self) -> usize {
-        4
-    }
-
-    /// A compound-node chain with one section per anchor; the linearized
-    /// measurement rows are the streamed state matrices.
-    fn model(&self) -> Result<(FactorGraph, Schedule)> {
-        let n = self.n();
-        let a_list: Vec<CMatrix> = (0..self.problem.anchors.len())
-            .map(|i| self.problem.linearize(i, self.lin, n).0)
-            .collect();
-        let mut g = FactorGraph::new();
-        g.rls_chain(n, &a_list);
-        let s = Schedule::forward_sweep(&g);
-        Ok((g, s))
-    }
-
-    fn inputs(
-        &self,
-        graph: &FactorGraph,
-        schedule: &Schedule,
-    ) -> Result<HashMap<MsgId, GaussMessage>> {
-        let n = self.n();
-        let mut map = HashMap::new();
-        map.insert(preload_id(graph, schedule, "msg_prior")?, self.belief.clone());
-        let obs: Vec<GaussMessage> = (0..self.problem.anchors.len())
-            .map(|i| self.problem.linearize(i, self.lin, n).1)
-            .collect();
-        bind_streamed(graph, schedule, &obs, &mut map)?;
-        Ok(map)
-    }
-
-    fn outcome(&self, exec: &Execution) -> Result<ToaRound> {
-        let belief = exec.output()?.clone();
-        let estimate = (belief.mean[0].re, belief.mean[1].re);
-        Ok(ToaRound { belief, estimate })
-    }
-
-    /// Position error of the round's estimate against ground truth.
-    fn quality(&self, outcome: &ToaRound) -> f64 {
-        ((outcome.estimate.0 - self.problem.target.0).powi(2)
-            + (outcome.estimate.1 - self.problem.target.1).powi(2))
-        .sqrt()
-    }
-
-    /// The Q5.10 datapath quantizes the tight range observations near
-    /// the LSB; the fix must stay in the same regime as golden.
-    fn tolerance(&self) -> f64 {
-        0.2
     }
 }
 
@@ -207,14 +155,16 @@ mod tests {
 
     #[test]
     fn relinearization_improves() {
-        // Re-sweeping the same measurements sharpens the linearization
-        // point; the estimate must not drift away from the target (small
-        // slack: reused observations make later rounds overconfident).
+        // every round starts from the same prior — more rounds only
+        // sharpen the linearization point (Gauss–Newton descent), so
+        // the estimate must not drift away from the target
         let mut golden = Session::golden();
         let p = ToaProblem::synthetic(6, 1e-4, 5);
         let one = p.run(&mut golden, 1).unwrap();
         let three = p.run(&mut golden, 3).unwrap();
-        assert!(three.error <= one.error + 0.02, "one {} three {}", one.error, three.error);
+        // slack: the MAP optimum can sit a hair further from ground
+        // truth than an early iterate when the noise draw conspires
+        assert!(three.error <= one.error + 0.03, "one {} three {}", one.error, three.error);
     }
 
     #[test]
@@ -234,5 +184,19 @@ mod tests {
         // both rounds share one program shape -> second round is a hit
         let stats = sim.cache_stats();
         assert_eq!((stats.misses, stats.hits), (1, 1));
+    }
+
+    #[test]
+    fn driver_fixed_point_matches_gauss_newton() {
+        // the IEKF fixed point is the MAP/Gauss-Newton solution
+        let mut golden = Session::golden();
+        let p = ToaProblem::synthetic(6, 1e-3, 9);
+        let problem = p.nonlinear_problem(4).unwrap();
+        let o = p.run(&mut golden, 8).unwrap();
+        let gn = crate::nonlinear::gauss_newton(&problem, 50, 1e-12).unwrap();
+        let d = ((o.estimate.0 - gn.mean[0].re).powi(2)
+            + (o.estimate.1 - gn.mean[1].re).powi(2))
+        .sqrt();
+        assert!(d < 1e-6, "driver vs gauss-newton: {d}");
     }
 }

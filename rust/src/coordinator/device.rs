@@ -22,20 +22,10 @@ use crate::gmp::matrix::CMatrix;
 use crate::gmp::message::GaussMessage;
 use crate::isa::MemoryImage;
 
-/// Typed Fig. 5 protocol errors. Everything a host can observe going
-/// wrong on the command channel, as data.
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
-pub enum ProtocolError {
-    /// The device replied `Reply::Error` (bad slot, missing program, ...).
-    #[error("device error reply: {0}")]
-    Device(String),
-    /// The reply variant does not match the issued command.
-    #[error("unexpected reply to {command}: {reply}")]
-    UnexpectedReply { command: &'static str, reply: String },
-    /// The device thread is gone (stopped, or it died mid-command).
-    #[error("device closed")]
-    DeviceClosed,
-}
+// The typed protocol error lives next to `Command`/`Reply` in
+// `fgp::processor` (in-process hosts need the same path); re-exported
+// here so `coordinator::ProtocolError` keeps working.
+pub use crate::fgp::processor::ProtocolError;
 
 enum DeviceMsg {
     Cmd(Command, Sender<Reply>),
@@ -83,20 +73,15 @@ impl FgpDevice {
         rrx.recv().map_err(|_| ProtocolError::DeviceClosed)
     }
 
-    /// Issue a command expecting a specific reply shape.
+    /// Issue a command expecting a specific reply shape (the typed
+    /// [`Reply::expect`] projection over the channel).
     fn expect<T>(
         &self,
         cmd: Command,
         name: &'static str,
         pick: impl FnOnce(Reply) -> Result<T, Reply>,
     ) -> Result<T, ProtocolError> {
-        match self.command(cmd)? {
-            Reply::Error(e) => Err(ProtocolError::Device(e)),
-            other => pick(other).map_err(|r| ProtocolError::UnexpectedReply {
-                command: name,
-                reply: format!("{r:?}"),
-            }),
-        }
+        self.command(cmd)?.expect(name, pick)
     }
 
     /// Query the FSM state and lifetime cycle counter.

@@ -35,5 +35,5 @@ pub mod trace;
 
 pub use array::{SystolicArray, TimingModel};
 pub use mem::{MessageMemory, MsgSlot, ProgramMemory, StateMemory};
-pub use processor::{Fgp, FgpConfig, FgpError, RunStats};
+pub use processor::{Fgp, FgpConfig, FgpError, ProtocolError, RunStats};
 pub use trace::{Profiler, TraceRecord};

@@ -100,6 +100,46 @@ pub enum Reply {
     Error(String),
 }
 
+/// Typed Fig. 5 protocol errors. Everything a host can observe going
+/// wrong on the command channel, as data — an error status from the
+/// device, a reply variant that does not match the issued command, or a
+/// dead device thread all surface as `Err`, never as a panic in the
+/// caller's `match` arms. (Re-exported as `coordinator::ProtocolError`;
+/// defined here, next to [`Command`]/[`Reply`], because in-process
+/// hosts driving [`Fgp::execute_command`] directly need the same typed
+/// path as the threaded device.)
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum ProtocolError {
+    /// The device replied `Reply::Error` (bad slot, missing program, ...).
+    #[error("device error reply: {0}")]
+    Device(String),
+    /// The reply variant does not match the issued command.
+    #[error("unexpected reply to {command}: {reply}")]
+    UnexpectedReply { command: &'static str, reply: String },
+    /// The device thread is gone (stopped, or it died mid-command).
+    #[error("device closed")]
+    DeviceClosed,
+}
+
+impl Reply {
+    /// Project this reply into the value a command expects:
+    /// `Reply::Error` becomes [`ProtocolError::Device`], and a reply
+    /// the picker rejects becomes [`ProtocolError::UnexpectedReply`].
+    pub fn expect<T>(
+        self,
+        command: &'static str,
+        pick: impl FnOnce(Reply) -> Result<T, Reply>,
+    ) -> Result<T, ProtocolError> {
+        match self {
+            Reply::Error(e) => Err(ProtocolError::Device(e)),
+            other => pick(other).map_err(|r| ProtocolError::UnexpectedReply {
+                command,
+                reply: format!("{r:?}"),
+            }),
+        }
+    }
+}
+
 /// Cycle/instruction statistics for one program run.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct RunStats {
@@ -586,27 +626,52 @@ mod tests {
         );
     }
 
+    /// Typed protocol helpers: every reply flows through
+    /// [`Reply::expect`], so a mismatched or error reply is a
+    /// [`ProtocolError`] value, never a panic.
+    fn status_of(fgp: &mut Fgp) -> Result<(FsmState, u64), ProtocolError> {
+        fgp.execute_command(Command::Status).expect("Status", |r| match r {
+            Reply::Status { state, cycles } => Ok((state, cycles)),
+            other => Err(other),
+        })
+    }
+
+    fn start_program(fgp: &mut Fgp, id: u8) -> Result<RunStats, ProtocolError> {
+        fgp.execute_command(Command::StartProgram { id }).expect("StartProgram", |r| match r {
+            Reply::Finished(stats) => Ok(stats),
+            other => Err(other),
+        })
+    }
+
+    fn write_message(fgp: &mut Fgp, slot: u8, msg: GaussMessage) -> Result<(), ProtocolError> {
+        fgp.execute_command(Command::WriteMessage { slot, msg }).expect(
+            "WriteMessage",
+            |r| match r {
+                Reply::Ok => Ok(()),
+                other => Err(other),
+            },
+        )
+    }
+
     #[test]
-    fn status_and_command_protocol() {
+    fn status_and_command_protocol() -> Result<(), ProtocolError> {
         let mut fgp = Fgp::new(FgpConfig::default());
-        match fgp.execute_command(Command::Status) {
-            Reply::Status { state, cycles } => {
-                assert_eq!(state, FsmState::Idle);
-                assert_eq!(cycles, 0);
-            }
-            other => panic!("unexpected reply {other:?}"),
-        }
-        // starting a missing program errors via reply, not panic
-        match fgp.execute_command(Command::StartProgram { id: 9 }) {
-            Reply::Error(e) => assert!(e.contains("no program")),
-            other => panic!("unexpected reply {other:?}"),
-        }
+        let (state, cycles) = status_of(&mut fgp)?;
+        assert_eq!(state, FsmState::Idle);
+        assert_eq!(cycles, 0);
+        // starting a missing program is a typed device error
+        let err = start_program(&mut fgp, 9).unwrap_err();
+        assert!(matches!(&err, ProtocolError::Device(e) if e.contains("no program")), "{err}");
         // bad slot write
-        let msg = GaussMessage::isotropic(4, 1.0);
-        match fgp.execute_command(Command::WriteMessage { slot: 200, msg }) {
-            Reply::Error(e) => assert!(e.contains("out of range")),
-            other => panic!("unexpected reply {other:?}"),
-        }
+        let err = write_message(&mut fgp, 200, GaussMessage::isotropic(4, 1.0)).unwrap_err();
+        assert!(matches!(&err, ProtocolError::Device(e) if e.contains("out of range")), "{err}");
+        // a reply the picker rejects is a typed mismatch, not a panic
+        let err = fgp
+            .execute_command(Command::Status)
+            .expect("Status", |r| -> Result<(), Reply> { Err(r) })
+            .unwrap_err();
+        assert!(matches!(&err, ProtocolError::UnexpectedReply { command: "Status", .. }), "{err}");
+        Ok(())
     }
 
     #[test]

@@ -20,13 +20,14 @@
 
 use std::collections::HashMap;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::{FgpFarm, WorkloadRequest};
 use crate::engine::Session;
 use crate::gmp::matrix::{c64, CMatrix};
 use crate::gmp::message::GaussMessage;
 use crate::gmp::{EdgeId, FactorGraph, MsgId, NodeKind, Schedule};
+use crate::nonlinear::{Linearization, Linearizer, PairRelin};
 
 use super::model::{Factor, FactorId, GbpModel, VarId};
 
@@ -50,8 +51,14 @@ impl EdgeKey {
     /// Variable this edge's message is *sent to*.
     pub fn target(&self, model: &GbpModel) -> VarId {
         match (model.factor(self.factor), self.dir) {
-            (Factor::Pairwise { to, .. }, Direction::Forward) => *to,
-            (Factor::Pairwise { from, .. }, Direction::Backward) => *from,
+            (
+                Factor::Pairwise { to, .. } | Factor::NonlinearPairwise { to, .. },
+                Direction::Forward,
+            ) => *to,
+            (
+                Factor::Pairwise { from, .. } | Factor::NonlinearPairwise { from, .. },
+                Direction::Backward,
+            ) => *from,
             _ => unreachable!("edge keys only index pairwise factors"),
         }
     }
@@ -59,8 +66,14 @@ impl EdgeKey {
     /// Variable whose cavity feeds this edge's update.
     pub fn source(&self, model: &GbpModel) -> VarId {
         match (model.factor(self.factor), self.dir) {
-            (Factor::Pairwise { from, .. }, Direction::Forward) => *from,
-            (Factor::Pairwise { to, .. }, Direction::Backward) => *to,
+            (
+                Factor::Pairwise { from, .. } | Factor::NonlinearPairwise { from, .. },
+                Direction::Forward,
+            ) => *from,
+            (
+                Factor::Pairwise { to, .. } | Factor::NonlinearPairwise { to, .. },
+                Direction::Backward,
+            ) => *to,
             _ => unreachable!("edge keys only index pairwise factors"),
         }
     }
@@ -71,7 +84,7 @@ impl EdgeKey {
 pub fn directed_edges(model: &GbpModel) -> Vec<EdgeKey> {
     let mut out = Vec::new();
     for (i, f) in model.factors().iter().enumerate() {
-        if matches!(f, Factor::Pairwise { .. }) {
+        if matches!(f, Factor::Pairwise { .. } | Factor::NonlinearPairwise { .. }) {
             out.push(EdgeKey { factor: FactorId(i), dir: Direction::Forward });
             out.push(EdgeKey { factor: FactorId(i), dir: Direction::Backward });
         }
@@ -120,6 +133,64 @@ impl MessageState {
 pub enum BuiltRequest {
     Trivial(GaussMessage),
     Run(WorkloadRequest),
+}
+
+/// Per-round linearizations of the model's nonlinear factors, computed
+/// by the solver at the current beliefs and consumed by the chain
+/// builders below. Models without nonlinear factors use
+/// [`RelinContext::empty`] (nothing to look up).
+#[derive(Clone, Debug)]
+pub struct RelinContext {
+    /// Linearized unary factors, keyed by factor id.
+    pub unary: HashMap<usize, Linearization>,
+    /// Linearized pairwise factors, keyed by factor id.
+    pub pairwise: HashMap<usize, PairRelin>,
+    /// Variance of the vague base the (possibly rank-deficient)
+    /// nonlinear pairwise likelihood is grafted onto.
+    pub base_var: f64,
+}
+
+impl RelinContext {
+    pub fn empty() -> Self {
+        RelinContext { unary: HashMap::new(), pairwise: HashMap::new(), base_var: 10.0 }
+    }
+
+    /// Linearize every nonlinear factor of `model` at the given beliefs
+    /// (one per variable — the solver passes its current beliefs, or
+    /// the priors before the first round).
+    pub fn relinearize(
+        model: &GbpModel,
+        beliefs: &[GaussMessage],
+        linearizer: &dyn Linearizer,
+        base_var: f64,
+    ) -> Result<Self> {
+        if beliefs.len() != model.num_vars() {
+            bail!(
+                "need one linearization belief per variable ({} != {})",
+                beliefs.len(),
+                model.num_vars()
+            );
+        }
+        let mut ctx = RelinContext { base_var, ..RelinContext::empty() };
+        for (i, f) in model.factors().iter().enumerate() {
+            match f {
+                Factor::NonlinearUnary { var, f } => {
+                    let lin = linearizer
+                        .linearize(f, &beliefs[var.0])
+                        .with_context(|| format!("relinearizing unary factor {i}"))?;
+                    ctx.unary.insert(i, lin);
+                }
+                Factor::NonlinearPairwise { from, to, f } => {
+                    let pr = f
+                        .linearize_with(linearizer, &beliefs[from.0], &beliefs[to.0])
+                        .with_context(|| format!("relinearizing pairwise factor {i}"))?;
+                    ctx.pairwise.insert(i, pr);
+                }
+                Factor::Unary { .. } | Factor::Pairwise { .. } => {}
+            }
+        }
+        Ok(ctx)
+    }
 }
 
 /// Incremental builder for the per-update chain graph. Exploits the
@@ -210,6 +281,28 @@ impl Chain {
         Ok(())
     }
 
+    /// Condition an explicit `base` message on the **running product**
+    /// as the observation, through `c` — the graft that turns a
+    /// (possibly rank-deficient) linearized likelihood into a proper
+    /// moment-form message: components `c` observes tighten around the
+    /// likelihood, the rest stay at the vague base.
+    fn condition_base(&mut self, base: &GaussMessage, c: &CMatrix, label: String) -> Result<()> {
+        let y = self
+            .cur
+            .ok_or_else(|| anyhow!("cannot graft an empty product onto a base"))?;
+        let base_edge = self.input(base, format!("base_{label}"));
+        let sid = self.g.add_state(c.clone());
+        let out = self.g.add_edge(self.n, format!("graft_{label}"));
+        self.g.add_node(
+            NodeKind::CompoundObservation { a: sid },
+            vec![base_edge, y],
+            out,
+            format!("graft_{label}"),
+        );
+        self.cur = Some(out);
+        Ok(())
+    }
+
     fn finish(mut self) -> BuiltRequest {
         match self.cur {
             Some(out) if !self.g.nodes.is_empty() => {
@@ -235,10 +328,12 @@ impl Chain {
 /// Build the cavity product of `var` excluding `exclude` (all of it for
 /// beliefs): prior, then other pairwise messages in factor order —
 /// fused with identity-state compound nodes — then unary conditioning
-/// in factor order.
+/// (linear factors directly, nonlinear ones through their current
+/// [`RelinContext`] linearization) in factor order.
 fn cavity_chain(
     model: &GbpModel,
     state: &MessageState,
+    relin: &RelinContext,
     var: VarId,
     exclude: Option<FactorId>,
 ) -> Result<Chain> {
@@ -252,7 +347,11 @@ fn cavity_chain(
         }
         // the message flowing INTO `var` from factor f
         let dir = match model.factor(*f) {
-            Factor::Pairwise { to, .. } if *to == var => Direction::Forward,
+            Factor::Pairwise { to, .. } | Factor::NonlinearPairwise { to, .. }
+                if *to == var =>
+            {
+                Direction::Forward
+            }
             _ => Direction::Backward,
         };
         chain.fuse(state.get(EdgeKey { factor: *f, dir }), format!("p{}", f.0));
@@ -264,8 +363,17 @@ fn cavity_chain(
         );
     }
     for f in model.unary_at(var) {
-        if let Factor::Unary { c, obs, .. } = model.factor(*f) {
-            chain.condition(c, obs, format!("u{}", f.0))?;
+        match model.factor(*f) {
+            Factor::Unary { c, obs, .. } => {
+                chain.condition(c, obs, format!("u{}", f.0))?;
+            }
+            Factor::NonlinearUnary { .. } => {
+                let lin = relin.unary.get(&f.0).ok_or_else(|| {
+                    anyhow!("nonlinear unary factor {} has no linearization this round", f.0)
+                })?;
+                chain.condition(&lin.a, &lin.obs, format!("u{}", f.0))?;
+            }
+            _ => {}
         }
     }
     Ok(chain)
@@ -273,39 +381,74 @@ fn cavity_chain(
 
 /// Lower one directed-edge update to a workload: cavity at the source
 /// variable, then the factor's transform towards the target.
+///
+/// Linear pairwise factors push the cavity through the (invertible)
+/// transform. Nonlinear ones use the round's linearization
+/// `z_eff ≈ A_src x_src + A_tgt x_tgt + v`: the cavity at the source is
+/// mapped to the pseudo-observation residual `N(z_eff − A_src·m,
+/// R + A_src V A_srcᴴ)` (multiply by `−A_src`, add the observation),
+/// which then conditions a vague base through `A_tgt` — a proper
+/// moment-form stand-in for the generally rank-deficient likelihood.
 pub fn edge_request(
     model: &GbpModel,
     state: &MessageState,
+    relin: &RelinContext,
     edge: EdgeKey,
 ) -> Result<BuiltRequest> {
-    let Factor::Pairwise { a, a_inv, noise, .. } = model.factor(edge.factor) else {
-        bail!("edge request on a non-pairwise factor {}", edge.factor.0);
-    };
-    let mut chain = cavity_chain(model, state, edge.source(model), Some(edge.factor))?;
-    match edge.dir {
-        Direction::Forward => {
-            // x_to = A x_from + w:  multiply, then widen by N(b, Q)
-            chain.multiply(a, "fwd")?;
-            chain.add(noise, "fwd")?;
+    match model.factor(edge.factor) {
+        Factor::Pairwise { a, a_inv, noise, .. } => {
+            let mut chain =
+                cavity_chain(model, state, relin, edge.source(model), Some(edge.factor))?;
+            match edge.dir {
+                Direction::Forward => {
+                    // x_to = A x_from + w:  multiply, then widen by N(b, Q)
+                    chain.multiply(a, "fwd")?;
+                    chain.add(noise, "fwd")?;
+                }
+                Direction::Backward => {
+                    // x_from = A^{-1}(x_to - w): widen by N(-b, Q), then multiply
+                    let neg_mean: Vec<c64> = noise.mean.iter().map(|z| -*z).collect();
+                    let neg = GaussMessage::new(neg_mean, noise.cov.clone());
+                    chain.add(&neg, "bwd")?;
+                    chain.multiply(a_inv, "bwd")?;
+                }
+            }
+            Ok(chain.finish())
         }
-        Direction::Backward => {
-            // x_from = A^{-1}(x_to - w): widen by N(-b, Q), then multiply
-            let neg_mean: Vec<c64> = noise.mean.iter().map(|z| -*z).collect();
-            let neg = GaussMessage::new(neg_mean, noise.cov.clone());
-            chain.add(&neg, "bwd")?;
-            chain.multiply(a_inv, "bwd")?;
+        Factor::NonlinearPairwise { .. } => {
+            let pr = relin.pairwise.get(&edge.factor.0).ok_or_else(|| {
+                anyhow!(
+                    "nonlinear pairwise factor {} has no linearization this round",
+                    edge.factor.0
+                )
+            })?;
+            let (a_src, a_tgt, label) = match edge.dir {
+                Direction::Forward => (&pr.a_from, &pr.a_to, "fwd"),
+                Direction::Backward => (&pr.a_to, &pr.a_from, "bwd"),
+            };
+            let mut chain =
+                cavity_chain(model, state, relin, edge.source(model), Some(edge.factor))?;
+            chain.multiply(&a_src.neg(), label)?;
+            chain.add(&pr.obs, label)?;
+            chain.condition_base(
+                &GaussMessage::isotropic(model.n(), relin.base_var),
+                a_tgt,
+                label.to_string(),
+            )?;
+            Ok(chain.finish())
         }
+        _ => bail!("edge request on a non-pairwise factor {}", edge.factor.0),
     }
-    Ok(chain.finish())
 }
 
 /// Lower one variable-belief product to a workload.
 pub fn belief_request(
     model: &GbpModel,
     state: &MessageState,
+    relin: &RelinContext,
     var: VarId,
 ) -> Result<BuiltRequest> {
-    Ok(cavity_chain(model, state, var, None)?.finish())
+    Ok(cavity_chain(model, state, relin, var, None)?.finish())
 }
 
 /// Anything that can execute a batch of lowered GBP updates. The two
@@ -395,7 +538,7 @@ mod tests {
         let (model, pa, _) = two_var_model(&mut rng, n);
         let state = MessageState::vague(&model, 10.0);
         let edge = EdgeKey { factor: FactorId(0), dir: Direction::Forward };
-        let req = match edge_request(&model, &state, edge).unwrap() {
+        let req = match edge_request(&model, &state, &RelinContext::empty(), edge).unwrap() {
             BuiltRequest::Run(r) => r,
             BuiltRequest::Trivial(_) => panic!("transform always has nodes"),
         };
@@ -421,7 +564,7 @@ mod tests {
         let mut state = MessageState::vague(&model, 10.0);
         let incoming = proper(&mut rng, n);
         state.set(EdgeKey { factor: FactorId(0), dir: Direction::Forward }, incoming.clone());
-        let req = match belief_request(&model, &state, VarId(1)).unwrap() {
+        let req = match belief_request(&model, &state, &RelinContext::empty(), VarId(1)).unwrap() {
             BuiltRequest::Run(r) => r,
             BuiltRequest::Trivial(_) => panic!("two-element product has a node"),
         };
@@ -444,7 +587,7 @@ mod tests {
         let prior = GaussMessage::isotropic(n, 0.7);
         let v = m.add_variable(Some(prior.clone()), "lone").unwrap();
         let state = MessageState::vague(&m, 10.0);
-        match belief_request(&m, &state, v).unwrap() {
+        match belief_request(&m, &state, &RelinContext::empty(), v).unwrap() {
             BuiltRequest::Trivial(msg) => assert!(msg.dist(&prior) == 0.0),
             BuiltRequest::Run(_) => panic!("no factors: nothing to run"),
         }
@@ -472,7 +615,7 @@ mod tests {
             .unwrap();
         let state = MessageState::vague(&m, 5.0);
         let edge = EdgeKey { factor: FactorId(0), dir: Direction::Forward };
-        let BuiltRequest::Run(req) = edge_request(&m, &state, edge).unwrap() else {
+        let BuiltRequest::Run(req) = edge_request(&m, &state, &RelinContext::empty(), edge).unwrap() else {
             panic!("expected a runnable request");
         };
         // cavity: prior + 3 other pairwise + 1 unary, then mul + add

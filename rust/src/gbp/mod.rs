@@ -10,8 +10,11 @@
 //!
 //! * [`model`] — the cyclic-capable variable/factor view ([`GbpModel`])
 //!   with priors, unary observations and invertible linear-Gaussian
-//!   pairwise links, plus the exact dense information-form solve used
-//!   as the conformance reference;
+//!   pairwise links — plus **nonlinear** unary/pairwise factors
+//!   ([`crate::nonlinear`]) that the solver relinearizes at the current
+//!   beliefs every round (Ortiz et al. 2021) — and the exact dense
+//!   information-form solve used as the conformance reference
+//!   (linearized-at-a-point variant for nonlinear models);
 //! * [`policy`] — pluggable iteration policies (synchronous/Jacobi
 //!   rounds, damped updates via `eta_damping`, residual-priority
 //!   "wildfire" scheduling) and the convergence monitor (belief-delta
@@ -43,10 +46,12 @@ pub mod solver;
 
 pub use bridge::{
     belief_request, directed_edges, edge_request, BuiltRequest, Direction, EdgeKey,
-    FarmExecutor, MessageState, RoundExecutor,
+    FarmExecutor, MessageState, RelinContext, RoundExecutor,
 };
 pub use model::{Factor, FactorId, GbpModel, VarId, Variable};
 pub use policy::{
     damp, ConvergenceCriteria, ConvergenceMonitor, IterationPolicy, StopReason,
 };
-pub use solver::{belief_delta, solve, GbpOptions, GbpReport, GbpSolver};
+pub use solver::{
+    belief_delta, solve, solve_with_linearizer, GbpOptions, GbpReport, GbpSolver,
+};

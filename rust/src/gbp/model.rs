@@ -13,6 +13,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::gmp::matrix::{c64, CMatrix, CVector};
 use crate::gmp::message::GaussMessage;
+use crate::nonlinear::{Linearizer, NonlinearFactor, PairwiseNonlinear};
 
 /// Identifies a variable in a [`GbpModel`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -51,6 +52,18 @@ pub enum Factor {
         a_inv: CMatrix,
         noise: GaussMessage,
     },
+    /// Nonlinear observation `z = h(x) + v` of one variable,
+    /// relinearized at the variable's **current belief** every solver
+    /// round (Ortiz et al. 2021) by the solver's pluggable
+    /// [`Linearizer`]; its linear stand-in rides the same CN kernel as
+    /// [`Factor::Unary`].
+    NonlinearUnary { var: VarId, f: NonlinearFactor },
+    /// Nonlinear relative measurement `z = h(x_from, x_to) + v` (e.g. an
+    /// inter-pose range), relinearized at both endpoints' current
+    /// beliefs every round. Unlike [`Factor::Pairwise`] the linearized
+    /// model may be rank-deficient, so its messages are grafted onto a
+    /// vague base instead of requiring an invertible transform.
+    NonlinearPairwise { from: VarId, to: VarId, f: PairwiseNonlinear },
 }
 
 /// A cyclic-capable Gaussian model: variables plus unary/pairwise
@@ -165,6 +178,51 @@ impl GbpModel {
         Ok(id)
     }
 
+    /// Add a nonlinear observation factor `z = h(x) + v`.
+    pub fn add_nonlinear_unary(&mut self, var: VarId, f: NonlinearFactor) -> Result<FactorId> {
+        if var.0 >= self.vars.len() {
+            bail!("nonlinear unary factor references unknown variable {}", var.0);
+        }
+        if f.n != self.n {
+            bail!("nonlinear factor has n={} but the model is n={}", f.n, self.n);
+        }
+        let id = FactorId(self.factors.len());
+        self.factors.push(Factor::NonlinearUnary { var, f });
+        self.unary_idx[var.0].push(id);
+        Ok(id)
+    }
+
+    /// Add a nonlinear relative factor `z = h(x_from, x_to) + v`.
+    pub fn add_nonlinear_pairwise(
+        &mut self,
+        from: VarId,
+        to: VarId,
+        f: PairwiseNonlinear,
+    ) -> Result<FactorId> {
+        if from.0 >= self.vars.len() || to.0 >= self.vars.len() {
+            bail!("nonlinear pairwise factor references unknown variable");
+        }
+        if from == to {
+            bail!("nonlinear pairwise factor must connect two distinct variables");
+        }
+        if f.n != self.n {
+            bail!("nonlinear factor has n={} but the model is n={}", f.n, self.n);
+        }
+        let id = FactorId(self.factors.len());
+        self.factors.push(Factor::NonlinearPairwise { from, to, f });
+        self.pairwise_idx[from.0].push(id);
+        self.pairwise_idx[to.0].push(id);
+        Ok(id)
+    }
+
+    /// Does the model contain factors that need per-round
+    /// relinearization?
+    pub fn has_nonlinear(&self) -> bool {
+        self.factors.iter().any(|f| {
+            matches!(f, Factor::NonlinearUnary { .. } | Factor::NonlinearPairwise { .. })
+        })
+    }
+
     /// Pairwise factors incident to `v`, in factor order (O(1) — the
     /// adjacency index is maintained on insert).
     pub fn pairwise_at(&self, v: VarId) -> &[FactorId] {
@@ -179,8 +237,18 @@ impl GbpModel {
     /// The other endpoint of pairwise factor `f` as seen from `v`.
     pub fn neighbor(&self, f: FactorId, v: VarId) -> Option<VarId> {
         match &self.factors[f.0] {
-            Factor::Pairwise { from, to, .. } if *from == v => Some(*to),
-            Factor::Pairwise { from, to, .. } if *to == v => Some(*from),
+            Factor::Pairwise { from, to, .. }
+            | Factor::NonlinearPairwise { from, to, .. }
+                if *from == v =>
+            {
+                Some(*to)
+            }
+            Factor::Pairwise { from, to, .. }
+            | Factor::NonlinearPairwise { from, to, .. }
+                if *to == v =>
+            {
+                Some(*from)
+            }
             _ => None,
         }
     }
@@ -198,7 +266,9 @@ impl GbpModel {
             i
         }
         for f in &self.factors {
-            if let Factor::Pairwise { from, to, .. } = f {
+            if let Factor::Pairwise { from, to, .. }
+            | Factor::NonlinearPairwise { from, to, .. } = f
+            {
                 let (a, b) = (root(&mut parent, from.0), root(&mut parent, to.0));
                 if a == b {
                     return true;
@@ -240,8 +310,44 @@ impl GbpModel {
     /// Exact marginals by assembling the joint information matrix over
     /// all `num_vars * n` dimensions and inverting it — the reference
     /// loopy GBP is validated against (feasible for test-sized models;
-    /// GBP exists precisely because this does not scale).
+    /// GBP exists precisely because this does not scale). Errors on
+    /// models with nonlinear factors, which have no exact Gaussian
+    /// joint — use [`GbpModel::dense_marginals_linearized`].
     pub fn dense_marginals(&self) -> Result<Vec<GaussMessage>> {
+        if self.has_nonlinear() {
+            bail!(
+                "model contains nonlinear factors (no exact Gaussian joint); \
+                 use dense_marginals_linearized at a linearization point"
+            );
+        }
+        self.dense_assemble(None)
+    }
+
+    /// Exact marginals of the model **linearized at the given beliefs**
+    /// (one per variable, e.g. a converged GBP solve): every nonlinear
+    /// factor is replaced by its `linearizer` stand-in, then the joint
+    /// information matrix is assembled and inverted. This is the
+    /// conformance reference for nonlinear GBP — at a solver fixed
+    /// point, GBP means must match this solve's means.
+    pub fn dense_marginals_linearized(
+        &self,
+        beliefs: &[GaussMessage],
+        linearizer: &dyn Linearizer,
+    ) -> Result<Vec<GaussMessage>> {
+        if beliefs.len() != self.vars.len() {
+            bail!(
+                "need one linearization belief per variable ({} != {})",
+                beliefs.len(),
+                self.vars.len()
+            );
+        }
+        self.dense_assemble(Some((beliefs, linearizer)))
+    }
+
+    fn dense_assemble(
+        &self,
+        relin: Option<(&[GaussMessage], &dyn Linearizer)>,
+    ) -> Result<Vec<GaussMessage>> {
         let n = self.n;
         let nv = self.vars.len();
         let dim = nv * n;
@@ -271,6 +377,11 @@ impl GbpModel {
                 add_vec(&mut h, i, &wpm);
             }
         }
+        let need_relin = |what: &str| -> Result<(&[GaussMessage], &dyn Linearizer)> {
+            relin.ok_or_else(|| {
+                anyhow::anyhow!("{what} requires linearization beliefs (dense_marginals_linearized)")
+            })
+        };
         for f in &self.factors {
             match f {
                 Factor::Unary { var, c, obs } => {
@@ -283,6 +394,36 @@ impl GbpModel {
                     let chr = ch.matmul(&rinv);
                     add_block(&mut w, var.0, var.0, &chr.matmul(c));
                     add_vec(&mut h, var.0, &chr.matvec(&obs.mean));
+                }
+                Factor::NonlinearUnary { var, f } => {
+                    let (beliefs, lz) = need_relin("nonlinear unary factor")?;
+                    let lin = lz.linearize(f, &beliefs[var.0])?;
+                    let rinv = lin
+                        .obs
+                        .cov
+                        .inverse()
+                        .context("linearized observation covariance is singular")?;
+                    let chr = lin.a.hermitian().matmul(&rinv);
+                    add_block(&mut w, var.0, var.0, &chr.matmul(&lin.a));
+                    add_vec(&mut h, var.0, &chr.matvec(&lin.obs.mean));
+                }
+                Factor::NonlinearPairwise { from, to, f } => {
+                    // linearized: z_eff = A_f x_f + A_t x_t + v
+                    let (beliefs, lz) = need_relin("nonlinear pairwise factor")?;
+                    let pr = f.linearize_with(lz, &beliefs[from.0], &beliefs[to.0])?;
+                    let rinv = pr
+                        .obs
+                        .cov
+                        .inverse()
+                        .context("linearized pairwise covariance is singular")?;
+                    let afr = pr.a_from.hermitian().matmul(&rinv);
+                    let atr = pr.a_to.hermitian().matmul(&rinv);
+                    add_block(&mut w, from.0, from.0, &afr.matmul(&pr.a_from));
+                    add_block(&mut w, from.0, to.0, &afr.matmul(&pr.a_to));
+                    add_block(&mut w, to.0, from.0, &atr.matmul(&pr.a_from));
+                    add_block(&mut w, to.0, to.0, &atr.matmul(&pr.a_to));
+                    add_vec(&mut h, from.0, &afr.matvec(&pr.obs.mean));
+                    add_vec(&mut h, to.0, &atr.matvec(&pr.obs.mean));
                 }
                 Factor::Pairwise { from, to, a, noise, .. } => {
                     // residual r = x_to - A x_from - b ~ N(0, Q):

@@ -13,13 +13,16 @@
 //! Freeman 2001) — the conformance tests encode precisely that
 //! contract against the dense information-form solve.
 
-use anyhow::{Context, Result};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
 
 use crate::gmp::message::GaussMessage;
+use crate::nonlinear::{FirstOrder, Linearizer};
 
 use super::bridge::{
     belief_request, directed_edges, edge_request, BuiltRequest, EdgeKey, MessageState,
-    RoundExecutor,
+    RelinContext, RoundExecutor,
 };
 use super::model::{GbpModel, VarId};
 use super::policy::{damp, ConvergenceCriteria, ConvergenceMonitor, IterationPolicy, StopReason};
@@ -31,6 +34,15 @@ pub struct GbpOptions {
     pub criteria: ConvergenceCriteria,
     /// Variance of the vague zero-mean messages every edge starts from.
     pub init_var: f64,
+    /// Variance of the vague zero-mean base each **nonlinear pairwise**
+    /// likelihood message is grafted onto (the linearized stand-in is
+    /// generally rank-deficient, so its moment-form message needs a
+    /// proper base). The base injects `1/nonlinear_base_var` of
+    /// spurious information per message that the dense linearized
+    /// reference does not model — keep it large relative to the
+    /// factors' information so the bias stays inside the conformance
+    /// tolerance. Deliberately independent of `init_var`.
+    pub nonlinear_base_var: f64,
 }
 
 impl Default for GbpOptions {
@@ -39,6 +51,7 @@ impl Default for GbpOptions {
             policy: IterationPolicy::default(),
             criteria: ConvergenceCriteria::default(),
             init_var: 10.0,
+            nonlinear_base_var: 10.0,
         }
     }
 }
@@ -78,13 +91,36 @@ pub struct GbpSolver {
     priorities: Vec<f64>,
     beliefs: Vec<GaussMessage>,
     monitor: ConvergenceMonitor,
+    /// Linearizer for the model's nonlinear factors (EKF-style
+    /// first-order by default; sigma-point via
+    /// [`GbpSolver::with_linearizer`]).
+    linearizer: Arc<dyn Linearizer>,
+    /// Current round's linearizations (empty for linear models).
+    relin: RelinContext,
     messages_sent: usize,
     beliefs_computed: usize,
 }
 
 impl GbpSolver {
     pub fn new(model: GbpModel, opts: GbpOptions) -> Result<Self> {
+        Self::with_linearizer(model, opts, Arc::new(FirstOrder))
+    }
+
+    /// Build a solver with an explicit [`Linearizer`] for the model's
+    /// nonlinear factors (relinearized at the current beliefs every
+    /// round — Ortiz et al. 2021).
+    pub fn with_linearizer(
+        model: GbpModel,
+        opts: GbpOptions,
+        linearizer: Arc<dyn Linearizer>,
+    ) -> Result<Self> {
         model.validate()?;
+        if model.has_nonlinear() && matches!(opts.policy, IterationPolicy::Residual { .. }) {
+            // residual priorities track message deltas, not
+            // linearization-point movement; relinearization would
+            // invalidate quiescence
+            bail!("nonlinear factors require the synchronous iteration policy");
+        }
         let state = MessageState::vague(&model, opts.init_var);
         let edges = directed_edges(&model);
         let priorities = vec![f64::INFINITY; edges.len()];
@@ -97,6 +133,8 @@ impl GbpSolver {
             priorities,
             beliefs: Vec::new(),
             monitor,
+            linearizer,
+            relin: RelinContext::empty(),
             messages_sent: 0,
             beliefs_computed: 0,
         })
@@ -121,19 +159,59 @@ impl GbpSolver {
         self.messages_sent
     }
 
+    /// Relinearize the model's nonlinear factors at the current beliefs
+    /// (the priors / vague init before the first round). A no-op for
+    /// linear models.
+    fn relinearize(&mut self) -> Result<()> {
+        if !self.model.has_nonlinear() {
+            return Ok(());
+        }
+        let lin_beliefs: Vec<GaussMessage> = (0..self.model.num_vars())
+            .map(|v| {
+                self.beliefs.get(v).cloned().unwrap_or_else(|| {
+                    self.model
+                        .variable(VarId(v))
+                        .prior
+                        .clone()
+                        .unwrap_or_else(|| {
+                            GaussMessage::isotropic(self.model.n(), self.opts.init_var)
+                        })
+                })
+            })
+            .collect();
+        self.relin = RelinContext::relinearize(
+            &self.model,
+            &lin_beliefs,
+            &*self.linearizer,
+            self.opts.nonlinear_base_var,
+        )?;
+        Ok(())
+    }
+
     /// Run to convergence (or max-iters / divergence).
     pub fn run(&mut self, exec: &mut dyn RoundExecutor) -> Result<GbpReport> {
+        let nonlinear = self.model.has_nonlinear();
         // baseline beliefs from the initial messages (not an iteration)
         if self.beliefs.is_empty() {
+            self.relinearize()?;
             let all: Vec<VarId> = (0..self.model.num_vars()).map(VarId).collect();
             self.beliefs = vec![GaussMessage::isotropic(self.model.n(), 0.0); all.len()];
             self.refresh_beliefs(exec, &all)?;
         }
         let stop = loop {
+            // nonlinear factors relinearize at the beliefs entering the
+            // round — the relinearize → run → update-point sweep
+            self.relinearize()?;
             let (quiescent, touched) = self.step_round(exec)?;
             // only beliefs of variables whose incoming messages changed
-            // can move; everything else contributes zero delta
-            let delta = self.refresh_beliefs(exec, &touched)?;
+            // can move; everything else contributes zero delta — except
+            // under relinearization, which moves every factor
+            let refresh: Vec<VarId> = if nonlinear {
+                (0..self.model.num_vars()).map(VarId).collect()
+            } else {
+                touched
+            };
+            let delta = self.refresh_beliefs(exec, &refresh)?;
             if let Some(reason) = self.monitor.observe(delta, quiescent) {
                 break reason;
             }
@@ -173,7 +251,7 @@ impl GbpSolver {
         let mut pending_vars = Vec::new();
         let mut delta = 0.0_f64;
         for v in vars {
-            match belief_request(&self.model, &self.state, *v)
+            match belief_request(&self.model, &self.state, &self.relin, *v)
                 .with_context(|| format!("belief of variable {}", v.0))?
             {
                 BuiltRequest::Trivial(m) => {
@@ -200,7 +278,7 @@ impl GbpSolver {
     fn sync_round(&mut self, exec: &mut dyn RoundExecutor, eta: f64) -> Result<()> {
         let mut reqs = Vec::with_capacity(self.edges.len());
         for e in &self.edges {
-            match edge_request(&self.model, &self.state, *e)
+            match edge_request(&self.model, &self.state, &self.relin, *e)
                 .with_context(|| format!("edge update for factor {}", e.factor.0))?
             {
                 BuiltRequest::Run(req) => reqs.push(req),
@@ -243,7 +321,7 @@ impl GbpSolver {
 
         let mut reqs = Vec::with_capacity(order.len());
         for i in &order {
-            match edge_request(&self.model, &self.state, self.edges[*i])? {
+            match edge_request(&self.model, &self.state, &self.relin, self.edges[*i])? {
                 BuiltRequest::Run(req) => reqs.push(req),
                 BuiltRequest::Trivial(_) => unreachable!("edge transforms always have nodes"),
             }
@@ -288,13 +366,24 @@ pub fn belief_delta(old: &[GaussMessage], new: &[GaussMessage]) -> f64 {
         .fold(0.0, f64::max)
 }
 
-/// One-call convenience: build, run, report.
+/// One-call convenience: build, run, report (nonlinear factors, if any,
+/// relinearize with the first-order/EKF linearizer).
 pub fn solve(
     model: GbpModel,
     opts: GbpOptions,
     exec: &mut dyn RoundExecutor,
 ) -> Result<GbpReport> {
     GbpSolver::new(model, opts)?.run(exec)
+}
+
+/// [`solve`] with an explicit linearizer for nonlinear factors.
+pub fn solve_with_linearizer(
+    model: GbpModel,
+    opts: GbpOptions,
+    linearizer: Arc<dyn Linearizer>,
+    exec: &mut dyn RoundExecutor,
+) -> Result<GbpReport> {
+    GbpSolver::with_linearizer(model, opts, linearizer)?.run(exec)
 }
 
 #[cfg(test)]

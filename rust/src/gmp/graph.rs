@@ -188,11 +188,28 @@ impl FactorGraph {
         n: usize,
         a_list: &[CMatrix],
     ) -> (Vec<EdgeId>, Vec<EdgeId>) {
+        let prior = self.add_input_edge(n, "msg_prior");
+        self.cn_sections(n, prior, a_list)
+    }
+
+    /// Append a run of compound-observation sections threading the state
+    /// from `from`: per section one streamed state matrix and one
+    /// streamed observation input edge (both stream group 0 — the
+    /// host-refilled convention every chain workload shares), marking
+    /// the final edge as the program output. Returns (state edges
+    /// including `from`, observation edges). This is the chain body of
+    /// [`FactorGraph::rls_chain`], reusable after an arbitrary prelude
+    /// (e.g. a motion-model multiplier/adder).
+    pub fn cn_sections(
+        &mut self,
+        n: usize,
+        from: EdgeId,
+        a_list: &[CMatrix],
+    ) -> (Vec<EdgeId>, Vec<EdgeId>) {
         let mut state_edges = Vec::with_capacity(a_list.len() + 1);
         let mut obs_edges = Vec::with_capacity(a_list.len());
-        let prior = self.add_input_edge(n, "msg_prior");
-        state_edges.push(prior);
-        let mut prev = prior;
+        state_edges.push(from);
+        let mut prev = from;
         for (i, a) in a_list.iter().enumerate() {
             let sid = self.add_streamed_state(0, a.clone());
             let obs = self.add_streamed_input_edge(n, 0, format!("msg_Y{i}"));

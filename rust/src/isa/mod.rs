@@ -124,7 +124,7 @@ impl Opcode {
     }
 }
 
-/// Errors from decoding or parsing.
+/// Errors from decoding, parsing, or mismatched expectations.
 #[derive(Debug, thiserror::Error, PartialEq)]
 pub enum IsaError {
     #[error("unknown opcode {0}")]
@@ -133,6 +133,10 @@ pub enum IsaError {
     ReservedBits(u64),
     #[error("parse error on line {line}: {msg}")]
     Parse { line: usize, msg: String },
+    /// A host expected one instruction kind and decoded another — a
+    /// malformed program surfaces as data, it cannot abort the process.
+    #[error("expected a {expected} instruction, got {got}")]
+    WrongInstr { expected: &'static str, got: &'static str },
 }
 
 const FLAG_AH: u64 = 1 << 7;
@@ -275,6 +279,19 @@ impl Instr {
     /// Is this a datapath-control instruction (Table I top half)?
     pub fn is_datapath(&self) -> bool {
         matches!(self, Instr::Mma { .. } | Instr::Mms { .. } | Instr::Fad { .. })
+    }
+
+    /// Project the instruction through `pick` — the typed accessor for
+    /// hosts that expect a specific variant (program loaders, disasm
+    /// round-trips). A mismatch is an [`IsaError::WrongInstr`] value,
+    /// never a caller panic, so a malformed program cannot abort a
+    /// serving process.
+    pub fn expect<T>(
+        &self,
+        expected: &'static str,
+        pick: impl FnOnce(&Instr) -> Option<T>,
+    ) -> Result<T, IsaError> {
+        pick(self).ok_or(IsaError::WrongInstr { expected, got: self.mnemonic() })
     }
 }
 
@@ -617,14 +634,24 @@ mod tests {
     }
 
     #[test]
-    fn vec_and_neg_suffixes_parse() {
-        let i = parse_line("mms s0 1 2 v ~", 1).unwrap().unwrap();
-        match i {
-            Instr::Mms { vec, neg, .. } => {
-                assert!(vec);
-                assert!(neg);
-            }
-            _ => panic!("wrong instr"),
-        }
+    fn vec_and_neg_suffixes_parse() -> Result<(), IsaError> {
+        let instr = parse_line("mms s0 1 2 v ~", 1)?.unwrap();
+        let flags = instr.expect("mms", |i| match i {
+            Instr::Mms { vec, neg, .. } => Some((*vec, *neg)),
+            _ => None,
+        })?;
+        assert_eq!(flags, (true, true));
+        Ok(())
+    }
+
+    #[test]
+    fn mismatched_instruction_is_a_typed_error() {
+        let err = Instr::Halt
+            .expect("mms", |i| match i {
+                Instr::Mms { vec, neg, .. } => Some((*vec, *neg)),
+                _ => None,
+            })
+            .unwrap_err();
+        assert_eq!(err, IsaError::WrongInstr { expected: "mms", got: "halt" });
     }
 }

@@ -20,7 +20,10 @@
 //!   Fig. 5 "external processor" command protocol, request queue,
 //!   batcher), [`gbp`] (loopy Gaussian belief propagation over cyclic
 //!   graphs, every inner update dispatched through the engine surface),
-//!   [`dsp`] baseline and [`model`] area/technology models.
+//!   [`nonlinear`] (pluggable EKF/sigma-point linearizers and iterated
+//!   relinearization turning nonlinear factors into cache-hitting
+//!   compound-observation sweeps), [`dsp`] baseline and [`model`]
+//!   area/technology models.
 //! * **L2/L1 (python/, build-time only)** — the GMP compute graph in JAX
 //!   with fused Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt` and
 //!   executed from [`runtime`] via the PJRT C API. Python never runs on
@@ -63,6 +66,7 @@ pub mod gbp;
 pub mod gmp;
 pub mod isa;
 pub mod model;
+pub mod nonlinear;
 pub mod runtime;
 pub mod testutil;
 

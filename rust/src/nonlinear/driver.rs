@@ -1,0 +1,398 @@
+//! Iterated relinearization: nonlinear estimation as cache-hitting sweeps.
+//!
+//! A [`NonlinearProblem`] is a Gaussian prior (optionally pushed through
+//! a linear motion model) refined by nonlinear measurement factors. The
+//! [`IteratedRelinearization`] driver sweeps
+//!
+//! ```text
+//!   re-linearize (at the current belief) → run the sweep → update belief
+//! ```
+//!
+//! to a Gauss–Newton-style fixed point (Petersen et al. 2019): every
+//! round starts from the **same** prior and only the linearization point
+//! moves, so the fixed point coincides with the MAP/Gauss–Newton
+//! solution of the nonlinear problem (pinned against [`gauss_newton`] by
+//! `rust/tests/property_nonlinear.rs`).
+//!
+//! Each round's sweep is a [`RelinSweep`] workload with a **fixed graph
+//! shape** — only the streamed state matrices and pseudo-observations
+//! change between rounds — so every round after the first is a program-
+//! cache hit on the [`Session`] (the same property `apps/toa` exploited
+//! with its private loop, now available to every nonlinear workload).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::WorkloadRequest;
+use crate::engine::{bind_streamed, preload_id, Execution, Session, Workload};
+use crate::gbp::RoundExecutor;
+use crate::gmp::message::GaussMessage;
+use crate::gmp::{nodes, FactorGraph, MsgId, NodeKind, Schedule};
+
+use super::factor::{real_mean, NonlinearFactor};
+use super::linearize::{Linearization, Linearizer};
+
+/// A nonlinear estimation problem over one `n`-dim state.
+#[derive(Clone, Debug)]
+pub struct NonlinearProblem {
+    /// State dimension (must match the device size).
+    pub n: usize,
+    /// Gaussian prior on the state.
+    pub prior: GaussMessage,
+    /// Optional linear motion prelude applied to the prior inside the
+    /// sweep graph: `x ← F x + w`, `w ~ noise` (mean = control input,
+    /// covariance = process noise). This is how a tracking step folds
+    /// predict + update into **one** fixed-shape workload.
+    pub motion: Option<(crate::gmp::matrix::CMatrix, GaussMessage)>,
+    /// Nonlinear measurement factors, one compound section each.
+    pub factors: Vec<NonlinearFactor>,
+}
+
+impl NonlinearProblem {
+    /// Prior as seen by the measurement sections: pushed through the
+    /// motion prelude when one is present (the linearization point must
+    /// live where the nonlinear sections actually observe the state).
+    pub fn predicted_prior(&self) -> GaussMessage {
+        match &self.motion {
+            None => self.prior.clone(),
+            Some((f, noise)) => nodes::add(&nodes::multiply(&self.prior, f), noise),
+        }
+    }
+
+    fn check(&self) -> Result<()> {
+        if self.prior.dim() != self.n {
+            bail!("prior has dim {} but the problem is n={}", self.prior.dim(), self.n);
+        }
+        if self.factors.is_empty() {
+            bail!("a nonlinear problem needs at least one measurement factor");
+        }
+        for (i, f) in self.factors.iter().enumerate() {
+            if f.n != self.n {
+                bail!("factor {i} has n={} but the problem is n={}", f.n, self.n);
+            }
+        }
+        if let Some((f, noise)) = &self.motion {
+            if f.rows != self.n || f.cols != self.n || noise.dim() != self.n {
+                bail!("motion model shapes must be n={}", self.n);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One relinearization round: the problem's factors linearized at a
+/// fixed belief, lowered as a compound-observation chain (with the
+/// optional multiplier/adder motion prelude). The graph **shape** is a
+/// function of the factor count and motion flag only, never of the
+/// linearization point — the cache-hit invariant.
+#[derive(Clone, Debug)]
+pub struct RelinSweep<'p> {
+    pub problem: &'p NonlinearProblem,
+    /// Per-factor linearizations, in factor order.
+    pub sections: Vec<Linearization>,
+}
+
+impl<'p> RelinSweep<'p> {
+    /// Linearize every factor of `problem` at `at` (the predicted prior
+    /// on the first round, the previous round's posterior afterwards).
+    pub fn linearize_at(
+        problem: &'p NonlinearProblem,
+        at: &GaussMessage,
+        linearizer: &dyn Linearizer,
+    ) -> Result<Self> {
+        problem.check()?;
+        let sections = problem
+            .factors
+            .iter()
+            .enumerate()
+            .map(|(i, f)| {
+                linearizer
+                    .linearize(f, at)
+                    .with_context(|| format!("linearizing factor {i}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(RelinSweep { problem, sections })
+    }
+
+    /// The sweep as a raw serving request (farm / coordinator path).
+    pub fn to_request(&self) -> Result<WorkloadRequest> {
+        WorkloadRequest::from_workload(self)
+    }
+}
+
+impl Workload for RelinSweep<'_> {
+    type Outcome = GaussMessage;
+
+    fn name(&self) -> &str {
+        "relin_sweep"
+    }
+
+    fn n(&self) -> usize {
+        self.problem.n
+    }
+
+    /// Without a motion prelude this is exactly the `rls_chain` shape
+    /// (one CN section per factor, streamed states/observations); with
+    /// one, a multiplier + adder precede the chain.
+    fn model(&self) -> Result<(FactorGraph, Schedule)> {
+        let n = self.n();
+        let mut g = FactorGraph::new();
+        let a_list: Vec<_> = self.sections.iter().map(|s| s.a.clone()).collect();
+        match &self.problem.motion {
+            None => {
+                g.rls_chain(n, &a_list);
+            }
+            Some((f, _)) => {
+                // motion prelude, then the same sectioned chain body
+                // rls_chain uses (one shared builder, one convention)
+                let prior = g.add_input_edge(n, "msg_prior");
+                let f_sid = g.add_state(f.clone());
+                let pred = g.add_edge(n, "msg_pred");
+                g.add_node(NodeKind::Multiply { a: f_sid }, vec![prior], pred, "motion_mul");
+                let q = g.add_input_edge(n, "msg_q");
+                let noisy = g.add_edge(n, "msg_noisy");
+                g.add_node(NodeKind::Add, vec![pred, q], noisy, "motion_add");
+                g.cn_sections(n, noisy, &a_list);
+            }
+        }
+        let s = Schedule::forward_sweep(&g);
+        Ok((g, s))
+    }
+
+    fn inputs(
+        &self,
+        graph: &FactorGraph,
+        schedule: &Schedule,
+    ) -> Result<HashMap<MsgId, GaussMessage>> {
+        let mut map = HashMap::new();
+        map.insert(preload_id(graph, schedule, "msg_prior")?, self.problem.prior.clone());
+        if let Some((_, noise)) = &self.problem.motion {
+            map.insert(preload_id(graph, schedule, "msg_q")?, noise.clone());
+        }
+        let obs: Vec<GaussMessage> = self.sections.iter().map(|s| s.obs.clone()).collect();
+        bind_streamed(graph, schedule, &obs, &mut map)?;
+        Ok(map)
+    }
+
+    fn outcome(&self, exec: &Execution) -> Result<GaussMessage> {
+        exec.output().cloned()
+    }
+
+    /// Posterior uncertainty (lower is better across engines).
+    fn quality(&self, outcome: &GaussMessage) -> f64 {
+        outcome.trace_cov()
+    }
+
+    /// The Q5.10 datapath quantizes tight observation covariances near
+    /// the LSB; the posterior trace must stay in golden's regime.
+    fn tolerance(&self) -> f64 {
+        0.2
+    }
+}
+
+/// Driver configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct RelinOptions {
+    /// Maximum relinearization rounds.
+    pub max_rounds: usize,
+    /// Linearization-point movement (max-abs mean delta) below which
+    /// the fixed point is declared reached.
+    pub tol: f64,
+    /// Movement above which the iteration is declared divergent.
+    pub divergence: f64,
+}
+
+impl Default for RelinOptions {
+    fn default() -> Self {
+        RelinOptions { max_rounds: 8, tol: 1e-9, divergence: 1e3 }
+    }
+}
+
+/// Why the driver stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RelinStop {
+    Converged,
+    MaxRounds,
+    Diverged,
+}
+
+/// Result of an iterated-relinearization solve.
+#[derive(Clone, Debug)]
+pub struct RelinReport {
+    /// Posterior belief at the final linearization point.
+    pub belief: GaussMessage,
+    pub rounds: usize,
+    pub stop: RelinStop,
+    /// Linearization-point movement per round.
+    pub history: Vec<f64>,
+    /// Posterior belief after each round.
+    pub trace: Vec<GaussMessage>,
+    /// Per-round program-cache flags (true = the sweep's compiled
+    /// program came from the session cache; empty on the raw-executor
+    /// path, which has no cache observability).
+    pub cached: Vec<bool>,
+}
+
+impl RelinReport {
+    pub fn converged(&self) -> bool {
+        self.stop == RelinStop::Converged
+    }
+}
+
+/// The relinearization loop: re-linearize → run → move the point.
+pub struct IteratedRelinearization<'l> {
+    pub linearizer: &'l dyn Linearizer,
+    pub opts: RelinOptions,
+}
+
+impl<'l> IteratedRelinearization<'l> {
+    pub fn new(linearizer: &'l dyn Linearizer) -> Self {
+        IteratedRelinearization { linearizer, opts: RelinOptions::default() }
+    }
+
+    pub fn with_options(linearizer: &'l dyn Linearizer, opts: RelinOptions) -> Self {
+        IteratedRelinearization { linearizer, opts }
+    }
+
+    /// Run to the fixed point through a [`Session`] (any engine), with
+    /// cache observability per round.
+    pub fn run(&self, session: &mut Session, problem: &NonlinearProblem) -> Result<RelinReport> {
+        self.drive(problem, |sweep| {
+            let r = session.run(sweep)?;
+            Ok((r.outcome, Some(r.cached)))
+        })
+    }
+
+    /// Run through any [`RoundExecutor`] — a session or an
+    /// [`crate::coordinator::FgpFarm`] sharding rounds across devices.
+    pub fn run_with(
+        &self,
+        exec: &mut dyn RoundExecutor,
+        problem: &NonlinearProblem,
+    ) -> Result<RelinReport> {
+        self.drive(problem, |sweep| {
+            let req = sweep.to_request()?;
+            let out = exec
+                .run_batch(std::slice::from_ref(&req))?
+                .pop()
+                .context("executor returned no output for the sweep")?;
+            Ok((out, None))
+        })
+    }
+
+    fn drive(
+        &self,
+        problem: &NonlinearProblem,
+        mut run_sweep: impl FnMut(&RelinSweep) -> Result<(GaussMessage, Option<bool>)>,
+    ) -> Result<RelinReport> {
+        problem.check()?;
+        if self.opts.max_rounds == 0 {
+            bail!("max_rounds must be at least 1");
+        }
+        let mut lin = problem.predicted_prior();
+        let mut history = Vec::new();
+        let mut trace = Vec::new();
+        let mut cached = Vec::new();
+        let mut stop = RelinStop::MaxRounds;
+        for _ in 0..self.opts.max_rounds {
+            let sweep = RelinSweep::linearize_at(problem, &lin, self.linearizer)?;
+            let (posterior, cache_flag) = run_sweep(&sweep)?;
+            let delta = max_abs_delta(&real_mean(&lin), &real_mean(&posterior));
+            history.push(delta);
+            trace.push(posterior.clone());
+            if let Some(c) = cache_flag {
+                cached.push(c);
+            }
+            lin = posterior;
+            if !delta.is_finite() || delta > self.opts.divergence {
+                stop = RelinStop::Diverged;
+                break;
+            }
+            if delta < self.opts.tol {
+                stop = RelinStop::Converged;
+                break;
+            }
+        }
+        Ok(RelinReport { belief: lin, rounds: history.len(), stop, history, trace, cached })
+    }
+}
+
+fn max_abs_delta(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+// ---------------------------------------------------------------------
+// Dense Gauss–Newton reference
+// ---------------------------------------------------------------------
+
+/// Reference MAP solve: undamped Gauss–Newton on the nonlinear
+/// least-squares objective
+/// `(x−μ)ᵀV⁻¹(x−μ) + Σ (z−h(x))ᵀR⁻¹(z−h(x))`, returning the Laplace
+/// posterior `N(x*, H⁻¹)`. Feasible for test-sized problems; the
+/// iterated driver exists precisely because serving wants fixed-shape
+/// device sweeps instead of host-side dense solves.
+pub fn gauss_newton(
+    problem: &NonlinearProblem,
+    max_iters: usize,
+    tol: f64,
+) -> Result<GaussMessage> {
+    use crate::gmp::matrix::{c64, CMatrix};
+    problem.check()?;
+    let n = problem.n;
+    let prior = problem.predicted_prior();
+    let mu = real_mean(&prior);
+    let w0 = super::linearize::real_symmetric(&prior.cov)
+        .inverse()
+        .context("gauss-newton: prior covariance is singular")?;
+
+    let mut x = mu.clone();
+    let mut h_final = w0.clone();
+    for _ in 0..max_iters {
+        let mut h = w0.clone();
+        let mut g = vec![0.0; n];
+        // prior pull: W0 (mu - x)
+        for i in 0..n {
+            for j in 0..n {
+                g[i] += w0[(i, j)].re * (mu[j] - x[j]);
+            }
+        }
+        for f in &problem.factors {
+            let j = f.jacobian(&x)?;
+            let r: Vec<f64> = f
+                .eval(&x)?
+                .iter()
+                .zip(&f.z)
+                .map(|(hx, z)| z - hx)
+                .collect();
+            let winv = 1.0 / f.noise_var;
+            for a in 0..f.m {
+                for i in 0..n {
+                    g[i] += j[a][i] * winv * r[a];
+                    for k in 0..n {
+                        h[(i, k)] = h[(i, k)] + c64::new(j[a][i] * winv * j[a][k], 0.0);
+                    }
+                }
+            }
+        }
+        let mut gm = CMatrix::zeros(n, 1);
+        for (i, v) in g.iter().enumerate() {
+            gm[(i, 0)] = c64::new(*v, 0.0);
+        }
+        let delta = h.solve(&gm).context("gauss-newton: normal equations singular")?;
+        let mut step = 0.0_f64;
+        for i in 0..n {
+            x[i] += delta[(i, 0)].re;
+            step = step.max(delta[(i, 0)].re.abs());
+        }
+        h_final = h;
+        if step < tol {
+            break;
+        }
+    }
+    let cov = h_final
+        .inverse()
+        .context("gauss-newton: information matrix singular at the optimum")?;
+    let mean: Vec<c64> = x.iter().map(|v| c64::new(*v, 0.0)).collect();
+    Ok(GaussMessage::new(mean, cov))
+}

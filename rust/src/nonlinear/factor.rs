@@ -1,0 +1,237 @@
+//! Nonlinear measurement factors: `z = h(x) + v`.
+//!
+//! The device's node vocabulary is linear-Gaussian; a nonlinear factor
+//! carries the measurement function `h`, the measurement `z`, and the
+//! observation noise, and is turned into a linear compound-observation
+//! section by a [`super::Linearizer`]. Measurements occupy the first
+//! `m ≤ n` components of the device's `n`-dim state; the remaining rows
+//! of the linearized state matrix are zero, so they observe pure noise
+//! and add no information (the same rank-deficiency trick
+//! `apps/toa` and the GBP unary lowering already rely on).
+
+use std::fmt;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::gmp::matrix::{c64, CMatrix};
+use crate::gmp::message::GaussMessage;
+
+/// Measurement function on the real state vector (length `n` in, `m` out).
+pub type HFn = Arc<dyn Fn(&[f64]) -> Vec<f64> + Send + Sync>;
+
+/// Analytic Jacobian: `m` rows of `n` partial derivatives.
+pub type JFn = Arc<dyn Fn(&[f64]) -> Vec<Vec<f64>> + Send + Sync>;
+
+/// Two-argument measurement function `h(x_from, x_to)` for relative
+/// (pairwise) factors such as inter-pose ranges.
+pub type H2Fn = Arc<dyn Fn(&[f64], &[f64]) -> Vec<f64> + Send + Sync>;
+
+/// Finite-difference step for numeric Jacobians (relative to |x_i|).
+const FD_STEP: f64 = 1e-6;
+
+/// A nonlinear observation of one `n`-dim variable: `z = h(x) + v`,
+/// `v ~ N(0, noise_var · I_m)`, with `h` acting on the **real part** of
+/// the state (the nonlinear workloads this subsystem serves — ranging,
+/// bearing — are real-valued; complex states embed them component-wise).
+#[derive(Clone)]
+pub struct NonlinearFactor {
+    /// State dimension (must match the device size).
+    pub n: usize,
+    /// Measurement dimension (`m ≤ n`, occupies components `0..m`).
+    pub m: usize,
+    /// Measurement function.
+    pub h: HFn,
+    /// Analytic Jacobian; `None` falls back to central differences.
+    pub jac: Option<JFn>,
+    /// Measured value, length `m`.
+    pub z: Vec<f64>,
+    /// Observation noise variance per measurement component.
+    pub noise_var: f64,
+}
+
+impl fmt::Debug for NonlinearFactor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("NonlinearFactor")
+            .field("n", &self.n)
+            .field("m", &self.m)
+            .field("jac", &self.jac.is_some().then_some("analytic"))
+            .field("z", &self.z)
+            .field("noise_var", &self.noise_var)
+            .finish()
+    }
+}
+
+impl NonlinearFactor {
+    pub fn new(n: usize, m: usize, h: HFn, z: Vec<f64>, noise_var: f64) -> Result<Self> {
+        if m == 0 || m > n {
+            bail!("measurement dimension m={m} must satisfy 1 <= m <= n={n}");
+        }
+        if z.len() != m {
+            bail!("measurement has {} components but m={m}", z.len());
+        }
+        if !(noise_var > 0.0) {
+            bail!("noise variance must be positive, got {noise_var}");
+        }
+        Ok(NonlinearFactor { n, m, h, jac: None, z, noise_var })
+    }
+
+    /// Attach an analytic Jacobian (`m` rows × `n` cols).
+    pub fn with_jacobian(mut self, jac: JFn) -> Self {
+        self.jac = Some(jac);
+        self
+    }
+
+    /// Evaluate `h` at the (real) state `x`, checking dimensions.
+    pub fn eval(&self, x: &[f64]) -> Result<Vec<f64>> {
+        if x.len() != self.n {
+            bail!("state has {} components but n={}", x.len(), self.n);
+        }
+        let y = (self.h)(x);
+        if y.len() != self.m {
+            bail!("h returned {} components but m={}", y.len(), self.m);
+        }
+        Ok(y)
+    }
+
+    /// Jacobian of `h` at `x`: analytic if supplied, central differences
+    /// otherwise. `m` rows × `n` cols.
+    pub fn jacobian(&self, x: &[f64]) -> Result<Vec<Vec<f64>>> {
+        if let Some(j) = &self.jac {
+            let rows = j(x);
+            if rows.len() != self.m || rows.iter().any(|r| r.len() != self.n) {
+                bail!(
+                    "analytic Jacobian must be {}x{}, got {}x{}",
+                    self.m,
+                    self.n,
+                    rows.len(),
+                    rows.first().map_or(0, |r| r.len())
+                );
+            }
+            return Ok(rows);
+        }
+        let mut rows = vec![vec![0.0; self.n]; self.m];
+        let mut xp = x.to_vec();
+        let mut xm = x.to_vec();
+        for i in 0..self.n {
+            let step = FD_STEP * (1.0 + x[i].abs());
+            xp[i] = x[i] + step;
+            xm[i] = x[i] - step;
+            let hp = self.eval(&xp).context("numeric Jacobian (forward point)")?;
+            let hm = self.eval(&xm).context("numeric Jacobian (backward point)")?;
+            for (r, row) in rows.iter_mut().enumerate() {
+                row[i] = (hp[r] - hm[r]) / (2.0 * step);
+            }
+            xp[i] = x[i];
+            xm[i] = x[i];
+        }
+        Ok(rows)
+    }
+}
+
+/// A nonlinear relative measurement between two variables:
+/// `z = h(x_from, x_to) + v`, `v ~ N(0, noise_var · I_m)` — the GBP
+/// pairwise analogue of [`NonlinearFactor`] (inter-pose ranges,
+/// relative bearings). Linearized per endpoint by any
+/// [`super::Linearizer`] via single-argument adapters that hold the
+/// other endpoint at its current belief mean.
+#[derive(Clone)]
+pub struct PairwiseNonlinear {
+    pub n: usize,
+    pub m: usize,
+    pub h: H2Fn,
+    pub z: Vec<f64>,
+    pub noise_var: f64,
+}
+
+impl fmt::Debug for PairwiseNonlinear {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("PairwiseNonlinear")
+            .field("n", &self.n)
+            .field("m", &self.m)
+            .field("z", &self.z)
+            .field("noise_var", &self.noise_var)
+            .finish()
+    }
+}
+
+impl PairwiseNonlinear {
+    pub fn new(n: usize, m: usize, h: H2Fn, z: Vec<f64>, noise_var: f64) -> Result<Self> {
+        if m == 0 || m > n {
+            bail!("measurement dimension m={m} must satisfy 1 <= m <= n={n}");
+        }
+        if z.len() != m {
+            bail!("measurement has {} components but m={m}", z.len());
+        }
+        if !(noise_var > 0.0) {
+            bail!("noise variance must be positive, got {noise_var}");
+        }
+        Ok(PairwiseNonlinear { n, m, h, z, noise_var })
+    }
+
+    /// Evaluate `h` at the (real) endpoint states.
+    pub fn eval(&self, x_from: &[f64], x_to: &[f64]) -> Result<Vec<f64>> {
+        if x_from.len() != self.n || x_to.len() != self.n {
+            bail!("endpoint states must both have n={} components", self.n);
+        }
+        let y = (self.h)(x_from, x_to);
+        if y.len() != self.m {
+            bail!("h returned {} components but m={}", y.len(), self.m);
+        }
+        Ok(y)
+    }
+
+    /// Single-argument adapter over `x_from` with `x_to` frozen, so any
+    /// [`super::Linearizer`] (Jacobian or sigma-point) applies per
+    /// endpoint.
+    pub fn adapter_from(&self, x_to: &[f64]) -> Result<NonlinearFactor> {
+        let h = Arc::clone(&self.h);
+        let frozen = x_to.to_vec();
+        NonlinearFactor::new(
+            self.n,
+            self.m,
+            Arc::new(move |x: &[f64]| h(x, &frozen)),
+            self.z.clone(),
+            self.noise_var,
+        )
+    }
+
+    /// Single-argument adapter over `x_to` with `x_from` frozen.
+    pub fn adapter_to(&self, x_from: &[f64]) -> Result<NonlinearFactor> {
+        let h = Arc::clone(&self.h);
+        let frozen = x_from.to_vec();
+        NonlinearFactor::new(
+            self.n,
+            self.m,
+            Arc::new(move |x: &[f64]| h(&frozen, x)),
+            self.z.clone(),
+            self.noise_var,
+        )
+    }
+}
+
+/// Embed an `m×n` real Jacobian block into the device's `n×n` state
+/// matrix (zero rows below observe pure noise).
+pub fn pad_matrix(rows: &[Vec<f64>], n: usize) -> CMatrix {
+    let mut a = CMatrix::zeros(n, n);
+    for (i, row) in rows.iter().enumerate() {
+        for (j, v) in row.iter().enumerate() {
+            a[(i, j)] = c64::new(*v, 0.0);
+        }
+    }
+    a
+}
+
+/// Embed `m` real measurement components into an `n`-dim mean vector.
+pub fn pad_vector(vals: &[f64], n: usize) -> Vec<c64> {
+    let mut v = vec![c64::ZERO; n];
+    for (i, x) in vals.iter().enumerate() {
+        v[i] = c64::new(*x, 0.0);
+    }
+    v
+}
+
+/// Real part of a message mean (the state the nonlinear `h` acts on).
+pub fn real_mean(msg: &GaussMessage) -> Vec<f64> {
+    msg.mean.iter().map(|z| z.re).collect()
+}

@@ -1,0 +1,500 @@
+//! Pluggable linearizers: nonlinear factor → compound-observation section.
+//!
+//! Petersen et al., *On Approximate Nonlinear Gaussian Message Passing
+//! on Factor Graphs* (2019) gives two families of Gaussian
+//! approximations for a nonlinear node `z = h(x) + v`:
+//!
+//! * **first-order** (EKF-style): Taylor-expand `h` at the incoming
+//!   mean, `h(x) ≈ h(x₀) + J·(x − x₀)` — the linearized model is
+//!   `z_eff = J x + v` with pseudo-measurement
+//!   `z_eff = z − h(x₀) + J x₀`;
+//! * **sigma-point** (unscented / statistical linearization): propagate
+//!   deterministically chosen sigma points of the incoming belief
+//!   through `h`, then fit the affine model `h(x) ≈ A x + b` that
+//!   matches the joint second moments; the fit residual
+//!   `P_yy − A P A^T` widens the effective observation noise, so the
+//!   approximation accounts for curvature the Jacobian misses.
+//!
+//! Either way the output is a [`Linearization`] — a state matrix plus a
+//! pseudo-observation message — which is **exactly** the input contract
+//! of the compound-observation node the compiler already lowers and the
+//! device already executes. Both linearizers are exact on affine `h`
+//! (pinned to 1e-9 by `rust/tests/property_nonlinear.rs`).
+
+use anyhow::{bail, Context, Result};
+
+use crate::gmp::matrix::{c64, CMatrix};
+use crate::gmp::message::GaussMessage;
+
+use super::factor::{pad_matrix, pad_vector, real_mean, NonlinearFactor, PairwiseNonlinear};
+
+/// A linearized nonlinear factor: the inputs of one compound-observation
+/// section (`A` state matrix + pseudo-observation message), ready for
+/// the existing compiler/engine path.
+#[derive(Clone, Debug)]
+pub struct Linearization {
+    /// `n×n` state matrix; rows `0..m` carry the linearized model, the
+    /// rest are zero (pure-noise rows, no information).
+    pub a: CMatrix,
+    /// Pseudo-observation: mean = effective measurement, covariance =
+    /// observation noise (plus the statistical-linearization residual
+    /// for sigma-point linearizers).
+    pub obs: GaussMessage,
+}
+
+/// Turns a [`NonlinearFactor`] into the linear compound-observation
+/// section the engine executes, given the belief to linearize at.
+pub trait Linearizer {
+    /// Short identifier for reports ("ekf", "ukf", ...).
+    fn name(&self) -> &'static str;
+
+    /// Linearize `f` at the belief `at` (first-order uses the mean;
+    /// sigma-point uses mean *and* covariance).
+    fn linearize(&self, f: &NonlinearFactor, at: &GaussMessage) -> Result<Linearization>;
+}
+
+// ---------------------------------------------------------------------
+// First-order (EKF-style)
+// ---------------------------------------------------------------------
+
+/// Jacobian linearization at the belief mean (analytic Jacobian when the
+/// factor carries one, central differences otherwise).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FirstOrder;
+
+impl Linearizer for FirstOrder {
+    fn name(&self) -> &'static str {
+        "ekf"
+    }
+
+    fn linearize(&self, f: &NonlinearFactor, at: &GaussMessage) -> Result<Linearization> {
+        let x0 = real_mean(at);
+        let h0 = f.eval(&x0).context("first-order linearization: h(x0)")?;
+        let j = f.jacobian(&x0).context("first-order linearization: Jacobian")?;
+        // z_eff = z - h(x0) + J x0
+        let z_eff: Vec<f64> = (0..f.m)
+            .map(|r| {
+                let jx0: f64 = j[r].iter().zip(&x0).map(|(a, b)| a * b).sum();
+                f.z[r] - h0[r] + jx0
+            })
+            .collect();
+        Ok(Linearization {
+            a: pad_matrix(&j, f.n),
+            obs: GaussMessage::new(
+                pad_vector(&z_eff, f.n),
+                CMatrix::scaled_identity(f.n, f.noise_var),
+            ),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sigma-point (unscented / statistical linearization)
+// ---------------------------------------------------------------------
+
+/// Scaled unscented transform weights and sigma points (Julier &
+/// Uhlmann; Petersen et al. 2019 §sigma-point methods).
+#[derive(Clone, Copy, Debug)]
+pub struct SigmaPoint {
+    /// Spread of the sigma points around the mean (default 1.0).
+    pub alpha: f64,
+    /// Prior-knowledge-of-distribution weight on the center covariance
+    /// term (2.0 is optimal for Gaussians).
+    pub beta: f64,
+    /// Secondary scaling; `None` picks the Gaussian-kurtosis-matching
+    /// `3 − n` at linearization time.
+    pub kappa: Option<f64>,
+}
+
+impl Default for SigmaPoint {
+    fn default() -> Self {
+        SigmaPoint { alpha: 1.0, beta: 2.0, kappa: None }
+    }
+}
+
+/// Moments of the unscented pushforward (exposed for the property
+/// suite: the UT must reproduce mean/covariance of a linear map).
+#[derive(Clone, Debug)]
+pub struct UtStats {
+    /// Input mean (real part), length `n`.
+    pub xbar: Vec<f64>,
+    /// Pushforward mean, length `m`.
+    pub ybar: Vec<f64>,
+    /// Pushforward covariance (`m×m`, real).
+    pub pyy: CMatrix,
+    /// Input/output cross-covariance (`n×m`, real).
+    pub pxy: CMatrix,
+}
+
+impl SigmaPoint {
+    pub fn new(alpha: f64, beta: f64, kappa: f64) -> Self {
+        SigmaPoint { alpha, beta, kappa: Some(kappa) }
+    }
+
+    fn lambda(&self, n: usize) -> f64 {
+        let kappa = self.kappa.unwrap_or(3.0 - n as f64);
+        self.alpha * self.alpha * (n as f64 + kappa) - n as f64
+    }
+
+    /// Mean and covariance weights for an `n`-dim state: `2n + 1`
+    /// entries each; the mean weights sum to one. The scaling
+    /// `n + λ = α²(n + κ)` must be positive — a contract on the
+    /// constructor parameters, asserted here (the fallible path through
+    /// [`SigmaPoint::unscented_stats`] returns the same condition as an
+    /// error).
+    pub fn weights(&self, n: usize) -> (Vec<f64>, Vec<f64>) {
+        let lambda = self.lambda(n);
+        let denom = n as f64 + lambda;
+        assert!(
+            denom > 0.0,
+            "sigma-point scaling n + lambda = {denom} must be positive \
+             (alpha {}, kappa {:?})",
+            self.alpha,
+            self.kappa
+        );
+        let wi = 1.0 / (2.0 * denom);
+        let mut wm = vec![wi; 2 * n + 1];
+        let mut wc = vec![wi; 2 * n + 1];
+        wm[0] = lambda / denom;
+        wc[0] = lambda / denom + (1.0 - self.alpha * self.alpha + self.beta);
+        (wm, wc)
+    }
+
+    /// Unscented pushforward of `at` through the factor's `h`.
+    pub fn unscented_stats(&self, f: &NonlinearFactor, at: &GaussMessage) -> Result<UtStats> {
+        let n = f.n;
+        if at.dim() != n {
+            bail!("belief has dim {} but the factor expects n={n}", at.dim());
+        }
+        let lambda = self.lambda(n);
+        if n as f64 + lambda <= 0.0 {
+            bail!(
+                "sigma-point scaling n + lambda = {} must be positive (alpha {}, kappa {:?})",
+                n as f64 + lambda,
+                self.alpha,
+                self.kappa
+            );
+        }
+        let (wm, wc) = self.weights(n);
+        let xbar = real_mean(at);
+        let scaled = real_symmetric(&at.cov).scale(n as f64 + lambda);
+        let l = cholesky_lower(&scaled).context("sigma points: covariance square root")?;
+
+        // 2n + 1 sigma points: mean, mean ± columns of L
+        let mut chis = Vec::with_capacity(2 * n + 1);
+        chis.push(xbar.clone());
+        for i in 0..n {
+            let col: Vec<f64> = (0..n).map(|r| l[(r, i)].re).collect();
+            chis.push(xbar.iter().zip(&col).map(|(a, b)| a + b).collect());
+            chis.push(xbar.iter().zip(&col).map(|(a, b)| a - b).collect());
+        }
+        let ys: Vec<Vec<f64>> = chis
+            .iter()
+            .map(|chi| f.eval(chi))
+            .collect::<Result<_>>()
+            .context("sigma points: evaluating h")?;
+
+        let m = f.m;
+        let mut ybar = vec![0.0; m];
+        for (w, y) in wm.iter().zip(&ys) {
+            for (acc, v) in ybar.iter_mut().zip(y) {
+                *acc += w * v;
+            }
+        }
+        let mut pyy = CMatrix::zeros(m, m);
+        let mut pxy = CMatrix::zeros(n, m);
+        for ((w, chi), y) in wc.iter().zip(&chis).zip(&ys) {
+            let dy: Vec<f64> = y.iter().zip(&ybar).map(|(a, b)| a - b).collect();
+            let dx: Vec<f64> = chi.iter().zip(&xbar).map(|(a, b)| a - b).collect();
+            for i in 0..m {
+                for j in 0..m {
+                    pyy[(i, j)] = pyy[(i, j)] + c64::new(w * dy[i] * dy[j], 0.0);
+                }
+            }
+            for i in 0..n {
+                for j in 0..m {
+                    pxy[(i, j)] = pxy[(i, j)] + c64::new(w * dx[i] * dy[j], 0.0);
+                }
+            }
+        }
+        Ok(UtStats { xbar, ybar, pyy, pxy })
+    }
+}
+
+impl Linearizer for SigmaPoint {
+    fn name(&self) -> &'static str {
+        "ukf"
+    }
+
+    fn linearize(&self, f: &NonlinearFactor, at: &GaussMessage) -> Result<Linearization> {
+        let s = self.unscented_stats(f, at)?;
+        let n = f.n;
+        let m = f.m;
+        // statistical linearization: A = P_xy^T P^{-1} (fits h ≈ A x + b
+        // in the joint-moment sense)
+        let p = real_symmetric(&at.cov);
+        let pinv_pxy = p
+            .solve(&s.pxy)
+            .context("sigma-point linearization: input covariance is singular")?;
+        let a_lin = pinv_pxy.transpose(); // m×n, real
+        // fit residual widens the effective observation noise;
+        // symmetrize (into a copy — in-place would skew the upper
+        // half) and clamp round-off negatives on the diagonal
+        let raw = s.pyy.sub(&a_lin.matmul(&p).matmul(&a_lin.transpose()));
+        let mut resid = CMatrix::zeros(m, m);
+        for i in 0..m {
+            for j in 0..m {
+                resid[(i, j)] = c64::new((raw[(i, j)].re + raw[(j, i)].re) / 2.0, 0.0);
+            }
+        }
+        for i in 0..m {
+            if resid[(i, i)].re < 0.0 {
+                resid[(i, i)] = c64::ZERO;
+            }
+        }
+        // z_eff = z - b = z - ybar + A xbar
+        let z_eff: Vec<f64> = (0..m)
+            .map(|r| {
+                let ax: f64 = (0..n).map(|j| a_lin[(r, j)].re * s.xbar[j]).sum();
+                f.z[r] - s.ybar[r] + ax
+            })
+            .collect();
+        let mut cov = CMatrix::scaled_identity(n, f.noise_var);
+        for i in 0..m {
+            for j in 0..m {
+                cov[(i, j)] = cov[(i, j)] + resid[(i, j)];
+            }
+        }
+        // embed the m×n fit into the device's n×n state matrix
+        let mut a = CMatrix::zeros(n, n);
+        for i in 0..m {
+            for j in 0..n {
+                a[(i, j)] = a_lin[(i, j)];
+            }
+        }
+        Ok(Linearization { a, obs: GaussMessage::new(pad_vector(&z_eff, n), cov) })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pairwise linearization (GBP relative factors)
+// ---------------------------------------------------------------------
+
+/// A linearized pairwise factor: `z_eff ≈ A_from x_from + A_to x_to + v`
+/// with `v ~ N(0, obs.cov)` — the joint-linear stand-in the GBP bridge
+/// lowers to multiplier/adder/compound chains and the dense reference
+/// assembles into the joint information matrix.
+#[derive(Clone, Debug)]
+pub struct PairRelin {
+    pub a_from: CMatrix,
+    pub a_to: CMatrix,
+    /// mean = effective measurement `z − h(x₀) + A_f x₀f + A_t x₀t`
+    /// (padded to `n`); cov = observation noise plus both endpoints'
+    /// statistical-linearization residuals.
+    pub obs: GaussMessage,
+}
+
+impl PairwiseNonlinear {
+    /// Linearize at the two endpoint beliefs through any [`Linearizer`]
+    /// (each endpoint is linearized with the other frozen at its mean).
+    pub fn linearize_with(
+        &self,
+        linearizer: &dyn Linearizer,
+        belief_from: &GaussMessage,
+        belief_to: &GaussMessage,
+    ) -> Result<PairRelin> {
+        let xf = real_mean(belief_from);
+        let xt = real_mean(belief_to);
+        let lf = linearizer
+            .linearize(&self.adapter_from(&xt)?, belief_from)
+            .context("pairwise linearization (from side)")?;
+        let lt = linearizer
+            .linearize(&self.adapter_to(&xf)?, belief_to)
+            .context("pairwise linearization (to side)")?;
+        let h0 = self.eval(&xf, &xt)?;
+        // joint affine fit h ≈ A_f x_f + A_t x_t + c with
+        // c = b_f + b_t − h(x₀) (each endpoint's intercept counted
+        // once; exact for the Jacobian linearizer, and keeping the
+        // sigma-point curvature corrections b − h(x₀) of both sides).
+        // Each per-endpoint linearization reports b via obs.mean = z − b.
+        let z_eff: Vec<f64> = (0..self.m)
+            .map(|r| lf.obs.mean[r].re + lt.obs.mean[r].re - self.z[r] + h0[r])
+            .collect();
+        // noise + residual_f + residual_t (each lin cov = noise + its
+        // own residual, so summing and removing one noise term keeps
+        // exactly one copy of the noise)
+        let base = CMatrix::scaled_identity(self.n, self.noise_var);
+        let cov = lf.obs.cov.add(&lt.obs.cov).sub(&base);
+        Ok(PairRelin {
+            a_from: lf.a,
+            a_to: lt.a,
+            obs: GaussMessage::new(pad_vector(&z_eff, self.n), cov),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Small real-matrix helpers
+// ---------------------------------------------------------------------
+
+/// Real symmetric part of a (Hermitian) covariance: `(Re V + Re V^T)/2`
+/// — the matrix the real-valued nonlinear machinery (sigma points,
+/// Gauss–Newton) operates on.
+pub fn real_symmetric(v: &CMatrix) -> CMatrix {
+    let n = v.rows;
+    let mut out = CMatrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            out[(i, j)] = c64::new((v[(i, j)].re + v[(j, i)].re) / 2.0, 0.0);
+        }
+    }
+    out
+}
+
+/// Lower Cholesky factor of a real symmetric PSD matrix, retrying with
+/// escalating diagonal jitter (sigma points tolerate a slightly
+/// regularized square root; the ladder tops out above the Q5.10 LSB so
+/// device-quantized beliefs — which can be marginally indefinite —
+/// still linearize). A hard failure means the belief covariance is
+/// broken.
+fn cholesky_lower(p: &CMatrix) -> Result<CMatrix> {
+    let n = p.rows;
+    for jitter in [0.0, 1e-12, 1e-9, 1e-6, 4e-3] {
+        if let Some(l) = try_cholesky(p, n, jitter) {
+            return Ok(l);
+        }
+    }
+    bail!("covariance is not positive definite (cholesky failed at jitter 4e-3)")
+}
+
+fn try_cholesky(p: &CMatrix, n: usize, jitter: f64) -> Option<CMatrix> {
+    let mut l = CMatrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = p[(i, j)].re;
+            if i == j {
+                s += jitter;
+            }
+            for k in 0..j {
+                s -= l[(i, k)].re * l[(j, k)].re;
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l[(i, j)] = c64::new(s.sqrt(), 0.0);
+            } else {
+                l[(i, j)] = c64::new(s / l[(j, j)].re, 0.0);
+            }
+        }
+    }
+    Some(l)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+    use std::sync::Arc;
+
+    fn range_factor(n: usize, anchor: (f64, f64), z: f64, var: f64) -> NonlinearFactor {
+        NonlinearFactor::new(
+            n,
+            1,
+            Arc::new(move |x: &[f64]| {
+                vec![((x[0] - anchor.0).powi(2) + (x[1] - anchor.1).powi(2)).sqrt()]
+            }),
+            vec![z],
+            var,
+        )
+        .unwrap()
+    }
+
+    fn belief(rng: &mut Rng, n: usize) -> GaussMessage {
+        GaussMessage::new(
+            (0..n).map(|_| c64::new(rng.range(0.2, 0.8), 0.0)).collect(),
+            CMatrix::scaled_identity(n, 0.1),
+        )
+    }
+
+    #[test]
+    fn numeric_jacobian_matches_analytic_on_range() {
+        let n = 4;
+        let f = range_factor(n, (0.0, 0.0), 0.5, 1e-3);
+        let x = [0.3, 0.4, 0.0, 0.0];
+        let j = f.jacobian(&x).unwrap();
+        // analytic: unit vector towards x
+        let d = 0.5;
+        assert!((j[0][0] - 0.3 / d).abs() < 1e-6);
+        assert!((j[0][1] - 0.4 / d).abs() < 1e-6);
+        assert!(j[0][2].abs() < 1e-9 && j[0][3].abs() < 1e-9);
+    }
+
+    #[test]
+    fn first_order_and_sigma_agree_on_gentle_curvature() {
+        let mut rng = Rng::new(7);
+        let n = 4;
+        let f = range_factor(n, (-0.5, -0.5), 1.1, 1e-3);
+        let at = belief(&mut rng, n);
+        let ekf = FirstOrder.linearize(&f, &at).unwrap();
+        let ukf = SigmaPoint::default().linearize(&f, &at).unwrap();
+        assert!(ekf.a.dist(&ukf.a) < 0.2, "dist {}", ekf.a.dist(&ukf.a));
+        // the UT's curvature correction (~½ tr(H·P)) bounds the
+        // pseudo-measurement gap at this geometry
+        assert!(
+            (ekf.obs.mean[0] - ukf.obs.mean[0]).abs() < 0.1,
+            "pseudo-measurements differ: {} vs {}",
+            ekf.obs.mean[0],
+            ukf.obs.mean[0]
+        );
+    }
+
+    #[test]
+    fn sigma_residual_widens_noise_under_curvature() {
+        let n = 4;
+        // strong curvature: target close to the anchor, wide belief
+        let f = range_factor(n, (0.45, 0.45), 0.2, 1e-4);
+        let at = GaussMessage::new(
+            vec![c64::new(0.5, 0.0), c64::new(0.5, 0.0), c64::ZERO, c64::ZERO],
+            CMatrix::scaled_identity(n, 0.2),
+        );
+        let lin = SigmaPoint::default().linearize(&f, &at).unwrap();
+        assert!(
+            lin.obs.cov[(0, 0)].re > f.noise_var,
+            "residual must widen the observation noise: {} vs {}",
+            lin.obs.cov[(0, 0)].re,
+            f.noise_var
+        );
+    }
+
+    #[test]
+    fn pairwise_linearization_is_antisymmetric_for_range() {
+        let n = 4;
+        let f = PairwiseNonlinear::new(
+            n,
+            1,
+            Arc::new(|a: &[f64], b: &[f64]| {
+                vec![((b[0] - a[0]).powi(2) + (b[1] - a[1]).powi(2)).sqrt()]
+            }),
+            vec![0.5],
+            1e-3,
+        )
+        .unwrap();
+        let bf = GaussMessage::new(
+            vec![c64::new(0.1, 0.0), c64::new(0.1, 0.0), c64::ZERO, c64::ZERO],
+            CMatrix::scaled_identity(n, 0.05),
+        );
+        let bt = GaussMessage::new(
+            vec![c64::new(0.5, 0.0), c64::new(0.4, 0.0), c64::ZERO, c64::ZERO],
+            CMatrix::scaled_identity(n, 0.05),
+        );
+        let pr = f.linearize_with(&FirstOrder, &bf, &bt).unwrap();
+        // d|b-a|/da = -(b-a)/d, d|b-a|/db = +(b-a)/d
+        for j in 0..2 {
+            assert!(
+                (pr.a_from[(0, j)].re + pr.a_to[(0, j)].re).abs() < 1e-5,
+                "range Jacobians must be antisymmetric"
+            );
+        }
+    }
+}

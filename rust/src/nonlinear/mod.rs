@@ -1,0 +1,56 @@
+//! S14 — Nonlinear Gaussian message passing over the engine surface.
+//!
+//! The paper's message-update engine is exact only for linear-Gaussian
+//! nodes, yet the workloads it targets at scale — localization,
+//! tracking, receivers — are nonlinear. This subsystem closes that gap
+//! the way Petersen et al., *On Approximate Nonlinear Gaussian Message
+//! Passing on Factor Graphs* (2019) prescribe: approximate each
+//! nonlinear node by a linear-Gaussian stand-in, iterate the
+//! approximation point to a Gauss–Newton-style fixed point, and let the
+//! existing linear machinery do all the arithmetic.
+//!
+//! * [`factor`] — [`NonlinearFactor`] (`z = h(x) + v` on one variable)
+//!   and [`PairwiseNonlinear`] (`z = h(x_from, x_to) + v` between two),
+//!   with analytic or central-difference Jacobians;
+//! * [`linearize`] — the pluggable [`Linearizer`] trait with two
+//!   implementations: [`FirstOrder`] (EKF-style Jacobian expansion) and
+//!   [`SigmaPoint`] (unscented statistical linearization with
+//!   configurable α/β/κ weights, fit residual widening the effective
+//!   noise). Either emits a [`Linearization`] — precisely the state
+//!   matrix + observation pair of the compound-observation node the
+//!   compiler already lowers;
+//! * [`driver`] — [`IteratedRelinearization`] sweeps re-linearize → run
+//!   → update-point over a [`NonlinearProblem`]; every round is a
+//!   [`RelinSweep`] workload of **fixed graph shape**, so rounds after
+//!   the first are program-cache hits on the [`crate::engine::Session`]
+//!   (and the whole sweep can ship through a
+//!   [`crate::coordinator::FgpFarm`]). [`gauss_newton`] is the dense
+//!   reference the fixed point is validated against.
+//!
+//! The GBP layer consumes the same trait: [`crate::gbp::GbpModel`]
+//! accepts nonlinear unary/pairwise factors and the solver relinearizes
+//! them at the current beliefs every round (Ortiz et al. 2021) — see
+//! `crate::gbp::bridge::RelinContext`.
+//!
+//! Contract, pinned by `rust/tests/property_nonlinear.rs`:
+//!
+//! 1. both linearizers are **exact** (≤ 1e-9) on affine `h`;
+//! 2. sigma-point mean weights sum to 1 and the unscented transform
+//!    reproduces the mean/covariance of a linear pushforward;
+//! 3. the iterated driver's fixed point matches the dense Gauss–Newton
+//!    solve on the range model.
+
+pub mod driver;
+pub mod factor;
+pub mod linearize;
+
+pub use driver::{
+    gauss_newton, IteratedRelinearization, NonlinearProblem, RelinOptions, RelinReport,
+    RelinStop, RelinSweep,
+};
+pub use factor::{
+    pad_matrix, pad_vector, real_mean, H2Fn, HFn, JFn, NonlinearFactor, PairwiseNonlinear,
+};
+pub use linearize::{
+    real_symmetric, FirstOrder, Linearization, Linearizer, PairRelin, SigmaPoint, UtStats,
+};

@@ -134,6 +134,7 @@ fn grid_marginals_track_dense_on_the_device() {
         policy: IterationPolicy::Synchronous { eta_damping: 0.0 },
         criteria: ConvergenceCriteria { tol: 2e-2, max_iters: 40, divergence: 1e3 },
         init_var: 4.0,
+        ..Default::default()
     };
     let out = p.run(&mut Session::fgp_sim(FgpConfig::default()), opts).unwrap();
     assert_ne!(out.report.stop, StopReason::Diverged, "{:?}", out.report.delta_history);
@@ -163,6 +164,7 @@ fn farm_sharded_round_is_bitwise_identical_to_single_device() {
         policy: IterationPolicy::Synchronous { eta_damping: 0.0 },
         criteria: ConvergenceCriteria { tol: 0.0, max_iters: 2, divergence: 1e9 },
         init_var: 4.0,
+        ..Default::default()
     };
 
     let mut single = GbpSolver::new(model.clone(), opts).unwrap();
@@ -226,6 +228,7 @@ fn pose_loop_conforms_on_the_device() {
                 policy: IterationPolicy::Synchronous { eta_damping: 0.0 },
                 criteria: ConvergenceCriteria { tol: 2e-2, max_iters: 60, divergence: 1e3 },
                 init_var: 4.0,
+                ..Default::default()
             },
         )
         .unwrap();
@@ -255,6 +258,7 @@ fn one_session_serves_scheduled_and_loopy_workloads() {
                 policy: IterationPolicy::Synchronous { eta_damping: 0.0 },
                 criteria: ConvergenceCriteria { tol: 2e-2, max_iters: 10, divergence: 1e3 },
                 init_var: 4.0,
+                ..Default::default()
             },
         )
         .unwrap();

@@ -1,0 +1,134 @@
+//! End-to-end contract of the nonlinear subsystem (ISSUE 3):
+//!
+//! * EKF and UKF bearing-only tracking conform to the dense
+//!   Gauss–Newton reference on the golden engine **and** stay in its
+//!   regime on the cycle-accurate device;
+//! * every round after the first of a relinearization sweep is a
+//!   session program-cache **hit** (fixed graph shape);
+//! * the same sweeps serve through an [`FgpFarm`] via the raw
+//!   workload-request path, matching the single-device result;
+//! * nonlinear factors inside loopy GBP run on the device and match
+//!   the linearized dense reference on golden.
+
+use std::sync::Arc;
+
+use fgp_repro::apps::bearing::BearingProblem;
+use fgp_repro::apps::rangechain::RangeChain;
+use fgp_repro::apps::toa::ToaProblem;
+use fgp_repro::coordinator::{FgpFarm, RoutePolicy};
+use fgp_repro::engine::Session;
+use fgp_repro::fgp::FgpConfig;
+use fgp_repro::gbp::{ConvergenceCriteria, FarmExecutor, GbpOptions, IterationPolicy};
+use fgp_repro::nonlinear::{
+    FirstOrder, IteratedRelinearization, Linearizer, RelinOptions, SigmaPoint,
+};
+
+#[test]
+fn bearing_ekf_and_ukf_conform_to_dense_reference_on_golden_and_device() {
+    let p = BearingProblem::synthetic(6, 4, 1e-4, 5);
+    let reference = p.reference_track().unwrap();
+    let ukf = SigmaPoint::default();
+    let linearizers: [(&str, &dyn Linearizer, f64); 2] =
+        [("ekf", &FirstOrder, 1e-4), ("ukf", &ukf, 0.05)];
+    for (tag, lin, golden_tol) in linearizers {
+        let golden = p.track(&mut Session::golden(), lin, 5).unwrap();
+        assert!(!golden.diverged, "{tag} diverged on golden");
+        let d = BearingProblem::max_deviation(&golden.estimates, &reference);
+        assert!(d < golden_tol, "{tag} golden vs reference: {d}");
+        let device = p.track(&mut Session::fgp_sim(FgpConfig::default()), lin, 2).unwrap();
+        assert!(!device.diverged, "{tag} diverged on the device");
+        let d = BearingProblem::max_deviation(&device.estimates, &reference);
+        assert!(d < 0.1, "{tag} device vs reference: {d}");
+    }
+}
+
+#[test]
+fn round_two_of_a_relinearization_sweep_is_a_cache_hit() {
+    let mut sim = Session::fgp_sim(FgpConfig::default());
+    let p = ToaProblem::synthetic(6, 1e-3, 13);
+    let problem = p.nonlinear_problem(4).unwrap();
+    let driver = IteratedRelinearization::with_options(
+        &FirstOrder,
+        RelinOptions { max_rounds: 3, tol: 0.0, ..Default::default() },
+    );
+    let report = driver.run(&mut sim, &problem).unwrap();
+    // tol = 0 forces every round to run; the shape never changes
+    assert_eq!(report.rounds, 3);
+    assert_eq!(report.cached, vec![false, true, true], "round >= 2 must hit the cache");
+    let stats = sim.cache_stats();
+    assert_eq!((stats.misses, stats.hits), (1, 2), "{stats:?}");
+}
+
+#[test]
+fn sweeps_serve_through_a_farm_and_match_a_single_device() {
+    let p = ToaProblem::synthetic(6, 1e-3, 17);
+    let problem = p.nonlinear_problem(4).unwrap();
+    let driver = IteratedRelinearization::with_options(
+        &FirstOrder,
+        RelinOptions { max_rounds: 2, tol: 0.0, ..Default::default() },
+    );
+    // single simulated device through the session path
+    let single = driver
+        .run(&mut Session::fgp_sim(FgpConfig::default()), &problem)
+        .unwrap();
+    // the same sweeps as raw workload requests over a 3-device farm
+    let farm = FgpFarm::start(3, FgpConfig::default(), RoutePolicy::RoundRobin).unwrap();
+    let mut exec = FarmExecutor { farm: &farm };
+    let farmed = driver.run_with(&mut exec, &problem).unwrap();
+    // deterministic simulator, self-contained requests: identical
+    assert!(
+        farmed.belief.dist(&single.belief) == 0.0,
+        "farm vs single device differ by {}",
+        farmed.belief.dist(&single.belief)
+    );
+}
+
+#[test]
+fn bearing_tracker_runs_on_a_farm() {
+    let p = BearingProblem::synthetic(4, 3, 1e-3, 9);
+    let farm = FgpFarm::start(2, FgpConfig::default(), RoutePolicy::LeastLoaded).unwrap();
+    let mut exec = FarmExecutor { farm: &farm };
+    let out = p.track_with(&mut exec, &FirstOrder, 2).unwrap();
+    assert!(!out.diverged);
+    assert!(out.rmse < 0.15, "farm-tracked rmse {}", out.rmse);
+}
+
+#[test]
+fn nonlinear_gbp_runs_on_the_device_in_goldens_regime() {
+    let opts = GbpOptions {
+        policy: IterationPolicy::Synchronous { eta_damping: 0.3 },
+        criteria: ConvergenceCriteria { tol: 1e-5, max_iters: 120, divergence: 1e3 },
+        ..Default::default()
+    };
+    let p = RangeChain::synthetic(5, 0.004, 1e-3, 12);
+    let golden = p.run(&mut Session::golden(), opts, Arc::new(FirstOrder)).unwrap();
+    assert!(golden.report.converged(), "golden stop {:?}", golden.report.stop);
+    let mut sim = Session::fgp_sim(FgpConfig::default());
+    let device = p.run(&mut sim, opts, Arc::new(FirstOrder)).unwrap();
+    // quantization keeps the device from the exact fixed point, but the
+    // estimate must stay in golden's regime
+    assert!(
+        device.rmse <= golden.rmse + 0.1,
+        "device rmse {} vs golden {}",
+        device.rmse,
+        golden.rmse
+    );
+    // per-shape compiles are amortized across rounds: far fewer misses
+    // than dispatches
+    let stats = sim.cache_stats();
+    assert!(stats.hits > stats.misses, "{stats:?}");
+}
+
+#[test]
+fn toa_estimate_error_is_unchanged_on_the_seed_fixture() {
+    // the ISSUE 3 acceptance pin: rebuilding toa on the subsystem must
+    // not cost accuracy on the seed fixtures
+    let mut golden = Session::golden();
+    let p = ToaProblem::synthetic(6, 1e-4, 3);
+    let o = p.run(&mut golden, 3).unwrap();
+    assert!(o.error < 0.05, "seed fixture error {}", o.error);
+    let f = ToaProblem::synthetic(8, 1e-3, 13)
+        .run(&mut Session::fgp_sim(FgpConfig::default()), 2)
+        .unwrap();
+    assert!(f.error < 0.2, "device fixture error {}", f.error);
+}

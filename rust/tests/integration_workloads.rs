@@ -8,9 +8,10 @@ use fgp_repro::apps::lmmse::LmmseProblem;
 use fgp_repro::apps::receiver::{ReceiverEqualize, ReceiverProblem, ReceiverTraining};
 use fgp_repro::apps::rls::RlsProblem;
 use fgp_repro::apps::smoother::SmootherProblem;
-use fgp_repro::apps::toa::{ToaProblem, ToaSweep};
+use fgp_repro::apps::toa::ToaProblem;
 use fgp_repro::engine::{EngineKind, RunReport, Session, Workload};
 use fgp_repro::fgp::FgpConfig;
+use fgp_repro::nonlinear::{FirstOrder, RelinSweep};
 
 /// Run one workload on both engines and enforce the conformance
 /// contract: `quality_fgp <= quality_golden + tolerance`.
@@ -71,11 +72,9 @@ fn kalman_conforms_with_constant_section_cost() {
 #[test]
 fn toa_sweep_conforms_and_accounts_cycles() {
     let p = ToaProblem::synthetic(6, 1e-3, 7);
-    let sweep = ToaSweep {
-        problem: &p,
-        belief: ToaProblem::initial_belief(4),
-        lin: (0.5, 0.5),
-    };
+    let problem = p.nonlinear_problem(4).unwrap();
+    let sweep =
+        RelinSweep::linearize_at(&problem, &problem.predicted_prior(), &FirstOrder).unwrap();
     let (_, f) = conform(&sweep);
     // one compound-node section per anchor
     assert_eq!(f.sections, 6);
