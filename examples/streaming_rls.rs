@@ -1,0 +1,79 @@
+//! Streaming steady state: the paper's §VI serving shape, end to end.
+//!
+//! `Session::run` re-binds and re-dispatches one workload per call; the
+//! silicon's whole point (Table II) is that the program loads once and
+//! samples stream through. This example serves the same RLS
+//! channel-estimation sample stream both ways on the cycle-accurate
+//! simulator and prints the steady-state win, then shards two
+//! concurrent streams over an `FgpFarm` with sticky device routing.
+//!
+//! Run: `cargo run --release --example streaming_rls`
+
+use std::time::Instant;
+
+use fgp_repro::apps::rls::RlsProblem;
+use fgp_repro::coordinator::{FgpFarm, RoutePolicy};
+use fgp_repro::engine::{Session, StreamingWorkload};
+use fgp_repro::fgp::FgpConfig;
+
+fn main() -> anyhow::Result<()> {
+    let samples = 1024;
+    let problem = RlsProblem::synthetic(4, samples, 0.01, 42);
+
+    // --- per-call surface: one Session::run per received symbol would
+    // rebuild + rebind every time; the batch run is one big dispatch
+    let mut batch_session = Session::fgp_sim(FgpConfig::default());
+    let batch = batch_session.run(&problem)?;
+
+    // --- streaming surface: compile once, pipeline the sample iterator
+    let mut stream_session = Session::fgp_sim(FgpConfig::default());
+    let t0 = Instant::now();
+    let report = stream_session.run_stream(&problem)?;
+    let dt = t0.elapsed();
+
+    println!("samples            : {}", report.samples);
+    println!("chunk size         : {} samples/dispatch", report.chunk);
+    println!("programs compiled  : {} (one steady-state chunk model)", report.compiles);
+    println!("cycles per update  : {} (paper Table II: 260)", report.cycles_per_sample());
+    println!(
+        "host throughput    : {:.0} msgs/sec",
+        report.samples as f64 / dt.as_secs_f64()
+    );
+    println!("rel MSE (stream)   : {:.6}", report.outcome.rel_mse);
+    println!("rel MSE (batch)    : {:.6}", batch.outcome.rel_mse);
+    assert!(
+        (report.outcome.rel_mse - batch.outcome.rel_mse).abs() < 1e-12,
+        "streaming is an execution strategy, not a different algorithm"
+    );
+
+    // --- run the stream again: everything is a program-cache hit now
+    let again = stream_session.run_stream(&problem)?;
+    assert_eq!(again.compiles, 0);
+    println!(
+        "second stream      : {} compiles, {} cache hits",
+        again.compiles, again.cache_hits
+    );
+
+    // --- two concurrent clients, sharded over a farm with sticky routing
+    let p2 = RlsProblem::synthetic(4, 768, 0.02, 7);
+    let farm = FgpFarm::start(2, FgpConfig::default(), RoutePolicy::RoundRobin)?;
+    let s1 = farm.open_stream(&problem)?;
+    let s2 = farm.open_stream(&p2)?;
+    println!(
+        "\nfarm streams pinned: client 1 -> device {}, client 2 -> device {}",
+        s1.device(),
+        s2.device()
+    );
+    let (r1, r2) = std::thread::scope(|scope| {
+        let h1 = scope.spawn(move || s1.run_to_end());
+        let h2 = scope.spawn(move || s2.run_to_end());
+        (h1.join().unwrap(), h2.join().unwrap())
+    });
+    let (r1, r2) = (r1?, r2?);
+    println!("client 1: {} samples -> rel MSE {:.6}", r1.samples, problem.stream_outcome(&r1)?.rel_mse);
+    println!("client 2: {} samples -> rel MSE {:.6}", r2.samples, p2.stream_outcome(&r2)?.rel_mse);
+    println!("device load profile: {:?} simulated cycles", farm.load_profile());
+
+    println!("\nstreaming OK");
+    Ok(())
+}

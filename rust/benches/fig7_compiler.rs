@@ -76,10 +76,15 @@ fn main() -> anyhow::Result<()> {
     banner("compile time (host)");
     for sections in [8usize, 64] {
         let (g, s) = rls_graph(sections);
-        let (mean, _) = time_fn(3, 50, || {
+        let t = time_fn(3, 50, || {
             let _ = compile(&g, &s, &CompileOptions::default()).unwrap();
         });
-        println!("{sections:>4} sections: {}", fmt_dur(mean));
+        println!(
+            "{sections:>4} sections: {} mean (p50 {}, p95 {})",
+            fmt_dur(t.mean),
+            fmt_dur(t.p50),
+            fmt_dur(t.p95)
+        );
     }
     Ok(())
 }

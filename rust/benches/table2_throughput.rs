@@ -1,25 +1,137 @@
-//! E1 — regenerates **Table II**: throughput comparison, FGP vs DSP.
+//! E1 + E14 — **Table II** throughput, plus the streaming steady-state
+//! reproduction that backs it.
 //!
-//! Prints the same rows the paper reports: technology node, max clock,
-//! cycles per compound-node (CN) message update, and normalized maximum
-//! throughput in CN/s. The FGP cycle count is *measured* by running the
-//! compiled CN program on the cycle-accurate simulator; the DSP count
-//! comes from the C66x cost model (the paper's own estimation method).
-//! Also times the simulator itself (host wall-clock per simulated CN).
+//! The paper's headline claim (§VI, Table II) is *steady-state
+//! throughput*: the FGP computes an RLS channel-estimation update faster
+//! than a TI C66x DSP because the program is loaded once and samples
+//! stream through. This bench regenerates both halves:
 //!
-//! Run: `cargo bench --bench table2_throughput`
+//! 1. the Table II rows — measured FGP cycles per compound-node update
+//!    vs the C66x analytic model, normalized to a common technology
+//!    node (the paper's own comparison method);
+//! 2. the serving-surface half — `Session::run_stream` (compile once,
+//!    stream samples) against equivalent repeated per-call
+//!    `Session::run` dispatches on the same RLS sample stream, per
+//!    engine, in host msgs/sec.
+//!
+//! Emits a machine-readable **`BENCH_throughput.json`** (validated in CI
+//! against `scripts/bench_throughput.schema.json`) so every future PR
+//! has a perf trajectory to beat, and **exits non-zero** if streaming
+//! throughput regresses below the per-call path on the fgp-sim engine.
+//!
+//! Run: `cargo bench --bench table2_throughput [-- --smoke]`
 
-use fgp_repro::benchutil::{banner, fmt_dur, time_for};
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use fgp_repro::apps::rls::RlsProblem;
+use fgp_repro::benchutil::{
+    banner, fmt_dur, json_arr, json_num, json_obj, json_str, time_for, write_json,
+};
 use fgp_repro::coordinator::backend::{Backend, CnRequestData, FgpSimBackend};
 use fgp_repro::dsp::C66xModel;
+use fgp_repro::engine::{bind_streamed, preload_id, Execution, Session, Workload};
 use fgp_repro::fgp::FgpConfig;
 use fgp_repro::gmp::matrix::{c64, CMatrix};
 use fgp_repro::gmp::message::GaussMessage;
+use fgp_repro::gmp::{FactorGraph, MsgId, Schedule};
 use fgp_repro::model::scaling::{normalized_throughput, ProcessorPoint};
 use fgp_repro::paper;
+use fgp_repro::runtime::RuntimeClient;
 use fgp_repro::testutil::Rng;
-use std::time::Duration;
 
+// ---------------------------------------------------------------------
+// per-call baseline: the workload a Session::run client dispatches per
+// received symbol (one compound-observation section)
+// ---------------------------------------------------------------------
+
+struct OneSection {
+    prior: GaussMessage,
+    y: GaussMessage,
+    a: CMatrix,
+}
+
+impl Workload for OneSection {
+    type Outcome = GaussMessage;
+
+    fn name(&self) -> &str {
+        "rls_one_section"
+    }
+
+    fn n(&self) -> usize {
+        self.prior.dim()
+    }
+
+    fn model(&self) -> Result<(FactorGraph, Schedule)> {
+        let mut g = FactorGraph::new();
+        g.rls_chain(self.n(), std::slice::from_ref(&self.a));
+        let s = Schedule::forward_sweep(&g);
+        Ok((g, s))
+    }
+
+    fn inputs(
+        &self,
+        graph: &FactorGraph,
+        schedule: &Schedule,
+    ) -> Result<HashMap<MsgId, GaussMessage>> {
+        let mut map = HashMap::new();
+        map.insert(preload_id(graph, schedule, "msg_prior")?, self.prior.clone());
+        bind_streamed(graph, schedule, std::slice::from_ref(&self.y), &mut map)?;
+        Ok(map)
+    }
+
+    fn outcome(&self, exec: &Execution) -> Result<GaussMessage> {
+        exec.output().cloned()
+    }
+
+    fn quality(&self, outcome: &GaussMessage) -> f64 {
+        outcome.trace_cov()
+    }
+
+    fn tolerance(&self) -> f64 {
+        0.05
+    }
+}
+
+/// Process the whole sample stream through repeated per-call
+/// `Session::run` dispatches; returns the final posterior mean.
+fn per_call_pass(session: &mut Session, p: &RlsProblem) -> Result<Vec<c64>> {
+    let mut prior = p.prior.clone();
+    for k in 0..p.sections {
+        let w = OneSection {
+            prior,
+            y: p.observations[k].clone(),
+            a: p.regressors[k].clone(),
+        };
+        prior = session.run(&w)?.outcome;
+    }
+    Ok(prior.mean)
+}
+
+/// Best wall time of `reps` passes (sessions stay warm across reps, so
+/// the best pass is the steady-state one); returns the last result too.
+fn best_of<R>(reps: usize, mut f: impl FnMut() -> Result<R>) -> Result<(R, Duration)> {
+    let mut best = Duration::MAX;
+    let mut out = None;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let r = f()?;
+        best = best.min(t0.elapsed());
+        out = Some(r);
+    }
+    Ok((out.expect("reps >= 1"), best))
+}
+
+struct EngineRow {
+    engine: String,
+    stream_msgs_per_s: f64,
+    per_call_msgs_per_s: f64,
+    speedup: f64,
+    cycles_per_update: u64,
+}
+
+/// A random CN request within the device's input-scaling contract.
 fn request(rng: &mut Rng, n: usize) -> CnRequestData {
     CnRequestData {
         x: GaussMessage::new(
@@ -34,8 +146,49 @@ fn request(rng: &mut Rng, n: usize) -> CnRequestData {
     }
 }
 
-fn main() -> anyhow::Result<()> {
+/// Stream-vs-per-call comparison of one engine on one RLS sample stream.
+fn engine_row(
+    mut stream_session: Session,
+    mut percall_session: Session,
+    p: &RlsProblem,
+    reps: usize,
+) -> Result<EngineRow> {
+    let engine = stream_session.engine_kind().to_string();
+    let (report, stream_dt) = best_of(reps, || stream_session.run_stream(p))?;
+    let (h_percall, percall_dt) = best_of(reps, || per_call_pass(&mut percall_session, p))?;
+
+    // the two paths must agree on the estimate — streaming is an
+    // execution strategy, not a different algorithm (the xla engine
+    // accumulates in f32, and its fused-chain vs per-dispatch orderings
+    // differ at that precision)
+    let d: f64 = report
+        .outcome
+        .h_hat
+        .iter()
+        .zip(&h_percall)
+        .map(|(a, b)| (*a - *b).abs2())
+        .sum::<f64>()
+        .sqrt();
+    let tol = if engine == "xla" { 1e-2 } else { 1e-9 };
+    assert!(d < tol, "{engine}: stream vs per-call estimate diverged: {d}");
+
+    let samples = p.sections as f64;
+    let stream_rate = samples / stream_dt.as_secs_f64();
+    let percall_rate = samples / percall_dt.as_secs_f64();
+    Ok(EngineRow {
+        engine,
+        stream_msgs_per_s: stream_rate,
+        per_call_msgs_per_s: percall_rate,
+        speedup: stream_rate / percall_rate,
+        cycles_per_update: report.cycles_per_sample(),
+    })
+}
+
+fn main() -> Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let n = paper::N;
+    let samples = if smoke { 512 } else { 8192 };
+    let reps = if smoke { 2 } else { 3 };
 
     // --- measured FGP cycles: run the compiled CN program once
     let mut sim = FgpSimBackend::new(FgpConfig::default())?;
@@ -44,20 +197,23 @@ fn main() -> anyhow::Result<()> {
     sim.cn_update(&req)?;
     let fgp_cycles = sim.device_cycles;
 
-    // --- DSP model
+    // --- DSP analytic model (the paper's own estimation method)
     let dsp_model = C66xModel::default();
     let dsp_cycles = dsp_model.compound_node_cycles(n);
 
-    let fgp_pt = ProcessorPoint::fgp(fgp_cycles);
-    let dsp_pt = ProcessorPoint::c66x(dsp_cycles);
-    let fgp_tp = normalized_throughput(&fgp_pt, 40.0);
-    let dsp_tp = normalized_throughput(&dsp_pt, 40.0);
+    let fgp_tp = normalized_throughput(&ProcessorPoint::fgp(fgp_cycles), 40.0);
+    let dsp_tp = normalized_throughput(&ProcessorPoint::c66x(dsp_cycles), 40.0);
+    let paper_speedup = normalized_throughput(&ProcessorPoint::fgp(paper::FGP_CN_CYCLES), 40.0)
+        / normalized_throughput(&ProcessorPoint::c66x(paper::DSP_CN_CYCLES), 40.0);
 
     banner("Table II — throughput comparison, FGP vs DSP");
     println!("{:<42} {:>16} {:>16}", "Processor", "FGP (this work)", "TI C66x");
     println!("{:<42} {:>16} {:>16}", "CMOS technology [nm]", 180, 40);
     println!("{:<42} {:>16} {:>16}", "Max. freq. [MHz]", 130, 1250);
-    println!("{:<42} {:>16} {:>16}", "cycles for CN msg. update [measured]", fgp_cycles, dsp_cycles);
+    println!(
+        "{:<42} {:>16} {:>16}",
+        "cycles for CN msg. update [measured]", fgp_cycles, dsp_cycles
+    );
     println!(
         "{:<42} {:>16} {:>16}",
         "cycles for CN msg. update [paper]",
@@ -68,11 +224,8 @@ fn main() -> anyhow::Result<()> {
         "{:<42} {:>16.2e} {:>16.2e}",
         "Normalized max. throughput [CN/s]", fgp_tp, dsp_tp
     );
-    println!(
-        "{:<42} {:>16.2e} {:>16.2e}",
-        "  (paper)", 2.25e6, 1.16e6
-    );
-    println!("\nspeedup: {:.2}x (paper: ~2x)", fgp_tp / dsp_tp);
+    println!("{:<42} {:>16.2e} {:>16.2e}", "  (paper)", 2.25e6, 1.16e6);
+    println!("\nspeedup: {:.2}x (paper: {:.2}x)", fgp_tp / dsp_tp, paper_speedup);
 
     // --- DSP breakdown (the inversion-dominance argument)
     banner("C66x CN-update cycle breakdown (estimation per paper method)");
@@ -85,20 +238,116 @@ fn main() -> anyhow::Result<()> {
     println!("  mean update                {:>6}", b.mean_update);
     println!("  total                      {:>6}", b.total());
 
-    // --- simulator host performance (perf-pass tracking)
-    banner("simulator host performance");
-    let mut rng = Rng::new(2);
-    let reqs: Vec<CnRequestData> = (0..64).map(|_| request(&mut rng, n)).collect();
+    // --- streaming steady state vs per-call dispatch (E14): the same
+    // RLS sample stream served both ways, per engine
+    banner("steady-state serving: run_stream vs repeated Session::run (host)");
+    let p = RlsProblem::synthetic(n, samples, 0.01, 42);
+    let mut rows = Vec::new();
+    rows.push(engine_row(Session::golden(), Session::golden(), &p, reps)?);
+    rows.push(engine_row(
+        Session::fgp_sim(FgpConfig::default()),
+        Session::fgp_sim(FgpConfig::default()),
+        &p,
+        reps,
+    )?);
+    // XLA rides along when the AOT artifacts are built
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if artifacts.join("manifest.txt").exists() {
+        match (RuntimeClient::load(&artifacts), RuntimeClient::load(&artifacts)) {
+            (Ok(rt_a), Ok(rt_b)) => {
+                rows.push(engine_row(Session::xla(rt_a), Session::xla(rt_b), &p, reps)?)
+            }
+            _ => eprintln!("artifacts present but failed to load; skipping xla row"),
+        }
+    }
+
+    println!(
+        "{:<10} {:>16} {:>18} {:>10} {:>14}",
+        "engine", "stream [msg/s]", "per-call [msg/s]", "speedup", "cycles/update"
+    );
+    for r in &rows {
+        println!(
+            "{:<10} {:>16.0} {:>18.0} {:>9.2}x {:>14}",
+            r.engine, r.stream_msgs_per_s, r.per_call_msgs_per_s, r.speedup, r.cycles_per_update
+        );
+    }
+
+    // --- single-CN host latency (continuity with earlier trajectories)
+    banner("simulator host latency per CN update");
+    let reqs: Vec<CnRequestData> = {
+        let mut rng = Rng::new(2);
+        (0..64).map(|_| request(&mut rng, n)).collect()
+    };
     let mut i = 0;
-    let (mean, iters) = time_for(Duration::from_secs(1), || {
-        let r = &reqs[i % reqs.len()];
+    let t = time_for(Duration::from_millis(if smoke { 200 } else { 1000 }), || {
+        sim.cn_update(&reqs[i % reqs.len()]).unwrap();
         i += 1;
-        sim.cn_update(r).unwrap();
     });
     println!(
-        "simulated CN update: {} wall ({} sim-CN/s host, {iters} iters)",
-        fmt_dur(mean),
-        (1.0 / mean.as_secs_f64()) as u64
+        "simulated CN update: {} mean (p50 {}, p95 {}; {} sim-CN/s host, {} iters)",
+        fmt_dur(t.mean),
+        fmt_dur(t.p50),
+        fmt_dur(t.p95),
+        (1.0 / t.mean.as_secs_f64().max(1e-12)) as u64,
+        t.iters
     );
+
+    // --- machine-readable trajectory
+    let engines_json: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            json_obj(&[
+                ("engine", json_str(&r.engine)),
+                ("workload", json_str("rls_stream")),
+                ("stream_msgs_per_s", json_num(r.stream_msgs_per_s)),
+                ("per_call_msgs_per_s", json_num(r.per_call_msgs_per_s)),
+                ("stream_speedup_vs_per_call", json_num(r.speedup)),
+                ("cycles_per_update", r.cycles_per_update.to_string()),
+            ])
+        })
+        .collect();
+    let doc = json_obj(&[
+        ("bench", json_str("table2_throughput")),
+        ("mode", json_str(if smoke { "smoke" } else { "full" })),
+        ("samples", samples.to_string()),
+        (
+            "table2",
+            json_obj(&[
+                ("fgp_cycles_per_cn_measured", fgp_cycles.to_string()),
+                ("fgp_cycles_per_cn_paper", paper::FGP_CN_CYCLES.to_string()),
+                ("dsp_cycles_per_cn_model", dsp_cycles.to_string()),
+                ("dsp_cycles_per_cn_paper", paper::DSP_CN_CYCLES.to_string()),
+                ("fgp_normalized_cn_per_s", json_num(fgp_tp)),
+                ("dsp_normalized_cn_per_s", json_num(dsp_tp)),
+                ("speedup_vs_dsp", json_num(fgp_tp / dsp_tp)),
+                ("paper_speedup", json_num(paper_speedup)),
+            ]),
+        ),
+        ("engines", json_arr(&engines_json)),
+    ]);
+    write_json("BENCH_throughput.json", &doc)?;
+    println!("\nwrote BENCH_throughput.json");
+
+    // --- regression gate: streaming must never lose to per-call on the
+    // device engine (the whole point of the steady-state path; the E14
+    // acceptance target is >= 2x)
+    let sim_row = rows
+        .iter()
+        .find(|r| r.engine == "fgp-sim")
+        .expect("fgp-sim row always present");
+    if sim_row.speedup < 1.0 {
+        eprintln!(
+            "REGRESSION: streaming throughput {:.0} msg/s fell below per-call {:.0} msg/s \
+             ({:.2}x) on fgp-sim",
+            sim_row.stream_msgs_per_s, sim_row.per_call_msgs_per_s, sim_row.speedup
+        );
+        std::process::exit(1);
+    }
+    if sim_row.speedup < 2.0 {
+        eprintln!(
+            "warning: fgp-sim streaming speedup {:.2}x is below the 2x steady-state target",
+            sim_row.speedup
+        );
+    }
     Ok(())
 }

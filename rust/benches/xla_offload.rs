@@ -44,20 +44,32 @@ fn main() -> anyhow::Result<()> {
     // golden f64
     let mut golden = GoldenBackend;
     let mut i = 0;
-    let (g_mean, _) = time_for(Duration::from_millis(500), || {
+    let g = time_for(Duration::from_millis(500), || {
         golden.cn_update(&reqs[i % reqs.len()]).unwrap();
         i += 1;
     });
-    println!("{:<28} {:>12}", "golden f64 (rust)", fmt_dur(g_mean));
+    println!(
+        "{:<28} {:>12}  (p50 {}, p95 {})",
+        "golden f64 (rust)",
+        fmt_dur(g.mean),
+        fmt_dur(g.p50),
+        fmt_dur(g.p95)
+    );
 
     // xla single
     let mut xla1 = XlaBackend::new(RuntimeClient::load(&artifacts)?);
     let mut i = 0;
-    let (x1_mean, _) = time_for(Duration::from_secs(1), || {
+    let x1 = time_for(Duration::from_secs(1), || {
         xla1.cn_update(&reqs[i % reqs.len()]).unwrap();
         i += 1;
     });
-    println!("{:<28} {:>12}", "xla single (PJRT dispatch)", fmt_dur(x1_mean));
+    println!(
+        "{:<28} {:>12}  (p50 {}, p95 {})",
+        "xla single (PJRT dispatch)",
+        fmt_dur(x1.mean),
+        fmt_dur(x1.p50),
+        fmt_dur(x1.p95)
+    );
 
     // xla batched, full batch
     let xlab = XlaBatchBackend::new(RuntimeClient::load(&artifacts)?);
@@ -67,15 +79,15 @@ fn main() -> anyhow::Result<()> {
     };
     let bsz = xlab.max_batch();
     let batch: Vec<CnRequestData> = reqs[..bsz.min(reqs.len())].to_vec();
-    let (xb_mean, _) = time_for(Duration::from_secs(1), || {
+    let xb = time_for(Duration::from_secs(1), || {
         let out = xlab.cn_update_batch(&batch);
         assert!(out.iter().all(|r| r.is_ok()));
     });
     println!(
         "{:<28} {:>12}  ({} per request, batch {bsz})",
         "xla batched (one dispatch)",
-        fmt_dur(xb_mean),
-        fmt_dur(xb_mean / bsz as u32)
+        fmt_dur(xb.mean),
+        fmt_dur(xb.mean / bsz as u32)
     );
 
     banner("batched dispatch amortization: per-request cost vs batch size");
@@ -85,11 +97,11 @@ fn main() -> anyhow::Result<()> {
             break;
         }
         let batch: Vec<CnRequestData> = reqs[..sz].to_vec();
-        let (mean, _) = time_for(Duration::from_millis(700), || {
+        let t = time_for(Duration::from_millis(700), || {
             let out = xlab.cn_update_batch(&batch);
             assert!(out.iter().all(|r| r.is_ok()));
         });
-        println!("{sz:>8} {:>14} {:>16}", fmt_dur(mean), fmt_dur(mean / sz as u32));
+        println!("{sz:>8} {:>14} {:>16}", fmt_dur(t.mean), fmt_dur(t.mean / sz as u32));
     }
 
     banner("end-to-end coordinator (queue + batcher + xla batched)");

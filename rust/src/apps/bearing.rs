@@ -17,16 +17,17 @@
 //! [`Linearizer`] makes this *the* EKF-vs-UKF comparison app: the same
 //! problem, the same engine, only the linearization rule differs.
 
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 
-use crate::engine::Session;
+use crate::engine::{Session, StreamRun, StreamSample, StreamingWorkload};
 use crate::gbp::RoundExecutor;
 use crate::gmp::matrix::{c64, CMatrix};
 use crate::gmp::message::GaussMessage;
+use crate::gmp::{FactorGraph, Schedule};
 use crate::nonlinear::{
     gauss_newton, IteratedRelinearization, Linearizer, NonlinearFactor, NonlinearProblem,
-    RelinOptions, RelinStop,
+    RelinOptions, RelinStop, RelinSweep,
 };
 use crate::testutil::Rng;
 
@@ -251,6 +252,12 @@ impl BearingProblem {
         (se / self.steps as f64).sqrt()
     }
 
+    /// The tracking problem on the streaming surface, with a chosen
+    /// linearization rule (see [`BearingStream`]).
+    pub fn stream<'a>(&'a self, linearizer: &'a dyn Linearizer) -> BearingStream<'a> {
+        BearingStream { problem: self, linearizer }
+    }
+
     /// Worst per-step positional deviation of a track from a reference
     /// (e.g. [`BearingProblem::reference_track`]) — the conformance
     /// metric the tests and the bench gate share.
@@ -260,6 +267,101 @@ impl BearingProblem {
             .zip(reference)
             .map(|(e, w)| ((e.0 - w.mean[0].re).powi(2) + (e.1 - w.mean[1].re).powi(2)).sqrt())
             .fold(0.0, f64::max)
+    }
+}
+
+/// Bearing-only tracking on the streaming surface: one sample per time
+/// step, each linearized **once** at the predicted mean (filter mode —
+/// semantically `BearingProblem::track` with a single relinearization
+/// round per step, which is what a steady-state deployment serves;
+/// iterated relinearization remains the batch path). Sample binding
+/// depends on the current belief, so the stream declares
+/// `max_chunk() == 1` and the driver reads the posterior back after
+/// every sample — the sweep *shape* is still fixed, so the whole track
+/// runs on one compiled program.
+pub struct BearingStream<'a> {
+    pub problem: &'a BearingProblem,
+    pub linearizer: &'a dyn Linearizer,
+}
+
+impl StreamingWorkload for BearingStream<'_> {
+    type StreamOutcome = TrackOutcome;
+
+    fn stream_name(&self) -> &str {
+        "bearing_stream"
+    }
+
+    fn state_dim(&self) -> usize {
+        crate::paper::N
+    }
+
+    fn max_chunk(&self) -> usize {
+        1 // sample binding relinearizes at the current belief
+    }
+
+    fn stream_model(&self, chunk: usize) -> Result<(FactorGraph, Schedule)> {
+        if chunk != 1 {
+            bail!("bearing sample binding is state-dependent; the stream runs sample-at-a-time");
+        }
+        // every step's sweep has the same shape; step 0 at the initial
+        // belief is as good a template as any
+        let n = crate::paper::N;
+        let problem = self
+            .problem
+            .step_problem(0, BearingProblem::initial_belief(n))?;
+        let sweep =
+            RelinSweep::linearize_at(&problem, &problem.predicted_prior(), self.linearizer)?;
+        crate::engine::Workload::model(&sweep)
+    }
+
+    fn state_label(&self) -> &str {
+        "msg_prior"
+    }
+
+    fn constant_inputs(&self) -> Vec<(String, GaussMessage)> {
+        vec![(
+            "msg_q".to_string(),
+            self.problem.process_noise(crate::paper::N),
+        )]
+    }
+
+    fn initial_state(&self) -> GaussMessage {
+        BearingProblem::initial_belief(crate::paper::N)
+    }
+
+    fn next_sample(&self, k: usize, state: &GaussMessage) -> Result<Option<StreamSample>> {
+        if k >= self.problem.steps {
+            return Ok(None);
+        }
+        let problem = self.problem.step_problem(k, state.clone())?;
+        let at = problem.predicted_prior();
+        let mut messages = Vec::with_capacity(problem.factors.len());
+        let mut states = Vec::with_capacity(problem.factors.len());
+        for (i, f) in problem.factors.iter().enumerate() {
+            let lin = self
+                .linearizer
+                .linearize(f, &at)
+                .with_context(|| format!("linearizing sensor {i} at sample {k}"))?;
+            messages.push(lin.obs);
+            states.push(lin.a);
+        }
+        Ok(Some(StreamSample { messages, states }))
+    }
+
+    fn stream_outcome(&self, run: &StreamRun) -> Result<TrackOutcome> {
+        // max_chunk == 1 makes every boundary a per-sample posterior
+        let estimates: Vec<(f64, f64)> = run
+            .boundaries
+            .iter()
+            .map(|b| (b.mean[0].re, b.mean[1].re))
+            .collect();
+        let diverged = estimates.iter().any(|e| !e.0.is_finite() || !e.1.is_finite());
+        Ok(TrackOutcome {
+            rmse: self.problem.rmse(&estimates),
+            estimates,
+            rounds_total: run.samples as usize,
+            diverged,
+        })
     }
 }
 

@@ -14,7 +14,9 @@ use std::collections::HashMap;
 use anyhow::Result;
 
 use crate::compiler::{compile, CompileOptions, CompiledProgram};
-use crate::engine::{bind_streamed, preload_id, Execution, Workload};
+use crate::engine::{
+    bind_streamed, preload_id, Execution, StreamRun, StreamSample, StreamingWorkload, Workload,
+};
 use crate::gmp::matrix::{c64, CMatrix};
 use crate::gmp::message::GaussMessage;
 use crate::gmp::{FactorGraph, MsgId, NodeKind, Schedule};
@@ -93,6 +95,12 @@ impl KalmanProblem {
 
     /// Build the factor-graph chain: Multiply(A) → Add(Q) → Compound(C).
     pub fn build_graph(&self) -> (FactorGraph, Schedule) {
+        self.filter_chain(self.steps)
+    }
+
+    /// The filter chain for an arbitrary step count — `build_graph` is
+    /// the whole-problem instance, `stream_model` the per-chunk one.
+    fn filter_chain(&self, steps: usize) -> (FactorGraph, Schedule) {
         let n = 4;
         let mut g = FactorGraph::new();
         let a_sid = g.add_state(self.a.clone());
@@ -100,7 +108,7 @@ impl KalmanProblem {
         let q_edge = g.add_input_edge(n, "msg_Q");
         let prior = g.add_input_edge(n, "msg_prior");
         let mut prev = prior;
-        for i in 0..self.steps {
+        for i in 0..steps {
             let pred = g.add_edge(n, format!("pred{i}"));
             g.add_node(NodeKind::Multiply { a: a_sid }, vec![prev], pred, format!("mul{i}"));
             let noisy = g.add_edge(n, format!("noisy{i}"));
@@ -168,6 +176,48 @@ impl Workload for KalmanProblem {
     /// Fixed-point slack on the final position fix.
     fn tolerance(&self) -> f64 {
         0.4
+    }
+}
+
+/// Steady-state serving form: the per-step predict + update triplet is
+/// the recursive section; observations stream in, `msg_Q` rides along
+/// as a constant preload, and the filtered posterior threads through as
+/// the recursive state.
+impl StreamingWorkload for KalmanProblem {
+    type StreamOutcome = KalmanOutcome;
+
+    fn stream_name(&self) -> &str {
+        "kalman_stream"
+    }
+
+    fn state_dim(&self) -> usize {
+        4
+    }
+
+    fn stream_model(&self, chunk: usize) -> Result<(FactorGraph, Schedule)> {
+        Ok(self.filter_chain(chunk))
+    }
+
+    fn constant_inputs(&self) -> Vec<(String, GaussMessage)> {
+        vec![("msg_Q".to_string(), self.q_msg.clone())]
+    }
+
+    fn initial_state(&self) -> GaussMessage {
+        self.prior.clone()
+    }
+
+    fn next_sample(&self, k: usize, _state: &GaussMessage) -> Result<Option<StreamSample>> {
+        Ok((k < self.steps).then(|| StreamSample {
+            messages: vec![self.observations[k].clone()],
+            states: Vec::new(),
+        }))
+    }
+
+    fn stream_outcome(&self, run: &StreamRun) -> Result<KalmanOutcome> {
+        let estimate = run.final_state.mean.clone();
+        let t = self.truth.last().expect("non-empty trajectory");
+        let dx = (estimate[0] - t[0]).abs2() + (estimate[2] - t[2]).abs2();
+        Ok(KalmanOutcome { estimate, pos_error: dx.sqrt() })
     }
 }
 

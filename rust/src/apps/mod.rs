@@ -29,6 +29,13 @@
 //! * [`posechain`] — pose-loop estimation with a loop-closure factor,
 //!   the SLAM-style cyclic workload, also via [`crate::gbp`].
 //!
+//! The recursive apps — [`rls`], [`kalman`], [`smoother`] (its forward
+//! filter) and [`bearing`] — additionally implement
+//! [`crate::engine::StreamingWorkload`] and serve steady state through
+//! [`crate::engine::Session::run_stream`]: compile once, stream the
+//! samples (the paper's §VI throughput shape, benchmarked by
+//! `rust/benches/table2_throughput.rs`).
+//!
 //! All workloads respect the device's input-scaling contract (see
 //! [`crate::fgp`]): unit-magnitude-bounded operands, well-conditioned
 //! covariances.

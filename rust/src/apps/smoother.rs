@@ -16,7 +16,9 @@ use std::collections::HashMap;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::engine::{preload_id, Execution, Workload};
+use crate::engine::{
+    preload_id, Execution, StreamRun, StreamSample, StreamingWorkload, Workload,
+};
 use crate::gmp::matrix::{c64, CMatrix};
 use crate::gmp::message::GaussMessage;
 use crate::gmp::{FactorGraph, MsgId, NodeKind, Schedule};
@@ -166,6 +168,39 @@ impl SmootherProblem {
         Ok((g, s))
     }
 
+    /// Forward-filter-only chain for the streaming surface: the same
+    /// Multiply(A) → Add(Q) → Compound(C) triplet as the batch graph's
+    /// forward pass, but with observations on streamed edges (a stream
+    /// consumes each observation exactly once, so nothing needs to stay
+    /// resident for a backward pass).
+    fn forward_chain(&self, steps: usize) -> (FactorGraph, Schedule) {
+        let n = self.prior.dim();
+        let mut g = FactorGraph::new();
+        let a_sid = g.add_state(self.a.clone());
+        let c_sid = g.add_state(self.c.clone());
+        let q = g.add_input_edge(n, "msg_Q");
+        let prior = g.add_input_edge(n, "msg_prior");
+        let mut prev = prior;
+        for k in 0..steps {
+            let pred = g.add_edge(n, format!("pred{k}"));
+            g.add_node(NodeKind::Multiply { a: a_sid }, vec![prev], pred, format!("fmul{k}"));
+            let noisy = g.add_edge(n, format!("noisy{k}"));
+            g.add_node(NodeKind::Add, vec![pred, q], noisy, format!("fadd{k}"));
+            let obs = g.add_streamed_input_edge(n, 0, format!("msg_Y{k}"));
+            let post = g.add_edge(n, format!("post{k}"));
+            g.add_node(
+                NodeKind::CompoundObservation { a: c_sid },
+                vec![noisy, obs],
+                post,
+                format!("fobs{k}"),
+            );
+            prev = post;
+        }
+        g.mark_output(prev);
+        let s = Schedule::forward_sweep(&g);
+        (g, s)
+    }
+
     fn rmse(&self, msgs: &[GaussMessage]) -> f64 {
         let se: f64 = msgs
             .iter()
@@ -247,6 +282,59 @@ impl Workload for SmootherProblem {
     /// working set only fits the message memory for short chains).
     fn tolerance(&self) -> f64 {
         0.25
+    }
+}
+
+/// Streaming (forward-only) outcome: a smoother needs the whole
+/// interval, so the *streamable* half of the problem is its forward
+/// Kalman filter — what an online deployment serves while samples keep
+/// arriving (the backward pass runs as the batch [`Workload`] once the
+/// interval closes).
+#[derive(Clone, Debug)]
+pub struct FilterOutcome {
+    /// Filtered posterior after the final sample.
+    pub final_filtered: GaussMessage,
+    /// Error of the walk component against the final true state.
+    pub pos_error: f64,
+}
+
+impl StreamingWorkload for SmootherProblem {
+    type StreamOutcome = FilterOutcome;
+
+    fn stream_name(&self) -> &str {
+        "smoother_forward_stream"
+    }
+
+    fn state_dim(&self) -> usize {
+        self.prior.dim()
+    }
+
+    fn stream_model(&self, chunk: usize) -> Result<(FactorGraph, Schedule)> {
+        Ok(self.forward_chain(chunk))
+    }
+
+    fn constant_inputs(&self) -> Vec<(String, GaussMessage)> {
+        vec![(
+            "msg_Q".to_string(),
+            GaussMessage::isotropic(self.prior.dim(), self.q_var),
+        )]
+    }
+
+    fn initial_state(&self) -> GaussMessage {
+        self.prior.clone()
+    }
+
+    fn next_sample(&self, k: usize, _state: &GaussMessage) -> Result<Option<StreamSample>> {
+        Ok((k < self.steps).then(|| StreamSample {
+            messages: vec![self.observations[k].clone()],
+            states: Vec::new(),
+        }))
+    }
+
+    fn stream_outcome(&self, run: &StreamRun) -> Result<FilterOutcome> {
+        let t = self.truth.last().ok_or_else(|| anyhow!("empty trajectory"))?;
+        let pos_error = (run.final_state.mean[0] - t[0]).abs2().sqrt();
+        Ok(FilterOutcome { final_filtered: run.final_state.clone(), pos_error })
     }
 }
 

@@ -2,35 +2,78 @@
 //!
 //! Each `rust/benches/*.rs` target is a `harness = false` binary that
 //! prints the rows of one paper table/figure. This module provides the
-//! shared timing / formatting helpers so the benches stay declarative.
+//! shared timing / formatting helpers so the benches stay declarative,
+//! plus a tiny JSON emitter (no serde in the vendored crate set) every
+//! bench uses to publish machine-readable `BENCH_*.json` trajectories —
+//! `rust/benches/table2_throughput.rs` writes `BENCH_throughput.json`
+//! with it, and CI validates the result against
+//! `scripts/bench_throughput.schema.json`.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
 
-/// Measure the mean wall time of `f` over `iters` runs after `warmup`
-/// runs, returning (mean, total).
-pub fn time_fn(warmup: u32, iters: u32, mut f: impl FnMut()) -> (Duration, Duration) {
+/// Summary of repeated timings: mean plus tail percentiles (serving
+/// latency is a distribution, not a point).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TimingStats {
+    pub mean: Duration,
+    /// Median per-iteration wall time.
+    pub p50: Duration,
+    /// 95th-percentile per-iteration wall time.
+    pub p95: Duration,
+    pub total: Duration,
+    pub iters: u32,
+}
+
+fn stats_from(mut samples: Vec<Duration>, total: Duration) -> TimingStats {
+    // zero-iteration guard: no division, all-zero percentiles
+    if samples.is_empty() {
+        return TimingStats { total, ..TimingStats::default() };
+    }
+    let iters = samples.len() as u32;
+    samples.sort();
+    TimingStats {
+        mean: total / iters,
+        p50: percentile(&samples, 50),
+        p95: percentile(&samples, 95),
+        total,
+        iters,
+    }
+}
+
+/// Nearest-rank percentile of a non-empty sorted slice.
+fn percentile(sorted: &[Duration], p: usize) -> Duration {
+    let rank = (sorted.len() * p).div_ceil(100).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+/// Measure `f` over `iters` runs after `warmup` runs.
+pub fn time_fn(warmup: u32, iters: u32, mut f: impl FnMut()) -> TimingStats {
     for _ in 0..warmup {
         f();
     }
+    let mut samples = Vec::with_capacity(iters as usize);
     let t0 = Instant::now();
     for _ in 0..iters {
+        let s = Instant::now();
         f();
+        samples.push(s.elapsed());
     }
-    let total = t0.elapsed();
-    (total / iters.max(1), total)
+    stats_from(samples, t0.elapsed())
 }
 
-/// Run until at least `min_time` has elapsed; returns (mean, iters).
-pub fn time_for(min_time: Duration, mut f: impl FnMut()) -> (Duration, u32) {
+/// Run until at least `min_time` has elapsed (one warmup run first).
+pub fn time_for(min_time: Duration, mut f: impl FnMut()) -> TimingStats {
     // warmup
     f();
+    let mut samples = Vec::new();
     let t0 = Instant::now();
-    let mut iters = 0u32;
     while t0.elapsed() < min_time {
+        let s = Instant::now();
         f();
-        iters += 1;
+        samples.push(s.elapsed());
     }
-    (t0.elapsed() / iters.max(1), iters)
+    stats_from(samples, t0.elapsed())
 }
 
 /// Print a section banner.
@@ -52,6 +95,61 @@ pub fn fmt_dur(d: Duration) -> String {
     }
 }
 
+// ---------------------------------------------------------------------
+// JSON emission (machine-readable bench trajectories)
+// ---------------------------------------------------------------------
+
+/// Escape a string for a JSON string literal.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a JSON string value.
+pub fn json_str(s: &str) -> String {
+    format!("\"{}\"", json_escape(s))
+}
+
+/// Render a JSON number (`null` for non-finite values, which JSON
+/// cannot carry).
+pub fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        v.to_string()
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Render a JSON object from already-rendered field values.
+pub fn json_obj(fields: &[(&str, String)]) -> String {
+    let body: Vec<String> = fields
+        .iter()
+        .map(|(k, v)| format!("{}:{}", json_str(k), v))
+        .collect();
+    format!("{{{}}}", body.join(","))
+}
+
+/// Render a JSON array from already-rendered items.
+pub fn json_arr(items: &[String]) -> String {
+    format!("[{}]", items.join(","))
+}
+
+/// Write a rendered JSON document (with a trailing newline).
+pub fn write_json(path: impl AsRef<Path>, root: &str) -> std::io::Result<()> {
+    std::fs::write(path, format!("{root}\n"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -59,9 +157,30 @@ mod tests {
     #[test]
     fn time_fn_counts() {
         let mut n = 0u64;
-        let (mean, total) = time_fn(1, 10, || n += 1);
+        let t = time_fn(1, 10, || n += 1);
         assert_eq!(n, 11);
-        assert!(total >= mean);
+        assert_eq!(t.iters, 10);
+        assert!(t.total >= t.mean);
+        assert!(t.p95 >= t.p50);
+    }
+
+    #[test]
+    fn zero_iterations_is_all_zero_not_a_panic() {
+        let t = time_fn(0, 0, || {});
+        assert_eq!(t.iters, 0);
+        assert_eq!(t.mean, Duration::ZERO);
+        assert_eq!(t.p50, Duration::ZERO);
+        assert_eq!(t.p95, Duration::ZERO);
+    }
+
+    #[test]
+    fn percentiles_are_nearest_rank() {
+        let samples: Vec<Duration> = (1..=100).map(Duration::from_nanos).collect();
+        assert_eq!(percentile(&samples, 50), Duration::from_nanos(50));
+        assert_eq!(percentile(&samples, 95), Duration::from_nanos(95));
+        let one = vec![Duration::from_nanos(7)];
+        assert_eq!(percentile(&one, 50), Duration::from_nanos(7));
+        assert_eq!(percentile(&one, 95), Duration::from_nanos(7));
     }
 
     #[test]
@@ -70,5 +189,27 @@ mod tests {
         assert!(fmt_dur(Duration::from_micros(12)).contains("µs"));
         assert!(fmt_dur(Duration::from_millis(12)).contains("ms"));
         assert!(fmt_dur(Duration::from_secs(2)).contains(" s"));
+    }
+
+    #[test]
+    fn json_composition() {
+        let row = json_obj(&[
+            ("engine", json_str("fgp-sim")),
+            ("msgs_per_s", json_num(2.5e5)),
+            ("cycles", "260".to_string()),
+        ]);
+        let doc = json_obj(&[("engines", json_arr(&[row]))]);
+        assert_eq!(
+            doc,
+            "{\"engines\":[{\"engine\":\"fgp-sim\",\"msgs_per_s\":250000,\"cycles\":260}]}"
+        );
+    }
+
+    #[test]
+    fn json_escapes_and_non_finite() {
+        assert_eq!(json_str("a\"b\\c\n"), "\"a\\\"b\\\\c\\n\"");
+        assert_eq!(json_num(f64::NAN), "null");
+        assert_eq!(json_num(f64::INFINITY), "null");
+        assert_eq!(json_num(1.5), "1.5");
     }
 }

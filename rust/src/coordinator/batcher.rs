@@ -5,9 +5,27 @@
 //! waited `max_wait`, whichever comes first. With the PJRT batched
 //! artifact, one dispatch amortizes literal marshalling and executor
 //! launch over the whole batch.
+//!
+//! [`StreamCoalescer`] is the streaming complement: a *single* recursive
+//! stream cannot batch its own samples (each update consumes the
+//! previous posterior), but **concurrent clients' streams are mutually
+//! independent** — so each tick takes the next pending sample from every
+//! active stream and fires them as ONE batched backend dispatch. On the
+//! `XlaBatch` backend that wakes the `cn_update_batched` artifact, whose
+//! runtime marshalling pads under-full tail batches (fewer active
+//! streams than the baked batch size) up to the artifact's batch and
+//! truncates on return.
 
+use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::gmp::matrix::CMatrix;
+use crate::gmp::message::GaussMessage;
+
+use super::backend::{Backend, CnRequestData};
 
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
@@ -56,6 +74,97 @@ impl<T> Batcher<T> {
     }
 }
 
+/// One client's recursive compound-node stream as the coalescer sees
+/// it: the running posterior plus queued per-sample
+/// (observation, regressor) pairs.
+pub struct CnStream {
+    /// Current recursive state (the posterior after the last coalesced
+    /// sample).
+    pub state: GaussMessage,
+    pending: VecDeque<(GaussMessage, CMatrix)>,
+    /// Samples this stream has had coalesced so far.
+    pub samples_done: u64,
+}
+
+impl CnStream {
+    pub fn new(prior: GaussMessage) -> Self {
+        CnStream { state: prior, pending: VecDeque::new(), samples_done: 0 }
+    }
+
+    /// Queue one sample: observation message `y` through regressor `a`.
+    pub fn push(&mut self, y: GaussMessage, a: CMatrix) {
+        self.pending.push_back((y, a));
+    }
+
+    /// Samples waiting to be coalesced.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+/// Coalesces concurrent recursive CN streams into batched backend
+/// dispatches (see the module docs for why cross-stream batching is
+/// sound where within-stream batching is not).
+pub struct StreamCoalescer;
+
+impl StreamCoalescer {
+    /// One coalescing round: take the next pending sample from every
+    /// stream that has one, dispatch them as a single
+    /// [`Backend::cn_update_batch`] call, and fold each result back into
+    /// its stream's recursive state. Returns the number of streams
+    /// advanced (0 = all drained). A stream whose update errors keeps
+    /// its sample queued; the first such error is returned after every
+    /// successful stream has still been advanced.
+    pub fn tick(backend: &mut dyn Backend, streams: &mut [CnStream]) -> Result<usize> {
+        let mut idx = Vec::with_capacity(streams.len());
+        let mut reqs = Vec::with_capacity(streams.len());
+        for (i, s) in streams.iter().enumerate() {
+            if let Some((y, a)) = s.pending.front() {
+                reqs.push(CnRequestData { x: s.state.clone(), y: y.clone(), a: a.clone() });
+                idx.push(i);
+            }
+        }
+        if reqs.is_empty() {
+            return Ok(0);
+        }
+        let outs = backend.cn_update_batch(&reqs);
+        let mut advanced = 0;
+        let mut first_err = None;
+        for (i, out) in idx.into_iter().zip(outs) {
+            match out {
+                Ok(post) => {
+                    let s = &mut streams[i];
+                    s.state = post;
+                    s.pending.pop_front();
+                    s.samples_done += 1;
+                    advanced += 1;
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e.context(format!("coalesced update for stream {i}")));
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(advanced),
+        }
+    }
+
+    /// Tick until every stream's queue is drained.
+    pub fn drain(backend: &mut dyn Backend, streams: &mut [CnStream]) -> Result<u64> {
+        let mut total = 0u64;
+        loop {
+            let n = Self::tick(backend, streams)?;
+            if n == 0 {
+                return Ok(total);
+            }
+            total += n as u64;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -95,6 +204,56 @@ mod tests {
         drop(tx);
         let b = Batcher::new(rx, BatchPolicy::default());
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn coalescer_matches_sequential_updates() {
+        use super::super::backend::GoldenBackend;
+        use crate::gmp::matrix::c64;
+        use crate::gmp::nodes;
+        use crate::testutil::Rng;
+
+        let mut rng = Rng::new(11);
+        let msg = |rng: &mut Rng| {
+            GaussMessage::new(
+                (0..4).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+                CMatrix::random_psd(rng, 4, 1.0).scale(0.15),
+            )
+        };
+        // three concurrent streams of different lengths: later ticks run
+        // under-full ("tail") batches as the short streams drain
+        let lens = [4usize, 2, 3];
+        let mut streams: Vec<CnStream> = Vec::new();
+        let mut priors: Vec<GaussMessage> = Vec::new();
+        let mut samples: Vec<Vec<(GaussMessage, CMatrix)>> = Vec::new();
+        for &len in &lens {
+            let prior = msg(&mut rng);
+            let mut s = CnStream::new(prior.clone());
+            let mut data = Vec::new();
+            for _ in 0..len {
+                let y = msg(&mut rng);
+                let a = CMatrix::random(&mut rng, 4, 4).scale(0.3);
+                s.push(y.clone(), a.clone());
+                data.push((y, a));
+            }
+            streams.push(s);
+            priors.push(prior);
+            samples.push(data);
+        }
+        let mut backend = GoldenBackend;
+        let total = StreamCoalescer::drain(&mut backend, &mut streams).unwrap();
+        assert_eq!(total, 9);
+        // each stream's final state == folding its own samples alone:
+        // cross-stream batching never mixes the recursions
+        for (i, s) in streams.iter().enumerate() {
+            assert_eq!(s.samples_done as usize, lens[i]);
+            assert_eq!(s.pending(), 0);
+            let mut want = priors[i].clone();
+            for (y, a) in &samples[i] {
+                want = nodes::compound_observation(&want, y, a, false).unwrap();
+            }
+            assert!(s.state.dist(&want) < 1e-12, "stream {i}: {}", s.state.dist(&want));
+        }
     }
 
     #[test]

@@ -23,7 +23,8 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
-use crate::engine::{Execution, Session};
+use crate::compiler::CompileOptions;
+use crate::engine::{Execution, Session, StreamBinder, StreamRun, StreamSample, StreamingWorkload};
 use crate::fgp::FgpConfig;
 use crate::gmp::matrix::CMatrix;
 use crate::gmp::message::GaussMessage;
@@ -160,13 +161,7 @@ impl FgpFarm {
         req: WorkloadRequest,
     ) -> (Receiver<Result<Execution>>, usize) {
         let idx = self.route();
-        let (rtx, rrx) = mpsc::channel();
-        if let Err(mpsc::SendError(msg)) =
-            self.devices[idx].tx.send(DeviceMsg { req, resp: DeviceResp::Exec(rtx) })
-        {
-            msg.resp.send(Err(anyhow!("device {idx} stopped")));
-        }
-        (rrx, idx)
+        (self.submit_to(idx, req), idx)
     }
 
     /// Async CN dispatch; returns the reply channel and the chosen device.
@@ -195,6 +190,147 @@ impl FgpFarm {
     /// Per-device simulated cycle counters.
     pub fn load_profile(&self) -> Vec<u64> {
         self.devices.iter().map(|d| d.cycles.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Submit a workload request to a **specific** device, bypassing the
+    /// routing policy (stream stickiness). A bad index or a stopped
+    /// device surfaces as an `Err` on the reply channel, the same
+    /// error-via-channel contract every async submit here uses.
+    pub fn submit_to(&self, idx: usize, req: WorkloadRequest) -> Receiver<Result<Execution>> {
+        let (rtx, rrx) = mpsc::channel();
+        match self.devices.get(idx) {
+            None => {
+                let _ = rtx.send(Err(anyhow!(
+                    "no device {idx} in a {}-device farm",
+                    self.devices.len()
+                )));
+            }
+            Some(d) => {
+                if let Err(mpsc::SendError(msg)) =
+                    d.tx.send(DeviceMsg { req, resp: DeviceResp::Exec(rtx) })
+                {
+                    msg.resp.send(Err(anyhow!("device {idx} stopped")));
+                }
+            }
+        }
+        rrx
+    }
+
+    /// Open a **sticky** stream session over this farm: the routing
+    /// policy picks a device once, and every chunk of the stream then
+    /// lands on that same device — its session keeps the stream's
+    /// compiled chunk program cached and PM-resident, and the client
+    /// side carries the recursive state between chunks, so per-device
+    /// state persists across samples. Concurrent streams naturally
+    /// spread across devices (round-robin assigns them in open order)
+    /// and stay **bitwise identical** to a single
+    /// [`Session::run_stream`](crate::engine::Session::run_stream) run.
+    pub fn open_stream<'f, 'w, W: StreamingWorkload + ?Sized>(
+        &'f self,
+        w: &'w W,
+    ) -> Result<FarmStream<'f, 'w, W>> {
+        let device = self.route();
+        let chunk = w.max_chunk().max(1);
+        let binder = StreamBinder::build(w, chunk)?;
+        Ok(FarmStream {
+            farm: self,
+            w,
+            device,
+            chunk,
+            binder,
+            opts: w.stream_compile_options(),
+            state: w.initial_state(),
+            boundaries: Vec::new(),
+            samples: 0,
+            cycles: 0,
+        })
+    }
+}
+
+/// A client-side stream pinned to one farm device (see
+/// [`FgpFarm::open_stream`]).
+pub struct FarmStream<'f, 'w, W: StreamingWorkload + ?Sized> {
+    farm: &'f FgpFarm,
+    w: &'w W,
+    device: usize,
+    chunk: usize,
+    binder: StreamBinder,
+    opts: CompileOptions,
+    state: GaussMessage,
+    boundaries: Vec<GaussMessage>,
+    samples: u64,
+    cycles: u64,
+}
+
+impl<W: StreamingWorkload + ?Sized> FarmStream<'_, '_, W> {
+    /// The pinned device index.
+    pub fn device(&self) -> usize {
+        self.device
+    }
+
+    /// Current recursive state.
+    pub fn state(&self) -> &GaussMessage {
+        &self.state
+    }
+
+    /// Simulated device cycles this stream has consumed.
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    fn dispatch(&self, req: WorkloadRequest) -> Result<Execution> {
+        let rx = self.farm.submit_to(self.device, req);
+        rx.recv().map_err(|_| anyhow!("device {} died", self.device))?
+    }
+
+    /// Feed every remaining sample through the pinned device and return
+    /// the finished run (interpret it with the workload's
+    /// `stream_outcome`). Consumes the stream: one `FarmStream` is one
+    /// pass over its workload's sample iterator.
+    pub fn run_to_end(mut self) -> Result<StreamRun> {
+        loop {
+            let mut batch: Vec<StreamSample> = Vec::with_capacity(self.chunk);
+            while batch.len() < self.chunk {
+                match self.w.next_sample(self.samples as usize + batch.len(), &self.state)? {
+                    Some(s) => batch.push(s),
+                    None => break,
+                }
+            }
+            let real = batch.len();
+            if real == 0 {
+                break;
+            }
+            let exec = if real == self.chunk {
+                self.binder.bind(&self.state, &batch)?;
+                self.dispatch(WorkloadRequest {
+                    graph: self.binder.graph.clone(),
+                    schedule: self.binder.schedule.clone(),
+                    inputs: self.binder.inputs.clone(),
+                    opts: self.opts,
+                })?
+            } else {
+                let mut tail = StreamBinder::build(self.w, real)?;
+                tail.bind(&self.state, &batch)?;
+                self.dispatch(WorkloadRequest {
+                    graph: tail.graph,
+                    schedule: tail.schedule,
+                    inputs: tail.inputs,
+                    opts: self.opts,
+                })?
+            };
+            self.state = exec.output()?.clone();
+            self.boundaries.push(self.state.clone());
+            self.cycles += exec.stats.cycles;
+            self.samples += real as u64;
+            if real < self.chunk {
+                break;
+            }
+        }
+        Ok(StreamRun {
+            final_state: self.state,
+            boundaries: self.boundaries,
+            samples: self.samples,
+        })
     }
 }
 

@@ -12,7 +12,15 @@
 //!   compiled-program executions with streamed sections;
 //! * [`batcher`] — dynamic batching with a max-batch / max-wait policy
 //!   (amortizes PJRT dispatch across requests, the classic serving
-//!   trade-off);
+//!   trade-off), plus [`StreamCoalescer`]: concurrent clients'
+//!   *recursive* streams — unbatchable individually — coalesced
+//!   cross-stream into `cn_update_batched` dispatches with padded tail
+//!   batches;
+//! * [`farm`] — the multi-device scale-out: routed one-shot workloads,
+//!   and **sticky stream sessions** ([`FgpFarm::open_stream`]) where a
+//!   recursive app's chunks always land on the same device so its
+//!   compiled chunk program stays cached and PM-resident while the
+//!   per-stream state persists across samples;
 //! * [`server`] — worker threads pulling from an mpsc queue, a cloneable
 //!   client handle, graceful shutdown;
 //! * [`device`] — the raw Fig. 5 command protocol (`load_program`,
@@ -32,8 +40,8 @@ pub mod metrics;
 pub mod server;
 
 pub use backend::{Backend, BackendKind, CnRequestData, WorkloadRequest};
-pub use batcher::{BatchPolicy, Batcher};
+pub use batcher::{BatchPolicy, Batcher, CnStream, StreamCoalescer};
 pub use device::{FgpDevice, ProtocolError};
-pub use farm::{FgpFarm, RoutePolicy};
+pub use farm::{FarmStream, FgpFarm, RoutePolicy};
 pub use metrics::{Histogram, Metrics};
 pub use server::{CnClient, CnServer, ServerClosed, ServerConfig};

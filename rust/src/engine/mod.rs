@@ -20,6 +20,13 @@
 //! recompiling — the hit/miss counters are observable via
 //! [`Session::cache_stats`].
 //!
+//! Recursive applications additionally implement
+//! [`StreamingWorkload`] and serve **steady state** through
+//! [`Session::run_stream`]: the model compiles once and samples stream
+//! through the resident program (the paper's §VI throughput shape — see
+//! [`stream`] for the contract and `rust/benches/table2_throughput.rs`
+//! for the measured msgs/sec trajectory in `BENCH_throughput.json`).
+//!
 //! ```no_run
 //! use fgp_repro::apps::rls::RlsProblem;
 //! use fgp_repro::engine::Session;
@@ -35,9 +42,13 @@
 //! ```
 
 pub mod session;
+pub mod stream;
 pub mod workload;
 
 pub use session::{
     CacheStats, Engine, EngineKind, FgpSimEngine, GoldenEngine, RunReport, Session, XlaEngine,
+};
+pub use stream::{
+    StreamBinder, StreamReport, StreamRun, StreamSample, StreamingWorkload, DEFAULT_STREAM_CHUNK,
 };
 pub use workload::{bind_streamed, edge_label, preload_id, split_inputs, Execution, Workload};

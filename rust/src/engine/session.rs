@@ -29,6 +29,7 @@ use crate::gmp::{nodes, FactorGraph, MsgId, NodeKind, Schedule};
 use crate::isa::Instr;
 use crate::runtime::RuntimeClient;
 
+use super::stream::{StreamBinder, StreamReport, StreamRun, StreamSample, StreamingWorkload};
 use super::workload::{Execution, Workload};
 
 /// Which engine a session drives.
@@ -65,6 +66,19 @@ pub trait Engine {
     /// Fixed device dimension, if the engine has one (the FGP simulator).
     fn device_n(&self) -> Option<usize> {
         None
+    }
+
+    /// Samples per dispatch [`Session::run_stream`] should pipeline
+    /// through this engine, bounded by the workload's declared ceiling
+    /// `app_max`. Program engines amortize one compiled chunk program
+    /// over the whole chunk; engines without a program default to
+    /// sample-at-a-time.
+    fn stream_chunk(&self, app_max: usize) -> usize {
+        if self.needs_program() {
+            app_max.max(1)
+        } else {
+            1
+        }
     }
 
     /// Execute a model against the bound inputs. `program` is the cached
@@ -215,19 +229,30 @@ impl Engine for FgpSimEngine {
         }
 
         // streaming plans: element i of a stream group must be resident
-        // in the shared slot when its consuming step executes
+        // in the shared slot when its consuming step executes. One pass
+        // over the schedule finds every first-consumption step — a long
+        // chain's plan build is O(steps), which the steady-state stream
+        // path (`Session::run_stream`) pays once per chunk.
+        let mut msg_consumed_at: HashMap<MsgId, usize> = HashMap::new();
+        let mut state_consumed_at: HashMap<StateId, usize> = HashMap::new();
+        for (i, step) in schedule.steps.iter().enumerate() {
+            for mid in step.op.inputs() {
+                msg_consumed_at.entry(mid).or_insert(i);
+            }
+            if let Some(sid) = step.op.state() {
+                state_consumed_at.entry(sid).or_insert(i);
+            }
+        }
         let consume_msg = |mid: &MsgId| {
-            schedule
-                .steps
-                .iter()
-                .position(|s| s.op.inputs().contains(mid))
+            msg_consumed_at
+                .get(mid)
+                .copied()
                 .with_context(|| format!("streamed message {} is never consumed", mid.0))
         };
         let consume_state = |sid: &StateId| {
-            schedule
-                .steps
-                .iter()
-                .position(|s| s.op.state() == Some(*sid))
+            state_consumed_at
+                .get(sid)
+                .copied()
                 .with_context(|| format!("streamed state {} is never consumed", sid.0))
         };
         let mut msg_plans: Vec<StreamPlan<GaussMessage>> = Vec::new();
@@ -392,6 +417,19 @@ impl XlaEngine {
 impl Engine for XlaEngine {
     fn kind(&self) -> EngineKind {
         EngineKind::Xla
+    }
+
+    /// A pure compound-node stream chunks to the AOT `rls_chain`
+    /// artifact's baked section count so every full chunk goes out as
+    /// ONE fused dispatch ([`Session::run_stream`] pads tail chunks with
+    /// `A = 0` identity sections). Without the artifact — or when the
+    /// workload's binding is state-dependent (`app_max == 1`) — the
+    /// stream runs sample-at-a-time.
+    fn stream_chunk(&self, app_max: usize) -> usize {
+        match self.rt.manifest.entry("rls_chain").and_then(|e| e.leading_dim()) {
+            Some(s) if s > 1 && app_max >= s => s,
+            _ => 1,
+        }
     }
 
     fn execute(
@@ -601,6 +639,129 @@ impl Session {
             compile_stats: d.compile_stats,
             engine: self.engine.kind(),
             cached: d.cached,
+        })
+    }
+
+    /// Run a [`StreamingWorkload`] to the end of its sample stream —
+    /// the paper's §VI steady-state serving shape.
+    ///
+    /// The steady-state model is compiled **once** (program engines);
+    /// every subsequent chunk of samples reuses the resident program and
+    /// only re-stages data: on the simulator the chunk rides one
+    /// `run_program` call with the host refilling the shared memmap
+    /// slots at each store handshake, and on the XLA engine a pure
+    /// compound-node stream dispatches full chunks through the AOT chain
+    /// artifact with `A = 0` identity sections padding the tail. A tail
+    /// shorter than the chunk on the simulator compiles one extra
+    /// (cached) tail program so its cycle accounting stays honest.
+    pub fn run_stream<W: StreamingWorkload + ?Sized>(
+        &mut self,
+        w: &W,
+    ) -> Result<StreamReport<W::StreamOutcome>> {
+        if let Some(dn) = self.engine.device_n() {
+            if w.state_dim() != dn {
+                bail!(
+                    "stream '{}' has n={} but the device is configured for n={}",
+                    w.stream_name(),
+                    w.state_dim(),
+                    dn
+                );
+            }
+        }
+        let opts = w.stream_compile_options();
+        let chunk = self.engine.stream_chunk(w.max_chunk().max(1)).max(1);
+        let mut main = StreamBinder::build(w, chunk)
+            .with_context(|| format!("building stream '{}' chunk model", w.stream_name()))?;
+        let mut main_program: Option<Arc<CompiledProgram>> = None;
+        // XLA tails pad to the chunk instead of recompiling: the padded
+        // sections are exact identity updates (see StreamBinder::paddable)
+        let pad_tails = self.engine.kind() == EngineKind::Xla && main.paddable();
+
+        let mut state = w.initial_state();
+        let mut boundaries: Vec<GaussMessage> = Vec::new();
+        let mut samples: u64 = 0;
+        let mut chunks: u64 = 0;
+        let mut cycles: u64 = 0;
+        let mut sections: u64 = 0;
+        let mut compiles: u64 = 0;
+        let mut cache_hits: u64 = 0;
+
+        loop {
+            let mut batch: Vec<StreamSample> = Vec::with_capacity(chunk);
+            while batch.len() < chunk {
+                match w.next_sample(samples as usize + batch.len(), &state)? {
+                    Some(s) => batch.push(s),
+                    None => break,
+                }
+            }
+            let real = batch.len();
+            if real == 0 {
+                break;
+            }
+            let exec = if real == chunk || pad_tails {
+                if real < chunk {
+                    let pad = main.pad_sample(batch.last().expect("non-empty batch"));
+                    while batch.len() < chunk {
+                        batch.push(pad.clone());
+                    }
+                }
+                if self.engine.needs_program() && main_program.is_none() {
+                    let (p, cached) = self.lookup_or_compile(&main.graph, &main.schedule, &opts)?;
+                    if cached {
+                        cache_hits += 1;
+                    } else {
+                        compiles += 1;
+                    }
+                    main_program = Some(p);
+                }
+                main.bind(&state, &batch)?;
+                self.engine
+                    .execute(&main.graph, &main.schedule, main_program.as_ref(), &main.inputs)
+                    .with_context(|| format!("stream '{}' chunk {chunks}", w.stream_name()))?
+            } else {
+                // short tail: a one-off model of exactly `real` samples
+                let mut tail = StreamBinder::build(w, real)
+                    .with_context(|| format!("building stream '{}' tail model", w.stream_name()))?;
+                let tail_program = if self.engine.needs_program() {
+                    let (p, cached) = self.lookup_or_compile(&tail.graph, &tail.schedule, &opts)?;
+                    if cached {
+                        cache_hits += 1;
+                    } else {
+                        compiles += 1;
+                    }
+                    Some(p)
+                } else {
+                    None
+                };
+                tail.bind(&state, &batch)?;
+                self.engine
+                    .execute(&tail.graph, &tail.schedule, tail_program.as_ref(), &tail.inputs)
+                    .with_context(|| format!("stream '{}' tail chunk", w.stream_name()))?
+            };
+            state = exec.output()?.clone();
+            boundaries.push(state.clone());
+            cycles += exec.stats.cycles;
+            sections += exec.stats.sections;
+            samples += real as u64;
+            chunks += 1;
+            if real < chunk {
+                break; // the stream ended inside this chunk
+            }
+        }
+
+        let run = StreamRun { final_state: state, boundaries, samples };
+        let outcome = w.stream_outcome(&run)?;
+        Ok(StreamReport {
+            outcome,
+            final_state: run.final_state,
+            samples,
+            chunks,
+            chunk,
+            cycles,
+            sections,
+            compiles,
+            cache_hits,
+            engine: self.engine.kind(),
         })
     }
 

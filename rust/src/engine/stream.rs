@@ -1,0 +1,331 @@
+//! Streaming steady-state execution: the paper's §VI serving shape.
+//!
+//! The FGP's headline result (Table II) is *steady-state throughput*:
+//! the program is loaded once and samples stream through the Data-in
+//! port, one loop iteration per received symbol. `Session::run` cannot
+//! express that — every call re-binds and re-dispatches one workload.
+//! This module adds the missing surface:
+//!
+//! * [`StreamingWorkload`] — a recursive application declares its
+//!   steady-state section **once**: which edge carries the recursive
+//!   state, which edges/states are refilled per sample, and how to turn
+//!   the finished stream back into a typed outcome;
+//! * [`Session::run_stream`](super::Session::run_stream) — compiles the
+//!   steady-state model once, then pipelines the workload's sample
+//!   iterator through the cached program. On the cycle-accurate
+//!   simulator a *chunk* of samples rides one `run_program` call via the
+//!   compiler's memmap stream contract (the host refills the shared
+//!   slots at every store handshake, exactly the §IV "HW-SW
+//!   interaction"); on the golden engine samples execute one at a time;
+//!   on the XLA engine a pure compound-node stream dispatches whole
+//!   chunks through the AOT chain artifact, with `A = 0` identity
+//!   sections padding the tail chunk;
+//! * [`StreamBinder`] — the shared per-chunk data binder the session
+//!   driver and the farm's sticky streams
+//!   ([`crate::coordinator::FgpFarm::open_stream`]) both use.
+//!
+//! The per-sample binding contract mirrors [`super::workload`]: streamed
+//! input edges and streamed state matrices are created in **sample
+//! order** by the model builder, so sample `k` of a `chunk`-sample model
+//! owns the `k`-th slice of each.
+//!
+//! ```
+//! use fgp_repro::apps::rls::RlsProblem;
+//! use fgp_repro::engine::Session;
+//!
+//! // The paper's channel-estimation workload, served as a stream: the
+//! // model compiles once, then every training symbol is one sample.
+//! let problem = RlsProblem::synthetic(4, 12, 0.01, 7);
+//! let mut session = Session::golden();
+//! let report = session.run_stream(&problem).unwrap();
+//! assert_eq!(report.samples, 12);
+//! assert!(report.outcome.rel_mse.is_finite());
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::compiler::CompileOptions;
+use crate::gmp::matrix::{c64, CMatrix};
+use crate::gmp::message::GaussMessage;
+use crate::gmp::schedule::StepOp;
+use crate::gmp::{FactorGraph, MsgId, Schedule};
+
+use super::session::EngineKind;
+use super::workload::{preload_id, split_inputs};
+
+/// Default number of samples [`Session::run_stream`](super::Session::run_stream)
+/// pipelines per compiled-program dispatch on program engines. Streamed
+/// edges/states share one physical slot each, so chunk size costs no
+/// message memory; it only sets how much per-dispatch overhead is
+/// amortized.
+pub const DEFAULT_STREAM_CHUNK: usize = 64;
+
+/// Per-sample data bound to a stream's steady-state section.
+#[derive(Clone, Debug)]
+pub struct StreamSample {
+    /// Messages for the sample's streamed input edges, in section order.
+    pub messages: Vec<GaussMessage>,
+    /// Matrices for the sample's streamed states, in stream order.
+    pub states: Vec<CMatrix>,
+}
+
+/// A finished stream, as handed to [`StreamingWorkload::stream_outcome`].
+#[derive(Clone, Debug)]
+pub struct StreamRun {
+    /// Recursive state after the final sample.
+    pub final_state: GaussMessage,
+    /// Recursive state at every dispatch boundary. With
+    /// [`StreamingWorkload::max_chunk`] `== 1` (state-dependent apps)
+    /// this is the per-sample posterior trace; chunked streams observe
+    /// one boundary per chunk.
+    pub boundaries: Vec<GaussMessage>,
+    /// Samples consumed.
+    pub samples: u64,
+}
+
+/// Result of [`Session::run_stream`](super::Session::run_stream): the
+/// typed outcome plus everything the serving and benchmark layers report.
+#[derive(Clone, Debug)]
+pub struct StreamReport<O> {
+    pub outcome: O,
+    /// Recursive state after the final sample (hand it to a follow-up
+    /// stream to keep filtering).
+    pub final_state: GaussMessage,
+    /// Samples consumed.
+    pub samples: u64,
+    /// Dispatches issued (chunks, including a short tail).
+    pub chunks: u64,
+    /// Steady-state chunk size the engine chose.
+    pub chunk: usize,
+    /// Simulated device cycles (0 on engines without a cycle model).
+    pub cycles: u64,
+    /// Sections (store handshakes) the device committed.
+    pub sections: u64,
+    /// Programs compiled for this stream (0 on non-program engines; at
+    /// most 2 — steady-state chunk + tail — on the simulator).
+    pub compiles: u64,
+    /// Stream programs served from the session cache instead.
+    pub cache_hits: u64,
+    pub engine: EngineKind,
+}
+
+impl<O> StreamReport<O> {
+    /// Simulated device cycles per sample (0 on engines without a cycle
+    /// model).
+    pub fn cycles_per_sample(&self) -> u64 {
+        self.cycles / self.samples.max(1)
+    }
+}
+
+/// A recursive application on the streaming surface.
+///
+/// The contract [`Session::run_stream`](super::Session::run_stream) and
+/// [`crate::coordinator::FgpFarm::open_stream`] rely on:
+///
+/// 1. [`stream_model`](Self::stream_model)`(chunk)` builds the
+///    steady-state model of `chunk` consecutive samples: the recursive
+///    state enters on the preloaded input edge labelled
+///    [`state_label`](Self::state_label), each sample's data rides
+///    streamed input edges / streamed states **created in sample
+///    order**, and exactly one edge — the state after the last sample —
+///    is marked as the output.
+/// 2. [`next_sample`](Self::next_sample)`(k, state)` yields sample `k`'s
+///    data or `None` at end of stream. `state` is the most recent
+///    recursive state the host has observed; it lags up to `chunk - 1`
+///    samples on chunked engines, so apps whose binding depends on the
+///    *exact* per-sample state (relinearization) must declare
+///    [`max_chunk`](Self::max_chunk)`() == 1`.
+/// 3. [`stream_outcome`](Self::stream_outcome) interprets the finished
+///    [`StreamRun`].
+///
+/// Method names are disjoint from [`super::Workload`]'s on purpose: an
+/// app can implement both traits and callers can import both without
+/// ambiguity.
+pub trait StreamingWorkload {
+    /// Typed result of a finished stream.
+    type StreamOutcome;
+
+    /// Short identifier (diagnostics, cache reports).
+    fn stream_name(&self) -> &str;
+
+    /// State dimension (must match the device size).
+    fn state_dim(&self) -> usize;
+
+    /// Build the steady-state model of `chunk` consecutive samples.
+    fn stream_model(&self, chunk: usize) -> Result<(FactorGraph, Schedule)>;
+
+    /// Label of the recursive state's preloaded input edge.
+    fn state_label(&self) -> &str {
+        "msg_prior"
+    }
+
+    /// Constant preloaded inputs (process noise, priors that are not the
+    /// recursive state), bound once per dispatch, by edge label.
+    fn constant_inputs(&self) -> Vec<(String, GaussMessage)> {
+        Vec::new()
+    }
+
+    /// Initial recursive state.
+    fn initial_state(&self) -> GaussMessage;
+
+    /// Sample `k`'s data, or `None` at end of stream. `state` is the
+    /// latest host-observed recursive state (see the trait docs for the
+    /// chunk-lag contract).
+    fn next_sample(&self, k: usize, state: &GaussMessage) -> Result<Option<StreamSample>>;
+
+    /// Largest chunk the driver may pipeline per dispatch; `1` when
+    /// sample binding is state-dependent.
+    fn max_chunk(&self) -> usize {
+        DEFAULT_STREAM_CHUNK
+    }
+
+    /// Compiler options for program engines.
+    fn stream_compile_options(&self) -> CompileOptions {
+        CompileOptions::default()
+    }
+
+    /// Interpret the finished stream.
+    fn stream_outcome(&self, run: &StreamRun) -> Result<Self::StreamOutcome>;
+}
+
+/// Reusable per-chunk binder for a stream's steady-state model: built
+/// once per chunk shape, it rebinds the recursive state, the constant
+/// inputs and every sample's streamed messages/states in place, so the
+/// steady-state loop allocates no fresh model per dispatch.
+pub struct StreamBinder {
+    pub graph: FactorGraph,
+    pub schedule: Schedule,
+    /// Input bindings, refreshed by [`StreamBinder::bind`].
+    pub inputs: HashMap<MsgId, GaussMessage>,
+    chunk: usize,
+    n: usize,
+    state_mid: MsgId,
+    /// Streamed input message ids, sample-major (virtual-id order).
+    streamed_mids: Vec<MsgId>,
+    /// Streamed state indices into `graph.states`, sample-major.
+    streamed_sids: Vec<usize>,
+    per_sample_msgs: usize,
+    per_sample_states: usize,
+}
+
+impl StreamBinder {
+    /// Build the binder for `chunk` samples of `w`'s stream.
+    pub fn build<W: StreamingWorkload + ?Sized>(w: &W, chunk: usize) -> Result<Self> {
+        if chunk == 0 {
+            bail!("stream chunk must be at least 1");
+        }
+        let (graph, schedule) = w.stream_model(chunk)?;
+        if schedule.outputs.len() != 1 {
+            bail!(
+                "stream '{}' must mark exactly one output edge (the final state), found {}",
+                w.stream_name(),
+                schedule.outputs.len()
+            );
+        }
+        let state_mid = preload_id(&graph, &schedule, w.state_label())?;
+        let (_, streamed) = split_inputs(&graph, &schedule);
+        let streamed_mids: Vec<MsgId> = streamed.iter().map(|(m, _)| *m).collect();
+        let streamed_sids: Vec<usize> = graph
+            .state_stream_groups
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| g.is_some())
+            .map(|(i, _)| i)
+            .collect();
+        if streamed_mids.len() % chunk != 0 || streamed_sids.len() % chunk != 0 {
+            bail!(
+                "stream '{}' model has {} streamed edges / {} streamed states, not a multiple of chunk {}",
+                w.stream_name(),
+                streamed_mids.len(),
+                streamed_sids.len(),
+                chunk
+            );
+        }
+        let mut inputs = HashMap::new();
+        for (label, msg) in w.constant_inputs() {
+            inputs.insert(preload_id(&graph, &schedule, &label)?, msg);
+        }
+        let n = w.state_dim();
+        Ok(StreamBinder {
+            per_sample_msgs: streamed_mids.len() / chunk,
+            per_sample_states: streamed_sids.len() / chunk,
+            graph,
+            schedule,
+            inputs,
+            chunk,
+            n,
+            state_mid,
+            streamed_mids,
+            streamed_sids,
+        })
+    }
+
+    /// Samples this binder's model spans.
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    /// Rebind the recursive state plus one chunk of samples in place.
+    /// `samples.len()` must equal [`StreamBinder::chunk`].
+    pub fn bind(&mut self, state: &GaussMessage, samples: &[StreamSample]) -> Result<()> {
+        if samples.len() != self.chunk {
+            bail!(
+                "binder spans {} samples but {} were supplied",
+                self.chunk,
+                samples.len()
+            );
+        }
+        self.inputs.insert(self.state_mid, state.clone());
+        for (k, s) in samples.iter().enumerate() {
+            if s.messages.len() != self.per_sample_msgs
+                || s.states.len() != self.per_sample_states
+            {
+                bail!(
+                    "sample {k} carries {} messages / {} states but the model expects {} / {} per sample",
+                    s.messages.len(),
+                    s.states.len(),
+                    self.per_sample_msgs,
+                    self.per_sample_states
+                );
+            }
+            for (j, m) in s.messages.iter().enumerate() {
+                self.inputs
+                    .insert(self.streamed_mids[k * self.per_sample_msgs + j], m.clone());
+            }
+            for (j, a) in s.states.iter().enumerate() {
+                self.graph.states[self.streamed_sids[k * self.per_sample_states + j]] = a.clone();
+            }
+        }
+        Ok(())
+    }
+
+    /// True when the model is a pure compound-observation chain with one
+    /// streamed message and one streamed state per sample. Such a chunk
+    /// may be padded with identity sections — `A = 0` makes the gain
+    /// `V_X A^H (A V_X A^H + V_Y)^-1` exactly zero, so a padded section
+    /// leaves the recursive state untouched (pinned by
+    /// `rust/tests/integration_streaming.rs`). The XLA engine uses this
+    /// to ship tail chunks through the fixed-length chain artifact.
+    pub fn paddable(&self) -> bool {
+        self.per_sample_msgs == 1
+            && self.per_sample_states == 1
+            && self
+                .schedule
+                .steps
+                .iter()
+                .all(|s| matches!(s.op, StepOp::CompoundObservation { .. }))
+    }
+
+    /// An identity-update pad sample: `A = 0`, a zero-mean observation
+    /// with the same covariance as `like`'s (the chain artifact requires
+    /// one isotropic observation covariance across the whole chunk).
+    pub fn pad_sample(&self, like: &StreamSample) -> StreamSample {
+        let cov = like.messages[0].cov.clone();
+        StreamSample {
+            messages: vec![GaussMessage::new(vec![c64::ZERO; self.n], cov)],
+            states: vec![CMatrix::zeros(self.n, self.n)],
+        }
+    }
+}

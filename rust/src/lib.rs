@@ -16,11 +16,15 @@
 //!
 //! * **L3 (this crate)** — the paper's contribution: [`fgp`] cycle-accurate
 //!   simulator, [`isa`] + [`compiler`], [`engine`] (the unified
-//!   Workload/Engine/Session execution surface), [`coordinator`] (the
-//!   Fig. 5 "external processor" command protocol, request queue,
-//!   batcher), [`gbp`] (loopy Gaussian belief propagation over cyclic
-//!   graphs, every inner update dispatched through the engine surface),
-//!   [`nonlinear`] (pluggable EKF/sigma-point linearizers and iterated
+//!   Workload/Engine/Session execution surface, including the
+//!   **streaming steady-state path** `Session::run_stream` — compile
+//!   once, stream samples through the resident program, the §VI
+//!   throughput shape), [`coordinator`] (the Fig. 5 "external
+//!   processor" command protocol, request queue, batcher, device farm
+//!   with sticky stream sessions and cross-stream coalescing), [`gbp`]
+//!   (loopy Gaussian belief propagation over cyclic graphs, every inner
+//!   update dispatched through the engine surface), [`nonlinear`]
+//!   (pluggable EKF/sigma-point linearizers and iterated
 //!   relinearization turning nonlinear factors into cache-hitting
 //!   compound-observation sweeps), [`dsp`] baseline and [`model`]
 //!   area/technology models.
@@ -52,7 +56,16 @@
 //! // Same workload, golden reference engine — same call.
 //! let reference = Session::golden().run(&problem).unwrap();
 //! assert!(report.quality < reference.quality + 0.2);
+//!
+//! // Steady-state serving (§VI): compile once, stream the samples
+//! // through the resident program — Table II's throughput shape.
+//! let stream = session.run_stream(&problem).unwrap();
+//! assert_eq!(stream.samples, 16);
 //! ```
+//!
+//! Measured streaming-vs-per-call throughput per engine is published to
+//! `BENCH_throughput.json` by `cargo bench --bench table2_throughput`
+//! (E14 in `DESIGN.md`).
 
 pub mod apps;
 pub mod benchutil;

@@ -103,8 +103,11 @@ impl RuntimeClient {
     }
 
     /// Batched compound-node updates (`cn_update_batched.hlo.txt`). The
-    /// batch size is baked into the artifact; shorter batches are padded
-    /// with the first element and truncated on return.
+    /// batch size is baked into the artifact; an under-full **tail
+    /// batch** is padded by replicating the last request up to the baked
+    /// batch and truncated on return (padding never alters the first
+    /// `reqs.len()` results — each lane is independent; pinned by
+    /// `rust/tests/integration_streaming.rs` when artifacts are built).
     pub fn cn_update_batched(
         &self,
         reqs: &[(GaussMessage, GaussMessage, CMatrix)],

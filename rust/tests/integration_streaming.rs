@@ -1,0 +1,389 @@
+//! Integration: the streaming steady-state execution path (E14).
+//!
+//! The contract under test: `Session::run_stream` is an *execution
+//! strategy*, never a different algorithm —
+//!
+//! * stream == repeated/batch `Session::run` **exactly** on the golden
+//!   engine and **bitwise** on the cycle-accurate simulator (the
+//!   posterior's fixed-point slot round-trips through f64 losslessly at
+//!   chunk boundaries);
+//! * the steady-state chunk program compiles once and is a cache hit for
+//!   every later chunk and stream;
+//! * tail chunks (stream length not a multiple of the chunk) stay
+//!   exact — via a one-off tail program on the simulator and `A = 0`
+//!   identity-section padding on the XLA chain artifact;
+//! * farm streams are sticky (one device per stream) and identical to a
+//!   single-session run, including under concurrent clients;
+//! * the coalescer batches across concurrent recursive streams without
+//!   mixing their recursions.
+
+use fgp_repro::apps::bearing::BearingProblem;
+use fgp_repro::apps::kalman::KalmanProblem;
+use fgp_repro::apps::rls::RlsProblem;
+use fgp_repro::apps::smoother::SmootherProblem;
+use fgp_repro::coordinator::backend::{Backend, FgpSimBackend, GoldenBackend};
+use fgp_repro::coordinator::{CnStream, FgpFarm, RoutePolicy, StreamCoalescer};
+use fgp_repro::engine::{Session, StreamBinder, StreamingWorkload};
+use fgp_repro::fgp::FgpConfig;
+use fgp_repro::gmp::matrix::{c64, CMatrix};
+use fgp_repro::gmp::message::GaussMessage;
+use fgp_repro::gmp::nodes;
+use fgp_repro::nonlinear::FirstOrder;
+use fgp_repro::testutil::Rng;
+
+fn vec_dist(a: &[c64], b: &[c64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (*x - *y).abs2()).sum::<f64>().sqrt()
+}
+
+// ---------------------------------------------------------------------
+// stream == batch conformance
+// ---------------------------------------------------------------------
+
+#[test]
+fn rls_stream_matches_batch_run_on_golden() {
+    // 70 samples: one full default chunk (64) plus a 6-sample tail
+    let p = RlsProblem::synthetic(4, 70, 0.01, 3);
+    let batch = Session::golden().run(&p).unwrap();
+    let stream = Session::golden().run_stream(&p).unwrap();
+    assert_eq!(stream.samples, 70);
+    // golden streams run sample-at-a-time: a boundary per sample
+    assert_eq!(stream.chunks, 70);
+    assert_eq!(stream.compiles, 0);
+    // identical op sequence => identical f64 estimate
+    assert_eq!(vec_dist(&stream.outcome.h_hat, &batch.outcome.h_hat), 0.0);
+}
+
+#[test]
+fn rls_stream_is_bitwise_identical_on_fgp_sim() {
+    let p = RlsProblem::synthetic(4, 70, 0.01, 3);
+    let batch = Session::fgp_sim(FgpConfig::default()).run(&p).unwrap();
+    let stream = Session::fgp_sim(FgpConfig::default()).run_stream(&p).unwrap();
+    // the posterior slot's fixed-point value round-trips through f64
+    // losslessly at the chunk boundary, so chunked streaming is bitwise
+    // identical to the single 70-section program
+    assert_eq!(vec_dist(&stream.outcome.h_hat, &batch.outcome.h_hat), 0.0);
+    // honest cycle accounting: same sections, same simulated cycles
+    assert_eq!(stream.sections, batch.sections);
+    assert_eq!(stream.cycles, batch.cycles);
+    assert_eq!(stream.cycles_per_sample(), FgpConfig::default().timing.compound_node_cycles(4));
+}
+
+#[test]
+fn stream_compiles_chunk_and_tail_once_then_hits() {
+    let p = RlsProblem::synthetic(4, 70, 0.01, 9);
+    let mut sim = Session::fgp_sim(FgpConfig::default());
+    let first = sim.run_stream(&p).unwrap();
+    // one full 64-sample chunk + one 6-sample tail => two programs
+    assert_eq!((first.chunks, first.compiles, first.cache_hits), (2, 2, 0));
+    let second = sim.run_stream(&p).unwrap();
+    assert_eq!(second.compiles, 0);
+    assert_eq!(second.cache_hits, 2);
+    let stats = sim.cache_stats();
+    assert_eq!((stats.misses, stats.hits, stats.programs), (2, 2, 2), "{stats:?}");
+}
+
+#[test]
+fn kalman_stream_matches_batch_on_both_engines() {
+    let p = KalmanProblem::synthetic(20, 5);
+    let g_batch = Session::golden().run(&p).unwrap();
+    let g_stream = Session::golden().run_stream(&p).unwrap();
+    assert_eq!(vec_dist(&g_stream.outcome.estimate, &g_batch.outcome.estimate), 0.0);
+
+    let f_batch = Session::fgp_sim(FgpConfig::default()).run(&p).unwrap();
+    let f_stream = Session::fgp_sim(FgpConfig::default()).run_stream(&p).unwrap();
+    assert_eq!(vec_dist(&f_stream.outcome.estimate, &f_batch.outcome.estimate), 0.0);
+    // three store handshakes per time step, streamed or batched
+    assert_eq!(f_stream.sections, 3 * 20);
+    assert_eq!(f_stream.sections, f_batch.sections);
+}
+
+#[test]
+fn smoother_stream_is_exactly_the_forward_filter() {
+    let p = SmootherProblem::synthetic(40, 7);
+    let batch = Session::golden().run(&p).unwrap();
+    let stream = Session::golden().run_stream(&p).unwrap();
+    // the stream serves the filtered (forward) posterior; the batch
+    // two-pass graph computes the same forward chain before smoothing
+    let last_filtered = batch.outcome.filtered.last().unwrap();
+    assert_eq!(stream.outcome.final_filtered.dist(last_filtered), 0.0);
+    assert!(stream.outcome.pos_error.is_finite());
+}
+
+#[test]
+fn smoother_stream_runs_on_the_device() {
+    let p = SmootherProblem::synthetic(20, 13);
+    let golden = Session::golden().run_stream(&p).unwrap();
+    let device = Session::fgp_sim(FgpConfig::default()).run_stream(&p).unwrap();
+    assert!(device.cycles > 0);
+    assert_eq!(device.sections, 3 * 20);
+    // forward filtering only: the quantized posterior must stay in the
+    // golden regime (the batch Workload's cross-engine contract)
+    assert!(
+        device.outcome.final_filtered.dist(&golden.outcome.final_filtered) < 0.25,
+        "device vs golden filtered dist {}",
+        device.outcome.final_filtered.dist(&golden.outcome.final_filtered)
+    );
+}
+
+// ---------------------------------------------------------------------
+// nonlinear streams (state-dependent binding, chunk == 1)
+// ---------------------------------------------------------------------
+
+#[test]
+fn bearing_stream_equals_single_round_tracking_on_golden() {
+    let p = BearingProblem::synthetic(8, 4, 1e-4, 3);
+    // rounds = 1 relinearizes once at the predicted mean per step —
+    // exactly the streaming semantics
+    let track = p.track(&mut Session::golden(), &FirstOrder, 1).unwrap();
+    let stream = Session::golden().run_stream(&p.stream(&FirstOrder)).unwrap();
+    assert_eq!(stream.outcome.estimates.len(), track.estimates.len());
+    for (s, t) in stream.outcome.estimates.iter().zip(&track.estimates) {
+        assert!((s.0 - t.0).abs() < 1e-12 && (s.1 - t.1).abs() < 1e-12, "{s:?} vs {t:?}");
+    }
+    assert!(!stream.outcome.diverged);
+}
+
+#[test]
+fn bearing_stream_runs_hot_on_one_compiled_program() {
+    let p = BearingProblem::synthetic(5, 4, 1e-3, 7);
+    let mut sim = Session::fgp_sim(FgpConfig::default());
+    let stream = sim.run_stream(&p.stream(&FirstOrder)).unwrap();
+    assert_eq!(stream.samples, 5);
+    // the sweep shape is fixed: one compile for the whole track
+    assert_eq!(stream.compiles, 1);
+    assert_eq!(stream.cache_hits, 0);
+    assert!(!stream.outcome.diverged);
+    assert!(stream.outcome.rmse < 0.15, "device stream rmse {}", stream.outcome.rmse);
+    // identical to per-step tracking with one relinearization round
+    let track = p.track(&mut Session::fgp_sim(FgpConfig::default()), &FirstOrder, 1).unwrap();
+    for (s, t) in stream.outcome.estimates.iter().zip(&track.estimates) {
+        assert!((s.0 - t.0).abs() < 1e-12 && (s.1 - t.1).abs() < 1e-12, "{s:?} vs {t:?}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// tail padding (the XLA chain-artifact contract)
+// ---------------------------------------------------------------------
+
+#[test]
+fn a_zero_section_is_an_identity_update() {
+    // the pad the XLA stream path relies on: A = 0 zeroes the gain, so
+    // a padded section returns the prior untouched
+    let mut rng = Rng::new(5);
+    let x = GaussMessage::new(
+        (0..4).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+        CMatrix::random_psd(&mut rng, 4, 1.0).scale(0.15),
+    );
+    let y = GaussMessage::new(vec![c64::ZERO; 4], CMatrix::scaled_identity(4, 0.01));
+    let zero = CMatrix::zeros(4, 4);
+    for faddeev in [false, true] {
+        let out = nodes::compound_observation(&x, &y, &zero, faddeev).unwrap();
+        assert!(out.dist(&x) < 1e-12, "faddeev={faddeev}: dist {}", out.dist(&x));
+    }
+}
+
+#[test]
+fn padded_chunk_equals_unpadded_tail_on_golden() {
+    let p = RlsProblem::synthetic(4, 2, 0.01, 11);
+    // a 4-sample binder fed 2 real samples + 2 identity pads must yield
+    // the same posterior as folding just the 2 real samples
+    let mut binder = StreamBinder::build(&p, 4).unwrap();
+    assert!(binder.paddable());
+    let real: Vec<_> = (0..2)
+        .map(|k| p.next_sample(k, &p.prior).unwrap().unwrap())
+        .collect();
+    let pad = binder.pad_sample(&real[1]);
+    let batch = [real[0].clone(), real[1].clone(), pad.clone(), pad];
+    binder.bind(&p.initial_state(), &batch).unwrap();
+    let d = Session::golden()
+        .dispatch(&binder.graph, &binder.schedule, &binder.inputs, &Default::default())
+        .unwrap();
+    let padded_out = d.exec.output().unwrap().clone();
+
+    let mut want = p.prior.clone();
+    for k in 0..2 {
+        want = nodes::compound_observation(&want, &p.observations[k], &p.regressors[k], false)
+            .unwrap();
+    }
+    assert!(padded_out.dist(&want) < 1e-12, "dist {}", padded_out.dist(&want));
+}
+
+// ---------------------------------------------------------------------
+// farm streams: sticky routing + concurrent identity
+// ---------------------------------------------------------------------
+
+#[test]
+fn farm_stream_is_identical_to_a_session_stream() {
+    let p = RlsProblem::synthetic(4, 70, 0.01, 17);
+    let reference = Session::fgp_sim(FgpConfig::default()).run_stream(&p).unwrap();
+    let farm = FgpFarm::start(1, FgpConfig::default(), RoutePolicy::RoundRobin).unwrap();
+    let stream = farm.open_stream(&p).unwrap();
+    assert_eq!(stream.device(), 0);
+    let run = stream.run_to_end().unwrap();
+    assert_eq!(run.samples, 70);
+    assert_eq!(run.final_state.dist(&reference.final_state), 0.0);
+}
+
+#[test]
+fn two_concurrent_farm_streams_stay_sticky_and_identical() {
+    let p1 = RlsProblem::synthetic(4, 70, 0.01, 21);
+    let p2 = RlsProblem::synthetic(4, 66, 0.02, 22);
+    let solo1 = Session::fgp_sim(FgpConfig::default()).run_stream(&p1).unwrap();
+    let solo2 = Session::fgp_sim(FgpConfig::default()).run_stream(&p2).unwrap();
+
+    let farm = FgpFarm::start(2, FgpConfig::default(), RoutePolicy::RoundRobin).unwrap();
+    // open on the main thread: round-robin pins stream 1 -> device 0,
+    // stream 2 -> device 1
+    let s1 = farm.open_stream(&p1).unwrap();
+    let s2 = farm.open_stream(&p2).unwrap();
+    assert_ne!(s1.device(), s2.device());
+    let (r1, r2) = std::thread::scope(|scope| {
+        let h1 = scope.spawn(move || s1.run_to_end().unwrap());
+        let h2 = scope.spawn(move || s2.run_to_end().unwrap());
+        (h1.join().unwrap(), h2.join().unwrap())
+    });
+    // sharded serving must not change a single bit of either stream
+    assert_eq!(r1.final_state.dist(&solo1.final_state), 0.0);
+    assert_eq!(r2.final_state.dist(&solo2.final_state), 0.0);
+    let loads = farm.load_profile();
+    assert!(loads.iter().all(|c| *c > 0), "both devices must have served: {loads:?}");
+}
+
+// ---------------------------------------------------------------------
+// coalesced concurrent streams on the device backend
+// ---------------------------------------------------------------------
+
+#[test]
+fn coalescer_keeps_stream_identity_on_the_device_backend() {
+    let mut rng = Rng::new(31);
+    let msg = |rng: &mut Rng| {
+        GaussMessage::new(
+            (0..4).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+            CMatrix::random_psd(rng, 4, 1.0).scale(0.15),
+        )
+    };
+    let lens = [5usize, 3];
+    let mut streams = Vec::new();
+    let mut priors = Vec::new();
+    let mut samples = Vec::new();
+    for &len in &lens {
+        let prior = msg(&mut rng);
+        let mut s = CnStream::new(prior.clone());
+        let data: Vec<(GaussMessage, CMatrix)> = (0..len)
+            .map(|_| (msg(&mut rng), CMatrix::random(&mut rng, 4, 4).scale(0.3)))
+            .collect();
+        for (y, a) in &data {
+            s.push(y.clone(), a.clone());
+        }
+        streams.push(s);
+        priors.push(prior);
+        samples.push(data);
+    }
+    let mut coalesced = FgpSimBackend::new(FgpConfig::default()).unwrap();
+    let total = StreamCoalescer::drain(&mut coalesced, &mut streams).unwrap();
+    assert_eq!(total, 8);
+    // reference: each stream served alone on a fresh device
+    for (i, s) in streams.iter().enumerate() {
+        let mut solo = FgpSimBackend::new(FgpConfig::default()).unwrap();
+        let mut want = priors[i].clone();
+        for (y, a) in &samples[i] {
+            want = solo
+                .cn_update(&fgp_repro::coordinator::CnRequestData {
+                    x: want,
+                    y: y.clone(),
+                    a: a.clone(),
+                })
+                .unwrap();
+        }
+        assert_eq!(s.state.dist(&want), 0.0, "stream {i}");
+    }
+}
+
+#[test]
+fn coalescer_survives_streams_draining_at_different_times() {
+    // golden backend; the short stream drains first, later ticks run
+    // under-full ("tail") batches
+    let mut rng = Rng::new(41);
+    let msg = |rng: &mut Rng| {
+        GaussMessage::new(
+            (0..4).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+            CMatrix::random_psd(rng, 4, 1.0).scale(0.15),
+        )
+    };
+    let mut streams = [CnStream::new(msg(&mut rng)), CnStream::new(msg(&mut rng))];
+    for _ in 0..6 {
+        let y = msg(&mut rng);
+        streams[0].push(y, CMatrix::random(&mut rng, 4, 4).scale(0.3));
+    }
+    streams[1].push(msg(&mut rng), CMatrix::random(&mut rng, 4, 4).scale(0.3));
+    let mut backend = GoldenBackend;
+    assert_eq!(StreamCoalescer::tick(&mut backend, &mut streams).unwrap(), 2);
+    assert_eq!(StreamCoalescer::tick(&mut backend, &mut streams).unwrap(), 1);
+    assert_eq!(StreamCoalescer::drain(&mut backend, &mut streams).unwrap(), 4);
+    assert_eq!(streams[0].samples_done, 6);
+    assert_eq!(streams[1].samples_done, 1);
+}
+
+// ---------------------------------------------------------------------
+// XLA (artifacts-gated): fused chunking + batched tail padding
+// ---------------------------------------------------------------------
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.txt").exists()
+}
+
+#[test]
+fn xla_stream_pads_tail_chunks_through_the_chain_artifact() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    use fgp_repro::runtime::RuntimeClient;
+    let rt = RuntimeClient::load(artifacts_dir()).unwrap();
+    let sections = rt.manifest.sections;
+    // one full fused chunk + a 3-sample tail that must be padded with
+    // A = 0 identity sections up to the artifact's baked length
+    let p = RlsProblem::synthetic(rt.manifest.n, sections + 3, 0.01, 19);
+    let golden = Session::golden().run_stream(&p).unwrap();
+    let stream = Session::xla(rt).run_stream(&p).unwrap();
+    assert_eq!(stream.samples, (sections + 3) as u64);
+    assert_eq!(stream.chunks, 2);
+    let d = vec_dist(&stream.outcome.h_hat, &golden.outcome.h_hat);
+    assert!(d < 1e-2, "xla stream vs golden dist {d}");
+}
+
+#[test]
+fn cn_update_batched_tail_padding_is_lossless() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    use fgp_repro::runtime::RuntimeClient;
+    let rt = RuntimeClient::load(artifacts_dir()).unwrap();
+    let n = rt.manifest.n;
+    let batch = rt.manifest.batch;
+    let mut rng = Rng::new(23);
+    let msg = |rng: &mut Rng| {
+        GaussMessage::new(
+            (0..n).map(|_| c64::new(rng.normal(), rng.normal())).collect(),
+            CMatrix::random_psd(rng, n, 0.3),
+        )
+    };
+    // the most under-full tail batch (1 request) and a nearly-full one
+    for len in [1usize, batch - 1] {
+        let reqs: Vec<(GaussMessage, GaussMessage, CMatrix)> = (0..len)
+            .map(|_| (msg(&mut rng), msg(&mut rng), CMatrix::random(&mut rng, n, n)))
+            .collect();
+        let out = rt.cn_update_batched(&reqs).unwrap();
+        assert_eq!(out.len(), len);
+        for (i, (x, y, a)) in reqs.iter().enumerate() {
+            let single = rt.cn_update(x, y, a).unwrap();
+            let d = out[i].dist(&single);
+            assert!(d < 1e-4 * (1.0 + single.cov.max_abs()), "len {len}, req {i}: dist {d}");
+        }
+    }
+}

@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Validate a BENCH_*.json trajectory against its checked-in schema.
+
+Dependency-free (no jsonschema wheel in CI): implements the subset of
+JSON Schema the schemas in scripts/ use — type, required, properties,
+items, minItems, enum, minimum, exclusiveMinimum — plus the custom
+``x-contains-engines`` key: every listed name must appear as the
+``engine`` field of some element of the array under validation.
+
+Usage: validate_bench.py <data.json> <schema.json>
+"""
+
+import json
+import sys
+
+TYPES = {
+    "object": dict,
+    "array": list,
+    "string": str,
+    "boolean": bool,
+    # bool is an int subclass in Python; excluded explicitly below
+    "integer": int,
+    "number": (int, float),
+}
+
+
+class ValidationError(Exception):
+    pass
+
+
+def check(data, schema, path="$"):
+    t = schema.get("type")
+    if t is not None:
+        expected = TYPES[t]
+        ok = isinstance(data, expected) and not (
+            t in ("integer", "number") and isinstance(data, bool)
+        )
+        if t == "integer" and isinstance(data, float):
+            ok = data.is_integer()
+        if not ok:
+            raise ValidationError(f"{path}: expected {t}, got {type(data).__name__}")
+
+    if "enum" in schema and data not in schema["enum"]:
+        raise ValidationError(f"{path}: {data!r} not in {schema['enum']}")
+
+    if isinstance(data, (int, float)) and not isinstance(data, bool):
+        if "minimum" in schema and data < schema["minimum"]:
+            raise ValidationError(f"{path}: {data} < minimum {schema['minimum']}")
+        if "exclusiveMinimum" in schema and data <= schema["exclusiveMinimum"]:
+            raise ValidationError(
+                f"{path}: {data} <= exclusiveMinimum {schema['exclusiveMinimum']}"
+            )
+
+    if isinstance(data, dict):
+        for key in schema.get("required", []):
+            if key not in data:
+                raise ValidationError(f"{path}: missing required key {key!r}")
+        for key, sub in schema.get("properties", {}).items():
+            if key in data:
+                check(data[key], sub, f"{path}.{key}")
+
+    if isinstance(data, list):
+        if "minItems" in schema and len(data) < schema["minItems"]:
+            raise ValidationError(
+                f"{path}: {len(data)} items < minItems {schema['minItems']}"
+            )
+        if "items" in schema:
+            for i, item in enumerate(data):
+                check(item, schema["items"], f"{path}[{i}]")
+        for name in schema.get("x-contains-engines", []):
+            if not any(
+                isinstance(item, dict) and item.get("engine") == name for item in data
+            ):
+                raise ValidationError(f"{path}: no element with engine == {name!r}")
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(__doc__)
+    data_path, schema_path = sys.argv[1], sys.argv[2]
+    with open(data_path) as f:
+        data = json.load(f)
+    with open(schema_path) as f:
+        schema = json.load(f)
+    try:
+        check(data, schema)
+    except ValidationError as e:
+        print(f"FAIL {data_path}: {e}", file=sys.stderr)
+        sys.exit(1)
+    print(f"OK {data_path} conforms to {schema_path}")
+
+
+if __name__ == "__main__":
+    main()
