@@ -1,0 +1,146 @@
+//! E15 (extension) — EM parameter estimation: accuracy and cost.
+//!
+//! Three axes:
+//!   1. accuracy: EM-recovered observation-noise variance vs the
+//!      synthetic truth on the RLS fixture, and the adaptive channel
+//!      estimate's rel MSE vs the known-parameter baseline;
+//!   2. rounds-to-converge: batch EM (obs noise, starting 10x and 0.1x
+//!      off) and adaptive-Kalman process noise (filtered/lag-one EM —
+//!      slower near the fixed point, by design streamable);
+//!   3. device cost: EM rounds on the cycle-accurate FGP, with the
+//!      program-cache contract (one compile for all rounds) as a hard
+//!      gate, plus online EM riding the steady-state stream.
+//!
+//! Run: `cargo bench --bench em_convergence`
+//! CI smoke (small fixture, few rounds): add `-- --smoke`.
+
+use std::time::Instant;
+
+use fgp_repro::apps::kalman::{AdaptiveKalman, KalmanProblem};
+use fgp_repro::apps::rls::{NoiseEmRls, RlsProblem};
+use fgp_repro::benchutil::{banner, fmt_dur};
+use fgp_repro::em::{EmDriver, EmOptions, OnlineEm};
+use fgp_repro::engine::Session;
+use fgp_repro::fgp::FgpConfig;
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (sections, kalman_steps, kalman_rounds) =
+        if smoke { (32, 24, 6) } else { (256, 240, 150) };
+    let true_sigma2 = 0.01;
+    let true_q = 2e-3;
+
+    banner("RLS observation noise: EM vs known parameter (golden)");
+    let p = RlsProblem::synthetic(4, sections, true_sigma2, 17);
+    let known = Session::golden().run(&p)?;
+    println!(
+        "{:>8} {:>12} {:>10} {:>12} {:>12} {:>10}",
+        "start", "sigma2_hat", "rel err", "rounds", "rel MSE", "wall"
+    );
+    println!(
+        "{:>8} {:>12} {:>10} {:>12} {:>12.6} {:>10}",
+        "known", "-", "-", "-", known.outcome.rel_mse, "-"
+    );
+    for mult in [10.0, 0.1] {
+        let mut em = NoiseEmRls::new(p.clone(), true_sigma2 * mult);
+        let t0 = Instant::now();
+        let report = EmDriver::new().run(&mut Session::golden(), &mut em)?;
+        let rel = (report.values[0] - true_sigma2).abs() / true_sigma2;
+        println!(
+            "{:>8} {:>12.6} {:>10.4} {:>12} {:>12.6} {:>10}",
+            format!("{mult}x"),
+            report.values[0],
+            rel,
+            report.rounds,
+            em.outcome()?.rel_mse,
+            fmt_dur(t0.elapsed())
+        );
+        if !report.log_likelihood.windows(2).all(|w| w[1] >= w[0] - 1e-7 * w[0].abs()) {
+            anyhow::bail!("log-likelihood decreased across EM rounds");
+        }
+        if !smoke && rel > 0.05 {
+            anyhow::bail!("EM noise recovery left the 5% regime: rel err {rel}");
+        }
+        if smoke && rel > 0.5 {
+            anyhow::bail!("smoke EM noise recovery diverged: rel err {rel}");
+        }
+    }
+
+    banner("Kalman process noise: filtered/lag-one EM (golden)");
+    let kp = KalmanProblem::synthetic(kalman_steps, 9);
+    let mut em = AdaptiveKalman::new(kp, true_q * 10.0);
+    let driver = EmDriver::with_options(EmOptions {
+        max_rounds: kalman_rounds,
+        tol: 1e-3,
+        divergence: 1e6,
+    });
+    let t0 = Instant::now();
+    let report = driver.run(&mut Session::golden(), &mut em)?;
+    let ratio = report.values[0] / true_q;
+    println!(
+        "q_hat {:.3e} (true {true_q:.1e}) | ratio {ratio:.2} | rounds {} | stop {:?} | wall {}",
+        report.values[0],
+        report.rounds,
+        report.stop,
+        fmt_dur(t0.elapsed())
+    );
+    // lag-one EM converges slowly on short series: the accuracy gate is
+    // only meaningful at the full fixture size
+    if !smoke && !(0.2..=5.0).contains(&ratio) {
+        anyhow::bail!("adaptive process noise left the truth's regime: ratio {ratio}");
+    }
+    if !ratio.is_finite() || ratio > 12.0 {
+        anyhow::bail!("adaptive process noise diverged: ratio {ratio}");
+    }
+
+    banner("device cost (cycle-accurate FGP) + cache contract");
+    let mut sim = Session::fgp_sim(FgpConfig::default());
+    let mut em = NoiseEmRls::new(p.clone(), true_sigma2 * 10.0);
+    let rounds = if smoke { 4 } else { 8 };
+    let t0 = Instant::now();
+    let report = EmDriver::with_options(EmOptions {
+        max_rounds: rounds,
+        tol: 0.0,
+        divergence: 1e9,
+    })
+    .run(&mut sim, &mut em)?;
+    let stats = sim.cache_stats();
+    println!(
+        "rounds {} | sigma2_hat {:.6} | cache {} miss / {} hits | wall {}",
+        report.rounds,
+        report.values[0],
+        stats.misses,
+        stats.hits,
+        fmt_dur(t0.elapsed())
+    );
+    if stats.misses != 1 {
+        anyhow::bail!(
+            "expected one compile for all EM rounds (fixed chain shape), got {} misses",
+            stats.misses
+        );
+    }
+    if report.cached[1..].iter().any(|c| !*c) {
+        anyhow::bail!("an EM round after the first missed the program cache");
+    }
+
+    banner("online EM riding the steady-state stream (fgp-sim)");
+    let stream_p = RlsProblem::synthetic(4, if smoke { 128 } else { 512 }, true_sigma2, 1);
+    let online = OnlineEm::new(stream_p, true_sigma2 * 10.0);
+    let t0 = Instant::now();
+    let sr = Session::fgp_sim(FgpConfig::default()).run_stream(&online)?;
+    let rel = (sr.outcome.sigma2 - true_sigma2).abs() / true_sigma2;
+    println!(
+        "samples {} | chunk {} | sigma2_hat {:.6} (rel err {rel:.3}) | compiles {} | wall {}",
+        sr.samples,
+        sr.chunk,
+        sr.outcome.sigma2,
+        sr.compiles,
+        fmt_dur(t0.elapsed())
+    );
+    if !rel.is_finite() || rel > 1.0 {
+        anyhow::bail!("online EM estimate diverged: rel err {rel}");
+    }
+
+    println!("\nem_convergence OK");
+    Ok(())
+}

@@ -40,6 +40,7 @@ pub struct BearingProblem {
     pub truth: Vec<[f64; 4]>,
     /// Measured bearings, `[step][sensor]` (radians).
     pub bearings: Vec<Vec<f64>>,
+    /// Track length in samples.
     pub steps: usize,
     /// Bearing noise variance (rad²).
     pub noise_var: f64,
@@ -50,6 +51,7 @@ pub struct BearingProblem {
     /// default by [`BearingProblem::synthetic`]; lower it for
     /// pure-golden noise-sweep studies.
     pub obs_var_floor: f64,
+    /// Sample interval (seconds) of the constant-velocity model.
     pub dt: f64,
 }
 
@@ -280,7 +282,9 @@ impl BearingProblem {
 /// every sample — the sweep *shape* is still fixed, so the whole track
 /// runs on one compiled program.
 pub struct BearingStream<'a> {
+    /// The tracking problem being streamed.
     pub problem: &'a BearingProblem,
+    /// Linearizer used for the per-sample relinearization.
     pub linearizer: &'a dyn Linearizer,
 }
 

@@ -52,6 +52,7 @@ impl Constellation {
         }
     }
 
+    /// Draw one symbol uniformly from the constellation.
     pub fn draw(&self, rng: &mut Rng) -> c64 {
         let pts = self.points();
         pts[rng.below(pts.len())]
@@ -73,6 +74,7 @@ impl Constellation {
 /// A static frequency-selective channel: `taps` complex coefficients.
 #[derive(Clone, Debug)]
 pub struct MultipathChannel {
+    /// Complex tap coefficients, delay order.
     pub taps: Vec<c64>,
 }
 
@@ -85,6 +87,7 @@ impl MultipathChannel {
         MultipathChannel { taps: coeffs }
     }
 
+    /// Number of taps (channel memory).
     pub fn order(&self) -> usize {
         self.taps.len()
     }

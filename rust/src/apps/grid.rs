@@ -22,7 +22,9 @@ use crate::testutil::Rng;
 /// A grid denoising problem (field in component 0 of an n-dim state).
 #[derive(Clone, Debug)]
 pub struct GridDenoise {
+    /// Grid rows.
     pub rows: usize,
+    /// Grid columns.
     pub cols: usize,
     /// State dimension (4 = the device size).
     pub n: usize,
@@ -42,6 +44,7 @@ pub struct GridDenoise {
 /// Denoising outcome.
 #[derive(Clone, Debug)]
 pub struct GridOutcome {
+    /// The underlying GBP solve report (iterations, stop reason).
     pub report: GbpReport,
     /// Posterior field estimate, row-major.
     pub estimate: Vec<f64>,

@@ -11,11 +11,13 @@
 
 use std::collections::HashMap;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::compiler::{compile, CompileOptions, CompiledProgram};
+use crate::em::{EmEstimand, EmParameter, Evidence, ProcessNoiseVar, SuffStats};
 use crate::engine::{
-    bind_streamed, preload_id, Execution, StreamRun, StreamSample, StreamingWorkload, Workload,
+    bind_streamed, preload_id, Execution, Session, StreamRun, StreamSample, StreamingWorkload,
+    Workload,
 };
 use crate::gmp::matrix::{c64, CMatrix};
 use crate::gmp::message::GaussMessage;
@@ -25,6 +27,7 @@ use crate::testutil::Rng;
 /// A synthetic constant-velocity tracking problem.
 #[derive(Clone, Debug)]
 pub struct KalmanProblem {
+    /// Track length in time steps.
     pub steps: usize,
     /// Transition matrix (4x4).
     pub a: CMatrix,
@@ -38,18 +41,21 @@ pub struct KalmanProblem {
     pub truth: Vec<Vec<c64>>,
     /// Observation messages per step.
     pub observations: Vec<GaussMessage>,
+    /// Prior on the initial state.
     pub prior: GaussMessage,
 }
 
 /// Tracking outcome.
 #[derive(Clone, Debug)]
 pub struct KalmanOutcome {
+    /// Final filtered state estimate.
     pub estimate: Vec<c64>,
     /// Final position error (Euclidean).
     pub pos_error: f64,
 }
 
 impl KalmanProblem {
+    /// Generate a random constant-velocity tracking instance.
     pub fn synthetic(steps: usize, seed: u64) -> Self {
         let mut rng = Rng::new(seed);
         let dt = 0.1;
@@ -133,6 +139,14 @@ impl KalmanProblem {
         let (g, s) = self.build_graph();
         Ok(compile(&g, &s, &CompileOptions::default())?)
     }
+
+    /// Score a final state estimate against the trajectory's last true
+    /// state (the one error metric every execution path reports).
+    pub fn score(&self, estimate: Vec<c64>) -> KalmanOutcome {
+        let t = self.truth.last().expect("non-empty trajectory");
+        let dx = (estimate[0] - t[0]).abs2() + (estimate[2] - t[2]).abs2();
+        KalmanOutcome { estimate, pos_error: dx.sqrt() }
+    }
 }
 
 impl Workload for KalmanProblem {
@@ -163,10 +177,7 @@ impl Workload for KalmanProblem {
     }
 
     fn outcome(&self, exec: &Execution) -> Result<KalmanOutcome> {
-        let estimate = exec.output()?.mean.clone();
-        let t = self.truth.last().expect("non-empty trajectory");
-        let dx = (estimate[0] - t[0]).abs2() + (estimate[2] - t[2]).abs2();
-        Ok(KalmanOutcome { estimate, pos_error: dx.sqrt() })
+        Ok(self.score(exec.output()?.mean.clone()))
     }
 
     fn quality(&self, outcome: &KalmanOutcome) -> f64 {
@@ -214,16 +225,174 @@ impl StreamingWorkload for KalmanProblem {
     }
 
     fn stream_outcome(&self, run: &StreamRun) -> Result<KalmanOutcome> {
-        let estimate = run.final_state.mean.clone();
-        let t = self.truth.last().expect("non-empty trajectory");
-        let dx = (estimate[0] - t[0]).abs2() + (estimate[2] - t[2]).abs2();
-        Ok(KalmanOutcome { estimate, pos_error: dx.sqrt() })
+        Ok(self.score(run.final_state.mean.clone()))
+    }
+}
+
+// ---------------------------------------------------------------------
+// EM: adaptive process noise
+// ---------------------------------------------------------------------
+
+/// Per-sample streamed view of the filter at an explicit process-noise
+/// variance: `max_chunk == 1` forces one dispatch per sample on every
+/// engine, so each stream boundary is a **filtered marginal** — the
+/// evidence stream the adaptive-noise E-step consumes.
+struct PerSampleFilter<'p> {
+    problem: &'p KalmanProblem,
+    q: f64,
+}
+
+impl StreamingWorkload for PerSampleFilter<'_> {
+    type StreamOutcome = Vec<GaussMessage>;
+
+    fn stream_name(&self) -> &str {
+        "kalman_em_estep"
+    }
+
+    fn state_dim(&self) -> usize {
+        4
+    }
+
+    fn stream_model(&self, chunk: usize) -> Result<(FactorGraph, Schedule)> {
+        self.problem.stream_model(chunk)
+    }
+
+    fn constant_inputs(&self) -> Vec<(String, GaussMessage)> {
+        vec![("msg_Q".to_string(), GaussMessage::isotropic(4, self.q))]
+    }
+
+    fn initial_state(&self) -> GaussMessage {
+        self.problem.prior.clone()
+    }
+
+    fn next_sample(&self, k: usize, state: &GaussMessage) -> Result<Option<StreamSample>> {
+        self.problem.next_sample(k, state)
+    }
+
+    fn max_chunk(&self) -> usize {
+        1
+    }
+
+    fn stream_outcome(&self, run: &StreamRun) -> Result<Vec<GaussMessage>> {
+        Ok(run.boundaries.clone())
+    }
+}
+
+/// Constant-velocity tracking with **unknown** process-noise variance,
+/// estimated by EM ([`crate::em`]).
+///
+/// Each round streams the filter at the current estimate through the
+/// session (one fixed chunk shape — rounds after the first are
+/// program-cache hits), then runs a lag-one host recursion over the
+/// engine-produced filtered marginals: the posterior of each step's
+/// noise input `w_t` given `y_{1:t+1}` is closed-form from the filtered
+/// state, the model matrices and the next innovation, and is exactly
+/// the [`Evidence::Noise`] marginal Dauwels' variance rule consumes.
+/// Filtered (rather than smoothed) marginals keep the E-step streamable
+/// at the cost of slower convergence near the fixed point — see the
+/// `em_convergence` bench (E15) for the trajectory.
+pub struct AdaptiveKalman {
+    /// The underlying tracking problem; its `q_msg` (the true synthetic
+    /// process noise) is never read by the estimator.
+    pub problem: KalmanProblem,
+    q: ProcessNoiseVar,
+}
+
+impl AdaptiveKalman {
+    /// Estimate the process noise of `problem` starting from `q0`.
+    pub fn new(problem: KalmanProblem, q0: f64) -> Self {
+        AdaptiveKalman { problem, q: ProcessNoiseVar::new(q0) }
+    }
+
+    /// Current process-noise estimate.
+    pub fn q_hat(&self) -> f64 {
+        self.q.value()
+    }
+
+    /// Run the filter at the current estimate and score the track.
+    pub fn outcome(&self, session: &mut Session) -> Result<KalmanOutcome> {
+        let w = PerSampleFilter { problem: &self.problem, q: self.q.value() };
+        let report = session.run_stream(&w)?;
+        Ok(self.problem.score(report.final_state.mean.clone()))
+    }
+}
+
+impl EmEstimand for AdaptiveKalman {
+    fn values(&self) -> Vec<f64> {
+        vec![self.q.value()]
+    }
+
+    fn e_step(&mut self, session: &mut Session, acc: &mut [SuffStats]) -> Result<bool> {
+        let n = 4;
+        let q = self.q.value();
+        let w = PerSampleFilter { problem: &self.problem, q };
+        let report = session.run_stream(&w).context("EM E-step filter stream")?;
+        let boundaries = report.outcome; // filtered marginals, one per sample
+        if boundaries.len() != self.problem.observations.len() {
+            anyhow::bail!(
+                "stream produced {} boundaries for {} observations",
+                boundaries.len(),
+                self.problem.observations.len()
+            );
+        }
+        let a = &self.problem.a;
+        let c = &self.problem.c;
+        let r = CMatrix::scaled_identity(n, self.problem.r_var);
+        let qi = CMatrix::scaled_identity(n, q);
+        let mut prev = self.problem.prior.clone();
+        // the previous step's noise marginal, pending its lag-one
+        // finalization: (mean, cov, Cov(x_t, w_t | y_1:t))
+        let mut pend: Option<(Vec<c64>, CMatrix, CMatrix)> = None;
+        for (t, y) in self.problem.observations.iter().enumerate() {
+            let mp = a.matvec(&prev.mean);
+            let vp = a.matmul(&prev.cov).matmul(&a.hermitian()).add(&qi);
+            let s = c.matmul(&vp).matmul(&c.hermitian()).add(&r);
+            let sinv = s.inverse().context("innovation covariance singular")?;
+            let cmp = c.matvec(&mp);
+            let nu: Vec<c64> = y.mean.iter().zip(&cmp).map(|(yo, po)| *yo - *po).collect();
+            if let Some((w_mean, w_cov, p_xw)) = pend.take() {
+                // finalize w_{t-1} with this innovation:
+                // Cov(w_{t-1}, y_t) = P_xwᴴ Aᴴ Cᴴ
+                let g = p_xw
+                    .hermitian()
+                    .matmul(&a.hermitian())
+                    .matmul(&c.hermitian())
+                    .matmul(&sinv);
+                let corr = g.matvec(&nu);
+                let mean: Vec<c64> =
+                    w_mean.iter().zip(&corr).map(|(m, d)| *m + *d).collect();
+                let cov = w_cov.sub(&g.matmul(&c.matmul(a).matmul(&p_xw)));
+                let marginal = GaussMessage::new(mean, cov);
+                self.q.accumulate(&Evidence::Noise { marginal: &marginal }, &mut acc[0])?;
+            }
+            // this step's noise conditioned on its own observation:
+            // Cov(w_t, y_t) = q Cᴴ
+            let kw = qi.matmul(&c.hermitian()).matmul(&sinv);
+            let w_mean = kw.matvec(&nu);
+            let w_cov = qi.sub(&kw.matmul(&c.matmul(&qi)));
+            // Cov(x_t, w_t | y_1:t) = (I − K C) q, K = V⁻ Cᴴ S⁻¹
+            let k = vp.matmul(&c.hermitian()).matmul(&sinv);
+            let p_xw = CMatrix::identity(n).sub(&k.matmul(c)).scale(q);
+            pend = Some((w_mean, w_cov, p_xw));
+            prev = boundaries[t].clone();
+        }
+        // the last step's noise only ever sees its own observation
+        if let Some((w_mean, w_cov, _)) = pend {
+            let marginal = GaussMessage::new(w_mean, w_cov);
+            self.q.accumulate(&Evidence::Noise { marginal: &marginal }, &mut acc[0])?;
+        }
+        Ok(report.cache_hits > 0 && report.compiles == 0)
+    }
+
+    fn m_step(&mut self, acc: &[SuffStats]) -> Result<Vec<f64>> {
+        Ok(vec![self.q.m_step(&acc[0])?])
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::em::{EmDriver, EmOptions};
     use crate::engine::Session;
     use crate::fgp::FgpConfig;
 
@@ -256,6 +425,29 @@ mod tests {
         assert!(fgp.cycles > 0);
         // three store handshakes per time step
         assert_eq!(fgp.sections, 3 * 20);
+    }
+
+    #[test]
+    fn adaptive_process_noise_recovers_regime() {
+        // truth q = 2e-3 (synthetic fixture); estimate starts 10x off
+        let q_true = 2e-3;
+        let p = KalmanProblem::synthetic(240, 9);
+        let mut em = AdaptiveKalman::new(p, q_true * 10.0);
+        let driver = EmDriver::with_options(EmOptions {
+            max_rounds: 50,
+            tol: 1e-4,
+            divergence: 1e6,
+        });
+        let report = driver.run(&mut Session::golden(), &mut em).unwrap();
+        let q_hat = report.values[0];
+        assert!(
+            q_hat > q_true * 0.4 && q_hat < q_true * 3.0,
+            "q_hat {q_hat} left the truth's regime ({} rounds)",
+            report.rounds
+        );
+        // at least 5x closer than the starting guess
+        assert!((q_hat - q_true).abs() < q_true * 9.0 / 5.0, "q_hat {q_hat}");
+        assert!((em.q_hat() - q_hat).abs() < 1e-18);
     }
 
     #[test]

@@ -23,9 +23,13 @@ use super::channel::{Constellation, MultipathChannel};
 /// A block-equalization problem.
 #[derive(Clone, Debug)]
 pub struct LmmseProblem {
+    /// Block size (device dimension).
     pub n: usize,
+    /// Constellation the payload is drawn from.
     pub constellation: Constellation,
+    /// The frequency-selective channel.
     pub channel: MultipathChannel,
+    /// AWGN variance at the receiver.
     pub noise_var: f64,
     /// Transmitted symbols (ground truth).
     pub tx: Vec<c64>,
@@ -36,13 +40,18 @@ pub struct LmmseProblem {
 /// Equalization outcome.
 #[derive(Clone, Debug)]
 pub struct LmmseOutcome {
+    /// Soft symbol estimates (posterior means).
     pub estimate: Vec<c64>,
+    /// Hard decisions (nearest constellation point).
     pub decisions: Vec<c64>,
+    /// Hard-decision errors against the transmitted block.
     pub symbol_errors: usize,
+    /// Relative MSE of the soft estimates vs the sent symbols.
     pub rel_mse: f64,
 }
 
 impl LmmseProblem {
+    /// Generate a random equalization instance.
     pub fn synthetic(n: usize, noise_var: f64, seed: u64) -> Self {
         let mut rng = Rng::new(seed);
         // dominant first tap keeps the block well conditioned at n=4

@@ -43,6 +43,7 @@ pub struct PoseChain {
 /// Estimation outcome.
 #[derive(Clone, Debug)]
 pub struct PoseOutcome {
+    /// The underlying GBP solve report (iterations, stop reason).
     pub report: GbpReport,
     /// Estimated positions.
     pub estimate: Vec<c64>,

@@ -27,6 +27,7 @@ use crate::testutil::Rng;
 /// A pose loop with linear odometry and nonlinear per-leg ranges.
 #[derive(Clone, Debug)]
 pub struct RangeChain {
+    /// Number of poses in the loop.
     pub poses: usize,
     /// State dimension (4 = the device size).
     pub n: usize,
@@ -37,7 +38,9 @@ pub struct RangeChain {
     pub odo: Vec<(f64, f64)>,
     /// Measured leg ranges `|p_{k+1} − p_k| + noise`, same indexing.
     pub ranges: Vec<f64>,
+    /// Odometry noise variance.
     pub odo_var: f64,
+    /// Range measurement noise variance.
     pub range_var: f64,
     /// Anchor prior variance on pose 0.
     pub anchor_var: f64,
@@ -48,6 +51,7 @@ pub struct RangeChain {
 /// Estimation outcome.
 #[derive(Clone, Debug)]
 pub struct RangeOutcome {
+    /// The underlying GBP solve report (iterations, stop reason).
     pub report: GbpReport,
     /// Estimated positions.
     pub estimate: Vec<(f64, f64)>,

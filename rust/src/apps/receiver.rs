@@ -39,19 +39,28 @@ use super::channel::{regressor_matrix, Constellation, MultipathChannel};
 /// A frame: training preamble + payload symbols through one channel.
 #[derive(Clone, Debug)]
 pub struct Frame {
+    /// Transmitted training symbols (known to the receiver).
     pub training: Vec<c64>,
+    /// Transmitted payload symbols (ground truth for SER).
     pub payload: Vec<c64>,
+    /// Received training symbols (channel + noise).
     pub rx_training: Vec<c64>,
+    /// Received payload symbols.
     pub rx_payload: Vec<c64>,
 }
 
 /// The receiver scenario: channel, noise, frames.
 #[derive(Clone, Debug)]
 pub struct ReceiverProblem {
+    /// Channel order / block size (device dimension).
     pub n: usize,
+    /// AWGN variance at the receiver.
     pub noise_var: f64,
+    /// The frequency-selective channel (hidden from the receiver).
     pub channel: MultipathChannel,
+    /// Frames to process.
     pub frames: Vec<Frame>,
+    /// Constellation of training and payload symbols.
     pub constellation: Constellation,
 }
 
@@ -86,14 +95,18 @@ pub struct ReceiverOutcome {
 /// Channel estimation over one frame's preamble.
 #[derive(Clone, Debug)]
 pub struct ReceiverTraining<'p> {
+    /// The receiver scenario.
     pub problem: &'p ReceiverProblem,
+    /// Which frame's preamble to train on.
     pub frame: usize,
 }
 
 /// Training outcome.
 #[derive(Clone, Debug)]
 pub struct TrainingOutcome {
+    /// Channel estimate after the preamble.
     pub h_hat: Vec<c64>,
+    /// MSE of the estimate against the true taps.
     pub channel_mse: f64,
 }
 
@@ -101,20 +114,27 @@ pub struct TrainingOutcome {
 /// channel matrix (estimated or genie).
 #[derive(Clone, Debug)]
 pub struct ReceiverEqualize<'p> {
+    /// The receiver scenario.
     pub problem: &'p ReceiverProblem,
+    /// Channel matrix the equalizer assumes (estimated or genie).
     pub h: CMatrix,
+    /// Received payload block.
     pub rx_block: Vec<c64>,
+    /// Transmitted payload block (ground truth for SER).
     pub tx_block: Vec<c64>,
 }
 
 /// Equalization outcome for one block.
 #[derive(Clone, Debug)]
 pub struct EqualizeOutcome {
+    /// Hard symbol decisions.
     pub decisions: Vec<c64>,
+    /// Decision errors against the transmitted block.
     pub symbol_errors: usize,
 }
 
 impl ReceiverProblem {
+    /// Generate a random multi-frame receiver scenario.
     pub fn synthetic(
         n: usize,
         frames: usize,

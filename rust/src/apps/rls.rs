@@ -12,8 +12,13 @@ use std::collections::HashMap;
 use anyhow::{Context, Result};
 
 use crate::compiler::{compile, CompileOptions, CompiledProgram};
+use crate::em::{
+    chain_log_likelihood, EmEstimand, EmParameter, Evidence, NoiseSection, ObsNoiseVar,
+    OnlineNoiseSource, OnlineSection, SuffStats,
+};
 use crate::engine::{
-    bind_streamed, preload_id, Execution, StreamRun, StreamSample, StreamingWorkload, Workload,
+    bind_streamed, preload_id, Execution, Session, StreamRun, StreamSample, StreamingWorkload,
+    Workload,
 };
 use crate::gmp::matrix::{c64, CMatrix};
 use crate::gmp::message::GaussMessage;
@@ -25,8 +30,11 @@ use super::channel::{regressor_matrix, Constellation, MultipathChannel};
 /// A synthetic channel-estimation problem instance.
 #[derive(Clone, Debug)]
 pub struct RlsProblem {
+    /// Channel order / state dimension.
     pub n: usize,
+    /// Training sections (one compound node each).
     pub sections: usize,
+    /// Observation-noise variance the data was synthesized at.
     pub sigma2: f64,
     /// True channel taps (ground truth for MSE).
     pub h_true: Vec<c64>,
@@ -80,6 +88,22 @@ impl RlsProblem {
         }
     }
 
+    /// The same instance with every observation message rebuilt at
+    /// noise variance `sigma2` — the adaptive/EM path re-runs the chain
+    /// at the current estimate. Only message *data* changes: the graph
+    /// shape is untouched, so re-runs stay program-cache hits.
+    pub fn with_noise(&self, sigma2: f64) -> RlsProblem {
+        let mut p = self.clone();
+        p.sigma2 = sigma2;
+        p.observations = self
+            .observations
+            .iter()
+            .map(|o| GaussMessage::observation(&o.mean, sigma2))
+            .collect();
+        p
+    }
+
+    /// Relative MSE of a channel estimate against the true taps.
     pub fn rel_mse(&self, h_hat: &[c64]) -> f64 {
         let num: f64 = self
             .h_true
@@ -191,9 +215,116 @@ impl StreamingWorkload for RlsProblem {
     }
 }
 
+// ---------------------------------------------------------------------
+// EM: unknown observation-noise variance (the paper's example, adaptive)
+// ---------------------------------------------------------------------
+
+/// The §IV channel-estimation example with **unknown** observation-noise
+/// variance, estimated by EM ([`crate::em`]): each round re-runs the
+/// same Fig. 6 chain with the observation covariances rebuilt at the
+/// current estimate (data only — rounds after the first are program-
+/// cache hits), reads the posterior channel marginal back from the
+/// engine, and commits the closed-form variance update.
+pub struct NoiseEmRls {
+    /// The underlying problem; `problem.sigma2` is the (hidden) truth
+    /// used to synthesize the data, never read by the estimator.
+    pub problem: RlsProblem,
+    noise: ObsNoiseVar,
+    posterior: Option<GaussMessage>,
+}
+
+impl NoiseEmRls {
+    /// Estimate the noise of `problem` starting from `sigma0`.
+    pub fn new(problem: RlsProblem, sigma0: f64) -> Self {
+        NoiseEmRls { problem, noise: ObsNoiseVar::new(sigma0), posterior: None }
+    }
+
+    /// Current noise-variance estimate.
+    pub fn sigma2(&self) -> f64 {
+        self.noise.value()
+    }
+
+    /// Posterior channel marginal from the most recent E-step run.
+    pub fn posterior(&self) -> Option<&GaussMessage> {
+        self.posterior.as_ref()
+    }
+
+    /// Channel estimate quality at the most recent posterior.
+    pub fn outcome(&self) -> Result<RlsOutcome> {
+        let post = self.posterior.as_ref().context("no E-step has run yet")?;
+        let h_hat = post.mean.clone();
+        Ok(RlsOutcome { rel_mse: self.problem.rel_mse(&h_hat), h_hat })
+    }
+}
+
+impl EmEstimand for NoiseEmRls {
+    fn values(&self) -> Vec<f64> {
+        vec![self.noise.value()]
+    }
+
+    fn e_step(&mut self, session: &mut Session, acc: &mut [SuffStats]) -> Result<bool> {
+        let w = self.problem.with_noise(self.noise.value());
+        let (graph, schedule) = w.model()?;
+        let inputs = w.inputs(&graph, &schedule)?;
+        let d = session
+            .dispatch(&graph, &schedule, &inputs, &w.compile_options())
+            .context("EM E-step chain run")?;
+        let post = d.exec.output()?.clone();
+        let observed = [0usize];
+        for (a, o) in self.problem.regressors.iter().zip(&self.problem.observations) {
+            self.noise.accumulate(
+                &Evidence::Observation { marginal: &post, a, y: &o.mean, observed: &observed },
+                &mut acc[0],
+            )?;
+        }
+        self.posterior = Some(post);
+        Ok(d.cached)
+    }
+
+    fn m_step(&mut self, acc: &[SuffStats]) -> Result<Vec<f64>> {
+        Ok(vec![self.noise.m_step(&acc[0])?])
+    }
+
+    fn log_likelihood(&self) -> Result<Option<f64>> {
+        let observed = [0usize];
+        chain_log_likelihood(
+            &self.problem.prior,
+            self.problem
+                .regressors
+                .iter()
+                .zip(&self.problem.observations)
+                .map(|(a, o)| NoiseSection { a, y: &o.mean, observed: &observed }),
+            self.noise.value(),
+        )
+        .map(Some)
+    }
+}
+
+/// Online EM source: the stream's observation messages can be rebuilt
+/// mid-flight at a fresh noise estimate ([`crate::em::OnlineEm`] wraps
+/// this and rides `Session::run_stream` / farm sticky streams
+/// unchanged).
+impl OnlineNoiseSource for RlsProblem {
+    fn sample_at(&self, k: usize, sigma2: f64) -> Result<Option<StreamSample>> {
+        Ok((k < self.sections).then(|| StreamSample {
+            messages: vec![GaussMessage::observation(&self.observations[k].mean, sigma2)],
+            states: vec![self.regressors[k].clone()],
+        }))
+    }
+
+    fn section(&self, k: usize) -> Option<OnlineSection> {
+        (k < self.sections).then(|| OnlineSection {
+            a: self.regressors[k].clone(),
+            y: self.observations[k].mean.clone(),
+            observed: vec![0],
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::em::{EmDriver, EmOptions, OnlineEm};
     use crate::engine::Session;
     use crate::fgp::FgpConfig;
 
@@ -254,5 +385,65 @@ mod tests {
         assert!(c.stats.slots_optimized < c.stats.slots_unoptimized);
         assert_eq!(c.stats.slots_optimized, 2);
         assert!(c.stats.looped.is_some());
+    }
+
+    #[test]
+    fn with_noise_rebuilds_covariances_only() {
+        let p = RlsProblem::synthetic(4, 8, 0.01, 3);
+        let q = p.with_noise(0.04);
+        assert_eq!(q.sigma2, 0.04);
+        for (a, b) in p.observations.iter().zip(&q.observations) {
+            assert_eq!(a.mean, b.mean);
+            assert!((b.cov[(0, 0)].re - 0.04).abs() < 1e-12);
+        }
+        // same graph shape: the EM rounds must stay cache hits
+        let (ga, sa) = p.build_graph();
+        let (gb, sb) = q.build_graph();
+        assert_eq!(ga.nodes.len(), gb.nodes.len());
+        assert_eq!(sa.steps.len(), sb.steps.len());
+    }
+
+    #[test]
+    fn em_noise_estimate_converges_to_truth() {
+        let p = RlsProblem::synthetic(4, 256, 0.01, 17);
+        let mut em = NoiseEmRls::new(p, 0.1); // start 10x off
+        let report = EmDriver::new().run(&mut Session::golden(), &mut em).unwrap();
+        assert!(report.converged(), "stop {:?}", report.stop);
+        let got = report.values[0];
+        assert!((got - 0.01).abs() / 0.01 < 0.05, "sigma2 {got}");
+        assert!((em.sigma2() - got).abs() < 1e-15);
+        // the channel estimate is still in the converged regime
+        assert!(em.outcome().unwrap().rel_mse < 0.05);
+        // exact EM: dense log-likelihood never decreases
+        for w in report.log_likelihood.windows(2) {
+            assert!(w[1] >= w[0] - 1e-7 * w[0].abs().max(1.0), "{:?}", report.log_likelihood);
+        }
+    }
+
+    #[test]
+    fn em_rounds_with_wrong_tol_report_max_rounds() {
+        let p = RlsProblem::synthetic(4, 16, 0.02, 5);
+        let mut em = NoiseEmRls::new(p, 0.2);
+        let driver = EmDriver::with_options(EmOptions {
+            max_rounds: 3,
+            tol: 0.0,
+            divergence: 1e9,
+        });
+        let report = driver.run(&mut Session::golden(), &mut em).unwrap();
+        assert_eq!(report.rounds, 3);
+        assert!(!report.converged());
+    }
+
+    #[test]
+    fn online_em_tracks_noise_on_golden_stream() {
+        let p = RlsProblem::synthetic(4, 512, 0.01, 1);
+        let em = OnlineEm::new(p, 0.1); // start 10x off
+        let report = Session::golden().run_stream(&em).unwrap();
+        assert_eq!(report.samples, 512);
+        let got = report.outcome.sigma2;
+        assert!((got - 0.01).abs() / 0.01 < 0.15, "online sigma2 {got}");
+        assert!((em.estimate() - got).abs() < 1e-15);
+        // the channel estimate still converges while the noise adapts
+        assert!(report.outcome.inner.rel_mse < 0.02, "rel mse {}", report.outcome.inner.rel_mse);
     }
 }

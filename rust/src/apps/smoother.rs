@@ -27,13 +27,21 @@ use crate::testutil::Rng;
 /// A linear-Gaussian state-space smoothing problem.
 #[derive(Clone, Debug)]
 pub struct SmootherProblem {
+    /// Trajectory length in time steps.
     pub steps: usize,
+    /// State-transition matrix.
     pub a: CMatrix,
+    /// Observation matrix.
     pub c: CMatrix,
+    /// Process-noise variance.
     pub q_var: f64,
+    /// Measurement-noise variance.
     pub r_var: f64,
+    /// Ground-truth states per step.
     pub truth: Vec<Vec<c64>>,
+    /// Observation messages per step.
     pub observations: Vec<GaussMessage>,
+    /// Prior on the initial state.
     pub prior: GaussMessage,
     /// Variance of the vague message entering the backward pass. The
     /// default 1e4 saturates to the Q5.10 rail (~16) on the device — both

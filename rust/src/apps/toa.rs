@@ -34,19 +34,23 @@ pub struct ToaProblem {
     pub target: (f64, f64),
     /// Measured ranges (true range + noise).
     pub ranges: Vec<f64>,
+    /// Range measurement noise variance.
     pub noise_var: f64,
 }
 
 /// Estimation outcome.
 #[derive(Clone, Debug)]
 pub struct ToaOutcome {
+    /// Estimated target position.
     pub estimate: (f64, f64),
+    /// Euclidean error against the true position.
     pub error: f64,
     /// Belief trace after each relinearization round.
     pub trace: Vec<(f64, f64)>,
 }
 
 impl ToaProblem {
+    /// Generate a random anchors-and-target instance.
     pub fn synthetic(num_anchors: usize, noise_var: f64, seed: u64) -> Self {
         let mut rng = Rng::new(seed);
         // anchors on the unit square's border, target inside

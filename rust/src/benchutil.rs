@@ -16,12 +16,15 @@ use std::time::{Duration, Instant};
 /// latency is a distribution, not a point).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct TimingStats {
+    /// Mean per-iteration wall time.
     pub mean: Duration,
     /// Median per-iteration wall time.
     pub p50: Duration,
     /// 95th-percentile per-iteration wall time.
     pub p95: Duration,
+    /// Total wall time across all iterations.
     pub total: Duration,
+    /// Iterations measured.
     pub iters: u32,
 }
 
@@ -181,6 +184,62 @@ mod tests {
         let one = vec![Duration::from_nanos(7)];
         assert_eq!(percentile(&one, 50), Duration::from_nanos(7));
         assert_eq!(percentile(&one, 95), Duration::from_nanos(7));
+    }
+
+    /// One sample: every percentile IS that sample — the nearest-rank
+    /// clamp must never index past either end.
+    #[test]
+    fn single_sample_pins_all_percentiles() {
+        let one = vec![Duration::from_micros(3)];
+        for p in [0, 1, 50, 95, 99, 100] {
+            assert_eq!(percentile(&one, p), Duration::from_micros(3), "p{p}");
+        }
+        let t = stats_from(one.clone(), Duration::from_micros(3));
+        assert_eq!(t.iters, 1);
+        assert_eq!(t.p50, Duration::from_micros(3));
+        assert_eq!(t.p95, Duration::from_micros(3));
+        assert_eq!(t.mean, Duration::from_micros(3));
+    }
+
+    /// Two samples: nearest-rank p50 is the LOWER sample (rank
+    /// ceil(2·50/100) = 1), p95 the upper (rank ceil(2·95/100) = 2) —
+    /// the indexing convention this module promises.
+    #[test]
+    fn two_samples_split_at_the_median_rank() {
+        let a = Duration::from_nanos(10);
+        let b = Duration::from_nanos(30);
+        // stats_from sorts, so insertion order must not matter
+        for samples in [vec![a, b], vec![b, a]] {
+            let t = stats_from(samples, a + b);
+            assert_eq!(t.p50, a, "p50 is the lower of two (nearest rank)");
+            assert_eq!(t.p95, b, "p95 is the upper of two");
+            assert_eq!(t.mean, Duration::from_nanos(20));
+            assert_eq!(t.iters, 2);
+        }
+    }
+
+    /// All-equal inputs: every statistic collapses to that value, at
+    /// any sample count.
+    #[test]
+    fn all_equal_samples_collapse_every_statistic() {
+        for count in [1usize, 2, 3, 97] {
+            let v = Duration::from_nanos(42);
+            let samples = vec![v; count];
+            let t = stats_from(samples, v * count as u32);
+            assert_eq!(t.p50, v, "count {count}");
+            assert_eq!(t.p95, v, "count {count}");
+            assert_eq!(t.mean, v, "count {count}");
+            assert_eq!(t.iters, count as u32);
+        }
+    }
+
+    /// p0 must clamp to the first sample, p100 to the last (the
+    /// `clamp(1, len)` in the nearest-rank formula).
+    #[test]
+    fn percentile_extremes_clamp_to_ends() {
+        let samples: Vec<Duration> = (1..=10).map(Duration::from_nanos).collect();
+        assert_eq!(percentile(&samples, 0), Duration::from_nanos(1));
+        assert_eq!(percentile(&samples, 100), Duration::from_nanos(10));
     }
 
     #[test]

@@ -39,6 +39,7 @@ pub enum ScorePolicy {
 pub struct AllocOptions {
     /// Apply the Fig. 7 optimization (false = identity mapping).
     pub optimize: bool,
+    /// Scoring policy for the slot-reuse heuristic.
     pub policy: ScorePolicy,
     /// Message-memory capacity in slots.
     pub capacity: usize,
@@ -74,10 +75,12 @@ pub struct MemoryMap {
 }
 
 impl MemoryMap {
+    /// Physical slot assigned to a virtual message, if resident.
     pub fn slot_of(&self, m: MsgId) -> Option<u8> {
         self.msg_to_slot.get(m.0).copied().flatten()
     }
 
+    /// Physical state-memory slot of a state matrix.
     pub fn state_slot_of(&self, s: StateId) -> u8 {
         self.state_to_slot[s.0]
     }

@@ -23,6 +23,7 @@ pub struct CompileOptions {
     pub optimize_memory: bool,
     /// Apply loop compression.
     pub compress_loops: bool,
+    /// Identifier-remapping (slot allocation) options.
     pub alloc: AllocOptions,
     /// PM capacity in instructions (64-bit words).
     pub pm_capacity: usize,
@@ -62,8 +63,11 @@ pub struct CompileStats {
 /// A compiled FGP program plus everything the host needs to run it.
 #[derive(Clone, Debug)]
 pub struct CompiledProgram {
+    /// The emitted instruction stream.
     pub program: Program,
+    /// The host's preload/stream/output contract.
     pub memmap: MemoryMap,
+    /// Compilation statistics (Fig. 7 reporting).
     pub stats: CompileStats,
     /// Number of state-memory slots the program expects (graph states
     /// plus the compiler's identity matrix if one was materialized).

@@ -22,9 +22,13 @@ pub enum VOperand {
 /// Lowered op (1:1 with datapath instructions plus `smm`).
 #[derive(Clone, Debug, PartialEq)]
 pub enum LowOp {
+    /// Matrix-multiply-accumulate into the array's StateReg planes.
     Mma { a: VOperand, a_herm: bool, b: VOperand, b_herm: bool, neg: bool, vec: bool },
+    /// Multiply + per-element add of `c` (the `G = V_Y + A t1` form).
     Mms { a: VOperand, a_herm: bool, b: VOperand, b_herm: bool, c: MsgId, neg: bool, vec: bool },
+    /// Faddeev elimination step producing the Schur complement.
     Fad { g: VOperand, b: VOperand, b_herm: bool, c: VOperand, d: MsgId },
+    /// Commit the array's StateReg planes to message slot `dst`.
     Smm { dst: MsgId },
 }
 
@@ -66,6 +70,7 @@ impl LowOp {
         }
     }
 
+    /// True for ops that occupy the datapath (everything but `smm`).
     pub fn is_datapath(&self) -> bool {
         !matches!(self, LowOp::Smm { .. })
     }

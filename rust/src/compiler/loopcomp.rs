@@ -13,6 +13,7 @@ use crate::isa::Instr;
 /// Result of compression.
 #[derive(Clone, Debug)]
 pub struct Compressed {
+    /// The (possibly loop-compressed) instruction stream.
     pub instrs: Vec<Instr>,
     /// (start, period, passes) of the loop found, if any.
     pub looped: Option<(usize, usize, usize)>,

@@ -41,6 +41,7 @@ use super::CompileError;
 /// table — lowering may append an identity matrix for add/equality nodes.
 #[derive(Clone, Debug)]
 pub struct Lowered {
+    /// Lowered ops in schedule order.
     pub ops: Vec<LowOp>,
     /// Index of the identity state matrix, if any node needed one.
     pub identity_state: Option<StateId>,

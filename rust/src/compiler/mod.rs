@@ -38,12 +38,16 @@ pub use ir::{LowOp, VOperand};
 /// Errors raised during compilation.
 #[derive(Debug, thiserror::Error, PartialEq)]
 pub enum CompileError {
+    /// The schedule needs more live message slots than the memory has.
     #[error("message memory exceeded: need {needed} slots, have {available}")]
     OutOfMemory { needed: usize, available: usize },
+    /// The graph carries more state matrices than state memory holds.
     #[error("state memory exceeded: need {needed} slots, have {available}")]
     OutOfStateMemory { needed: usize, available: usize },
+    /// A step consumed a message no earlier step produced.
     #[error("schedule step {step} uses message {msg} before it is defined")]
     UseBeforeDef { step: usize, msg: usize },
+    /// The emitted instruction stream exceeds program-memory capacity.
     #[error("program too long for PM: {len} instructions (max {max})")]
     ProgramTooLong { len: usize, max: usize },
 }

@@ -34,8 +34,11 @@ use crate::runtime::RuntimeClient;
 /// One compound-node update request payload.
 #[derive(Clone, Debug)]
 pub struct CnRequestData {
+    /// Incoming state message `m_X, V_X`.
     pub x: GaussMessage,
+    /// Observation message `m_Y, V_Y`.
     pub y: GaussMessage,
+    /// The section's state matrix `A`.
     pub a: CMatrix,
 }
 
@@ -44,9 +47,13 @@ pub struct CnRequestData {
 /// engine the backend drives.
 #[derive(Clone, Debug)]
 pub struct WorkloadRequest {
+    /// The model graph (edges, nodes, state matrices).
     pub graph: FactorGraph,
+    /// The message-update schedule to execute.
     pub schedule: Schedule,
+    /// A message bound to every schedule input.
     pub inputs: HashMap<MsgId, GaussMessage>,
+    /// Compiler options for program engines.
     pub opts: CompileOptions,
 }
 
@@ -87,9 +94,13 @@ impl WorkloadRequest {
 /// Which backend a server routes to.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BackendKind {
+    /// f64 golden rules.
     Golden,
+    /// Cycle-accurate FGP simulator.
     FgpSim,
+    /// PJRT/XLA artifacts, one update per dispatch.
     Xla,
+    /// PJRT/XLA batched artifact (`cn_update_batched`).
     XlaBatch,
 }
 
@@ -101,8 +112,10 @@ pub enum BackendKind {
 /// backends are constructed *on* the server's worker thread via the
 /// factory passed to [`super::CnServer::start`].
 pub trait Backend {
+    /// Execute one compound-node update.
     fn cn_update(&mut self, req: &CnRequestData) -> Result<GaussMessage>;
 
+    /// Execute a batch of updates (default: one by one).
     fn cn_update_batch(&mut self, reqs: &[CnRequestData]) -> Vec<Result<GaussMessage>> {
         reqs.iter().map(|r| self.cn_update(r)).collect()
     }
@@ -111,6 +124,7 @@ pub trait Backend {
     /// with streamed sections).
     fn run_workload(&mut self, req: &WorkloadRequest) -> Result<Execution>;
 
+    /// Which backend this is (reporting/routing).
     fn kind(&self) -> BackendKind;
 }
 
@@ -153,6 +167,7 @@ pub struct FgpSimBackend {
 }
 
 impl FgpSimBackend {
+    /// Backend over a fresh simulator session, CN program precompiled.
     pub fn new(config: FgpConfig) -> Result<Self> {
         let mut session = Session::fgp_sim(config);
         // compile the single-CN program up front so construction reports
@@ -222,6 +237,7 @@ pub struct XlaBackend {
 }
 
 impl XlaBackend {
+    /// Backend over a PJRT runtime (one update per dispatch).
     pub fn new(rt: RuntimeClient) -> Self {
         let rt = Rc::new(rt);
         let session = Session::new(Box::new(XlaEngine::shared(Rc::clone(&rt))));
@@ -253,6 +269,7 @@ pub struct XlaBatchBackend {
 }
 
 impl XlaBatchBackend {
+    /// Batched backend over a PJRT runtime (`cn_update_batched`).
     pub fn new(rt: RuntimeClient) -> Result<Self> {
         let max_batch = rt
             .manifest
@@ -264,6 +281,7 @@ impl XlaBatchBackend {
         Ok(XlaBatchBackend { rt, session, max_batch })
     }
 
+    /// Largest batch the AOT artifact accepts per dispatch.
     pub fn max_batch(&self) -> usize {
         self.max_batch
     }

@@ -30,7 +30,9 @@ use super::backend::{Backend, CnRequestData};
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
+    /// Maximum requests per batch.
     pub max_batch: usize,
+    /// Longest a batch waits for stragglers before dispatching.
     pub max_wait: Duration,
 }
 
@@ -43,10 +45,12 @@ impl Default for BatchPolicy {
 /// Pulls from a channel and forms batches per the policy.
 pub struct Batcher<T> {
     rx: Receiver<T>,
+    /// The batching policy in force.
     pub policy: BatchPolicy,
 }
 
 impl<T> Batcher<T> {
+    /// Batcher over a request channel.
     pub fn new(rx: Receiver<T>, policy: BatchPolicy) -> Self {
         Batcher { rx, policy }
     }
@@ -87,6 +91,7 @@ pub struct CnStream {
 }
 
 impl CnStream {
+    /// A stream starting from the given prior state.
     pub fn new(prior: GaussMessage) -> Self {
         CnStream { state: prior, pending: VecDeque::new(), samples_done: 0 }
     }

@@ -34,7 +34,9 @@ use super::backend::{CnRequestData, WorkloadRequest};
 /// Request routing policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RoutePolicy {
+    /// Stateless rotation over devices.
     RoundRobin,
+    /// Route to the device with the fewest simulated cycles.
     LeastLoaded,
 }
 
@@ -127,6 +129,7 @@ impl FgpFarm {
         Ok(FgpFarm { devices, policy, next: AtomicUsize::new(0) })
     }
 
+    /// Number of devices in the farm.
     pub fn size(&self) -> usize {
         self.devices.len()
     }

@@ -27,10 +27,12 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// An empty histogram.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one latency sample.
     pub fn record(&self, d: Duration) {
         let ns = d.as_nanos().min(u128::from(u64::MAX)) as u64;
         let bucket = 63 - ns.max(1).leading_zeros() as usize;
@@ -39,10 +41,12 @@ impl Histogram {
         self.sum_ns.fetch_add(ns, Ordering::Relaxed);
     }
 
+    /// Samples recorded.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Mean recorded latency.
     pub fn mean(&self) -> Duration {
         let c = self.count();
         if c == 0 {
@@ -68,6 +72,7 @@ impl Histogram {
         Duration::from_nanos(u64::MAX)
     }
 
+    /// Clear all buckets and counters.
     pub fn reset(&self) {
         for b in &self.buckets {
             b.store(0, Ordering::Relaxed);
@@ -95,15 +100,18 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Fresh zeroed metrics.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one dispatched batch of the given size.
     pub fn record_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
     }
 
+    /// Mean requests per dispatched batch.
     pub fn mean_batch_size(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
         if b == 0 {

@@ -34,6 +34,7 @@ pub struct ServerClosed;
 /// Server configuration.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ServerConfig {
+    /// Dynamic-batching policy for the worker.
     pub batch: BatchPolicy,
 }
 
@@ -102,6 +103,7 @@ impl CnClient {
             .map_err(|_| anyhow::Error::new(ServerClosed))?
     }
 
+    /// Shared server metrics (latency, batch sizes).
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
     }
@@ -118,6 +120,7 @@ pub struct CnServer {
 }
 
 impl CnServer {
+    /// Start a server; `factory` builds the backend on the worker thread.
     pub fn start<F>(factory: F, config: ServerConfig) -> Result<Self>
     where
         F: FnOnce() -> Result<Box<dyn Backend>> + Send + 'static,
@@ -241,6 +244,7 @@ impl CnServer {
         Ok(CnServer { handle: Some(handle), client: CnClient { tx, metrics } })
     }
 
+    /// A cloneable client handle to this server.
     pub fn client(&self) -> CnClient {
         self.client.clone()
     }

@@ -55,15 +55,22 @@ impl Default for C66xModel {
 /// Cycle breakdown of a compound-node update on the DSP.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CnBreakdown {
+    /// `t1 = V_X A^H` matmul cycles.
     pub t1_matmul: u64,
+    /// `G = V_Y + A t1` matmul + add cycles.
     pub g_matmul_add: u64,
+    /// `G^{-1}` inversion cycles (ref [11]).
     pub inversion: u64,
+    /// Gain matmul `t1 G^{-1}` cycles.
     pub gain_matmul: u64,
+    /// Schur matmul + subtract cycles.
     pub schur_matmul_sub: u64,
+    /// Mean-vector update cycles.
     pub mean_update: u64,
 }
 
 impl CnBreakdown {
+    /// Total cycles of the compound-node update.
     pub fn total(&self) -> u64 {
         self.t1_matmul
             + self.g_matmul_add

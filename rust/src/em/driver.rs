@@ -1,0 +1,344 @@
+//! The batch EM loop: E-step through a [`Session`], closed-form M-step.
+//!
+//! [`EmDriver`] mirrors [`crate::nonlinear::IteratedRelinearization`]:
+//! a fixed-shape inference problem is re-run each round with only its
+//! *data* changed (observation covariances, process-noise messages,
+//! scaled state matrices — never the graph structure), so on program
+//! engines **every round after the first is a session program-cache
+//! hit**. The driver owns convergence (relative parameter movement),
+//! divergence detection, and the per-round instrumentation the tests
+//! pin: parameter trajectories, cache flags, and the dense
+//! log-likelihood (which exact EM must never decrease).
+//!
+//! The estimand ([`EmEstimand`]) is the glue an application implements:
+//! run inference at the current parameter values through the session,
+//! extract the posterior marginals, and feed them to its
+//! [`super::EmParameter`]s — see [`crate::apps::rls::NoiseEmRls`] and
+//! [`crate::apps::kalman::AdaptiveKalman`].
+
+use anyhow::{bail, Result};
+
+use crate::engine::Session;
+
+use super::param::SuffStats;
+
+/// Driver configuration (mirrors [`crate::nonlinear::RelinOptions`]).
+#[derive(Clone, Copy, Debug)]
+pub struct EmOptions {
+    /// Maximum EM rounds.
+    pub max_rounds: usize,
+    /// Relative parameter movement below which the fixed point is
+    /// declared reached.
+    pub tol: f64,
+    /// Scale-relative movement above which the iteration is declared
+    /// divergent. The movement metric is bounded by 2 (it normalizes
+    /// by the larger of the old/new magnitudes), so only thresholds
+    /// below 2 ever fire — set e.g. `1.5` to stop on violent sign
+    /// oscillation. Non-finite parameter values always stop the loop
+    /// as [`EmStop::Diverged`], regardless of this threshold.
+    pub divergence: f64,
+}
+
+impl Default for EmOptions {
+    fn default() -> Self {
+        EmOptions { max_rounds: 32, tol: 1e-6, divergence: f64::INFINITY }
+    }
+}
+
+/// Why the driver stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EmStop {
+    /// Parameter movement fell below [`EmOptions::tol`].
+    Converged,
+    /// [`EmOptions::max_rounds`] rounds ran without convergence.
+    MaxRounds,
+    /// Movement exceeded [`EmOptions::divergence`] or became non-finite.
+    Diverged,
+}
+
+/// Result of an EM parameter-estimation run.
+#[derive(Clone, Debug)]
+pub struct EmReport {
+    /// Final parameter values, in the estimand's order.
+    pub values: Vec<f64>,
+    /// Rounds executed.
+    pub rounds: usize,
+    /// Why the driver stopped.
+    pub stop: EmStop,
+    /// Parameter values after each round's M-step.
+    pub history: Vec<Vec<f64>>,
+    /// Dense log-likelihood at the values *entering* each round, plus
+    /// one final entry at the converged values — non-decreasing for
+    /// exact EM (pinned by `rust/tests/property_em.rs`). Empty when the
+    /// estimand has no tractable reference.
+    pub log_likelihood: Vec<f64>,
+    /// Per-round program-cache flags (true = every compiled program the
+    /// round needed came from the session cache). Always false on
+    /// engines without programs.
+    pub cached: Vec<bool>,
+}
+
+impl EmReport {
+    /// True when the driver reached the movement tolerance.
+    pub fn converged(&self) -> bool {
+        self.stop == EmStop::Converged
+    }
+}
+
+/// An estimation problem with unknown parameters, as the driver sees it.
+///
+/// The contract:
+///
+/// 1. [`values`](EmEstimand::values) reports the current parameter
+///    values in a fixed order (the driver tracks movement over them);
+/// 2. [`e_step`](EmEstimand::e_step) runs inference **at the current
+///    values** through the session — batch [`Session::run`]/
+///    [`Session::dispatch`], a [`Session::run_stream`] pass, or a GBP
+///    solve — and folds each section's posterior marginals into the
+///    per-parameter accumulators. Only data may change between rounds;
+///    the model *shape* must stay fixed so rounds hit the program
+///    cache. Returns true when every program the round needed came from
+///    the cache;
+/// 3. [`m_step`](EmEstimand::m_step) commits the closed-form updates
+///    and returns the new values.
+pub trait EmEstimand {
+    /// Current parameter values, in a fixed order.
+    fn values(&self) -> Vec<f64>;
+
+    /// One E-step at the current values (see the trait docs).
+    fn e_step(&mut self, session: &mut Session, acc: &mut [SuffStats]) -> Result<bool>;
+
+    /// Commit the closed-form M-steps; returns the new values.
+    fn m_step(&mut self, acc: &[SuffStats]) -> Result<Vec<f64>>;
+
+    /// Dense log-likelihood at the current values, when the model has a
+    /// tractable reference (monotone-ascent instrumentation).
+    fn log_likelihood(&self) -> Result<Option<f64>> {
+        Ok(None)
+    }
+}
+
+/// The EM loop: E-step → closed-form M-step → movement check.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EmDriver {
+    /// Convergence configuration.
+    pub opts: EmOptions,
+}
+
+impl EmDriver {
+    /// Driver with default options.
+    pub fn new() -> Self {
+        EmDriver { opts: EmOptions::default() }
+    }
+
+    /// Driver with explicit options.
+    pub fn with_options(opts: EmOptions) -> Self {
+        EmDriver { opts }
+    }
+
+    /// Run EM to the fixed point through a [`Session`] (any engine).
+    pub fn run(&self, session: &mut Session, est: &mut dyn EmEstimand) -> Result<EmReport> {
+        if self.opts.max_rounds == 0 {
+            bail!("max_rounds must be at least 1");
+        }
+        let mut values = est.values();
+        if values.is_empty() {
+            bail!("estimand declares no parameters");
+        }
+        let mut history = Vec::new();
+        let mut log_likelihood = Vec::new();
+        let mut cached = Vec::new();
+        let mut stop = EmStop::MaxRounds;
+        for _ in 0..self.opts.max_rounds {
+            if let Some(ll) = est.log_likelihood()? {
+                log_likelihood.push(ll);
+            }
+            let mut acc = vec![SuffStats::default(); values.len()];
+            cached.push(est.e_step(session, &mut acc)?);
+            let new = est.m_step(&acc)?;
+            if new.len() != values.len() {
+                bail!(
+                    "M-step returned {} values for {} parameters",
+                    new.len(),
+                    values.len()
+                );
+            }
+            let delta = movement(&values, &new);
+            history.push(new.clone());
+            values = new;
+            if values.iter().any(|v| !v.is_finite())
+                || delta.is_nan()
+                || delta > self.opts.divergence
+            {
+                stop = EmStop::Diverged;
+                break;
+            }
+            if delta < self.opts.tol {
+                stop = EmStop::Converged;
+                break;
+            }
+        }
+        // final log-likelihood at the converged values
+        if let Some(ll) = est.log_likelihood()? {
+            log_likelihood.push(ll);
+        }
+        Ok(EmReport {
+            values,
+            rounds: history.len(),
+            stop,
+            history,
+            log_likelihood,
+            cached,
+        })
+    }
+}
+
+/// Max per-parameter movement, relative to the parameter's own scale:
+/// variances can sit orders of magnitude below 1, so normalizing by
+/// `max(1, |θ|)` would declare convergence on what is still a large
+/// relative step. A NaN delta (non-finite parameters) propagates
+/// instead of being dropped by the max-fold, so the driver sees it.
+fn movement(old: &[f64], new: &[f64]) -> f64 {
+    let mut worst = 0.0_f64;
+    for (o, n) in old.iter().zip(new) {
+        let scale = o.abs().max(n.abs());
+        let d = if scale == 0.0 { 0.0 } else { (o - n).abs() / scale };
+        if d.is_nan() {
+            return f64::NAN;
+        }
+        worst = worst.max(d);
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::em::param::{EmParameter, Evidence, ScalarCoeff};
+    use crate::gmp::matrix::{c64, CMatrix};
+    use crate::testutil::{assert_close, Rng};
+
+    /// A host-side AR(1) estimand: x_t = θ x_{t-1} + w observed as
+    /// y_t = x_t + v, the E-step running the exact filtered pair
+    /// recursion in f64 (no engine — the driver only needs the session
+    /// for engine-backed estimands).
+    struct ArEstimand {
+        ys: Vec<Vec<c64>>,
+        q: f64,
+        r: f64,
+        n: usize,
+        theta: ScalarCoeff,
+    }
+
+    impl ArEstimand {
+        fn synthetic(steps: usize, theta: f64, q: f64, r: f64, seed: u64) -> Self {
+            let n = 4;
+            let mut rng = Rng::new(seed);
+            let mut x: Vec<f64> = (0..n).map(|_| rng.range(-0.5, 0.5)).collect();
+            let mut ys = Vec::with_capacity(steps);
+            for _ in 0..steps {
+                for xi in x.iter_mut() {
+                    *xi = theta * *xi + rng.normal() * q.sqrt();
+                }
+                ys.push(
+                    x.iter()
+                        .map(|xi| c64::new(xi + rng.normal() * r.sqrt(), 0.0))
+                        .collect(),
+                );
+            }
+            ArEstimand { ys, q, r, n, theta: ScalarCoeff::new(0.3) }
+        }
+    }
+
+    impl EmEstimand for ArEstimand {
+        fn values(&self) -> Vec<f64> {
+            vec![self.theta.value()]
+        }
+
+        fn e_step(&mut self, _session: &mut Session, acc: &mut [SuffStats]) -> Result<bool> {
+            let n = self.n;
+            let th = self.theta.value();
+            let mut m = vec![c64::ZERO; n];
+            let mut v = CMatrix::scaled_identity(n, 1.0);
+            for y in &self.ys {
+                // joint of (x_prev, x_cur) before y: x_cur = θ x_prev + w
+                let vp = v.scale(th * th).add(&CMatrix::scaled_identity(n, self.q));
+                let cross = v.scale(th); // Cov(x_cur, x_prev)
+                let s = vp.add(&CMatrix::scaled_identity(n, self.r));
+                let sinv = s.inverse().expect("S is PD");
+                let nu: Vec<c64> = y.iter().zip(&m).map(|(yo, mo)| *yo - *mo * th).collect();
+                let m_cur: Vec<c64> = {
+                    let g = vp.matmul(&sinv);
+                    let corr = g.matvec(&nu);
+                    m.iter().zip(&corr).map(|(mo, c)| *mo * th + *c).collect()
+                };
+                let v_cur = vp.sub(&vp.matmul(&sinv).matmul(&vp));
+                let m_prev: Vec<c64> = {
+                    let g = cross.hermitian().matmul(&sinv);
+                    let corr = g.matvec(&nu);
+                    m.iter().zip(&corr).map(|(mo, c)| *mo + *c).collect()
+                };
+                let v_prev = v.sub(&cross.hermitian().matmul(&sinv).matmul(&cross));
+                let cov_cur_prev = cross.sub(&vp.matmul(&sinv).matmul(&cross));
+                self.theta.accumulate(
+                    &Evidence::Pair {
+                        cur_mean: &m_cur,
+                        prev_mean: &m_prev,
+                        cross_cov: &cov_cur_prev,
+                        prev_cov: &v_prev,
+                    },
+                    &mut acc[0],
+                )?;
+                m = m_cur;
+                v = v_cur;
+            }
+            Ok(false)
+        }
+
+        fn m_step(&mut self, acc: &[SuffStats]) -> Result<Vec<f64>> {
+            Ok(vec![self.theta.m_step(&acc[0])?])
+        }
+    }
+
+    #[test]
+    fn ar_coefficient_converges_near_truth() {
+        let mut est = ArEstimand::synthetic(300, 0.9, 0.05, 0.02, 4);
+        let driver = EmDriver::with_options(EmOptions {
+            max_rounds: 60,
+            tol: 1e-8,
+            divergence: 1e6,
+        });
+        let report = driver.run(&mut Session::golden(), &mut est).unwrap();
+        assert!(report.converged(), "stop {:?}", report.stop);
+        let theta = report.values[0];
+        assert!(
+            (theta - 0.9).abs() < 0.05,
+            "theta {theta} strayed from 0.9 (rounds {})",
+            report.rounds
+        );
+        // trajectory moved from the 0.3 start monotonically toward truth
+        assert!(report.history[0][0] > 0.3);
+        assert_close(*report.history.last().unwrap().first().unwrap(), theta, 1e-12);
+    }
+
+    #[test]
+    fn zero_rounds_is_an_error() {
+        let mut est = ArEstimand::synthetic(4, 0.5, 0.05, 0.02, 1);
+        let driver = EmDriver::with_options(EmOptions { max_rounds: 0, ..Default::default() });
+        assert!(driver.run(&mut Session::golden(), &mut est).is_err());
+    }
+
+    #[test]
+    fn max_rounds_is_reported_not_spun() {
+        let mut est = ArEstimand::synthetic(50, 0.8, 0.05, 0.02, 2);
+        let driver = EmDriver::with_options(EmOptions {
+            max_rounds: 2,
+            tol: 0.0,
+            divergence: 1e6,
+        });
+        let report = driver.run(&mut Session::golden(), &mut est).unwrap();
+        assert_eq!(report.stop, EmStop::MaxRounds);
+        assert_eq!(report.rounds, 2);
+        assert_eq!(report.history.len(), 2);
+    }
+}

@@ -1,0 +1,238 @@
+//! Online / recursive EM riding the streaming surface unchanged.
+//!
+//! Batch EM re-runs the whole chain per round; a serving receiver never
+//! gets that luxury — samples arrive once. Recursive EM (Dauwels et
+//! al., part I, §"online EM") folds each new posterior marginal into
+//! exponentially discounted sufficient statistics and commits the
+//! closed-form M-step as it streams.
+//!
+//! [`OnlineEm`] wraps any [`OnlineNoiseSource`] (a streaming workload
+//! whose observation noise can be re-estimated mid-stream) and is
+//! itself a [`StreamingWorkload`]: `Session::run_stream` and the
+//! coordinator's sticky farm streams ([`crate::coordinator::FgpFarm::
+//! open_stream`]) drive it **unchanged**. The driver hands the wrapper
+//! the latest recursive state at every chunk boundary; the wrapper
+//! detects the boundary, absorbs the samples that state now
+//! incorporates into the discounted [`SuffStats`], re-commits the
+//! [`ObsNoiseVar`] M-step, and emits the next samples with observation
+//! messages rebuilt at the fresh estimate. Chunked engines simply
+//! accumulate per chunk instead of per sample — the contract the
+//! tentpole tests pin on golden, fgp-sim and the farm.
+
+use std::cell::RefCell;
+
+use anyhow::Result;
+
+use crate::compiler::CompileOptions;
+use crate::engine::{StreamRun, StreamSample, StreamingWorkload};
+use crate::gmp::matrix::{c64, CMatrix};
+use crate::gmp::message::GaussMessage;
+use crate::gmp::{FactorGraph, Schedule};
+
+use super::param::{EmParameter, Evidence, ObsNoiseVar, SuffStats};
+
+/// Default per-sample exponential forgetting factor λ: statistics decay
+/// with a ~200-sample memory, so estimates computed under an early,
+/// badly wrong σ̂² wash out instead of biasing the average forever.
+pub const DEFAULT_FORGET: f64 = 0.995;
+
+/// Default number of samples absorbed before the first M-step commits
+/// (a variance estimate from a handful of residuals is noise).
+pub const DEFAULT_BURN_IN: usize = 8;
+
+/// One observation section's data, as online EM needs it: the map, the
+/// observed vector, and which components carry real observations.
+#[derive(Clone, Debug)]
+pub struct OnlineSection {
+    /// Observation map / regressor matrix of the sample.
+    pub a: CMatrix,
+    /// Observed data vector (mean of the observation message).
+    pub y: Vec<c64>,
+    /// Components of `y` carrying real observations.
+    pub observed: Vec<usize>,
+}
+
+/// A recursive workload whose observation-noise variance can be
+/// re-estimated while it streams.
+///
+/// Implementors keep their [`StreamingWorkload`] contract untouched;
+/// the two extra methods let [`OnlineEm`] rebuild each sample's
+/// observation message at the current noise estimate and extract the
+/// section's E-step evidence.
+pub trait OnlineNoiseSource: StreamingWorkload {
+    /// Sample `k` with its observation message rebuilt at noise
+    /// variance `sigma2` (`None` at end of stream).
+    fn sample_at(&self, k: usize, sigma2: f64) -> Result<Option<StreamSample>>;
+
+    /// Section data of sample `k` for the E-step accumulator (`None`
+    /// past the end of the stream).
+    fn section(&self, k: usize) -> Option<OnlineSection>;
+}
+
+/// Outcome of an online-EM stream: the wrapped workload's outcome plus
+/// the final noise estimate.
+#[derive(Clone, Debug)]
+pub struct OnlineEmOutcome<O> {
+    /// The wrapped workload's stream outcome.
+    pub inner: O,
+    /// Final observation-noise variance estimate.
+    pub sigma2: f64,
+}
+
+struct OnlineState {
+    noise: ObsNoiseVar,
+    acc: SuffStats,
+    /// Samples already absorbed into the statistics.
+    seen: usize,
+    /// Last recursive state observed from the driver (chunk-boundary
+    /// detection: the state only changes when a dispatch lands).
+    last: Option<GaussMessage>,
+    /// Chunk size learned from the first state change (the sample index
+    /// at the first boundary IS the driver's chunk). Once known, every
+    /// `k % chunk == 0` call is a boundary even if the posterior has
+    /// reached a bitwise fixed point (quantized engines can freeze the
+    /// state exactly; adaptation must not stall on that).
+    chunk: Option<usize>,
+}
+
+/// Online/recursive EM over a streaming workload (see the module docs).
+pub struct OnlineEm<W> {
+    inner: W,
+    name: String,
+    /// Per-sample exponential forgetting factor λ ∈ (0, 1].
+    pub forget: f64,
+    /// Samples absorbed before the first M-step commits.
+    pub burn_in: usize,
+    st: RefCell<OnlineState>,
+}
+
+impl<W: OnlineNoiseSource> OnlineEm<W> {
+    /// Wrap `inner`, starting the noise estimate at `sigma0`.
+    pub fn new(inner: W, sigma0: f64) -> Self {
+        let name = format!("{}+em", inner.stream_name());
+        OnlineEm {
+            inner,
+            name,
+            forget: DEFAULT_FORGET,
+            burn_in: DEFAULT_BURN_IN,
+            st: RefCell::new(OnlineState {
+                noise: ObsNoiseVar::new(sigma0),
+                acc: SuffStats::default(),
+                seen: 0,
+                last: None,
+                chunk: None,
+            }),
+        }
+    }
+
+    /// Override the forgetting factor (λ = 1 is a plain running mean).
+    pub fn with_forget(mut self, forget: f64) -> Self {
+        self.forget = forget;
+        self
+    }
+
+    /// The wrapped workload.
+    pub fn inner(&self) -> &W {
+        &self.inner
+    }
+
+    /// Current observation-noise estimate.
+    pub fn estimate(&self) -> f64 {
+        self.st.borrow().noise.value()
+    }
+
+    /// Absorb samples `[seen, upto)` using `marginal` (the recursive
+    /// state that now incorporates them), then re-commit the M-step.
+    fn absorb(&self, upto: usize, marginal: &GaussMessage) -> Result<()> {
+        let mut st = self.st.borrow_mut();
+        let st = &mut *st;
+        for k in st.seen..upto {
+            let Some(sec) = self.inner.section(k) else { continue };
+            st.acc.discount(self.forget);
+            st.noise.accumulate(
+                &Evidence::Observation {
+                    marginal,
+                    a: &sec.a,
+                    y: &sec.y,
+                    observed: &sec.observed,
+                },
+                &mut st.acc,
+            )?;
+        }
+        st.seen = st.seen.max(upto);
+        if st.seen >= self.burn_in && st.acc.den > 0.0 {
+            st.noise.m_step(&st.acc)?;
+        }
+        Ok(())
+    }
+}
+
+impl<W: OnlineNoiseSource> StreamingWorkload for OnlineEm<W> {
+    type StreamOutcome = OnlineEmOutcome<W::StreamOutcome>;
+
+    fn stream_name(&self) -> &str {
+        &self.name
+    }
+
+    fn state_dim(&self) -> usize {
+        self.inner.state_dim()
+    }
+
+    fn stream_model(&self, chunk: usize) -> Result<(FactorGraph, Schedule)> {
+        self.inner.stream_model(chunk)
+    }
+
+    fn state_label(&self) -> &str {
+        self.inner.state_label()
+    }
+
+    fn constant_inputs(&self) -> Vec<(String, GaussMessage)> {
+        self.inner.constant_inputs()
+    }
+
+    fn initial_state(&self) -> GaussMessage {
+        self.inner.initial_state()
+    }
+
+    fn next_sample(&self, k: usize, state: &GaussMessage) -> Result<Option<StreamSample>> {
+        let boundary = {
+            let mut st = self.st.borrow_mut();
+            let changed = match &st.last {
+                None => true,
+                Some(prev) => prev.dist(state) != 0.0,
+            };
+            if changed && st.chunk.is_none() && k > 0 {
+                // the first state change happens at the first call of
+                // the second chunk, where k == the driver's chunk size
+                st.chunk = Some(k);
+            }
+            // a known chunk also identifies boundaries when the
+            // posterior is at a bitwise fixed point (state unchanged)
+            changed || st.chunk.map_or(false, |c| k % c == 0 && k > st.seen)
+        };
+        if boundary {
+            // the driver hands the post-dispatch state at the first call
+            // of each chunk, where k == samples consumed so far: every
+            // sample in [seen, k) is now inside `state`
+            self.absorb(k, state)?;
+            self.st.borrow_mut().last = Some(state.clone());
+        }
+        let sigma2 = self.estimate();
+        self.inner.sample_at(k, sigma2)
+    }
+
+    fn max_chunk(&self) -> usize {
+        self.inner.max_chunk()
+    }
+
+    fn stream_compile_options(&self) -> CompileOptions {
+        self.inner.stream_compile_options()
+    }
+
+    fn stream_outcome(&self, run: &StreamRun) -> Result<Self::StreamOutcome> {
+        // the final state incorporates the whole stream: absorb the tail
+        self.absorb(run.samples as usize, &run.final_state)?;
+        let inner = self.inner.stream_outcome(run)?;
+        Ok(OnlineEmOutcome { inner, sigma2: self.estimate() })
+    }
+}

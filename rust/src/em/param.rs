@@ -1,0 +1,453 @@
+//! EM parameters: node-local expectations + closed-form M-steps.
+//!
+//! Dauwels et al. tabulate the EM message a factor node sends to an
+//! unknown parameter: an expected sufficient statistic of the node's
+//! *local* variables under the current posterior. Every closed-form
+//! Gaussian M-step in that table is the **ratio of two accumulated
+//! expectations** — a residual power over a count for noise variances,
+//! a cross-moment over a second moment for linear coefficients. This
+//! module reifies exactly that structure:
+//!
+//! * [`SuffStats`] — the `(num, den)` accumulator pair, with the
+//!   exponential discounting online/recursive EM needs;
+//! * [`Evidence`] — the posterior marginals one section contributes to
+//!   the E-step (produced by any engine run: a batch `Session::run`, a
+//!   `Session::run_stream` boundary, or a GBP belief);
+//! * [`EmParameter`] — the trait tying a parameter's E-step accumulation
+//!   to its closed-form M-step, with the first three implementations:
+//!   [`ObsNoiseVar`], [`ProcessNoiseVar`] and [`ScalarCoeff`].
+//!
+//! Parameters never run inference and never see an engine: an estimand
+//! (e.g. [`crate::apps::rls::NoiseEmRls`]) extracts the marginals from a
+//! session run and feeds them here — the node-local update rules stay
+//! composable exactly as Cox et al. prescribe.
+
+use anyhow::{bail, Result};
+
+use crate::gmp::matrix::{c64, CMatrix};
+use crate::gmp::message::GaussMessage;
+
+/// Accumulated expected sufficient statistics of one EM parameter.
+///
+/// Every closed-form Gaussian M-step served here is `num / den`:
+/// expected residual power over a component count for a noise variance,
+/// expected cross-moment over a second moment for a linear coefficient.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SuffStats {
+    /// Numerator accumulator (expected residual power / cross-moment).
+    pub num: f64,
+    /// Denominator accumulator (component count / second moment).
+    pub den: f64,
+}
+
+impl SuffStats {
+    /// Fold another accumulator in (merging per-chunk partial sums).
+    pub fn merge(&mut self, other: &SuffStats) {
+        self.num += other.num;
+        self.den += other.den;
+    }
+
+    /// Exponentially discount the history (online/recursive EM): both
+    /// accumulators shrink by `lambda` before the next section lands.
+    pub fn discount(&mut self, lambda: f64) {
+        self.num *= lambda;
+        self.den *= lambda;
+    }
+
+    /// The closed-form ratio, or `None` while nothing has accumulated.
+    pub fn ratio(&self) -> Option<f64> {
+        (self.den > 0.0).then(|| self.num / self.den)
+    }
+}
+
+/// Posterior evidence one model section contributes to the E-step.
+///
+/// The variants mirror where the three parameter kinds live in a
+/// Gaussian model: at an observation node, at a noise input, or across
+/// a transition. The *estimand* builds these from engine-produced
+/// marginals; the parameter only takes expectations.
+#[derive(Clone, Copy, Debug)]
+pub enum Evidence<'a> {
+    /// An observation section `y = A x + v`: the posterior marginal of
+    /// the observed state plus the section's data.
+    Observation {
+        /// Posterior marginal of the state `x` the section observes.
+        marginal: &'a GaussMessage,
+        /// Observation map / regressor matrix `A`.
+        a: &'a CMatrix,
+        /// Observed data vector (mean of the observation message).
+        y: &'a [c64],
+        /// Components of `y` that carry real observations (rows of `A`
+        /// that are zero padding contribute no residual information and
+        /// must be excluded, or the variance estimate biases low).
+        observed: &'a [usize],
+    },
+    /// The posterior marginal of a noise variable itself (e.g. the
+    /// process-noise input `w` of one transition, as produced by a
+    /// lag-one finalized filter step).
+    Noise {
+        /// Posterior marginal of the noise variable.
+        marginal: &'a GaussMessage,
+    },
+    /// Joint posterior moments of a transition pair `x_cur = θ x_prev + w`
+    /// (scalar coefficient estimation needs the cross term).
+    Pair {
+        /// Posterior mean of the successor state `x_cur`.
+        cur_mean: &'a [c64],
+        /// Posterior mean of the predecessor state `x_prev`.
+        prev_mean: &'a [c64],
+        /// Posterior cross-covariance `Cov(x_cur, x_prev | data)`.
+        cross_cov: &'a CMatrix,
+        /// Posterior covariance of the predecessor state.
+        prev_cov: &'a CMatrix,
+    },
+}
+
+/// An unknown scalar model parameter estimated by EM.
+///
+/// [`accumulate`](EmParameter::accumulate) is the E-step contribution of
+/// one section (consuming posterior marginals only — Dauwels' "EM as
+/// message passing" table); [`m_step`](EmParameter::m_step) commits the
+/// closed-form update and returns the new value. Implementations reject
+/// evidence variants they have no rule for, so wiring mistakes surface
+/// as typed errors instead of silent misestimates.
+pub trait EmParameter {
+    /// Short identifier (reports, diagnostics).
+    fn name(&self) -> &str;
+
+    /// Current parameter value.
+    fn value(&self) -> f64;
+
+    /// E-step: fold one section's posterior evidence into `acc`.
+    fn accumulate(&self, ev: &Evidence, acc: &mut SuffStats) -> Result<()>;
+
+    /// M-step: commit the closed-form update from `acc`, returning the
+    /// new value. Errors if nothing was accumulated.
+    fn m_step(&mut self, acc: &SuffStats) -> Result<f64>;
+}
+
+// ---------------------------------------------------------------------
+// Observation-noise variance
+// ---------------------------------------------------------------------
+
+/// Unknown observation-noise variance `σ²` of `y = A x + v`,
+/// `v ~ CN(0, σ² I)` on the observed components.
+///
+/// E-step per observed component `o`:
+/// `E|y_o − (A x)_o|² = |y_o − (A m)_o|² + (A V Aᴴ)_oo` under the
+/// posterior `x ~ N(m, V)`; M-step: `σ²' = Σ E|r_o|² / #components`
+/// (floored to stay a proper variance).
+#[derive(Clone, Copy, Debug)]
+pub struct ObsNoiseVar {
+    sigma2: f64,
+    floor: f64,
+}
+
+impl ObsNoiseVar {
+    /// Start the estimate at `sigma0` (must be positive).
+    pub fn new(sigma0: f64) -> Self {
+        ObsNoiseVar { sigma2: sigma0.max(1e-12), floor: 1e-9 }
+    }
+
+    /// Override the positivity floor the M-step clamps to.
+    pub fn with_floor(mut self, floor: f64) -> Self {
+        self.floor = floor;
+        self
+    }
+}
+
+impl EmParameter for ObsNoiseVar {
+    fn name(&self) -> &str {
+        "obs_noise_var"
+    }
+
+    fn value(&self) -> f64 {
+        self.sigma2
+    }
+
+    fn accumulate(&self, ev: &Evidence, acc: &mut SuffStats) -> Result<()> {
+        let Evidence::Observation { marginal, a, y, observed } = ev else {
+            bail!("obs-noise variance needs Observation evidence");
+        };
+        let am = a.matvec(&marginal.mean);
+        let avah = a.matmul(&marginal.cov).matmul(&a.hermitian());
+        for &o in *observed {
+            if o >= y.len() || o >= a.rows {
+                bail!(
+                    "observed component {o} out of range (y dim {}, A rows {})",
+                    y.len(),
+                    a.rows
+                );
+            }
+            let r = y[o] - am[o];
+            acc.num += r.abs2() + avah[(o, o)].re;
+            acc.den += 1.0;
+        }
+        Ok(())
+    }
+
+    fn m_step(&mut self, acc: &SuffStats) -> Result<f64> {
+        let Some(ratio) = acc.ratio() else {
+            bail!("obs-noise M-step with no accumulated sections");
+        };
+        self.sigma2 = ratio.max(self.floor);
+        Ok(self.sigma2)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Process-noise variance
+// ---------------------------------------------------------------------
+
+/// Unknown isotropic process-noise variance `q` of `x' = F x + w`,
+/// `w ~ N(0, q I)`.
+///
+/// E-step: the estimand hands over the posterior marginal of the noise
+/// variable `w` itself ([`Evidence::Noise`], e.g. from a lag-one
+/// finalized filter recursion); the expectation is then node-local:
+/// `E‖w‖² = ‖m_w‖² + Re tr V_w`. M-step: `q' = Σ E‖w‖² / Σ dim(w)`.
+#[derive(Clone, Copy, Debug)]
+pub struct ProcessNoiseVar {
+    q: f64,
+    floor: f64,
+}
+
+impl ProcessNoiseVar {
+    /// Start the estimate at `q0` (must be positive).
+    pub fn new(q0: f64) -> Self {
+        ProcessNoiseVar { q: q0.max(1e-12), floor: 1e-9 }
+    }
+
+    /// Override the positivity floor the M-step clamps to.
+    pub fn with_floor(mut self, floor: f64) -> Self {
+        self.floor = floor;
+        self
+    }
+}
+
+impl EmParameter for ProcessNoiseVar {
+    fn name(&self) -> &str {
+        "process_noise_var"
+    }
+
+    fn value(&self) -> f64 {
+        self.q
+    }
+
+    fn accumulate(&self, ev: &Evidence, acc: &mut SuffStats) -> Result<()> {
+        let Evidence::Noise { marginal } = ev else {
+            bail!("process-noise variance needs Noise evidence");
+        };
+        let power: f64 = marginal.mean.iter().map(|m| m.abs2()).sum();
+        acc.num += power + marginal.cov.trace().re;
+        acc.den += marginal.dim() as f64;
+        Ok(())
+    }
+
+    fn m_step(&mut self, acc: &SuffStats) -> Result<f64> {
+        let Some(ratio) = acc.ratio() else {
+            bail!("process-noise M-step with no accumulated sections");
+        };
+        self.q = ratio.max(self.floor);
+        Ok(self.q)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scalar AR / channel coefficient
+// ---------------------------------------------------------------------
+
+/// Unknown real scalar coefficient `θ` of a transition
+/// `x_cur = θ x_prev + w` (an AR(1) memory / fading-channel
+/// coefficient).
+///
+/// E-step from the joint posterior moments of the pair:
+/// numerator `Re⟨m_cur, m_prev⟩ + Re tr Cov(x_cur, x_prev)`,
+/// denominator `‖m_prev‖² + Re tr V_prev`; M-step `θ' = num / den` —
+/// the scalar least-squares projection under the posterior.
+#[derive(Clone, Copy, Debug)]
+pub struct ScalarCoeff {
+    theta: f64,
+}
+
+impl ScalarCoeff {
+    /// Start the estimate at `theta0`.
+    pub fn new(theta0: f64) -> Self {
+        ScalarCoeff { theta: theta0 }
+    }
+}
+
+impl EmParameter for ScalarCoeff {
+    fn name(&self) -> &str {
+        "scalar_coeff"
+    }
+
+    fn value(&self) -> f64 {
+        self.theta
+    }
+
+    fn accumulate(&self, ev: &Evidence, acc: &mut SuffStats) -> Result<()> {
+        let Evidence::Pair { cur_mean, prev_mean, cross_cov, prev_cov } = ev else {
+            bail!("scalar coefficient needs Pair evidence");
+        };
+        if cur_mean.len() != prev_mean.len() {
+            bail!(
+                "pair evidence dims differ: {} vs {}",
+                cur_mean.len(),
+                prev_mean.len()
+            );
+        }
+        let cross_mean: f64 = cur_mean
+            .iter()
+            .zip(*prev_mean)
+            .map(|(c, p)| (*c * p.conj()).re)
+            .sum();
+        let prev_power: f64 = prev_mean.iter().map(|p| p.abs2()).sum();
+        acc.num += cross_mean + cross_cov.trace().re;
+        acc.den += prev_power + prev_cov.trace().re;
+        Ok(())
+    }
+
+    fn m_step(&mut self, acc: &SuffStats) -> Result<f64> {
+        let Some(ratio) = acc.ratio() else {
+            bail!("scalar-coefficient M-step with no accumulated sections");
+        };
+        self.theta = ratio;
+        Ok(self.theta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::assert_close;
+
+    #[test]
+    fn suffstats_ratio_and_discount() {
+        let mut s = SuffStats::default();
+        assert!(s.ratio().is_none());
+        s.num = 6.0;
+        s.den = 3.0;
+        assert_close(s.ratio().unwrap(), 2.0, 1e-12);
+        s.discount(0.5);
+        assert_close(s.num, 3.0, 1e-12);
+        assert_close(s.den, 1.5, 1e-12);
+        let mut t = SuffStats { num: 1.0, den: 0.5 };
+        t.merge(&s);
+        assert_close(t.ratio().unwrap(), 2.0, 1e-12);
+    }
+
+    #[test]
+    fn obs_noise_exact_on_point_posterior() {
+        // posterior collapsed on the true state: residual power is the
+        // exact noise sample, so sigma2' = |y - A x|^2 / count
+        let n = 3;
+        let x: Vec<c64> = (0..n).map(|i| c64::new(i as f64, -1.0)).collect();
+        let marginal = GaussMessage::new(x.clone(), CMatrix::zeros(n, n));
+        let a = CMatrix::identity(n);
+        let y: Vec<c64> = x.iter().map(|v| *v + c64::new(0.2, 0.0)).collect();
+        let observed: Vec<usize> = (0..n).collect();
+        let mut p = ObsNoiseVar::new(1.0);
+        let mut acc = SuffStats::default();
+        p.accumulate(
+            &Evidence::Observation { marginal: &marginal, a: &a, y: &y, observed: &observed },
+            &mut acc,
+        )
+        .unwrap();
+        let new = p.m_step(&acc).unwrap();
+        assert_close(new, 0.04, 1e-12);
+        assert_close(p.value(), 0.04, 1e-12);
+    }
+
+    #[test]
+    fn obs_noise_adds_posterior_uncertainty() {
+        // vague posterior: E|r|^2 picks up A V A^H even with r = 0
+        let n = 2;
+        let marginal = GaussMessage::isotropic(n, 0.5);
+        let a = CMatrix::identity(n);
+        let y = vec![c64::ZERO; n];
+        let observed = [0usize];
+        let mut p = ObsNoiseVar::new(1.0);
+        let mut acc = SuffStats::default();
+        p.accumulate(
+            &Evidence::Observation { marginal: &marginal, a: &a, y: &y, observed: &observed },
+            &mut acc,
+        )
+        .unwrap();
+        assert_close(p.m_step(&acc).unwrap(), 0.5, 1e-12);
+    }
+
+    #[test]
+    fn obs_noise_rejects_wrong_evidence() {
+        let marginal = GaussMessage::isotropic(2, 1.0);
+        let p = ObsNoiseVar::new(1.0);
+        let mut acc = SuffStats::default();
+        assert!(p.accumulate(&Evidence::Noise { marginal: &marginal }, &mut acc).is_err());
+    }
+
+    #[test]
+    fn process_noise_is_marginal_power() {
+        let mut m = GaussMessage::isotropic(4, 0.25); // tr V = 1.0
+        m.mean[0] = c64::new(2.0, 0.0); // power 4.0
+        let mut p = ProcessNoiseVar::new(1.0);
+        let mut acc = SuffStats::default();
+        p.accumulate(&Evidence::Noise { marginal: &m }, &mut acc).unwrap();
+        // (4.0 + 1.0) / 4 components
+        assert_close(p.m_step(&acc).unwrap(), 1.25, 1e-12);
+    }
+
+    #[test]
+    fn m_step_floors_at_positive_variance() {
+        let m = GaussMessage::isotropic(2, 0.0);
+        let mut p = ProcessNoiseVar::new(1.0).with_floor(1e-6);
+        let mut acc = SuffStats::default();
+        p.accumulate(&Evidence::Noise { marginal: &m }, &mut acc).unwrap();
+        assert_close(p.m_step(&acc).unwrap(), 1e-6, 1e-18);
+    }
+
+    #[test]
+    fn scalar_coeff_recovers_exact_ratio() {
+        // deterministic pair x_cur = 0.7 x_prev (zero covariances):
+        // the projection is exactly 0.7
+        let n = 3;
+        let prev: Vec<c64> = (1..=n).map(|i| c64::new(i as f64, 0.5)).collect();
+        let cur: Vec<c64> = prev.iter().map(|p| *p * 0.7).collect();
+        let z = CMatrix::zeros(n, n);
+        let mut p = ScalarCoeff::new(0.0);
+        let mut acc = SuffStats::default();
+        p.accumulate(
+            &Evidence::Pair { cur_mean: &cur, prev_mean: &prev, cross_cov: &z, prev_cov: &z },
+            &mut acc,
+        )
+        .unwrap();
+        assert_close(p.m_step(&acc).unwrap(), 0.7, 1e-12);
+    }
+
+    #[test]
+    fn scalar_coeff_shrinks_under_posterior_uncertainty() {
+        // same means, but prev carries posterior variance: the projection
+        // shrinks toward zero (den grows, num does not)
+        let n = 2;
+        let prev: Vec<c64> = vec![c64::new(1.0, 0.0); n];
+        let cur: Vec<c64> = prev.iter().map(|p| *p * 0.7).collect();
+        let z = CMatrix::zeros(n, n);
+        let v = CMatrix::scaled_identity(n, 1.0);
+        let mut p = ScalarCoeff::new(0.0);
+        let mut acc = SuffStats::default();
+        p.accumulate(
+            &Evidence::Pair { cur_mean: &cur, prev_mean: &prev, cross_cov: &z, prev_cov: &v },
+            &mut acc,
+        )
+        .unwrap();
+        // num = 1.4, den = 2 + 2
+        assert_close(p.m_step(&acc).unwrap(), 0.35, 1e-12);
+    }
+
+    #[test]
+    fn empty_m_step_is_an_error() {
+        let mut p = ObsNoiseVar::new(0.1);
+        assert!(p.m_step(&SuffStats::default()).is_err());
+        let mut q = ScalarCoeff::new(0.1);
+        assert!(q.m_step(&SuffStats::default()).is_err());
+    }
+}

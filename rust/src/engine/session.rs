@@ -55,6 +55,7 @@ impl std::fmt::Display for EngineKind {
 
 /// An execution engine: everything that can run a workload model.
 pub trait Engine {
+    /// Which engine this is (reporting, routing, conformance).
     fn kind(&self) -> EngineKind;
 
     /// Does this engine execute a compiled FGP program? (Controls whether
@@ -103,6 +104,7 @@ pub trait Engine {
 /// elimination order bit-for-bit in f64).
 #[derive(Default)]
 pub struct GoldenEngine {
+    /// Mirror the device's Faddeev elimination order in f64.
     pub faddeev: bool,
 }
 
@@ -141,10 +143,12 @@ pub struct FgpSimEngine {
 }
 
 impl FgpSimEngine {
+    /// Engine over a fresh simulator with the given configuration.
     pub fn new(config: FgpConfig) -> Self {
         FgpSimEngine { fgp: Fgp::new(config), loaded: None }
     }
 
+    /// The simulator's configuration.
     pub fn config(&self) -> &FgpConfig {
         &self.fgp.config
     }
@@ -347,6 +351,7 @@ pub struct XlaEngine {
 }
 
 impl XlaEngine {
+    /// Engine owning its PJRT runtime.
     pub fn new(rt: RuntimeClient) -> Self {
         XlaEngine { rt: Rc::new(rt) }
     }
@@ -356,6 +361,7 @@ impl XlaEngine {
         XlaEngine { rt }
     }
 
+    /// The underlying PJRT runtime.
     pub fn runtime(&self) -> &RuntimeClient {
         &self.rt
     }
@@ -505,7 +511,9 @@ fn collect_outputs(
 /// Program-cache counters (observability for the serving layer).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
+    /// Programs served from cache.
     pub hits: u64,
+    /// Programs compiled because no cached entry matched.
     pub misses: u64,
     /// Distinct compiled programs resident.
     pub programs: usize,
@@ -515,6 +523,7 @@ pub struct CacheStats {
 /// serving/benchmark layers report.
 #[derive(Clone, Debug)]
 pub struct RunReport<O> {
+    /// The workload's typed outcome.
     pub outcome: O,
     /// The workload's scalar quality metric (lower is better).
     pub quality: f64,
@@ -522,9 +531,11 @@ pub struct RunReport<O> {
     pub cycles: u64,
     /// Sections (store handshakes) the device committed.
     pub sections: u64,
+    /// Simulated cycles per committed section.
     pub cycles_per_section: u64,
     /// Compile statistics when a program was compiled or fetched.
     pub compile_stats: Option<CompileStats>,
+    /// Engine that executed the run.
     pub engine: EngineKind,
     /// True when the compiled program came from the session cache.
     pub cached: bool,
@@ -534,8 +545,11 @@ pub struct RunReport<O> {
 /// raw models through this without the [`Workload`] trait).
 #[derive(Clone, Debug)]
 pub struct Dispatch {
+    /// Raw execution result (outputs + device stats).
     pub exec: Execution,
+    /// Compile statistics when a program was compiled or fetched.
     pub compile_stats: Option<CompileStats>,
+    /// True when the program came from the session cache.
     pub cached: bool,
 }
 
@@ -561,6 +575,7 @@ pub struct Session {
 }
 
 impl Session {
+    /// A session over an explicit engine.
     pub fn new(engine: Box<dyn Engine>) -> Self {
         Session {
             engine,
@@ -597,6 +612,7 @@ impl Session {
         Session::new(Box::new(XlaEngine::new(rt)))
     }
 
+    /// Which engine this session drives.
     pub fn engine_kind(&self) -> EngineKind {
         self.engine.kind()
     }
@@ -606,6 +622,7 @@ impl Session {
         self.engine.device_n()
     }
 
+    /// Program-cache counters (hits, misses, resident programs).
     pub fn cache_stats(&self) -> CacheStats {
         CacheStats { hits: self.hits, misses: self.misses, programs: self.cache.len() }
     }

@@ -89,6 +89,7 @@ pub struct StreamRun {
 /// typed outcome plus everything the serving and benchmark layers report.
 #[derive(Clone, Debug)]
 pub struct StreamReport<O> {
+    /// The workload's typed stream outcome.
     pub outcome: O,
     /// Recursive state after the final sample (hand it to a follow-up
     /// stream to keep filtering).
@@ -108,6 +109,7 @@ pub struct StreamReport<O> {
     pub compiles: u64,
     /// Stream programs served from the session cache instead.
     pub cache_hits: u64,
+    /// Engine that served the stream.
     pub engine: EngineKind,
 }
 
@@ -195,7 +197,9 @@ pub trait StreamingWorkload {
 /// inputs and every sample's streamed messages/states in place, so the
 /// steady-state loop allocates no fresh model per dispatch.
 pub struct StreamBinder {
+    /// The chunk model's factor graph (streamed states rebound in place).
     pub graph: FactorGraph,
+    /// The chunk model's schedule.
     pub schedule: Schedule,
     /// Input bindings, refreshed by [`StreamBinder::bind`].
     pub inputs: HashMap<MsgId, GaussMessage>,

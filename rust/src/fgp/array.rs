@@ -120,17 +120,23 @@ pub enum Plane {
 /// The systolic array: value planes + timing.
 #[derive(Clone, Debug)]
 pub struct SystolicArray {
+    /// Matrix dimension the array is configured for.
     pub n: usize,
+    /// Datapath fixed-point format.
     pub fmt: QFormat,
+    /// Per-operation cycle model.
     pub timing: TimingModel,
     /// Matrix planes (row-major n x n).
     pub accum: Vec<CFix>,
+    /// Shift plane (operand staging), row-major n x n.
     pub shift: Vec<CFix>,
     /// Mean-pipeline planes (n).
     pub vaccum: Vec<CFix>,
+    /// Mean-pipeline shift plane (n).
     pub vshift: Vec<CFix>,
     /// Last-written planes (what `smm` commits).
     pub last_mat: Plane,
+    /// Last-written mean plane (what `smm` commits).
     pub last_vec: Plane,
     /// Reusable output/working buffers (perf: zero steady-state alloc).
     scratch_mat: Vec<CFix>,
@@ -141,11 +147,14 @@ pub struct SystolicArray {
 /// A matrix operand streamed into the array (already transposed/negated
 /// by the Transpose/Select units if requested).
 pub struct MatOperand<'a> {
+    /// Operand values, row-major n x n.
     pub data: &'a [CFix],
+    /// Read through the Transpose unit (Hermitian transpose).
     pub herm: bool,
 }
 
 impl SystolicArray {
+    /// An array of dimension `n` with zeroed planes.
     pub fn new(n: usize, fmt: QFormat, timing: TimingModel) -> Self {
         SystolicArray {
             n,

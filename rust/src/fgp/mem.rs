@@ -21,6 +21,7 @@ pub struct MsgSlot {
 }
 
 impl MsgSlot {
+    /// A zeroed slot for dimension `n`.
     pub fn zero(n: usize, fmt: QFormat) -> Self {
         MsgSlot { v: vec![CFix::zero(fmt); n * n], m: vec![CFix::zero(fmt); n] }
     }
@@ -68,16 +69,20 @@ impl MsgSlot {
 /// Message memory: addressable slots behind the Data-in/out ports.
 #[derive(Clone, Debug)]
 pub struct MessageMemory {
+    /// Message dimension per slot.
     pub n: usize,
+    /// Storage fixed-point format.
     pub fmt: QFormat,
     slots: Vec<MsgSlot>,
 }
 
 impl MessageMemory {
+    /// A zeroed memory of `num_slots` slots.
     pub fn new(n: usize, fmt: QFormat, num_slots: usize) -> Self {
         MessageMemory { n, fmt, slots: vec![MsgSlot::zero(n, fmt); num_slots] }
     }
 
+    /// Number of addressable slots.
     pub fn num_slots(&self) -> usize {
         self.slots.len()
     }
@@ -87,6 +92,7 @@ impl MessageMemory {
         self.slots.len() * MsgSlot::bits(self.n, self.fmt)
     }
 
+    /// Write a full slot (covariance + mean planes).
     pub fn write(&mut self, slot: u8, data: MsgSlot) {
         assert_eq!(data.v.len(), self.n * self.n);
         assert_eq!(data.m.len(), self.n);
@@ -99,6 +105,7 @@ impl MessageMemory {
         self.write(slot, MsgSlot::from_message(msg, self.fmt));
     }
 
+    /// Read a slot's raw fixed-point planes.
     pub fn read(&self, slot: u8) -> &MsgSlot {
         &self.slots[slot as usize]
     }
@@ -112,24 +119,30 @@ impl MessageMemory {
 /// State memory: the per-node A matrices (Fig. 5 "Mem A").
 #[derive(Clone, Debug)]
 pub struct StateMemory {
+    /// Matrix dimension per slot.
     pub n: usize,
+    /// Storage fixed-point format.
     pub fmt: QFormat,
     slots: Vec<Vec<CFix>>,
 }
 
 impl StateMemory {
+    /// A zeroed state memory of `num_slots` slots.
     pub fn new(n: usize, fmt: QFormat, num_slots: usize) -> Self {
         StateMemory { n, fmt, slots: vec![vec![CFix::zero(fmt); n * n]; num_slots] }
     }
 
+    /// Number of addressable slots.
     pub fn num_slots(&self) -> usize {
         self.slots.len()
     }
 
+    /// Total storage in bits (capacity accounting).
     pub fn bits(&self) -> usize {
         self.slots.len() * self.n * self.n * 2 * self.fmt.width() as usize
     }
 
+    /// Quantize and store an n x n state matrix.
     pub fn write_matrix(&mut self, slot: u8, a: &CMatrix) {
         assert_eq!((a.rows, a.cols), (self.n, self.n), "state matrix must be n x n");
         let mut v = Vec::with_capacity(self.n * self.n);
@@ -142,6 +155,7 @@ impl StateMemory {
         self.slots[slot as usize] = v;
     }
 
+    /// Read a slot's raw fixed-point values.
     pub fn read(&self, slot: u8) -> &[CFix] {
         &self.slots[slot as usize]
     }
@@ -150,6 +164,7 @@ impl StateMemory {
 /// Program memory: 64-bit instruction words plus the prg directory.
 #[derive(Clone, Debug, Default)]
 pub struct ProgramMemory {
+    /// Raw 64-bit instruction words.
     pub words: Vec<u64>,
 }
 
@@ -162,10 +177,12 @@ impl ProgramMemory {
         Ok(self.words.len())
     }
 
+    /// Total storage in bits (capacity accounting).
     pub fn bits(&self) -> usize {
         self.words.len() * 64
     }
 
+    /// Fetch the instruction word at `addr`, if in range.
     pub fn fetch(&self, addr: usize) -> Option<u64> {
         self.words.get(addr).copied()
     }

@@ -33,6 +33,7 @@ pub struct FgpConfig {
     pub msg_slots: usize,
     /// State-memory slots.
     pub state_slots: usize,
+    /// Per-operation cycle model.
     pub timing: TimingModel,
 }
 
@@ -51,14 +52,19 @@ impl Default for FgpConfig {
 /// Errors the processor can raise.
 #[derive(Debug, thiserror::Error)]
 pub enum FgpError {
+    /// Instruction decode failed.
     #[error("isa error: {0}")]
     Isa(#[from] IsaError),
+    /// `start_program` named an id the PM directory lacks.
     #[error("no program with id {0} loaded")]
     NoSuchProgram(u8),
+    /// A message/state slot address beyond the configured memory.
     #[error("slot {0} out of range")]
     BadSlot(u8),
+    /// The datapath raised an arithmetic error mid-program.
     #[error("datapath error at PM[{addr}]: {msg}")]
     Datapath { addr: usize, msg: String },
+    /// A command arrived while a program was running.
     #[error("processor is busy")]
     Busy,
 }
@@ -67,8 +73,11 @@ pub enum FgpError {
 /// commands").
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FsmState {
+    /// Awaiting commands.
     Idle,
+    /// Executing a program.
     Running,
+    /// Program finished; results readable.
     Done,
 }
 
@@ -92,11 +101,17 @@ pub enum Command {
 /// Status replies (§III: "Each command gets replied by a status message").
 #[derive(Clone, Debug)]
 pub enum Reply {
+    /// Command accepted.
     Ok,
+    /// Program image loaded (instruction count echoed).
     Loaded { instrs: usize },
+    /// Program ran to completion.
     Finished(RunStats),
+    /// A message read back from the memory.
     Message(GaussMessage),
+    /// Current FSM state and cycle counter.
     Status { state: FsmState, cycles: u64 },
+    /// Command failed (human-readable reason).
     Error(String),
 }
 
@@ -143,7 +158,9 @@ impl Reply {
 /// Cycle/instruction statistics for one program run.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct RunStats {
+    /// Total simulated cycles.
     pub cycles: u64,
+    /// Instructions executed.
     pub instructions: u64,
     /// Datapath-only cycles (excludes fetch and store).
     pub datapath_cycles: u64,
@@ -156,6 +173,7 @@ pub struct RunStats {
 /// shared slots (see compiler docs on streaming). Return `false` to stop
 /// after the current data (end of stream).
 pub trait HostFeed {
+    /// Refill shared slots before `section` executes; false ends the stream.
     fn feed(&mut self, section: usize, mem: &mut MessageMemory, states: &mut StateMemory) -> bool;
 }
 
@@ -201,10 +219,15 @@ impl OpScratch {
 
 /// The FGP processor.
 pub struct Fgp {
+    /// Dimensions, capacities and timing the device was built with.
     pub config: FgpConfig,
+    /// Program memory (instruction words + prg directory).
     pub pm: ProgramMemory,
+    /// Message memory behind the Data-in/out ports.
     pub msgmem: MessageMemory,
+    /// State memory (the per-node A matrices).
     pub statemem: StateMemory,
+    /// The systolic array datapath.
     pub array: SystolicArray,
     state: FsmState,
     total_cycles: u64,
@@ -212,6 +235,7 @@ pub struct Fgp {
 }
 
 impl Fgp {
+    /// A powered-on idle device.
     pub fn new(config: FgpConfig) -> Self {
         Fgp {
             pm: ProgramMemory::default(),
@@ -225,6 +249,7 @@ impl Fgp {
         }
     }
 
+    /// Current FSM state.
     pub fn state(&self) -> FsmState {
         self.state
     }

@@ -13,7 +13,9 @@ use crate::isa::{Instr, Opcode};
 /// Per-opcode aggregate.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct OpcodeStats {
+    /// Instructions executed with this opcode.
     pub count: u64,
+    /// Cycles spent in this opcode.
     pub cycles: u64,
 }
 
@@ -24,7 +26,9 @@ pub struct TraceRecord {
     pub addr: usize,
     /// Cycle at which execution of this instruction began.
     pub start_cycle: u64,
+    /// Cycles the instruction occupied the datapath.
     pub cycles: u64,
+    /// The decoded instruction.
     pub instr: Instr,
 }
 
@@ -43,6 +47,7 @@ impl Profiler {
         Profiler { per_opcode: [OpcodeStats::default(); 7], records: Vec::new(), capacity, dropped: 0 }
     }
 
+    /// Record one executed instruction.
     pub fn record(&mut self, addr: usize, start_cycle: u64, cycles: u64, instr: &Instr) {
         let idx = opcode_index(instr);
         self.per_opcode[idx].count += 1;
@@ -54,22 +59,27 @@ impl Profiler {
         }
     }
 
+    /// Aggregate statistics for one opcode.
     pub fn stats(&self, op: Opcode) -> OpcodeStats {
         self.per_opcode[op as usize]
     }
 
+    /// Total cycles across all opcodes.
     pub fn total_cycles(&self) -> u64 {
         self.per_opcode.iter().map(|s| s.cycles).sum()
     }
 
+    /// Total instructions across all opcodes.
     pub fn total_instructions(&self) -> u64 {
         self.per_opcode.iter().map(|s| s.count).sum()
     }
 
+    /// Per-instruction records (up to the capacity).
     pub fn records(&self) -> &[TraceRecord] {
         &self.records
     }
 
+    /// Records discarded after the capacity filled.
     pub fn dropped(&self) -> u64 {
         self.dropped
     }

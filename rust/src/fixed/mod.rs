@@ -24,11 +24,14 @@ pub use divider::Radix2Divider;
 /// wider formats exist for precision-ablation experiments, E9).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct QFormat {
+    /// Integer bits (excluding sign).
     pub int_bits: u32,
+    /// Fractional bits.
     pub frac_bits: u32,
 }
 
 impl QFormat {
+    /// A format with the given integer/fraction split.
     pub const fn new(int_bits: u32, frac_bits: u32) -> Self {
         assert!(1 + int_bits + frac_bits <= 32, "QFormat must fit 32 bits");
         QFormat { int_bits, frac_bits }
@@ -76,24 +79,30 @@ impl Exp2Neg for i32 {
 /// accumulator in front of the saturating output stage.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Fix {
+    /// Raw scaled integer value.
     pub raw: i64,
+    /// The format `raw` is scaled in.
     pub fmt: QFormat,
 }
 
 impl Fix {
+    /// Quantize an f64 (round-to-nearest, saturating).
     pub fn from_f64(x: f64, fmt: QFormat) -> Self {
         let scaled = (x * (1i64 << fmt.frac_bits) as f64).round() as i64;
         Fix { raw: scaled.clamp(fmt.min_raw(), fmt.max_raw()), fmt }
     }
 
+    /// The exact real value this fixed-point number represents.
     pub fn to_f64(self) -> f64 {
         self.raw as f64 / (1i64 << self.fmt.frac_bits) as f64
     }
 
+    /// Zero in the given format.
     pub fn zero(fmt: QFormat) -> Self {
         Fix { raw: 0, fmt }
     }
 
+    /// One in the given format.
     pub fn one(fmt: QFormat) -> Self {
         Fix::from_f64(1.0, fmt)
     }
@@ -128,14 +137,17 @@ impl Fix {
         Fix::saturate(rounded, self.fmt)
     }
 
+    /// Saturating negation.
     pub fn neg(self) -> Fix {
         Fix::saturate(-self.raw, self.fmt)
     }
 
+    /// Saturating absolute value.
     pub fn abs(self) -> Fix {
         Fix::saturate(self.raw.abs(), self.fmt)
     }
 
+    /// True when the raw value is exactly zero.
     pub fn is_zero(self) -> bool {
         self.raw == 0
     }
@@ -152,43 +164,54 @@ impl Fix {
 /// Complex fixed-point value.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct CFix {
+    /// Real part.
     pub re: Fix,
+    /// Imaginary part.
     pub im: Fix,
 }
 
 impl CFix {
+    /// A complex value from parts.
     pub fn new(re: Fix, im: Fix) -> Self {
         CFix { re, im }
     }
 
+    /// Quantize a complex f64 pair.
     pub fn from_f64(re: f64, im: f64, fmt: QFormat) -> Self {
         CFix { re: Fix::from_f64(re, fmt), im: Fix::from_f64(im, fmt) }
     }
 
+    /// Complex zero in the given format.
     pub fn zero(fmt: QFormat) -> Self {
         CFix { re: Fix::zero(fmt), im: Fix::zero(fmt) }
     }
 
+    /// Complex one in the given format.
     pub fn one(fmt: QFormat) -> Self {
         CFix { re: Fix::one(fmt), im: Fix::zero(fmt) }
     }
 
+    /// The exact (re, im) this value represents.
     pub fn to_c64(self) -> (f64, f64) {
         (self.re.to_f64(), self.im.to_f64())
     }
 
+    /// Component-wise saturating add.
     pub fn add(self, rhs: CFix) -> CFix {
         CFix { re: self.re.add(rhs.re), im: self.im.add(rhs.im) }
     }
 
+    /// Component-wise saturating subtract.
     pub fn sub(self, rhs: CFix) -> CFix {
         CFix { re: self.re.sub(rhs.re), im: self.im.sub(rhs.im) }
     }
 
+    /// Component-wise saturating negation.
     pub fn neg(self) -> CFix {
         CFix { re: self.re.neg(), im: self.im.neg() }
     }
 
+    /// Complex conjugate.
     pub fn conj(self) -> CFix {
         CFix { re: self.re, im: self.im.neg() }
     }
@@ -223,6 +246,7 @@ impl CFix {
         CFix { re: num_re.div(den), im: num_im.div(den) }
     }
 
+    /// True when both components are exactly zero.
     pub fn is_zero(self) -> bool {
         self.re.is_zero() && self.im.is_zero()
     }

@@ -43,7 +43,9 @@ pub enum Direction {
 /// One directed edge of the GBP message graph.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct EdgeKey {
+    /// The factor whose message this is.
     pub factor: FactorId,
+    /// Which way along the factor the message flows.
     pub dir: Direction,
 }
 
@@ -113,6 +115,7 @@ impl MessageState {
         }
     }
 
+    /// Current message on a directed edge.
     pub fn get(&self, e: EdgeKey) -> &GaussMessage {
         match e.dir {
             Direction::Forward => &self.forward[e.factor.0],
@@ -120,6 +123,7 @@ impl MessageState {
         }
     }
 
+    /// Replace the message on a directed edge.
     pub fn set(&mut self, e: EdgeKey, msg: GaussMessage) {
         match e.dir {
             Direction::Forward => self.forward[e.factor.0] = msg,
@@ -131,7 +135,9 @@ impl MessageState {
 /// A lowered update: either a workload for the engine, or (for a
 /// product of zero factors) the base message itself — nothing to run.
 pub enum BuiltRequest {
+    /// Nothing to execute: the base message is the result.
     Trivial(GaussMessage),
+    /// A lowered model for the engine to run.
     Run(WorkloadRequest),
 }
 
@@ -151,6 +157,7 @@ pub struct RelinContext {
 }
 
 impl RelinContext {
+    /// No linearizations (linear models).
     pub fn empty() -> Self {
         RelinContext { unary: HashMap::new(), pairwise: HashMap::new(), base_var: 10.0 }
     }
@@ -482,6 +489,7 @@ impl RoundExecutor for Session {
 /// asynchronously (the farm's routing policy spreads them over
 /// devices), then collected in order.
 pub struct FarmExecutor<'f> {
+    /// The farm rounds are sharded over.
     pub farm: &'f FgpFarm,
 }
 

@@ -27,6 +27,30 @@
 //!   [`crate::coordinator::FgpFarm`] sharding a round across devices;
 //! * [`solver`] — the iteration loop ([`GbpSolver`]) and its report.
 //!
+//! ```
+//! use fgp_repro::engine::Session;
+//! use fgp_repro::gbp::{solve, GbpModel, GbpOptions};
+//! use fgp_repro::gmp::matrix::CMatrix;
+//! use fgp_repro::gmp::message::GaussMessage;
+//!
+//! // a two-variable tree: a proper prior on each, one identity link
+//! let n = 4;
+//! let mut model = GbpModel::new(n);
+//! let a = model.add_variable(Some(GaussMessage::isotropic(n, 1.0)), "a").unwrap();
+//! let b = model.add_variable(Some(GaussMessage::isotropic(n, 2.0)), "b").unwrap();
+//! model
+//!     .add_pairwise(a, b, CMatrix::identity(n), GaussMessage::isotropic(n, 0.1))
+//!     .unwrap();
+//!
+//! // on a tree the GBP fixed point equals the exact dense marginals
+//! let dense = model.dense_marginals().unwrap();
+//! let report = solve(model, GbpOptions::default(), &mut Session::golden()).unwrap();
+//! assert!(report.converged());
+//! for (belief, exact) in report.marginals().iter().zip(&dense) {
+//!     assert!(belief.dist(exact) < 1e-9);
+//! }
+//! ```
+//!
 //! Contract, pinned by `rust/tests/integration_gbp.rs` and
 //! `rust/tests/property_gbp.rs`:
 //!

@@ -29,6 +29,7 @@ pub struct Variable {
     /// Proper prior, if any. Variables without a prior must have at
     /// least two pairwise factors (so every cavity stays proper).
     pub prior: Option<GaussMessage>,
+    /// Human-readable name (diagnostics).
     pub label: String,
 }
 
@@ -99,22 +100,27 @@ impl GbpModel {
         self.n
     }
 
+    /// Number of variables.
     pub fn num_vars(&self) -> usize {
         self.vars.len()
     }
 
+    /// Number of factors.
     pub fn num_factors(&self) -> usize {
         self.factors.len()
     }
 
+    /// The variable behind an id.
     pub fn variable(&self, v: VarId) -> &Variable {
         &self.vars[v.0]
     }
 
+    /// The factor behind an id.
     pub fn factor(&self, f: FactorId) -> &Factor {
         &self.factors[f.0]
     }
 
+    /// All factors in insertion order.
     pub fn factors(&self) -> &[Factor] {
         &self.factors
     }

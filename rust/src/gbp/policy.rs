@@ -39,6 +39,7 @@ pub enum IterationPolicy {
 }
 
 impl IterationPolicy {
+    /// The policy's damping factor η.
     pub fn eta(&self) -> f64 {
         match self {
             IterationPolicy::Synchronous { eta_damping }
@@ -59,6 +60,7 @@ pub struct ConvergenceCriteria {
     /// Belief-delta norm below which the solve has converged (max over
     /// variables of mean/covariance max-abs change per iteration).
     pub tol: f64,
+    /// Iteration budget before the solve stops unconverged.
     pub max_iters: usize,
     /// Belief delta above which the solve is declared divergent (loopy
     /// GBP is not guaranteed to converge; catching the blow-up beats
@@ -75,19 +77,25 @@ impl Default for ConvergenceCriteria {
 /// Why the solver stopped.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StopReason {
+    /// Belief delta fell below the tolerance (with policy quiescence).
     Converged,
+    /// The iteration budget ran out before the tolerance was met.
     MaxIters,
+    /// Belief deltas exceeded the divergence bound or became non-finite.
     Diverged,
 }
 
 /// Tracks belief deltas against the criteria.
 #[derive(Clone, Debug)]
 pub struct ConvergenceMonitor {
+    /// The stopping criteria in force.
     pub criteria: ConvergenceCriteria,
+    /// Belief delta observed per iteration.
     pub history: Vec<f64>,
 }
 
 impl ConvergenceMonitor {
+    /// A monitor with no history yet.
     pub fn new(criteria: ConvergenceCriteria) -> Self {
         ConvergenceMonitor { criteria, history: Vec::new() }
     }
@@ -110,10 +118,12 @@ impl ConvergenceMonitor {
         None
     }
 
+    /// Iterations observed so far.
     pub fn iterations(&self) -> usize {
         self.history.len()
     }
 
+    /// The last observed belief delta (∞ before any iteration).
     pub fn final_delta(&self) -> f64 {
         self.history.last().copied().unwrap_or(f64::INFINITY)
     }

@@ -30,7 +30,9 @@ use super::policy::{damp, ConvergenceCriteria, ConvergenceMonitor, IterationPoli
 /// Solver configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct GbpOptions {
+    /// Which edges update per round, and how proposals commit.
     pub policy: IterationPolicy,
+    /// Stopping criteria (tolerance, max iterations, divergence).
     pub criteria: ConvergenceCriteria,
     /// Variance of the vague zero-mean messages every edge starts from.
     pub init_var: f64,
@@ -61,7 +63,9 @@ impl Default for GbpOptions {
 pub struct GbpReport {
     /// Posterior marginal per variable, in variable order.
     pub beliefs: Vec<GaussMessage>,
+    /// Iterations executed.
     pub iterations: usize,
+    /// Why the solver stopped.
     pub stop: StopReason,
     /// Belief delta of the last iteration.
     pub final_delta: f64,
@@ -76,8 +80,18 @@ pub struct GbpReport {
 }
 
 impl GbpReport {
+    /// True when the solver reached the belief-delta tolerance.
     pub fn converged(&self) -> bool {
         self.stop == StopReason::Converged
+    }
+
+    /// Posterior marginals in variable order — the evidence surface an
+    /// EM E-step ([`crate::em`]) consumes: on tree models the beliefs
+    /// are exact marginals, so EM over them is exact; on cyclic models
+    /// the means are exact and covariances approximate (Weiss & Freeman
+    /// 2001), which EM inherits.
+    pub fn marginals(&self) -> &[GaussMessage] {
+        &self.beliefs
     }
 }
 
@@ -102,6 +116,7 @@ pub struct GbpSolver {
 }
 
 impl GbpSolver {
+    /// Solver with the default first-order (EKF) linearizer.
     pub fn new(model: GbpModel, opts: GbpOptions) -> Result<Self> {
         Self::with_linearizer(model, opts, Arc::new(FirstOrder))
     }
@@ -140,6 +155,7 @@ impl GbpSolver {
         })
     }
 
+    /// The model being solved.
     pub fn model(&self) -> &GbpModel {
         &self.model
     }
@@ -155,6 +171,14 @@ impl GbpSolver {
         &self.beliefs
     }
 
+    /// Alias of [`GbpSolver::beliefs`] naming the EM-facing contract:
+    /// the solver's beliefs are the posterior marginals an E-step
+    /// consumes (see [`GbpReport::marginals`]).
+    pub fn marginals(&self) -> &[GaussMessage] {
+        &self.beliefs
+    }
+
+    /// Directed-edge messages computed so far.
     pub fn messages_sent(&self) -> usize {
         self.messages_sent
     }

@@ -39,6 +39,7 @@ pub enum NodeKind {
 /// A node and the edges it connects.
 #[derive(Clone, Debug)]
 pub struct Node {
+    /// The node's update rule.
     pub kind: NodeKind,
     /// Incoming message edges (order is meaningful per node kind).
     pub inputs: Vec<EdgeId>,
@@ -51,6 +52,7 @@ pub struct Node {
 /// An edge: a variable of dimension `dim` with an optional external role.
 #[derive(Clone, Debug)]
 pub struct Edge {
+    /// Variable dimension.
     pub dim: usize,
     /// True if the message on this edge is loaded from outside (prior /
     /// observation) rather than produced by a node.
@@ -61,14 +63,18 @@ pub struct Edge {
     /// the host refills it via the Data-in port between loop iterations
     /// (observations of a sectioned graph — see compiler docs).
     pub stream_group: Option<u32>,
+    /// Human-readable name (diagnostics, input binding).
     pub label: String,
 }
 
 /// A factor graph plus its state-matrix table.
 #[derive(Clone, Debug, Default)]
 pub struct FactorGraph {
+    /// Nodes in insertion order.
     pub nodes: Vec<Node>,
+    /// Edges in insertion order.
     pub edges: Vec<Edge>,
+    /// State-matrix table (indexed by `StateId`).
     pub states: Vec<CMatrix>,
     /// Per-state stream group: states in the same group share one physical
     /// state-memory slot and are fed by the host per section (e.g. the
@@ -77,6 +83,7 @@ pub struct FactorGraph {
 }
 
 impl FactorGraph {
+    /// An empty graph.
     pub fn new() -> Self {
         Self::default()
     }
@@ -97,6 +104,7 @@ impl FactorGraph {
         id
     }
 
+    /// Add an internal edge of the given dimension.
     pub fn add_edge(&mut self, dim: usize, label: impl Into<String>) -> EdgeId {
         self.edges.push(Edge {
             dim,
@@ -132,6 +140,7 @@ impl FactorGraph {
         self.edges[e.0].is_output = true;
     }
 
+    /// Add a node connecting `inputs` to `output` (arity-checked).
     pub fn add_node(
         &mut self,
         kind: NodeKind,
@@ -153,6 +162,7 @@ impl FactorGraph {
         assert_eq!(inputs.len(), want, "node arity mismatch for {kind:?}");
     }
 
+    /// The state matrix behind an id.
     pub fn state(&self, id: StateId) -> &CMatrix {
         &self.states[id.0]
     }

@@ -14,18 +14,24 @@ use std::ops::{Add, Div, Mul, Neg, Sub};
 #[derive(Clone, Copy, Debug, PartialEq, Default)]
 #[allow(non_camel_case_types)]
 pub struct c64 {
+    /// Real part.
     pub re: f64,
+    /// Imaginary part.
     pub im: f64,
 }
 
 impl c64 {
+    /// The additive identity.
     pub const ZERO: c64 = c64 { re: 0.0, im: 0.0 };
+    /// The multiplicative identity.
     pub const ONE: c64 = c64 { re: 1.0, im: 0.0 };
 
+    /// A complex number from parts.
     pub fn new(re: f64, im: f64) -> Self {
         c64 { re, im }
     }
 
+    /// Complex conjugate.
     pub fn conj(self) -> Self {
         c64 { re: self.re, im: -self.im }
     }
@@ -35,6 +41,7 @@ impl c64 {
         self.re * self.re + self.im * self.im
     }
 
+    /// Modulus `|z|`.
     pub fn abs(self) -> f64 {
         self.abs2().sqrt()
     }
@@ -105,16 +112,20 @@ pub type CVector = Vec<c64>;
 /// Dense row-major complex matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CMatrix {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
     data: Vec<c64>,
 }
 
 impl CMatrix {
+    /// An all-zero matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         CMatrix { rows, cols, data: vec![c64::ZERO; rows * cols] }
     }
 
+    /// The n x n identity.
     pub fn identity(n: usize) -> Self {
         let mut m = CMatrix::zeros(n, n);
         for i in 0..n {
@@ -132,6 +143,7 @@ impl CMatrix {
         m
     }
 
+    /// A matrix from row vectors (must be rectangular).
     pub fn from_rows(rows: &[Vec<c64>]) -> Self {
         let r = rows.len();
         let c = rows.first().map_or(0, |row| row.len());
@@ -139,14 +151,17 @@ impl CMatrix {
         CMatrix { rows: r, cols: c, data: rows.concat() }
     }
 
+    /// Row-major element storage.
     pub fn data(&self) -> &[c64] {
         &self.data
     }
 
+    /// Mutable row-major element storage.
     pub fn data_mut(&mut self) -> &mut [c64] {
         &mut self.data
     }
 
+    /// True when rows == cols.
     pub fn is_square(&self) -> bool {
         self.rows == self.cols
     }
@@ -173,6 +188,7 @@ impl CMatrix {
         out
     }
 
+    /// Element-wise sum.
     pub fn add(&self, rhs: &CMatrix) -> CMatrix {
         assert_eq!((self.rows, self.cols), (rhs.rows, rhs.cols));
         let mut out = self.clone();
@@ -182,6 +198,7 @@ impl CMatrix {
         out
     }
 
+    /// Element-wise difference.
     pub fn sub(&self, rhs: &CMatrix) -> CMatrix {
         assert_eq!((self.rows, self.cols), (rhs.rows, rhs.cols));
         let mut out = self.clone();
@@ -191,6 +208,7 @@ impl CMatrix {
         out
     }
 
+    /// Element-wise negation.
     pub fn neg(&self) -> CMatrix {
         let mut out = self.clone();
         for o in out.data.iter_mut() {
@@ -199,6 +217,7 @@ impl CMatrix {
         out
     }
 
+    /// Multiply every element by a real scalar.
     pub fn scale(&self, s: f64) -> CMatrix {
         let mut out = self.clone();
         for o in out.data.iter_mut() {
@@ -207,6 +226,7 @@ impl CMatrix {
         out
     }
 
+    /// Matrix product.
     pub fn matmul(&self, rhs: &CMatrix) -> CMatrix {
         assert_eq!(self.cols, rhs.rows, "matmul dim mismatch");
         let mut out = CMatrix::zeros(self.rows, rhs.cols);
@@ -224,6 +244,7 @@ impl CMatrix {
         out
     }
 
+    /// Matrix-vector product.
     pub fn matvec(&self, x: &[c64]) -> CVector {
         assert_eq!(self.cols, x.len(), "matvec dim mismatch");
         (0..self.rows)
@@ -235,6 +256,7 @@ impl CMatrix {
             .collect()
     }
 
+    /// Sum of the diagonal.
     pub fn trace(&self) -> c64 {
         assert!(self.is_square());
         (0..self.rows).map(|i| self[(i, i)]).fold(c64::ZERO, |a, b| a + b)

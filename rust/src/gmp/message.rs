@@ -17,6 +17,7 @@ pub struct GaussMessage {
 }
 
 impl GaussMessage {
+    /// A message from mean and covariance (dimensions must agree).
     pub fn new(mean: CVector, cov: CMatrix) -> Self {
         assert_eq!(mean.len(), cov.rows);
         assert!(cov.is_square());

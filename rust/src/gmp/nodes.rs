@@ -14,6 +14,7 @@ use super::message::GaussMessage;
 /// asserted because they are programming errors, not data errors).
 #[derive(Debug, thiserror::Error, PartialEq)]
 pub enum NodeError {
+    /// A matrix that must be invertible was singular (context named).
     #[error("singular matrix encountered in {0}")]
     Singular(&'static str),
 }

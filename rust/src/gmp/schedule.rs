@@ -30,8 +30,10 @@ pub struct MsgId(pub usize);
 /// a panic.
 #[derive(Debug, thiserror::Error, PartialEq)]
 pub enum ScheduleError {
+    /// A step consumed a message no earlier step produced.
     #[error("schedule step {step} uses undefined message {msg}")]
     UndefinedMessage { step: usize, msg: usize },
+    /// A node update failed (singular matrix).
     #[error(transparent)]
     Node(#[from] NodeError),
 }
@@ -39,14 +41,20 @@ pub enum ScheduleError {
 /// What a schedule step computes.
 #[derive(Clone, Debug, PartialEq)]
 pub enum StepOp {
+    /// Equality node update `Z` from `X`, `Y`.
     Equality { x: MsgId, y: MsgId },
+    /// Additive node update `Z = X + Y`.
     Add { x: MsgId, y: MsgId },
+    /// Multiplier node update `Y = A X`.
     Multiply { x: MsgId, a: StateId },
+    /// Compound observation update (multiplier into adder, observed).
     CompoundObservation { x: MsgId, y: MsgId, a: StateId },
+    /// Compound equality-multiplier update in weight form.
     CompoundEquality { x: MsgId, y: MsgId, a: StateId },
 }
 
 impl StepOp {
+    /// Message ids this op consumes.
     pub fn inputs(&self) -> Vec<MsgId> {
         match self {
             StepOp::Equality { x, y }
@@ -57,6 +65,7 @@ impl StepOp {
         }
     }
 
+    /// State matrix this op references, if any.
     pub fn state(&self) -> Option<StateId> {
         match self {
             StepOp::Multiply { a, .. }
@@ -70,14 +79,18 @@ impl StepOp {
 /// One node update in the schedule.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ScheduleStep {
+    /// The graph node this step executes.
     pub node: NodeId,
+    /// The update rule and its operands.
     pub op: StepOp,
+    /// Virtual id of the produced message.
     pub out: MsgId,
 }
 
 /// An ordered message-update schedule plus the external bindings.
 #[derive(Clone, Debug, Default)]
 pub struct Schedule {
+    /// Steps in execution order.
     pub steps: Vec<ScheduleStep>,
     /// Messages loaded before execution: (virtual id, source edge).
     pub inputs: Vec<(MsgId, EdgeId)>,

@@ -46,12 +46,14 @@ pub enum OperandSrc {
 }
 
 impl OperandSrc {
+    /// The operand's slot address.
     pub fn slot(&self) -> u8 {
         match self {
             OperandSrc::Msg(s) | OperandSrc::State(s) => *s,
         }
     }
 
+    /// True when the operand reads state memory.
     pub fn is_state(&self) -> bool {
         matches!(self, OperandSrc::State(_))
     }
@@ -110,6 +112,7 @@ pub enum Opcode {
 }
 
 impl Opcode {
+    /// Decode an opcode byte.
     pub fn from_u8(v: u8) -> Option<Opcode> {
         Some(match v {
             0 => Opcode::Halt,
@@ -127,10 +130,13 @@ impl Opcode {
 /// Errors from decoding, parsing, or mismatched expectations.
 #[derive(Debug, thiserror::Error, PartialEq)]
 pub enum IsaError {
+    /// An opcode byte outside the ISA.
     #[error("unknown opcode {0}")]
     UnknownOpcode(u8),
+    /// Reserved encoding bits were set.
     #[error("reserved bits set in instruction word {0:#018x}")]
     ReservedBits(u64),
+    /// Assembler text could not be parsed.
     #[error("parse error on line {line}: {msg}")]
     Parse { line: usize, msg: String },
     /// A host expected one instruction kind and decoded another — a

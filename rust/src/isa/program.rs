@@ -18,6 +18,7 @@ pub struct Program {
 }
 
 impl Program {
+    /// A program from an instruction list.
     pub fn new(instrs: Vec<Instr>) -> Self {
         Program { instrs }
     }
@@ -133,14 +134,17 @@ impl Program {
 /// Binary memory image (header + little-endian instruction words).
 #[derive(Clone, Debug, PartialEq)]
 pub struct MemoryImage {
+    /// Raw image bytes (header + little-endian words).
     pub bytes: Vec<u8>,
 }
 
 impl MemoryImage {
+    /// Image size in bytes.
     pub fn len(&self) -> usize {
         self.bytes.len()
     }
 
+    /// True when the image has no bytes.
     pub fn is_empty(&self) -> bool {
         self.bytes.is_empty()
     }

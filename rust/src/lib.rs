@@ -26,8 +26,10 @@
 //!   update dispatched through the engine surface), [`nonlinear`]
 //!   (pluggable EKF/sigma-point linearizers and iterated
 //!   relinearization turning nonlinear factors into cache-hitting
-//!   compound-observation sweeps), [`dsp`] baseline and [`model`]
-//!   area/technology models.
+//!   compound-observation sweeps), [`em`] (EM parameter estimation —
+//!   unknown noise variances and coefficients estimated from the
+//!   posterior marginals any session run produces, batch or online),
+//!   [`dsp`] baseline and [`model`] area/technology models.
 //! * **L2/L1 (python/, build-time only)** — the GMP compute graph in JAX
 //!   with fused Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt` and
 //!   executed from [`runtime`] via the PJRT C API. Python never runs on
@@ -67,11 +69,14 @@
 //! `BENCH_throughput.json` by `cargo bench --bench table2_throughput`
 //! (E14 in `DESIGN.md`).
 
+#![warn(missing_docs)]
+
 pub mod apps;
 pub mod benchutil;
 pub mod compiler;
 pub mod coordinator;
 pub mod dsp;
+pub mod em;
 pub mod engine;
 pub mod fixed;
 pub mod fgp;

@@ -55,12 +55,16 @@ impl Default for AreaModel {
 /// Area split of one configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct AreaBreakdown {
+    /// Memory macros (PM + message + state), mm².
     pub memories_mm2: f64,
+    /// Systolic array, mm².
     pub array_mm2: f64,
+    /// Datapath control + remaining logic, mm².
     pub control_mm2: f64,
 }
 
 impl AreaBreakdown {
+    /// Total die area, mm².
     pub fn total(&self) -> f64 {
         self.memories_mm2 + self.array_mm2 + self.control_mm2
     }

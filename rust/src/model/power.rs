@@ -18,11 +18,15 @@ use crate::paper;
 /// A processor power/energy operating point.
 #[derive(Clone, Copy, Debug)]
 pub struct PowerPoint {
+    /// Processor name (reports).
     pub name: &'static str,
+    /// Clock frequency in MHz at the native node.
     pub freq_mhz: f64,
+    /// Technology node in nm.
     pub node_nm: f64,
     /// Core power at the native node and frequency, in watts.
     pub power_w: f64,
+    /// Cycles per compound-node update.
     pub cn_cycles: u64,
 }
 

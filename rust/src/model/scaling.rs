@@ -18,6 +18,7 @@
 /// A processor operating point.
 #[derive(Clone, Copy, Debug)]
 pub struct ProcessorPoint {
+    /// Processor name (reports).
     pub name: &'static str,
     /// Clock frequency in MHz at the native node.
     pub freq_mhz: f64,

@@ -88,6 +88,7 @@ impl NonlinearProblem {
 /// linearization point — the cache-hit invariant.
 #[derive(Clone, Debug)]
 pub struct RelinSweep<'p> {
+    /// The problem this sweep linearizes.
     pub problem: &'p NonlinearProblem,
     /// Per-factor linearizations, in factor order.
     pub sections: Vec<Linearization>,
@@ -212,8 +213,11 @@ impl Default for RelinOptions {
 /// Why the driver stopped.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RelinStop {
+    /// Linearization-point movement fell below the tolerance.
     Converged,
+    /// The round budget ran out before the tolerance was met.
     MaxRounds,
+    /// Movement exceeded the divergence bound or became non-finite.
     Diverged,
 }
 
@@ -222,7 +226,9 @@ pub enum RelinStop {
 pub struct RelinReport {
     /// Posterior belief at the final linearization point.
     pub belief: GaussMessage,
+    /// Relinearization rounds executed.
     pub rounds: usize,
+    /// Why the driver stopped.
     pub stop: RelinStop,
     /// Linearization-point movement per round.
     pub history: Vec<f64>,
@@ -235,6 +241,7 @@ pub struct RelinReport {
 }
 
 impl RelinReport {
+    /// True when the driver reached the movement tolerance.
     pub fn converged(&self) -> bool {
         self.stop == RelinStop::Converged
     }
@@ -242,15 +249,19 @@ impl RelinReport {
 
 /// The relinearization loop: re-linearize → run → move the point.
 pub struct IteratedRelinearization<'l> {
+    /// Linearizer used for every factor, every round.
     pub linearizer: &'l dyn Linearizer,
+    /// Convergence configuration.
     pub opts: RelinOptions,
 }
 
 impl<'l> IteratedRelinearization<'l> {
+    /// Driver with default options.
     pub fn new(linearizer: &'l dyn Linearizer) -> Self {
         IteratedRelinearization { linearizer, opts: RelinOptions::default() }
     }
 
+    /// Driver with explicit options.
     pub fn with_options(linearizer: &'l dyn Linearizer, opts: RelinOptions) -> Self {
         IteratedRelinearization { linearizer, opts }
     }

@@ -63,6 +63,7 @@ impl fmt::Debug for NonlinearFactor {
 }
 
 impl NonlinearFactor {
+    /// A factor `z = h(x) + v` (shape-checked; `m` outputs from `n` states).
     pub fn new(n: usize, m: usize, h: HFn, z: Vec<f64>, noise_var: f64) -> Result<Self> {
         if m == 0 || m > n {
             bail!("measurement dimension m={m} must satisfy 1 <= m <= n={n}");
@@ -137,10 +138,15 @@ impl NonlinearFactor {
 /// other endpoint at its current belief mean.
 #[derive(Clone)]
 pub struct PairwiseNonlinear {
+    /// Dimension of each endpoint's state.
     pub n: usize,
+    /// Measurement dimension.
     pub m: usize,
+    /// The measurement function `h(x_from, x_to)`.
     pub h: H2Fn,
+    /// Measured value.
     pub z: Vec<f64>,
+    /// Measurement noise variance.
     pub noise_var: f64,
 }
 
@@ -156,6 +162,7 @@ impl fmt::Debug for PairwiseNonlinear {
 }
 
 impl PairwiseNonlinear {
+    /// A pairwise factor `z = h(x_from, x_to) + v` (shape-checked).
     pub fn new(n: usize, m: usize, h: H2Fn, z: Vec<f64>, noise_var: f64) -> Result<Self> {
         if m == 0 || m > n {
             bail!("measurement dimension m={m} must satisfy 1 <= m <= n={n}");

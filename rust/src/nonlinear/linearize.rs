@@ -127,6 +127,7 @@ pub struct UtStats {
 }
 
 impl SigmaPoint {
+    /// Sigma-point weights from explicit α/β/κ.
     pub fn new(alpha: f64, beta: f64, kappa: f64) -> Self {
         SigmaPoint { alpha, beta, kappa: Some(kappa) }
     }
@@ -286,7 +287,9 @@ impl Linearizer for SigmaPoint {
 /// assembles into the joint information matrix.
 #[derive(Clone, Debug)]
 pub struct PairRelin {
+    /// Linearized map of the `from` endpoint.
     pub a_from: CMatrix,
+    /// Linearized map of the `to` endpoint.
     pub a_to: CMatrix,
     /// mean = effective measurement `z − h(x₀) + A_f x₀f + A_t x₀t`
     /// (padded to `n`); cov = observation noise plus both endpoints'

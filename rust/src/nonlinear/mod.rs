@@ -32,6 +32,34 @@
 //! them at the current beliefs every round (Ortiz et al. 2021) — see
 //! `crate::gbp::bridge::RelinContext`.
 //!
+//! ```
+//! use std::sync::Arc;
+//! use fgp_repro::engine::Session;
+//! use fgp_repro::gmp::matrix::{c64, CMatrix};
+//! use fgp_repro::gmp::message::GaussMessage;
+//! use fgp_repro::nonlinear::{
+//!     gauss_newton, FirstOrder, IteratedRelinearization, NonlinearFactor, NonlinearProblem,
+//!     RelinOptions,
+//! };
+//!
+//! // observe the square of the first state component: z = x0² + v
+//! let n = 4;
+//! let h = Arc::new(|x: &[f64]| vec![x[0] * x[0]]);
+//! let factor = NonlinearFactor::new(n, 1, h, vec![4.0], 1e-3).unwrap();
+//! let mut mean = vec![c64::ZERO; n];
+//! mean[0] = c64::new(1.5, 0.0); // start near the x0 = 2 solution
+//! let prior = GaussMessage::new(mean, CMatrix::scaled_identity(n, 0.5));
+//! let problem = NonlinearProblem { n, prior, motion: None, factors: vec![factor] };
+//!
+//! // iterated relinearization over the engine == dense Gauss–Newton
+//! let opts = RelinOptions { max_rounds: 20, ..Default::default() };
+//! let driver = IteratedRelinearization::with_options(&FirstOrder, opts);
+//! let report = driver.run(&mut Session::golden(), &problem).unwrap();
+//! let reference = gauss_newton(&problem, 50, 1e-12).unwrap();
+//! assert!(report.converged());
+//! assert!((report.belief.mean[0].re - reference.mean[0].re).abs() < 1e-6);
+//! ```
+//!
 //! Contract, pinned by `rust/tests/property_nonlinear.rs`:
 //!
 //! 1. both linearizers are **exact** (≤ 1e-9) on affine `h`;

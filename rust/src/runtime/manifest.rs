@@ -18,9 +18,11 @@ use anyhow::{bail, Context, Result};
 /// One artifact's signature.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ManifestEntry {
+    /// Artifact name (file stem).
     pub name: String,
     /// Input shapes, each a dim list (empty = scalar).
     pub inputs: Vec<Vec<usize>>,
+    /// Number of outputs the artifact returns.
     pub outputs: usize,
 }
 
@@ -42,18 +44,23 @@ impl ManifestEntry {
 pub struct Manifest {
     /// Header parameters (n, batch, sections).
     pub n: usize,
+    /// Batch dimension baked into batched artifacts.
     pub batch: usize,
+    /// Chain length baked into the `rls_chain` artifact.
     pub sections: usize,
+    /// Artifact signatures in manifest order.
     pub entries: Vec<ManifestEntry>,
 }
 
 impl Manifest {
+    /// Load and parse a manifest file.
     pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
         let text = std::fs::read_to_string(path.as_ref())
             .with_context(|| format!("reading {}", path.as_ref().display()))?;
         Manifest::parse(&text)
     }
 
+    /// Parse manifest text (header line + one line per artifact).
     pub fn parse(text: &str) -> Result<Manifest> {
         let mut lines = text.lines().filter(|l| !l.trim().is_empty());
         let header = lines.next().context("empty manifest")?;
@@ -101,6 +108,7 @@ impl Manifest {
         Ok(m)
     }
 
+    /// The entry with the given name, if present.
     pub fn entry(&self, name: &str) -> Option<&ManifestEntry> {
         self.entries.iter().find(|e| e.name == name)
     }

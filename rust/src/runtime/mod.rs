@@ -29,7 +29,9 @@ pub use manifest::Manifest;
 pub struct RuntimeClient {
     client: xla::PjRtClient,
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// The artifact manifest (shapes baked at AOT time).
     pub manifest: Manifest,
+    /// Directory the artifacts were loaded from.
     pub dir: PathBuf,
 }
 
@@ -62,6 +64,7 @@ impl RuntimeClient {
         self.client.platform_name()
     }
 
+    /// True when an artifact with this name is loaded.
     pub fn has(&self, name: &str) -> bool {
         self.executables.contains_key(name)
     }

@@ -9,11 +9,13 @@
 pub struct Rng(u64);
 
 impl Rng {
+    /// A generator seeded deterministically (same seed, same stream).
     pub fn new(seed: u64) -> Self {
         // avoid the all-zero fixed point
         Rng(seed.wrapping_mul(2685821657736338717).max(1))
     }
 
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         let mut x = self.0;
         x ^= x >> 12;

@@ -1,0 +1,228 @@
+//! The EM subsystem contract, across layers (S15):
+//!
+//! 1. **Recovery** — EM recovers the synthetic ground-truth
+//!    observation-noise variance on the RLS fixture to ≤ 5 % relative
+//!    error (golden engine; the batch acceptance pin).
+//! 2. **Cache observability** — on fgp-sim every EM round after the
+//!    first hits the session program cache: rounds rebind data, never
+//!    reshape the model.
+//! 3. **GBP marginals** — a GBP solve's beliefs serve as the E-step's
+//!    posterior marginals unchanged (tree model: exact EM).
+//! 4. **Serving** — online EM wrapped around a recursive stream rides a
+//!    sticky farm stream unchanged, bitwise identical to one session.
+
+use fgp_repro::apps::kalman::{AdaptiveKalman, KalmanProblem};
+use fgp_repro::apps::rls::{NoiseEmRls, RlsProblem};
+use fgp_repro::coordinator::{FgpFarm, RoutePolicy};
+use fgp_repro::em::{
+    EmDriver, EmOptions, EmParameter, Evidence, ObsNoiseVar, OnlineEm, SuffStats,
+};
+use fgp_repro::engine::{Session, StreamingWorkload};
+use fgp_repro::fgp::FgpConfig;
+use fgp_repro::gbp::{solve, GbpModel, GbpOptions};
+use fgp_repro::gmp::matrix::{c64, CMatrix};
+use fgp_repro::gmp::message::GaussMessage;
+use fgp_repro::testutil::Rng;
+
+/// Acceptance pin: ≤ 5 % relative recovery of sigma^2 on the RLS
+/// fixture, starting 10x off.
+#[test]
+fn em_recovers_rls_noise_within_five_percent() {
+    let true_sigma2 = 0.01;
+    let p = RlsProblem::synthetic(4, 256, true_sigma2, 17);
+    let mut em = NoiseEmRls::new(p, true_sigma2 * 10.0);
+    let report = EmDriver::new().run(&mut Session::golden(), &mut em).unwrap();
+    assert!(report.converged(), "stop {:?}", report.stop);
+    let rel = (report.values[0] - true_sigma2).abs() / true_sigma2;
+    assert!(rel <= 0.05, "sigma2 {} rel err {rel}", report.values[0]);
+}
+
+/// Acceptance pin: on fgp-sim, every round after the first is a
+/// program-cache hit (the rounds change message data only).
+#[test]
+fn em_rounds_hit_program_cache_on_fgp_sim() {
+    let p = RlsProblem::synthetic(4, 48, 0.01, 17);
+    let mut em = NoiseEmRls::new(p, 0.1);
+    let mut session = Session::fgp_sim(FgpConfig::default());
+    let driver = EmDriver::with_options(EmOptions {
+        max_rounds: 6,
+        tol: 0.0, // force all six rounds
+        divergence: 1e9,
+    });
+    let report = driver.run(&mut session, &mut em).unwrap();
+    assert_eq!(report.rounds, 6);
+    assert_eq!(report.cached.len(), 6);
+    assert!(!report.cached[0], "first round must compile");
+    assert!(
+        report.cached[1..].iter().all(|c| *c),
+        "every round after the first must hit the cache: {:?}",
+        report.cached
+    );
+    let stats = session.cache_stats();
+    assert_eq!(stats.misses, 1, "{stats:?}");
+    assert_eq!(stats.hits, 5, "{stats:?}");
+}
+
+/// The adaptive-Kalman E-step (a per-sample stream) shows the same
+/// cache shape: one compile for the chunk model, hits from then on.
+#[test]
+fn adaptive_kalman_rounds_hit_cache_on_fgp_sim() {
+    let p = KalmanProblem::synthetic(16, 5);
+    let mut em = AdaptiveKalman::new(p, 0.02);
+    let mut session = Session::fgp_sim(FgpConfig::default());
+    let driver = EmDriver::with_options(EmOptions {
+        max_rounds: 3,
+        tol: 0.0,
+        divergence: 1e9,
+    });
+    let report = driver.run(&mut session, &mut em).unwrap();
+    assert_eq!(report.cached, vec![false, true, true]);
+    assert_eq!(session.cache_stats().misses, 1);
+}
+
+/// GBP beliefs are the E-step's marginals: estimate the unary-factor
+/// noise of a chain (tree) model from the solved beliefs. On a tree the
+/// beliefs are exact marginals, so this is exact EM.
+#[test]
+fn gbp_marginals_drive_em_noise_estimate() {
+    let n = 4;
+    let vars = 8;
+    let true_sigma2 = 0.05;
+    let mut rng = Rng::new(11);
+    // generative walk: x_0 ~ N(0, I), x_{v+1} = x_v + w, w ~ CN(0, 0.2 I)
+    let mut truth: Vec<Vec<c64>> = Vec::with_capacity(vars);
+    let mut x: Vec<c64> = (0..n)
+        .map(|_| c64::new(rng.normal(), rng.normal()))
+        .collect();
+    truth.push(x.clone());
+    for _ in 1..vars {
+        for xi in x.iter_mut() {
+            let s = (0.2f64 / 2.0).sqrt();
+            *xi = *xi + c64::new(rng.normal() * s, rng.normal() * s);
+        }
+        truth.push(x.clone());
+    }
+    let observations: Vec<Vec<c64>> = truth
+        .iter()
+        .map(|xv| {
+            xv.iter()
+                .map(|xi| {
+                    let s = (true_sigma2 / 2.0).sqrt();
+                    *xi + c64::new(rng.normal() * s, rng.normal() * s)
+                })
+                .collect()
+        })
+        .collect();
+
+    let build = |sigma2: f64| -> GbpModel {
+        let mut m = GbpModel::new(n);
+        let ids: Vec<_> = (0..vars)
+            .map(|v| {
+                // the generative prior on x_0; a vague proper prior on
+                // the chain tail (a prior-less end variable with one
+                // pairwise factor would leave an improper cavity)
+                let prior = if v == 0 {
+                    Some(GaussMessage::isotropic(n, 1.0))
+                } else if v == vars - 1 {
+                    Some(GaussMessage::isotropic(n, 10.0))
+                } else {
+                    None
+                };
+                m.add_variable(prior, format!("x{v}")).unwrap()
+            })
+            .collect();
+        for v in 1..vars {
+            m.add_pairwise(
+                ids[v - 1],
+                ids[v],
+                CMatrix::identity(n),
+                GaussMessage::isotropic(n, 0.2),
+            )
+            .unwrap();
+        }
+        for (v, y) in observations.iter().enumerate() {
+            m.add_unary(
+                ids[v],
+                CMatrix::identity(n),
+                GaussMessage::observation(y, sigma2),
+            )
+            .unwrap();
+        }
+        m
+    };
+
+    let identity = CMatrix::identity(n);
+    let observed: Vec<usize> = (0..n).collect();
+    let mut noise = ObsNoiseVar::new(true_sigma2 * 10.0);
+    let mut session = Session::golden();
+    for _ in 0..12 {
+        let report = solve(build(noise.value()), GbpOptions::default(), &mut session).unwrap();
+        assert!(report.converged(), "GBP stop {:?}", report.stop);
+        let mut acc = SuffStats::default();
+        for (belief, y) in report.marginals().iter().zip(&observations) {
+            noise
+                .accumulate(
+                    &Evidence::Observation {
+                        marginal: belief,
+                        a: &identity,
+                        y,
+                        observed: &observed,
+                    },
+                    &mut acc,
+                )
+                .unwrap();
+        }
+        noise.m_step(&acc).unwrap();
+    }
+    let got = noise.value();
+    let rel = (got - true_sigma2).abs() / true_sigma2;
+    // 8 vars x 4 complex components: the ML estimate itself carries
+    // ~1/sqrt(32) sampling error; the EM must land in its regime and
+    // far from the 10x start
+    assert!(rel < 1.0, "sigma2 {got} rel err {rel}");
+    assert!(got < true_sigma2 * 3.0 && got > true_sigma2 / 3.0, "sigma2 {got}");
+}
+
+/// Online EM over a sticky farm stream is bitwise identical to the same
+/// stream on a single fgp-sim session — the coordinator serves the
+/// adaptive wrapper unchanged.
+#[test]
+fn online_em_rides_sticky_farm_stream_unchanged() {
+    let true_sigma2 = 0.01;
+    let make = || OnlineEm::new(RlsProblem::synthetic(4, 512, true_sigma2, 1), 0.1);
+
+    let single = make();
+    let report = Session::fgp_sim(FgpConfig::default()).run_stream(&single).unwrap();
+    assert_eq!(report.samples, 512);
+
+    let farm = FgpFarm::start(2, FgpConfig::default(), RoutePolicy::RoundRobin).unwrap();
+    let farmed = make();
+    let stream = farm.open_stream(&farmed).unwrap();
+    let run = stream.run_to_end().unwrap();
+    assert_eq!(run.samples, 512);
+    let outcome = farmed.stream_outcome(&run).unwrap();
+
+    // bitwise identical: same chunking, same device arithmetic, same
+    // adaptation trajectory
+    assert_eq!(report.final_state.dist(&run.final_state), 0.0);
+    assert_eq!(report.outcome.sigma2, outcome.sigma2);
+    // and the estimate actually adapted away from the 10x start
+    let rel = (outcome.sigma2 - true_sigma2).abs() / true_sigma2;
+    assert!(rel < 0.5, "online sigma2 {} rel err {rel}", outcome.sigma2);
+}
+
+/// Online EM on golden (chunk 1) and fgp-sim (chunked) both land near
+/// the truth: per-chunk accumulation is an execution granularity, not a
+/// different estimator.
+#[test]
+fn online_em_is_chunking_robust() {
+    let true_sigma2 = 0.01;
+    let golden = OnlineEm::new(RlsProblem::synthetic(4, 512, true_sigma2, 9), 0.1);
+    let g = Session::golden().run_stream(&golden).unwrap();
+    let sim = OnlineEm::new(RlsProblem::synthetic(4, 512, true_sigma2, 9), 0.1);
+    let f = Session::fgp_sim(FgpConfig::default()).run_stream(&sim).unwrap();
+    let rg = (g.outcome.sigma2 - true_sigma2).abs() / true_sigma2;
+    let rf = (f.outcome.sigma2 - true_sigma2).abs() / true_sigma2;
+    assert!(rg < 0.15, "golden online sigma2 {} rel {rg}", g.outcome.sigma2);
+    assert!(rf < 0.5, "fgp-sim online sigma2 {} rel {rf}", f.outcome.sigma2);
+}

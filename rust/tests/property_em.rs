@@ -1,0 +1,68 @@
+//! EM properties pinned against the dense log-likelihood reference.
+//!
+//! Exact EM (the RLS fixture: a single static state, so the engine's
+//! posterior *is* the full joint posterior) must never decrease the
+//! data log-likelihood, from any starting value, on any instance. The
+//! estimate must also be a pure function of the data *set*, not the
+//! section order.
+
+use fgp_repro::apps::rls::{NoiseEmRls, RlsProblem};
+use fgp_repro::em::{EmDriver, EmOptions};
+use fgp_repro::engine::Session;
+use fgp_repro::testutil::proptest_cases;
+
+/// The monotone-ascent acceptance pin: per-round dense log-likelihood
+/// is non-decreasing for random fixtures, noise levels and starts.
+#[test]
+fn log_likelihood_never_decreases() {
+    proptest_cases(12, |rng| {
+        let sections = 16 + rng.below(48);
+        let sigma2 = 0.002 + 0.02 * rng.uniform();
+        let seed = rng.next_u64();
+        // starting guess anywhere from 0.1x to 20x the truth
+        let mult = (rng.range((0.1f64).ln(), (20.0f64).ln())).exp();
+        let p = RlsProblem::synthetic(4, sections, sigma2, seed);
+        let mut em = NoiseEmRls::new(p, sigma2 * mult);
+        let driver = EmDriver::with_options(EmOptions {
+            max_rounds: 8,
+            tol: 1e-9,
+            divergence: 1e9,
+        });
+        let report = driver.run(&mut Session::golden(), &mut em).unwrap();
+        assert!(report.log_likelihood.len() >= 2);
+        for w in report.log_likelihood.windows(2) {
+            let slack = 1e-7 * w[0].abs().max(1.0);
+            assert!(
+                w[1] >= w[0] - slack,
+                "log-likelihood decreased: {} -> {} (S={sections}, sigma2={sigma2}, mult={mult})",
+                w[0],
+                w[1]
+            );
+        }
+    });
+}
+
+/// The EM fixed point depends on the data set, not the section order:
+/// reversing the sections changes nothing (the posterior is a product
+/// of section likelihoods).
+#[test]
+fn em_estimate_is_section_order_invariant() {
+    proptest_cases(6, |rng| {
+        let sigma2 = 0.005 + 0.01 * rng.uniform();
+        let p = RlsProblem::synthetic(4, 32, sigma2, rng.next_u64());
+        let mut reversed = p.clone();
+        reversed.regressors.reverse();
+        reversed.observations.reverse();
+        reversed.symbols.reverse();
+        let opts = EmOptions { max_rounds: 16, tol: 1e-10, divergence: 1e9 };
+        let mut fwd = NoiseEmRls::new(p, sigma2 * 8.0);
+        let mut rev = NoiseEmRls::new(reversed, sigma2 * 8.0);
+        let a = EmDriver::with_options(opts).run(&mut Session::golden(), &mut fwd).unwrap();
+        let b = EmDriver::with_options(opts).run(&mut Session::golden(), &mut rev).unwrap();
+        let (x, y) = (a.values[0], b.values[0]);
+        assert!(
+            (x - y).abs() <= 1e-6 * x.abs().max(y.abs()),
+            "order-dependent estimate: {x} vs {y}"
+        );
+    });
+}

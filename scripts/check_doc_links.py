@@ -1,0 +1,82 @@
+#!/usr/bin/env python3
+"""Verify that relative links and path references in the repo's
+top-level docs resolve to real files.
+
+Checks two things in README.md / DESIGN.md / ARCHITECTURE.md (and any
+extra files passed on the command line):
+
+  1. markdown links `[text](target)` whose target is a relative path
+     (external URLs and intra-page anchors are skipped);
+  2. backtick path references like `rust/src/em/` or
+     `rust/tests/property_em.rs` (a repo-relative path containing a
+     `/`), so the prose's pointers stay honest too.
+
+Dependency-free by design: CI and pre-commit hooks can run it with a
+bare python3. Exits non-zero listing every dangling reference.
+"""
+import re
+import sys
+from pathlib import Path
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(#[^)\s]*)?\)")
+PATHREF = re.compile(r"`([A-Za-z0-9_.\-]+(?:/[A-Za-z0-9_.\-]+)+/?)`")
+
+DEFAULT_DOCS = ["README.md", "DESIGN.md", "ARCHITECTURE.md"]
+
+
+def is_external(target: str) -> bool:
+    return target.startswith(("http://", "https://", "mailto:", "//"))
+
+
+def looks_like_path(ref: str, root: Path) -> bool:
+    """Backtick references that are plausibly repo paths: start with a
+    known top-level entry (resolved against the repo root, never the
+    process cwd) and contain no spaces or glob characters."""
+    top = ref.split("/", 1)[0]
+    if any(ch in ref for ch in "*{}<>$"):
+        return False
+    return ((root / top).exists() or top in DEFAULT_DOCS) and "/" in ref
+
+
+def check(doc: Path, root: Path) -> list:
+    problems = []
+    text = doc.read_text(encoding="utf-8")
+    for lineno, line in enumerate(text.splitlines(), 1):
+        for m in LINK.finditer(line):
+            target = m.group(1)
+            if is_external(target):
+                continue
+            resolved = (doc.parent / target).resolve()
+            if not resolved.exists():
+                problems.append((doc, lineno, f"link target missing: {target}"))
+        for m in PATHREF.finditer(line):
+            ref = m.group(1)
+            if not looks_like_path(ref, root):
+                continue
+            if not (root / ref).exists():
+                problems.append((doc, lineno, f"path reference missing: {ref}"))
+    return problems
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    docs = [Path(a) for a in sys.argv[1:]] or [root / d for d in DEFAULT_DOCS]
+    problems = []
+    checked = 0
+    for doc in docs:
+        if not doc.exists():
+            problems.append((doc, 0, "document itself is missing"))
+            continue
+        checked += 1
+        problems.extend(check(doc, root))
+    for doc, lineno, msg in problems:
+        print(f"{doc}:{lineno}: {msg}")
+    if problems:
+        print(f"check_doc_links: {len(problems)} dangling reference(s)")
+        return 1
+    print(f"check_doc_links OK ({checked} documents)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
