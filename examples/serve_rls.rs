@@ -1,0 +1,79 @@
+//! Serving-tier quickstart: an FGP server plus a streamed RLS client.
+//!
+//! Boots [`FgpServe`] on an ephemeral port (two simulated FGP devices
+//! behind the coordinator farm), then drives the paper's Fig. 6
+//! recursive-least-squares workload over real TCP as a sticky stream:
+//! open with the RLS prior, push (observation, regressor) sections,
+//! checkpoint mid-stream, kill the pinned device, and watch the stream
+//! fail over and finish with the exact posterior a local fold produces.
+//!
+//! Run: `cargo run --release --example serve_rls`
+
+use anyhow::Result;
+use fgp_repro::apps::rls::RlsProblem;
+use fgp_repro::serve::{FgpServe, ServeClient, ServeConfig, StreamMode};
+
+fn main() -> Result<()> {
+    // --- server side: one call, background threads do the rest
+    let srv = FgpServe::start(ServeConfig { devices: 2, ..ServeConfig::default() })?;
+    println!("serving on {}", srv.addr());
+
+    // --- client side: stream the RLS sections through the front door
+    let problem = RlsProblem::synthetic(4, 32, 0.01, 42);
+    let mut client = ServeClient::connect(srv.addr(), "rls-demo")?;
+    let (stream, device) = client.open_stream("fig6-rls", StreamMode::Sticky, problem.prior.clone())?;
+    println!("stream {stream} pinned to device {device}");
+
+    let sections: Vec<_> = problem
+        .observations
+        .iter()
+        .cloned()
+        .zip(problem.regressors.iter().cloned())
+        .collect();
+
+    // first half, then a checkpoint of the committed recursive state
+    client.push(stream, sections[..16].to_vec())?;
+    loop {
+        let st = client.poll(stream)?;
+        if st.samples_done == 16 && st.pending == 0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    let checkpoint = client.checkpoint(stream)?;
+    println!("checkpointed at 16 samples ({} bytes)", checkpoint.len());
+
+    // kill the pinned device mid-stream: the engine room re-pins the
+    // stream to the surviving member and no sample is lost
+    srv.farm().kill_device(device as usize)?;
+    client.push(stream, sections[16..].to_vec())?;
+    let closed = client.close_stream(stream)?;
+    println!(
+        "closed: {} samples, {} failover(s)",
+        closed.samples_done, closed.failovers
+    );
+
+    // the streamed posterior is the RLS channel estimate
+    let rel_mse = problem.rel_mse(&closed.state.mean);
+    println!("rel MSE of streamed estimate = {rel_mse:.3e}");
+
+    // the checkpoint restores on a brand-new server, bit for bit
+    let srv2 = FgpServe::start(ServeConfig::default())?;
+    let mut client2 = ServeClient::connect(srv2.addr(), "rls-demo")?;
+    let (resumed, _) = client2.resume("fig6-rls", StreamMode::Sticky, checkpoint)?;
+    client2.push(resumed, sections[16..].to_vec())?;
+    let replay = client2.close_stream(resumed)?;
+    assert_eq!(replay.state.dist(&closed.state), 0.0, "failover must be bitwise");
+    println!("resume on a fresh server reproduced the posterior bitwise");
+
+    // per-tenant SLO metrics come back over the same wire
+    let stats = srv.stats();
+    println!(
+        "server: {} updates, p99 {} ns, {} failover(s)",
+        stats.latency.completed, stats.latency.p99_ns, stats.failovers
+    );
+
+    srv2.shutdown();
+    srv.shutdown();
+    Ok(())
+}

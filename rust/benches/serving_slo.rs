@@ -1,0 +1,367 @@
+//! E16 — serving-tier SLO: multi-tenant throughput, tail latency,
+//! admission control, and kill/resume failover under churn.
+//!
+//! Two phases against real TCP servers on ephemeral ports:
+//!
+//! 1. **soak** — N tenant streams (sticky + coalesced) push samples
+//!    concurrently while a churn driver kills and revives farm devices
+//!    mid-run. Every stream must finish with zero lost or duplicated
+//!    samples and a final state **bitwise identical** to folding its
+//!    sequence through a local single-device farm; the server's `STATS`
+//!    snapshot supplies p50/p95/p99 and per-tenant throughput. A
+//!    directed sentinel kill (drain a chunk, kill the pinned device,
+//!    finish on the survivor) makes >= 1 failover deterministic even
+//!    when scripted churn races the concurrent drains.
+//! 2. **admission demo** — a second server with a zero-refill quota and
+//!    a tiny in-flight window, driven past both limits, so the
+//!    trajectory always records non-zero `QuotaExceeded`/`Busy`
+//!    rejections (deterministically, not by racing the soak).
+//!
+//! Emits **`BENCH_serving.json`** (validated in CI against
+//! `scripts/bench_serving.schema.json`) and **exits non-zero** if any
+//! sample was lost, any stream diverged from its reference, no failover
+//! happened under churn, or no admission rejection was exercised.
+//!
+//! Run: `cargo bench --bench serving_slo [-- --smoke]`
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use fgp_repro::benchutil::{banner, fmt_dur, json_arr, json_num, json_obj, json_str, write_json};
+use fgp_repro::coordinator::{CnRequestData, FgpFarm, RoutePolicy};
+use fgp_repro::fgp::FgpConfig;
+use fgp_repro::gmp::matrix::{c64, CMatrix};
+use fgp_repro::gmp::message::GaussMessage;
+use fgp_repro::serve::{
+    FgpServe, QuotaPolicy, ServeClient, ServeConfig, ServeReply, ServeRequest, StatsSnapshot,
+    StreamMode,
+};
+use fgp_repro::testutil::Rng;
+
+fn msg(rng: &mut Rng, n: usize) -> GaussMessage {
+    GaussMessage::new(
+        (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+        CMatrix::random_psd(rng, n, 1.0).scale(0.15),
+    )
+}
+
+fn sample(rng: &mut Rng, n: usize) -> (GaussMessage, CMatrix) {
+    (msg(rng, n), CMatrix::random(rng, n, n).scale(0.3))
+}
+
+struct StreamReportRow {
+    tenant: String,
+    mode: &'static str,
+    samples_done: u64,
+    expected: u64,
+    failovers: u32,
+    bitwise_ok: bool,
+}
+
+struct SoakResult {
+    rows: Vec<StreamReportRow>,
+    stats: StatsSnapshot,
+    wall: Duration,
+}
+
+/// Phase 1: concurrent tenant streams under scripted device churn.
+fn soak(tenants: usize, per_stream: usize, churn_cycles: usize) -> Result<SoakResult> {
+    let cfg = ServeConfig { devices: 2, chunk: 8, ..ServeConfig::default() };
+    let srv = FgpServe::start(cfg)?;
+    let addr = srv.addr().to_string();
+
+    // per-tenant sequences + bitwise references via a local farm
+    let reference = FgpFarm::start(1, FgpConfig::default(), RoutePolicy::RoundRobin)?;
+    let mut priors = Vec::new();
+    let mut sequences = Vec::new();
+    let mut wants = Vec::new();
+    for t in 0..tenants {
+        let mut rng = Rng::new(900 + t as u64);
+        let prior = msg(&mut rng, 4);
+        let seq: Vec<_> = (0..per_stream).map(|_| sample(&mut rng, 4)).collect();
+        let mut state = prior.clone();
+        for (y, a) in &seq {
+            state =
+                reference.update(CnRequestData { x: state.clone(), y: y.clone(), a: a.clone() })?;
+        }
+        priors.push(prior);
+        sequences.push(seq);
+        wants.push(state);
+    }
+
+    let farm = srv.farm();
+    let t0 = Instant::now();
+    let mut rows = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..tenants)
+            .map(|t| {
+                let addr = addr.clone();
+                let prior = priors[t].clone();
+                let seq = sequences[t].clone();
+                scope.spawn(move || {
+                    let tenant = format!("tenant-{t:02}");
+                    // every fourth stream takes the coalesced path
+                    let mode = if t % 4 == 3 { StreamMode::Coalesced } else { StreamMode::Sticky };
+                    let mut client = ServeClient::connect(addr.as_str(), &tenant).unwrap();
+                    let (id, _) = client.open_stream(&tenant, mode, prior).unwrap();
+                    for batch in seq.chunks(8) {
+                        client.push(id, batch.to_vec()).unwrap();
+                    }
+                    let closed = client.close_stream(id).unwrap();
+                    (tenant, mode, closed)
+                })
+            })
+            .collect();
+
+        // scripted churn: kill/revive each device in turn, never both at
+        // once, always ending with every member alive
+        for _ in 0..churn_cycles {
+            for d in 0..2 {
+                farm.kill_device(d).unwrap();
+                std::thread::sleep(Duration::from_millis(15));
+                farm.revive_device(d).unwrap();
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+
+        handles
+            .into_iter()
+            .enumerate()
+            .map(|(t, h)| {
+                let (tenant, mode, closed) = h.join().unwrap();
+                StreamReportRow {
+                    tenant,
+                    mode: match mode {
+                        StreamMode::Sticky => "sticky",
+                        StreamMode::Coalesced => "coalesced",
+                    },
+                    samples_done: closed.samples_done,
+                    expected: per_stream as u64,
+                    failovers: closed.failovers,
+                    bitwise_ok: closed.state.dist(&wants[t]) == 0.0,
+                }
+            })
+            .collect::<Vec<_>>()
+    });
+
+    // Directed kill-and-resume: a sentinel stream drains one chunk so
+    // its device pin is live, loses that device, and must fail over to
+    // finish — deterministic, so the trajectory records >= 1 failover
+    // even when the scripted churn races the concurrent drains.
+    let mut rng = Rng::new(4242);
+    let prior = msg(&mut rng, 4);
+    let seq: Vec<_> = (0..12).map(|_| sample(&mut rng, 4)).collect();
+    let mut want = prior.clone();
+    for (y, a) in &seq {
+        want = reference.update(CnRequestData { x: want, y: y.clone(), a: a.clone() })?;
+    }
+    let mut client = ServeClient::connect(addr.as_str(), "sentinel")?;
+    let (id, device) = client.open_stream("sentinel", StreamMode::Sticky, prior)?;
+    client.push(id, seq[..4].to_vec())?;
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let st = client.poll(id)?;
+        if st.samples_done == 4 && st.pending == 0 {
+            break;
+        }
+        anyhow::ensure!(Instant::now() < deadline, "sentinel stream never drained");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    farm.kill_device(device as usize)?;
+    client.push(id, seq[4..].to_vec())?;
+    let closed = client.close_stream(id)?;
+    farm.revive_device(device as usize)?;
+    rows.push(StreamReportRow {
+        tenant: "sentinel".to_string(),
+        mode: "sticky",
+        samples_done: closed.samples_done,
+        expected: seq.len() as u64,
+        failovers: closed.failovers,
+        bitwise_ok: closed.state.dist(&want) == 0.0,
+    });
+
+    let wall = t0.elapsed();
+    let stats = srv.stats();
+    Ok(SoakResult { rows, stats, wall })
+}
+
+/// Phase 2: deterministic quota + window rejections on a fenced server.
+fn admission_demo() -> Result<StatsSnapshot> {
+    let cfg = ServeConfig {
+        quota: QuotaPolicy { rate: 0.0, burst: 16.0 },
+        max_inflight: 8,
+        ..ServeConfig::default()
+    };
+    let srv = FgpServe::start(cfg)?;
+    let mut rng = Rng::new(7);
+    let mut greedy = ServeClient::connect(srv.addr(), "greedy")?;
+
+    // a push larger than the whole window is an immediate Busy
+    let prior = msg(&mut rng, 4);
+    let (id, _) = greedy.open_stream("burst", StreamMode::Sticky, prior)?;
+    let oversized: Vec<_> = (0..9).map(|_| sample(&mut rng, 4)).collect();
+    match greedy.call(&ServeRequest::Push { stream: id, samples: oversized })? {
+        ServeReply::Busy { .. } => {}
+        other => anyhow::bail!("expected Busy for an oversized push, got {other:?}"),
+    }
+
+    // 16 token burst, zero refill: the 17th one-shot is a QuotaExceeded
+    let mut quota_rejections = 0;
+    for _ in 0..17 {
+        let (y, a) = sample(&mut rng, 4);
+        match greedy.call(&ServeRequest::CnUpdate { x: msg(&mut rng, 4), y, a })? {
+            ServeReply::Output { .. } => {}
+            ServeReply::QuotaExceeded { .. } => quota_rejections += 1,
+            other => anyhow::bail!("unexpected reply {other:?}"),
+        }
+    }
+    anyhow::ensure!(quota_rejections >= 1, "quota demo produced no rejection");
+    greedy.close_stream(id)?;
+    Ok(srv.stats())
+}
+
+fn latency_json(s: &StatsSnapshot) -> String {
+    json_obj(&[
+        ("completed", s.latency.completed.to_string()),
+        ("failed", s.latency.failed.to_string()),
+        ("mean_ns", s.latency.mean_ns.to_string()),
+        ("p50_ns", s.latency.p50_ns.to_string()),
+        ("p95_ns", s.latency.p95_ns.to_string()),
+        ("p99_ns", s.latency.p99_ns.to_string()),
+    ])
+}
+
+fn main() -> Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (tenants, per_stream, churn_cycles) = if smoke { (4, 48, 1) } else { (6, 256, 3) };
+
+    banner("serving soak: tenant streams under device churn");
+    let soaked = soak(tenants, per_stream, churn_cycles)?;
+    let total_samples: u64 = soaked.rows.iter().map(|r| r.samples_done).sum();
+    let lost: i64 = soaked
+        .rows
+        .iter()
+        .map(|r| r.expected as i64 - r.samples_done as i64)
+        .sum();
+    let all_bitwise = soaked.rows.iter().all(|r| r.bitwise_ok);
+    let throughput = total_samples as f64 / soaked.wall.as_secs_f64();
+
+    println!(
+        "{:<12} {:>10} {:>10} {:>10} {:>10} {:>9}",
+        "tenant", "mode", "served", "expected", "failovers", "bitwise"
+    );
+    for r in &soaked.rows {
+        println!(
+            "{:<12} {:>10} {:>10} {:>10} {:>10} {:>9}",
+            r.tenant, r.mode, r.samples_done, r.expected, r.failovers, r.bitwise_ok
+        );
+    }
+    println!(
+        "\n{total_samples} samples in {} -> {throughput:.0} samples/s across {tenants} tenants",
+        fmt_dur(soaked.wall)
+    );
+    println!(
+        "latency: p50 {} p95 {} p99 {} | failovers {} | busy rejections {}",
+        fmt_dur(Duration::from_nanos(soaked.stats.latency.p50_ns)),
+        fmt_dur(Duration::from_nanos(soaked.stats.latency.p95_ns)),
+        fmt_dur(Duration::from_nanos(soaked.stats.latency.p99_ns)),
+        soaked.stats.failovers,
+        soaked.stats.rejected_busy,
+    );
+
+    banner("admission demo: deterministic quota + window rejections");
+    let demo = admission_demo()?;
+    println!(
+        "quota rejections {} | busy rejections {} | admitted {}",
+        demo.rejected_quota, demo.rejected_busy, demo.admitted
+    );
+
+    // --- machine-readable trajectory
+    let per_tenant: Vec<String> = soaked
+        .stats
+        .tenants
+        .iter()
+        .map(|t| {
+            json_obj(&[
+                ("tenant", json_str(&t.tenant)),
+                ("requests", t.requests.to_string()),
+                ("samples", t.samples.to_string()),
+                ("rejected_quota", t.rejected_quota.to_string()),
+                ("rejected_busy", t.rejected_busy.to_string()),
+            ])
+        })
+        .collect();
+    let streams: Vec<String> = soaked
+        .rows
+        .iter()
+        .map(|r| {
+            json_obj(&[
+                ("tenant", json_str(&r.tenant)),
+                ("mode", json_str(r.mode)),
+                ("samples_done", r.samples_done.to_string()),
+                ("expected", r.expected.to_string()),
+                ("failovers", r.failovers.to_string()),
+                ("bitwise_identical", r.bitwise_ok.to_string()),
+            ])
+        })
+        .collect();
+    let doc = json_obj(&[
+        ("bench", json_str("serving_slo")),
+        ("mode", json_str(if smoke { "smoke" } else { "full" })),
+        ("devices", "2".to_string()),
+        ("tenants", tenants.to_string()),
+        ("samples_per_stream", per_stream.to_string()),
+        ("total_samples", total_samples.to_string()),
+        ("wall_s", json_num(soaked.wall.as_secs_f64())),
+        ("throughput_samples_per_s", json_num(throughput)),
+        ("latency", latency_json(&soaked.stats)),
+        (
+            "soak",
+            json_obj(&[
+                ("admitted", soaked.stats.admitted.to_string()),
+                ("rejected_busy", soaked.stats.rejected_busy.to_string()),
+                ("failovers", soaked.stats.failovers.to_string()),
+                ("lost_samples", lost.to_string()),
+                ("bitwise_identical", all_bitwise.to_string()),
+                ("streams", json_arr(&streams)),
+            ]),
+        ),
+        (
+            "admission_demo",
+            json_obj(&[
+                ("rejected_quota", demo.rejected_quota.to_string()),
+                ("rejected_busy", demo.rejected_busy.to_string()),
+                ("admitted", demo.admitted.to_string()),
+            ]),
+        ),
+        ("per_tenant", json_arr(&per_tenant)),
+    ]);
+    write_json("BENCH_serving.json", &doc)?;
+    println!("\nwrote BENCH_serving.json");
+
+    // --- hard gates: the serving tier's acceptance criteria
+    let mut failed = false;
+    if lost != 0 {
+        eprintln!("GATE: {lost} samples lost (or duplicated) under churn");
+        failed = true;
+    }
+    if !all_bitwise {
+        eprintln!("GATE: a stream diverged from its local bitwise reference");
+        failed = true;
+    }
+    if soaked.stats.failovers == 0 {
+        eprintln!("GATE: churn produced zero failovers - the soak exercised nothing");
+        failed = true;
+    }
+    if demo.rejected_quota == 0 {
+        eprintln!("GATE: no quota rejection was exercised");
+        failed = true;
+    }
+    if demo.rejected_busy == 0 {
+        eprintln!("GATE: no admission-window rejection was exercised");
+        failed = true;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -80,13 +80,32 @@ impl WorkloadRequest {
 
     /// The smallest workload: a single compound-observation section.
     pub fn cn(req: &CnRequestData) -> Result<Self> {
-        let n = req.x.dim();
+        Self::chain(&req.x, &[(req.y.clone(), req.a.clone())])
+    }
+
+    /// A compound-observation **chain**: fold `sections` (observation,
+    /// state matrix) pairs into `prior` as one compiled-program
+    /// execution. This is the serve tier's sticky-stream unit of work —
+    /// a chunk of a recursive stream dispatched to one farm device —
+    /// and [`WorkloadRequest::cn`] is its single-section instance. The
+    /// chain's final state is bitwise identical to folding the sections
+    /// one CN update at a time on the same engine (the chunk-invariance
+    /// contract pinned by `rust/tests/integration_streaming.rs`), which
+    /// is what makes checkpoint/resume at arbitrary chunk boundaries
+    /// safe.
+    pub fn chain(prior: &GaussMessage, sections: &[(GaussMessage, CMatrix)]) -> Result<Self> {
+        if sections.is_empty() {
+            bail!("chain request needs at least one section");
+        }
+        let n = prior.dim();
+        let a_list: Vec<CMatrix> = sections.iter().map(|(_, a)| a.clone()).collect();
         let mut graph = FactorGraph::new();
-        graph.rls_chain(n, std::slice::from_ref(&req.a));
+        graph.rls_chain(n, &a_list);
         let schedule = Schedule::forward_sweep(&graph);
         let mut inputs = HashMap::new();
-        inputs.insert(preload_id(&graph, &schedule, "msg_prior")?, req.x.clone());
-        bind_streamed(&graph, &schedule, std::slice::from_ref(&req.y), &mut inputs)?;
+        inputs.insert(preload_id(&graph, &schedule, "msg_prior")?, prior.clone());
+        let ys: Vec<GaussMessage> = sections.iter().map(|(y, _)| y.clone()).collect();
+        bind_streamed(&graph, &schedule, &ys, &mut inputs)?;
         Ok(WorkloadRequest { graph, schedule, inputs, opts: CompileOptions::default() })
     }
 }
@@ -387,6 +406,33 @@ mod tests {
         let exec = GoldenBackend.run_workload(&wr).unwrap();
         let want = GoldenBackend.cn_update(&req).unwrap();
         assert!(exec.output().unwrap().dist(&want) < 1e-12);
+    }
+
+    #[test]
+    fn chain_matches_sequential_cn_updates() {
+        let mut rng = Rng::new(9);
+        let prior = GaussMessage::new(
+            (0..4)
+                .map(|_| crate::gmp::matrix::c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5)))
+                .collect(),
+            CMatrix::random_psd(&mut rng, 4, 1.0).scale(0.15),
+        );
+        let sections: Vec<(GaussMessage, CMatrix)> = (0..5)
+            .map(|_| {
+                let r = request(&mut rng, 4);
+                (r.y, r.a)
+            })
+            .collect();
+        let wr = WorkloadRequest::chain(&prior, &sections).unwrap();
+        let exec = GoldenBackend.run_workload(&wr).unwrap();
+        let mut want = prior.clone();
+        for (y, a) in &sections {
+            want = GoldenBackend
+                .cn_update(&CnRequestData { x: want, y: y.clone(), a: a.clone() })
+                .unwrap();
+        }
+        assert!(exec.output().unwrap().dist(&want) < 1e-12);
+        assert!(WorkloadRequest::chain(&prior, &[]).is_err());
     }
 
     #[test]

@@ -105,6 +105,33 @@ impl CnStream {
     pub fn pending(&self) -> usize {
         self.pending.len()
     }
+
+    /// Pop up to `max` samples off the front of the queue, in order.
+    /// The serve tier's sticky path takes a chunk, ships it to the
+    /// stream's pinned device as one chain request, and either
+    /// [`commit`](Self::commit)s the advance or
+    /// [`requeue_front`](Self::requeue_front)s the batch on a retryable
+    /// device failure — so a sample leaves the stream's accounting only
+    /// when its update has actually executed (zero-loss contract).
+    pub fn take(&mut self, max: usize) -> Vec<(GaussMessage, CMatrix)> {
+        let k = max.min(self.pending.len());
+        self.pending.drain(..k).collect()
+    }
+
+    /// Put a taken-but-unexecuted batch back at the front of the queue,
+    /// preserving sample order.
+    pub fn requeue_front(&mut self, samples: Vec<(GaussMessage, CMatrix)>) {
+        for s in samples.into_iter().rev() {
+            self.pending.push_front(s);
+        }
+    }
+
+    /// Record a successful advance of `advanced` samples ending in
+    /// posterior `state`.
+    pub fn commit(&mut self, state: GaussMessage, advanced: u64) {
+        self.state = state;
+        self.samples_done += advanced;
+    }
 }
 
 /// Coalesces concurrent recursive CN streams into batched backend
@@ -121,6 +148,15 @@ impl StreamCoalescer {
     /// its sample queued; the first such error is returned after every
     /// successful stream has still been advanced.
     pub fn tick(backend: &mut dyn Backend, streams: &mut [CnStream]) -> Result<usize> {
+        let mut refs: Vec<&mut CnStream> = streams.iter_mut().collect();
+        Self::tick_refs(backend, &mut refs)
+    }
+
+    /// [`tick`](Self::tick) over a borrowed selection of streams. The
+    /// serve tier's registry keeps streams in a map keyed by session id,
+    /// so a coalescing round operates on whatever subset its fairness
+    /// rotor picked rather than a contiguous slice.
+    pub fn tick_refs(backend: &mut dyn Backend, streams: &mut [&mut CnStream]) -> Result<usize> {
         let mut idx = Vec::with_capacity(streams.len());
         let mut reqs = Vec::with_capacity(streams.len());
         for (i, s) in streams.iter().enumerate() {
@@ -138,7 +174,7 @@ impl StreamCoalescer {
         for (i, out) in idx.into_iter().zip(outs) {
             match out {
                 Ok(post) => {
-                    let s = &mut streams[i];
+                    let s = &mut *streams[i];
                     s.state = post;
                     s.pending.pop_front();
                     s.samples_done += 1;
@@ -259,6 +295,40 @@ mod tests {
             }
             assert!(s.state.dist(&want) < 1e-12, "stream {i}: {}", s.state.dist(&want));
         }
+    }
+
+    #[test]
+    fn take_requeue_commit_preserve_order() {
+        use crate::gmp::matrix::c64;
+        use crate::testutil::Rng;
+
+        let mut rng = Rng::new(21);
+        let msg = |rng: &mut Rng| {
+            GaussMessage::new(
+                (0..2).map(|_| c64::new(rng.normal(), rng.normal())).collect(),
+                CMatrix::random_psd(rng, 2, 0.5),
+            )
+        };
+        let mut s = CnStream::new(msg(&mut rng));
+        let samples: Vec<(GaussMessage, CMatrix)> =
+            (0..5).map(|_| (msg(&mut rng), CMatrix::random(&mut rng, 2, 2))).collect();
+        for (y, a) in &samples {
+            s.push(y.clone(), a.clone());
+        }
+        let batch = s.take(3);
+        assert_eq!((batch.len(), s.pending()), (3, 2));
+        assert!(batch[0].0.dist(&samples[0].0) == 0.0);
+        // a failed dispatch puts the batch back exactly where it was
+        s.requeue_front(batch);
+        assert_eq!(s.pending(), 5);
+        let again = s.take(5);
+        for (got, want) in again.iter().zip(&samples) {
+            assert!(got.0.dist(&want.0) == 0.0 && got.1.dist(&want.1) == 0.0);
+        }
+        let post = msg(&mut rng);
+        s.commit(post.clone(), 5);
+        assert_eq!(s.samples_done, 5);
+        assert!(s.state.dist(&post) == 0.0);
     }
 
     #[test]

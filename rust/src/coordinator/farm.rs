@@ -1,4 +1,4 @@
-//! Multi-device accelerator farm.
+//! Multi-device accelerator farm with kill/revive membership.
 //!
 //! §III imagines one FGP attached to a host; a deployment scales out with
 //! several. [`FgpFarm`] owns N simulated devices, each behind a
@@ -6,38 +6,112 @@
 //! executions with streamed sections — the CN update being just the
 //! smallest one) by policy:
 //!
-//! * `RoundRobin` — stateless rotation;
-//! * `LeastLoaded` — the device with the fewest simulated cycles consumed
-//!   (a proxy for queue depth on real silicon).
+//! * `RoundRobin` — stateless rotation over the **live** members;
+//! * `LeastLoaded` — the live device with the fewest simulated cycles
+//!   consumed (a proxy for queue depth on real silicon).
 //!
 //! The CN program is compiled **once** on the control plane and installed
 //! into every device session's program cache; new workload shapes compile
 //! on first sight per device and are cached from then on. Every device
 //! runs on its own thread behind the Fig. 5 command channel, so the farm
 //! also exercises the protocol under concurrency.
+//!
+//! ## Membership and typed failure (the serve tier's substrate)
+//!
+//! Each device slot is an `RwLock<Option<DeviceLink>>`:
+//! [`FgpFarm::kill_device`] takes the link down (the thread finishes its
+//! in-flight request, then exits — no sample is ever half-executed) and
+//! [`FgpFarm::revive_device`] respawns it with the stored CN program.
+//! Submitting to a dead, missing, or lock-poisoned device never panics;
+//! it surfaces a typed [`FarmError`] on the reply channel, and
+//! [`FarmError::is_retryable`] tells callers — the serve tier's engine
+//! room above all — whether re-dispatching the same work to another
+//! member is sound. Retrying is lossless because nothing advances a
+//! stream's accounting until an execution actually returns.
+//!
+//! ## Sticky streams, checkpoints, failover
+//!
+//! [`FgpFarm::open_stream`] pins a recursive stream to one device so its
+//! compiled chunk program stays cached and PM-resident.
+//! [`FarmStream::step_chunk`] advances one chunk at a time;
+//! [`FarmStream::checkpoint`] snapshots the per-sample state
+//! ([`StreamCheckpoint`]) and [`FgpFarm::resume_stream`] restores it on
+//! any member — bitwise identically, by the chunk-invariance contract
+//! documented on [`StreamCheckpoint`].
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 use std::thread::JoinHandle;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
-use crate::compiler::CompileOptions;
-use crate::engine::{Execution, Session, StreamBinder, StreamRun, StreamSample, StreamingWorkload};
+use crate::compiler::{CompileOptions, CompiledProgram};
+use crate::engine::{
+    Execution, Session, StreamBinder, StreamCheckpoint, StreamRun, StreamSample,
+    StreamingWorkload,
+};
 use crate::fgp::FgpConfig;
 use crate::gmp::matrix::CMatrix;
 use crate::gmp::message::GaussMessage;
 
-use super::backend::{CnRequestData, WorkloadRequest};
+use super::backend::{Backend, BackendKind, CnRequestData, WorkloadRequest};
 
 /// Request routing policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RoutePolicy {
-    /// Stateless rotation over devices.
+    /// Stateless rotation over live devices.
     RoundRobin,
-    /// Route to the device with the fewest simulated cycles.
+    /// Route to the live device with the fewest simulated cycles.
     LeastLoaded,
+}
+
+/// Typed farm failures — everything a submitter can observe going wrong
+/// on the device plane, as data. Wrapped in `anyhow::Error` on the
+/// reply channels (`err.downcast_ref::<FarmError>()` recovers the typed
+/// value), so the serve tier can distinguish *retry elsewhere* from
+/// *give up*.
+#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum FarmError {
+    /// The device index is outside the farm (a caller bug — not
+    /// retryable, no other member would change the answer).
+    #[error("no device {device} in a {size}-device farm")]
+    NoSuchDevice {
+        /// The requested index.
+        device: usize,
+        /// Farm size.
+        size: usize,
+    },
+    /// The device was killed (or died) before the request executed.
+    /// Retryable: the request never ran, so re-submitting it to a live
+    /// member neither loses nor duplicates work.
+    #[error("device {device} stopped")]
+    DeviceStopped {
+        /// The dead device.
+        device: usize,
+    },
+    /// The device slot's lock is poisoned (a thread panicked while
+    /// holding it). Retryable on another member; [`FgpFarm::kill_device`]
+    /// + [`FgpFarm::revive_device`] clear the poison and recover the slot.
+    #[error("device {device} lock poisoned")]
+    DevicePoisoned {
+        /// The poisoned device.
+        device: usize,
+    },
+    /// Every device in the farm is down.
+    #[error("all {size} farm devices are down")]
+    AllDevicesDown {
+        /// Farm size.
+        size: usize,
+    },
+}
+
+impl FarmError {
+    /// Whether re-submitting the same request to another live member is
+    /// sound (the request was never executed).
+    pub fn is_retryable(&self) -> bool {
+        !matches!(self, FarmError::NoSuchDevice { .. })
+    }
 }
 
 /// How a device should reply: the full execution, or (for the CN
@@ -65,18 +139,59 @@ struct DeviceMsg {
     resp: DeviceResp,
 }
 
-struct Device {
+/// A live device: its command channel and thread handle.
+struct DeviceLink {
     tx: Sender<DeviceMsg>,
-    /// Simulated device cycles consumed (load proxy).
+    handle: JoinHandle<()>,
+}
+
+/// One device slot; `None` while the member is down.
+struct DeviceSlot {
+    link: RwLock<Option<DeviceLink>>,
+    /// Simulated device cycles consumed (load proxy; survives revive).
     cycles: Arc<AtomicU64>,
-    handle: Option<JoinHandle<()>>,
 }
 
 /// A farm of simulated FGPs.
 pub struct FgpFarm {
-    devices: Vec<Device>,
+    devices: Vec<DeviceSlot>,
     policy: RoutePolicy,
     next: AtomicUsize,
+    config: FgpConfig,
+    /// The CN probe shape + its compiled program, kept so a revived
+    /// device re-installs the same cache entry the boot devices got.
+    probe: WorkloadRequest,
+    cn_program: Arc<CompiledProgram>,
+}
+
+fn spawn_device(
+    d: usize,
+    config: FgpConfig,
+    probe: WorkloadRequest,
+    program: Arc<CompiledProgram>,
+    cycles: Arc<AtomicU64>,
+    rx: Receiver<DeviceMsg>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("fgp-farm-{d}"))
+        .spawn(move || {
+            let mut session = Session::fgp_sim(config);
+            session.install(&probe.graph, &probe.schedule, &probe.opts, program);
+            // a kill drops the sender: the loop finishes the request it
+            // already received (its reply still reaches the client),
+            // then exits — queued-but-unreceived requests are dropped,
+            // which the submitter observes as a retryable DeviceStopped
+            while let Ok(msg) = rx.recv() {
+                let result = session
+                    .dispatch(&msg.req.graph, &msg.req.schedule, &msg.req.inputs, &msg.req.opts)
+                    .map(|d| {
+                        cycles.fetch_add(d.exec.stats.cycles, Ordering::Relaxed);
+                        d.exec
+                    });
+                msg.resp.send(result);
+            }
+        })
+        .expect("spawn farm device")
 }
 
 impl FgpFarm {
@@ -98,58 +213,120 @@ impl FgpFarm {
 
         let mut devices = Vec::with_capacity(count);
         for d in 0..count {
-            let (tx, rx): (Sender<DeviceMsg>, Receiver<DeviceMsg>) = mpsc::channel();
+            let (tx, rx) = mpsc::channel();
             let cycles = Arc::new(AtomicU64::new(0));
-            let cycles2 = Arc::clone(&cycles);
-            let probe2 = probe.clone();
-            let program2 = Arc::clone(&cn_program);
-            let handle = std::thread::Builder::new()
-                .name(format!("fgp-farm-{d}"))
-                .spawn(move || {
-                    let mut session = Session::fgp_sim(config);
-                    session.install(&probe2.graph, &probe2.schedule, &probe2.opts, program2);
-                    while let Ok(msg) = rx.recv() {
-                        let result = session
-                            .dispatch(
-                                &msg.req.graph,
-                                &msg.req.schedule,
-                                &msg.req.inputs,
-                                &msg.req.opts,
-                            )
-                            .map(|d| {
-                                cycles2.fetch_add(d.exec.stats.cycles, Ordering::Relaxed);
-                                d.exec
-                            });
-                        msg.resp.send(result);
-                    }
-                })
-                .expect("spawn farm device");
-            devices.push(Device { tx, cycles, handle: Some(handle) });
+            let handle = spawn_device(
+                d,
+                config,
+                probe.clone(),
+                Arc::clone(&cn_program),
+                Arc::clone(&cycles),
+                rx,
+            );
+            devices.push(DeviceSlot {
+                link: RwLock::new(Some(DeviceLink { tx, handle })),
+                cycles,
+            });
         }
-        Ok(FgpFarm { devices, policy, next: AtomicUsize::new(0) })
+        Ok(FgpFarm { devices, policy, next: AtomicUsize::new(0), config, probe, cn_program })
     }
 
-    /// Number of devices in the farm.
+    /// Number of device slots in the farm (live or not).
     pub fn size(&self) -> usize {
         self.devices.len()
     }
 
-    /// Pick a device per the routing policy.
-    fn route(&self) -> usize {
-        match self.policy {
-            RoutePolicy::RoundRobin => {
-                self.next.fetch_add(1, Ordering::Relaxed) % self.devices.len()
+    /// Indices of the currently live devices.
+    pub fn live_devices(&self) -> Vec<usize> {
+        (0..self.devices.len())
+            .filter(|i| {
+                matches!(self.devices[*i].link.read().as_deref(), Ok(Some(_)))
+            })
+            .collect()
+    }
+
+    /// Kill device `idx`: drop its command channel (the thread finishes
+    /// its in-flight request, then exits) and join the thread. Clears a
+    /// poisoned slot lock on the way. Returns `true` if the device was
+    /// live. Idempotent.
+    pub fn kill_device(&self, idx: usize) -> Result<bool, FarmError> {
+        let slot = self
+            .devices
+            .get(idx)
+            .ok_or(FarmError::NoSuchDevice { device: idx, size: self.devices.len() })?;
+        let link = {
+            let mut guard = match slot.link.write() {
+                Ok(g) => g,
+                Err(e) => {
+                    slot.link.clear_poison();
+                    e.into_inner()
+                }
+            };
+            guard.take()
+        };
+        match link {
+            Some(l) => {
+                drop(l.tx);
+                let _ = l.handle.join();
+                Ok(true)
             }
-            RoutePolicy::LeastLoaded => (0..self.devices.len())
-                .min_by_key(|i| self.devices[*i].cycles.load(Ordering::Relaxed))
-                .unwrap(),
+            None => Ok(false),
         }
+    }
+
+    /// Revive device `idx` with the farm's stored CN program. The slot's
+    /// cycle counter persists across kill/revive so `LeastLoaded`
+    /// routing stays meaningful. Returns `true` if a new thread was
+    /// spawned (`false` if the device was already live).
+    pub fn revive_device(&self, idx: usize) -> Result<bool, FarmError> {
+        let slot = self
+            .devices
+            .get(idx)
+            .ok_or(FarmError::NoSuchDevice { device: idx, size: self.devices.len() })?;
+        let mut guard = match slot.link.write() {
+            Ok(g) => g,
+            Err(e) => {
+                slot.link.clear_poison();
+                e.into_inner()
+            }
+        };
+        if guard.is_some() {
+            return Ok(false);
+        }
+        let (tx, rx) = mpsc::channel();
+        let handle = spawn_device(
+            idx,
+            self.config,
+            self.probe.clone(),
+            Arc::clone(&self.cn_program),
+            Arc::clone(&slot.cycles),
+            rx,
+        );
+        *guard = Some(DeviceLink { tx, handle });
+        Ok(true)
+    }
+
+    /// Pick a live device per the routing policy, skipping `exclude`
+    /// (failover: "anywhere but where it just died").
+    pub fn pick(&self, exclude: &[usize]) -> Result<usize, FarmError> {
+        let live: Vec<usize> =
+            self.live_devices().into_iter().filter(|i| !exclude.contains(i)).collect();
+        if live.is_empty() {
+            return Err(FarmError::AllDevicesDown { size: self.devices.len() });
+        }
+        Ok(match self.policy {
+            RoutePolicy::RoundRobin => live[self.next.fetch_add(1, Ordering::Relaxed) % live.len()],
+            RoutePolicy::LeastLoaded => *live
+                .iter()
+                .min_by_key(|i| self.devices[**i].cycles.load(Ordering::Relaxed))
+                .expect("non-empty live list"),
+        })
     }
 
     /// Dispatch one workload request; blocks for the reply.
     pub fn run(&self, req: WorkloadRequest) -> Result<Execution> {
         let (rrx, idx) = self.submit_workload(req);
-        rrx.recv().map_err(|_| anyhow!("device {idx} died"))?
+        recv_exec(&rrx, idx)
     }
 
     /// Dispatch one CN update (the smallest workload); blocks.
@@ -159,28 +336,36 @@ impl FgpFarm {
     }
 
     /// Async workload dispatch; returns the reply channel and the device.
+    /// If no device is live, the channel carries
+    /// [`FarmError::AllDevicesDown`] and the index is 0.
     pub fn submit_workload(
         &self,
         req: WorkloadRequest,
     ) -> (Receiver<Result<Execution>>, usize) {
-        let idx = self.route();
-        (self.submit_to(idx, req), idx)
+        match self.pick(&[]) {
+            Ok(idx) => (self.submit_to(idx, req), idx),
+            Err(e) => {
+                let (rtx, rrx) = mpsc::channel();
+                let _ = rtx.send(Err(e.into()));
+                (rrx, 0)
+            }
+        }
     }
 
     /// Async CN dispatch; returns the reply channel and the chosen device.
     /// The device thread unwraps the single output message itself — no
     /// adapter hop on the client side.
     pub fn submit(&self, req: CnRequestData) -> (Receiver<Result<GaussMessage>>, usize) {
-        let idx = self.route();
         let (rtx, rrx) = mpsc::channel();
-        match WorkloadRequest::cn(&req) {
-            Ok(wr) => {
-                if let Err(mpsc::SendError(msg)) =
-                    self.devices[idx].tx.send(DeviceMsg { req: wr, resp: DeviceResp::Cn(rtx) })
-                {
-                    msg.resp.send(Err(anyhow!("device {idx} stopped")));
-                }
+        let idx = match self.pick(&[]) {
+            Ok(i) => i,
+            Err(e) => {
+                let _ = rtx.send(Err(e.into()));
+                return (rrx, 0);
             }
+        };
+        match WorkloadRequest::cn(&req) {
+            Ok(wr) => self.send_msg(idx, DeviceMsg { req: wr, resp: DeviceResp::Cn(rtx) }),
             // request construction failed client-side; the routed device
             // was never reached but the index reflects the routing choice
             Err(e) => {
@@ -195,33 +380,53 @@ impl FgpFarm {
         self.devices.iter().map(|d| d.cycles.load(Ordering::Relaxed)).collect()
     }
 
-    /// Submit a workload request to a **specific** device, bypassing the
-    /// routing policy (stream stickiness). A bad index or a stopped
-    /// device surfaces as an `Err` on the reply channel, the same
-    /// error-via-channel contract every async submit here uses.
-    pub fn submit_to(&self, idx: usize, req: WorkloadRequest) -> Receiver<Result<Execution>> {
-        let (rtx, rrx) = mpsc::channel();
-        match self.devices.get(idx) {
+    /// Route `msg` to device `idx`'s channel, converting every failure
+    /// mode — bad index, poisoned slot lock, dead thread — into a typed
+    /// [`FarmError`] on the reply channel. Never panics (the fix for the
+    /// poisoned-lock panic the serving tier inherited).
+    fn send_msg(&self, idx: usize, msg: DeviceMsg) {
+        let slot = match self.devices.get(idx) {
+            Some(s) => s,
             None => {
-                let _ = rtx.send(Err(anyhow!(
-                    "no device {idx} in a {}-device farm",
-                    self.devices.len()
-                )));
+                msg.resp.send(Err(FarmError::NoSuchDevice {
+                    device: idx,
+                    size: self.devices.len(),
+                }
+                .into()));
+                return;
             }
-            Some(d) => {
-                if let Err(mpsc::SendError(msg)) =
-                    d.tx.send(DeviceMsg { req, resp: DeviceResp::Exec(rtx) })
-                {
-                    msg.resp.send(Err(anyhow!("device {idx} stopped")));
+        };
+        let guard = match slot.link.read() {
+            Ok(g) => g,
+            Err(_) => {
+                msg.resp.send(Err(FarmError::DevicePoisoned { device: idx }.into()));
+                return;
+            }
+        };
+        match guard.as_ref() {
+            None => msg.resp.send(Err(FarmError::DeviceStopped { device: idx }.into())),
+            Some(link) => {
+                if let Err(mpsc::SendError(m)) = link.tx.send(msg) {
+                    m.resp.send(Err(FarmError::DeviceStopped { device: idx }.into()));
                 }
             }
         }
+    }
+
+    /// Submit a workload request to a **specific** device, bypassing the
+    /// routing policy (stream stickiness). A bad index, a stopped device
+    /// or a poisoned slot lock surfaces as a typed [`FarmError`] on the
+    /// reply channel — the same error-via-channel contract every async
+    /// submit here uses.
+    pub fn submit_to(&self, idx: usize, req: WorkloadRequest) -> Receiver<Result<Execution>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.send_msg(idx, DeviceMsg { req, resp: DeviceResp::Exec(rtx) });
         rrx
     }
 
     /// Open a **sticky** stream session over this farm: the routing
-    /// policy picks a device once, and every chunk of the stream then
-    /// lands on that same device — its session keeps the stream's
+    /// policy picks a live device once, and every chunk of the stream
+    /// then lands on that same device — its session keeps the stream's
     /// compiled chunk program cached and PM-resident, and the client
     /// side carries the recursive state between chunks, so per-device
     /// state persists across samples. Concurrent streams naturally
@@ -232,7 +437,7 @@ impl FgpFarm {
         &'f self,
         w: &'w W,
     ) -> Result<FarmStream<'f, 'w, W>> {
-        let device = self.route();
+        let device = self.pick(&[])?;
         let chunk = w.max_chunk().max(1);
         let binder = StreamBinder::build(w, chunk)?;
         Ok(FarmStream {
@@ -247,6 +452,97 @@ impl FgpFarm {
             samples: 0,
             cycles: 0,
         })
+    }
+
+    /// Restore a checkpointed stream onto `device` (or let the routing
+    /// policy pick a live member). The resumed stream's remaining
+    /// outputs are bitwise identical to the uninterrupted run's — the
+    /// failover conformance contract (see [`StreamCheckpoint`]).
+    pub fn resume_stream<'f, 'w, W: StreamingWorkload + ?Sized>(
+        &'f self,
+        w: &'w W,
+        ckpt: &StreamCheckpoint,
+        device: Option<usize>,
+    ) -> Result<FarmStream<'f, 'w, W>> {
+        if ckpt.stream_name != w.stream_name() {
+            bail!(
+                "checkpoint belongs to stream '{}' but the workload is '{}'",
+                ckpt.stream_name,
+                w.stream_name()
+            );
+        }
+        let device = match device {
+            Some(d) => {
+                if d >= self.devices.len() {
+                    return Err(
+                        FarmError::NoSuchDevice { device: d, size: self.devices.len() }.into()
+                    );
+                }
+                d
+            }
+            None => self.pick(&[])?,
+        };
+        let chunk = w.max_chunk().max(1);
+        let binder = StreamBinder::build(w, chunk)?;
+        Ok(FarmStream {
+            farm: self,
+            w,
+            device,
+            chunk,
+            binder,
+            opts: w.stream_compile_options(),
+            state: ckpt.state.clone(),
+            boundaries: ckpt.boundaries.clone(),
+            samples: ckpt.samples,
+            cycles: 0,
+        })
+    }
+}
+
+/// Await an async submit's reply, mapping a dropped reply channel (the
+/// device died with the request still queued) to the retryable
+/// [`FarmError::DeviceStopped`].
+pub fn recv_exec<T>(rx: &Receiver<Result<T>>, device: usize) -> Result<T> {
+    match rx.recv() {
+        Ok(r) => r,
+        Err(_) => Err(FarmError::DeviceStopped { device }.into()),
+    }
+}
+
+/// A [`Backend`] adapter over a shared farm: CN updates fan out across
+/// the live members (batches dispatch concurrently, one request per
+/// device pick). This is what lets the serve tier drive the
+/// [`super::StreamCoalescer`] against a farm instead of a single
+/// in-thread engine.
+pub struct FarmCnBackend {
+    farm: Arc<FgpFarm>,
+}
+
+impl FarmCnBackend {
+    /// Adapter over a shared farm.
+    pub fn new(farm: Arc<FgpFarm>) -> Self {
+        FarmCnBackend { farm }
+    }
+}
+
+impl Backend for FarmCnBackend {
+    fn cn_update(&mut self, req: &CnRequestData) -> Result<GaussMessage> {
+        self.farm.update(req.clone())
+    }
+
+    fn cn_update_batch(&mut self, reqs: &[CnRequestData]) -> Vec<Result<GaussMessage>> {
+        // submit everything async first, then collect: the batch runs
+        // concurrently across however many devices routing spread it over
+        let pending: Vec<_> = reqs.iter().map(|r| self.farm.submit(r.clone())).collect();
+        pending.into_iter().map(|(rx, idx)| recv_exec(&rx, idx)).collect()
+    }
+
+    fn run_workload(&mut self, req: &WorkloadRequest) -> Result<Execution> {
+        self.farm.run(req.clone())
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::FgpSim
     }
 }
 
@@ -276,14 +572,97 @@ impl<W: StreamingWorkload + ?Sized> FarmStream<'_, '_, W> {
         &self.state
     }
 
+    /// Samples folded into the state so far.
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+
     /// Simulated device cycles this stream has consumed.
     pub fn cycles(&self) -> u64 {
         self.cycles
     }
 
+    /// Re-pin the stream to `device` (failover). State, sample cursor
+    /// and boundaries carry over untouched; the target device compiles
+    /// (or cache-hits) the chunk program on the next dispatch.
+    pub fn failover_to(&mut self, device: usize) -> Result<(), FarmError> {
+        if device >= self.farm.size() {
+            return Err(FarmError::NoSuchDevice { device, size: self.farm.size() });
+        }
+        self.device = device;
+        Ok(())
+    }
+
+    /// Failover per the routing policy, excluding the current (failed)
+    /// device. Returns the new pin.
+    pub fn failover(&mut self) -> Result<usize, FarmError> {
+        let device = self.farm.pick(&[self.device])?;
+        self.device = device;
+        Ok(device)
+    }
+
+    /// Snapshot the stream's resumable state (see
+    /// [`FgpFarm::resume_stream`] and the wire codec's checkpoint frame).
+    pub fn checkpoint(&self) -> StreamCheckpoint {
+        StreamCheckpoint {
+            stream_name: self.w.stream_name().to_string(),
+            samples: self.samples,
+            state: self.state.clone(),
+            boundaries: self.boundaries.clone(),
+        }
+    }
+
     fn dispatch(&self, req: WorkloadRequest) -> Result<Execution> {
         let rx = self.farm.submit_to(self.device, req);
-        rx.recv().map_err(|_| anyhow!("device {} died", self.device))?
+        recv_exec(&rx, self.device)
+    }
+
+    /// Advance the stream by one chunk: pull up to `chunk` samples from
+    /// the workload, execute them on the pinned device, fold the result
+    /// into the recursive state. Returns the samples consumed, or `None`
+    /// at end of stream.
+    ///
+    /// On `Err` **nothing advances**: the sample cursor, state and
+    /// boundaries are untouched, so after a
+    /// [`failover`](FarmStream::failover) the retry re-pulls exactly the
+    /// same samples (`StreamingWorkload::next_sample` is deterministic
+    /// in `k`) and the stream neither loses nor duplicates work — the
+    /// invariant the churn soak test pins.
+    pub fn step_chunk(&mut self) -> Result<Option<u64>> {
+        let mut batch: Vec<StreamSample> = Vec::with_capacity(self.chunk);
+        while batch.len() < self.chunk {
+            match self.w.next_sample(self.samples as usize + batch.len(), &self.state)? {
+                Some(s) => batch.push(s),
+                None => break,
+            }
+        }
+        let real = batch.len();
+        if real == 0 {
+            return Ok(None);
+        }
+        let exec = if real == self.chunk {
+            self.binder.bind(&self.state, &batch)?;
+            self.dispatch(WorkloadRequest {
+                graph: self.binder.graph.clone(),
+                schedule: self.binder.schedule.clone(),
+                inputs: self.binder.inputs.clone(),
+                opts: self.opts,
+            })?
+        } else {
+            let mut tail = StreamBinder::build(self.w, real)?;
+            tail.bind(&self.state, &batch)?;
+            self.dispatch(WorkloadRequest {
+                graph: tail.graph,
+                schedule: tail.schedule,
+                inputs: tail.inputs,
+                opts: self.opts,
+            })?
+        };
+        self.state = exec.output()?.clone();
+        self.boundaries.push(self.state.clone());
+        self.cycles += exec.stats.cycles;
+        self.samples += real as u64;
+        Ok(Some(real as u64))
     }
 
     /// Feed every remaining sample through the pinned device and return
@@ -291,41 +670,10 @@ impl<W: StreamingWorkload + ?Sized> FarmStream<'_, '_, W> {
     /// `stream_outcome`). Consumes the stream: one `FarmStream` is one
     /// pass over its workload's sample iterator.
     pub fn run_to_end(mut self) -> Result<StreamRun> {
-        loop {
-            let mut batch: Vec<StreamSample> = Vec::with_capacity(self.chunk);
-            while batch.len() < self.chunk {
-                match self.w.next_sample(self.samples as usize + batch.len(), &self.state)? {
-                    Some(s) => batch.push(s),
-                    None => break,
-                }
-            }
-            let real = batch.len();
-            if real == 0 {
-                break;
-            }
-            let exec = if real == self.chunk {
-                self.binder.bind(&self.state, &batch)?;
-                self.dispatch(WorkloadRequest {
-                    graph: self.binder.graph.clone(),
-                    schedule: self.binder.schedule.clone(),
-                    inputs: self.binder.inputs.clone(),
-                    opts: self.opts,
-                })?
-            } else {
-                let mut tail = StreamBinder::build(self.w, real)?;
-                tail.bind(&self.state, &batch)?;
-                self.dispatch(WorkloadRequest {
-                    graph: tail.graph,
-                    schedule: tail.schedule,
-                    inputs: tail.inputs,
-                    opts: self.opts,
-                })?
-            };
-            self.state = exec.output()?.clone();
-            self.boundaries.push(self.state.clone());
-            self.cycles += exec.stats.cycles;
-            self.samples += real as u64;
-            if real < self.chunk {
+        while let Some(n) = self.step_chunk()? {
+            // a short chunk is the stream's tail: stop without probing
+            // the sample iterator past the end again
+            if (n as usize) < self.chunk {
                 break;
             }
         }
@@ -339,13 +687,8 @@ impl<W: StreamingWorkload + ?Sized> FarmStream<'_, '_, W> {
 
 impl Drop for FgpFarm {
     fn drop(&mut self) {
-        for d in &mut self.devices {
-            // closing the channel stops the thread
-            let (dummy, _) = mpsc::channel();
-            d.tx = dummy;
-            if let Some(h) = d.handle.take() {
-                let _ = h.join();
-            }
+        for d in 0..self.devices.len() {
+            let _ = self.kill_device(d);
         }
     }
 }
@@ -355,6 +698,7 @@ mod tests {
     use super::*;
     use crate::gmp::matrix::c64;
     use crate::testutil::Rng;
+    use anyhow::Result;
 
     fn request(rng: &mut Rng, n: usize) -> CnRequestData {
         CnRequestData {
@@ -443,5 +787,212 @@ mod tests {
         let outcome = p.outcome(&exec).unwrap();
         assert!(outcome.rel_mse.is_finite(), "rel MSE {}", outcome.rel_mse);
         assert_eq!(exec.stats.sections, 8);
+    }
+
+    fn farm_err(r: Result<Execution>) -> FarmError {
+        let err = r.unwrap_err();
+        err.downcast_ref::<FarmError>()
+            .unwrap_or_else(|| panic!("want FarmError in the chain, got {err:#}"))
+            .clone()
+    }
+
+    #[test]
+    fn submit_to_dead_device_is_typed_and_retryable() {
+        let farm = FgpFarm::start(2, FgpConfig::default(), RoutePolicy::RoundRobin).unwrap();
+        assert!(farm.kill_device(1).unwrap());
+        assert!(!farm.kill_device(1).unwrap(), "second kill is a no-op");
+        assert_eq!(farm.live_devices(), vec![0]);
+        let mut rng = Rng::new(4);
+        let req = WorkloadRequest::cn(&request(&mut rng, 4)).unwrap();
+        let e = farm_err(recv_exec(&farm.submit_to(1, req.clone()), 1));
+        assert_eq!(e, FarmError::DeviceStopped { device: 1 });
+        assert!(e.is_retryable());
+        // out-of-range index is typed too, but NOT retryable
+        let e = farm_err(recv_exec(&farm.submit_to(9, req.clone()), 9));
+        assert_eq!(e, FarmError::NoSuchDevice { device: 9, size: 2 });
+        assert!(!e.is_retryable());
+        // routed traffic avoids the dead member entirely
+        for _ in 0..4 {
+            farm.update(request(&mut rng, 4)).unwrap();
+        }
+        assert_eq!(farm.load_profile()[1], 0);
+        // revive: the member takes traffic again with its cache reseeded
+        assert!(farm.revive_device(1).unwrap());
+        assert!(!farm.revive_device(1).unwrap(), "second revive is a no-op");
+        let (rx, _) = farm.submit(request(&mut rng, 4));
+        rx.recv().unwrap().unwrap();
+    }
+
+    #[test]
+    fn all_devices_down_is_typed() {
+        let farm = FgpFarm::start(2, FgpConfig::default(), RoutePolicy::LeastLoaded).unwrap();
+        farm.kill_device(0).unwrap();
+        farm.kill_device(1).unwrap();
+        assert_eq!(farm.pick(&[]), Err(FarmError::AllDevicesDown { size: 2 }));
+        let mut rng = Rng::new(5);
+        let (rx, _) = farm.submit(request(&mut rng, 4));
+        let err = rx.recv().unwrap().unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<FarmError>(),
+            Some(&FarmError::AllDevicesDown { size: 2 })
+        );
+        // a revive brings the farm back
+        farm.revive_device(0).unwrap();
+        farm.update(request(&mut rng, 4)).unwrap();
+    }
+
+    #[test]
+    fn poisoned_device_lock_is_typed_not_a_panic() {
+        let farm = FgpFarm::start(2, FgpConfig::default(), RoutePolicy::RoundRobin).unwrap();
+        // poison device 0's slot lock deterministically
+        let slot_lock = &farm.devices[0].link;
+        std::thread::scope(|s| {
+            let h = s.spawn(|| {
+                let _guard = slot_lock.write().unwrap();
+                panic!("poisoning device lock for the test");
+            });
+            assert!(h.join().is_err());
+        });
+        let mut rng = Rng::new(6);
+        let req = WorkloadRequest::cn(&request(&mut rng, 4)).unwrap();
+        let e = farm_err(recv_exec(&farm.submit_to(0, req), 0));
+        assert_eq!(e, FarmError::DevicePoisoned { device: 0 });
+        assert!(e.is_retryable());
+        // routing skips the poisoned slot; kill + revive recovers it
+        for _ in 0..2 {
+            farm.update(request(&mut rng, 4)).unwrap();
+        }
+        assert_eq!(farm.load_profile()[0], 0);
+        farm.kill_device(0).unwrap();
+        farm.revive_device(0).unwrap();
+        rx_ok(farm.submit_to(0, WorkloadRequest::cn(&request(&mut rng, 4)).unwrap()));
+    }
+
+    fn rx_ok(rx: mpsc::Receiver<Result<Execution>>) {
+        rx.recv().unwrap().unwrap();
+    }
+
+    /// Cap a streaming workload's chunk so farm streams span several
+    /// dispatches (the default RLS chunk of 64 would swallow a short
+    /// test stream whole).
+    struct ChunkCapped<'a> {
+        inner: &'a crate::apps::rls::RlsProblem,
+        cap: usize,
+    }
+
+    impl StreamingWorkload for ChunkCapped<'_> {
+        type StreamOutcome = StreamRun;
+
+        fn stream_name(&self) -> &str {
+            self.inner.stream_name()
+        }
+
+        fn state_dim(&self) -> usize {
+            self.inner.state_dim()
+        }
+
+        fn stream_model(&self, chunk: usize) -> Result<(crate::gmp::FactorGraph, crate::gmp::Schedule)> {
+            self.inner.stream_model(chunk)
+        }
+
+        fn initial_state(&self) -> GaussMessage {
+            self.inner.initial_state()
+        }
+
+        fn next_sample(&self, k: usize, state: &GaussMessage) -> Result<Option<StreamSample>> {
+            self.inner.next_sample(k, state)
+        }
+
+        fn max_chunk(&self) -> usize {
+            self.cap
+        }
+
+        fn stream_outcome(&self, run: &StreamRun) -> Result<StreamRun> {
+            Ok(run.clone())
+        }
+    }
+
+    #[test]
+    fn checkpointed_stream_fails_over_bitwise_identically() {
+        use crate::apps::rls::RlsProblem;
+
+        let p = RlsProblem::synthetic(4, 16, 0.01, 23);
+        let capped = ChunkCapped { inner: &p, cap: 4 };
+
+        // uninterrupted reference run
+        let farm = FgpFarm::start(2, FgpConfig::default(), RoutePolicy::RoundRobin).unwrap();
+        let reference = farm.open_stream(&capped).unwrap().run_to_end().unwrap();
+        assert_eq!(reference.samples, 16);
+
+        // interrupted run: two chunks, checkpoint, kill the pinned
+        // device mid-stream, resume from the checkpoint on another
+        // member — then the next dispatch after a live failover too
+        let farm2 = FgpFarm::start(2, FgpConfig::default(), RoutePolicy::RoundRobin).unwrap();
+        let mut s = farm2.open_stream(&capped).unwrap();
+        let dev0 = s.device();
+        assert_eq!(s.step_chunk().unwrap(), Some(4));
+        assert_eq!(s.step_chunk().unwrap(), Some(4));
+        let ckpt = s.checkpoint();
+        assert_eq!(ckpt.samples, 8);
+        farm2.kill_device(dev0).unwrap();
+
+        // the in-place path: the stream observes the typed failure and
+        // fails over, losing and duplicating nothing
+        let err = s.step_chunk().unwrap_err();
+        assert!(err.downcast_ref::<FarmError>().unwrap().is_retryable());
+        assert_eq!(s.samples(), 8, "failed chunk must not advance the cursor");
+        let new_dev = s.failover().unwrap();
+        assert_ne!(new_dev, dev0);
+        let live = s.run_to_end().unwrap();
+        assert_eq!(live.samples, 16);
+        assert_eq!(live.final_state, reference.final_state, "live failover diverged");
+
+        // the checkpoint/restore path on a third farm: bitwise again
+        let farm3 = FgpFarm::start(2, FgpConfig::default(), RoutePolicy::RoundRobin).unwrap();
+        let resumed =
+            farm3.resume_stream(&capped, &ckpt, Some(1)).unwrap().run_to_end().unwrap();
+        assert_eq!(resumed.samples, 16);
+        assert_eq!(resumed.final_state, reference.final_state, "resume diverged");
+        assert_eq!(resumed.boundaries.len(), reference.boundaries.len());
+        for (a, b) in resumed.boundaries.iter().zip(&reference.boundaries) {
+            assert_eq!(a, b, "boundary trace diverged");
+        }
+        // a checkpoint from the wrong stream is rejected
+        let bad = StreamCheckpoint { stream_name: "other".into(), ..ckpt.clone() };
+        assert!(farm3.resume_stream(&capped, &bad, None).is_err());
+    }
+
+    #[test]
+    fn farm_cn_backend_coalesces_against_live_members() {
+        use super::super::batcher::{CnStream, StreamCoalescer};
+
+        let farm =
+            Arc::new(FgpFarm::start(3, FgpConfig::default(), RoutePolicy::RoundRobin).unwrap());
+        let mut rng = Rng::new(8);
+        let mut streams: Vec<CnStream> = Vec::new();
+        let mut expect: Vec<GaussMessage> = Vec::new();
+        for _ in 0..3 {
+            let r0 = request(&mut rng, 4);
+            let mut s = CnStream::new(r0.x.clone());
+            let mut want = r0.x.clone();
+            for _ in 0..4 {
+                let r = request(&mut rng, 4);
+                s.push(r.y.clone(), r.a.clone());
+                want = farm
+                    .update(CnRequestData { x: want, y: r.y, a: r.a })
+                    .unwrap();
+            }
+            streams.push(s);
+            expect.push(want);
+        }
+        // kill a member mid-setup: the adapter only routes to live ones
+        farm.kill_device(2).unwrap();
+        let mut backend = FarmCnBackend::new(Arc::clone(&farm));
+        let total = StreamCoalescer::drain(&mut backend, &mut streams).unwrap();
+        assert_eq!(total, 12);
+        for (s, want) in streams.iter().zip(&expect) {
+            // same device semantics -> bitwise identical fold
+            assert_eq!(&s.state, want);
+        }
     }
 }

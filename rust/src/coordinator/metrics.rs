@@ -82,6 +82,27 @@ impl Histogram {
     }
 }
 
+/// A point-in-time copy of a [`Metrics`] bundle's latency distribution
+/// and completion counters: the SLO row the serve tier ships over the
+/// wire in a `STATS` reply and the bench layer writes to
+/// `BENCH_serving.json`. Quantiles are log2-bucket upper bounds (see
+/// [`Histogram::quantile`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    /// Requests completed.
+    pub completed: u64,
+    /// Requests failed.
+    pub failed: u64,
+    /// Mean end-to-end latency in nanoseconds.
+    pub mean_ns: u64,
+    /// p50 latency in nanoseconds.
+    pub p50_ns: u64,
+    /// p95 latency in nanoseconds.
+    pub p95_ns: u64,
+    /// p99 latency in nanoseconds.
+    pub p99_ns: u64,
+}
+
 /// Serving metrics bundle shared between workers and observers.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -118,6 +139,18 @@ impl Metrics {
             return 0.0;
         }
         self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// Point-in-time latency/completion snapshot (see [`MetricsSnapshot`]).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            mean_ns: self.latency.mean().as_nanos().min(u128::from(u64::MAX)) as u64,
+            p50_ns: self.latency.quantile(0.5).as_nanos().min(u128::from(u64::MAX)) as u64,
+            p95_ns: self.latency.quantile(0.95).as_nanos().min(u128::from(u64::MAX)) as u64,
+            p99_ns: self.latency.quantile(0.99).as_nanos().min(u128::from(u64::MAX)) as u64,
+        }
     }
 
     /// Multi-line human-readable report.
@@ -168,6 +201,21 @@ mod tests {
         h.record(Duration::from_millis(5));
         h.reset();
         assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn snapshot_orders_quantiles() {
+        let m = Metrics::new();
+        for us in [10u64, 100, 1000, 10_000] {
+            for _ in 0..5 {
+                m.latency.record(Duration::from_micros(us));
+            }
+        }
+        m.completed.store(20, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.completed, 20);
+        assert!(s.p50_ns <= s.p95_ns && s.p95_ns <= s.p99_ns, "{s:?}");
+        assert!(s.mean_ns > 0);
     }
 
     #[test]

@@ -20,7 +20,11 @@
 //!   and **sticky stream sessions** ([`FgpFarm::open_stream`]) where a
 //!   recursive app's chunks always land on the same device so its
 //!   compiled chunk program stays cached and PM-resident while the
-//!   per-stream state persists across samples;
+//!   per-stream state persists across samples. Device membership is
+//!   dynamic ([`FgpFarm::kill_device`] / [`FgpFarm::revive_device`]),
+//!   failures surface as typed retryable [`FarmError`]s, and streams
+//!   checkpoint/fail-over bitwise-identically — the substrate the
+//!   network serving tier ([`crate::serve`]) is built on;
 //! * [`server`] — worker threads pulling from an mpsc queue, a cloneable
 //!   client handle, graceful shutdown;
 //! * [`device`] — the raw Fig. 5 command protocol (`load_program`,
@@ -42,6 +46,6 @@ pub mod server;
 pub use backend::{Backend, BackendKind, CnRequestData, WorkloadRequest};
 pub use batcher::{BatchPolicy, Batcher, CnStream, StreamCoalescer};
 pub use device::{FgpDevice, ProtocolError};
-pub use farm::{FarmStream, FgpFarm, RoutePolicy};
-pub use metrics::{Histogram, Metrics};
+pub use farm::{recv_exec, FarmCnBackend, FarmError, FarmStream, FgpFarm, RoutePolicy};
+pub use metrics::{Histogram, Metrics, MetricsSnapshot};
 pub use server::{CnClient, CnServer, ServerClosed, ServerConfig};

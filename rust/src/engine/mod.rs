@@ -49,6 +49,7 @@ pub use session::{
     CacheStats, Engine, EngineKind, FgpSimEngine, GoldenEngine, RunReport, Session, XlaEngine,
 };
 pub use stream::{
-    StreamBinder, StreamReport, StreamRun, StreamSample, StreamingWorkload, DEFAULT_STREAM_CHUNK,
+    StreamBinder, StreamCheckpoint, StreamReport, StreamRun, StreamSample, StreamingWorkload,
+    DEFAULT_STREAM_CHUNK,
 };
 pub use workload::{bind_streamed, edge_label, preload_id, split_inputs, Execution, Workload};

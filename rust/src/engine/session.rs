@@ -29,7 +29,9 @@ use crate::gmp::{nodes, FactorGraph, MsgId, NodeKind, Schedule};
 use crate::isa::Instr;
 use crate::runtime::RuntimeClient;
 
-use super::stream::{StreamBinder, StreamReport, StreamRun, StreamSample, StreamingWorkload};
+use super::stream::{
+    StreamBinder, StreamCheckpoint, StreamReport, StreamRun, StreamSample, StreamingWorkload,
+};
 use super::workload::{Execution, Workload};
 
 /// Which engine a session drives.
@@ -675,6 +677,43 @@ impl Session {
         &mut self,
         w: &W,
     ) -> Result<StreamReport<W::StreamOutcome>> {
+        self.run_stream_inner(w, w.initial_state(), 0, Vec::new())
+    }
+
+    /// Resume a [`StreamingWorkload`] from a [`StreamCheckpoint`] — the
+    /// failover half of the serve tier's checkpoint/restore contract.
+    ///
+    /// Sample numbering continues at `ckpt.samples` (the workload's
+    /// `next_sample(k, ..)` is asked for exactly the samples an
+    /// uninterrupted run had still ahead of it), so the report's
+    /// `samples` and the outcome cover the **whole** stream while
+    /// `chunks`/`cycles`/`compiles` count only the post-resume work this
+    /// session actually performed. By chunk invariance (see
+    /// [`StreamCheckpoint`]) the final state is bitwise identical to an
+    /// uninterrupted [`Session::run_stream`] on the same engine even
+    /// though the resume point re-partitions the chunks.
+    pub fn run_stream_from<W: StreamingWorkload + ?Sized>(
+        &mut self,
+        w: &W,
+        ckpt: &StreamCheckpoint,
+    ) -> Result<StreamReport<W::StreamOutcome>> {
+        if ckpt.stream_name != w.stream_name() {
+            bail!(
+                "checkpoint belongs to stream '{}' but the workload is '{}'",
+                ckpt.stream_name,
+                w.stream_name()
+            );
+        }
+        self.run_stream_inner(w, ckpt.state.clone(), ckpt.samples, ckpt.boundaries.clone())
+    }
+
+    fn run_stream_inner<W: StreamingWorkload + ?Sized>(
+        &mut self,
+        w: &W,
+        state0: GaussMessage,
+        samples0: u64,
+        boundaries0: Vec<GaussMessage>,
+    ) -> Result<StreamReport<W::StreamOutcome>> {
         if let Some(dn) = self.engine.device_n() {
             if w.state_dim() != dn {
                 bail!(
@@ -694,9 +733,9 @@ impl Session {
         // sections are exact identity updates (see StreamBinder::paddable)
         let pad_tails = self.engine.kind() == EngineKind::Xla && main.paddable();
 
-        let mut state = w.initial_state();
-        let mut boundaries: Vec<GaussMessage> = Vec::new();
-        let mut samples: u64 = 0;
+        let mut state = state0;
+        let mut boundaries: Vec<GaussMessage> = boundaries0;
+        let mut samples: u64 = samples0;
         let mut chunks: u64 = 0;
         let mut cycles: u64 = 0;
         let mut sections: u64 = 0;
@@ -1156,5 +1195,87 @@ mod tests {
         assert_ne!(program_key(&g2, &s2, &opts), program_key(&g3, &s3, &opts));
         let flat = CompileOptions { compress_loops: false, ..Default::default() };
         assert_ne!(program_key(&g2, &s2, &opts), program_key(&g2, &s2, &flat));
+    }
+
+    /// A streaming workload truncated to its first `limit` samples —
+    /// the prefix half of the checkpoint/resume conformance test.
+    struct Truncated<'a> {
+        inner: &'a crate::apps::rls::RlsProblem,
+        limit: usize,
+    }
+
+    impl StreamingWorkload for Truncated<'_> {
+        type StreamOutcome = StreamRun;
+
+        fn stream_name(&self) -> &str {
+            self.inner.stream_name()
+        }
+
+        fn state_dim(&self) -> usize {
+            self.inner.state_dim()
+        }
+
+        fn stream_model(&self, chunk: usize) -> Result<(FactorGraph, Schedule)> {
+            self.inner.stream_model(chunk)
+        }
+
+        fn initial_state(&self) -> GaussMessage {
+            self.inner.initial_state()
+        }
+
+        fn next_sample(
+            &self,
+            k: usize,
+            state: &GaussMessage,
+        ) -> Result<Option<StreamSample>> {
+            if k >= self.limit {
+                return Ok(None);
+            }
+            self.inner.next_sample(k, state)
+        }
+
+        fn stream_outcome(&self, run: &StreamRun) -> Result<StreamRun> {
+            Ok(run.clone())
+        }
+    }
+
+    /// Bitwise equality of two messages (f64-exact; NOT a closeness test).
+    fn assert_bitwise(a: &GaussMessage, b: &GaussMessage) {
+        assert_eq!(a, b, "states differ bitwise");
+    }
+
+    #[test]
+    fn run_stream_from_resumes_bitwise_identically() {
+        let p = crate::apps::rls::RlsProblem::synthetic(4, 16, 0.01, 77);
+        for mk in [Session::golden as fn() -> Session, || Session::fgp_sim(FgpConfig::default())]
+        {
+            // uninterrupted reference
+            let full = mk().run_stream(&p).unwrap();
+            // run the first 8 samples, checkpoint, resume the rest in a
+            // *fresh* session (different chunk partitioning post-resume)
+            let half = mk().run_stream(&Truncated { inner: &p, limit: 8 }).unwrap();
+            let ckpt = StreamCheckpoint {
+                stream_name: p.stream_name().to_string(),
+                samples: half.samples,
+                state: half.final_state.clone(),
+                boundaries: Vec::new(),
+            };
+            let resumed = mk().run_stream_from(&p, &ckpt).unwrap();
+            assert_eq!(resumed.samples, 16);
+            assert_bitwise(&resumed.final_state, &full.final_state);
+        }
+    }
+
+    #[test]
+    fn run_stream_from_rejects_foreign_checkpoint() {
+        let p = crate::apps::rls::RlsProblem::synthetic(4, 8, 0.01, 5);
+        let ckpt = StreamCheckpoint {
+            stream_name: "kalman_track".to_string(),
+            samples: 0,
+            state: p.initial_state(),
+            boundaries: Vec::new(),
+        };
+        let err = Session::golden().run_stream_from(&p, &ckpt).unwrap_err();
+        assert!(err.to_string().contains("belongs to stream"), "{err:#}");
     }
 }

@@ -85,6 +85,34 @@ pub struct StreamRun {
     pub samples: u64,
 }
 
+/// A resumable snapshot of a stream's recursive per-sample state: the
+/// serialization unit behind the serve tier's checkpoint/failover path
+/// (`rust/src/serve/`) and
+/// [`Session::run_stream_from`](super::Session::run_stream_from).
+///
+/// The invariant that makes this safe to restore **anywhere** — another
+/// device of an [`crate::coordinator::FgpFarm`], another process via
+/// the wire codec — is chunk invariance: on every engine in this crate,
+/// folding the same sample sequence through any chunk partitioning
+/// yields bitwise-identical recursive states (exact f64 on golden;
+/// quantize∘quantize == quantize on the fixed-point simulator, pinned
+/// by `rust/tests/integration_streaming.rs`). A checkpoint taken at any
+/// dispatch boundary therefore resumes bitwise-identically regardless
+/// of how the remaining samples get re-chunked.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamCheckpoint {
+    /// [`StreamingWorkload::stream_name`] of the checkpointed stream
+    /// (restore validates it against the resuming workload).
+    pub stream_name: String,
+    /// Samples already folded into `state`.
+    pub samples: u64,
+    /// Recursive state after sample `samples - 1`.
+    pub state: GaussMessage,
+    /// Dispatch-boundary states observed so far (carried so a resumed
+    /// [`StreamRun::boundaries`] matches an uninterrupted run's).
+    pub boundaries: Vec<GaussMessage>,
+}
+
 /// Result of [`Session::run_stream`](super::Session::run_stream): the
 /// typed outcome plus everything the serving and benchmark layers report.
 #[derive(Clone, Debug)]
@@ -331,5 +359,79 @@ impl StreamBinder {
             messages: vec![GaussMessage::new(vec![c64::ZERO; self.n], cov)],
             states: vec![CMatrix::zeros(self.n, self.n)],
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::rls::RlsProblem;
+
+    fn sample_for(p: &RlsProblem, k: usize) -> StreamSample {
+        p.next_sample(k, &p.initial_state()).unwrap().expect("sample in range")
+    }
+
+    #[test]
+    fn build_rejects_zero_chunk() {
+        let p = RlsProblem::synthetic(4, 8, 0.02, 3);
+        let err = StreamBinder::build(&p, 0).unwrap_err();
+        assert!(err.to_string().contains("at least 1"), "{err:#}");
+    }
+
+    #[test]
+    fn bind_rejects_wrong_sample_count() {
+        let p = RlsProblem::synthetic(4, 8, 0.02, 3);
+        let mut binder = StreamBinder::build(&p, 4).unwrap();
+        let state = p.initial_state();
+        let samples: Vec<StreamSample> = (0..2).map(|k| sample_for(&p, k)).collect();
+        let err = binder.bind(&state, &samples).unwrap_err();
+        assert!(
+            err.to_string().contains("binder spans 4 samples but 2 were supplied"),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn bind_rejects_wrong_message_arity() {
+        let p = RlsProblem::synthetic(4, 8, 0.02, 3);
+        let mut binder = StreamBinder::build(&p, 2).unwrap();
+        let state = p.initial_state();
+        let good = sample_for(&p, 0);
+        // sample 1 carries twice the messages the model expects
+        let mut bad = sample_for(&p, 1);
+        bad.messages.push(bad.messages[0].clone());
+        let err = binder.bind(&state, &[good, bad]).unwrap_err();
+        let text = err.to_string();
+        assert!(text.contains("sample 1 carries 2 messages / 1 states"), "{text}");
+        assert!(text.contains("expects 1 / 1 per sample"), "{text}");
+    }
+
+    #[test]
+    fn bind_rejects_wrong_state_arity() {
+        let p = RlsProblem::synthetic(4, 8, 0.02, 3);
+        let mut binder = StreamBinder::build(&p, 2).unwrap();
+        let state = p.initial_state();
+        // sample 0 carries no state matrix at all
+        let mut bad = sample_for(&p, 0);
+        bad.states.clear();
+        let good = sample_for(&p, 1);
+        let err = binder.bind(&state, &[bad, good]).unwrap_err();
+        let text = err.to_string();
+        assert!(text.contains("sample 0 carries 1 messages / 0 states"), "{text}");
+    }
+
+    #[test]
+    fn bind_accepts_matching_arity_after_rejection() {
+        // a rejected bind leaves the binder reusable: the same binder
+        // accepts a well-shaped chunk afterwards
+        let p = RlsProblem::synthetic(4, 8, 0.02, 3);
+        let mut binder = StreamBinder::build(&p, 2).unwrap();
+        let state = p.initial_state();
+        let mut bad = sample_for(&p, 0);
+        bad.states.clear();
+        assert!(binder.bind(&state, &[bad, sample_for(&p, 1)]).is_err());
+        let good: Vec<StreamSample> = (0..2).map(|k| sample_for(&p, k)).collect();
+        binder.bind(&state, &good).unwrap();
+        assert!(binder.paddable());
     }
 }

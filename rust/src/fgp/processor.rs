@@ -82,7 +82,11 @@ pub enum FsmState {
 }
 
 /// External-processor commands (§III).
-#[derive(Clone, Debug)]
+///
+/// `PartialEq` is exact (bit-level on message payloads): it exists for
+/// the wire-codec round-trip property tests in
+/// `rust/tests/property_wire.rs`.
+#[derive(Clone, Debug, PartialEq)]
 pub enum Command {
     /// Load one or multiple programs into the PM.
     LoadProgram(MemoryImage),
@@ -99,7 +103,9 @@ pub enum Command {
 }
 
 /// Status replies (§III: "Each command gets replied by a status message").
-#[derive(Clone, Debug)]
+///
+/// `PartialEq` is exact, for the same round-trip tests as [`Command`]'s.
+#[derive(Clone, Debug, PartialEq)]
 pub enum Reply {
     /// Command accepted.
     Ok,

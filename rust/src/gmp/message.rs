@@ -8,7 +8,12 @@
 use super::matrix::{c64, CMatrix, CVector};
 
 /// A (scaled) multivariate Gaussian message.
-#[derive(Clone, Debug)]
+///
+/// `PartialEq` is exact bit-level equality of every component (via f64
+/// comparison) — used by the wire-codec round-trip tests and the
+/// bitwise failover conformance contract, **not** a numerical
+/// closeness test; use [`GaussMessage::dist`] for that.
+#[derive(Clone, Debug, PartialEq)]
 pub struct GaussMessage {
     /// Mean vector `m`.
     pub mean: CVector,

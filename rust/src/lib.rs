@@ -21,7 +21,11 @@
 //!   once, stream samples through the resident program, the §VI
 //!   throughput shape), [`coordinator`] (the Fig. 5 "external
 //!   processor" command protocol, request queue, batcher, device farm
-//!   with sticky stream sessions and cross-stream coalescing), [`gbp`]
+//!   with sticky stream sessions and cross-stream coalescing), [`serve`]
+//!   (the network serving tier: a std-only TCP front door with
+//!   per-tenant admission control, explicit backpressure, bitwise
+//!   stream checkpoint/failover across farm members, and wire-exported
+//!   SLO metrics), [`gbp`]
 //!   (loopy Gaussian belief propagation over cyclic graphs, every inner
 //!   update dispatched through the engine surface), [`nonlinear`]
 //!   (pluggable EKF/sigma-point linearizers and iterated
@@ -86,6 +90,7 @@ pub mod isa;
 pub mod model;
 pub mod nonlinear;
 pub mod runtime;
+pub mod serve;
 pub mod testutil;
 
 /// Paper constants used across benches and reports (Table II, §V).

@@ -1,0 +1,265 @@
+//! Admission control: the serving tier's front-door backpressure.
+//!
+//! Two independent gates stand between a request and the farm:
+//!
+//! 1. **Per-tenant token buckets** ([`TenantQuotas`]) — rate-limit each
+//!    tenant's *work units* (one sample = one unit). An empty bucket is
+//!    a `QuotaExceeded` reply: deterministic, per-tenant, and refilled
+//!    by wall-clock time, so one greedy tenant cannot starve the rest.
+//! 2. **A bounded in-flight window** ([`AdmissionController`]) — caps
+//!    the total units admitted but not yet executed, across all tenants
+//!    and streams. A full window is an explicit `Busy` reply (with a
+//!    retry hint) instead of an unbounded queue: the client sees
+//!    backpressure immediately and the server's memory stays bounded.
+//!
+//! [`FairRotor`] provides the third leg — fair *ordering*: each engine
+//! room round visits streams in a rotated order, so admitted work from
+//! every tenant drains at the same rate regardless of stream id or
+//! arrival order.
+//!
+//! Time is injected (`now: Instant` parameters) rather than read inside,
+//! which keeps every decision deterministic under test.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+/// A token bucket over fractional tokens: capacity `burst`, refilled at
+/// `rate` tokens/second. Starts full.
+#[derive(Clone, Debug)]
+pub struct TokenBucket {
+    tokens: f64,
+    rate: f64,
+    burst: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    /// Full bucket with the given refill rate (tokens/second) and
+    /// capacity, anchored at `now`.
+    pub fn new(rate: f64, burst: f64, now: Instant) -> Self {
+        TokenBucket { tokens: burst, rate, burst, last: now }
+    }
+
+    /// Take `n` tokens if available at `now`; refills by elapsed time
+    /// first. With `rate == 0` the bucket never refills — a
+    /// deterministic way to exhaust a tenant in tests.
+    pub fn try_take(&mut self, n: f64, now: Instant) -> bool {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.tokens = (self.tokens + dt * self.rate).min(self.burst);
+        self.last = now;
+        if self.tokens >= n {
+            self.tokens -= n;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Tokens currently available (after a refill at `now`).
+    pub fn available(&mut self, now: Instant) -> f64 {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.tokens = (self.tokens + dt * self.rate).min(self.burst);
+        self.last = now;
+        self.tokens
+    }
+}
+
+/// Per-tenant rate policy: `rate` work units per second, bursting to
+/// `burst`.
+#[derive(Clone, Copy, Debug)]
+pub struct QuotaPolicy {
+    /// Sustained units/second each tenant may submit.
+    pub rate: f64,
+    /// Bucket capacity (instantaneous burst).
+    pub burst: f64,
+}
+
+impl Default for QuotaPolicy {
+    fn default() -> Self {
+        // effectively unlimited: quotas opt in by lowering these
+        QuotaPolicy { rate: 1e9, burst: 1e9 }
+    }
+}
+
+/// One token bucket per tenant, created on first sight under a shared
+/// [`QuotaPolicy`].
+#[derive(Debug)]
+pub struct TenantQuotas {
+    policy: QuotaPolicy,
+    buckets: HashMap<String, TokenBucket>,
+}
+
+impl TenantQuotas {
+    /// Empty quota table under `policy`.
+    pub fn new(policy: QuotaPolicy) -> Self {
+        TenantQuotas { policy, buckets: HashMap::new() }
+    }
+
+    /// Admit `units` work units for `tenant` at `now`, or refuse.
+    pub fn admit(&mut self, tenant: &str, units: u64, now: Instant) -> bool {
+        let bucket = self
+            .buckets
+            .entry(tenant.to_string())
+            .or_insert_with(|| TokenBucket::new(self.policy.rate, self.policy.burst, now));
+        bucket.try_take(units as f64, now)
+    }
+}
+
+/// Bounded in-flight work window shared by every connection handler:
+/// lock-free CAS admission, explicit release as units execute (or are
+/// refused further down the pipeline).
+#[derive(Debug)]
+pub struct AdmissionController {
+    max_inflight: usize,
+    inflight: AtomicUsize,
+}
+
+impl AdmissionController {
+    /// Window of `max_inflight` work units.
+    pub fn new(max_inflight: usize) -> Self {
+        AdmissionController { max_inflight, inflight: AtomicUsize::new(0) }
+    }
+
+    /// Try to admit `units`; all-or-nothing. A request larger than the
+    /// whole window can never be admitted — the caller sees `false`
+    /// immediately rather than deadlocking on a window that can't grow.
+    pub fn try_acquire(&self, units: usize) -> bool {
+        self.inflight
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |cur| {
+                cur.checked_add(units).filter(|next| *next <= self.max_inflight)
+            })
+            .is_ok()
+    }
+
+    /// Return `units` to the window (after execution, or after a
+    /// downstream refusal).
+    pub fn release(&self, units: usize) {
+        let prev = self.inflight.fetch_sub(units, Ordering::AcqRel);
+        debug_assert!(prev >= units, "admission release underflow");
+    }
+
+    /// Units currently admitted and unexecuted.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+
+    /// The window size.
+    pub fn capacity(&self) -> usize {
+        self.max_inflight
+    }
+}
+
+/// Rotating fair scheduler: each round visits the same item list in an
+/// order rotated by one, so no stream or tenant is persistently first
+/// (first place drains fastest when the farm saturates).
+#[derive(Debug, Default)]
+pub struct FairRotor {
+    cursor: usize,
+}
+
+impl FairRotor {
+    /// Fresh rotor.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The visiting order for a round over `len` items: indices rotated
+    /// by the round number.
+    pub fn order(&mut self, len: usize) -> Vec<usize> {
+        if len == 0 {
+            return Vec::new();
+        }
+        let start = self.cursor % len;
+        self.cursor = self.cursor.wrapping_add(1);
+        (0..len).map(|i| (start + i) % len).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn bucket_burst_then_refill() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(10.0, 4.0, t0);
+        // burst drains the full capacity instantly
+        assert!(b.try_take(4.0, t0));
+        assert!(!b.try_take(1.0, t0));
+        // 200 ms at 10/s refills 2 tokens
+        let t1 = t0 + Duration::from_millis(200);
+        assert!(b.try_take(2.0, t1));
+        assert!(!b.try_take(0.5, t1));
+        // refill caps at burst
+        let t2 = t1 + Duration::from_secs(60);
+        assert!((b.available(t2) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_rate_bucket_never_refills() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(0.0, 2.0, t0);
+        assert!(b.try_take(2.0, t0));
+        assert!(!b.try_take(1.0, t0 + Duration::from_secs(3600)));
+    }
+
+    #[test]
+    fn quotas_isolate_tenants() {
+        let t0 = Instant::now();
+        let mut q = TenantQuotas::new(QuotaPolicy { rate: 0.0, burst: 3.0 });
+        assert!(q.admit("a", 3, t0));
+        assert!(!q.admit("a", 1, t0), "tenant a is exhausted");
+        assert!(q.admit("b", 3, t0), "tenant b has its own bucket");
+    }
+
+    #[test]
+    fn admission_window_is_all_or_nothing() {
+        let c = AdmissionController::new(4);
+        assert!(c.try_acquire(3));
+        assert!(!c.try_acquire(2), "3 + 2 exceeds the window");
+        assert!(c.try_acquire(1));
+        assert_eq!(c.inflight(), 4);
+        c.release(2);
+        assert!(c.try_acquire(2));
+        c.release(4);
+        assert_eq!(c.inflight(), 0);
+        // a single request larger than the window is refused outright
+        assert!(!c.try_acquire(5));
+    }
+
+    #[test]
+    fn admission_window_survives_concurrent_pressure() {
+        use std::sync::Arc;
+        let c = Arc::new(AdmissionController::new(16));
+        let mut joins = Vec::new();
+        for _ in 0..8 {
+            let c = Arc::clone(&c);
+            joins.push(std::thread::spawn(move || {
+                let mut admitted = 0u64;
+                for _ in 0..1000 {
+                    if c.try_acquire(3) {
+                        admitted += 1;
+                        assert!(c.inflight() <= 16, "window overrun");
+                        c.release(3);
+                    }
+                }
+                admitted
+            }));
+        }
+        let total: u64 = joins.into_iter().map(|j| j.join().unwrap()).sum();
+        assert!(total > 0);
+        assert_eq!(c.inflight(), 0);
+    }
+
+    #[test]
+    fn rotor_rotates_start() {
+        let mut r = FairRotor::new();
+        assert_eq!(r.order(3), vec![0, 1, 2]);
+        assert_eq!(r.order(3), vec![1, 2, 0]);
+        assert_eq!(r.order(3), vec![2, 0, 1]);
+        assert_eq!(r.order(3), vec![0, 1, 2]);
+        assert!(r.order(0).is_empty());
+    }
+}

@@ -1,0 +1,204 @@
+//! Blocking client for the serve wire protocol.
+//!
+//! One [`ServeClient`] per connection: it performs the
+//! `Hello`/`Welcome` handshake on connect (verifying
+//! [`WIRE_VERSION`]), then exposes a typed helper per request. Helpers
+//! honour the server's backpressure contract — a `Busy` or
+//! `QuotaExceeded` reply is retried after the server-suggested backoff,
+//! up to a bounded number of attempts — while the raw [`ServeClient::call`]
+//! surface lets tests and admission-aware callers observe refusals
+//! directly.
+
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::gmp::matrix::CMatrix;
+use crate::gmp::message::GaussMessage;
+
+use super::wire::{
+    decode_reply, encode_request, read_frame, write_frame, ServeReply, ServeRequest,
+    StatsSnapshot, StreamMode, WIRE_VERSION,
+};
+
+/// How many times the retrying helpers re-submit after a `Busy` or
+/// `QuotaExceeded` reply before giving up.
+const MAX_RETRIES: usize = 2000;
+
+/// A stream's progress as reported by `Poll`.
+#[derive(Clone, Debug)]
+pub struct StreamStatus {
+    /// Samples executed and committed.
+    pub samples_done: u64,
+    /// Samples queued but not yet executed.
+    pub pending: u32,
+    /// Current device pin.
+    pub device: u32,
+    /// Failovers survived.
+    pub failovers: u32,
+    /// Committed recursive state.
+    pub state: GaussMessage,
+}
+
+/// A drained stream's final report from `CloseStream`.
+#[derive(Clone, Debug)]
+pub struct StreamClosed {
+    /// Total samples executed.
+    pub samples_done: u64,
+    /// Failovers survived.
+    pub failovers: u32,
+    /// Final recursive state.
+    pub state: GaussMessage,
+}
+
+/// Blocking connection to an [`FgpServe`](super::FgpServe) front door.
+pub struct ServeClient {
+    sock: TcpStream,
+}
+
+impl ServeClient {
+    /// Connect and handshake as `tenant`.
+    pub fn connect(addr: impl ToSocketAddrs, tenant: &str) -> Result<Self> {
+        let sock = TcpStream::connect(addr).context("connecting to serve front door")?;
+        sock.set_nodelay(true)?;
+        let mut client = ServeClient { sock };
+        match client.call(&ServeRequest::Hello { tenant: tenant.to_string() })? {
+            ServeReply::Welcome { version } if version == WIRE_VERSION => Ok(client),
+            ServeReply::Welcome { version } => {
+                bail!("server speaks wire version {version}, client speaks {WIRE_VERSION}")
+            }
+            other => bail!("expected Welcome, got {other:?}"),
+        }
+    }
+
+    /// Send one request frame and block for its reply frame. Exposes
+    /// `Busy`/`QuotaExceeded` verbatim — the typed helpers below retry
+    /// them instead.
+    pub fn call(&mut self, req: &ServeRequest) -> Result<ServeReply> {
+        write_frame(&mut self.sock, &encode_request(req))?;
+        let frame = read_frame(&mut self.sock)?
+            .ok_or_else(|| anyhow!("server closed the connection mid-request"))?;
+        Ok(decode_reply(&frame)?)
+    }
+
+    /// [`call`](Self::call), retrying refused admissions with the
+    /// server's backoff hint.
+    fn call_admitted(&mut self, req: &ServeRequest) -> Result<ServeReply> {
+        for _ in 0..MAX_RETRIES {
+            match self.call(req)? {
+                ServeReply::Busy { retry_ms } | ServeReply::QuotaExceeded { retry_ms } => {
+                    std::thread::sleep(Duration::from_millis(u64::from(retry_ms.max(1))));
+                }
+                reply => return Ok(reply),
+            }
+        }
+        bail!("request still refused after {MAX_RETRIES} backpressure retries")
+    }
+
+    /// One-shot compound-node update.
+    pub fn cn_update(&mut self, x: GaussMessage, y: GaussMessage, a: CMatrix) -> Result<GaussMessage> {
+        match self.call_admitted(&ServeRequest::CnUpdate { x, y, a })? {
+            ServeReply::Output { msg } => Ok(msg),
+            other => unexpected("CnUpdate", other),
+        }
+    }
+
+    /// One-shot compound-observation chain.
+    pub fn chain(
+        &mut self,
+        prior: GaussMessage,
+        sections: Vec<(GaussMessage, CMatrix)>,
+    ) -> Result<GaussMessage> {
+        match self.call_admitted(&ServeRequest::Chain { prior, sections })? {
+            ServeReply::Output { msg } => Ok(msg),
+            other => unexpected("Chain", other),
+        }
+    }
+
+    /// Open a stream; returns `(stream id, device pin)`.
+    pub fn open_stream(
+        &mut self,
+        name: &str,
+        mode: StreamMode,
+        prior: GaussMessage,
+    ) -> Result<(u64, u32)> {
+        let req = ServeRequest::OpenStream { name: name.to_string(), mode, prior };
+        match self.call_admitted(&req)? {
+            ServeReply::StreamOpened { stream, device } => Ok((stream, device)),
+            other => unexpected("OpenStream", other),
+        }
+    }
+
+    /// Queue samples onto a stream; returns `(accepted, pending)`.
+    pub fn push(
+        &mut self,
+        stream: u64,
+        samples: Vec<(GaussMessage, CMatrix)>,
+    ) -> Result<(u32, u32)> {
+        match self.call_admitted(&ServeRequest::Push { stream, samples })? {
+            ServeReply::Ack { accepted, pending, .. } => Ok((accepted, pending)),
+            other => unexpected("Push", other),
+        }
+    }
+
+    /// Read a stream's progress.
+    pub fn poll(&mut self, stream: u64) -> Result<StreamStatus> {
+        match self.call(&ServeRequest::Poll { stream })? {
+            ServeReply::StreamState { samples_done, pending, device, failovers, state, .. } => {
+                Ok(StreamStatus { samples_done, pending, device, failovers, state })
+            }
+            other => unexpected("Poll", other),
+        }
+    }
+
+    /// Drain and close a stream, returning its final report.
+    pub fn close_stream(&mut self, stream: u64) -> Result<StreamClosed> {
+        match self.call(&ServeRequest::CloseStream { stream })? {
+            ServeReply::Closed { samples_done, failovers, state, .. } => {
+                Ok(StreamClosed { samples_done, failovers, state })
+            }
+            other => unexpected("CloseStream", other),
+        }
+    }
+
+    /// Fetch a stream's committed-state checkpoint image.
+    pub fn checkpoint(&mut self, stream: u64) -> Result<Vec<u8>> {
+        match self.call(&ServeRequest::Checkpoint { stream })? {
+            ServeReply::CheckpointData { bytes } => Ok(bytes),
+            other => unexpected("Checkpoint", other),
+        }
+    }
+
+    /// Reopen a stream from a checkpoint image; returns
+    /// `(stream id, device pin)`.
+    pub fn resume(
+        &mut self,
+        name: &str,
+        mode: StreamMode,
+        checkpoint: Vec<u8>,
+    ) -> Result<(u64, u32)> {
+        let req = ServeRequest::Resume { name: name.to_string(), mode, checkpoint };
+        match self.call_admitted(&req)? {
+            ServeReply::StreamOpened { stream, device } => Ok((stream, device)),
+            other => unexpected("Resume", other),
+        }
+    }
+
+    /// Fetch the server's SLO snapshot.
+    pub fn stats(&mut self) -> Result<StatsSnapshot> {
+        match self.call(&ServeRequest::Stats)? {
+            ServeReply::Stats(snapshot) => Ok(snapshot),
+            other => unexpected("Stats", other),
+        }
+    }
+}
+
+fn unexpected<T>(what: &str, reply: ServeReply) -> Result<T> {
+    match reply {
+        ServeReply::Error { message, retryable } => {
+            Err(anyhow!("{what} failed (retryable: {retryable}): {message}"))
+        }
+        other => Err(anyhow!("unexpected reply to {what}: {other:?}")),
+    }
+}

@@ -1,0 +1,58 @@
+//! S10 — The network serving tier: an admission-controlled front door
+//! over the device farm, with stream checkpoint/failover.
+//!
+//! §III of the paper positions the FGP as a co-processor "attached to an
+//! existing system"; [`crate::coordinator`] built that system in-process.
+//! This module puts it behind a socket, because the moment the farm is
+//! shared by clients that don't share an address space, three serving
+//! problems appear that the in-process tier never had to answer:
+//!
+//! 1. **Admission** — a socket accepts bytes faster than devices retire
+//!    samples. [`admission`] bounds the gap: per-tenant token-bucket
+//!    quotas (`QuotaExceeded`), a global bounded in-flight window
+//!    (`Busy` + retry hint, never an unbounded queue), and a fairness
+//!    rotor so admitted work drains tenant-fairly into the existing
+//!    [`StreamCoalescer`](crate::coordinator::StreamCoalescer) and
+//!    sticky-chain paths.
+//! 2. **Failover** — a stream outlives any single device. The committed
+//!    recursive state ([`CnStream`](crate::coordinator::CnStream)) is
+//!    the *whole* per-sample truth of a Gaussian message-passing stream,
+//!    so a checkpoint is one message + a cursor, and the chunk-invariance
+//!    property (pinned by `tests/integration_streaming.rs`) makes a
+//!    resume on any other member **bitwise identical** — not
+//!    approximately recovered. [`wire`] gives checkpoints a stable
+//!    `FGCK` image so they survive the network.
+//! 3. **Observability** — an SLO is a wire artifact here: `Stats`
+//!    returns p50/p95/p99 latency and per-tenant throughput assembled
+//!    from [`crate::coordinator::Metrics`], and the serving bench
+//!    commits the same snapshot to `BENCH_serving.json`.
+//!
+//! Layering: `serve` sits strictly **above** the coordinator — it owns
+//! sockets, framing, tenancy, and admission, and delegates every
+//! numeric decision downward. Nothing below this module knows a TCP
+//! stream exists. The runtime is std-only (`TcpListener` + worker
+//! threads + channels); the protocol is the length-framed, bit-exact
+//! little-endian codec of [`wire`] (f64 travels as raw bits, never
+//! through text), so a reply is byte-reproducible across hosts.
+//!
+//! ```text
+//! client ──frame──▶ worker ──gate──▶ registry ──rotor──▶ engine room ──chunk──▶ FgpFarm
+//!   ▲                 │ quota/window    │ CnStream          │ chain/coalesce      │ devices
+//!   └───── reply ─────┘                 └── checkpoint ─────┴── failover ◀────────┘
+//! ```
+
+pub mod admission;
+pub mod client;
+pub mod registry;
+pub mod server;
+pub mod wire;
+
+pub use admission::{AdmissionController, FairRotor, QuotaPolicy, TenantQuotas, TokenBucket};
+pub use client::{ServeClient, StreamClosed, StreamStatus};
+pub use registry::{SessionRegistry, StreamEntry, TenantLedger};
+pub use server::{FgpServe, ServeConfig};
+pub use wire::{
+    decode_checkpoint, decode_reply, decode_request, encode_checkpoint, encode_reply,
+    encode_request, read_frame, write_frame, FramePoll, FrameReader, ServeReply, ServeRequest,
+    StatsSnapshot, StreamMode, TenantSnapshot, WireError, MAX_FRAME, WIRE_VERSION,
+};

@@ -1,0 +1,219 @@
+//! Stream/session registry: the server-side state behind the wire ids.
+//!
+//! Every open stream is a [`StreamEntry`]: a
+//! [`CnStream`](crate::coordinator::CnStream) (committed recursive state
+//! + pending sample queue, with the take/requeue/commit zero-loss
+//! accounting), its tenant ledger, its scheduling mode, and — for sticky
+//! streams — its device pin and failover count. The registry hands out
+//! monotonically increasing `u64` ids; connection handlers mutate
+//! entries under the registry lock while the engine room drains them.
+//!
+//! [`TenantLedger`] rows are shared (`Arc`) between the registry, the
+//! connection handlers and the `STATS` reply — counters are atomics, so
+//! per-tenant throughput accounting never takes a lock on the hot path.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::CnStream;
+use crate::gmp::message::GaussMessage;
+
+use super::admission::FairRotor;
+use super::wire::{StreamMode, TenantSnapshot};
+
+/// Lock-free per-tenant accounting row, shared by reference.
+#[derive(Debug, Default)]
+pub struct TenantLedger {
+    /// Requests served (one-shots and pushes).
+    pub requests: AtomicU64,
+    /// Stream samples executed.
+    pub samples: AtomicU64,
+    /// Requests refused by quota.
+    pub rejected_quota: AtomicU64,
+    /// Requests refused by the admission window.
+    pub rejected_busy: AtomicU64,
+}
+
+impl TenantLedger {
+    /// Snapshot this ledger as a wire row.
+    pub fn snapshot(&self, tenant: &str) -> TenantSnapshot {
+        TenantSnapshot {
+            tenant: tenant.to_string(),
+            requests: self.requests.load(Ordering::Relaxed),
+            samples: self.samples.load(Ordering::Relaxed),
+            rejected_quota: self.rejected_quota.load(Ordering::Relaxed),
+            rejected_busy: self.rejected_busy.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One open stream as the server tracks it.
+pub struct StreamEntry {
+    /// Stream name (checkpoints validate against it).
+    pub name: String,
+    /// Owning tenant's ledger.
+    pub tenant: Arc<TenantLedger>,
+    /// Scheduling mode.
+    pub mode: StreamMode,
+    /// Committed state + pending queue (zero-loss accounting).
+    pub cn: CnStream,
+    /// Device pin (sticky mode; coalesced streams route per batch).
+    pub device: usize,
+    /// Failovers this stream has survived.
+    pub failovers: u32,
+    /// Admission units held by queued-but-unexecuted samples.
+    pub inflight: usize,
+    /// Terminal error: set once a non-retryable failure occurs;
+    /// surfaced to the client on the next poll/push/close.
+    pub error: Option<String>,
+}
+
+/// Id-keyed stream table plus the fairness rotor the engine room visits
+/// it with.
+pub struct SessionRegistry {
+    streams: HashMap<u64, StreamEntry>,
+    next_id: u64,
+    rotor: FairRotor,
+}
+
+impl Default for SessionRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SessionRegistry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        SessionRegistry { streams: HashMap::new(), next_id: 1, rotor: FairRotor::new() }
+    }
+
+    /// Register a stream and return its wire id.
+    pub fn open(
+        &mut self,
+        name: String,
+        tenant: Arc<TenantLedger>,
+        mode: StreamMode,
+        prior: GaussMessage,
+        samples_done: u64,
+        device: usize,
+    ) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut cn = CnStream::new(prior);
+        cn.samples_done = samples_done;
+        self.streams.insert(
+            id,
+            StreamEntry {
+                name,
+                tenant,
+                mode,
+                cn,
+                device,
+                failovers: 0,
+                inflight: 0,
+                error: None,
+            },
+        );
+        id
+    }
+
+    /// Look up a stream.
+    pub fn get(&self, id: u64) -> Option<&StreamEntry> {
+        self.streams.get(&id)
+    }
+
+    /// Look up a stream mutably.
+    pub fn get_mut(&mut self, id: u64) -> Option<&mut StreamEntry> {
+        self.streams.get_mut(&id)
+    }
+
+    /// Remove a stream, returning its entry (the handler releases any
+    /// remaining admission units from it).
+    pub fn close(&mut self, id: u64) -> Option<StreamEntry> {
+        self.streams.remove(&id)
+    }
+
+    /// Open stream count.
+    pub fn len(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// Whether no streams are open.
+    pub fn is_empty(&self) -> bool {
+        self.streams.is_empty()
+    }
+
+    /// Ids in this round's fair visiting order: ascending ids, rotated
+    /// one further per call, filtered to `mode`. Sorting makes the
+    /// rotation deterministic; rotating makes it fair (no stream is
+    /// persistently drained first).
+    pub fn fair_ids(&mut self, mode: StreamMode) -> Vec<u64> {
+        let mut ids: Vec<u64> = self
+            .streams
+            .iter()
+            .filter(|(_, e)| e.mode == mode && e.error.is_none() && e.cn.pending() > 0)
+            .map(|(id, _)| *id)
+            .collect();
+        ids.sort_unstable();
+        let order = self.rotor.order(ids.len());
+        order.into_iter().map(|i| ids[i]).collect()
+    }
+
+    /// Total pending samples across all streams.
+    pub fn total_pending(&self) -> usize {
+        self.streams.values().map(|e| e.cn.pending()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prior() -> GaussMessage {
+        GaussMessage::isotropic(2, 1.0)
+    }
+
+    fn push_n(e: &mut StreamEntry, n: usize) {
+        for _ in 0..n {
+            e.cn.push(prior(), crate::gmp::matrix::CMatrix::identity(2));
+        }
+    }
+
+    #[test]
+    fn ids_are_unique_and_entries_close() {
+        let mut r = SessionRegistry::new();
+        let t = Arc::new(TenantLedger::default());
+        let a = r.open("s".into(), Arc::clone(&t), StreamMode::Sticky, prior(), 0, 0);
+        let b = r.open("s".into(), Arc::clone(&t), StreamMode::Sticky, prior(), 7, 1);
+        assert_ne!(a, b);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.get(b).unwrap().cn.samples_done, 7);
+        assert!(r.close(a).is_some());
+        assert!(r.close(a).is_none());
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn fair_ids_rotate_and_filter() {
+        let mut r = SessionRegistry::new();
+        let t = Arc::new(TenantLedger::default());
+        let ids: Vec<u64> = (0..3)
+            .map(|i| r.open(format!("s{i}"), Arc::clone(&t), StreamMode::Sticky, prior(), 0, 0))
+            .collect();
+        let coalesced =
+            r.open("c".into(), Arc::clone(&t), StreamMode::Coalesced, prior(), 0, 0);
+        for id in ids.iter().chain([&coalesced]) {
+            push_n(r.get_mut(*id).unwrap(), 2);
+        }
+        // errored and drained streams are excluded
+        r.get_mut(ids[1]).unwrap().error = Some("boom".into());
+        let round1 = r.fair_ids(StreamMode::Sticky);
+        assert_eq!(round1, vec![ids[0], ids[2]]);
+        let round2 = r.fair_ids(StreamMode::Sticky);
+        assert_eq!(round2, vec![ids[2], ids[0]], "rotation advanced");
+        assert_eq!(r.fair_ids(StreamMode::Coalesced), vec![coalesced]);
+        assert_eq!(r.total_pending(), 8);
+    }
+}

@@ -1,0 +1,743 @@
+//! The serving front door: TCP listener, worker pool, and engine room.
+//!
+//! std-only by design (no tokio in the vendored crate set): a blocking
+//! [`TcpListener`] accept loop hands connections to a fixed worker pool
+//! over an mpsc channel; each worker speaks the framed protocol of
+//! [`super::wire`] with a read-timeout poll loop so it can observe
+//! shutdown between frames. Compute never happens on connection
+//! threads — handlers only gate (quota → admission → capacity), queue,
+//! and reply, while a single **engine room** thread drains admitted
+//! samples into the [`FgpFarm`]:
+//!
+//! * **sticky** streams advance one chunk per round, each chunk a
+//!   [`WorkloadRequest::chain`] dispatched to the stream's pinned
+//!   device, all rounds' dispatches in flight concurrently; a retryable
+//!   device failure re-pins the stream ([`FarmError::is_retryable`])
+//!   and requeues the batch — the zero-loss failover path;
+//! * **coalesced** streams are fair-picked (rotor order, bounded by
+//!   `coalesce_width`) into a cross-stream
+//!   [`StreamCoalescer::tick_refs`] batch over a [`FarmCnBackend`].
+//!
+//! Admission units (1 unit = 1 sample) are released only when their
+//! sample has executed — or when the request is refused downstream — so
+//! the in-flight window measures real outstanding device work and a
+//! full window is honest `Busy` backpressure.
+//!
+//! The engine room holds the registry lock for the duration of a drain
+//! round; rounds are kept short (one `chunk` per stream), and close
+//! handlers poll with the lock released between attempts.
+
+use std::collections::BTreeMap;
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{
+    recv_exec, CnRequestData, CnStream, FarmCnBackend, FarmError, FgpFarm, Metrics, RoutePolicy,
+    StreamCoalescer, WorkloadRequest,
+};
+use crate::fgp::FgpConfig;
+use crate::gmp::matrix::CMatrix;
+use crate::gmp::message::GaussMessage;
+
+use super::admission::{AdmissionController, QuotaPolicy, TenantQuotas};
+use super::registry::{SessionRegistry, TenantLedger};
+use super::wire::{
+    decode_checkpoint, decode_request, encode_checkpoint, encode_reply, write_frame, FramePoll,
+    FrameReader, ServeReply, ServeRequest, StatsSnapshot, StreamMode, WIRE_VERSION,
+};
+use crate::engine::StreamCheckpoint;
+
+/// Serving-tier configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Listen address (`127.0.0.1:0` binds an ephemeral port).
+    pub addr: String,
+    /// Farm devices to boot.
+    pub devices: usize,
+    /// Device configuration.
+    pub fgp: FgpConfig,
+    /// Farm routing policy.
+    pub policy: RoutePolicy,
+    /// Connection-handler worker threads.
+    pub workers: usize,
+    /// Admission window: total samples admitted but not yet executed.
+    pub max_inflight: usize,
+    /// Per-tenant token-bucket quota.
+    pub quota: QuotaPolicy,
+    /// Sticky-stream samples dispatched per engine-room round.
+    pub chunk: usize,
+    /// Coalesced streams batched per engine-room round.
+    pub coalesce_width: usize,
+    /// Backoff hint (ms) carried in `Busy`/`QuotaExceeded` replies.
+    pub retry_ms: u32,
+    /// Per-stream pending-queue cap (excess pushes get `Busy`).
+    pub max_pending_per_stream: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            devices: 2,
+            fgp: FgpConfig::default(),
+            policy: RoutePolicy::RoundRobin,
+            workers: 4,
+            max_inflight: 256,
+            quota: QuotaPolicy::default(),
+            chunk: 16,
+            coalesce_width: 8,
+            retry_ms: 5,
+            max_pending_per_stream: 1024,
+        }
+    }
+}
+
+/// Recover a lock even if a previous holder panicked: serving state is
+/// guarded by invariants, not by the poison bit.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+struct Shared {
+    cfg: ServeConfig,
+    farm: Arc<FgpFarm>,
+    registry: Mutex<SessionRegistry>,
+    admission: AdmissionController,
+    quotas: Mutex<TenantQuotas>,
+    tenants: Mutex<BTreeMap<String, Arc<TenantLedger>>>,
+    metrics: Metrics,
+    admitted: AtomicU64,
+    rejected_busy: AtomicU64,
+    rejected_quota: AtomicU64,
+    failovers: AtomicU64,
+    shutdown: AtomicBool,
+}
+
+impl Shared {
+    fn ledger(&self, tenant: &str) -> Arc<TenantLedger> {
+        Arc::clone(
+            lock(&self.tenants)
+                .entry(tenant.to_string())
+                .or_default(),
+        )
+    }
+
+    fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            latency: self.metrics.snapshot(),
+            admitted: self.admitted.load(Ordering::Relaxed),
+            rejected_busy: self.rejected_busy.load(Ordering::Relaxed),
+            rejected_quota: self.rejected_quota.load(Ordering::Relaxed),
+            failovers: self.failovers.load(Ordering::Relaxed),
+            tenants: lock(&self.tenants)
+                .iter()
+                .map(|(name, ledger)| ledger.snapshot(name))
+                .collect(),
+        }
+    }
+}
+
+/// The network serving tier: a farm behind a framed TCP protocol with
+/// admission control, fair multi-tenant scheduling, SLO metrics, and
+/// stream checkpoint/failover. See the module docs for the thread
+/// model; see [`super::client::ServeClient`] for the matching client.
+pub struct FgpServe {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+    engine: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl FgpServe {
+    /// Boot the farm, bind the listener, and start the worker pool and
+    /// engine room.
+    pub fn start(cfg: ServeConfig) -> Result<Self> {
+        let farm = Arc::new(FgpFarm::start(cfg.devices, cfg.fgp, cfg.policy)?);
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding serve listener on {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        let quota = cfg.quota;
+        let max_inflight = cfg.max_inflight;
+        let workers = cfg.workers.max(1);
+        let shared = Arc::new(Shared {
+            cfg,
+            farm,
+            registry: Mutex::new(SessionRegistry::new()),
+            admission: AdmissionController::new(max_inflight),
+            quotas: Mutex::new(TenantQuotas::new(quota)),
+            tenants: Mutex::new(BTreeMap::new()),
+            metrics: Metrics::new(),
+            admitted: AtomicU64::new(0),
+            rejected_busy: AtomicU64::new(0),
+            rejected_quota: AtomicU64::new(0),
+            failovers: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+        });
+
+        let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+
+        let accept = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("fgp-serve-accept".into())
+                .spawn(move || {
+                    for conn in listener.incoming() {
+                        if shared.shutdown.load(Ordering::Acquire) {
+                            break;
+                        }
+                        if let Ok(sock) = conn {
+                            // a send failure means the pool is gone:
+                            // we're shutting down
+                            if conn_tx.send(sock).is_err() {
+                                break;
+                            }
+                        }
+                    }
+                })
+                .expect("spawn serve accept thread")
+        };
+
+        let worker_handles = (0..workers)
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                let conn_rx = Arc::clone(&conn_rx);
+                std::thread::Builder::new()
+                    .name(format!("fgp-serve-worker-{w}"))
+                    .spawn(move || loop {
+                        let sock = {
+                            let rx = lock(&conn_rx);
+                            rx.recv_timeout(Duration::from_millis(100))
+                        };
+                        match sock {
+                            Ok(sock) => {
+                                let _ = handle_conn(&shared, sock);
+                            }
+                            Err(RecvTimeoutError::Timeout) => {
+                                if shared.shutdown.load(Ordering::Acquire) {
+                                    break;
+                                }
+                            }
+                            Err(RecvTimeoutError::Disconnected) => break,
+                        }
+                    })
+                    .expect("spawn serve worker")
+            })
+            .collect();
+
+        let engine = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("fgp-serve-engine".into())
+                .spawn(move || {
+                    while !shared.shutdown.load(Ordering::Acquire) {
+                        if drain_round(&shared) == 0 {
+                            std::thread::sleep(Duration::from_micros(300));
+                        }
+                    }
+                })
+                .expect("spawn serve engine room")
+        };
+
+        Ok(FgpServe { shared, addr, accept: Some(accept), engine: Some(engine), workers: worker_handles })
+    }
+
+    /// The bound listen address (with the resolved ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The underlying farm — churn drivers (tests, the soak bench) kill
+    /// and revive devices through this while streams are live.
+    pub fn farm(&self) -> Arc<FgpFarm> {
+        Arc::clone(&self.shared.farm)
+    }
+
+    /// In-process SLO snapshot (the same body a wire `Stats` reply
+    /// carries).
+    pub fn stats(&self) -> StatsSnapshot {
+        self.shared.snapshot()
+    }
+
+    /// Stop accepting, drain workers, and join every thread.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        // wake the blocking accept with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(h) = self.engine.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FgpServe {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+// ---------------------------------------------------------------------
+// connection handling
+// ---------------------------------------------------------------------
+
+struct ConnState {
+    tenant: String,
+    ledger: Arc<TenantLedger>,
+}
+
+fn handle_conn(shared: &Shared, mut sock: TcpStream) -> io::Result<()> {
+    sock.set_nodelay(true)?;
+    sock.set_read_timeout(Some(Duration::from_millis(50)))?;
+    sock.set_write_timeout(Some(Duration::from_secs(10)))?;
+    let mut conn = ConnState { tenant: "anon".to_string(), ledger: shared.ledger("anon") };
+    let mut reader = FrameReader::new();
+    loop {
+        if shared.shutdown.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        match reader.poll(&mut sock)? {
+            FramePoll::Pending => continue,
+            FramePoll::Eof => return Ok(()),
+            FramePoll::Frame(payload) => {
+                let reply = handle_frame(shared, &mut conn, &payload);
+                write_frame(&mut sock, &encode_reply(&reply))?;
+            }
+        }
+    }
+}
+
+/// Quota → admission gates for `units` of work. Returns an early reply
+/// on refusal; on success the caller OWNS `units` admission units and
+/// must release them.
+fn gate(shared: &Shared, conn: &ConnState, units: u64) -> Option<ServeReply> {
+    let admitted = lock(&shared.quotas).admit(&conn.tenant, units, Instant::now());
+    if !admitted {
+        conn.ledger.rejected_quota.fetch_add(1, Ordering::Relaxed);
+        shared.rejected_quota.fetch_add(1, Ordering::Relaxed);
+        return Some(ServeReply::QuotaExceeded { retry_ms: shared.cfg.retry_ms });
+    }
+    if !shared.admission.try_acquire(units as usize) {
+        conn.ledger.rejected_busy.fetch_add(1, Ordering::Relaxed);
+        shared.rejected_busy.fetch_add(1, Ordering::Relaxed);
+        return Some(ServeReply::Busy { retry_ms: shared.cfg.retry_ms });
+    }
+    shared.admitted.fetch_add(units, Ordering::Relaxed);
+    None
+}
+
+fn farm_retryable(err: &anyhow::Error) -> bool {
+    err.downcast_ref::<FarmError>().map(FarmError::is_retryable).unwrap_or(false)
+}
+
+/// Run a farm call, retrying across members while failures stay
+/// retryable (at most one attempt per farm device).
+fn with_farm_retry<T>(shared: &Shared, f: impl Fn() -> Result<T>) -> Result<T> {
+    let attempts = shared.farm.size().max(1);
+    let mut last = None;
+    for _ in 0..attempts {
+        match f() {
+            Ok(v) => return Ok(v),
+            Err(e) => {
+                let retry = farm_retryable(&e);
+                last = Some(e);
+                if !retry {
+                    break;
+                }
+            }
+        }
+    }
+    Err(last.expect("at least one attempt"))
+}
+
+fn error_reply(err: &anyhow::Error) -> ServeReply {
+    ServeReply::Error { retryable: farm_retryable(err), message: format!("{err:#}") }
+}
+
+fn one_shot<T>(
+    shared: &Shared,
+    conn: &ConnState,
+    units: u64,
+    run: impl Fn() -> Result<T>,
+    ok: impl FnOnce(T) -> ServeReply,
+) -> ServeReply {
+    if let Some(refused) = gate(shared, conn, units) {
+        return refused;
+    }
+    let t0 = Instant::now();
+    let result = with_farm_retry(shared, run);
+    shared.admission.release(units as usize);
+    conn.ledger.requests.fetch_add(1, Ordering::Relaxed);
+    match result {
+        Ok(v) => {
+            shared.metrics.latency.record(t0.elapsed());
+            shared.metrics.completed.fetch_add(1, Ordering::Relaxed);
+            conn.ledger.samples.fetch_add(units, Ordering::Relaxed);
+            ok(v)
+        }
+        Err(e) => {
+            shared.metrics.failed.fetch_add(1, Ordering::Relaxed);
+            error_reply(&e)
+        }
+    }
+}
+
+fn pick_device(shared: &Shared, mode: StreamMode) -> Result<usize, ServeReply> {
+    match mode {
+        // coalesced streams route per batch; the pin is informational
+        StreamMode::Coalesced => Ok(0),
+        StreamMode::Sticky => shared.farm.pick(&[]).map_err(|e| ServeReply::Error {
+            retryable: e.is_retryable(),
+            message: e.to_string(),
+        }),
+    }
+}
+
+fn handle_frame(shared: &Shared, conn: &mut ConnState, payload: &[u8]) -> ServeReply {
+    let req = match decode_request(payload) {
+        Ok(req) => req,
+        Err(e) => return ServeReply::Error { retryable: false, message: e.to_string() },
+    };
+    match req {
+        ServeRequest::Hello { tenant } => {
+            conn.ledger = shared.ledger(&tenant);
+            conn.tenant = tenant;
+            ServeReply::Welcome { version: WIRE_VERSION }
+        }
+        ServeRequest::CnUpdate { x, y, a } => one_shot(
+            shared,
+            conn,
+            1,
+            || shared.farm.update(CnRequestData { x: x.clone(), y: y.clone(), a: a.clone() }),
+            |msg| ServeReply::Output { msg },
+        ),
+        ServeRequest::Chain { prior, sections } => {
+            if sections.is_empty() {
+                return ServeReply::Error {
+                    retryable: false,
+                    message: "chain request needs at least one section".into(),
+                };
+            }
+            one_shot(
+                shared,
+                conn,
+                sections.len() as u64,
+                || {
+                    let req = WorkloadRequest::chain(&prior, &sections)?;
+                    let exec = shared.farm.run(req)?;
+                    Ok(exec.output()?.clone())
+                },
+                |msg| ServeReply::Output { msg },
+            )
+        }
+        ServeRequest::OpenStream { name, mode, prior } => {
+            let device = match pick_device(shared, mode) {
+                Ok(d) => d,
+                Err(reply) => return reply,
+            };
+            let id = lock(&shared.registry).open(
+                name,
+                Arc::clone(&conn.ledger),
+                mode,
+                prior,
+                0,
+                device,
+            );
+            ServeReply::StreamOpened { stream: id, device: device as u32 }
+        }
+        ServeRequest::Resume { name, mode, checkpoint } => {
+            let ckpt = match decode_checkpoint(&checkpoint) {
+                Ok(c) => c,
+                Err(e) => {
+                    return ServeReply::Error { retryable: false, message: e.to_string() }
+                }
+            };
+            if ckpt.stream_name != name {
+                return ServeReply::Error {
+                    retryable: false,
+                    message: format!(
+                        "checkpoint belongs to stream '{}' but the request names '{}'",
+                        ckpt.stream_name, name
+                    ),
+                };
+            }
+            let device = match pick_device(shared, mode) {
+                Ok(d) => d,
+                Err(reply) => return reply,
+            };
+            let id = lock(&shared.registry).open(
+                name,
+                Arc::clone(&conn.ledger),
+                mode,
+                ckpt.state,
+                ckpt.samples,
+                device,
+            );
+            ServeReply::StreamOpened { stream: id, device: device as u32 }
+        }
+        ServeRequest::Push { stream, samples } => {
+            let n = samples.len();
+            if n == 0 {
+                return ServeReply::Error {
+                    retryable: false,
+                    message: "push carries no samples".into(),
+                };
+            }
+            let mut reg = lock(&shared.registry);
+            let Some(entry) = reg.get_mut(stream) else {
+                return ServeReply::Error {
+                    retryable: false,
+                    message: format!("no open stream {stream}"),
+                };
+            };
+            if let Some(err) = &entry.error {
+                return ServeReply::Error { retryable: false, message: err.clone() };
+            }
+            if entry.cn.pending() + n > shared.cfg.max_pending_per_stream {
+                conn.ledger.rejected_busy.fetch_add(1, Ordering::Relaxed);
+                shared.rejected_busy.fetch_add(1, Ordering::Relaxed);
+                return ServeReply::Busy { retry_ms: shared.cfg.retry_ms };
+            }
+            if let Some(refused) = gate(shared, conn, n as u64) {
+                return refused;
+            }
+            for (y, a) in samples {
+                entry.cn.push(y, a);
+            }
+            entry.inflight += n;
+            conn.ledger.requests.fetch_add(1, Ordering::Relaxed);
+            ServeReply::Ack {
+                stream,
+                accepted: n as u32,
+                pending: entry.cn.pending() as u32,
+            }
+        }
+        ServeRequest::Poll { stream } => {
+            let reg = lock(&shared.registry);
+            let Some(entry) = reg.get(stream) else {
+                return ServeReply::Error {
+                    retryable: false,
+                    message: format!("no open stream {stream}"),
+                };
+            };
+            if let Some(err) = &entry.error {
+                return ServeReply::Error { retryable: false, message: err.clone() };
+            }
+            ServeReply::StreamState {
+                stream,
+                samples_done: entry.cn.samples_done,
+                pending: entry.cn.pending() as u32,
+                device: entry.device as u32,
+                failovers: entry.failovers,
+                state: entry.cn.state.clone(),
+            }
+        }
+        ServeRequest::Checkpoint { stream } => {
+            let reg = lock(&shared.registry);
+            let Some(entry) = reg.get(stream) else {
+                return ServeReply::Error {
+                    retryable: false,
+                    message: format!("no open stream {stream}"),
+                };
+            };
+            // the checkpoint is the COMMITTED state: pending samples are
+            // deliberately excluded (they have not executed; the client
+            // re-pushes anything it still wants after a resume)
+            let ckpt = StreamCheckpoint {
+                stream_name: entry.name.clone(),
+                samples: entry.cn.samples_done,
+                state: entry.cn.state.clone(),
+                boundaries: Vec::new(),
+            };
+            ServeReply::CheckpointData { bytes: encode_checkpoint(&ckpt) }
+        }
+        ServeRequest::CloseStream { stream } => loop {
+            {
+                let mut reg = lock(&shared.registry);
+                let Some(entry) = reg.get(stream) else {
+                    return ServeReply::Error {
+                        retryable: false,
+                        message: format!("no open stream {stream}"),
+                    };
+                };
+                if entry.error.is_some() || entry.cn.pending() == 0 {
+                    let entry = reg.close(stream).expect("entry exists under lock");
+                    // anything still queued (error path) gives its
+                    // admission units back
+                    shared.admission.release(entry.inflight);
+                    return match entry.error {
+                        Some(err) => ServeReply::Error { retryable: false, message: err },
+                        None => ServeReply::Closed {
+                            stream,
+                            samples_done: entry.cn.samples_done,
+                            failovers: entry.failovers,
+                            state: entry.cn.state,
+                        },
+                    };
+                }
+            }
+            if shared.shutdown.load(Ordering::Acquire) {
+                return ServeReply::Error {
+                    retryable: true,
+                    message: "server shutting down before the stream drained".into(),
+                };
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        },
+        ServeRequest::Stats => ServeReply::Stats(shared.snapshot()),
+    }
+}
+
+// ---------------------------------------------------------------------
+// engine room
+// ---------------------------------------------------------------------
+
+/// One drain round; returns samples executed (0 = idle).
+fn drain_round(shared: &Shared) -> u64 {
+    let farm = &shared.farm;
+    let mut reg = lock(&shared.registry);
+    let mut advanced = 0u64;
+
+    // --- sticky streams: one chain chunk per stream, dispatched to the
+    // pinned devices concurrently, then collected
+    struct Job {
+        id: u64,
+        batch: Vec<(GaussMessage, CMatrix)>,
+        device: usize,
+        t0: Instant,
+        rx: std::sync::mpsc::Receiver<Result<crate::engine::Execution>>,
+    }
+    let mut jobs: Vec<Job> = Vec::new();
+    for id in reg.fair_ids(StreamMode::Sticky) {
+        let entry = reg.get_mut(id).expect("fair_ids returns live ids");
+        let batch = entry.cn.take(shared.cfg.chunk);
+        if batch.is_empty() {
+            continue;
+        }
+        match WorkloadRequest::chain(&entry.cn.state, &batch) {
+            Ok(req) => {
+                let t0 = Instant::now();
+                let rx = farm.submit_to(entry.device, req);
+                jobs.push(Job { id, batch, device: entry.device, t0, rx });
+            }
+            Err(e) => {
+                // malformed samples: terminal for the stream, but the
+                // queue stays intact for the close report
+                entry.cn.requeue_front(batch);
+                entry.error = Some(format!("{e:#}"));
+                shared.admission.release(entry.inflight);
+                entry.inflight = 0;
+                shared.metrics.failed.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+    for job in jobs {
+        let entry = reg.get_mut(job.id).expect("entry outlives its job");
+        let n = job.batch.len();
+        let out = recv_exec(&job.rx, job.device).and_then(|exec| Ok(exec.output()?.clone()));
+        match out {
+            Ok(state) => {
+                entry.cn.commit(state, n as u64);
+                entry.inflight -= n;
+                shared.admission.release(n);
+                entry.tenant.samples.fetch_add(n as u64, Ordering::Relaxed);
+                shared.metrics.latency.record(job.t0.elapsed());
+                shared.metrics.completed.fetch_add(1, Ordering::Relaxed);
+                advanced += n as u64;
+            }
+            Err(e) if farm_retryable(&e) => {
+                // the chunk never executed: requeue it unchanged and
+                // re-pin the stream on a surviving member — nothing is
+                // lost, nothing duplicated
+                entry.cn.requeue_front(job.batch);
+                if let Ok(next) = farm.pick(&[job.device]) {
+                    entry.device = next;
+                    entry.failovers += 1;
+                    shared.failovers.fetch_add(1, Ordering::Relaxed);
+                }
+                // if every member is down the samples stay queued; a
+                // revive (or a later pick) resumes the stream
+            }
+            Err(e) => {
+                entry.cn.requeue_front(job.batch);
+                entry.error = Some(format!("{e:#}"));
+                shared.admission.release(entry.inflight);
+                entry.inflight = 0;
+                shared.metrics.failed.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    // --- coalesced streams: fair-picked cross-stream batch
+    let picked: Vec<u64> = reg
+        .fair_ids(StreamMode::Coalesced)
+        .into_iter()
+        .take(shared.cfg.coalesce_width)
+        .collect();
+    if !picked.is_empty() {
+        // move the CnStreams out so tick_refs can borrow them all
+        // mutably at once; a cheap placeholder stands in
+        let mut moved: Vec<(u64, CnStream, u64)> = picked
+            .iter()
+            .map(|id| {
+                let entry = reg.get_mut(*id).expect("picked ids are live");
+                let before = entry.cn.samples_done;
+                let cn = std::mem::replace(
+                    &mut entry.cn,
+                    CnStream::new(GaussMessage::isotropic(1, 1.0)),
+                );
+                (*id, cn, before)
+            })
+            .collect();
+        let t0 = Instant::now();
+        let mut backend = FarmCnBackend::new(Arc::clone(farm));
+        let tick = {
+            let mut refs: Vec<&mut CnStream> =
+                moved.iter_mut().map(|(_, cn, _)| cn).collect();
+            StreamCoalescer::tick_refs(&mut backend, &mut refs)
+        };
+        let mut any = false;
+        for (id, cn, before) in moved {
+            let entry = reg.get_mut(id).expect("picked ids are live");
+            let delta = cn.samples_done - before;
+            entry.cn = cn;
+            if delta > 0 {
+                any = true;
+                entry.inflight -= delta as usize;
+                shared.admission.release(delta as usize);
+                entry.tenant.samples.fetch_add(delta, Ordering::Relaxed);
+                advanced += delta;
+            }
+        }
+        if any {
+            shared.metrics.latency.record(t0.elapsed());
+            shared.metrics.completed.fetch_add(1, Ordering::Relaxed);
+        }
+        // a tick error left the failing streams' samples queued; a
+        // retryable one (device churn) is re-dispatched next round and
+        // is not a served failure
+        if let Err(e) = tick {
+            if !farm_retryable(&e) {
+                shared.metrics.failed.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+    advanced
+}

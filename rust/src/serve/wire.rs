@@ -1,0 +1,1129 @@
+//! Length-framed binary wire codec for the serving tier.
+//!
+//! Everything on the socket is a **frame**: a little-endian `u32` byte
+//! length followed by that many payload bytes, capped at [`MAX_FRAME`].
+//! Payloads are tag-byte enums over a fixed set of primitives:
+//!
+//! | primitive | encoding |
+//! |-----------|----------|
+//! | `u8`/`u32`/`u64` | little-endian |
+//! | `f64`     | IEEE-754 bits via `to_bits`, little-endian (bit-exact) |
+//! | `string`/`bytes` | `u32` length + raw bytes (strings are UTF-8) |
+//! | `c64`     | re `f64`, im `f64` |
+//! | vector    | `u32` length + elements |
+//! | matrix    | `u32` rows, `u32` cols, row-major `c64`s |
+//! | message   | mean vector + covariance matrix |
+//!
+//! Floats travel as raw bits, so a decode(encode(x)) round trip is
+//! **bit-exact** — the property `rust/tests/property_wire.rs` pins for
+//! every frame type, and what makes a checkpoint restored on another
+//! process resume bitwise-identically. Decoding is total: any byte
+//! slice either parses completely or returns a typed [`WireError`]
+//! (truncation, bad tag, trailing garbage) — it never panics and never
+//! allocates more than the payload could hold.
+//!
+//! Three protocol families share the codec:
+//!
+//! * [`ServeRequest`]/[`ServeReply`] — the serving tier's front-door
+//!   protocol (one-shot updates, stream admission, checkpoint/failover,
+//!   `STATS`);
+//! * [`Command`]/[`Reply`] — the Fig. 5 device protocol, so a remote
+//!   host can drive a raw device channel through the same framing;
+//! * [`encode_checkpoint`]/[`decode_checkpoint`] — the portable
+//!   `StreamCheckpoint` image (`FGCK` magic + version byte).
+
+use std::io::{self, Read, Write};
+
+use crate::coordinator::MetricsSnapshot;
+use crate::engine::StreamCheckpoint;
+use crate::fgp::processor::{Command, FsmState, Reply};
+use crate::fgp::RunStats;
+use crate::gmp::matrix::{c64, CMatrix};
+use crate::gmp::message::GaussMessage;
+use crate::isa::MemoryImage;
+
+/// Hard cap on a frame's payload size (16 MiB). Large enough for any
+/// realistic chunk of `n = 4` messages, small enough that a corrupt
+/// length prefix cannot make a reader allocate unbounded memory.
+pub const MAX_FRAME: usize = 16 * 1024 * 1024;
+
+/// Wire protocol version carried in `Welcome`.
+pub const WIRE_VERSION: u32 = 1;
+
+/// Typed decode/framing failures. Decoding never panics: every
+/// malformed input maps to one of these.
+#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum WireError {
+    /// A frame length prefix exceeds [`MAX_FRAME`].
+    #[error("frame of {len} bytes exceeds the {MAX_FRAME}-byte cap")]
+    FrameTooLarge {
+        /// The advertised payload length.
+        len: usize,
+    },
+    /// The payload ended before the value was complete.
+    #[error("truncated payload: needed {need} more bytes decoding {what}")]
+    Truncated {
+        /// What was being decoded.
+        what: &'static str,
+        /// How many bytes were missing.
+        need: usize,
+    },
+    /// An enum tag byte matched no variant.
+    #[error("bad {what} tag {tag}")]
+    BadTag {
+        /// Which enum was being decoded.
+        what: &'static str,
+        /// The offending tag byte.
+        tag: u8,
+    },
+    /// The value decoded but bytes were left over.
+    #[error("{extra} trailing bytes after a complete value")]
+    Trailing {
+        /// Leftover byte count.
+        extra: usize,
+    },
+    /// A string field held invalid UTF-8.
+    #[error("string field is not valid UTF-8")]
+    BadUtf8,
+}
+
+// ---------------------------------------------------------------------
+// primitive encoder / decoder
+// ---------------------------------------------------------------------
+
+/// Append-only payload encoder over the primitive vocabulary.
+#[derive(Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    /// Fresh empty encoder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Finish and take the payload.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Append a `u8`.
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Append a little-endian `u32`.
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a little-endian `u64`.
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append an `f64` as its IEEE-754 bits (bit-exact round trip).
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    /// Append a length-prefixed byte string.
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Append a length-prefixed UTF-8 string.
+    pub fn str(&mut self, v: &str) {
+        self.bytes(v.as_bytes());
+    }
+
+    /// Append a complex scalar.
+    pub fn c64(&mut self, v: c64) {
+        self.f64(v.re);
+        self.f64(v.im);
+    }
+
+    /// Append a length-prefixed complex vector.
+    pub fn cvec(&mut self, v: &[c64]) {
+        self.u32(v.len() as u32);
+        for z in v {
+            self.c64(*z);
+        }
+    }
+
+    /// Append a complex matrix (rows, cols, row-major data).
+    pub fn cmatrix(&mut self, m: &CMatrix) {
+        self.u32(m.rows as u32);
+        self.u32(m.cols as u32);
+        for z in m.data() {
+            self.c64(*z);
+        }
+    }
+
+    /// Append a Gaussian message (mean vector + covariance matrix).
+    pub fn msg(&mut self, m: &GaussMessage) {
+        self.cvec(&m.mean);
+        self.cmatrix(&m.cov);
+    }
+}
+
+/// Cursor-style payload decoder; every read is bounds-checked.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    /// Decoder over a payload slice.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], WireError> {
+        let rest = self.buf.len() - self.pos;
+        if rest < n {
+            return Err(WireError::Truncated { what, need: n - rest });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read a `u8`.
+    pub fn u8(&mut self, what: &'static str) -> Result<u8, WireError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    /// Read a little-endian `u32`.
+    pub fn u32(&mut self, what: &'static str) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    /// Read a little-endian `u64`.
+    pub fn u64(&mut self, what: &'static str) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    /// Read an `f64` from its IEEE-754 bits.
+    pub fn f64(&mut self, what: &'static str) -> Result<f64, WireError> {
+        Ok(f64::from_bits(u64::from_le_bytes(
+            self.take(8, what)?.try_into().unwrap(),
+        )))
+    }
+
+    /// Read a length-prefixed byte string.
+    pub fn bytes(&mut self, what: &'static str) -> Result<Vec<u8>, WireError> {
+        let len = self.u32(what)? as usize;
+        Ok(self.take(len, what)?.to_vec())
+    }
+
+    /// Read a length-prefixed UTF-8 string.
+    pub fn str(&mut self, what: &'static str) -> Result<String, WireError> {
+        String::from_utf8(self.bytes(what)?).map_err(|_| WireError::BadUtf8)
+    }
+
+    /// Read a complex scalar.
+    pub fn c64(&mut self, what: &'static str) -> Result<c64, WireError> {
+        Ok(c64::new(self.f64(what)?, self.f64(what)?))
+    }
+
+    /// Read a length-prefixed complex vector. The length is validated
+    /// against the remaining payload before allocating.
+    pub fn cvec(&mut self, what: &'static str) -> Result<Vec<c64>, WireError> {
+        let len = self.u32(what)? as usize;
+        self.ensure_elems(len, what)?;
+        (0..len).map(|_| self.c64(what)).collect()
+    }
+
+    /// Read a complex matrix (rows, cols, row-major data).
+    pub fn cmatrix(&mut self, what: &'static str) -> Result<CMatrix, WireError> {
+        let rows = self.u32(what)? as usize;
+        let cols = self.u32(what)? as usize;
+        let n = rows.checked_mul(cols).ok_or(WireError::FrameTooLarge { len: usize::MAX })?;
+        self.ensure_elems(n, what)?;
+        let mut m = CMatrix::zeros(rows, cols);
+        for z in m.data_mut() {
+            *z = self.c64(what)?;
+        }
+        Ok(m)
+    }
+
+    /// Read a Gaussian message.
+    pub fn msg(&mut self, what: &'static str) -> Result<GaussMessage, WireError> {
+        let mean = self.cvec(what)?;
+        let cov = self.cmatrix(what)?;
+        if mean.len() != cov.rows || cov.rows != cov.cols {
+            return Err(WireError::BadTag { what, tag: 0xff });
+        }
+        Ok(GaussMessage { mean, cov })
+    }
+
+    /// Fail if any payload bytes remain.
+    pub fn finish(self) -> Result<(), WireError> {
+        let extra = self.buf.len() - self.pos;
+        if extra != 0 {
+            return Err(WireError::Trailing { extra });
+        }
+        Ok(())
+    }
+
+    /// Guard an upcoming `len`-element `c64` read against a corrupt
+    /// length prefix: the elements must fit in the remaining payload.
+    fn ensure_elems(&self, len: usize, what: &'static str) -> Result<(), WireError> {
+        let need = len.checked_mul(16).ok_or(WireError::FrameTooLarge { len: usize::MAX })?;
+        let rest = self.buf.len() - self.pos;
+        if need > rest {
+            return Err(WireError::Truncated { what, need: need - rest });
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// framing
+// ---------------------------------------------------------------------
+
+/// Write one `[u32-le len][payload]` frame.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
+    if payload.len() > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            WireError::FrameTooLarge { len: payload.len() },
+        ));
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Blocking frame read: `Ok(None)` on a clean EOF **at a frame
+/// boundary**; EOF mid-frame is an `UnexpectedEof` error. Used by the
+/// client, whose socket has no read timeout.
+pub fn read_frame(r: &mut impl Read) -> io::Result<Option<Vec<u8>>> {
+    let mut hdr = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut hdr[got..])? {
+            0 if got == 0 => return Ok(None),
+            0 => return Err(io::ErrorKind::UnexpectedEof.into()),
+            n => got += n,
+        }
+    }
+    let len = u32::from_le_bytes(hdr) as usize;
+    if len > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            WireError::FrameTooLarge { len },
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(Some(payload))
+}
+
+/// Result of one [`FrameReader::poll`].
+#[derive(Debug)]
+pub enum FramePoll {
+    /// A complete frame payload.
+    Frame(Vec<u8>),
+    /// The read timed out with the frame still incomplete; poll again.
+    Pending,
+    /// The peer closed cleanly at a frame boundary.
+    Eof,
+}
+
+/// Incremental frame reader for sockets with a read timeout: partial
+/// bytes survive across [`poll`](Self::poll) calls, so a server worker
+/// can wake periodically (to observe shutdown) without ever losing
+/// mid-frame state.
+#[derive(Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+}
+
+impl FrameReader {
+    /// Fresh reader with no buffered bytes.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Read until a full frame, a timeout, or EOF.
+    pub fn poll(&mut self, r: &mut impl Read) -> io::Result<FramePoll> {
+        let mut scratch = [0u8; 64 * 1024];
+        loop {
+            if self.buf.len() >= 4 {
+                let len = u32::from_le_bytes(self.buf[..4].try_into().unwrap()) as usize;
+                if len > MAX_FRAME {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        WireError::FrameTooLarge { len },
+                    ));
+                }
+                if self.buf.len() >= 4 + len {
+                    let rest = self.buf.split_off(4 + len);
+                    let mut frame = std::mem::replace(&mut self.buf, rest);
+                    frame.drain(..4);
+                    return Ok(FramePoll::Frame(frame));
+                }
+            }
+            match r.read(&mut scratch) {
+                Ok(0) => {
+                    return if self.buf.is_empty() {
+                        Ok(FramePoll::Eof)
+                    } else {
+                        Err(io::ErrorKind::UnexpectedEof.into())
+                    };
+                }
+                Ok(n) => self.buf.extend_from_slice(&scratch[..n]),
+                Err(e)
+                    if e.kind() == io::ErrorKind::WouldBlock
+                        || e.kind() == io::ErrorKind::TimedOut =>
+                {
+                    return Ok(FramePoll::Pending);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// serving protocol
+// ---------------------------------------------------------------------
+
+/// How a client wants its stream scheduled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StreamMode {
+    /// Pinned to one farm device; chunked chain dispatches, eligible for
+    /// checkpoint/failover.
+    Sticky,
+    /// Fair-picked into cross-stream coalesced batches.
+    Coalesced,
+}
+
+/// A client-to-server request frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeRequest {
+    /// Identify the connection's tenant (first frame of a session).
+    Hello {
+        /// Tenant name for quotas and per-tenant accounting.
+        tenant: String,
+    },
+    /// One-shot compound-node update.
+    CnUpdate {
+        /// Incoming state message.
+        x: GaussMessage,
+        /// Observation message.
+        y: GaussMessage,
+        /// Section state matrix.
+        a: CMatrix,
+    },
+    /// One-shot compound-observation chain.
+    Chain {
+        /// Prior folded through the sections.
+        prior: GaussMessage,
+        /// (observation, state matrix) sections, in order.
+        sections: Vec<(GaussMessage, CMatrix)>,
+    },
+    /// Open a recursive stream.
+    OpenStream {
+        /// Stream name (checkpoints are validated against it).
+        name: String,
+        /// Scheduling mode.
+        mode: StreamMode,
+        /// Initial recursive state.
+        prior: GaussMessage,
+    },
+    /// Queue samples onto an open stream.
+    Push {
+        /// Stream id from `StreamOpened`.
+        stream: u64,
+        /// (observation, state matrix) samples, in order.
+        samples: Vec<(GaussMessage, CMatrix)>,
+    },
+    /// Read a stream's progress and current state.
+    Poll {
+        /// Stream id.
+        stream: u64,
+    },
+    /// Drain and close a stream.
+    CloseStream {
+        /// Stream id.
+        stream: u64,
+    },
+    /// Snapshot a stream's committed state as a portable checkpoint.
+    Checkpoint {
+        /// Stream id.
+        stream: u64,
+    },
+    /// Reopen a stream from a checkpoint (possibly on another server).
+    Resume {
+        /// Stream name; must match the checkpoint's.
+        name: String,
+        /// Scheduling mode for the resumed stream.
+        mode: StreamMode,
+        /// An [`encode_checkpoint`] image.
+        checkpoint: Vec<u8>,
+    },
+    /// Fetch the server's SLO snapshot.
+    Stats,
+}
+
+/// A server-to-client reply frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeReply {
+    /// Session accepted.
+    Welcome {
+        /// Server wire version ([`WIRE_VERSION`]).
+        version: u32,
+    },
+    /// One-shot result message.
+    Output {
+        /// The posterior message.
+        msg: GaussMessage,
+    },
+    /// Stream admitted.
+    StreamOpened {
+        /// Stream id for subsequent frames.
+        stream: u64,
+        /// Farm device the stream is pinned to (sticky) or was opened
+        /// on (coalesced streams may migrate every batch).
+        device: u32,
+    },
+    /// Samples queued.
+    Ack {
+        /// Stream id.
+        stream: u64,
+        /// Samples accepted by this push.
+        accepted: u32,
+        /// Samples now pending on the stream.
+        pending: u32,
+    },
+    /// Stream progress.
+    StreamState {
+        /// Stream id.
+        stream: u64,
+        /// Samples executed and committed so far.
+        samples_done: u64,
+        /// Samples queued but not yet executed.
+        pending: u32,
+        /// Current device pin.
+        device: u32,
+        /// Device failovers this stream has survived.
+        failovers: u32,
+        /// Committed recursive state.
+        state: GaussMessage,
+    },
+    /// Stream drained and closed.
+    Closed {
+        /// Stream id.
+        stream: u64,
+        /// Total samples executed.
+        samples_done: u64,
+        /// Device failovers survived.
+        failovers: u32,
+        /// Final recursive state.
+        state: GaussMessage,
+    },
+    /// A checkpoint image ([`decode_checkpoint`] reads it back).
+    CheckpointData {
+        /// The encoded checkpoint.
+        bytes: Vec<u8>,
+    },
+    /// SLO snapshot.
+    Stats(StatsSnapshot),
+    /// The admission window is full; retry after the hint.
+    Busy {
+        /// Suggested client backoff in milliseconds.
+        retry_ms: u32,
+    },
+    /// The tenant's token bucket is empty; retry after the hint.
+    QuotaExceeded {
+        /// Suggested client backoff in milliseconds.
+        retry_ms: u32,
+    },
+    /// Request failed.
+    Error {
+        /// Whether retrying (possibly after a failover) can succeed.
+        retryable: bool,
+        /// Human-readable reason.
+        message: String,
+    },
+}
+
+/// Per-tenant accounting row in a [`StatsSnapshot`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TenantSnapshot {
+    /// Tenant name.
+    pub tenant: String,
+    /// Requests served (one-shots + pushes).
+    pub requests: u64,
+    /// Stream samples executed.
+    pub samples: u64,
+    /// Requests rejected by quota.
+    pub rejected_quota: u64,
+    /// Requests rejected by the admission window.
+    pub rejected_busy: u64,
+}
+
+/// The `STATS` reply body: global SLO latency plus per-tenant
+/// throughput, the row `BENCH_serving.json` is built from.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    /// End-to-end latency/completion distribution.
+    pub latency: MetricsSnapshot,
+    /// Work units (samples/one-shots) admitted in total.
+    pub admitted: u64,
+    /// Rejections due to a full admission window.
+    pub rejected_busy: u64,
+    /// Rejections due to tenant quotas.
+    pub rejected_quota: u64,
+    /// Stream failovers performed.
+    pub failovers: u64,
+    /// Per-tenant rows, sorted by tenant name.
+    pub tenants: Vec<TenantSnapshot>,
+}
+
+fn enc_mode(e: &mut Enc, m: StreamMode) {
+    e.u8(match m {
+        StreamMode::Sticky => 0,
+        StreamMode::Coalesced => 1,
+    });
+}
+
+fn dec_mode(d: &mut Dec) -> Result<StreamMode, WireError> {
+    match d.u8("StreamMode")? {
+        0 => Ok(StreamMode::Sticky),
+        1 => Ok(StreamMode::Coalesced),
+        tag => Err(WireError::BadTag { what: "StreamMode", tag }),
+    }
+}
+
+fn enc_sections(e: &mut Enc, sections: &[(GaussMessage, CMatrix)]) {
+    e.u32(sections.len() as u32);
+    for (y, a) in sections {
+        e.msg(y);
+        e.cmatrix(a);
+    }
+}
+
+fn dec_sections(d: &mut Dec) -> Result<Vec<(GaussMessage, CMatrix)>, WireError> {
+    let len = d.u32("sections")? as usize;
+    (0..len)
+        .map(|_| Ok((d.msg("sections")?, d.cmatrix("sections")?)))
+        .collect()
+}
+
+fn enc_metrics(e: &mut Enc, m: &MetricsSnapshot) {
+    e.u64(m.completed);
+    e.u64(m.failed);
+    e.u64(m.mean_ns);
+    e.u64(m.p50_ns);
+    e.u64(m.p95_ns);
+    e.u64(m.p99_ns);
+}
+
+fn dec_metrics(d: &mut Dec) -> Result<MetricsSnapshot, WireError> {
+    Ok(MetricsSnapshot {
+        completed: d.u64("metrics")?,
+        failed: d.u64("metrics")?,
+        mean_ns: d.u64("metrics")?,
+        p50_ns: d.u64("metrics")?,
+        p95_ns: d.u64("metrics")?,
+        p99_ns: d.u64("metrics")?,
+    })
+}
+
+/// Encode a [`ServeRequest`] payload.
+pub fn encode_request(req: &ServeRequest) -> Vec<u8> {
+    let mut e = Enc::new();
+    match req {
+        ServeRequest::Hello { tenant } => {
+            e.u8(1);
+            e.str(tenant);
+        }
+        ServeRequest::CnUpdate { x, y, a } => {
+            e.u8(2);
+            e.msg(x);
+            e.msg(y);
+            e.cmatrix(a);
+        }
+        ServeRequest::Chain { prior, sections } => {
+            e.u8(3);
+            e.msg(prior);
+            enc_sections(&mut e, sections);
+        }
+        ServeRequest::OpenStream { name, mode, prior } => {
+            e.u8(4);
+            e.str(name);
+            enc_mode(&mut e, *mode);
+            e.msg(prior);
+        }
+        ServeRequest::Push { stream, samples } => {
+            e.u8(5);
+            e.u64(*stream);
+            enc_sections(&mut e, samples);
+        }
+        ServeRequest::Poll { stream } => {
+            e.u8(6);
+            e.u64(*stream);
+        }
+        ServeRequest::CloseStream { stream } => {
+            e.u8(7);
+            e.u64(*stream);
+        }
+        ServeRequest::Checkpoint { stream } => {
+            e.u8(8);
+            e.u64(*stream);
+        }
+        ServeRequest::Resume { name, mode, checkpoint } => {
+            e.u8(9);
+            e.str(name);
+            enc_mode(&mut e, *mode);
+            e.bytes(checkpoint);
+        }
+        ServeRequest::Stats => e.u8(10),
+    }
+    e.into_bytes()
+}
+
+/// Decode a [`ServeRequest`] payload (total: typed error, never panics).
+pub fn decode_request(buf: &[u8]) -> Result<ServeRequest, WireError> {
+    let mut d = Dec::new(buf);
+    let req = match d.u8("ServeRequest")? {
+        1 => ServeRequest::Hello { tenant: d.str("Hello")? },
+        2 => ServeRequest::CnUpdate {
+            x: d.msg("CnUpdate")?,
+            y: d.msg("CnUpdate")?,
+            a: d.cmatrix("CnUpdate")?,
+        },
+        3 => ServeRequest::Chain {
+            prior: d.msg("Chain")?,
+            sections: dec_sections(&mut d)?,
+        },
+        4 => ServeRequest::OpenStream {
+            name: d.str("OpenStream")?,
+            mode: dec_mode(&mut d)?,
+            prior: d.msg("OpenStream")?,
+        },
+        5 => ServeRequest::Push {
+            stream: d.u64("Push")?,
+            samples: dec_sections(&mut d)?,
+        },
+        6 => ServeRequest::Poll { stream: d.u64("Poll")? },
+        7 => ServeRequest::CloseStream { stream: d.u64("CloseStream")? },
+        8 => ServeRequest::Checkpoint { stream: d.u64("Checkpoint")? },
+        9 => ServeRequest::Resume {
+            name: d.str("Resume")?,
+            mode: dec_mode(&mut d)?,
+            checkpoint: d.bytes("Resume")?,
+        },
+        10 => ServeRequest::Stats,
+        tag => return Err(WireError::BadTag { what: "ServeRequest", tag }),
+    };
+    d.finish()?;
+    Ok(req)
+}
+
+/// Encode a [`ServeReply`] payload.
+pub fn encode_reply(reply: &ServeReply) -> Vec<u8> {
+    let mut e = Enc::new();
+    match reply {
+        ServeReply::Welcome { version } => {
+            e.u8(1);
+            e.u32(*version);
+        }
+        ServeReply::Output { msg } => {
+            e.u8(2);
+            e.msg(msg);
+        }
+        ServeReply::StreamOpened { stream, device } => {
+            e.u8(3);
+            e.u64(*stream);
+            e.u32(*device);
+        }
+        ServeReply::Ack { stream, accepted, pending } => {
+            e.u8(4);
+            e.u64(*stream);
+            e.u32(*accepted);
+            e.u32(*pending);
+        }
+        ServeReply::StreamState { stream, samples_done, pending, device, failovers, state } => {
+            e.u8(5);
+            e.u64(*stream);
+            e.u64(*samples_done);
+            e.u32(*pending);
+            e.u32(*device);
+            e.u32(*failovers);
+            e.msg(state);
+        }
+        ServeReply::Closed { stream, samples_done, failovers, state } => {
+            e.u8(6);
+            e.u64(*stream);
+            e.u64(*samples_done);
+            e.u32(*failovers);
+            e.msg(state);
+        }
+        ServeReply::CheckpointData { bytes } => {
+            e.u8(7);
+            e.bytes(bytes);
+        }
+        ServeReply::Stats(s) => {
+            e.u8(8);
+            enc_metrics(&mut e, &s.latency);
+            e.u64(s.admitted);
+            e.u64(s.rejected_busy);
+            e.u64(s.rejected_quota);
+            e.u64(s.failovers);
+            e.u32(s.tenants.len() as u32);
+            for t in &s.tenants {
+                e.str(&t.tenant);
+                e.u64(t.requests);
+                e.u64(t.samples);
+                e.u64(t.rejected_quota);
+                e.u64(t.rejected_busy);
+            }
+        }
+        ServeReply::Busy { retry_ms } => {
+            e.u8(9);
+            e.u32(*retry_ms);
+        }
+        ServeReply::QuotaExceeded { retry_ms } => {
+            e.u8(10);
+            e.u32(*retry_ms);
+        }
+        ServeReply::Error { retryable, message } => {
+            e.u8(11);
+            e.u8(u8::from(*retryable));
+            e.str(message);
+        }
+    }
+    e.into_bytes()
+}
+
+/// Decode a [`ServeReply`] payload (total: typed error, never panics).
+pub fn decode_reply(buf: &[u8]) -> Result<ServeReply, WireError> {
+    let mut d = Dec::new(buf);
+    let reply = match d.u8("ServeReply")? {
+        1 => ServeReply::Welcome { version: d.u32("Welcome")? },
+        2 => ServeReply::Output { msg: d.msg("Output")? },
+        3 => ServeReply::StreamOpened {
+            stream: d.u64("StreamOpened")?,
+            device: d.u32("StreamOpened")?,
+        },
+        4 => ServeReply::Ack {
+            stream: d.u64("Ack")?,
+            accepted: d.u32("Ack")?,
+            pending: d.u32("Ack")?,
+        },
+        5 => ServeReply::StreamState {
+            stream: d.u64("StreamState")?,
+            samples_done: d.u64("StreamState")?,
+            pending: d.u32("StreamState")?,
+            device: d.u32("StreamState")?,
+            failovers: d.u32("StreamState")?,
+            state: d.msg("StreamState")?,
+        },
+        6 => ServeReply::Closed {
+            stream: d.u64("Closed")?,
+            samples_done: d.u64("Closed")?,
+            failovers: d.u32("Closed")?,
+            state: d.msg("Closed")?,
+        },
+        7 => ServeReply::CheckpointData { bytes: d.bytes("CheckpointData")? },
+        8 => {
+            let latency = dec_metrics(&mut d)?;
+            let admitted = d.u64("Stats")?;
+            let rejected_busy = d.u64("Stats")?;
+            let rejected_quota = d.u64("Stats")?;
+            let failovers = d.u64("Stats")?;
+            let n = d.u32("Stats")? as usize;
+            let tenants = (0..n)
+                .map(|_| {
+                    Ok(TenantSnapshot {
+                        tenant: d.str("Stats")?,
+                        requests: d.u64("Stats")?,
+                        samples: d.u64("Stats")?,
+                        rejected_quota: d.u64("Stats")?,
+                        rejected_busy: d.u64("Stats")?,
+                    })
+                })
+                .collect::<Result<_, WireError>>()?;
+            ServeReply::Stats(StatsSnapshot {
+                latency,
+                admitted,
+                rejected_busy,
+                rejected_quota,
+                failovers,
+                tenants,
+            })
+        }
+        9 => ServeReply::Busy { retry_ms: d.u32("Busy")? },
+        10 => ServeReply::QuotaExceeded { retry_ms: d.u32("QuotaExceeded")? },
+        11 => ServeReply::Error {
+            retryable: d.u8("Error")? != 0,
+            message: d.str("Error")?,
+        },
+        tag => return Err(WireError::BadTag { what: "ServeReply", tag }),
+    };
+    d.finish()?;
+    Ok(reply)
+}
+
+// ---------------------------------------------------------------------
+// checkpoint image
+// ---------------------------------------------------------------------
+
+const CKPT_MAGIC: [u8; 4] = *b"FGCK";
+const CKPT_VERSION: u8 = 1;
+
+/// Encode a [`StreamCheckpoint`] as a portable image (`FGCK` magic,
+/// version byte, then the checkpoint fields). Floats travel as raw
+/// bits, so restoring on another process resumes bitwise-identically.
+pub fn encode_checkpoint(ckpt: &StreamCheckpoint) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.buf.extend_from_slice(&CKPT_MAGIC);
+    e.u8(CKPT_VERSION);
+    e.str(&ckpt.stream_name);
+    e.u64(ckpt.samples);
+    e.msg(&ckpt.state);
+    e.u32(ckpt.boundaries.len() as u32);
+    for b in &ckpt.boundaries {
+        e.msg(b);
+    }
+    e.into_bytes()
+}
+
+/// Decode a checkpoint image (total: typed error, never panics).
+pub fn decode_checkpoint(buf: &[u8]) -> Result<StreamCheckpoint, WireError> {
+    let mut d = Dec::new(buf);
+    let magic = d.take(4, "checkpoint magic")?;
+    if magic != CKPT_MAGIC {
+        return Err(WireError::BadTag { what: "checkpoint magic", tag: magic[0] });
+    }
+    let version = d.u8("checkpoint version")?;
+    if version != CKPT_VERSION {
+        return Err(WireError::BadTag { what: "checkpoint version", tag: version });
+    }
+    let stream_name = d.str("checkpoint")?;
+    let samples = d.u64("checkpoint")?;
+    let state = d.msg("checkpoint")?;
+    let n = d.u32("checkpoint")? as usize;
+    let boundaries = (0..n).map(|_| d.msg("checkpoint")).collect::<Result<_, _>>()?;
+    d.finish()?;
+    Ok(StreamCheckpoint { stream_name, samples, state, boundaries })
+}
+
+// ---------------------------------------------------------------------
+// Fig. 5 device protocol
+// ---------------------------------------------------------------------
+
+fn enc_run_stats(e: &mut Enc, s: &RunStats) {
+    e.u64(s.cycles);
+    e.u64(s.instructions);
+    e.u64(s.datapath_cycles);
+    e.u64(s.sections);
+}
+
+fn dec_run_stats(d: &mut Dec) -> Result<RunStats, WireError> {
+    Ok(RunStats {
+        cycles: d.u64("RunStats")?,
+        instructions: d.u64("RunStats")?,
+        datapath_cycles: d.u64("RunStats")?,
+        sections: d.u64("RunStats")?,
+    })
+}
+
+/// Encode a Fig. 5 [`Command`] payload.
+pub fn encode_command(cmd: &Command) -> Vec<u8> {
+    let mut e = Enc::new();
+    match cmd {
+        Command::LoadProgram(image) => {
+            e.u8(1);
+            e.bytes(&image.bytes);
+        }
+        Command::StartProgram { id } => {
+            e.u8(2);
+            e.u8(*id);
+        }
+        Command::WriteMessage { slot, msg } => {
+            e.u8(3);
+            e.u8(*slot);
+            e.msg(msg);
+        }
+        Command::WriteState { slot, a } => {
+            e.u8(4);
+            e.u8(*slot);
+            e.cmatrix(a);
+        }
+        Command::ReadMessage { slot } => {
+            e.u8(5);
+            e.u8(*slot);
+        }
+        Command::Status => e.u8(6),
+    }
+    e.into_bytes()
+}
+
+/// Decode a Fig. 5 [`Command`] payload (total: typed error, never
+/// panics).
+pub fn decode_command(buf: &[u8]) -> Result<Command, WireError> {
+    let mut d = Dec::new(buf);
+    let cmd = match d.u8("Command")? {
+        1 => Command::LoadProgram(MemoryImage { bytes: d.bytes("LoadProgram")? }),
+        2 => Command::StartProgram { id: d.u8("StartProgram")? },
+        3 => Command::WriteMessage { slot: d.u8("WriteMessage")?, msg: d.msg("WriteMessage")? },
+        4 => Command::WriteState { slot: d.u8("WriteState")?, a: d.cmatrix("WriteState")? },
+        5 => Command::ReadMessage { slot: d.u8("ReadMessage")? },
+        6 => Command::Status,
+        tag => return Err(WireError::BadTag { what: "Command", tag }),
+    };
+    d.finish()?;
+    Ok(cmd)
+}
+
+/// Encode a Fig. 5 [`Reply`] payload.
+pub fn encode_device_reply(reply: &Reply) -> Vec<u8> {
+    let mut e = Enc::new();
+    match reply {
+        Reply::Ok => e.u8(1),
+        Reply::Loaded { instrs } => {
+            e.u8(2);
+            e.u64(*instrs as u64);
+        }
+        Reply::Finished(stats) => {
+            e.u8(3);
+            enc_run_stats(&mut e, stats);
+        }
+        Reply::Message(msg) => {
+            e.u8(4);
+            e.msg(msg);
+        }
+        Reply::Status { state, cycles } => {
+            e.u8(5);
+            e.u8(match state {
+                FsmState::Idle => 0,
+                FsmState::Running => 1,
+                FsmState::Done => 2,
+            });
+            e.u64(*cycles);
+        }
+        Reply::Error(msg) => {
+            e.u8(6);
+            e.str(msg);
+        }
+    }
+    e.into_bytes()
+}
+
+/// Decode a Fig. 5 [`Reply`] payload (total: typed error, never panics).
+pub fn decode_device_reply(buf: &[u8]) -> Result<Reply, WireError> {
+    let mut d = Dec::new(buf);
+    let reply = match d.u8("Reply")? {
+        1 => Reply::Ok,
+        2 => Reply::Loaded { instrs: d.u64("Loaded")? as usize },
+        3 => Reply::Finished(dec_run_stats(&mut d)?),
+        4 => Reply::Message(d.msg("Message")?),
+        5 => Reply::Status {
+            state: match d.u8("Status")? {
+                0 => FsmState::Idle,
+                1 => FsmState::Running,
+                2 => FsmState::Done,
+                tag => return Err(WireError::BadTag { what: "FsmState", tag }),
+            },
+            cycles: d.u64("Status")?,
+        },
+        6 => Reply::Error(d.str("Error")?),
+        tag => return Err(WireError::BadTag { what: "Reply", tag }),
+    };
+    d.finish()?;
+    Ok(reply)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_round_trip_bit_exact() {
+        let mut e = Enc::new();
+        e.f64(0.1 + 0.2); // not representable exactly: bits must survive
+        e.f64(-0.0);
+        e.f64(f64::NAN);
+        e.str("tenant-α");
+        e.u64(u64::MAX);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        assert_eq!(d.f64("t").unwrap().to_bits(), (0.1 + 0.2_f64).to_bits());
+        assert_eq!(d.f64("t").unwrap().to_bits(), (-0.0_f64).to_bits());
+        assert!(d.f64("t").unwrap().is_nan());
+        assert_eq!(d.str("t").unwrap(), "tenant-α");
+        assert_eq!(d.u64("t").unwrap(), u64::MAX);
+        d.finish().unwrap();
+    }
+
+    #[test]
+    fn frame_reader_reassembles_split_frames() {
+        let mut payloads = Vec::new();
+        write_frame(&mut payloads, b"hello").unwrap();
+        write_frame(&mut payloads, b"").unwrap();
+        write_frame(&mut payloads, &[7u8; 300]).unwrap();
+        // feed the byte stream one byte at a time through a reader that
+        // "times out" between bytes: frames must reassemble intact
+        struct OneByte<'a>(&'a [u8], usize, bool);
+        impl Read for OneByte<'_> {
+            fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+                if self.2 {
+                    self.2 = false;
+                    return Err(io::ErrorKind::WouldBlock.into());
+                }
+                self.2 = true;
+                if self.1 >= self.0.len() {
+                    return Ok(0);
+                }
+                buf[0] = self.0[self.1];
+                self.1 += 1;
+                Ok(1)
+            }
+        }
+        let mut src = OneByte(&payloads, 0, false);
+        let mut reader = FrameReader::new();
+        let mut frames = Vec::new();
+        loop {
+            match reader.poll(&mut src).unwrap() {
+                FramePoll::Frame(f) => frames.push(f),
+                FramePoll::Pending => continue,
+                FramePoll::Eof => break,
+            }
+        }
+        assert_eq!(frames.len(), 3);
+        assert_eq!(frames[0], b"hello");
+        assert!(frames[1].is_empty());
+        assert_eq!(frames[2], vec![7u8; 300]);
+    }
+
+    #[test]
+    fn oversized_frame_is_rejected_by_reader_and_writer() {
+        let mut sink = Vec::new();
+        let big = vec![0u8; MAX_FRAME + 1];
+        assert!(write_frame(&mut sink, &big).is_err());
+        // a corrupt length prefix must not trigger a giant allocation
+        let bad = ((MAX_FRAME + 1) as u32).to_le_bytes();
+        assert!(read_frame(&mut &bad[..]).is_err());
+        let mut reader = FrameReader::new();
+        assert!(reader.poll(&mut &bad[..]).is_err());
+    }
+
+    #[test]
+    fn clean_eof_vs_mid_frame_eof() {
+        // clean EOF at a boundary
+        assert!(read_frame(&mut &[][..]).unwrap().is_none());
+        // EOF inside a frame is an error
+        let mut partial = Vec::new();
+        write_frame(&mut partial, b"abcdef").unwrap();
+        partial.truncate(partial.len() - 2);
+        assert!(read_frame(&mut &partial[..]).is_err());
+    }
+}

@@ -1,0 +1,344 @@
+//! Integration: the network serving tier (E16).
+//!
+//! Everything here runs over real TCP against an ephemeral-port
+//! [`FgpServe`]. The contracts under test:
+//!
+//! * **identity** — a one-shot update, a chunked sticky stream, and a
+//!   coalesced stream served over the wire are *bitwise* identical to
+//!   folding the same samples through a local farm (the codec moves f64
+//!   as raw bits; the engine's chunk invariance does the rest);
+//! * **admission** — an exhausted tenant bucket is a deterministic
+//!   `QuotaExceeded`, a full in-flight window is an explicit `Busy`,
+//!   and both are visible in the `STATS` counters;
+//! * **failover** — killing a stream's pinned device mid-run loses and
+//!   duplicates nothing: the stream re-pins, finishes bitwise-identical
+//!   to the uninterrupted reference, and a checkpoint taken before the
+//!   kill resumes bitwise-identically on a *fresh server*;
+//! * **churn soak** — four concurrent tenant streams (sticky and
+//!   coalesced) survive scripted kill/revive cycles with zero lost or
+//!   duplicated samples.
+
+use std::time::{Duration, Instant};
+
+use fgp_repro::coordinator::{CnRequestData, FgpFarm, RoutePolicy};
+use fgp_repro::fgp::FgpConfig;
+use fgp_repro::gmp::matrix::{c64, CMatrix};
+use fgp_repro::gmp::message::GaussMessage;
+use fgp_repro::serve::{
+    FgpServe, QuotaPolicy, ServeClient, ServeConfig, ServeReply, ServeRequest, StreamMode,
+};
+use fgp_repro::testutil::Rng;
+
+fn msg(rng: &mut Rng, n: usize) -> GaussMessage {
+    GaussMessage::new(
+        (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+        CMatrix::random_psd(rng, n, 1.0).scale(0.15),
+    )
+}
+
+fn sample(rng: &mut Rng, n: usize) -> (GaussMessage, CMatrix) {
+    (msg(rng, n), CMatrix::random(rng, n, n).scale(0.3))
+}
+
+/// The bitwise reference: fold the samples one at a time through a
+/// local single-device farm. Chunk invariance (pinned by
+/// `integration_streaming.rs`) makes any server-side chunking of the
+/// same sequence bitwise identical to this.
+fn reference_fold(prior: &GaussMessage, samples: &[(GaussMessage, CMatrix)]) -> GaussMessage {
+    let farm = FgpFarm::start(1, FgpConfig::default(), RoutePolicy::RoundRobin).unwrap();
+    let mut state = prior.clone();
+    for (y, a) in samples {
+        state = farm
+            .update(CnRequestData { x: state.clone(), y: y.clone(), a: a.clone() })
+            .unwrap();
+    }
+    state
+}
+
+fn serve(cfg: ServeConfig) -> (FgpServe, String) {
+    let srv = FgpServe::start(cfg).unwrap();
+    let addr = srv.addr().to_string();
+    (srv, addr)
+}
+
+/// Poll until the stream has committed `want` samples with an empty
+/// queue (so a checkpoint taken next has a deterministic cursor).
+fn wait_drained(client: &mut ServeClient, stream: u64, want: u64) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let st = client.poll(stream).unwrap();
+        if st.samples_done == want && st.pending == 0 {
+            return;
+        }
+        assert!(Instant::now() < deadline, "stream stuck at {st:?}, want {want}");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+// ---------------------------------------------------------------------
+// wire identity
+// ---------------------------------------------------------------------
+
+#[test]
+fn one_shot_cn_and_chain_over_tcp_match_the_farm() {
+    let (_srv, addr) = serve(ServeConfig::default());
+    let mut client = ServeClient::connect(addr.as_str(), "alice").unwrap();
+    let mut rng = Rng::new(61);
+
+    let x = msg(&mut rng, 4);
+    let (y, a) = sample(&mut rng, 4);
+    let served = client.cn_update(x.clone(), y.clone(), a.clone()).unwrap();
+    let local = FgpFarm::start(1, FgpConfig::default(), RoutePolicy::RoundRobin)
+        .unwrap()
+        .update(CnRequestData { x, y: y.clone(), a: a.clone() })
+        .unwrap();
+    assert_eq!(served.dist(&local), 0.0, "one-shot must be bitwise identical");
+
+    let prior = msg(&mut rng, 4);
+    let sections: Vec<_> = (0..5).map(|_| sample(&mut rng, 4)).collect();
+    let chained = client.chain(prior.clone(), sections.clone()).unwrap();
+    let want = reference_fold(&prior, &sections);
+    assert_eq!(chained.dist(&want), 0.0, "chain must be bitwise identical");
+}
+
+#[test]
+fn sticky_and_coalesced_streams_are_bitwise_identical_over_the_wire() {
+    let cfg = ServeConfig { chunk: 4, ..ServeConfig::default() };
+    let (_srv, addr) = serve(cfg);
+    let mut rng = Rng::new(67);
+    let prior = msg(&mut rng, 4);
+    let samples: Vec<_> = (0..10).map(|_| sample(&mut rng, 4)).collect();
+    let want = reference_fold(&prior, &samples);
+
+    for mode in [StreamMode::Sticky, StreamMode::Coalesced] {
+        let mut client = ServeClient::connect(addr.as_str(), "alice").unwrap();
+        let (id, _device) = client.open_stream("wire_identity", mode, prior.clone()).unwrap();
+        // uneven pushes: chunking must not depend on arrival framing
+        for batch in [&samples[..3], &samples[3..8], &samples[8..]] {
+            let (accepted, _) = client.push(id, batch.to_vec()).unwrap();
+            assert_eq!(accepted as usize, batch.len());
+        }
+        let closed = client.close_stream(id).unwrap();
+        assert_eq!(closed.samples_done, 10);
+        assert_eq!(closed.state.dist(&want), 0.0, "{mode:?} stream must be bitwise identical");
+    }
+}
+
+// ---------------------------------------------------------------------
+// admission control
+// ---------------------------------------------------------------------
+
+#[test]
+fn exhausted_tenant_quota_is_a_deterministic_rejection() {
+    // rate 0: the bucket never refills, so the outcome is exact
+    let cfg = ServeConfig {
+        quota: QuotaPolicy { rate: 0.0, burst: 3.0 },
+        ..ServeConfig::default()
+    };
+    let (srv, addr) = serve(cfg);
+    let mut greedy = ServeClient::connect(addr.as_str(), "greedy").unwrap();
+    let mut rng = Rng::new(71);
+    let request = |rng: &mut Rng| {
+        let (y, a) = sample(rng, 4);
+        ServeRequest::CnUpdate { x: msg(rng, 4), y, a }
+    };
+    for _ in 0..3 {
+        assert!(matches!(greedy.call(&request(&mut rng)).unwrap(), ServeReply::Output { .. }));
+    }
+    assert!(matches!(
+        greedy.call(&request(&mut rng)).unwrap(),
+        ServeReply::QuotaExceeded { .. }
+    ));
+    // quotas are per tenant: a different tenant is unaffected
+    let mut polite = ServeClient::connect(addr.as_str(), "polite").unwrap();
+    assert!(matches!(polite.call(&request(&mut rng)).unwrap(), ServeReply::Output { .. }));
+
+    let stats = srv.stats();
+    assert_eq!(stats.rejected_quota, 1);
+    let row = stats.tenants.iter().find(|t| t.tenant == "greedy").unwrap();
+    assert_eq!(row.rejected_quota, 1);
+    assert_eq!(row.samples, 3);
+}
+
+#[test]
+fn full_admission_window_replies_busy_not_queueing() {
+    let cfg = ServeConfig { max_inflight: 4, ..ServeConfig::default() };
+    let (srv, addr) = serve(cfg);
+    let mut client = ServeClient::connect(addr.as_str(), "alice").unwrap();
+    let mut rng = Rng::new(73);
+    let prior = msg(&mut rng, 4);
+    let (id, _) = client.open_stream("windowed", StreamMode::Sticky, prior.clone()).unwrap();
+    // a 5-sample push can never fit a 4-unit window: refused outright
+    let five: Vec<_> = (0..5).map(|_| sample(&mut rng, 4)).collect();
+    assert!(matches!(
+        client.call(&ServeRequest::Push { stream: id, samples: five }).unwrap(),
+        ServeReply::Busy { .. }
+    ));
+    // four fit; the retrying helper rides out transient fullness
+    let four: Vec<_> = (0..4).map(|_| sample(&mut rng, 4)).collect();
+    let (accepted, _) = client.push(id, four.clone()).unwrap();
+    assert_eq!(accepted, 4);
+    let closed = client.close_stream(id).unwrap();
+    assert_eq!(closed.samples_done, 4);
+    assert_eq!(closed.state.dist(&reference_fold(&prior, &four)), 0.0);
+    assert!(srv.stats().rejected_busy >= 1);
+}
+
+#[test]
+fn stats_exports_ordered_percentiles_and_tenant_rows() {
+    let (_srv, addr) = serve(ServeConfig::default());
+    let mut rng = Rng::new(79);
+    for tenant in ["beta", "alpha"] {
+        let mut client = ServeClient::connect(addr.as_str(), tenant).unwrap();
+        for _ in 0..5 {
+            let (y, a) = sample(&mut rng, 4);
+            client.cn_update(msg(&mut rng, 4), y, a).unwrap();
+        }
+    }
+    let mut observer = ServeClient::connect(addr.as_str(), "observer").unwrap();
+    let stats = observer.stats().unwrap();
+    assert!(stats.latency.completed >= 10);
+    assert_eq!(stats.latency.failed, 0);
+    assert!(stats.latency.mean_ns > 0);
+    assert!(
+        stats.latency.p50_ns <= stats.latency.p95_ns
+            && stats.latency.p95_ns <= stats.latency.p99_ns,
+        "percentiles must be ordered: {:?}",
+        stats.latency
+    );
+    assert!(stats.admitted >= 10);
+    let names: Vec<&str> = stats.tenants.iter().map(|t| t.tenant.as_str()).collect();
+    assert!(names.windows(2).all(|w| w[0] <= w[1]), "tenant rows sorted: {names:?}");
+    for tenant in ["alpha", "beta"] {
+        let row = stats.tenants.iter().find(|t| t.tenant == tenant).unwrap();
+        assert_eq!(row.samples, 5, "{tenant}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// checkpoint / failover conformance (the E16 acceptance gate)
+// ---------------------------------------------------------------------
+
+#[test]
+fn kill_checkpoint_and_resume_are_bitwise_identical() {
+    let cfg = ServeConfig { devices: 2, chunk: 3, ..ServeConfig::default() };
+    let (srv, addr) = serve(cfg.clone());
+    let mut rng = Rng::new(83);
+    let prior = msg(&mut rng, 4);
+    let samples: Vec<_> = (0..12).map(|_| sample(&mut rng, 4)).collect();
+    let want = reference_fold(&prior, &samples);
+
+    let mut client = ServeClient::connect(addr.as_str(), "alice").unwrap();
+    let (id, device) = client.open_stream("conform", StreamMode::Sticky, prior.clone()).unwrap();
+    client.push(id, samples[..6].to_vec()).unwrap();
+    wait_drained(&mut client, id, 6);
+    let ckpt = client.checkpoint(id).unwrap();
+
+    // kill the pinned device while the stream is live, then keep pushing
+    assert!(srv.farm().kill_device(device as usize).unwrap());
+    client.push(id, samples[6..].to_vec()).unwrap();
+    let closed = client.close_stream(id).unwrap();
+    assert_eq!(closed.samples_done, 12, "no sample lost or duplicated across the kill");
+    assert!(closed.failovers >= 1, "the stream must have re-pinned");
+    assert_eq!(
+        closed.state.dist(&want),
+        0.0,
+        "post-failover stream must be bitwise identical to the uninterrupted fold"
+    );
+    assert!(srv.stats().failovers >= 1);
+
+    // the checkpoint taken before the kill resumes on a FRESH server
+    // and finishes bitwise-identically too
+    let (_srv2, addr2) = serve(cfg);
+    let mut resumed = ServeClient::connect(addr2.as_str(), "alice").unwrap();
+    let (rid, _) = resumed.resume("conform", StreamMode::Sticky, ckpt.clone()).unwrap();
+    resumed.push(rid, samples[6..].to_vec()).unwrap();
+    let rclosed = resumed.close_stream(rid).unwrap();
+    assert_eq!(rclosed.samples_done, 12, "resumed cursor continues from the checkpoint");
+    assert_eq!(rclosed.state.dist(&want), 0.0, "resume must be bitwise identical");
+
+    // a checkpoint only resumes the stream it names
+    match resumed.call(&ServeRequest::Resume {
+        name: "other".into(),
+        mode: StreamMode::Sticky,
+        checkpoint: ckpt,
+    }) {
+        Ok(ServeReply::Error { retryable: false, message }) => {
+            assert!(message.contains("conform"), "{message}")
+        }
+        other => panic!("expected a name-mismatch error, got {other:?}"),
+    }
+}
+
+#[test]
+fn churn_soak_four_tenant_streams_lose_nothing() {
+    const PER_STREAM: usize = 24;
+    let cfg = ServeConfig { devices: 2, chunk: 4, ..ServeConfig::default() };
+    let (srv, addr) = serve(cfg);
+
+    // per-tenant sample sequences + their bitwise references
+    let mut priors = Vec::new();
+    let mut sequences = Vec::new();
+    let mut wants = Vec::new();
+    for t in 0..4 {
+        let mut rng = Rng::new(100 + t as u64);
+        let prior = msg(&mut rng, 4);
+        let seq: Vec<_> = (0..PER_STREAM).map(|_| sample(&mut rng, 4)).collect();
+        wants.push(reference_fold(&prior, &seq));
+        priors.push(prior);
+        sequences.push(seq);
+    }
+
+    let farm = srv.farm();
+    std::thread::scope(|scope| {
+        let clients: Vec<_> = (0..4)
+            .map(|t| {
+                let addr = addr.clone();
+                let prior = priors[t].clone();
+                let seq = sequences[t].clone();
+                scope.spawn(move || {
+                    let tenant = format!("tenant-{t}");
+                    // mixed modes: the soak must hold for both paths
+                    let mode = if t == 3 { StreamMode::Coalesced } else { StreamMode::Sticky };
+                    let mut client = ServeClient::connect(addr.as_str(), &tenant).unwrap();
+                    let (id, _) = client.open_stream(&tenant, mode, prior).unwrap();
+                    for batch in seq.chunks(4) {
+                        client.push(id, batch.to_vec()).unwrap();
+                    }
+                    client.close_stream(id).unwrap()
+                })
+            })
+            .collect();
+
+        // scripted churn while the streams run: kill/revive each device
+        // in turn, never both at once, ending with everything alive
+        for _ in 0..3 {
+            for d in 0..2 {
+                farm.kill_device(d).unwrap();
+                std::thread::sleep(Duration::from_millis(10));
+                farm.revive_device(d).unwrap();
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+
+        for (t, handle) in clients.into_iter().enumerate() {
+            let closed = handle.join().unwrap();
+            assert_eq!(
+                closed.samples_done, PER_STREAM as u64,
+                "tenant {t}: zero lost or duplicated samples under churn"
+            );
+            assert_eq!(
+                closed.state.dist(&wants[t]),
+                0.0,
+                "tenant {t}: churn must not change a single bit"
+            );
+        }
+    });
+
+    let stats = srv.stats();
+    assert_eq!(stats.latency.failed, 0, "churn must surface as failovers, not failures");
+    for t in 0..4 {
+        let row = stats.tenants.iter().find(|r| r.tenant == format!("tenant-{t}")).unwrap();
+        assert_eq!(row.samples, PER_STREAM as u64, "tenant {t} accounting");
+    }
+}

@@ -1,0 +1,315 @@
+//! Property tests for the serve wire codec (E16, satellite).
+//!
+//! Three properties, swept across **every** variant of every frame
+//! family (`ServeRequest`, `ServeReply`, the Fig. 5 `Command`/`Reply`
+//! device protocol, and the `FGCK` checkpoint image):
+//!
+//! 1. **bit-exact round trip** — `decode(encode(v)) == v`, and
+//!    re-encoding the decoded value reproduces the *same bytes*
+//!    (catching bit-level aliases PartialEq forgives, like `-0.0`);
+//! 2. **truncation is total** — decoding any strict prefix of a valid
+//!    payload returns a typed error, never panics, never a wrong value;
+//! 3. **trailing bytes are rejected** — a valid payload plus garbage is
+//!    a `Trailing` error, so frames cannot smuggle extra state.
+//!
+//! Payloads use awkward floats (`0.1 + 0.2`, `-0.0`, subnormals,
+//! `1e308`) so "round trip" means IEEE-754 bits, not approximate value.
+
+use fgp_repro::coordinator::MetricsSnapshot;
+use fgp_repro::engine::StreamCheckpoint;
+use fgp_repro::fgp::processor::{Command, FsmState, Reply};
+use fgp_repro::fgp::RunStats;
+use fgp_repro::gmp::matrix::{c64, CMatrix};
+use fgp_repro::gmp::message::GaussMessage;
+use fgp_repro::isa::MemoryImage;
+use fgp_repro::serve::{
+    decode_checkpoint, decode_reply, decode_request, encode_checkpoint, encode_reply,
+    encode_request, read_frame, write_frame, ServeReply, ServeRequest, StatsSnapshot, StreamMode,
+    TenantSnapshot, WireError, MAX_FRAME,
+};
+use fgp_repro::serve::wire::{decode_command, decode_device_reply, encode_command, encode_device_reply};
+use fgp_repro::testutil::Rng;
+
+/// Floats chosen to break any codec that is less than bit-exact.
+const AWKWARD: [f64; 6] = [0.1 + 0.2, -0.0, f64::MIN_POSITIVE / 2.0, 1e308, -3.5, 0.0];
+
+fn awkward_msg(rng: &mut Rng, n: usize) -> GaussMessage {
+    let mut k = 0usize;
+    let mut next = |rng: &mut Rng| {
+        k += 1;
+        if k % 3 == 0 {
+            AWKWARD[k % AWKWARD.len()]
+        } else {
+            rng.range(-2.0, 2.0)
+        }
+    };
+    let mean = (0..n).map(|_| c64::new(next(rng), next(rng))).collect();
+    let mut cov = CMatrix::zeros(n, n);
+    for z in cov.data_mut() {
+        *z = c64::new(next(rng), next(rng));
+    }
+    GaussMessage { mean, cov }
+}
+
+fn awkward_matrix(rng: &mut Rng, r: usize, c: usize) -> CMatrix {
+    let mut m = CMatrix::zeros(r, c);
+    for (i, z) in m.data_mut().iter_mut().enumerate() {
+        *z = c64::new(AWKWARD[i % AWKWARD.len()], rng.range(-1.0, 1.0));
+    }
+    m
+}
+
+fn every_request(rng: &mut Rng) -> Vec<ServeRequest> {
+    vec![
+        ServeRequest::Hello { tenant: "tenant-α".into() },
+        ServeRequest::CnUpdate {
+            x: awkward_msg(rng, 4),
+            y: awkward_msg(rng, 4),
+            a: awkward_matrix(rng, 4, 4),
+        },
+        ServeRequest::Chain {
+            prior: awkward_msg(rng, 3),
+            sections: (0..3).map(|_| (awkward_msg(rng, 3), awkward_matrix(rng, 3, 3))).collect(),
+        },
+        ServeRequest::OpenStream {
+            name: "rls_channel_stream".into(),
+            mode: StreamMode::Sticky,
+            prior: awkward_msg(rng, 2),
+        },
+        ServeRequest::Push {
+            stream: u64::MAX,
+            samples: vec![(awkward_msg(rng, 2), awkward_matrix(rng, 2, 2))],
+        },
+        ServeRequest::Poll { stream: 7 },
+        ServeRequest::CloseStream { stream: 0 },
+        ServeRequest::Checkpoint { stream: 42 },
+        ServeRequest::Resume {
+            name: "rls_channel_stream".into(),
+            mode: StreamMode::Coalesced,
+            checkpoint: vec![0xde, 0xad, 0xbe, 0xef],
+        },
+        ServeRequest::Stats,
+    ]
+}
+
+fn every_reply(rng: &mut Rng) -> Vec<ServeReply> {
+    vec![
+        ServeReply::Welcome { version: 1 },
+        ServeReply::Output { msg: awkward_msg(rng, 4) },
+        ServeReply::StreamOpened { stream: 9, device: 3 },
+        ServeReply::Ack { stream: 9, accepted: 16, pending: 1024 },
+        ServeReply::StreamState {
+            stream: 9,
+            samples_done: u64::MAX / 2,
+            pending: 0,
+            device: 1,
+            failovers: 2,
+            state: awkward_msg(rng, 4),
+        },
+        ServeReply::Closed {
+            stream: 9,
+            samples_done: 512,
+            failovers: 0,
+            state: awkward_msg(rng, 2),
+        },
+        ServeReply::CheckpointData { bytes: (0..=255u8).collect() },
+        ServeReply::Stats(StatsSnapshot {
+            latency: MetricsSnapshot {
+                completed: 100,
+                failed: 1,
+                mean_ns: 12_345,
+                p50_ns: 10_000,
+                p95_ns: 50_000,
+                p99_ns: 90_000,
+            },
+            admitted: 101,
+            rejected_busy: 7,
+            rejected_quota: 3,
+            failovers: 2,
+            tenants: vec![
+                TenantSnapshot {
+                    tenant: "alice".into(),
+                    requests: 50,
+                    samples: 400,
+                    rejected_quota: 3,
+                    rejected_busy: 0,
+                },
+                TenantSnapshot::default(),
+            ],
+        }),
+        ServeReply::Busy { retry_ms: 5 },
+        ServeReply::QuotaExceeded { retry_ms: u32::MAX },
+        ServeReply::Error { retryable: true, message: "device 1 stopped".into() },
+    ]
+}
+
+fn every_command(rng: &mut Rng) -> Vec<Command> {
+    vec![
+        Command::LoadProgram(MemoryImage { bytes: (0..64u8).collect() }),
+        Command::StartProgram { id: 3 },
+        Command::WriteMessage { slot: 7, msg: awkward_msg(rng, 4) },
+        Command::WriteState { slot: 1, a: awkward_matrix(rng, 4, 4) },
+        Command::ReadMessage { slot: 0 },
+        Command::Status,
+    ]
+}
+
+fn every_device_reply(rng: &mut Rng) -> Vec<Reply> {
+    vec![
+        Reply::Ok,
+        Reply::Loaded { instrs: 4096 },
+        Reply::Finished(RunStats {
+            cycles: u64::MAX,
+            instructions: 1,
+            datapath_cycles: 2,
+            sections: 3,
+        }),
+        Reply::Message(awkward_msg(rng, 4)),
+        Reply::Status { state: FsmState::Idle, cycles: 0 },
+        Reply::Status { state: FsmState::Running, cycles: 17 },
+        Reply::Status { state: FsmState::Done, cycles: 260 },
+        Reply::Error("bad slot".into()),
+    ]
+}
+
+/// Assert the three codec properties for one (encode, decode) pair.
+fn check_codec<T: PartialEq + std::fmt::Debug>(
+    value: &T,
+    encode: impl Fn(&T) -> Vec<u8>,
+    decode: impl Fn(&[u8]) -> Result<T, WireError>,
+    label: &str,
+) {
+    let bytes = encode(value);
+    // 1) value round trip + byte-identical re-encode (true bit-exactness)
+    let back = decode(&bytes).unwrap_or_else(|e| panic!("{label}: decode failed: {e}"));
+    assert_eq!(&back, value, "{label}: value changed over the wire");
+    assert_eq!(encode(&back), bytes, "{label}: re-encode is not byte-identical");
+    // 2) every strict prefix errors, never panics, never mis-decodes
+    for cut in 0..bytes.len() {
+        assert!(decode(&bytes[..cut]).is_err(), "{label}: prefix of {cut} bytes decoded");
+    }
+    // 3) trailing garbage is rejected
+    let mut extended = bytes;
+    extended.push(0xAA);
+    assert_eq!(
+        decode(&extended),
+        Err(WireError::Trailing { extra: 1 }),
+        "{label}: trailing byte accepted"
+    );
+}
+
+#[test]
+fn every_serve_request_round_trips_bit_exactly() {
+    let mut rng = Rng::new(11);
+    for req in every_request(&mut rng) {
+        check_codec(&req, encode_request, decode_request, &format!("{req:?}"));
+    }
+}
+
+#[test]
+fn every_serve_reply_round_trips_bit_exactly() {
+    let mut rng = Rng::new(13);
+    for reply in every_reply(&mut rng) {
+        check_codec(&reply, encode_reply, decode_reply, &format!("{reply:?}"));
+    }
+}
+
+#[test]
+fn every_device_command_and_reply_round_trips_bit_exactly() {
+    let mut rng = Rng::new(17);
+    for cmd in every_command(&mut rng) {
+        check_codec(&cmd, encode_command, decode_command, &format!("{cmd:?}"));
+    }
+    for reply in every_device_reply(&mut rng) {
+        check_codec(
+            &reply,
+            encode_device_reply,
+            decode_device_reply,
+            &format!("{reply:?}"),
+        );
+    }
+}
+
+#[test]
+fn checkpoint_image_round_trips_and_validates() {
+    let mut rng = Rng::new(19);
+    let ckpt = StreamCheckpoint {
+        stream_name: "rls_channel_stream".into(),
+        samples: 12345,
+        state: awkward_msg(&mut rng, 4),
+        boundaries: vec![awkward_msg(&mut rng, 4), awkward_msg(&mut rng, 2)],
+    };
+    let bytes = encode_checkpoint(&ckpt);
+    let back = decode_checkpoint(&bytes).unwrap();
+    assert_eq!(back.stream_name, ckpt.stream_name);
+    assert_eq!(back.samples, ckpt.samples);
+    assert_eq!(back.state, ckpt.state);
+    assert_eq!(back.boundaries, ckpt.boundaries);
+    assert_eq!(encode_checkpoint(&back), bytes, "re-encode must be byte-identical");
+    for cut in 0..bytes.len() {
+        assert!(decode_checkpoint(&bytes[..cut]).is_err(), "prefix of {cut} bytes decoded");
+    }
+
+    // corrupt magic and unknown version are typed rejections
+    let mut bad_magic = bytes.clone();
+    bad_magic[0] = b'X';
+    assert!(matches!(
+        decode_checkpoint(&bad_magic),
+        Err(WireError::BadTag { what: "checkpoint magic", .. })
+    ));
+    let mut bad_version = bytes;
+    bad_version[4] = 99;
+    assert_eq!(
+        decode_checkpoint(&bad_version),
+        Err(WireError::BadTag { what: "checkpoint version", tag: 99 })
+    );
+}
+
+#[test]
+fn nan_payloads_survive_bitwise_even_without_equality() {
+    // NaN breaks PartialEq, so pin it at the byte level instead
+    let msg = GaussMessage {
+        mean: vec![c64::new(f64::NAN, -0.0)],
+        cov: CMatrix::zeros(1, 1),
+    };
+    let req = ServeRequest::CnUpdate { x: msg.clone(), y: msg.clone(), a: CMatrix::zeros(1, 1) };
+    let bytes = encode_request(&req);
+    let back = decode_request(&bytes).unwrap();
+    assert_eq!(encode_request(&back), bytes, "NaN bits must survive the round trip");
+    match back {
+        ServeRequest::CnUpdate { x, .. } => {
+            assert_eq!(x.mean[0].re.to_bits(), f64::NAN.to_bits());
+            assert_eq!(x.mean[0].im.to_bits(), (-0.0f64).to_bits());
+        }
+        other => panic!("wrong variant: {other:?}"),
+    }
+}
+
+#[test]
+fn frames_at_the_cap_pass_and_one_byte_over_fails() {
+    // exactly MAX_FRAME is legal end to end
+    let payload = vec![0x5Au8; MAX_FRAME];
+    let mut sink = Vec::new();
+    write_frame(&mut sink, &payload).unwrap();
+    let back = read_frame(&mut sink.as_slice()).unwrap().unwrap();
+    assert_eq!(back.len(), MAX_FRAME);
+    assert_eq!(back, payload);
+    // one byte over is rejected on both sides without allocating
+    assert!(write_frame(&mut Vec::new(), &vec![0u8; MAX_FRAME + 1]).is_err());
+    let mut corrupt = ((MAX_FRAME + 1) as u32).to_le_bytes().to_vec();
+    corrupt.extend_from_slice(&[0, 0, 0]);
+    assert!(read_frame(&mut corrupt.as_slice()).is_err());
+}
+
+#[test]
+fn hostile_length_prefixes_cannot_force_allocation() {
+    // a payload claiming a huge vector must fail fast: the decoder
+    // validates element counts against the remaining bytes
+    let mut evil = vec![2u8]; // CnUpdate tag
+    evil.extend_from_slice(&u32::MAX.to_le_bytes()); // mean length: 4 billion
+    let err = decode_request(&evil).unwrap_err();
+    assert!(
+        matches!(err, WireError::Truncated { .. } | WireError::FrameTooLarge { .. }),
+        "{err:?}"
+    );
+}
