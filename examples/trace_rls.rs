@@ -1,0 +1,78 @@
+//! Telemetry quickstart: trace one streamed RLS request end to end.
+//!
+//! Boots [`FgpServe`] with telemetry enabled, connects a *traced*
+//! client sharing the server's [`Telemetry`] handle, and drives the
+//! paper's Fig. 6 recursive-least-squares workload as a sticky stream.
+//! Every client call mints a `TraceContext` that rides the wire's trace
+//! envelope through admission, the engine room, and the pinned device,
+//! so one request reads as one span tree — printed here as a flame
+//! summary and exported as Chrome trace-event JSON
+//! (`trace_rls.trace.json`, loadable in `chrome://tracing` or
+//! Perfetto). Device spans are real FGP cycle counts rescaled onto the
+//! wall clock at the paper's 130 MHz.
+//!
+//! Run: `cargo run --release --example trace_rls`
+
+use anyhow::Result;
+use fgp_repro::apps::rls::RlsProblem;
+use fgp_repro::obs::{chrome_trace, flame_summary, TelemetryConfig};
+use fgp_repro::serve::{FgpServe, ServeClient, ServeConfig, StreamMode};
+
+fn main() -> Result<()> {
+    // --- server side: same front door, telemetry switched on
+    let srv = FgpServe::start(ServeConfig {
+        devices: 2,
+        telemetry: TelemetryConfig::on(),
+        ..ServeConfig::default()
+    })?;
+    println!("serving on {} (wire v2, telemetry on)", srv.addr());
+
+    // --- client side: share the server's telemetry handle so client
+    // and server spans land in one ring, on one timeline
+    let problem = RlsProblem::synthetic(4, 32, 0.01, 42);
+    let mut client = ServeClient::connect_traced(srv.addr(), "rls-demo", srv.telemetry())?;
+    let (stream, device) =
+        client.open_stream("fig6-rls", StreamMode::Sticky, problem.prior.clone())?;
+    println!("stream {stream} pinned to device {device}");
+
+    let sections: Vec<_> = problem
+        .observations
+        .iter()
+        .cloned()
+        .zip(problem.regressors.iter().cloned())
+        .collect();
+
+    // one push; its trace id is the key into the span ring
+    client.push(stream, sections)?;
+    let push_trace = client.last_trace_id();
+    loop {
+        let st = client.poll(stream)?;
+        if st.samples_done == 32 && st.pending == 0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    let closed = client.close_stream(stream)?;
+    let rel_mse = problem.rel_mse(&closed.state.mean);
+    println!("closed: {} samples, rel MSE {rel_mse:.3e}", closed.samples_done);
+
+    // --- the push as a flame: client -> serve -> queue -> device -> cycles
+    let spans = srv.telemetry().spans().snapshot();
+    print!("\n{}", flame_summary(&spans, push_trace));
+
+    // --- the whole ring as a Chrome trace (every request on one timeline)
+    let json = chrome_trace(&spans);
+    std::fs::write("trace_rls.trace.json", &json)?;
+    println!("\nwrote trace_rls.trace.json ({} spans) — load it in chrome://tracing", spans.len());
+
+    // --- the unified registry travels the wire in the same session
+    let stats = client.stats()?;
+    for name in ["engine.cache_hit", "engine.cache_miss", "serve.admitted"] {
+        if let Some(v) = stats.telemetry.counter(name) {
+            println!("{name} = {v}");
+        }
+    }
+
+    srv.shutdown();
+    Ok(())
+}

@@ -1,0 +1,210 @@
+//! E17 — telemetry overhead and export: the observability tier's
+//! regression gate.
+//!
+//! Three phases:
+//!
+//! 1. **span µbench** — the raw cost of recording one span into the
+//!    lock-free ring, and the cost of the *disabled* hook (a single
+//!    branch — the price every instrumented hot path pays when
+//!    telemetry is off).
+//! 2. **serve overhead** — the same one-shot workload (identical seeds)
+//!    driven through two TCP servers, telemetry on vs. off. The outputs
+//!    must be **bitwise identical** (invariant 7) and the enabled/
+//!    disabled wall-clock ratio must stay under `MAX_OVERHEAD_RATIO`.
+//! 3. **export** — a fresh traced server serves one request; its span
+//!    tree is exported as Chrome trace-event JSON to
+//!    **`BENCH_obs_trace.json`** (structurally validated in CI by
+//!    `scripts/check_trace_json.py`) and printed as a flame summary.
+//!
+//! Emits **`BENCH_obs.json`** (validated in CI against
+//! `scripts/bench_obs.schema.json`, whose `maximum` on
+//! `overhead_ratio` re-pins the gate at the schema layer) and **exits
+//! non-zero** if outputs diverge, the overhead gate trips, the disabled
+//! server records any span, or the exported trace is missing a layer.
+//!
+//! Run: `cargo bench --bench obs_overhead [-- --smoke]`
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use fgp_repro::benchutil::{banner, fmt_dur, json_num, json_obj, json_str, time_fn, write_json};
+use fgp_repro::gmp::matrix::{c64, CMatrix};
+use fgp_repro::gmp::message::GaussMessage;
+use fgp_repro::obs::{chrome_trace, flame_summary, Telemetry, TelemetryConfig, TraceContext};
+use fgp_repro::serve::{FgpServe, ServeClient, ServeConfig};
+use fgp_repro::testutil::Rng;
+
+/// Hard ceiling on (telemetry on) / (telemetry off) serve wall time.
+/// The request path is a TCP round trip plus a device dispatch; a span
+/// is a clock read and one CAS, so even generous CI jitter fits here.
+const MAX_OVERHEAD_RATIO: f64 = 1.5;
+
+fn msg(rng: &mut Rng, n: usize) -> GaussMessage {
+    GaussMessage::new(
+        (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+        CMatrix::random_psd(rng, n, 1.0).scale(0.15),
+    )
+}
+
+fn sample(rng: &mut Rng, n: usize) -> (GaussMessage, CMatrix) {
+    (msg(rng, n), CMatrix::random(rng, n, n).scale(0.3))
+}
+
+/// Mean cost of one enabled span record (ring write + clock read).
+fn enabled_span_ns(iters: u32) -> f64 {
+    let tel = Telemetry::new(TelemetryConfig::on());
+    let ctx = TraceContext::mint();
+    let t = time_fn(iters / 10, iters, || {
+        let t0 = tel.now_ns();
+        tel.span(ctx.child(), ctx.span_id, "bench.span", "bench", t0, 1);
+    });
+    t.mean.as_nanos() as f64
+}
+
+/// Mean cost of the disabled hook — the branch instrumented call sites
+/// pay when the master switch is off.
+fn disabled_span_ns(iters: u32) -> f64 {
+    let tel = Telemetry::new(TelemetryConfig::default());
+    let ctx = TraceContext::mint();
+    let t = time_fn(iters / 10, iters, || {
+        if tel.enabled() {
+            let t0 = tel.now_ns();
+            tel.span(ctx.child(), ctx.span_id, "bench.span", "bench", t0, 1);
+        }
+        std::hint::black_box(&tel);
+    });
+    t.mean.as_nanos() as f64
+}
+
+/// Drive `requests` identical one-shots through a server and return
+/// (wall time, outputs, server). Inputs are pre-generated and a warmup
+/// request populates the program cache, so the timed loop measures the
+/// steady-state request path only.
+fn serve_wall(
+    telemetry: TelemetryConfig,
+    requests: usize,
+) -> Result<(Duration, Vec<GaussMessage>, FgpServe)> {
+    let srv = FgpServe::start(ServeConfig { telemetry, ..ServeConfig::default() })?;
+    let mut client = ServeClient::connect_traced(srv.addr(), "bench", srv.telemetry())?;
+    let mut rng = Rng::new(7777);
+    let inputs: Vec<_> = (0..requests)
+        .map(|_| {
+            let x = msg(&mut rng, 4);
+            let (y, a) = sample(&mut rng, 4);
+            (x, y, a)
+        })
+        .collect();
+    let (wx, wy, wa) = inputs[0].clone();
+    client.cn_update(wx, wy, wa)?;
+    let t0 = Instant::now();
+    let mut outs = Vec::with_capacity(requests);
+    for (x, y, a) in inputs {
+        outs.push(client.cn_update(x, y, a)?);
+    }
+    Ok((t0.elapsed(), outs, srv))
+}
+
+/// Phase 3: one traced request on a fresh server, exported.
+fn export_one_trace() -> Result<(String, String, usize)> {
+    let srv = FgpServe::start(ServeConfig {
+        telemetry: TelemetryConfig::on(),
+        ..ServeConfig::default()
+    })?;
+    let mut client = ServeClient::connect_traced(srv.addr(), "export", srv.telemetry())?;
+    let mut rng = Rng::new(11);
+    let x = msg(&mut rng, 4);
+    let (y, a) = sample(&mut rng, 4);
+    client.cn_update(x, y, a)?;
+    let trace = client.last_trace_id();
+    let spans: Vec<_> = srv
+        .telemetry()
+        .spans()
+        .snapshot()
+        .into_iter()
+        .filter(|s| s.trace_id == trace)
+        .collect();
+    Ok((chrome_trace(&spans), flame_summary(&spans, trace), spans.len()))
+}
+
+fn main() -> Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (span_iters, requests) = if smoke { (20_000u32, 64usize) } else { (200_000, 512) };
+
+    banner("span µbench: ring record vs. disabled hook");
+    let on_ns = enabled_span_ns(span_iters);
+    let off_ns = disabled_span_ns(span_iters);
+    println!("enabled span record: {on_ns:.1} ns | disabled hook: {off_ns:.1} ns");
+
+    banner("serve overhead: identical workload, telemetry on vs. off");
+    let (wall_on, outs_on, srv_on) = serve_wall(TelemetryConfig::on(), requests)?;
+    let (wall_off, outs_off, srv_off) = serve_wall(TelemetryConfig::default(), requests)?;
+    let ratio = wall_on.as_secs_f64() / wall_off.as_secs_f64().max(1e-9);
+    let bitwise = outs_on == outs_off;
+    let spans_on = srv_on.telemetry().spans().snapshot().len();
+    let spans_off = srv_off.telemetry().spans().snapshot().len();
+    let dropped_on = srv_on.telemetry().spans().dropped();
+    println!(
+        "{requests} requests: on {} | off {} | ratio {ratio:.3} (gate {MAX_OVERHEAD_RATIO}) | \
+         bitwise {bitwise}",
+        fmt_dur(wall_on),
+        fmt_dur(wall_off)
+    );
+    println!("spans recorded: on {spans_on} (dropped {dropped_on}) | off {spans_off}");
+
+    banner("export: one request, client to device cycles");
+    let (chrome, flame, trace_spans) = export_one_trace()?;
+    write_json("BENCH_obs_trace.json", &chrome)?;
+    print!("{flame}");
+    println!("wrote BENCH_obs_trace.json ({trace_spans} spans)");
+    let full_chain = ["client.request", "serve.cn_update", "farm.device", "engine.execute", "fgp.run"]
+        .iter()
+        .all(|name| chrome.contains(&format!("\"name\":\"{name}\"")));
+
+    // --- machine-readable trajectory
+    let doc = json_obj(&[
+        ("bench", json_str("obs_overhead")),
+        ("mode", json_str(if smoke { "smoke" } else { "full" })),
+        ("requests", requests.to_string()),
+        ("span_record_ns", json_num(on_ns)),
+        ("disabled_hook_ns", json_num(off_ns)),
+        ("wall_on_s", json_num(wall_on.as_secs_f64())),
+        ("wall_off_s", json_num(wall_off.as_secs_f64())),
+        ("overhead_ratio", json_num(ratio)),
+        ("max_overhead_ratio", json_num(MAX_OVERHEAD_RATIO)),
+        ("bitwise_identical", bitwise.to_string()),
+        ("spans_on", spans_on.to_string()),
+        ("spans_dropped_on", dropped_on.to_string()),
+        ("spans_off", spans_off.to_string()),
+        ("trace_spans", trace_spans.to_string()),
+        ("trace_full_chain", full_chain.to_string()),
+    ]);
+    write_json("BENCH_obs.json", &doc)?;
+    println!("\nwrote BENCH_obs.json");
+
+    // --- hard gates: the observability tier's acceptance criteria
+    let mut failed = false;
+    if !bitwise {
+        eprintln!("GATE: telemetry changed served outputs (invariant 7 violated)");
+        failed = true;
+    }
+    if ratio > MAX_OVERHEAD_RATIO {
+        eprintln!("GATE: telemetry overhead ratio {ratio:.3} > {MAX_OVERHEAD_RATIO}");
+        failed = true;
+    }
+    if spans_off != 0 {
+        eprintln!("GATE: disabled server recorded {spans_off} spans");
+        failed = true;
+    }
+    if spans_on == 0 {
+        eprintln!("GATE: enabled server recorded no spans - the bench measured nothing");
+        failed = true;
+    }
+    if !full_chain {
+        eprintln!("GATE: exported trace is missing a layer of the client-to-device chain");
+        failed = true;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -54,6 +54,7 @@ use crate::engine::{
 use crate::fgp::FgpConfig;
 use crate::gmp::matrix::CMatrix;
 use crate::gmp::message::GaussMessage;
+use crate::obs::{Telemetry, TelemetryConfig, TraceContext};
 
 use super::backend::{Backend, BackendKind, CnRequestData, WorkloadRequest};
 
@@ -137,6 +138,9 @@ impl DeviceResp {
 struct DeviceMsg {
     req: WorkloadRequest,
     resp: DeviceResp,
+    /// Parent span for this request's device-side work (`None` when the
+    /// caller is untraced — the common in-process path).
+    ctx: Option<TraceContext>,
 }
 
 /// A live device: its command channel and thread handle.
@@ -162,6 +166,10 @@ pub struct FgpFarm {
     /// device re-installs the same cache entry the boot devices got.
     probe: WorkloadRequest,
     cn_program: Arc<CompiledProgram>,
+    /// Shared telemetry handle every device session reports into (a
+    /// disabled default unless [`FgpFarm::start_with_telemetry`] was
+    /// used); revived devices re-attach it.
+    tel: Arc<Telemetry>,
 }
 
 fn spawn_device(
@@ -170,24 +178,38 @@ fn spawn_device(
     probe: WorkloadRequest,
     program: Arc<CompiledProgram>,
     cycles: Arc<AtomicU64>,
+    tel: Arc<Telemetry>,
     rx: Receiver<DeviceMsg>,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
         .name(format!("fgp-farm-{d}"))
         .spawn(move || {
             let mut session = Session::fgp_sim(config);
+            session.set_telemetry(Arc::clone(&tel));
             session.install(&probe.graph, &probe.schedule, &probe.opts, program);
             // a kill drops the sender: the loop finishes the request it
             // already received (its reply still reaches the client),
             // then exits — queued-but-unreceived requests are dropped,
             // which the submitter observes as a retryable DeviceStopped
             while let Ok(msg) = rx.recv() {
+                // traced requests get a "farm.device" span; the session
+                // hangs its engine/fgp spans underneath it
+                let dev_ctx = match msg.ctx {
+                    Some(ctx) if tel.enabled() => Some((ctx.child(), ctx.span_id)),
+                    _ => None,
+                };
+                session.set_trace_context(dev_ctx.map(|(c, _)| c));
+                let t0 = if dev_ctx.is_some() { tel.now_ns() } else { 0 };
                 let result = session
                     .dispatch(&msg.req.graph, &msg.req.schedule, &msg.req.inputs, &msg.req.opts)
-                    .map(|d| {
-                        cycles.fetch_add(d.exec.stats.cycles, Ordering::Relaxed);
-                        d.exec
+                    .map(|disp| {
+                        cycles.fetch_add(disp.exec.stats.cycles, Ordering::Relaxed);
+                        disp.exec
                     });
+                if let Some((child, parent)) = dev_ctx {
+                    tel.span(child, parent, "farm.device", "farm", t0, d as u64);
+                    session.set_trace_context(None);
+                }
                 msg.resp.send(result);
             }
         })
@@ -196,8 +218,27 @@ fn spawn_device(
 
 impl FgpFarm {
     /// Boot `count` devices, each with the CN program pre-installed in
-    /// its session cache (compiled once, shared via `Arc`).
+    /// its session cache (compiled once, shared via `Arc`). Telemetry is
+    /// off; see [`FgpFarm::start_with_telemetry`].
     pub fn start(count: usize, config: FgpConfig, policy: RoutePolicy) -> Result<Self> {
+        Self::start_with_telemetry(
+            count,
+            config,
+            policy,
+            Arc::new(Telemetry::new(TelemetryConfig::default())),
+        )
+    }
+
+    /// [`FgpFarm::start`] with a shared [`Telemetry`] handle: device
+    /// sessions feed its registry counters, and traced submits
+    /// (`*_traced`) hang per-device span trees under the caller's
+    /// context. With `tel` disabled this is exactly `start`.
+    pub fn start_with_telemetry(
+        count: usize,
+        config: FgpConfig,
+        policy: RoutePolicy,
+        tel: Arc<Telemetry>,
+    ) -> Result<Self> {
         if count == 0 {
             return Err(anyhow!("farm needs at least one device"));
         }
@@ -221,6 +262,7 @@ impl FgpFarm {
                 probe.clone(),
                 Arc::clone(&cn_program),
                 Arc::clone(&cycles),
+                Arc::clone(&tel),
                 rx,
             );
             devices.push(DeviceSlot {
@@ -228,7 +270,12 @@ impl FgpFarm {
                 cycles,
             });
         }
-        Ok(FgpFarm { devices, policy, next: AtomicUsize::new(0), config, probe, cn_program })
+        Ok(FgpFarm { devices, policy, next: AtomicUsize::new(0), config, probe, cn_program, tel })
+    }
+
+    /// The farm's shared telemetry handle.
+    pub fn telemetry(&self) -> &Arc<Telemetry> {
+        &self.tel
     }
 
     /// Number of device slots in the farm (live or not).
@@ -300,6 +347,7 @@ impl FgpFarm {
             self.probe.clone(),
             Arc::clone(&self.cn_program),
             Arc::clone(&slot.cycles),
+            Arc::clone(&self.tel),
             rx,
         );
         *guard = Some(DeviceLink { tx, handle });
@@ -325,7 +373,13 @@ impl FgpFarm {
 
     /// Dispatch one workload request; blocks for the reply.
     pub fn run(&self, req: WorkloadRequest) -> Result<Execution> {
-        let (rrx, idx) = self.submit_workload(req);
+        self.run_traced(req, None)
+    }
+
+    /// [`FgpFarm::run`] carrying a parent [`TraceContext`] so the device
+    /// records its span tree under the caller's request.
+    pub fn run_traced(&self, req: WorkloadRequest, ctx: Option<TraceContext>) -> Result<Execution> {
+        let (rrx, idx) = self.submit_workload_traced(req, ctx);
         recv_exec(&rrx, idx)
     }
 
@@ -342,8 +396,17 @@ impl FgpFarm {
         &self,
         req: WorkloadRequest,
     ) -> (Receiver<Result<Execution>>, usize) {
+        self.submit_workload_traced(req, None)
+    }
+
+    /// [`FgpFarm::submit_workload`] with an optional parent trace context.
+    pub fn submit_workload_traced(
+        &self,
+        req: WorkloadRequest,
+        ctx: Option<TraceContext>,
+    ) -> (Receiver<Result<Execution>>, usize) {
         match self.pick(&[]) {
-            Ok(idx) => (self.submit_to(idx, req), idx),
+            Ok(idx) => (self.submit_to_traced(idx, req, ctx), idx),
             Err(e) => {
                 let (rtx, rrx) = mpsc::channel();
                 let _ = rtx.send(Err(e.into()));
@@ -365,7 +428,9 @@ impl FgpFarm {
             }
         };
         match WorkloadRequest::cn(&req) {
-            Ok(wr) => self.send_msg(idx, DeviceMsg { req: wr, resp: DeviceResp::Cn(rtx) }),
+            Ok(wr) => {
+                self.send_msg(idx, DeviceMsg { req: wr, resp: DeviceResp::Cn(rtx), ctx: None })
+            }
             // request construction failed client-side; the routed device
             // was never reached but the index reflects the routing choice
             Err(e) => {
@@ -419,8 +484,20 @@ impl FgpFarm {
     /// reply channel — the same error-via-channel contract every async
     /// submit here uses.
     pub fn submit_to(&self, idx: usize, req: WorkloadRequest) -> Receiver<Result<Execution>> {
+        self.submit_to_traced(idx, req, None)
+    }
+
+    /// [`FgpFarm::submit_to`] carrying a parent [`TraceContext`]: the
+    /// device thread records a `farm.device` span under it and hands the
+    /// context down into its session's engine/device spans.
+    pub fn submit_to_traced(
+        &self,
+        idx: usize,
+        req: WorkloadRequest,
+        ctx: Option<TraceContext>,
+    ) -> Receiver<Result<Execution>> {
         let (rtx, rrx) = mpsc::channel();
-        self.send_msg(idx, DeviceMsg { req, resp: DeviceResp::Exec(rtx) });
+        self.send_msg(idx, DeviceMsg { req, resp: DeviceResp::Exec(rtx), ctx });
         rrx
     }
 

@@ -55,7 +55,13 @@ impl Histogram {
         Duration::from_nanos(self.sum_ns.load(Ordering::Relaxed) / c)
     }
 
-    /// Upper bound of the bucket containing quantile `q` (0..1].
+    /// Midpoint of the bucket containing quantile `q` (0..1].
+    ///
+    /// Bucket `i` covers `[2^i, 2^(i+1) - 1]` ns. The midpoint halves
+    /// the worst-case bias of the old upper-bound convention (which
+    /// reported ~2µs for a bucket full of 1µs samples — a 2× error at
+    /// the low end) and stays monotone in `q`, so snapshot quantile
+    /// ordering (p50 ≤ p95 ≤ p99) is preserved.
     pub fn quantile(&self, q: f64) -> Duration {
         let total = self.count();
         if total == 0 {
@@ -66,10 +72,27 @@ impl Histogram {
         for (i, b) in self.buckets.iter().enumerate() {
             seen += b.load(Ordering::Relaxed);
             if seen >= target {
-                return Duration::from_nanos(1u64 << (i + 1).min(63));
+                let lower = 1u64 << i;
+                let upper = if i == 63 { u64::MAX } else { (1u64 << (i + 1)) - 1 };
+                return Duration::from_nanos(lower + (upper - lower) / 2);
             }
         }
         Duration::from_nanos(u64::MAX)
+    }
+
+    /// Fold `other`'s samples into this histogram — bucket-wise atomic
+    /// adds, so cross-device aggregation (each farm device keeps local
+    /// histograms; the obs registry merges them at snapshot time) needs
+    /// no locks and loses no samples.
+    pub fn merge(&self, other: &Histogram) {
+        for (b, o) in self.buckets.iter().zip(other.buckets.iter()) {
+            let v = o.load(Ordering::Relaxed);
+            if v != 0 {
+                b.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum_ns.fetch_add(other.sum_ns.load(Ordering::Relaxed), Ordering::Relaxed);
     }
 
     /// Clear all buckets and counters.
@@ -85,7 +108,7 @@ impl Histogram {
 /// A point-in-time copy of a [`Metrics`] bundle's latency distribution
 /// and completion counters: the SLO row the serve tier ships over the
 /// wire in a `STATS` reply and the bench layer writes to
-/// `BENCH_serving.json`. Quantiles are log2-bucket upper bounds (see
+/// `BENCH_serving.json`. Quantiles are log2-bucket midpoints (see
 /// [`Histogram::quantile`]).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct MetricsSnapshot {
@@ -216,6 +239,37 @@ mod tests {
         assert_eq!(s.completed, 20);
         assert!(s.p50_ns <= s.p95_ns && s.p95_ns <= s.p99_ns, "{s:?}");
         assert!(s.mean_ns > 0);
+    }
+
+    #[test]
+    fn quantile_returns_bucket_midpoints() {
+        let h = Histogram::new();
+        for _ in 0..100 {
+            h.record(Duration::from_micros(1)); // 1000 ns → bucket 9 = [512, 1023]
+        }
+        assert_eq!(h.quantile(0.5), Duration::from_nanos(512 + (1023 - 512) / 2));
+        assert_eq!(h.quantile(0.99), h.quantile(0.5), "single-bucket data has flat quantiles");
+        // the smallest bucket [1, 1] is exact
+        let h1 = Histogram::new();
+        h1.record(Duration::from_nanos(1));
+        assert_eq!(h1.quantile(0.5), Duration::from_nanos(1));
+    }
+
+    #[test]
+    fn merge_is_bucketwise_sum() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for _ in 0..10 {
+            a.record(Duration::from_micros(1));
+        }
+        for _ in 0..30 {
+            b.record(Duration::from_micros(100));
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 40);
+        assert_eq!(a.mean(), Duration::from_nanos((10 * 1_000 + 30 * 100_000) / 40));
+        assert!(a.quantile(0.5) <= a.quantile(0.95), "merged quantiles stay ordered");
+        assert!(a.quantile(0.9) > a.quantile(0.1), "both sources visible after merge");
     }
 
     #[test]

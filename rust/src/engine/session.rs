@@ -15,18 +15,20 @@
 
 use std::collections::HashMap;
 use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::compiler::{compile, CompileOptions, CompileStats, CompiledProgram};
-use crate::fgp::{Fgp, FgpConfig, MessageMemory, RunStats, StateMemory};
+use crate::fgp::{Fgp, FgpConfig, MessageMemory, Profiler, RunStats, StateMemory};
 use crate::gmp::graph::StateId;
 use crate::gmp::matrix::CMatrix;
 use crate::gmp::message::GaussMessage;
 use crate::gmp::schedule::StepOp;
 use crate::gmp::{nodes, FactorGraph, MsgId, NodeKind, Schedule};
-use crate::isa::Instr;
+use crate::isa::{Instr, Opcode};
+use crate::obs::{Telemetry, TraceContext};
 use crate::runtime::RuntimeClient;
 
 use super::stream::{
@@ -83,6 +85,12 @@ pub trait Engine {
             1
         }
     }
+
+    /// Attach (or clear) the telemetry handle + parent context for the
+    /// next execution, so the engine can record its internal phases as
+    /// children of the caller's span. Engines without internal phases
+    /// ignore it — telemetry must never change results (invariant 7).
+    fn set_trace(&mut self, _trace: Option<(Arc<Telemetry>, TraceContext)>) {}
 
     /// Execute a model against the bound inputs. `program` is the cached
     /// compiled program when [`Engine::needs_program`] is true (shared
@@ -142,12 +150,16 @@ pub struct FgpSimEngine {
     fgp: Fgp,
     /// Program currently resident in the PM (identity-compared by Arc).
     loaded: Option<Arc<CompiledProgram>>,
+    /// Telemetry handle + parent span for the next run (see
+    /// [`Engine::set_trace`]); attaches the instruction profiler and
+    /// emits per-opcode phase spans when enabled.
+    trace: Option<(Arc<Telemetry>, TraceContext)>,
 }
 
 impl FgpSimEngine {
     /// Engine over a fresh simulator with the given configuration.
     pub fn new(config: FgpConfig) -> Self {
-        FgpSimEngine { fgp: Fgp::new(config), loaded: None }
+        FgpSimEngine { fgp: Fgp::new(config), loaded: None, trace: None }
     }
 
     /// The simulator's configuration.
@@ -188,6 +200,10 @@ impl Engine for FgpSimEngine {
 
     fn needs_program(&self) -> bool {
         true
+    }
+
+    fn set_trace(&mut self, trace: Option<(Arc<Telemetry>, TraceContext)>) {
+        self.trace = trace;
     }
 
     fn device_n(&self) -> Option<usize> {
@@ -324,7 +340,37 @@ impl Engine for FgpSimEngine {
             Some(Instr::Prg { id }) => *id,
             _ => 1,
         };
-        let stats = self.fgp.run_program(id, &mut feed)?;
+        // run_program_profiled(.., None) and run_program are the same
+        // code path, so attaching the profiler cannot change results —
+        // only the per-opcode cycle accounting rides along (invariant 7)
+        let profiling = self.trace.as_ref().map_or(false, |(t, _)| t.enabled());
+        let t0 = self.trace.as_ref().map_or(0, |(t, _)| t.now_ns());
+        let mut prof = if profiling { Some(Profiler::new(0)) } else { None };
+        let stats = self.fgp.run_program_profiled(id, &mut feed, prof.as_mut())?;
+        if let Some(((tel, parent), prof)) = self.trace.as_ref().zip(prof.as_ref()) {
+            // one span for the device run, then its per-opcode phases
+            // rescaled from device cycles onto the wall clock at the
+            // paper's 130 MHz, laid end to end inside the run window
+            let run_ctx = parent.child();
+            tel.span(run_ctx, parent.span_id, "fgp.run", "fgp", t0, stats.cycles);
+            let ns_per_cycle = 1000.0 / crate::paper::FGP_FREQ_MHZ;
+            let mut cursor = t0;
+            for (name, metric, op) in [
+                ("fgp.mma", "fgp.cycles.mma", Opcode::Mma),
+                ("fgp.mms", "fgp.cycles.mms", Opcode::Mms),
+                ("fgp.fad", "fgp.cycles.fad", Opcode::Fad),
+                ("fgp.smm", "fgp.cycles.smm", Opcode::Smm),
+            ] {
+                let s = prof.stats(op);
+                if s.count == 0 {
+                    continue;
+                }
+                tel.registry().add(metric, s.cycles);
+                let dur = (s.cycles as f64 * ns_per_cycle) as u64;
+                tel.span_at(run_ctx.child(), run_ctx.span_id, name, "fgp", cursor, dur, s.cycles);
+                cursor += dur;
+            }
+        }
 
         let outputs = collect_outputs(schedule, |mid| {
             compiled
@@ -574,6 +620,15 @@ pub struct Session {
     cache_capacity: usize,
     hits: u64,
     misses: u64,
+    /// Deployment telemetry handle ([`Session::set_telemetry`]); absent
+    /// on standalone sessions, which then skip every obs hook.
+    telemetry: Option<Arc<Telemetry>>,
+    /// Parent span for the next dispatch ([`Session::set_trace_context`]).
+    trace: Option<TraceContext>,
+    /// Registry counters resolved once at [`Session::set_telemetry`]
+    /// so the dispatch hot path never touches the registry maps.
+    ctr_cache_hit: Option<Arc<AtomicU64>>,
+    ctr_cache_miss: Option<Arc<AtomicU64>>,
 }
 
 impl Session {
@@ -586,7 +641,29 @@ impl Session {
             cache_capacity: DEFAULT_CACHE_CAPACITY,
             hits: 0,
             misses: 0,
+            telemetry: None,
+            trace: None,
+            ctr_cache_hit: None,
+            ctr_cache_miss: None,
         }
+    }
+
+    /// Attach the deployment's shared [`Telemetry`] handle: dispatches
+    /// feed the `engine.cache_hit`/`engine.cache_miss` registry
+    /// counters, and (when spans are enabled *and* a trace context is
+    /// set) record `engine.*` spans with the device's per-opcode phases
+    /// as children.
+    pub fn set_telemetry(&mut self, tel: Arc<Telemetry>) {
+        self.ctr_cache_hit = Some(tel.registry().counter("engine.cache_hit"));
+        self.ctr_cache_miss = Some(tel.registry().counter("engine.cache_miss"));
+        self.telemetry = Some(tel);
+    }
+
+    /// Set (or clear) the parent span the next dispatch should attach
+    /// its spans under — the farm device loop calls this per message
+    /// with the context carried over the wire.
+    pub fn set_trace_context(&mut self, ctx: Option<TraceContext>) {
+        self.trace = ctx;
     }
 
     /// Bound the compiled-program cache (deployment tuning and eviction
@@ -848,13 +925,48 @@ impl Session {
             }
         }
         let (program, compile_stats, cached) = if self.engine.needs_program() {
+            let t0 = match (&self.telemetry, self.trace) {
+                (Some(tel), Some(_)) if tel.enabled() => tel.now_ns(),
+                _ => 0,
+            };
             let (p, cached) = self.lookup_or_compile(graph, schedule, opts)?;
+            if let Some(ctr) = if cached { &self.ctr_cache_hit } else { &self.ctr_cache_miss } {
+                ctr.fetch_add(1, Ordering::Relaxed);
+            }
+            if let (Some(tel), Some(ctx)) = (&self.telemetry, self.trace) {
+                if tel.enabled() {
+                    let name = if cached { "engine.cache_hit" } else { "engine.compile" };
+                    let instrs = p.stats.instrs_compressed as u64;
+                    tel.span(ctx.child(), ctx.span_id, name, "engine", t0, instrs);
+                }
+            }
             let stats = p.stats;
             (Some(p), Some(stats), cached)
         } else {
             (None, None, false)
         };
-        let exec = self.engine.execute(graph, schedule, program.as_ref(), inputs)?;
+        // Hand the engine a child context for the duration of this
+        // dispatch only; cleared afterwards so a later untraced dispatch
+        // can't attach spans to a stale request.
+        let exec_ctx = match (&self.telemetry, self.trace) {
+            (Some(tel), Some(ctx)) if tel.enabled() => {
+                let child = ctx.child();
+                self.engine.set_trace(Some((Arc::clone(tel), child)));
+                Some((child, ctx.span_id, tel.now_ns()))
+            }
+            _ => {
+                self.engine.set_trace(None);
+                None
+            }
+        };
+        let exec = self.engine.execute(graph, schedule, program.as_ref(), inputs);
+        if exec_ctx.is_some() {
+            self.engine.set_trace(None);
+        }
+        let exec = exec?;
+        if let (Some(tel), Some((child, parent, t0))) = (&self.telemetry, exec_ctx) {
+            tel.span(child, parent, "engine.execute", "engine", t0, exec.stats.cycles);
+        }
         Ok(Dispatch { exec, compile_stats, cached })
     }
 

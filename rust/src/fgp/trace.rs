@@ -54,7 +54,7 @@ impl Profiler {
         self.per_opcode[idx].cycles += cycles;
         if self.records.len() < self.capacity {
             self.records.push(TraceRecord { addr, start_cycle, cycles, instr: instr.clone() });
-        } else if self.capacity > 0 {
+        } else {
             self.dropped += 1;
         }
     }
@@ -79,7 +79,10 @@ impl Profiler {
         &self.records
     }
 
-    /// Records discarded after the capacity filled.
+    /// Records not retained — the capacity filled, or zero-capacity
+    /// profile-only mode. The accounting invariant
+    /// `records().len() + dropped() == total_instructions()` holds for
+    /// every capacity (pinned by `bounded_capture_accounts_for_every_record`).
     pub fn dropped(&self) -> u64 {
         self.dropped
     }
@@ -126,9 +129,13 @@ impl fmt::Display for Profiler {
                 100.0 * s.cycles as f64 / total as f64
             )?;
         }
-        if self.dropped > 0 {
-            writeln!(f, "(trace truncated: {} records dropped)", self.dropped)?;
-        }
+        writeln!(
+            f,
+            "trace: {} retained, {} dropped ({} instructions recorded)",
+            self.records.len(),
+            self.dropped,
+            self.total_instructions()
+        )?;
         Ok(())
     }
 }
@@ -171,6 +178,24 @@ mod tests {
         assert_eq!(p.records().len(), 2);
         assert_eq!(p.dropped(), 3);
         assert_eq!(p.total_instructions(), 5); // profiling still complete
+    }
+
+    #[test]
+    fn bounded_capture_accounts_for_every_record() {
+        for capacity in [0usize, 2, 8] {
+            let mut p = Profiler::new(capacity);
+            for i in 0..5 {
+                p.record(i, i as u64, 1, &mma());
+            }
+            assert_eq!(
+                p.records().len() as u64 + p.dropped(),
+                p.total_instructions(),
+                "retained + dropped must equal recorded at capacity {capacity}"
+            );
+            let text = format!("{p}");
+            assert!(text.contains("retained"), "report must expose the accounting: {text}");
+            assert!(text.contains(&format!("{} dropped", p.dropped())));
+        }
     }
 
     #[test]

@@ -25,7 +25,10 @@
 //!   (the network serving tier: a std-only TCP front door with
 //!   per-tenant admission control, explicit backpressure, bitwise
 //!   stream checkpoint/failover across farm members, and wire-exported
-//!   SLO metrics), [`gbp`]
+//!   SLO metrics), [`obs`] (end-to-end telemetry: trace contexts carried
+//!   through the wire codec and across every layer, a lock-free span
+//!   ring, a unified metrics registry, and Chrome-trace/flame
+//!   exporters — off by default, bitwise-inert when disabled), [`gbp`]
 //!   (loopy Gaussian belief propagation over cyclic graphs, every inner
 //!   update dispatched through the engine surface), [`nonlinear`]
 //!   (pluggable EKF/sigma-point linearizers and iterated
@@ -89,6 +92,7 @@ pub mod gmp;
 pub mod isa;
 pub mod model;
 pub mod nonlinear;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod testutil;

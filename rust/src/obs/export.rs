@@ -1,0 +1,217 @@
+//! Exporters: Chrome trace-event JSON and a per-request flame summary.
+//!
+//! [`chrome_trace`] emits the Trace Event Format (the JSON that
+//! `chrome://tracing` / Perfetto load): every [`SpanRecord`] becomes a
+//! complete event (`ph: "X"`) with microsecond timestamps, one row
+//! (`tid`) per recording layer, and the trace/span/parent ids in
+//! `args` so the tree is recoverable in the UI. Device cycle spans are
+//! recorded pre-rescaled onto the wall clock (cycles × 1/130 MHz — see
+//! `FgpSimEngine`), so a compiled program's MMA/FAD phases render
+//! inside the serving span that dispatched them.
+//!
+//! [`flame_summary`] is the terminal-sized version: one request's span
+//! tree, indented, durations in microseconds — the "why was this chunk
+//! slow" answer without leaving the shell.
+//!
+//! Both are hand-rolled JSON/text over `std::fmt` — the vendored set
+//! has no serializer and the event shape is fixed.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use super::span::SpanRecord;
+
+/// Escape a string for a JSON string literal.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Microseconds with nanosecond precision, as a JSON number.
+fn us(ns: u64) -> String {
+    format!("{}.{:03}", ns / 1000, ns % 1000)
+}
+
+/// Render spans as Chrome trace-event JSON (`{"traceEvents": [...]}`).
+///
+/// One `ph: "M"` thread-name metadata event per layer (rows appear in
+/// first-recorded order), then one `ph: "X"` complete event per span.
+/// Load the returned string in `chrome://tracing`, Perfetto, or check
+/// it structurally with `scripts/check_trace_json.py`.
+pub fn chrome_trace(spans: &[SpanRecord]) -> String {
+    // rows: one tid per layer, in order of first appearance
+    let mut tids: BTreeMap<&'static str, u64> = BTreeMap::new();
+    let mut order: Vec<&'static str> = Vec::new();
+    for s in spans {
+        if !tids.contains_key(s.layer) {
+            tids.insert(s.layer, order.len() as u64 + 1);
+            order.push(s.layer);
+        }
+    }
+    let mut out = String::from("{\"traceEvents\":[");
+    let mut first = true;
+    for layer in &order {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        let _ = write!(
+            out,
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{},\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            tids[layer],
+            esc(layer)
+        );
+    }
+    for s in spans {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        let _ = write!(
+            out,
+            "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"pid\":1,\"tid\":{},\
+             \"ts\":{},\"dur\":{},\"args\":{{\
+             \"trace_id\":\"{:#018x}\",\"span_id\":\"{:#018x}\",\
+             \"parent_id\":\"{:#018x}\",\"a0\":{}}}}}",
+            esc(s.name),
+            esc(s.layer),
+            tids[s.layer],
+            us(s.start_ns),
+            us(s.dur_ns),
+            s.trace_id,
+            s.span_id,
+            s.parent_id,
+            s.a0
+        );
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Human-readable span tree for one request: children indented under
+/// their parents (by `parent_id`), siblings in start order, durations
+/// in microseconds with `a0` shown when nonzero. Spans whose parent is
+/// missing (e.g. overwritten in the ring) surface as extra roots rather
+/// than vanishing.
+pub fn flame_summary(spans: &[SpanRecord], trace_id: u64) -> String {
+    let mut mine: Vec<&SpanRecord> = spans.iter().filter(|s| s.trace_id == trace_id).collect();
+    mine.sort_by_key(|s| (s.start_ns, s.span_id));
+    let have: std::collections::BTreeSet<u64> = mine.iter().map(|s| s.span_id).collect();
+    let mut children: BTreeMap<u64, Vec<&SpanRecord>> = BTreeMap::new();
+    let mut roots: Vec<&SpanRecord> = Vec::new();
+    for s in &mine {
+        if s.parent_id != 0 && have.contains(&s.parent_id) && s.parent_id != s.span_id {
+            children.entry(s.parent_id).or_default().push(s);
+        } else {
+            roots.push(s);
+        }
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "trace {:#018x} — {} span(s)", trace_id, mine.len());
+    let mut visited: std::collections::BTreeSet<u64> = std::collections::BTreeSet::new();
+    let mut stack: Vec<(&SpanRecord, usize)> = roots.iter().rev().map(|s| (*s, 0)).collect();
+    while let Some((s, depth)) = stack.pop() {
+        if !visited.insert(s.span_id) {
+            continue; // cycle guard: malformed parent links can't hang us
+        }
+        let _ = write!(out, "{:indent$}{} [{}] {}us", "", s.name, s.layer, us(s.dur_ns), indent = depth * 2);
+        if s.a0 != 0 {
+            let _ = write!(out, " (a0={})", s.a0);
+        }
+        out.push('\n');
+        if let Some(kids) = children.get(&s.span_id) {
+            for k in kids.iter().rev() {
+                stack.push((k, depth + 1));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(trace: u64, id: u64, parent: u64, name: &'static str, layer: &'static str, start: u64, dur: u64) -> SpanRecord {
+        SpanRecord {
+            trace_id: trace,
+            span_id: id,
+            parent_id: parent,
+            name,
+            layer,
+            start_ns: start,
+            dur_ns: dur,
+            a0: 0,
+        }
+    }
+
+    #[test]
+    fn chrome_trace_has_metadata_and_complete_events() {
+        let spans = [
+            span(1, 10, 0, "serve.request", "serve", 0, 5_000),
+            span(1, 11, 10, "engine.execute", "engine", 1_000, 3_500),
+        ];
+        let json = chrome_trace(&spans);
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.ends_with("]}"));
+        assert!(json.contains("\"ph\":\"M\""));
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("\"name\":\"engine.execute\""));
+        assert!(json.contains("\"ts\":1.000"));
+        assert!(json.contains("\"dur\":3.500"));
+        assert!(json.contains("\"trace_id\":\"0x0000000000000001\""));
+        // two layers, two rows
+        assert!(json.contains("\"args\":{\"name\":\"serve\"}"));
+        assert!(json.contains("\"args\":{\"name\":\"engine\"}"));
+    }
+
+    #[test]
+    fn chrome_trace_escapes_and_handles_empty() {
+        assert_eq!(chrome_trace(&[]), "{\"traceEvents\":[]}");
+        let s = [span(1, 2, 0, "quote\"backslash\\", "l", 0, 1)];
+        let json = chrome_trace(&s);
+        assert!(json.contains("quote\\\"backslash\\\\"));
+    }
+
+    #[test]
+    fn flame_summary_indents_children_under_parents() {
+        let spans = [
+            span(7, 1, 0, "root", "serve", 0, 9_000),
+            span(7, 2, 1, "child", "engine", 1_000, 4_000),
+            span(7, 3, 2, "leaf", "fgp", 2_000, 1_000),
+            span(8, 4, 0, "other-trace", "serve", 0, 1_000),
+        ];
+        let text = flame_summary(&spans, 7);
+        assert!(text.contains("3 span(s)"));
+        assert!(text.contains("\nroot [serve]"));
+        assert!(text.contains("\n  child [engine]"));
+        assert!(text.contains("\n    leaf [fgp]"));
+        assert!(!text.contains("other-trace"));
+    }
+
+    #[test]
+    fn flame_summary_orphans_become_roots_and_cycles_terminate() {
+        let spans = [
+            span(7, 2, 99, "orphan", "serve", 0, 100), // parent 99 not captured
+            span(7, 5, 6, "a", "l", 10, 1),
+            span(7, 6, 5, "b", "l", 11, 1), // a↔b cycle
+        ];
+        let text = flame_summary(&spans, 7);
+        assert!(text.contains("orphan"));
+        assert!(text.contains('a'));
+    }
+}

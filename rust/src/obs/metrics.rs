@@ -1,0 +1,267 @@
+//! The unified metrics registry: named counters, gauges and histograms
+//! behind one snapshot type.
+//!
+//! Before this module each layer kept its own numbers — the serve
+//! tier's [`Metrics`](crate::coordinator::Metrics) bundle, the session
+//! program-cache hit/miss pair, coalescer batch stats, the profiler's
+//! per-opcode cycle totals. [`MetricsRegistry`] gives them one
+//! namespace (`layer.noun[.verb]`, e.g. `engine.cache_hit`,
+//! `fgp.cycles.fad`) and one export path: [`RegistrySnapshot`], which
+//! the extended `STATS` wire reply carries and the bench layer writes
+//! to `BENCH_obs.json`.
+//!
+//! Registration is `RwLock`-guarded (a `BTreeMap` keeps snapshots in
+//! deterministic name order), but *recording* is lock-free: `counter`
+//! and `histogram` hand back `Arc`s to atomics that hot paths cache and
+//! bump without ever touching the maps again.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+use crate::coordinator::Histogram;
+
+/// One named counter/gauge sample in a [`RegistrySnapshot`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CounterSample {
+    /// Metric name (`layer.noun[.verb]`).
+    pub name: String,
+    /// Current value.
+    pub value: u64,
+}
+
+/// One named histogram summary in a [`RegistrySnapshot`] — the same
+/// five numbers as [`MetricsSnapshot`](crate::coordinator::MetricsSnapshot),
+/// per named distribution.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HistSummary {
+    /// Metric name.
+    pub name: String,
+    /// Samples recorded.
+    pub count: u64,
+    /// Mean in nanoseconds.
+    pub mean_ns: u64,
+    /// p50 in nanoseconds (bucket midpoint).
+    pub p50_ns: u64,
+    /// p95 in nanoseconds (bucket midpoint).
+    pub p95_ns: u64,
+    /// p99 in nanoseconds (bucket midpoint).
+    pub p99_ns: u64,
+}
+
+impl HistSummary {
+    /// Summarize a live histogram under `name`.
+    pub fn of(name: &str, h: &Histogram) -> Self {
+        let ns = |d: Duration| d.as_nanos().min(u128::from(u64::MAX)) as u64;
+        HistSummary {
+            name: name.to_string(),
+            count: h.count(),
+            mean_ns: ns(h.mean()),
+            p50_ns: ns(h.quantile(0.5)),
+            p95_ns: ns(h.quantile(0.95)),
+            p99_ns: ns(h.quantile(0.99)),
+        }
+    }
+}
+
+/// Point-in-time copy of a whole [`MetricsRegistry`] (or any ad-hoc
+/// assembly of samples — the serve tier folds its legacy atomics in at
+/// snapshot time). Both lists are kept sorted by name so snapshots are
+/// deterministic, diffable and wire-stable.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RegistrySnapshot {
+    /// Counter/gauge samples, sorted by name.
+    pub counters: Vec<CounterSample>,
+    /// Histogram summaries, sorted by name.
+    pub histograms: Vec<HistSummary>,
+}
+
+impl RegistrySnapshot {
+    /// Empty snapshot.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// No samples at all?
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.histograms.is_empty()
+    }
+
+    /// Append a counter sample (call [`RegistrySnapshot::sort`] after a
+    /// batch of pushes).
+    pub fn push_counter(&mut self, name: &str, value: u64) {
+        self.counters.push(CounterSample { name: name.to_string(), value });
+    }
+
+    /// Append a histogram summary.
+    pub fn push_histogram(&mut self, name: &str, h: &Histogram) {
+        self.histograms.push(HistSummary::of(name, h));
+    }
+
+    /// Restore name order after out-of-order pushes.
+    pub fn sort(&mut self) {
+        self.counters.sort_by(|a, b| a.name.cmp(&b.name));
+        self.histograms.sort_by(|a, b| a.name.cmp(&b.name));
+    }
+
+    /// Look up a counter by name.
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|c| c.name == name).map(|c| c.value)
+    }
+
+    /// Look up a histogram summary by name.
+    pub fn histogram(&self, name: &str) -> Option<&HistSummary> {
+        self.histograms.iter().find(|h| h.name == name)
+    }
+}
+
+/// Named counter/gauge/histogram table. Cheap to share (`Arc` the
+/// owning [`Telemetry`](super::Telemetry)); cheap to record into
+/// (atomics behind `Arc`s — hold the handle, skip the map).
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    counters: RwLock<BTreeMap<String, Arc<AtomicU64>>>,
+    hists: RwLock<BTreeMap<String, Arc<Histogram>>>,
+}
+
+/// Recover from a poisoned registry lock: the data is atomics, always
+/// in a valid state, so the poison flag carries no information here.
+fn read_or_recover<T: ?Sized>(l: &RwLock<T>) -> std::sync::RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|p| p.into_inner())
+}
+
+fn write_or_recover<T: ?Sized>(l: &RwLock<T>) -> std::sync::RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|p| p.into_inner())
+}
+
+impl MetricsRegistry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The counter named `name`, created at 0 on first sight. Cache the
+    /// returned `Arc` on hot paths.
+    pub fn counter(&self, name: &str) -> Arc<AtomicU64> {
+        if let Some(c) = read_or_recover(&self.counters).get(name) {
+            return Arc::clone(c);
+        }
+        let mut map = write_or_recover(&self.counters);
+        Arc::clone(map.entry(name.to_string()).or_insert_with(|| Arc::new(AtomicU64::new(0))))
+    }
+
+    /// Add `v` to counter `name`.
+    pub fn add(&self, name: &str, v: u64) {
+        self.counter(name).fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Set counter `name` to `v` (gauge semantics).
+    pub fn set(&self, name: &str, v: u64) {
+        self.counter(name).store(v, Ordering::Relaxed);
+    }
+
+    /// The histogram named `name`, created empty on first sight.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        if let Some(h) = read_or_recover(&self.hists).get(name) {
+            return Arc::clone(h);
+        }
+        let mut map = write_or_recover(&self.hists);
+        Arc::clone(map.entry(name.to_string()).or_insert_with(|| Arc::new(Histogram::new())))
+    }
+
+    /// Record `ns` nanoseconds into histogram `name`.
+    pub fn record_ns(&self, name: &str, ns: u64) {
+        self.histogram(name).record(Duration::from_nanos(ns));
+    }
+
+    /// Fold another histogram into `name` — cross-device aggregation
+    /// (each farm device keeps local histograms; the STATS path merges
+    /// them here).
+    pub fn merge_histogram(&self, name: &str, other: &Histogram) {
+        self.histogram(name).merge(other);
+    }
+
+    /// Point-in-time snapshot, sorted by name (the `BTreeMap` order).
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        let mut snap = RegistrySnapshot::new();
+        for (name, c) in read_or_recover(&self.counters).iter() {
+            snap.counters.push(CounterSample { name: name.clone(), value: c.load(Ordering::Relaxed) });
+        }
+        for (name, h) in read_or_recover(&self.hists).iter() {
+            snap.histograms.push(HistSummary::of(name, h));
+        }
+        snap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_create_once_and_accumulate() {
+        let r = MetricsRegistry::new();
+        r.add("a.hits", 2);
+        r.add("a.hits", 3);
+        r.set("a.gauge", 7);
+        let c = r.counter("a.hits");
+        c.fetch_add(1, Ordering::Relaxed);
+        let snap = r.snapshot();
+        assert_eq!(snap.counter("a.hits"), Some(6));
+        assert_eq!(snap.counter("a.gauge"), Some(7));
+        assert_eq!(snap.counter("missing"), None);
+    }
+
+    #[test]
+    fn histograms_record_and_summarize() {
+        let r = MetricsRegistry::new();
+        for _ in 0..10 {
+            r.record_ns("lat", 1000);
+        }
+        let snap = r.snapshot();
+        let h = snap.histogram("lat").unwrap();
+        assert_eq!(h.count, 10);
+        assert!(h.p50_ns >= 512 && h.p50_ns <= 2048, "midpoint of the 1µs bucket, got {}", h.p50_ns);
+        assert!(h.p50_ns <= h.p95_ns && h.p95_ns <= h.p99_ns);
+    }
+
+    #[test]
+    fn snapshot_is_name_sorted_and_eq_comparable() {
+        let r = MetricsRegistry::new();
+        r.add("z.last", 1);
+        r.add("a.first", 1);
+        r.record_ns("m.mid", 5);
+        let snap = r.snapshot();
+        assert_eq!(snap.counters[0].name, "a.first");
+        assert_eq!(snap.counters[1].name, "z.last");
+        assert_eq!(snap, r.snapshot());
+        assert!(!snap.is_empty());
+        assert!(RegistrySnapshot::new().is_empty());
+    }
+
+    #[test]
+    fn merge_histogram_aggregates_across_sources() {
+        let local = Histogram::new();
+        for _ in 0..4 {
+            local.record(Duration::from_micros(10));
+        }
+        let r = MetricsRegistry::new();
+        r.record_ns("dev.lat", 10_000);
+        r.merge_histogram("dev.lat", &local);
+        assert_eq!(r.snapshot().histogram("dev.lat").unwrap().count, 5);
+    }
+
+    #[test]
+    fn push_and_sort_keep_manual_snapshots_ordered() {
+        let mut snap = RegistrySnapshot::new();
+        snap.push_counter("b", 2);
+        snap.push_counter("a", 1);
+        let h = Histogram::new();
+        h.record(Duration::from_nanos(100));
+        snap.push_histogram("hist", &h);
+        snap.sort();
+        assert_eq!(snap.counters[0].name, "a");
+        assert_eq!(snap.histogram("hist").unwrap().count, 1);
+    }
+}

@@ -1,0 +1,37 @@
+//! S11 — Observability: cross-layer tracing, a unified metrics
+//! registry, and exportable execution timelines.
+//!
+//! The paper's FGP exposes only a status port (§IV: the FSM's four
+//! states are all the silicon reports); the simulator can afford what
+//! the silicon cannot — a full, *correlated* picture of every update.
+//! This module is that picture, std-only like the rest of the crate:
+//!
+//! * [`span`] — [`TraceContext`] request identity (minted at the edge,
+//!   carried bit-exactly through the wire codec, propagated
+//!   serve → admission → engine room → farm device → engine run) plus a
+//!   lock-free [`SpanRing`] recorder with monotonic timestamps, all
+//!   behind a [`Telemetry`] handle whose [`TelemetryConfig`] off-switch
+//!   reduces every hot-path hook to one branch;
+//! * [`metrics`] — [`MetricsRegistry`], the named counter / gauge /
+//!   histogram table that absorbs the serving tier's
+//!   [`Metrics`](crate::coordinator::Metrics), the session program-cache
+//!   hit/miss counters, coalescer batch stats and per-opcode profiler
+//!   cycle totals behind one wire-exportable [`RegistrySnapshot`];
+//! * [`export`] — [`chrome_trace`] (Chrome/Perfetto trace-event JSON;
+//!   device cycle spans are rescaled onto the wall-clock timeline at
+//!   the paper's 130 MHz so a compiled program's MMA/FAD phases render
+//!   *inside* the serving span that dispatched them) and
+//!   [`flame_summary`] (a human-readable per-request tree).
+//!
+//! The pinned contract (ARCHITECTURE.md invariant 7): telemetry off ⇒
+//! bitwise-identical results to an uninstrumented build, with the
+//! disabled-path overhead regression-gated by
+//! `rust/benches/obs_overhead.rs` → `BENCH_obs.json`.
+
+pub mod export;
+pub mod metrics;
+pub mod span;
+
+pub use export::{chrome_trace, flame_summary};
+pub use metrics::{CounterSample, HistSummary, MetricsRegistry, RegistrySnapshot};
+pub use span::{SpanRecord, SpanRing, Telemetry, TelemetryConfig, TraceContext};

@@ -1,0 +1,452 @@
+//! Trace contexts and the lock-free span recorder.
+//!
+//! A [`TraceContext`] names one request (`trace_id`) and one node in its
+//! span tree (`span_id`). The convention everywhere in this crate is
+//! **parent-handle**: the context a component *receives* identifies the
+//! span that called it; the component mints children with
+//! [`TraceContext::child`] and records its own work with
+//! `parent_id = received.span_id`. One request therefore yields one
+//! tree, no matter how many threads and devices it crossed.
+//!
+//! Spans land in a [`SpanRing`] — a fixed-capacity ring of slots, each
+//! guarded by a one-byte busy latch. Writers never block: a slot that
+//! loses its CAS is counted in `dropped` and the record is discarded,
+//! which bounds both memory and worst-case interference with the
+//! request path. The [`Telemetry`] handle bundles the ring with a
+//! monotonic epoch and the [`MetricsRegistry`]; when
+//! [`TelemetryConfig::enabled`] is false every hook is a single branch
+//! and no clock is read (the overhead gate in `BENCH_obs.json`).
+
+use std::cell::UnsafeCell;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Instant;
+
+use super::metrics::MetricsRegistry;
+
+/// Global span-id sequence; hashed so ids from concurrent mints don't
+/// collide and don't leak ordering.
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// SplitMix64 — the standard 64-bit finalizer; enough mixing to make
+/// sequential seeds look independent, with no state beyond the seed.
+fn splitmix64(seed: u64) -> u64 {
+    let mut z = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// One fresh nonzero id.
+fn fresh_id() -> u64 {
+    let seed = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+    splitmix64(seed).max(1)
+}
+
+/// The identity a request carries across layers (and the wire):
+/// which request this is, and which span is the caller.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceContext {
+    /// Request identity — constant across every span of one request.
+    pub trace_id: u64,
+    /// The span this context was minted by (the parent handle).
+    pub span_id: u64,
+}
+
+impl TraceContext {
+    /// Mint a fresh root context (new `trace_id`, new `span_id`).
+    pub fn mint() -> Self {
+        TraceContext { trace_id: fresh_id(), span_id: fresh_id() }
+    }
+
+    /// A child context: same request, fresh `span_id`.
+    pub fn child(&self) -> Self {
+        TraceContext { trace_id: self.trace_id, span_id: fresh_id() }
+    }
+}
+
+/// One completed span, fixed-size and `Copy` so ring slots never
+/// allocate. `name`/`layer` are `&'static str` by design: span names
+/// are code, not data.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanRecord {
+    /// Request identity.
+    pub trace_id: u64,
+    /// This span's identity (0 ⇒ empty slot).
+    pub span_id: u64,
+    /// Parent span (0 ⇒ root).
+    pub parent_id: u64,
+    /// What happened (e.g. `"serve.gate"`, `"engine.execute"`).
+    pub name: &'static str,
+    /// Which layer recorded it (`"client"`, `"serve"`, `"engine"`, ...).
+    pub layer: &'static str,
+    /// Start, nanoseconds since the [`Telemetry`] epoch.
+    pub start_ns: u64,
+    /// Duration in nanoseconds.
+    pub dur_ns: u64,
+    /// One free attribute (cycles, batch size, sample count — per span).
+    pub a0: u64,
+}
+
+impl Default for SpanRecord {
+    fn default() -> Self {
+        SpanRecord {
+            trace_id: 0,
+            span_id: 0,
+            parent_id: 0,
+            name: "",
+            layer: "",
+            start_ns: 0,
+            dur_ns: 0,
+            a0: 0,
+        }
+    }
+}
+
+/// One ring slot: a spin-free busy latch over the record.
+struct Slot {
+    busy: AtomicBool,
+    rec: UnsafeCell<SpanRecord>,
+}
+
+/// Fixed-capacity, lock-free span recorder. Writers claim a slot by
+/// index (`head` fetch-add) and a CAS on the slot latch; a lost CAS
+/// increments `dropped` instead of waiting, so recording is
+/// obstruction-free and never blocks the request path.
+pub struct SpanRing {
+    slots: Box<[Slot]>,
+    head: AtomicU64,
+    dropped: AtomicU64,
+}
+
+// SAFETY: the record cell is only written between a successful
+// false→true CAS on `busy` (Acquire) and the Release store back to
+// false; readers take the same latch. No two threads touch a cell
+// concurrently.
+unsafe impl Sync for SpanRing {}
+unsafe impl Send for SpanRing {}
+
+impl SpanRing {
+    /// Ring with room for `capacity` spans (0 drops everything).
+    pub fn new(capacity: usize) -> Self {
+        SpanRing {
+            slots: (0..capacity)
+                .map(|_| Slot { busy: AtomicBool::new(false), rec: UnsafeCell::new(SpanRecord::default()) })
+                .collect(),
+            head: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Slots in the ring.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Spans discarded (zero capacity or a contended slot).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Record one span; never blocks.
+    pub fn record(&self, rec: SpanRecord) {
+        let len = self.slots.len() as u64;
+        if len == 0 {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let idx = (self.head.fetch_add(1, Ordering::Relaxed) % len) as usize;
+        let slot = &self.slots[idx];
+        if slot
+            .busy
+            .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        // SAFETY: latch held (see the `Sync` impl).
+        unsafe { *slot.rec.get() = rec };
+        slot.busy.store(false, Ordering::Release);
+    }
+
+    /// Non-destructive copy of every recorded span, oldest timestamp
+    /// first. Slots a writer holds at snapshot time are skipped (they
+    /// are mid-write); empty slots (`span_id == 0`) are filtered.
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        let mut out = Vec::with_capacity(self.slots.len());
+        for slot in self.slots.iter() {
+            if slot
+                .busy
+                .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+                .is_err()
+            {
+                continue;
+            }
+            // SAFETY: latch held (see the `Sync` impl).
+            let rec = unsafe { *slot.rec.get() };
+            slot.busy.store(false, Ordering::Release);
+            if rec.span_id != 0 {
+                out.push(rec);
+            }
+        }
+        out.sort_by_key(|r| (r.start_ns, r.span_id));
+        out
+    }
+
+    /// Empty every slot (the drop counter is kept — it is cumulative).
+    pub fn clear(&self) {
+        for slot in self.slots.iter() {
+            if slot
+                .busy
+                .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+                .is_err()
+            {
+                continue;
+            }
+            // SAFETY: latch held (see the `Sync` impl).
+            unsafe { *slot.rec.get() = SpanRecord::default() };
+            slot.busy.store(false, Ordering::Release);
+        }
+    }
+}
+
+impl fmt::Debug for SpanRing {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("SpanRing")
+            .field("capacity", &self.slots.len())
+            .field("dropped", &self.dropped())
+            .finish()
+    }
+}
+
+/// Telemetry switches, embedded in `ServeConfig`/`FgpFarm` setup.
+#[derive(Clone, Copy, Debug)]
+pub struct TelemetryConfig {
+    /// Master switch. Off (the default) ⇒ no spans, no clock reads, no
+    /// profiler attach — results are bitwise identical to an
+    /// uninstrumented build (invariant 7).
+    pub enabled: bool,
+    /// Span-ring capacity when enabled.
+    pub span_capacity: usize,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig { enabled: false, span_capacity: 4096 }
+    }
+}
+
+impl TelemetryConfig {
+    /// Everything on, default capacity.
+    pub fn on() -> Self {
+        TelemetryConfig { enabled: true, ..TelemetryConfig::default() }
+    }
+}
+
+/// The per-deployment telemetry handle: one monotonic epoch, one span
+/// ring, one metrics registry — shared (via `Arc`) by the serve tier,
+/// the farm devices and the engine sessions so their spans land on one
+/// timeline and their counters in one table.
+///
+/// Counters in [`Telemetry::registry`] work even when spans are
+/// disabled (they are the `STATS` wire reply); only span recording and
+/// the per-instruction profiler are gated by the switch.
+#[derive(Debug)]
+pub struct Telemetry {
+    config: TelemetryConfig,
+    epoch: Instant,
+    spans: SpanRing,
+    registry: MetricsRegistry,
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Telemetry::new(TelemetryConfig::default())
+    }
+}
+
+impl Telemetry {
+    /// Handle under `config` (ring allocated only when enabled).
+    pub fn new(config: TelemetryConfig) -> Self {
+        let cap = if config.enabled { config.span_capacity } else { 0 };
+        Telemetry {
+            config,
+            epoch: Instant::now(),
+            spans: SpanRing::new(cap),
+            registry: MetricsRegistry::new(),
+        }
+    }
+
+    /// Is span recording on?
+    pub fn enabled(&self) -> bool {
+        self.config.enabled
+    }
+
+    /// The active configuration.
+    pub fn config(&self) -> TelemetryConfig {
+        self.config
+    }
+
+    /// Nanoseconds since this handle's epoch — the timestamp every span
+    /// uses. Returns 0 when disabled so gated callers skip the clock
+    /// read entirely.
+    pub fn now_ns(&self) -> u64 {
+        if !self.config.enabled {
+            return 0;
+        }
+        self.epoch.elapsed().as_nanos().min(u128::from(u64::MAX)) as u64
+    }
+
+    /// The span ring.
+    pub fn spans(&self) -> &SpanRing {
+        &self.spans
+    }
+
+    /// The unified metrics registry (live even when spans are off).
+    pub fn registry(&self) -> &MetricsRegistry {
+        &self.registry
+    }
+
+    /// Record a span that started at `start_ns` (from [`Telemetry::now_ns`])
+    /// and ends now. No-op when disabled.
+    pub fn span(
+        &self,
+        ctx: TraceContext,
+        parent_id: u64,
+        name: &'static str,
+        layer: &'static str,
+        start_ns: u64,
+        a0: u64,
+    ) {
+        if !self.config.enabled {
+            return;
+        }
+        let dur_ns = self.now_ns().saturating_sub(start_ns);
+        self.span_at(ctx, parent_id, name, layer, start_ns, dur_ns, a0);
+    }
+
+    /// Record a span with an explicit duration — the hook device-cycle
+    /// phases use after rescaling cycles onto the wall clock. No-op
+    /// when disabled.
+    #[allow(clippy::too_many_arguments)]
+    pub fn span_at(
+        &self,
+        ctx: TraceContext,
+        parent_id: u64,
+        name: &'static str,
+        layer: &'static str,
+        start_ns: u64,
+        dur_ns: u64,
+        a0: u64,
+    ) {
+        if !self.config.enabled {
+            return;
+        }
+        self.spans.record(SpanRecord {
+            trace_id: ctx.trace_id,
+            span_id: ctx.span_id,
+            parent_id,
+            name,
+            layer,
+            start_ns,
+            dur_ns,
+            a0,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn mint_and_child_share_trace_id() {
+        let root = TraceContext::mint();
+        let child = root.child();
+        assert_eq!(root.trace_id, child.trace_id);
+        assert_ne!(root.span_id, child.span_id);
+        assert_ne!(root.trace_id, 0);
+        assert_ne!(TraceContext::mint().trace_id, root.trace_id);
+    }
+
+    #[test]
+    fn ring_records_snapshots_and_wraps() {
+        let ring = SpanRing::new(4);
+        for i in 0..6u64 {
+            ring.record(SpanRecord {
+                trace_id: 1,
+                span_id: i + 1,
+                start_ns: i,
+                ..SpanRecord::default()
+            });
+        }
+        let snap = ring.snapshot();
+        // capacity 4, six writes: the oldest two were overwritten
+        assert_eq!(snap.len(), 4);
+        assert!(snap.iter().all(|r| r.span_id >= 3));
+        assert!(snap.windows(2).all(|w| w[0].start_ns <= w[1].start_ns));
+        ring.clear();
+        assert!(ring.snapshot().is_empty());
+    }
+
+    #[test]
+    fn zero_capacity_ring_counts_drops() {
+        let ring = SpanRing::new(0);
+        ring.record(SpanRecord { span_id: 1, ..SpanRecord::default() });
+        assert_eq!(ring.dropped(), 1);
+        assert!(ring.snapshot().is_empty());
+    }
+
+    #[test]
+    fn concurrent_writers_never_lose_the_ring() {
+        let ring = Arc::new(SpanRing::new(64));
+        let mut joins = Vec::new();
+        for t in 0..4u64 {
+            let ring = Arc::clone(&ring);
+            joins.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    ring.record(SpanRecord {
+                        trace_id: t + 1,
+                        span_id: t * 1000 + i + 1,
+                        ..SpanRecord::default()
+                    });
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let snap = ring.snapshot();
+        assert!(snap.len() <= 64);
+        assert!(snap.iter().all(|r| r.span_id != 0));
+    }
+
+    #[test]
+    fn disabled_telemetry_is_inert() {
+        let tel = Telemetry::new(TelemetryConfig::default());
+        assert!(!tel.enabled());
+        assert_eq!(tel.now_ns(), 0);
+        tel.span(TraceContext::mint(), 0, "x", "test", 0, 0);
+        assert!(tel.spans().snapshot().is_empty());
+        assert_eq!(tel.spans().dropped(), 0, "disabled span() must not even touch the ring");
+        // counters still work with spans off — they back the STATS reply
+        tel.registry().add("still.counting", 2);
+        assert_eq!(tel.registry().snapshot().counter("still.counting"), Some(2));
+    }
+
+    #[test]
+    fn enabled_telemetry_records_wall_spans() {
+        let tel = Telemetry::new(TelemetryConfig::on());
+        let ctx = TraceContext::mint();
+        let t0 = tel.now_ns();
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        tel.span(ctx, 0, "work", "test", t0, 7);
+        let snap = tel.spans().snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].name, "work");
+        assert_eq!(snap[0].a0, 7);
+        assert!(snap[0].dur_ns >= 1_000_000, "slept 1ms inside the span");
+    }
+}

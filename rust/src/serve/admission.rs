@@ -148,6 +148,16 @@ impl AdmissionController {
     pub fn capacity(&self) -> usize {
         self.max_inflight
     }
+
+    /// Window occupancy in `[0, 1]` — the `serve.inflight` gauge the
+    /// telemetry registry exports, normalized for dashboards. A
+    /// zero-capacity window reports 0 (it can never hold work).
+    pub fn utilization(&self) -> f64 {
+        if self.max_inflight == 0 {
+            return 0.0;
+        }
+        self.inflight() as f64 / self.max_inflight as f64
+    }
 }
 
 /// Rotating fair scheduler: each round visits the same item list in an
@@ -227,6 +237,19 @@ mod tests {
         assert_eq!(c.inflight(), 0);
         // a single request larger than the window is refused outright
         assert!(!c.try_acquire(5));
+    }
+
+    #[test]
+    fn utilization_tracks_the_window() {
+        let c = AdmissionController::new(8);
+        assert_eq!(c.utilization(), 0.0);
+        assert!(c.try_acquire(2));
+        assert!((c.utilization() - 0.25).abs() < 1e-12);
+        assert!(c.try_acquire(6));
+        assert_eq!(c.utilization(), 1.0);
+        c.release(8);
+        assert_eq!(c.utilization(), 0.0);
+        assert_eq!(AdmissionController::new(0).utilization(), 0.0);
     }
 
     #[test]

@@ -10,15 +10,17 @@
 //! directly.
 
 use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::gmp::matrix::CMatrix;
 use crate::gmp::message::GaussMessage;
+use crate::obs::{Telemetry, TraceContext};
 
 use super::wire::{
-    decode_reply, encode_request, read_frame, write_frame, ServeReply, ServeRequest,
+    decode_reply, encode_request_traced, read_frame, write_frame, ServeReply, ServeRequest,
     StatsSnapshot, StreamMode, WIRE_VERSION,
 };
 
@@ -55,16 +57,51 @@ pub struct StreamClosed {
 /// Blocking connection to an [`FgpServe`](super::FgpServe) front door.
 pub struct ServeClient {
     sock: TcpStream,
+    /// `min(client, server)` wire version agreed in the handshake; trace
+    /// envelopes are only sent when this is ≥ 2.
+    version: u32,
+    /// Client-side telemetry ([`ServeClient::connect_traced`]): every
+    /// call mints a root [`TraceContext`], records a `client.request`
+    /// span, and ships the context in the frame's trace envelope.
+    tel: Option<Arc<Telemetry>>,
+    /// Trace id of the most recent traced call (0 before the first).
+    last_trace_id: u64,
 }
 
 impl ServeClient {
     /// Connect and handshake as `tenant`.
     pub fn connect(addr: impl ToSocketAddrs, tenant: &str) -> Result<Self> {
+        Self::handshake(addr, tenant, None)
+    }
+
+    /// [`ServeClient::connect`] with a telemetry handle — typically the
+    /// server's own ([`FgpServe::telemetry`](super::FgpServe::telemetry))
+    /// in-process, so client and server spans land in one ring and one
+    /// request reads as one tree from socket to device cycles.
+    pub fn connect_traced(
+        addr: impl ToSocketAddrs,
+        tenant: &str,
+        tel: Arc<Telemetry>,
+    ) -> Result<Self> {
+        Self::handshake(addr, tenant, Some(tel))
+    }
+
+    fn handshake(
+        addr: impl ToSocketAddrs,
+        tenant: &str,
+        tel: Option<Arc<Telemetry>>,
+    ) -> Result<Self> {
         let sock = TcpStream::connect(addr).context("connecting to serve front door")?;
         sock.set_nodelay(true)?;
-        let mut client = ServeClient { sock };
-        match client.call(&ServeRequest::Hello { tenant: tenant.to_string() })? {
-            ServeReply::Welcome { version } if version == WIRE_VERSION => Ok(client),
+        let mut client = ServeClient { sock, version: WIRE_VERSION, tel, last_trace_id: 0 };
+        let hello = ServeRequest::Hello { tenant: tenant.to_string(), version: WIRE_VERSION };
+        match client.call(&hello)? {
+            // the server replies with min(client, server): anything in
+            // 1..=ours is speakable, newer-than-ours is not
+            ServeReply::Welcome { version } if (1..=WIRE_VERSION).contains(&version) => {
+                client.version = version;
+                Ok(client)
+            }
             ServeReply::Welcome { version } => {
                 bail!("server speaks wire version {version}, client speaks {WIRE_VERSION}")
             }
@@ -72,14 +109,39 @@ impl ServeClient {
         }
     }
 
+    /// The wire version agreed in the handshake.
+    pub fn negotiated_version(&self) -> u32 {
+        self.version
+    }
+
+    /// Trace id minted for the most recent traced call (0 if untraced) —
+    /// the key for filtering the telemetry ring down to one request.
+    pub fn last_trace_id(&self) -> u64 {
+        self.last_trace_id
+    }
+
     /// Send one request frame and block for its reply frame. Exposes
     /// `Busy`/`QuotaExceeded` verbatim — the typed helpers below retry
     /// them instead.
     pub fn call(&mut self, req: &ServeRequest) -> Result<ServeReply> {
-        write_frame(&mut self.sock, &encode_request(req))?;
+        // a v1 peer would reject the envelope, so only trace on v2+
+        let ctx = match &self.tel {
+            Some(tel) if tel.enabled() && self.version >= 2 => Some(TraceContext::mint()),
+            _ => None,
+        };
+        let t0 = match (&self.tel, ctx) {
+            (Some(tel), Some(_)) => tel.now_ns(),
+            _ => 0,
+        };
+        write_frame(&mut self.sock, &encode_request_traced(req, ctx.as_ref()))?;
         let frame = read_frame(&mut self.sock)?
             .ok_or_else(|| anyhow!("server closed the connection mid-request"))?;
-        Ok(decode_reply(&frame)?)
+        let reply = decode_reply(&frame)?;
+        if let (Some(tel), Some(ctx)) = (&self.tel, ctx) {
+            tel.span(ctx, 0, "client.request", "client", t0, frame.len() as u64);
+            self.last_trace_id = ctx.trace_id;
+        }
+        Ok(reply)
     }
 
     /// [`call`](Self::call), retrying refused admissions with the

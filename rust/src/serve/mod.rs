@@ -23,9 +23,13 @@
 //!    approximately recovered. [`wire`] gives checkpoints a stable
 //!    `FGCK` image so they survive the network.
 //! 3. **Observability** — an SLO is a wire artifact here: `Stats`
-//!    returns p50/p95/p99 latency and per-tenant throughput assembled
-//!    from [`crate::coordinator::Metrics`], and the serving bench
-//!    commits the same snapshot to `BENCH_serving.json`.
+//!    returns p50/p95/p99 latency, per-tenant throughput assembled
+//!    from [`crate::coordinator::Metrics`], and (wire version 2) the
+//!    unified [`crate::obs`] registry snapshot; the serving bench
+//!    commits the same snapshot to `BENCH_serving.json`. Requests may
+//!    carry a [`TraceContext`](crate::obs::TraceContext) envelope, so
+//!    one client call yields one correlated span tree from the socket
+//!    down to the device's cycle counters (`examples/trace_rls.rs`).
 //!
 //! Layering: `serve` sits strictly **above** the coordinator — it owns
 //! sockets, framing, tenancy, and admission, and delegates every
@@ -52,7 +56,8 @@ pub use client::{ServeClient, StreamClosed, StreamStatus};
 pub use registry::{SessionRegistry, StreamEntry, TenantLedger};
 pub use server::{FgpServe, ServeConfig};
 pub use wire::{
-    decode_checkpoint, decode_reply, decode_request, encode_checkpoint, encode_reply,
-    encode_request, read_frame, write_frame, FramePoll, FrameReader, ServeReply, ServeRequest,
-    StatsSnapshot, StreamMode, TenantSnapshot, WireError, MAX_FRAME, WIRE_VERSION,
+    decode_checkpoint, decode_reply, decode_request, decode_request_traced, encode_checkpoint,
+    encode_reply, encode_request, encode_request_traced, read_frame, write_frame, FramePoll,
+    FrameReader, ServeReply, ServeRequest, StatsSnapshot, StreamMode, TenantSnapshot, WireError,
+    MAX_FRAME, WIRE_VERSION,
 };

@@ -67,6 +67,12 @@ pub struct StreamEntry {
     /// Terminal error: set once a non-retryable failure occurs;
     /// surfaced to the client on the next poll/push/close.
     pub error: Option<String>,
+    /// Parent span for the samples currently queued (the context of the
+    /// push that enqueued them); `None` on untraced streams.
+    pub ctx: Option<crate::obs::TraceContext>,
+    /// Telemetry clock reading when the queued samples arrived — the
+    /// start of the `serve.queue_wait` span the engine room records.
+    pub queued_ns: u64,
 }
 
 /// Id-keyed stream table plus the fairness rotor the engine room visits
@@ -114,6 +120,8 @@ impl SessionRegistry {
                 failovers: 0,
                 inflight: 0,
                 error: None,
+                ctx: None,
+                queued_ns: 0,
             },
         );
         id

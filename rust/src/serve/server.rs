@@ -45,12 +45,13 @@ use crate::coordinator::{
 use crate::fgp::FgpConfig;
 use crate::gmp::matrix::CMatrix;
 use crate::gmp::message::GaussMessage;
+use crate::obs::{RegistrySnapshot, Telemetry, TelemetryConfig, TraceContext};
 
 use super::admission::{AdmissionController, QuotaPolicy, TenantQuotas};
 use super::registry::{SessionRegistry, TenantLedger};
 use super::wire::{
-    decode_checkpoint, decode_request, encode_checkpoint, encode_reply, write_frame, FramePoll,
-    FrameReader, ServeReply, ServeRequest, StatsSnapshot, StreamMode, WIRE_VERSION,
+    decode_checkpoint, decode_request_traced, encode_checkpoint, encode_reply, write_frame,
+    FramePoll, FrameReader, ServeReply, ServeRequest, StatsSnapshot, StreamMode, WIRE_VERSION,
 };
 use crate::engine::StreamCheckpoint;
 
@@ -79,6 +80,9 @@ pub struct ServeConfig {
     pub retry_ms: u32,
     /// Per-stream pending-queue cap (excess pushes get `Busy`).
     pub max_pending_per_stream: usize,
+    /// Telemetry: span recording off by default ([`TelemetryConfig`]);
+    /// registry counters always run (they back the `STATS` reply).
+    pub telemetry: TelemetryConfig,
 }
 
 impl Default for ServeConfig {
@@ -95,6 +99,7 @@ impl Default for ServeConfig {
             coalesce_width: 8,
             retry_ms: 5,
             max_pending_per_stream: 1024,
+            telemetry: TelemetryConfig::default(),
         }
     }
 }
@@ -118,6 +123,7 @@ struct Shared {
     rejected_quota: AtomicU64,
     failovers: AtomicU64,
     shutdown: AtomicBool,
+    tel: Arc<Telemetry>,
 }
 
 impl Shared {
@@ -129,7 +135,32 @@ impl Shared {
         )
     }
 
-    fn snapshot(&self) -> StatsSnapshot {
+    /// The unified registry snapshot: everything the device sessions and
+    /// engines fed into the obs registry, plus the serve tier's own
+    /// counters and latency histograms folded in under `serve.*` names —
+    /// one flat, sorted view across every layer.
+    fn telemetry_snapshot(&self) -> RegistrySnapshot {
+        let mut snap = self.tel.registry().snapshot();
+        snap.push_counter("serve.admitted", self.admitted.load(Ordering::Relaxed));
+        snap.push_counter("serve.rejected_busy", self.rejected_busy.load(Ordering::Relaxed));
+        snap.push_counter("serve.rejected_quota", self.rejected_quota.load(Ordering::Relaxed));
+        snap.push_counter("serve.failovers", self.failovers.load(Ordering::Relaxed));
+        snap.push_counter("serve.inflight", self.admission.inflight() as u64);
+        snap.push_counter("serve.batches", self.metrics.batches.load(Ordering::Relaxed));
+        snap.push_counter(
+            "serve.batched_requests",
+            self.metrics.batched_requests.load(Ordering::Relaxed),
+        );
+        snap.push_histogram("serve.latency", &self.metrics.latency);
+        snap.push_histogram("serve.queue_wait", &self.metrics.queue_wait);
+        snap.sort();
+        snap
+    }
+
+    /// `include_telemetry` is the wire-version gate: a v1 peer gets the
+    /// exact v1 `Stats` bytes (empty telemetry section encodes as the
+    /// legacy tag), a v2 peer additionally gets the registry snapshot.
+    fn snapshot(&self, include_telemetry: bool) -> StatsSnapshot {
         StatsSnapshot {
             latency: self.metrics.snapshot(),
             admitted: self.admitted.load(Ordering::Relaxed),
@@ -140,6 +171,11 @@ impl Shared {
                 .iter()
                 .map(|(name, ledger)| ledger.snapshot(name))
                 .collect(),
+            telemetry: if include_telemetry {
+                self.telemetry_snapshot()
+            } else {
+                RegistrySnapshot::default()
+            },
         }
     }
 }
@@ -160,7 +196,13 @@ impl FgpServe {
     /// Boot the farm, bind the listener, and start the worker pool and
     /// engine room.
     pub fn start(cfg: ServeConfig) -> Result<Self> {
-        let farm = Arc::new(FgpFarm::start(cfg.devices, cfg.fgp, cfg.policy)?);
+        let tel = Arc::new(Telemetry::new(cfg.telemetry));
+        let farm = Arc::new(FgpFarm::start_with_telemetry(
+            cfg.devices,
+            cfg.fgp,
+            cfg.policy,
+            Arc::clone(&tel),
+        )?);
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("binding serve listener on {}", cfg.addr))?;
         let addr = listener.local_addr()?;
@@ -180,6 +222,7 @@ impl FgpServe {
             rejected_quota: AtomicU64::new(0),
             failovers: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
+            tel,
         });
 
         let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
@@ -261,10 +304,20 @@ impl FgpServe {
         Arc::clone(&self.shared.farm)
     }
 
-    /// In-process SLO snapshot (the same body a wire `Stats` reply
-    /// carries).
+    /// In-process SLO snapshot (the same body a wire-version-2 `Stats`
+    /// reply carries, telemetry section included).
     pub fn stats(&self) -> StatsSnapshot {
-        self.shared.snapshot()
+        self.shared.snapshot(true)
+    }
+
+    /// The server's shared telemetry handle: the span ring every layer
+    /// records into and the registry behind the `STATS` telemetry
+    /// section. Hand it to [`ServeClient::connect_traced`]
+    /// (in-process) to read one request's full span tree.
+    ///
+    /// [`ServeClient::connect_traced`]: super::client::ServeClient::connect_traced
+    pub fn telemetry(&self) -> Arc<Telemetry> {
+        Arc::clone(&self.shared.tel)
     }
 
     /// Stop accepting, drain workers, and join every thread.
@@ -301,13 +354,17 @@ impl Drop for FgpServe {
 struct ConnState {
     tenant: String,
     ledger: Arc<TenantLedger>,
+    /// `min(client, server)` wire version from the handshake; 1 until a
+    /// `Hello` arrives, so a pre-handshake `Stats` gets the v1 shape.
+    version: u32,
 }
 
 fn handle_conn(shared: &Shared, mut sock: TcpStream) -> io::Result<()> {
     sock.set_nodelay(true)?;
     sock.set_read_timeout(Some(Duration::from_millis(50)))?;
     sock.set_write_timeout(Some(Duration::from_secs(10)))?;
-    let mut conn = ConnState { tenant: "anon".to_string(), ledger: shared.ledger("anon") };
+    let mut conn =
+        ConnState { tenant: "anon".to_string(), ledger: shared.ledger("anon"), version: 1 };
     let mut reader = FrameReader::new();
     loop {
         if shared.shutdown.load(Ordering::Acquire) {
@@ -326,8 +383,24 @@ fn handle_conn(shared: &Shared, mut sock: TcpStream) -> io::Result<()> {
 
 /// Quota → admission gates for `units` of work. Returns an early reply
 /// on refusal; on success the caller OWNS `units` admission units and
-/// must release them.
-fn gate(shared: &Shared, conn: &ConnState, units: u64) -> Option<ServeReply> {
+/// must release them. Traced requests get a `serve.gate` span either way
+/// (a0 = 1 admitted, 0 refused).
+fn gate(
+    shared: &Shared,
+    conn: &ConnState,
+    units: u64,
+    ctx: Option<TraceContext>,
+) -> Option<ServeReply> {
+    let t0 = ctx.map_or(0, |_| shared.tel.now_ns());
+    let refusal = gate_inner(shared, conn, units);
+    if let Some(c) = ctx {
+        let admitted = u64::from(refusal.is_none());
+        shared.tel.span(c.child(), c.span_id, "serve.gate", "serve", t0, admitted);
+    }
+    refusal
+}
+
+fn gate_inner(shared: &Shared, conn: &ConnState, units: u64) -> Option<ServeReply> {
     let admitted = lock(&shared.quotas).admit(&conn.tenant, units, Instant::now());
     if !admitted {
         conn.ledger.rejected_quota.fetch_add(1, Ordering::Relaxed);
@@ -375,14 +448,22 @@ fn one_shot<T>(
     shared: &Shared,
     conn: &ConnState,
     units: u64,
-    run: impl Fn() -> Result<T>,
+    ctx: Option<TraceContext>,
+    run: impl Fn(Option<TraceContext>) -> Result<T>,
     ok: impl FnOnce(T) -> ServeReply,
 ) -> ServeReply {
-    if let Some(refused) = gate(shared, conn, units) {
+    if let Some(refused) = gate(shared, conn, units, ctx) {
         return refused;
     }
+    // the execute span's context is the parent the farm device hangs its
+    // own span under, so the tree reads serve.execute → farm.device → …
+    let exec_ctx = ctx.map(|c| c.child());
+    let t0_ns = exec_ctx.map_or(0, |_| shared.tel.now_ns());
     let t0 = Instant::now();
-    let result = with_farm_retry(shared, run);
+    let result = with_farm_retry(shared, || run(exec_ctx));
+    if let (Some(parent), Some(ec)) = (ctx, exec_ctx) {
+        shared.tel.span(ec, parent.span_id, "serve.execute", "serve", t0_ns, units);
+    }
     shared.admission.release(units as usize);
     conn.ledger.requests.fetch_add(1, Ordering::Relaxed);
     match result {
@@ -410,22 +491,71 @@ fn pick_device(shared: &Shared, mode: StreamMode) -> Result<usize, ServeReply> {
     }
 }
 
+/// Short span name for one request kind (the `serve.*` request span).
+fn request_span_name(req: &ServeRequest) -> &'static str {
+    match req {
+        ServeRequest::Hello { .. } => "serve.hello",
+        ServeRequest::CnUpdate { .. } => "serve.cn_update",
+        ServeRequest::Chain { .. } => "serve.chain",
+        ServeRequest::OpenStream { .. } => "serve.open_stream",
+        ServeRequest::Resume { .. } => "serve.resume",
+        ServeRequest::Push { .. } => "serve.push",
+        ServeRequest::Poll { .. } => "serve.poll",
+        ServeRequest::Checkpoint { .. } => "serve.checkpoint",
+        ServeRequest::CloseStream { .. } => "serve.close_stream",
+        ServeRequest::Stats => "serve.stats",
+    }
+}
+
 fn handle_frame(shared: &Shared, conn: &mut ConnState, payload: &[u8]) -> ServeReply {
-    let req = match decode_request(payload) {
-        Ok(req) => req,
+    let (req, wire_ctx) = match decode_request_traced(payload) {
+        Ok(v) => v,
         Err(e) => return ServeReply::Error { retryable: false, message: e.to_string() },
     };
+    // the request span: child of the envelope's (client) span when one
+    // arrived, a fresh root when the server itself is the trace origin
+    let ctx = if shared.tel.enabled() {
+        Some(wire_ctx.map_or_else(TraceContext::mint, |c| c.child()))
+    } else {
+        None
+    };
+    let parent = wire_ctx.map_or(0, |c| c.span_id);
+    let t0 = ctx.map_or(0, |_| shared.tel.now_ns());
+    let name = request_span_name(&req);
+    let reply = dispatch_request(shared, conn, req, ctx);
+    if let Some(c) = ctx {
+        shared.tel.span(c, parent, name, "serve", t0, payload.len() as u64);
+    }
+    reply
+}
+
+fn dispatch_request(
+    shared: &Shared,
+    conn: &mut ConnState,
+    req: ServeRequest,
+    ctx: Option<TraceContext>,
+) -> ServeReply {
     match req {
-        ServeRequest::Hello { tenant } => {
+        ServeRequest::Hello { tenant, version } => {
             conn.ledger = shared.ledger(&tenant);
             conn.tenant = tenant;
-            ServeReply::Welcome { version: WIRE_VERSION }
+            conn.version = version.clamp(1, WIRE_VERSION);
+            ServeReply::Welcome { version: conn.version }
         }
         ServeRequest::CnUpdate { x, y, a } => one_shot(
             shared,
             conn,
             1,
-            || shared.farm.update(CnRequestData { x: x.clone(), y: y.clone(), a: a.clone() }),
+            ctx,
+            |c| {
+                let req = WorkloadRequest::cn(&CnRequestData {
+                    x: x.clone(),
+                    y: y.clone(),
+                    a: a.clone(),
+                })?;
+                let exec = shared.farm.run_traced(req, c)?;
+                Ok(exec.output()?.clone())
+            },
             |msg| ServeReply::Output { msg },
         ),
         ServeRequest::Chain { prior, sections } => {
@@ -439,9 +569,10 @@ fn handle_frame(shared: &Shared, conn: &mut ConnState, payload: &[u8]) -> ServeR
                 shared,
                 conn,
                 sections.len() as u64,
-                || {
+                ctx,
+                |c| {
                     let req = WorkloadRequest::chain(&prior, &sections)?;
-                    let exec = shared.farm.run(req)?;
+                    let exec = shared.farm.run_traced(req, c)?;
                     Ok(exec.output()?.clone())
                 },
                 |msg| ServeReply::Output { msg },
@@ -515,13 +646,20 @@ fn handle_frame(shared: &Shared, conn: &mut ConnState, payload: &[u8]) -> ServeR
                 shared.rejected_busy.fetch_add(1, Ordering::Relaxed);
                 return ServeReply::Busy { retry_ms: shared.cfg.retry_ms };
             }
-            if let Some(refused) = gate(shared, conn, n as u64) {
+            if let Some(refused) = gate(shared, conn, n as u64, ctx) {
                 return refused;
             }
             for (y, a) in samples {
                 entry.cn.push(y, a);
             }
             entry.inflight += n;
+            // the engine room drains these samples asynchronously: hand
+            // it the push's span context so chunk/device spans still
+            // attach to this request's trace
+            if ctx.is_some() {
+                entry.ctx = ctx;
+                entry.queued_ns = shared.tel.now_ns();
+            }
             conn.ledger.requests.fetch_add(1, Ordering::Relaxed);
             ServeReply::Ack {
                 stream,
@@ -601,7 +739,7 @@ fn handle_frame(shared: &Shared, conn: &mut ConnState, payload: &[u8]) -> ServeR
             }
             std::thread::sleep(Duration::from_micros(200));
         },
-        ServeRequest::Stats => ServeReply::Stats(shared.snapshot()),
+        ServeRequest::Stats => ServeReply::Stats(shared.snapshot(conn.version >= 2)),
     }
 }
 
@@ -623,6 +761,9 @@ fn drain_round(shared: &Shared) -> u64 {
         device: usize,
         t0: Instant,
         rx: std::sync::mpsc::Receiver<Result<crate::engine::Execution>>,
+        /// (chunk span ctx, its parent span id, chunk start ns) when the
+        /// drained samples belong to a traced push.
+        trace: Option<(TraceContext, u64, u64)>,
     }
     let mut jobs: Vec<Job> = Vec::new();
     for id in reg.fair_ids(StreamMode::Sticky) {
@@ -633,9 +774,29 @@ fn drain_round(shared: &Shared) -> u64 {
         }
         match WorkloadRequest::chain(&entry.cn.state, &batch) {
             Ok(req) => {
+                // queue-wait span: push arrival → this dispatch; the
+                // cursor then resets so a follow-on chunk measures its
+                // own wait, not the whole queue history again
+                let trace = match entry.ctx {
+                    Some(c) if shared.tel.enabled() => {
+                        let now = shared.tel.now_ns();
+                        shared.tel.span_at(
+                            c.child(),
+                            c.span_id,
+                            "serve.queue_wait",
+                            "serve",
+                            entry.queued_ns,
+                            now.saturating_sub(entry.queued_ns),
+                            batch.len() as u64,
+                        );
+                        entry.queued_ns = now;
+                        Some((c.child(), c.span_id, now))
+                    }
+                    _ => None,
+                };
                 let t0 = Instant::now();
-                let rx = farm.submit_to(entry.device, req);
-                jobs.push(Job { id, batch, device: entry.device, t0, rx });
+                let rx = farm.submit_to_traced(entry.device, req, trace.map(|(cc, _, _)| cc));
+                jobs.push(Job { id, batch, device: entry.device, t0, rx, trace });
             }
             Err(e) => {
                 // malformed samples: terminal for the stream, but the
@@ -652,6 +813,9 @@ fn drain_round(shared: &Shared) -> u64 {
         let entry = reg.get_mut(job.id).expect("entry outlives its job");
         let n = job.batch.len();
         let out = recv_exec(&job.rx, job.device).and_then(|exec| Ok(exec.output()?.clone()));
+        if let Some((cc, parent, t0_ns)) = job.trace {
+            shared.tel.span(cc, parent, "serve.chunk", "serve", t0_ns, n as u64);
+        }
         match out {
             Ok(state) => {
                 entry.cn.commit(state, n as u64);
@@ -707,6 +871,7 @@ fn drain_round(shared: &Shared) -> u64 {
             })
             .collect();
         let t0 = Instant::now();
+        let t0_ns = if shared.tel.enabled() { shared.tel.now_ns() } else { 0 };
         let mut backend = FarmCnBackend::new(Arc::clone(farm));
         let tick = {
             let mut refs: Vec<&mut CnStream> =
@@ -720,6 +885,11 @@ fn drain_round(shared: &Shared) -> u64 {
             entry.cn = cn;
             if delta > 0 {
                 any = true;
+                // one coalesce span per advanced traced stream: the
+                // batch is cross-stream, so each trace sees its share
+                if let Some(c) = entry.ctx.filter(|_| shared.tel.enabled()) {
+                    shared.tel.span(c.child(), c.span_id, "serve.coalesce", "serve", t0_ns, delta);
+                }
                 entry.inflight -= delta as usize;
                 shared.admission.release(delta as usize);
                 entry.tenant.samples.fetch_add(delta, Ordering::Relaxed);

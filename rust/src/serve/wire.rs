@@ -31,11 +31,30 @@
 //!   host can drive a raw device channel through the same framing;
 //! * [`encode_checkpoint`]/[`decode_checkpoint`] — the portable
 //!   `StreamCheckpoint` image (`FGCK` magic + version byte).
+//!
+//! ## Versioning and the trace envelope
+//!
+//! [`WIRE_VERSION`] is 2. Version-dependent values get **new tags**
+//! rather than optional trailing fields, because the codec's totality
+//! property ("every strict prefix errors") forbids optionals: a
+//! version-2 `Hello` is tag 12 (tenant + declared client version), a
+//! telemetry-extended `STATS` reply is tag 12 (the version-1 body plus
+//! a [`RegistrySnapshot`](crate::obs::RegistrySnapshot) section). The
+//! version-1 encodings are still emitted whenever the value carries no
+//! version-2 information, so old peers interoperate byte-for-byte.
+//!
+//! Requests may additionally be wrapped in a **trace envelope**
+//! ([`encode_request_traced`]): a leading marker byte 0 (request tags
+//! start at 1) followed by `trace_id`/`span_id`, then the ordinary
+//! request payload. [`decode_request_traced`] accepts both enveloped
+//! and bare payloads, which is how a version-1 client talks to a
+//! version-2 server unchanged.
 
 use std::io::{self, Read, Write};
 
 use crate::coordinator::MetricsSnapshot;
 use crate::engine::StreamCheckpoint;
+use crate::obs::{RegistrySnapshot, TraceContext};
 use crate::fgp::processor::{Command, FsmState, Reply};
 use crate::fgp::RunStats;
 use crate::gmp::matrix::{c64, CMatrix};
@@ -47,8 +66,12 @@ use crate::isa::MemoryImage;
 /// length prefix cannot make a reader allocate unbounded memory.
 pub const MAX_FRAME: usize = 16 * 1024 * 1024;
 
-/// Wire protocol version carried in `Welcome`.
-pub const WIRE_VERSION: u32 = 1;
+/// Wire protocol version carried in `Welcome` (and, since 2, declared
+/// by the client in `Hello`). Version 2 adds the request trace
+/// envelope and the telemetry section of `STATS`; both are encoded
+/// under new tags, so version-1 byte streams remain valid and
+/// bit-identical.
+pub const WIRE_VERSION: u32 = 2;
 
 /// Typed decode/framing failures. Decoding never panics: every
 /// malformed input maps to one of these.
@@ -410,6 +433,9 @@ pub enum ServeRequest {
     Hello {
         /// Tenant name for quotas and per-tenant accounting.
         tenant: String,
+        /// The client's wire version. Version-1 peers have no such
+        /// field on the wire (legacy tag 1); they decode as `1`.
+        version: u32,
     },
     /// One-shot compound-node update.
     CnUpdate {
@@ -584,6 +610,10 @@ pub struct StatsSnapshot {
     pub failovers: u64,
     /// Per-tenant rows, sorted by tenant name.
     pub tenants: Vec<TenantSnapshot>,
+    /// The unified telemetry registry (version 2; empty when talking
+    /// to/behind a version-1 peer — an empty section encodes under the
+    /// legacy tag, so version-1 byte streams are unchanged).
+    pub telemetry: RegistrySnapshot,
 }
 
 fn enc_mode(e: &mut Enc, m: StreamMode) {
@@ -636,13 +666,59 @@ fn dec_metrics(d: &mut Dec) -> Result<MetricsSnapshot, WireError> {
     })
 }
 
+fn enc_registry(e: &mut Enc, r: &RegistrySnapshot) {
+    e.u32(r.counters.len() as u32);
+    for c in &r.counters {
+        e.str(&c.name);
+        e.u64(c.value);
+    }
+    e.u32(r.histograms.len() as u32);
+    for h in &r.histograms {
+        e.str(&h.name);
+        e.u64(h.count);
+        e.u64(h.mean_ns);
+        e.u64(h.p50_ns);
+        e.u64(h.p95_ns);
+        e.u64(h.p99_ns);
+    }
+}
+
+fn dec_registry(d: &mut Dec) -> Result<RegistrySnapshot, WireError> {
+    let mut r = RegistrySnapshot::new();
+    let nc = d.u32("telemetry")? as usize;
+    for _ in 0..nc {
+        let name = d.str("telemetry")?;
+        let value = d.u64("telemetry")?;
+        r.push_counter(&name, value);
+    }
+    let nh = d.u32("telemetry")? as usize;
+    for _ in 0..nh {
+        r.histograms.push(crate::obs::HistSummary {
+            name: d.str("telemetry")?,
+            count: d.u64("telemetry")?,
+            mean_ns: d.u64("telemetry")?,
+            p50_ns: d.u64("telemetry")?,
+            p95_ns: d.u64("telemetry")?,
+            p99_ns: d.u64("telemetry")?,
+        });
+    }
+    Ok(r)
+}
+
 /// Encode a [`ServeRequest`] payload.
 pub fn encode_request(req: &ServeRequest) -> Vec<u8> {
     let mut e = Enc::new();
     match req {
-        ServeRequest::Hello { tenant } => {
-            e.u8(1);
-            e.str(tenant);
+        ServeRequest::Hello { tenant, version } => {
+            if *version == 1 {
+                // exact version-1 bytes: a legacy server keeps working
+                e.u8(1);
+                e.str(tenant);
+            } else {
+                e.u8(12);
+                e.str(tenant);
+                e.u32(*version);
+            }
         }
         ServeRequest::CnUpdate { x, y, a } => {
             e.u8(2);
@@ -693,7 +769,7 @@ pub fn encode_request(req: &ServeRequest) -> Vec<u8> {
 pub fn decode_request(buf: &[u8]) -> Result<ServeRequest, WireError> {
     let mut d = Dec::new(buf);
     let req = match d.u8("ServeRequest")? {
-        1 => ServeRequest::Hello { tenant: d.str("Hello")? },
+        1 => ServeRequest::Hello { tenant: d.str("Hello")?, version: 1 },
         2 => ServeRequest::CnUpdate {
             x: d.msg("CnUpdate")?,
             y: d.msg("CnUpdate")?,
@@ -721,10 +797,53 @@ pub fn decode_request(buf: &[u8]) -> Result<ServeRequest, WireError> {
             checkpoint: d.bytes("Resume")?,
         },
         10 => ServeRequest::Stats,
+        12 => ServeRequest::Hello { tenant: d.str("Hello")?, version: d.u32("Hello")? },
         tag => return Err(WireError::BadTag { what: "ServeRequest", tag }),
     };
     d.finish()?;
     Ok(req)
+}
+
+/// Marker byte opening a trace-context envelope. Request tags start at
+/// 1, so a leading 0 is unambiguous and a bare request payload is
+/// never mistaken for an envelope.
+const TRACE_MARKER: u8 = 0;
+
+/// Encode a [`ServeRequest`], optionally wrapped in a trace envelope
+/// (`[0][trace_id u64][span_id u64][request payload]`). With
+/// `ctx = None` the bytes are identical to [`encode_request`] — the
+/// version-1 stream.
+pub fn encode_request_traced(req: &ServeRequest, ctx: Option<&TraceContext>) -> Vec<u8> {
+    match ctx {
+        None => encode_request(req),
+        Some(ctx) => {
+            let mut e = Enc::new();
+            e.u8(TRACE_MARKER);
+            e.u64(ctx.trace_id);
+            e.u64(ctx.span_id);
+            let mut buf = e.into_bytes();
+            buf.extend_from_slice(&encode_request(req));
+            buf
+        }
+    }
+}
+
+/// Decode a request payload that may carry a trace envelope. Bare
+/// payloads (version-1 peers, untraced clients) return `None` for the
+/// context. Total like every other decoder: strict prefixes of either
+/// form error, trailing bytes are rejected.
+pub fn decode_request_traced(
+    buf: &[u8],
+) -> Result<(ServeRequest, Option<TraceContext>), WireError> {
+    if buf.first() != Some(&TRACE_MARKER) {
+        return Ok((decode_request(buf)?, None));
+    }
+    let mut d = Dec::new(buf);
+    d.u8("trace envelope")?;
+    let trace_id = d.u64("trace envelope")?;
+    let span_id = d.u64("trace envelope")?;
+    let req = decode_request(&buf[d.pos..])?;
+    Ok((req, Some(TraceContext { trace_id, span_id })))
 }
 
 /// Encode a [`ServeReply`] payload.
@@ -771,7 +890,8 @@ pub fn encode_reply(reply: &ServeReply) -> Vec<u8> {
             e.bytes(bytes);
         }
         ServeReply::Stats(s) => {
-            e.u8(8);
+            // empty telemetry → exact version-1 bytes under the legacy tag
+            e.u8(if s.telemetry.is_empty() { 8 } else { 12 });
             enc_metrics(&mut e, &s.latency);
             e.u64(s.admitted);
             e.u64(s.rejected_busy);
@@ -784,6 +904,9 @@ pub fn encode_reply(reply: &ServeReply) -> Vec<u8> {
                 e.u64(t.samples);
                 e.u64(t.rejected_quota);
                 e.u64(t.rejected_busy);
+            }
+            if !s.telemetry.is_empty() {
+                enc_registry(&mut e, &s.telemetry);
             }
         }
         ServeReply::Busy { retry_ms } => {
@@ -833,7 +956,7 @@ pub fn decode_reply(buf: &[u8]) -> Result<ServeReply, WireError> {
             state: d.msg("Closed")?,
         },
         7 => ServeReply::CheckpointData { bytes: d.bytes("CheckpointData")? },
-        8 => {
+        tag @ (8 | 12) => {
             let latency = dec_metrics(&mut d)?;
             let admitted = d.u64("Stats")?;
             let rejected_busy = d.u64("Stats")?;
@@ -851,6 +974,8 @@ pub fn decode_reply(buf: &[u8]) -> Result<ServeReply, WireError> {
                     })
                 })
                 .collect::<Result<_, WireError>>()?;
+            let telemetry =
+                if tag == 12 { dec_registry(&mut d)? } else { RegistrySnapshot::default() };
             ServeReply::Stats(StatsSnapshot {
                 latency,
                 admitted,
@@ -858,6 +983,7 @@ pub fn decode_reply(buf: &[u8]) -> Result<ServeReply, WireError> {
                 rejected_quota,
                 failovers,
                 tenants,
+                telemetry,
             })
         }
         9 => ServeReply::Busy { retry_ms: d.u32("Busy")? },
@@ -1114,6 +1240,56 @@ mod tests {
         assert!(read_frame(&mut &bad[..]).is_err());
         let mut reader = FrameReader::new();
         assert!(reader.poll(&mut &bad[..]).is_err());
+    }
+
+    #[test]
+    fn trace_envelope_wraps_and_unwraps() {
+        let req = ServeRequest::Stats;
+        let ctx = TraceContext { trace_id: 0xABCD, span_id: 0x1234 };
+        let plain = encode_request_traced(&req, None);
+        assert_eq!(plain, encode_request(&req), "no context ⇒ the version-1 byte stream");
+        let wrapped = encode_request_traced(&req, Some(&ctx));
+        assert_eq!(wrapped.len(), plain.len() + 17, "marker + two u64 ids");
+        let (back, got) = decode_request_traced(&wrapped).unwrap();
+        assert_eq!(back, req);
+        assert_eq!(got, Some(ctx));
+        let (bare, none) = decode_request_traced(&plain).unwrap();
+        assert_eq!(bare, req);
+        assert!(none.is_none());
+        for cut in 0..wrapped.len() {
+            assert!(decode_request_traced(&wrapped[..cut]).is_err(), "prefix {cut} must error");
+        }
+    }
+
+    #[test]
+    fn hello_version_tags_interoperate() {
+        // a version-1 Hello is the legacy tag and round-trips as version 1
+        let v1 = ServeRequest::Hello { tenant: "t".into(), version: 1 };
+        let bytes = encode_request(&v1);
+        assert_eq!(bytes[0], 1, "version 1 must emit the legacy tag");
+        assert_eq!(decode_request(&bytes).unwrap(), v1);
+        // the current version uses the new tag and carries the number
+        let v2 = ServeRequest::Hello { tenant: "t".into(), version: WIRE_VERSION };
+        let bytes2 = encode_request(&v2);
+        assert_eq!(bytes2[0], 12);
+        assert_eq!(decode_request(&bytes2).unwrap(), v2);
+    }
+
+    #[test]
+    fn stats_telemetry_section_is_tag_gated() {
+        let mut s = StatsSnapshot::default();
+        let legacy = encode_reply(&ServeReply::Stats(s.clone()));
+        assert_eq!(legacy[0], 8, "empty telemetry must emit the version-1 tag");
+        s.telemetry.push_counter("engine.cache_hit", 3);
+        let extended = encode_reply(&ServeReply::Stats(s.clone()));
+        assert_eq!(extended[0], 12);
+        match decode_reply(&extended).unwrap() {
+            ServeReply::Stats(back) => {
+                assert_eq!(back.telemetry.counter("engine.cache_hit"), Some(3));
+                assert_eq!(back, s);
+            }
+            other => panic!("expected Stats, got {other:?}"),
+        }
     }
 
     #[test]

@@ -1,0 +1,254 @@
+//! Integration: end-to-end telemetry (the observability tentpole).
+//!
+//! The contracts under test:
+//!
+//! * **correlation** — one traced request against a live [`FgpServe`]
+//!   yields ONE span tree: every span carries the client's trace id, and
+//!   parent links walk from the device's per-opcode cycle spans up
+//!   through the engine, farm, and serve layers to the client's root
+//!   span — across real TCP and three thread hops;
+//! * **exporters** — the same spans render as structurally valid Chrome
+//!   trace-event JSON and as a non-empty flame summary;
+//! * **inertness (invariant 7)** — with telemetry disabled (the
+//!   default), the served numbers are bitwise identical to the enabled
+//!   run and the span ring stays empty;
+//! * **interop** — a wire-version-1 peer (hand-encoded legacy `Hello`)
+//!   still handshakes, is never sent a trace envelope or a telemetry
+//!   `Stats` section, and decodes every reply.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use fgp_repro::gmp::matrix::{c64, CMatrix};
+use fgp_repro::gmp::message::GaussMessage;
+use fgp_repro::obs::{chrome_trace, flame_summary, SpanRecord, TelemetryConfig};
+use fgp_repro::serve::{
+    decode_reply, read_frame, FgpServe, ServeClient, ServeConfig, ServeReply, StreamMode,
+};
+use fgp_repro::testutil::Rng;
+
+fn msg(rng: &mut Rng, n: usize) -> GaussMessage {
+    GaussMessage::new(
+        (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+        CMatrix::random_psd(rng, n, 1.0).scale(0.15),
+    )
+}
+
+fn sample(rng: &mut Rng, n: usize) -> (GaussMessage, CMatrix) {
+    (msg(rng, n), CMatrix::random(rng, n, n).scale(0.3))
+}
+
+fn traced_server() -> FgpServe {
+    FgpServe::start(ServeConfig { telemetry: TelemetryConfig::on(), ..ServeConfig::default() })
+        .unwrap()
+}
+
+/// Spans belonging to one trace, waited for until `want` distinct span
+/// names have shown up (the engine room records asynchronously).
+fn spans_of(srv: &FgpServe, trace_id: u64, want: &[&str]) -> Vec<SpanRecord> {
+    let tel = srv.telemetry();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let spans: Vec<SpanRecord> =
+            tel.spans().snapshot().into_iter().filter(|s| s.trace_id == trace_id).collect();
+        if want.iter().all(|w| spans.iter().any(|s| s.name == *w)) {
+            return spans;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "trace {trace_id:#x} never grew {want:?}; has {:?}",
+            spans.iter().map(|s| s.name).collect::<Vec<_>>()
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// Walk parent links from `span` to a root; panics on a broken link or
+/// a cycle. Returns the root's span id.
+fn root_of(spans: &[SpanRecord], mut span: &SpanRecord) -> u64 {
+    for _ in 0..64 {
+        if span.parent_id == 0 {
+            return span.span_id;
+        }
+        span = spans
+            .iter()
+            .find(|s| s.span_id == span.parent_id)
+            .unwrap_or_else(|| panic!("span {} has a dangling parent", span.name));
+    }
+    panic!("parent chain did not terminate");
+}
+
+#[test]
+fn one_request_is_one_correlated_tree_from_client_to_device_cycles() {
+    let srv = traced_server();
+    let mut client =
+        ServeClient::connect_traced(srv.addr(), "alice", srv.telemetry()).unwrap();
+    assert_eq!(client.negotiated_version(), 2);
+    let mut rng = Rng::new(91);
+
+    // --- one-shot: the synchronous tree is complete when the reply is
+    let x = msg(&mut rng, 4);
+    let (y, a) = sample(&mut rng, 4);
+    client.cn_update(x, y, a).unwrap();
+    let trace = client.last_trace_id();
+    assert_ne!(trace, 0);
+    let spans = spans_of(
+        &srv,
+        trace,
+        &["client.request", "serve.cn_update", "serve.gate", "serve.execute", "farm.device",
+          "engine.execute", "fgp.run"],
+    );
+    // every span in the trace hangs off the client's root span
+    let root = spans.iter().find(|s| s.name == "client.request").unwrap();
+    assert_eq!(root.parent_id, 0, "the client span is the root");
+    for s in &spans {
+        assert_eq!(s.trace_id, trace);
+        assert_eq!(root_of(&spans, s), root.span_id, "{} is orphaned", s.name);
+    }
+    // the device layer rescaled its cycle phases under fgp.run
+    let run = spans.iter().find(|s| s.name == "fgp.run").unwrap();
+    assert!(run.a0 > 0, "fgp.run carries the cycle count");
+    assert!(
+        spans.iter().any(|s| s.layer == "fgp" && s.parent_id == run.span_id),
+        "no per-opcode phase spans under fgp.run: {spans:?}"
+    );
+
+    // --- streamed: the async engine-room spans join the push's trace
+    let prior = msg(&mut rng, 4);
+    let samples: Vec<_> = (0..6).map(|_| sample(&mut rng, 4)).collect();
+    let (id, _) = client.open_stream("traced", StreamMode::Sticky, prior).unwrap();
+    client.push(id, samples).unwrap();
+    let push_trace = client.last_trace_id();
+    assert_ne!(push_trace, trace, "each call mints a fresh trace");
+    let push_spans = spans_of(
+        &srv,
+        push_trace,
+        &["client.request", "serve.push", "serve.queue_wait", "serve.chunk", "farm.device",
+          "fgp.run"],
+    );
+    let push_root = push_spans.iter().find(|s| s.name == "client.request").unwrap();
+    for s in &push_spans {
+        assert_eq!(root_of(&push_spans, s), push_root.span_id, "{} is orphaned", s.name);
+    }
+    client.close_stream(id).unwrap();
+
+    // --- exporters accept the real trace
+    let chrome = chrome_trace(&spans);
+    assert!(chrome.starts_with("{\"traceEvents\":["));
+    assert!(chrome.ends_with("]}"));
+    assert!(chrome.contains("\"fgp.run\""));
+    assert!(chrome.contains("\"ph\":\"X\""));
+    let flame = flame_summary(&spans, trace);
+    assert!(flame.contains("client.request"), "{flame}");
+    assert!(flame.contains("fgp.run"), "{flame}");
+
+    // --- the wire Stats carries the unified registry for a v2 peer
+    let stats = client.stats().unwrap();
+    assert!(!stats.telemetry.is_empty());
+    assert!(stats.telemetry.counter("engine.cache_hit").is_some());
+    assert!(stats.telemetry.counter("serve.admitted").unwrap() >= 1);
+    let device_cycles: u64 = ["mma", "mms", "fad", "smm"]
+        .iter()
+        .filter_map(|op| stats.telemetry.counter(&format!("fgp.cycles.{op}")))
+        .sum();
+    assert!(device_cycles > 0, "no per-opcode cycle counters reached the wire");
+    assert!(stats.telemetry.histogram("serve.latency").is_some());
+}
+
+#[test]
+fn disabled_telemetry_is_bitwise_inert() {
+    let run = |cfg: ServeConfig| {
+        let srv = FgpServe::start(cfg).unwrap();
+        let mut client = ServeClient::connect_traced(srv.addr(), "t", srv.telemetry()).unwrap();
+        let mut rng = Rng::new(97);
+        let prior = msg(&mut rng, 4);
+        let samples: Vec<_> = (0..7).map(|_| sample(&mut rng, 4)).collect();
+        let (id, _) = client.open_stream("inert", StreamMode::Sticky, prior).unwrap();
+        client.push(id, samples).unwrap();
+        let closed = client.close_stream(id).unwrap();
+        let x = msg(&mut rng, 4);
+        let (y, a) = sample(&mut rng, 4);
+        let one = client.cn_update(x, y, a).unwrap();
+        (closed.state, one, srv)
+    };
+
+    let (state_on, one_on, srv_on) =
+        run(ServeConfig { telemetry: TelemetryConfig::on(), ..ServeConfig::default() });
+    let (state_off, one_off, srv_off) = run(ServeConfig::default());
+
+    // invariant 7: identical numbers, span for span of work
+    assert_eq!(state_on, state_off, "telemetry changed a served stream result");
+    assert_eq!(one_on, one_off, "telemetry changed a one-shot result");
+
+    // the disabled ring records nothing and drops nothing
+    let off = srv_off.telemetry();
+    assert!(!off.enabled());
+    assert!(off.spans().snapshot().is_empty());
+    assert_eq!(off.spans().dropped(), 0);
+    assert!(!srv_on.telemetry().spans().snapshot().is_empty());
+
+    // registry counters run either way — the STATS reply depends on them
+    for srv in [&srv_on, &srv_off] {
+        let t = srv.stats().telemetry;
+        assert!(t.counter("engine.cache_hit").is_some(), "counters must survive the off switch");
+        assert!(t.counter("serve.admitted").unwrap() >= 1);
+    }
+}
+
+#[test]
+fn wire_version_1_peer_interoperates() {
+    let srv = traced_server();
+    let mut sock = TcpStream::connect(srv.addr()).unwrap();
+    sock.set_nodelay(true).unwrap();
+
+    // a pre-telemetry peer's Hello: tag 1 + tenant, length-framed by hand
+    let mut hello = vec![1u8];
+    hello.extend_from_slice(&(6u32.to_le_bytes()));
+    hello.extend_from_slice(b"legacy");
+    let mut frame = (hello.len() as u32).to_le_bytes().to_vec();
+    frame.extend_from_slice(&hello);
+    sock.write_all(&frame).unwrap();
+    let reply = read_frame(&mut sock).unwrap().unwrap();
+    match decode_reply(&reply).unwrap() {
+        // the server downgrades to the peer's generation
+        ServeReply::Welcome { version } => assert_eq!(version, 1),
+        other => panic!("expected Welcome, got {other:?}"),
+    }
+
+    // Stats to a v1 peer must omit the telemetry section: the reply is
+    // the exact v1 byte shape (legacy tag), which this decode pins
+    let stats_req = vec![10u8];
+    let mut frame = (stats_req.len() as u32).to_le_bytes().to_vec();
+    frame.extend_from_slice(&stats_req);
+    sock.write_all(&frame).unwrap();
+    let reply = read_frame(&mut sock).unwrap().unwrap();
+    assert_eq!(reply[0], 8, "v1 peers get the legacy Stats tag");
+    match decode_reply(&reply).unwrap() {
+        ServeReply::Stats(s) => assert!(s.telemetry.is_empty()),
+        other => panic!("expected Stats, got {other:?}"),
+    }
+
+    // meanwhile a v2 client on the same server still gets the full reply
+    let mut v2 = ServeClient::connect(srv.addr(), "modern").unwrap();
+    assert_eq!(v2.negotiated_version(), 2);
+    assert!(v2.stats().unwrap().telemetry.counter("serve.admitted").is_some());
+}
+
+#[test]
+fn untraced_client_against_a_traced_server_stays_silent_clientside() {
+    // no client telemetry handle: no envelope goes out, yet the server
+    // still records its own (server-rooted) spans — and the results are
+    // the servable numbers either way
+    let srv = traced_server();
+    let mut client = ServeClient::connect(srv.addr(), "plain").unwrap();
+    let mut rng = Rng::new(101);
+    let x = msg(&mut rng, 4);
+    let (y, a) = sample(&mut rng, 4);
+    client.cn_update(x, y, a).unwrap();
+    assert_eq!(client.last_trace_id(), 0, "untraced clients mint nothing");
+    let spans = srv.telemetry().spans().snapshot();
+    let cn = spans.iter().find(|s| s.name == "serve.cn_update").unwrap();
+    assert_eq!(cn.parent_id, 0, "server-minted request spans are roots");
+    assert!(!spans.iter().any(|s| s.name == "client.request"));
+}

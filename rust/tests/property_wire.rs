@@ -22,10 +22,11 @@ use fgp_repro::fgp::RunStats;
 use fgp_repro::gmp::matrix::{c64, CMatrix};
 use fgp_repro::gmp::message::GaussMessage;
 use fgp_repro::isa::MemoryImage;
+use fgp_repro::obs::{HistSummary, RegistrySnapshot, TraceContext};
 use fgp_repro::serve::{
-    decode_checkpoint, decode_reply, decode_request, encode_checkpoint, encode_reply,
-    encode_request, read_frame, write_frame, ServeReply, ServeRequest, StatsSnapshot, StreamMode,
-    TenantSnapshot, WireError, MAX_FRAME,
+    decode_checkpoint, decode_reply, decode_request, decode_request_traced, encode_checkpoint,
+    encode_reply, encode_request, encode_request_traced, read_frame, write_frame, ServeReply,
+    ServeRequest, StatsSnapshot, StreamMode, TenantSnapshot, WireError, MAX_FRAME, WIRE_VERSION,
 };
 use fgp_repro::serve::wire::{decode_command, decode_device_reply, encode_command, encode_device_reply};
 use fgp_repro::testutil::Rng;
@@ -61,7 +62,12 @@ fn awkward_matrix(rng: &mut Rng, r: usize, c: usize) -> CMatrix {
 
 fn every_request(rng: &mut Rng) -> Vec<ServeRequest> {
     vec![
-        ServeRequest::Hello { tenant: "tenant-α".into() },
+        // both wire generations of the handshake: version 1 keeps the
+        // legacy tag (canonical-encoding identity), anything else rides
+        // the versioned tag
+        ServeRequest::Hello { tenant: "tenant-α".into(), version: 1 },
+        ServeRequest::Hello { tenant: "tenant-α".into(), version: WIRE_VERSION },
+        ServeRequest::Hello { tenant: "v0-probe".into(), version: 0 },
         ServeRequest::CnUpdate {
             x: awkward_msg(rng, 4),
             y: awkward_msg(rng, 4),
@@ -136,6 +142,32 @@ fn every_reply(rng: &mut Rng) -> Vec<ServeReply> {
                 },
                 TenantSnapshot::default(),
             ],
+            telemetry: RegistrySnapshot::default(),
+        }),
+        // the wire-version-2 Stats shape: a populated telemetry section
+        // flips the reply onto the versioned tag
+        ServeReply::Stats(StatsSnapshot {
+            latency: MetricsSnapshot::default(),
+            admitted: 1,
+            rejected_busy: 0,
+            rejected_quota: 0,
+            failovers: 0,
+            tenants: Vec::new(),
+            telemetry: {
+                let mut t = RegistrySnapshot::new();
+                t.push_counter("engine.cache_hit", u64::MAX);
+                t.push_counter("fgp.cycles.fad", 167);
+                t.histograms.push(HistSummary {
+                    name: "serve.latency".into(),
+                    count: 40,
+                    mean_ns: 75_250,
+                    p50_ns: 767,
+                    p95_ns: 98_303,
+                    p99_ns: 98_303,
+                });
+                t.sort();
+                t
+            },
         }),
         ServeReply::Busy { retry_ms: 5 },
         ServeReply::QuotaExceeded { retry_ms: u32::MAX },
@@ -299,6 +331,60 @@ fn frames_at_the_cap_pass_and_one_byte_over_fails() {
     let mut corrupt = ((MAX_FRAME + 1) as u32).to_le_bytes().to_vec();
     corrupt.extend_from_slice(&[0, 0, 0]);
     assert!(read_frame(&mut corrupt.as_slice()).is_err());
+}
+
+#[test]
+fn trace_envelope_round_trips_and_every_prefix_errors() {
+    let mut rng = Rng::new(23);
+    let ctx = TraceContext { trace_id: 0xDEAD_BEEF_0BAD_F00D, span_id: u64::MAX };
+    for req in every_request(&mut rng) {
+        // without a context the traced encoder is byte-identical to the
+        // bare one, and the traced decoder accepts bare frames
+        let bare = encode_request(&req);
+        assert_eq!(encode_request_traced(&req, None), bare, "{req:?}: None envelope added bytes");
+        let (back, got) = decode_request_traced(&bare).unwrap();
+        assert_eq!(back, req);
+        assert_eq!(got, None);
+
+        // with a context: 17-byte envelope, ids bit-exact, payload
+        // re-encodes byte-identically
+        let traced = encode_request_traced(&req, Some(&ctx));
+        assert_eq!(traced.len(), bare.len() + 17, "{req:?}: envelope size");
+        let (back, got) = decode_request_traced(&traced).unwrap();
+        assert_eq!(back, req, "{req:?}: payload changed under the envelope");
+        assert_eq!(got, Some(ctx), "{req:?}: context changed over the wire");
+        assert_eq!(encode_request_traced(&back, got.as_ref()), traced, "{req:?}: re-encode");
+
+        // totality holds through the envelope too: every strict prefix
+        // errors, trailing bytes are rejected
+        for cut in 0..traced.len() {
+            assert!(
+                decode_request_traced(&traced[..cut]).is_err(),
+                "{req:?}: prefix of {cut} bytes decoded"
+            );
+        }
+        let mut extended = traced;
+        extended.push(0xAA);
+        assert!(decode_request_traced(&extended).is_err(), "{req:?}: trailing byte accepted");
+    }
+}
+
+#[test]
+fn legacy_v1_hello_bytes_still_decode() {
+    // hand-built v1 frame: tag 1, then the tenant string — exactly what
+    // a pre-telemetry peer puts on the wire
+    let mut old = vec![1u8];
+    old.extend_from_slice(&(5u32.to_le_bytes()));
+    old.extend_from_slice(b"alice");
+    let req = decode_request(&old).unwrap();
+    assert_eq!(req, ServeRequest::Hello { tenant: "alice".into(), version: 1 });
+    // and the canonical re-encode of a version-1 Hello IS the v1 frame
+    assert_eq!(encode_request(&req), old);
+    // a v1 peer never sends the envelope marker, and the traced decoder
+    // hands its frames through untouched
+    let (back, ctx) = decode_request_traced(&old).unwrap();
+    assert_eq!(back, req);
+    assert_eq!(ctx, None);
 }
 
 #[test]

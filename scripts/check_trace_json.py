@@ -1,0 +1,96 @@
+#!/usr/bin/env python3
+"""Structurally validate a Chrome trace-event JSON export.
+
+Dependency-free checker for the files ``rust/src/obs/export.rs`` emits
+(and ``chrome://tracing`` / Perfetto load). Verifies the envelope is
+``{"traceEvents": [...]}`` with at least one complete event, and that
+every event is well-formed:
+
+* ``ph`` is ``"X"`` (complete event) or ``"M"`` (metadata);
+* ``X`` events carry a non-empty ``name``, a ``cat`` (the recording
+  layer), integer ``pid``/``tid``, non-negative numeric ``ts``/``dur``
+  (microseconds), and ``args`` with ``trace_id``/``span_id``/
+  ``parent_id`` as ``0x``-prefixed ids plus a numeric ``a0``;
+* ``M`` events are ``thread_name`` rows naming a layer.
+
+Usage: check_trace_json.py <trace.json> [required,span,names]
+
+The optional second argument is a comma-separated list of span names
+that must each appear as some ``X`` event — CI uses it to pin the full
+client-to-device chain of one traced request.
+"""
+
+import json
+import sys
+
+
+def fail(msg):
+    print(f"FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_id(event, key, i):
+    v = event.get("args", {}).get(key)
+    if not (isinstance(v, str) and v.startswith("0x") and len(v) == 18):
+        fail(f"event[{i}]: args.{key} is not an 0x-prefixed 64-bit id: {v!r}")
+
+
+def main():
+    if len(sys.argv) not in (2, 3):
+        sys.exit(__doc__)
+    path = sys.argv[1]
+    required = [n for n in sys.argv[2].split(",") if n] if len(sys.argv) == 3 else []
+
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or not isinstance(doc.get("traceEvents"), list):
+        fail(f"{path}: root is not an object with a traceEvents array")
+    events = doc["traceEvents"]
+
+    names = set()
+    complete = 0
+    for i, e in enumerate(events):
+        if not isinstance(e, dict):
+            fail(f"event[{i}]: not an object")
+        ph = e.get("ph")
+        if ph == "M":
+            if e.get("name") != "thread_name":
+                fail(f"event[{i}]: metadata event is not a thread_name row")
+            if not e.get("args", {}).get("name"):
+                fail(f"event[{i}]: thread_name row names no layer")
+        elif ph == "X":
+            complete += 1
+            name = e.get("name")
+            if not (isinstance(name, str) and name):
+                fail(f"event[{i}]: complete event has no name")
+            names.add(name)
+            if not (isinstance(e.get("cat"), str) and e["cat"]):
+                fail(f"event[{i}]: complete event has no cat (layer)")
+            for key in ("pid", "tid"):
+                if not (isinstance(e.get(key), int) and not isinstance(e[key], bool)):
+                    fail(f"event[{i}]: {key} is not an integer")
+            for key in ("ts", "dur"):
+                v = e.get(key)
+                if not (isinstance(v, (int, float)) and not isinstance(v, bool)):
+                    fail(f"event[{i}]: {key} is not numeric")
+                if v < 0:
+                    fail(f"event[{i}]: {key} is negative")
+            for key in ("trace_id", "span_id", "parent_id"):
+                check_id(e, key, i)
+            a0 = e.get("args", {}).get("a0")
+            if not (isinstance(a0, int) and not isinstance(a0, bool)):
+                fail(f"event[{i}]: args.a0 is not an integer")
+        else:
+            fail(f"event[{i}]: unexpected ph {ph!r}")
+
+    if complete == 0:
+        fail(f"{path}: no complete (ph=X) events")
+    missing = [n for n in required if n not in names]
+    if missing:
+        fail(f"{path}: required span(s) missing from the trace: {missing}")
+
+    print(f"OK {path}: {complete} complete event(s), {len(events) - complete} metadata row(s)")
+
+
+if __name__ == "__main__":
+    main()

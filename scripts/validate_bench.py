@@ -3,7 +3,8 @@
 
 Dependency-free (no jsonschema wheel in CI): implements the subset of
 JSON Schema the schemas in scripts/ use — type, required, properties,
-items, minItems, enum, minimum, exclusiveMinimum — plus the custom
+items, minItems, enum, minimum, exclusiveMinimum, maximum,
+exclusiveMaximum — plus the custom
 ``x-contains-engines`` key: every listed name must appear as the
 ``engine`` field of some element of the array under validation.
 
@@ -49,6 +50,12 @@ def check(data, schema, path="$"):
         if "exclusiveMinimum" in schema and data <= schema["exclusiveMinimum"]:
             raise ValidationError(
                 f"{path}: {data} <= exclusiveMinimum {schema['exclusiveMinimum']}"
+            )
+        if "maximum" in schema and data > schema["maximum"]:
+            raise ValidationError(f"{path}: {data} > maximum {schema['maximum']}")
+        if "exclusiveMaximum" in schema and data >= schema["exclusiveMaximum"]:
+            raise ValidationError(
+                f"{path}: {data} >= exclusiveMaximum {schema['exclusiveMaximum']}"
             )
 
     if isinstance(data, dict):
