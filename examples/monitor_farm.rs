@@ -1,0 +1,110 @@
+//! Operational-intelligence quickstart: watch a farm degrade, alert,
+//! and heal itself.
+//!
+//! Boots [`FgpServe`] with the health layer enabled (a background
+//! watcher samples the unified registry every 10 ms, one SLO for the
+//! demo tenant), attaches a stderr alert sink, and streams RLS-style
+//! sections over two sticky streams. Mid-run it injects a scripted
+//! 4 ms delay into device 1 — the same knob the E18 bench uses — and
+//! then narrates what the health layer does about it:
+//!
+//! * the `DeviceOutlier` detector fires once device 1's EWMA latency
+//!   crosses 8× the live-peer median (printed by the stderr sink);
+//! * health-aware routing *drains* the stream pinned to device 1 onto
+//!   a healthy member before dispatching its next chunk — zero samples
+//!   lost, final states bitwise identical to an undegraded run;
+//! * the wire `Health` request (v2) returns SLO burn rates, the firing
+//!   alert, and per-device routing scores — printed as the operator
+//!   report, alongside the registry in Prometheus text exposition.
+//!
+//! Run: `cargo run --release --example monitor_farm`
+
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+use fgp_repro::gmp::matrix::{c64, CMatrix};
+use fgp_repro::gmp::message::GaussMessage;
+use fgp_repro::obs::health::{HealthConfig, SloDef, StderrSink};
+use fgp_repro::obs::prometheus_text;
+use fgp_repro::serve::{FgpServe, ServeClient, ServeConfig, StreamMode};
+use fgp_repro::testutil::Rng;
+
+fn msg(rng: &mut Rng, n: usize) -> GaussMessage {
+    GaussMessage::new(
+        (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+        CMatrix::random_psd(rng, n, 1.0).scale(0.15),
+    )
+}
+
+fn sample(rng: &mut Rng, n: usize) -> (GaussMessage, CMatrix) {
+    (msg(rng, n), CMatrix::random(rng, n, n).scale(0.3))
+}
+
+fn main() -> Result<()> {
+    // --- server side: health on, 10 ms watcher cadence, one SLO
+    let mut health = HealthConfig::on();
+    health.watch.interval_ms = 10;
+    health.watch.fire_after = 2;
+    health.slos.push(SloDef::new("demo", 0, 0.05));
+    let srv = FgpServe::start(ServeConfig { devices: 2, health, ..ServeConfig::default() })?;
+    srv.add_alert_sink(Box::new(StderrSink));
+    println!("serving on {} (wire v2, health watcher running)", srv.addr());
+
+    // --- two sticky streams; round-robin pins them to different devices
+    let mut client = ServeClient::connect(srv.addr(), "demo")?;
+    let mut rng = Rng::new(2026);
+    let (id_a, dev_a) = client.open_stream("a", StreamMode::Sticky, msg(&mut rng, 4))?;
+    let (id_b, dev_b) = client.open_stream("b", StreamMode::Sticky, msg(&mut rng, 4))?;
+    println!("stream {id_a} pinned to device {dev_a}, stream {id_b} to device {dev_b}");
+    let slow_id = if dev_a == 1 { id_a } else { id_b };
+    let mut pushed = [0u64; 2];
+    let mut feed = |client: &mut ServeClient, rng: &mut Rng, pushed: &mut [u64; 2], rounds| {
+        for _ in 0..rounds {
+            for (slot, id) in [id_a, id_b].iter().enumerate() {
+                let batch: Vec<_> = (0..3).map(|_| sample(rng, 4)).collect();
+                pushed[slot] += batch.len() as u64;
+                client.push(*id, batch).unwrap();
+            }
+            std::thread::sleep(Duration::from_millis(4));
+        }
+    };
+
+    // --- healthy traffic: both devices warm their latency EWMAs
+    feed(&mut client, &mut rng, &mut pushed, 8);
+    println!("\nhealthy farm:\n{}", srv.health().report());
+
+    // --- degrade device 1 and keep the traffic flowing
+    println!("injecting a 4 ms delay into device 1 ...");
+    srv.farm().set_device_delay(1, 4)?;
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        feed(&mut client, &mut rng, &mut pushed, 1);
+        let pin = client.poll(slow_id)?.device;
+        if pin != 1 {
+            println!("stream {slow_id} drained off device 1 onto device {pin}");
+            break;
+        }
+        ensure!(Instant::now() < deadline, "stream never drained off the slow device");
+    }
+
+    // --- the operator's view: the wire Health reply, then Prometheus
+    let health = client.health()?;
+    println!("\ndegraded farm:\n{}", health.report());
+    let stats = srv.stats();
+    println!("serve.drains = {}", stats.telemetry.counter("serve.drains").unwrap_or(0));
+
+    // --- every pushed sample still lands, drain or no drain
+    let a = client.close_stream(id_a)?;
+    let b = client.close_stream(id_b)?;
+    ensure!(a.samples_done + b.samples_done == pushed[0] + pushed[1], "lost samples");
+    println!("closed: {} + {} samples, none lost", a.samples_done, b.samples_done);
+
+    println!("\n--- registry, Prometheus text exposition (excerpt) ---");
+    for line in prometheus_text(&stats.telemetry).lines().filter(|l| l.contains("farm_device")) {
+        println!("{line}");
+    }
+
+    srv.shutdown();
+    println!("\nmonitor_farm OK");
+    Ok(())
+}

@@ -1,0 +1,338 @@
+//! E18 — operational intelligence: the health layer's regression gate.
+//!
+//! Three phases:
+//!
+//! 1. **inertness** — the same sticky-stream workload (identical seeds)
+//!    driven through a health-ON server and a default (health-OFF)
+//!    server. The final stream states must be **bitwise identical**
+//!    (ARCHITECTURE invariant 7, extended), and the OFF server must
+//!    report a watcher that never existed (`enabled: false`, zero
+//!    snapshots, zero device clock reads).
+//! 2. **clean run** — the health-ON server from phase 1, with a
+//!    collecting alert sink attached before traffic: after a bounded
+//!    number of watcher snapshots over a healthy farm, **zero alerts**
+//!    may have fired (no false positives) and every SLO reads healthy.
+//! 3. **degraded run** — a fresh health-ON server with a scripted delay
+//!    injected into one device: the `DeviceOutlier` detector must fire
+//!    within `MAX_SNAPSHOTS_TO_FIRE` watcher snapshots of the
+//!    degradation, sticky streams must *drain* off the slow member
+//!    (`serve.drains` ≥ 1) with **zero lost samples**, and the final
+//!    states must be bitwise identical to an undegraded replay.
+//!
+//! Emits **`BENCH_health.json`** (validated in CI against
+//! `scripts/bench_health.schema.json`) and **`BENCH_health_prom.txt`**
+//! (the degraded server's registry in Prometheus text exposition,
+//! validated by `scripts/check_prom_text.py`), and **exits non-zero**
+//! if any gate above trips.
+//!
+//! Run: `cargo bench --bench health_slo [-- --smoke]`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use fgp_repro::benchutil::{banner, json_num, json_obj, json_str, write_json};
+use fgp_repro::gmp::matrix::{c64, CMatrix};
+use fgp_repro::gmp::message::GaussMessage;
+use fgp_repro::obs::export::prometheus_text;
+use fgp_repro::obs::health::{AlertKind, AlertState, HealthConfig, SloDef, VecSink};
+use fgp_repro::serve::{FgpServe, ServeClient, ServeConfig, StreamMode};
+use fgp_repro::testutil::Rng;
+
+/// Upper bound on watcher snapshots between the scripted degradation
+/// and the `DeviceOutlier` firing edge. The detector needs the slow
+/// device's EWMA to cross `device_factor` × the live median and then
+/// `fire_after` consecutive breaching snapshots; at a 5 ms cadence this
+/// bound is ~3 s of wall time — far past any healthy CI run.
+const MAX_SNAPSHOTS_TO_FIRE: u64 = 600;
+
+/// Scripted per-dispatch delay injected into the degraded device (ms).
+const DEGRADE_DELAY_MS: u64 = 4;
+
+fn msg(rng: &mut Rng, n: usize) -> GaussMessage {
+    GaussMessage::new(
+        (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+        CMatrix::random_psd(rng, n, 1.0).scale(0.15),
+    )
+}
+
+fn sample(rng: &mut Rng, n: usize) -> (GaussMessage, CMatrix) {
+    (msg(rng, n), CMatrix::random(rng, n, n).scale(0.3))
+}
+
+/// The bench's health config: 5 ms watcher cadence, fire after 2
+/// breaching snapshots, one SLO for the bench tenant. `min_activity`
+/// is raised past the default because the first few watcher windows of
+/// a cold server see mostly compile misses — a real signal the cache
+/// detector must not judge on a handful of events during warmup.
+fn bench_health() -> HealthConfig {
+    let mut h = HealthConfig::on();
+    h.watch.interval_ms = 5;
+    h.watch.fire_after = 2;
+    h.watch.min_activity = 32;
+    h.slos.push(SloDef::new("bench", 0, 0.05));
+    h
+}
+
+/// Drive `rounds` × `per_round` samples onto two sticky streams with the
+/// given seed and return the two final states + per-stream sample count.
+/// The workload is a pure function of the seed, so two servers fed the
+/// same seed must serve bitwise-identical states.
+fn run_workload(
+    srv: &FgpServe,
+    seed: u64,
+    rounds: usize,
+    per_round: usize,
+) -> Result<(Vec<GaussMessage>, u64)> {
+    let mut client = ServeClient::connect(srv.addr(), "bench")?;
+    let mut rng = Rng::new(seed);
+    let priors = [msg(&mut rng, 4), msg(&mut rng, 4)];
+    let mut ids = Vec::new();
+    for (i, p) in priors.iter().enumerate() {
+        let (id, _) = client.open_stream(&format!("wl{i}"), StreamMode::Sticky, p.clone())?;
+        ids.push(id);
+    }
+    for _ in 0..rounds {
+        for id in &ids {
+            let batch: Vec<_> = (0..per_round).map(|_| sample(&mut rng, 4)).collect();
+            client.push(*id, batch)?;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let mut states = Vec::new();
+    let mut done = 0;
+    for id in ids {
+        let closed = client.close_stream(id)?;
+        done += closed.samples_done;
+        states.push(closed.state);
+    }
+    Ok((states, done))
+}
+
+/// Phase 3: degrade device 1 mid-workload, wait for the outlier alert
+/// and the drain, and account for every pushed sample.
+struct DegradedRun {
+    snapshots_to_fire: u64,
+    fired: bool,
+    drains: u64,
+    pushed: [u64; 2],
+    done: [u64; 2],
+    states: [GaussMessage; 2],
+    fed: [Vec<(GaussMessage, CMatrix)>; 2],
+    priors: [GaussMessage; 2],
+    slow_score: f64,
+    fast_score: f64,
+    prom_text: String,
+}
+
+fn degraded_run(seed: u64, warm_rounds: usize) -> Result<DegradedRun> {
+    let srv = FgpServe::start(ServeConfig { health: bench_health(), ..ServeConfig::default() })?;
+    let sink = Arc::new(VecSink::new());
+    srv.add_alert_sink(Box::new(Arc::clone(&sink)));
+    let mut client = ServeClient::connect(srv.addr(), "bench")?;
+    let mut rng = Rng::new(seed);
+    let priors = [msg(&mut rng, 4), msg(&mut rng, 4)];
+    let (id_a, dev_a) = client.open_stream("da", StreamMode::Sticky, priors[0].clone())?;
+    let (id_b, _) = client.open_stream("db", StreamMode::Sticky, priors[1].clone())?;
+    // round-robin spread the pins; identify the stream on device 1
+    let slow_id = if dev_a == 1 { id_a } else { id_b };
+    let ids = [id_a, id_b];
+    let mut fed: [Vec<(GaussMessage, CMatrix)>; 2] = [Vec::new(), Vec::new()];
+    let mut feed = |client: &mut ServeClient, rng: &mut Rng, fed: &mut [Vec<_>; 2], rounds| {
+        for _ in 0..rounds {
+            for (slot, id) in ids.iter().enumerate() {
+                let batch: Vec<_> = (0..3).map(|_| sample(rng, 4)).collect();
+                fed[slot].extend(batch.iter().cloned());
+                client.push(*id, batch).unwrap();
+            }
+            std::thread::sleep(Duration::from_millis(3));
+        }
+    };
+
+    // warm both devices' EWMAs, then inject the degradation
+    feed(&mut client, &mut rng, &mut fed, warm_rounds);
+    let snap0 = srv.health().snapshots;
+    srv.farm().set_device_delay(1, DEGRADE_DELAY_MS)?;
+
+    // keep traffic flowing until the outlier fires and the pin moves
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut fired_at = None;
+    let mut drained = false;
+    while (fired_at.is_none() || !drained) && Instant::now() < deadline {
+        feed(&mut client, &mut rng, &mut fed, 1);
+        if fired_at.is_none() {
+            let outlier = sink.events().iter().any(|a| {
+                a.kind == AlertKind::DeviceOutlier
+                    && a.state == AlertState::Firing
+                    && a.subject == "farm.device1"
+            });
+            if outlier {
+                fired_at = Some(srv.health().snapshots);
+            }
+        }
+        drained = client.poll(slow_id)?.device != 1;
+    }
+
+    let health = srv.health();
+    let score = |d: u32| {
+        health.devices.iter().find(|h| h.device == d).map(|h| h.score).unwrap_or(-1.0)
+    };
+    let stats = srv.stats();
+    let closed_a = client.close_stream(id_a)?;
+    let closed_b = client.close_stream(id_b)?;
+    let prom_text = prometheus_text(&srv.stats().telemetry);
+    srv.shutdown();
+    Ok(DegradedRun {
+        snapshots_to_fire: fired_at.map(|s| s.saturating_sub(snap0)).unwrap_or(u64::MAX),
+        fired: fired_at.is_some(),
+        drains: stats.telemetry.counter("serve.drains").unwrap_or(0),
+        pushed: [fed[0].len() as u64, fed[1].len() as u64],
+        done: [closed_a.samples_done, closed_b.samples_done],
+        states: [closed_a.state, closed_b.state],
+        fed,
+        priors,
+        slow_score: score(1),
+        fast_score: score(0),
+        prom_text,
+    })
+}
+
+/// Replay the degraded run's exact samples on a plain (health-off,
+/// undegraded) server and return the final states.
+fn replay(run: &DegradedRun) -> Result<[GaussMessage; 2]> {
+    let srv = FgpServe::start(ServeConfig::default())?;
+    let mut client = ServeClient::connect(srv.addr(), "bench")?;
+    let mut states = Vec::new();
+    for slot in 0..2 {
+        let (id, _) = client.open_stream("replay", StreamMode::Sticky, run.priors[slot].clone())?;
+        for chunk in run.fed[slot].chunks(16) {
+            client.push(id, chunk.to_vec())?;
+        }
+        states.push(client.close_stream(id)?.state);
+    }
+    srv.shutdown();
+    Ok([states.remove(0), states.remove(0)])
+}
+
+fn main() -> Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (rounds, per_round, clean_snapshots, warm_rounds) =
+        if smoke { (6usize, 3usize, 12u64, 4usize) } else { (20, 4, 40, 8) };
+
+    banner("phase 1: disabled health is bitwise inert");
+    let cfg_on = ServeConfig { health: bench_health(), ..ServeConfig::default() };
+    let srv_on = FgpServe::start(cfg_on)?;
+    let sink = Arc::new(VecSink::new());
+    srv_on.add_alert_sink(Box::new(Arc::clone(&sink)));
+    let (states_on, done_on) = run_workload(&srv_on, 4242, rounds, per_round)?;
+    let srv_off = FgpServe::start(ServeConfig::default())?;
+    let (states_off, done_off) = run_workload(&srv_off, 4242, rounds, per_round)?;
+    let bitwise_disabled = states_on == states_off && done_on == done_off;
+    let off_health = srv_off.health();
+    let off_inert = !off_health.enabled
+        && off_health.snapshots == 0
+        && off_health.devices.iter().all(|d| d.ewma_ns == 0);
+    println!(
+        "{done_on} samples each way | bitwise {bitwise_disabled} | off server inert {off_inert}"
+    );
+    srv_off.shutdown();
+
+    banner("phase 2: clean run fires nothing");
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while srv_on.health().snapshots < clean_snapshots && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let clean = srv_on.health();
+    let slos_healthy = clean.slos.iter().all(|s| s.healthy);
+    let false_positives = sink.len() as u64;
+    println!(
+        "{} snapshots | {} alert(s) fired | SLOs healthy {slos_healthy}",
+        clean.snapshots, false_positives
+    );
+    srv_on.shutdown();
+
+    banner("phase 3: degraded device fires, drains, loses nothing");
+    let run = degraded_run(99, warm_rounds)?;
+    let lost = (run.pushed[0] - run.done[0]) + (run.pushed[1] - run.done[1]);
+    let ref_states = replay(&run)?;
+    let bitwise_degraded = run.states[0] == ref_states[0] && run.states[1] == ref_states[1];
+    println!(
+        "outlier fired {} ({} snapshots after degradation, gate {MAX_SNAPSHOTS_TO_FIRE}) | \
+         drains {} | lost {lost} | bitwise {bitwise_degraded}",
+        run.fired, run.snapshots_to_fire, run.drains
+    );
+    println!("device scores: slow {:.3} | fast {:.3}", run.slow_score, run.fast_score);
+    std::fs::write("BENCH_health_prom.txt", &run.prom_text)?;
+    println!("wrote BENCH_health_prom.txt ({} lines)", run.prom_text.lines().count());
+
+    // --- machine-readable trajectory
+    let doc = json_obj(&[
+        ("bench", json_str("health_slo")),
+        ("mode", json_str(if smoke { "smoke" } else { "full" })),
+        ("devices", "2".to_string()),
+        ("samples_inert", done_on.to_string()),
+        ("bitwise_disabled", bitwise_disabled.to_string()),
+        ("off_server_inert", off_inert.to_string()),
+        ("clean_snapshots", clean.snapshots.to_string()),
+        ("false_positives", false_positives.to_string()),
+        ("slos_healthy", slos_healthy.to_string()),
+        ("outlier_fired", run.fired.to_string()),
+        ("snapshots_to_fire", run.snapshots_to_fire.to_string()),
+        ("max_snapshots_to_fire", MAX_SNAPSHOTS_TO_FIRE.to_string()),
+        ("drains", run.drains.to_string()),
+        ("samples_pushed", (run.pushed[0] + run.pushed[1]).to_string()),
+        ("samples_lost", lost.to_string()),
+        ("bitwise_degraded", bitwise_degraded.to_string()),
+        ("slow_device_score", json_num(run.slow_score)),
+        ("fast_device_score", json_num(run.fast_score)),
+    ]);
+    write_json("BENCH_health.json", &doc)?;
+    println!("\nwrote BENCH_health.json");
+
+    // --- hard gates: the health layer's acceptance criteria
+    let mut failed = false;
+    if !bitwise_disabled {
+        eprintln!("GATE: the health layer changed served outputs (invariant 7 violated)");
+        failed = true;
+    }
+    if !off_inert {
+        eprintln!("GATE: the disabled server ran a watcher or read device clocks");
+        failed = true;
+    }
+    if false_positives != 0 {
+        eprintln!("GATE: {false_positives} alert(s) fired on a healthy farm");
+        failed = true;
+    }
+    if !slos_healthy {
+        eprintln!("GATE: a healthy run reads an unhealthy SLO");
+        failed = true;
+    }
+    if !run.fired {
+        eprintln!("GATE: the DeviceOutlier detector never fired on the degraded device");
+        failed = true;
+    }
+    if run.snapshots_to_fire > MAX_SNAPSHOTS_TO_FIRE {
+        eprintln!(
+            "GATE: detector took {} snapshots (> {MAX_SNAPSHOTS_TO_FIRE}) to fire",
+            run.snapshots_to_fire
+        );
+        failed = true;
+    }
+    if run.drains < 1 {
+        eprintln!("GATE: no sticky stream drained off the degraded device");
+        failed = true;
+    }
+    if lost != 0 {
+        eprintln!("GATE: {lost} sample(s) lost across the drain");
+        failed = true;
+    }
+    if !bitwise_degraded {
+        eprintln!("GATE: draining changed served outputs vs. the undegraded replay");
+        failed = true;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    println!("health_slo OK");
+    Ok(())
+}

@@ -38,11 +38,25 @@
 //! ([`StreamCheckpoint`]) and [`FgpFarm::resume_stream`] restores it on
 //! any member — bitwise identically, by the chunk-invariance contract
 //! documented on [`StreamCheckpoint`].
+//!
+//! ## Per-device health (the routing signal)
+//!
+//! With [`FgpFarm::enable_health_tracking`] on, every device thread
+//! keeps an EWMA of its request latency next to request/error
+//! counters; [`FgpFarm::device_health`] scores each member against the
+//! live-peer median ([`device_score`]) and [`FgpFarm::pick_healthy`]
+//! filters picks by that score, falling back to the plain policy pick
+//! when nothing qualifies — the serving tier drains sticky streams off
+//! degraded-but-alive members through it. Off (the default) the device
+//! loop reads no clocks at all: the invariant-7 extension.
+//! [`FgpFarm::set_device_delay`] is the matching fault injector — a
+//! per-request sleep that degrades a member without killing it.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, RwLock};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -54,6 +68,7 @@ use crate::engine::{
 use crate::fgp::FgpConfig;
 use crate::gmp::matrix::CMatrix;
 use crate::gmp::message::GaussMessage;
+use crate::obs::health::{device_score, DeviceHealth};
 use crate::obs::{Telemetry, TelemetryConfig, TraceContext};
 
 use super::backend::{Backend, BackendKind, CnRequestData, WorkloadRequest};
@@ -149,11 +164,40 @@ struct DeviceLink {
     handle: JoinHandle<()>,
 }
 
+/// Per-device stats shared between the farm (reader) and the device
+/// thread (writer); `Arc`'d so they survive kill/revive.
+#[derive(Clone)]
+struct DeviceStats {
+    /// Simulated device cycles consumed (load proxy; survives revive).
+    cycles: Arc<AtomicU64>,
+    /// Requests executed successfully.
+    requests: Arc<AtomicU64>,
+    /// Failed requests: dispatch errors plus dead/poisoned routing.
+    errors: Arc<AtomicU64>,
+    /// EWMA request latency in ns, 0 until the first health-tracked
+    /// sample. Single writer (the device thread), so plain
+    /// load/modify/store is race-free.
+    ewma_ns: Arc<AtomicU64>,
+    /// Fault injection: per-request sleep in ms (0 = none).
+    delay_ms: Arc<AtomicU64>,
+}
+
+impl DeviceStats {
+    fn new() -> Self {
+        DeviceStats {
+            cycles: Arc::new(AtomicU64::new(0)),
+            requests: Arc::new(AtomicU64::new(0)),
+            errors: Arc::new(AtomicU64::new(0)),
+            ewma_ns: Arc::new(AtomicU64::new(0)),
+            delay_ms: Arc::new(AtomicU64::new(0)),
+        }
+    }
+}
+
 /// One device slot; `None` while the member is down.
 struct DeviceSlot {
     link: RwLock<Option<DeviceLink>>,
-    /// Simulated device cycles consumed (load proxy; survives revive).
-    cycles: Arc<AtomicU64>,
+    stats: DeviceStats,
 }
 
 /// A farm of simulated FGPs.
@@ -170,6 +214,9 @@ pub struct FgpFarm {
     /// disabled default unless [`FgpFarm::start_with_telemetry`] was
     /// used); revived devices re-attach it.
     tel: Arc<Telemetry>,
+    /// Health-tracking switch, shared with the device threads. Off ⇒
+    /// the device loop reads no clocks (invariant-7 extension).
+    health_on: Arc<AtomicBool>,
 }
 
 fn spawn_device(
@@ -177,8 +224,9 @@ fn spawn_device(
     config: FgpConfig,
     probe: WorkloadRequest,
     program: Arc<CompiledProgram>,
-    cycles: Arc<AtomicU64>,
+    stats: DeviceStats,
     tel: Arc<Telemetry>,
+    health_on: Arc<AtomicBool>,
     rx: Receiver<DeviceMsg>,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
@@ -192,6 +240,11 @@ fn spawn_device(
             // then exits — queued-but-unreceived requests are dropped,
             // which the submitter observes as a retryable DeviceStopped
             while let Ok(msg) = rx.recv() {
+                // fault injection: a degraded-but-alive member
+                let delay = stats.delay_ms.load(Ordering::Relaxed);
+                if delay > 0 {
+                    std::thread::sleep(Duration::from_millis(delay));
+                }
                 // traced requests get a "farm.device" span; the session
                 // hangs its engine/fgp spans underneath it
                 let dev_ctx = match msg.ctx {
@@ -200,12 +253,25 @@ fn spawn_device(
                 };
                 session.set_trace_context(dev_ctx.map(|(c, _)| c));
                 let t0 = if dev_ctx.is_some() { tel.now_ns() } else { 0 };
+                // latency EWMA only when health tracking is on: the
+                // disabled path must read no clocks (invariant 7 ext.)
+                let h0 = health_on.load(Ordering::Relaxed).then(Instant::now);
                 let result = session
                     .dispatch(&msg.req.graph, &msg.req.schedule, &msg.req.inputs, &msg.req.opts)
                     .map(|disp| {
-                        cycles.fetch_add(disp.exec.stats.cycles, Ordering::Relaxed);
+                        stats.cycles.fetch_add(disp.exec.stats.cycles, Ordering::Relaxed);
                         disp.exec
                     });
+                if let Some(h0) = h0 {
+                    let sample = h0.elapsed().as_nanos() as u64;
+                    let old = stats.ewma_ns.load(Ordering::Relaxed);
+                    let next = if old == 0 { sample } else { old - old / 8 + sample / 8 };
+                    stats.ewma_ns.store(next, Ordering::Relaxed);
+                }
+                match &result {
+                    Ok(_) => stats.requests.fetch_add(1, Ordering::Relaxed),
+                    Err(_) => stats.errors.fetch_add(1, Ordering::Relaxed),
+                };
                 if let Some((child, parent)) = dev_ctx {
                     tel.span(child, parent, "farm.device", "farm", t0, d as u64);
                     session.set_trace_context(None);
@@ -252,25 +318,36 @@ impl FgpFarm {
                 .map_err(|e| anyhow!("compiling CN program: {e:#}"))?
         };
 
+        let health_on = Arc::new(AtomicBool::new(false));
         let mut devices = Vec::with_capacity(count);
         for d in 0..count {
             let (tx, rx) = mpsc::channel();
-            let cycles = Arc::new(AtomicU64::new(0));
+            let stats = DeviceStats::new();
             let handle = spawn_device(
                 d,
                 config,
                 probe.clone(),
                 Arc::clone(&cn_program),
-                Arc::clone(&cycles),
+                stats.clone(),
                 Arc::clone(&tel),
+                Arc::clone(&health_on),
                 rx,
             );
             devices.push(DeviceSlot {
                 link: RwLock::new(Some(DeviceLink { tx, handle })),
-                cycles,
+                stats,
             });
         }
-        Ok(FgpFarm { devices, policy, next: AtomicUsize::new(0), config, probe, cn_program, tel })
+        Ok(FgpFarm {
+            devices,
+            policy,
+            next: AtomicUsize::new(0),
+            config,
+            probe,
+            cn_program,
+            tel,
+            health_on,
+        })
     }
 
     /// The farm's shared telemetry handle.
@@ -346,8 +423,9 @@ impl FgpFarm {
             self.config,
             self.probe.clone(),
             Arc::clone(&self.cn_program),
-            Arc::clone(&slot.cycles),
+            slot.stats.clone(),
             Arc::clone(&self.tel),
+            Arc::clone(&self.health_on),
             rx,
         );
         *guard = Some(DeviceLink { tx, handle });
@@ -366,8 +444,97 @@ impl FgpFarm {
             RoutePolicy::RoundRobin => live[self.next.fetch_add(1, Ordering::Relaxed) % live.len()],
             RoutePolicy::LeastLoaded => *live
                 .iter()
-                .min_by_key(|i| self.devices[**i].cycles.load(Ordering::Relaxed))
+                .min_by_key(|i| self.devices[**i].stats.cycles.load(Ordering::Relaxed))
                 .expect("non-empty live list"),
+        })
+    }
+
+    /// Turn on per-device latency tracking: the device threads start
+    /// reading the clock around each request to keep an EWMA. Off by
+    /// default (the invariant-7 extension: disabled health ⇒ no clock
+    /// reads on the device plane). One-way for the farm's lifetime.
+    pub fn enable_health_tracking(&self) {
+        self.health_on.store(true, Ordering::Relaxed);
+    }
+
+    /// Is per-device latency tracking on?
+    pub fn health_tracking(&self) -> bool {
+        self.health_on.load(Ordering::Relaxed)
+    }
+
+    /// Fault injection for tests and the health bench: every request to
+    /// device `idx` sleeps `millis` before executing (0 clears). The
+    /// device stays live and correct — just slow — which is exactly the
+    /// degradation the health layer exists to detect.
+    pub fn set_device_delay(&self, idx: usize, millis: u64) -> Result<(), FarmError> {
+        let slot = self
+            .devices
+            .get(idx)
+            .ok_or(FarmError::NoSuchDevice { device: idx, size: self.devices.len() })?;
+        slot.stats.delay_ms.store(millis, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Per-device health: liveness, request/error counts, EWMA latency,
+    /// and the routing [`device_score`] against the live-peer median.
+    pub fn device_health(&self) -> Vec<DeviceHealth> {
+        let live = self.live_devices();
+        let median = median_ns(
+            self.devices
+                .iter()
+                .enumerate()
+                .filter(|(i, d)| live.contains(i) && d.stats.ewma_ns.load(Ordering::Relaxed) > 0)
+                .map(|(_, d)| d.stats.ewma_ns.load(Ordering::Relaxed))
+                .collect(),
+        );
+        self.devices
+            .iter()
+            .enumerate()
+            .map(|(i, d)| {
+                let is_live = live.contains(&i);
+                let requests = d.stats.requests.load(Ordering::Relaxed);
+                let errors = d.stats.errors.load(Ordering::Relaxed);
+                let ewma_ns = d.stats.ewma_ns.load(Ordering::Relaxed);
+                DeviceHealth {
+                    device: i as u32,
+                    live: is_live,
+                    requests,
+                    errors,
+                    ewma_ns,
+                    score: device_score(is_live, requests, errors, ewma_ns, median),
+                }
+            })
+            .collect()
+    }
+
+    /// [`FgpFarm::pick`] filtered by health score: only members scoring
+    /// at least `min_score` qualify. Falls back to the plain policy pick
+    /// when health tracking is off, `min_score` is non-positive, or no
+    /// member qualifies — a degraded device still beats refusing the
+    /// request outright.
+    pub fn pick_healthy(&self, exclude: &[usize], min_score: f64) -> Result<usize, FarmError> {
+        if min_score <= 0.0 || !self.health_on.load(Ordering::Relaxed) {
+            return self.pick(exclude);
+        }
+        let qualified: Vec<usize> = self
+            .device_health()
+            .iter()
+            .filter(|h| {
+                h.live && h.score >= min_score && !exclude.contains(&(h.device as usize))
+            })
+            .map(|h| h.device as usize)
+            .collect();
+        if qualified.is_empty() {
+            return self.pick(exclude);
+        }
+        Ok(match self.policy {
+            RoutePolicy::RoundRobin => {
+                qualified[self.next.fetch_add(1, Ordering::Relaxed) % qualified.len()]
+            }
+            RoutePolicy::LeastLoaded => *qualified
+                .iter()
+                .min_by_key(|i| self.devices[**i].stats.cycles.load(Ordering::Relaxed))
+                .expect("non-empty qualified list"),
         })
     }
 
@@ -442,7 +609,7 @@ impl FgpFarm {
 
     /// Per-device simulated cycle counters.
     pub fn load_profile(&self) -> Vec<u64> {
-        self.devices.iter().map(|d| d.cycles.load(Ordering::Relaxed)).collect()
+        self.devices.iter().map(|d| d.stats.cycles.load(Ordering::Relaxed)).collect()
     }
 
     /// Route `msg` to device `idx`'s channel, converting every failure
@@ -464,14 +631,19 @@ impl FgpFarm {
         let guard = match slot.link.read() {
             Ok(g) => g,
             Err(_) => {
+                slot.stats.errors.fetch_add(1, Ordering::Relaxed);
                 msg.resp.send(Err(FarmError::DevicePoisoned { device: idx }.into()));
                 return;
             }
         };
         match guard.as_ref() {
-            None => msg.resp.send(Err(FarmError::DeviceStopped { device: idx }.into())),
+            None => {
+                slot.stats.errors.fetch_add(1, Ordering::Relaxed);
+                msg.resp.send(Err(FarmError::DeviceStopped { device: idx }.into()));
+            }
             Some(link) => {
                 if let Err(mpsc::SendError(m)) = link.tx.send(msg) {
+                    slot.stats.errors.fetch_add(1, Ordering::Relaxed);
                     m.resp.send(Err(FarmError::DeviceStopped { device: idx }.into()));
                 }
             }
@@ -574,6 +746,17 @@ impl FgpFarm {
             cycles: 0,
         })
     }
+}
+
+/// Lower-median of the live EWMA latencies: for an even count this
+/// takes the lower middle, so in a two-device farm the slow member is
+/// judged against the fast one (not against itself) and still drains.
+fn median_ns(mut v: Vec<u64>) -> u64 {
+    if v.is_empty() {
+        return 0;
+    }
+    v.sort_unstable();
+    v[(v.len() - 1) / 2]
 }
 
 /// Await an async submit's reply, mapping a dropped reply channel (the
@@ -1071,5 +1254,43 @@ mod tests {
             // same device semantics -> bitwise identical fold
             assert_eq!(&s.state, want);
         }
+    }
+
+    #[test]
+    fn health_tracking_scores_and_pick_healthy_drains_slow_members() {
+        let farm = FgpFarm::start(2, FgpConfig::default(), RoutePolicy::RoundRobin).unwrap();
+        let mut rng = Rng::new(7);
+        // health off (the default): the device loop reads no clocks, so
+        // no EWMA accumulates no matter how much traffic runs
+        for _ in 0..4 {
+            farm.update(request(&mut rng, 4)).unwrap();
+        }
+        assert!(!farm.health_tracking());
+        assert!(farm.device_health().iter().all(|h| h.ewma_ns == 0));
+
+        farm.enable_health_tracking();
+        farm.set_device_delay(1, 3).unwrap();
+        assert!(farm.set_device_delay(9, 3).is_err(), "bad index is typed");
+        for _ in 0..8 {
+            farm.update(request(&mut rng, 4)).unwrap();
+        }
+        let health = farm.device_health();
+        assert!(health[0].ewma_ns > 0, "{health:?}");
+        assert!(health[1].ewma_ns > health[0].ewma_ns, "{health:?}");
+        assert_eq!(health[0].score, 1.0, "fast member keeps a perfect score: {health:?}");
+        // a 3 ms injected delay vs a microsecond-scale peer: the slow
+        // member's score collapses below the default drain threshold
+        assert!(health[1].score < 0.5, "{health:?}");
+        for _ in 0..4 {
+            assert_eq!(farm.pick_healthy(&[], 0.5).unwrap(), 0);
+        }
+        // nothing qualifies at an impossible threshold: plain-pick fallback
+        assert!(farm.pick_healthy(&[], 2.0).is_ok());
+        // dead members report !live and score 0
+        farm.kill_device(1).unwrap();
+        let health = farm.device_health();
+        assert!(!health[1].live);
+        assert_eq!(health[1].score, 0.0);
+        assert_eq!(farm.pick_healthy(&[], 0.5).unwrap(), 0);
     }
 }

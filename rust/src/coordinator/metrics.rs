@@ -272,6 +272,59 @@ mod tests {
         assert!(a.quantile(0.9) > a.quantile(0.1), "both sources visible after merge");
     }
 
+    /// One sample: every quantile lands in that sample's bucket — the
+    /// `ceil(total·q)` target must clamp to rank 1, never rank 0.
+    #[test]
+    fn single_sample_pins_every_quantile() {
+        let h = Histogram::new();
+        h.record(Duration::from_micros(1)); // bucket 9 = [512, 1023]
+        let mid = Duration::from_nanos(512 + (1023 - 512) / 2);
+        for q in [0.01, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), mid, "q={q}");
+        }
+        assert_eq!(h.mean(), Duration::from_micros(1));
+        assert_eq!(h.count(), 1);
+    }
+
+    /// Zero-duration samples are clamped into bucket 0 (`ns.max(1)`),
+    /// not dropped and not a shift overflow.
+    #[test]
+    fn zero_duration_sample_lands_in_bucket_zero() {
+        let h = Histogram::new();
+        h.record(Duration::ZERO);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.quantile(0.5), Duration::from_nanos(1));
+        assert_eq!(h.mean(), Duration::ZERO, "sum is untouched by the bucket clamp");
+    }
+
+    /// Merging mismatched occupancies: one side heavily loaded, the
+    /// other nearly empty (and disjoint buckets). Count, sum and the
+    /// rank walk must all see the union.
+    #[test]
+    fn merge_with_mismatched_occupancy_buckets() {
+        let heavy = Histogram::new();
+        for _ in 0..99 {
+            heavy.record(Duration::from_nanos(100)); // bucket 6
+        }
+        let sparse = Histogram::new();
+        sparse.record(Duration::from_micros(100)); // bucket 16 — disjoint
+        heavy.merge(&sparse);
+        assert_eq!(heavy.count(), 100);
+        // 99 of 100 samples below: p50/p95 stay in the heavy bucket...
+        assert_eq!(heavy.quantile(0.95), Duration::from_nanos(64 + (127 - 64) / 2));
+        // ...and p100 reaches the sparse one
+        assert_eq!(heavy.quantile(1.0), Duration::from_nanos(65_536 + (131_071 - 65_536) / 2));
+        // merging an empty histogram is the identity
+        let before = (heavy.count(), heavy.mean(), heavy.quantile(0.5));
+        heavy.merge(&Histogram::new());
+        assert_eq!((heavy.count(), heavy.mean(), heavy.quantile(0.5)), before);
+        // and merging *into* an empty histogram copies the source
+        let empty = Histogram::new();
+        empty.merge(&heavy);
+        assert_eq!(empty.count(), heavy.count());
+        assert_eq!(empty.quantile(0.5), heavy.quantile(0.5));
+    }
+
     #[test]
     fn batch_stats() {
         let m = Metrics::new();

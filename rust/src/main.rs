@@ -12,6 +12,10 @@
 //! fgp report                          print the Table II / area report
 //! fgp serve    [--requests N] [--batch B]
 //!                                     serve CN updates (XLA if artifacts exist)
+//! fgp health   [--addr HOST:PORT] [--tenant T] [--prom]
+//!                                     health/SLO snapshot of a serve front door
+//!                                     (no --addr: boot a demo farm with one
+//!                                     degraded device and watch it drain)
 //! ```
 
 use std::time::Instant;
@@ -94,6 +98,7 @@ fn main() -> Result<()> {
         "trace" => cmd_trace(&args),
         "report" => cmd_report(),
         "serve" => cmd_serve(&args),
+        "health" => cmd_health(&args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -112,7 +117,8 @@ fn print_usage() {
          fgp run [--sections S] [--sigma2 V] [--seed N]\n  \
          fgp trace [--sections S]  (instruction-level cycle profile)\n  \
          fgp report\n  \
-         fgp serve [--requests N] [--batch B]"
+         fgp serve [--requests N] [--batch B]\n  \
+         fgp health [--addr HOST:PORT] [--tenant T] [--prom]  (SLO/alert/device health)"
     );
 }
 
@@ -275,6 +281,66 @@ fn cmd_report() -> Result<()> {
         dsp_pw.energy_per_cn_nj() / fgp_pw.energy_per_cn_nj(),
         dsp_pw.energy_per_cn_nj_at(40.0) / fgp_pw.energy_per_cn_nj_at(40.0)
     );
+    Ok(())
+}
+
+/// `fgp health`: the operator's view of a serve front door. With
+/// `--addr` it connects to a running server and prints its health
+/// snapshot; without, it boots a self-contained demo farm with the
+/// health layer on, degrades one device, and shows the watcher catching
+/// it (alerts firing, sticky traffic draining to the healthy member).
+fn cmd_health(args: &Args) -> Result<()> {
+    use fgp_repro::obs::health::{HealthConfig, SloDef};
+    use fgp_repro::obs::prometheus_text;
+    use fgp_repro::serve::{FgpServe, ServeClient, ServeConfig, StreamMode};
+
+    let addr: String = args.get("addr", String::new())?;
+    let tenant: String = args.get("tenant", "cli".to_string())?;
+    if !addr.is_empty() {
+        let mut client = ServeClient::connect(addr.as_str(), &tenant)?;
+        print!("{}", client.health()?.report());
+        return Ok(());
+    }
+
+    let mut cfg = ServeConfig::default();
+    cfg.health = HealthConfig::on();
+    cfg.health.watch.interval_ms = 10;
+    cfg.health.slos.push(SloDef::new(&tenant, 0, 0.05));
+    let server = FgpServe::start(cfg)?;
+    server.farm().set_device_delay(1, 4)?;
+    println!("demo farm up on {} — device 1 degraded by a 4 ms injected delay\n", server.addr());
+
+    let mut client = ServeClient::connect(server.addr(), &tenant)?;
+    let n = paper::N;
+    let mut rng = Rng::new(9);
+    let (stream, device) =
+        client.open_stream("health-demo", StreamMode::Sticky, GaussMessage::isotropic(n, 0.5))?;
+    println!("sticky stream {stream} pinned to device {device}");
+    for _ in 0..12 {
+        let samples: Vec<(GaussMessage, CMatrix)> = (0..4)
+            .map(|_| {
+                (
+                    GaussMessage::new(
+                        (0..n)
+                            .map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5)))
+                            .collect(),
+                        CMatrix::random_psd(&mut rng, n, 1.0).scale(0.15),
+                    ),
+                    CMatrix::random(&mut rng, n, n).scale(0.3),
+                )
+            })
+            .collect();
+        client.push(stream, samples)?;
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    let closed = client.close_stream(stream)?;
+    println!("stream drained: {} samples\n", closed.samples_done);
+    print!("{}", client.health()?.report());
+    if args.has("prom") {
+        println!("\n--- prometheus exposition ---");
+        print!("{}", prometheus_text(&server.stats().telemetry));
+    }
+    server.shutdown();
     Ok(())
 }
 

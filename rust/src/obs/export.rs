@@ -13,12 +13,20 @@
 //! tree, indented, durations in microseconds — the "why was this chunk
 //! slow" answer without leaving the shell.
 //!
-//! Both are hand-rolled JSON/text over `std::fmt` — the vendored set
-//! has no serializer and the event shape is fixed.
+//! [`prometheus_text`] renders a [`RegistrySnapshot`] in the Prometheus
+//! text exposition format (version 0.0.4): counters and gauges as typed
+//! scalar families, histograms as `summary` families with `quantile`
+//! labels plus `_sum`/`_count`. Durations stay in integer nanoseconds
+//! (`_ns`-suffixed names) so the export is exact — no float division of
+//! the bucket midpoints on the way out.
+//!
+//! All are hand-rolled JSON/text over `std::fmt` — the vendored set
+//! has no serializer and the event shapes are fixed.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+use super::metrics::RegistrySnapshot;
 use super::span::SpanRecord;
 
 /// Escape a string for a JSON string literal.
@@ -142,6 +150,81 @@ pub fn flame_summary(spans: &[SpanRecord], trace_id: u64) -> String {
     out
 }
 
+/// Map a registry name (`layer.noun.verb`) onto the Prometheus metric
+/// charset: `[a-zA-Z0-9_:]`, everything else becomes `_`, and the
+/// result gets an `fgp_` namespace prefix.
+fn prom_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 4);
+    out.push_str("fgp_");
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() || c == '_' || c == ':' {
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+/// Render a [`RegistrySnapshot`] in the Prometheus text exposition
+/// format (content type `text/plain; version=0.0.4`).
+///
+/// * counters → `# TYPE fgp_x counter` + one sample line;
+/// * gauges → `# TYPE fgp_x gauge` + one sample line (a gauge whose
+///   sanitized name collides with a counter family is suffixed
+///   `_gauge` — Prometheus forbids one name with two types);
+/// * histograms → `# TYPE fgp_x_ns summary` + `quantile`-labelled
+///   p50/p95/p99 bucket midpoints, `_sum` (count × mean, both already
+///   integer ns) and `_count`.
+///
+/// Families are emitted sorted by *sanitized* name within each kind
+/// (sanitizing can reorder around `.` vs digits), each `# TYPE` exactly
+/// once, trailing newline included — the shape
+/// `scripts/check_prom_text.py` pins in CI.
+pub fn prometheus_text(snap: &RegistrySnapshot) -> String {
+    let mut out = String::new();
+
+    let mut counters: Vec<(String, u64)> =
+        snap.counters.iter().map(|c| (prom_name(&c.name), c.value)).collect();
+    counters.sort();
+    let counter_names: std::collections::BTreeSet<&str> =
+        counters.iter().map(|(n, _)| n.as_str()).collect();
+    for (name, value) in &counters {
+        let _ = writeln!(out, "# TYPE {name} counter");
+        let _ = writeln!(out, "{name} {value}");
+    }
+
+    let mut gauges: Vec<(String, u64)> = snap
+        .gauges
+        .iter()
+        .map(|g| {
+            let mut n = prom_name(&g.name);
+            if counter_names.contains(n.as_str()) {
+                n.push_str("_gauge");
+            }
+            (n, g.value)
+        })
+        .collect();
+    gauges.sort();
+    for (name, value) in &gauges {
+        let _ = writeln!(out, "# TYPE {name} gauge");
+        let _ = writeln!(out, "{name} {value}");
+    }
+
+    let mut hists: Vec<(String, &super::metrics::HistSummary)> =
+        snap.histograms.iter().map(|h| (prom_name(&h.name) + "_ns", h)).collect();
+    hists.sort_by(|a, b| a.0.cmp(&b.0));
+    for (name, h) in &hists {
+        let _ = writeln!(out, "# TYPE {name} summary");
+        let _ = writeln!(out, "{name}{{quantile=\"0.5\"}} {}", h.p50_ns);
+        let _ = writeln!(out, "{name}{{quantile=\"0.95\"}} {}", h.p95_ns);
+        let _ = writeln!(out, "{name}{{quantile=\"0.99\"}} {}", h.p99_ns);
+        let _ = writeln!(out, "{name}_sum {}", h.count.saturating_mul(h.mean_ns));
+        let _ = writeln!(out, "{name}_count {}", h.count);
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -213,5 +296,57 @@ mod tests {
         let text = flame_summary(&spans, 7);
         assert!(text.contains("orphan"));
         assert!(text.contains('a'));
+    }
+
+    #[test]
+    fn prometheus_text_renders_all_three_kinds() {
+        use crate::coordinator::Histogram;
+        use std::time::Duration;
+        let mut snap = RegistrySnapshot::new();
+        snap.push_counter("serve.admitted", 41);
+        snap.push_gauge("serve.inflight", 3);
+        let h = Histogram::new();
+        for _ in 0..8 {
+            h.record(Duration::from_micros(1));
+        }
+        snap.push_histogram("serve.latency", &h);
+        snap.sort();
+        let text = prometheus_text(&snap);
+        assert!(text.contains("# TYPE fgp_serve_admitted counter\nfgp_serve_admitted 41\n"));
+        assert!(text.contains("# TYPE fgp_serve_inflight gauge\nfgp_serve_inflight 3\n"));
+        assert!(text.contains("# TYPE fgp_serve_latency_ns summary\n"));
+        assert!(text.contains("fgp_serve_latency_ns{quantile=\"0.5\"} "));
+        assert!(text.contains("fgp_serve_latency_ns_count 8\n"));
+        assert!(text.ends_with('\n'));
+        // exactly one TYPE line per family
+        assert_eq!(text.matches("# TYPE fgp_serve_latency_ns summary").count(), 1);
+    }
+
+    #[test]
+    fn prometheus_text_sanitizes_and_disambiguates() {
+        let mut snap = RegistrySnapshot::new();
+        snap.push_counter("a.b-c", 1);
+        snap.push_gauge("a.b-c", 2); // same sanitized family name as the counter
+        snap.sort();
+        let text = prometheus_text(&snap);
+        assert!(text.contains("# TYPE fgp_a_b_c counter\nfgp_a_b_c 1\n"));
+        assert!(text.contains("# TYPE fgp_a_b_c_gauge gauge\nfgp_a_b_c_gauge 2\n"));
+    }
+
+    #[test]
+    fn prometheus_text_summary_sum_is_count_times_mean() {
+        let mut snap = RegistrySnapshot::new();
+        snap.histograms.push(crate::obs::HistSummary {
+            name: "q".into(),
+            count: 5,
+            mean_ns: 700,
+            p50_ns: 600,
+            p95_ns: 900,
+            p99_ns: 950,
+        });
+        let text = prometheus_text(&snap);
+        assert!(text.contains("fgp_q_ns_sum 3500\n"));
+        assert!(text.contains("fgp_q_ns_count 5\n"));
+        assert!(prometheus_text(&RegistrySnapshot::new()).is_empty());
     }
 }

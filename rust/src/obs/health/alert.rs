@@ -1,0 +1,213 @@
+//! Structured alert events and pluggable delivery sinks.
+//!
+//! An [`Alert`] is the watcher's only output type: every detector
+//! transition — firing after `fire_after` consecutive breaches,
+//! resolved after `resolve_after` consecutive clears (see
+//! [`watch`](super::watch)) — becomes one structured event carrying the
+//! detector kind, the subject it judged (a tenant, a device, a global
+//! surface), the observed value and the threshold it crossed. Events
+//! fan out to [`AlertSink`]s; the serving tier keeps the active set for
+//! the wire `Health` reply.
+
+use std::fmt;
+use std::sync::Mutex;
+
+/// Which detector produced an alert.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlertKind {
+    /// Serving p99 latency regressed past the rolling EWMA baseline.
+    P99Regression,
+    /// The admission window is (nearly) saturated — requests are about
+    /// to be rejected `Busy`.
+    AdmissionSaturation,
+    /// The engine program-cache hit rate collapsed — recompiles on the
+    /// hot path.
+    CacheHitCollapse,
+    /// One farm device is a latency/error outlier vs. its peers.
+    DeviceOutlier,
+    /// A tenant is burning its SLO error budget on both the short and
+    /// long windows.
+    SloBurn,
+}
+
+impl AlertKind {
+    /// Stable lower-snake name (exposition + report rendering).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AlertKind::P99Regression => "p99_regression",
+            AlertKind::AdmissionSaturation => "admission_saturation",
+            AlertKind::CacheHitCollapse => "cache_hit_collapse",
+            AlertKind::DeviceOutlier => "device_outlier",
+            AlertKind::SloBurn => "slo_burn",
+        }
+    }
+}
+
+/// Firing edge or resolution edge — alerts are only emitted on
+/// transitions, never re-emitted while a condition persists.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlertState {
+    /// The condition held for `fire_after` consecutive snapshots.
+    Firing,
+    /// A previously-firing condition cleared for `resolve_after`
+    /// consecutive snapshots.
+    Resolved,
+}
+
+/// How urgently an operator should care.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlertSeverity {
+    /// Degradation that routing/backpressure is expected to absorb.
+    Warning,
+    /// Objective breach — user-visible if it persists.
+    Critical,
+}
+
+/// One structured alert event.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Alert {
+    /// Detector that produced the event.
+    pub kind: AlertKind,
+    /// Firing or resolved edge.
+    pub state: AlertState,
+    /// Operator urgency.
+    pub severity: AlertSeverity,
+    /// What was judged: `"serve"`, `"tenant.<name>"`, `"farm.device<i>"`.
+    pub subject: String,
+    /// Observed value at the transition (units depend on `kind`).
+    pub value: f64,
+    /// Threshold the value crossed.
+    pub threshold: f64,
+    /// Watcher-epoch timestamp of the transition, nanoseconds.
+    pub t_ns: u64,
+    /// Human-readable one-liner.
+    pub message: String,
+}
+
+impl fmt::Display for Alert {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let state = match self.state {
+            AlertState::Firing => "FIRING",
+            AlertState::Resolved => "resolved",
+        };
+        let sev = match self.severity {
+            AlertSeverity::Warning => "warn",
+            AlertSeverity::Critical => "crit",
+        };
+        write!(
+            f,
+            "[{state}/{sev}] {} {}: {} (value {:.3}, threshold {:.3})",
+            self.kind.as_str(),
+            self.subject,
+            self.message,
+            self.value,
+            self.threshold
+        )
+    }
+}
+
+/// Where alert transitions go. Implementations must tolerate being
+/// called from the watcher thread (keep `emit` quick and non-blocking).
+pub trait AlertSink: Send + Sync {
+    /// Deliver one transition event.
+    fn emit(&self, alert: &Alert);
+}
+
+impl<S: AlertSink + ?Sized> AlertSink for std::sync::Arc<S> {
+    fn emit(&self, alert: &Alert) {
+        (**self).emit(alert);
+    }
+}
+
+/// Test/bench sink: collects every event in order behind a mutex.
+#[derive(Debug, Default)]
+pub struct VecSink {
+    events: Mutex<Vec<Alert>>,
+}
+
+impl VecSink {
+    /// Empty sink.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Copy of everything emitted so far.
+    pub fn events(&self) -> Vec<Alert> {
+        self.events.lock().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+
+    /// Number of events emitted so far.
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap_or_else(|p| p.into_inner()).len()
+    }
+
+    /// No events yet?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl AlertSink for VecSink {
+    fn emit(&self, alert: &Alert) {
+        self.events.lock().unwrap_or_else(|p| p.into_inner()).push(alert.clone());
+    }
+}
+
+/// Operator sink: one line per transition on stderr.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StderrSink;
+
+impl AlertSink for StderrSink {
+    fn emit(&self, alert: &Alert) {
+        eprintln!("{alert}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn alert(state: AlertState) -> Alert {
+        Alert {
+            kind: AlertKind::DeviceOutlier,
+            state,
+            severity: AlertSeverity::Warning,
+            subject: "farm.device1".to_string(),
+            value: 9.0,
+            threshold: 8.0,
+            t_ns: 42,
+            message: "latency outlier".to_string(),
+        }
+    }
+
+    #[test]
+    fn vec_sink_collects_in_order() {
+        let sink = VecSink::new();
+        assert!(sink.is_empty());
+        sink.emit(&alert(AlertState::Firing));
+        sink.emit(&alert(AlertState::Resolved));
+        let ev = sink.events();
+        assert_eq!(ev.len(), 2);
+        assert_eq!(ev[0].state, AlertState::Firing);
+        assert_eq!(ev[1].state, AlertState::Resolved);
+    }
+
+    #[test]
+    fn arc_sinks_are_sinks_too() {
+        let sink = Arc::new(VecSink::new());
+        let as_dyn: &dyn AlertSink = &sink;
+        as_dyn.emit(&alert(AlertState::Firing));
+        assert_eq!(sink.len(), 1);
+    }
+
+    #[test]
+    fn display_is_grep_friendly() {
+        let text = alert(AlertState::Firing).to_string();
+        assert!(text.contains("FIRING"));
+        assert!(text.contains("device_outlier"));
+        assert!(text.contains("farm.device1"));
+        let resolved = alert(AlertState::Resolved).to_string();
+        assert!(resolved.contains("resolved"));
+    }
+}

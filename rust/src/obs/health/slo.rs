@@ -1,0 +1,193 @@
+//! Per-tenant SLO definitions and multi-window burn-rate evaluation.
+//!
+//! An [`SloDef`] pins two promises per tenant: a p99 latency objective
+//! and an error budget (the fraction of requests allowed to be
+//! rejected). Evaluation follows the multi-window burn-rate recipe:
+//! the *burn rate* is the windowed error rate divided by the budget —
+//! burn 1.0 means the tenant is consuming budget exactly as fast as it
+//! accrues, burn 10 means ten times faster. A short window reacts
+//! quickly; a long window keeps one admission blip from paging anyone.
+//! The [`watch`](super::watch) detector fires `SloBurn` only when
+//! *both* windows burn ≥ 1.
+//!
+//! Inputs are windowed *deltas* of [`RegistrySnapshot`] counters
+//! (`tenant.<name>.requests` / `.rejected_quota` / `.rejected_busy`),
+//! so evaluation is a pure function of two snapshots — no clocks, no
+//! locks, unit-testable without a server. The latency leg reads the
+//! cumulative `serve.latency` p99 (the registry keeps one global
+//! serving histogram; per-tenant latency splits are future work), so
+//! it reflects lifetime-so-far tails rather than a window.
+
+use crate::obs::RegistrySnapshot;
+
+/// One tenant's service-level objective.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SloDef {
+    /// Tenant name (matches the admission ledger).
+    pub tenant: String,
+    /// p99 latency objective in nanoseconds (0 = no latency objective).
+    pub p99_objective_ns: u64,
+    /// Error budget: allowed rejected fraction of requests, e.g. 0.01.
+    pub error_budget: f64,
+}
+
+impl SloDef {
+    /// Convenience constructor.
+    pub fn new(tenant: &str, p99_objective_ns: u64, error_budget: f64) -> Self {
+        SloDef { tenant: tenant.to_string(), p99_objective_ns, error_budget }
+    }
+}
+
+/// Point-in-time SLO evaluation for one tenant — what the wire `Health`
+/// reply carries.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SloStatus {
+    /// Tenant name.
+    pub tenant: String,
+    /// The latency objective being judged against (ns, 0 = none).
+    pub p99_objective_ns: u64,
+    /// The error budget being judged against.
+    pub error_budget: f64,
+    /// Observed cumulative serving p99 (ns, 0 = no latency data yet).
+    pub p99_ns: u64,
+    /// Burn rate over the short window.
+    pub burn_short: f64,
+    /// Burn rate over the long window.
+    pub burn_long: f64,
+    /// Cumulative requests observed for this tenant.
+    pub requests: u64,
+    /// Cumulative rejections (quota + busy) for this tenant.
+    pub errors: u64,
+    /// Within objective: latency under the objective (when both are
+    /// known) and not burning budget on both windows at once.
+    pub healthy: bool,
+}
+
+fn counter(snap: &RegistrySnapshot, name: &str) -> u64 {
+    snap.counter(name).unwrap_or(0)
+}
+
+/// Windowed (requests, errors) deltas for `tenant` between two
+/// snapshots (`base` earlier, `newest` later). Counters are monotone;
+/// saturating subtraction guards a restarted registry.
+pub fn tenant_deltas(
+    tenant: &str,
+    newest: &RegistrySnapshot,
+    base: &RegistrySnapshot,
+) -> (u64, u64) {
+    let req = format!("tenant.{tenant}.requests");
+    let quota = format!("tenant.{tenant}.rejected_quota");
+    let busy = format!("tenant.{tenant}.rejected_busy");
+    let d = |name: &str| counter(newest, name).saturating_sub(counter(base, name));
+    (d(&req), d(&quota) + d(&busy))
+}
+
+/// Burn rate from windowed deltas: `(errors/requests) / budget`.
+/// Zero-request windows and non-positive budgets burn 0 (nothing to
+/// judge / nothing promised).
+pub fn burn_rate(requests_delta: u64, errors_delta: u64, budget: f64) -> f64 {
+    if requests_delta == 0 || budget <= 0.0 {
+        return 0.0;
+    }
+    (errors_delta as f64 / requests_delta as f64) / budget
+}
+
+/// Evaluate one SLO from the newest snapshot plus the short- and
+/// long-window base snapshots (what the watcher ring hands us).
+pub fn evaluate(
+    def: &SloDef,
+    newest: &RegistrySnapshot,
+    short_base: &RegistrySnapshot,
+    long_base: &RegistrySnapshot,
+) -> SloStatus {
+    let (req_s, err_s) = tenant_deltas(&def.tenant, newest, short_base);
+    let (req_l, err_l) = tenant_deltas(&def.tenant, newest, long_base);
+    let burn_short = burn_rate(req_s, err_s, def.error_budget);
+    let burn_long = burn_rate(req_l, err_l, def.error_budget);
+    let p99_ns = newest.histogram("serve.latency").map(|h| h.p99_ns).unwrap_or(0);
+    let latency_ok = def.p99_objective_ns == 0 || p99_ns == 0 || p99_ns <= def.p99_objective_ns;
+    let burning = burn_short >= 1.0 && burn_long >= 1.0;
+    SloStatus {
+        tenant: def.tenant.clone(),
+        p99_objective_ns: def.p99_objective_ns,
+        error_budget: def.error_budget,
+        p99_ns,
+        burn_short,
+        burn_long,
+        requests: counter(newest, &format!("tenant.{}.requests", def.tenant)),
+        errors: counter(newest, &format!("tenant.{}.rejected_quota", def.tenant))
+            + counter(newest, &format!("tenant.{}.rejected_busy", def.tenant)),
+        healthy: latency_ok && !burning,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(req: u64, quota: u64, busy: u64) -> RegistrySnapshot {
+        let mut s = RegistrySnapshot::new();
+        s.push_counter("tenant.acme.requests", req);
+        s.push_counter("tenant.acme.rejected_quota", quota);
+        s.push_counter("tenant.acme.rejected_busy", busy);
+        s.sort();
+        s
+    }
+
+    #[test]
+    fn burn_rate_is_error_rate_over_budget() {
+        // 2% errors against a 1% budget: burning twice as fast as accrual
+        assert!((burn_rate(100, 2, 0.01) - 2.0).abs() < 1e-12);
+        assert_eq!(burn_rate(0, 0, 0.01), 0.0, "empty window burns nothing");
+        assert_eq!(burn_rate(100, 2, 0.0), 0.0, "no budget promised, no burn");
+    }
+
+    #[test]
+    fn tenant_deltas_are_windowed_and_saturating() {
+        let base = snap(100, 1, 0);
+        let newest = snap(150, 6, 2);
+        assert_eq!(tenant_deltas("acme", &newest, &base), (50, 7));
+        // restarted registry: newest below base must not underflow
+        assert_eq!(tenant_deltas("acme", &base, &newest), (0, 0));
+    }
+
+    #[test]
+    fn evaluate_flags_burning_only_on_both_windows() {
+        let def = SloDef::new("acme", 0, 0.01);
+        let long_base = snap(0, 0, 0);
+        let short_base = snap(900, 0, 0);
+        // short window: 100 requests, 5 errors → burn 5.0;
+        // long window: 1000 requests, 5 errors → burn 0.5 → still healthy
+        let newest = snap(1000, 5, 0);
+        let st = evaluate(&def, &newest, &short_base, &long_base);
+        assert!(st.burn_short > 1.0 && st.burn_long < 1.0);
+        assert!(st.healthy, "one hot window alone must not flag");
+        // both windows burning → unhealthy
+        let st2 = evaluate(&def, &snap(1000, 20, 0), &short_base, &long_base);
+        assert!(st2.burn_short >= 1.0 && st2.burn_long >= 1.0);
+        assert!(!st2.healthy);
+        assert_eq!(st2.requests, 1000);
+        assert_eq!(st2.errors, 20);
+    }
+
+    #[test]
+    fn evaluate_judges_latency_against_objective() {
+        let mut newest = snap(10, 0, 0);
+        newest.histograms.push(crate::obs::HistSummary {
+            name: "serve.latency".into(),
+            count: 10,
+            mean_ns: 500,
+            p50_ns: 400,
+            p95_ns: 900,
+            p99_ns: 1500,
+        });
+        newest.sort();
+        let base = snap(0, 0, 0);
+        let tight = SloDef::new("acme", 1000, 0.01);
+        assert!(!evaluate(&tight, &newest, &base, &base).healthy, "p99 1500 > objective 1000");
+        let loose = SloDef::new("acme", 2000, 0.01);
+        assert!(evaluate(&loose, &newest, &base, &base).healthy);
+        let none = SloDef::new("acme", 0, 0.01);
+        assert!(evaluate(&none, &newest, &base, &base).healthy, "objective 0 = no latency SLO");
+    }
+}

@@ -1,0 +1,639 @@
+//! The watcher: a fixed-capacity snapshot ring, anomaly detectors, and
+//! firing/resolved hysteresis.
+//!
+//! [`HealthState::observe`] is a *pure* state transition: feed it a
+//! timestamp and a [`RegistrySnapshot`] and it updates the time-series
+//! ring, judges every detector, and returns/emits only the
+//! *transitions* (fire after `fire_after` consecutive breaches, resolve
+//! after `resolve_after` consecutive clears). The serving tier's
+//! watcher thread is a thin loop around it — which is also why every
+//! detector is unit-testable with synthetic snapshots and no clock.
+//!
+//! Detectors:
+//! * **p99 regression** — cumulative `serve.latency` p99 vs. a rolling
+//!   EWMA baseline (the baseline keeps adapting, so a step change fires
+//!   and then self-resolves once the new normal is learned);
+//! * **admission saturation** — `serve.inflight` vs.
+//!   `serve.inflight_capacity` gauges;
+//! * **cache-hit collapse** — windowed `engine.cache_hit` /
+//!   `engine.cache_miss` deltas;
+//! * **device outliers** — per-device EWMA latency vs. the live-peer
+//!   median, and windowed retryable-error rates;
+//! * **SLO burn** — [`slo::evaluate`] per configured tenant, firing
+//!   only when the short *and* long windows both burn ≥ 1.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt;
+
+use super::alert::{Alert, AlertKind, AlertSeverity, AlertSink, AlertState};
+use super::slo::{self, SloStatus};
+use super::{DeviceHealth, HealthConfig, HealthSnapshot};
+use crate::obs::RegistrySnapshot;
+
+/// Watcher cadence and detector thresholds. Defaults are tuned for the
+/// bench/test fixtures (tens of milliseconds end to end); production
+/// deployments raise `interval_ms` and the windows together.
+#[derive(Clone, Debug)]
+pub struct WatchConfig {
+    /// Sampling interval of the background watcher thread, ms.
+    pub interval_ms: u64,
+    /// Ring capacity (snapshots retained).
+    pub history: usize,
+    /// Short burn/delta window, in snapshots.
+    pub short_window: usize,
+    /// Long burn window, in snapshots.
+    pub long_window: usize,
+    /// Consecutive breaching snapshots before an alert fires.
+    pub fire_after: u32,
+    /// Consecutive clear snapshots before a firing alert resolves.
+    pub resolve_after: u32,
+    /// p99 regression threshold: fire when p99 > factor × EWMA baseline.
+    pub p99_factor: f64,
+    /// EWMA smoothing for the p99 baseline (weight of the newest point).
+    pub ewma_alpha: f64,
+    /// Admission saturation threshold (fraction of window capacity).
+    pub saturation: f64,
+    /// Cache-hit collapse floor (windowed hit rate below this fires).
+    pub cache_hit_floor: f64,
+    /// Minimum windowed activity (events) before a rate is judged.
+    pub min_activity: u64,
+    /// Device latency-outlier threshold (× live-peer median EWMA).
+    pub device_factor: f64,
+    /// Device windowed retryable-error-rate threshold.
+    pub device_error_rate: f64,
+}
+
+impl Default for WatchConfig {
+    fn default() -> Self {
+        WatchConfig {
+            interval_ms: 25,
+            history: 256,
+            short_window: 5,
+            long_window: 60,
+            fire_after: 3,
+            resolve_after: 5,
+            p99_factor: 3.0,
+            ewma_alpha: 0.2,
+            saturation: 0.9,
+            cache_hit_floor: 0.5,
+            min_activity: 8,
+            device_factor: 8.0,
+            device_error_rate: 0.5,
+        }
+    }
+}
+
+/// One entry of the watcher's time-series ring.
+#[derive(Clone, Debug)]
+pub struct SnapshotPoint {
+    /// Watcher-epoch timestamp, nanoseconds.
+    pub t_ns: u64,
+    /// The sampled registry state.
+    pub snap: RegistrySnapshot,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct DetectorState {
+    breach_streak: u32,
+    ok_streak: u32,
+    firing: bool,
+}
+
+struct Judgment {
+    key: String,
+    breach: bool,
+    kind: AlertKind,
+    severity: AlertSeverity,
+    subject: String,
+    value: f64,
+    threshold: f64,
+    message: String,
+}
+
+/// The watcher's whole mutable state: ring + detector streaks + active
+/// alerts + sinks. The serving tier wraps one of these in a mutex; unit
+/// tests drive it directly.
+pub struct HealthState {
+    cfg: HealthConfig,
+    ring: VecDeque<SnapshotPoint>,
+    ewma_p99: f64,
+    detectors: BTreeMap<String, DetectorState>,
+    active: BTreeMap<String, Alert>,
+    sinks: Vec<Box<dyn AlertSink>>,
+    snapshots_seen: u64,
+    alerts_fired: u64,
+}
+
+impl fmt::Debug for HealthState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("HealthState")
+            .field("snapshots_seen", &self.snapshots_seen)
+            .field("alerts_fired", &self.alerts_fired)
+            .field("active", &self.active.len())
+            .field("sinks", &self.sinks.len())
+            .finish()
+    }
+}
+
+impl HealthState {
+    /// Fresh state for `cfg` (no snapshots, no alerts, no sinks).
+    pub fn new(cfg: HealthConfig) -> Self {
+        HealthState {
+            cfg,
+            ring: VecDeque::new(),
+            ewma_p99: 0.0,
+            detectors: BTreeMap::new(),
+            active: BTreeMap::new(),
+            sinks: Vec::new(),
+            snapshots_seen: 0,
+            alerts_fired: 0,
+        }
+    }
+
+    /// Attach a sink; every future transition is delivered to it.
+    pub fn add_sink(&mut self, sink: Box<dyn AlertSink>) {
+        self.sinks.push(sink);
+    }
+
+    /// Snapshots observed so far.
+    pub fn snapshots_seen(&self) -> u64 {
+        self.snapshots_seen
+    }
+
+    /// Firing transitions emitted so far (resolutions not counted).
+    pub fn alerts_fired(&self) -> u64 {
+        self.alerts_fired
+    }
+
+    /// Currently-firing alerts, in stable key order.
+    pub fn active_alerts(&self) -> Vec<Alert> {
+        self.active.values().cloned().collect()
+    }
+
+    /// Ingest one sampled snapshot: extend the ring, judge every
+    /// detector, apply hysteresis, emit transitions to the sinks, and
+    /// return them (callers without sinks still see what changed).
+    pub fn observe(&mut self, t_ns: u64, snap: RegistrySnapshot) -> Vec<Alert> {
+        self.ring.push_back(SnapshotPoint { t_ns, snap });
+        let cap = self.cfg.watch.history.max(2);
+        while self.ring.len() > cap {
+            self.ring.pop_front();
+        }
+        self.snapshots_seen += 1;
+        if self.ring.len() < 2 {
+            return Vec::new(); // windowed judgments need a base point
+        }
+        let judgments = self.judge();
+        if let Some((p99, activity)) = self.latency_signal() {
+            if activity >= self.cfg.watch.min_activity && p99 > 0 {
+                // baseline adapts every active snapshot — step changes
+                // fire, then self-resolve once the new normal is learned
+                let a = self.cfg.watch.ewma_alpha;
+                self.ewma_p99 = if self.ewma_p99 == 0.0 {
+                    p99 as f64
+                } else {
+                    a * p99 as f64 + (1.0 - a) * self.ewma_p99
+                };
+            }
+        }
+        let transitions = self.apply(t_ns, judgments);
+        for alert in &transitions {
+            for sink in &self.sinks {
+                sink.emit(alert);
+            }
+        }
+        transitions
+    }
+
+    /// Evaluate every configured SLO against the current ring.
+    pub fn slo_statuses(&self) -> Vec<SloStatus> {
+        let empty = RegistrySnapshot::new();
+        let newest = self.ring.back().map(|p| &p.snap).unwrap_or(&empty);
+        let short = self.base(self.cfg.watch.short_window).unwrap_or(&empty);
+        let long = self.base(self.cfg.watch.long_window).unwrap_or(&empty);
+        self.cfg.slos.iter().map(|def| slo::evaluate(def, newest, short, long)).collect()
+    }
+
+    /// Assemble the wire-facing health snapshot (the caller supplies
+    /// per-device health from the farm — the watcher only sees the
+    /// registry).
+    pub fn snapshot(&self, devices: Vec<DeviceHealth>) -> HealthSnapshot {
+        HealthSnapshot {
+            enabled: true,
+            snapshots: self.snapshots_seen,
+            alerts_total: self.alerts_fired,
+            slos: self.slo_statuses(),
+            alerts: self.active_alerts(),
+            devices,
+        }
+    }
+
+    fn newest(&self) -> &RegistrySnapshot {
+        // observe() guarantees non-empty before judging
+        &self.ring.back().expect("ring non-empty").snap
+    }
+
+    /// Base snapshot `window` points back (clamped to ring length).
+    fn base(&self, window: usize) -> Option<&RegistrySnapshot> {
+        if self.ring.len() < 2 {
+            return None;
+        }
+        let k = window.max(1).min(self.ring.len() - 1);
+        Some(&self.ring[self.ring.len() - 1 - k].snap)
+    }
+
+    /// (cumulative p99 ns, windowed completed-request activity) of the
+    /// serving latency histogram.
+    fn latency_signal(&self) -> Option<(u64, u64)> {
+        let newest = self.ring.back()?;
+        let h = newest.snap.histogram("serve.latency")?;
+        let base_count = self
+            .base(self.cfg.watch.short_window)
+            .and_then(|b| b.histogram("serve.latency"))
+            .map(|b| b.count)
+            .unwrap_or(0);
+        Some((h.p99_ns, h.count.saturating_sub(base_count)))
+    }
+
+    fn judge(&self) -> Vec<Judgment> {
+        let w = &self.cfg.watch;
+        let newest = self.newest();
+        let empty = RegistrySnapshot::new();
+        let short = self.base(w.short_window).unwrap_or(&empty);
+        let long = self.base(w.long_window).unwrap_or(&empty);
+        let delta = |name: &str| {
+            newest.counter(name).unwrap_or(0).saturating_sub(short.counter(name).unwrap_or(0))
+        };
+        let mut out = Vec::new();
+
+        // p99 regression vs. the rolling EWMA baseline
+        if let Some((p99, activity)) = self.latency_signal() {
+            let ratio = if self.ewma_p99 > 0.0 { p99 as f64 / self.ewma_p99 } else { 0.0 };
+            let breach =
+                activity >= w.min_activity && self.ewma_p99 > 0.0 && ratio > w.p99_factor;
+            out.push(Judgment {
+                key: "p99".to_string(),
+                breach,
+                kind: AlertKind::P99Regression,
+                severity: AlertSeverity::Warning,
+                subject: "serve".to_string(),
+                value: ratio,
+                threshold: w.p99_factor,
+                message: format!(
+                    "serve.latency p99 {p99}ns vs EWMA baseline {:.0}ns",
+                    self.ewma_p99
+                ),
+            });
+        }
+
+        // admission-window saturation
+        let cap = newest.gauge("serve.inflight_capacity").unwrap_or(0);
+        if cap > 0 {
+            let inflight = newest.gauge("serve.inflight").unwrap_or(0);
+            let frac = inflight as f64 / cap as f64;
+            out.push(Judgment {
+                key: "admission".to_string(),
+                breach: frac >= w.saturation,
+                kind: AlertKind::AdmissionSaturation,
+                severity: AlertSeverity::Warning,
+                subject: "serve".to_string(),
+                value: frac,
+                threshold: w.saturation,
+                message: format!("{inflight}/{cap} admission slots in use"),
+            });
+        }
+
+        // program-cache hit-rate collapse (windowed)
+        let hits = delta("engine.cache_hit");
+        let misses = delta("engine.cache_miss");
+        if hits + misses >= w.min_activity {
+            let rate = hits as f64 / (hits + misses) as f64;
+            out.push(Judgment {
+                key: "cache".to_string(),
+                breach: rate < w.cache_hit_floor,
+                kind: AlertKind::CacheHitCollapse,
+                severity: AlertSeverity::Warning,
+                subject: "engine".to_string(),
+                value: rate,
+                threshold: w.cache_hit_floor,
+                message: format!("windowed hit rate {rate:.2} ({hits} hits / {misses} misses)"),
+            });
+        }
+
+        // per-device latency/error outliers
+        let devices = device_indices(newest);
+        let mut live_ewmas: Vec<u64> = devices
+            .iter()
+            .filter(|d| newest.gauge(&format!("farm.device{d}.live")) == Some(1))
+            .filter_map(|d| newest.gauge(&format!("farm.device{d}.ewma_ns")))
+            .filter(|&e| e > 0)
+            .collect();
+        live_ewmas.sort_unstable();
+        // lower-median, like FgpFarm::device_health: in a two-device
+        // farm the slow member is judged against the fast one, not
+        // against itself
+        let median =
+            if live_ewmas.is_empty() { 0 } else { live_ewmas[(live_ewmas.len() - 1) / 2] };
+        for d in devices {
+            let subject = format!("farm.device{d}");
+            if newest.gauge(&format!("{subject}.live")) != Some(1) {
+                continue; // dead devices are the farm's problem, not an outlier
+            }
+            let ewma = newest.gauge(&format!("{subject}.ewma_ns")).unwrap_or(0);
+            let dreq = delta(&format!("{subject}.requests"));
+            let derr = delta(&format!("{subject}.errors"));
+            let lat_ratio = if median > 0 { ewma as f64 / median as f64 } else { 0.0 };
+            let err_rate = if dreq + derr >= w.min_activity {
+                derr as f64 / (dreq + derr) as f64
+            } else {
+                0.0
+            };
+            let lat_breach = lat_ratio > w.device_factor;
+            let err_breach = err_rate > w.device_error_rate;
+            let (value, threshold) = if err_breach && !lat_breach {
+                (err_rate, w.device_error_rate)
+            } else {
+                (lat_ratio, w.device_factor)
+            };
+            out.push(Judgment {
+                key: subject.clone(),
+                breach: lat_breach || err_breach,
+                kind: AlertKind::DeviceOutlier,
+                severity: AlertSeverity::Warning,
+                subject: subject.clone(),
+                value,
+                threshold,
+                message: format!(
+                    "ewma {ewma}ns ({lat_ratio:.1}× live median {median}ns), \
+                     windowed error rate {err_rate:.2}"
+                ),
+            });
+        }
+
+        // per-tenant SLO burn (short AND long window)
+        for def in &self.cfg.slos {
+            let st = slo::evaluate(def, newest, short, long);
+            out.push(Judgment {
+                key: format!("slo.{}", def.tenant),
+                breach: st.burn_short >= 1.0 && st.burn_long >= 1.0,
+                kind: AlertKind::SloBurn,
+                severity: AlertSeverity::Critical,
+                subject: format!("tenant.{}", def.tenant),
+                value: st.burn_short,
+                threshold: 1.0,
+                message: format!(
+                    "burn {:.2}×/{:.2}× (short/long) against budget {}",
+                    st.burn_short, st.burn_long, def.error_budget
+                ),
+            });
+        }
+        out
+    }
+
+    fn apply(&mut self, t_ns: u64, judgments: Vec<Judgment>) -> Vec<Alert> {
+        let (fire_after, resolve_after) =
+            (self.cfg.watch.fire_after.max(1), self.cfg.watch.resolve_after.max(1));
+        let mut out = Vec::new();
+        for j in judgments {
+            let st = self.detectors.entry(j.key.clone()).or_default();
+            if j.breach {
+                st.breach_streak += 1;
+                st.ok_streak = 0;
+            } else {
+                st.ok_streak += 1;
+                st.breach_streak = 0;
+            }
+            let alert = |state: AlertState| Alert {
+                kind: j.kind,
+                state,
+                severity: j.severity,
+                subject: j.subject.clone(),
+                value: j.value,
+                threshold: j.threshold,
+                t_ns,
+                message: j.message.clone(),
+            };
+            if !st.firing && st.breach_streak >= fire_after {
+                st.firing = true;
+                let a = alert(AlertState::Firing);
+                self.active.insert(j.key, a.clone());
+                self.alerts_fired += 1;
+                out.push(a);
+            } else if st.firing && st.ok_streak >= resolve_after {
+                st.firing = false;
+                self.active.remove(&j.key);
+                out.push(alert(AlertState::Resolved));
+            }
+        }
+        out
+    }
+}
+
+/// Device indices present in a snapshot (from `farm.device<i>.ewma_ns`
+/// gauges, which the serving tier publishes for every slot).
+fn device_indices(snap: &RegistrySnapshot) -> Vec<u32> {
+    let mut out = Vec::new();
+    for g in &snap.gauges {
+        if let Some(rest) = g.name.strip_prefix("farm.device") {
+            if let Some(idx) = rest.strip_suffix(".ewma_ns") {
+                if let Ok(d) = idx.parse::<u32>() {
+                    out.push(d);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::health::VecSink;
+    use crate::obs::HistSummary;
+    use std::sync::Arc;
+
+    fn cfg() -> HealthConfig {
+        let mut c = HealthConfig::on();
+        c.watch.fire_after = 2;
+        c.watch.resolve_after = 2;
+        c.watch.short_window = 2;
+        c.watch.min_activity = 4;
+        c
+    }
+
+    fn lat_snap(count: u64, p99_ns: u64) -> RegistrySnapshot {
+        let mut s = RegistrySnapshot::new();
+        s.histograms.push(HistSummary {
+            name: "serve.latency".into(),
+            count,
+            mean_ns: p99_ns / 2,
+            p50_ns: p99_ns / 2,
+            p95_ns: p99_ns,
+            p99_ns,
+        });
+        s
+    }
+
+    #[test]
+    fn p99_regression_fires_after_streak_and_resolves() {
+        let mut hs = HealthState::new(cfg());
+        let sink = Arc::new(VecSink::new());
+        hs.add_sink(Box::new(Arc::clone(&sink)));
+        let mut t = 0u64;
+        let mut count = 0u64;
+        let mut feed = |hs: &mut HealthState, p99: u64| {
+            t += 1_000_000;
+            count += 10;
+            hs.observe(t, lat_snap(count, p99))
+        };
+        for _ in 0..6 {
+            assert!(feed(&mut hs, 1_000).is_empty(), "stable baseline must not alert");
+        }
+        // 10× step: breach streak 1, then fire on the 2nd
+        assert!(feed(&mut hs, 10_000).is_empty());
+        let fired = feed(&mut hs, 10_000);
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].kind, AlertKind::P99Regression);
+        assert_eq!(fired[0].state, AlertState::Firing);
+        assert_eq!(hs.active_alerts().len(), 1);
+        assert_eq!(hs.alerts_fired(), 1);
+        // baseline adapts to the new normal → eventually resolves
+        let mut resolved = false;
+        for _ in 0..40 {
+            for a in feed(&mut hs, 10_000) {
+                resolved |= a.state == AlertState::Resolved;
+            }
+        }
+        assert!(resolved, "EWMA baseline must learn the new normal");
+        assert!(hs.active_alerts().is_empty());
+        assert!(sink.len() >= 2, "sink saw both transitions");
+    }
+
+    #[test]
+    fn admission_saturation_uses_gauges() {
+        let mut hs = HealthState::new(cfg());
+        let snap = |inflight: u64| {
+            let mut s = RegistrySnapshot::new();
+            s.push_gauge("serve.inflight", inflight);
+            s.push_gauge("serve.inflight_capacity", 10);
+            s
+        };
+        hs.observe(1, snap(2));
+        let mut fired = Vec::new();
+        for i in 0..3 {
+            fired.extend(hs.observe(2 + i, snap(10)));
+        }
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].kind, AlertKind::AdmissionSaturation);
+        assert!(fired[0].value >= 0.9);
+    }
+
+    #[test]
+    fn cache_collapse_needs_min_activity() {
+        let mut hs = HealthState::new(cfg());
+        let snap = |hits: u64, misses: u64| {
+            let mut s = RegistrySnapshot::new();
+            s.push_counter("engine.cache_hit", hits);
+            s.push_counter("engine.cache_miss", misses);
+            s
+        };
+        hs.observe(1, snap(0, 0));
+        // only 2 windowed events < min_activity 4: never judged
+        hs.observe(2, snap(1, 1));
+        assert!(hs.observe(3, snap(2, 2)).is_empty() || hs.active_alerts().is_empty());
+        // heavy miss traffic: fires
+        let mut fired = Vec::new();
+        fired.extend(hs.observe(4, snap(3, 20)));
+        fired.extend(hs.observe(5, snap(4, 40)));
+        fired.extend(hs.observe(6, snap(5, 60)));
+        assert!(fired.iter().any(|a| a.kind == AlertKind::CacheHitCollapse));
+    }
+
+    #[test]
+    fn device_outlier_judges_against_live_median() {
+        let mut hs = HealthState::new(cfg());
+        let snap = |slow_ns: u64| {
+            let mut s = RegistrySnapshot::new();
+            for d in 0..3u32 {
+                s.push_gauge(&format!("farm.device{d}.live"), 1);
+                let ewma = if d == 2 { slow_ns } else { 1_000 };
+                s.push_gauge(&format!("farm.device{d}.ewma_ns"), ewma);
+                s.push_counter(&format!("farm.device{d}.requests"), 100);
+                s.push_counter(&format!("farm.device{d}.errors"), 0);
+            }
+            s.sort();
+            s
+        };
+        hs.observe(1, snap(1_000));
+        let mut fired = Vec::new();
+        for i in 0..3 {
+            fired.extend(hs.observe(2 + i, snap(20_000))); // 20× the median
+        }
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].kind, AlertKind::DeviceOutlier);
+        assert_eq!(fired[0].subject, "farm.device2");
+    }
+
+    #[test]
+    fn slo_burn_needs_both_windows_and_is_critical() {
+        let mut c = cfg();
+        c.watch.long_window = 4;
+        c.slos.push(slo::SloDef::new("acme", 0, 0.01));
+        let mut hs = HealthState::new(c);
+        let snap = |req: u64, rej: u64| {
+            let mut s = RegistrySnapshot::new();
+            s.push_counter("tenant.acme.requests", req);
+            s.push_counter("tenant.acme.rejected_quota", rej);
+            s.push_counter("tenant.acme.rejected_busy", 0);
+            s
+        };
+        hs.observe(1, snap(0, 0));
+        let mut fired = Vec::new();
+        let mut req = 0;
+        let mut rej = 0;
+        for i in 0..6 {
+            req += 100;
+            rej += 10; // 10% rejections against a 1% budget on every window
+            fired.extend(hs.observe(2 + i, snap(req, rej)));
+        }
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].kind, AlertKind::SloBurn);
+        assert_eq!(fired[0].severity, AlertSeverity::Critical);
+        assert_eq!(fired[0].subject, "tenant.acme");
+        let statuses = hs.slo_statuses();
+        assert_eq!(statuses.len(), 1);
+        assert!(!statuses[0].healthy);
+    }
+
+    #[test]
+    fn clean_traffic_never_alerts_and_snapshot_assembles() {
+        let mut hs = HealthState::new(cfg());
+        for i in 0..50u64 {
+            let mut s = lat_snap(10 * (i + 1), 1_000 + (i % 7) * 10); // mild jitter
+            s.push_gauge("serve.inflight", 1);
+            s.push_gauge("serve.inflight_capacity", 10);
+            s.push_counter("engine.cache_hit", 100 * (i + 1));
+            s.push_counter("engine.cache_miss", 1);
+            s.sort();
+            assert!(hs.observe(i * 1_000_000, s).is_empty(), "snapshot {i}");
+        }
+        assert_eq!(hs.alerts_fired(), 0);
+        let snap = hs.snapshot(Vec::new());
+        assert!(snap.enabled);
+        assert_eq!(snap.snapshots, 50);
+        assert_eq!(snap.alerts_total, 0);
+        assert!(snap.alerts.is_empty());
+    }
+
+    #[test]
+    fn ring_is_capacity_bounded() {
+        let mut c = cfg();
+        c.watch.history = 8;
+        let mut hs = HealthState::new(c);
+        for i in 0..100u64 {
+            hs.observe(i, RegistrySnapshot::new());
+        }
+        assert_eq!(hs.snapshots_seen(), 100);
+        assert!(hs.ring.len() <= 8);
+    }
+}

@@ -67,12 +67,14 @@ impl HistSummary {
 
 /// Point-in-time copy of a whole [`MetricsRegistry`] (or any ad-hoc
 /// assembly of samples — the serve tier folds its legacy atomics in at
-/// snapshot time). Both lists are kept sorted by name so snapshots are
-/// deterministic, diffable and wire-stable.
+/// snapshot time). All three lists are kept sorted by name so snapshots
+/// are deterministic, diffable and wire-stable.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct RegistrySnapshot {
-    /// Counter/gauge samples, sorted by name.
+    /// Monotone counter samples, sorted by name.
     pub counters: Vec<CounterSample>,
+    /// Gauge samples (last-write-wins level readings), sorted by name.
+    pub gauges: Vec<CounterSample>,
     /// Histogram summaries, sorted by name.
     pub histograms: Vec<HistSummary>,
 }
@@ -85,13 +87,18 @@ impl RegistrySnapshot {
 
     /// No samples at all?
     pub fn is_empty(&self) -> bool {
-        self.counters.is_empty() && self.histograms.is_empty()
+        self.counters.is_empty() && self.gauges.is_empty() && self.histograms.is_empty()
     }
 
     /// Append a counter sample (call [`RegistrySnapshot::sort`] after a
     /// batch of pushes).
     pub fn push_counter(&mut self, name: &str, value: u64) {
         self.counters.push(CounterSample { name: name.to_string(), value });
+    }
+
+    /// Append a gauge sample.
+    pub fn push_gauge(&mut self, name: &str, value: u64) {
+        self.gauges.push(CounterSample { name: name.to_string(), value });
     }
 
     /// Append a histogram summary.
@@ -102,12 +109,18 @@ impl RegistrySnapshot {
     /// Restore name order after out-of-order pushes.
     pub fn sort(&mut self) {
         self.counters.sort_by(|a, b| a.name.cmp(&b.name));
+        self.gauges.sort_by(|a, b| a.name.cmp(&b.name));
         self.histograms.sort_by(|a, b| a.name.cmp(&b.name));
     }
 
     /// Look up a counter by name.
     pub fn counter(&self, name: &str) -> Option<u64> {
         self.counters.iter().find(|c| c.name == name).map(|c| c.value)
+    }
+
+    /// Look up a gauge by name.
+    pub fn gauge(&self, name: &str) -> Option<u64> {
+        self.gauges.iter().find(|g| g.name == name).map(|g| g.value)
     }
 
     /// Look up a histogram summary by name.
@@ -122,6 +135,7 @@ impl RegistrySnapshot {
 #[derive(Debug, Default)]
 pub struct MetricsRegistry {
     counters: RwLock<BTreeMap<String, Arc<AtomicU64>>>,
+    gauges: RwLock<BTreeMap<String, Arc<AtomicU64>>>,
     hists: RwLock<BTreeMap<String, Arc<Histogram>>>,
 }
 
@@ -156,9 +170,20 @@ impl MetricsRegistry {
         self.counter(name).fetch_add(v, Ordering::Relaxed);
     }
 
-    /// Set counter `name` to `v` (gauge semantics).
+    /// The gauge named `name`, created at 0 on first sight. Gauges are
+    /// level readings (last write wins) and live in their own namespace:
+    /// `set("x", _)` never aliases `counter("x")`'s storage.
+    pub fn gauge(&self, name: &str) -> Arc<AtomicU64> {
+        if let Some(g) = read_or_recover(&self.gauges).get(name) {
+            return Arc::clone(g);
+        }
+        let mut map = write_or_recover(&self.gauges);
+        Arc::clone(map.entry(name.to_string()).or_insert_with(|| Arc::new(AtomicU64::new(0))))
+    }
+
+    /// Set gauge `name` to `v`.
     pub fn set(&self, name: &str, v: u64) {
-        self.counter(name).store(v, Ordering::Relaxed);
+        self.gauge(name).store(v, Ordering::Relaxed);
     }
 
     /// The histogram named `name`, created empty on first sight.
@@ -188,6 +213,9 @@ impl MetricsRegistry {
         for (name, c) in read_or_recover(&self.counters).iter() {
             snap.counters.push(CounterSample { name: name.clone(), value: c.load(Ordering::Relaxed) });
         }
+        for (name, g) in read_or_recover(&self.gauges).iter() {
+            snap.gauges.push(CounterSample { name: name.clone(), value: g.load(Ordering::Relaxed) });
+        }
         for (name, h) in read_or_recover(&self.hists).iter() {
             snap.histograms.push(HistSummary::of(name, h));
         }
@@ -209,8 +237,33 @@ mod tests {
         c.fetch_add(1, Ordering::Relaxed);
         let snap = r.snapshot();
         assert_eq!(snap.counter("a.hits"), Some(6));
-        assert_eq!(snap.counter("a.gauge"), Some(7));
+        assert_eq!(snap.gauge("a.gauge"), Some(7));
         assert_eq!(snap.counter("missing"), None);
+    }
+
+    #[test]
+    fn gauges_are_last_write_wins_and_do_not_alias_counters() {
+        let r = MetricsRegistry::new();
+        r.set("depth", 9);
+        r.set("depth", 4);
+        r.add("depth", 100); // a *counter* named "depth": separate storage
+        let snap = r.snapshot();
+        assert_eq!(snap.gauge("depth"), Some(4), "last write wins");
+        assert_eq!(snap.counter("depth"), Some(100), "counter untouched by set()");
+        assert_eq!(snap.gauge("missing"), None);
+    }
+
+    #[test]
+    fn gauge_handles_are_shared_and_snapshots_sorted() {
+        let r = MetricsRegistry::new();
+        r.set("z.g", 1);
+        r.set("a.g", 2);
+        let g = r.gauge("z.g");
+        g.store(5, Ordering::Relaxed);
+        let snap = r.snapshot();
+        assert_eq!(snap.gauges[0].name, "a.g");
+        assert_eq!(snap.gauges[1].name, "z.g");
+        assert_eq!(snap.gauge("z.g"), Some(5));
     }
 
     #[test]
@@ -241,6 +294,27 @@ mod tests {
     }
 
     #[test]
+    fn hist_summary_of_empty_is_all_zero() {
+        let h = Histogram::new();
+        let s = HistSummary::of("empty", &h);
+        assert_eq!(s.name, "empty");
+        assert_eq!(s.count, 0);
+        assert_eq!(s.mean_ns, 0);
+        assert_eq!((s.p50_ns, s.p95_ns, s.p99_ns), (0, 0, 0));
+    }
+
+    #[test]
+    fn hist_summary_of_single_sample() {
+        let h = Histogram::new();
+        h.record(Duration::from_micros(1)); // bucket [512, 1023]
+        let s = HistSummary::of("one", &h);
+        assert_eq!(s.count, 1);
+        assert_eq!(s.mean_ns, 1000);
+        let mid = 512 + (1023 - 512) / 2;
+        assert_eq!((s.p50_ns, s.p95_ns, s.p99_ns), (mid, mid, mid));
+    }
+
+    #[test]
     fn merge_histogram_aggregates_across_sources() {
         let local = Histogram::new();
         for _ in 0..4 {
@@ -257,11 +331,18 @@ mod tests {
         let mut snap = RegistrySnapshot::new();
         snap.push_counter("b", 2);
         snap.push_counter("a", 1);
+        snap.push_gauge("g2", 20);
+        snap.push_gauge("g1", 10);
         let h = Histogram::new();
         h.record(Duration::from_nanos(100));
         snap.push_histogram("hist", &h);
         snap.sort();
         assert_eq!(snap.counters[0].name, "a");
+        assert_eq!(snap.gauges[0].name, "g1");
         assert_eq!(snap.histogram("hist").unwrap().count, 1);
+        assert!(!snap.is_empty());
+        let mut only_gauge = RegistrySnapshot::new();
+        only_gauge.push_gauge("g", 1);
+        assert!(!only_gauge.is_empty(), "a lone gauge counts as data");
     }
 }

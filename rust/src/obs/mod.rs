@@ -20,18 +20,33 @@
 //! * [`export`] — [`chrome_trace`] (Chrome/Perfetto trace-event JSON;
 //!   device cycle spans are rescaled onto the wall-clock timeline at
 //!   the paper's 130 MHz so a compiled program's MMA/FAD phases render
-//!   *inside* the serving span that dispatched them) and
-//!   [`flame_summary`] (a human-readable per-request tree).
+//!   *inside* the serving span that dispatched them),
+//!   [`flame_summary`] (a human-readable per-request tree) and
+//!   [`prometheus_text`] (registry snapshots in the Prometheus text
+//!   exposition format);
+//! * [`health`] — the operational-intelligence layer on top of all of
+//!   it: per-tenant SLO burn rates, the background watcher's anomaly
+//!   detectors with firing/resolved hysteresis, structured
+//!   [`Alert`](health::Alert) sinks, and the per-device
+//!   [`device_score`](health::device_score) behind health-aware
+//!   routing.
 //!
 //! The pinned contract (ARCHITECTURE.md invariant 7): telemetry off ⇒
 //! bitwise-identical results to an uninstrumented build, with the
 //! disabled-path overhead regression-gated by
-//! `rust/benches/obs_overhead.rs` → `BENCH_obs.json`.
+//! `rust/benches/obs_overhead.rs` → `BENCH_obs.json`; the health layer
+//! extends it — health off ⇒ no watcher thread and no clock reads,
+//! gated by `rust/benches/health_slo.rs` → `BENCH_health.json`.
 
 pub mod export;
+pub mod health;
 pub mod metrics;
 pub mod span;
 
-pub use export::{chrome_trace, flame_summary};
+pub use export::{chrome_trace, flame_summary, prometheus_text};
+pub use health::{
+    Alert, AlertKind, AlertSeverity, AlertSink, AlertState, DeviceHealth, HealthConfig,
+    HealthSnapshot, HealthState, SloDef, SloStatus, WatchConfig,
+};
 pub use metrics::{CounterSample, HistSummary, MetricsRegistry, RegistrySnapshot};
 pub use span::{SpanRecord, SpanRing, Telemetry, TelemetryConfig, TraceContext};

@@ -17,6 +17,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::gmp::matrix::CMatrix;
 use crate::gmp::message::GaussMessage;
+use crate::obs::health::HealthSnapshot;
 use crate::obs::{Telemetry, TraceContext};
 
 use super::wire::{
@@ -252,6 +253,21 @@ impl ServeClient {
         match self.call(&ServeRequest::Stats)? {
             ServeReply::Stats(snapshot) => Ok(snapshot),
             other => unexpected("Stats", other),
+        }
+    }
+
+    /// Fetch the server's health snapshot: per-tenant SLO status,
+    /// firing alerts, per-device routing scores. Needs a wire-version-2
+    /// handshake (every `connect` against a current server gets one);
+    /// the server answers with `enabled: false` and device identity
+    /// only when its health layer is off.
+    pub fn health(&mut self) -> Result<HealthSnapshot> {
+        if self.version < 2 {
+            bail!("HEALTH needs wire version 2, but the handshake agreed on {}", self.version);
+        }
+        match self.call(&ServeRequest::Health)? {
+            ServeReply::Health(snapshot) => Ok(snapshot),
+            other => unexpected("Health", other),
         }
     }
 }

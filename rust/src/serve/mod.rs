@@ -30,6 +30,13 @@
 //!    carry a [`TraceContext`](crate::obs::TraceContext) envelope, so
 //!    one client call yields one correlated span tree from the socket
 //!    down to the device's cycle counters (`examples/trace_rls.rs`).
+//!    On top of the raw telemetry sits the operational-intelligence
+//!    layer ([`crate::obs::health`]): with
+//!    [`ServeConfig::health`](server::ServeConfig) enabled, a
+//!    background watcher evaluates per-tenant SLO burn rates and
+//!    anomaly detectors over the unified registry, the wire grows a
+//!    v2-only `Health` request, and sticky routing drains streams off
+//!    degraded-but-alive devices (`examples/monitor_farm.rs`).
 //!
 //! Layering: `serve` sits strictly **above** the coordinator — it owns
 //! sockets, framing, tenancy, and admission, and delegates every

@@ -26,6 +26,16 @@
 //! The engine room holds the registry lock for the duration of a drain
 //! round; rounds are kept short (one `chunk` per stream), and close
 //! handlers poll with the lock released between attempts.
+//!
+//! With [`ServeConfig::health`] enabled a fourth kind of thread runs —
+//! the **health watcher** (`fgp-serve-health`) — sampling the unified
+//! registry snapshot on a fixed cadence into a [`HealthState`], and
+//! sticky routing turns health-aware: new pins, failover re-pins, and a
+//! per-round proactive drain all avoid devices whose
+//! [`device_score`](crate::obs::health::device_score) has fallen below
+//! [`HealthConfig::min_device_score`]. Disabled (the default), none of
+//! that exists at runtime: no thread, no clock reads, bitwise-identical
+//! outputs (ARCHITECTURE invariant 7 extension).
 
 use std::collections::BTreeMap;
 use std::io;
@@ -45,6 +55,7 @@ use crate::coordinator::{
 use crate::fgp::FgpConfig;
 use crate::gmp::matrix::CMatrix;
 use crate::gmp::message::GaussMessage;
+use crate::obs::health::{AlertSink, HealthConfig, HealthSnapshot, HealthState};
 use crate::obs::{RegistrySnapshot, Telemetry, TelemetryConfig, TraceContext};
 
 use super::admission::{AdmissionController, QuotaPolicy, TenantQuotas};
@@ -83,6 +94,12 @@ pub struct ServeConfig {
     /// Telemetry: span recording off by default ([`TelemetryConfig`]);
     /// registry counters always run (they back the `STATS` reply).
     pub telemetry: TelemetryConfig,
+    /// Operational intelligence ([`HealthConfig`]): off by default — no
+    /// watcher thread, no clock reads, bitwise-identical outputs.
+    /// Enabled, it starts the `fgp-serve-health` watcher, turns on the
+    /// farm's per-device latency tracking, and makes sticky routing
+    /// health-aware.
+    pub health: HealthConfig,
 }
 
 impl Default for ServeConfig {
@@ -100,6 +117,7 @@ impl Default for ServeConfig {
             retry_ms: 5,
             max_pending_per_stream: 1024,
             telemetry: TelemetryConfig::default(),
+            health: HealthConfig::default(),
         }
     }
 }
@@ -122,8 +140,15 @@ struct Shared {
     rejected_busy: AtomicU64,
     rejected_quota: AtomicU64,
     failovers: AtomicU64,
+    /// Sticky streams proactively re-pinned off degraded-but-alive
+    /// devices (health-aware routing; distinct from `failovers`, which
+    /// count re-pins after a device actually failed).
+    drains: AtomicU64,
     shutdown: AtomicBool,
     tel: Arc<Telemetry>,
+    /// The watcher's state, present only when `cfg.health.enabled` — the
+    /// disabled path carries no health state at all.
+    health: Option<Mutex<HealthState>>,
 }
 
 impl Shared {
@@ -137,24 +162,54 @@ impl Shared {
 
     /// The unified registry snapshot: everything the device sessions and
     /// engines fed into the obs registry, plus the serve tier's own
-    /// counters and latency histograms folded in under `serve.*` names —
-    /// one flat, sorted view across every layer.
+    /// counters, gauges and latency histograms folded in under `serve.*`
+    /// names, per-tenant ledger counters under `tenant.<name>.*`, and
+    /// per-device farm health under `farm.device<i>.*` — one flat,
+    /// sorted view across every layer. This is also exactly what the
+    /// health watcher samples and what the anomaly detectors read.
     fn telemetry_snapshot(&self) -> RegistrySnapshot {
         let mut snap = self.tel.registry().snapshot();
         snap.push_counter("serve.admitted", self.admitted.load(Ordering::Relaxed));
         snap.push_counter("serve.rejected_busy", self.rejected_busy.load(Ordering::Relaxed));
         snap.push_counter("serve.rejected_quota", self.rejected_quota.load(Ordering::Relaxed));
         snap.push_counter("serve.failovers", self.failovers.load(Ordering::Relaxed));
-        snap.push_counter("serve.inflight", self.admission.inflight() as u64);
+        snap.push_counter("serve.drains", self.drains.load(Ordering::Relaxed));
         snap.push_counter("serve.batches", self.metrics.batches.load(Ordering::Relaxed));
         snap.push_counter(
             "serve.batched_requests",
             self.metrics.batched_requests.load(Ordering::Relaxed),
         );
+        snap.push_gauge("serve.inflight", self.admission.inflight() as u64);
+        snap.push_gauge("serve.inflight_capacity", self.admission.capacity() as u64);
+        for (name, ledger) in lock(&self.tenants).iter() {
+            let t = ledger.snapshot(name);
+            snap.push_counter(&format!("tenant.{name}.requests"), t.requests);
+            snap.push_counter(&format!("tenant.{name}.samples"), t.samples);
+            snap.push_counter(&format!("tenant.{name}.rejected_quota"), t.rejected_quota);
+            snap.push_counter(&format!("tenant.{name}.rejected_busy"), t.rejected_busy);
+        }
+        for d in self.farm.device_health() {
+            let p = format!("farm.device{}", d.device);
+            snap.push_counter(&format!("{p}.requests"), d.requests);
+            snap.push_counter(&format!("{p}.errors"), d.errors);
+            snap.push_gauge(&format!("{p}.ewma_ns"), d.ewma_ns);
+            snap.push_gauge(&format!("{p}.live"), u64::from(d.live));
+        }
         snap.push_histogram("serve.latency", &self.metrics.latency);
         snap.push_histogram("serve.queue_wait", &self.metrics.queue_wait);
         snap.sort();
         snap
+    }
+
+    /// Assemble the health reply: per-device scores always (routing
+    /// identity is useful even with the layer off), SLO/alert state only
+    /// when the watcher exists.
+    fn health_snapshot(&self) -> HealthSnapshot {
+        let devices = self.farm.device_health();
+        match &self.health {
+            Some(h) => lock(h).snapshot(devices),
+            None => HealthSnapshot::disabled(devices),
+        }
     }
 
     /// `include_telemetry` is the wire-version gate: a v1 peer gets the
@@ -189,6 +244,7 @@ pub struct FgpServe {
     addr: SocketAddr,
     accept: Option<JoinHandle<()>>,
     engine: Option<JoinHandle<()>>,
+    watcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
 }
 
@@ -209,6 +265,12 @@ impl FgpServe {
         let quota = cfg.quota;
         let max_inflight = cfg.max_inflight;
         let workers = cfg.workers.max(1);
+        // the health layer's entire enabled path hangs off this Option:
+        // disabled means no state, no watcher thread, no clock reads
+        let health = cfg.health.enabled.then(|| Mutex::new(HealthState::new(cfg.health.clone())));
+        if cfg.health.enabled {
+            farm.enable_health_tracking();
+        }
         let shared = Arc::new(Shared {
             cfg,
             farm,
@@ -221,8 +283,10 @@ impl FgpServe {
             rejected_busy: AtomicU64::new(0),
             rejected_quota: AtomicU64::new(0),
             failovers: AtomicU64::new(0),
+            drains: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
             tel,
+            health,
         });
 
         let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
@@ -290,7 +354,43 @@ impl FgpServe {
                 .expect("spawn serve engine room")
         };
 
-        Ok(FgpServe { shared, addr, accept: Some(accept), engine: Some(engine), workers: worker_handles })
+        // the background watcher: sample the unified registry on a fixed
+        // cadence into the detector state. Only exists when enabled.
+        let watcher = shared.health.is_some().then(|| {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("fgp-serve-health".into())
+                .spawn(move || {
+                    let epoch = Instant::now();
+                    let interval =
+                        Duration::from_millis(shared.cfg.health.watch.interval_ms.max(1));
+                    while !shared.shutdown.load(Ordering::Acquire) {
+                        let snap = shared.telemetry_snapshot();
+                        let t_ns = epoch.elapsed().as_nanos() as u64;
+                        if let Some(h) = &shared.health {
+                            lock(h).observe(t_ns, snap);
+                        }
+                        // sleep in short slices so shutdown stays prompt
+                        // even with a long sampling interval
+                        let mut slept = Duration::ZERO;
+                        while slept < interval && !shared.shutdown.load(Ordering::Acquire) {
+                            let slice = (interval - slept).min(Duration::from_millis(5));
+                            std::thread::sleep(slice);
+                            slept += slice;
+                        }
+                    }
+                })
+                .expect("spawn serve health watcher")
+        });
+
+        Ok(FgpServe {
+            shared,
+            addr,
+            accept: Some(accept),
+            engine: Some(engine),
+            watcher,
+            workers: worker_handles,
+        })
     }
 
     /// The bound listen address (with the resolved ephemeral port).
@@ -308,6 +408,29 @@ impl FgpServe {
     /// reply carries, telemetry section included).
     pub fn stats(&self) -> StatsSnapshot {
         self.shared.snapshot(true)
+    }
+
+    /// In-process health snapshot (the same body a wire `Health` reply
+    /// carries): per-tenant SLO status, firing alerts, per-device
+    /// scores. With the health layer off only the device section is
+    /// populated.
+    pub fn health(&self) -> HealthSnapshot {
+        self.shared.health_snapshot()
+    }
+
+    /// Attach an [`AlertSink`] to the running watcher; every future
+    /// firing/resolved transition is delivered to it. Returns `false`
+    /// (and drops the sink) when the health layer is disabled. Sinks
+    /// attach post-start because trait objects don't fit the `Clone +
+    /// Debug` [`ServeConfig`].
+    pub fn add_alert_sink(&self, sink: Box<dyn AlertSink>) -> bool {
+        match &self.shared.health {
+            Some(h) => {
+                lock(h).add_sink(sink);
+                true
+            }
+            None => false,
+        }
     }
 
     /// The server's shared telemetry handle: the span ring every layer
@@ -336,6 +459,9 @@ impl FgpServe {
             let _ = h.join();
         }
         if let Some(h) = self.engine.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.watcher.take() {
             let _ = h.join();
         }
     }
@@ -480,14 +606,25 @@ fn one_shot<T>(
     }
 }
 
-fn pick_device(shared: &Shared, mode: StreamMode) -> Result<usize, ServeReply> {
+/// Pick a pin for a new/resumed stream, excluding `avoid`. With the
+/// health layer on, sticky pins prefer members scoring at least
+/// `min_device_score` (falling back to any live member — degraded
+/// beats refused).
+fn pick_device(shared: &Shared, mode: StreamMode, avoid: &[usize]) -> Result<usize, ServeReply> {
     match mode {
         // coalesced streams route per batch; the pin is informational
         StreamMode::Coalesced => Ok(0),
-        StreamMode::Sticky => shared.farm.pick(&[]).map_err(|e| ServeReply::Error {
-            retryable: e.is_retryable(),
-            message: e.to_string(),
-        }),
+        StreamMode::Sticky => {
+            let picked = if shared.cfg.health.enabled {
+                shared.farm.pick_healthy(avoid, shared.cfg.health.min_device_score)
+            } else {
+                shared.farm.pick(avoid)
+            };
+            picked.map_err(|e| ServeReply::Error {
+                retryable: e.is_retryable(),
+                message: e.to_string(),
+            })
+        }
     }
 }
 
@@ -504,6 +641,7 @@ fn request_span_name(req: &ServeRequest) -> &'static str {
         ServeRequest::Checkpoint { .. } => "serve.checkpoint",
         ServeRequest::CloseStream { .. } => "serve.close_stream",
         ServeRequest::Stats => "serve.stats",
+        ServeRequest::Health => "serve.health",
     }
 }
 
@@ -579,7 +717,7 @@ fn dispatch_request(
             )
         }
         ServeRequest::OpenStream { name, mode, prior } => {
-            let device = match pick_device(shared, mode) {
+            let device = match pick_device(shared, mode, &[]) {
                 Ok(d) => d,
                 Err(reply) => return reply,
             };
@@ -609,7 +747,7 @@ fn dispatch_request(
                     ),
                 };
             }
-            let device = match pick_device(shared, mode) {
+            let device = match pick_device(shared, mode, &[]) {
                 Ok(d) => d,
                 Err(reply) => return reply,
             };
@@ -740,6 +878,18 @@ fn dispatch_request(
             std::thread::sleep(Duration::from_micros(200));
         },
         ServeRequest::Stats => ServeReply::Stats(shared.snapshot(conn.version >= 2)),
+        // v2-gated like the trace envelope: a v1 peer that somehow sends
+        // tag 11 gets a terminal error, never bytes it can't decode
+        ServeRequest::Health => {
+            if conn.version >= 2 {
+                ServeReply::Health(shared.health_snapshot())
+            } else {
+                ServeReply::Error {
+                    retryable: false,
+                    message: "HEALTH needs wire version 2: send a v2 HELLO first".into(),
+                }
+            }
+        }
     }
 }
 
@@ -766,8 +916,31 @@ fn drain_round(shared: &Shared) -> u64 {
         trace: Option<(TraceContext, u64, u64)>,
     }
     let mut jobs: Vec<Job> = Vec::new();
+    // health-aware draining: with the layer on, score the members once
+    // per round; streams pinned to a degraded-but-alive device re-pin to
+    // a qualifying member BEFORE the chunk dispatches, so the move costs
+    // nothing — no sample is in flight when the pin changes
+    let min_score = shared.cfg.health.min_device_score;
+    let health = (shared.cfg.health.enabled && min_score > 0.0)
+        .then(|| farm.device_health());
     for id in reg.fair_ids(StreamMode::Sticky) {
         let entry = reg.get_mut(id).expect("fair_ids returns live ids");
+        if let Some(health) = &health {
+            let degraded = health
+                .iter()
+                .any(|h| h.device as usize == entry.device && h.live && h.score < min_score);
+            if degraded {
+                if let Ok(next) = farm.pick_healthy(&[entry.device], min_score) {
+                    let qualifies = health
+                        .iter()
+                        .any(|h| h.device as usize == next && h.score >= min_score);
+                    if qualifies && next != entry.device {
+                        entry.device = next;
+                        shared.drains.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
         let batch = entry.cn.take(shared.cfg.chunk);
         if batch.is_empty() {
             continue;
@@ -829,9 +1002,15 @@ fn drain_round(shared: &Shared) -> u64 {
             Err(e) if farm_retryable(&e) => {
                 // the chunk never executed: requeue it unchanged and
                 // re-pin the stream on a surviving member — nothing is
-                // lost, nothing duplicated
+                // lost, nothing duplicated. Health-aware when enabled:
+                // prefer a member that is not itself degraded.
                 entry.cn.requeue_front(job.batch);
-                if let Ok(next) = farm.pick(&[job.device]) {
+                let next = if shared.cfg.health.enabled {
+                    farm.pick_healthy(&[job.device], shared.cfg.health.min_device_score)
+                } else {
+                    farm.pick(&[job.device])
+                };
+                if let Ok(next) = next {
                     entry.device = next;
                     entry.failovers += 1;
                     shared.failovers.fetch_add(1, Ordering::Relaxed);

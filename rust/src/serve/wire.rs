@@ -39,9 +39,12 @@
 //! property ("every strict prefix errors") forbids optionals: a
 //! version-2 `Hello` is tag 12 (tenant + declared client version), a
 //! telemetry-extended `STATS` reply is tag 12 (the version-1 body plus
-//! a [`RegistrySnapshot`](crate::obs::RegistrySnapshot) section). The
-//! version-1 encodings are still emitted whenever the value carries no
-//! version-2 information, so old peers interoperate byte-for-byte.
+//! a [`RegistrySnapshot`](crate::obs::RegistrySnapshot) section —
+//! since the health layer, counters + gauges + histograms), and the
+//! health surface is request tag 11 / reply tag 13
+//! ([`HealthSnapshot`]). The version-1 encodings are still emitted
+//! whenever the value carries no version-2 information, so old peers
+//! interoperate byte-for-byte and never see the health tags.
 //!
 //! Requests may additionally be wrapped in a **trace envelope**
 //! ([`encode_request_traced`]): a leading marker byte 0 (request tags
@@ -54,6 +57,9 @@ use std::io::{self, Read, Write};
 
 use crate::coordinator::MetricsSnapshot;
 use crate::engine::StreamCheckpoint;
+use crate::obs::health::{
+    Alert, AlertKind, AlertSeverity, AlertState, DeviceHealth, HealthSnapshot, SloStatus,
+};
 use crate::obs::{RegistrySnapshot, TraceContext};
 use crate::fgp::processor::{Command, FsmState, Reply};
 use crate::fgp::RunStats;
@@ -495,6 +501,10 @@ pub enum ServeRequest {
     },
     /// Fetch the server's SLO snapshot.
     Stats,
+    /// Fetch the server's health snapshot: per-tenant SLO status,
+    /// active alerts, per-device routing scores (version 2 only — a
+    /// version-1 peer never emits or receives this tag).
+    Health,
 }
 
 /// A server-to-client reply frame.
@@ -560,6 +570,9 @@ pub enum ServeReply {
     },
     /// SLO snapshot.
     Stats(StatsSnapshot),
+    /// Health snapshot (version 2 only; the reply to
+    /// [`ServeRequest::Health`]).
+    Health(HealthSnapshot),
     /// The admission window is full; retry after the hint.
     Busy {
         /// Suggested client backoff in milliseconds.
@@ -672,6 +685,11 @@ fn enc_registry(e: &mut Enc, r: &RegistrySnapshot) {
         e.str(&c.name);
         e.u64(c.value);
     }
+    e.u32(r.gauges.len() as u32);
+    for g in &r.gauges {
+        e.str(&g.name);
+        e.u64(g.value);
+    }
     e.u32(r.histograms.len() as u32);
     for h in &r.histograms {
         e.str(&h.name);
@@ -691,6 +709,12 @@ fn dec_registry(d: &mut Dec) -> Result<RegistrySnapshot, WireError> {
         let value = d.u64("telemetry")?;
         r.push_counter(&name, value);
     }
+    let ng = d.u32("telemetry")? as usize;
+    for _ in 0..ng {
+        let name = d.str("telemetry")?;
+        let value = d.u64("telemetry")?;
+        r.push_gauge(&name, value);
+    }
     let nh = d.u32("telemetry")? as usize;
     for _ in 0..nh {
         r.histograms.push(crate::obs::HistSummary {
@@ -703,6 +727,137 @@ fn dec_registry(d: &mut Dec) -> Result<RegistrySnapshot, WireError> {
         });
     }
     Ok(r)
+}
+
+fn enc_slo_status(e: &mut Enc, s: &SloStatus) {
+    e.str(&s.tenant);
+    e.u64(s.p99_objective_ns);
+    e.f64(s.error_budget);
+    e.u64(s.p99_ns);
+    e.f64(s.burn_short);
+    e.f64(s.burn_long);
+    e.u64(s.requests);
+    e.u64(s.errors);
+    e.u8(u8::from(s.healthy));
+}
+
+fn dec_slo_status(d: &mut Dec) -> Result<SloStatus, WireError> {
+    Ok(SloStatus {
+        tenant: d.str("SloStatus")?,
+        p99_objective_ns: d.u64("SloStatus")?,
+        error_budget: d.f64("SloStatus")?,
+        p99_ns: d.u64("SloStatus")?,
+        burn_short: d.f64("SloStatus")?,
+        burn_long: d.f64("SloStatus")?,
+        requests: d.u64("SloStatus")?,
+        errors: d.u64("SloStatus")?,
+        healthy: d.u8("SloStatus")? != 0,
+    })
+}
+
+fn enc_alert(e: &mut Enc, a: &Alert) {
+    e.u8(match a.kind {
+        AlertKind::P99Regression => 1,
+        AlertKind::AdmissionSaturation => 2,
+        AlertKind::CacheHitCollapse => 3,
+        AlertKind::DeviceOutlier => 4,
+        AlertKind::SloBurn => 5,
+    });
+    e.u8(match a.state {
+        AlertState::Firing => 0,
+        AlertState::Resolved => 1,
+    });
+    e.u8(match a.severity {
+        AlertSeverity::Warning => 0,
+        AlertSeverity::Critical => 1,
+    });
+    e.str(&a.subject);
+    e.f64(a.value);
+    e.f64(a.threshold);
+    e.u64(a.t_ns);
+    e.str(&a.message);
+}
+
+fn dec_alert(d: &mut Dec) -> Result<Alert, WireError> {
+    let kind = match d.u8("AlertKind")? {
+        1 => AlertKind::P99Regression,
+        2 => AlertKind::AdmissionSaturation,
+        3 => AlertKind::CacheHitCollapse,
+        4 => AlertKind::DeviceOutlier,
+        5 => AlertKind::SloBurn,
+        tag => return Err(WireError::BadTag { what: "AlertKind", tag }),
+    };
+    let state = match d.u8("AlertState")? {
+        0 => AlertState::Firing,
+        1 => AlertState::Resolved,
+        tag => return Err(WireError::BadTag { what: "AlertState", tag }),
+    };
+    let severity = match d.u8("AlertSeverity")? {
+        0 => AlertSeverity::Warning,
+        1 => AlertSeverity::Critical,
+        tag => return Err(WireError::BadTag { what: "AlertSeverity", tag }),
+    };
+    Ok(Alert {
+        kind,
+        state,
+        severity,
+        subject: d.str("Alert")?,
+        value: d.f64("Alert")?,
+        threshold: d.f64("Alert")?,
+        t_ns: d.u64("Alert")?,
+        message: d.str("Alert")?,
+    })
+}
+
+fn enc_device_health(e: &mut Enc, dh: &DeviceHealth) {
+    e.u32(dh.device);
+    e.u8(u8::from(dh.live));
+    e.u64(dh.requests);
+    e.u64(dh.errors);
+    e.u64(dh.ewma_ns);
+    e.f64(dh.score);
+}
+
+fn dec_device_health(d: &mut Dec) -> Result<DeviceHealth, WireError> {
+    Ok(DeviceHealth {
+        device: d.u32("DeviceHealth")?,
+        live: d.u8("DeviceHealth")? != 0,
+        requests: d.u64("DeviceHealth")?,
+        errors: d.u64("DeviceHealth")?,
+        ewma_ns: d.u64("DeviceHealth")?,
+        score: d.f64("DeviceHealth")?,
+    })
+}
+
+fn enc_health(e: &mut Enc, h: &HealthSnapshot) {
+    e.u8(u8::from(h.enabled));
+    e.u64(h.snapshots);
+    e.u64(h.alerts_total);
+    e.u32(h.slos.len() as u32);
+    for s in &h.slos {
+        enc_slo_status(e, s);
+    }
+    e.u32(h.alerts.len() as u32);
+    for a in &h.alerts {
+        enc_alert(e, a);
+    }
+    e.u32(h.devices.len() as u32);
+    for dh in &h.devices {
+        enc_device_health(e, dh);
+    }
+}
+
+fn dec_health(d: &mut Dec) -> Result<HealthSnapshot, WireError> {
+    let enabled = d.u8("Health")? != 0;
+    let snapshots = d.u64("Health")?;
+    let alerts_total = d.u64("Health")?;
+    let ns = d.u32("Health")? as usize;
+    let slos = (0..ns).map(|_| dec_slo_status(d)).collect::<Result<_, _>>()?;
+    let na = d.u32("Health")? as usize;
+    let alerts = (0..na).map(|_| dec_alert(d)).collect::<Result<_, _>>()?;
+    let nd = d.u32("Health")? as usize;
+    let devices = (0..nd).map(|_| dec_device_health(d)).collect::<Result<_, _>>()?;
+    Ok(HealthSnapshot { enabled, snapshots, alerts_total, slos, alerts, devices })
 }
 
 /// Encode a [`ServeRequest`] payload.
@@ -761,6 +916,7 @@ pub fn encode_request(req: &ServeRequest) -> Vec<u8> {
             e.bytes(checkpoint);
         }
         ServeRequest::Stats => e.u8(10),
+        ServeRequest::Health => e.u8(11),
     }
     e.into_bytes()
 }
@@ -797,6 +953,7 @@ pub fn decode_request(buf: &[u8]) -> Result<ServeRequest, WireError> {
             checkpoint: d.bytes("Resume")?,
         },
         10 => ServeRequest::Stats,
+        11 => ServeRequest::Health,
         12 => ServeRequest::Hello { tenant: d.str("Hello")?, version: d.u32("Hello")? },
         tag => return Err(WireError::BadTag { what: "ServeRequest", tag }),
     };
@@ -909,6 +1066,10 @@ pub fn encode_reply(reply: &ServeReply) -> Vec<u8> {
                 enc_registry(&mut e, &s.telemetry);
             }
         }
+        ServeReply::Health(h) => {
+            e.u8(13);
+            enc_health(&mut e, h);
+        }
         ServeReply::Busy { retry_ms } => {
             e.u8(9);
             e.u32(*retry_ms);
@@ -988,6 +1149,7 @@ pub fn decode_reply(buf: &[u8]) -> Result<ServeReply, WireError> {
         }
         9 => ServeReply::Busy { retry_ms: d.u32("Busy")? },
         10 => ServeReply::QuotaExceeded { retry_ms: d.u32("QuotaExceeded")? },
+        13 => ServeReply::Health(dec_health(&mut d)?),
         11 => ServeReply::Error {
             retryable: d.u8("Error")? != 0,
             message: d.str("Error")?,
@@ -1290,6 +1452,122 @@ mod tests {
             }
             other => panic!("expected Stats, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn stats_gauge_section_round_trips_and_stays_v2_gated() {
+        // a snapshot with only gauges is non-empty telemetry → tag 12
+        let mut s = StatsSnapshot::default();
+        s.telemetry.push_gauge("serve.inflight", 4);
+        s.telemetry.push_gauge("serve.inflight_capacity", 16);
+        let bytes = encode_reply(&ServeReply::Stats(s.clone()));
+        assert_eq!(bytes[0], 12, "gauges are version-2 information");
+        match decode_reply(&bytes).unwrap() {
+            ServeReply::Stats(back) => {
+                assert_eq!(back.telemetry.gauge("serve.inflight"), Some(4));
+                assert_eq!(back, s);
+            }
+            other => panic!("expected Stats, got {other:?}"),
+        }
+    }
+
+    fn sample_health() -> HealthSnapshot {
+        HealthSnapshot {
+            enabled: true,
+            snapshots: 42,
+            alerts_total: 2,
+            slos: vec![SloStatus {
+                tenant: "acme".into(),
+                p99_objective_ns: 5_000_000,
+                error_budget: 0.01,
+                p99_ns: 98_303,
+                burn_short: 0.5,
+                burn_long: 0.1 + 0.2, // non-representable: bits must survive
+                requests: 1_000,
+                errors: 3,
+                healthy: true,
+            }],
+            alerts: vec![Alert {
+                kind: AlertKind::DeviceOutlier,
+                state: AlertState::Firing,
+                severity: AlertSeverity::Warning,
+                subject: "farm.device2".into(),
+                value: 9.75,
+                threshold: 8.0,
+                t_ns: 123_456_789,
+                message: "ewma 9.8× live median".into(),
+            }],
+            devices: vec![
+                DeviceHealth {
+                    device: 0,
+                    live: true,
+                    requests: 500,
+                    errors: 0,
+                    ewma_ns: 40_000,
+                    score: 1.0,
+                },
+                DeviceHealth {
+                    device: 2,
+                    live: false,
+                    requests: 120,
+                    errors: 7,
+                    ewma_ns: 390_000,
+                    score: 0.0,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn health_request_and_reply_round_trip() {
+        let req = ServeRequest::Health;
+        let rb = encode_request(&req);
+        assert_eq!(rb, vec![11], "Health is a bare version-2 tag");
+        assert_eq!(decode_request(&rb).unwrap(), req);
+
+        let reply = ServeReply::Health(sample_health());
+        let bytes = encode_reply(&reply);
+        assert_eq!(bytes[0], 13);
+        assert_eq!(decode_reply(&bytes).unwrap(), reply);
+        // f64 fields are bit-exact through the codec
+        match decode_reply(&bytes).unwrap() {
+            ServeReply::Health(h) => {
+                assert_eq!(h.slos[0].burn_long.to_bits(), (0.1 + 0.2_f64).to_bits());
+            }
+            other => panic!("expected Health, got {other:?}"),
+        }
+        // a disabled-layer reply also round-trips
+        let off = ServeReply::Health(HealthSnapshot::disabled(vec![]));
+        assert_eq!(decode_reply(&encode_reply(&off)).unwrap(), off);
+    }
+
+    #[test]
+    fn health_reply_rejects_prefixes_trailing_and_bad_tags() {
+        let bytes = encode_reply(&ServeReply::Health(sample_health()));
+        for cut in 0..bytes.len() {
+            assert!(decode_reply(&bytes[..cut]).is_err(), "prefix {cut} must error");
+        }
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        assert_eq!(decode_reply(&trailing), Err(WireError::Trailing { extra: 1 }));
+        // corrupt the alert-kind byte (first byte after the u32 alert
+        // count, whose offset we find by re-encoding the prefix)
+        let mut e = Enc::new();
+        e.u8(13);
+        let h = sample_health();
+        e.u8(1);
+        e.u64(h.snapshots);
+        e.u64(h.alerts_total);
+        e.u32(1);
+        enc_slo_status(&mut e, &h.slos[0]);
+        e.u32(1);
+        let kind_at = e.into_bytes().len();
+        let mut bad = bytes;
+        bad[kind_at] = 99;
+        assert!(matches!(
+            decode_reply(&bad),
+            Err(WireError::BadTag { what: "AlertKind", tag: 99 })
+        ));
     }
 
     #[test]

@@ -1,0 +1,235 @@
+//! Integration: the operational-intelligence layer (health tentpole).
+//!
+//! The contracts under test:
+//!
+//! * **wire** — a v2 client's `Health` round-trips against a live
+//!   server: enabled servers report watcher progress, SLO status and
+//!   per-device scores; disabled servers answer `enabled: false` but
+//!   still expose device identity;
+//! * **detection + routing** — a device degraded by an injected delay
+//!   is flagged by the outlier detector within a bounded number of
+//!   snapshots, and sticky streams pinned to it are *drained* (re-pinned
+//!   proactively, counted under `serve.drains`) with zero lost samples
+//!   and a final state bitwise identical to an undegraded run;
+//! * **inertness (invariant 7 extension)** — health off (the default)
+//!   spawns no watcher and serves bitwise-identical numbers;
+//! * **interop** — a wire-version-1 peer that sends the `Health` tag is
+//!   refused with a non-retryable error, never a reply shape its
+//!   generation cannot decode.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use fgp_repro::gmp::matrix::{c64, CMatrix};
+use fgp_repro::gmp::message::GaussMessage;
+use fgp_repro::obs::health::{AlertKind, HealthConfig, SloDef};
+use fgp_repro::serve::{
+    decode_reply, read_frame, FgpServe, ServeClient, ServeConfig, ServeReply, StreamMode,
+};
+use fgp_repro::testutil::Rng;
+
+fn msg(rng: &mut Rng, n: usize) -> GaussMessage {
+    GaussMessage::new(
+        (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+        CMatrix::random_psd(rng, n, 1.0).scale(0.15),
+    )
+}
+
+fn sample(rng: &mut Rng, n: usize) -> (GaussMessage, CMatrix) {
+    (msg(rng, n), CMatrix::random(rng, n, n).scale(0.3))
+}
+
+/// A health config tuned for test time scales: 5 ms sampling, fire
+/// after 2 breaching snapshots, one SLO for the test tenant.
+fn fast_health() -> HealthConfig {
+    let mut h = HealthConfig::on();
+    h.watch.interval_ms = 5;
+    h.watch.fire_after = 2;
+    h.slos.push(SloDef::new("t", 0, 0.05));
+    h
+}
+
+#[test]
+fn health_round_trips_enabled_and_disabled() {
+    // enabled server: the watcher makes progress and the reply says so
+    let srv = FgpServe::start(ServeConfig { health: fast_health(), ..ServeConfig::default() })
+        .unwrap();
+    let mut client = ServeClient::connect(srv.addr(), "t").unwrap();
+    assert_eq!(client.negotiated_version(), 2);
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let snap = loop {
+        let snap = client.health().unwrap();
+        if snap.snapshots >= 3 {
+            break snap;
+        }
+        assert!(Instant::now() < deadline, "watcher never sampled: {snap:?}");
+        std::thread::sleep(Duration::from_millis(2));
+    };
+    assert!(snap.enabled);
+    assert_eq!(snap.devices.len(), 2);
+    assert!(snap.devices.iter().all(|d| d.live));
+    assert_eq!(snap.slos.len(), 1, "the configured SLO is evaluated");
+    assert_eq!(snap.slos[0].tenant, "t");
+    // the server-side accessor agrees with the wire
+    assert!(srv.health().enabled);
+    srv.shutdown();
+
+    // disabled server: no watcher, but device identity still answers
+    let srv = FgpServe::start(ServeConfig::default()).unwrap();
+    let mut client = ServeClient::connect(srv.addr(), "t").unwrap();
+    let snap = client.health().unwrap();
+    assert!(!snap.enabled);
+    assert_eq!(snap.snapshots, 0);
+    assert!(snap.slos.is_empty() && snap.alerts.is_empty());
+    assert_eq!(snap.devices.len(), 2);
+    assert!(
+        snap.devices.iter().all(|d| d.live && d.ewma_ns == 0),
+        "health off must read no clocks: {snap:?}"
+    );
+    srv.shutdown();
+}
+
+/// Push `rounds` × `per_round` samples onto both streams, alternating,
+/// with a short pause so the engine room interleaves chunks and the
+/// watcher samples in between. Returns everything pushed per stream.
+fn feed(
+    client: &mut ServeClient,
+    rng: &mut Rng,
+    ids: [u64; 2],
+    rounds: usize,
+    per_round: usize,
+) -> [Vec<(GaussMessage, CMatrix)>; 2] {
+    let mut fed: [Vec<(GaussMessage, CMatrix)>; 2] = [Vec::new(), Vec::new()];
+    for _ in 0..rounds {
+        for (slot, id) in ids.iter().enumerate() {
+            let batch: Vec<_> = (0..per_round).map(|_| sample(rng, 4)).collect();
+            fed[slot].extend(batch.iter().cloned());
+            client.push(*id, batch).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(3));
+    }
+    fed
+}
+
+#[test]
+fn degraded_device_fires_outlier_and_drains_sticky_streams_losslessly() {
+    let srv = FgpServe::start(ServeConfig { health: fast_health(), ..ServeConfig::default() })
+        .unwrap();
+    let mut client = ServeClient::connect(srv.addr(), "t").unwrap();
+    let mut rng = Rng::new(314);
+
+    // two sticky streams; round-robin pins them to different devices
+    let prior_a = msg(&mut rng, 4);
+    let prior_b = msg(&mut rng, 4);
+    let (id_a, dev_a) = client.open_stream("a", StreamMode::Sticky, prior_a.clone()).unwrap();
+    let (id_b, dev_b) = client.open_stream("b", StreamMode::Sticky, prior_b.clone()).unwrap();
+    assert_ne!(dev_a, dev_b, "round-robin spreads fresh pins");
+    let (slow_id, slow_dev) = if dev_a == 1 { (id_a, dev_a) } else { (id_b, dev_b) };
+    assert_eq!(slow_dev, 1);
+
+    // warm both devices' EWMAs with fast traffic, then degrade device 1
+    feed(&mut client, &mut rng, [id_a, id_b], 4, 3);
+    srv.farm().set_device_delay(1, 4).unwrap();
+
+    // keep traffic flowing; the outlier detector and the drain both key
+    // off the EWMA gap that this traffic creates
+    let mut fed = feed(&mut client, &mut rng, [id_a, id_b], 6, 3);
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let pin = client.poll(slow_id).unwrap().device;
+        if pin != 1 {
+            break; // drained off the slow device
+        }
+        assert!(
+            Instant::now() < deadline,
+            "stream never drained off the degraded device: {:?}",
+            srv.health()
+        );
+        let more = feed(&mut client, &mut rng, [id_a, id_b], 1, 3);
+        fed[0].extend(more[0].iter().cloned());
+        fed[1].extend(more[1].iter().cloned());
+    }
+
+    // the move is visible in the drain counter, and the detector flags
+    // the slow device within the watcher's bounded hysteresis
+    let stats = srv.stats();
+    assert!(stats.telemetry.counter("serve.drains").unwrap() >= 1);
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let h = srv.health();
+        let outlier = h.alerts.iter().any(|a| {
+            a.kind == AlertKind::DeviceOutlier && a.subject == "farm.device1"
+        });
+        if outlier {
+            assert!(h.alerts_total >= 1);
+            let slow = h.devices.iter().find(|d| d.device == 1).unwrap();
+            let fast = h.devices.iter().find(|d| d.device == 0).unwrap();
+            assert!(slow.score < fast.score, "routing score orders the members: {h:?}");
+            break;
+        }
+        assert!(Instant::now() < deadline, "outlier alert never fired: {h:?}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // zero loss: every pushed sample is executed and the final states
+    // are bitwise identical to an undegraded, health-off server fed the
+    // exact same samples (chunk invariance + drain-before-dispatch)
+    let closed_a = client.close_stream(id_a).unwrap();
+    let closed_b = client.close_stream(id_b).unwrap();
+    assert_eq!(closed_a.samples_done, fed[0].len() as u64);
+    assert_eq!(closed_b.samples_done, fed[1].len() as u64);
+    srv.shutdown();
+
+    let plain = FgpServe::start(ServeConfig::default()).unwrap();
+    let mut ref_client = ServeClient::connect(plain.addr(), "t").unwrap();
+    for (slot, prior, closed) in [(0usize, &prior_a, &closed_a), (1usize, &prior_b, &closed_b)] {
+        let (id, _) = ref_client.open_stream("ref", StreamMode::Sticky, prior.clone()).unwrap();
+        for chunk in fed[slot].chunks(16) {
+            ref_client.push(id, chunk.to_vec()).unwrap();
+        }
+        let reference = ref_client.close_stream(id).unwrap();
+        assert_eq!(reference.samples_done, closed.samples_done);
+        assert_eq!(reference.state, closed.state, "draining changed served numbers");
+    }
+    plain.shutdown();
+}
+
+#[test]
+fn wire_version_1_peer_is_refused_health() {
+    let srv = FgpServe::start(ServeConfig { health: fast_health(), ..ServeConfig::default() })
+        .unwrap();
+    let mut sock = TcpStream::connect(srv.addr()).unwrap();
+    sock.set_nodelay(true).unwrap();
+
+    // a pre-health peer's Hello: legacy tag 1 + tenant, framed by hand
+    let mut hello = vec![1u8];
+    hello.extend_from_slice(&(6u32.to_le_bytes()));
+    hello.extend_from_slice(b"legacy");
+    let mut frame = (hello.len() as u32).to_le_bytes().to_vec();
+    frame.extend_from_slice(&hello);
+    sock.write_all(&frame).unwrap();
+    let reply = read_frame(&mut sock).unwrap().unwrap();
+    match decode_reply(&reply).unwrap() {
+        ServeReply::Welcome { version } => assert_eq!(version, 1),
+        other => panic!("expected Welcome, got {other:?}"),
+    }
+
+    // the bare Health tag gets a typed, non-retryable refusal — the
+    // server never sends a v1 peer a reply tag it cannot decode
+    let frame = [1u32.to_le_bytes().as_slice(), &[11u8]].concat();
+    sock.write_all(&frame).unwrap();
+    let reply = read_frame(&mut sock).unwrap().unwrap();
+    match decode_reply(&reply).unwrap() {
+        ServeReply::Error { retryable, message } => {
+            assert!(!retryable);
+            assert!(message.contains("version 2"), "{message}");
+        }
+        other => panic!("expected Error, got {other:?}"),
+    }
+
+    // a v2 client on the same server still gets the full reply
+    let mut v2 = ServeClient::connect(srv.addr(), "modern").unwrap();
+    assert!(v2.health().unwrap().enabled);
+    srv.shutdown();
+}

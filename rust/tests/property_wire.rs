@@ -22,6 +22,9 @@ use fgp_repro::fgp::RunStats;
 use fgp_repro::gmp::matrix::{c64, CMatrix};
 use fgp_repro::gmp::message::GaussMessage;
 use fgp_repro::isa::MemoryImage;
+use fgp_repro::obs::health::{
+    Alert, AlertKind, AlertSeverity, AlertState, DeviceHealth, HealthSnapshot, SloStatus,
+};
 use fgp_repro::obs::{HistSummary, RegistrySnapshot, TraceContext};
 use fgp_repro::serve::{
     decode_checkpoint, decode_reply, decode_request, decode_request_traced, encode_checkpoint,
@@ -95,7 +98,57 @@ fn every_request(rng: &mut Rng) -> Vec<ServeRequest> {
             checkpoint: vec![0xde, 0xad, 0xbe, 0xef],
         },
         ServeRequest::Stats,
+        ServeRequest::Health,
     ]
+}
+
+/// A fully-populated health snapshot with awkward floats in every f64
+/// field (burn rates, scores, thresholds) so round-trip means bits.
+fn awkward_health() -> HealthSnapshot {
+    HealthSnapshot {
+        enabled: true,
+        snapshots: u64::MAX / 3,
+        alerts_total: 2,
+        slos: vec![SloStatus {
+            tenant: "tenant-α".into(),
+            p99_objective_ns: 1_000_000,
+            error_budget: 0.1 + 0.2,
+            p99_ns: 767,
+            burn_short: -0.0,
+            burn_long: 1e308,
+            requests: 1000,
+            errors: 3,
+            healthy: false,
+        }],
+        alerts: vec![Alert {
+            kind: AlertKind::SloBurn,
+            state: AlertState::Firing,
+            severity: AlertSeverity::Critical,
+            subject: "tenant.tenant-α".into(),
+            value: f64::MIN_POSITIVE / 2.0,
+            threshold: 1.0,
+            t_ns: u64::MAX,
+            message: "burn 33.30×/33.30× (short/long) against budget 0.01".into(),
+        }],
+        devices: vec![
+            DeviceHealth {
+                device: 0,
+                live: true,
+                requests: 100,
+                errors: 0,
+                ewma_ns: 1_000,
+                score: 1.0,
+            },
+            DeviceHealth {
+                device: 1,
+                live: false,
+                requests: 7,
+                errors: 9,
+                ewma_ns: 0,
+                score: -0.0,
+            },
+        ],
+    }
 }
 
 fn every_reply(rng: &mut Rng) -> Vec<ServeReply> {
@@ -172,6 +225,8 @@ fn every_reply(rng: &mut Rng) -> Vec<ServeReply> {
         ServeReply::Busy { retry_ms: 5 },
         ServeReply::QuotaExceeded { retry_ms: u32::MAX },
         ServeReply::Error { retryable: true, message: "device 1 stopped".into() },
+        ServeReply::Health(awkward_health()),
+        ServeReply::Health(HealthSnapshot::disabled(Vec::new())),
     ]
 }
 
@@ -385,6 +440,29 @@ fn legacy_v1_hello_bytes_still_decode() {
     let (back, ctx) = decode_request_traced(&old).unwrap();
     assert_eq!(back, req);
     assert_eq!(ctx, None);
+}
+
+#[test]
+fn version_gated_tags_are_pinned() {
+    // the interop story depends on exact tag bytes, not just round
+    // trips: a v1 server dispatches on the leading byte, so pin the
+    // values the version gate reasons about
+    assert_eq!(encode_request(&ServeRequest::Health), vec![11], "Health request is a bare tag");
+    assert_eq!(encode_request(&ServeRequest::Stats), vec![10], "Stats request is a bare tag");
+    // a Stats reply with empty telemetry emits the exact v1 frame
+    // (legacy tag 8); any telemetry flips it onto the versioned tag 12
+    let legacy = encode_reply(&ServeReply::Stats(StatsSnapshot::default()));
+    assert_eq!(legacy[0], 8, "empty-telemetry Stats must keep the legacy tag");
+    let mut telemetry = RegistrySnapshot::new();
+    telemetry.push_counter("engine.cache_hit", 1);
+    let v2 = encode_reply(&ServeReply::Stats(StatsSnapshot {
+        telemetry,
+        ..StatsSnapshot::default()
+    }));
+    assert_eq!(v2[0], 12, "populated-telemetry Stats must ride the versioned tag");
+    // the health surface is new in v2 and never reuses a v1 tag
+    let health = encode_reply(&ServeReply::Health(HealthSnapshot::disabled(Vec::new())));
+    assert_eq!(health[0], 13, "Health reply tag moved");
 }
 
 #[test]

@@ -1,0 +1,197 @@
+#!/usr/bin/env python3
+"""Validate a Prometheus text-exposition (0.0.4) export.
+
+Dependency-free checker for the files ``rust/src/obs/export.rs``'s
+``prometheus_text`` emits (``fgp health --prom``, the E18 bench's
+``BENCH_health_prom.txt``). Verifies:
+
+* every non-comment line is ``name[{labels}] value`` with a legal
+  metric name (``[a-zA-Z_:][a-zA-Z0-9_:]*``) and a finite number;
+* every sample is preceded by a ``# TYPE`` declaration of its family,
+  each family is declared exactly once, and the declared type is one of
+  ``counter``/``gauge``/``summary``;
+* ``summary`` families carry ``quantile`` labels plus ``_sum`` and
+  ``_count`` rows, and their quantile values are non-decreasing in the
+  quantile (p50 <= p95 <= p99 for the nanosecond histograms);
+* no family mixes types and no sample line appears under no family.
+
+Usage: check_prom_text.py <export.txt> [required,family,names]
+
+The optional second argument is a comma-separated list of family names
+that must each be declared — CI uses it to pin the serve/farm families
+of a health-enabled server. With ``--self-test`` as the only argument,
+runs against built-in good and bad fixtures and exits non-zero on any
+checker defect.
+"""
+
+import math
+import re
+import sys
+
+NAME = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+SAMPLE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>[^}]*)\})?"
+    r" (?P<value>\S+)$"
+)
+LABEL = re.compile(r'^([a-zA-Z_][a-zA-Z0-9_]*)="([^"\\]*)"$')
+TYPES = {"counter", "gauge", "summary"}
+
+
+class CheckError(Exception):
+    pass
+
+
+def base_family(name, families):
+    """The declared family a sample row belongs to: exact match, or the
+    summary family behind its ``_sum``/``_count`` rows."""
+    if name in families:
+        return name
+    for suffix in ("_sum", "_count"):
+        if name.endswith(suffix) and name[: -len(suffix)] in families:
+            return name[: -len(suffix)]
+    return None
+
+
+def parse_labels(raw):
+    if raw is None or raw == "":
+        return {}
+    out = {}
+    for part in raw.split(","):
+        m = LABEL.match(part)
+        if not m:
+            raise CheckError(f"malformed label pair {part!r}")
+        out[m.group(1)] = m.group(2)
+    return out
+
+
+def check_text(text, required=()):
+    families = {}
+    samples = {}
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("#"):
+            parts = line.split()
+            if len(parts) >= 2 and parts[1] == "TYPE":
+                if len(parts) != 4:
+                    raise CheckError(f"line {lineno}: malformed TYPE comment: {line!r}")
+                _, _, name, typ = parts
+                if not NAME.match(name):
+                    raise CheckError(f"line {lineno}: illegal family name {name!r}")
+                if typ not in TYPES:
+                    raise CheckError(f"line {lineno}: unknown type {typ!r}")
+                if name in families:
+                    raise CheckError(f"line {lineno}: family {name!r} declared twice")
+                families[name] = typ
+            continue
+        m = SAMPLE.match(line)
+        if not m:
+            raise CheckError(f"line {lineno}: not a sample line: {line!r}")
+        name, labels = m.group("name"), parse_labels(m.group("labels"))
+        try:
+            value = float(m.group("value"))
+        except ValueError:
+            raise CheckError(f"line {lineno}: non-numeric value {m.group('value')!r}")
+        if not math.isfinite(value):
+            raise CheckError(f"line {lineno}: non-finite value in {name!r}")
+        family = base_family(name, families)
+        if family is None:
+            raise CheckError(f"line {lineno}: sample {name!r} has no TYPE declaration")
+        samples.setdefault(family, []).append((name, labels, value))
+
+    for family, typ in families.items():
+        rows = samples.get(family, [])
+        if not rows:
+            raise CheckError(f"family {family!r} declared but never sampled")
+        if typ in ("counter", "gauge"):
+            for name, labels, value in rows:
+                if labels:
+                    raise CheckError(f"{typ} {family!r} carries labels {labels}")
+                if value < 0:
+                    raise CheckError(f"{typ} {family!r} is negative ({value})")
+        else:  # summary
+            quantiles = sorted(
+                (float(labels["quantile"]), value)
+                for name, labels, value in rows
+                if name == family and "quantile" in labels
+            )
+            if not quantiles:
+                raise CheckError(f"summary {family!r} has no quantile rows")
+            suffixes = {name for name, _, _ in rows}
+            for need in (family + "_sum", family + "_count"):
+                if need not in suffixes:
+                    raise CheckError(f"summary {family!r} is missing {need}")
+            values = [v for _, v in quantiles]
+            if values != sorted(values):
+                raise CheckError(
+                    f"summary {family!r} quantiles are not monotone: {quantiles}"
+                )
+
+    missing = [n for n in required if n not in families]
+    if missing:
+        raise CheckError(f"required family(ies) missing: {missing}")
+    return len(families), sum(len(v) for v in samples.values())
+
+
+GOOD = """\
+# TYPE fgp_serve_admitted counter
+fgp_serve_admitted 42
+# TYPE fgp_serve_inflight gauge
+fgp_serve_inflight 3
+# TYPE fgp_serve_latency_ns summary
+fgp_serve_latency_ns{quantile="0.5"} 767
+fgp_serve_latency_ns{quantile="0.95"} 1535
+fgp_serve_latency_ns{quantile="0.99"} 1535
+fgp_serve_latency_ns_sum 51000
+fgp_serve_latency_ns_count 42
+"""
+
+BAD = [
+    "fgp_orphan 1\n",  # sample without a TYPE declaration
+    "# TYPE fgp_x counter\nfgp_x nan\n",  # non-finite value
+    "# TYPE fgp_x counter\n# TYPE fgp_x gauge\nfgp_x 1\n",  # redeclared
+    "# TYPE fgp_x histogram\nfgp_x 1\n",  # unknown type
+    "# TYPE fgp_x summary\nfgp_x_sum 1\nfgp_x_count 1\n",  # no quantiles
+    # non-monotone quantiles
+    '# TYPE fgp_x summary\nfgp_x{quantile="0.5"} 9\nfgp_x{quantile="0.99"} 1\n'
+    "fgp_x_sum 1\nfgp_x_count 1\n",
+    "# TYPE fgp_x counter\nfgp_x\n",  # sample with no value
+]
+
+
+def self_test():
+    check_text(GOOD, required=["fgp_serve_admitted", "fgp_serve_latency_ns"])
+    try:
+        check_text(GOOD, required=["fgp_missing"])
+        raise SystemExit("self-test: missing required family not caught")
+    except CheckError:
+        pass
+    for i, bad in enumerate(BAD):
+        try:
+            check_text(bad)
+            raise SystemExit(f"self-test: bad fixture {i} passed validation")
+        except CheckError:
+            pass
+    print("OK self-test: good fixture accepted, all bad fixtures rejected")
+
+
+def main():
+    if len(sys.argv) == 2 and sys.argv[1] == "--self-test":
+        self_test()
+        return
+    if len(sys.argv) not in (2, 3):
+        sys.exit(__doc__)
+    required = [n for n in sys.argv[2].split(",") if n] if len(sys.argv) == 3 else []
+    with open(sys.argv[1]) as f:
+        text = f.read()
+    try:
+        nfam, nsamp = check_text(text, required)
+    except CheckError as e:
+        print(f"FAIL {sys.argv[1]}: {e}", file=sys.stderr)
+        sys.exit(1)
+    print(f"OK {sys.argv[1]}: {nfam} family(ies), {nsamp} sample(s)")
+
+
+if __name__ == "__main__":
+    main()
