@@ -1,0 +1,99 @@
+//! Kernel-path selection and the multi-PE systolic sweep (E19).
+//!
+//! PR 9 made the simulator's layout and parallelism explicit performance
+//! knobs: message storage is struct-of-arrays, compound-node updates run
+//! through shape-monomorphized kernels (`kernels::kernel_path` names the
+//! selection), and `FgpConfig::with_pes` scales the cycle model to N
+//! processing elements. None of that may change a single bit of any
+//! output — this example demonstrates both halves:
+//!
+//! 1. the batched SoA kernel path against per-request device dispatch,
+//!    bitwise;
+//! 2. the N-PE sweep: same stream, same bits, fewer simulated cycles —
+//!    with N = 1 reproducing the paper's 260-cycle Table II update.
+//!
+//! Run: `cargo run --release --example multi_pe_sweep`
+
+use fgp_repro::apps::rls::RlsProblem;
+use fgp_repro::coordinator::{Backend, CnRequestData, FgpSimBackend};
+use fgp_repro::engine::Session;
+use fgp_repro::fgp::FgpConfig;
+use fgp_repro::gmp::matrix::{c64, CMatrix};
+use fgp_repro::gmp::message::GaussMessage;
+use fgp_repro::kernels;
+use fgp_repro::paper;
+use fgp_repro::testutil::Rng;
+
+fn request(rng: &mut Rng, n: usize) -> CnRequestData {
+    CnRequestData {
+        x: GaussMessage::new(
+            (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+            CMatrix::random_psd(rng, n, 1.0).scale(0.15),
+        ),
+        y: GaussMessage::new(
+            (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+            CMatrix::random_psd(rng, n, 1.0).scale(0.15),
+        ),
+        a: CMatrix::random(rng, n, n).scale(0.3),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = paper::N;
+
+    // --- which kernel serves which shape
+    println!("kernel-path selection:");
+    for dim in [2usize, 3, 4, 8] {
+        println!("  n = {dim} -> {}", kernels::kernel_path(dim));
+    }
+
+    // --- batched SoA kernels vs per-request program dispatch, bitwise
+    let mut rng = Rng::new(42);
+    let reqs: Vec<CnRequestData> = (0..6).map(|_| request(&mut rng, n)).collect();
+    let mut seq = FgpSimBackend::new(FgpConfig::default())?;
+    let mut bat = FgpSimBackend::new(FgpConfig::default())?;
+    let batched = bat.cn_update_batch(&reqs);
+    for (req, got) in reqs.iter().zip(&batched) {
+        let want = seq.cn_update(req)?;
+        let got = got.as_ref().expect("in-shape request");
+        assert_eq!(got.mean, want.mean, "batched kernel path must be bitwise");
+        assert_eq!(got.cov.dist(&want.cov), 0.0);
+    }
+    println!(
+        "\nbatched {} via {}: bitwise == per-request dispatch, {} device cycles both",
+        reqs.len(),
+        bat.kernel_path(),
+        bat.device_cycles
+    );
+    assert_eq!(bat.device_cycles, seq.device_cycles);
+
+    // --- the N-PE sweep: cycles drop, bits do not move
+    let samples = 1024;
+    let problem = RlsProblem::synthetic(n, samples, 0.01, 7);
+    println!("\nn_pes  cycles/update  device msgs/s @130MHz  rel MSE");
+    let mut h_ref: Option<Vec<c64>> = None;
+    for n_pes in [1usize, 2, 4] {
+        let cfg = FgpConfig::with_pes(n_pes);
+        let report = Session::fgp_sim(cfg).run_stream(&problem)?;
+        match &h_ref {
+            None => h_ref = Some(report.outcome.h_hat.clone()),
+            Some(h) => assert_eq!(
+                h, &report.outcome.h_hat,
+                "PE count is a cycle knob, never semantics"
+            ),
+        }
+        let device_cycles = cfg.multi_pe.batch_cycles(&cfg.timing, n, samples);
+        let per_update = device_cycles as f64 / samples as f64;
+        if n_pes == 1 {
+            assert_eq!(per_update, paper::FGP_CN_CYCLES as f64);
+        }
+        let rate = paper::FGP_FREQ_MHZ * 1e6 / per_update;
+        println!(
+            "{n_pes:<6} {per_update:>13.1} {rate:>21.0}  {:.6}",
+            report.outcome.rel_mse
+        );
+    }
+
+    println!("\nmulti-PE sweep OK (bitwise-identical at every N)");
+    Ok(())
+}

@@ -36,6 +36,7 @@ use fgp_repro::fgp::FgpConfig;
 use fgp_repro::gmp::matrix::{c64, CMatrix};
 use fgp_repro::gmp::message::GaussMessage;
 use fgp_repro::gmp::{FactorGraph, MsgId, Schedule};
+use fgp_repro::kernels;
 use fgp_repro::model::scaling::{normalized_throughput, ProcessorPoint};
 use fgp_repro::paper;
 use fgp_repro::runtime::RuntimeClient;
@@ -129,6 +130,7 @@ struct EngineRow {
     per_call_msgs_per_s: f64,
     speedup: f64,
     cycles_per_update: u64,
+    kernel_path: String,
 }
 
 /// A random CN request within the device's input-scaling contract.
@@ -175,12 +177,19 @@ fn engine_row(
     let samples = p.sections as f64;
     let stream_rate = samples / stream_dt.as_secs_f64();
     let percall_rate = samples / percall_dt.as_secs_f64();
+    // which update-kernel implementation served this engine's arithmetic
+    let kernel_path = match engine.as_str() {
+        "fgp-sim" => kernels::kernel_path(p.prior.dim()).to_string(),
+        "golden" => "interpreted-f64".to_string(),
+        _ => "xla-aot".to_string(),
+    };
     Ok(EngineRow {
         engine,
         stream_msgs_per_s: stream_rate,
         per_call_msgs_per_s: percall_rate,
         speedup: stream_rate / percall_rate,
         cycles_per_update: report.cycles_per_sample(),
+        kernel_path,
     })
 }
 
@@ -262,14 +271,70 @@ fn main() -> Result<()> {
     }
 
     println!(
-        "{:<10} {:>16} {:>18} {:>10} {:>14}",
-        "engine", "stream [msg/s]", "per-call [msg/s]", "speedup", "cycles/update"
+        "{:<10} {:>16} {:>18} {:>10} {:>14} {:>14}",
+        "engine", "stream [msg/s]", "per-call [msg/s]", "speedup", "cycles/update", "kernel path"
     );
     for r in &rows {
         println!(
-            "{:<10} {:>16.0} {:>18.0} {:>9.2}x {:>14}",
-            r.engine, r.stream_msgs_per_s, r.per_call_msgs_per_s, r.speedup, r.cycles_per_update
+            "{:<10} {:>16.0} {:>18.0} {:>9.2}x {:>14} {:>14}",
+            r.engine,
+            r.stream_msgs_per_s,
+            r.per_call_msgs_per_s,
+            r.speedup,
+            r.cycles_per_update,
+            r.kernel_path
         );
+    }
+
+    // --- multi-PE systolic scaling (the Table II "N processing
+    // elements" column): PE count is a cycle knob only — the estimate
+    // must be bitwise-identical at every N, and N = 1 must reproduce the
+    // paper's 260-cycle compound-node update exactly.
+    banner("multi-PE systolic scaling (N processing elements)");
+    let mut pe_rows_json = Vec::new();
+    let mut h_ref: Option<Vec<c64>> = None;
+    println!(
+        "{:<8} {:>16} {:>18} {:>18} {:>14}",
+        "n_pes", "cycles/update", "device [msg/s]", "stream [msg/s]", "kernel path"
+    );
+    for n_pes in [1usize, 2, 4] {
+        let cfg = FgpConfig::with_pes(n_pes);
+        let mut session = Session::fgp_sim(cfg);
+        let (report, dt) = best_of(reps, || session.run_stream(&p))?;
+        match &h_ref {
+            None => h_ref = Some(report.outcome.h_hat.clone()),
+            Some(h) => assert!(
+                h.iter().zip(&report.outcome.h_hat).all(|(a, b)| a == b),
+                "n_pes={n_pes}: estimate must be bitwise-identical to single-PE"
+            ),
+        }
+        let device_cycles = cfg.multi_pe.batch_cycles(&cfg.timing, n, samples);
+        let per_update = device_cycles as f64 / samples as f64;
+        if n_pes == 1 {
+            assert_eq!(
+                per_update,
+                paper::FGP_CN_CYCLES as f64,
+                "one PE must cost exactly the paper's Table II cycles"
+            );
+        }
+        let device_rate = paper::FGP_FREQ_MHZ * 1e6 * samples as f64 / device_cycles as f64;
+        let stream_rate = samples as f64 / dt.as_secs_f64();
+        println!(
+            "{:<8} {:>16.1} {:>18.0} {:>18.0} {:>14}",
+            n_pes,
+            per_update,
+            device_rate,
+            stream_rate,
+            kernels::kernel_path(n)
+        );
+        pe_rows_json.push(json_obj(&[
+            ("n_pes", n_pes.to_string()),
+            ("cycles_per_update", json_num(per_update)),
+            ("device_msgs_per_s", json_num(device_rate)),
+            ("stream_msgs_per_s", json_num(stream_rate)),
+            ("kernel_path", json_str(kernels::kernel_path(n))),
+            ("bitwise_identical_to_single_pe", "true".to_string()),
+        ]));
     }
 
     // --- single-CN host latency (continuity with earlier trajectories)
@@ -303,6 +368,7 @@ fn main() -> Result<()> {
                 ("per_call_msgs_per_s", json_num(r.per_call_msgs_per_s)),
                 ("stream_speedup_vs_per_call", json_num(r.speedup)),
                 ("cycles_per_update", r.cycles_per_update.to_string()),
+                ("kernel_path", json_str(&r.kernel_path)),
             ])
         })
         .collect();
@@ -324,6 +390,7 @@ fn main() -> Result<()> {
             ]),
         ),
         ("engines", json_arr(&engines_json)),
+        ("multi_pe", json_arr(&pe_rows_json)),
     ]);
     write_json("BENCH_throughput.json", &doc)?;
     println!("\nwrote BENCH_throughput.json");

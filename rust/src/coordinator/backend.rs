@@ -25,10 +25,12 @@ use anyhow::{bail, Context, Result};
 
 use crate::compiler::CompileOptions;
 use crate::engine::{bind_streamed, preload_id, Execution, Session, Workload, XlaEngine};
-use crate::fgp::FgpConfig;
+use crate::fgp::{FgpConfig, MsgSlot};
+use crate::fixed::CFix;
 use crate::gmp::matrix::CMatrix;
 use crate::gmp::message::GaussMessage;
 use crate::gmp::{nodes, FactorGraph, MsgId, Schedule};
+use crate::kernels::{self, CnBatch, CnScratch, CPlanes};
 use crate::runtime::RuntimeClient;
 
 /// One compound-node update request payload.
@@ -209,6 +211,12 @@ impl FgpSimBackend {
         self.config.timing.compound_node_cycles(self.config.n)
     }
 
+    /// Which shape-specialized kernel the batched path dispatches to for
+    /// this device's dimension (reported in the throughput bench).
+    pub fn kernel_path(&self) -> &'static str {
+        kernels::kernel_path(self.config.n)
+    }
+
     /// Program-cache counters of the underlying session.
     pub fn cache_stats(&self) -> crate::engine::CacheStats {
         self.session.cache_stats()
@@ -236,6 +244,59 @@ impl Backend for FgpSimBackend {
         )?;
         self.device_cycles += d.exec.stats.cycles;
         Ok(d.exec.output()?.clone())
+    }
+
+    /// Batched CN updates through the shape-specialized SoA kernels
+    /// (`crate::kernels::cn_update_batch`) instead of one interpreted
+    /// program run per request. Operands quantize exactly as the device
+    /// slot writes do ([`MsgSlot::from_message`] / `CFix::from_f64`), the
+    /// kernel replays the compiled CN op sequence on raw planes, and the
+    /// readback dequantizes exactly as the device readout does — so the
+    /// results are bitwise identical to looping [`Backend::cn_update`]
+    /// (pinned by `rust/tests/property_kernels.rs`). Device cycles charge
+    /// the multi-PE batch model, which at `n_pes = 1` equals the
+    /// sequential per-update cost.
+    fn cn_update_batch(&mut self, reqs: &[CnRequestData]) -> Vec<Result<GaussMessage>> {
+        let n = self.config.n;
+        if reqs.is_empty() {
+            return Vec::new();
+        }
+        // Any off-shape request falls back to the sequential path, which
+        // reports the dimension error per item.
+        if reqs.iter().any(|r| {
+            r.x.dim() != n || r.y.dim() != n || r.a.rows != n || r.a.cols != n
+        }) {
+            return reqs.iter().map(|r| self.cn_update(r)).collect();
+        }
+        let fmt = self.config.fmt;
+        let mut batch = CnBatch::new(n);
+        let mut qa = Vec::with_capacity(n * n);
+        for r in reqs {
+            let sx = MsgSlot::from_message(&r.x, fmt);
+            let sy = MsgSlot::from_message(&r.y, fmt);
+            qa.clear();
+            for i in 0..n {
+                for j in 0..n {
+                    let z = r.a[(i, j)];
+                    qa.push(CFix::from_f64(z.re, z.im, fmt));
+                }
+            }
+            batch.push(&sx.v, &sx.m, &sy.v, &sy.m, &qa);
+        }
+        let mut out_v = CPlanes::default();
+        let mut out_m = CPlanes::default();
+        let mut scratch = CnScratch::default();
+        kernels::cn_update_batch(fmt, &batch, &mut out_v, &mut out_m, &mut scratch);
+        self.device_cycles += self.config.multi_pe.batch_cycles(&self.config.timing, n, reqs.len());
+        (0..reqs.len())
+            .map(|lane| {
+                let slot = MsgSlot {
+                    v: out_v.slice(lane * n * n..(lane + 1) * n * n).to_cfix(fmt),
+                    m: out_m.slice(lane * n..(lane + 1) * n).to_cfix(fmt),
+                };
+                Ok(slot.to_message(n))
+            })
+            .collect()
     }
 
     fn run_workload(&mut self, req: &WorkloadRequest) -> Result<Execution> {
@@ -433,6 +494,47 @@ mod tests {
         }
         assert!(exec.output().unwrap().dist(&want) < 1e-12);
         assert!(WorkloadRequest::chain(&prior, &[]).is_err());
+    }
+
+    /// The SoA kernel batch path is bitwise-identical to the interpreted
+    /// per-request path — both read back through the same quantized slot
+    /// encoding, so the f64 messages must compare *exactly* equal.
+    #[test]
+    fn fgp_sim_batched_kernels_bitwise_match_sequential() {
+        let mut seq = FgpSimBackend::new(FgpConfig::default()).unwrap();
+        let mut bat = FgpSimBackend::new(FgpConfig::default()).unwrap();
+        let mut rng = Rng::new(11);
+        // 7 requests: exercises a padded tail block (7 -> 8 lanes)
+        let reqs: Vec<_> = (0..7).map(|_| request(&mut rng, 4)).collect();
+        let want: Vec<GaussMessage> =
+            reqs.iter().map(|r| seq.cn_update(r).unwrap()).collect();
+        let got = bat.cn_update_batch(&reqs);
+        assert_eq!(got.len(), reqs.len());
+        for (g, w) in got.iter().zip(&want) {
+            let g = g.as_ref().unwrap();
+            assert_eq!(g.mean, w.mean, "batched mean must be bitwise equal");
+            for i in 0..4 {
+                for j in 0..4 {
+                    assert_eq!(g.cov[(i, j)], w.cov[(i, j)], "cov ({i},{j})");
+                }
+            }
+        }
+        // at n_pes = 1 the batch charge equals the sequential per-update sum
+        assert_eq!(bat.device_cycles, seq.device_cycles);
+        assert_eq!(bat.device_cycles, 7 * bat.cn_cycles());
+        assert_eq!(bat.kernel_path(), "soa-mono-n4");
+    }
+
+    /// Off-shape requests fall back to the per-request path and surface
+    /// its dimension error.
+    #[test]
+    fn fgp_sim_batch_rejects_off_shape_requests() {
+        let mut sim = FgpSimBackend::new(FgpConfig::default()).unwrap();
+        let mut rng = Rng::new(13);
+        let reqs = vec![request(&mut rng, 3)];
+        let out = sim.cn_update_batch(&reqs);
+        assert!(out[0].is_err());
+        assert_eq!(sim.device_cycles, 0);
     }
 
     #[test]

@@ -277,15 +277,18 @@ impl Engine for FgpSimEngine {
                 .copied()
                 .with_context(|| format!("streamed state {} is never consumed", sid.0))
         };
-        let mut msg_plans: Vec<StreamPlan<GaussMessage>> = Vec::new();
+        // Plans borrow the caller's inputs/graph directly: a steady-state
+        // stream chunk stages thousands of messages, and cloning each
+        // GaussMessage/CMatrix per chunk was pure allocator traffic.
+        let mut msg_plans: Vec<StreamPlan<&GaussMessage>> = Vec::new();
         for (_, slot, ids) in &compiled.memmap.streams {
-            let mut entries: Vec<(usize, GaussMessage)> = Vec::with_capacity(ids.len());
+            let mut entries: Vec<(usize, &GaussMessage)> = Vec::with_capacity(ids.len());
             for mid in ids {
                 let at = consume_msg(mid)?;
                 let msg = inputs
                     .get(mid)
                     .with_context(|| format!("no binding for streamed input message {}", mid.0))?;
-                entries.push((at, msg.clone()));
+                entries.push((at, msg));
             }
             entries.sort_by_key(|(at, _)| *at);
             msg_plans.push(StreamPlan {
@@ -294,15 +297,14 @@ impl Engine for FgpSimEngine {
                 values: entries.into_iter().map(|(_, m)| m).collect(),
             });
         }
-        let mut state_plans: Vec<StreamPlan<CMatrix>> = Vec::new();
+        let mut state_plans: Vec<StreamPlan<&CMatrix>> = Vec::new();
         for (_, slot, ids) in &compiled.memmap.state_streams {
-            let mut entries: Vec<(usize, CMatrix)> = Vec::with_capacity(ids.len());
+            let mut entries: Vec<(usize, &CMatrix)> = Vec::with_capacity(ids.len());
             for sid in ids {
                 let at = consume_state(sid)?;
                 let m = graph
                     .states
                     .get(sid.0)
-                    .cloned()
                     .with_context(|| format!("streamed state {} not in the graph", sid.0))?;
                 entries.push((at, m));
             }

@@ -4,6 +4,14 @@
 //! `PEborder` extension. Values are computed bit-accurately in fixed
 //! point; cycle counts come from the wavefront timing model below.
 //!
+//! Since PR 9 the value planes are **struct-of-arrays** ([`CPlanes`]:
+//! one contiguous raw `i64` plane per complex component) and the
+//! per-instruction arithmetic is executed by the shape-specialized
+//! kernels in [`crate::kernels`]. Both are layout/performance knobs
+//! only: the kernels bottom out in the same `fixed::raw` primitives in
+//! the same order as the seed AoS interpreter, so results are
+//! bit-identical (pinned by `rust/tests/property_kernels.rs`).
+//!
 //! # Timing model
 //!
 //! Fixed by the paper:
@@ -14,7 +22,9 @@
 //!   16-bit quotient in **4 cycles** (footnote 2); a complex division
 //!   needs |den|² (2 mults + add), 4 numerator mults, and two sequential
 //!   real divisions on the single divider: 2 + 2 + 2x4 = 12 cycles;
-//! * operands stream in skewed one cycle per row/column hop.
+//! * operands stream in skewed one cycle per row/column hop;
+//! * instruction words are 64-bit and issue through a 16-bit PM port:
+//!   **4 cycles** fetch+decode per instruction.
 //!
 //! Derived per-instruction counts (n = array size):
 //!
@@ -30,10 +40,24 @@
 //! * `smm`: the store port moves `port_words` complex words per cycle.
 //!
 //! With the default parameters the n=4 compound-node update measures
-//! ~260 cycles — the paper's Table II number (see EXPERIMENTS.md E1 for
-//! the exact measured value).
+//! **exactly 260 cycles** — the paper's Table II number (see
+//! EXPERIMENTS.md E1).
+//!
+//! # Multi-PE mode (PR 9)
+//!
+//! [`MultiPeModel`] scales the paper's architecture out to P independent
+//! PE array instances fed by one sequencer: sections issue round-robin
+//! across PEs with a cross-PE wavefront skew of [`MultiPeModel::skew`]
+//! cycles per hop (operand broadcast ripples down the PE chain), and all
+//! PEs share [`MultiPeModel::store_ports`] message-memory store ports,
+//! so concurrent `smm`s serialize. PE count is a throughput knob only —
+//! values are still computed sequentially per section, so outputs are
+//! bit-identical at every P (the Table II "N processing elements"
+//! column measures cycles, never values).
 
+use crate::fixed::raw::Rails;
 use crate::fixed::{CFix, QFormat, Radix2Divider};
+use crate::kernels::{self, CPlanes, PlaneRef};
 
 /// Array timing parameters (see module docs).
 #[derive(Clone, Copy, Debug)]
@@ -48,7 +72,7 @@ pub struct TimingModel {
     pub rows_in_flight: u64,
     /// Complex words per cycle through the store port.
     pub port_words: u64,
-    /// Instruction fetch+decode cycles.
+    /// Instruction fetch+decode cycles (64-bit word via 16-bit port: 4).
     pub fetch: u64,
 }
 
@@ -60,7 +84,7 @@ impl Default for TimingModel {
             pivot_select: 2,
             rows_in_flight: 2,
             port_words: 2,
-            fetch: 1,
+            fetch: 4,
         }
     }
 }
@@ -96,8 +120,16 @@ impl TimingModel {
         ((n * n + n) as u64).div_ceil(self.port_words)
     }
 
+    /// Cycles one compound-node section spends on the datapath proper
+    /// (everything except the shared-port store) — the portion that
+    /// overlaps across PEs in multi-PE mode.
+    pub fn datapath_pass(&self, n: usize) -> u64 {
+        self.compound_node_cycles(n) - self.store_pass(n)
+    }
+
     /// Cycles for the benchmark compound-node update (fetch + 4 datapath
-    /// + store) — the quantity Table II reports.
+    /// + store) — the quantity Table II reports. Exactly 260 at n = 4
+    /// with the default parameters.
     pub fn compound_node_cycles(&self, n: usize) -> u64 {
         5 * self.fetch
             + self.matrix_pass(n)            // mma: T1
@@ -105,6 +137,103 @@ impl TimingModel {
             + self.vector_pass(n)            // mms v: innovation
             + self.faddeev_pass(n)           // fad
             + self.store_pass(n) // smm
+    }
+}
+
+/// One section's cost split for the multi-PE fold: datapath cycles
+/// (overlappable across PEs) vs store cycles (serialized through the
+/// shared ports).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SectionCost {
+    /// Fetch + datapath cycles for the section (everything except smm).
+    pub compute: u64,
+    /// Store cycles through one port (the smm pass).
+    pub store: u64,
+}
+
+/// Multi-PE scaling model: P array instances, cross-PE issue skew, and
+/// shared store-port contention. Cycle accounting only — values never
+/// depend on `n_pes` (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MultiPeModel {
+    /// Number of PE array instances (1 = the paper's processor).
+    pub n_pes: usize,
+    /// Issue-skew cycles between adjacent PEs in a wave (operand
+    /// broadcast hop latency).
+    pub skew: u64,
+    /// Message-memory store ports shared by all PEs.
+    pub store_ports: u64,
+}
+
+impl Default for MultiPeModel {
+    fn default() -> Self {
+        MultiPeModel { n_pes: 1, skew: 2, store_ports: 1 }
+    }
+}
+
+impl MultiPeModel {
+    /// A model with `n_pes` PEs and default skew/port parameters.
+    pub fn with_pes(n_pes: usize) -> Self {
+        MultiPeModel { n_pes: n_pes.max(1), ..Default::default() }
+    }
+
+    /// Cycles for one wave of `active <= n_pes` uniform compound-node
+    /// sections: the last PE starts `(active-1)*skew` cycles late, all
+    /// datapaths overlap, and the `active` stores serialize through the
+    /// shared ports. Reduces to `compound_node_cycles` when
+    /// `active == 1` and `store_ports == 1`.
+    pub fn wave_cycles(&self, t: &TimingModel, n: usize, active: usize) -> u64 {
+        if active == 0 {
+            return 0;
+        }
+        let a = active.min(self.n_pes) as u64;
+        (a - 1) * self.skew + t.datapath_pass(n) + (a * t.store_pass(n)).div_ceil(self.store_ports)
+    }
+
+    /// Cycles for one wave of heterogeneous per-section costs (records
+    /// issue to PEs in order; uniform costs reduce to [`Self::wave_cycles`]).
+    pub fn wave_cycles_records(&self, costs: &[SectionCost]) -> u64 {
+        if costs.is_empty() {
+            return 0;
+        }
+        let drain = costs
+            .iter()
+            .enumerate()
+            .map(|(i, c)| i as u64 * self.skew + c.compute)
+            .max()
+            .unwrap_or(0);
+        let stores: u64 = costs.iter().map(|c| c.store).sum();
+        drain + stores.div_ceil(self.store_ports)
+    }
+
+    /// Total cycles to run `sections` uniform compound-node sections:
+    /// full waves of `n_pes` plus one tail wave. `n_pes == 1` is exactly
+    /// `sections * compound_node_cycles(n)`.
+    pub fn batch_cycles(&self, t: &TimingModel, n: usize, sections: usize) -> u64 {
+        let p = self.n_pes.max(1);
+        let full = sections / p;
+        let tail = sections % p;
+        full as u64 * self.wave_cycles(t, n, p) + self.wave_cycles(t, n, tail)
+    }
+
+    /// Fold heterogeneous section costs into total cycles (waves of
+    /// `n_pes` in issue order).
+    pub fn batch_cycles_records(&self, costs: &[SectionCost]) -> u64 {
+        let p = self.n_pes.max(1);
+        costs.chunks(p).map(|wave| self.wave_cycles_records(wave)).sum()
+    }
+
+    /// Perfect-parallelism floor: no schedule beats `compound / n_pes`
+    /// cycles per update.
+    pub fn per_update_floor(&self, t: &TimingModel, n: usize) -> f64 {
+        t.compound_node_cycles(n) as f64 / self.n_pes.max(1) as f64
+    }
+
+    /// Store-port contention ceiling: each update moves one slot through
+    /// the shared ports, so per-update cycles can never drop below
+    /// `store_pass / store_ports`.
+    pub fn store_floor(&self, t: &TimingModel, n: usize) -> f64 {
+        t.store_pass(n) as f64 / self.store_ports as f64
     }
 }
 
@@ -117,7 +246,7 @@ pub enum Plane {
     Shift,
 }
 
-/// The systolic array: value planes + timing.
+/// The systolic array: SoA value planes + timing.
 #[derive(Clone, Debug)]
 pub struct SystolicArray {
     /// Matrix dimension the array is configured for.
@@ -127,28 +256,29 @@ pub struct SystolicArray {
     /// Per-operation cycle model.
     pub timing: TimingModel,
     /// Matrix planes (row-major n x n).
-    pub accum: Vec<CFix>,
+    pub accum: CPlanes,
     /// Shift plane (operand staging), row-major n x n.
-    pub shift: Vec<CFix>,
+    pub shift: CPlanes,
     /// Mean-pipeline planes (n).
-    pub vaccum: Vec<CFix>,
+    pub vaccum: CPlanes,
     /// Mean-pipeline shift plane (n).
-    pub vshift: Vec<CFix>,
+    pub vshift: CPlanes,
     /// Last-written planes (what `smm` commits).
     pub last_mat: Plane,
     /// Last-written mean plane (what `smm` commits).
     pub last_vec: Plane,
     /// Reusable output/working buffers (perf: zero steady-state alloc).
-    scratch_mat: Vec<CFix>,
-    scratch_vec: Vec<CFix>,
-    scratch_w: Vec<CFix>,
+    scratch_mat: CPlanes,
+    scratch_vec: CPlanes,
+    scratch_w: CPlanes,
 }
 
 /// A matrix operand streamed into the array (already transposed/negated
 /// by the Transpose/Select units if requested).
+#[derive(Clone, Copy)]
 pub struct MatOperand<'a> {
-    /// Operand values, row-major n x n.
-    pub data: &'a [CFix],
+    /// Operand planes, row-major n x n.
+    pub data: PlaneRef<'a>,
     /// Read through the Transpose unit (Hermitian transpose).
     pub herm: bool,
 }
@@ -160,95 +290,63 @@ impl SystolicArray {
             n,
             fmt,
             timing,
-            accum: vec![CFix::zero(fmt); n * n],
-            shift: vec![CFix::zero(fmt); n * n],
-            vaccum: vec![CFix::zero(fmt); n],
-            vshift: vec![CFix::zero(fmt); n],
+            accum: CPlanes::zeroed(n * n),
+            shift: CPlanes::zeroed(n * n),
+            vaccum: CPlanes::zeroed(n),
+            vshift: CPlanes::zeroed(n),
             last_mat: Plane::Accum,
             last_vec: Plane::Accum,
-            scratch_mat: vec![CFix::zero(fmt); n * n],
-            scratch_vec: vec![CFix::zero(fmt); n],
-            scratch_w: vec![CFix::zero(fmt); 2 * n * (2 * n + 1)],
+            scratch_mat: CPlanes::zeroed(n * n),
+            scratch_vec: CPlanes::zeroed(n),
+            scratch_w: CPlanes::zeroed(2 * n * (2 * n + 1)),
         }
     }
 
-    fn at(data: &[CFix], n: usize, i: usize, j: usize, herm: bool) -> CFix {
-        if herm {
-            data[j * n + i].conj()
-        } else {
-            data[i * n + j]
-        }
+    fn rails(&self) -> Rails {
+        Rails::of(self.fmt)
     }
 
     /// `mma` (matrix): accum = (∓) opA * opB. Returns cycles.
     pub fn mma_matrix(&mut self, a: MatOperand, b: MatOperand, neg: bool) -> u64 {
         let n = self.n;
-        for i in 0..n {
-            for j in 0..n {
-                let mut acc = CFix::zero(self.fmt);
-                for k in 0..n {
-                    let prod = Self::at(a.data, n, i, k, a.herm)
-                        .mul(Self::at(b.data, n, k, j, b.herm));
-                    acc = acc.add(prod);
-                }
-                self.scratch_mat[i * n + j] = if neg { acc.neg() } else { acc };
-            }
-        }
+        kernels::mat_mul(n, self.rails(), a.data, a.herm, b.data, b.herm, None, neg, &mut self.scratch_mat);
         std::mem::swap(&mut self.accum, &mut self.scratch_mat);
         self.last_mat = Plane::Accum;
         self.timing.matrix_pass(n)
     }
 
     /// `mma` (mean pipeline): vaccum = (∓) opA * vec.
-    pub fn mma_vector(&mut self, a: MatOperand, vec: &[CFix], neg: bool) -> u64 {
+    pub fn mma_vector(&mut self, a: MatOperand, vec: PlaneRef, neg: bool) -> u64 {
         let n = self.n;
-        for i in 0..n {
-            let mut acc = CFix::zero(self.fmt);
-            for k in 0..n {
-                acc = acc.add(Self::at(a.data, n, i, k, a.herm).mul(vec[k]));
-            }
-            self.scratch_vec[i] = if neg { acc.neg() } else { acc };
-        }
+        kernels::mat_vec(n, self.rails(), a.data, a.herm, vec, None, neg, &mut self.scratch_vec);
         std::mem::swap(&mut self.vaccum, &mut self.scratch_vec);
         self.last_vec = Plane::Accum;
         self.timing.vector_pass(n)
     }
 
     /// `mms` (matrix): shift = (∓ addend) + opA * opB.
-    pub fn mms_matrix(&mut self, a: MatOperand, b: MatOperand, addend: &[CFix], neg: bool) -> u64 {
+    pub fn mms_matrix(&mut self, a: MatOperand, b: MatOperand, addend: PlaneRef, neg: bool) -> u64 {
         let n = self.n;
-        for i in 0..n {
-            for j in 0..n {
-                let mut acc = addend[i * n + j];
-                if neg {
-                    acc = acc.neg();
-                }
-                for k in 0..n {
-                    acc = acc.add(
-                        Self::at(a.data, n, i, k, a.herm).mul(Self::at(b.data, n, k, j, b.herm)),
-                    );
-                }
-                self.scratch_mat[i * n + j] = acc;
-            }
-        }
+        kernels::mat_mul(
+            n,
+            self.rails(),
+            a.data,
+            a.herm,
+            b.data,
+            b.herm,
+            Some(addend),
+            neg,
+            &mut self.scratch_mat,
+        );
         std::mem::swap(&mut self.shift, &mut self.scratch_mat);
         self.last_mat = Plane::Shift;
         self.timing.matrix_pass(n)
     }
 
     /// `mms` (mean pipeline): vshift = (∓ addend) + opA * vec.
-    pub fn mms_vector(&mut self, a: MatOperand, vec: &[CFix], addend: &[CFix], neg: bool) -> u64 {
+    pub fn mms_vector(&mut self, a: MatOperand, vec: PlaneRef, addend: PlaneRef, neg: bool) -> u64 {
         let n = self.n;
-        for i in 0..n {
-            let mut acc = addend[i];
-            if neg {
-                acc = acc.neg();
-            }
-            for k in 0..n {
-                acc = acc.add(Self::at(a.data, n, i, k, a.herm).mul(vec[k]));
-            }
-            self.scratch_vec[i] = acc;
-        }
+        kernels::mat_vec(n, self.rails(), a.data, a.herm, vec, Some(addend), neg, &mut self.scratch_vec);
         std::mem::swap(&mut self.vshift, &mut self.scratch_vec);
         self.last_vec = Plane::Shift;
         self.timing.vector_pass(n)
@@ -269,67 +367,30 @@ impl SystolicArray {
     #[allow(clippy::too_many_arguments)]
     pub fn faddeev(
         &mut self,
-        g: &[CFix],
+        g: PlaneRef,
         b: MatOperand,
-        c: &[CFix],
-        d: &[CFix],
-        y: &[CFix],
-        x: &[CFix],
+        c: PlaneRef,
+        d: PlaneRef,
+        y: PlaneRef,
+        x: PlaneRef,
     ) -> u64 {
         let n = self.n;
-        let rows = 2 * n;
-        let cols = 2 * n + 1;
+        let r = self.rails();
         let mut w = std::mem::take(&mut self.scratch_w);
-        w.resize(rows * cols, CFix::zero(self.fmt));
-        for i in 0..n {
-            for j in 0..n {
-                w[i * cols + j] = g[i * n + j];
-                w[i * cols + n + j] = Self::at(b.data, n, i, j, b.herm);
-                w[(n + i) * cols + j] = c[i * n + j];
-                w[(n + i) * cols + n + j] = d[i * n + j];
-            }
-            w[i * cols + 2 * n] = y[i];
-            w[(n + i) * cols + 2 * n] = x[i];
-        }
-
-        for k in 0..n {
-            // PEborder pivot search: max |.|^2 among remaining G rows.
-            let mut piv = k;
-            let mut pmax = w[k * cols + k].abs2();
-            for i in k + 1..n {
-                let v = w[i * cols + k].abs2();
-                if v.raw > pmax.raw {
-                    piv = i;
-                    pmax = v;
-                }
-            }
-            if piv != k {
-                // PEmult swap mode: exchange the two rows.
-                for j in 0..cols {
-                    w.swap(k * cols + j, piv * cols + j);
-                }
-            }
-            let pivot = w[k * cols + k];
-            // Eliminate every row below the pivot (including the D rows).
-            for i in k + 1..rows {
-                let lead = w[i * cols + k];
-                if lead.is_zero() {
-                    continue;
-                }
-                let f = lead.div(pivot); // PEborder complex division
-                for j in k..cols {
-                    let sub = f.mul(w[k * cols + j]);
-                    w[i * cols + j] = w[i * cols + j].sub(sub);
-                }
-            }
-        }
-
-        for i in 0..n {
-            for j in 0..n {
-                self.shift[i * n + j] = w[(n + i) * cols + n + j];
-            }
-            self.vshift[i] = w[(n + i) * cols + 2 * n];
-        }
+        kernels::faddeev(
+            n,
+            r,
+            g,
+            b.data,
+            b.herm,
+            c,
+            d,
+            y,
+            x,
+            &mut w,
+            &mut self.shift,
+            &mut self.vshift,
+        );
         self.scratch_w = w;
         self.last_mat = Plane::Shift;
         self.last_vec = Plane::Shift;
@@ -337,18 +398,18 @@ impl SystolicArray {
     }
 
     /// The matrix plane `smm` would store.
-    pub fn result_matrix(&self) -> &[CFix] {
+    pub fn result_matrix(&self) -> PlaneRef<'_> {
         match self.last_mat {
-            Plane::Accum => &self.accum,
-            Plane::Shift => &self.shift,
+            Plane::Accum => self.accum.as_ref(),
+            Plane::Shift => self.shift.as_ref(),
         }
     }
 
     /// The mean plane `smm` would store.
-    pub fn result_vector(&self) -> &[CFix] {
+    pub fn result_vector(&self) -> PlaneRef<'_> {
         match self.last_vec {
-            Plane::Accum => &self.vaccum,
-            Plane::Shift => &self.vshift,
+            Plane::Accum => self.vaccum.as_ref(),
+            Plane::Shift => self.vshift.as_ref(),
         }
     }
 }
@@ -361,21 +422,25 @@ mod tests {
 
     const FMT: QFormat = QFormat::q5_10();
 
-    fn to_fix(m: &CMatrix) -> Vec<CFix> {
+    fn to_planes(m: &CMatrix) -> CPlanes {
         let mut v = Vec::new();
         for i in 0..m.rows {
             for j in 0..m.cols {
                 v.push(CFix::from_f64(m[(i, j)].re, m[(i, j)].im, FMT));
             }
         }
-        v
+        CPlanes::from_cfix(&v)
     }
 
-    fn from_fix(v: &[CFix], n: usize) -> CMatrix {
+    fn from_planes(p: PlaneRef, n: usize) -> CMatrix {
         let mut m = CMatrix::zeros(n, n);
         for i in 0..n {
             for j in 0..n {
-                let (re, im) = v[i * n + j].to_c64();
+                let z = CFix {
+                    re: crate::fixed::Fix { raw: p.re[i * n + j], fmt: FMT },
+                    im: crate::fixed::Fix { raw: p.im[i * n + j], fmt: FMT },
+                };
+                let (re, im) = z.to_c64();
                 m[(i, j)] = c64::new(re, im);
             }
         }
@@ -393,15 +458,15 @@ mod tests {
             let a = CMatrix::random(rng, n, n).scale(0.5);
             let b = CMatrix::random(rng, n, n).scale(0.5);
             let mut arr = array(n);
-            let fa = to_fix(&a);
-            let fb = to_fix(&b);
+            let fa = to_planes(&a);
+            let fb = to_planes(&b);
             let cycles = arr.mma_matrix(
-                MatOperand { data: &fa, herm: false },
-                MatOperand { data: &fb, herm: false },
+                MatOperand { data: fa.as_ref(), herm: false },
+                MatOperand { data: fb.as_ref(), herm: false },
                 false,
             );
             assert_eq!(cycles, 22); // 4*4 + 2*3
-            let got = from_fix(&arr.accum, n);
+            let got = from_planes(arr.accum.as_ref(), n);
             let want = a.matmul(&b);
             assert!(got.dist(&want) < 0.1, "dist {}", got.dist(&want));
         });
@@ -414,14 +479,14 @@ mod tests {
         let a = CMatrix::random(&mut rng, n, n).scale(0.5);
         let b = CMatrix::random(&mut rng, n, n).scale(0.5);
         let mut arr = array(n);
-        let fa = to_fix(&a);
-        let fb = to_fix(&b);
+        let fa = to_planes(&a);
+        let fb = to_planes(&b);
         arr.mma_matrix(
-            MatOperand { data: &fa, herm: false },
-            MatOperand { data: &fb, herm: true },
+            MatOperand { data: fa.as_ref(), herm: false },
+            MatOperand { data: fb.as_ref(), herm: true },
             false,
         );
-        let got = from_fix(&arr.accum, n);
+        let got = from_planes(arr.accum.as_ref(), n);
         let want = a.matmul(&b.hermitian());
         assert!(got.dist(&want) < 0.1);
     }
@@ -434,14 +499,14 @@ mod tests {
         let b = CMatrix::random(&mut rng, n, n).scale(0.4);
         let cmat = CMatrix::random(&mut rng, n, n).scale(0.4);
         let mut arr = array(n);
-        let (fa, fb, fc) = (to_fix(&a), to_fix(&b), to_fix(&cmat));
+        let (fa, fb, fc) = (to_planes(&a), to_planes(&b), to_planes(&cmat));
         arr.mms_matrix(
-            MatOperand { data: &fa, herm: false },
-            MatOperand { data: &fb, herm: false },
-            &fc,
+            MatOperand { data: fa.as_ref(), herm: false },
+            MatOperand { data: fb.as_ref(), herm: false },
+            fc.as_ref(),
             true,
         );
-        let got = from_fix(&arr.shift, n);
+        let got = from_planes(arr.shift.as_ref(), n);
         let want = a.matmul(&b).sub(&cmat);
         assert!(got.dist(&want) < 0.1, "dist {}", got.dist(&want));
     }
@@ -456,18 +521,18 @@ mod tests {
             let c = CMatrix::random(rng, n, n).scale(0.4);
             let d = CMatrix::random(rng, n, n).scale(0.4);
             let mut arr = array(n);
-            let (fg, fb, fc, fd) = (to_fix(&g), to_fix(&b), to_fix(&c), to_fix(&d));
-            let zero = vec![CFix::zero(FMT); n];
+            let (fg, fb, fc, fd) = (to_planes(&g), to_planes(&b), to_planes(&c), to_planes(&d));
+            let zero = CPlanes::zeroed(n);
             let cycles = arr.faddeev(
-                &fg,
-                MatOperand { data: &fb, herm: false },
-                &fc,
-                &fd,
-                &zero,
-                &zero,
+                fg.as_ref(),
+                MatOperand { data: fb.as_ref(), herm: false },
+                fc.as_ref(),
+                fd.as_ref(),
+                zero.as_ref(),
+                zero.as_ref(),
             );
             assert!(cycles > 0);
-            let got = from_fix(&arr.shift, n);
+            let got = from_planes(arr.shift.as_ref(), n);
             let want = CMatrix::schur_direct(&g, &b, &c, &d).unwrap();
             assert!(got.dist(&want) < 0.35, "dist {}", got.dist(&want));
         });
@@ -485,24 +550,29 @@ mod tests {
         let c = CMatrix::identity(2);
         let d = CMatrix::zeros(2, 2);
         let mut arr = array(n);
-        let (fg, fb, fc, fd) = (to_fix(&g), to_fix(&b), to_fix(&c), to_fix(&d));
-        let zero = vec![CFix::zero(FMT); n];
-        arr.faddeev(&fg, MatOperand { data: &fb, herm: false }, &fc, &fd, &zero, &zero);
-        let got = from_fix(&arr.shift, n);
+        let (fg, fb, fc, fd) = (to_planes(&g), to_planes(&b), to_planes(&c), to_planes(&d));
+        let zero = CPlanes::zeroed(n);
+        arr.faddeev(
+            fg.as_ref(),
+            MatOperand { data: fb.as_ref(), herm: false },
+            fc.as_ref(),
+            fd.as_ref(),
+            zero.as_ref(),
+            zero.as_ref(),
+        );
+        let got = from_planes(arr.shift.as_ref(), n);
         // D - C g^{-1} B = -g^{-1} = -[[0,1],[1,0]]
         assert!((got[(0, 1)].re + 1.0).abs() < 0.01, "{got}");
         assert!((got[(1, 0)].re + 1.0).abs() < 0.01, "{got}");
     }
 
     #[test]
-    fn compound_node_cycle_count_near_paper() {
+    fn compound_node_cycle_count_matches_paper_exactly() {
         let t = TimingModel::default();
-        let cycles = t.compound_node_cycles(4);
-        let paper = crate::paper::FGP_CN_CYCLES as f64;
-        let rel = (cycles as f64 - paper).abs() / paper;
-        assert!(
-            rel < 0.10,
-            "CN cycles {cycles} should be within 10% of the paper's 260"
+        assert_eq!(
+            t.compound_node_cycles(4),
+            crate::paper::FGP_CN_CYCLES,
+            "n=4 CN update must be the paper's Table II 260 cycles"
         );
     }
 
@@ -520,20 +590,96 @@ mod tests {
     #[test]
     fn planes_track_last_writer() {
         let mut arr = array(2);
-        let id = to_fix(&CMatrix::identity(2));
+        let id = to_planes(&CMatrix::identity(2));
         arr.mma_matrix(
-            MatOperand { data: &id, herm: false },
-            MatOperand { data: &id, herm: false },
+            MatOperand { data: id.as_ref(), herm: false },
+            MatOperand { data: id.as_ref(), herm: false },
             false,
         );
         assert_eq!(arr.last_mat, Plane::Accum);
-        let z = vec![CFix::zero(FMT); 4];
+        let z = CPlanes::zeroed(4);
         arr.mms_matrix(
-            MatOperand { data: &id, herm: false },
-            MatOperand { data: &id, herm: false },
-            &z,
+            MatOperand { data: id.as_ref(), herm: false },
+            MatOperand { data: id.as_ref(), herm: false },
+            z.as_ref(),
             false,
         );
         assert_eq!(arr.last_mat, Plane::Shift);
+    }
+
+    // ---- multi-PE model (ISSUE 9 satellite) ----
+
+    #[test]
+    fn multi_pe_single_pe_reproduces_paper_cycles_exactly() {
+        let t = TimingModel::default();
+        let m = MultiPeModel::default();
+        assert_eq!(m.n_pes, 1);
+        assert_eq!(m.wave_cycles(&t, 4, 1), crate::paper::FGP_CN_CYCLES);
+        for sections in [1usize, 7, 64, 1024] {
+            assert_eq!(
+                m.batch_cycles(&t, 4, sections),
+                sections as u64 * t.compound_node_cycles(4),
+                "n_pes=1 must be exactly sections x 260"
+            );
+        }
+    }
+
+    #[test]
+    fn multi_pe_per_update_monotone_non_increasing() {
+        let t = TimingModel::default();
+        let sections = 1024;
+        let mut prev = f64::INFINITY;
+        for p in [1usize, 2, 4, 8, 16] {
+            let m = MultiPeModel::with_pes(p);
+            let per = m.batch_cycles(&t, 4, sections) as f64 / sections as f64;
+            assert!(
+                per <= prev + 1e-9,
+                "per-update cycles must not increase with PEs: P={p} gives {per} > {prev}"
+            );
+            prev = per;
+        }
+    }
+
+    #[test]
+    fn multi_pe_respects_floor_and_store_ceiling() {
+        let t = TimingModel::default();
+        let sections = 1024;
+        for p in [1usize, 2, 4, 8, 32, 128] {
+            let m = MultiPeModel::with_pes(p);
+            let per = m.batch_cycles(&t, 4, sections) as f64 / sections as f64;
+            assert!(
+                per + 1e-9 >= m.per_update_floor(&t, 4),
+                "P={p}: {per} beats the perfect-parallelism floor"
+            );
+            assert!(
+                per + 1e-9 >= m.store_floor(&t, 4),
+                "P={p}: {per} beats the shared store-port ceiling"
+            );
+        }
+        // With enough PEs the shared store port becomes the binding
+        // constraint: the model must saturate at it, not scale past it.
+        let big = MultiPeModel::with_pes(128);
+        let per = big.batch_cycles(&t, 4, sections) as f64 / sections as f64;
+        assert!(per < 2.0 * big.store_floor(&t, 4), "store port must bind at high P, got {per}");
+    }
+
+    #[test]
+    fn multi_pe_heterogeneous_fold_matches_uniform_closed_form() {
+        let t = TimingModel::default();
+        for p in [1usize, 2, 4, 8] {
+            let m = MultiPeModel::with_pes(p);
+            let cost = SectionCost {
+                compute: t.datapath_pass(4),
+                store: t.store_pass(4),
+            };
+            for sections in [1usize, 3, 8, 17] {
+                let costs = vec![cost; sections];
+                assert_eq!(
+                    m.batch_cycles_records(&costs),
+                    m.batch_cycles(&t, 4, sections),
+                    "uniform records must reduce to the closed form (P={p}, s={sections})"
+                );
+            }
+        }
     }
 }

@@ -5,13 +5,26 @@
 //! fixed-point. At the paper's configuration (n = 4, 16-bit words, 64
 //! kbit) this is 640 bits/slot, so ~50 usable slots alongside the PM —
 //! the reason long chains stream their observations (see compiler docs).
+//!
+//! # Storage layout (PR 9)
+//!
+//! Slots are stored **struct-of-arrays**: each bank keeps one contiguous
+//! `i64` raw plane per complex component ([`SlotBank`]), so the datapath
+//! kernels ([`crate::kernels`]) stream over flat planes instead of
+//! chasing 48-byte `CFix` elements. Layout is invisible at the API
+//! boundary — [`MsgSlot`] remains the AoS view type, and
+//! [`MessageMemory::read`]/[`StateMemory::read`] materialize it on
+//! demand — and is pinned bitwise against the seed AoS encoding by
+//! `rust/tests/property_kernels.rs`.
 
-use crate::fixed::{CFix, QFormat};
+use crate::fixed::{CFix, Fix, QFormat};
 use crate::gmp::matrix::{c64, CMatrix};
 use crate::gmp::message::GaussMessage;
 use crate::isa::MemoryImage;
+use crate::kernels::PlaneRef;
 
-/// One message slot: matrix part + mean column.
+/// One message slot: matrix part + mean column (AoS view type; storage
+/// itself is planar, see [`SlotBank`]).
 #[derive(Clone, Debug)]
 pub struct MsgSlot {
     /// Row-major n x n matrix part.
@@ -66,98 +79,206 @@ impl MsgSlot {
     }
 }
 
+/// A bank of fixed-stride slots stored as two contiguous raw planes
+/// (separate re/im `i64` planes across all slots). The SoA primitive
+/// under [`MessageMemory`] and [`StateMemory`].
+#[derive(Clone, Debug)]
+pub struct SlotBank {
+    /// Storage fixed-point format.
+    pub fmt: QFormat,
+    /// Complex lanes per slot.
+    pub stride: usize,
+    re: Vec<i64>,
+    im: Vec<i64>,
+}
+
+impl SlotBank {
+    /// A zeroed bank of `num_slots` slots of `stride` lanes each.
+    pub fn new(stride: usize, fmt: QFormat, num_slots: usize) -> Self {
+        SlotBank { fmt, stride, re: vec![0; stride * num_slots], im: vec![0; stride * num_slots] }
+    }
+
+    /// Number of addressable slots.
+    pub fn num_slots(&self) -> usize {
+        if self.stride == 0 { 0 } else { self.re.len() / self.stride }
+    }
+
+    /// Borrow one slot's planes.
+    pub fn planes(&self, slot: usize) -> PlaneRef<'_> {
+        let base = slot * self.stride;
+        PlaneRef::new(&self.re[base..base + self.stride], &self.im[base..base + self.stride])
+    }
+
+    /// Overwrite one slot from borrowed planes.
+    pub fn write_planes(&mut self, slot: usize, src: PlaneRef) {
+        assert_eq!(src.len(), self.stride, "slot stride mismatch");
+        let base = slot * self.stride;
+        self.re[base..base + self.stride].copy_from_slice(src.re);
+        self.im[base..base + self.stride].copy_from_slice(src.im);
+    }
+
+    /// Scatter an AoS slice into one slot.
+    pub fn write_cfix(&mut self, slot: usize, src: &[CFix]) {
+        assert_eq!(src.len(), self.stride, "slot stride mismatch");
+        let base = slot * self.stride;
+        for (k, z) in src.iter().enumerate() {
+            self.re[base + k] = z.re.raw;
+            self.im[base + k] = z.im.raw;
+        }
+    }
+
+    /// Quantize one f64 complex value into a lane of `slot`.
+    pub fn quantize_into(&mut self, slot: usize, lane: usize, re: f64, im: f64) {
+        let z = CFix::from_f64(re, im, self.fmt);
+        let idx = slot * self.stride + lane;
+        self.re[idx] = z.re.raw;
+        self.im[idx] = z.im.raw;
+    }
+
+    /// Materialize one slot as the AoS encoding.
+    pub fn read_cfix(&self, slot: usize) -> Vec<CFix> {
+        let base = slot * self.stride;
+        (0..self.stride)
+            .map(|k| CFix {
+                re: Fix { raw: self.re[base + k], fmt: self.fmt },
+                im: Fix { raw: self.im[base + k], fmt: self.fmt },
+            })
+            .collect()
+    }
+}
+
 /// Message memory: addressable slots behind the Data-in/out ports.
+/// Storage is two [`SlotBank`]s (matrix-part and mean-column planes).
 #[derive(Clone, Debug)]
 pub struct MessageMemory {
     /// Message dimension per slot.
     pub n: usize,
     /// Storage fixed-point format.
     pub fmt: QFormat,
-    slots: Vec<MsgSlot>,
+    mat: SlotBank,
+    mean: SlotBank,
 }
 
 impl MessageMemory {
     /// A zeroed memory of `num_slots` slots.
     pub fn new(n: usize, fmt: QFormat, num_slots: usize) -> Self {
-        MessageMemory { n, fmt, slots: vec![MsgSlot::zero(n, fmt); num_slots] }
+        MessageMemory {
+            n,
+            fmt,
+            mat: SlotBank::new(n * n, fmt, num_slots),
+            mean: SlotBank::new(n, fmt, num_slots),
+        }
     }
 
     /// Number of addressable slots.
     pub fn num_slots(&self) -> usize {
-        self.slots.len()
+        self.mat.num_slots()
     }
 
     /// Total capacity in bits (compare against the 64-kbit budget).
     pub fn bits(&self) -> usize {
-        self.slots.len() * MsgSlot::bits(self.n, self.fmt)
+        self.num_slots() * MsgSlot::bits(self.n, self.fmt)
     }
 
     /// Write a full slot (covariance + mean planes).
     pub fn write(&mut self, slot: u8, data: MsgSlot) {
         assert_eq!(data.v.len(), self.n * self.n);
         assert_eq!(data.m.len(), self.n);
-        self.slots[slot as usize] = data;
+        self.mat.write_cfix(slot as usize, &data.v);
+        self.mean.write_cfix(slot as usize, &data.m);
     }
 
-    /// Host-side store of a golden message (Data-in port).
+    /// Host-side store of a golden message (Data-in port): quantizes
+    /// straight into the planes, no intermediate AoS buffer.
     pub fn write_message(&mut self, slot: u8, msg: &GaussMessage) {
         assert_eq!(msg.dim(), self.n, "message dim mismatch");
-        self.write(slot, MsgSlot::from_message(msg, self.fmt));
+        let n = self.n;
+        for i in 0..n {
+            for j in 0..n {
+                let z = msg.cov[(i, j)];
+                self.mat.quantize_into(slot as usize, i * n + j, z.re, z.im);
+            }
+        }
+        for (i, z) in msg.mean.iter().enumerate() {
+            self.mean.quantize_into(slot as usize, i, z.re, z.im);
+        }
     }
 
-    /// Read a slot's raw fixed-point planes.
-    pub fn read(&self, slot: u8) -> &MsgSlot {
-        &self.slots[slot as usize]
+    /// Materialize a slot as its AoS view (kept for golden/diff paths;
+    /// the datapath reads [`Self::mat_planes`]/[`Self::mean_planes`]).
+    pub fn read(&self, slot: u8) -> MsgSlot {
+        MsgSlot { v: self.mat.read_cfix(slot as usize), m: self.mean.read_cfix(slot as usize) }
+    }
+
+    /// Borrow a slot's matrix-part planes.
+    pub fn mat_planes(&self, slot: u8) -> PlaneRef<'_> {
+        self.mat.planes(slot as usize)
+    }
+
+    /// Borrow a slot's mean-column planes.
+    pub fn mean_planes(&self, slot: u8) -> PlaneRef<'_> {
+        self.mean.planes(slot as usize)
+    }
+
+    /// Datapath store (the Smm handshake): overwrite a slot from the
+    /// array's result planes.
+    pub fn write_planes(&mut self, slot: u8, mat: PlaneRef, mean: PlaneRef) {
+        self.mat.write_planes(slot as usize, mat);
+        self.mean.write_planes(slot as usize, mean);
     }
 
     /// Host-side read-back (Data-out port).
     pub fn read_message(&self, slot: u8) -> GaussMessage {
-        self.slots[slot as usize].to_message(self.n)
+        self.read(slot).to_message(self.n)
     }
 }
 
-/// State memory: the per-node A matrices (Fig. 5 "Mem A").
+/// State memory: the per-node A matrices (Fig. 5 "Mem A"), one planar
+/// [`SlotBank`] of n x n slots.
 #[derive(Clone, Debug)]
 pub struct StateMemory {
     /// Matrix dimension per slot.
     pub n: usize,
     /// Storage fixed-point format.
     pub fmt: QFormat,
-    slots: Vec<Vec<CFix>>,
+    bank: SlotBank,
 }
 
 impl StateMemory {
     /// A zeroed state memory of `num_slots` slots.
     pub fn new(n: usize, fmt: QFormat, num_slots: usize) -> Self {
-        StateMemory { n, fmt, slots: vec![vec![CFix::zero(fmt); n * n]; num_slots] }
+        StateMemory { n, fmt, bank: SlotBank::new(n * n, fmt, num_slots) }
     }
 
     /// Number of addressable slots.
     pub fn num_slots(&self) -> usize {
-        self.slots.len()
+        self.bank.num_slots()
     }
 
     /// Total storage in bits (capacity accounting).
     pub fn bits(&self) -> usize {
-        self.slots.len() * self.n * self.n * 2 * self.fmt.width() as usize
+        self.num_slots() * self.n * self.n * 2 * self.fmt.width() as usize
     }
 
-    /// Quantize and store an n x n state matrix.
+    /// Quantize and store an n x n state matrix (straight into planes).
     pub fn write_matrix(&mut self, slot: u8, a: &CMatrix) {
         assert_eq!((a.rows, a.cols), (self.n, self.n), "state matrix must be n x n");
-        let mut v = Vec::with_capacity(self.n * self.n);
         for i in 0..self.n {
             for j in 0..self.n {
                 let z = a[(i, j)];
-                v.push(CFix::from_f64(z.re, z.im, self.fmt));
+                self.bank.quantize_into(slot as usize, i * self.n + j, z.re, z.im);
             }
         }
-        self.slots[slot as usize] = v;
     }
 
-    /// Read a slot's raw fixed-point values.
-    pub fn read(&self, slot: u8) -> &[CFix] {
-        &self.slots[slot as usize]
+    /// Materialize a slot's AoS view.
+    pub fn read(&self, slot: u8) -> Vec<CFix> {
+        self.bank.read_cfix(slot as usize)
+    }
+
+    /// Borrow a slot's planes (the datapath operand path).
+    pub fn planes(&self, slot: u8) -> PlaneRef<'_> {
+        self.bank.planes(slot as usize)
     }
 }
 
@@ -225,6 +346,41 @@ mod tests {
         assert_eq!(MsgSlot::bits(4, FMT), 640);
         let mem = MessageMemory::new(4, FMT, 48);
         assert!(mem.bits() <= 64 * 1024, "48 slots fit the 64-kbit budget");
+    }
+
+    /// The planar banks and the AoS MsgSlot encoding are the same data:
+    /// write through either surface, read back bit-identical raws.
+    #[test]
+    fn soa_bank_roundtrips_aos_slot_bitwise() {
+        proptest_cases(25, |rng| {
+            let n = 4;
+            let msg = GaussMessage::new(
+                (0..n).map(|_| c64::new(rng.range(-40.0, 40.0), rng.range(-40.0, 40.0))).collect(),
+                CMatrix::random_psd(rng, n, 0.4).scale(8.0),
+            );
+            let slot = MsgSlot::from_message(&msg, FMT);
+            let mut mem = MessageMemory::new(n, FMT, 4);
+            // Path A: AoS write.
+            mem.write(1, slot.clone());
+            // Path B: direct-quantizing planar write.
+            mem.write_message(2, &msg);
+            let a = mem.read(1);
+            let b = mem.read(2);
+            for (x, y) in a.v.iter().zip(&slot.v) {
+                assert_eq!((x.re.raw, x.im.raw), (y.re.raw, y.im.raw));
+            }
+            for (x, y) in a.v.iter().zip(&b.v) {
+                assert_eq!((x.re.raw, x.im.raw), (y.re.raw, y.im.raw));
+            }
+            for (x, y) in a.m.iter().zip(&b.m) {
+                assert_eq!((x.re.raw, x.im.raw), (y.re.raw, y.im.raw));
+            }
+            // The plane view shows the same raws the AoS view decodes.
+            let planes = mem.mat_planes(1);
+            for (k, z) in a.v.iter().enumerate() {
+                assert_eq!((planes.re[k], planes.im[k]), (z.re.raw, z.im.raw));
+            }
+        });
     }
 
     #[test]

@@ -17,6 +17,15 @@
 //!   interface (`load_program` / `start_program` / status replies) and the
 //!   Data-in/out ports.
 //!
+//! Since PR 9 both memories and the array's register planes store values
+//! **struct-of-arrays** (contiguous raw re/im planes, [`SlotBank`] /
+//! [`crate::kernels::CPlanes`]) and the per-instruction arithmetic runs
+//! through the shape-specialized kernels in [`crate::kernels`]; a
+//! [`MultiPeModel`] scales the cycle model out to N processing
+//! elements. Both are performance knobs only — outputs are bit-identical
+//! to the seed AoS single-PE interpreter at every layout and PE count
+//! (`rust/tests/property_kernels.rs`).
+//!
 //! # Input-scaling contract
 //!
 //! Like any 16-bit fixed-point signal chain, the device computes
@@ -33,7 +42,7 @@ pub mod mem;
 pub mod processor;
 pub mod trace;
 
-pub use array::{SystolicArray, TimingModel};
-pub use mem::{MessageMemory, MsgSlot, ProgramMemory, StateMemory};
+pub use array::{MultiPeModel, SectionCost, SystolicArray, TimingModel};
+pub use mem::{MessageMemory, MsgSlot, ProgramMemory, SlotBank, StateMemory};
 pub use processor::{Fgp, FgpConfig, FgpError, ProtocolError, RunStats};
 pub use trace::{Profiler, TraceRecord};

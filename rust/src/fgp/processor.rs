@@ -13,14 +13,25 @@
 //! [`Command`]/[`Reply`] implement that contract; the L3 coordinator
 //! (`crate::coordinator`) drives it, including streaming observations
 //! into the message memory between sections (the Data-in port).
+//!
+//! ## Multi-PE mode (PR 9)
+//!
+//! [`FgpConfig::multi_pe`] scales the device out to P array instances
+//! (see [`MultiPeModel`]): the FSM still executes sections sequentially
+//! — so values, and therefore memory contents and outputs, are
+//! **bit-identical at every P** — but cycle accounting folds the
+//! per-section costs into cross-PE waves with issue skew and shared
+//! store-port serialization. `n_pes = 1` is exactly the paper's
+//! processor, cycle for cycle.
 
 use crate::fixed::QFormat;
 use crate::gmp::matrix::CMatrix;
 use crate::gmp::message::GaussMessage;
 use crate::isa::{Instr, IsaError, MemoryImage, OperandSrc, ACC};
+use crate::kernels::{CPlanes, PlaneRef};
 
-use super::array::{MatOperand, SystolicArray, TimingModel};
-use super::mem::{MessageMemory, MsgSlot, ProgramMemory, StateMemory};
+use super::array::{MatOperand, MultiPeModel, SectionCost, SystolicArray, TimingModel};
+use super::mem::{MessageMemory, ProgramMemory, StateMemory};
 
 /// Static configuration (the synthesis parameters of §V).
 #[derive(Clone, Copy, Debug)]
@@ -35,6 +46,8 @@ pub struct FgpConfig {
     pub state_slots: usize,
     /// Per-operation cycle model.
     pub timing: TimingModel,
+    /// Multi-PE scaling model (default: 1 PE — the paper's processor).
+    pub multi_pe: MultiPeModel,
 }
 
 impl Default for FgpConfig {
@@ -45,7 +58,15 @@ impl Default for FgpConfig {
             msg_slots: 48,
             state_slots: 16,
             timing: TimingModel::default(),
+            multi_pe: MultiPeModel::default(),
         }
+    }
+}
+
+impl FgpConfig {
+    /// The default configuration scaled out to `n_pes` PE instances.
+    pub fn with_pes(n_pes: usize) -> Self {
+        FgpConfig { multi_pe: MultiPeModel::with_pes(n_pes), ..Default::default() }
     }
 }
 
@@ -164,7 +185,7 @@ impl Reply {
 /// Cycle/instruction statistics for one program run.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct RunStats {
-    /// Total simulated cycles.
+    /// Total simulated cycles (multi-PE wave-folded when `n_pes > 1`).
     pub cycles: u64,
     /// Instructions executed.
     pub instructions: u64,
@@ -201,26 +222,21 @@ where
     }
 }
 
-/// Reusable operand staging buffers (the Select/Mask unit latches).
+/// Reusable operand staging buffers (the Select/Mask unit latches),
+/// SoA planes since PR 9.
 ///
 /// The hot path copies each operand once into these persistent buffers —
 /// semantically the operand registers at the array's edge — so steady-state
-/// execution performs no heap allocation (perf pass, EXPERIMENTS.md §Perf).
+/// execution performs no heap allocation (perf pass, EXPERIMENTS.md §Perf),
+/// and the copies themselves are flat `i64` plane memcpys.
 #[derive(Default)]
 struct OpScratch {
-    a: Vec<crate::fixed::CFix>,
-    b: Vec<crate::fixed::CFix>,
-    c: Vec<crate::fixed::CFix>,
-    d: Vec<crate::fixed::CFix>,
-    y: Vec<crate::fixed::CFix>,
-    dm: Vec<crate::fixed::CFix>,
-}
-
-impl OpScratch {
-    fn load(dst: &mut Vec<crate::fixed::CFix>, src: &[crate::fixed::CFix]) {
-        dst.clear();
-        dst.extend_from_slice(src);
-    }
+    a: CPlanes,
+    b: CPlanes,
+    c: CPlanes,
+    d: CPlanes,
+    y: CPlanes,
+    dm: CPlanes,
 }
 
 /// The FGP processor.
@@ -328,6 +344,13 @@ impl Fgp {
         let mut stats = RunStats::default();
         let mut exhausted = !feed.feed(0, &mut self.msgmem, &mut self.statemem);
 
+        // Multi-PE accounting: per-section cost records folded into
+        // cross-PE waves after the run (values are computed sequentially
+        // regardless, so only the cycle count depends on n_pes).
+        let multi_pe = self.config.multi_pe;
+        let mut section_costs: Vec<SectionCost> = Vec::new();
+        let mut section_mark: u64 = 0;
+
         // at most one active loop (the ISA has no nested loops)
         let mut active: Option<(usize, u16)> = None; // (loop instr addr, remaining passes)
         let mut pc = start;
@@ -383,6 +406,11 @@ impl Fgp {
                         // store handshake: a section committed; stream the
                         // next section's inputs
                         stats.sections += 1;
+                        if multi_pe.n_pes > 1 {
+                            let total = stats.cycles - section_mark;
+                            section_costs.push(SectionCost { compute: total - c, store: c });
+                            section_mark = stats.cycles;
+                        }
                         if !exhausted {
                             exhausted = !feed.feed(
                                 stats.sections as usize,
@@ -394,6 +422,14 @@ impl Fgp {
                 }
             }
             pc += 1;
+        }
+
+        if multi_pe.n_pes > 1 && !section_costs.is_empty() {
+            // Fold the sequentially-accumulated section costs into
+            // cross-PE waves; cycles outside any section (a trailing
+            // non-smm epilogue) stay serial.
+            let epilogue = stats.cycles - section_mark;
+            stats.cycles = multi_pe.batch_cycles_records(&section_costs) + epilogue;
         }
 
         self.total_cycles += stats.cycles;
@@ -410,9 +446,9 @@ impl Fgp {
         herm: bool,
     ) -> MatOperand<'a> {
         match src {
-            OperandSrc::Msg(s) if *s == ACC => MatOperand { data: &array.accum, herm },
-            OperandSrc::Msg(s) => MatOperand { data: &msgmem.read(*s).v, herm },
-            OperandSrc::State(s) => MatOperand { data: statemem.read(*s), herm },
+            OperandSrc::Msg(s) if *s == ACC => MatOperand { data: array.accum.as_ref(), herm },
+            OperandSrc::Msg(s) => MatOperand { data: msgmem.mat_planes(*s), herm },
+            OperandSrc::State(s) => MatOperand { data: statemem.planes(*s), herm },
         }
     }
 
@@ -421,10 +457,10 @@ impl Fgp {
         array: &'a SystolicArray,
         msgmem: &'a MessageMemory,
         src: &OperandSrc,
-    ) -> &'a [crate::fixed::CFix] {
+    ) -> PlaneRef<'a> {
         match src {
-            OperandSrc::Msg(s) if *s == ACC => &array.vaccum,
-            OperandSrc::Msg(s) => &msgmem.read(*s).m,
+            OperandSrc::Msg(s) if *s == ACC => array.vaccum.as_ref(),
+            OperandSrc::Msg(s) => msgmem.mean_planes(*s),
             OperandSrc::State(_) => panic!("state memory has no mean column"),
         }
     }
@@ -448,29 +484,31 @@ impl Fgp {
                 }
             }
         };
-        // stage operands into the persistent scratch latches (one copy,
-        // zero steady-state allocation)
+        // stage operands into the persistent scratch latches (one planar
+        // copy, zero steady-state allocation)
         let mut s = std::mem::take(&mut self.scratch);
         let cycles = match instr {
             Instr::Mma { a, a_herm, b, b_herm, neg, vec } => {
                 check_operand(a)?;
                 check_operand(b)?;
-                OpScratch::load(
-                    &mut s.a,
+                s.a.copy_from(
                     Self::mat_operand(&self.array, &self.msgmem, &self.statemem, a, *a_herm).data,
                 );
                 if *vec {
-                    OpScratch::load(&mut s.b, Self::vec_operand(&self.array, &self.msgmem, b));
-                    self.array.mma_vector(MatOperand { data: &s.a, herm: *a_herm }, &s.b, *neg)
+                    s.b.copy_from(Self::vec_operand(&self.array, &self.msgmem, b));
+                    self.array.mma_vector(
+                        MatOperand { data: s.a.as_ref(), herm: *a_herm },
+                        s.b.as_ref(),
+                        *neg,
+                    )
                 } else {
-                    OpScratch::load(
-                        &mut s.b,
+                    s.b.copy_from(
                         Self::mat_operand(&self.array, &self.msgmem, &self.statemem, b, *b_herm)
                             .data,
                     );
                     self.array.mma_matrix(
-                        MatOperand { data: &s.a, herm: *a_herm },
-                        MatOperand { data: &s.b, herm: *b_herm },
+                        MatOperand { data: s.a.as_ref(), herm: *a_herm },
+                        MatOperand { data: s.b.as_ref(), herm: *b_herm },
                         *neg,
                     )
                 }
@@ -479,36 +517,36 @@ impl Fgp {
                 check_operand(a)?;
                 check_operand(b)?;
                 check_msg(c)?;
-                OpScratch::load(
-                    &mut s.a,
+                s.a.copy_from(
                     Self::mat_operand(&self.array, &self.msgmem, &self.statemem, a, *a_herm).data,
                 );
                 if *vec {
-                    OpScratch::load(&mut s.b, Self::vec_operand(&self.array, &self.msgmem, b));
-                    OpScratch::load(
-                        &mut s.c,
-                        if *c == ACC { &self.array.vshift } else { &self.msgmem.read(*c).m },
-                    );
+                    s.b.copy_from(Self::vec_operand(&self.array, &self.msgmem, b));
+                    s.c.copy_from(if *c == ACC {
+                        self.array.vshift.as_ref()
+                    } else {
+                        self.msgmem.mean_planes(*c)
+                    });
                     self.array.mms_vector(
-                        MatOperand { data: &s.a, herm: *a_herm },
-                        &s.b,
-                        &s.c,
+                        MatOperand { data: s.a.as_ref(), herm: *a_herm },
+                        s.b.as_ref(),
+                        s.c.as_ref(),
                         *neg,
                     )
                 } else {
-                    OpScratch::load(
-                        &mut s.b,
+                    s.b.copy_from(
                         Self::mat_operand(&self.array, &self.msgmem, &self.statemem, b, *b_herm)
                             .data,
                     );
-                    OpScratch::load(
-                        &mut s.c,
-                        if *c == ACC { &self.array.shift } else { &self.msgmem.read(*c).v },
-                    );
+                    s.c.copy_from(if *c == ACC {
+                        self.array.shift.as_ref()
+                    } else {
+                        self.msgmem.mat_planes(*c)
+                    });
                     self.array.mms_matrix(
-                        MatOperand { data: &s.a, herm: *a_herm },
-                        MatOperand { data: &s.b, herm: *b_herm },
-                        &s.c,
+                        MatOperand { data: s.a.as_ref(), herm: *a_herm },
+                        MatOperand { data: s.b.as_ref(), herm: *b_herm },
+                        s.c.as_ref(),
                         *neg,
                     )
                 }
@@ -526,45 +564,51 @@ impl Fgp {
                     });
                 }
                 // quadrant G from the shift plane when acc, B/C from accum
-                OpScratch::load(
-                    &mut s.a,
-                    if *g == ACC { &self.array.shift } else { &self.msgmem.read(*g).v },
-                );
-                OpScratch::load(
-                    &mut s.b,
-                    if *b == ACC { &self.array.accum } else { &self.msgmem.read(*b).v },
-                );
-                OpScratch::load(
-                    &mut s.c,
-                    if *c == ACC { &self.array.accum } else { &self.msgmem.read(*c).v },
-                );
-                let dslot = self.msgmem.read(*d);
-                OpScratch::load(&mut s.d, &dslot.v);
-                OpScratch::load(&mut s.dm, &dslot.m);
+                s.a.copy_from(if *g == ACC {
+                    self.array.shift.as_ref()
+                } else {
+                    self.msgmem.mat_planes(*g)
+                });
+                s.b.copy_from(if *b == ACC {
+                    self.array.accum.as_ref()
+                } else {
+                    self.msgmem.mat_planes(*b)
+                });
+                s.c.copy_from(if *c == ACC {
+                    self.array.accum.as_ref()
+                } else {
+                    self.msgmem.mat_planes(*c)
+                });
+                s.d.copy_from(self.msgmem.mat_planes(*d));
+                s.dm.copy_from(self.msgmem.mean_planes(*d));
                 // extended mean column: top = vshift (innovation), bottom = D's mean
-                OpScratch::load(
-                    &mut s.y,
-                    if *g == ACC { &self.array.vshift } else { &self.msgmem.read(*g).m },
-                );
+                s.y.copy_from(if *g == ACC {
+                    self.array.vshift.as_ref()
+                } else {
+                    self.msgmem.mean_planes(*g)
+                });
                 self.array.faddeev(
-                    &s.a,
-                    MatOperand { data: &s.b, herm: *b_herm },
-                    &s.c,
-                    &s.d,
-                    &s.y,
-                    &s.dm,
+                    s.a.as_ref(),
+                    MatOperand { data: s.b.as_ref(), herm: *b_herm },
+                    s.c.as_ref(),
+                    s.d.as_ref(),
+                    s.y.as_ref(),
+                    s.dm.as_ref(),
                 )
             }
             Instr::Smm { dst } => {
                 check_msg(dst)?;
                 if *dst == ACC {
+                    self.scratch = s;
                     return Err(FgpError::Datapath { addr, msg: "smm cannot target acc".into() });
                 }
-                let slot = MsgSlot {
-                    v: self.array.result_matrix().to_vec(),
-                    m: self.array.result_vector().to_vec(),
-                };
-                self.msgmem.write(*dst, slot);
+                // planar store: two memcpys per plane pair, no AoS
+                // materialization on the hot path
+                self.msgmem.write_planes(
+                    *dst,
+                    self.array.result_matrix(),
+                    self.array.result_vector(),
+                );
                 self.config.timing.store_pass(n)
             }
             other => {
@@ -705,44 +749,60 @@ mod tests {
         Ok(())
     }
 
+    fn rls_feed_setup(
+        rng: &mut Rng,
+        sections: usize,
+    ) -> (crate::compiler::CompiledProgram, Vec<CMatrix>, GaussMessage, Vec<GaussMessage>) {
+        let n = 4;
+        let a_list: Vec<CMatrix> =
+            (0..sections).map(|_| CMatrix::random(rng, n, n).scale(0.4)).collect();
+        let mut g = FactorGraph::new();
+        g.rls_chain(n, &a_list);
+        let sched = Schedule::forward_sweep(&g);
+        let compiled = compile(&g, &sched, &CompileOptions::default()).unwrap();
+        let prior = scaled_msg(rng, n, 0.2);
+        let ys: Vec<GaussMessage> = (0..sections).map(|_| scaled_msg(rng, n, 0.1)).collect();
+        (compiled, a_list, prior, ys)
+    }
+
+    fn run_rls_feed(
+        config: FgpConfig,
+        compiled: &crate::compiler::CompiledProgram,
+        a_list: &[CMatrix],
+        prior: &GaussMessage,
+        ys: &[GaussMessage],
+    ) -> (Fgp, RunStats, u8) {
+        let mut fgp = Fgp::new(config);
+        fgp.pm.load(&compiled.program.to_image()).unwrap();
+        let prior_slot = compiled.memmap.preloads[0].1;
+        fgp.msgmem.write_message(prior_slot, prior);
+        let (_, obs_slot, _) = compiled.memmap.streams[0];
+        let (_, st_slot, _) = compiled.memmap.state_streams[0];
+        let ys_feed = ys.to_vec();
+        let a_feed = a_list.to_vec();
+        let mut feed =
+            move |section: usize, mem: &mut MessageMemory, st: &mut StateMemory| -> bool {
+                if section >= ys_feed.len() {
+                    return false;
+                }
+                mem.write_message(obs_slot, &ys_feed[section]);
+                st.write_matrix(st_slot, &a_feed[section]);
+                true
+            };
+        let stats = fgp.run_program(1, &mut feed).unwrap();
+        (fgp, stats, compiled.memmap.outputs[0].1)
+    }
+
     #[test]
     fn looped_rls_with_host_feed_matches_golden_chain() {
         let mut rng = Rng::new(17);
         let n = 4;
         let sections = 6;
-        let a_list: Vec<CMatrix> =
-            (0..sections).map(|_| CMatrix::random(&mut rng, n, n).scale(0.4)).collect();
-        let mut g = FactorGraph::new();
-        g.rls_chain(n, &a_list);
-        let sched = Schedule::forward_sweep(&g);
-        let compiled = compile(&g, &sched, &CompileOptions::default()).unwrap();
+        let (compiled, a_list, prior, ys) = rls_feed_setup(&mut rng, sections);
         assert!(compiled.stats.looped.is_some(), "chain must compress");
 
-        let prior = scaled_msg(&mut rng, n, 0.2);
-        let ys: Vec<GaussMessage> =
-            (0..sections).map(|_| scaled_msg(&mut rng, n, 0.1)).collect();
-
-        let mut fgp = Fgp::new(FgpConfig::default());
-        fgp.pm.load(&compiled.program.to_image()).unwrap();
-        let prior_slot = compiled.memmap.preloads[0].1;
-        fgp.msgmem.write_message(prior_slot, &prior);
-        let (_, obs_slot, _) = compiled.memmap.streams[0];
-        let (_, st_slot, _) = compiled.memmap.state_streams[0];
-
-        let ys_feed = ys.clone();
-        let a_feed = a_list.clone();
-        let mut feed = move |section: usize,
-                             mem: &mut MessageMemory,
-                             st: &mut StateMemory|
-              -> bool {
-            if section >= ys_feed.len() {
-                return false;
-            }
-            mem.write_message(obs_slot, &ys_feed[section]);
-            st.write_matrix(st_slot, &a_feed[section]);
-            true
-        };
-        let stats = fgp.run_program(1, &mut feed).unwrap();
+        let (fgp, stats, out_slot) =
+            run_rls_feed(FgpConfig::default(), &compiled, &a_list, &prior, &ys);
         assert_eq!(stats.sections as usize, sections);
 
         // golden chain
@@ -750,7 +810,6 @@ mod tests {
         for (y, a) in ys.iter().zip(&a_list) {
             want = crate::gmp::nodes::compound_observation(&want, y, a, true).unwrap();
         }
-        let out_slot = compiled.memmap.outputs[0].1;
         let got = fgp.msgmem.read_message(out_slot);
         let d = got.dist(&want);
         assert!(d < 0.3, "looped RLS vs golden dist {d}");
@@ -759,6 +818,44 @@ mod tests {
             stats.cycles,
             fgp.config.timing.compound_node_cycles(n) * sections as u64
         );
+    }
+
+    /// PE count is a cycle knob, never semantics: the same streamed RLS
+    /// chain on 1/2/4 PEs produces bit-identical memory contents while
+    /// cycles fold to the multi-PE wave model exactly.
+    #[test]
+    fn multi_pe_outputs_bitwise_identical_cycles_folded() {
+        let mut rng = Rng::new(23);
+        let n = 4;
+        let sections = 6;
+        let (compiled, a_list, prior, ys) = rls_feed_setup(&mut rng, sections);
+
+        let (base_fgp, base_stats, out_slot) =
+            run_rls_feed(FgpConfig::default(), &compiled, &a_list, &prior, &ys);
+        let base_out = base_fgp.msgmem.read(out_slot);
+
+        let mut prev_cycles = base_stats.cycles;
+        for p in [2usize, 4] {
+            let (fgp, stats, slot) =
+                run_rls_feed(FgpConfig::with_pes(p), &compiled, &a_list, &prior, &ys);
+            assert_eq!(slot, out_slot);
+            let out = fgp.msgmem.read(slot);
+            for (a, b) in out.v.iter().zip(&base_out.v) {
+                assert_eq!((a.re.raw, a.im.raw), (b.re.raw, b.im.raw), "P={p} covariance raw");
+            }
+            for (a, b) in out.m.iter().zip(&base_out.m) {
+                assert_eq!((a.re.raw, a.im.raw), (b.re.raw, b.im.raw), "P={p} mean raw");
+            }
+            // cycles: exactly the uniform-wave closed form, and faster
+            // than the previous PE count
+            assert_eq!(
+                stats.cycles,
+                fgp.config.multi_pe.batch_cycles(&fgp.config.timing, n, sections),
+                "P={p} cycles must match the wave model"
+            );
+            assert!(stats.cycles < prev_cycles, "P={p} must not be slower");
+            prev_cycles = stats.cycles;
+        }
     }
 
     #[test]

@@ -18,6 +18,107 @@ pub mod divider;
 
 pub use divider::Radix2Divider;
 
+/// Raw-plane fixed-point primitives shared by the scalar [`Fix`]/[`CFix`]
+/// ops and the data-oriented kernels in `crate::kernels`.
+///
+/// Every arithmetic op in the simulator bottoms out here: the scalar
+/// wrappers and the struct-of-arrays kernels call the *same* functions in
+/// the *same* order, which is what makes the kernel paths bitwise
+/// identical to the interpreted path by construction (pinned by
+/// `rust/tests/property_kernels.rs`).
+pub mod raw {
+    use super::{QFormat, Radix2Divider};
+
+    /// Saturation rails + shift a [`QFormat`] induces on raw values,
+    /// hoisted out of the per-element loops.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub struct Rails {
+        /// Smallest representable raw value.
+        pub min: i64,
+        /// Largest representable raw value.
+        pub max: i64,
+        /// Post-multiply shift (fraction bits).
+        pub frac_bits: u32,
+    }
+
+    impl Rails {
+        /// The rails of a format.
+        pub fn of(fmt: QFormat) -> Rails {
+            Rails { min: fmt.min_raw(), max: fmt.max_raw(), frac_bits: fmt.frac_bits }
+        }
+    }
+
+    /// Clamp to the rails (the saturating output stage).
+    #[inline(always)]
+    pub fn sat(x: i64, r: Rails) -> i64 {
+        x.clamp(r.min, r.max)
+    }
+
+    /// Saturating addition (the PEmult adder).
+    #[inline(always)]
+    pub fn add(a: i64, b: i64, r: Rails) -> i64 {
+        sat(a + b, r)
+    }
+
+    /// Saturating subtraction.
+    #[inline(always)]
+    pub fn sub(a: i64, b: i64, r: Rails) -> i64 {
+        sat(a - b, r)
+    }
+
+    /// Saturating negation.
+    #[inline(always)]
+    pub fn neg(a: i64, r: Rails) -> i64 {
+        sat(-a, r)
+    }
+
+    /// Saturating multiply with round-to-nearest on the discarded bits
+    /// (the PEmult's multiplier + rounding stage).
+    #[inline(always)]
+    pub fn mul(a: i64, b: i64, r: Rails) -> i64 {
+        let prod = a * b;
+        let half = 1i64 << (r.frac_bits - 1);
+        sat((prod + half) >> r.frac_bits, r)
+    }
+
+    /// Division through the sequential radix-2 divider.
+    #[inline(always)]
+    pub fn div(num: i64, den: i64, r: Rails) -> i64 {
+        sat(Radix2Divider::divide_raw(num, den, r.frac_bits), r)
+    }
+
+    /// Complex multiply as the PEmult executes it: 4 real multiplies,
+    /// then `rr - ii` / `ri + ir` on the shared adder.
+    #[inline(always)]
+    pub fn cmul(ar: i64, ai: i64, br: i64, bi: i64, r: Rails) -> (i64, i64) {
+        let rr = mul(ar, br, r);
+        let ii = mul(ai, bi, r);
+        let ri = mul(ar, bi, r);
+        let ir = mul(ai, br, r);
+        (sub(rr, ii, r), add(ri, ir, r))
+    }
+
+    /// Squared magnitude |z|^2 = re^2 + im^2 (PEborder abs mode).
+    #[inline(always)]
+    pub fn cabs2(re: i64, im: i64, r: Rails) -> i64 {
+        add(mul(re, re, r), mul(im, im, r), r)
+    }
+
+    /// Complex division per the paper (Fig. 4): numerator products on the
+    /// multipliers, two sequential real divisions on the single divider.
+    /// A zero denominator saturates both components (hardware behaviour).
+    #[inline(always)]
+    pub fn cdiv(ar: i64, ai: i64, br: i64, bi: i64, r: Rails) -> (i64, i64) {
+        let den = cabs2(br, bi, r);
+        if den == 0 {
+            return (r.max, r.max);
+        }
+        let num_re = add(mul(ar, br, r), mul(ai, bi, r), r);
+        let num_im = sub(mul(ai, br, r), mul(ar, bi, r), r);
+        (div(num_re, den, r), div(num_im, den, r))
+    }
+}
+
 /// Signed fixed-point format: 1 sign bit + `int_bits` + `frac_bits`.
 ///
 /// Total width must fit a 32-bit word (the hardware uses 16-bit datapaths;
@@ -108,19 +209,19 @@ impl Fix {
     }
 
     fn saturate(raw: i64, fmt: QFormat) -> Self {
-        Fix { raw: raw.clamp(fmt.min_raw(), fmt.max_raw()), fmt }
+        Fix { raw: raw::sat(raw, raw::Rails::of(fmt)), fmt }
     }
 
     /// Saturating addition (the PEmult adder).
     pub fn add(self, rhs: Fix) -> Fix {
         debug_assert_eq!(self.fmt, rhs.fmt);
-        Fix::saturate(self.raw + rhs.raw, self.fmt)
+        Fix { raw: raw::add(self.raw, rhs.raw, raw::Rails::of(self.fmt)), fmt: self.fmt }
     }
 
     /// Saturating subtraction.
     pub fn sub(self, rhs: Fix) -> Fix {
         debug_assert_eq!(self.fmt, rhs.fmt);
-        Fix::saturate(self.raw - rhs.raw, self.fmt)
+        Fix { raw: raw::sub(self.raw, rhs.raw, raw::Rails::of(self.fmt)), fmt: self.fmt }
     }
 
     /// Saturating multiply with round-to-nearest on the discarded bits
@@ -131,15 +232,12 @@ impl Fix {
     /// the simulator's hottest path.
     pub fn mul(self, rhs: Fix) -> Fix {
         debug_assert_eq!(self.fmt, rhs.fmt);
-        let prod = self.raw * rhs.raw;
-        let half = 1i64 << (self.fmt.frac_bits - 1);
-        let rounded = (prod + half) >> self.fmt.frac_bits;
-        Fix::saturate(rounded, self.fmt)
+        Fix { raw: raw::mul(self.raw, rhs.raw, raw::Rails::of(self.fmt)), fmt: self.fmt }
     }
 
     /// Saturating negation.
     pub fn neg(self) -> Fix {
-        Fix::saturate(-self.raw, self.fmt)
+        Fix { raw: raw::neg(self.raw, raw::Rails::of(self.fmt)), fmt: self.fmt }
     }
 
     /// Saturating absolute value.
@@ -156,8 +254,7 @@ impl Fix {
     /// Returns the quotient; the cycle cost is the divider's latency.
     pub fn div(self, rhs: Fix) -> Fix {
         debug_assert_eq!(self.fmt, rhs.fmt);
-        let q = Radix2Divider::divide_raw(self.raw, rhs.raw, self.fmt.frac_bits);
-        Fix::saturate(q, self.fmt)
+        Fix { raw: raw::div(self.raw, rhs.raw, raw::Rails::of(self.fmt)), fmt: self.fmt }
     }
 }
 
@@ -219,31 +316,27 @@ impl CFix {
     /// Complex multiply as the PEmult executes it: 4 real multiplies and
     /// 2 adds on one multiplier/adder pair over [`CFix::MUL_CYCLES`] cycles.
     pub fn mul(self, rhs: CFix) -> CFix {
-        let rr = self.re.mul(rhs.re);
-        let ii = self.im.mul(rhs.im);
-        let ri = self.re.mul(rhs.im);
-        let ir = self.im.mul(rhs.re);
-        CFix { re: rr.sub(ii), im: ri.add(ir) }
+        let fmt = self.re.fmt;
+        let (re, im) =
+            raw::cmul(self.re.raw, self.im.raw, rhs.re.raw, rhs.im.raw, raw::Rails::of(fmt));
+        CFix { re: Fix { raw: re, fmt }, im: Fix { raw: im, fmt } }
     }
 
     /// Squared magnitude |z|^2 = re^2 + im^2 (PEborder abs mode).
     pub fn abs2(self) -> Fix {
-        self.re.mul(self.re).add(self.im.mul(self.im))
+        let fmt = self.re.fmt;
+        Fix { raw: raw::cabs2(self.re.raw, self.im.raw, raw::Rails::of(fmt)), fmt }
     }
 
     /// Complex division per the paper (Fig. 4):
     /// (a+bi)/(c+di) = (ac+bd)/(c^2+d^2) + i (bc-ad)/(c^2+d^2),
     /// using one sequential divider (twice), two multipliers, one adder.
+    /// A zero denominator saturates both components (hardware behaviour).
     pub fn div(self, rhs: CFix) -> CFix {
-        let den = rhs.abs2();
-        if den.is_zero() {
-            // Hardware saturates on divide-by-zero; mirror that.
-            let sat = Fix::saturate_max(self.re.fmt);
-            return CFix { re: sat, im: sat };
-        }
-        let num_re = self.re.mul(rhs.re).add(self.im.mul(rhs.im));
-        let num_im = self.im.mul(rhs.re).sub(self.re.mul(rhs.im));
-        CFix { re: num_re.div(den), im: num_im.div(den) }
+        let fmt = self.re.fmt;
+        let (re, im) =
+            raw::cdiv(self.re.raw, self.im.raw, rhs.re.raw, rhs.im.raw, raw::Rails::of(fmt));
+        CFix { re: Fix { raw: re, fmt }, im: Fix { raw: im, fmt } }
     }
 
     /// True when both components are exactly zero.
@@ -253,12 +346,6 @@ impl CFix {
 
     /// Cycles for one complex multiply on a PEmult (paper Fig. 3).
     pub const MUL_CYCLES: u64 = 4;
-}
-
-impl Fix {
-    fn saturate_max(fmt: QFormat) -> Fix {
-        Fix { raw: fmt.max_raw(), fmt }
-    }
 }
 
 #[cfg(test)]
@@ -359,6 +446,37 @@ mod tests {
         let c = x.conj();
         assert_close(c.re.to_f64(), 1.5, 1e-9);
         assert_close(c.im.to_f64(), 2.5, 1e-9);
+    }
+
+    #[test]
+    fn raw_plane_ops_match_scalar_wrappers_bitwise() {
+        // The SoA kernels compute on raw planes via `raw::*`; the scalar
+        // wrappers must be the same functions (single source of truth).
+        proptest_cases(2000, |rng| {
+            let r = raw::Rails::of(FMT);
+            // bias toward the rails so saturation paths are exercised
+            let pick = |rng: &mut crate::testutil::Rng| -> i64 {
+                match rng.below(4) {
+                    0 => FMT.max_raw() - (rng.next_u64() % 3) as i64,
+                    1 => FMT.min_raw() + (rng.next_u64() % 3) as i64,
+                    _ => (rng.next_u64() % (2 * FMT.max_raw() as u64 + 1)) as i64 + FMT.min_raw(),
+                }
+            };
+            let (a, b, c, d) = (pick(rng), pick(rng), pick(rng), pick(rng));
+            let fa = Fix { raw: a, fmt: FMT };
+            let fb = Fix { raw: b, fmt: FMT };
+            assert_eq!(fa.add(fb).raw, raw::add(a, b, r));
+            assert_eq!(fa.sub(fb).raw, raw::sub(a, b, r));
+            assert_eq!(fa.mul(fb).raw, raw::mul(a, b, r));
+            assert_eq!(fa.neg().raw, raw::neg(a, r));
+            let x = CFix { re: fa, im: fb };
+            let y = CFix { re: Fix { raw: c, fmt: FMT }, im: Fix { raw: d, fmt: FMT } };
+            let z = x.mul(y);
+            assert_eq!((z.re.raw, z.im.raw), raw::cmul(a, b, c, d, r));
+            assert_eq!(x.abs2().raw, raw::cabs2(a, b, r));
+            let q = x.div(y);
+            assert_eq!((q.re.raw, q.im.raw), raw::cdiv(a, b, c, d, r));
+        });
     }
 
     #[test]

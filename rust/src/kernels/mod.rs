@@ -1,0 +1,685 @@
+//! Data-oriented message kernels: SoA planes + shape-monomorphized updates.
+//!
+//! The interpreted datapath of PRs 1–8 walked arrays of [`CFix`] — 48-byte
+//! elements carrying a [`QFormat`] per component — so the compound-node
+//! inner loops were bound on memory shuffling, not arithmetic. This module
+//! is the layout layer underneath the simulator's hot paths:
+//!
+//! * [`CPlanes`] / [`PlaneRef`] — struct-of-arrays storage: one contiguous
+//!   `i64` plane per complex component. 8 bytes per lane per plane, planes
+//!   `memcpy`-able, inner loops autovectorizable.
+//! * Shape-specialized kernels — every update kernel has one
+//!   `#[inline(always)]` body parameterized on the runtime dimension, plus
+//!   monomorphized instantiations for n ∈ {2, 4, 8} (the paper's n = 4 and
+//!   its power-of-two neighbours) selected by [`mat_mul`]/[`mat_vec`]/
+//!   [`faddeev`]. Monomorphization turns the dimension into a compile-time
+//!   constant so LLVM unrolls and vectorizes; the *arithmetic* is the
+//!   single shared body either way.
+//! * [`CnBatch`] / [`cn_update_batch`] — the fused compound-node batch
+//!   entry: lanes stored SoA across the batch, tail-padded to a multiple
+//!   of [`CN_BATCH_BLOCK`], each lane executing the exact five-instruction
+//!   section sequence the compiler emits (see `compiler::lower`).
+//!
+//! # Bitwise-conformance contract
+//!
+//! Layout is a performance knob, never semantics. Every kernel bottoms out
+//! in [`crate::fixed::raw`] — the same saturating/rounding scalar
+//! primitives, called in the same order, as the interpreted [`Fix`]/
+//! [`CFix`] path. Kernel outputs are therefore bit-identical to the seed
+//! AoS path by construction; `rust/tests/property_kernels.rs` pins this
+//! differentially across dimensions, Q-formats, and saturation fixtures.
+
+use crate::fixed::raw::{self, Rails};
+use crate::fixed::{CFix, Fix, QFormat};
+
+/// Owned SoA complex buffer: separate contiguous re/im raw planes.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CPlanes {
+    /// Real raw plane.
+    pub re: Vec<i64>,
+    /// Imaginary raw plane.
+    pub im: Vec<i64>,
+}
+
+impl CPlanes {
+    /// A zeroed buffer of `len` complex lanes.
+    pub fn zeroed(len: usize) -> Self {
+        CPlanes { re: vec![0; len], im: vec![0; len] }
+    }
+
+    /// Number of complex lanes.
+    pub fn len(&self) -> usize {
+        self.re.len()
+    }
+
+    /// True when the buffer holds no lanes.
+    pub fn is_empty(&self) -> bool {
+        self.re.is_empty()
+    }
+
+    /// Zero every lane, keeping capacity.
+    pub fn fill_zero(&mut self) {
+        self.re.fill(0);
+        self.im.fill(0);
+    }
+
+    /// Resize to `len` lanes, zero-filling new ones.
+    pub fn resize_zeroed(&mut self, len: usize) {
+        self.re.resize(len, 0);
+        self.im.resize(len, 0);
+    }
+
+    /// Replace contents with a copy of `src` (two plane memcpys).
+    pub fn copy_from(&mut self, src: PlaneRef) {
+        self.re.clear();
+        self.re.extend_from_slice(src.re);
+        self.im.clear();
+        self.im.extend_from_slice(src.im);
+    }
+
+    /// Gather an AoS slice into fresh planes.
+    pub fn from_cfix(src: &[CFix]) -> Self {
+        CPlanes {
+            re: src.iter().map(|z| z.re.raw).collect(),
+            im: src.iter().map(|z| z.im.raw).collect(),
+        }
+    }
+
+    /// Scatter back to the AoS encoding (a materialized view; the hot
+    /// paths stay on the planes).
+    pub fn to_cfix(&self, fmt: QFormat) -> Vec<CFix> {
+        self.re
+            .iter()
+            .zip(&self.im)
+            .map(|(&re, &im)| CFix { re: Fix { raw: re, fmt }, im: Fix { raw: im, fmt } })
+            .collect()
+    }
+
+    /// One lane as a scalar.
+    pub fn get(&self, i: usize, fmt: QFormat) -> CFix {
+        CFix { re: Fix { raw: self.re[i], fmt }, im: Fix { raw: self.im[i], fmt } }
+    }
+
+    /// Borrow the planes.
+    pub fn as_ref(&self) -> PlaneRef<'_> {
+        PlaneRef { re: &self.re, im: &self.im }
+    }
+
+    /// Borrow a sub-range of lanes.
+    pub fn slice(&self, range: std::ops::Range<usize>) -> PlaneRef<'_> {
+        PlaneRef { re: &self.re[range.clone()], im: &self.im[range] }
+    }
+}
+
+/// Borrowed SoA complex view (the kernel operand type).
+#[derive(Clone, Copy, Debug)]
+pub struct PlaneRef<'a> {
+    /// Real raw plane.
+    pub re: &'a [i64],
+    /// Imaginary raw plane.
+    pub im: &'a [i64],
+}
+
+impl<'a> PlaneRef<'a> {
+    /// A view over two equal-length raw planes.
+    pub fn new(re: &'a [i64], im: &'a [i64]) -> Self {
+        debug_assert_eq!(re.len(), im.len());
+        PlaneRef { re, im }
+    }
+
+    /// Number of complex lanes.
+    pub fn len(&self) -> usize {
+        self.re.len()
+    }
+
+    /// True when the view holds no lanes.
+    pub fn is_empty(&self) -> bool {
+        self.re.is_empty()
+    }
+
+    /// Materialize the AoS encoding of this view.
+    pub fn to_cfix(&self, fmt: QFormat) -> Vec<CFix> {
+        self.re
+            .iter()
+            .zip(self.im)
+            .map(|(&re, &im)| CFix { re: Fix { raw: re, fmt }, im: Fix { raw: im, fmt } })
+            .collect()
+    }
+}
+
+/// Which kernel instantiation serves dimension `n` (reported by the
+/// throughput bench and the examples).
+pub fn kernel_path(n: usize) -> &'static str {
+    match n {
+        2 => "soa-mono-n2",
+        4 => "soa-mono-n4",
+        8 => "soa-mono-n8",
+        _ => "soa-generic",
+    }
+}
+
+/// Read operand element (i, k) through the Transpose unit when `herm`
+/// (Hermitian transpose: swap indices, negate im with saturation —
+/// exactly [`CFix::conj`]).
+#[inline(always)]
+fn op_elem(op: PlaneRef, n: usize, i: usize, k: usize, herm: bool, r: Rails) -> (i64, i64) {
+    if herm {
+        let idx = k * n + i;
+        (op.re[idx], raw::neg(op.im[idx], r))
+    } else {
+        let idx = i * n + k;
+        (op.re[idx], op.im[idx])
+    }
+}
+
+/// The one matrix-product body (`mma`/`mms`, matrix side).
+///
+/// `addend = None` is `mma`: out = (∓) A·B, `neg` negating the summed
+/// product. `addend = Some(c)` is `mms`: out = (∓c) + A·B, `neg` negating
+/// the addend — the op-order contract of `SystolicArray::{mma,mms}_matrix`.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn mat_mul_body(
+    n: usize,
+    r: Rails,
+    a: PlaneRef,
+    a_herm: bool,
+    b: PlaneRef,
+    b_herm: bool,
+    addend: Option<PlaneRef>,
+    neg: bool,
+    out: &mut CPlanes,
+) {
+    out.resize_zeroed(n * n);
+    for i in 0..n {
+        for j in 0..n {
+            let (mut acc_re, mut acc_im) = match addend {
+                Some(c) => {
+                    let (cr, ci) = (c.re[i * n + j], c.im[i * n + j]);
+                    if neg {
+                        (raw::neg(cr, r), raw::neg(ci, r))
+                    } else {
+                        (cr, ci)
+                    }
+                }
+                None => (0, 0),
+            };
+            for k in 0..n {
+                let (ar, ai) = op_elem(a, n, i, k, a_herm, r);
+                let (br, bi) = op_elem(b, n, k, j, b_herm, r);
+                let (pr, pi) = raw::cmul(ar, ai, br, bi, r);
+                acc_re = raw::add(acc_re, pr, r);
+                acc_im = raw::add(acc_im, pi, r);
+            }
+            if addend.is_none() && neg {
+                acc_re = raw::neg(acc_re, r);
+                acc_im = raw::neg(acc_im, r);
+            }
+            out.re[i * n + j] = acc_re;
+            out.im[i * n + j] = acc_im;
+        }
+    }
+}
+
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn mat_mul_mono<const N: usize>(
+    r: Rails,
+    a: PlaneRef,
+    a_herm: bool,
+    b: PlaneRef,
+    b_herm: bool,
+    addend: Option<PlaneRef>,
+    neg: bool,
+    out: &mut CPlanes,
+) {
+    mat_mul_body(N, r, a, a_herm, b, b_herm, addend, neg, out)
+}
+
+/// Matrix `mma`/`mms` kernel with shape dispatch (see [`kernel_path`]).
+#[allow(clippy::too_many_arguments)]
+pub fn mat_mul(
+    n: usize,
+    r: Rails,
+    a: PlaneRef,
+    a_herm: bool,
+    b: PlaneRef,
+    b_herm: bool,
+    addend: Option<PlaneRef>,
+    neg: bool,
+    out: &mut CPlanes,
+) {
+    match n {
+        2 => mat_mul_mono::<2>(r, a, a_herm, b, b_herm, addend, neg, out),
+        4 => mat_mul_mono::<4>(r, a, a_herm, b, b_herm, addend, neg, out),
+        8 => mat_mul_mono::<8>(r, a, a_herm, b, b_herm, addend, neg, out),
+        _ => mat_mul_body(n, r, a, a_herm, b, b_herm, addend, neg, out),
+    }
+}
+
+/// The one mean-pipeline body (`mma`/`mms`, vector side); same
+/// addend/neg contract as [`mat_mul_body`].
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn mat_vec_body(
+    n: usize,
+    r: Rails,
+    a: PlaneRef,
+    a_herm: bool,
+    v: PlaneRef,
+    addend: Option<PlaneRef>,
+    neg: bool,
+    out: &mut CPlanes,
+) {
+    out.resize_zeroed(n);
+    for i in 0..n {
+        let (mut acc_re, mut acc_im) = match addend {
+            Some(c) => {
+                let (cr, ci) = (c.re[i], c.im[i]);
+                if neg {
+                    (raw::neg(cr, r), raw::neg(ci, r))
+                } else {
+                    (cr, ci)
+                }
+            }
+            None => (0, 0),
+        };
+        for k in 0..n {
+            let (ar, ai) = op_elem(a, n, i, k, a_herm, r);
+            let (pr, pi) = raw::cmul(ar, ai, v.re[k], v.im[k], r);
+            acc_re = raw::add(acc_re, pr, r);
+            acc_im = raw::add(acc_im, pi, r);
+        }
+        if addend.is_none() && neg {
+            acc_re = raw::neg(acc_re, r);
+            acc_im = raw::neg(acc_im, r);
+        }
+        out.re[i] = acc_re;
+        out.im[i] = acc_im;
+    }
+}
+
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn mat_vec_mono<const N: usize>(
+    r: Rails,
+    a: PlaneRef,
+    a_herm: bool,
+    v: PlaneRef,
+    addend: Option<PlaneRef>,
+    neg: bool,
+    out: &mut CPlanes,
+) {
+    mat_vec_body(N, r, a, a_herm, v, addend, neg, out)
+}
+
+/// Mean-pipeline `mma`/`mms` kernel with shape dispatch.
+#[allow(clippy::too_many_arguments)]
+pub fn mat_vec(
+    n: usize,
+    r: Rails,
+    a: PlaneRef,
+    a_herm: bool,
+    v: PlaneRef,
+    addend: Option<PlaneRef>,
+    neg: bool,
+    out: &mut CPlanes,
+) {
+    match n {
+        2 => mat_vec_mono::<2>(r, a, a_herm, v, addend, neg, out),
+        4 => mat_vec_mono::<4>(r, a, a_herm, v, addend, neg, out),
+        8 => mat_vec_mono::<8>(r, a, a_herm, v, addend, neg, out),
+        _ => mat_vec_body(n, r, a, a_herm, v, addend, neg, out),
+    }
+}
+
+/// The one Faddeev body: triangularize the G columns of the doubled
+/// working set with partial pivoting among the G rows, eliminating all
+/// rows below each pivot; the Schur complement lands in `mat_out`, the
+/// mean column in `vec_out`. Identical op order to
+/// `SystolicArray::faddeev` (pivot compare on saturated |.|², skip on
+/// exactly-zero lead, divide-then-multiply-subtract row updates).
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn faddeev_body(
+    n: usize,
+    r: Rails,
+    g: PlaneRef,
+    b: PlaneRef,
+    b_herm: bool,
+    c: PlaneRef,
+    d: PlaneRef,
+    y: PlaneRef,
+    x: PlaneRef,
+    w: &mut CPlanes,
+    mat_out: &mut CPlanes,
+    vec_out: &mut CPlanes,
+) {
+    let rows = 2 * n;
+    let cols = 2 * n + 1;
+    w.resize_zeroed(rows * cols);
+    for i in 0..n {
+        for j in 0..n {
+            w.re[i * cols + j] = g.re[i * n + j];
+            w.im[i * cols + j] = g.im[i * n + j];
+            let (br, bi) = op_elem(b, n, i, j, b_herm, r);
+            w.re[i * cols + n + j] = br;
+            w.im[i * cols + n + j] = bi;
+            w.re[(n + i) * cols + j] = c.re[i * n + j];
+            w.im[(n + i) * cols + j] = c.im[i * n + j];
+            w.re[(n + i) * cols + n + j] = d.re[i * n + j];
+            w.im[(n + i) * cols + n + j] = d.im[i * n + j];
+        }
+        w.re[i * cols + 2 * n] = y.re[i];
+        w.im[i * cols + 2 * n] = y.im[i];
+        w.re[(n + i) * cols + 2 * n] = x.re[i];
+        w.im[(n + i) * cols + 2 * n] = x.im[i];
+    }
+
+    for k in 0..n {
+        // PEborder pivot search: max |.|^2 among remaining G rows.
+        let mut piv = k;
+        let mut pmax = raw::cabs2(w.re[k * cols + k], w.im[k * cols + k], r);
+        for i in k + 1..n {
+            let v = raw::cabs2(w.re[i * cols + k], w.im[i * cols + k], r);
+            if v > pmax {
+                piv = i;
+                pmax = v;
+            }
+        }
+        if piv != k {
+            // PEmult swap mode: exchange the two rows.
+            for j in 0..cols {
+                w.re.swap(k * cols + j, piv * cols + j);
+                w.im.swap(k * cols + j, piv * cols + j);
+            }
+        }
+        let (pr, pi) = (w.re[k * cols + k], w.im[k * cols + k]);
+        // Eliminate every row below the pivot (including the D rows).
+        for i in k + 1..rows {
+            let (lr, li) = (w.re[i * cols + k], w.im[i * cols + k]);
+            if lr == 0 && li == 0 {
+                continue;
+            }
+            let (fr, fi) = raw::cdiv(lr, li, pr, pi, r); // PEborder division
+            for j in k..cols {
+                let (sr, si) = raw::cmul(fr, fi, w.re[k * cols + j], w.im[k * cols + j], r);
+                w.re[i * cols + j] = raw::sub(w.re[i * cols + j], sr, r);
+                w.im[i * cols + j] = raw::sub(w.im[i * cols + j], si, r);
+            }
+        }
+    }
+
+    mat_out.resize_zeroed(n * n);
+    vec_out.resize_zeroed(n);
+    for i in 0..n {
+        for j in 0..n {
+            mat_out.re[i * n + j] = w.re[(n + i) * cols + n + j];
+            mat_out.im[i * n + j] = w.im[(n + i) * cols + n + j];
+        }
+        vec_out.re[i] = w.re[(n + i) * cols + 2 * n];
+        vec_out.im[i] = w.im[(n + i) * cols + 2 * n];
+    }
+}
+
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn faddeev_mono<const N: usize>(
+    r: Rails,
+    g: PlaneRef,
+    b: PlaneRef,
+    b_herm: bool,
+    c: PlaneRef,
+    d: PlaneRef,
+    y: PlaneRef,
+    x: PlaneRef,
+    w: &mut CPlanes,
+    mat_out: &mut CPlanes,
+    vec_out: &mut CPlanes,
+) {
+    faddeev_body(N, r, g, b, b_herm, c, d, y, x, w, mat_out, vec_out)
+}
+
+/// Faddeev kernel with shape dispatch.
+#[allow(clippy::too_many_arguments)]
+pub fn faddeev(
+    n: usize,
+    r: Rails,
+    g: PlaneRef,
+    b: PlaneRef,
+    b_herm: bool,
+    c: PlaneRef,
+    d: PlaneRef,
+    y: PlaneRef,
+    x: PlaneRef,
+    w: &mut CPlanes,
+    mat_out: &mut CPlanes,
+    vec_out: &mut CPlanes,
+) {
+    match n {
+        2 => faddeev_mono::<2>(r, g, b, b_herm, c, d, y, x, w, mat_out, vec_out),
+        4 => faddeev_mono::<4>(r, g, b, b_herm, c, d, y, x, w, mat_out, vec_out),
+        8 => faddeev_mono::<8>(r, g, b, b_herm, c, d, y, x, w, mat_out, vec_out),
+        _ => faddeev_body(n, r, g, b, b_herm, c, d, y, x, w, mat_out, vec_out),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fused compound-node batch entry
+// ---------------------------------------------------------------------
+
+/// Lanes per batch block: batches are tail-padded to a multiple of this
+/// so the lane loop is uniform (pad lanes replicate the last real lane;
+/// their outputs are discarded by the caller reading only `len` lanes).
+pub const CN_BATCH_BLOCK: usize = 4;
+
+/// A batch of compound-node requests in SoA form: one plane pair per
+/// operand (`V_X`, `m_X`, `V_Y`, `m_Y`, `A`), lanes contiguous across the
+/// batch. Built once per coalescer tick and reused.
+#[derive(Clone, Debug, Default)]
+pub struct CnBatch {
+    /// Message dimension.
+    pub n: usize,
+    /// Real (unpadded) request count.
+    pub len: usize,
+    vx: CPlanes,
+    mx: CPlanes,
+    vy: CPlanes,
+    my: CPlanes,
+    a: CPlanes,
+}
+
+impl CnBatch {
+    /// An empty batch for dimension `n`.
+    pub fn new(n: usize) -> Self {
+        CnBatch { n, len: 0, ..Default::default() }
+    }
+
+    /// Lane count including tail padding.
+    pub fn padded_len(&self) -> usize {
+        self.len.div_ceil(CN_BATCH_BLOCK) * CN_BATCH_BLOCK
+    }
+
+    /// Drop all lanes, keeping capacity.
+    pub fn clear(&mut self) {
+        self.len = 0;
+        for p in [&mut self.vx, &mut self.mx, &mut self.vy, &mut self.my, &mut self.a] {
+            p.re.clear();
+            p.im.clear();
+        }
+    }
+
+    /// Append one quantized request (AoS slices, e.g. from
+    /// `MsgSlot::from_message`).
+    pub fn push(&mut self, vx: &[CFix], mx: &[CFix], vy: &[CFix], my: &[CFix], a: &[CFix]) {
+        let n = self.n;
+        assert_eq!(vx.len(), n * n);
+        assert_eq!(mx.len(), n);
+        assert_eq!(vy.len(), n * n);
+        assert_eq!(my.len(), n);
+        assert_eq!(a.len(), n * n);
+        for (plane, src) in [
+            (&mut self.vx, vx),
+            (&mut self.mx, mx),
+            (&mut self.vy, vy),
+            (&mut self.my, my),
+            (&mut self.a, a),
+        ] {
+            plane.re.extend(src.iter().map(|z| z.re.raw));
+            plane.im.extend(src.iter().map(|z| z.im.raw));
+        }
+        self.len += 1;
+    }
+
+    fn lane_mat(plane: &CPlanes, n: usize, lane: usize) -> PlaneRef<'_> {
+        PlaneRef {
+            re: &plane.re[lane * n * n..(lane + 1) * n * n],
+            im: &plane.im[lane * n * n..(lane + 1) * n * n],
+        }
+    }
+
+    fn lane_vec(plane: &CPlanes, n: usize, lane: usize) -> PlaneRef<'_> {
+        PlaneRef { re: &plane.re[lane * n..(lane + 1) * n], im: &plane.im[lane * n..(lane + 1) * n] }
+    }
+}
+
+/// Reusable per-batch scratch (the five architectural planes + Faddeev
+/// working set) so steady-state batching allocates nothing.
+#[derive(Clone, Debug, Default)]
+pub struct CnScratch {
+    accum: CPlanes,
+    shift: CPlanes,
+    vshift: CPlanes,
+    w: CPlanes,
+    fmat: CPlanes,
+    fvec: CPlanes,
+}
+
+/// Execute every lane of `batch` through the compiled compound-node
+/// section sequence (`compiler::lower::lower_compound_observation`):
+///
+/// 1. `mma`  — accum  = V_X · Aᴴ            (T1)
+/// 2. `mms`  — shift  = V_Y + A · accum     (G)
+/// 3. `mms v`— vshift = −m_Y + A · m_X      (negated innovation)
+/// 4. `fad`  — Faddeev over [[G, T1ᴴ | r], [T1, V_X | m_X]]
+/// 5. store  — posterior (V_Z, m_Z) into the output planes
+///
+/// The same five kernel calls the processor's FSM issues per section, so
+/// each lane's output is bit-identical to dispatching that request
+/// through the interpreted program path. Outputs are written SoA at the
+/// same lane offsets; pad lanes (if the caller padded) fall out of the
+/// uniform loop and are simply never read back.
+pub fn cn_update_batch(
+    fmt: QFormat,
+    batch: &CnBatch,
+    out_v: &mut CPlanes,
+    out_m: &mut CPlanes,
+    scratch: &mut CnScratch,
+) {
+    let n = batch.n;
+    let r = Rails::of(fmt);
+    if batch.len == 0 {
+        out_v.resize_zeroed(0);
+        out_m.resize_zeroed(0);
+        return;
+    }
+    out_v.resize_zeroed(batch.len * n * n);
+    out_m.resize_zeroed(batch.len * n);
+    // The lane loop runs over the block-padded trip count: tail lanes
+    // replicate the last real request so every block is full-width, and
+    // their stores are skipped (outputs sized to the real length).
+    for lane in 0..batch.padded_len() {
+        let src = lane.min(batch.len - 1);
+        let vx = CnBatch::lane_mat(&batch.vx, n, src);
+        let mx = CnBatch::lane_vec(&batch.mx, n, src);
+        let vy = CnBatch::lane_mat(&batch.vy, n, src);
+        let my = CnBatch::lane_vec(&batch.my, n, src);
+        let a = CnBatch::lane_mat(&batch.a, n, src);
+        // 1: accum = V_X * A^H
+        mat_mul(n, r, vx, false, a, true, None, false, &mut scratch.accum);
+        // 2: shift = V_Y + A * accum
+        mat_mul(n, r, a, false, scratch.accum.as_ref(), false, Some(vy), false, &mut scratch.shift);
+        // 3: vshift = -m_Y + A * m_X
+        mat_vec(n, r, a, false, mx, Some(my), true, &mut scratch.vshift);
+        // 4: fad over [[shift, accum^H | vshift], [accum, V_X | m_X]]
+        faddeev(
+            n,
+            r,
+            scratch.shift.as_ref(),
+            scratch.accum.as_ref(),
+            true,
+            scratch.accum.as_ref(),
+            vx,
+            scratch.vshift.as_ref(),
+            mx,
+            &mut scratch.w,
+            &mut scratch.fmat,
+            &mut scratch.fvec,
+        );
+        // 5: store the posterior planes at this lane's offsets
+        out_v.re[lane * n * n..(lane + 1) * n * n].copy_from_slice(&scratch.fmat.re);
+        out_v.im[lane * n * n..(lane + 1) * n * n].copy_from_slice(&scratch.fmat.im);
+        out_m.re[lane * n..(lane + 1) * n].copy_from_slice(&scratch.fvec.re);
+        out_m.im[lane * n..(lane + 1) * n].copy_from_slice(&scratch.fvec.im);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{proptest_cases, Rng};
+
+    const FMT: QFormat = QFormat::q5_10();
+
+    fn random_planes(rng: &mut Rng, len: usize) -> CPlanes {
+        let span = 2 * FMT.max_raw() as u64 + 1;
+        CPlanes {
+            re: (0..len).map(|_| (rng.next_u64() % span) as i64 + FMT.min_raw()).collect(),
+            im: (0..len).map(|_| (rng.next_u64() % span) as i64 + FMT.min_raw()).collect(),
+        }
+    }
+
+    #[test]
+    fn planes_roundtrip_cfix_bitwise() {
+        proptest_cases(50, |rng| {
+            let p = random_planes(rng, 16);
+            let aos = p.to_cfix(FMT);
+            let back = CPlanes::from_cfix(&aos);
+            assert_eq!(p, back);
+        });
+    }
+
+    /// The monomorphized instantiations and the generic body must be the
+    /// same arithmetic — pin it on the dispatch boundary dims.
+    #[test]
+    fn mono_matches_generic_bitwise() {
+        proptest_cases(40, |rng| {
+            for n in [2usize, 4, 8] {
+                let r = Rails::of(FMT);
+                let a = random_planes(rng, n * n);
+                let b = random_planes(rng, n * n);
+                let c = random_planes(rng, n * n);
+                let mut out_mono = CPlanes::default();
+                let mut out_gen = CPlanes::default();
+                mat_mul(n, r, a.as_ref(), false, b.as_ref(), true, Some(c.as_ref()), true, &mut out_mono);
+                mat_mul_body(n, r, a.as_ref(), false, b.as_ref(), true, Some(c.as_ref()), true, &mut out_gen);
+                assert_eq!(out_mono, out_gen, "n={n}");
+            }
+        });
+    }
+
+    #[test]
+    fn cn_batch_pads_to_block_multiple() {
+        let mut batch = CnBatch::new(2);
+        assert_eq!(batch.padded_len(), 0);
+        let z = vec![CFix::zero(FMT); 4];
+        let zv = vec![CFix::zero(FMT); 2];
+        for want in [4, 4, 4, 4, 8] {
+            batch.push(&z, &zv, &z, &zv, &z);
+            assert_eq!(batch.padded_len(), want);
+            assert_eq!(batch.padded_len() % CN_BATCH_BLOCK, 0);
+        }
+        batch.clear();
+        assert_eq!((batch.len, batch.padded_len()), (0, 0));
+    }
+}

@@ -90,6 +90,7 @@ pub mod fgp;
 pub mod gbp;
 pub mod gmp;
 pub mod isa;
+pub mod kernels;
 pub mod model;
 pub mod nonlinear;
 pub mod obs;

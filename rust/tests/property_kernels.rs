@@ -1,0 +1,481 @@
+//! Differential kernel-conformance suite (PR 9).
+//!
+//! The SoA layout, the shape-monomorphized kernels, and the multi-PE
+//! cycle model are performance knobs — never semantics. This suite pins
+//! that contract differentially:
+//!
+//! * SoA slot banks round-trip the seed AoS [`MsgSlot`] encoding bitwise
+//!   across dimensions 2–8 and Q-formats, including saturation fixtures;
+//! * every shape-specialized kernel is bitwise-equal to an *interpreted*
+//!   per-element reference written in scalar [`CFix`] arithmetic (the
+//!   seed path), on random full-rail fixed-point inputs;
+//! * the fused [`kernels::cn_update_batch`] entry is bitwise-equal to
+//!   dispatching each request through the cycle-accurate program path;
+//! * `CMatrix::schur_direct` and `CMatrix::schur_faddeev` agree
+//!   (tolerance-bounded) on random PSD inputs across dimensions 2–8;
+//! * PE count changes cycles, never values: a multi-PE device produces
+//!   bitwise-identical messages.
+
+use fgp_repro::coordinator::{Backend, CnRequestData, FgpSimBackend};
+use fgp_repro::fgp::{FgpConfig, MessageMemory, MsgSlot, SlotBank};
+use fgp_repro::fixed::raw::{self, Rails};
+use fgp_repro::fixed::{CFix, Fix, QFormat};
+use fgp_repro::gmp::matrix::{c64, CMatrix};
+use fgp_repro::gmp::message::GaussMessage;
+use fgp_repro::kernels::{self, CnBatch, CnScratch, CPlanes};
+use fgp_repro::testutil::{proptest_cases, Rng};
+
+/// Formats exercised by the layout round-trip: the paper's Q5.10, a wide
+/// format, and a deliberately narrow one (saturation-heavy).
+const FORMATS: [QFormat; 3] =
+    [QFormat::q5_10(), QFormat::new(8, 20), QFormat::new(2, 6)];
+
+/// A random raw anywhere on the format's rails (both ends inclusive), so
+/// downstream arithmetic regularly saturates.
+fn random_raw(rng: &mut Rng, fmt: QFormat) -> i64 {
+    let span = (fmt.max_raw() - fmt.min_raw() + 1) as u64;
+    (rng.next_u64() % span) as i64 + fmt.min_raw()
+}
+
+fn random_cfix(rng: &mut Rng, fmt: QFormat, len: usize) -> Vec<CFix> {
+    (0..len)
+        .map(|_| CFix {
+            re: Fix { raw: random_raw(rng, fmt), fmt },
+            im: Fix { raw: random_raw(rng, fmt), fmt },
+        })
+        .collect()
+}
+
+fn raws(v: &[CFix]) -> Vec<(i64, i64)> {
+    v.iter().map(|z| (z.re.raw, z.im.raw)).collect()
+}
+
+// ---------------------------------------------------------------------
+// Layout: SoA banks vs seed AoS slots
+// ---------------------------------------------------------------------
+
+#[test]
+fn slot_bank_roundtrips_aos_bitwise_across_dims_and_formats() {
+    proptest_cases(20, |rng| {
+        for fmt in FORMATS {
+            for n in 2..=8usize {
+                let aos = random_cfix(rng, fmt, n * n);
+                let mut bank = SlotBank::new(n * n, fmt, 3);
+                bank.write_cfix(2, &aos);
+                // AoS readback is bit-identical ...
+                assert_eq!(raws(&bank.read_cfix(2)), raws(&aos), "n={n}");
+                // ... and the plane view exposes exactly the same raws.
+                let p = bank.planes(2);
+                for (i, z) in aos.iter().enumerate() {
+                    assert_eq!((p.re[i], p.im[i]), (z.re.raw, z.im.raw));
+                }
+                // untouched neighbour slots stay zero (no stride bleed)
+                assert!(bank.planes(1).re.iter().all(|&x| x == 0));
+            }
+        }
+    });
+}
+
+/// Quantizing a message through the planar [`MessageMemory`] write path
+/// must equal quantizing through the seed AoS [`MsgSlot`] encoder —
+/// including values far outside the format's range (rail saturation).
+#[test]
+fn message_memory_quantization_matches_aos_slot_incl_saturation() {
+    proptest_cases(10, |rng| {
+        for fmt in FORMATS {
+            for n in 2..=8usize {
+                // lane 0 pinned far past every format's range; the rest
+                // scattered around it so some lanes land in range too
+                let mut mean: Vec<c64> = (0..n)
+                    .map(|_| c64::new(rng.range(-600.0, 600.0), rng.range(-600.0, 600.0)))
+                    .collect();
+                mean[0] = c64::new(1.0e4, -1.0e4);
+                let msg =
+                    GaussMessage::new(mean, CMatrix::random_psd(rng, n, 1.0).scale(40.0));
+                let mut mem = MessageMemory::new(n, fmt, 2);
+                mem.write_message(1, &msg);
+                let got = mem.read(1);
+                let want = MsgSlot::from_message(&msg, fmt);
+                assert_eq!(raws(&got.v), raws(&want.v), "cov n={n}");
+                assert_eq!(raws(&got.m), raws(&want.m), "mean n={n}");
+                // saturated lanes really sit on the rails
+                let on_rail = got
+                    .m
+                    .iter()
+                    .filter(|z| z.re.raw == fmt.max_raw() || z.re.raw == fmt.min_raw())
+                    .count();
+                assert!(on_rail > 0, "fixture must exercise saturation (n={n})");
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Interpreted scalar reference (the seed per-element path)
+// ---------------------------------------------------------------------
+
+fn elem(m: &[CFix], n: usize, i: usize, k: usize, herm: bool) -> CFix {
+    if herm { m[k * n + i].conj() } else { m[i * n + k] }
+}
+
+/// Scalar-`CFix` mma/mms: `addend = None` → out = (∓) A·B with `neg` on
+/// the sum; `Some(c)` → out = (∓c) + A·B with `neg` on the addend.
+fn ref_mat_mul(
+    n: usize,
+    fmt: QFormat,
+    a: &[CFix],
+    a_herm: bool,
+    b: &[CFix],
+    b_herm: bool,
+    addend: Option<&[CFix]>,
+    neg: bool,
+) -> Vec<CFix> {
+    let mut out = vec![CFix::zero(fmt); n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = match addend {
+                Some(c) => {
+                    if neg {
+                        c[i * n + j].neg()
+                    } else {
+                        c[i * n + j]
+                    }
+                }
+                None => CFix::zero(fmt),
+            };
+            for k in 0..n {
+                acc = acc.add(elem(a, n, i, k, a_herm).mul(elem(b, n, k, j, b_herm)));
+            }
+            if addend.is_none() && neg {
+                acc = acc.neg();
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+fn ref_mat_vec(
+    n: usize,
+    fmt: QFormat,
+    a: &[CFix],
+    a_herm: bool,
+    v: &[CFix],
+    addend: Option<&[CFix]>,
+    neg: bool,
+) -> Vec<CFix> {
+    let mut out = vec![CFix::zero(fmt); n];
+    for i in 0..n {
+        let mut acc = match addend {
+            Some(c) => {
+                if neg {
+                    c[i].neg()
+                } else {
+                    c[i]
+                }
+            }
+            None => CFix::zero(fmt),
+        };
+        for k in 0..n {
+            acc = acc.add(elem(a, n, i, k, a_herm).mul(v[k]));
+        }
+        if addend.is_none() && neg {
+            acc = acc.neg();
+        }
+        out[i] = acc;
+    }
+    out
+}
+
+/// Scalar-`CFix` Faddeev over [[G, B | y], [C, D | x]]: partial pivoting
+/// among the G rows on saturated |.|², divide-then-multiply-subtract row
+/// elimination, D-quadrant extraction.
+#[allow(clippy::too_many_arguments)]
+fn ref_faddeev(
+    n: usize,
+    fmt: QFormat,
+    g: &[CFix],
+    b: &[CFix],
+    b_herm: bool,
+    c: &[CFix],
+    d: &[CFix],
+    y: &[CFix],
+    x: &[CFix],
+) -> (Vec<CFix>, Vec<CFix>) {
+    let rows = 2 * n;
+    let cols = 2 * n + 1;
+    let mut w = vec![CFix::zero(fmt); rows * cols];
+    for i in 0..n {
+        for j in 0..n {
+            w[i * cols + j] = g[i * n + j];
+            w[i * cols + n + j] = elem(b, n, i, j, b_herm);
+            w[(n + i) * cols + j] = c[i * n + j];
+            w[(n + i) * cols + n + j] = d[i * n + j];
+        }
+        w[i * cols + 2 * n] = y[i];
+        w[(n + i) * cols + 2 * n] = x[i];
+    }
+    for k in 0..n {
+        let mut piv = k;
+        let mut pmax = w[k * cols + k].abs2().raw;
+        for i in k + 1..n {
+            let v = w[i * cols + k].abs2().raw;
+            if v > pmax {
+                piv = i;
+                pmax = v;
+            }
+        }
+        if piv != k {
+            for j in 0..cols {
+                w.swap(k * cols + j, piv * cols + j);
+            }
+        }
+        let p = w[k * cols + k];
+        for i in k + 1..rows {
+            let lead = w[i * cols + k];
+            if lead.re.raw == 0 && lead.im.raw == 0 {
+                continue;
+            }
+            let f = lead.div(p);
+            for j in k..cols {
+                w[i * cols + j] = w[i * cols + j].sub(f.mul(w[k * cols + j]));
+            }
+        }
+    }
+    let mut mat = vec![CFix::zero(fmt); n * n];
+    let mut vec_out = vec![CFix::zero(fmt); n];
+    for i in 0..n {
+        for j in 0..n {
+            mat[i * n + j] = w[(n + i) * cols + n + j];
+        }
+        vec_out[i] = w[(n + i) * cols + 2 * n];
+    }
+    (mat, vec_out)
+}
+
+// ---------------------------------------------------------------------
+// Kernels vs the interpreted reference, bitwise
+// ---------------------------------------------------------------------
+
+#[test]
+fn mat_mul_kernel_bitwise_matches_interpreted_reference() {
+    proptest_cases(25, |rng| {
+        let fmt = QFormat::q5_10();
+        let r = Rails::of(fmt);
+        // 2..=8 crosses every mono instantiation and the generic body
+        for n in 2..=8usize {
+            let a = random_cfix(rng, fmt, n * n);
+            let b = random_cfix(rng, fmt, n * n);
+            let c = random_cfix(rng, fmt, n * n);
+            let (pa, pb, pc) =
+                (CPlanes::from_cfix(&a), CPlanes::from_cfix(&b), CPlanes::from_cfix(&c));
+            for (a_herm, b_herm, addend, neg) in [
+                (false, true, false, false),
+                (false, false, true, false),
+                (true, false, true, true),
+                (false, false, false, true),
+            ] {
+                let mut out = CPlanes::default();
+                let add_ref = addend.then_some(pc.as_ref());
+                kernels::mat_mul(n, r, pa.as_ref(), a_herm, pb.as_ref(), b_herm, add_ref, neg, &mut out);
+                let want =
+                    ref_mat_mul(n, fmt, &a, a_herm, &b, b_herm, addend.then_some(&c[..]), neg);
+                assert_eq!(out, CPlanes::from_cfix(&want), "n={n} flags {a_herm}/{b_herm}/{addend}/{neg}");
+            }
+        }
+    });
+}
+
+#[test]
+fn mat_vec_kernel_bitwise_matches_interpreted_reference() {
+    proptest_cases(25, |rng| {
+        let fmt = QFormat::q5_10();
+        let r = Rails::of(fmt);
+        for n in 2..=8usize {
+            let a = random_cfix(rng, fmt, n * n);
+            let v = random_cfix(rng, fmt, n);
+            let c = random_cfix(rng, fmt, n);
+            let (pa, pv, pc) =
+                (CPlanes::from_cfix(&a), CPlanes::from_cfix(&v), CPlanes::from_cfix(&c));
+            for (a_herm, addend, neg) in
+                [(false, true, true), (true, false, false), (false, false, true)]
+            {
+                let mut out = CPlanes::default();
+                let add_ref = addend.then_some(pc.as_ref());
+                kernels::mat_vec(n, r, pa.as_ref(), a_herm, pv.as_ref(), add_ref, neg, &mut out);
+                let want = ref_mat_vec(n, fmt, &a, a_herm, &v, addend.then_some(&c[..]), neg);
+                assert_eq!(out, CPlanes::from_cfix(&want), "n={n}");
+            }
+        }
+    });
+}
+
+#[test]
+fn faddeev_kernel_bitwise_matches_interpreted_reference() {
+    proptest_cases(25, |rng| {
+        let fmt = QFormat::q5_10();
+        let r = Rails::of(fmt);
+        for n in 2..=8usize {
+            let g = random_cfix(rng, fmt, n * n);
+            let b = random_cfix(rng, fmt, n * n);
+            let c = random_cfix(rng, fmt, n * n);
+            let d = random_cfix(rng, fmt, n * n);
+            let y = random_cfix(rng, fmt, n);
+            let x = random_cfix(rng, fmt, n);
+            let (pg, pb, pc, pd, py, px) = (
+                CPlanes::from_cfix(&g),
+                CPlanes::from_cfix(&b),
+                CPlanes::from_cfix(&c),
+                CPlanes::from_cfix(&d),
+                CPlanes::from_cfix(&y),
+                CPlanes::from_cfix(&x),
+            );
+            let (mut w, mut mat, mut vecp) =
+                (CPlanes::default(), CPlanes::default(), CPlanes::default());
+            kernels::faddeev(
+                n,
+                r,
+                pg.as_ref(),
+                pb.as_ref(),
+                true,
+                pc.as_ref(),
+                pd.as_ref(),
+                py.as_ref(),
+                px.as_ref(),
+                &mut w,
+                &mut mat,
+                &mut vecp,
+            );
+            let (want_mat, want_vec) = ref_faddeev(n, fmt, &g, &b, true, &c, &d, &y, &x);
+            assert_eq!(mat, CPlanes::from_cfix(&want_mat), "n={n} Schur quadrant");
+            assert_eq!(vecp, CPlanes::from_cfix(&want_vec), "n={n} mean column");
+        }
+    });
+}
+
+/// Deterministic saturation fixture: every operand pinned to a rail.
+/// Kernel and interpreted reference must agree raw-for-raw even when
+/// every intermediate clamps.
+#[test]
+fn kernels_match_reference_on_all_rails_fixture() {
+    let fmt = QFormat::q5_10();
+    let r = Rails::of(fmt);
+    for n in [2usize, 4, 8] {
+        for rail in [fmt.max_raw(), fmt.min_raw()] {
+            let z = CFix { re: Fix { raw: rail, fmt }, im: Fix { raw: rail, fmt } };
+            let a = vec![z; n * n];
+            let pa = CPlanes::from_cfix(&a);
+            let mut out = CPlanes::default();
+            kernels::mat_mul(n, r, pa.as_ref(), false, pa.as_ref(), true, None, false, &mut out);
+            let want = ref_mat_mul(n, fmt, &a, false, &a, true, None, false);
+            assert_eq!(out, CPlanes::from_cfix(&want), "n={n} rail={rail}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fused CN batch vs the cycle-accurate program path
+// ---------------------------------------------------------------------
+
+fn scaled_request(rng: &mut Rng, n: usize) -> CnRequestData {
+    CnRequestData {
+        x: GaussMessage::new(
+            (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+            CMatrix::random_psd(rng, n, 1.0).scale(0.15),
+        ),
+        y: GaussMessage::new(
+            (0..n).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+            CMatrix::random_psd(rng, n, 1.0).scale(0.15),
+        ),
+        a: CMatrix::random(rng, n, n).scale(0.3),
+    }
+}
+
+/// End to end: the fused SoA batch kernel against the interpreted
+/// compile-load-stream-run-readback device path, raw-for-raw.
+#[test]
+fn cn_batch_kernel_bitwise_matches_device_program_path() {
+    let n = 4;
+    let fmt = QFormat::q5_10();
+    let mut device = FgpSimBackend::new(FgpConfig::default()).unwrap();
+    let mut rng = Rng::new(0x9e37);
+    let reqs: Vec<_> = (0..6).map(|_| scaled_request(&mut rng, n)).collect();
+
+    let mut batch = CnBatch::new(n);
+    for r in &reqs {
+        let sx = MsgSlot::from_message(&r.x, fmt);
+        let sy = MsgSlot::from_message(&r.y, fmt);
+        let qa: Vec<CFix> = (0..n)
+            .flat_map(|i| (0..n).map(move |j| (i, j)))
+            .map(|(i, j)| CFix::from_f64(r.a[(i, j)].re, r.a[(i, j)].im, fmt))
+            .collect();
+        batch.push(&sx.v, &sx.m, &sy.v, &sy.m, &qa);
+    }
+    let (mut out_v, mut out_m) = (CPlanes::default(), CPlanes::default());
+    kernels::cn_update_batch(fmt, &batch, &mut out_v, &mut out_m, &mut CnScratch::default());
+
+    for (lane, req) in reqs.iter().enumerate() {
+        let dev = device.cn_update(req).unwrap();
+        let want = MsgSlot::from_message(&dev, fmt);
+        let got_v = out_v.slice(lane * n * n..(lane + 1) * n * n).to_cfix(fmt);
+        let got_m = out_m.slice(lane * n..(lane + 1) * n).to_cfix(fmt);
+        assert_eq!(raws(&got_v), raws(&want.v), "lane {lane} cov");
+        assert_eq!(raws(&got_m), raws(&want.m), "lane {lane} mean");
+    }
+    assert_eq!(kernels::kernel_path(n), "soa-mono-n4");
+}
+
+/// PE count is a cycle knob only: a 4-PE device returns bitwise-identical
+/// messages to the single-PE device in fewer simulated cycles.
+#[test]
+fn multi_pe_device_is_bitwise_identical_to_single_pe() {
+    let mut one = FgpSimBackend::new(FgpConfig::default()).unwrap();
+    let mut four = FgpSimBackend::new(FgpConfig::with_pes(4)).unwrap();
+    let mut rng = Rng::new(0xf00d);
+    let reqs: Vec<_> = (0..8).map(|_| scaled_request(&mut rng, 4)).collect();
+    let a = one.cn_update_batch(&reqs);
+    let b = four.cn_update_batch(&reqs);
+    for (x, y) in a.iter().zip(&b) {
+        let (x, y) = (x.as_ref().unwrap(), y.as_ref().unwrap());
+        assert_eq!(x.mean, y.mean);
+        assert_eq!(x.cov.dist(&y.cov), 0.0);
+    }
+    assert!(four.device_cycles < one.device_cycles, "4 PEs must be faster");
+}
+
+// ---------------------------------------------------------------------
+// Schur identities (the algorithm the array implements)
+// ---------------------------------------------------------------------
+
+/// `schur_direct` (solve-based) and `schur_faddeev` (elimination-based)
+/// compute the same D − C·G⁻¹·B on well-conditioned PSD blocks, 2–8.
+#[test]
+fn schur_direct_matches_schur_faddeev_on_random_psd() {
+    proptest_cases(20, |rng| {
+        for n in 2..=8usize {
+            let g = CMatrix::random_psd(rng, n, 1.0);
+            let b = CMatrix::random(rng, n, n);
+            let c = b.hermitian();
+            let d = CMatrix::random_psd(rng, n, 1.0);
+            let direct = CMatrix::schur_direct(&g, &b, &c, &d).expect("PSD + ridge is invertible");
+            let fad = CMatrix::schur_faddeev(&g, &b, &c, &d).expect("pivoted elimination");
+            let scale = 1.0 + d.dist(&CMatrix::zeros(n, n));
+            let err = direct.dist(&fad) / scale;
+            assert!(err < 1e-9, "n={n}: relative Schur disagreement {err}");
+        }
+    });
+}
+
+/// The raw primitive layer itself: saturating ops agree with the scalar
+/// Fix wrappers on the rails (the SoA kernels' foundation).
+#[test]
+fn raw_primitives_match_fix_wrappers_on_rails() {
+    let fmt = QFormat::q5_10();
+    let r = Rails::of(fmt);
+    let hi = Fix { raw: fmt.max_raw(), fmt };
+    let lo = Fix { raw: fmt.min_raw(), fmt };
+    assert_eq!(raw::add(hi.raw, hi.raw, r), hi.add(hi).raw);
+    assert_eq!(raw::sub(lo.raw, hi.raw, r), lo.sub(hi).raw);
+    assert_eq!(raw::neg(lo.raw, r), lo.neg().raw);
+    assert_eq!(raw::mul(hi.raw, hi.raw, r), hi.mul(hi).raw);
+}
