@@ -1,73 +1,206 @@
-//! E9 (extension) — fixed-point precision ablation: RLS estimation
-//! quality vs Q-format fraction bits, at fixed 16/24/32-bit datapath
-//! widths. Quantifies the §V "fix point number representation" choice:
-//! the 16-bit datapath hits an accuracy floor when the posterior
-//! covariance shrinks to a few LSBs, which wider formats push out.
+//! E9 — fixed-point precision ablation, upgraded to the
+//! quantization-conformance harness behind the fixed-point production
+//! path: per-width **error vs the golden f64 engine asserted against
+//! the analytic bound** ([`PrecisionModel::error_bound`]), per-width
+//! **throughput/area/power/energy rows** extending Table II, the
+//! **adaptive-precision policy** ([`PrecisionModel::pick_format`]), and
+//! the per-width saturation counts the production path reports through
+//! the metrics registry.
 //!
-//! Run: `cargo bench --bench precision_ablation`
+//! Emits a machine-readable **`BENCH_precision.json`** (validated in CI
+//! against `scripts/bench_precision.schema.json`) and **exits non-zero**
+//! if any width's measured error escapes its asserted bound — the bound
+//! is the contract the fixed production path ships under.
+//!
+//! Run: `cargo bench --bench precision_ablation [-- --smoke]`
+//!
+//! [`PrecisionModel::error_bound`]: fgp_repro::model::PrecisionModel::error_bound
+//! [`PrecisionModel::pick_format`]: fgp_repro::model::PrecisionModel::pick_format
+
+use std::time::Instant;
 
 use fgp_repro::apps::rls::RlsProblem;
-use fgp_repro::benchutil::banner;
-use fgp_repro::engine::Session;
-use fgp_repro::fgp::FgpConfig;
-use fgp_repro::fixed::QFormat;
+use fgp_repro::benchutil::{banner, json_arr, json_num, json_obj, json_str, write_json};
+use fgp_repro::engine::{Precision, Session};
+use fgp_repro::fixed::{raw, QFormat};
+use fgp_repro::model::{condition_estimate, PrecisionModel};
 use fgp_repro::paper;
 
+/// The E9 sweep: the silicon's 16-bit Q5.10 up through a 32-bit word.
+const SWEEP: [(u32, u32); 6] = [(5, 10), (5, 12), (5, 14), (5, 18), (5, 22), (5, 26)];
+
 fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let n = paper::N;
-    let sections = 24;
+    let sections = if smoke { 16 } else { 24 };
     let sigma2 = 0.02;
-    let seeds = [11u64, 23, 47];
+    let seeds: &[u64] = if smoke { &[11] } else { &[11, 23, 47] };
+    let reps = if smoke { 1 } else { 2 };
+    let model = PrecisionModel::default();
 
-    banner("RLS rel-MSE vs fixed-point format (24 sections, QPSK)");
-    let mut golden_session = Session::golden();
-    let p0 = RlsProblem::synthetic(n, sections, sigma2, seeds[0]);
-    let golden = golden_session.run(&p0)?.quality;
-    println!("f64 golden reference rel MSE: {golden:.5}\n");
+    // --- golden f64 references, one per seed
+    let mut golden = Session::golden();
+    let problems: Vec<RlsProblem> =
+        seeds.iter().map(|&s| RlsProblem::synthetic(n, sections, sigma2, s)).collect();
+    let refs: Vec<_> = problems
+        .iter()
+        .map(|p| golden.run(p).map(|out| out.outcome))
+        .collect::<Result<_, _>>()?;
+    let golden_mse = refs.iter().map(|r| r.rel_mse).sum::<f64>() / refs.len() as f64;
 
-    println!("{:>10} {:>8} {:>14} {:>14}", "format", "width", "mean rel MSE", "worst rel MSE");
-    for (int_bits, frac_bits) in [
-        (5u32, 10u32), // the silicon's 16-bit Q5.10
-        (5, 12),
-        (5, 14),
-        (5, 18), // 24-bit
-        (5, 22),
-        (5, 26), // 32-bit
-    ] {
+    // the workload's condition estimate drives the per-width bound; all
+    // seeds share the shape (same prior, same sigma2), so take the worst
+    let cond = problems
+        .iter()
+        .map(|p| {
+            let sects: Vec<_> =
+                p.observations.iter().cloned().zip(p.regressors.iter().cloned()).collect();
+            condition_estimate(&p.prior, &sects)
+        })
+        .fold(1.0f64, f64::max);
+
+    banner("per-width conformance vs the golden f64 engine");
+    println!("f64 golden mean rel MSE: {golden_mse:.5}  (condition estimate {cond:.1})\n");
+    println!(
+        "{:>8} {:>6} {:>13} {:>12} {:>12} {:>7} {:>12} {:>10} {:>9} {:>12}",
+        "format",
+        "width",
+        "max|err|",
+        "bound",
+        "mean MSE",
+        "sats",
+        "stream msg/s",
+        "area mm2",
+        "power W",
+        "energy nJ/CN"
+    );
+
+    let mut violations = 0usize;
+    let mut width_rows = Vec::new();
+    for (int_bits, frac_bits) in SWEEP {
         let fmt = QFormat::new(int_bits, frac_bits);
-        let cfg = FgpConfig { fmt, ..Default::default() };
-        // one session per format: the datapath width is engine state,
-        // but all three seeds share the compiled program
-        let mut session = Session::fgp_sim(cfg);
-        let mut sum = 0.0;
-        let mut worst: f64 = 0.0;
-        for &seed in &seeds {
-            let p = RlsProblem::synthetic(n, sections, sigma2, seed);
-            let out = session.run(&p)?;
-            sum += out.quality;
-            worst = worst.max(out.quality);
+        let bound = model.error_bound(fmt, sections, cond);
+        // one session per format, routed by the production Precision
+        // knob (the same constructor Session::run_stream clients use)
+        let mut session = Session::with_precision(Precision::Fixed(fmt));
+        raw::take_saturations(); // drain any prior activity
+        let mut max_err = 0.0f64;
+        let mut mse_sum = 0.0;
+        for (p, golden_out) in problems.iter().zip(&refs) {
+            // the production path is the streamed one; batch must agree
+            // bitwise on fgp-sim (chunk-invariance invariant)
+            let stream = session.run_stream(p)?;
+            let batch = session.run(p)?;
+            assert!(
+                stream.outcome.h_hat == batch.outcome.h_hat,
+                "q{int_bits}.{frac_bits}: stream vs batch must be bitwise-identical on fgp-sim"
+            );
+            let err = stream
+                .outcome
+                .h_hat
+                .iter()
+                .zip(&golden_out.h_hat)
+                .map(|(a, b)| (*a - *b).abs())
+                .fold(0.0f64, f64::max);
+            max_err = max_err.max(err);
+            mse_sum += stream.outcome.rel_mse;
+        }
+        let sats = raw::take_saturations();
+        let mean_mse = mse_sum / problems.len() as f64;
+
+        // host streaming throughput at this width (best of `reps`)
+        let mut best = f64::INFINITY;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            session.run_stream(&problems[0])?;
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        raw::take_saturations(); // timing reruns don't belong to the row
+        let rate = sections as f64 / best;
+
+        // Table II extension rows from the width-scaled analytic model
+        let area = model.breakdown(n, paper::MEMORY_KBIT, fmt).total();
+        let power = model.power_point(fmt, paper::FGP_CN_CYCLES);
+        let within = max_err <= bound;
+        if !within {
+            violations += 1;
         }
         println!(
-            "{:>10} {:>8} {:>14.5} {:>14.5}",
+            "{:>8} {:>6} {:>13.6} {:>12.6} {:>12.5} {:>7} {:>12.0} {:>10.3} {:>9.4} {:>12.1}{}",
             format!("Q{int_bits}.{frac_bits}"),
             fmt.width(),
-            sum / seeds.len() as f64,
-            worst
+            max_err,
+            bound,
+            mean_mse,
+            sats,
+            rate,
+            area,
+            power.power_w,
+            power.energy_per_cn_nj(),
+            if within { "" } else { "  << BOUND VIOLATED" }
         );
+        width_rows.push(json_obj(&[
+            ("format", json_str(&format!("q{int_bits}.{frac_bits}"))),
+            ("width_bits", fmt.width().to_string()),
+            ("frac_bits", frac_bits.to_string()),
+            ("max_abs_error_vs_golden", json_num(max_err)),
+            ("error_bound", json_num(bound)),
+            ("within_bound", within.to_string()),
+            ("mean_rel_mse", json_num(mean_mse)),
+            ("saturations", sats.to_string()),
+            ("stream_msgs_per_s", json_num(rate)),
+            ("area_mm2", json_num(area)),
+            ("power_w", json_num(power.power_w)),
+            ("energy_per_cn_nj", json_num(power.energy_per_cn_nj())),
+        ]));
     }
 
-    banner("accuracy floor vs chain length at Q5.10 (fixed-point RLS drift)");
-    let mut q510 = Session::fgp_sim(FgpConfig::default());
-    println!("{:>10} {:>14} {:>14}", "sections", "golden MSE", "Q5.10 MSE");
-    for s in [8usize, 16, 32, 64] {
-        let p = RlsProblem::synthetic(n, s, sigma2, seeds[0]);
-        let g = golden_session.run(&p)?.quality;
-        let f = q510.run(&p)?.quality;
-        println!("{s:>10} {g:>14.5} {f:>14.5}");
+    // --- the adaptive-precision policy: narrowest width per target
+    banner("adaptive-precision policy (narrowest width meeting a target)");
+    let sweep: Vec<QFormat> = SWEEP.iter().map(|&(i, f)| QFormat::new(i, f)).collect();
+    let targets = [1.0, 0.25, 0.05, 1e-3, 1e-12];
+    let mut policy_rows = Vec::new();
+    let mut last_width = 0u32;
+    println!("{:>12} {:>10}", "target", "picked");
+    for &target in &targets {
+        let picked = model.pick_format(target, sections, cond, &sweep);
+        let label = picked
+            .map_or("f64 (none qualifies)".to_string(), |f| Precision::Fixed(f).to_string());
+        println!("{target:>12.0e} {label:>10}");
+        // tighter targets must never pick a narrower word
+        if let Some(f) = picked {
+            assert!(f.width() >= last_width, "policy must widen as targets tighten");
+            last_width = f.width();
+        } else {
+            last_width = u32::MAX;
+        }
+        policy_rows.push(json_obj(&[
+            ("target", json_num(target)),
+            (
+                "picked",
+                picked.map_or("null".to_string(), |f| json_str(&Precision::Fixed(f).to_string())),
+            ),
+        ]));
     }
-    println!(
-        "\n(the Q5.10 floor: once tr(V) approaches a few LSBs the quantized\n\
-         covariance stalls — wider fractions push the floor out, the E9 axis)"
-    );
+
+    // --- machine-readable trajectory
+    let doc = json_obj(&[
+        ("bench", json_str("precision_ablation")),
+        ("mode", json_str(if smoke { "smoke" } else { "full" })),
+        ("sections", sections.to_string()),
+        ("seeds", seeds.len().to_string()),
+        ("golden_mean_rel_mse", json_num(golden_mse)),
+        ("condition_estimate", json_num(cond)),
+        ("widths", json_arr(&width_rows)),
+        ("policy", json_arr(&policy_rows)),
+    ]);
+    write_json("BENCH_precision.json", &doc)?;
+    println!("\nwrote BENCH_precision.json");
+
+    // --- conformance gate: the bound is the shipping contract
+    if violations > 0 {
+        eprintln!("CONFORMANCE FAILURE: {violations} width(s) exceeded the asserted error bound");
+        std::process::exit(1);
+    }
     Ok(())
 }

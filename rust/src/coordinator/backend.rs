@@ -26,7 +26,7 @@ use anyhow::{bail, Context, Result};
 use crate::compiler::CompileOptions;
 use crate::engine::{bind_streamed, preload_id, Execution, Session, Workload, XlaEngine};
 use crate::fgp::{FgpConfig, MsgSlot};
-use crate::fixed::CFix;
+use crate::fixed::{CFix, QFormat};
 use crate::gmp::matrix::CMatrix;
 use crate::gmp::message::GaussMessage;
 use crate::gmp::{nodes, FactorGraph, MsgId, Schedule};
@@ -57,6 +57,11 @@ pub struct WorkloadRequest {
     pub inputs: HashMap<MsgId, GaussMessage>,
     /// Compiler options for program engines.
     pub opts: CompileOptions,
+    /// Fixed-point format this request must execute under, or `None`
+    /// for the executing device's own configured format. A farm device
+    /// honours the declared format for exactly this dispatch (width
+    /// never silently changes — see `engine::Precision`).
+    pub precision: Option<QFormat>,
 }
 
 impl WorkloadRequest {
@@ -66,7 +71,19 @@ impl WorkloadRequest {
     pub fn from_workload<W: Workload + ?Sized>(w: &W) -> Result<Self> {
         let (graph, schedule) = w.model()?;
         let inputs = w.inputs(&graph, &schedule)?;
-        Ok(WorkloadRequest { graph, schedule, inputs, opts: w.compile_options() })
+        Ok(WorkloadRequest {
+            graph,
+            schedule,
+            inputs,
+            opts: w.compile_options(),
+            precision: None,
+        })
+    }
+
+    /// Declare the fixed-point format this request executes under.
+    pub fn with_precision(mut self, fmt: QFormat) -> Self {
+        self.precision = Some(fmt);
+        self
     }
 
     /// The canonical single-CN probe shape for dimension `n`: used to
@@ -108,7 +125,13 @@ impl WorkloadRequest {
         inputs.insert(preload_id(&graph, &schedule, "msg_prior")?, prior.clone());
         let ys: Vec<GaussMessage> = sections.iter().map(|(y, _)| y.clone()).collect();
         bind_streamed(&graph, &schedule, &ys, &mut inputs)?;
-        Ok(WorkloadRequest { graph, schedule, inputs, opts: CompileOptions::default() })
+        Ok(WorkloadRequest {
+            graph,
+            schedule,
+            inputs,
+            opts: CompileOptions::default(),
+            precision: None,
+        })
     }
 }
 
@@ -158,6 +181,13 @@ impl Backend for GoldenBackend {
     }
 
     fn run_workload(&mut self, req: &WorkloadRequest) -> Result<Execution> {
+        if let Some(fmt) = req.precision {
+            bail!(
+                "golden backend computes in f64 and cannot honour fixed precision q{}.{}",
+                fmt.int_bits,
+                fmt.frac_bits
+            );
+        }
         Session::golden()
             .dispatch(&req.graph, &req.schedule, &req.inputs, &req.opts)
             .map(|d| d.exec)
@@ -300,7 +330,15 @@ impl Backend for FgpSimBackend {
     }
 
     fn run_workload(&mut self, req: &WorkloadRequest) -> Result<Execution> {
-        let d = self.session.dispatch(&req.graph, &req.schedule, &req.inputs, &req.opts)?;
+        // honour the request's declared format for exactly this
+        // dispatch, then restore the backend's configured width so the
+        // CN hot path and the SoA batch kernels stay at `config.fmt`
+        self.session.set_fixed_format(req.precision.unwrap_or(self.config.fmt));
+        let d = self.session.dispatch(&req.graph, &req.schedule, &req.inputs, &req.opts);
+        if req.precision.is_some() {
+            self.session.set_fixed_format(self.config.fmt);
+        }
+        let d = d?;
         self.device_cycles += d.exec.stats.cycles;
         Ok(d.exec)
     }
@@ -331,6 +369,9 @@ impl Backend for XlaBackend {
     }
 
     fn run_workload(&mut self, req: &WorkloadRequest) -> Result<Execution> {
+        if req.precision.is_some() {
+            bail!("XLA backend computes in float and cannot honour fixed precision");
+        }
         self.session
             .dispatch(&req.graph, &req.schedule, &req.inputs, &req.opts)
             .map(|d| d.exec)
@@ -394,6 +435,9 @@ impl Backend for XlaBatchBackend {
     }
 
     fn run_workload(&mut self, req: &WorkloadRequest) -> Result<Execution> {
+        if req.precision.is_some() {
+            bail!("XLA backend computes in float and cannot honour fixed precision");
+        }
         self.session
             .dispatch(&req.graph, &req.schedule, &req.inputs, &req.opts)
             .map(|d| d.exec)
@@ -588,6 +632,33 @@ mod precision_probe {
             let d = got.dist(&want);
             assert!(d < 1e-3, "case {i}: Q8.20 dist {d}");
         }
+    }
+
+    /// A `WorkloadRequest` declaring q8.20 on a q5.10-configured backend
+    /// executes at q8.20 (bitwise equal to a q8.20-configured device)
+    /// and the backend is restored to its own width afterwards; the f64
+    /// reference refuses rather than silently ignoring the declaration.
+    #[test]
+    fn workload_precision_overrides_and_restores_the_device_format() {
+        let wide_fmt = QFormat::new(8, 20);
+        let mut base = FgpSimBackend::new(crate::fgp::FgpConfig::default()).unwrap();
+        let wide_cfg = crate::fgp::FgpConfig { fmt: wide_fmt, ..Default::default() };
+        let mut wide = FgpSimBackend::new(wide_cfg).unwrap();
+        let mut rng = Rng::new(21);
+        let req = request(&mut rng, 4);
+        let wr = WorkloadRequest::cn(&req).unwrap().with_precision(wide_fmt);
+        let got = base.run_workload(&wr).unwrap();
+        let want = wide.run_workload(&WorkloadRequest::cn(&req).unwrap()).unwrap();
+        assert_eq!(
+            got.output().unwrap(),
+            want.output().unwrap(),
+            "declared q8.20 must match a q8.20-configured device bitwise"
+        );
+        // base is back at its configured width: a plain CN update still
+        // matches a fresh default-format backend bitwise
+        let mut fresh = FgpSimBackend::new(crate::fgp::FgpConfig::default()).unwrap();
+        assert_eq!(base.cn_update(&req).unwrap(), fresh.cn_update(&req).unwrap());
+        assert!(GoldenBackend.run_workload(&wr).is_err());
     }
 
     /// Error decreases monotonically with fraction bits (E9's invariant).

@@ -66,6 +66,7 @@ use crate::engine::{
     StreamingWorkload,
 };
 use crate::fgp::FgpConfig;
+use crate::fixed::QFormat;
 use crate::gmp::matrix::CMatrix;
 use crate::gmp::message::GaussMessage;
 use crate::obs::health::{device_score, DeviceHealth};
@@ -253,6 +254,12 @@ fn spawn_device(
                 };
                 session.set_trace_context(dev_ctx.map(|(c, _)| c));
                 let t0 = if dev_ctx.is_some() { tel.now_ns() } else { 0 };
+                // honour the request's declared fixed-point format for
+                // exactly this dispatch; a request without one executes
+                // at the farm's configured width, so a previous
+                // request's format never leaks (width never silently
+                // changes — the precision contract)
+                session.set_fixed_format(msg.req.precision.unwrap_or(config.fmt));
                 // latency EWMA only when health tracking is on: the
                 // disabled path must read no clocks (invariant 7 ext.)
                 let h0 = health_on.load(Ordering::Relaxed).then(Instant::now);
@@ -262,6 +269,14 @@ fn spawn_device(
                         stats.cycles.fetch_add(disp.exec.stats.cycles, Ordering::Relaxed);
                         disp.exec
                     });
+                // drain this thread's datapath saturation events into
+                // the shared registry: counting is always on and never
+                // changes results (invariant-7 safe), so production
+                // overflow is observable over the Stats/Health wire
+                let sats = crate::fixed::raw::take_saturations();
+                if sats > 0 {
+                    tel.registry().add("fixed.saturations", sats);
+                }
                 if let Some(h0) = h0 {
                     let sample = h0.elapsed().as_nanos() as u64;
                     let old = stats.ewma_ns.load(Ordering::Relaxed);
@@ -586,6 +601,17 @@ impl FgpFarm {
     /// The device thread unwraps the single output message itself — no
     /// adapter hop on the client side.
     pub fn submit(&self, req: CnRequestData) -> (Receiver<Result<GaussMessage>>, usize) {
+        self.submit_cn(req, None)
+    }
+
+    /// [`FgpFarm::submit`] with a declared fixed-point format: the
+    /// routed device executes this update at `precision` (its own
+    /// configured width when `None`).
+    pub fn submit_cn(
+        &self,
+        req: CnRequestData,
+        precision: Option<QFormat>,
+    ) -> (Receiver<Result<GaussMessage>>, usize) {
         let (rtx, rrx) = mpsc::channel();
         let idx = match self.pick(&[]) {
             Ok(i) => i,
@@ -595,7 +621,8 @@ impl FgpFarm {
             }
         };
         match WorkloadRequest::cn(&req) {
-            Ok(wr) => {
+            Ok(mut wr) => {
+                wr.precision = precision;
                 self.send_msg(idx, DeviceMsg { req: wr, resp: DeviceResp::Cn(rtx), ctx: None })
             }
             // request construction failed client-side; the routed device
@@ -696,6 +723,7 @@ impl FgpFarm {
             chunk,
             binder,
             opts: w.stream_compile_options(),
+            precision: None,
             state: w.initial_state(),
             boundaries: Vec::new(),
             samples: 0,
@@ -740,6 +768,7 @@ impl FgpFarm {
             chunk,
             binder,
             opts: w.stream_compile_options(),
+            precision: None,
             state: ckpt.state.clone(),
             boundaries: ckpt.boundaries.clone(),
             samples: ckpt.samples,
@@ -776,29 +805,47 @@ pub fn recv_exec<T>(rx: &Receiver<Result<T>>, device: usize) -> Result<T> {
 /// in-thread engine.
 pub struct FarmCnBackend {
     farm: Arc<FgpFarm>,
+    /// Declared fixed-point format every dispatch through this adapter
+    /// carries (`None` = each device's configured width). A request's
+    /// own declaration wins over the adapter's.
+    precision: Option<QFormat>,
 }
 
 impl FarmCnBackend {
     /// Adapter over a shared farm.
     pub fn new(farm: Arc<FgpFarm>) -> Self {
-        FarmCnBackend { farm }
+        FarmCnBackend { farm, precision: None }
+    }
+
+    /// Adapter whose every dispatch declares `fmt` — the serve tier's
+    /// coalesced drain uses one per precision group.
+    pub fn with_precision(farm: Arc<FgpFarm>, fmt: QFormat) -> Self {
+        FarmCnBackend { farm, precision: Some(fmt) }
     }
 }
 
 impl Backend for FarmCnBackend {
     fn cn_update(&mut self, req: &CnRequestData) -> Result<GaussMessage> {
-        self.farm.update(req.clone())
+        let (rx, idx) = self.farm.submit_cn(req.clone(), self.precision);
+        recv_exec(&rx, idx)
     }
 
     fn cn_update_batch(&mut self, reqs: &[CnRequestData]) -> Vec<Result<GaussMessage>> {
         // submit everything async first, then collect: the batch runs
         // concurrently across however many devices routing spread it over
-        let pending: Vec<_> = reqs.iter().map(|r| self.farm.submit(r.clone())).collect();
+        let pending: Vec<_> = reqs
+            .iter()
+            .map(|r| self.farm.submit_cn(r.clone(), self.precision))
+            .collect();
         pending.into_iter().map(|(rx, idx)| recv_exec(&rx, idx)).collect()
     }
 
     fn run_workload(&mut self, req: &WorkloadRequest) -> Result<Execution> {
-        self.farm.run(req.clone())
+        let mut req = req.clone();
+        if req.precision.is_none() {
+            req.precision = self.precision;
+        }
+        self.farm.run(req)
     }
 
     fn kind(&self) -> BackendKind {
@@ -815,6 +862,12 @@ pub struct FarmStream<'f, 'w, W: StreamingWorkload + ?Sized> {
     chunk: usize,
     binder: StreamBinder,
     opts: CompileOptions,
+    /// Declared fixed-point format every chunk dispatch carries (`None`
+    /// = the pinned device's configured width). Survives failover and
+    /// checkpoint/resume untouched: re-declare it on the resumed
+    /// stream — precision is part of the stream's *session*, not the
+    /// checkpoint image.
+    precision: Option<QFormat>,
     state: GaussMessage,
     boundaries: Vec<GaussMessage>,
     samples: u64,
@@ -822,6 +875,18 @@ pub struct FarmStream<'f, 'w, W: StreamingWorkload + ?Sized> {
 }
 
 impl<W: StreamingWorkload + ?Sized> FarmStream<'_, '_, W> {
+    /// Declare the fixed-point format every chunk of this stream
+    /// executes under on the pinned device (and any failover target).
+    pub fn with_precision(mut self, fmt: QFormat) -> Self {
+        self.precision = Some(fmt);
+        self
+    }
+
+    /// The stream's declared fixed-point format, if any.
+    pub fn precision(&self) -> Option<QFormat> {
+        self.precision
+    }
+
     /// The pinned device index.
     pub fn device(&self) -> usize {
         self.device
@@ -907,6 +972,7 @@ impl<W: StreamingWorkload + ?Sized> FarmStream<'_, '_, W> {
                 schedule: self.binder.schedule.clone(),
                 inputs: self.binder.inputs.clone(),
                 opts: self.opts,
+                precision: self.precision,
             })?
         } else {
             let mut tail = StreamBinder::build(self.w, real)?;
@@ -916,6 +982,7 @@ impl<W: StreamingWorkload + ?Sized> FarmStream<'_, '_, W> {
                 schedule: tail.schedule,
                 inputs: tail.inputs,
                 opts: self.opts,
+                precision: self.precision,
             })?
         };
         self.state = exec.output()?.clone();
@@ -1220,6 +1287,120 @@ mod tests {
         // a checkpoint from the wrong stream is rejected
         let bad = StreamCheckpoint { stream_name: "other".into(), ..ckpt.clone() };
         assert!(farm3.resume_stream(&capped, &bad, None).is_err());
+    }
+
+    /// The tentpole's farm leg: a stream declaring q8.20 on a
+    /// q5.10-configured farm is bitwise identical to a q8.20-configured
+    /// single-device session — across members, across a mid-stream
+    /// failover, across checkpoint/resume, and with default-width
+    /// traffic interleaved on the same device (no width leaks either
+    /// direction).
+    #[test]
+    fn declared_precision_stream_is_bitwise_across_members_and_failover() {
+        use crate::apps::rls::RlsProblem;
+
+        let p = RlsProblem::synthetic(4, 16, 0.01, 31);
+        let capped = ChunkCapped { inner: &p, cap: 4 };
+        let fmt = QFormat::new(8, 20);
+
+        // reference: a single q8.20-configured device session
+        let reference = Session::fgp_sim(FgpConfig { fmt, ..Default::default() })
+            .run_stream(&capped)
+            .unwrap();
+
+        // a default-width farm, stream declared at q8.20
+        let farm = FgpFarm::start(2, FgpConfig::default(), RoutePolicy::RoundRobin).unwrap();
+        let run =
+            farm.open_stream(&capped).unwrap().with_precision(fmt).run_to_end().unwrap();
+        assert_eq!(run.final_state, reference.final_state, "declared width diverged");
+
+        // kill the pin mid-stream: failover keeps the declared width
+        let farm2 = FgpFarm::start(2, FgpConfig::default(), RoutePolicy::RoundRobin).unwrap();
+        let mut s = farm2.open_stream(&capped).unwrap().with_precision(fmt);
+        assert_eq!(s.precision(), Some(fmt));
+        assert_eq!(s.step_chunk().unwrap(), Some(4));
+        assert_eq!(s.step_chunk().unwrap(), Some(4));
+        let ckpt = s.checkpoint();
+        let dev0 = s.device();
+        farm2.kill_device(dev0).unwrap();
+        assert!(s.step_chunk().is_err());
+        s.failover().unwrap();
+        let live = s.run_to_end().unwrap();
+        assert_eq!(live.final_state, reference.final_state, "failover diverged");
+
+        // checkpoint/resume on a fresh farm, precision re-declared
+        let farm3 = FgpFarm::start(2, FgpConfig::default(), RoutePolicy::RoundRobin).unwrap();
+        let resumed = farm3
+            .resume_stream(&capped, &ckpt, None)
+            .unwrap()
+            .with_precision(fmt)
+            .run_to_end()
+            .unwrap();
+        assert_eq!(resumed.final_state, reference.final_state, "resume diverged");
+
+        // default-width requests interleaved on a single-device farm:
+        // the device must restore its own width between dispatches
+        let farm4 = FgpFarm::start(1, FgpConfig::default(), RoutePolicy::RoundRobin).unwrap();
+        let mut s = farm4.open_stream(&capped).unwrap().with_precision(fmt);
+        let mut rng = Rng::new(41);
+        let baseline = farm4.update(request(&mut rng, 4)).unwrap();
+        let mut rng = Rng::new(41);
+        while let Some(n) = s.step_chunk().unwrap() {
+            let got = farm4.update(request(&mut rng, 4)).unwrap();
+            if s.samples() == 4 {
+                assert_eq!(got, baseline, "interleaved q5.10 traffic changed width");
+            }
+            if (n as usize) < 4 {
+                break;
+            }
+        }
+        assert_eq!(s.state(), &reference.final_state, "interleaving leaked a width");
+    }
+
+    /// `fixed.saturations` observability: a clean wide-format run
+    /// reports zero; rail-adjacent operands at a narrow format count
+    /// events into the shared registry.
+    #[test]
+    fn saturations_flow_to_the_registry_and_clean_runs_report_zero() {
+        // clean: q8.20 + the well-conditioned test envelope
+        let tel = Arc::new(Telemetry::new(TelemetryConfig::default()));
+        let wide = FgpConfig { fmt: QFormat::new(8, 20), ..Default::default() };
+        let farm =
+            FgpFarm::start_with_telemetry(2, wide, RoutePolicy::RoundRobin, tel).unwrap();
+        let mut rng = Rng::new(12);
+        for _ in 0..4 {
+            farm.update(request(&mut rng, 4)).unwrap();
+        }
+        let snap = farm.telemetry().registry().snapshot();
+        assert_eq!(
+            snap.counter("fixed.saturations").unwrap_or(0),
+            0,
+            "clean run must report zero saturations"
+        );
+
+        // q1.14 rails at ±2: products of rail-adjacent means/entries
+        // (1.9 × 1.9 ≈ 3.6) must clamp and be counted
+        let tel = Arc::new(Telemetry::new(TelemetryConfig::default()));
+        let narrow = FgpConfig { fmt: QFormat::new(1, 14), ..Default::default() };
+        let farm =
+            FgpFarm::start_with_telemetry(1, narrow, RoutePolicy::RoundRobin, tel).unwrap();
+        let hot = CnRequestData {
+            x: GaussMessage::new(
+                (0..4).map(|_| c64::new(1.9, 0.0)).collect(),
+                CMatrix::identity(4).scale(0.15),
+            ),
+            y: GaussMessage::new(
+                (0..4).map(|_| c64::new(1.9, 0.0)).collect(),
+                CMatrix::identity(4).scale(0.15),
+            ),
+            a: CMatrix::identity(4).scale(1.9),
+        };
+        farm.update(hot).unwrap();
+        let snap = farm.telemetry().registry().snapshot();
+        assert!(
+            snap.counter("fixed.saturations").unwrap_or(0) > 0,
+            "railed operands must be counted"
+        );
     }
 
     #[test]

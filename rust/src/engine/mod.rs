@@ -41,10 +41,12 @@
 //! println!("cycles/section = {}", measured.cycles_per_section);
 //! ```
 
+pub mod precision;
 pub mod session;
 pub mod stream;
 pub mod workload;
 
+pub use precision::Precision;
 pub use session::{
     CacheStats, Engine, EngineKind, FgpSimEngine, GoldenEngine, RunReport, Session, XlaEngine,
 };

@@ -1,0 +1,91 @@
+//! The precision knob: which arithmetic a session executes under.
+//!
+//! The paper's hardware claim (§V) is that Gaussian message updates run
+//! on a **fixed-point** systolic array at full throughput; the repo's
+//! golden engine is the f64 semantic reference. [`Precision`] makes the
+//! choice a first-class, *declared* parameter instead of an engine
+//! accident: `F64` selects the golden rules, `Fixed(fmt)` selects the
+//! Q-format quantized datapath (the cycle-accurate simulator and the
+//! SoA kernels, which share `fixed::raw` and are bitwise-identical by
+//! construction).
+//!
+//! The contract (ARCHITECTURE invariant): **width never silently
+//! changes** — a session, stream or serve request computes in exactly
+//! the precision it declared, end to end, and every saturation event on
+//! the fixed path is counted (`fixed.saturations` in the unified
+//! metrics registry). The serving tier carries the knob on the wire (a
+//! version-2 request field; old peers are unaffected), the farm applies
+//! it per dispatch, and the conformance harness in `model/precision`
+//! bounds the quantization error per width against the golden engine.
+
+use std::fmt;
+
+use crate::fixed::QFormat;
+
+/// Arithmetic precision a session/stream/request executes under.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// IEEE-754 double precision (the golden reference rules).
+    #[default]
+    F64,
+    /// Q-format fixed point on the quantized datapath.
+    Fixed(QFormat),
+}
+
+impl Precision {
+    /// The silicon's 16-bit default fixed-point precision (Q5.10).
+    pub const fn fixed_default() -> Self {
+        Precision::Fixed(QFormat::q5_10())
+    }
+
+    /// Is this a fixed-point precision?
+    pub fn is_fixed(&self) -> bool {
+        matches!(self, Precision::Fixed(_))
+    }
+
+    /// The Q-format, when fixed.
+    pub fn fmt(&self) -> Option<QFormat> {
+        match self {
+            Precision::F64 => None,
+            Precision::Fixed(f) => Some(*f),
+        }
+    }
+
+    /// Datapath word width in bits (64 for f64).
+    pub fn width_bits(&self) -> u32 {
+        match self {
+            Precision::F64 => 64,
+            Precision::Fixed(f) => f.width(),
+        }
+    }
+}
+
+impl fmt::Display for Precision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Precision::F64 => write!(f, "f64"),
+            Precision::Fixed(q) => write!(f, "q{}.{}", q.int_bits, q.frac_bits),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_f64_and_display_names_the_width() {
+        assert_eq!(Precision::default(), Precision::F64);
+        assert!(!Precision::F64.is_fixed());
+        assert_eq!(Precision::F64.fmt(), None);
+        assert_eq!(Precision::F64.width_bits(), 64);
+        assert_eq!(Precision::F64.to_string(), "f64");
+
+        let p = Precision::fixed_default();
+        assert!(p.is_fixed());
+        assert_eq!(p.fmt(), Some(QFormat::q5_10()));
+        assert_eq!(p.width_bits(), 16);
+        assert_eq!(p.to_string(), "q5.10");
+        assert_eq!(Precision::Fixed(QFormat::new(8, 20)).to_string(), "q8.20");
+    }
+}

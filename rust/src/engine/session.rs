@@ -22,6 +22,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::compiler::{compile, CompileOptions, CompileStats, CompiledProgram};
 use crate::fgp::{Fgp, FgpConfig, MessageMemory, Profiler, RunStats, StateMemory};
+use crate::fixed::QFormat;
 use crate::gmp::graph::StateId;
 use crate::gmp::matrix::CMatrix;
 use crate::gmp::message::GaussMessage;
@@ -71,6 +72,20 @@ pub trait Engine {
     /// Fixed device dimension, if the engine has one (the FGP simulator).
     fn device_n(&self) -> Option<usize> {
         None
+    }
+
+    /// The arithmetic precision this engine computes in. Engines without
+    /// a quantized datapath are the f64 reference.
+    fn precision(&self) -> super::precision::Precision {
+        super::precision::Precision::F64
+    }
+
+    /// Switch the engine's fixed-point format. Returns `true` when the
+    /// engine honours the request (the FGP simulator); engines without a
+    /// quantized datapath return `false` so callers can refuse instead
+    /// of silently computing at a different width.
+    fn set_fixed_format(&mut self, _fmt: QFormat) -> bool {
+        false
     }
 
     /// Samples per dispatch [`Session::run_stream`] should pipeline
@@ -208,6 +223,25 @@ impl Engine for FgpSimEngine {
 
     fn device_n(&self) -> Option<usize> {
         Some(self.fgp.config.n)
+    }
+
+    fn precision(&self) -> super::precision::Precision {
+        super::precision::Precision::Fixed(self.fgp.config.fmt)
+    }
+
+    fn set_fixed_format(&mut self, fmt: QFormat) -> bool {
+        if self.fgp.config.fmt != fmt {
+            // The format is baked into the memories and the systolic
+            // array at construction, so honouring the switch means
+            // rebuilding the device; the PM image must be reloaded on
+            // the next execute. The program cache is unaffected — the
+            // structural signature has no format component.
+            let mut cfg = self.fgp.config;
+            cfg.fmt = fmt;
+            self.fgp = Fgp::new(cfg);
+            self.loaded = None;
+        }
+        true
     }
 
     fn execute(
@@ -691,6 +725,31 @@ impl Session {
     /// PJRT/XLA session.
     pub fn xla(rt: RuntimeClient) -> Self {
         Session::new(Box::new(XlaEngine::new(rt)))
+    }
+
+    /// Session for a declared [`Precision`]: `F64` routes to the golden
+    /// reference rules, `Fixed(fmt)` to the quantized datapath (the
+    /// cycle-accurate simulator at that Q-format).
+    pub fn with_precision(p: super::precision::Precision) -> Self {
+        match p {
+            super::precision::Precision::F64 => Session::golden(),
+            super::precision::Precision::Fixed(fmt) => {
+                Session::fgp_sim(FgpConfig { fmt, ..FgpConfig::default() })
+            }
+        }
+    }
+
+    /// The arithmetic precision this session computes in.
+    pub fn precision(&self) -> super::precision::Precision {
+        self.engine.precision()
+    }
+
+    /// Switch the engine's fixed-point format. Returns `true` when the
+    /// engine honours the request (see [`Engine::set_fixed_format`]);
+    /// the program cache survives the switch — the structural signature
+    /// has no format component, only the device state is rebuilt.
+    pub fn set_fixed_format(&mut self, fmt: QFormat) -> bool {
+        self.engine.set_fixed_format(fmt)
     }
 
     /// Which engine this session drives.
@@ -1378,6 +1437,54 @@ mod tests {
             assert_eq!(resumed.samples, 16);
             assert_bitwise(&resumed.final_state, &full.final_state);
         }
+    }
+
+    #[test]
+    fn with_precision_routes_engines_and_reports_width() {
+        use super::super::precision::Precision;
+        let s = Session::with_precision(Precision::F64);
+        assert_eq!(s.engine_kind(), EngineKind::Golden);
+        assert_eq!(s.precision(), Precision::F64);
+
+        let s = Session::with_precision(Precision::fixed_default());
+        assert_eq!(s.engine_kind(), EngineKind::FgpSim);
+        assert_eq!(s.precision(), Precision::Fixed(QFormat::q5_10()));
+        assert_eq!(s.precision().width_bits(), 16);
+
+        // the f64 reference refuses a fixed format instead of silently
+        // computing at a different width
+        let mut golden = Session::golden();
+        assert!(!golden.set_fixed_format(QFormat::q5_10()));
+        assert_eq!(golden.precision(), Precision::F64);
+    }
+
+    #[test]
+    fn format_switch_rebuilds_device_but_keeps_program_cache() {
+        use super::super::precision::Precision;
+        let mut rng = Rng::new(9);
+        let w = mini(&mut rng);
+        let mut s = Session::fgp_sim(FgpConfig::default());
+        let narrow = s.run(&w).unwrap();
+        assert!(!narrow.cached);
+
+        // widen: the structural signature has no format component, so
+        // the compiled program is a cache hit — only the device rebuilds
+        assert!(s.set_fixed_format(QFormat::new(8, 20)));
+        assert_eq!(s.precision(), Precision::Fixed(QFormat::new(8, 20)));
+        let wide = s.run(&w).unwrap();
+        assert!(wide.cached, "format switch must not invalidate the program cache");
+        assert!(
+            narrow.outcome.dist(&wide.outcome) > 0.0,
+            "q5.10 and q8.20 must quantize differently"
+        );
+
+        // switching back reproduces the original run bitwise
+        assert!(s.set_fixed_format(QFormat::q5_10()));
+        let again = s.run(&w).unwrap();
+        assert!(again.cached);
+        assert_bitwise(&again.outcome, &narrow.outcome);
+        let stats = s.cache_stats();
+        assert_eq!((stats.hits, stats.misses, stats.programs), (2, 1, 1));
     }
 
     #[test]

@@ -27,7 +27,39 @@ pub use divider::Radix2Divider;
 /// identical to the interpreted path by construction (pinned by
 /// `rust/tests/property_kernels.rs`).
 pub mod raw {
+    use std::cell::Cell;
+
     use super::{QFormat, Radix2Divider};
+
+    thread_local! {
+        /// Per-thread count of datapath saturation events (rail clamps in
+        /// [`sat`] plus zero-denominator [`cdiv`] rails). Thread-local so
+        /// the hot arithmetic path stays contention-free; the farm device
+        /// loop drains its own thread's count into the shared
+        /// `MetricsRegistry` after every dispatch.
+        static SATURATIONS: Cell<u64> = const { Cell::new(0) };
+    }
+
+    #[cold]
+    fn note_saturation() {
+        SATURATIONS.with(|c| c.set(c.get() + 1));
+    }
+
+    /// Read **and reset** the calling thread's saturation counter. The
+    /// engine layer drains this after each execution into the
+    /// `fixed.saturations` registry counter, so production overflow
+    /// events are observable over the `Stats` wire. Counting is always
+    /// on (it reads no clocks and never changes an arithmetic result,
+    /// so the invariant-7 bitwise contract is unaffected).
+    pub fn take_saturations() -> u64 {
+        SATURATIONS.with(|c| c.replace(0))
+    }
+
+    /// The calling thread's saturation count since the last
+    /// [`take_saturations`] (tests and probes; production drains).
+    pub fn saturation_count() -> u64 {
+        SATURATIONS.with(|c| c.get())
+    }
 
     /// Saturation rails + shift a [`QFormat`] induces on raw values,
     /// hoisted out of the per-element loops.
@@ -48,10 +80,20 @@ pub mod raw {
         }
     }
 
-    /// Clamp to the rails (the saturating output stage).
+    /// Clamp to the rails (the saturating output stage). Every clamp
+    /// bumps the thread's saturation counter ([`take_saturations`]); the
+    /// in-range fast path is branch-only.
     #[inline(always)]
     pub fn sat(x: i64, r: Rails) -> i64 {
-        x.clamp(r.min, r.max)
+        if x > r.max {
+            note_saturation();
+            r.max
+        } else if x < r.min {
+            note_saturation();
+            r.min
+        } else {
+            x
+        }
     }
 
     /// Saturating addition (the PEmult adder).
@@ -111,6 +153,9 @@ pub mod raw {
     pub fn cdiv(ar: i64, ai: i64, br: i64, bi: i64, r: Rails) -> (i64, i64) {
         let den = cabs2(br, bi, r);
         if den == 0 {
+            // both output components rail: two saturation events
+            note_saturation();
+            note_saturation();
             return (r.max, r.max);
         }
         let num_re = add(mul(ar, br, r), mul(ai, bi, r), r);

@@ -320,6 +320,7 @@ impl Chain {
                     schedule,
                     inputs: self.inputs,
                     opts: Default::default(),
+                    precision: None,
                 })
             }
             Some(out) => {

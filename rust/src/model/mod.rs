@@ -6,11 +6,16 @@
 //! * [`scaling`]: the paper's technology scaling `t_pd ~ 1/s` — Table
 //!   II's "normalized max. throughput" scales both processors to a
 //!   common node before dividing clock by cycles-per-update.
+//! * [`precision`]: per-width error bounds, width-scaled area/power
+//!   rows, and the adaptive-precision policy behind the fixed-point
+//!   production path (`BENCH_precision.json`).
 
 pub mod area;
 pub mod power;
+pub mod precision;
 pub mod scaling;
 
 pub use area::{AreaBreakdown, AreaModel};
 pub use power::PowerPoint;
+pub use precision::{condition_estimate, PrecisionModel};
 pub use scaling::{normalized_throughput, scale_frequency, ProcessorPoint};

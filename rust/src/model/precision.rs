@@ -1,0 +1,210 @@
+//! Quantization-conformance model: per-width error bounds, width-scaled
+//! area/power, and the adaptive-precision policy (E-precision).
+//!
+//! The paper fixes the FGP word at Q5.10 (§III: 16-bit two's complement,
+//! 5 integer + 10 fractional bits). This module answers the question a
+//! deployment actually faces: *which* width does a given workload need?
+//! Three pieces:
+//!
+//! * [`PrecisionModel::error_bound`] — an analytic per-width bound on
+//!   the end-to-end error of a compound-observation chain vs the golden
+//!   f64 engine. One CN update quantizes every intermediate to the
+//!   format's resolution `2^-frac`; ill-conditioned section covariances
+//!   amplify those rounding errors through the matrix inverse, so the
+//!   bound is `C · chain_len · κ̂ · 2^-frac` with a calibrated headroom
+//!   constant `C` and a cheap condition-number estimate `κ̂`
+//!   ([`condition_estimate`]). The bench (`precision_ablation`) asserts
+//!   measured error stays under this bound for every swept width — the
+//!   bound is a *contract*, not a curve fit.
+//! * [`PrecisionModel::breakdown`] / [`PrecisionModel::power_point`] —
+//!   Table II rows at other word widths. Relative to the calibrated
+//!   16-bit [`AreaModel`]: array multipliers scale quadratically with
+//!   width, adders/flops/dividers and memory bits linearly, control not
+//!   at all.
+//! * [`PrecisionModel::pick_format`] — the adaptive-precision policy:
+//!   the narrowest candidate width whose bound meets a target accuracy,
+//!   i.e. the cheapest device that is still *provably* accurate enough.
+
+use crate::fixed::QFormat;
+use crate::gmp::matrix::CMatrix;
+use crate::gmp::message::GaussMessage;
+use crate::paper;
+
+use super::area::{AreaBreakdown, AreaModel};
+use super::power::PowerPoint;
+
+/// Word width (bits) the [`AreaModel`] constants are calibrated at —
+/// the paper's Q5.10 configuration.
+const REFERENCE_WIDTH: f64 = 16.0;
+
+/// Fraction of a PE's area in multipliers (quadratic in width); the
+/// remainder (adders, state flops, muxing, the border divider) scales
+/// linearly. From the §V gate-count split: ~2.5 kGE multiplier out of
+/// ~4.6 kGE per PEmult.
+const MULT_FRACTION: f64 = 0.55;
+
+/// Cheap condition-number estimate for a compound-observation chain:
+/// the worst ratio of largest to smallest covariance diagonal magnitude
+/// across the prior and every section, clamped to at least 1. The exact
+/// condition number of each inverted sum is unavailable without an
+/// eigensolve; the diagonal ratio is a standard sufficient proxy for
+/// the *bound* (which carries calibrated headroom on top).
+pub fn condition_estimate(prior: &GaussMessage, sections: &[(GaussMessage, CMatrix)]) -> f64 {
+    let mut lo = f64::INFINITY;
+    let mut hi = 0.0f64;
+    let mut scan = |m: &GaussMessage| {
+        let n = m.dim();
+        for i in 0..n {
+            let d = m.cov[(i, i)].abs();
+            lo = lo.min(d);
+            hi = hi.max(d);
+        }
+    };
+    scan(prior);
+    for (msg, _) in sections {
+        scan(msg);
+    }
+    if lo <= 0.0 || !lo.is_finite() || hi <= 0.0 {
+        return 1.0;
+    }
+    (hi / lo).max(1.0)
+}
+
+/// Analytic precision/cost model over Q-format word widths.
+#[derive(Clone, Copy, Debug)]
+pub struct PrecisionModel {
+    /// Base per-unit area constants (calibrated at 16-bit words).
+    pub area: AreaModel,
+    /// Calibrated headroom constant of the error bound. Large enough
+    /// that every measured workload sits under the bound, small enough
+    /// that the bound still separates adjacent widths by ~2x per
+    /// fractional bit.
+    pub error_constant: f64,
+}
+
+impl Default for PrecisionModel {
+    fn default() -> Self {
+        PrecisionModel { area: AreaModel::default(), error_constant: 8.0 }
+    }
+}
+
+impl PrecisionModel {
+    /// Upper bound on the max-abs error of a `chain_len`-section
+    /// compound-observation chain executed at `fmt`, relative to the
+    /// golden f64 engine, for a workload with condition estimate
+    /// `cond` (see [`condition_estimate`]).
+    pub fn error_bound(&self, fmt: QFormat, chain_len: usize, cond: f64) -> f64 {
+        self.error_constant * (chain_len.max(1) as f64) * cond.max(1.0) * fmt.resolution()
+    }
+
+    /// [`AreaBreakdown`] of an n x n FGP at word width `fmt`:
+    /// multipliers quadratic in width, everything else in the array and
+    /// the memories linear, control fixed.
+    pub fn breakdown(&self, n: usize, mem_kbit: usize, fmt: QFormat) -> AreaBreakdown {
+        let base = self.area.breakdown(n, mem_kbit);
+        let r = fmt.width() as f64 / REFERENCE_WIDTH;
+        let array_scale = MULT_FRACTION * r * r + (1.0 - MULT_FRACTION) * r;
+        AreaBreakdown {
+            memories_mm2: base.memories_mm2 * r,
+            array_mm2: base.array_mm2 * array_scale,
+            control_mm2: base.control_mm2,
+        }
+    }
+
+    /// Table II power row at word width `fmt` (the paper's n and
+    /// memory size): area-based dynamic power at the scaled die size.
+    pub fn power_point(&self, fmt: QFormat, cn_cycles: u64) -> PowerPoint {
+        let area = self.breakdown(paper::N, paper::MEMORY_KBIT, fmt).total();
+        PowerPoint::fgp(cn_cycles, area)
+    }
+
+    /// The adaptive-precision policy: the narrowest candidate whose
+    /// [`error_bound`](Self::error_bound) meets `target` for this
+    /// workload shape, or `None` when no candidate qualifies (run f64).
+    pub fn pick_format(
+        &self,
+        target: f64,
+        chain_len: usize,
+        cond: f64,
+        candidates: &[QFormat],
+    ) -> Option<QFormat> {
+        let mut sorted: Vec<QFormat> = candidates.to_vec();
+        sorted.sort_by_key(|f| f.width());
+        sorted.into_iter().find(|f| self.error_bound(*f, chain_len, cond) <= target)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sweep() -> Vec<QFormat> {
+        [(5u32, 10u32), (5, 12), (5, 14), (5, 18), (5, 22), (5, 26)]
+            .iter()
+            .map(|&(i, f)| QFormat::new(i, f))
+            .collect()
+    }
+
+    #[test]
+    fn error_bound_halves_per_fractional_bit() {
+        let m = PrecisionModel::default();
+        let a = m.error_bound(QFormat::new(5, 10), 16, 4.0);
+        let b = m.error_bound(QFormat::new(5, 11), 16, 4.0);
+        assert!((a / b - 2.0).abs() < 1e-12, "{a} vs {b}");
+    }
+
+    #[test]
+    fn error_bound_grows_with_chain_and_conditioning() {
+        let m = PrecisionModel::default();
+        let f = QFormat::q5_10();
+        assert!(m.error_bound(f, 32, 1.0) > m.error_bound(f, 16, 1.0));
+        assert!(m.error_bound(f, 16, 10.0) > m.error_bound(f, 16, 1.0));
+        // degenerate inputs clamp instead of vanishing
+        assert_eq!(m.error_bound(f, 0, 0.0), m.error_bound(f, 1, 1.0));
+    }
+
+    #[test]
+    fn condition_estimate_reads_covariance_spread() {
+        let prior = GaussMessage::isotropic(2, 1.0);
+        let tight = vec![(GaussMessage::isotropic(2, 1.0), CMatrix::identity(2))];
+        assert!((condition_estimate(&prior, &tight) - 1.0).abs() < 1e-12);
+        let wide = vec![(GaussMessage::isotropic(2, 100.0), CMatrix::identity(2))];
+        assert!((condition_estimate(&prior, &wide) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wider_words_cost_more_area_and_power() {
+        let m = PrecisionModel::default();
+        let narrow = m.breakdown(paper::N, paper::MEMORY_KBIT, QFormat::q5_10());
+        let wide = m.breakdown(paper::N, paper::MEMORY_KBIT, QFormat::new(5, 26));
+        assert!(wide.total() > narrow.total());
+        assert!(wide.array_mm2 / narrow.array_mm2 > 2.0, "multipliers scale quadratically");
+        assert!(
+            m.power_point(QFormat::new(5, 26), paper::FGP_CN_CYCLES).power_w
+                > m.power_point(QFormat::q5_10(), paper::FGP_CN_CYCLES).power_w
+        );
+    }
+
+    #[test]
+    fn reference_width_reproduces_the_calibrated_model() {
+        let m = PrecisionModel::default();
+        let scaled = m.breakdown(paper::N, paper::MEMORY_KBIT, QFormat::q5_10());
+        let base = m.area.breakdown(paper::N, paper::MEMORY_KBIT);
+        assert!((scaled.total() - base.total()).abs() < 1e-12, "16-bit is the identity");
+    }
+
+    #[test]
+    fn policy_picks_the_narrowest_sufficient_width() {
+        let m = PrecisionModel::default();
+        let widths = sweep();
+        // a loose target admits the narrowest sweep entry
+        let loose = m.error_bound(QFormat::q5_10(), 16, 4.0);
+        assert_eq!(m.pick_format(loose, 16, 4.0, &widths), Some(QFormat::q5_10()));
+        // a tight target forces a wider word
+        let tight = m.error_bound(QFormat::new(5, 22), 16, 4.0);
+        let picked = m.pick_format(tight, 16, 4.0, &widths).unwrap();
+        assert_eq!(picked, QFormat::new(5, 22), "narrowest that still meets the target");
+        // an impossible target refuses fixed point entirely
+        assert_eq!(m.pick_format(1e-12, 16, 4.0, &widths), None);
+    }
+}

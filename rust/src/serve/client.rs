@@ -15,6 +15,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::fixed::QFormat;
 use crate::gmp::matrix::CMatrix;
 use crate::gmp::message::GaussMessage;
 use crate::obs::health::HealthSnapshot;
@@ -186,7 +187,37 @@ impl ServeClient {
         mode: StreamMode,
         prior: GaussMessage,
     ) -> Result<(u64, u32)> {
-        let req = ServeRequest::OpenStream { name: name.to_string(), mode, prior };
+        let req = ServeRequest::OpenStream { name: name.to_string(), mode, prior, precision: None };
+        match self.call_admitted(&req)? {
+            ServeReply::StreamOpened { stream, device } => Ok((stream, device)),
+            other => unexpected("OpenStream", other),
+        }
+    }
+
+    /// [`open_stream`](Self::open_stream) with a declared fixed-point
+    /// format: every chunk of the stream executes under `fmt` on the
+    /// device, regardless of the device's configured default width.
+    /// Rides a version-2 tag, so the handshake must have agreed on
+    /// wire version ≥ 2.
+    pub fn open_stream_fixed(
+        &mut self,
+        name: &str,
+        mode: StreamMode,
+        prior: GaussMessage,
+        fmt: QFormat,
+    ) -> Result<(u64, u32)> {
+        if self.version < 2 {
+            bail!(
+                "declared precision needs wire version 2, but the handshake agreed on {}",
+                self.version
+            );
+        }
+        let req = ServeRequest::OpenStream {
+            name: name.to_string(),
+            mode,
+            prior,
+            precision: Some(fmt),
+        };
         match self.call_admitted(&req)? {
             ServeReply::StreamOpened { stream, device } => Ok((stream, device)),
             other => unexpected("OpenStream", other),
@@ -241,7 +272,36 @@ impl ServeClient {
         mode: StreamMode,
         checkpoint: Vec<u8>,
     ) -> Result<(u64, u32)> {
-        let req = ServeRequest::Resume { name: name.to_string(), mode, checkpoint };
+        let req = ServeRequest::Resume { name: name.to_string(), mode, checkpoint, precision: None };
+        match self.call_admitted(&req)? {
+            ServeReply::StreamOpened { stream, device } => Ok((stream, device)),
+            other => unexpected("Resume", other),
+        }
+    }
+
+    /// [`resume`](Self::resume) with a declared fixed-point format.
+    /// Precision is a session property, not part of the checkpoint
+    /// image — a fixed-point stream resumed without re-declaring its
+    /// format continues at the device default width.
+    pub fn resume_fixed(
+        &mut self,
+        name: &str,
+        mode: StreamMode,
+        checkpoint: Vec<u8>,
+        fmt: QFormat,
+    ) -> Result<(u64, u32)> {
+        if self.version < 2 {
+            bail!(
+                "declared precision needs wire version 2, but the handshake agreed on {}",
+                self.version
+            );
+        }
+        let req = ServeRequest::Resume {
+            name: name.to_string(),
+            mode,
+            checkpoint,
+            precision: Some(fmt),
+        };
         match self.call_admitted(&req)? {
             ServeReply::StreamOpened { stream, device } => Ok((stream, device)),
             other => unexpected("Resume", other),

@@ -17,6 +17,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::coordinator::CnStream;
+use crate::fixed::QFormat;
 use crate::gmp::message::GaussMessage;
 
 use super::admission::FairRotor;
@@ -67,6 +68,10 @@ pub struct StreamEntry {
     /// Terminal error: set once a non-retryable failure occurs;
     /// surfaced to the client on the next poll/push/close.
     pub error: Option<String>,
+    /// Fixed-point format every chunk of this stream executes under, or
+    /// `None` for the executing device's configured default. Declared at
+    /// open/resume; a width never changes silently mid-stream.
+    pub precision: Option<QFormat>,
     /// Parent span for the samples currently queued (the context of the
     /// push that enqueued them); `None` on untraced streams.
     pub ctx: Option<crate::obs::TraceContext>,
@@ -96,6 +101,7 @@ impl SessionRegistry {
     }
 
     /// Register a stream and return its wire id.
+    #[allow(clippy::too_many_arguments)]
     pub fn open(
         &mut self,
         name: String,
@@ -104,6 +110,7 @@ impl SessionRegistry {
         prior: GaussMessage,
         samples_done: u64,
         device: usize,
+        precision: Option<QFormat>,
     ) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
@@ -120,6 +127,7 @@ impl SessionRegistry {
                 failovers: 0,
                 inflight: 0,
                 error: None,
+                precision,
                 ctx: None,
                 queued_ns: 0,
             },
@@ -193,11 +201,21 @@ mod tests {
     fn ids_are_unique_and_entries_close() {
         let mut r = SessionRegistry::new();
         let t = Arc::new(TenantLedger::default());
-        let a = r.open("s".into(), Arc::clone(&t), StreamMode::Sticky, prior(), 0, 0);
-        let b = r.open("s".into(), Arc::clone(&t), StreamMode::Sticky, prior(), 7, 1);
+        let a = r.open("s".into(), Arc::clone(&t), StreamMode::Sticky, prior(), 0, 0, None);
+        let b = r.open(
+            "s".into(),
+            Arc::clone(&t),
+            StreamMode::Sticky,
+            prior(),
+            7,
+            1,
+            Some(QFormat::q5_10()),
+        );
         assert_ne!(a, b);
         assert_eq!(r.len(), 2);
         assert_eq!(r.get(b).unwrap().cn.samples_done, 7);
+        assert_eq!(r.get(b).unwrap().precision, Some(QFormat::q5_10()));
+        assert_eq!(r.get(a).unwrap().precision, None, "default width unless declared");
         assert!(r.close(a).is_some());
         assert!(r.close(a).is_none());
         assert_eq!(r.len(), 1);
@@ -208,10 +226,12 @@ mod tests {
         let mut r = SessionRegistry::new();
         let t = Arc::new(TenantLedger::default());
         let ids: Vec<u64> = (0..3)
-            .map(|i| r.open(format!("s{i}"), Arc::clone(&t), StreamMode::Sticky, prior(), 0, 0))
+            .map(|i| {
+                r.open(format!("s{i}"), Arc::clone(&t), StreamMode::Sticky, prior(), 0, 0, None)
+            })
             .collect();
         let coalesced =
-            r.open("c".into(), Arc::clone(&t), StreamMode::Coalesced, prior(), 0, 0);
+            r.open("c".into(), Arc::clone(&t), StreamMode::Coalesced, prior(), 0, 0, None);
         for id in ids.iter().chain([&coalesced]) {
             push_n(r.get_mut(*id).unwrap(), 2);
         }

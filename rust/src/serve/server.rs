@@ -53,6 +53,7 @@ use crate::coordinator::{
     StreamCoalescer, WorkloadRequest,
 };
 use crate::fgp::FgpConfig;
+use crate::fixed::QFormat;
 use crate::gmp::matrix::CMatrix;
 use crate::gmp::message::GaussMessage;
 use crate::obs::health::{AlertSink, HealthConfig, HealthSnapshot, HealthState};
@@ -716,7 +717,7 @@ fn dispatch_request(
                 |msg| ServeReply::Output { msg },
             )
         }
-        ServeRequest::OpenStream { name, mode, prior } => {
+        ServeRequest::OpenStream { name, mode, prior, precision } => {
             let device = match pick_device(shared, mode, &[]) {
                 Ok(d) => d,
                 Err(reply) => return reply,
@@ -728,10 +729,11 @@ fn dispatch_request(
                 prior,
                 0,
                 device,
+                precision,
             );
             ServeReply::StreamOpened { stream: id, device: device as u32 }
         }
-        ServeRequest::Resume { name, mode, checkpoint } => {
+        ServeRequest::Resume { name, mode, checkpoint, precision } => {
             let ckpt = match decode_checkpoint(&checkpoint) {
                 Ok(c) => c,
                 Err(e) => {
@@ -751,6 +753,9 @@ fn dispatch_request(
                 Ok(d) => d,
                 Err(reply) => return reply,
             };
+            // precision is a session property, not part of the
+            // checkpoint image: a fixed-point stream keeps its width
+            // across resume only when the client re-declares it here
             let id = lock(&shared.registry).open(
                 name,
                 Arc::clone(&conn.ledger),
@@ -758,6 +763,7 @@ fn dispatch_request(
                 ckpt.state,
                 ckpt.samples,
                 device,
+                precision,
             );
             ServeReply::StreamOpened { stream: id, device: device as u32 }
         }
@@ -945,7 +951,16 @@ fn drain_round(shared: &Shared) -> u64 {
         if batch.is_empty() {
             continue;
         }
-        match WorkloadRequest::chain(&entry.cn.state, &batch) {
+        // a declared stream width rides on every chunk; failover re-pins
+        // keep `entry.precision`, so the replacement device executes the
+        // requeued batch at the same width
+        let built = WorkloadRequest::chain(&entry.cn.state, &batch).map(|req| {
+            match entry.precision {
+                Some(f) => req.with_precision(f),
+                None => req,
+            }
+        });
+        match built {
             Ok(req) => {
                 // queue-wait span: push arrival → this dispatch; the
                 // cursor then resets so a follow-on chunk measures its
@@ -1028,13 +1043,24 @@ fn drain_round(shared: &Shared) -> u64 {
         }
     }
 
-    // --- coalesced streams: fair-picked cross-stream batch
-    let picked: Vec<u64> = reg
+    // --- coalesced streams: fair-picked cross-stream batch. A batch
+    // only ever coalesces streams of one declared width — the fair picks
+    // are partitioned by precision so a mixed population cannot blend
+    // formats inside one device program.
+    let fair: Vec<u64> = reg
         .fair_ids(StreamMode::Coalesced)
         .into_iter()
         .take(shared.cfg.coalesce_width)
         .collect();
-    if !picked.is_empty() {
+    let mut groups: Vec<(Option<QFormat>, Vec<u64>)> = Vec::new();
+    for id in fair {
+        let p = reg.get(id).expect("picked ids are live").precision;
+        match groups.iter_mut().find(|(g, _)| *g == p) {
+            Some((_, ids)) => ids.push(id),
+            None => groups.push((p, vec![id])),
+        }
+    }
+    for (precision, picked) in groups {
         // move the CnStreams out so tick_refs can borrow them all
         // mutably at once; a cheap placeholder stands in
         let mut moved: Vec<(u64, CnStream, u64)> = picked
@@ -1051,7 +1077,10 @@ fn drain_round(shared: &Shared) -> u64 {
             .collect();
         let t0 = Instant::now();
         let t0_ns = if shared.tel.enabled() { shared.tel.now_ns() } else { 0 };
-        let mut backend = FarmCnBackend::new(Arc::clone(farm));
+        let mut backend = match precision {
+            Some(f) => FarmCnBackend::with_precision(Arc::clone(farm), f),
+            None => FarmCnBackend::new(Arc::clone(farm)),
+        };
         let tick = {
             let mut refs: Vec<&mut CnStream> =
                 moved.iter_mut().map(|(_, cn, _)| cn).collect();

@@ -57,6 +57,7 @@ use std::io::{self, Read, Write};
 
 use crate::coordinator::MetricsSnapshot;
 use crate::engine::StreamCheckpoint;
+use crate::fixed::QFormat;
 use crate::obs::health::{
     Alert, AlertKind, AlertSeverity, AlertState, DeviceHealth, HealthSnapshot, SloStatus,
 };
@@ -74,7 +75,8 @@ pub const MAX_FRAME: usize = 16 * 1024 * 1024;
 
 /// Wire protocol version carried in `Welcome` (and, since 2, declared
 /// by the client in `Hello`). Version 2 adds the request trace
-/// envelope and the telemetry section of `STATS`; both are encoded
+/// envelope, the telemetry section of `STATS`, and the declared
+/// fixed-point precision of `OpenStream`/`Resume`; all are encoded
 /// under new tags, so version-1 byte streams remain valid and
 /// bit-identical.
 pub const WIRE_VERSION: u32 = 2;
@@ -467,6 +469,11 @@ pub enum ServeRequest {
         mode: StreamMode,
         /// Initial recursive state.
         prior: GaussMessage,
+        /// Fixed-point format every sample of this stream executes
+        /// under (`None` = the server's configured width). Version-2
+        /// information: a declared format rides a new tag; `None`
+        /// emits the version-1 bytes, so old peers never see it.
+        precision: Option<QFormat>,
     },
     /// Queue samples onto an open stream.
     Push {
@@ -498,6 +505,12 @@ pub enum ServeRequest {
         mode: StreamMode,
         /// An [`encode_checkpoint`] image.
         checkpoint: Vec<u8>,
+        /// Fixed-point format for the resumed stream (`None` = the
+        /// server's configured width). Precision is a *session*
+        /// property, not part of the checkpoint image — re-declare it
+        /// on resume. Version-2 information under a new tag; `None`
+        /// emits the version-1 bytes.
+        precision: Option<QFormat>,
     },
     /// Fetch the server's SLO snapshot.
     Stats,
@@ -860,6 +873,27 @@ fn dec_health(d: &mut Dec) -> Result<HealthSnapshot, WireError> {
     Ok(HealthSnapshot { enabled, snapshots, alerts_total, slos, alerts, devices })
 }
 
+fn enc_qformat(e: &mut Enc, f: QFormat) {
+    // widths are ≤ 32 bits by QFormat's invariant, so u8 is lossless
+    e.u8(f.int_bits as u8);
+    e.u8(f.frac_bits as u8);
+}
+
+fn dec_qformat(d: &mut Dec) -> Result<QFormat, WireError> {
+    let int_bits = d.u8("QFormat")? as u32;
+    let frac_bits = d.u8("QFormat")? as u32;
+    // QFormat::new asserts the 32-bit bound; decoding must stay total,
+    // so reject oversized widths as a typed error instead
+    let width = 1 + int_bits + frac_bits;
+    if width > 32 {
+        return Err(WireError::BadTag {
+            what: "QFormat width",
+            tag: width.min(u8::MAX as u32) as u8,
+        });
+    }
+    Ok(QFormat::new(int_bits, frac_bits))
+}
+
 /// Encode a [`ServeRequest`] payload.
 pub fn encode_request(req: &ServeRequest) -> Vec<u8> {
     let mut e = Enc::new();
@@ -886,11 +920,15 @@ pub fn encode_request(req: &ServeRequest) -> Vec<u8> {
             e.msg(prior);
             enc_sections(&mut e, sections);
         }
-        ServeRequest::OpenStream { name, mode, prior } => {
-            e.u8(4);
+        ServeRequest::OpenStream { name, mode, prior, precision } => {
+            // exact version-1 bytes whenever no format is declared
+            e.u8(if precision.is_some() { 13 } else { 4 });
             e.str(name);
             enc_mode(&mut e, *mode);
             e.msg(prior);
+            if let Some(f) = precision {
+                enc_qformat(&mut e, *f);
+            }
         }
         ServeRequest::Push { stream, samples } => {
             e.u8(5);
@@ -909,11 +947,14 @@ pub fn encode_request(req: &ServeRequest) -> Vec<u8> {
             e.u8(8);
             e.u64(*stream);
         }
-        ServeRequest::Resume { name, mode, checkpoint } => {
-            e.u8(9);
+        ServeRequest::Resume { name, mode, checkpoint, precision } => {
+            e.u8(if precision.is_some() { 14 } else { 9 });
             e.str(name);
             enc_mode(&mut e, *mode);
             e.bytes(checkpoint);
+            if let Some(f) = precision {
+                enc_qformat(&mut e, *f);
+            }
         }
         ServeRequest::Stats => e.u8(10),
         ServeRequest::Health => e.u8(11),
@@ -939,6 +980,7 @@ pub fn decode_request(buf: &[u8]) -> Result<ServeRequest, WireError> {
             name: d.str("OpenStream")?,
             mode: dec_mode(&mut d)?,
             prior: d.msg("OpenStream")?,
+            precision: None,
         },
         5 => ServeRequest::Push {
             stream: d.u64("Push")?,
@@ -951,10 +993,23 @@ pub fn decode_request(buf: &[u8]) -> Result<ServeRequest, WireError> {
             name: d.str("Resume")?,
             mode: dec_mode(&mut d)?,
             checkpoint: d.bytes("Resume")?,
+            precision: None,
         },
         10 => ServeRequest::Stats,
         11 => ServeRequest::Health,
         12 => ServeRequest::Hello { tenant: d.str("Hello")?, version: d.u32("Hello")? },
+        13 => ServeRequest::OpenStream {
+            name: d.str("OpenStream")?,
+            mode: dec_mode(&mut d)?,
+            prior: d.msg("OpenStream")?,
+            precision: Some(dec_qformat(&mut d)?),
+        },
+        14 => ServeRequest::Resume {
+            name: d.str("Resume")?,
+            mode: dec_mode(&mut d)?,
+            checkpoint: d.bytes("Resume")?,
+            precision: Some(dec_qformat(&mut d)?),
+        },
         tag => return Err(WireError::BadTag { what: "ServeRequest", tag }),
     };
     d.finish()?;
@@ -1435,6 +1490,79 @@ mod tests {
         let bytes2 = encode_request(&v2);
         assert_eq!(bytes2[0], 12);
         assert_eq!(decode_request(&bytes2).unwrap(), v2);
+    }
+
+    #[test]
+    fn precision_tags_interoperate_with_version_1_peers() {
+        let prior = GaussMessage {
+            mean: vec![c64::new(0.1 + 0.2, -0.0)],
+            cov: CMatrix::identity(1),
+        };
+        // no declared precision ⇒ byte-identical to the version-1 frame
+        let open = ServeRequest::OpenStream {
+            name: "s".into(),
+            mode: StreamMode::Sticky,
+            prior: prior.clone(),
+            precision: None,
+        };
+        let bytes = encode_request(&open);
+        assert_eq!(bytes[0], 4, "None must emit the legacy tag");
+        assert_eq!(decode_request(&bytes).unwrap(), open);
+
+        // a declared format rides tag 13 with two trailing format bytes
+        let open_q = ServeRequest::OpenStream {
+            name: "s".into(),
+            mode: StreamMode::Sticky,
+            prior: prior.clone(),
+            precision: Some(QFormat::new(8, 20)),
+        };
+        let bytes_q = encode_request(&open_q);
+        assert_eq!(bytes_q[0], 13);
+        assert_eq!(bytes_q.len(), bytes.len() + 2, "format is exactly two bytes");
+        assert_eq!(decode_request(&bytes_q).unwrap(), open_q);
+
+        // same pairing for Resume: legacy tag 9 vs versioned tag 14
+        let res = ServeRequest::Resume {
+            name: "s".into(),
+            mode: StreamMode::Coalesced,
+            checkpoint: vec![1, 2, 3],
+            precision: None,
+        };
+        let rb = encode_request(&res);
+        assert_eq!(rb[0], 9);
+        assert_eq!(decode_request(&rb).unwrap(), res);
+        let res_q = ServeRequest::Resume {
+            name: "s".into(),
+            mode: StreamMode::Coalesced,
+            checkpoint: vec![1, 2, 3],
+            precision: Some(QFormat::q5_10()),
+        };
+        let rqb = encode_request(&res_q);
+        assert_eq!(rqb[0], 14);
+        assert_eq!(rqb.len(), rb.len() + 2);
+        assert_eq!(decode_request(&rqb).unwrap(), res_q);
+    }
+
+    #[test]
+    fn oversized_qformat_width_is_a_decode_error_not_a_panic() {
+        // hand-build a tag-13 frame whose format bytes claim a 1+30+30
+        // bit word: `QFormat::new` would panic, so the decoder must
+        // reject the bytes before constructing the format
+        let prior = GaussMessage { mean: vec![c64::new(0.0, 0.0)], cov: CMatrix::identity(1) };
+        let good = encode_request(&ServeRequest::OpenStream {
+            name: "s".into(),
+            mode: StreamMode::Sticky,
+            prior,
+            precision: Some(QFormat::q5_10()),
+        });
+        let mut bad = good.clone();
+        let n = bad.len();
+        bad[n - 2] = 30;
+        bad[n - 1] = 30;
+        match decode_request(&bad) {
+            Err(WireError::BadTag { what, .. }) => assert_eq!(what, "QFormat width"),
+            other => panic!("expected a typed width error, got {other:?}"),
+        }
     }
 
     #[test]

@@ -22,6 +22,7 @@ use std::time::{Duration, Instant};
 
 use fgp_repro::coordinator::{CnRequestData, FgpFarm, RoutePolicy};
 use fgp_repro::fgp::FgpConfig;
+use fgp_repro::fixed::QFormat;
 use fgp_repro::gmp::matrix::{c64, CMatrix};
 use fgp_repro::gmp::message::GaussMessage;
 use fgp_repro::serve::{
@@ -262,12 +263,163 @@ fn kill_checkpoint_and_resume_are_bitwise_identical() {
         name: "other".into(),
         mode: StreamMode::Sticky,
         checkpoint: ckpt,
+        precision: None,
     }) {
         Ok(ServeReply::Error { retryable: false, message }) => {
             assert!(message.contains("conform"), "{message}")
         }
         other => panic!("expected a name-mismatch error, got {other:?}"),
     }
+}
+
+// ---------------------------------------------------------------------
+// declared fixed-point precision over the wire (the v2 request field)
+// ---------------------------------------------------------------------
+
+/// The declared-width bitwise reference: fold the samples one at a time
+/// through a local single-device farm whose devices are *configured* at
+/// `fmt`. A stream that merely *declares* `fmt` over the wire must land
+/// on exactly these bits — declared and configured width share
+/// `fixed::raw` and the SoA kernels, so they are identical by
+/// construction.
+fn reference_fold_fixed(
+    fmt: QFormat,
+    prior: &GaussMessage,
+    samples: &[(GaussMessage, CMatrix)],
+) -> GaussMessage {
+    let cfg = FgpConfig { fmt, ..FgpConfig::default() };
+    let farm = FgpFarm::start(1, cfg, RoutePolicy::RoundRobin).unwrap();
+    let mut state = prior.clone();
+    for (y, a) in samples {
+        state = farm
+            .update(CnRequestData { x: state.clone(), y: y.clone(), a: a.clone() })
+            .unwrap();
+    }
+    state
+}
+
+#[test]
+fn declared_precision_streams_are_bitwise_identical_over_the_wire() {
+    // the server's devices default to the silicon's Q5.10; each stream
+    // below DECLARES Q8.20 at open, so the wire field — not the server
+    // config — must decide the arithmetic, on both stream paths
+    let fmt = QFormat::new(8, 20);
+    let cfg = ServeConfig { chunk: 4, ..ServeConfig::default() };
+    let (_srv, addr) = serve(cfg);
+    let mut rng = Rng::new(89);
+    let prior = msg(&mut rng, 4);
+    let samples: Vec<_> = (0..10).map(|_| sample(&mut rng, 4)).collect();
+    let want = reference_fold_fixed(fmt, &prior, &samples);
+
+    for mode in [StreamMode::Sticky, StreamMode::Coalesced] {
+        let mut client = ServeClient::connect(addr.as_str(), "alice").unwrap();
+        let (id, _device) =
+            client.open_stream_fixed("wire_identity_q", mode, prior.clone(), fmt).unwrap();
+        // uneven pushes again: declared width must survive rechunking
+        for batch in [&samples[..3], &samples[3..8], &samples[8..]] {
+            let (accepted, _) = client.push(id, batch.to_vec()).unwrap();
+            assert_eq!(accepted as usize, batch.len());
+        }
+        let closed = client.close_stream(id).unwrap();
+        assert_eq!(closed.samples_done, 10);
+        assert_eq!(
+            closed.state.dist(&want),
+            0.0,
+            "{mode:?}: a declared-width stream must be bitwise identical to a farm configured at that width"
+        );
+    }
+}
+
+#[test]
+fn declared_precision_survives_failover_checkpoint_and_resume() {
+    let fmt = QFormat::new(8, 20);
+    let cfg = ServeConfig { devices: 2, chunk: 3, ..ServeConfig::default() };
+    let (srv, addr) = serve(cfg.clone());
+    let mut rng = Rng::new(91);
+    let prior = msg(&mut rng, 4);
+    let samples: Vec<_> = (0..12).map(|_| sample(&mut rng, 4)).collect();
+    let want = reference_fold_fixed(fmt, &prior, &samples);
+
+    let mut client = ServeClient::connect(addr.as_str(), "alice").unwrap();
+    let (id, device) =
+        client.open_stream_fixed("conform_q", StreamMode::Sticky, prior.clone(), fmt).unwrap();
+    client.push(id, samples[..6].to_vec()).unwrap();
+    wait_drained(&mut client, id, 6);
+    let ckpt = client.checkpoint(id).unwrap();
+
+    // a mid-stream kill re-pins the stream; the REPLACEMENT device must
+    // keep computing at the declared width, not fall back to its config
+    assert!(srv.farm().kill_device(device as usize).unwrap());
+    client.push(id, samples[6..].to_vec()).unwrap();
+    let closed = client.close_stream(id).unwrap();
+    assert_eq!(closed.samples_done, 12);
+    assert!(closed.failovers >= 1, "the stream must have re-pinned");
+    assert_eq!(closed.state.dist(&want), 0.0, "failover must not change the declared width");
+
+    // precision is a session property, not part of the checkpoint image:
+    // the resume RE-DECLARES the width on a fresh server and must finish
+    // bitwise-identically
+    let (_srv2, addr2) = serve(cfg);
+    let mut resumed = ServeClient::connect(addr2.as_str(), "alice").unwrap();
+    let (rid, _) =
+        resumed.resume_fixed("conform_q", StreamMode::Sticky, ckpt, fmt).unwrap();
+    resumed.push(rid, samples[6..].to_vec()).unwrap();
+    let rclosed = resumed.close_stream(rid).unwrap();
+    assert_eq!(rclosed.samples_done, 12);
+    assert_eq!(rclosed.state.dist(&want), 0.0, "resume must keep the declared width");
+}
+
+#[test]
+fn fixed_saturations_are_observable_over_the_stats_wire() {
+    let (_srv, addr) = serve(ServeConfig::default());
+    let mut client = ServeClient::connect(addr.as_str(), "alice").unwrap();
+
+    // clean edge: a deliberately well-conditioned stream at a wide word
+    // (Q9.20, rails ±512) — every intermediate stays far inside the
+    // rails, so the wire-visible counter must stay at exactly zero
+    let prior = GaussMessage::new(
+        vec![c64::new(0.2, -0.1); 4],
+        CMatrix::scaled_identity(4, 0.5),
+    );
+    let clean: Vec<_> = (0..5)
+        .map(|k| {
+            (
+                GaussMessage::new(
+                    vec![c64::new(0.1 + 0.05 * k as f64, 0.05); 4],
+                    CMatrix::scaled_identity(4, 0.2),
+                ),
+                CMatrix::identity(4).scale(0.6),
+            )
+        })
+        .collect();
+    let (id, _) = client
+        .open_stream_fixed("clean_q", StreamMode::Sticky, prior, QFormat::new(9, 20))
+        .unwrap();
+    client.push(id, clean).unwrap();
+    client.close_stream(id).unwrap();
+    let stats = client.stats().unwrap();
+    assert_eq!(
+        stats.telemetry.counter("fixed.saturations").unwrap_or(0),
+        0,
+        "a clean run must report zero saturations over the wire"
+    );
+
+    // hot edge: Q1.14 rails sit at ±2, and 1.9 × 1.9 products clamp —
+    // the same counter must now be visible and nonzero
+    let railed = GaussMessage::new(
+        vec![c64::new(1.9, 0.0); 4],
+        CMatrix::scaled_identity(4, 0.05),
+    );
+    let (id, _) = client
+        .open_stream_fixed("hot_q", StreamMode::Sticky, railed.clone(), QFormat::new(1, 14))
+        .unwrap();
+    client.push(id, vec![(railed, CMatrix::identity(4).scale(1.9))]).unwrap();
+    client.close_stream(id).unwrap();
+    let stats = client.stats().unwrap();
+    assert!(
+        stats.telemetry.counter("fixed.saturations").unwrap_or(0) > 0,
+        "railed operands must surface in the wire-visible counter"
+    );
 }
 
 #[test]

@@ -15,16 +15,24 @@
 //! * farm streams are sticky (one device per stream) and identical to a
 //!   single-session run, including under concurrent clients;
 //! * the coalescer batches across concurrent recursive streams without
-//!   mixing their recursions.
+//!   mixing their recursions;
+//! * the fixed-point production path: a session that declares
+//!   `Precision::Fixed(fmt)` streams bitwise-identically to its own
+//!   batch run at every width, stays within the analytic error bound vs
+//!   the golden f64 engine, and a *declared* width on the farm/coalescer
+//!   path lands on exactly the same bits as devices *configured* at
+//!   that width.
 
 use fgp_repro::apps::bearing::BearingProblem;
 use fgp_repro::apps::kalman::KalmanProblem;
 use fgp_repro::apps::rls::RlsProblem;
 use fgp_repro::apps::smoother::SmootherProblem;
 use fgp_repro::coordinator::backend::{Backend, FgpSimBackend, GoldenBackend};
-use fgp_repro::coordinator::{CnStream, FgpFarm, RoutePolicy, StreamCoalescer};
-use fgp_repro::engine::{Session, StreamBinder, StreamingWorkload};
+use fgp_repro::coordinator::{CnStream, FarmCnBackend, FgpFarm, RoutePolicy, StreamCoalescer};
+use fgp_repro::engine::{Precision, Session, StreamBinder, StreamingWorkload};
 use fgp_repro::fgp::FgpConfig;
+use fgp_repro::fixed::QFormat;
+use fgp_repro::model::{condition_estimate, PrecisionModel};
 use fgp_repro::gmp::matrix::{c64, CMatrix};
 use fgp_repro::gmp::message::GaussMessage;
 use fgp_repro::gmp::nodes;
@@ -322,6 +330,98 @@ fn coalescer_survives_streams_draining_at_different_times() {
     assert_eq!(StreamCoalescer::drain(&mut backend, &mut streams).unwrap(), 4);
     assert_eq!(streams[0].samples_done, 6);
     assert_eq!(streams[1].samples_done, 1);
+}
+
+// ---------------------------------------------------------------------
+// fixed-point production path: declared precision, stream == batch
+// ---------------------------------------------------------------------
+
+#[test]
+fn fixed_point_stream_equals_batch_bitwise_and_stays_within_the_golden_bound() {
+    let p = RlsProblem::synthetic(4, 70, 0.01, 3);
+    let golden = Session::golden().run(&p).unwrap();
+    let sections: Vec<_> =
+        p.observations.iter().cloned().zip(p.regressors.iter().cloned()).collect();
+    let cond = condition_estimate(&p.prior, &sections);
+    let model = PrecisionModel::default();
+    // pinned per-Q-format fixture: widening the word must never move the
+    // estimate further from the golden engine
+    let mut last_err = f64::INFINITY;
+    for fmt in [QFormat::q5_10(), QFormat::new(5, 14), QFormat::new(8, 20)] {
+        let mut session = Session::with_precision(Precision::Fixed(fmt));
+        let stream = session.run_stream(&p).unwrap();
+        let batch = session.run(&p).unwrap();
+        // stream and batch share the scalar/SoA fixed kernels: chunked
+        // streaming must be bitwise identical to the one-shot fold
+        assert_eq!(
+            vec_dist(&stream.outcome.h_hat, &batch.outcome.h_hat),
+            0.0,
+            "{fmt:?}: fixed stream vs batch must be bitwise identical"
+        );
+        let err = stream
+            .outcome
+            .h_hat
+            .iter()
+            .zip(&golden.outcome.h_hat)
+            .map(|(a, b)| (*a - *b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(err > 0.0, "{fmt:?}: the quantized datapath must actually be on the path");
+        let bound = model.error_bound(fmt, 70, cond);
+        assert!(err <= bound, "{fmt:?}: error {err} escapes the asserted bound {bound}");
+        assert!(err <= last_err, "{fmt:?}: a wider word must not drift further from golden");
+        last_err = err;
+    }
+}
+
+#[test]
+fn coalescer_with_declared_precision_matches_devices_configured_at_that_width() {
+    // the serving tier's coalesced fixed path: a DECLARED width on
+    // default-width devices must land on the same bits as a solo fold on
+    // a device CONFIGURED at that width
+    let fmt = QFormat::new(8, 20);
+    let mut rng = Rng::new(53);
+    let msg = |rng: &mut Rng| {
+        GaussMessage::new(
+            (0..4).map(|_| c64::new(rng.range(-0.5, 0.5), rng.range(-0.5, 0.5))).collect(),
+            CMatrix::random_psd(rng, 4, 1.0).scale(0.15),
+        )
+    };
+    let lens = [5usize, 3];
+    let mut streams = Vec::new();
+    let mut priors = Vec::new();
+    let mut samples = Vec::new();
+    for &len in &lens {
+        let prior = msg(&mut rng);
+        let mut s = CnStream::new(prior.clone());
+        let data: Vec<(GaussMessage, CMatrix)> = (0..len)
+            .map(|_| (msg(&mut rng), CMatrix::random(&mut rng, 4, 4).scale(0.3)))
+            .collect();
+        for (y, a) in &data {
+            s.push(y.clone(), a.clone());
+        }
+        streams.push(s);
+        priors.push(prior);
+        samples.push(data);
+    }
+    let farm = std::sync::Arc::new(
+        FgpFarm::start(2, FgpConfig::default(), RoutePolicy::RoundRobin).unwrap(),
+    );
+    let mut backend = FarmCnBackend::with_precision(std::sync::Arc::clone(&farm), fmt);
+    assert_eq!(StreamCoalescer::drain(&mut backend, &mut streams).unwrap(), 8);
+    for (i, s) in streams.iter().enumerate() {
+        let mut solo = FgpSimBackend::new(FgpConfig { fmt, ..FgpConfig::default() }).unwrap();
+        let mut want = priors[i].clone();
+        for (y, a) in &samples[i] {
+            want = solo
+                .cn_update(&fgp_repro::coordinator::CnRequestData {
+                    x: want,
+                    y: y.clone(),
+                    a: a.clone(),
+                })
+                .unwrap();
+        }
+        assert_eq!(s.state.dist(&want), 0.0, "stream {i}: declared width must equal configured");
+    }
 }
 
 // ---------------------------------------------------------------------

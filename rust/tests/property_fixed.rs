@@ -1,0 +1,246 @@
+//! Property suite for the fixed-point substrate (`fixed::raw` and the
+//! PEborder divider) — the arithmetic the entire fixed-point production
+//! path bottoms out in (scalar `Fix`/`CFix`, the SoA kernels, and the
+//! cycle-accurate simulator all call these same functions in the same
+//! order).
+//!
+//! Four layers:
+//!
+//! 1. **exhaustive small widths** — every raw pair of a 4- and a 6-bit
+//!    format through add/sub/neg/mul/div against an independent `i128`
+//!    reference, so saturation and rounding boundaries are covered by
+//!    enumeration, not sampling;
+//! 2. **randomized wide formats** — sat/add/mul/cdiv at Q5.10 and
+//!    Q8.20 vs the `i128` reference (and the bit-serial divider
+//!    recurrence for every division);
+//! 3. **rail edge cases** — the two's-complement asymmetry analogs of
+//!    `i64::MIN`: `neg(min_raw)` and `div(min_raw, -1)` must saturate
+//!    to `max_raw`, never wrap;
+//! 4. **pinned rounding-tie fixtures** — the divider rounds ties away
+//!    from zero, the multiplier rounds ties toward +∞; both conventions
+//!    are pinned so a "harmless" rounding change cannot slip through.
+//!
+//! Plus the saturation-counter contract the production path observes
+//! (`fixed.saturations`): clean runs count zero, every rail clamp counts
+//! one, a zero-denominator `cdiv` counts two, and `take_saturations`
+//! reads-and-resets.
+
+use fgp_repro::fixed::raw::{self, Rails};
+use fgp_repro::fixed::{QFormat, Radix2Divider};
+use fgp_repro::testutil::{proptest_cases, Rng};
+
+/// Independent saturating clamp in i128 (the reference output stage).
+fn ref_sat(x: i128, r: Rails) -> i64 {
+    x.clamp(r.min as i128, r.max as i128) as i64
+}
+
+/// Reference multiply: full-width product, round-half-toward-+∞ on the
+/// discarded fraction bits (arithmetic shift), then clamp.
+fn ref_mul(a: i64, b: i64, r: Rails) -> i64 {
+    let prod = a as i128 * b as i128;
+    let half = 1i128 << (r.frac_bits - 1);
+    ref_sat((prod + half) >> r.frac_bits, r)
+}
+
+/// Reference divide: the hardware's own bit-serial restoring recurrence,
+/// then clamp.
+fn ref_div(num: i64, den: i64, r: Rails) -> i64 {
+    ref_sat(Radix2Divider::divide_raw_bitserial(num, den, r.frac_bits) as i128, r)
+}
+
+/// An in-rails raw value.
+fn draw(rng: &mut Rng, r: Rails) -> i64 {
+    let span = (r.max - r.min + 1) as u64;
+    r.min + (rng.next_u64() % span) as i64
+}
+
+#[test]
+fn exhaustive_small_widths_match_the_i128_reference() {
+    // every pair of raw values of a 4-bit and a 6-bit word: saturation
+    // and rounding boundaries are covered by enumeration
+    for fmt in [QFormat::new(1, 2), QFormat::new(2, 3)] {
+        let r = Rails::of(fmt);
+        for a in r.min..=r.max {
+            for b in r.min..=r.max {
+                assert_eq!(raw::add(a, b, r), ref_sat(a as i128 + b as i128, r), "{a}+{b}");
+                assert_eq!(raw::sub(a, b, r), ref_sat(a as i128 - b as i128, r), "{a}-{b}");
+                assert_eq!(raw::mul(a, b, r), ref_mul(a, b, r), "{a}*{b} at {fmt:?}");
+                if b != 0 {
+                    assert_eq!(raw::div(a, b, r), ref_div(a, b, r), "{a}/{b} at {fmt:?}");
+                }
+            }
+            assert_eq!(raw::neg(a, r), ref_sat(-(a as i128), r), "-({a})");
+        }
+    }
+}
+
+#[test]
+fn exhaustive_small_width_saturation_is_exact_at_the_rails() {
+    let fmt = QFormat::new(2, 3);
+    let r = Rails::of(fmt);
+    // just outside each rail clamps; the rails themselves pass through
+    assert_eq!(raw::sat(r.max, r), r.max);
+    assert_eq!(raw::sat(r.min, r), r.min);
+    assert_eq!(raw::sat(r.max + 1, r), r.max);
+    assert_eq!(raw::sat(r.min - 1, r), r.min);
+    for x in (r.min - 70)..=(r.max + 70) {
+        assert_eq!(raw::sat(x, r), ref_sat(x as i128, r));
+    }
+}
+
+#[test]
+fn randomized_ops_match_the_i128_reference_at_production_widths() {
+    for fmt in [QFormat::q5_10(), QFormat::new(8, 20)] {
+        let r = Rails::of(fmt);
+        proptest_cases(4000, |rng| {
+            let (a, b) = (draw(rng, r), draw(rng, r));
+            assert_eq!(raw::add(a, b, r), ref_sat(a as i128 + b as i128, r));
+            assert_eq!(raw::sub(a, b, r), ref_sat(a as i128 - b as i128, r));
+            assert_eq!(raw::mul(a, b, r), ref_mul(a, b, r));
+            if b != 0 {
+                assert_eq!(raw::div(a, b, r), ref_div(a, b, r));
+            }
+        });
+    }
+}
+
+#[test]
+fn randomized_cdiv_matches_a_structural_i128_reference() {
+    // cdiv is the paper's Fig. 4 sequence: numerator products on the
+    // multipliers, |den|^2 on the abs path, two real divisions on the
+    // single divider — mirrored here step by step in i128 arithmetic
+    // with the bit-serial divider as the division reference
+    let fmt = QFormat::q5_10();
+    let r = Rails::of(fmt);
+    proptest_cases(2000, |rng| {
+        let (ar, ai) = (draw(rng, r), draw(rng, r));
+        let (br, bi) = (draw(rng, r), draw(rng, r));
+        let den = ref_sat(ref_mul(br, br, r) as i128 + ref_mul(bi, bi, r) as i128, r);
+        let got = raw::cdiv(ar, ai, br, bi, r);
+        if den == 0 {
+            assert_eq!(got, (r.max, r.max), "zero |den|^2 rails both components");
+            return;
+        }
+        let num_re = ref_sat(ref_mul(ar, br, r) as i128 + ref_mul(ai, bi, r) as i128, r);
+        let num_im = ref_sat(ref_mul(ai, br, r) as i128 - ref_mul(ar, bi, r) as i128, r);
+        assert_eq!(got, (ref_div(num_re, den, r), ref_div(num_im, den, r)));
+    });
+}
+
+#[test]
+fn min_raw_negation_and_division_saturate_instead_of_wrapping() {
+    // the i64::MIN analog of two's-complement rails: |min| = max + 1, so
+    // negating the minimum or dividing it by -1 exceeds the positive
+    // rail and must clamp, never wrap
+    for fmt in [QFormat::new(2, 3), QFormat::q5_10(), QFormat::new(8, 20)] {
+        let r = Rails::of(fmt);
+        raw::take_saturations();
+        assert_eq!(raw::neg(r.min, r), r.max, "{fmt:?}: -min saturates to max");
+        assert_eq!(raw::take_saturations(), 1);
+        let minus_one = -(1i64 << r.frac_bits);
+        assert_eq!(raw::div(r.min, minus_one, r), r.max, "{fmt:?}: min / -1 saturates");
+        assert_eq!(raw::take_saturations(), 1);
+        // the mirror cases stay exactly representable
+        assert_eq!(raw::neg(r.max, r), -r.max);
+        assert_eq!(raw::div(r.max, minus_one, r), -r.max);
+        assert_eq!(raw::take_saturations(), 0, "in-range results never count");
+    }
+}
+
+#[test]
+fn divider_rounding_ties_are_pinned_away_from_zero() {
+    // frac_bits = 0 keeps the fixtures readable: quotient 0.5 → 1,
+    // 1.5 → 2, 2.5 → 3, mirrored for negative quotients
+    assert_eq!(Radix2Divider::divide_raw(1, 2, 0), 1);
+    assert_eq!(Radix2Divider::divide_raw(-1, 2, 0), -1);
+    assert_eq!(Radix2Divider::divide_raw(1, -2, 0), -1);
+    assert_eq!(Radix2Divider::divide_raw(-1, -2, 0), 1);
+    assert_eq!(Radix2Divider::divide_raw(3, 2, 0), 2);
+    assert_eq!(Radix2Divider::divide_raw(-3, 2, 0), -2);
+    assert_eq!(Radix2Divider::divide_raw(5, 2, 0), 3);
+    // non-ties truncate-then-round normally: 1/3 → 0, 2/3 → 1
+    assert_eq!(Radix2Divider::divide_raw(1, 3, 0), 0);
+    assert_eq!(Radix2Divider::divide_raw(2, 3, 0), 1);
+    // the same tie in a production format: 1 LSB / 2.0 in Q5.10 is a
+    // half-LSB quotient and rounds up to 1 LSB
+    assert_eq!(Radix2Divider::divide_raw(1, 2 << 10, 10), 1);
+    assert_eq!(Radix2Divider::divide_raw(-1, 2 << 10, 10), -1);
+    // every pinned fixture also holds for the bit-serial recurrence
+    for (num, den, frac) in
+        [(1i64, 2i64, 0u32), (-1, 2, 0), (3, 2, 0), (5, 2, 0), (1, 2 << 10, 10)]
+    {
+        assert_eq!(
+            Radix2Divider::divide_raw(num, den, frac),
+            Radix2Divider::divide_raw_bitserial(num, den, frac),
+        );
+    }
+}
+
+#[test]
+fn multiplier_rounding_ties_are_pinned_toward_positive_infinity() {
+    // the PEmult rounds with (prod + half) >> frac — an arithmetic
+    // shift, so exact half-LSB products round toward +∞ on BOTH signs
+    // (unlike the divider, which rounds away from zero): the asymmetry
+    // is hardware behaviour and must not "get fixed"
+    let r = Rails::of(QFormat::q5_10());
+    let half_lsb_product = 1i64 << 9; // raw product of 2^-1 LSB²
+    assert_eq!(raw::mul(1, half_lsb_product, r), 1, "+0.5 LSB rounds up");
+    assert_eq!(raw::mul(-1, half_lsb_product, r), 0, "-0.5 LSB rounds up to zero");
+    assert_eq!(raw::mul(3, half_lsb_product, r), 2, "+1.5 LSB rounds to 2");
+    assert_eq!(raw::mul(-3, half_lsb_product, r), -1, "-1.5 LSB rounds to -1");
+}
+
+// ---------------------------------------------------------------------
+// the saturation-counter contract (`fixed.saturations`)
+// ---------------------------------------------------------------------
+
+#[test]
+fn clean_arithmetic_counts_zero_saturations() {
+    let r = Rails::of(QFormat::q5_10());
+    raw::take_saturations();
+    let one = 1i64 << r.frac_bits;
+    for a in [-3 * one, -one, 0, one, 2 * one] {
+        raw::add(a, one, r);
+        raw::sub(a, one, r);
+        raw::neg(a, r);
+        raw::mul(a, one / 2, r);
+        raw::div(a, 2 * one, r);
+        raw::cdiv(a, one, one, one / 2, r);
+    }
+    assert_eq!(raw::saturation_count(), 0, "in-range arithmetic must not count");
+}
+
+#[test]
+fn every_rail_clamp_counts_exactly_once() {
+    let r = Rails::of(QFormat::new(2, 3));
+    raw::take_saturations();
+    raw::add(r.max, 1, r); // +1
+    assert_eq!(raw::saturation_count(), 1);
+    raw::sub(r.min, 1, r); // +1
+    assert_eq!(raw::saturation_count(), 2);
+    raw::mul(r.max, r.max, r); // +1
+    assert_eq!(raw::saturation_count(), 3);
+    raw::sat(0, r); // in-range: +0
+    assert_eq!(raw::saturation_count(), 3);
+}
+
+#[test]
+fn zero_denominator_cdiv_counts_two_rail_events() {
+    let r = Rails::of(QFormat::q5_10());
+    raw::take_saturations();
+    let out = raw::cdiv(1 << r.frac_bits, 0, 0, 0, r);
+    assert_eq!(out, (r.max, r.max), "both components rail");
+    assert_eq!(raw::take_saturations(), 2, "one event per railed component");
+}
+
+#[test]
+fn take_saturations_reads_and_resets() {
+    let r = Rails::of(QFormat::new(2, 3));
+    raw::take_saturations();
+    raw::add(r.max, r.max, r);
+    raw::add(r.max, r.max, r);
+    assert_eq!(raw::saturation_count(), 2, "peek does not reset");
+    assert_eq!(raw::take_saturations(), 2, "take returns the count");
+    assert_eq!(raw::take_saturations(), 0, "and resets it");
+    assert_eq!(raw::saturation_count(), 0);
+}

@@ -19,6 +19,7 @@ use fgp_repro::coordinator::MetricsSnapshot;
 use fgp_repro::engine::StreamCheckpoint;
 use fgp_repro::fgp::processor::{Command, FsmState, Reply};
 use fgp_repro::fgp::RunStats;
+use fgp_repro::fixed::QFormat;
 use fgp_repro::gmp::matrix::{c64, CMatrix};
 use fgp_repro::gmp::message::GaussMessage;
 use fgp_repro::isa::MemoryImage;
@@ -84,6 +85,15 @@ fn every_request(rng: &mut Rng) -> Vec<ServeRequest> {
             name: "rls_channel_stream".into(),
             mode: StreamMode::Sticky,
             prior: awkward_msg(rng, 2),
+            precision: None,
+        },
+        // version-2 generation: a declared fixed-point format rides a
+        // new tag, so both generations must round-trip independently
+        ServeRequest::OpenStream {
+            name: "rls_channel_stream_q".into(),
+            mode: StreamMode::Coalesced,
+            prior: awkward_msg(rng, 2),
+            precision: Some(QFormat::q5_10()),
         },
         ServeRequest::Push {
             stream: u64::MAX,
@@ -96,6 +106,13 @@ fn every_request(rng: &mut Rng) -> Vec<ServeRequest> {
             name: "rls_channel_stream".into(),
             mode: StreamMode::Coalesced,
             checkpoint: vec![0xde, 0xad, 0xbe, 0xef],
+            precision: None,
+        },
+        ServeRequest::Resume {
+            name: "rls_channel_stream_q".into(),
+            mode: StreamMode::Sticky,
+            checkpoint: vec![0xde, 0xad, 0xbe, 0xef],
+            precision: Some(QFormat::new(8, 20)),
         },
         ServeRequest::Stats,
         ServeRequest::Health,
